@@ -1,0 +1,46 @@
+//! Bench: throughput of the Rust-side dot algorithms — the performance half
+//! of the accuracy/throughput trade-off the paper motivates. Reports GUP/s
+//! (updates per second) for each scheme at n = 64k (L2-resident on the
+//! host): expect kahan ~2-4x slower than naive in *scalar* Rust (the gap
+//! SIMD closes on the paper's machines) and dot2 slower still; the exact
+//! expansion accumulator is orders of magnitude off — the "arbitrary
+//! precision" end of the spectrum.
+
+use kahan_ecm::accuracy::{dots, exact::exact_dot, sums};
+use kahan_ecm::bench_kit::{black_box, Runner};
+use kahan_ecm::util::rng::Rng;
+
+fn main() {
+    let n = 65_536usize;
+    let mut rng = Rng::new(3);
+    let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let xs: Vec<f64> = x.iter().zip(&y).map(|(a, b)| a * b).collect();
+
+    let mut r = Runner::new();
+    let w = n as f64;
+    r.bench("naive_dot", w, || {
+        black_box(dots::naive_dot(&x, &y));
+    });
+    r.bench("kahan_dot (Fig. 2b)", w, || {
+        black_box(dots::kahan_dot(&x, &y));
+    });
+    r.bench("kahan_dot_lanes x128 (Pallas semantics)", w, || {
+        black_box(dots::kahan_dot_lanes(&x, &y, 128));
+    });
+    r.bench("dot2 (Ogita-Rump-Oishi)", w, || {
+        black_box(dots::dot2(&x, &y));
+    });
+    r.bench("neumaier_sum of products", w, || {
+        black_box(sums::neumaier_sum(&xs));
+    });
+    r.bench("pairwise_sum of products", w, || {
+        black_box(sums::pairwise_sum(&xs));
+    });
+    // Exact accumulation is very slow; bench a slice to keep wallclock sane.
+    let m = 2048usize;
+    r.bench("exact_dot (Shewchuk expansions, n=2048)", m as f64, || {
+        black_box(exact_dot(&x[..m], &y[..m]));
+    });
+    r.footer("UP");
+}

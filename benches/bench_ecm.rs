@@ -1,0 +1,52 @@
+//! Bench: the ECM engine itself — Table I derivations and the `ecm-inputs`
+//! table (every kernel x machine x precision). The model must be cheap
+//! enough to run interactively and inside sweeps.
+
+use kahan_ecm::arch::all_machines;
+use kahan_ecm::bench_kit::{black_box, Runner};
+use kahan_ecm::ecm::{self, MemLevel};
+use kahan_ecm::harness::{self, Ctx};
+use kahan_ecm::isa::Variant;
+use kahan_ecm::util::units::Precision;
+
+fn main() {
+    let mut r = Runner::new();
+    let machines = all_machines();
+
+    r.bench("derive+predict: HSW kahan-fma5", 1.0, || {
+        let m = &machines[0];
+        let i = ecm::derive::paper_row(m, Variant::KahanSimdFma5, Precision::Sp, MemLevel::Mem);
+        black_box(i.predict().mem_cycles());
+    });
+
+    r.bench("derive+predict: all machines x 5 variants x 2 prec", 1.0, || {
+        for m in &machines {
+            for v in [
+                Variant::NaiveSimd,
+                Variant::KahanSimd,
+                Variant::KahanSimdFma,
+                Variant::KahanSimdFma5,
+                Variant::KahanScalar,
+            ] {
+                for p in [Precision::Sp, Precision::Dp] {
+                    let i = ecm::derive::paper_row(m, v, p, MemLevel::Mem);
+                    black_box(i.predict().mem_cycles());
+                }
+            }
+        }
+    });
+
+    r.bench("saturation + scaling curve: HSW naive", 1.0, || {
+        let m = &machines[0];
+        let i = ecm::derive::paper_row(m, Variant::NaiveSimd, Precision::Sp, MemLevel::Mem);
+        black_box(ecm::scaling::scaling_curve(m, &i));
+    });
+
+    r.bench("experiment table1 (end-to-end)", 1.0, || {
+        black_box(harness::tables::table1(&Ctx::quick()).unwrap());
+    });
+
+    r.bench("experiment ecm-inputs (end-to-end)", 1.0, || {
+        black_box(harness::tables::ecm_inputs(&Ctx::quick()).unwrap());
+    });
+}

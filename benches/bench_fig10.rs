@@ -1,0 +1,14 @@
+//! Bench: Fig. 10 regeneration (cross-architecture comparison).
+
+use kahan_ecm::bench_kit::{black_box, Runner};
+use kahan_ecm::harness::{fig10, Ctx};
+
+fn main() {
+    let mut r = Runner::new();
+    r.bench("fig10a end-to-end", 1.0, || {
+        black_box(fig10::fig10a(&Ctx::quick()).unwrap());
+    });
+    r.bench("fig10b end-to-end", 1.0, || {
+        black_box(fig10::fig10b(&Ctx::quick()).unwrap());
+    });
+}

@@ -1,0 +1,31 @@
+//! Bench: Fig. 5 regeneration (HSW/BDW single-core sweeps) end-to-end, plus
+//! the per-point primitive (one sweep point = core sim memoized + cache
+//! engine + compose).
+
+use kahan_ecm::arch::haswell;
+use kahan_ecm::bench_kit::{black_box, Runner};
+use kahan_ecm::ecm::{self, MemLevel};
+use kahan_ecm::harness::{fig5, Ctx};
+use kahan_ecm::isa::Variant;
+use kahan_ecm::sim::{self, MeasureOpts};
+use kahan_ecm::util::units::{Precision, GIB, MIB};
+
+fn main() {
+    let mut r = Runner::new();
+    let m = haswell();
+    let k = ecm::derive::kernel_for(&m, Variant::KahanSimdFma5, Precision::Sp, MemLevel::Mem);
+    let sizes = sim::default_sweep_sizes(GIB);
+
+    r.bench("one sweep point (4 MiB)", 1.0, || {
+        black_box(sim::sweep(&m, &k, &[4 * MIB], &MeasureOpts::default()));
+    });
+    r.bench(&format!("full sweep ({} points)", sizes.len()), sizes.len() as f64, || {
+        black_box(sim::sweep(&m, &k, &sizes, &MeasureOpts::default()));
+    });
+    r.bench("fig5a end-to-end (quick grid)", 1.0, || {
+        black_box(fig5::fig5a(&Ctx::quick()).unwrap());
+    });
+    r.bench("fig5b end-to-end (quick grid)", 1.0, || {
+        black_box(fig5::fig5b(&Ctx::quick()).unwrap());
+    });
+}

@@ -1,0 +1,11 @@
+//! Bench: Fig. 6 regeneration (KNC per-level kernels sweep).
+
+use kahan_ecm::bench_kit::{black_box, Runner};
+use kahan_ecm::harness::{fig6, Ctx};
+
+fn main() {
+    let mut r = Runner::new();
+    r.bench("fig6 end-to-end (quick grid)", 1.0, || {
+        black_box(fig6::fig6(&Ctx::quick()).unwrap());
+    });
+}

@@ -1,0 +1,15 @@
+//! Bench: Fig. 7 regeneration (PWR8 SMT sweeps — the heaviest single-core
+//! experiments: 4 SMT settings x full sweep, 112-op bodies, SMT-8 sim).
+
+use kahan_ecm::bench_kit::{black_box, Runner};
+use kahan_ecm::harness::{fig7, Ctx};
+
+fn main() {
+    let mut r = Runner::new();
+    r.bench("fig7a end-to-end (quick grid)", 1.0, || {
+        black_box(fig7::fig7a(&Ctx::quick()).unwrap());
+    });
+    r.bench("fig7b end-to-end (quick grid)", 1.0, || {
+        black_box(fig7::fig7b(&Ctx::quick()).unwrap());
+    });
+}

@@ -1,0 +1,29 @@
+//! Bench: Fig. 8 regeneration (in-memory core scans on all four machines)
+//! plus the corescan primitive.
+
+use kahan_ecm::arch::haswell;
+use kahan_ecm::bench_kit::{black_box, Runner};
+use kahan_ecm::ecm::{self, MemLevel};
+use kahan_ecm::harness::{fig8, Ctx};
+use kahan_ecm::isa::Variant;
+use kahan_ecm::sim::{self, MeasureOpts};
+use kahan_ecm::util::units::{Precision, GIB};
+
+fn main() {
+    let mut r = Runner::new();
+    let m = haswell();
+    let k = ecm::derive::kernel_for(&m, Variant::KahanSimdFma5, Precision::Sp, MemLevel::Mem);
+    r.bench("corescan primitive (HSW, 14 cores)", 14.0, || {
+        black_box(sim::corescan(&m, &k, 10 * GIB, &MeasureOpts::default()));
+    });
+    for (name, f) in [
+        ("fig8a", fig8::fig8a as fn(&Ctx) -> anyhow::Result<kahan_ecm::harness::ExperimentOutput>),
+        ("fig8b", fig8::fig8b as fn(&Ctx) -> _),
+        ("fig8c", fig8::fig8c as fn(&Ctx) -> _),
+        ("fig8d", fig8::fig8d as fn(&Ctx) -> _),
+    ] {
+        r.bench(&format!("{name} end-to-end"), 1.0, || {
+            black_box(f(&Ctx::quick()).unwrap());
+        });
+    }
+}

@@ -1,0 +1,11 @@
+//! Bench: Fig. 9 regeneration (compiler Kahan ddot scaling, all machines).
+
+use kahan_ecm::bench_kit::{black_box, Runner};
+use kahan_ecm::harness::{fig9, Ctx};
+
+fn main() {
+    let mut r = Runner::new();
+    r.bench("fig9 end-to-end", 1.0, || {
+        black_box(fig9::fig9(&Ctx::quick()).unwrap());
+    });
+}

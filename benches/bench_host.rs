@@ -1,0 +1,37 @@
+//! Bench: the real-machine path — PJRT execution of the AOT artifacts
+//! (requires `make artifacts`; exits cleanly if absent). Includes dispatch
+//! overhead (tiny artifact) vs streaming throughput (large artifact).
+
+use kahan_ecm::bench_kit::{black_box, Runner};
+use kahan_ecm::runtime::{Executor, Manifest};
+use kahan_ecm::util::rng::Rng;
+
+fn main() {
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        eprintln!("artifacts/ not built; skipping host benches (run `make artifacts`)");
+        return;
+    };
+    let mut ex = Executor::new(manifest).expect("PJRT client");
+    let mut rng = Rng::new(5);
+
+    let mut r = Runner::new();
+    for name in ["naive_opt_f32_n4096", "naive_f32_n4096", "kahan_f32_n4096"] {
+        let art = ex.manifest().get(name).unwrap().clone();
+        let data: Vec<Vec<f64>> = art
+            .input_shapes
+            .iter()
+            .map(|s| {
+                let n: u64 = s.iter().product();
+                (0..n).map(|_| rng.normal()).collect()
+            })
+            .collect();
+        let refs: Vec<&[f64]> = data.iter().map(|d| d.as_slice()).collect();
+        let lits = ex.literals(&art, &refs).unwrap();
+        // warm compile outside the timed region
+        let _ = ex.run_prepared(name, &lits).unwrap();
+        r.bench(&format!("pjrt exec {name}"), art.updates() as f64, || {
+            black_box(ex.run_prepared(name, &lits).unwrap());
+        });
+    }
+    r.footer("UP");
+}

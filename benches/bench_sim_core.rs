@@ -1,0 +1,35 @@
+//! Bench: the scoreboard core simulator — the hot inner loop of every sweep
+//! point. Perf target (EXPERIMENTS.md §Perf): single kernel steady-state
+//! < 10 ms.
+
+use kahan_ecm::arch::{haswell, knights_corner, power8};
+use kahan_ecm::bench_kit::{black_box, Runner};
+use kahan_ecm::ecm::{self, MemLevel};
+use kahan_ecm::isa::Variant;
+use kahan_ecm::sim::simulate_core;
+use kahan_ecm::util::units::Precision;
+
+fn main() {
+    let mut r = Runner::new();
+    let hsw = haswell();
+    let knc = knights_corner();
+    let p8 = power8();
+
+    let k_naive = ecm::derive::kernel_for(&hsw, Variant::NaiveSimd, Precision::Sp, MemLevel::Mem);
+    let k_kahan = ecm::derive::kernel_for(&hsw, Variant::KahanSimdFma5, Precision::Sp, MemLevel::Mem);
+    let k_knc = ecm::derive::kernel_for(&knc, Variant::KahanSimdFma, Precision::Sp, MemLevel::Mem);
+    let k_p8 = ecm::derive::kernel_for(&p8, Variant::KahanSimdFma, Precision::Sp, MemLevel::Mem);
+
+    r.bench("scoreboard: HSW naive (30 ops/body)", 1.0, || {
+        black_box(simulate_core(&hsw, &k_naive, 1).cycles_per_cl);
+    });
+    r.bench("scoreboard: HSW kahan-fma5", 1.0, || {
+        black_box(simulate_core(&hsw, &k_kahan, 1).cycles_per_cl);
+    });
+    r.bench("scoreboard: KNC kahan (in-order, SMT-2)", 1.0, || {
+        black_box(simulate_core(&knc, &k_knc, 2).cycles_per_cl);
+    });
+    r.bench("scoreboard: PWR8 kahan (112 ops/body, SMT-8)", 1.0, || {
+        black_box(simulate_core(&p8, &k_p8, 8).cycles_per_cl);
+    });
+}

@@ -1,0 +1,52 @@
+//! Accuracy deep-dive: sweep the condition number and watch each summation
+//! scheme fail in its own way — the quantitative version of the paper's
+//! Sect. 1 motivation ("balancing performance vs. accuracy").
+//!
+//! Run: `cargo run --release --example accuracy_study [-- <n>]`
+
+use kahan_ecm::accuracy::{
+    dots::{dot2, kahan_dot, kahan_dot_lanes, naive_dot},
+    generator::{condition_number, ill_conditioned_dot},
+};
+use kahan_ecm::util::rng::Rng;
+use kahan_ecm::util::table::Table;
+
+fn rel(got: f64, exact: f64) -> String {
+    let e = if exact == 0.0 {
+        got.abs()
+    } else {
+        ((got - exact) / exact).abs()
+    };
+    if e == 0.0 {
+        "exact".to_string()
+    } else {
+        format!("{e:.1e}")
+    }
+}
+
+fn main() {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4096);
+    let mut rng = Rng::new(7);
+    let mut t = Table::new([
+        "cond (measured)", "naive", "kahan", "kahan 128 lanes (Pallas semantics)", "dot2 (ORO)",
+    ]);
+    for ce in (4..=120).step_by(8) {
+        let (x, y, exact) = ill_conditioned_dot(n, 2f64.powi(ce), &mut rng);
+        let cond = condition_number(&x, &y, exact);
+        t.row([
+            format!("2^{:.0}", cond.log2()),
+            rel(naive_dot(&x, &y), exact),
+            rel(kahan_dot(&x, &y), exact),
+            rel(kahan_dot_lanes(&x, &y, 128), exact),
+            rel(dot2(&x, &y), exact),
+        ]);
+    }
+    println!("relative error vs condition number (n = {n}, f64)\n");
+    print!("{}", t.to_text());
+    println!("\nreading guide: naive degrades ~ eps*cond immediately; Kahan (scalar and");
+    println!("lane-parallel — the Pallas kernel's semantics) holds ~eps until cond ~ 1/eps;");
+    println!("dot2 computes in doubled precision and holds until cond ~ 1/eps^2 ~ 2^104.");
+}

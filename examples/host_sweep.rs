@@ -1,0 +1,48 @@
+//! Mini-likwid on the host: sweep the AOT-compiled kernels over working-set
+//! sizes on this machine's CPU via PJRT, exactly like the paper sweeps its
+//! testbed machines with likwid-bench. Requires `make artifacts`.
+//!
+//! Run: `cargo run --release --example host_sweep [-- --quick]`
+
+use kahan_ecm::runtime::{bench_artifact, Executor, Manifest};
+use kahan_ecm::util::table::{fnum, Table};
+use kahan_ecm::util::units::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let manifest = Manifest::load("artifacts")?;
+    let mut ex = Executor::new(manifest)?;
+    println!("PJRT platform: {}\n", ex.platform());
+
+    let (warm, reps) = if quick { (1, 3) } else { (3, 11) };
+    let mut t = Table::new(["artifact", "ws", "ns/exec (min)", "GUP/s", "GB/s"]);
+    let names: Vec<String> = ex
+        .manifest()
+        .artifacts
+        .iter()
+        .filter(|a| {
+            // The sequential-scan variant is O(n)-slow by design; keep its
+            // large sizes out of the default sweep.
+            !(a.variant == "kahan_scalar" && a.n > 262_144)
+                && !(quick && a.n > 262_144)
+        })
+        .map(|a| a.name.clone())
+        .collect();
+    for name in names {
+        let r = bench_artifact(&mut ex, &name, warm, reps)?;
+        t.row([
+            r.name.clone(),
+            fmt_bytes(r.ws_bytes),
+            fnum(r.ns.min, 0),
+            fnum(r.gups_best, 3),
+            fnum(r.gbs_best, 2),
+        ]);
+        eprint!(".");
+    }
+    eprintln!();
+    print!("{}", t.to_text());
+    println!("\nnaive_opt = XLA's native dot (compiler-optimal baseline);");
+    println!("naive/kahan = lane-parallel Pallas kernels (interpret-mode lowering);");
+    println!("kahan_scalar = the loop-carried 'compiler variant' — slow by design.");
+    Ok(())
+}

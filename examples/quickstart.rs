@@ -1,0 +1,79 @@
+//! Quickstart: the paper's claim in three acts.
+//!
+//! 1. *Numerics*: run the AOT-compiled naive and Kahan dot kernels (same
+//!    bits, one PJRT dispatch) on an ill-conditioned input and compare both
+//!    against the exact value.
+//! 2. *Analysis*: derive the ECM model for both kernels on Haswell-EP and
+//!    show that Kahan's extra arithmetic is hidden behind the memory
+//!    bottleneck ("Kahan for free").
+//! 3. *Virtual measurement*: confirm with the simulator testbed.
+//!
+//! Run: `cargo run --release --example quickstart` (needs `make artifacts`
+//! for act 1; acts 2-3 always work).
+
+use kahan_ecm::accuracy::{exact::exact_dot_f32, generator::ill_conditioned_dot};
+use kahan_ecm::arch::haswell;
+use kahan_ecm::ecm::{self, MemLevel};
+use kahan_ecm::isa::Variant;
+use kahan_ecm::runtime::{Executor, Manifest};
+use kahan_ecm::sim::{self, MeasureOpts};
+use kahan_ecm::util::rng::Rng;
+use kahan_ecm::util::units::{Precision, GIB};
+
+fn main() -> anyhow::Result<()> {
+    println!("=== 1. Numerics (real kernels via PJRT) ===============================");
+    match Manifest::load("artifacts") {
+        Ok(manifest) => {
+            let mut ex = Executor::new(manifest)?;
+            let mut rng = Rng::new(42);
+            let (x, y, _) = ill_conditioned_dot(4096, 2f64.powi(12), &mut rng);
+            let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+            let yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+            let exact = exact_dot_f32(&xf, &yf);
+            let xd: Vec<f64> = xf.iter().map(|&v| v as f64).collect();
+            let yd: Vec<f64> = yf.iter().map(|&v| v as f64).collect();
+            let out = ex.run("pair_f32_n4096", &[&xd, &yd])?;
+            let (naive, kahan) = (out.outputs[0][0], out.outputs[1][0]);
+            println!("condition ~ 2^12, n = 4096, f32 kernels (Pallas, AOT via PJRT):");
+            println!("  exact  = {exact:+.9e}");
+            println!(
+                "  naive  = {naive:+.9e}   (rel err {:.2e})",
+                ((naive - exact) / exact).abs()
+            );
+            println!(
+                "  kahan  = {kahan:+.9e}   (rel err {:.2e})",
+                ((kahan - exact) / exact).abs()
+            );
+        }
+        Err(e) => println!("  [skipped: {e}; run `make artifacts`]"),
+    }
+
+    println!("\n=== 2. ECM analysis on Haswell-EP ====================================");
+    let m = haswell();
+    for v in [Variant::NaiveSimd, Variant::KahanSimdFma5, Variant::KahanScalar] {
+        let inputs = ecm::derive::paper_row(&m, v, Precision::Sp, MemLevel::Mem);
+        let pred = inputs.predict();
+        let sat = ecm::scaling::saturation(&m, &inputs);
+        println!(
+            "  {:<14} input {:<36} -> {:<26} n_s/chip = {}",
+            inputs.kernel,
+            inputs.shorthand(),
+            pred.shorthand(),
+            sat.n_s_chip
+        );
+    }
+    println!("  => naive and SIMD-Kahan share the same memory-level 19.2 cy/CL:");
+    println!("     the compensated dot costs NOTHING for memory-resident data.");
+
+    println!("\n=== 3. Virtual testbed confirms ======================================");
+    for v in [Variant::NaiveSimd, Variant::KahanSimdFma5] {
+        let k = ecm::derive::kernel_for(&m, v, Precision::Sp, MemLevel::Mem);
+        let pt = &sim::sweep(&m, &k, &[GIB], &MeasureOpts::default())[0];
+        println!(
+            "  {:<16} simulated in-memory: {:>6.2} cy/CL = {:.2} GUP/s",
+            k.name, pt.cy_per_cl, pt.gups
+        );
+    }
+    println!("\nNext: `kahan-ecm run all` regenerates every paper figure into out/.");
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! End-to-end driver: regenerate EVERY table and figure of the paper into
+//! `out/`, exercising the full stack — ECM engine, simulator testbed, and
+//! the PJRT runtime over the AOT-compiled Pallas kernels (acc + host
+//! experiments). This is the run recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example reproduce_figures [-- --quick]`
+
+use kahan_ecm::coordinator::{all_experiments, assemble_report, run_parallel};
+use kahan_ecm::harness::Ctx;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let ctx = Ctx {
+        quick,
+        ..Ctx::default()
+    };
+    let defs = all_experiments();
+    let jobs = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    eprintln!(
+        "reproducing {} paper artifacts ({} mode, {jobs} workers) ...",
+        defs.len(),
+        if quick { "quick" } else { "full" }
+    );
+    let outcomes = run_parallel(&defs, &ctx, jobs);
+    let mut failed = 0;
+    for o in &outcomes {
+        match &o.result {
+            Ok(out) => {
+                out.write("out")?;
+                println!("[{:<10}] ok   {:6.1}s  out/{}/", o.id, o.seconds, o.id);
+            }
+            Err(e) => {
+                println!("[{:<10}] FAIL {:6.1}s  {e:#}", o.id, o.seconds);
+                failed += 1;
+            }
+        }
+    }
+    std::fs::write("out/REPORT.md", assemble_report(&defs, &outcomes))?;
+    println!("\nreport: out/REPORT.md");
+    if failed > 0 {
+        anyhow::bail!("{failed} experiment(s) failed");
+    }
+    Ok(())
+}

@@ -1,0 +1,13 @@
+"""Build-time compile path (L1 Pallas kernels + L2 JAX model + AOT lowering).
+
+Python in this package runs exactly once, at ``make artifacts`` time. Nothing
+here is imported on the Rust request path; the interchange format is HLO text
+(see ``aot.py``).
+
+f64 ("ddot") variants require 64-bit mode, so it is enabled unconditionally
+at package import — before any tracing can happen.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

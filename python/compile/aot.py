@@ -1,0 +1,145 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()`` and NOT
+a serialized ``HloModuleProto``: jax >= 0.5 emits protos with 64-bit
+instruction ids which the ``xla`` crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md and gen_hlo.py.
+
+Every artifact is one statically-shaped executable ``artifacts/<name>.hlo.txt``
+plus one entry in ``artifacts/manifest.json``. The Rust side
+(``rust/src/runtime``) consumes only the manifest and the text files.
+
+Usage:
+    python -m compile.aot [--out-dir ../artifacts] [--only SUBSTR] [--list]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Working-set sweep sizes for the host benchmark: with 2 streams x 4 B (f32)
+# these span ~32 KiB (L1/L2) to ~256 MiB (memory) on typical hosts.
+SWEEP_N = [4096, 262144, 4194304, 33554432]
+SCALAR_N = [4096, 262144]  # the sequential variant executes in O(n) steps
+DTYPES = {"f32": jnp.float32, "f64": jnp.float64}
+
+
+def artifact_specs():
+    """Yield (name, fn, arg_specs, meta) for every artifact to build."""
+    for dt_name, dt in DTYPES.items():
+        for n in SWEEP_N:
+            v = jax.ShapeDtypeStruct((n,), dt)
+            for variant in ("naive_opt", "naive", "kahan"):
+                fn, _ = model.VARIANTS[variant]
+                yield (
+                    f"{variant}_{dt_name}_n{n}",
+                    fn,
+                    (v, v),
+                    {"variant": variant, "dtype": dt_name, "n": n, "outputs": 1},
+                )
+        for n in SCALAR_N:
+            v = jax.ShapeDtypeStruct((n,), dt)
+            fn, _ = model.VARIANTS["kahan_scalar"]
+            yield (
+                f"kahan_scalar_{dt_name}_n{n}",
+                fn,
+                (v, v),
+                {"variant": "kahan_scalar", "dtype": dt_name, "n": n, "outputs": 1},
+            )
+    # Compensated summation (accuracy study).
+    for n in (262144,):
+        v = jax.ShapeDtypeStruct((n,), jnp.float32)
+        yield (
+            f"kahan_sum_f32_n{n}",
+            model.sum_kahan,
+            (v,),
+            {"variant": "kahan_sum", "dtype": "f32", "n": n, "outputs": 1},
+        )
+    # Paired naive+kahan on identical bits (accuracy study).
+    for n in (4096, 1048576):
+        v = jax.ShapeDtypeStruct((n,), jnp.float32)
+        yield (
+            f"pair_f32_n{n}",
+            model.dot_pair,
+            (v, v),
+            {"variant": "pair", "dtype": "f32", "n": n, "outputs": 2},
+        )
+    # Batched compensated dots: one PJRT dispatch, B independent rows.
+    b, n = 64, 16384
+    vb = jax.ShapeDtypeStruct((b, n), jnp.float32)
+    yield (
+        f"kahan_batched_f32_b{b}_n{n}",
+        model.dot_kahan_batched,
+        (vb, vb),
+        {"variant": "kahan_batched", "dtype": "f32", "n": n, "batch": b, "outputs": 1},
+    )
+
+
+def to_hlo_text(lowered):
+    """stablehlo MLIR -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir, only=None, verbose=True):
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for name, fn, arg_specs, meta in artifact_specs():
+        if only and only not in name:
+            continue
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry = {
+            "name": name,
+            "file": fname,
+            "inputs": [
+                {"shape": list(s.shape), "dtype": meta["dtype"]} for s in arg_specs
+            ],
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            **meta,
+        }
+        entries.append(entry)
+        if verbose:
+            print(f"  {name}: {len(text)} chars", file=sys.stderr)
+    manifest = {
+        "format": 1,
+        "interchange": "hlo-text",
+        "jax": jax.__version__,
+        "artifacts": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return entries
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    p.add_argument("--only", default=None, help="build only artifacts whose name contains SUBSTR")
+    p.add_argument("--list", action="store_true", help="list artifact names and exit")
+    args = p.parse_args()
+    if args.list:
+        for name, _, _, _ in artifact_specs():
+            print(name)
+        return
+    entries = build(args.out_dir, only=args.only)
+    print(f"wrote {len(entries)} artifacts + manifest.json to {args.out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""L1: Pallas kernels for the paper's compute hot-spot (the dot product).
+
+Kernel inventory
+----------------
+- ``naive_dot``  — the baseline "plain sdot/ddot": lane-parallel
+  multiply-accumulate, one partial sum per lane, plain lane reduction.
+  This is the Pallas analog of the compiler-optimal unrolled SIMD loop of
+  Fig. 2a.
+- ``kahan_dot``  — the Kahan-compensated dot product of Fig. 2b: the
+  compensation term ``c`` lives lane-resident in fast storage for the whole
+  sweep, exactly like the register-resident ``c`` of the paper's AVX/IMCI/VSX
+  kernels, and the final lane reduction is itself compensated so the lane
+  fold does not destroy what the compensation bought.
+- ``kahan_sum``  — compensated summation of a single stream (the primitive
+  the Kahan trick is usually stated for; used by the accuracy study).
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode is the correctness target and
+real-TPU behavior is estimated analytically (DESIGN.md §9).
+"""
+
+from .naive_dot import naive_dot
+from .kahan_dot import kahan_dot, kahan_dot_state
+from .kahan_sum import kahan_sum
+from . import ref
+
+__all__ = ["naive_dot", "kahan_dot", "kahan_dot_state", "kahan_sum", "ref"]

@@ -1,0 +1,71 @@
+"""Shared plumbing for the 1-D streaming Pallas kernels.
+
+All three kernels (naive_dot, kahan_dot, kahan_sum) are *streaming* kernels:
+a 1-D grid walks the input in ``block``-sized slabs (the BlockSpec expresses
+the HBM→VMEM schedule that the paper's CPUs expressed with hardware/software
+prefetching), and per-lane accumulator state is carried across grid steps in
+an output block that every step maps to the same location.
+
+``LANES`` defaults to 128 — the TPU vector-lane count — mirroring the SIMD
+width the paper's kernels expressed with AVX/IMCI/VSX registers (see
+DESIGN.md §7 Hardware-Adaptation).
+"""
+
+import jax.numpy as jnp
+
+# Interpret-mode grid steps carry the *full* input buffers through the XLA
+# while-loop state (a copy per step on CPU), so large streams want few,
+# large blocks: cap at 1 Mi elements (32 steps for the largest artifact).
+# On real TPU hardware the copy artifact does not exist and a 64-Ki block
+# (~1 MiB VMEM tile incl. accumulators) would be the natural choice — see
+# DESIGN.md §9 and EXPERIMENTS.md §Perf L1.
+MAX_DEFAULT_BLOCK = 1 << 20
+MIN_DEFAULT_BLOCK = 1024
+
+
+def _next_pow2(v):
+    p = 1
+    while p < v:
+        p *= 2
+    return p
+
+
+def choose_layout(n, block=None, lanes=None):
+    """Pick (block, lanes, padded_n) for an n-element stream.
+
+    ``block`` must be a multiple of ``lanes``; inputs are zero-padded up to a
+    multiple of ``block``. Zero padding is harmless for a dot product (the
+    products contribute exact zeros; pushing a zero through the Kahan
+    recurrence merely applies the pending compensation early, which is a
+    *compensated* operation and does not lose accuracy).
+
+    Performance note (EXPERIMENTS.md §Perf, L1): ``lanes`` defaults to the
+    full block (one Kahan row per grid step). Fewer, wider rows avoid the
+    per-row ``while``/dynamic-slice loop in the interpret-mode lowering;
+    more lane-parallel partial sums also improve accuracy slightly. The
+    default ``block`` adapts to n (power of two, 1 Ki .. 64 Ki elements):
+    interpret-mode grid steps cost ~0.3 ms each on CPU, so fewer/larger
+    slabs win; 64 Ki f32 keeps the per-step tile (inputs + accumulators
+    ~1 MiB) comfortably VMEM-sized for the real-TPU mapping (DESIGN.md §9).
+    """
+    if n <= 0:
+        raise ValueError(f"n must be positive, got {n}")
+    if block is None:
+        block = max(MIN_DEFAULT_BLOCK, min(MAX_DEFAULT_BLOCK, _next_pow2(n)))
+        if lanes is not None and lanes > block:
+            block = lanes
+        if lanes is not None and block % lanes:
+            block = ((block + lanes - 1) // lanes) * lanes
+    if lanes is None:
+        lanes = block
+    if block % lanes != 0:
+        raise ValueError(f"block ({block}) must be a multiple of lanes ({lanes})")
+    padded = ((n + block - 1) // block) * block
+    return block, lanes, padded
+
+
+def pad_to(x, padded):
+    n = x.shape[0]
+    if n == padded:
+        return x
+    return jnp.pad(x, (0, padded - n))

@@ -1,0 +1,148 @@
+"""Kahan-compensated dot product as a Pallas kernel (the paper's Fig. 2b).
+
+Mapping from the paper's SIMD kernels (DESIGN.md §7):
+
+- One Kahan recurrence runs *per vector lane* (``lanes`` of them), exactly as
+  the AVX version of the paper runs eight f32 recurrences per register. The
+  per-lane state ``(sum, c)`` stays resident in the accumulator blocks for
+  the entire stream — the analog of keeping ``ymm`` registers live across
+  the unrolled loop.
+- The 1-D grid streams ``block``-element slabs of ``x`` and ``y``; the
+  BlockSpec index maps are the declarative form of the paper's
+  prefetch/unroll schedule (Mosaic double-buffers the HBM→VMEM copies).
+- The final grid step folds the per-lane states with a *compensated* lane
+  reduction (two_sum based, accumulating both the fold's own rounding errors
+  and the pending per-lane compensations) so the reduction does not
+  reintroduce O(lanes)·eps error. The paper's asm kernels do the same with
+  a horizontal-add epilogue; a plain ``jnp.sum`` here would forfeit roughly
+  half the accuracy gain.
+
+Outputs: ``(dot, s_lanes, c_lanes)``. The per-lane state is exposed because
+(a) the L2 model reuses it for chunked/distributed dot products and (b) tests
+assert invariants on it. The scalar ``dot`` is the headline result.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .common import choose_layout, pad_to
+
+
+def _kernel(lanes):
+    def kernel(x_ref, y_ref, o_ref, s_ref, c_ref):
+        i = pl.program_id(0)
+        nsteps = pl.num_programs(0)
+
+        @pl.when(i == 0)
+        def _init():
+            s_ref[...] = jnp.zeros_like(s_ref)
+            c_ref[...] = jnp.zeros_like(c_ref)
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        x = x_ref[...].reshape(-1, lanes)
+        y = y_ref[...].reshape(-1, lanes)
+        rows = x.shape[0]
+
+        # Lane-parallel Kahan recurrence over the rows of this slab. The
+        # row loop is the sequential dependency the paper hides with
+        # unrolling; lanes are the parallel dimension that hides it here.
+        # `rows` is static: small row counts are unrolled in Python (no
+        # XLA `while` + dynamic-slice per row — EXPERIMENTS.md §Perf L1);
+        # the default layout has rows == 1.
+        def step(r, carry):
+            s, c = carry
+            prod = x[r] * y[r]
+            yv = prod - c
+            t = s + yv
+            c_new = (t - s) - yv
+            return t, c_new
+
+        carry = (s_ref[...], c_ref[...])
+        if rows <= 8:
+            for r in range(rows):
+                carry = step(r, carry)
+            s, c = carry
+        else:
+            s, c = lax.fori_loop(0, rows, lambda r, sc: step(r, sc), carry)
+        s_ref[...] = s
+        c_ref[...] = c
+
+        @pl.when(i == nsteps - 1)
+        def _finalize():
+            o_ref[0] = _compensated_fold(s_ref[...], c_ref[...])
+
+    return kernel
+
+
+def _compensated_fold(s, c):
+    """Fold per-lane Kahan states into a scalar without losing compensation.
+
+    Power-of-two lane counts use a fully vectorized two_sum *tree* (log2
+    depth, no sequential loop); other counts fall back to a sequential
+    compensated fold. Both accumulate the fold's own rounding errors plus
+    the pending per-lane compensations (which subtract in Fig. 2b's
+    convention). Mirrored exactly by ``ref.compensated_lane_reduce``.
+    """
+    lanes = s.shape[0]
+    if lanes & (lanes - 1) == 0:
+        err = -c
+        while s.shape[0] > 1:
+            half = s.shape[0] // 2
+            a, b = s[:half], s[half:]
+            t = a + b
+            ap = t - b
+            bp = t - ap
+            e = (a - ap) + (b - bp)  # exact two_sum residual, vectorized
+            s = t
+            err = err[:half] + err[half:] + e
+        return s[0] + err[0]
+
+    def fold(l, carry):
+        acc, err = carry
+        acc2 = acc + s[l]
+        ap = acc2 - s[l]
+        bp = acc2 - ap
+        t = (acc - ap) + (s[l] - bp)
+        return acc2, err + (t - c[l])
+
+    zero = jnp.zeros((), s.dtype)
+    acc, err = lax.fori_loop(0, lanes, fold, (zero, zero))
+    return acc + err
+
+
+def kahan_dot_state(x, y, block=None, lanes=None):
+    """Kahan dot returning ``(dot, s_lanes, c_lanes)``; see module docstring."""
+    if x.shape != y.shape or x.ndim != 1:
+        raise ValueError(f"expected equal 1-D shapes, got {x.shape} vs {y.shape}")
+    n = x.shape[0]
+    block, lanes, padded = choose_layout(n, block, lanes)
+    x = pad_to(x, padded)
+    y = pad_to(y, padded)
+    grid = padded // block
+    return pl.pallas_call(
+        _kernel(lanes),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((lanes,), lambda i: (0,)),
+            pl.BlockSpec((lanes,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), x.dtype),
+            jax.ShapeDtypeStruct((lanes,), x.dtype),
+            jax.ShapeDtypeStruct((lanes,), x.dtype),
+        ],
+        interpret=True,
+    )(x, y)
+
+
+def kahan_dot(x, y, block=None, lanes=None):
+    """Kahan-compensated dot product of two 1-D vectors (scalar result)."""
+    out, _, _ = kahan_dot_state(x, y, block=block, lanes=lanes)
+    return out[0]

@@ -1,0 +1,81 @@
+"""Kahan-compensated summation of a single stream as a Pallas kernel.
+
+The summation primitive underlying the dot product (the paper's Sect. 1
+frames Kahan as a summation algorithm; the dot product is summation of
+elementwise products). Used by the accuracy study and as a second,
+independent exercise of the lane-resident-compensation pattern.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .common import choose_layout, pad_to
+from .kahan_dot import _compensated_fold
+
+
+def _kernel(lanes):
+    def kernel(x_ref, o_ref, s_ref, c_ref):
+        i = pl.program_id(0)
+        nsteps = pl.num_programs(0)
+
+        @pl.when(i == 0)
+        def _init():
+            s_ref[...] = jnp.zeros_like(s_ref)
+            c_ref[...] = jnp.zeros_like(c_ref)
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        x = x_ref[...].reshape(-1, lanes)
+        rows = x.shape[0]
+
+        def step(r, carry):
+            s, c = carry
+            yv = x[r] - c
+            t = s + yv
+            return t, (t - s) - yv
+
+        # Static small row counts are unrolled (see kahan_dot.py; the
+        # default layout has rows == 1).
+        carry = (s_ref[...], c_ref[...])
+        if rows <= 8:
+            for r in range(rows):
+                carry = step(r, carry)
+            s, c = carry
+        else:
+            s, c = lax.fori_loop(0, rows, lambda r, sc: step(r, sc), carry)
+        s_ref[...] = s
+        c_ref[...] = c
+
+        @pl.when(i == nsteps - 1)
+        def _finalize():
+            o_ref[0] = _compensated_fold(s_ref[...], c_ref[...])
+
+    return kernel
+
+
+def kahan_sum(x, block=None, lanes=None):
+    """Kahan-compensated sum of a 1-D vector (scalar result)."""
+    if x.ndim != 1:
+        raise ValueError(f"expected 1-D input, got shape {x.shape}")
+    n = x.shape[0]
+    block, lanes, padded = choose_layout(n, block, lanes)
+    x = pad_to(x, padded)
+    grid = padded // block
+    out, _, _ = pl.pallas_call(
+        _kernel(lanes),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((lanes,), lambda i: (0,)),
+            pl.BlockSpec((lanes,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), x.dtype),
+            jax.ShapeDtypeStruct((lanes,), x.dtype),
+            jax.ShapeDtypeStruct((lanes,), x.dtype),
+        ],
+        interpret=True,
+    )(x)
+    return out[0]

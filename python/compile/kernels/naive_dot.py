@@ -1,0 +1,69 @@
+"""Naive (uncompensated) dot product as a Pallas kernel — the paper's Fig. 2a
+baseline ("plain sdot/ddot").
+
+Identical streaming structure to ``kahan_dot`` (same BlockSpec schedule, same
+per-lane partial sums) so that the *only* difference between the two kernels
+is the compensation arithmetic — mirroring the paper's setup where naive and
+Kahan kernels share the load schedule and differ in the arithmetic mix
+(2 flops/update vs 5 flops/update).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .common import choose_layout, pad_to
+
+
+def _kernel(lanes):
+    def kernel(x_ref, y_ref, o_ref, s_ref):
+        i = pl.program_id(0)
+        nsteps = pl.num_programs(0)
+
+        @pl.when(i == 0)
+        def _init():
+            s_ref[...] = jnp.zeros_like(s_ref)
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        x = x_ref[...].reshape(-1, lanes)
+        y = y_ref[...].reshape(-1, lanes)
+
+        # Lane-parallel multiply-accumulate: one partial sum per lane, the
+        # direct analog of the unrolled-SIMD naive loop (FMA per row).
+        s_ref[...] = s_ref[...] + jnp.sum(x * y, axis=0)
+
+        @pl.when(i == nsteps - 1)
+        def _finalize():
+            o_ref[0] = jnp.sum(s_ref[...])
+
+    return kernel
+
+
+def naive_dot(x, y, block=None, lanes=None):
+    """Naive lane-parallel dot product of two 1-D vectors (scalar result)."""
+    if x.shape != y.shape or x.ndim != 1:
+        raise ValueError(f"expected equal 1-D shapes, got {x.shape} vs {y.shape}")
+    n = x.shape[0]
+    block, lanes, padded = choose_layout(n, block, lanes)
+    x = pad_to(x, padded)
+    y = pad_to(y, padded)
+    grid = padded // block
+    out, _ = pl.pallas_call(
+        _kernel(lanes),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((lanes,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), x.dtype),
+            jax.ShapeDtypeStruct((lanes,), x.dtype),
+        ],
+        interpret=True,
+    )(x, y)
+    return out[0]

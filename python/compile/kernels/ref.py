@@ -1,0 +1,130 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Three tiers of reference:
+
+1. ``naive_dot_ref`` / ``naive_sum_ref`` — what the baseline kernel computes,
+   up to reassociation (``jnp.dot`` / ``jnp.sum``).
+2. ``kahan_dot_ref`` / ``kahan_sum_ref`` — a sequential scalar Kahan
+   recurrence (``lax.scan``) in the *working* dtype. This is the literal
+   algorithm of Fig. 2b of the paper and is the semantic model for what the
+   lane-parallel kernel must approximate (the kernel runs one Kahan
+   recurrence per lane plus a compensated lane fold, so it does not match
+   the scalar recurrence bit-for-bit; it matches to a few ulps).
+3. ``highprec_dot`` — the same dot evaluated in f64 (for f32 inputs); used as
+   the "ground truth" both kernels are compared against for error measures.
+
+``two_sum`` / ``fast_two_sum`` are the error-free transformations used by the
+compensated lane reduction; they are exposed here so tests can check their
+exactness property directly.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def two_sum(a, b):
+    """Knuth's error-free transformation: a + b = s + t exactly.
+
+    Returns ``(s, t)`` with ``s = fl(a + b)`` and ``t`` the exact rounding
+    error. Branch-free; valid for any ordering of |a|, |b|.
+    """
+    s = a + b
+    ap = s - b
+    bp = s - ap
+    da = a - ap
+    db = b - bp
+    return s, da + db
+
+
+def fast_two_sum(a, b):
+    """Dekker's error-free transformation; requires |a| >= |b|."""
+    s = a + b
+    t = b - (s - a)
+    return s, t
+
+
+def kahan_step(carry, xy):
+    """One iteration of the Fig. 2b loop: (sum, c), (a_i, b_i) -> (sum', c')."""
+    s, c = carry
+    a, b = xy
+    prod = a * b
+    y = prod - c
+    t = s + y
+    c_new = (t - s) - y
+    return (t, c_new), None
+
+
+def kahan_dot_ref(x, y):
+    """Sequential scalar Kahan dot product (lax.scan), working dtype."""
+    zero = jnp.zeros((), x.dtype)
+    (s, c), _ = lax.scan(kahan_step, (zero, zero), (x, y))
+    return s
+
+
+def kahan_sum_ref(x):
+    """Sequential scalar Kahan summation (lax.scan), working dtype."""
+
+    def step(carry, a):
+        s, c = carry
+        yv = a - c
+        t = s + yv
+        return (t, (t - s) - yv), None
+
+    zero = jnp.zeros((), x.dtype)
+    (s, c), _ = lax.scan(step, (zero, zero), x)
+    return s
+
+
+def naive_dot_ref(x, y):
+    """Baseline oracle: XLA's own reduction order for the dot product."""
+    return jnp.dot(x, y)
+
+
+def naive_sum_ref(x):
+    return jnp.sum(x)
+
+
+def highprec_dot(x, y):
+    """f64 ground truth (only meaningful for f32 inputs)."""
+    return jnp.dot(x.astype(jnp.float64), y.astype(jnp.float64))
+
+
+def highprec_sum(x):
+    return jnp.sum(x.astype(jnp.float64))
+
+
+def compensated_lane_reduce(s, c):
+    """Fold per-lane Kahan states (s_i, c_i) into one scalar, compensated —
+    the exact algorithm of the Pallas kernels' final grid step.
+
+    Each lane carries a partial sum ``s_i`` and its pending compensation
+    ``c_i`` (which *subtracts* in the Fig. 2b formulation). Power-of-two
+    lane counts use the vectorized two_sum tree (mirrors
+    ``kahan_dot._compensated_fold`` bit-for-bit); other counts fold
+    sequentially. Both accumulate every rounding error plus the pending
+    compensations into an error term applied once at the end.
+    """
+    lanes = s.shape[0]
+    if lanes & (lanes - 1) == 0 and lanes > 1:
+        err = -c
+        while s.shape[0] > 1:
+            half = s.shape[0] // 2
+            a, b = s[:half], s[half:]
+            t = a + b
+            ap = t - b
+            bp = t - ap
+            e = (a - ap) + (b - bp)
+            s = t
+            err = err[:half] + err[half:] + e
+        return s[0] + err[0]
+
+    def step(carry, sc):
+        acc, err = carry
+        si, ci = sc
+        acc, t = two_sum(acc, si)
+        return (acc, err + (t - ci)), None
+
+    zero = jnp.zeros((), s.dtype)
+    (acc, err), _ = lax.scan(step, (zero, zero), (s, c))
+    return acc + err

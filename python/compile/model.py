@@ -1,0 +1,98 @@
+"""L2: the JAX compute graphs that get AOT-lowered for the Rust runtime.
+
+Variants mirror the paper's kernel zoo (Sect. 4):
+
+=====================  =======================================================
+paper kernel           L2 variant
+=====================  =======================================================
+naive sdot/ddot,       ``dot_naive_opt``  — ``jnp.dot`` (XLA's own optimal
+compiler -O3           reduction; the "compiler generates optimal code" case)
+naive, manual SIMD     ``dot_naive``      — the Pallas lane-parallel kernel
+Kahan, compiler        ``dot_kahan_scalar`` — sequential ``lax.scan`` Kahan,
+(-O1, vectorization    the loop-carried-dependency form a compiler must emit
+inhibited)             when it may not reassociate (slow on purpose)
+Kahan, manual SIMD     ``dot_kahan``      — the Pallas lane-resident kernel
+(AVX/IMCI/VSX)
+=====================  =======================================================
+
+plus ``sum_kahan`` (compensated summation) and ``dot_kahan_batched`` (a
+B-row batch of compensated dots — the shape the paper's motivating numerics
+workloads, e.g. residual norms across many RHS, actually use).
+
+Every public function here is a pure JAX function of arrays; ``aot.py``
+lowers each (variant × dtype × size) to an HLO-text artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import kahan_dot, kahan_dot_state, kahan_sum, naive_dot
+from .kernels import ref
+
+
+def dot_naive_opt(x, y):
+    """Compiler-optimal naive dot: XLA chooses the reduction strategy."""
+    return (jnp.dot(x, y),)
+
+
+def dot_naive(x, y):
+    """Manual lane-parallel naive dot (Pallas kernel)."""
+    return (naive_dot(x, y),)
+
+
+def dot_kahan(x, y):
+    """Manual lane-resident Kahan dot (Pallas kernel)."""
+    return (kahan_dot(x, y),)
+
+
+def dot_kahan_state(x, y):
+    """Kahan dot exposing per-lane (sum, c) state; used for chunked dots."""
+    out, s, c = kahan_dot_state(x, y)
+    return (out[0], s, c)
+
+
+def dot_kahan_scalar(x, y):
+    """Sequential scalar Kahan dot — the 'compiler-generated' variant.
+
+    The loop-carried dependency on the compensation term is explicit
+    (``lax.scan``), so XLA cannot vectorize across iterations, exactly like
+    the compiler variant the paper benchmarks (Sect. 4.2: "the compiler
+    detects (correctly) a loop-carried dependency on c, which prohibits SIMD
+    vectorization").
+    """
+    return (ref.kahan_dot_ref(x, y),)
+
+
+def sum_kahan(x):
+    """Compensated summation (Pallas kernel)."""
+    return (kahan_sum(x),)
+
+
+def dot_kahan_batched(xs, ys):
+    """Batch of compensated dots: (B, N) x (B, N) -> (B,).
+
+    Rows are independent, so the batch dimension is mapped sequentially with
+    ``lax.map`` over the Pallas kernel — batching is the L3 coordinator's
+    job (it fans rows out across worker threads); the artifact exists so a
+    single PJRT dispatch can amortize executor overhead for small batches.
+    """
+    return (jax.lax.map(lambda xy: kahan_dot(xy[0], xy[1]), (xs, ys)),)
+
+
+def dot_pair(x, y):
+    """Naive and Kahan dot of the same data in one dispatch.
+
+    Used by the accuracy study: evaluating both on identical inputs in one
+    executable guarantees the comparison sees the same bits.
+    """
+    return (naive_dot(x, y), kahan_dot(x, y))
+
+
+VARIANTS = {
+    "naive_opt": (dot_naive_opt, 2),
+    "naive": (dot_naive, 2),
+    "kahan": (dot_kahan, 2),
+    "kahan_scalar": (dot_kahan_scalar, 2),
+    "kahan_sum": (sum_kahan, 1),
+    "pair": (dot_pair, 2),
+}

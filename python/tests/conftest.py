@@ -1,0 +1,17 @@
+"""Test config: put python/ on sys.path and tame hypothesis for slow
+interpret-mode Pallas execution."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from hypothesis import settings, HealthCheck
+
+settings.register_profile(
+    "pallas",
+    deadline=None,
+    max_examples=25,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("pallas")

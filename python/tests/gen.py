@@ -1,0 +1,69 @@
+"""Input generators for the numeric tests.
+
+``ill_conditioned_dot`` is a simplified Ogita–Rump–Oishi generator: it builds
+a dot product with a prescribed condition number ``cond ~ 2^e_spread`` by
+mixing large-magnitude terms that cancel almost exactly with small-magnitude
+noise. The exact value is computed with ``math.fsum`` over per-element
+products evaluated in f64 (exact for f32 inputs, and accurate to 1 ulp for
+f64 inputs since fsum is exactly rounded over the f64 products).
+"""
+
+import math
+
+import numpy as np
+
+
+def ill_conditioned_dot(n, cond_exp, dtype=np.float32, seed=0):
+    """Return (x, y, exact) with condition number roughly 2**cond_exp.
+
+    Construction: first half draws factors with exponents spread uniformly in
+    [0, cond_exp/2] on both x and y (so products span 2**cond_exp); second
+    half inserts near-cancelling terms: y_i chosen so x_i*y_i ~ -(current
+    partial sum scale). This mirrors Algorithm 6.1 of Ogita, Rump & Oishi
+    (SIAM J. Sci. Comput. 2005) in structure, without requiring exact
+    rational arithmetic.
+    """
+    assert n >= 4 and n % 2 == 0
+    rng = np.random.default_rng(seed)
+    half = n // 2
+    e = rng.uniform(0.0, cond_exp / 2.0, size=half)
+    # Ensure the extremes of the exponent range are present.
+    e[0] = cond_exp / 2.0
+    e[-1] = 0.0
+    x1 = ((2.0 * rng.random(half) - 1.0) * np.exp2(e)).astype(dtype)
+    y1 = ((2.0 * rng.random(half) - 1.0) * np.exp2(e)).astype(dtype)
+
+    x2 = np.empty(half, dtype=dtype)
+    y2 = np.empty(half, dtype=dtype)
+    # Exact running sum of what we have so far (f64 products of f32/f64 bits).
+    prods = [float(a) * float(b) for a, b in zip(x1.astype(np.float64), y1.astype(np.float64))]
+    for i in range(half):
+        # Exponent ramps back down so later terms probe every magnitude.
+        target_e = cond_exp / 2.0 * (1.0 - i / max(1, half - 1))
+        xv = dtype((2.0 * rng.random() - 1.0) * math.exp(target_e * math.log(2.0)))
+        if xv == 0.0:
+            xv = dtype(1.0)
+        s = math.fsum(prods)
+        yv = dtype(-s / float(xv) * rng.random())
+        x2[i] = xv
+        y2[i] = yv
+        prods.append(float(np.float64(xv)) * float(np.float64(yv)))
+    x = np.concatenate([x1, x2])
+    y = np.concatenate([y1, y2])
+    exact = math.fsum(
+        float(a) * float(b)
+        for a, b in zip(x.astype(np.float64), y.astype(np.float64))
+    )
+    return x, y, exact
+
+
+def exact_dot(x, y):
+    """Exact (f64-product fsum) value of the dot product of f32/f64 arrays."""
+    return math.fsum(
+        float(a) * float(b)
+        for a, b in zip(np.asarray(x, np.float64), np.asarray(y, np.float64))
+    )
+
+
+def exact_sum(x):
+    return math.fsum(float(a) for a in np.asarray(x, np.float64))

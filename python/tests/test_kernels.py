@@ -1,0 +1,263 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles (the CORE signal).
+
+hypothesis sweeps shapes, dtypes, block/lane layouts; fixed-seed tests pin
+edge cases (n=1, n<lanes, non-divisible n, negative zeros, huge/tiny values).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import kahan_dot, kahan_dot_state, kahan_sum, naive_dot, ref
+from compile.kernels.common import choose_layout
+from tests.gen import exact_dot, exact_sum, ill_conditioned_dot
+
+
+def rnd(n, seed, dtype=jnp.float32, scale=1.0):
+    k = jax.random.PRNGKey(seed)
+    return (jax.random.normal(k, (n,)) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- two_sum EFT
+
+
+@given(
+    st.floats(-1e30, 1e30, allow_nan=False, allow_subnormal=False),
+    st.floats(-1e30, 1e30, allow_nan=False, allow_subnormal=False),
+)
+def test_two_sum_exact(a, b):
+    """two_sum is an error-free transformation: s + t == a + b exactly
+    (verified in higher precision via fsum)."""
+    s, t = ref.two_sum(jnp.float64(a), jnp.float64(b))
+    # s must be the correctly rounded sum, and t the exact residual.
+    assert float(s) == a + b
+    # s + t == a + b exactly, checked by exact cancellation:
+    assert math.fsum([float(s), float(t), -a, -b]) == 0.0
+
+
+@given(
+    st.floats(-1e15, 1e15, allow_nan=False, allow_subnormal=False),
+    st.floats(-1.0, 1.0, allow_subnormal=False),
+)
+def test_fast_two_sum_exact_when_ordered(a, b):
+    # XLA CPU flushes subnormals (FTZ), so the EFT property is only claimed
+    # on normal floats.
+    if abs(a) < abs(b):
+        a, b = b, a
+    s, t = ref.fast_two_sum(jnp.float64(a), jnp.float64(b))
+    assert math.fsum([float(s), float(t), -a, -b]) == 0.0
+
+
+# ----------------------------------------------------------- layout plumbing
+
+
+def test_choose_layout_defaults():
+    block, lanes, padded = choose_layout(10_000)
+    assert block % lanes == 0
+    assert padded % block == 0
+    assert padded >= 10_000
+
+
+def test_choose_layout_small_n():
+    # Small n: one padded block, lanes = block (rows == 1 fast path).
+    block, lanes, padded = choose_layout(3)
+    assert lanes == block
+    assert padded == block
+    assert padded >= 3
+
+
+def test_choose_layout_rejects_bad_block():
+    with pytest.raises(ValueError):
+        choose_layout(100, block=100, lanes=64)
+
+
+def test_choose_layout_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        choose_layout(0)
+
+
+# --------------------------------------------------------------- naive_dot
+
+
+@given(
+    n=st.integers(1, 3000),
+    seed=st.integers(0, 2**31),
+    dt=st.sampled_from(["f32", "f64"]),
+)
+def test_naive_dot_matches_jnp(n, seed, dt):
+    dtype = jnp.float32 if dt == "f32" else jnp.float64
+    x, y = rnd(n, seed, dtype), rnd(n, seed + 1, dtype)
+    got = naive_dot(x, y)
+    want = ref.naive_dot_ref(x, y)
+    # Different (but both valid) reduction orders: compare against the
+    # standard naive-summation error bound n*eps*sum|x_i*y_i|, not the
+    # (possibly cancelled) result magnitude.
+    eps = np.finfo(np.float32 if dt == "f32" else np.float64).eps
+    scale = float(jnp.sum(jnp.abs(x * y))) + 1e-300
+    assert abs(float(got) - float(want)) <= 2 * n * eps * scale
+
+
+@pytest.mark.parametrize("n", [1, 2, 127, 128, 129, 255, 2048, 2049, 4096 + 17])
+def test_naive_dot_sizes(n):
+    x, y = rnd(n, 7), rnd(n, 8)
+    got = naive_dot(x, y)
+    want = exact_dot(np.asarray(x), np.asarray(y))
+    assert math.isclose(float(got), want, rel_tol=1e-4, abs_tol=1e-6)
+
+
+@pytest.mark.parametrize("block,lanes", [(128, 128), (256, 64), (1024, 128), (64, 8)])
+def test_naive_dot_layout_invariance(block, lanes):
+    """The result must not depend materially on the block/lane layout."""
+    x, y = rnd(5000, 3), rnd(5000, 4)
+    got = naive_dot(x, y, block=block, lanes=lanes)
+    want = exact_dot(np.asarray(x), np.asarray(y))
+    assert math.isclose(float(got), want, rel_tol=1e-4, abs_tol=1e-6)
+
+
+# --------------------------------------------------------------- kahan_dot
+
+
+@given(
+    n=st.integers(1, 3000),
+    seed=st.integers(0, 2**31),
+    dt=st.sampled_from(["f32", "f64"]),
+)
+def test_kahan_dot_close_to_scalar_kahan(n, seed, dt):
+    """Lane-parallel Kahan vs the sequential Fig. 2b recurrence: both are
+    compensated schemes; they agree to a few ulps of the result magnitude."""
+    dtype = jnp.float32 if dt == "f32" else jnp.float64
+    x, y = rnd(n, seed, dtype), rnd(n, seed + 1, dtype)
+    got = float(kahan_dot(x, y))
+    want = float(ref.kahan_dot_ref(x, y))
+    eps = 1e-6 if dt == "f32" else 1e-15
+    scale = float(jnp.sum(jnp.abs(x * y))) + 1e-30
+    assert abs(got - want) <= 8 * eps * scale
+
+
+@given(n=st.integers(1, 2000), seed=st.integers(0, 2**31))
+def test_kahan_dot_close_to_exact(n, seed):
+    x, y = rnd(n, seed), rnd(n, seed + 1)
+    got = float(kahan_dot(x, y))
+    want = exact_dot(np.asarray(x), np.asarray(y))
+    scale = float(jnp.sum(jnp.abs(x * y))) + 1e-30
+    # Compensated f32 result should be within a few f32 ulps of exact.
+    assert abs(got - want) <= 8 * np.finfo(np.float32).eps * scale
+
+
+@pytest.mark.parametrize("n", [1, 2, 127, 128, 129, 2048, 2049, 10_000])
+def test_kahan_dot_sizes(n):
+    x, y = rnd(n, 11), rnd(n, 12)
+    got = float(kahan_dot(x, y))
+    want = exact_dot(np.asarray(x), np.asarray(y))
+    scale = float(jnp.sum(jnp.abs(x * y))) + 1e-30
+    assert abs(got - want) <= 8 * np.finfo(np.float32).eps * scale
+
+
+@pytest.mark.parametrize("block,lanes", [(128, 128), (256, 64), (2048, 128), (64, 8)])
+def test_kahan_dot_layout_invariance(block, lanes):
+    x, y = rnd(5000, 13), rnd(5000, 14)
+    got = float(kahan_dot(x, y, block=block, lanes=lanes))
+    want = exact_dot(np.asarray(x), np.asarray(y))
+    scale = float(jnp.sum(jnp.abs(x * y))) + 1e-30
+    assert abs(got - want) <= 8 * np.finfo(np.float32).eps * scale
+
+
+def test_kahan_dot_state_consistent():
+    """Scalar output equals the compensated fold of the exposed lane state."""
+    x, y = rnd(4096, 21), rnd(4096, 22)
+    out, s, c = kahan_dot_state(x, y)
+    folded = ref.compensated_lane_reduce(s, c)
+    np.testing.assert_allclose(float(out[0]), float(folded), rtol=0, atol=0)
+
+
+def test_kahan_dot_zero_padding_harmless():
+    """Padding to the block boundary must not change the compensated result
+    beyond a couple of ulps (zeros only flush pending compensation)."""
+    n = 2048 - 3  # forces 3 zero pads at default block
+    x, y = rnd(n, 31), rnd(n, 32)
+    a = float(kahan_dot(x, y))
+    b = float(kahan_dot(jnp.pad(x, (0, 3)), jnp.pad(y, (0, 3))))
+    scale = float(jnp.sum(jnp.abs(x * y))) + 1e-30
+    assert abs(a - b) <= 4 * np.finfo(np.float32).eps * scale
+
+
+def test_kahan_beats_naive_on_ill_conditioned():
+    """The paper's premise: compensation wins when cancellation is severe."""
+    wins = 0
+    for seed in range(5):
+        x, y, exact = ill_conditioned_dot(512, cond_exp=30, seed=seed)
+        xj, yj = jnp.asarray(x), jnp.asarray(y)
+        err_naive = abs(float(naive_dot(xj, yj)) - exact)
+        err_kahan = abs(float(kahan_dot(xj, yj)) - exact)
+        if err_kahan <= err_naive:
+            wins += 1
+    assert wins >= 4  # allow one tie/fluke
+
+
+def test_kahan_dot_shape_mismatch_raises():
+    with pytest.raises(ValueError):
+        kahan_dot(jnp.ones((4,)), jnp.ones((5,)))
+    with pytest.raises(ValueError):
+        kahan_dot(jnp.ones((4, 2)), jnp.ones((4, 2)))
+
+
+# --------------------------------------------------------------- kahan_sum
+
+
+@given(n=st.integers(1, 3000), seed=st.integers(0, 2**31))
+def test_kahan_sum_close_to_exact(n, seed):
+    x = rnd(n, seed)
+    got = float(kahan_sum(x))
+    want = exact_sum(np.asarray(x))
+    scale = float(jnp.sum(jnp.abs(x))) + 1e-30
+    assert abs(got - want) <= 8 * np.finfo(np.float32).eps * scale
+
+
+def test_kahan_sum_cancellation():
+    """1e8 + many small values - 1e8: naive f32 drops the smalls entirely."""
+    small = np.full(10_000, 0.1, np.float32)
+    x = jnp.asarray(np.concatenate([[1e8], small, [-1e8]]).astype(np.float32))
+    got = float(kahan_sum(x))
+    want = exact_sum(np.asarray(x))
+    naive = float(jnp.sum(x))
+    assert abs(got - want) < abs(naive - want)
+    # Kahan bound: |err| <= 2*eps*sum(|x_i|) — relative to the *condition*
+    # of the sum (sum|x| ~ 2e8), not to the small result (1e3).
+    bound = 2 * np.finfo(np.float32).eps * float(jnp.sum(jnp.abs(x)))
+    assert abs(got - want) <= bound
+
+
+def test_kahan_sum_rejects_2d():
+    with pytest.raises(ValueError):
+        kahan_sum(jnp.ones((4, 4)))
+
+
+# --------------------------------------------------- jit/lowering stability
+
+
+def test_kernels_jit_stable():
+    """Kernels must trace and execute consistently under jit (AOT relies on
+    this: artifacts are jit-lowered). XLA may contract mul+add into FMAs
+    differently between the eager and fully-jitted graphs, so we require
+    ulp-level agreement rather than bit equality."""
+    x, y = rnd(1024, 41), rnd(1024, 42)
+    eager = float(kahan_dot(x, y))
+    jitted = float(jax.jit(kahan_dot)(x, y))
+    scale = float(jnp.sum(jnp.abs(x * y))) + 1e-30
+    assert abs(eager - jitted) <= 4 * np.finfo(np.float32).eps * scale
+
+
+@settings(max_examples=10)
+@given(n=st.integers(4, 500))
+def test_naive_vs_kahan_same_data_similar(n):
+    """On well-conditioned data, both kernels agree to f32 tolerance
+    (the paper's 'Kahan costs nothing *numerically* on benign data')."""
+    x, y = rnd(n, n), rnd(n, n + 1)
+    a = float(naive_dot(x, y))
+    b = float(kahan_dot(x, y))
+    scale = float(jnp.sum(jnp.abs(x * y))) + 1e-30
+    assert abs(a - b) <= 64 * np.finfo(np.float32).eps * scale

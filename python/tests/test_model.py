@@ -1,0 +1,114 @@
+"""L2 model: variant semantics, batching, shape stability."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from tests.gen import exact_dot, ill_conditioned_dot
+
+
+def rnd(shape, seed, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape).astype(dtype)
+
+
+def test_variants_registry_complete():
+    assert set(model.VARIANTS) == {
+        "naive_opt", "naive", "kahan", "kahan_scalar", "kahan_sum", "pair",
+    }
+    for name, (fn, ninputs) in model.VARIANTS.items():
+        assert callable(fn), name
+        assert ninputs in (1, 2), name
+
+
+@pytest.mark.parametrize("variant", ["naive_opt", "naive", "kahan", "kahan_scalar"])
+def test_dot_variants_agree(variant):
+    x, y = rnd((2048,), 1), rnd((2048,), 2)
+    fn, _ = model.VARIANTS[variant]
+    (got,) = fn(x, y)
+    want = exact_dot(np.asarray(x), np.asarray(y))
+    assert math.isclose(float(got), want, rel_tol=1e-4, abs_tol=1e-6)
+
+
+def test_kahan_scalar_is_literal_fig2b():
+    """The 'compiler' variant must match a literal Python transcription of
+    Fig. 2b bit-for-bit (same order, same operations)."""
+    x, y = rnd((513,), 3), rnd((513,), 4)
+    (got,) = model.dot_kahan_scalar(x, y)
+    s = np.float32(0.0)
+    c = np.float32(0.0)
+    xs, ys = np.asarray(x), np.asarray(y)
+    for a, b in zip(xs, ys):
+        prod = np.float32(a * b)
+        yv = np.float32(prod - c)
+        t = np.float32(s + yv)
+        c = np.float32(np.float32(t - s) - yv)
+        s = t
+    # XLA CPU may contract mul+sub into an FMA inside the scan body, which
+    # perturbs individual steps by <= 1 ulp; allow a few ulps of the
+    # accumulated magnitude rather than demanding bit equality.
+    tol = 4 * np.finfo(np.float32).eps * float(np.sum(np.abs(xs * ys)))
+    assert abs(float(got) - float(s)) <= tol
+
+
+def test_dot_pair_same_bits():
+    x, y = rnd((4096,), 5), rnd((4096,), 6)
+    naive, kahan = model.dot_pair(x, y)
+    # Both outputs evaluate the same inputs; kahan must be at least as close
+    # to exact on ill-conditioned data (checked elsewhere); here: both finite
+    # and close on benign data.
+    assert np.isfinite(float(naive)) and np.isfinite(float(kahan))
+    scale = float(jnp.sum(jnp.abs(x * y))) + 1e-30
+    assert abs(float(naive) - float(kahan)) <= 64 * np.finfo(np.float32).eps * scale
+
+
+def test_batched_matches_rowwise():
+    b, n = 8, 1024
+    xs, ys = rnd((b, n), 7), rnd((b, n), 8)
+    (got,) = model.dot_kahan_batched(xs, ys)
+    assert got.shape == (b,)
+    for i in range(b):
+        (row,) = model.dot_kahan(xs[i], ys[i])
+        assert float(got[i]) == float(row)
+
+
+def test_batched_improves_on_ill_conditioned_rows():
+    rows = []
+    exacts = []
+    for seed in range(4):
+        x, y, e = ill_conditioned_dot(256, cond_exp=24, seed=seed)
+        rows.append((x, y))
+        exacts.append(e)
+    xs = jnp.asarray(np.stack([r[0] for r in rows]))
+    ys = jnp.asarray(np.stack([r[1] for r in rows]))
+    (got,) = model.dot_kahan_batched(xs, ys)
+    naive = jnp.sum(xs * ys, axis=1)
+    kahan_worse = sum(
+        1
+        for i, e in enumerate(exacts)
+        if abs(float(got[i]) - e) > abs(float(naive[i]) - e)
+    )
+    assert kahan_worse <= 1
+
+
+def test_dot_kahan_state_shapes():
+    x, y = rnd((4096,), 9), rnd((4096,), 10)
+    out, s, c = model.dot_kahan_state(x, y)
+    assert out.shape == ()
+    assert s.shape == c.shape
+    assert s.ndim == 1
+
+
+@settings(max_examples=8)
+@given(n=st.integers(2, 600), dt=st.sampled_from(["f32", "f64"]))
+def test_variants_dtype_preserved(n, dt):
+    dtype = jnp.float32 if dt == "f32" else jnp.float64
+    x, y = rnd((n,), n, dtype), rnd((n,), n + 1, dtype)
+    for variant in ("naive", "kahan"):
+        fn, _ = model.VARIANTS[variant]
+        (got,) = fn(x, y)
+        assert got.dtype == dtype, variant

@@ -1,0 +1,134 @@
+//! Ill-conditioned dot-product generator (Ogita–Rump–Oishi Algorithm 6.1
+//! in structure): produces (x, y, exact) where the condition number
+//! `cond = 2 Σ|x_i y_i| / |Σ x_i y_i|` is approximately a requested target,
+//! so accuracy studies can sweep difficulty.
+
+use super::exact::ExactAcc;
+use crate::util::rng::Rng;
+
+/// Generate an ill-conditioned dot product of length `n` (n >= 4, even)
+/// with condition number ~ `cond`. Returns (x, y, exact_value).
+pub fn ill_conditioned_dot(n: usize, cond: f64, rng: &mut Rng) -> (Vec<f64>, Vec<f64>, f64) {
+    assert!(n >= 4, "need n >= 4");
+    assert!(cond >= 1.0);
+    let half = n / 2;
+    let b = cond.log2() / 2.0; // exponent half-range
+    let mut x = vec![0.0; n];
+    let mut y = vec![0.0; n];
+
+    // First half: exponents spread over [0, b]; extremes anchored.
+    for i in 0..half {
+        let e = if i == 0 {
+            b
+        } else if i == half - 1 {
+            0.0
+        } else {
+            rng.range_f64(0.0, b)
+        };
+        x[i] = (2.0 * rng.f64() - 1.0) * 2f64.powf(e);
+        y[i] = (2.0 * rng.f64() - 1.0) * 2f64.powf(e);
+    }
+
+    // Second half (ORO Algorithm 6.1 structure): choose y_i so the running
+    // sum is *steered to* a fresh random value of magnitude 2^e, with e
+    // ramping back down to 0. This cancels the large first-half terms while
+    // pinning the final sum near magnitude 1 — which is what controls the
+    // condition number (cond ~ Σ|x·y| / |Σ x·y| ~ 2^b · n / 1).
+    let mut acc = ExactAcc::new();
+    for i in 0..half {
+        acc.add_prod(x[i], y[i]);
+    }
+    for i in 0..(n - half) {
+        let e = b * (1.0 - i as f64 / (n - half - 1).max(1) as f64);
+        let mut xv = (2.0 * rng.f64() - 1.0) * 2f64.powf(e);
+        if xv == 0.0 {
+            xv = 1.0;
+        }
+        let target = (2.0 * rng.f64() - 1.0) * 2f64.powf(e);
+        let s = acc.value();
+        let yv = (target - s) / xv;
+        x[half + i] = xv;
+        y[half + i] = yv;
+        acc.add_prod(xv, yv);
+    }
+    let exact = acc.value();
+    (x, y, exact)
+}
+
+/// Measured condition number of a dot product: 2 Σ|x_i y_i| / |Σ x_i y_i|.
+pub fn condition_number(x: &[f64], y: &[f64], exact: f64) -> f64 {
+    let abs_sum: f64 = x.iter().zip(y).map(|(a, b)| (a * b).abs()).sum();
+    if exact == 0.0 {
+        f64::INFINITY
+    } else {
+        2.0 * abs_sum / exact.abs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accuracy::dots::{kahan_dot, naive_dot};
+    use crate::accuracy::exact::exact_dot;
+    use crate::ptest::property;
+
+    #[test]
+    fn exact_value_is_exact() {
+        let mut rng = Rng::new(1);
+        let (x, y, exact) = ill_conditioned_dot(64, 2f64.powi(30), &mut rng);
+        assert_eq!(exact, exact_dot(&x, &y));
+    }
+
+    #[test]
+    fn condition_scales_with_request() {
+        let mut rng = Rng::new(7);
+        let mut last = 0.0;
+        for &ce in &[10.0, 30.0, 60.0] {
+            let (x, y, exact) = ill_conditioned_dot(256, 2f64.powf(ce), &mut rng);
+            let c = condition_number(&x, &y, exact);
+            // Within a few orders of magnitude of target, and increasing.
+            assert!(c > last, "cond {c} not increasing (prev {last})");
+            assert!(
+                c.log2() > ce * 0.4 && c.log2() < ce * 2.5 + 16.0,
+                "cond 2^{} for target 2^{}",
+                c.log2(),
+                ce
+            );
+            last = c;
+        }
+    }
+
+    #[test]
+    fn naive_degrades_kahan_survives() {
+        // At cond ~ 2^40, naive f64 keeps ~eps*cond ~ 2^-12 relative error;
+        // kahan stays near eps.
+        let mut rng = Rng::new(99);
+        let mut kahan_better = 0;
+        for _ in 0..10 {
+            let (x, y, exact) = ill_conditioned_dot(512, 2f64.powi(44), &mut rng);
+            if exact == 0.0 {
+                continue;
+            }
+            let rel = |v: f64| ((v - exact) / exact).abs();
+            if rel(kahan_dot(&x, &y)) <= rel(naive_dot(&x, &y)) {
+                kahan_better += 1;
+            }
+        }
+        assert!(kahan_better >= 8, "{kahan_better}/10");
+    }
+
+    #[test]
+    fn generator_properties() {
+        property("generator invariants", 30, |g| {
+            let n = g.usize(2, 100) * 2 + 2; // even, >= 6
+            let cond = 2f64.powf(g.f64_range(4.0, 50.0));
+            let mut rng = Rng::new(g.u64(0, u64::MAX - 1));
+            let (x, y, exact) = ill_conditioned_dot(n, cond, &mut rng);
+            assert_eq!(x.len(), n);
+            assert_eq!(y.len(), n);
+            assert!(exact.is_finite());
+            assert!(x.iter().all(|v| v.is_finite()));
+            assert!(y.iter().all(|v| v.is_finite()));
+        });
+    }
+}

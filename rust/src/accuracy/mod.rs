@@ -1,0 +1,20 @@
+//! Floating-point accuracy substrate: error-free transformations, the
+//! summation/dot algorithm zoo, an exact (expansion-based) accumulator, and
+//! the ill-conditioned input generator.
+//!
+//! This module backs the paper's *motivation* (Sect. 1: naive summation
+//! loses accuracy; Kahan compensates at some cost) with measurable numbers,
+//! and provides the ground truth the PJRT-executed kernels are validated
+//! against in the accuracy study (`kahan-ecm run acc`).
+
+pub mod dots;
+pub mod eft;
+pub mod exact;
+pub mod generator;
+pub mod sums;
+
+pub use dots::{dot2, kahan_dot, naive_dot};
+pub use eft::{fast_two_sum, two_prod, two_sum};
+pub use exact::ExactAcc;
+pub use generator::ill_conditioned_dot;
+pub use sums::{kahan_sum, naive_sum, neumaier_sum, pairwise_sum};

@@ -1,0 +1,137 @@
+//! The summation algorithm zoo: naive, Kahan (Fig. 2b's recurrence),
+//! Neumaier's improvement, and pairwise summation — the accuracy/throughput
+//! spectrum the paper's introduction surveys [2, 3, 4, 8].
+
+/// Naive left-to-right summation: error grows O(n · eps · Σ|x|).
+pub fn naive_sum(x: &[f64]) -> f64 {
+    x.iter().sum()
+}
+
+/// Kahan's compensated summation (Kahan 1965, the paper's Fig. 2b without
+/// the product): error O(eps · Σ|x|), independent of n.
+pub fn kahan_sum(x: &[f64]) -> f64 {
+    let mut s = 0.0;
+    let mut c = 0.0;
+    for &v in x {
+        let y = v - c;
+        let t = s + y;
+        c = (t - s) - y;
+        s = t;
+    }
+    s
+}
+
+/// Neumaier's variant: also catches the case |v| > |s| that plain Kahan
+/// mishandles (e.g. [1, 1e100, 1, -1e100]).
+pub fn neumaier_sum(x: &[f64]) -> f64 {
+    let mut s = 0.0;
+    let mut c = 0.0;
+    for &v in x {
+        let t = s + v;
+        if s.abs() >= v.abs() {
+            c += (s - t) + v;
+        } else {
+            c += (v - t) + s;
+        }
+        s = t;
+    }
+    s + c
+}
+
+/// Pairwise (cascade) summation: error O(log n · eps · Σ|x|); what
+/// high-level `sum()` implementations (incl. XLA reductions) approximate.
+pub fn pairwise_sum(x: &[f64]) -> f64 {
+    const BASE: usize = 32;
+    fn rec(x: &[f64]) -> f64 {
+        if x.len() <= BASE {
+            x.iter().sum()
+        } else {
+            let mid = x.len() / 2;
+            rec(&x[..mid]) + rec(&x[mid..])
+        }
+    }
+    rec(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accuracy::exact::exact_sum;
+    use crate::ptest::property;
+
+    #[test]
+    fn all_agree_on_benign_data() {
+        let x: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let want = 5050.0;
+        assert_eq!(naive_sum(&x), want);
+        assert_eq!(kahan_sum(&x), want);
+        assert_eq!(neumaier_sum(&x), want);
+        assert_eq!(pairwise_sum(&x), want);
+    }
+
+    #[test]
+    fn kahan_classic_demo() {
+        // 1e8 + 10_000 * 0.1 - 1e8 in f64 is benign; use the f32-style
+        // stress in f64: 1.0 + n*eps-scale values.
+        let mut x = vec![1e16];
+        x.extend(std::iter::repeat(1.0).take(10_000));
+        x.push(-1e16);
+        let want = exact_sum(&x);
+        let e_naive = (naive_sum(&x) - want).abs();
+        let e_kahan = (kahan_sum(&x) - want).abs();
+        assert!(e_kahan <= e_naive);
+        assert_eq!(kahan_sum(&x), 10_000.0);
+    }
+
+    #[test]
+    fn neumaier_beats_kahan_on_swapped_magnitudes() {
+        let x = [1.0, 1e100, 1.0, -1e100];
+        assert_eq!(neumaier_sum(&x), 2.0);
+        // Plain Kahan loses it entirely (documented limitation).
+        assert_eq!(kahan_sum(&x), 0.0);
+    }
+
+    #[test]
+    fn error_bounds_property() {
+        property("kahan within bound, naive within bound", 100, |g| {
+            let n = g.usize(10, 2000);
+            let x = g.vec_f64_log(n, -20, 20);
+            let want = exact_sum(&x);
+            let abs_sum: f64 = x.iter().map(|v| v.abs()).sum();
+            let e_naive = (naive_sum(&x) - want).abs();
+            let e_kahan = (kahan_sum(&x) - want).abs();
+            let e_pair = (pairwise_sum(&x) - want).abs();
+            let eps = f64::EPSILON;
+            assert!(
+                e_kahan <= 4.0 * eps * abs_sum,
+                "kahan err {e_kahan} vs bound {}",
+                4.0 * eps * abs_sum
+            );
+            assert!(e_naive <= 2.0 * n as f64 * eps * abs_sum);
+            let logn = (n as f64).log2().ceil() + 8.0;
+            assert!(e_pair <= 2.0 * logn * eps * abs_sum);
+        });
+    }
+
+    #[test]
+    fn kahan_never_worse_than_naive_statistically() {
+        property("kahan <= naive error (usually)", 60, |g| {
+            let n = g.usize(100, 1500);
+            let x = g.vec_f64_log(n, -30, 30);
+            let want = exact_sum(&x);
+            let e_naive = (naive_sum(&x) - want).abs();
+            let e_kahan = (kahan_sum(&x) - want).abs();
+            // Not a per-case theorem (ties happen), but Kahan must never be
+            // *significantly* worse.
+            assert!(e_kahan <= e_naive.max(4.0 * f64::EPSILON * x.iter().map(|v| v.abs()).sum::<f64>()));
+        });
+    }
+
+    #[test]
+    fn empty_and_single() {
+        for f in [naive_sum, kahan_sum, neumaier_sum, pairwise_sum] {
+            assert_eq!(f(&[]), 0.0);
+            assert_eq!(f(&[42.5]), 42.5);
+        }
+    }
+}

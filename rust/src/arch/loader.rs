@@ -1,0 +1,220 @@
+//! Load a user-defined `Machine` from the `key = value` config format —
+//! the Sect. 6 "blueprint" extension: point the ECM engine and simulator at
+//! a machine we never encoded (see `examples/custom_arch.rs` and
+//! `configs/example_machine.toml`).
+
+use crate::arch::machine::*;
+use crate::isa::OpClass;
+use crate::util::config::{Config, ConfigError};
+
+#[derive(Debug, thiserror::Error)]
+pub enum LoadError {
+    #[error(transparent)]
+    Config(#[from] ConfigError),
+    #[error("bad port capability '{0}' (expected load/store/add/mul/fma/mov/prefetch/scalar)")]
+    BadCap(String),
+    #[error("bad overlap policy '{0}' (expected intel/full/knc)")]
+    BadOverlap(String),
+    #[error("machine failed validation: {0}")]
+    Invalid(String),
+}
+
+fn parse_caps(items: &[String]) -> Result<Vec<OpClass>, LoadError> {
+    items
+        .iter()
+        .map(|s| match s.to_lowercase().as_str() {
+            "load" => Ok(OpClass::Load),
+            "store" => Ok(OpClass::Store),
+            "add" => Ok(OpClass::Add),
+            "mul" => Ok(OpClass::Mul),
+            "fma" => Ok(OpClass::Fma),
+            "mov" => Ok(OpClass::Mov),
+            "prefetch" | "prefetch1" => Ok(OpClass::Prefetch(1)),
+            "prefetch2" => Ok(OpClass::Prefetch(2)),
+            "scalar" => Ok(OpClass::Scalar),
+            other => Err(LoadError::BadCap(other.to_string())),
+        })
+        .collect()
+}
+
+/// Parse a machine description. See `configs/example_machine.toml` for the
+/// schema; sections: `[machine]`, `[port.*]`, `[cache.*]` (sorted by name,
+/// so use l1/l2/l3 naming), `[memory]`, optional `[calibration]`.
+pub fn machine_from_config(text: &str) -> Result<Machine, LoadError> {
+    let cfg = Config::parse(text)?;
+
+    let mut ports = Vec::new();
+    for (name, _) in cfg.sections_with_prefix("port") {
+        let caps = parse_caps(&cfg.get_list(name, "caps")?)?;
+        // Machine uses &'static str labels; a one-shot leak for a
+        // user-loaded config is fine (CLI lifetime == process lifetime).
+        let label: &'static str = Box::leak(
+            name.trim_start_matches("port.").to_string().into_boxed_str(),
+        );
+        ports.push(Port { name: label, caps });
+    }
+
+    let mut caches = Vec::new();
+    for (name, _) in cfg.sections_with_prefix("cache") {
+        let label: &'static str = Box::leak(
+            name.trim_start_matches("cache.").to_uppercase().into_boxed_str(),
+        );
+        caches.push(CacheLevel {
+            name: label,
+            capacity: cfg.get(name, "capacity")?,
+            bw_bytes_per_cy: cfg.get_or(name, "bw_bytes_per_cy", 0.0)?,
+            latency_penalty: cfg.get_or(name, "latency_penalty", 0.0)?,
+            shared: cfg.get_or(name, "shared", false)?,
+        });
+    }
+
+    let overlap = match cfg
+        .get_or::<String>("machine", "overlap", "intel".into())?
+        .to_lowercase()
+        .as_str()
+    {
+        "intel" => OverlapPolicy::IntelNonOverlapping,
+        "full" => OverlapPolicy::FullOverlap,
+        "knc" => OverlapPolicy::KncPaired,
+        other => return Err(LoadError::BadOverlap(other.to_string())),
+    };
+
+    let m = Machine {
+        name: Box::leak(cfg.get::<String>("machine", "name")?.into_boxed_str()),
+        shorthand: Box::leak(
+            cfg.get_or::<String>("machine", "shorthand", "CUSTOM".into())?
+                .into_boxed_str(),
+        ),
+        freq_ghz: cfg.get("machine", "freq_ghz")?,
+        cores: cfg.get("machine", "cores")?,
+        smt_ways: cfg.get_or("machine", "smt_ways", 1)?,
+        cacheline: cfg.get_or("machine", "cacheline", 64)?,
+        simd_bytes: cfg.get("machine", "simd_bytes")?,
+        simd_regs: cfg.get_or("machine", "simd_regs", 16)?,
+        issue_width: cfg.get_or("machine", "issue_width", 4)?,
+        in_order: cfg.get_or("machine", "in_order", false)?,
+        ports,
+        lat: InstrLatency {
+            load: cfg.get_or("latency", "load", 4)?,
+            add: cfg.get_or("latency", "add", 3)?,
+            mul: cfg.get_or("latency", "mul", 5)?,
+            fma: cfg.get_or("latency", "fma", 5)?,
+        },
+        caches,
+        mem: MemorySystem {
+            sustained_bw_gbs: cfg.get("memory", "sustained_bw_gbs")?,
+            domains: cfg.get_or("memory", "domains", 1)?,
+            latency_penalty: cfg.get_or("memory", "latency_penalty", 0.0)?,
+        },
+        overlap,
+        victim_llc: cfg.get_or("machine", "victim_llc", false)?,
+        calib: Calibration {
+            l2_friction_cy_per_cl: cfg.get_or("calibration", "l2_friction_cy_per_cl", 0.0)?,
+            mem_friction_cy_per_cl: cfg.get_or("calibration", "mem_friction_cy_per_cl", 0.0)?,
+            core_efficiency: cfg.get_or("calibration", "core_efficiency", 1.0)?,
+            effective_llc_capacity: match cfg.get_or("calibration", "effective_llc_capacity", 0u64)? {
+                0 => None,
+                v => Some(v),
+            },
+            erratic_window: None,
+            noise_rel: cfg.get_or("calibration", "noise_rel", 0.0)?,
+        },
+    };
+    m.validate().map_err(LoadError::Invalid)?;
+    Ok(m)
+}
+
+pub const EXAMPLE_CONFIG: &str = r#"# Example user-defined machine for kahan-ecm (schema reference).
+[machine]
+name = Example Zen-like core
+shorthand = ZEN
+freq_ghz = 3.5
+cores = 8
+smt_ways = 2
+cacheline = 64
+simd_bytes = 32
+simd_regs = 16
+issue_width = 6
+overlap = intel
+
+[latency]
+load = 4
+add = 3
+mul = 3
+fma = 5
+
+[port.p0]
+caps = fma, mul
+[port.p1]
+caps = fma, mul, add
+[port.p2]
+caps = add
+[port.p3]
+caps = load
+[port.p4]
+caps = load
+[port.p5]
+caps = store
+
+[cache.l1]
+capacity = 32768
+[cache.l2]
+capacity = 524288
+bw_bytes_per_cy = 64
+[cache.l3]
+capacity = 33554432
+bw_bytes_per_cy = 32
+latency_penalty = 2
+shared = true
+
+[memory]
+sustained_bw_gbs = 40
+domains = 1
+latency_penalty = 2
+"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn example_config_loads() {
+        let m = machine_from_config(EXAMPLE_CONFIG).unwrap();
+        assert_eq!(m.shorthand, "ZEN");
+        assert_eq!(m.cores, 8);
+        assert_eq!(m.ports.len(), 6);
+        assert_eq!(m.caches.len(), 3);
+        // Two ADD-capable ports on this machine.
+        assert_eq!(m.throughput(&OpClass::Add), 2.0);
+        assert_eq!(m.caches[2].latency_penalty, 2.0);
+    }
+
+    #[test]
+    fn missing_required_key_rejected() {
+        let bad = EXAMPLE_CONFIG.replace("freq_ghz = 3.5", "");
+        assert!(machine_from_config(&bad).is_err());
+    }
+
+    #[test]
+    fn bad_cap_rejected() {
+        let bad = EXAMPLE_CONFIG.replace("caps = fma, mul", "caps = warp");
+        assert!(matches!(machine_from_config(&bad), Err(LoadError::BadCap(_))));
+    }
+
+    #[test]
+    fn bad_overlap_rejected() {
+        let bad = EXAMPLE_CONFIG.replace("overlap = intel", "overlap = gpu");
+        assert!(matches!(
+            machine_from_config(&bad),
+            Err(LoadError::BadOverlap(_))
+        ));
+    }
+
+    #[test]
+    fn validation_runs() {
+        // Remove all load ports -> validate() must fail.
+        let bad = EXAMPLE_CONFIG
+            .replace("caps = load", "caps = mov");
+        assert!(matches!(machine_from_config(&bad), Err(LoadError::Invalid(_))));
+    }
+}

@@ -1,0 +1,12 @@
+//! Machine models: Table I of the paper encoded as data, plus a loader for
+//! user-defined architectures (the "blueprint for other kernels/machines"
+//! extension of Sect. 6).
+
+pub mod loader;
+pub mod machine;
+pub mod presets;
+
+pub use machine::{
+    CacheLevel, Calibration, InstrLatency, Machine, MemorySystem, OverlapPolicy, Port,
+};
+pub use presets::{all_machines, broadwell, haswell, host, knights_corner, power8};

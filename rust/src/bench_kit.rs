@@ -1,0 +1,190 @@
+//! Mini-criterion: the measurement harness used by `benches/*.rs`
+//! (criterion is not in the offline crate cache; DESIGN.md §2).
+//!
+//! Methodology mirrors likwid-bench/criterion: warmup until timing
+//! stabilizes, then `samples` timed batches, each batch sized so one batch
+//! takes ≥ `min_batch_time`; report the robust summary. The *minimum* is
+//! the headline statistic for cycle-deterministic workloads (as in the
+//! paper's likwid-bench measurements); mean/median/stddev are also kept.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub min_batch_time: Duration,
+    pub samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            min_batch_time: Duration::from_millis(20),
+            samples: 15,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Faster settings for CI / smoke runs.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(20),
+            min_batch_time: Duration::from_millis(2),
+            samples: 5,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time in nanoseconds.
+    pub ns_per_iter: Summary,
+    /// Iterations per timed batch (diagnostic).
+    pub batch_iters: u64,
+    /// Optional throughput denominator: "work units" per iteration.
+    pub work_per_iter: f64,
+}
+
+impl BenchResult {
+    /// Work units per second based on the *minimum* (best) sample.
+    pub fn throughput_best(&self) -> f64 {
+        self.work_per_iter / (self.ns_per_iter.min * 1e-9)
+    }
+
+    pub fn throughput_median(&self) -> f64 {
+        self.work_per_iter / (self.ns_per_iter.median * 1e-9)
+    }
+
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>12.1} ns/iter (min {:>12.1}, sd {:>5.1}%)",
+            self.name,
+            self.ns_per_iter.median,
+            self.ns_per_iter.min,
+            self.ns_per_iter.rel_stddev() * 100.0
+        )
+    }
+}
+
+/// Measure `f`, which performs *one* iteration of work per call.
+/// `work_per_iter` is the number of "work units" (e.g. updates) one call
+/// performs, used for throughput reporting.
+pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, work_per_iter: f64, mut f: F) -> BenchResult {
+    // Warmup + batch sizing: run until warmup budget is spent, measuring
+    // a rough per-iter time.
+    let warm_start = Instant::now();
+    let mut iters: u64 = 0;
+    while warm_start.elapsed() < cfg.warmup || iters == 0 {
+        f();
+        iters += 1;
+        if iters > 1_000_000_000 {
+            break;
+        }
+    }
+    let rough = warm_start.elapsed().as_nanos() as f64 / iters as f64;
+    let batch_iters = ((cfg.min_batch_time.as_nanos() as f64 / rough.max(0.1)).ceil() as u64).max(1);
+
+    let mut samples = Vec::with_capacity(cfg.samples);
+    for _ in 0..cfg.samples {
+        let t0 = Instant::now();
+        for _ in 0..batch_iters {
+            f();
+        }
+        let dt = t0.elapsed().as_nanos() as f64;
+        samples.push(dt / batch_iters as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        ns_per_iter: Summary::of(&samples),
+        batch_iters,
+        work_per_iter,
+    }
+}
+
+/// A named group of benchmarks with uniform config, printing as it goes —
+/// the `main()` body of each `benches/*.rs` file.
+pub struct Runner {
+    cfg: BenchConfig,
+    pub results: Vec<BenchResult>,
+}
+
+impl Runner {
+    pub fn new() -> Self {
+        // `CARGO_BENCH_QUICK=1 cargo bench` for smoke runs.
+        let cfg = if std::env::var("CARGO_BENCH_QUICK").is_ok() {
+            BenchConfig::quick()
+        } else {
+            BenchConfig::default()
+        };
+        Self {
+            cfg,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn bench<F: FnMut()>(&mut self, name: &str, work_per_iter: f64, f: F) -> &BenchResult {
+        let r = bench(name, &self.cfg, work_per_iter, f);
+        println!("{}", r.report_line());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Print a throughput table footer (units/s with a unit label).
+    pub fn footer(&self, unit: &str) {
+        println!("--");
+        for r in &self.results {
+            if r.work_per_iter > 0.0 {
+                println!(
+                    "{:<44} {:>10.3} G{unit}/s (best)",
+                    r.name,
+                    r.throughput_best() / 1e9
+                );
+            }
+        }
+    }
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let cfg = BenchConfig::quick();
+        let mut acc = 0u64;
+        let r = bench("noop-ish", &cfg, 1.0, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.ns_per_iter.min > 0.0);
+        assert!(r.ns_per_iter.min < 1e6, "{}", r.ns_per_iter.min);
+        assert!(r.batch_iters >= 1);
+    }
+
+    #[test]
+    fn throughput_consistent() {
+        let cfg = BenchConfig::quick();
+        let r = bench("sleepless", &cfg, 100.0, || {
+            black_box((0..100).sum::<u64>());
+        });
+        let t = r.throughput_best();
+        assert!(t > 0.0);
+        assert_eq!(t, 100.0 / (r.ns_per_iter.min * 1e-9));
+    }
+}

@@ -1,0 +1,10 @@
+//! L3 coordination: the experiment registry, the parallel runner and the
+//! report assembler behind the `kahan-ecm` CLI.
+
+pub mod pool;
+pub mod registry;
+pub mod report;
+
+pub use pool::run_parallel;
+pub use registry::{all_experiments, find, ExperimentDef};
+pub use report::assemble_report;

@@ -1,0 +1,84 @@
+//! Parallel experiment runner (crossbeam scoped threads; the offline crate
+//! cache has no tokio, and the workload is CPU-bound batch jobs anyway —
+//! DESIGN.md §2).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use super::registry::ExperimentDef;
+use crate::harness::{Ctx, ExperimentOutput};
+
+/// Outcome of one experiment run.
+pub struct RunOutcome {
+    pub id: &'static str,
+    pub result: Result<ExperimentOutput>,
+    pub seconds: f64,
+}
+
+/// Run experiments on up to `jobs` worker threads, preserving input order
+/// in the returned outcomes.
+pub fn run_parallel(defs: &[ExperimentDef], ctx: &Ctx, jobs: usize) -> Vec<RunOutcome> {
+    let jobs = jobs.max(1).min(defs.len().max(1));
+    let next = AtomicUsize::new(0);
+    let outcomes: Mutex<Vec<Option<RunOutcome>>> =
+        Mutex::new((0..defs.len()).map(|_| None).collect());
+
+    crossbeam_utils::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|_| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= defs.len() {
+                    break;
+                }
+                let def = &defs[i];
+                let t0 = std::time::Instant::now();
+                let result = (def.run)(ctx);
+                let outcome = RunOutcome {
+                    id: def.id,
+                    result,
+                    seconds: t0.elapsed().as_secs_f64(),
+                };
+                outcomes.lock().unwrap()[i] = Some(outcome);
+            });
+        }
+    })
+    .expect("worker panicked");
+
+    outcomes
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("missing outcome"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::registry::find;
+
+    #[test]
+    fn runs_fast_experiments_in_parallel() {
+        let defs: Vec<ExperimentDef> = find("table1")
+            .into_iter()
+            .chain(find("fig1"))
+            .chain(find("ecm-inputs"))
+            .collect();
+        let out = run_parallel(&defs, &Ctx::quick(), 3);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].id, "table1");
+        assert_eq!(out[2].id, "ecm-inputs");
+        for o in &out {
+            assert!(o.result.is_ok(), "{} failed", o.id);
+        }
+    }
+
+    #[test]
+    fn jobs_one_works() {
+        let defs = find("fig1");
+        let out = run_parallel(&defs, &Ctx::quick(), 1);
+        assert!(out[0].result.is_ok());
+    }
+}

@@ -1,0 +1,190 @@
+//! Experiment registry: every paper table/figure mapped to its generator
+//! (DESIGN.md §5).
+
+use anyhow::Result;
+
+use crate::harness::{self, Ctx, ExperimentOutput};
+
+type RunFn = fn(&Ctx) -> Result<ExperimentOutput>;
+
+/// One registered experiment.
+#[derive(Clone)]
+pub struct ExperimentDef {
+    pub id: &'static str,
+    pub paper_ref: &'static str,
+    pub title: &'static str,
+    /// Needs the AOT artifacts / PJRT runtime.
+    pub needs_artifacts: bool,
+    pub run: RunFn,
+}
+
+/// All experiments, in paper order.
+pub fn all_experiments() -> Vec<ExperimentDef> {
+    vec![
+        ExperimentDef {
+            id: "table1",
+            paper_ref: "Table I",
+            title: "Testbed specification",
+            needs_artifacts: false,
+            run: harness::tables::table1,
+        },
+        ExperimentDef {
+            id: "ecm-inputs",
+            paper_ref: "Sect. 4 / Eqs. 1-3",
+            title: "ECM inputs & predictions for every kernel x machine",
+            needs_artifacts: false,
+            run: harness::tables::ecm_inputs,
+        },
+        ExperimentDef {
+            id: "fig1",
+            paper_ref: "Fig. 1",
+            title: "ECM multicore scaling schematic",
+            needs_artifacts: false,
+            run: harness::fig1::fig1,
+        },
+        ExperimentDef {
+            id: "fig5a",
+            paper_ref: "Fig. 5a",
+            title: "Single-core sweep, HSW",
+            needs_artifacts: false,
+            run: harness::fig5::fig5a,
+        },
+        ExperimentDef {
+            id: "fig5b",
+            paper_ref: "Fig. 5b",
+            title: "Single-core sweep, BDW",
+            needs_artifacts: false,
+            run: harness::fig5::fig5b,
+        },
+        ExperimentDef {
+            id: "fig6",
+            paper_ref: "Fig. 6",
+            title: "Single-core sweep with per-level kernels, KNC",
+            needs_artifacts: false,
+            run: harness::fig6::fig6,
+        },
+        ExperimentDef {
+            id: "fig7a",
+            paper_ref: "Fig. 7a",
+            title: "PWR8 SMT sweep (naive)",
+            needs_artifacts: false,
+            run: harness::fig7::fig7a,
+        },
+        ExperimentDef {
+            id: "fig7b",
+            paper_ref: "Fig. 7b",
+            title: "PWR8 naive vs manual Kahan (SMT-8)",
+            needs_artifacts: false,
+            run: harness::fig7::fig7b,
+        },
+        ExperimentDef {
+            id: "fig8a",
+            paper_ref: "Fig. 8a",
+            title: "In-memory scaling, HSW",
+            needs_artifacts: false,
+            run: harness::fig8::fig8a,
+        },
+        ExperimentDef {
+            id: "fig8b",
+            paper_ref: "Fig. 8b",
+            title: "In-memory scaling, BDW",
+            needs_artifacts: false,
+            run: harness::fig8::fig8b,
+        },
+        ExperimentDef {
+            id: "fig8c",
+            paper_ref: "Fig. 8c",
+            title: "In-memory scaling, KNC",
+            needs_artifacts: false,
+            run: harness::fig8::fig8c,
+        },
+        ExperimentDef {
+            id: "fig8d",
+            paper_ref: "Fig. 8d",
+            title: "In-memory scaling, PWR8",
+            needs_artifacts: false,
+            run: harness::fig8::fig8d,
+        },
+        ExperimentDef {
+            id: "fig9",
+            paper_ref: "Fig. 9",
+            title: "Compiler Kahan ddot scaling, all machines",
+            needs_artifacts: false,
+            run: harness::fig9::fig9,
+        },
+        ExperimentDef {
+            id: "fig10a",
+            paper_ref: "Fig. 10a",
+            title: "Cycles per update per level, all machines",
+            needs_artifacts: false,
+            run: harness::fig10::fig10a,
+        },
+        ExperimentDef {
+            id: "fig10b",
+            paper_ref: "Fig. 10b",
+            title: "In-memory chip comparison",
+            needs_artifacts: false,
+            run: harness::fig10::fig10b,
+        },
+        ExperimentDef {
+            id: "acc",
+            paper_ref: "Sect. 1 (motivation)",
+            title: "Accuracy vs condition number (+ PJRT f32 kernels)",
+            needs_artifacts: false, // degrades gracefully without artifacts
+            run: harness::accstudy::acc,
+        },
+        ExperimentDef {
+            id: "host",
+            paper_ref: "Sect. 6 (blueprint)",
+            title: "Host-CPU PJRT sweep of the AOT kernels",
+            needs_artifacts: true,
+            run: harness::hostexp::host,
+        },
+    ]
+}
+
+/// Find experiments matching `sel` ("all", exact id, or prefix like "fig8").
+pub fn find(sel: &str) -> Vec<ExperimentDef> {
+    let all = all_experiments();
+    if sel == "all" {
+        return all;
+    }
+    let exact: Vec<ExperimentDef> = all.iter().filter(|e| e.id == sel).cloned().collect();
+    if !exact.is_empty() {
+        return exact;
+    }
+    all.into_iter().filter(|e| e.id.starts_with(sel)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_paper_artifact() {
+        let ids: Vec<&str> = all_experiments().iter().map(|e| e.id).collect();
+        for want in [
+            "table1", "ecm-inputs", "fig1", "fig5a", "fig5b", "fig6", "fig7a", "fig7b",
+            "fig8a", "fig8b", "fig8c", "fig8d", "fig9", "fig10a", "fig10b", "acc", "host",
+        ] {
+            assert!(ids.contains(&want), "missing experiment {want}");
+        }
+    }
+
+    #[test]
+    fn find_selects() {
+        assert_eq!(find("all").len(), all_experiments().len());
+        assert_eq!(find("fig8").len(), 4);
+        assert_eq!(find("fig5a").len(), 1);
+        assert!(find("nope").is_empty());
+    }
+
+    #[test]
+    fn ids_unique() {
+        let mut ids: Vec<&str> = all_experiments().iter().map(|e| e.id).collect();
+        let n = ids.len();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), n);
+    }
+}

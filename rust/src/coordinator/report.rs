@@ -1,0 +1,45 @@
+//! Assemble a run-level report (`out/REPORT.md`) from experiment outcomes.
+
+use crate::util::table::Table;
+
+use super::pool::RunOutcome;
+use super::registry::ExperimentDef;
+
+/// Build the top-level markdown report for a batch run.
+pub fn assemble_report(defs: &[ExperimentDef], outcomes: &[RunOutcome]) -> String {
+    let mut s = String::from("# kahan-ecm experiment run\n\n");
+    let mut t = Table::new(["experiment", "paper ref", "status", "time (s)", "notes"]);
+    for (def, o) in defs.iter().zip(outcomes) {
+        let (status, notes) = match &o.result {
+            Ok(out) => ("ok".to_string(), out.notes.join(" ")),
+            Err(e) => (format!("FAILED: {e:#}"), String::new()),
+        };
+        t.row([
+            def.id.to_string(),
+            def.paper_ref.to_string(),
+            status,
+            format!("{:.1}", o.seconds),
+            notes.chars().take(140).collect::<String>(),
+        ]);
+    }
+    s.push_str(&t.to_markdown());
+    s.push_str("\nPer-experiment data: `out/<id>/*.csv`, plots in `out/<id>/*.txt`, details in `out/<id>/summary.md`.\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pool::run_parallel;
+    use crate::coordinator::registry::find;
+    use crate::harness::Ctx;
+
+    #[test]
+    fn report_contains_status_rows() {
+        let defs = find("fig1");
+        let out = run_parallel(&defs, &Ctx::quick(), 1);
+        let rep = assemble_report(&defs, &out);
+        assert!(rep.contains("fig1"));
+        assert!(rep.contains("ok"));
+    }
+}

@@ -1,0 +1,466 @@
+//! Derive ECM inputs from a (machine, kernel) pair — the analysis the paper
+//! performs by hand in Sect. 4, automated:
+//!
+//! * **T_nOL** — cycles with L1↔register traffic. Intel: loads/stores over
+//!   the load-port throughput. KNC: loads + unpairable software prefetches,
+//!   one cycle each (single V-pipe). POWER8: zero (multi-ported L1).
+//! * **T_OL** — the larger of the *resource* bound (port pressure, computed
+//!   exactly by subset enumeration) and the *recurrence* bound (the longest
+//!   loop-carried latency cycle — the Fig. 3 analysis).
+//! * **T_data** — per-hop bandwidth cycles from the machine's documented
+//!   cache bandwidths and the measured sustained memory bandwidth, plus
+//!   latency penalties T_p (Sect. 2).
+//!
+//! `paper_row` additionally applies the documented overrides where the
+//! paper's hand-scheduled kernels differ from the analytic optimum (one
+//! case: the 4-way FMA Kahan on HSW/BDW, paper 8 cy/CL vs RecMII 7 cy/CL).
+
+use crate::arch::{Machine, OverlapPolicy};
+use crate::isa::variants::{build_sched, Sched, Variant};
+use crate::isa::{KernelLoop, OpClass};
+use crate::util::units::Precision;
+
+use super::inputs::{DataTerm, EcmInputs};
+
+/// Which hierarchy level a kernel is tuned for (KNC's per-level kernels,
+/// Sect. 4.2.2; ignored elsewhere).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemLevel {
+    L1,
+    L2,
+    Mem,
+}
+
+/// The paper's kernel configuration for a machine: SIMD width from the ISA,
+/// unroll factors as published, software pipelining for in-order cores,
+/// per-level prefetch decoration on KNC.
+pub fn kernel_for(m: &Machine, v: Variant, prec: Precision, level: MemLevel) -> KernelLoop {
+    let lanes = if v == Variant::KahanScalar {
+        1
+    } else {
+        m.simd_lanes(prec.bytes())
+    };
+    let (unroll, sched) = match (m.shorthand, v) {
+        // Intel Xeon: naive needs >= 2*ports*latency/..., 10 chains saturate
+        // both FMA ports at 5-cy latency; Kahan variants as published.
+        (_, Variant::KahanScalar) => (1, Sched::StageMajor),
+        ("KNC", Variant::NaiveSimd) => (4, Sched::SoftwarePipelined),
+        ("KNC", _) => (4, Sched::SoftwarePipelined),
+        ("PWR8", Variant::NaiveSimd) => (16, Sched::StageMajor),
+        ("PWR8", _) => (16, Sched::StageMajor),
+        (_, Variant::NaiveSimd) => (10, Sched::StageMajor),
+        (_, Variant::KahanSimd) => (4, Sched::StageMajor),
+        (_, Variant::KahanSimdFma) => (4, Sched::StageMajor),
+        (_, Variant::KahanSimdFma5) => (5, Sched::StageMajor),
+    };
+    // Only the hand-written KNC *Kahan* kernels carry explicit software
+    // prefetch (Fig. 4); the naive kernel's ECM input has none
+    // (Sect. 4.1.2's {1 ‖ 2 | 4 | 0.8 + 20}).
+    let prefetches: Vec<(u8, u32)> = if m.shorthand == "KNC" && v.is_kahan() {
+        // Fig. 4 / Sect. 4.2.2: L1 kernel no prefetch; L2 kernel 2x PF->L1;
+        // memory kernel additionally 2x PF->L2. Counts are per cache line
+        // of work; scale by body CLs.
+        let cls = (lanes as u64 * unroll as u64 * prec.bytes()).div_euclid(m.cacheline) as u32;
+        let per_cl = match level {
+            MemLevel::L1 => vec![],
+            MemLevel::L2 => vec![(1u8, 2u32)],
+            MemLevel::Mem => vec![(1, 2), (2, 2)],
+        };
+        per_cl
+            .into_iter()
+            .map(|(l, c)| (l, c * cls.max(1)))
+            .collect()
+    } else {
+        vec![]
+    };
+    build_sched(v, lanes, unroll, prec, &prefetches, sched)
+}
+
+/// Exact resource-bound initiation interval (cycles per body) for the
+/// arithmetic ops: max over port subsets S of |ops issuable only on S| / |S|.
+fn res_mii(m: &Machine, k: &KernelLoop, include: impl Fn(&OpClass) -> bool) -> f64 {
+    let nports = m.ports.len();
+    let op_cands: Vec<Vec<usize>> = k
+        .body
+        .iter()
+        .filter(|i| include(&i.op))
+        .map(|i| m.ports_for(&i.op))
+        .collect();
+    let mut worst: f64 = 0.0;
+    for mask in 1u32..(1 << nports) {
+        let members: Vec<usize> = (0..nports).filter(|p| mask & (1 << p) != 0).collect();
+        let confined = op_cands
+            .iter()
+            .filter(|cands| !cands.is_empty() && cands.iter().all(|p| members.contains(p)))
+            .count();
+        worst = worst.max(confined as f64 / members.len() as f64);
+    }
+    worst
+}
+
+/// Recurrence-bound initiation interval: the longest loop-carried latency
+/// cycle (sum of producer latencies around the cycle), considering cycles
+/// that cross the loop edge exactly once (sufficient for these kernels).
+fn rec_mii(m: &Machine, k: &KernelLoop) -> f64 {
+    let n = k.body.len();
+    // Intra-iteration adjacency: edge producer -> consumer.
+    let mut succ: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (ix, ins) in k.body.iter().enumerate() {
+        for &src in &ins.srcs {
+            if let Some(p) = k.body[..ix].iter().rposition(|q| q.dst == Some(src)) {
+                succ[p].push(ix);
+            }
+        }
+    }
+    // Longest path (by producer latency) from each node, memoized (DAG).
+    fn longest(
+        node: usize,
+        target: usize,
+        succ: &[Vec<usize>],
+        lat: &[f64],
+        memo: &mut [Option<f64>],
+    ) -> f64 {
+        // longest latency sum from `node` (exclusive of node's own latency)
+        // to `target` (returns -inf if unreachable).
+        if node == target {
+            return 0.0;
+        }
+        if let Some(v) = memo[node] {
+            return v;
+        }
+        let mut best = f64::NEG_INFINITY;
+        for &s in &succ[node] {
+            let tail = longest(s, target, succ, lat, memo);
+            if tail > f64::NEG_INFINITY {
+                best = best.max(lat[s] + tail);
+            }
+        }
+        memo[node] = Some(best);
+        best
+    }
+    let lat: Vec<f64> = k.body.iter().map(|i| m.lat.of(&i.op) as f64).collect();
+
+    let mut worst: f64 = 0.0;
+    for (ix, ins) in k.body.iter().enumerate() {
+        for &src in &ins.srcs {
+            let intra = k.body[..ix].iter().rposition(|q| q.dst == Some(src));
+            if intra.is_some() {
+                continue;
+            }
+            // Carried edge from the last writer of `src` to `ix`.
+            if let Some(w) = k.body.iter().rposition(|q| q.dst == Some(src)) {
+                // Cycle: consumer ix ->(dag)-> writer w, then carried w -> ix.
+                let mut memo = vec![None; k.body.len()];
+                let path = longest(ix, w, &succ, &lat, &mut memo);
+                if path > f64::NEG_INFINITY {
+                    worst = worst.max(lat[ix] + path);
+                }
+            }
+        }
+    }
+    worst
+}
+
+/// Derive ECM inputs for an arbitrary (machine, kernel) pair.
+pub fn derive(m: &Machine, k: &KernelLoop) -> EcmInputs {
+    let upcl = k.updates_per_cl(m.cacheline);
+    let cls_per_body = k.cachelines_per_body(m.cacheline);
+    let norm = 1.0 / cls_per_body; // body cycles -> cycles per CL of work
+
+    let loads = k.count(|o| o.is_l1_transfer()) as f64;
+    let prefetch = k.count(|o| matches!(o, OpClass::Prefetch(_))) as f64;
+
+    // ---- in-core terms ----------------------------------------------------
+    let (t_ol, t_nol) = match m.overlap {
+        OverlapPolicy::IntelNonOverlapping => {
+            let t_nol = loads / m.throughput(&OpClass::Load) * norm;
+            let res = res_mii(m, k, |o| o.is_arith());
+            let rec = rec_mii(m, k);
+            ((res.max(rec)) * norm, t_nol)
+        }
+        OverlapPolicy::KncPaired => {
+            // All loads + prefetches cost one V-pipe cycle each (single L1
+            // port); arithmetic retires 1/cy on the U-pipe. Pairing lets
+            // them overlap *each other* but loads remain non-overlapping
+            // with L1<->L2 transfers (Sect. 4.2.2's T_nOL composition).
+            // In-order: the loop-carried latency chain is NOT hidden by
+            // hardware scheduling, so it bounds T_OL too (the unrolled SIMD
+            // kernels hide it by construction; the compiler's scalar Kahan
+            // does not — hence its need for SMT, Fig. 8c/9).
+            let t_nol = (loads + prefetch) * norm;
+            let arith = k.count(|o| o.is_arith()) as f64;
+            let rec = rec_mii(m, k);
+            (arith.max(rec) * norm, t_nol)
+        }
+        OverlapPolicy::FullOverlap => {
+            // PWR8: loads overlap everything (multi-ported L1) but still
+            // occupy LSU throughput; T_OL is the slowest unit.
+            let lsu = loads / m.throughput(&OpClass::Load);
+            let res = res_mii(m, k, |o| o.is_arith());
+            let rec = rec_mii(m, k);
+            ((lsu.max(res).max(rec)) * norm, 0.0)
+        }
+    };
+
+    // ---- data terms --------------------------------------------------------
+    let streams = k.streams as f64;
+    let mut data = Vec::new();
+    for (i, c) in m.caches.iter().enumerate().skip(1) {
+        data.push(DataTerm {
+            name: c.name.to_string(),
+            cycles: streams * m.cache_cycles_per_cl(i),
+            penalty: c.latency_penalty,
+        });
+    }
+    // Memory hop. KNC latency penalty is prefetch-distance dependent: the
+    // Kahan memory kernel prefetches 64 iterations ahead into L2 and gets
+    // T_p = 17 cy; everything else pays the ring's 20 cy (Sect. 4.2.2).
+    let mem_penalty = if m.shorthand == "KNC"
+        && k.count(|o| matches!(o, OpClass::Prefetch(2))) > 0
+    {
+        17.0
+    } else {
+        m.mem.latency_penalty
+    };
+    // The paper carries the memory transfer time at one-decimal precision
+    // per cache line (4.6, 4.2, 0.4, 5.0/5.1 cy/CL) before multiplying by
+    // the stream count; match that so pinned tables agree digit-for-digit.
+    let mem_cycles = streams * (m.mem_cycles_per_cl() * 10.0).round() / 10.0;
+    data.push(DataTerm {
+        name: "Mem".to_string(),
+        cycles: mem_cycles,
+        penalty: mem_penalty,
+    });
+
+    // PWR8 victim hierarchy: the memory-level data path is L2<-Mem direct
+    // plus L2->L3 evictions; the upper bound counts evictions fully
+    // (4 + 8 + 10 = 22 cy), the lower assumes half the eviction traffic
+    // overlaps with reloads (18 cy) — the band of Sect. 5.3.
+    let mem_bounds = if m.victim_llc && m.caches.len() >= 3 {
+        let d_l1l2 = streams * m.cache_cycles_per_cl(1);
+        let d_evict = streams * m.cache_cycles_per_cl(2);
+        let upper = d_l1l2 + d_evict + mem_cycles;
+        let lower = upper - 0.5 * d_evict;
+        // Rewrite the memory data term so the cumulative sum lands on the
+        // upper bound (evictions ride on the same hop accounting).
+        Some((lower - d_l1l2 - d_evict, upper - d_l1l2 - d_evict))
+    } else {
+        None
+    };
+
+    let mut inputs = EcmInputs {
+        machine: m.shorthand,
+        kernel: k.name.clone(),
+        t_ol,
+        t_nol,
+        data,
+        updates_per_cl: upcl,
+        overlap: m.overlap,
+        mem_bounds: None,
+    };
+    if let Some((lo, up)) = mem_bounds {
+        // For the victim hierarchy the L3 reload hop doubles as the
+        // eviction hop on the memory level; total matches `up` by
+        // construction. Keep the lower bound for reporting.
+        let mem_term = inputs.data.last_mut().expect("mem term");
+        mem_term.cycles = up;
+        let pre: f64 = inputs.data[..inputs.data.len() - 1]
+            .iter()
+            .map(|d| d.cycles + d.penalty)
+            .sum();
+        inputs.mem_bounds = Some((pre + lo, pre + up));
+    }
+    inputs
+}
+
+/// A fully-specified "paper row": machine x variant x precision (x level on
+/// KNC), with the documented hand-schedule overrides applied so the pinned
+/// tables reproduce the published numbers exactly.
+pub fn paper_row(m: &Machine, v: Variant, prec: Precision, level: MemLevel) -> EcmInputs {
+    let k = kernel_for(m, v, prec, level);
+    let mut inputs = derive(m, &k);
+    // Documented override (DESIGN.md §6, EXPERIMENTS.md): the paper's 4-way
+    // FMA Kahan hand schedule executes at 16 cy / 2 CL = 8 cy/CL; the pure
+    // recurrence bound is 14 cy (7 cy/CL). We pin the published number.
+    // Identical in DP (same chunk recurrence, half the updates per CL).
+    if matches!(m.overlap, OverlapPolicy::IntelNonOverlapping) && v == Variant::KahanSimdFma {
+        inputs.t_ol = inputs.t_ol.max(8.0);
+    }
+    inputs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::*;
+    use crate::util::table::fnum;
+
+    fn p(m: &Machine, v: Variant, level: MemLevel) -> (EcmInputs, Vec<f64>) {
+        let i = paper_row(m, v, Precision::Sp, level);
+        let pred = i.predict();
+        let cys = pred.levels.iter().map(|(_, c)| c * 1.0).collect();
+        (i, cys)
+    }
+
+    fn close(a: &[f64], b: &[f64], tol: f64) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| (x - y).abs() <= tol)
+    }
+
+    // ------------------------- Sect. 4.1: naive ----------------------------
+
+    #[test]
+    fn hsw_naive_matches_paper() {
+        let (i, cys) = p(&haswell(), Variant::NaiveSimd, MemLevel::Mem);
+        assert_eq!(i.t_nol, 2.0, "{}", i.shorthand());
+        assert_eq!(i.t_ol, 1.0, "{}", i.shorthand());
+        assert!(close(&cys, &[2.0, 4.0, 9.0, 19.2], 0.01), "{cys:?}");
+    }
+
+    #[test]
+    fn bdw_naive_matches_paper() {
+        let (_, cys) = p(&broadwell(), Variant::NaiveSimd, MemLevel::Mem);
+        // Paper: {2 | 4 | 13 | 26.4} cy (8.4 cy memory at 32.3 GB/s).
+        assert!(close(&cys, &[2.0, 4.0, 13.0, 26.4], 0.1), "{cys:?}");
+    }
+
+    #[test]
+    fn knc_naive_matches_paper() {
+        let (i, cys) = p(&knights_corner(), Variant::NaiveSimd, MemLevel::Mem);
+        // {1 ‖ 2 | 4 | 0.8 + 20} -> {2 | 6 | 26.8}.
+        assert_eq!(i.t_ol, 1.0, "{}", i.shorthand());
+        assert!(close(&cys, &[2.0, 6.0, 26.8], 0.05), "{cys:?}");
+    }
+
+    #[test]
+    fn pwr8_naive_matches_paper() {
+        let (i, cys) = p(&power8(), Variant::NaiveSimd, MemLevel::Mem);
+        // {8 | 0 | 4 | 8 | 10} -> {8 | 8 | 12 | 22}.
+        assert_eq!(i.t_ol, 8.0, "{}", i.shorthand());
+        assert_eq!(i.t_nol, 0.0);
+        assert!(close(&cys, &[8.0, 8.0, 12.0, 22.2], 0.25), "{cys:?}");
+        // Eviction-overlap band: 18 .. 22 cy.
+        let (lo, up) = i.mem_bounds.unwrap();
+        assert!((lo - 18.2).abs() < 0.3, "lower {lo}");
+        assert!((up - 22.2).abs() < 0.3, "upper {up}");
+    }
+
+    // ------------------------- Sect. 4.2: Kahan ----------------------------
+
+    #[test]
+    fn hsw_kahan_avx_matches_paper() {
+        let (i, cys) = p(&haswell(), Variant::KahanSimd, MemLevel::Mem);
+        // {8 ‖ 2 | 2 | 4 + 1 | 9.2 + 1} -> {8 | 8 | 9 | 19.2}.
+        assert_eq!(i.t_ol, 8.0, "{}", i.shorthand());
+        assert_eq!(i.t_nol, 2.0);
+        assert!(close(&cys, &[8.0, 8.0, 9.0, 19.2], 0.01), "{cys:?}");
+    }
+
+    #[test]
+    fn hsw_kahan_fma_pinned_to_paper() {
+        let (i, cys) = p(&haswell(), Variant::KahanSimdFma, MemLevel::Mem);
+        assert_eq!(i.t_ol, 8.0, "paper override: {}", i.shorthand());
+        assert!(close(&cys, &[8.0, 8.0, 9.0, 19.2], 0.01), "{cys:?}");
+        // The un-overridden derivation finds the tighter recurrence bound.
+        let k = kernel_for(&haswell(), Variant::KahanSimdFma, Precision::Sp, MemLevel::Mem);
+        let raw = derive(&haswell(), &k);
+        assert_eq!(raw.t_ol, 7.0, "RecMII 14 cy / 2 CL");
+    }
+
+    #[test]
+    fn hsw_kahan_fma5_matches_paper() {
+        let (i, cys) = p(&haswell(), Variant::KahanSimdFma5, MemLevel::Mem);
+        // {6.4 ‖ 2 | 2 | 4 + 1 | 9.2 + 1} -> {6.4 | 6.4 | 9 | 19.2}.
+        assert!((i.t_ol - 6.4).abs() < 1e-9, "{}", i.shorthand());
+        assert!(close(&cys, &[6.4, 6.4, 9.0, 19.2], 0.01), "{cys:?}");
+    }
+
+    #[test]
+    fn bdw_kahan_fma5_matches_paper() {
+        let (_, cys) = p(&broadwell(), Variant::KahanSimdFma5, MemLevel::Mem);
+        // Paper: {6.4 | 6.4 | 13 | 26.8} (with their 8.8-cy memory figure;
+        // from the measured 32.3 GB/s it is 8.4 -> 26.4).
+        assert!(close(&cys, &[6.4, 6.4, 13.0, 26.4], 0.1), "{cys:?}");
+    }
+
+    #[test]
+    fn knc_kahan_kernels_match_paper() {
+        let m = knights_corner();
+        // L1 kernel: {4 ‖ 2 | 4 | ...} -> L1 prediction 4.
+        let (i1, cys1) = p(&m, Variant::KahanSimdFma, MemLevel::L1);
+        assert_eq!(i1.t_ol, 4.0, "{}", i1.shorthand());
+        assert_eq!(i1.t_nol, 2.0);
+        assert_eq!(cys1[0], 4.0);
+        // L2 kernel: T_nOL = 4 -> L2 prediction 8.
+        let (i2, cys2) = p(&m, Variant::KahanSimdFma, MemLevel::L2);
+        assert_eq!(i2.t_nol, 4.0, "{}", i2.shorthand());
+        assert_eq!(cys2[1], 8.0);
+        // Memory kernel: T_nOL = 6, T_p = 17 -> Mem = 6 + 4 + 0.8 + 17 = 27.8.
+        let (i3, cys3) = p(&m, Variant::KahanSimdFma, MemLevel::Mem);
+        assert_eq!(i3.t_nol, 6.0, "{}", i3.shorthand());
+        assert!((cys3[2] - 27.8).abs() < 0.05, "{cys3:?}");
+    }
+
+    #[test]
+    fn pwr8_kahan_matches_paper() {
+        let (i, cys) = p(&power8(), Variant::KahanSimdFma, MemLevel::Mem);
+        // {16 | 0 | 4 | 8 | 10} -> {16 | 16 | 16 | 22}.
+        assert_eq!(i.t_ol, 16.0, "{}", i.shorthand());
+        assert!(close(&cys, &[16.0, 16.0, 16.0, 22.2], 0.25), "{cys:?}");
+    }
+
+    #[test]
+    fn scalar_kahan_latency_bound() {
+        // Compiler Kahan on HSW: 4-op recurrence at 3-cy ADD latency ->
+        // 12 cy/update -> 192 cy/CL SP.
+        let (i, _) = p(&haswell(), Variant::KahanScalar, MemLevel::Mem);
+        assert_eq!(i.t_ol, 192.0, "{}", i.shorthand());
+        // DP: 8 updates/CL -> 96 cy/CL.
+        let idp = paper_row(&haswell(), Variant::KahanScalar, Precision::Dp, MemLevel::Mem);
+        assert_eq!(idp.t_ol, 96.0);
+    }
+
+    #[test]
+    fn dp_predictions_same_cycles_half_work() {
+        // Sect. 4: "The model prediction in terms of cycles per CL does not
+        // change for the SIMD variants of Kahan when going from SP to DP".
+        let sp = paper_row(&haswell(), Variant::KahanSimd, Precision::Sp, MemLevel::Mem);
+        let dp = paper_row(&haswell(), Variant::KahanSimd, Precision::Dp, MemLevel::Mem);
+        assert_eq!(sp.t_ol, dp.t_ol);
+        assert_eq!(sp.updates_per_cl, 16);
+        assert_eq!(dp.updates_per_cl, 8);
+    }
+
+    #[test]
+    fn shorthand_examples() {
+        let i = paper_row(&haswell(), Variant::NaiveSimd, Precision::Sp, MemLevel::Mem);
+        assert_eq!(i.shorthand(), "{1 ‖ 2 | 2 | 4 + 1 | 9.2 + 1} cy");
+        let n = paper_row(&knights_corner(), Variant::NaiveSimd, Precision::Sp, MemLevel::Mem);
+        assert_eq!(fnum(n.t_nol, 1), "2");
+    }
+
+    #[test]
+    fn res_mii_subset_bound() {
+        // On HSW the Kahan AVX body (4 chunks) has 16 ADD-class ops on the
+        // single ADD port: ResMII = 16.
+        let m = haswell();
+        let k = kernel_for(&m, Variant::KahanSimd, Precision::Sp, MemLevel::Mem);
+        assert_eq!(res_mii(&m, &k, |o| o.is_arith()), 16.0);
+    }
+
+    #[test]
+    fn rec_mii_chains() {
+        let m = haswell();
+        // kahan-simd: c -> y -> t -> tmp -> c = 3+3+3+3 = 12.
+        let k = kernel_for(&m, Variant::KahanSimd, Precision::Sp, MemLevel::Mem);
+        assert_eq!(rec_mii(&m, &k), 12.0);
+        // kahan-fma: 5+3+3+3 = 14.
+        let k = kernel_for(&m, Variant::KahanSimdFma, Precision::Sp, MemLevel::Mem);
+        assert_eq!(rec_mii(&m, &k), 14.0);
+        // kahan-fma5: 5+5+3+3 = 16.
+        let k = kernel_for(&m, Variant::KahanSimdFma5, Precision::Sp, MemLevel::Mem);
+        assert_eq!(rec_mii(&m, &k), 16.0);
+        // naive: fma self-loop = 5.
+        let k = kernel_for(&m, Variant::NaiveSimd, Precision::Sp, MemLevel::Mem);
+        assert_eq!(rec_mii(&m, &k), 5.0);
+    }
+}

@@ -1,0 +1,201 @@
+//! ECM input and prediction types + the paper's shorthand notation.
+//!
+//! All cycle counts are normalized to **one cache line of work**: the
+//! number of scalar updates that fit one cache line (16 SP / 8 DP on 64-B
+//! lines, 32 SP / 16 DP on POWER8's 128-B lines). One CL of work moves
+//! `streams` cache lines through the hierarchy (2 for the dot product).
+
+use crate::arch::{Machine, OverlapPolicy};
+use crate::util::table::fnum;
+
+/// One data-transfer term of the ECM input (a hierarchy hop).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DataTerm {
+    /// Name of the *source* level of this hop ("L2", "L3", "Mem"): data in
+    /// that level must cross this hop (and all closer ones) to reach L1.
+    pub name: String,
+    /// Pure bandwidth cycles for the hop (per CL of work, all streams).
+    pub cycles: f64,
+    /// Latency penalty T_p added when this hop is on the data path.
+    pub penalty: f64,
+}
+
+/// ECM model inputs for one (kernel, machine) pair.
+#[derive(Clone, Debug)]
+pub struct EcmInputs {
+    pub machine: &'static str,
+    pub kernel: String,
+    /// Overlapping in-core cycles (arithmetic).
+    pub t_ol: f64,
+    /// Non-overlapping in-core cycles (L1<->register transfers; 0 on PWR8).
+    pub t_nol: f64,
+    /// Data-transfer terms, L1L2 outward.
+    pub data: Vec<DataTerm>,
+    /// Scalar updates per cache line of work.
+    pub updates_per_cl: u64,
+    /// Composition rule of the source machine.
+    pub overlap: OverlapPolicy,
+    /// PWR8 victim-cache memory bound pair (lower, upper) when applicable:
+    /// Sect. 5.3's "18 cy if evicts fully overlap ... 22 cy if not".
+    pub mem_bounds: Option<(f64, f64)>,
+}
+
+/// Per-level runtime prediction (cycles per CL of work).
+#[derive(Clone, Debug)]
+pub struct EcmPrediction {
+    pub machine: &'static str,
+    pub kernel: String,
+    /// (level name, cycles per CL of work), L1 first, memory last.
+    pub levels: Vec<(String, f64)>,
+    pub updates_per_cl: u64,
+    /// Optional optimistic memory bound (PWR8 eviction overlap).
+    pub mem_lower: Option<f64>,
+}
+
+impl EcmInputs {
+    /// The paper's input shorthand: `{T_OL ∥ T_nOL | T_L1L2 | ... + Tp}` cy.
+    pub fn shorthand(&self) -> String {
+        let mut s = format!("{{{} ‖ {}", fnum(self.t_ol, 1), fnum(self.t_nol, 1));
+        for d in &self.data {
+            s.push_str(" | ");
+            s.push_str(&fnum(d.cycles, 1));
+            if d.penalty > 0.0 {
+                s.push_str(&format!(" + {}", fnum(d.penalty, 1)));
+            }
+        }
+        s.push_str("} cy");
+        s
+    }
+
+    /// Compose inputs into per-level predictions (Sect. 2):
+    /// * Intel / KNC: `T_l = max(T_OL, T_nOL + Σ_{j<=l} (T_j + Tp_j))`
+    /// * PWR8 (full overlap): `T_l = max(T_OL, Σ_{j<=l} (T_j + Tp_j))`
+    pub fn predict(&self) -> EcmPrediction {
+        let mut levels = Vec::with_capacity(self.data.len() + 1);
+        // L1 level: in-core only.
+        levels.push(("L1".to_string(), self.t_ol.max(self.t_nol)));
+        let base = match self.overlap {
+            OverlapPolicy::FullOverlap => 0.0,
+            _ => self.t_nol,
+        };
+        let mut acc = base;
+        for d in &self.data {
+            acc += d.cycles + d.penalty;
+            levels.push((d.name.clone(), self.t_ol.max(acc)));
+        }
+        let mem_lower = self.mem_bounds.map(|(lo, _)| {
+            let pre: f64 = match self.overlap {
+                OverlapPolicy::FullOverlap => 0.0,
+                _ => self.t_nol,
+            };
+            self.t_ol.max(pre + lo)
+        });
+        EcmPrediction {
+            machine: self.machine,
+            kernel: self.kernel.clone(),
+            levels,
+            updates_per_cl: self.updates_per_cl,
+            mem_lower,
+        }
+    }
+
+    /// Memory-hop transfer time *without* latency penalty (denominator of
+    /// the saturation formula σ_S = T_ECM^Mem / T_L3Mem).
+    pub fn mem_transfer_cycles(&self) -> f64 {
+        self.data.last().map(|d| d.cycles).unwrap_or(f64::NAN)
+    }
+}
+
+impl EcmPrediction {
+    /// The paper's prediction shorthand `{T^L1 | T^L2 | ... | T^Mem}` cy.
+    pub fn shorthand(&self) -> String {
+        let inner: Vec<String> = self.levels.iter().map(|(_, c)| fnum(*c, 1)).collect();
+        format!("{{{}}} cy", inner.join(" | "))
+    }
+
+    /// Cycles for the given level index (0 = L1, last = memory).
+    pub fn cycles(&self, level: usize) -> f64 {
+        self.levels[level].1
+    }
+
+    pub fn mem_cycles(&self) -> f64 {
+        self.levels.last().expect("no levels").1
+    }
+
+    /// Single-core performance per level in GUP/s at frequency `f` GHz
+    /// (Eq. 1-3 of the paper).
+    pub fn performance_gups(&self, freq_ghz: f64) -> Vec<(String, f64)> {
+        self.levels
+            .iter()
+            .map(|(n, c)| {
+                (
+                    n.clone(),
+                    crate::util::units::cycles_per_cl_to_gups(*c, freq_ghz, self.updates_per_cl),
+                )
+            })
+            .collect()
+    }
+}
+
+/// Convenience: derive + predict for (machine, kernel) via [`crate::ecm::derive`].
+pub fn predict_for(m: &Machine, k: &crate::isa::KernelLoop) -> EcmPrediction {
+    crate::ecm::derive::derive(m, k).predict()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hsw_naive_inputs() -> EcmInputs {
+        // Hand-built Sect. 4.1.1 inputs: {1 ‖ 2 | 2 | 4 + 1 | 9.2 + 1}.
+        EcmInputs {
+            machine: "HSW",
+            kernel: "naive".into(),
+            t_ol: 1.0,
+            t_nol: 2.0,
+            data: vec![
+                DataTerm { name: "L2".into(), cycles: 2.0, penalty: 0.0 },
+                DataTerm { name: "L3".into(), cycles: 4.0, penalty: 1.0 },
+                DataTerm { name: "Mem".into(), cycles: 9.2, penalty: 1.0 },
+            ],
+            updates_per_cl: 16,
+            overlap: OverlapPolicy::IntelNonOverlapping,
+            mem_bounds: None,
+        }
+    }
+
+    #[test]
+    fn hsw_naive_prediction_matches_eq1() {
+        let p = hsw_naive_inputs().predict();
+        let cys: Vec<f64> = p.levels.iter().map(|(_, c)| *c).collect();
+        assert_eq!(cys, vec![2.0, 4.0, 9.0, 19.2]);
+        let perf = p.performance_gups(2.3);
+        let gups: Vec<f64> = perf.iter().map(|(_, g)| *g).collect();
+        // Eq. (1): {18.40 | 9.20 | 4.09 | 1.92} GUP/s.
+        assert!((gups[0] - 18.40).abs() < 0.01);
+        assert!((gups[1] - 9.20).abs() < 0.01);
+        assert!((gups[2] - 4.09).abs() < 0.01);
+        assert!((gups[3] - 1.92).abs() < 0.01);
+    }
+
+    #[test]
+    fn shorthand_formats() {
+        let i = hsw_naive_inputs();
+        assert_eq!(i.shorthand(), "{1 ‖ 2 | 2 | 4 + 1 | 9.2 + 1} cy");
+        assert_eq!(i.predict().shorthand(), "{2 | 4 | 9 | 19.2} cy");
+    }
+
+    #[test]
+    fn full_overlap_drops_tnol() {
+        let mut i = hsw_naive_inputs();
+        i.overlap = OverlapPolicy::FullOverlap;
+        i.t_ol = 8.0;
+        i.t_nol = 0.0;
+        let p = i.predict();
+        // L2: max(8, 2) = 8; L3: max(8, 2+5)=8; Mem: max(8, 2+5+10.2)=17.2
+        assert_eq!(p.cycles(0), 8.0);
+        assert_eq!(p.cycles(1), 8.0);
+        assert_eq!(p.cycles(2), 8.0);
+        assert!((p.mem_cycles() - 17.2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,22 @@
+//! The ECM (Execution–Cache–Memory) performance model — the paper's method
+//! (Sect. 2), implemented end to end:
+//!
+//! 1. [`derive`] turns a (machine, kernel) pair into ECM *inputs*
+//!    `{T_OL ∥ T_nOL | T_L1L2 | T_L2L3 + T_p | T_L3Mem + T_p}`;
+//! 2. [`inputs`] holds the input/prediction types and the paper's shorthand
+//!    notation formatting;
+//! 3. [`scaling`] applies the multicore model: linear scaling until the
+//!    memory bottleneck saturates (Fig. 1), σ_S, n_S, and saturated
+//!    performance.
+//!
+//! Everything here is *analytic* — no simulation. The simulator ([`crate::sim`])
+//! independently produces "measurements" to validate these predictions
+//! against, exactly like the paper's Sect. 5.
+
+pub mod derive;
+pub mod inputs;
+pub mod scaling;
+
+pub use derive::{derive, kernel_for, paper_row, MemLevel};
+pub use inputs::{DataTerm, EcmInputs, EcmPrediction};
+pub use scaling::{saturation, scaling_curve, Saturation};

@@ -1,0 +1,207 @@
+//! ECM multicore scaling (Sect. 2, Fig. 1): performance scales linearly
+//! with cores until the shared memory bandwidth saturates.
+//!
+//! * σ_S = T_ECM^Mem / T_L3Mem — maximum speedup within one memory domain;
+//! * n_S = ⌈σ_S⌉ — cores needed to saturate;
+//! * P_S = f · W_CL / T_L3Mem — performance at saturation (per domain).
+//!
+//! Under cluster-on-die, cores are assigned to the chip's domains
+//! round-robin (the paper's measurement protocol: "the two-core run was
+//! done with one core per memory domain"), so the chip-level curve is the
+//! per-domain curve stretched by the domain count.
+
+use crate::arch::Machine;
+
+use super::inputs::EcmInputs;
+
+/// Saturation characteristics of a kernel on a machine.
+#[derive(Clone, Debug)]
+pub struct Saturation {
+    /// Maximum in-domain speedup (T_ECM^Mem / T_L3Mem).
+    pub sigma: f64,
+    /// Cores per *memory domain* needed to saturate.
+    pub n_s: u32,
+    /// Cores per chip needed to saturate.
+    pub n_s_chip: u32,
+    /// Saturated performance per domain, GUP/s.
+    pub p_sat_domain: f64,
+    /// Saturated performance per chip, GUP/s.
+    pub p_sat_chip: f64,
+    /// Single-core in-memory performance, GUP/s.
+    pub p_single: f64,
+    /// True if the kernel cannot saturate the chip (n_s_chip > cores).
+    pub scalable: bool,
+}
+
+/// Compute saturation characteristics from ECM inputs.
+pub fn saturation(m: &Machine, inputs: &EcmInputs) -> Saturation {
+    let pred = inputs.predict();
+    let t_mem = pred.mem_cycles();
+    let t_transfer = inputs.mem_transfer_cycles();
+    let sigma = t_mem / t_transfer;
+    let n_s = sigma.ceil() as u32;
+    let w = inputs.updates_per_cl as f64;
+    let p_sat_domain = m.freq_ghz * w / t_transfer;
+    let p_single = m.freq_ghz * w / t_mem;
+    let domains = m.mem.domains.max(1);
+    Saturation {
+        sigma,
+        n_s,
+        n_s_chip: n_s * domains,
+        p_sat_domain,
+        p_sat_chip: p_sat_domain * domains as f64,
+        p_single,
+        scalable: n_s * domains > m.cores,
+    }
+}
+
+/// The ECM scaling *model* curve: P(n) for n = 1..=cores (chip level, GUP/s),
+/// with cores spread round-robin over memory domains.
+pub fn scaling_curve(m: &Machine, inputs: &EcmInputs) -> Vec<(u32, f64)> {
+    let sat = saturation(m, inputs);
+    let domains = m.mem.domains.max(1);
+    (1..=m.cores)
+        .map(|n| {
+            // Cores per domain (round-robin assignment).
+            let base = n / domains;
+            let extra = n % domains;
+            let mut p = 0.0;
+            for d in 0..domains {
+                let cores_here = base + u32::from(d < extra);
+                let lin = cores_here as f64 * sat.p_single;
+                p += lin.min(sat.p_sat_domain);
+            }
+            (n, p)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::*;
+    use crate::ecm::derive::{paper_row, MemLevel};
+    use crate::isa::Variant;
+    use crate::util::units::Precision;
+
+    #[test]
+    fn hsw_naive_saturation_matches_paper() {
+        // Sect. 4.1.1: n_S = ceil(19.2/9.2) = 3 per domain (6 per chip);
+        // P_S = 4 GUP/s per domain, 8 per chip.
+        let m = haswell();
+        let i = paper_row(&m, Variant::NaiveSimd, Precision::Sp, MemLevel::Mem);
+        let s = saturation(&m, &i);
+        assert_eq!(s.n_s, 3);
+        assert_eq!(s.n_s_chip, 6);
+        assert!((s.p_sat_domain - 4.0).abs() < 0.01, "{}", s.p_sat_domain);
+        assert!((s.p_sat_chip - 8.0).abs() < 0.02);
+        assert!(!s.scalable);
+    }
+
+    #[test]
+    fn bdw_naive_saturation_matches_paper() {
+        // Sect. 4.1.1: n_S = ceil(26.4/8.4) = 4 per domain, 8 per chip.
+        let m = broadwell();
+        let i = paper_row(&m, Variant::NaiveSimd, Precision::Sp, MemLevel::Mem);
+        let s = saturation(&m, &i);
+        assert_eq!(s.n_s, 4);
+        assert_eq!(s.n_s_chip, 8);
+        // "prediction for the saturated performance is identical to HSW".
+        assert!((s.p_sat_chip - 8.0).abs() < 0.1, "{}", s.p_sat_chip);
+    }
+
+    #[test]
+    fn knc_naive_saturation_matches_paper() {
+        // Sect. 4.1.2: n_S = ceil(26.8/0.8) = 34 cores, max 21.3 GUP/s.
+        let m = knights_corner();
+        let i = paper_row(&m, Variant::NaiveSimd, Precision::Sp, MemLevel::Mem);
+        let s = saturation(&m, &i);
+        assert_eq!(s.n_s, 34);
+        assert!((s.p_sat_chip - 21.3).abs() < 0.6, "{}", s.p_sat_chip);
+    }
+
+    #[test]
+    fn pwr8_naive_saturation_matches_paper() {
+        // Sect. 4.1.3: n_S = ceil(22/10) = 3 cores.
+        let m = power8();
+        let i = paper_row(&m, Variant::NaiveSimd, Precision::Sp, MemLevel::Mem);
+        let s = saturation(&m, &i);
+        assert_eq!(s.n_s, 3);
+        // Chip saturation: 73.6 GB/s over 32-update CLs of 128 B:
+        // 2.926 * 32 / 10.18 = 9.2 GUP/s.
+        assert!((s.p_sat_chip - 9.2).abs() < 0.1, "{}", s.p_sat_chip);
+    }
+
+    #[test]
+    fn kahan_same_saturated_performance_as_naive_on_hsw() {
+        // The paper's headline: Kahan comes for free in memory — same
+        // saturated bandwidth-bound performance.
+        let m = haswell();
+        let n = paper_row(&m, Variant::NaiveSimd, Precision::Sp, MemLevel::Mem);
+        let k = paper_row(&m, Variant::KahanSimdFma5, Precision::Sp, MemLevel::Mem);
+        let sn = saturation(&m, &n);
+        let sk = saturation(&m, &k);
+        assert_eq!(sn.p_sat_chip, sk.p_sat_chip);
+        assert_eq!(saturation(&m, &k).n_s, 3);
+    }
+
+    #[test]
+    fn compiler_kahan_misses_saturation_on_hsw() {
+        // Sect. 5.1: "On HSW one would need more than twice the number of
+        // available cores to reach saturation" (7 per domain available).
+        let m = haswell();
+        let i = paper_row(&m, Variant::KahanScalar, Precision::Sp, MemLevel::Mem);
+        let s = saturation(&m, &i);
+        assert!(s.scalable, "compiler Kahan must not saturate");
+        assert!(
+            s.sigma > 2.0 * 7.0,
+            "sigma {} should exceed 2x cores/domain",
+            s.sigma
+        );
+    }
+
+    #[test]
+    fn compiler_kahan_dp_just_saturates_on_bdw() {
+        // Fig. 9: "the additional cores help BDW to just about saturate
+        // whereas HSW misses this goal" (DP).
+        // "Just about" = the full chip lands within a few percent of the
+        // bandwidth ceiling on BDW, while HSW stays well below it.
+        let bdw = broadwell();
+        let i = paper_row(&bdw, Variant::KahanScalar, Precision::Dp, MemLevel::Mem);
+        let s = saturation(&bdw, &i);
+        let p_full = scaling_curve(&bdw, &i).last().unwrap().1;
+        assert!(
+            p_full >= 0.92 * s.p_sat_chip,
+            "BDW DP compiler Kahan: {} of {} GUP/s",
+            p_full,
+            s.p_sat_chip
+        );
+        let hsw = haswell();
+        let ih = paper_row(&hsw, Variant::KahanScalar, Precision::Dp, MemLevel::Mem);
+        let sh = saturation(&hsw, &ih);
+        let ph_full = scaling_curve(&hsw, &ih).last().unwrap().1;
+        assert!(
+            ph_full < 0.8 * sh.p_sat_chip,
+            "HSW DP compiler Kahan: {} of {} GUP/s",
+            ph_full,
+            sh.p_sat_chip
+        );
+    }
+
+    #[test]
+    fn scaling_curve_shape() {
+        let m = haswell();
+        let i = paper_row(&m, Variant::NaiveSimd, Precision::Sp, MemLevel::Mem);
+        let curve = scaling_curve(&m, &i);
+        assert_eq!(curve.len(), m.cores as usize);
+        // Monotone non-decreasing, saturating at p_sat_chip.
+        let s = saturation(&m, &i);
+        for w in curve.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 1e-9);
+        }
+        let last = curve.last().unwrap().1;
+        assert!((last - s.p_sat_chip).abs() < 1e-9);
+        // Two cores (one per domain) = 2x single-core performance.
+        assert!((curve[1].1 - 2.0 * s.p_single).abs() < 1e-9);
+    }
+}

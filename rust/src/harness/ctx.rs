@@ -1,0 +1,54 @@
+//! Shared experiment context: parameters every experiment receives.
+
+#[derive(Clone, Debug)]
+pub struct Ctx {
+    /// Artifact directory for PJRT-backed experiments.
+    pub artifacts_dir: String,
+    /// Base seed for the deterministic "measurement" noise.
+    pub seed: u64,
+    /// Reduced parameter grids (CI / smoke runs).
+    pub quick: bool,
+}
+
+impl Default for Ctx {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: crate::runtime::DEFAULT_ARTIFACT_DIR.to_string(),
+            seed: 1,
+            quick: false,
+        }
+    }
+}
+
+impl Ctx {
+    pub fn quick() -> Self {
+        Self {
+            quick: true,
+            ..Self::default()
+        }
+    }
+
+    /// Working-set sweep sizes honoring `quick`.
+    pub fn sweep_sizes(&self, max_bytes: u64) -> Vec<u64> {
+        let all = crate::sim::default_sweep_sizes(max_bytes);
+        if self.quick {
+            all.into_iter().step_by(6).collect()
+        } else {
+            all
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::GIB;
+
+    #[test]
+    fn quick_thins_grid() {
+        let full = Ctx::default().sweep_sizes(GIB);
+        let quick = Ctx::quick().sweep_sizes(GIB);
+        assert!(quick.len() * 4 < full.len());
+        assert!(!quick.is_empty());
+    }
+}

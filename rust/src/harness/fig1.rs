@@ -1,0 +1,86 @@
+//! Fig. 1: the ECM multicore scaling schematic — per-core timelines showing
+//! the memory-bottleneck (T_mem) and core-local (T_chip) contributions, and
+//! the stall cycles that appear past the saturation point.
+
+use anyhow::Result;
+
+use crate::arch::haswell;
+use crate::ecm::{self, MemLevel};
+use crate::isa::Variant;
+use crate::util::table::{fnum, Table};
+use crate::util::units::Precision;
+
+use super::ctx::Ctx;
+use super::output::ExperimentOutput;
+
+pub fn fig1(_ctx: &Ctx) -> Result<ExperimentOutput> {
+    let m = haswell();
+    let inputs = ecm::derive::paper_row(&m, Variant::NaiveSimd, Precision::Sp, MemLevel::Mem);
+    let pred = inputs.predict();
+    let t_mem = inputs.mem_transfer_cycles();
+    let t_total = pred.mem_cycles();
+    let t_chip = t_total - t_mem;
+    let sat = ecm::scaling::saturation(&m, &inputs);
+
+    let mut t = Table::new(["cores", "T_chip (cy)", "T_mem demand (cy)", "bus utilization", "stall per core (cy)"]);
+    let mut art = String::new();
+    art.push_str(&format!(
+        "ECM scaling schematic (HSW naive, per-domain): T_chip = {}, T_mem = {} cy per {} updates\n\n",
+        fnum(t_chip, 1),
+        fnum(t_mem, 1),
+        inputs.updates_per_cl
+    ));
+    let cores_max = 6u32;
+    for n in 1..=cores_max {
+        let demand = n as f64 * t_mem;
+        let util = (demand / t_total).min(1.0);
+        // Past saturation each core waits for its share of the bus.
+        let stall = (n as f64 * t_mem - t_total).max(0.0) / n as f64;
+        t.row([
+            n.to_string(),
+            fnum(t_chip, 1),
+            fnum(demand, 1),
+            format!("{:.0}%", util * 100.0),
+            fnum(stall, 1),
+        ]);
+        // ASCII timeline: '=' chip work, 'M' memory transfer, '.' stall.
+        let scale = 2.0; // chars per cycle
+        let chip_chars = (t_chip / scale) as usize;
+        let mem_chars = (t_mem / scale) as usize;
+        let stall_chars = (stall / scale) as usize;
+        art.push_str(&format!(
+            "core x{n}: [{}{}{}]\n",
+            "=".repeat(chip_chars),
+            "M".repeat(mem_chars),
+            ".".repeat(stall_chars)
+        ));
+    }
+    art.push_str(&format!(
+        "\nsaturation at ceil({} / {}) = {} cores per domain ({} per chip)\n",
+        fnum(t_total, 1),
+        fnum(t_mem, 1),
+        sat.n_s,
+        sat.n_s_chip
+    ));
+
+    let mut out = ExperimentOutput::new("fig1", "ECM multicore scaling schematic (paper Fig. 1)");
+    out.table("scaling", t);
+    out.plot("timeline", art);
+    out.note(format!(
+        "Saturation point n_s = {} per domain; hatched (.) stalls appear beyond it.",
+        sat.n_s
+    ));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_with_saturation_at_3() {
+        let o = fig1(&Ctx::quick()).unwrap();
+        assert!(o.plots[0].1.contains("= 3 cores per domain"));
+        assert_eq!(o.tables[0].1.rows.len(), 6);
+    }
+}

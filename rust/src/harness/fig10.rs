@@ -1,0 +1,208 @@
+//! Figs. 10a/10b: cross-architecture comparison of the manual SIMD Kahan
+//! kernels — (a) single-core cycles *per update* in every hierarchy level
+//! with the saturation point annotated; (b) single-core and full-chip
+//! in-memory GUP/s.
+
+use anyhow::Result;
+
+use crate::arch::{all_machines, Machine};
+use crate::ecm::{self, MemLevel};
+use crate::isa::Variant;
+use crate::sim::{self, MeasureOpts};
+use crate::util::table::{fnum, Table};
+use crate::util::units::{Precision, GIB, KIB, MIB};
+
+use super::ctx::Ctx;
+use super::output::ExperimentOutput;
+
+/// The headline manual Kahan variant per machine.
+pub fn manual_kahan(m: &Machine) -> (Variant, MemLevel) {
+    match m.shorthand {
+        "KNC" => (Variant::KahanSimdFma, MemLevel::Mem),
+        "PWR8" => (Variant::KahanSimdFma, MemLevel::Mem),
+        _ => (Variant::KahanSimdFma5, MemLevel::Mem),
+    }
+}
+
+fn protocol(m: &Machine) -> MeasureOpts {
+    match m.shorthand {
+        "KNC" => MeasureOpts { smt: 2, untuned: false, seed: 1 },
+        "PWR8" => MeasureOpts { smt: 8, untuned: false, seed: 1 },
+        _ => MeasureOpts::default(),
+    }
+}
+
+/// Representative working set per hierarchy level for a machine.
+fn level_ws(m: &Machine) -> Vec<(String, u64)> {
+    let mut v = Vec::new();
+    for (i, c) in m.caches.iter().enumerate() {
+        // Half the (effective) capacity: safely resident.
+        let mut ws = c.capacity / 2;
+        if i == m.caches.len() - 1 {
+            if let Some(e) = m.calib.effective_llc_capacity {
+                ws = ws.min(e / 2);
+            }
+        }
+        v.push((c.name.to_string(), ws.max(8 * KIB)));
+    }
+    v.push(("Mem".to_string(), GIB.max(64 * MIB)));
+    v
+}
+
+pub fn fig10a(ctx: &Ctx) -> Result<ExperimentOutput> {
+    let machines = all_machines();
+    let mut t = Table::new(["machine", "level", "cy/update (sim)", "cy/update (ECM)", "n_s (chip)"]);
+    let mut bars = String::from("cycles per update, manual SIMD Kahan (smaller is better)\n\n");
+    for m in &machines {
+        let (v, lvl) = manual_kahan(m);
+        let k = ecm::derive::kernel_for(m, v, Precision::Sp, lvl);
+        let inputs = ecm::derive::paper_row(m, v, Precision::Sp, lvl);
+        let pred = inputs.predict();
+        let sat = ecm::scaling::saturation(m, &inputs);
+        let upcl = k.updates_per_cl(m.cacheline) as f64;
+        let mut o = protocol(m);
+        o.seed = ctx.seed;
+        for (i, (name, ws)) in level_ws(m).iter().enumerate() {
+            // On KNC use the level-matched kernel (the paper's protocol).
+            let k_lvl = if m.shorthand == "KNC" {
+                let lvl = match i {
+                    0 => MemLevel::L1,
+                    1 => MemLevel::L2,
+                    _ => MemLevel::Mem,
+                };
+                ecm::derive::kernel_for(m, v, Precision::Sp, lvl)
+            } else {
+                k.clone()
+            };
+            let o_lvl = if m.shorthand == "KNC" && i >= 2 {
+                MeasureOpts { smt: 4, ..o }
+            } else {
+                o
+            };
+            let pt = &sim::sweep(m, &k_lvl, &[*ws], &o_lvl)[0];
+            let cy_up_sim = pt.cy_per_cl / upcl;
+            let model_ix = i.min(pred.levels.len() - 1);
+            let cy_up_model = pred.cycles(model_ix) / upcl;
+            t.row([
+                m.shorthand.to_string(),
+                name.clone(),
+                fnum(cy_up_sim, 3),
+                fnum(cy_up_model, 3),
+                if i == level_ws(m).len() - 1 {
+                    sat.n_s_chip.to_string()
+                } else {
+                    String::new()
+                },
+            ]);
+            bars.push_str(&format!(
+                "{:<5} {:<4} {:<7} |{}\n",
+                m.shorthand,
+                name,
+                fnum(cy_up_sim, 2),
+                "#".repeat((cy_up_sim * 30.0) as usize)
+            ));
+        }
+        bars.push('\n');
+    }
+    let mut out = ExperimentOutput::new(
+        "fig10a",
+        "Cycles per update per hierarchy level, all machines (paper Fig. 10a)",
+    );
+    out.table("per_level", t);
+    out.plot("bars", bars);
+    out.note("Expected shape: Intel chips near design specs in L1/L2 then significant drops \
+              in L3/memory (worst on BDW with its large Uncore); PWR8 ~30% off its design \
+              throughput in-core but flattest across levels (lock-free hierarchy).");
+    Ok(out)
+}
+
+pub fn fig10b(ctx: &Ctx) -> Result<ExperimentOutput> {
+    let machines = all_machines();
+    let mut t = Table::new(["machine", "single-core GUP/s", "full-chip GUP/s", "chip/LLC note"]);
+    let mut bars = String::from("in-memory performance, manual SIMD Kahan (bigger is better)\n\n");
+    for m in &machines {
+        let (v, lvl) = manual_kahan(m);
+        let k = ecm::derive::kernel_for(m, v, Precision::Sp, lvl);
+        let mut o = protocol(m);
+        o.seed = ctx.seed;
+        if m.shorthand == "KNC" {
+            o.smt = 4;
+        }
+        let single = sim::sweep(m, &k, &[10 * GIB], &o)[0].gups;
+        let scan_opts = if m.shorthand == "KNC" {
+            MeasureOpts { smt: 1, untuned: false, seed: ctx.seed }
+        } else {
+            o
+        };
+        let chip = sim::corescan(m, &k, 10 * GIB, &scan_opts)
+            .last()
+            .unwrap()
+            .1;
+        t.row([
+            m.shorthand.to_string(),
+            fnum(single, 3),
+            fnum(chip, 3),
+            format!("{} cores", m.cores),
+        ]);
+        bars.push_str(&format!(
+            "{:<5} 1-core {:>6} |{}\n",
+            m.shorthand,
+            fnum(single, 2),
+            "#".repeat((single * 12.0) as usize)
+        ));
+        bars.push_str(&format!(
+            "{:<5} chip   {:>6} |{}\n",
+            m.shorthand,
+            fnum(chip, 2),
+            "#".repeat((chip * 3.0) as usize)
+        ));
+    }
+    let mut out = ExperimentOutput::new(
+        "fig10b",
+        "In-memory single-core and full-chip performance (paper Fig. 10b)",
+    );
+    out.table("chip", t);
+    out.plot("bars", bars);
+    out.note("Expected ranking: PWR8 best single-core AND best multicore chip; full-chip KNC \
+              beats it by >2x on raw bandwidth.");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig10b_ranking_matches_paper() {
+        let o = fig10b(&Ctx::quick()).unwrap();
+        let t = &o.tables[0].1;
+        let get = |row: usize, col: usize| -> f64 { t.rows[row][col].parse().unwrap() };
+        // rows: HSW, BDW, KNC, PWR8
+        let (hsw_1, hsw_c) = (get(0, 1), get(0, 2));
+        let (knc_c, p8_1, p8_c) = (get(2, 2), get(3, 1), get(3, 2));
+        assert!(p8_1 > hsw_1, "PWR8 single-core {p8_1} > HSW {hsw_1}");
+        assert!(p8_c > hsw_c, "PWR8 chip {p8_c} > HSW {hsw_c}");
+        assert!(knc_c > 2.0 * p8_c, "KNC chip {knc_c} > 2x PWR8 {p8_c}");
+    }
+
+    #[test]
+    fn fig10a_pwr8_flattest() {
+        let o = fig10a(&Ctx::quick()).unwrap();
+        let t = &o.tables[0].1;
+        // Ratio mem/L1 per machine; PWR8's must be the smallest.
+        let mut ratios = std::collections::BTreeMap::new();
+        let mut l1 = std::collections::BTreeMap::new();
+        for r in &t.rows {
+            let mach = r[0].clone();
+            let v: f64 = r[2].parse().unwrap();
+            l1.entry(mach.clone()).or_insert(v);
+            ratios.insert(mach.clone(), v / l1[&mach]);
+        }
+        let p8 = ratios["PWR8"];
+        for (m, r) in &ratios {
+            if m != "PWR8" {
+                assert!(p8 <= *r * 1.05, "PWR8 ratio {p8} vs {m} {r}");
+            }
+        }
+    }
+}

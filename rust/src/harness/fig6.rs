@@ -1,0 +1,95 @@
+//! Fig. 6: KNC single-core sweep — per-level-optimized Kahan kernels
+//! (Sect. 4.2.2's software-prefetch variants) plus the compiler naive code.
+
+use anyhow::Result;
+
+use crate::arch::knights_corner;
+use crate::ecm::{self, MemLevel};
+use crate::isa::Variant;
+use crate::sim::MeasureOpts;
+use crate::util::units::Precision;
+
+use super::ctx::Ctx;
+use super::fig5::{sweep_figure, SweepSeries};
+use super::output::ExperimentOutput;
+
+pub fn fig6(ctx: &Ctx) -> Result<ExperimentOutput> {
+    let m = knights_corner();
+    let kf = |v, lvl| ecm::derive::kernel_for(&m, v, Precision::Sp, lvl);
+    // Paper protocol: all versions 2-SMT except the memory-optimized manual
+    // kernel (4-SMT); compiler naive carries no software prefetch.
+    let series = vec![
+        SweepSeries {
+            label: "kahan L1-kernel (2-SMT)".into(),
+            kernel: kf(Variant::KahanSimdFma, MemLevel::L1),
+            opts: MeasureOpts { smt: 2, untuned: false, seed: 1 },
+        },
+        SweepSeries {
+            label: "kahan L2-kernel (2-SMT)".into(),
+            kernel: kf(Variant::KahanSimdFma, MemLevel::L2),
+            opts: MeasureOpts { smt: 2, untuned: false, seed: 1 },
+        },
+        SweepSeries {
+            label: "kahan mem-kernel (4-SMT)".into(),
+            kernel: kf(Variant::KahanSimdFma, MemLevel::Mem),
+            opts: MeasureOpts { smt: 4, untuned: false, seed: 1 },
+        },
+        SweepSeries {
+            label: "naive compiler (2-SMT)".into(),
+            kernel: kf(Variant::NaiveSimd, MemLevel::L1),
+            opts: MeasureOpts { smt: 2, untuned: true, seed: 1 },
+        },
+    ];
+    let models = vec![
+        (
+            "kahan L1".to_string(),
+            ecm::derive::paper_row(&m, Variant::KahanSimdFma, Precision::Sp, MemLevel::L1)
+                .predict(),
+        ),
+        (
+            "kahan L2".to_string(),
+            ecm::derive::paper_row(&m, Variant::KahanSimdFma, Precision::Sp, MemLevel::L2)
+                .predict(),
+        ),
+        (
+            "kahan mem".to_string(),
+            ecm::derive::paper_row(&m, Variant::KahanSimdFma, Precision::Sp, MemLevel::Mem)
+                .predict(),
+        ),
+    ];
+    let mut out = sweep_figure(
+        "fig6",
+        "Single-core sweep on KNC with per-level kernels (paper Fig. 6)",
+        &m,
+        series,
+        models,
+        ctx,
+    )?;
+    out.note("Expected shape: the model fits only when the level-matched kernel is used \
+              (L1 kernel 4 cy/CL in L1; L2 kernel 8 cy/CL in L2; mem kernel ~27.8 cy/CL \
+              in memory); the unprefetched compiler code is latency-dominated in memory.");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_per_level_kernels_win_their_level() {
+        let o = fig6(&Ctx::quick()).unwrap();
+        let t = &o.tables[0].1;
+        // In memory (last row): mem-kernel (col 3) beats L1-kernel (col 1)
+        // and the untuned compiler code (col 4) is far worse.
+        let last = t.rows.last().unwrap();
+        let l1k: f64 = last[1].parse().unwrap();
+        let memk: f64 = last[3].parse().unwrap();
+        let compiler: f64 = last[4].parse().unwrap();
+        assert!(memk < l1k, "mem kernel {memk} vs L1 kernel {l1k}");
+        assert!(compiler > memk * 1.5, "compiler {compiler} vs mem kernel {memk}");
+        // Mid-L1 (16 KiB): L1 kernel at ~4-5 cy/CL.
+        let l1row = crate::harness::fig5::tests::row_near(t, 16.0 * 1024.0);
+        let first: f64 = l1row[1].parse().unwrap();
+        assert!((3.5..5.5).contains(&first), "L1 {first}");
+    }
+}

@@ -1,0 +1,232 @@
+//! Figs. 8a–8d: in-memory multicore scaling (10 GB working set) of the
+//! Kahan scalar product on all four machines: compiler naive, manual SIMD
+//! Kahan, compiler Kahan — "measured" (simulated) curves plus the ECM
+//! scaling model.
+
+use anyhow::Result;
+
+use crate::arch::{broadwell, haswell, knights_corner, power8, Machine};
+use crate::ecm::{self, MemLevel};
+use crate::isa::Variant;
+use crate::sim::{self, MeasureOpts};
+use crate::util::plot::{render, Scale, Series};
+use crate::util::table::{fnum, Table};
+use crate::util::units::{Precision, GIB};
+
+use super::ctx::Ctx;
+use super::output::ExperimentOutput;
+
+struct ScanSeries {
+    label: String,
+    variant: Variant,
+    level: MemLevel,
+    opts: MeasureOpts,
+}
+
+fn scaling_fig(
+    id: &str,
+    title: &str,
+    m: &Machine,
+    series: Vec<ScanSeries>,
+    ctx: &Ctx,
+) -> Result<ExperimentOutput> {
+    let ws = 10 * GIB;
+    let mut table = Table::new(
+        std::iter::once("cores".to_string())
+            .chain(series.iter().map(|s| s.label.clone()))
+            .chain(std::iter::once("ECM model (manual kahan)".to_string()))
+            .collect::<Vec<_>>(),
+    );
+    let mut curves = Vec::new();
+    for s in &series {
+        let k = ecm::derive::kernel_for(m, s.variant, Precision::Sp, s.level);
+        let mut o = s.opts;
+        o.seed = ctx.seed;
+        curves.push(sim::corescan(m, &k, ws, &o));
+    }
+    // ECM model curve for the headline manual-Kahan kernel.
+    let manual = series
+        .iter()
+        .position(|s| s.variant != Variant::KahanScalar && s.variant.is_kahan())
+        .unwrap_or(0);
+    let inputs = ecm::derive::paper_row(m, series[manual].variant, Precision::Sp, series[manual].level);
+    let model = ecm::scaling::scaling_curve(m, &inputs);
+
+    for i in 0..m.cores as usize {
+        let mut row = vec![(i + 1).to_string()];
+        for c in &curves {
+            row.push(fnum(c[i].1, 3));
+        }
+        row.push(fnum(model[i].1, 3));
+        table.row(row);
+    }
+
+    let mut plot_series: Vec<Series> = series
+        .iter()
+        .zip(&curves)
+        .map(|(s, c)| {
+            Series::new(
+                s.label.clone(),
+                c.iter().map(|&(n, p)| (n as f64, p)).collect(),
+            )
+        })
+        .collect();
+    plot_series.push(Series::new(
+        "ECM model",
+        model.iter().map(|&(n, p)| (n as f64, p)).collect(),
+    ));
+    let art = render(
+        &plot_series,
+        72,
+        20,
+        Scale::Linear,
+        Scale::Linear,
+        &format!("{title} — GUP/s vs cores (10 GB working set)"),
+    );
+
+    let sat = ecm::scaling::saturation(m, &inputs);
+    let mut out = ExperimentOutput::new(id, title);
+    out.table("scaling", table);
+    out.plot("scaling", art);
+    out.note(format!(
+        "ECM saturation: n_s = {} per domain ({} per chip), P_sat = {} GUP/s per chip.",
+        sat.n_s,
+        sat.n_s_chip,
+        fnum(sat.p_sat_chip, 2)
+    ));
+    Ok(out)
+}
+
+fn intel_series() -> Vec<ScanSeries> {
+    vec![
+        ScanSeries {
+            label: "naive compiler".into(),
+            variant: Variant::NaiveSimd,
+            level: MemLevel::Mem,
+            opts: MeasureOpts::default(),
+        },
+        ScanSeries {
+            label: "kahan manual (AVX/FMA)".into(),
+            variant: Variant::KahanSimdFma5,
+            level: MemLevel::Mem,
+            opts: MeasureOpts::default(),
+        },
+        ScanSeries {
+            label: "kahan compiler".into(),
+            variant: Variant::KahanScalar,
+            level: MemLevel::Mem,
+            opts: MeasureOpts::default(),
+        },
+    ]
+}
+
+pub fn fig8a(ctx: &Ctx) -> Result<ExperimentOutput> {
+    scaling_fig("fig8a", "In-memory scaling on HSW (paper Fig. 8a)", &haswell(), intel_series(), ctx)
+}
+
+pub fn fig8b(ctx: &Ctx) -> Result<ExperimentOutput> {
+    scaling_fig("fig8b", "In-memory scaling on BDW (paper Fig. 8b)", &broadwell(), intel_series(), ctx)
+}
+
+pub fn fig8c(ctx: &Ctx) -> Result<ExperimentOutput> {
+    // Paper protocol: 1-SMT for in-memory scaling on KNC.
+    scaling_fig(
+        "fig8c",
+        "In-memory scaling on KNC (paper Fig. 8c)",
+        &knights_corner(),
+        vec![
+            ScanSeries {
+                label: "naive compiler (no SW prefetch)".into(),
+                variant: Variant::NaiveSimd,
+                level: MemLevel::Mem,
+                opts: MeasureOpts { smt: 1, untuned: true, seed: 1 },
+            },
+            ScanSeries {
+                label: "kahan manual (mem kernel)".into(),
+                variant: Variant::KahanSimdFma,
+                level: MemLevel::Mem,
+                opts: MeasureOpts { smt: 1, untuned: false, seed: 1 },
+            },
+            ScanSeries {
+                label: "naive manual".into(),
+                variant: Variant::NaiveSimd,
+                level: MemLevel::Mem,
+                opts: MeasureOpts { smt: 1, untuned: false, seed: 1 },
+            },
+        ],
+        ctx,
+    )
+}
+
+pub fn fig8d(ctx: &Ctx) -> Result<ExperimentOutput> {
+    let opts = MeasureOpts { smt: 8, untuned: false, seed: 1 };
+    scaling_fig(
+        "fig8d",
+        "In-memory scaling on PWR8 (paper Fig. 8d)",
+        &power8(),
+        vec![
+            ScanSeries {
+                label: "naive (SMT-8)".into(),
+                variant: Variant::NaiveSimd,
+                level: MemLevel::Mem,
+                opts,
+            },
+            ScanSeries {
+                label: "kahan manual VSX (SMT-8)".into(),
+                variant: Variant::KahanSimdFma,
+                level: MemLevel::Mem,
+                opts,
+            },
+            ScanSeries {
+                label: "kahan compiler (SMT-8)".into(),
+                variant: Variant::KahanScalar,
+                level: MemLevel::Mem,
+                opts,
+            },
+        ],
+        ctx,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn last_val(o: &ExperimentOutput, col: usize) -> f64 {
+        o.tables[0].1.rows.last().unwrap()[col].parse().unwrap()
+    }
+
+    #[test]
+    fn fig8a_kahan_free_compiler_slow() {
+        let o = fig8a(&Ctx::quick()).unwrap();
+        let naive = last_val(&o, 1);
+        let kahan = last_val(&o, 2);
+        let compiler = last_val(&o, 3);
+        assert!((naive - kahan).abs() / naive < 0.05, "naive {naive} vs kahan {kahan}");
+        assert!((6.8..8.3).contains(&naive), "HSW saturates ~8: {naive}");
+        assert!(compiler < 0.6 * naive, "compiler kahan {compiler} must miss");
+    }
+
+    #[test]
+    fn fig8c_knc_story() {
+        let o = fig8c(&Ctx::quick()).unwrap();
+        let compiler_naive = last_val(&o, 1);
+        let kahan_manual = last_val(&o, 2);
+        let naive_manual = last_val(&o, 3);
+        assert!((17.0..22.5).contains(&kahan_manual), "KNC kahan {kahan_manual}");
+        assert!((kahan_manual - naive_manual).abs() / naive_manual < 0.12);
+        assert!(compiler_naive < 0.65 * kahan_manual, "compiler naive {compiler_naive}");
+    }
+
+    #[test]
+    fn fig8d_pwr8_all_saturate() {
+        let o = fig8d(&Ctx::quick()).unwrap();
+        let naive = last_val(&o, 1);
+        let kahan = last_val(&o, 2);
+        let compiler = last_val(&o, 3);
+        assert!((8.0..9.6).contains(&naive), "PWR8 ~9.2: {naive}");
+        assert!((naive - kahan).abs() / naive < 0.06);
+        // Sect. 5.3: the compiler Kahan (SMT-8) almost saturates.
+        assert!(compiler > 0.8 * naive, "compiler {compiler} vs naive {naive}");
+    }
+}

@@ -1,0 +1,114 @@
+//! Fig. 9: on-chip scaling of the *compiler-generated* Kahan ddot (DP) on
+//! all four machines — the "what you get without hand-tuning" picture.
+//! Paper: saturates at ~4 GUP/s (HSW/BDW — BDW just about, HSW misses),
+//! 10.6 GUP/s (KNC, 4-SMT), 4.5 GUP/s (PWR8, SMT-8, 5 cores).
+
+use anyhow::Result;
+
+use crate::arch::{all_machines, Machine};
+use crate::ecm::{self, MemLevel};
+use crate::isa::Variant;
+use crate::sim::{self, MeasureOpts};
+use crate::util::plot::{render, Scale, Series};
+use crate::util::table::{fnum, Table};
+use crate::util::units::{Precision, GIB};
+
+use super::ctx::Ctx;
+use super::output::ExperimentOutput;
+
+fn protocol(m: &Machine) -> MeasureOpts {
+    match m.shorthand {
+        // The compiler code benefits from SMT latency hiding; the paper ran
+        // KNC with 4 threads/core and PWR8 with 8 for these scans.
+        "KNC" => MeasureOpts { smt: 4, untuned: true, seed: 1 },
+        "PWR8" => MeasureOpts { smt: 8, untuned: false, seed: 1 },
+        _ => MeasureOpts::default(),
+    }
+}
+
+pub fn fig9(ctx: &Ctx) -> Result<ExperimentOutput> {
+    let machines = all_machines();
+    let ws = 10 * GIB;
+    let max_cores = machines.iter().map(|m| m.cores).max().unwrap();
+
+    let mut table = Table::new(
+        std::iter::once("cores".to_string())
+            .chain(machines.iter().map(|m| m.shorthand.to_string()))
+            .collect::<Vec<_>>(),
+    );
+    let mut curves = Vec::new();
+    for m in &machines {
+        let k = ecm::derive::kernel_for(m, Variant::KahanScalar, Precision::Dp, MemLevel::Mem);
+        let mut o = protocol(m);
+        o.seed = ctx.seed;
+        curves.push(sim::corescan(m, &k, ws, &o));
+    }
+    for n in 1..=max_cores as usize {
+        let mut row = vec![n.to_string()];
+        for c in &curves {
+            row.push(c.get(n - 1).map(|p| fnum(p.1, 3)).unwrap_or_default());
+        }
+        table.row(row);
+    }
+
+    let plot_series: Vec<Series> = machines
+        .iter()
+        .zip(&curves)
+        .map(|(m, c)| {
+            Series::new(
+                m.shorthand,
+                c.iter().map(|&(n, p)| (n as f64, p)).collect(),
+            )
+        })
+        .collect();
+    let art = render(
+        &plot_series,
+        72,
+        20,
+        Scale::Linear,
+        Scale::Linear,
+        "Compiler-generated Kahan ddot scaling (paper Fig. 9) — GUP/s vs cores",
+    );
+
+    let mut out = ExperimentOutput::new(
+        "fig9",
+        "Compiler Kahan ddot (DP) on-chip scaling, all machines (paper Fig. 9)",
+    );
+    out.table("scaling", table);
+    out.plot("scaling", art);
+    out.note("Paper saturation targets: 4 GUP/s HSW/BDW (BDW just reaches it, HSW misses), \
+              10.6 GUP/s KNC, 4.5 GUP/s PWR8 (at ~5 cores).");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_saturation_story() {
+        let o = fig9(&Ctx::quick()).unwrap();
+        let t = &o.tables[0].1;
+        let at = |cores: usize, col: usize| -> f64 {
+            t.rows[cores - 1][col].parse().unwrap_or(f64::NAN)
+        };
+        // DP ceiling ~4.0-4.3 GUP/s on HSW/BDW (2x32 GB/s / 16 B).
+        let hsw_full = at(14, 1);
+        let bdw_full = at(22, 2);
+        assert!(hsw_full < 3.6, "HSW misses DP saturation: {hsw_full}");
+        assert!(bdw_full > 3.4, "BDW just about saturates: {bdw_full}");
+        // KNC ~10.9 GUP/s DP ceiling; the paper's compiler code saturates
+        // (10.6) with 4-SMT. Our in-order core model charges more
+        // round-robin issue stalls than the real chip, landing at 60-90% of
+        // the ceiling — still far above every other chip's compiler result,
+        // which is the figure's comparative point.
+        let knc_full = at(60, 3);
+        assert!((6.0..11.5).contains(&knc_full), "KNC {knc_full}");
+        assert!(knc_full > 1.5 * bdw_full, "KNC must dominate Intel: {knc_full}");
+        // PWR8 saturates ~4.6 by ~5 cores.
+        let p8_5 = at(5, 4);
+        let p8_full = at(10, 4);
+        assert!(p8_5 > 0.85 * p8_full, "PWR8 saturates early: {p8_5} vs {p8_full}");
+        assert!((3.8..4.8).contains(&p8_full), "PWR8 {p8_full}");
+    }
+}

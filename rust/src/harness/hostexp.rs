@@ -1,0 +1,117 @@
+//! `host`: the Sect. 6 "blueprint" claim exercised on a real machine — the
+//! AOT-compiled Pallas kernels swept over working-set sizes on the host CPU
+//! via PJRT, likwid-bench style. This is the repo's end-to-end driver: it
+//! proves L1 (Pallas kernel) -> L2 (JAX graph) -> AOT -> L3 (Rust/PJRT)
+//! compose on real data.
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{bench_artifact, Executor, Manifest};
+use crate::util::plot::{render, Scale, Series};
+use crate::util::table::{fnum, Table};
+use crate::util::units::fmt_bytes;
+
+use super::ctx::Ctx;
+use super::output::ExperimentOutput;
+
+pub fn host(ctx: &Ctx) -> Result<ExperimentOutput> {
+    let manifest = Manifest::load(&ctx.artifacts_dir)
+        .with_context(|| format!("loading {}/manifest.json (run `make artifacts`)", ctx.artifacts_dir))?;
+    let mut ex = Executor::new(manifest)?;
+    let (warm, reps) = if ctx.quick { (1, 3) } else { (3, 9) };
+
+    let mut out = ExperimentOutput::new(
+        "host",
+        "Host-CPU working-set sweep of the AOT kernels via PJRT (blueprint demo)",
+    );
+    let mut t = Table::new([
+        "artifact", "ws", "updates", "ns (min)", "ns (median)", "GUP/s", "GB/s",
+    ]);
+    let mut series: Vec<Series> = Vec::new();
+    let variants = [
+        ("naive_opt", "f32"),
+        ("naive", "f32"),
+        ("kahan", "f32"),
+        ("kahan_scalar", "f32"),
+        ("naive_opt", "f64"),
+        ("kahan", "f64"),
+    ];
+    for (variant, dtype) in variants {
+        let names: Vec<String> = ex
+            .manifest()
+            .by_variant(variant, dtype)
+            .iter()
+            .map(|a| a.name.clone())
+            .collect();
+        let mut pts = Vec::new();
+        for name in names {
+            // Quick mode: keep the sweep small (the sequential-scan variant
+            // is O(n) slow by design; large pallas grids take seconds).
+            let a = ex.manifest().get(&name)?.clone();
+            if ctx.quick {
+                let cap = if variant == "kahan_scalar" { 5_000 } else { 300_000 };
+                if a.n > cap {
+                    continue;
+                }
+            }
+            // Scale repetitions down for multi-second executions: the
+            // big-artifact numbers are bandwidth-dominated and stable.
+            let (warm, reps) = if a.n > 8_000_000 {
+                (1, 3.min(reps))
+            } else if a.n > 1_000_000 {
+                (1, 5.min(reps))
+            } else {
+                (warm, reps)
+            };
+            let r = bench_artifact(&mut ex, &name, warm, reps)?;
+            t.row([
+                r.name.clone(),
+                fmt_bytes(r.ws_bytes),
+                r.updates.to_string(),
+                fnum(r.ns.min, 0),
+                fnum(r.ns.median, 0),
+                fnum(r.gups_best, 3),
+                fnum(r.gbs_best, 2),
+            ]);
+            pts.push((r.ws_bytes as f64, r.gups_best));
+        }
+        if !pts.is_empty() {
+            series.push(Series::new(format!("{variant}/{dtype}"), pts));
+        }
+    }
+    out.table("hostbench", t);
+    out.plot(
+        "hostbench",
+        render(
+            &series,
+            72,
+            18,
+            Scale::Log10,
+            Scale::Log10,
+            "Host PJRT throughput (GUP/s) vs working set",
+        ),
+    );
+    out.note(format!("PJRT platform: {}", ex.platform()));
+    out.note("Interpretation: naive_opt is XLA's native dot (the compiler-optimal baseline); \
+              naive/kahan are the lane-parallel Pallas kernels (interpret-mode lowering adds \
+              grid-loop overhead, so compare kahan against naive, not against naive_opt); \
+              kahan_scalar is the loop-carried scan — the 'compiler variant' analog, slow by \
+              design exactly as in the paper.");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_runs_if_artifacts_present() {
+        if Manifest::load("artifacts").is_err() {
+            return;
+        }
+        let mut ctx = Ctx::quick();
+        ctx.artifacts_dir = "artifacts".into();
+        let o = host(&ctx).unwrap();
+        assert!(!o.tables[0].1.rows.is_empty());
+    }
+}

@@ -1,0 +1,19 @@
+//! Figure/table regeneration harness: one module per paper artifact
+//! (DESIGN.md §5's experiment index). Each experiment produces CSV tables,
+//! an ASCII plot preview and markdown notes into `out/<id>/`.
+
+pub mod accstudy;
+pub mod ctx;
+pub mod fig1;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod fig10;
+pub mod hostexp;
+pub mod output;
+pub mod tables;
+
+pub use ctx::Ctx;
+pub use output::ExperimentOutput;

@@ -1,0 +1,90 @@
+//! Experiment output container and the `out/<id>/` writer.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::table::Table;
+
+#[derive(Clone, Debug, Default)]
+pub struct ExperimentOutput {
+    pub id: String,
+    pub title: String,
+    /// Named data tables (written as `<name>.csv`).
+    pub tables: Vec<(String, Table)>,
+    /// Named ASCII plots (written as `<name>.txt`, echoed to terminal).
+    pub plots: Vec<(String, String)>,
+    /// Free-form findings, written into `summary.md`.
+    pub notes: Vec<String>,
+}
+
+impl ExperimentOutput {
+    pub fn new(id: &str, title: &str) -> Self {
+        Self {
+            id: id.to_string(),
+            title: title.to_string(),
+            ..Self::default()
+        }
+    }
+
+    pub fn table(&mut self, name: &str, t: Table) -> &mut Self {
+        self.tables.push((name.to_string(), t));
+        self
+    }
+
+    pub fn plot(&mut self, name: &str, p: String) -> &mut Self {
+        self.plots.push((name.to_string(), p));
+        self
+    }
+
+    pub fn note(&mut self, n: impl Into<String>) -> &mut Self {
+        self.notes.push(n.into());
+        self
+    }
+
+    /// Write everything under `<out_dir>/<id>/`.
+    pub fn write(&self, out_dir: &str) -> Result<()> {
+        let dir = Path::new(out_dir).join(&self.id);
+        fs::create_dir_all(&dir).with_context(|| format!("mkdir {}", dir.display()))?;
+        let mut summary = format!("# {} — {}\n\n", self.id, self.title);
+        for (name, t) in &self.tables {
+            fs::write(dir.join(format!("{name}.csv")), t.to_csv())?;
+            summary.push_str(&format!("## {name}\n\n{}\n", t.to_markdown()));
+        }
+        for (name, p) in &self.plots {
+            fs::write(dir.join(format!("{name}.txt")), p)?;
+            summary.push_str(&format!("## {name}\n\n```\n{p}```\n\n"));
+        }
+        if !self.notes.is_empty() {
+            summary.push_str("## Notes\n\n");
+            for n in &self.notes {
+                summary.push_str(&format!("- {n}\n"));
+            }
+        }
+        fs::write(dir.join("summary.md"), summary)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_files() {
+        let tmp = std::env::temp_dir().join(format!("kahan-ecm-test-{}", std::process::id()));
+        let mut t = Table::new(["x", "y"]);
+        t.row(["1", "2"]);
+        let mut o = ExperimentOutput::new("t1", "test experiment");
+        o.table("data", t).plot("p", "ascii\n".into()).note("a note");
+        o.write(tmp.to_str().unwrap()).unwrap();
+        let base = tmp.join("t1");
+        assert!(base.join("data.csv").exists());
+        assert!(base.join("p.txt").exists());
+        let md = std::fs::read_to_string(base.join("summary.md")).unwrap();
+        assert!(md.contains("test experiment"));
+        assert!(md.contains("a note"));
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

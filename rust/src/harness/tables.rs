@@ -1,0 +1,160 @@
+//! `table1` (testbed specification, Table I) and `ecm-inputs` (the Sect. 4
+//! model inputs and predictions for every kernel x machine, incl. Eqs. 1–3).
+
+use anyhow::Result;
+
+use crate::arch::{all_machines, Machine};
+use crate::ecm::{self, MemLevel};
+use crate::isa::Variant;
+use crate::util::table::{fnum, Table};
+use crate::util::units::{fmt_bytes, Precision};
+
+use super::ctx::Ctx;
+use super::output::ExperimentOutput;
+
+pub fn table1(_ctx: &Ctx) -> Result<ExperimentOutput> {
+    let machines = all_machines();
+    let mut t = Table::new(
+        ["Microarchitecture", "HSW", "BDW", "KNC", "PWR8"],
+    );
+    let cell = |f: &dyn Fn(&Machine) -> String| -> Vec<String> {
+        machines.iter().map(|m| f(m)).collect()
+    };
+    let mut row = |label: &str, f: &dyn Fn(&Machine) -> String| {
+        let mut cells = vec![label.to_string()];
+        cells.extend(cell(f));
+        t.row(cells);
+    };
+    row("Chip model", &|m| m.name.to_string());
+    row("Nominal CPU clock", &|m| format!("{} GHz", m.freq_ghz));
+    row("Cores/threads", &|m| format!("{}/{}", m.cores, m.cores * m.smt_ways));
+    row("Max. SIMD width", &|m| format!("{} B", m.simd_bytes));
+    row("# of SIMD registers", &|m| m.simd_regs.to_string());
+    row("Cache line", &|m| format!("{} B", m.cacheline));
+    row("LOAD/STORE per cy", &|m| {
+        format!(
+            "{}/{}",
+            m.throughput(&crate::isa::OpClass::Load),
+            m.throughput(&crate::isa::OpClass::Store)
+        )
+    });
+    row("ADD/MUL/FMA per cy", &|m| {
+        format!(
+            "{}/{}/{}",
+            m.throughput(&crate::isa::OpClass::Add),
+            m.throughput(&crate::isa::OpClass::Mul),
+            m.throughput(&crate::isa::OpClass::Fma)
+        )
+    });
+    row("Caches", &|m| {
+        m.caches
+            .iter()
+            .map(|c| format!("{} {}", fmt_bytes(c.capacity), c.name))
+            .collect::<Vec<_>>()
+            .join(", ")
+    });
+    row("L2-L1 bandwidth", &|m| format!("{} B/cy", m.caches[1].bw_bytes_per_cy));
+    row("Meas. load BW (domain)", &|m| {
+        format!("{} GB/s x{}", m.mem.sustained_bw_gbs, m.mem.domains)
+    });
+    row("Mem cycles per CL", &|m| fnum(m.mem_cycles_per_cl(), 2));
+    row("Latency penalty T_p", &|m| fnum(m.mem.latency_penalty, 1));
+    row("Overlap policy", &|m| format!("{:?}", m.overlap));
+
+    let mut out = ExperimentOutput::new("table1", "Testbed specification (paper Table I)");
+    out.note("All quantities are model inputs; derived columns (mem cycles/CL) cross-check Sect. 4 arithmetic.");
+    out.table("table1", t);
+    Ok(out)
+}
+
+/// Variants tabulated per machine (paper Sect. 4 kernels).
+pub fn variants_for(m: &Machine) -> Vec<(Variant, MemLevel, &'static str)> {
+    match m.shorthand {
+        "KNC" => vec![
+            (Variant::NaiveSimd, MemLevel::Mem, "naive"),
+            (Variant::KahanSimdFma, MemLevel::L1, "kahan (L1 kernel)"),
+            (Variant::KahanSimdFma, MemLevel::L2, "kahan (L2 kernel)"),
+            (Variant::KahanSimdFma, MemLevel::Mem, "kahan (mem kernel)"),
+            (Variant::KahanScalar, MemLevel::Mem, "kahan compiler"),
+        ],
+        "PWR8" => vec![
+            (Variant::NaiveSimd, MemLevel::Mem, "naive"),
+            (Variant::KahanSimdFma, MemLevel::Mem, "kahan VSX"),
+            (Variant::KahanScalar, MemLevel::Mem, "kahan compiler"),
+        ],
+        _ => vec![
+            (Variant::NaiveSimd, MemLevel::Mem, "naive"),
+            (Variant::KahanSimd, MemLevel::Mem, "kahan AVX"),
+            (Variant::KahanSimdFma, MemLevel::Mem, "kahan AVX/FMA (4-way)"),
+            (Variant::KahanSimdFma5, MemLevel::Mem, "kahan AVX/FMA (5-way)"),
+            (Variant::KahanScalar, MemLevel::Mem, "kahan compiler"),
+        ],
+    }
+}
+
+pub fn ecm_inputs(_ctx: &Ctx) -> Result<ExperimentOutput> {
+    let mut t = Table::new([
+        "machine", "kernel", "prec", "ECM input", "prediction", "GUP/s per level",
+        "sigma", "n_s (domain)", "n_s (chip)", "P_sat chip",
+    ]);
+    for m in all_machines() {
+        for prec in [Precision::Sp, Precision::Dp] {
+            for (v, lvl, label) in variants_for(&m) {
+                let inputs = ecm::derive::paper_row(&m, v, prec, lvl);
+                let pred = inputs.predict();
+                let sat = ecm::scaling::saturation(&m, &inputs);
+                let gups: Vec<String> = pred
+                    .performance_gups(m.freq_ghz)
+                    .into_iter()
+                    .map(|(_, g)| fnum(g, 2))
+                    .collect();
+                t.row([
+                    m.shorthand.to_string(),
+                    label.to_string(),
+                    prec.label().to_string(),
+                    inputs.shorthand(),
+                    pred.shorthand(),
+                    gups.join(" / "),
+                    fnum(sat.sigma, 2),
+                    sat.n_s.to_string(),
+                    sat.n_s_chip.to_string(),
+                    fnum(sat.p_sat_chip, 2),
+                ]);
+            }
+        }
+    }
+    let mut out = ExperimentOutput::new(
+        "ecm-inputs",
+        "ECM model inputs & predictions for every kernel x machine (Sect. 4, Eqs. 1-3)",
+    );
+    out.note("Pinned against the paper: HSW naive {1 ‖ 2 | 2 | 4 + 1 | 9.2 + 1} -> {2 | 4 | 9 | 19.2}; \
+              Kahan AVX {8 | 8 | 9 | 19.2}; KNC naive {2 | 6 | 26.8}; PWR8 naive {8 | 8 | 12 | 22}; \
+              the 4-way FMA Kahan T_OL is the paper's hand-schedule value 8 (RecMII alone gives 7).");
+    out.table("ecm_inputs", t);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_builds() {
+        let o = table1(&Ctx::quick()).unwrap();
+        assert_eq!(o.tables.len(), 1);
+        let t = &o.tables[0].1;
+        assert_eq!(t.header.len(), 5);
+        assert!(t.rows.len() >= 10);
+    }
+
+    #[test]
+    fn ecm_inputs_covers_all_machines() {
+        let o = ecm_inputs(&Ctx::quick()).unwrap();
+        let t = &o.tables[0].1;
+        // 4 machines x 2 precisions x (3..5 variants).
+        assert!(t.rows.len() >= 4 * 2 * 3);
+        let text = t.to_csv();
+        assert!(text.contains("{1 ‖ 2 | 2 | 4 + 1 | 9.2 + 1} cy"));
+        assert!(text.contains("{2 | 4 | 9 | 19.2} cy"));
+    }
+}

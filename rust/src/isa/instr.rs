@@ -1,0 +1,120 @@
+//! Instructions and operand registers of the abstract kernel IR.
+
+/// Virtual register id. The IR is in SSA-like form *except* for explicitly
+/// carried accumulators (sum/compensation registers), which are deliberately
+/// rewritten each iteration to express the loop-carried recurrence.
+pub type Reg = u32;
+
+/// Functional class of an instruction — what execution resource it needs.
+/// SUB shares the Add class (same pipeline on every covered chip); FMS
+/// (fused multiply-subtract) shares Fma.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpClass {
+    /// L1 -> register vector load.
+    Load,
+    /// Register -> L1 vector store (unused by dot, present for generality).
+    Store,
+    /// Vector add/subtract.
+    Add,
+    /// Vector multiply.
+    Mul,
+    /// Fused multiply-add/subtract.
+    Fma,
+    /// Register move (eliminated by renaming on OoO cores; occupies an issue
+    /// slot on in-order cores).
+    Mov,
+    /// Software prefetch targeting the given cache level (1 = into L1,
+    /// 2 = into L2, ...). Occupies an issue/retire slot but no data port.
+    Prefetch(u8),
+    /// Scalar ALU helper (loop counter, address increment) — modeled only
+    /// for in-order cores where it competes for issue slots.
+    Scalar,
+}
+
+impl OpClass {
+    /// Is this an arithmetic (floating-point) operation for ECM's T_OL?
+    pub fn is_arith(&self) -> bool {
+        matches!(self, OpClass::Add | OpClass::Mul | OpClass::Fma)
+    }
+
+    /// Does this op move data between L1 and registers (ECM's T_nOL class
+    /// on architectures with non-overlapping L1 transfers)?
+    pub fn is_l1_transfer(&self) -> bool {
+        matches!(self, OpClass::Load | OpClass::Store)
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            OpClass::Load => "LOAD".into(),
+            OpClass::Store => "STORE".into(),
+            OpClass::Add => "ADD".into(),
+            OpClass::Mul => "MUL".into(),
+            OpClass::Fma => "FMA".into(),
+            OpClass::Mov => "MOV".into(),
+            OpClass::Prefetch(l) => format!("PF.L{l}"),
+            OpClass::Scalar => "SCALAR".into(),
+        }
+    }
+}
+
+/// One instruction of a kernel loop body.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Instr {
+    pub op: OpClass,
+    /// Destination register (None for stores/prefetches).
+    pub dst: Option<Reg>,
+    /// Source registers. Loads have no register sources (address arithmetic
+    /// is implicit / strength-reduced, as in the paper's asm kernels).
+    pub srcs: Vec<Reg>,
+}
+
+impl Instr {
+    pub fn new(op: OpClass, dst: Option<Reg>, srcs: Vec<Reg>) -> Self {
+        Self { op, dst, srcs }
+    }
+
+    pub fn load(dst: Reg) -> Self {
+        Self::new(OpClass::Load, Some(dst), vec![])
+    }
+
+    pub fn add(dst: Reg, a: Reg, b: Reg) -> Self {
+        Self::new(OpClass::Add, Some(dst), vec![a, b])
+    }
+
+    pub fn mul(dst: Reg, a: Reg, b: Reg) -> Self {
+        Self::new(OpClass::Mul, Some(dst), vec![a, b])
+    }
+
+    /// dst = a * b (+/-) c — all fused forms share the class.
+    pub fn fma(dst: Reg, a: Reg, b: Reg, c: Reg) -> Self {
+        Self::new(OpClass::Fma, Some(dst), vec![a, b, c])
+    }
+
+    pub fn prefetch(level: u8) -> Self {
+        Self::new(OpClass::Prefetch(level), None, vec![])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_predicates() {
+        assert!(OpClass::Add.is_arith());
+        assert!(OpClass::Fma.is_arith());
+        assert!(!OpClass::Load.is_arith());
+        assert!(OpClass::Load.is_l1_transfer());
+        assert!(OpClass::Store.is_l1_transfer());
+        assert!(!OpClass::Prefetch(2).is_l1_transfer());
+    }
+
+    #[test]
+    fn constructors() {
+        let i = Instr::fma(3, 0, 1, 2);
+        assert_eq!(i.op, OpClass::Fma);
+        assert_eq!(i.dst, Some(3));
+        assert_eq!(i.srcs, vec![0, 1, 2]);
+        assert_eq!(Instr::prefetch(2).op, OpClass::Prefetch(2));
+    }
+}

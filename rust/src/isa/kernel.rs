@@ -1,0 +1,192 @@
+//! `KernelLoop`: one steady-state loop body plus the work/traffic metadata
+//! the ECM model and the simulator need.
+
+use super::instr::{Instr, OpClass, Reg};
+use crate::util::units::Precision;
+
+/// A kernel loop body in steady state.
+#[derive(Clone, Debug)]
+pub struct KernelLoop {
+    pub name: String,
+    /// Instructions of one loop body, in program order.
+    pub body: Vec<Instr>,
+    /// Scalar loop iterations ("updates") one body performs.
+    pub updates_per_body: u64,
+    /// Number of distinct load streams (2 for dot: a[] and b[]).
+    pub streams: u32,
+    /// Element precision.
+    pub prec: Precision,
+    /// Useful flops per scalar update (2 naive, 5 Kahan).
+    pub flops_per_update: u64,
+    /// True if the body is SIMD-vectorized (affects in-order issue modeling
+    /// and the "compiler variant" bookkeeping only).
+    pub simd: bool,
+}
+
+impl KernelLoop {
+    /// Bytes loaded from L1 per scalar update (all streams).
+    pub fn bytes_per_update(&self) -> u64 {
+        self.streams as u64 * self.prec.bytes()
+    }
+
+    /// Scalar updates per cache line of a machine with the given line size
+    /// (one "CL of work" touches one line of *each* stream).
+    pub fn updates_per_cl(&self, cacheline: u64) -> u64 {
+        cacheline / self.prec.bytes()
+    }
+
+    /// Cache lines (per stream) touched by one loop body.
+    pub fn cachelines_per_body(&self, cacheline: u64) -> f64 {
+        self.updates_per_body as f64 * self.prec.bytes() as f64 / cacheline as f64
+    }
+
+    /// Count instructions of one class in the body.
+    pub fn count(&self, pred: impl Fn(&OpClass) -> bool) -> usize {
+        self.body.iter().filter(|i| pred(&i.op)).count()
+    }
+
+    /// Registers that carry a loop-level recurrence: read at some position
+    /// before their (first) write in the same body. Reading such a register
+    /// at the start of iteration *i+1* depends on its last write in
+    /// iteration *i*.
+    pub fn carried_regs(&self) -> Vec<Reg> {
+        let mut carried = Vec::new();
+        let mut written: Vec<Reg> = Vec::new();
+        for ins in &self.body {
+            for &s in &ins.srcs {
+                if !written.contains(&s) && !carried.contains(&s) {
+                    carried.push(s);
+                }
+            }
+            if let Some(d) = ins.dst {
+                if !written.contains(&d) {
+                    written.push(d);
+                }
+            }
+        }
+        // Only registers that are also written in the body actually carry a
+        // recurrence; read-only registers (constants like the FMA-trick's
+        // vector of 1.0s) are invariant.
+        carried
+            .into_iter()
+            .filter(|r| self.body.iter().any(|i| i.dst == Some(*r)))
+            .collect()
+    }
+
+    /// Position of the last write to `reg` in the body, if any.
+    pub fn last_write(&self, reg: Reg) -> Option<usize> {
+        self.body.iter().rposition(|i| i.dst == Some(reg))
+    }
+
+    /// Basic well-formedness: every arithmetic source is either written in
+    /// the body, carried, or a declared constant (never-written register).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.body.is_empty() {
+            return Err(format!("kernel '{}' has an empty body", self.name));
+        }
+        if self.updates_per_body == 0 {
+            return Err(format!("kernel '{}' does no work", self.name));
+        }
+        for (pos, ins) in self.body.iter().enumerate() {
+            match ins.op {
+                OpClass::Load => {
+                    if ins.dst.is_none() {
+                        return Err(format!("{}[{}]: load without dst", self.name, pos));
+                    }
+                }
+                OpClass::Add | OpClass::Mul => {
+                    if ins.srcs.len() != 2 || ins.dst.is_none() {
+                        return Err(format!("{}[{}]: malformed 2-op arith", self.name, pos));
+                    }
+                }
+                OpClass::Fma => {
+                    if ins.srcs.len() != 3 || ins.dst.is_none() {
+                        return Err(format!("{}[{}]: malformed fma", self.name, pos));
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::instr::Instr;
+
+    /// Tiny kahan-like body: regs 0=a,1=b loaded; 2=c carried; 3=s carried.
+    fn toy() -> KernelLoop {
+        KernelLoop {
+            name: "toy".into(),
+            body: vec![
+                Instr::load(0),
+                Instr::load(1),
+                Instr::mul(4, 0, 1),     // p = a*b
+                Instr::add(5, 4, 2),     // y = p - c   (c carried)
+                Instr::add(3, 3, 5),     // s = s + y   (s carried)
+                Instr::add(6, 3, 3),     // tmp = t - s (structure only)
+                Instr::add(2, 6, 5),     // c = tmp - y
+            ],
+            updates_per_body: 8,
+            streams: 2,
+            prec: Precision::Sp,
+            flops_per_update: 5,
+            simd: true,
+        }
+    }
+
+    #[test]
+    fn carried_registers_found() {
+        let k = toy();
+        let carried = k.carried_regs();
+        assert!(carried.contains(&2), "c is carried: {carried:?}");
+        assert!(carried.contains(&3), "s is carried: {carried:?}");
+        assert!(!carried.contains(&0), "loads are not carried");
+        assert!(!carried.contains(&4), "intra-body temp is not carried");
+    }
+
+    #[test]
+    fn traffic_metadata() {
+        let k = toy();
+        assert_eq!(k.bytes_per_update(), 8); // 2 streams x 4 B
+        assert_eq!(k.updates_per_cl(64), 16);
+        assert_eq!(k.updates_per_cl(128), 32);
+        assert_eq!(k.cachelines_per_body(64), 0.5);
+    }
+
+    #[test]
+    fn counts() {
+        let k = toy();
+        assert_eq!(k.count(|o| o.is_arith()), 5);
+        assert_eq!(k.count(|o| *o == OpClass::Load), 2);
+    }
+
+    #[test]
+    fn last_write_position() {
+        let k = toy();
+        assert_eq!(k.last_write(2), Some(6));
+        assert_eq!(k.last_write(0), Some(0));
+        assert_eq!(k.last_write(99), None);
+    }
+
+    #[test]
+    fn validate_ok_and_errors() {
+        assert!(toy().validate().is_ok());
+        let mut bad = toy();
+        bad.body.clear();
+        assert!(bad.validate().is_err());
+        let mut bad2 = toy();
+        bad2.body[2] = Instr::new(OpClass::Mul, Some(4), vec![0]);
+        assert!(bad2.validate().is_err());
+    }
+
+    #[test]
+    fn constant_register_not_carried() {
+        // FMA-trick: register 7 holds 1.0 and is read but never written.
+        let mut k = toy();
+        k.body.push(Instr::fma(8, 3, 7, 5));
+        assert!(!k.carried_regs().contains(&7));
+    }
+}

@@ -1,0 +1,16 @@
+//! Abstract kernel IR: the paper's hand-written assembly kernels (Figs. 2–4)
+//! expressed as machine-independent instruction sequences with explicit
+//! dependencies, so both the ECM analyzer and the core simulator can reason
+//! about throughput *and* latency chains.
+//!
+//! The IR models one *loop body*; loop-carried dependencies arise from
+//! registers that are read before they are (re)written within the body
+//! (e.g. the Kahan compensation term `c` and partial sum `s`).
+
+pub mod instr;
+pub mod kernel;
+pub mod variants;
+
+pub use instr::{Instr, OpClass, Reg};
+pub use kernel::KernelLoop;
+pub use variants::{build, Variant};

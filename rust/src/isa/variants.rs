@@ -1,0 +1,335 @@
+//! The paper's kernel zoo (Sect. 4) as IR builders.
+//!
+//! | Variant          | paper's kernel                                        |
+//! |------------------|-------------------------------------------------------|
+//! | `NaiveSimd`      | Fig. 2a, unrolled + SIMD (compiler -O3 gets this)     |
+//! | `KahanScalar`    | Fig. 2b as a compiler must emit it (no reassociation) |
+//! | `KahanSimd`      | AVX/VSX Kahan without FMA: 1 MUL + 4 ADD per chunk    |
+//! | `KahanSimdFma`   | Fig. 3 left: FMS for `y`, 4-way unrolled              |
+//! | `KahanSimdFma5`  | Fig. 3 right: 5-way + FMA-as-ADD trick (T_OL = 6.4)   |
+//!
+//! KNC's per-level kernels (Fig. 4) are `KahanSimd` / `NaiveSimd` bodies
+//! decorated with software-prefetch instructions via `prefetches`.
+
+use super::instr::{Instr, OpClass, Reg};
+use super::kernel::KernelLoop;
+use crate::util::units::Precision;
+
+/// Kernel variant selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    NaiveSimd,
+    KahanScalar,
+    KahanSimd,
+    KahanSimdFma,
+    KahanSimdFma5,
+}
+
+impl Variant {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Variant::NaiveSimd => "naive",
+            Variant::KahanScalar => "kahan-scalar",
+            Variant::KahanSimd => "kahan-simd",
+            Variant::KahanSimdFma => "kahan-fma",
+            Variant::KahanSimdFma5 => "kahan-fma5",
+        }
+    }
+
+    pub fn is_kahan(&self) -> bool {
+        !matches!(self, Variant::NaiveSimd)
+    }
+
+    pub fn flops_per_update(&self) -> u64 {
+        match self {
+            Variant::NaiveSimd => 2,
+            // 1 MUL + 4 ADD/SUB — the paper's "one update = five flops".
+            _ => 5,
+        }
+    }
+}
+
+/// Instruction-ordering discipline of the emitted body.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sched {
+    /// Stage-major interleave (all chains' stage s before stage s+1): the
+    /// hand-scheduled order of Fig. 3; sufficient for out-of-order cores.
+    StageMajor,
+    /// Fig. 4's software-pipelined order for in-order cores: loads are
+    /// hoisted across the loop edge (they feed the *next* iteration's
+    /// arithmetic) and interleaved between arithmetic ops so each (U, V)
+    /// issue pair carries one arith + one load/prefetch.
+    SoftwarePipelined,
+}
+
+/// Build a kernel loop body (stage-major schedule).
+///
+/// * `simd_elems` — vector lanes per instruction (8 for AVX SP, 16 for IMCI
+///   SP, 4 for VSX SP, 1 for the scalar/compiler variant).
+/// * `unroll` — number of independent accumulator chains (SIMD chunks) per
+///   body; the paper's "n-way unrolling".
+/// * `prefetches` — software-prefetch decoration: (target level, count per
+///   body), for the KNC per-level kernels.
+pub fn build(
+    v: Variant,
+    simd_elems: u32,
+    unroll: u32,
+    prec: Precision,
+    prefetches: &[(u8, u32)],
+) -> KernelLoop {
+    build_sched(v, simd_elems, unroll, prec, prefetches, Sched::StageMajor)
+}
+
+/// [`build`] with an explicit ordering discipline.
+pub fn build_sched(
+    v: Variant,
+    simd_elems: u32,
+    unroll: u32,
+    prec: Precision,
+    prefetches: &[(u8, u32)],
+    sched: Sched,
+) -> KernelLoop {
+    assert!(simd_elems >= 1 && unroll >= 1);
+    let mut next: Reg = 0;
+    let mut fresh = || {
+        let r = next;
+        next += 1;
+        r
+    };
+
+    // Constant register of 1.0s for the FMA-as-ADD trick (never written).
+    let one = fresh();
+
+    // Build per-chain instruction sequences, then emit them STAGE-MAJOR
+    // (all loads of every chain, then stage 1 of every chain, ...). This is
+    // the software-pipelined order of the paper's hand-written assembly
+    // (Figs. 3 and 4): on out-of-order cores the order is irrelevant (the
+    // scheduler sees the whole window), but on the in-order KNC the
+    // stage-interleaved order is exactly what keeps the U-pipe busy.
+    let mut chains: Vec<Vec<Instr>> = Vec::with_capacity(unroll as usize);
+    match v {
+        Variant::NaiveSimd => {
+            for _ in 0..unroll {
+                // Independent partial-sum chain: acc = fma(a, b, acc).
+                let acc = fresh();
+                let a = fresh();
+                let b = fresh();
+                chains.push(vec![
+                    Instr::load(a),
+                    Instr::load(b),
+                    Instr::fma(acc, a, b, acc),
+                ]);
+            }
+        }
+        Variant::KahanScalar | Variant::KahanSimd | Variant::KahanSimdFma
+        | Variant::KahanSimdFma5 => {
+            for _ in 0..unroll {
+                // One (s, c) Kahan chain.
+                let s = fresh();
+                let c = fresh();
+                let a = fresh();
+                let b = fresh();
+                let mut ops = vec![Instr::load(a), Instr::load(b)];
+                let y = fresh();
+                match v {
+                    Variant::KahanScalar | Variant::KahanSimd => {
+                        // p = a*b ; y = p - c
+                        let p = fresh();
+                        ops.push(Instr::mul(p, a, b));
+                        ops.push(Instr::add(y, p, c));
+                    }
+                    _ => {
+                        // y = a*b - c (vfmsub231)
+                        ops.push(Instr::fma(y, a, b, c));
+                    }
+                }
+                // t = s + y (plain ADD, or FMA(s,1,y) in the 5-way trick)
+                let t = fresh();
+                match v {
+                    Variant::KahanSimdFma5 => ops.push(Instr::fma(t, s, one, y)),
+                    _ => ops.push(Instr::add(t, s, y)),
+                }
+                // tmp = t - s ; c = tmp - y ; s = t
+                let tmp = fresh();
+                ops.push(Instr::add(tmp, t, s));
+                ops.push(Instr::add(c, tmp, y));
+                ops.push(Instr::new(OpClass::Mov, Some(s), vec![t]));
+                chains.push(ops);
+            }
+        }
+    }
+
+    let stages = chains.iter().map(|c| c.len()).max().unwrap();
+    let mut body = Vec::new();
+    match sched {
+        Sched::StageMajor => {
+            for stage in 0..stages {
+                for chain in &chains {
+                    if let Some(ins) = chain.get(stage) {
+                        body.push(ins.clone());
+                    }
+                }
+            }
+            for &(level, count) in prefetches {
+                for _ in 0..count {
+                    body.push(Instr::prefetch(level));
+                }
+            }
+        }
+        Sched::SoftwarePipelined => {
+            // Split each chain into loads and non-loads; emit arithmetic
+            // stage-major with one load/prefetch spliced after each arith
+            // op (KNC's (U, V) pairing). Loads come *after* their consumers
+            // in program order, i.e. they produce for the next iteration —
+            // the dependency extractor classifies them as carried, exactly
+            // modeling Fig. 4's `vmovaps zmm0, [rsi+rax*8+64]  # next iter`.
+            let mut fills: Vec<Instr> = Vec::new();
+            let mut arith: Vec<Vec<Instr>> = vec![Vec::new(); chains.len()];
+            for (k, chain) in chains.iter().enumerate() {
+                for ins in chain {
+                    if ins.op == OpClass::Load {
+                        fills.push(ins.clone());
+                    } else {
+                        arith[k].push(ins.clone());
+                    }
+                }
+            }
+            for &(level, count) in prefetches {
+                for _ in 0..count {
+                    fills.push(Instr::prefetch(level));
+                }
+            }
+            let astages = arith.iter().map(|c| c.len()).max().unwrap();
+            let mut fill_iter = fills.into_iter();
+            for stage in 0..astages {
+                for chain in &arith {
+                    if let Some(ins) = chain.get(stage) {
+                        body.push(ins.clone());
+                        if let Some(f) = fill_iter.next() {
+                            body.push(f);
+                        }
+                    }
+                }
+            }
+            body.extend(fill_iter);
+        }
+    }
+
+    // Unambiguous name: precision, prefetch decoration and schedule
+    // discipline are part of the identity (the core-sim memo keys on it).
+    let mut name = format!(
+        "{}x{}u{}{}",
+        v.label(),
+        simd_elems,
+        unroll,
+        if prec == Precision::Dp { "-dp" } else { "" }
+    );
+    for &(level, count) in prefetches {
+        name.push_str(&format!("+pf{level}x{count}"));
+    }
+    if sched == Sched::SoftwarePipelined {
+        name.push_str("-swp");
+    }
+    KernelLoop {
+        name,
+        body,
+        updates_per_body: simd_elems as u64 * unroll as u64,
+        streams: 2,
+        prec,
+        flops_per_update: v.flops_per_update(),
+        simd: simd_elems > 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn naive_counts_match_paper_hsw() {
+        // HSW Sect. 4.1.1: per CL (16 SP iters = 2 AVX chunks): 4 loads,
+        // 2 FMAs. Build 2 chunks (1 CL) and check.
+        let k = build(Variant::NaiveSimd, 8, 2, Precision::Sp, &[]);
+        k.validate().unwrap();
+        assert_eq!(k.updates_per_body, 16);
+        assert_eq!(k.count(|o| *o == OpClass::Load), 4);
+        assert_eq!(k.count(|o| *o == OpClass::Fma), 2);
+        assert_eq!(k.cachelines_per_body(64), 1.0);
+    }
+
+    #[test]
+    fn kahan_avx_counts_match_paper() {
+        // Sect. 4.2.1: per unit of work (8 scalar iters = 1 AVX chunk):
+        // 1 MUL (of 2 per CL) and 4 ADD/SUB (of 8 per CL).
+        let k = build(Variant::KahanSimd, 8, 2, Precision::Sp, &[]);
+        k.validate().unwrap();
+        assert_eq!(k.count(|o| *o == OpClass::Mul), 2);
+        // per chunk: y, t, tmp, c -> 4 ADD-class ops; 2 chunks per CL.
+        let adds = k.count(|o| *o == OpClass::Add);
+        assert_eq!(adds, 8, "8 AVX additions/subtractions per CL");
+        assert_eq!(k.count(|o| *o == OpClass::Load), 4);
+    }
+
+    #[test]
+    fn kahan_fma_counts_match_paper() {
+        // FMA variant: 1 FMS + 3 ADD/SUB per chunk.
+        let k = build(Variant::KahanSimdFma, 8, 4, Precision::Sp, &[]);
+        k.validate().unwrap();
+        assert_eq!(k.count(|o| *o == OpClass::Fma), 4);
+        assert_eq!(k.count(|o| *o == OpClass::Add), 12);
+        assert_eq!(k.updates_per_body, 32); // 2 CLs at 4-way
+    }
+
+    #[test]
+    fn kahan_fma5_counts_match_paper() {
+        // 5-way trick: 2 FMA-class + 2 ADD-class per chunk.
+        let k = build(Variant::KahanSimdFma5, 8, 5, Precision::Sp, &[]);
+        k.validate().unwrap();
+        assert_eq!(k.count(|o| *o == OpClass::Fma), 10);
+        assert_eq!(k.count(|o| *o == OpClass::Add), 10);
+        assert_eq!(k.cachelines_per_body(64), 2.5);
+    }
+
+    #[test]
+    fn knc_kahan_counts_match_paper() {
+        // Sect. 4.2.2: per 16 SP iters (one 512-b chunk): 1 FMA + 3 ADD/SUB,
+        // 2 loads; L2 kernel adds 2 prefetches, mem kernel 4.
+        let k = build(Variant::KahanSimdFma, 16, 1, Precision::Sp, &[(1, 2)]);
+        assert_eq!(k.count(|o| *o == OpClass::Fma), 1);
+        assert_eq!(k.count(|o| *o == OpClass::Add), 3);
+        assert_eq!(k.count(|o| matches!(o, OpClass::Prefetch(_))), 2);
+    }
+
+    #[test]
+    fn carried_chains_are_s_and_c() {
+        let k = build(Variant::KahanSimdFma, 8, 4, Precision::Sp, &[]);
+        let carried = k.carried_regs();
+        // 4 chains x (s, c) = 8 carried registers.
+        assert_eq!(carried.len(), 8, "{carried:?}");
+    }
+
+    #[test]
+    fn naive_carried_chains_are_accs() {
+        let k = build(Variant::NaiveSimd, 8, 7, Precision::Sp, &[]);
+        assert_eq!(k.carried_regs().len(), 7);
+    }
+
+    #[test]
+    fn scalar_variant_is_not_simd() {
+        let k = build(Variant::KahanScalar, 1, 1, Precision::Dp, &[]);
+        assert!(!k.simd);
+        assert_eq!(k.updates_per_body, 1);
+        assert_eq!(k.flops_per_update, 5);
+    }
+
+    #[test]
+    fn pwr8_kahan_counts_match_paper() {
+        // Sect. 4.2.3: per 128-B CL (32 SP iters = 8 VSX chunks): 16 loads,
+        // 8 FMA + 24 ADD/SUB. Build 8 chunks (1 CL of work).
+        let k = build(Variant::KahanSimdFma, 4, 8, Precision::Sp, &[]);
+        assert_eq!(k.count(|o| *o == OpClass::Load), 16);
+        assert_eq!(k.count(|o| *o == OpClass::Fma), 8);
+        assert_eq!(k.count(|o| *o == OpClass::Add), 24);
+        assert_eq!(k.updates_per_body, 32);
+    }
+}

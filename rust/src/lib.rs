@@ -1,0 +1,42 @@
+//! # kahan-ecm
+//!
+//! Reproduction of *"Performance analysis of the Kahan-enhanced scalar
+//! product on current multi- and manycore processors"* (Hofmann, Fey,
+//! Riedmann, Eitzinger, Hager, Wellein — Concurrency Computat.: Pract.
+//! Exper. 2016, DOI 10.1002/cpe.3921).
+//!
+//! The library has three pillars (see DESIGN.md):
+//!
+//! * **The ECM performance model** ([`ecm`]) — the paper's analysis method:
+//!   derive `{T_OL ∥ T_nOL | T_L1L2 | T_L2L3 | T_L3Mem}` inputs from an
+//!   abstract kernel description ([`isa`]) and a machine model ([`arch`]),
+//!   compose them with per-architecture overlap rules, and predict
+//!   single-core performance per memory level plus multicore scaling.
+//! * **A virtual testbed** ([`sim`]) — a microarchitecture simulator standing
+//!   in for the paper's Haswell-EP, Broadwell-EP, Knights Corner and POWER8
+//!   machines (which we do not have): a scoreboard core model, a cache
+//!   hierarchy walker and a multicore memory-contention model that produce
+//!   the "measured" curves of Figs. 5–10.
+//! * **Real numerics + a real fifth machine** ([`runtime`], [`accuracy`]) —
+//!   the Kahan/naive kernels AOT-compiled from JAX/Pallas run on the host
+//!   CPU via PJRT, providing genuine accuracy data and a live demonstration
+//!   of the paper's "blueprint" claim.
+//!
+//! The [`harness`] module regenerates every table and figure of the paper;
+//! [`coordinator`] wires it all into the `kahan-ecm` CLI.
+
+pub mod accuracy;
+pub mod arch;
+pub mod bench_kit;
+pub mod coordinator;
+pub mod ecm;
+pub mod harness;
+pub mod isa;
+pub mod ptest;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use arch::Machine;
+pub use ecm::{EcmInputs, EcmPrediction};
+pub use isa::KernelLoop;

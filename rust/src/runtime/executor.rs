@@ -1,0 +1,224 @@
+//! PJRT executor: compile HLO-text artifacts once, execute many times.
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): jax >= 0.5 emits 64-bit instruction ids in
+//! serialized protos, which xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids and round-trips cleanly.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{Artifact, Manifest};
+
+/// Output of one artifact execution.
+#[derive(Clone, Debug)]
+pub struct RunOutput {
+    /// Flattened outputs, one vector per tuple element, converted to f64.
+    pub outputs: Vec<Vec<f64>>,
+}
+
+impl RunOutput {
+    /// First element of the first output — the scalar result of the dot
+    /// artifacts.
+    pub fn scalar(&self) -> f64 {
+        self.outputs[0][0]
+    }
+}
+
+/// Compiles and caches PJRT executables for manifest artifacts.
+pub struct Executor {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Executor {
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the executable for `name`.
+    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let art = self.manifest.get(name)?.clone();
+            let path = self.manifest.hlo_path(&art);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Build input literals for an artifact from f64 data (converted to the
+    /// artifact dtype). `data` must contain one slice per input parameter.
+    pub fn literals(&self, art: &Artifact, data: &[&[f64]]) -> Result<Vec<xla::Literal>> {
+        if data.len() != art.input_shapes.len() {
+            bail!(
+                "{} expects {} inputs, got {}",
+                art.name,
+                art.input_shapes.len(),
+                data.len()
+            );
+        }
+        let mut lits = Vec::with_capacity(data.len());
+        for (d, shape) in data.iter().zip(&art.input_shapes) {
+            let want: u64 = shape.iter().product();
+            if d.len() as u64 != want {
+                bail!("{}: input needs {} elems, got {}", art.name, want, d.len());
+            }
+            let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+            let lit = if art.dtype == "f64" {
+                xla::Literal::vec1(d).reshape(&dims)?
+            } else {
+                let f32s: Vec<f32> = d.iter().map(|&x| x as f32).collect();
+                xla::Literal::vec1(&f32s).reshape(&dims)?
+            };
+            lits.push(lit);
+        }
+        Ok(lits)
+    }
+
+    /// Execute an artifact on the given inputs.
+    pub fn run(&mut self, name: &str, data: &[&[f64]]) -> Result<RunOutput> {
+        let art = self.manifest.get(name)?.clone();
+        let lits = self.literals(&art, data)?;
+        let exe = self.load(name)?;
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let elems = result.to_tuple()?;
+        let mut outputs = Vec::with_capacity(elems.len());
+        for e in elems {
+            let v: Vec<f64> = if art.dtype == "f64" {
+                e.to_vec::<f64>()?
+            } else {
+                e.to_vec::<f32>()?.into_iter().map(|x| x as f64).collect()
+            };
+            outputs.push(v);
+        }
+        Ok(RunOutput { outputs })
+    }
+
+    /// Execute with pre-built literals (hot path for benchmarking; no
+    /// conversion or validation).
+    pub fn run_prepared(
+        &mut self,
+        name: &str,
+        lits: &[xla::Literal],
+    ) -> Result<xla::PjRtBuffer> {
+        let exe = self.load(name)?;
+        let mut r = exe.execute::<xla::Literal>(lits)?;
+        Ok(r.remove(0).remove(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! These tests require `make artifacts` to have run; they are skipped
+    //! (cleanly) when the artifact directory is absent so `cargo test`
+    //! works in a fresh checkout.
+    use super::*;
+    use crate::accuracy::exact::exact_dot_f32;
+    use crate::util::rng::Rng;
+
+    fn executor() -> Option<Executor> {
+        let m = Manifest::load("artifacts").ok()?;
+        Executor::new(m).ok()
+    }
+
+    fn randvec(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn kahan_artifact_accuracy() {
+        let Some(mut ex) = executor() else { return };
+        let n = 4096;
+        let x = randvec(n, 1);
+        let y = randvec(n, 2);
+        let out = ex.run("kahan_f32_n4096", &[&x, &y]).unwrap();
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+        let exact = exact_dot_f32(&xf, &yf);
+        let scale: f64 = xf.iter().zip(&yf).map(|(a, b)| (a * b).abs() as f64).sum();
+        assert!(
+            (out.scalar() - exact).abs() <= 8.0 * f32::EPSILON as f64 * scale,
+            "kahan={} exact={exact}",
+            out.scalar()
+        );
+    }
+
+    #[test]
+    fn pair_artifact_naive_vs_kahan() {
+        let Some(mut ex) = executor() else { return };
+        let n = 4096;
+        let x = randvec(n, 3);
+        let y = randvec(n, 4);
+        let out = ex.run("pair_f32_n4096", &[&x, &y]).unwrap();
+        assert_eq!(out.outputs.len(), 2);
+        let (naive, kahan) = (out.outputs[0][0], out.outputs[1][0]);
+        assert!(naive.is_finite() && kahan.is_finite());
+        let scale: f64 = x.iter().zip(&y).map(|(a, b)| (a * b).abs()).sum();
+        assert!((naive - kahan).abs() <= 64.0 * f32::EPSILON as f64 * scale);
+    }
+
+    #[test]
+    fn f64_artifact_runs() {
+        let Some(mut ex) = executor() else { return };
+        let n = 4096;
+        let x = randvec(n, 5);
+        let y = randvec(n, 6);
+        let out = ex.run("kahan_f64_n4096", &[&x, &y]).unwrap();
+        let direct: f64 = crate::accuracy::dots::kahan_dot(&x, &y);
+        // f64 lane-kahan vs scalar kahan: close to f64 roundoff of the sum.
+        let scale: f64 = x.iter().zip(&y).map(|(a, b)| (a * b).abs()).sum();
+        assert!((out.scalar() - direct).abs() <= 16.0 * f64::EPSILON * scale);
+    }
+
+    #[test]
+    fn executor_caches_compilations() {
+        let Some(mut ex) = executor() else { return };
+        let x = randvec(4096, 7);
+        let y = randvec(4096, 8);
+        ex.run("naive_f32_n4096", &[&x, &y]).unwrap();
+        assert!(ex.cache.contains_key("naive_f32_n4096"));
+        ex.run("naive_f32_n4096", &[&x, &y]).unwrap();
+        assert_eq!(ex.cache.len(), 1);
+    }
+
+    #[test]
+    fn wrong_input_count_rejected() {
+        let Some(mut ex) = executor() else { return };
+        let x = randvec(16, 9);
+        assert!(ex.run("kahan_f32_n4096", &[&x]).is_err());
+    }
+
+    #[test]
+    fn wrong_length_rejected() {
+        let Some(mut ex) = executor() else { return };
+        let x = randvec(16, 10);
+        let y = randvec(16, 11);
+        assert!(ex.run("kahan_f32_n4096", &[&x, &y]).is_err());
+    }
+}

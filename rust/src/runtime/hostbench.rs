@@ -1,0 +1,95 @@
+//! Mini-likwid: steady-state benchmarking of AOT artifacts on the host CPU.
+//!
+//! Methodology follows the paper's likwid-bench protocol: inputs prepared
+//! once (no allocation on the timed path), warmup until the executable is
+//! compiled and caches are primed, then `reps` timed runs; the *best* run
+//! is the headline number (cycle-deterministic kernel, interference only
+//! adds time).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::executor::Executor;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+/// Result of benchmarking one artifact.
+#[derive(Clone, Debug)]
+pub struct HostBenchResult {
+    pub name: String,
+    /// Working set in bytes (both streams).
+    pub ws_bytes: u64,
+    /// Updates per execution.
+    pub updates: u64,
+    /// Wall time per execution, ns.
+    pub ns: Summary,
+    /// Throughput in GUP/s from the best run.
+    pub gups_best: f64,
+    /// Effective streamed bandwidth GB/s from the best run.
+    pub gbs_best: f64,
+}
+
+/// Benchmark one artifact by name. `reps` timed executions after `warmup`.
+pub fn bench_artifact(
+    ex: &mut Executor,
+    name: &str,
+    warmup: usize,
+    reps: usize,
+) -> Result<HostBenchResult> {
+    let art = ex.manifest().get(name)?.clone();
+    let elems: u64 = art.elems();
+    let mut rng = Rng::new(0xBE7C4 ^ elems);
+    let data: Vec<Vec<f64>> = art
+        .input_shapes
+        .iter()
+        .map(|s| {
+            let n: u64 = s.iter().product();
+            (0..n).map(|_| rng.normal()).collect()
+        })
+        .collect();
+    let refs: Vec<&[f64]> = data.iter().map(|d| d.as_slice()).collect();
+    let lits = ex.literals(&art, &refs)?;
+
+    for _ in 0..warmup.max(1) {
+        let _ = ex.run_prepared(name, &lits)?;
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        let buf = ex.run_prepared(name, &lits)?;
+        // PJRT CPU executes synchronously-ish, but fence via a host copy of
+        // the (tiny) result to be strict about completion.
+        let _ = buf.to_literal_sync()?;
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    let ns = Summary::of(&samples);
+    let updates = art.updates();
+    let gups_best = updates as f64 / ns.min;
+    let gbs_best = art.ws_bytes() as f64 / ns.min;
+    Ok(HostBenchResult {
+        name: name.to_string(),
+        ws_bytes: art.ws_bytes(),
+        updates,
+        ns,
+        gups_best,
+        gbs_best,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    #[test]
+    fn bench_small_artifact_if_present() {
+        let Ok(m) = Manifest::load("artifacts") else { return };
+        let mut ex = Executor::new(m).unwrap();
+        let r = bench_artifact(&mut ex, "naive_opt_f32_n4096", 2, 3).unwrap();
+        assert!(r.ns.min > 0.0);
+        assert!(r.gups_best > 0.0);
+        assert_eq!(r.updates, 4096);
+        assert_eq!(r.ws_bytes, 2 * 4096 * 4);
+    }
+}

@@ -1,0 +1,221 @@
+//! `artifacts/manifest.json` parsing (written by `python/compile/aot.py`).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("cannot read {0}: {1}")]
+    Io(PathBuf, std::io::Error),
+    #[error("manifest parse error: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+    #[error("manifest format error: {0}")]
+    Format(String),
+    #[error("unknown artifact '{0}'")]
+    Unknown(String),
+}
+
+/// One AOT-compiled executable.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Artifact {
+    pub name: String,
+    pub file: String,
+    pub variant: String,
+    /// "f32" | "f64".
+    pub dtype: String,
+    /// Vector length per input row.
+    pub n: u64,
+    /// Batch rows (1 for plain dots).
+    pub batch: u64,
+    /// Number of outputs in the result tuple.
+    pub outputs: u32,
+    /// Input shapes (one per parameter).
+    pub input_shapes: Vec<Vec<u64>>,
+    pub sha256: String,
+}
+
+impl Artifact {
+    /// Total elements per input parameter.
+    pub fn elems(&self) -> u64 {
+        self.input_shapes
+            .first()
+            .map(|s| s.iter().product())
+            .unwrap_or(0)
+    }
+
+    /// Working-set bytes (all inputs).
+    pub fn ws_bytes(&self) -> u64 {
+        let b = if self.dtype == "f64" { 8 } else { 4 };
+        self.input_shapes
+            .iter()
+            .map(|s| s.iter().product::<u64>() * b)
+            .sum()
+    }
+
+    /// Updates (scalar loop iterations) per execution.
+    pub fn updates(&self) -> u64 {
+        self.n * self.batch
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<Artifact>,
+    pub jax_version: String,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self, ManifestError> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text =
+            std::fs::read_to_string(&path).map_err(|e| ManifestError::Io(path.clone(), e))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self, ManifestError> {
+        let j = Json::parse(text)?;
+        if j.get("interchange").and_then(Json::as_str) != Some("hlo-text") {
+            return Err(ManifestError::Format(
+                "expected interchange = hlo-text".into(),
+            ));
+        }
+        let jax_version = j
+            .get("jax")
+            .and_then(Json::as_str)
+            .unwrap_or("unknown")
+            .to_string();
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| ManifestError::Format("missing artifacts array".into()))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let get_str = |k: &str| -> Result<String, ManifestError> {
+                a.get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| ManifestError::Format(format!("artifact missing '{k}'")))
+            };
+            let input_shapes = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| ManifestError::Format("artifact missing inputs".into()))?
+                .iter()
+                .map(|inp| {
+                    inp.get("shape")
+                        .and_then(Json::as_arr)
+                        .map(|dims| dims.iter().filter_map(Json::as_u64).collect::<Vec<u64>>())
+                        .ok_or_else(|| ManifestError::Format("input missing shape".into()))
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            artifacts.push(Artifact {
+                name: get_str("name")?,
+                file: get_str("file")?,
+                variant: get_str("variant")?,
+                dtype: get_str("dtype")?,
+                n: a.get("n").and_then(Json::as_u64).unwrap_or(0),
+                batch: a.get("batch").and_then(Json::as_u64).unwrap_or(1),
+                outputs: a.get("outputs").and_then(Json::as_u64).unwrap_or(1) as u32,
+                input_shapes,
+                sha256: get_str("sha256").unwrap_or_default(),
+            });
+        }
+        Ok(Self {
+            dir,
+            artifacts,
+            jax_version,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Artifact, ManifestError> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| ManifestError::Unknown(name.to_string()))
+    }
+
+    /// Artifacts of one variant, sorted by n.
+    pub fn by_variant(&self, variant: &str, dtype: &str) -> Vec<&Artifact> {
+        let mut v: Vec<&Artifact> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.variant == variant && a.dtype == dtype)
+            .collect();
+        v.sort_by_key(|a| a.n);
+        v
+    }
+
+    pub fn hlo_path(&self, a: &Artifact) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1, "interchange": "hlo-text", "jax": "0.8.2",
+      "artifacts": [
+        {"name": "kahan_f32_n4096", "file": "kahan_f32_n4096.hlo.txt",
+         "variant": "kahan", "dtype": "f32", "n": 4096, "outputs": 1,
+         "sha256": "ab", "inputs": [{"shape": [4096], "dtype": "f32"},
+                      {"shape": [4096], "dtype": "f32"}]},
+        {"name": "kahan_batched_f32_b64_n16384", "file": "b.hlo.txt",
+         "variant": "kahan_batched", "dtype": "f32", "n": 16384, "batch": 64,
+         "outputs": 1, "sha256": "cd",
+         "inputs": [{"shape": [64, 16384], "dtype": "f32"},
+                    {"shape": [64, 16384], "dtype": "f32"}]}
+      ]}"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.get("kahan_f32_n4096").unwrap();
+        assert_eq!(a.n, 4096);
+        assert_eq!(a.batch, 1);
+        assert_eq!(a.elems(), 4096);
+        assert_eq!(a.ws_bytes(), 2 * 4096 * 4);
+        let b = m.get("kahan_batched_f32_b64_n16384").unwrap();
+        assert_eq!(b.updates(), 64 * 16384);
+        assert_eq!(b.ws_bytes(), 2 * 64 * 16384 * 4);
+    }
+
+    #[test]
+    fn by_variant_sorted() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let v = m.by_variant("kahan", "f32");
+        assert_eq!(v.len(), 1);
+        assert!(m.by_variant("kahan", "f64").is_empty());
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert!(matches!(m.get("nope"), Err(ManifestError::Unknown(_))));
+    }
+
+    #[test]
+    fn wrong_interchange_rejected() {
+        let bad = SAMPLE.replace("hlo-text", "proto");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // Integration sanity when `make artifacts` has run.
+        if let Ok(m) = Manifest::load("artifacts") {
+            assert!(m.artifacts.len() >= 20);
+            assert!(!m.by_variant("kahan", "f32").is_empty());
+            assert!(!m.by_variant("naive_opt", "f64").is_empty());
+            for a in &m.artifacts {
+                assert!(m.hlo_path(a).exists(), "{} missing", a.file);
+            }
+        }
+    }
+}

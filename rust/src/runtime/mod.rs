@@ -1,0 +1,17 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them on the host CPU — the paper's
+//! "blueprint on a fifth, real machine" path (DESIGN.md §2).
+//!
+//! Python never runs here: the artifacts are self-contained HLO text, the
+//! manifest is plain JSON, and the `xla` crate drives the PJRT C API.
+
+pub mod executor;
+pub mod hostbench;
+pub mod manifest;
+
+pub use executor::{Executor, RunOutput};
+pub use hostbench::{bench_artifact, HostBenchResult};
+pub use manifest::{Artifact, Manifest};
+
+/// Default artifact directory (relative to the repo root / cwd).
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

@@ -1,0 +1,539 @@
+//! Scoreboard core simulator: cycle-by-cycle issue of the kernel loop onto
+//! the machine's execution ports, respecting dependencies, latencies, issue
+//! width and ordering discipline (OoO vs in-order paired issue), with
+//! optional SMT threads sharing the ports.
+//!
+//! This is the "measurement" side of the in-core story: given the same
+//! hand-scheduled kernels, it reproduces effects the throughput-only view
+//! misses — exactly the effects Sect. 4.2.1/Fig. 3 of the paper derives by
+//! hand (FMA latency stretching the Kahan recurrence to 16 cy per body, the
+//! 5-way FMA-trick variant reaching 6.4 cy/CL, etc.).
+
+use crate::arch::Machine;
+use crate::isa::{KernelLoop, OpClass};
+
+/// Result of a steady-state core simulation.
+#[derive(Clone, Debug)]
+pub struct CoreResult {
+    /// Steady-state cycles per loop body, per thread.
+    pub cycles_per_body: f64,
+    /// Steady-state cycles per scalar update, aggregated over SMT threads.
+    pub cycles_per_update: f64,
+    /// Cycles per cache line of work (updates_per_cl updates), aggregated.
+    pub cycles_per_cl: f64,
+    /// Utilization of each port in steady state (0..1).
+    pub port_util: Vec<f64>,
+    /// Number of simulated iterations used for the measurement window.
+    pub window_iters: usize,
+}
+
+/// One dynamic (per-iteration) instruction instance.
+#[derive(Clone, Copy, Debug)]
+struct DynOp {
+    /// Index into the kernel body.
+    body_ix: u32,
+    /// Iteration number.
+    iter: u32,
+    /// Issue cycle (u64::MAX = not yet issued).
+    issue: u64,
+    /// Cached earliest-ready cycle (UNKNOWN until all producers issued).
+    ready: u64,
+}
+
+const UNISSUED: u64 = u64::MAX;
+const UNKNOWN: u64 = u64::MAX - 1;
+
+/// Per-thread stream state.
+struct Stream<'k> {
+    kernel: &'k KernelLoop,
+    ops: Vec<DynOp>,
+    /// Next un-issued op index (all before it are issued).
+    head: usize,
+    /// For each body instruction: source dependency positions, encoded as
+    /// (body_ix of producer, carried?) — carried means "previous iteration".
+    deps: Vec<Vec<(u32, bool)>>,
+    /// Issue cycle of each (iter, body_ix) producer we still need: we keep
+    /// the full issue history (iters are bounded in this sim).
+    issue_log: Vec<u64>,
+    /// Latency of each body instruction.
+    lat: Vec<u64>,
+    /// Port candidates per body instruction (empty = no port needed).
+    port_cands: Vec<Vec<usize>>,
+    /// Consumes an issue slot? (Movs are renamed away on OoO cores.)
+    takes_slot: Vec<bool>,
+}
+
+impl<'k> Stream<'k> {
+    fn new(kernel: &'k KernelLoop, m: &Machine, iters: u32) -> Self {
+        let body = &kernel.body;
+        // Dependency extraction: for each instruction's source register,
+        // find the producer within this iteration (earlier write) or mark
+        // carried (write in previous iteration).
+        let mut deps: Vec<Vec<(u32, bool)>> = Vec::with_capacity(body.len());
+        for (ix, ins) in body.iter().enumerate() {
+            let mut d = Vec::new();
+            for &src in &ins.srcs {
+                // Last write strictly before ix.
+                let prior = body[..ix].iter().rposition(|p| p.dst == Some(src));
+                match prior {
+                    Some(p) => d.push((p as u32, false)),
+                    None => {
+                        // Carried if written later in the body; otherwise a
+                        // loop-invariant constant (no dependency).
+                        if let Some(p) = body.iter().rposition(|p| p.dst == Some(src)) {
+                            d.push((p as u32, true));
+                        }
+                    }
+                }
+            }
+            deps.push(d);
+        }
+
+        let lat: Vec<u64> = body.iter().map(|i| m.lat.of(&i.op) as u64).collect();
+        let port_cands: Vec<Vec<usize>> = body
+            .iter()
+            .map(|i| match i.op {
+                // Renamed away on OoO; an issue slot (either pipe) in-order.
+                OpClass::Mov => {
+                    if m.in_order {
+                        m.ports_for(&OpClass::Mov)
+                    } else {
+                        vec![]
+                    }
+                }
+                ref op => m.ports_for(op),
+            })
+            .collect();
+        let takes_slot: Vec<bool> = body
+            .iter()
+            .map(|i| !(matches!(i.op, OpClass::Mov) && !m.in_order))
+            .collect();
+
+        let total = body.len() * iters as usize;
+        let mut ops = Vec::with_capacity(total);
+        for iter in 0..iters {
+            for body_ix in 0..body.len() {
+                ops.push(DynOp {
+                    body_ix: body_ix as u32,
+                    iter,
+                    issue: UNISSUED,
+                    ready: UNKNOWN,
+                });
+            }
+        }
+        Self {
+            kernel,
+            issue_log: vec![UNISSUED; total],
+            ops,
+            head: 0,
+            deps,
+            lat,
+            port_cands,
+            takes_slot,
+        }
+    }
+
+
+    fn op_index(&self, iter: u32, body_ix: u32) -> usize {
+        iter as usize * self.kernel.body.len() + body_ix as usize
+    }
+
+    /// Earliest cycle at which op `i` has all operands available; cached in
+    /// the op once all producers have issued (the scan hot path touches
+    /// every waiting op every cycle, so avoiding the dependency walk pays).
+    fn ready_cycle(&mut self, i: usize) -> u64 {
+        let cached = self.ops[i].ready;
+        if cached != UNKNOWN {
+            return cached;
+        }
+        let op = self.ops[i];
+        let mut ready = 0u64;
+        for &(producer, carried) in &self.deps[op.body_ix as usize] {
+            let (p_iter, valid) = if carried {
+                match op.iter.checked_sub(1) {
+                    Some(pi) => (pi, true),
+                    None => (0, false), // first iteration: initialized regs
+                }
+            } else {
+                (op.iter, true)
+            };
+            if !valid {
+                continue;
+            }
+            let p = self.op_index(p_iter, producer);
+            let p_issue = self.issue_log[p];
+            if p_issue == UNISSUED {
+                return UNKNOWN; // producer not scheduled yet
+            }
+            ready = ready.max(p_issue + self.lat[producer as usize]);
+        }
+        self.ops[i].ready = ready;
+        ready
+    }
+
+    fn done(&self) -> bool {
+        self.head >= self.ops.len()
+    }
+}
+
+/// Memoized [`simulate_core`]: sweeps and figure generators hit the same
+/// (machine, kernel, smt) configurations hundreds of times; the steady
+/// state is deterministic, so cache it process-wide.
+pub fn simulate_core_cached(m: &Machine, kernel: &KernelLoop, smt: u32) -> CoreResult {
+    use std::collections::HashMap;
+    use std::sync::Mutex;
+    static MEMO: once_cell::sync::Lazy<Mutex<HashMap<String, CoreResult>>> =
+        once_cell::sync::Lazy::new(|| Mutex::new(HashMap::new()));
+    // Key includes a machine fingerprint: custom machines may share a
+    // shorthand, so fold in the parameters that affect scheduling.
+    let key = format!(
+        "{}|{}|{}|{}|{}|{}|{}|{}|{}",
+        m.shorthand,
+        m.freq_ghz,
+        m.ports.len(),
+        m.issue_width,
+        m.in_order,
+        m.lat.add,
+        m.lat.fma,
+        kernel.name,
+        smt
+    );
+    if let Some(r) = MEMO.lock().unwrap().get(&key) {
+        return r.clone();
+    }
+    let r = simulate_core(m, kernel, smt);
+    MEMO.lock().unwrap().insert(key, r.clone());
+    r
+}
+
+/// Simulate `kernel` on `m` with `smt` threads until steady state.
+/// Returns per-body and per-update steady-state cycle counts.
+pub fn simulate_core(m: &Machine, kernel: &KernelLoop, smt: u32) -> CoreResult {
+    let smt = smt.max(1);
+    // Enough iterations to wash out warmup (longest transients observed:
+    // ~25 iterations for the PWR8 SMT-8 chains; 50 is a 2x margin).
+    let iters: u32 = 150;
+    let warm: u32 = 50;
+
+    let mut streams: Vec<Stream> = (0..smt).map(|_| Stream::new(kernel, m, iters)).collect();
+
+    // Static port pressure (expected ops per body per port, splitting each
+    // op evenly over its candidates): used to steer ops away from ports
+    // that other classes need (e.g. HSW ADDs own P1, so FMAs prefer P0;
+    // KNC loads prefer the V-pipe and leave the U-pipe to arithmetic).
+    let mut pressure = vec![0.0f64; m.ports.len()];
+    for cands in &streams[0].port_cands {
+        if !cands.is_empty() {
+            for &p in cands {
+                pressure[p] += 1.0 / cands.len() as f64;
+            }
+        }
+    }
+
+    // Port busy bitmap per cycle: ports are fully pipelined, 1 op/cy each.
+    // Indexed [cycle % HORIZON][port]; cleared as the cycle pointer moves.
+    let nports = m.ports.len();
+    let mut cycle: u64 = 0;
+    let mut port_busy_counts = vec![0u64; nports];
+
+    // The scheduling loop. For each cycle: each thread (rotating priority)
+    // scans its window in program order and issues ready ops onto free
+    // ports, bounded by the machine's issue width (shared across threads,
+    // as SMT shares the front end).
+    let window_ooo = 192usize;
+    let mut port_free = vec![true; nports];
+    let max_cycles = 4_000_000u64;
+
+    while streams.iter().any(|s| !s.done()) && cycle < max_cycles {
+        for p in port_free.iter_mut() {
+            *p = true;
+        }
+        let mut slots = m.issue_width;
+        let t0 = (cycle % smt as u64) as usize;
+        for toff in 0..smt as usize {
+            let s = &mut streams[(t0 + toff) % smt as usize];
+            if s.done() || slots == 0 {
+                continue;
+            }
+            let window = if m.in_order {
+                // Strictly in-order: scan from head, stop at first stall.
+                s.ops.len().min(s.head + m.issue_width as usize)
+            } else {
+                s.ops.len().min(s.head + window_ooo)
+            };
+
+            // Candidate pick order: strict program order (= oldest-ready
+            // first, which is what both in-order issue and real OoO pick
+            // logic do). NOTE: height/criticality priority was tried and
+            // *hurts* resource-bound recurrences — in a steady-state loop
+            // every op on the carried cycle is equally critical, and
+            // preferring chain heads starves chain tails (see EXPERIMENTS.md
+            // §Sim-fidelity).
+            for i in s.head..window {
+                if slots == 0 {
+                    break;
+                }
+                if s.ops[i].issue != UNISSUED {
+                    continue;
+                }
+                let ready = s.ready_cycle(i);
+                let can_issue = ready != UNKNOWN && ready <= cycle;
+                if can_issue {
+                    // Free candidate port with the least static pressure.
+                    let cands = &s.port_cands[s.ops[i].body_ix as usize];
+                    let chosen = if cands.is_empty() {
+                        Some(None) // no port needed (renamed mov)
+                    } else {
+                        cands
+                            .iter()
+                            .copied()
+                            .filter(|&p| port_free[p])
+                            .min_by(|&a, &b| pressure[a].partial_cmp(&pressure[b]).unwrap())
+                            .map(Some)
+                    };
+                    if let Some(port) = chosen {
+                        if let Some(p) = port {
+                            port_free[p] = false;
+                            port_busy_counts[p] += 1;
+                        }
+                        s.ops[i].issue = cycle;
+                        s.issue_log[i] = cycle;
+                        if s.takes_slot[s.ops[i].body_ix as usize] {
+                            slots -= 1;
+                        }
+                        if i == s.head {
+                            while s.head < s.ops.len() && s.ops[s.head].issue != UNISSUED {
+                                s.head += 1;
+                            }
+                        }
+                        continue;
+                    }
+                }
+                // In-order: cannot skip a stalled op.
+                if m.in_order {
+                    break;
+                }
+            }
+        }
+        cycle += 1;
+    }
+
+    assert!(
+        cycle < max_cycles,
+        "core sim did not converge for kernel {}",
+        kernel.name
+    );
+
+    // Steady-state II per thread: regression over first-op issue cycles of
+    // the measurement window.
+    let mut total_ii = 0.0;
+    for s in &streams {
+        let t_warm = s.issue_log[s.op_index(warm, 0)];
+        let t_end = s.issue_log[s.op_index(iters - 1, 0)];
+        total_ii += (t_end - t_warm) as f64 / (iters - 1 - warm) as f64;
+    }
+    // Per-thread steady-state initiation interval; all smt threads complete
+    // one body each per interval, so aggregate cost per update divides by
+    // (updates_per_body * smt).
+    let per_thread_ii = total_ii / smt as f64;
+    let cycles_per_body = per_thread_ii;
+    let cycles_per_update = per_thread_ii / (kernel.updates_per_body as f64 * smt as f64);
+    let upcl = kernel.updates_per_cl(m.cacheline) as f64;
+    let denom_cycles = cycle as f64;
+    let port_util: Vec<f64> = port_busy_counts
+        .iter()
+        .map(|&c| c as f64 / denom_cycles)
+        .collect();
+
+    CoreResult {
+        cycles_per_body,
+        cycles_per_update,
+        cycles_per_cl: cycles_per_update * upcl,
+        port_util,
+        window_iters: (iters - warm) as usize,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::*;
+    use crate::isa::variants::{build, build_sched, Sched, Variant};
+    use crate::util::units::Precision;
+
+    fn hsw_kernel(v: Variant, unroll: u32) -> KernelLoop {
+        build(v, 8, unroll, Precision::Sp, &[])
+    }
+
+    #[test]
+    fn naive_hsw_hits_load_or_fma_limit() {
+        // Sufficiently unrolled naive sdot: 2 FMA per CL on 2 ports -> the
+        // in-core limit is 1 cy/CL for arithmetic; with loads on 2 ports the
+        // overall core limit is T_nOL = 2 cy/CL (Sect. 4.1.1). The full-body
+        // scoreboard should land at ~2 cy/CL (loads bound).
+        let m = haswell();
+        let k = hsw_kernel(Variant::NaiveSimd, 10);
+        let r = simulate_core(&m, &k, 1);
+        assert!(
+            (r.cycles_per_cl - 2.0).abs() < 0.25,
+            "naive HSW cy/CL = {}",
+            r.cycles_per_cl
+        );
+    }
+
+    #[test]
+    fn kahan_avx_hsw_is_add_bound_at_8() {
+        // Sect. 4.2.1: AVX Kahan without FMA -> T_OL = 8 cy/CL (ADD port).
+        let m = haswell();
+        let k = hsw_kernel(Variant::KahanSimd, 4);
+        let r = simulate_core(&m, &k, 1);
+        assert!(
+            (r.cycles_per_cl - 8.0).abs() < 0.8,
+            "kahan-avx HSW cy/CL = {}",
+            r.cycles_per_cl
+        );
+    }
+
+    #[test]
+    fn kahan_fma_hsw_latency_bound_near_8() {
+        // Fig. 3 left: the paper's hand schedule of the 4-way unrolled FMA
+        // Kahan runs at 16 cy / 2 CL (8 cy/CL); the pure recurrence bound is
+        // 5+3+3+3 = 14 cy (7 cy/CL), which an ideal OoO scheduler attains.
+        // Our scoreboard finds the 14-cy schedule; we accept [7, 8] and pin
+        // the paper's published 8 via the documented override in ecm::derive.
+        let m = haswell();
+        let k = hsw_kernel(Variant::KahanSimdFma, 4);
+        let r = simulate_core(&m, &k, 1);
+        assert!(
+            (7.0..=8.5).contains(&r.cycles_per_cl),
+            "kahan-fma HSW cy/CL = {} (paper: 8, RecMII bound: 7)",
+            r.cycles_per_cl
+        );
+    }
+
+    #[test]
+    fn kahan_fma5_hsw_near_6_4() {
+        // Fig. 3 right: the 5-way FMA-as-ADD trick. Ideal modulo schedule:
+        // 16 cy / 2.5 CL = 6.4 (the ECM T_OL). The greedy oldest-first
+        // scheduler (= the hardware's pick logic from a cold start) lands at
+        // 18 cy -> 7.2 cy/CL, which matches the paper's *measured* L1 value
+        // (Fig. 10a: HSW ~0.45 cy/update = 7.2 cy/CL vs 0.4 predicted).
+        let m = haswell();
+        let k = hsw_kernel(Variant::KahanSimdFma5, 5);
+        let r = simulate_core(&m, &k, 1);
+        assert!(
+            (6.4..=7.5).contains(&r.cycles_per_cl),
+            "kahan-fma5 HSW cy/CL = {} (model 6.4, paper measured ~7.2)",
+            r.cycles_per_cl
+        );
+    }
+
+    #[test]
+    fn kahan_scalar_is_latency_dominated() {
+        // Compiler variant: one 4-op recurrence (MUL off the chain) at
+        // 3 cy ADD latency -> ~12 cy per scalar update on HSW.
+        let m = haswell();
+        let k = build(Variant::KahanScalar, 1, 1, Precision::Sp, &[]);
+        let r = simulate_core(&m, &k, 1);
+        assert!(
+            (r.cycles_per_update - 12.0).abs() < 1.5,
+            "scalar kahan cy/update = {} (expect ~12)",
+            r.cycles_per_update
+        );
+    }
+
+    #[test]
+    fn pwr8_kahan_is_vsx_bound_at_16() {
+        // Sect. 4.2.3: 32 FMA/ADD on 2 VSX units -> 16 cy per 128-B CL.
+        let m = power8();
+        let k = build(Variant::KahanSimdFma, 4, 16, Precision::Sp, &[]);
+        let r = simulate_core(&m, &k, 2);
+        assert!(
+            (r.cycles_per_cl - 16.0).abs() < 2.0,
+            "pwr8 kahan cy/CL = {} (paper: 16)",
+            r.cycles_per_cl
+        );
+    }
+
+    #[test]
+    fn pwr8_naive_is_load_bound_at_8() {
+        let m = power8();
+        let k = build(Variant::NaiveSimd, 4, 16, Precision::Sp, &[]);
+        let r = simulate_core(&m, &k, 2);
+        assert!(
+            (r.cycles_per_cl - 8.0).abs() < 1.0,
+            "pwr8 naive cy/CL = {} (paper: 8)",
+            r.cycles_per_cl
+        );
+    }
+
+    #[test]
+    fn knc_kahan_u_pipe_bound_at_4() {
+        // Sect. 4.2.2: 1 FMA + 3 ADD per 16-SP chunk, U-pipe only -> 4 cy/CL
+        // (with 2-SMT hiding the 4-cy vector latency, as the paper runs it).
+        let m = knights_corner();
+        let k = build_sched(
+            Variant::KahanSimdFma,
+            16,
+            4,
+            Precision::Sp,
+            &[],
+            Sched::SoftwarePipelined,
+        );
+        let r = simulate_core(&m, &k, 2);
+        assert!(
+            (r.cycles_per_cl - 4.0).abs() < 0.6,
+            "knc kahan cy/CL = {} (paper: 4)",
+            r.cycles_per_cl
+        );
+    }
+
+    #[test]
+    fn knc_naive_pairs_loads_with_fma() {
+        // Naive on KNC: 2 loads + 1 FMA per CL; loads pair onto U/V pipes ->
+        // ~2 cy/CL core limit (T_nOL = 2 in the paper's input).
+        let m = knights_corner();
+        let k = build_sched(
+            Variant::NaiveSimd,
+            16,
+            4,
+            Precision::Sp,
+            &[],
+            Sched::SoftwarePipelined,
+        );
+        let r = simulate_core(&m, &k, 2);
+        assert!(
+            (r.cycles_per_cl - 2.0).abs() < 0.4,
+            "knc naive cy/CL = {}",
+            r.cycles_per_cl
+        );
+    }
+
+    #[test]
+    fn smt_hides_latency_on_pwr8() {
+        // Single-thread PWR8 Kahan with low unroll is latency-bound; SMT-4
+        // must recover throughput (Fig. 7a's story in core terms).
+        let m = power8();
+        let k = build(Variant::KahanSimdFma, 4, 4, Precision::Sp, &[]);
+        let one = simulate_core(&m, &k, 1);
+        let four = simulate_core(&m, &k, 4);
+        assert!(
+            four.cycles_per_update < one.cycles_per_update * 0.5,
+            "SMT-4 {} vs SMT-1 {}",
+            four.cycles_per_update,
+            one.cycles_per_update
+        );
+    }
+
+    #[test]
+    fn port_utilization_sane() {
+        let m = haswell();
+        let k = hsw_kernel(Variant::KahanSimd, 4);
+        let r = simulate_core(&m, &k, 1);
+        for (i, u) in r.port_util.iter().enumerate() {
+            assert!((0.0..=1.0).contains(u), "port {i} util {u}");
+        }
+        // ADD port (P1) should be the hot one.
+        assert!(r.port_util[1] > 0.8, "P1 util {}", r.port_util[1]);
+    }
+}

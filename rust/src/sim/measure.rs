@@ -1,0 +1,221 @@
+//! The "likwid-bench" front door of the virtual testbed: single-core
+//! working-set sweeps (Figs. 5–7) and in-memory core scans (Figs. 8–9),
+//! with deterministic measurement noise.
+
+use crate::arch::Machine;
+use crate::isa::{KernelLoop, OpClass};
+use crate::util::rng::hash_noise;
+use crate::util::units::cycles_per_cl_to_gups;
+
+pub use super::cache::MeasureOpts;
+use super::cache::{compose, data_cycles};
+use super::core::simulate_core_cached;
+
+/// One simulated measurement.
+#[derive(Clone, Debug)]
+pub struct MeasuredPoint {
+    /// Working-set size in bytes (both streams together).
+    pub ws_bytes: u64,
+    /// Measured cycles per cache line of work.
+    pub cy_per_cl: f64,
+    /// Measured performance, GUP/s (single core unless noted).
+    pub gups: f64,
+}
+
+/// Loop startup/teardown overhead per benchmark pass, amortized over the
+/// cache lines each thread processes (the Fig. 7a short-loop breakdown).
+fn loop_overhead_cy_per_cl(m: &Machine, ws_bytes: u64, smt: u32) -> f64 {
+    const OVERHEAD_CY: f64 = 30.0;
+    let cls = ((ws_bytes / 2).max(1) / m.cacheline).max(1); // per-stream lines
+    let per_thread = (cls / smt.max(1) as u64).max(1);
+    OVERHEAD_CY / per_thread as f64
+}
+
+/// Deterministic measurement jitter for a sweep point, including the PWR8
+/// erratic window (Sect. 5.3).
+fn noise_factor(m: &Machine, ws_bytes: u64, seed: u64) -> f64 {
+    let mut rel = m.calib.noise_rel;
+    if let Some((lo, hi, amp)) = m.calib.erratic_window {
+        if ws_bytes >= lo && ws_bytes <= hi {
+            rel += amp;
+        }
+    }
+    // Noise inflates runtime only (one-sided, like real interference).
+    1.0 + rel * (0.5 + 0.5 * hash_noise(ws_bytes ^ seed.rotate_left(17), 0xECA1))
+}
+
+/// Single-core in-core cycle terms for the composition: total steady-state
+/// core cycles and the non-overlapping (L1 transfer) share.
+fn core_terms(m: &Machine, k: &KernelLoop, smt: u32) -> (f64, f64) {
+    let core = simulate_core_cached(m, k, smt);
+    // The measured instruction-throughput shortfall (PWR8 misses by 20-30%,
+    // Sect. 5.5) was observed on the throughput-bound SIMD kernels; the
+    // latency-bound scalar code is not derated.
+    let eff = if k.simd { m.calib.core_efficiency } else { 1.0 };
+    let loads = k.count(|o| o.is_l1_transfer()) as f64
+        + k.count(|o| matches!(o, OpClass::Prefetch(_))) as f64;
+    let load_ports = m.throughput(&OpClass::Load).max(1.0);
+    let nol =
+        loads / load_ports / k.cachelines_per_body(m.cacheline) / smt.max(1) as f64;
+    (core.cycles_per_cl / eff, nol)
+}
+
+/// Working-set sweep: "measured" single-core cy/CL and GUP/s per size.
+pub fn sweep(
+    m: &Machine,
+    k: &KernelLoop,
+    sizes: &[u64],
+    opts: &MeasureOpts,
+) -> Vec<MeasuredPoint> {
+    let (core_cy, nol_cy) = core_terms(m, k, opts.smt);
+    let upcl = k.updates_per_cl(m.cacheline);
+    sizes
+        .iter()
+        .map(|&ws| {
+            let d = data_cycles(m, k, ws, opts);
+            let mut cy = compose(m, core_cy, nol_cy, &d);
+            cy += loop_overhead_cy_per_cl(m, ws, opts.smt);
+            cy *= noise_factor(m, ws, opts.seed);
+            MeasuredPoint {
+                ws_bytes: ws,
+                cy_per_cl: cy,
+                gups: cycles_per_cl_to_gups(cy, m.freq_ghz, upcl),
+            }
+        })
+        .collect()
+}
+
+/// Default log-spaced working-set sizes for the Fig. 5-7 sweeps (bytes,
+/// both streams; from in-L1 to deep in memory).
+pub fn default_sweep_sizes(max_bytes: u64) -> Vec<u64> {
+    let mut v = Vec::new();
+    let mut ws = 4 * 1024u64;
+    while ws <= max_bytes {
+        v.push(ws);
+        // ~4 points per octave.
+        ws = (ws as f64 * 1.19) as u64 + 64;
+    }
+    v
+}
+
+/// In-memory core scan ("measured"): chip-level GUP/s for n = 1..=cores.
+/// Delegates contention to [`super::multicore`].
+pub fn corescan(
+    m: &Machine,
+    k: &KernelLoop,
+    ws_bytes: u64,
+    opts: &MeasureOpts,
+) -> Vec<(u32, f64)> {
+    let pts = sweep(m, k, &[ws_bytes], opts);
+    let single = &pts[0];
+    super::multicore::scaling_curve(m, k, single.gups, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::*;
+    use crate::ecm::derive::{kernel_for, MemLevel};
+    use crate::isa::Variant;
+    use crate::util::units::{Precision, GIB, KIB, MIB};
+
+    #[test]
+    fn hsw_naive_sweep_matches_paper_shape() {
+        // Fig. 5a plain sdot: ~2 cy/CL in L1, ~4-5.5 in L2, ~9-11 in L3,
+        // ~19-21.5 in memory.
+        let m = haswell();
+        let k = kernel_for(&m, Variant::NaiveSimd, Precision::Sp, MemLevel::Mem);
+        let opts = MeasureOpts::default();
+        let p = |ws| sweep(&m, &k, &[ws], &opts)[0].cy_per_cl;
+        let l1 = p(16 * KIB);
+        let l2 = p(128 * KIB);
+        let l3 = p(4 * MIB);
+        let mem = p(GIB);
+        assert!((1.9..2.6).contains(&l1), "L1 {l1}");
+        assert!((3.8..6.0).contains(&l2), "L2 {l2}");
+        assert!((8.5..12.0).contains(&l3), "L3 {l3}");
+        assert!((18.5..22.0).contains(&mem), "Mem {mem}");
+    }
+
+    #[test]
+    fn hsw_kahan_avx_flat_until_l3() {
+        // Fig. 5a: AVX Kahan runs at 8 cy/CL in L1 *and* L2 (core-bound),
+        // meets the naive line in L3/memory — "Kahan for free".
+        let m = haswell();
+        let k = kernel_for(&m, Variant::KahanSimd, Precision::Sp, MemLevel::Mem);
+        let opts = MeasureOpts::default();
+        let pts = sweep(&m, &k, &[16 * KIB, 128 * KIB, GIB], &opts);
+        assert!((7.9..8.8).contains(&pts[0].cy_per_cl), "L1 {}", pts[0].cy_per_cl);
+        assert!((7.9..8.8).contains(&pts[1].cy_per_cl), "L2 {}", pts[1].cy_per_cl);
+        assert!((18.5..22.0).contains(&pts[2].cy_per_cl), "Mem {}", pts[2].cy_per_cl);
+        // naive and Kahan agree in memory within noise:
+        let kn = kernel_for(&m, Variant::NaiveSimd, Precision::Sp, MemLevel::Mem);
+        let nmem = sweep(&m, &kn, &[GIB], &opts)[0].cy_per_cl;
+        assert!(
+            (pts[2].cy_per_cl - nmem).abs() / nmem < 0.06,
+            "kahan {} vs naive {} in memory",
+            pts[2].cy_per_cl,
+            nmem
+        );
+    }
+
+    #[test]
+    fn scalar_kahan_is_flat_and_slow_everywhere() {
+        let m = haswell();
+        let k = kernel_for(&m, Variant::KahanScalar, Precision::Sp, MemLevel::Mem);
+        let pts = sweep(&m, &k, &[16 * KIB, GIB], &MeasureOpts::default());
+        assert!(pts[0].cy_per_cl > 180.0, "L1 {}", pts[0].cy_per_cl);
+        let ratio = pts[1].cy_per_cl / pts[0].cy_per_cl;
+        assert!((0.95..1.1).contains(&ratio), "flat: {ratio}");
+    }
+
+    #[test]
+    fn noise_is_deterministic() {
+        let m = haswell();
+        let k = kernel_for(&m, Variant::NaiveSimd, Precision::Sp, MemLevel::Mem);
+        let a = sweep(&m, &k, &[GIB], &MeasureOpts::default());
+        let b = sweep(&m, &k, &[GIB], &MeasureOpts::default());
+        assert_eq!(a[0].cy_per_cl, b[0].cy_per_cl);
+    }
+
+    #[test]
+    fn pwr8_erratic_window_fluctuates() {
+        let m = power8();
+        let k = kernel_for(&m, Variant::NaiveSimd, Precision::Sp, MemLevel::Mem);
+        let opts = MeasureOpts { smt: 8, untuned: false, seed: 1 };
+        // Sample many points inside 2..64 MB and compare spread against
+        // points beyond 64 MB.
+        let inside: Vec<u64> = (0..12).map(|i| (3 + i) * 4 * MIB).collect();
+        let outside: Vec<u64> = (0..6).map(|i| (i + 2) * 128 * MIB).collect();
+        let spread = |pts: &[MeasuredPoint]| {
+            let v: Vec<f64> = pts.iter().map(|p| p.cy_per_cl).collect();
+            let max = v.iter().cloned().fold(f64::MIN, f64::max);
+            let min = v.iter().cloned().fold(f64::MAX, f64::min);
+            (max - min) / min
+        };
+        let si = spread(&sweep(&m, &k, &inside, &opts));
+        let so = spread(&sweep(&m, &k, &outside, &opts));
+        assert!(si > so, "erratic window spread {si} vs outside {so}");
+        assert!(si > 0.1, "erratic window should fluctuate: {si}");
+    }
+
+    #[test]
+    fn pwr8_smt1_breaks_down_in_l1() {
+        // Fig. 7a: in L1, more SMT threads = shorter per-thread loops =
+        // worse performance; SMT-1 is best.
+        let m = power8();
+        let k = kernel_for(&m, Variant::NaiveSimd, Precision::Sp, MemLevel::Mem);
+        let ws = 32 * KIB;
+        let p1 = sweep(&m, &k, &[ws], &MeasureOpts { smt: 1, untuned: false, seed: 1 })[0].gups;
+        let p8 = sweep(&m, &k, &[ws], &MeasureOpts { smt: 8, untuned: false, seed: 1 })[0].gups;
+        assert!(p1 > p8, "L1: SMT-1 {p1} must beat SMT-8 {p8}");
+    }
+
+    #[test]
+    fn default_sizes_span_hierarchy() {
+        let sizes = default_sweep_sizes(GIB);
+        assert!(sizes.len() > 40);
+        assert!(sizes[0] <= 8 * KIB);
+        assert!(*sizes.last().unwrap() >= GIB / 2);
+    }
+}

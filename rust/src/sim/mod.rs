@@ -1,0 +1,29 @@
+//! The virtual testbed: a microarchitecture simulator standing in for the
+//! paper's physical machines (DESIGN.md §2).
+//!
+//! Components:
+//! * [`core`] — scoreboard port/latency scheduler: produces steady-state
+//!   in-core cycles per loop body for L1-resident data (OoO for Xeon/PWR8,
+//!   in-order paired issue for KNC, SMT-aware).
+//! * [`cache`] — the data-transfer engine: working-set size -> which level
+//!   serves the streams -> per-CL transfer cycles, including the inclusive
+//!   (Intel) vs victim (POWER8) data paths, prefetch friction and latency
+//!   penalties.
+//! * [`multicore`] — shared-bandwidth contention, cluster-on-die domains,
+//!   and the KNC ring model, producing scaling curves.
+//! * [`measure`] — the "likwid-bench" front door: single-core working-set
+//!   sweeps and in-memory core scans with deterministic measurement noise.
+//!
+//! The simulator deliberately does NOT call into the [`crate::ecm`] engine:
+//! model-vs-"measurement" comparisons stay non-circular. It shares only the
+//! machine description ([`crate::arch`]) and the kernel IR ([`crate::isa`]).
+
+pub mod cache;
+pub mod core;
+pub mod measure;
+pub mod multicore;
+
+pub use self::core::{simulate_core, simulate_core_cached, CoreResult};
+pub use cache::{compose, data_cycles, residence, DataCycles, MeasureOpts};
+pub use measure::{corescan, default_sweep_sizes, sweep, MeasuredPoint};
+pub use multicore::scaling_curve;

@@ -1,0 +1,196 @@
+//! Tiny command-line parser (clap is not in the offline crate cache).
+//!
+//! Model: `prog <subcommand> [positionals] [--flag] [--key value]`.
+//! Unknown options are errors; `--help` is synthesized from registered specs.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    UnknownOption(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{key}: {value} ({why})")]
+    BadValue {
+        key: String,
+        value: String,
+        why: String,
+    },
+}
+
+/// Specification of accepted options for one subcommand.
+#[derive(Clone, Debug, Default)]
+pub struct Spec {
+    /// (name, takes_value, help)
+    pub opts: Vec<(&'static str, bool, &'static str)>,
+}
+
+impl Spec {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push((name, false, help));
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push((name, true, help));
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = String::new();
+        for (name, takes, help) in &self.opts {
+            if *takes {
+                s.push_str(&format!("  --{name} <value>  {help}\n"));
+            } else {
+                s.push_str(&format!("  --{name}          {help}\n"));
+            }
+        }
+        s
+    }
+
+    /// Parse raw args (without program/subcommand) against this spec.
+    pub fn parse<I: IntoIterator<Item = String>>(&self, raw: I) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // Support --key=value as well as --key value.
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|(n, _, _)| *n == name)
+                    .ok_or_else(|| CliError::UnknownOption(name.to_string()))?;
+                if spec.1 {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => iter
+                            .next()
+                            .ok_or_else(|| CliError::MissingValue(name.to_string()))?,
+                    };
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e: T::Err| CliError::BadValue {
+                key: name.to_string(),
+                value: v.to_string(),
+                why: e.to_string(),
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Spec {
+        Spec::new()
+            .opt("out-dir", "output directory")
+            .opt("seed", "rng seed")
+            .flag("verbose", "print more")
+    }
+
+    fn v(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_mixed() {
+        let a = spec()
+            .parse(v(&["fig5a", "--out-dir", "out", "--verbose", "x"]))
+            .unwrap();
+        assert_eq!(a.positionals, vec!["fig5a", "x"]);
+        assert_eq!(a.opt("out-dir"), Some("out"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn parse_eq_form() {
+        let a = spec().parse(v(&["--seed=42"])).unwrap();
+        assert_eq!(a.opt_parse("seed", 0u64).unwrap(), 42);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(matches!(
+            spec().parse(v(&["--nope"])),
+            Err(CliError::UnknownOption(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            spec().parse(v(&["--seed"])),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn bad_value_reported() {
+        let a = spec().parse(v(&["--seed", "abc"])).unwrap();
+        assert!(matches!(
+            a.opt_parse("seed", 0u64),
+            Err(CliError::BadValue { .. })
+        ));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = spec().parse(v(&[])).unwrap();
+        assert_eq!(a.opt_or("out-dir", "out"), "out");
+        assert_eq!(a.opt_parse("seed", 7u64).unwrap(), 7);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn help_text_lists_options() {
+        let h = spec().help_text();
+        assert!(h.contains("--out-dir"));
+        assert!(h.contains("--verbose"));
+    }
+}

@@ -1,0 +1,201 @@
+//! Line-oriented `key = value` config format for user-defined machines
+//! (the `custom_arch` example). A deliberate TOML subset: sections in
+//! `[brackets]`, scalars, comma-separated lists, `#` comments.
+//!
+//! ```text
+//! [machine]
+//! name = My Chip
+//! freq_ghz = 3.0
+//! cores = 8
+//!
+//! [cache.l1]
+//! capacity = 32768
+//! bw_bytes_per_cy = 64
+//! ```
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    /// section -> key -> raw value string
+    pub sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("line {0}: {1}")]
+    Parse(usize, String),
+    #[error("missing section [{0}]")]
+    MissingSection(String),
+    #[error("missing key '{1}' in section [{0}]")]
+    MissingKey(String, String),
+    #[error("section [{0}] key '{1}': cannot parse '{2}' as {3}")]
+    BadValue(String, String, String, &'static str),
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut cfg = Config::default();
+        let mut section = String::from("");
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| ConfigError::Parse(ln + 1, "unclosed [section]".into()))?;
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+            } else if let Some((k, v)) = line.split_once('=') {
+                if section.is_empty() {
+                    return Err(ConfigError::Parse(ln + 1, "key before any [section]".into()));
+                }
+                cfg.sections
+                    .get_mut(&section)
+                    .unwrap()
+                    .insert(k.trim().to_string(), v.trim().to_string());
+            } else {
+                return Err(ConfigError::Parse(
+                    ln + 1,
+                    format!("expected 'key = value' or '[section]', got '{line}'"),
+                ));
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn section(&self, name: &str) -> Result<&BTreeMap<String, String>, ConfigError> {
+        self.sections
+            .get(name)
+            .ok_or_else(|| ConfigError::MissingSection(name.to_string()))
+    }
+
+    /// Sections whose name starts with `prefix.` (e.g. all `[cache.*]`),
+    /// in file-independent (sorted) order.
+    pub fn sections_with_prefix(&self, prefix: &str) -> Vec<(&str, &BTreeMap<String, String>)> {
+        let pat = format!("{prefix}.");
+        self.sections
+            .iter()
+            .filter(|(k, _)| k.starts_with(&pat))
+            .map(|(k, v)| (k.as_str(), v))
+            .collect()
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Result<&str, ConfigError> {
+        self.section(section)?
+            .get(key)
+            .map(|s| s.as_str())
+            .ok_or_else(|| ConfigError::MissingKey(section.to_string(), key.to_string()))
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, section: &str, key: &str) -> Result<T, ConfigError> {
+        let raw = self.get_str(section, key)?;
+        raw.parse().map_err(|_| {
+            ConfigError::BadValue(
+                section.to_string(),
+                key.to_string(),
+                raw.to_string(),
+                std::any::type_name::<T>(),
+            )
+        })
+    }
+
+    pub fn get_or<T: std::str::FromStr>(
+        &self,
+        section: &str,
+        key: &str,
+        default: T,
+    ) -> Result<T, ConfigError> {
+        match self.section(section).ok().and_then(|s| s.get(key)) {
+            None => Ok(default),
+            Some(raw) => raw.parse().map_err(|_| {
+                ConfigError::BadValue(
+                    section.to_string(),
+                    key.to_string(),
+                    raw.to_string(),
+                    std::any::type_name::<T>(),
+                )
+            }),
+        }
+    }
+
+    /// Comma-separated list value.
+    pub fn get_list(&self, section: &str, key: &str) -> Result<Vec<String>, ConfigError> {
+        Ok(self
+            .get_str(section, key)?
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "
+# a machine
+[machine]
+name = Test Chip
+freq_ghz = 2.5
+ports = load, load, add  # three ports
+
+[cache.l1]
+capacity = 32768
+";
+
+    #[test]
+    fn parse_sample() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_str("machine", "name").unwrap(), "Test Chip");
+        assert_eq!(c.get::<f64>("machine", "freq_ghz").unwrap(), 2.5);
+        assert_eq!(c.get::<u64>("cache.l1", "capacity").unwrap(), 32768);
+        assert_eq!(
+            c.get_list("machine", "ports").unwrap(),
+            vec!["load", "load", "add"]
+        );
+    }
+
+    #[test]
+    fn defaults() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_or("machine", "cores", 4u32).unwrap(), 4);
+    }
+
+    #[test]
+    fn prefix_sections_sorted() {
+        let c = Config::parse("[cache.l2]\na=1\n[cache.l1]\na=2\n[mem]\nb=3\n").unwrap();
+        let s = c.sections_with_prefix("cache");
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].0, "cache.l1");
+        assert_eq!(s[1].0, "cache.l2");
+    }
+
+    #[test]
+    fn errors() {
+        assert!(matches!(
+            Config::parse("key = 1"),
+            Err(ConfigError::Parse(1, _))
+        ));
+        assert!(matches!(
+            Config::parse("[open\n"),
+            Err(ConfigError::Parse(1, _))
+        ));
+        let c = Config::parse(SAMPLE).unwrap();
+        assert!(matches!(
+            c.get_str("nope", "x"),
+            Err(ConfigError::MissingSection(_))
+        ));
+        assert!(matches!(
+            c.get_str("machine", "nope"),
+            Err(ConfigError::MissingKey(_, _))
+        ));
+        assert!(matches!(
+            c.get::<u32>("machine", "name"),
+            Err(ConfigError::BadValue(..))
+        ));
+    }
+}

@@ -1,0 +1,14 @@
+//! Shared infrastructure: PRNG, statistics, JSON, CLI parsing, tables,
+//! ASCII plotting, units and a tiny config-file format.
+//!
+//! The offline crate cache lacks `rand`, `serde`, `clap` and friends, so the
+//! pieces of them this project needs are implemented here (DESIGN.md §2).
+
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod plot;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod units;

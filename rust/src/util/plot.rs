@@ -1,0 +1,175 @@
+//! ASCII line plots — the repo's gnuplot stand-in for terminal figure
+//! previews (the CSV written next to each plot is the machine-readable
+//! artifact; these plots are for humans reading the terminal/EXPERIMENTS.md).
+
+/// One named series of (x, y) points.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new<S: Into<String>>(name: S, points: Vec<(f64, f64)>) -> Self {
+        Self {
+            name: name.into(),
+            points,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Linear,
+    Log2,
+    Log10,
+}
+
+impl Scale {
+    fn fwd(&self, x: f64) -> f64 {
+        match self {
+            Scale::Linear => x,
+            Scale::Log2 => x.log2(),
+            Scale::Log10 => x.log10(),
+        }
+    }
+}
+
+/// Render series into a `width` x `height` character grid with axes.
+pub fn render(
+    series: &[Series],
+    width: usize,
+    height: usize,
+    xscale: Scale,
+    yscale: Scale,
+    title: &str,
+) -> String {
+    const MARKS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&'];
+    let pts: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|s| s.points.iter().copied())
+        .filter(|(x, y)| x.is_finite() && y.is_finite())
+        .collect();
+    if pts.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let (mut xmin, mut xmax) = (f64::MAX, f64::MIN);
+    let (mut ymin, mut ymax) = (f64::MAX, f64::MIN);
+    for &(x, y) in &pts {
+        let (fx, fy) = (xscale.fwd(x), yscale.fwd(y));
+        xmin = xmin.min(fx);
+        xmax = xmax.max(fx);
+        ymin = ymin.min(fy);
+        ymax = ymax.max(fy);
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+    // Pad the y-range 5% so extremes don't sit on the frame.
+    let ypad = (ymax - ymin) * 0.05;
+    let (ymin, ymax) = (ymin - ypad, ymax + ypad);
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        for &(x, y) in &s.points {
+            if !(x.is_finite() && y.is_finite()) {
+                continue;
+            }
+            let fx = (xscale.fwd(x) - xmin) / (xmax - xmin);
+            let fy = (yscale.fwd(y) - ymin) / (ymax - ymin);
+            let col = ((fx * (width - 1) as f64).round() as usize).min(width - 1);
+            let row = height - 1 - ((fy * (height - 1) as f64).round() as usize).min(height - 1);
+            grid[row][col] = mark;
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    let ylab = |frac: f64| -> f64 {
+        let v = ymin + frac * (ymax - ymin);
+        match yscale {
+            Scale::Linear => v,
+            Scale::Log2 => 2f64.powf(v),
+            Scale::Log10 => 10f64.powf(v),
+        }
+    };
+    for (i, row) in grid.iter().enumerate() {
+        let frac = 1.0 - i as f64 / (height - 1) as f64;
+        let label = if i == 0 || i == height - 1 || i == height / 2 {
+            format!("{:>10.3} ", ylab(frac))
+        } else {
+            " ".repeat(11)
+        };
+        out.push_str(&label);
+        out.push('|');
+        out.push_str(&row.iter().collect::<String>());
+        out.push('\n');
+    }
+    out.push_str(&" ".repeat(11));
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    let xlab = |v: f64| match xscale {
+        Scale::Linear => v,
+        Scale::Log2 => 2f64.powf(v),
+        Scale::Log10 => 10f64.powf(v),
+    };
+    out.push_str(&format!(
+        "{}{:<12.4}{:>width$.4}\n",
+        " ".repeat(12),
+        xlab(xmin),
+        xlab(xmax),
+        width = width - 11
+    ));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", MARKS[si % MARKS.len()], s.name));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_without_panic() {
+        let s = vec![
+            Series::new("a", vec![(1.0, 1.0), (2.0, 4.0), (3.0, 9.0)]),
+            Series::new("b", vec![(1.0, 2.0), (2.0, 2.0)]),
+        ];
+        let out = render(&s, 40, 10, Scale::Linear, Scale::Linear, "t");
+        assert!(out.contains('*'));
+        assert!(out.contains('o'));
+        assert!(out.contains("a\n") || out.contains("a"));
+        // title + height rows + axis + x-labels + one legend line per series
+        assert_eq!(out.lines().count(), 1 + 10 + 1 + 1 + 2);
+    }
+
+    #[test]
+    fn log_scales_handle_wide_range() {
+        let s = vec![Series::new(
+            "sweep",
+            vec![(1e3, 2.0), (1e6, 8.0), (1e9, 19.2)],
+        )];
+        let out = render(&s, 60, 12, Scale::Log10, Scale::Linear, "cy/CL");
+        assert!(out.contains("sweep"));
+    }
+
+    #[test]
+    fn empty_series_ok() {
+        let out = render(&[], 40, 10, Scale::Linear, Scale::Linear, "nothing");
+        assert!(out.contains("(no data)"));
+    }
+
+    #[test]
+    fn single_point_ok() {
+        let s = vec![Series::new("p", vec![(5.0, 5.0)])];
+        let out = render(&s, 20, 5, Scale::Linear, Scale::Linear, "one");
+        assert!(out.contains('*'));
+    }
+}

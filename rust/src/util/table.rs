@@ -1,0 +1,151 @@
+//! Markdown / aligned-text table rendering for reports and figure data.
+
+/// A simple column-aligned table with a header row.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(header: I) -> Self {
+        Self {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, cells: I) -> &mut Self {
+        let r: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            r.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            r.len(),
+            self.header.len()
+        );
+        self.rows.push(r);
+        self
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        w
+    }
+
+    /// GitHub-flavored markdown rendering.
+    pub fn to_markdown(&self) -> String {
+        let w = self.widths();
+        let mut s = String::new();
+        let fmt_row = |cells: &[String], w: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:<width$} |", c, width = w[i]));
+            }
+            line.push('\n');
+            line
+        };
+        s.push_str(&fmt_row(&self.header, &w));
+        s.push('|');
+        for wi in &w {
+            s.push_str(&format!("{:-<width$}|", "", width = wi + 2));
+        }
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&fmt_row(r, &w));
+        }
+        s
+    }
+
+    /// Plain aligned text (terminal output).
+    pub fn to_text(&self) -> String {
+        let w = self.widths();
+        let mut s = String::new();
+        let fmt_row = |cells: &[String], w: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!("{:<width$}  ", c, width = w[i]));
+            }
+            line.trim_end().to_string() + "\n"
+        };
+        s.push_str(&fmt_row(&self.header, &w));
+        s.push_str(&"-".repeat(w.iter().sum::<usize>() + 2 * w.len()));
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&fmt_row(r, &w));
+        }
+        s
+    }
+
+    /// CSV rendering (no quoting needed for our numeric content; commas in
+    /// cells are replaced by semicolons defensively).
+    pub fn to_csv(&self) -> String {
+        let esc = |c: &str| c.replace(',', ";");
+        let mut s = self
+            .header
+            .iter()
+            .map(|h| esc(h))
+            .collect::<Vec<_>>()
+            .join(",");
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Format a float with `digits` significant-looking decimals, trimming
+/// trailing zeros (e.g. 19.20 -> "19.2", 8.00 -> "8").
+pub fn fnum(x: f64, digits: usize) -> String {
+    let s = format!("{:.*}", digits, x);
+    if s.contains('.') {
+        let t = s.trim_end_matches('0').trim_end_matches('.');
+        t.to_string()
+    } else {
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new(["a", "bb"]);
+        t.row(["1", "2"]).row(["333", "4"]);
+        let md = t.to_markdown();
+        let lines: Vec<&str> = md.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("| a"));
+        assert!(lines[1].starts_with("|--"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        Table::new(["a"]).row(["1", "2"]);
+    }
+
+    #[test]
+    fn csv_roundtrip_simple() {
+        let mut t = Table::new(["x", "y"]);
+        t.row(["1", "2.5"]);
+        assert_eq!(t.to_csv(), "x,y\n1,2.5\n");
+    }
+
+    #[test]
+    fn fnum_trims() {
+        assert_eq!(fnum(19.2, 2), "19.2");
+        assert_eq!(fnum(8.0, 2), "8");
+        assert_eq!(fnum(6.4, 1), "6.4");
+        assert_eq!(fnum(26.4001, 1), "26.4");
+    }
+}

@@ -1,0 +1,139 @@
+//! Units and conversions used throughout the model and the reports.
+//!
+//! The paper's conventions (Sect. 2, 4):
+//! * work is measured in **updates** (UP): one scalar loop iteration of the
+//!   dot product. 1 UP = 2 flops naive, 5 flops Kahan (1 MUL + 4 ADD).
+//! * time is measured in **cycles per cache line** (cy/CL) for single-core
+//!   analysis, where one CL is one cache line's worth of iterations
+//!   (16 SP / 8 DP on 64-B lines; 32 SP / 16 DP on 128-B lines).
+//! * throughput is **GUP/s** = 1e9 updates per second.
+
+/// Bytes per KiB/MiB/GiB (binary).
+pub const KIB: u64 = 1024;
+pub const MIB: u64 = 1024 * KIB;
+pub const GIB: u64 = 1024 * MIB;
+
+/// Floating-point precision of the kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Precision {
+    Sp,
+    Dp,
+}
+
+impl Precision {
+    pub fn bytes(&self) -> u64 {
+        match self {
+            Precision::Sp => 4,
+            Precision::Dp => 8,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Precision::Sp => "SP",
+            Precision::Dp => "DP",
+        }
+    }
+}
+
+/// Scalar iterations ("updates") per cache line for a given precision.
+pub fn updates_per_cl(cacheline_bytes: u64, prec: Precision) -> u64 {
+    cacheline_bytes / prec.bytes()
+}
+
+/// cycles/CL + frequency -> GUP/s (single core).
+pub fn cycles_per_cl_to_gups(cy_per_cl: f64, freq_ghz: f64, updates_per_cl: u64) -> f64 {
+    assert!(cy_per_cl > 0.0);
+    updates_per_cl as f64 * freq_ghz / cy_per_cl
+}
+
+/// GB/s sustained bandwidth -> cycles to move one cache line.
+pub fn bw_to_cycles_per_cl(bw_gbs: f64, freq_ghz: f64, cacheline_bytes: u64) -> f64 {
+    assert!(bw_gbs > 0.0);
+    cacheline_bytes as f64 * freq_ghz / bw_gbs
+}
+
+/// Bytes-per-cycle bandwidth -> cycles to move one cache line.
+pub fn bpc_to_cycles_per_cl(bytes_per_cy: f64, cacheline_bytes: u64) -> f64 {
+    assert!(bytes_per_cy > 0.0);
+    cacheline_bytes as f64 / bytes_per_cy
+}
+
+/// Human-readable working-set size ("32 KiB", "2.0 MiB", ...).
+pub fn fmt_bytes(b: u64) -> String {
+    if b >= GIB {
+        format!("{:.1} GiB", b as f64 / GIB as f64)
+    } else if b >= MIB {
+        format!("{:.1} MiB", b as f64 / MIB as f64)
+    } else if b >= KIB {
+        format!("{:.1} KiB", b as f64 / KIB as f64)
+    } else {
+        format!("{b} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn updates_per_cl_matches_paper() {
+        // Sect. 2: n_it = 16 for SP on 64-B lines, 32 on POWER8's 128-B lines.
+        assert_eq!(updates_per_cl(64, Precision::Sp), 16);
+        assert_eq!(updates_per_cl(64, Precision::Dp), 8);
+        assert_eq!(updates_per_cl(128, Precision::Sp), 32);
+        assert_eq!(updates_per_cl(128, Precision::Dp), 16);
+    }
+
+    #[test]
+    fn hsw_memory_cycles_match_paper() {
+        // Sect. 4.1.1: 64 B/CL * 2.3 GHz / 32.0 GB/s = 4.6 cy/CL.
+        let cy = bw_to_cycles_per_cl(32.0, 2.3, 64);
+        assert!((cy - 4.6).abs() < 1e-12, "{cy}");
+        // BDW: 64 * 2.1 / 32.3 = 4.161... -> paper rounds to 4.2 cy/CL.
+        let cy = bw_to_cycles_per_cl(32.3, 2.1, 64);
+        assert!((cy - 4.161).abs() < 2e-3, "{cy}");
+    }
+
+    #[test]
+    fn knc_memory_cycles_match_paper() {
+        // Sect. 4.1.2: 64 B/CL * 1.05 GHz / 175 GB/s = 0.384 -> paper's 0.4.
+        let cy = bw_to_cycles_per_cl(175.0, 1.05, 64);
+        assert!((cy - 0.384).abs() < 1e-3, "{cy}");
+    }
+
+    #[test]
+    fn pwr8_memory_cycles_match_paper() {
+        // Sect. 4.1.3: 128 B/CL * 2.9 GHz / 73.6 GB/s = 5.0 cy/CL (paper
+        // uses f = 2.9 GHz in this formula although nominal clock is 2.926).
+        let cy = bw_to_cycles_per_cl(73.6, 2.926, 128);
+        assert!((cy - 5.09).abs() < 2e-2, "{cy}");
+    }
+
+    #[test]
+    fn hsw_eq1_performance() {
+        // Eq. (1): 16 UP * 2.3 Gcy/s / 19.2 cy = 1.92 GUP/s (memory level).
+        let p = cycles_per_cl_to_gups(19.2, 2.3, 16);
+        assert!((p - 1.9166).abs() < 1e-3, "{p}");
+        let p = cycles_per_cl_to_gups(2.0, 2.3, 16);
+        assert!((p - 18.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn l1l2_bandwidth_cycles() {
+        // HSW: 64 B/cy L2->L1: one CL in 1 cy; two CLs (dot) in 2 cy.
+        assert_eq!(bpc_to_cycles_per_cl(64.0, 64), 1.0);
+        // KNC: 32 B/cy -> 2 cy per CL.
+        assert_eq!(bpc_to_cycles_per_cl(32.0, 64), 2.0);
+        // PWR8: 64 B/cy on 128-B lines -> 2 cy per CL.
+        assert_eq!(bpc_to_cycles_per_cl(64.0, 128), 2.0);
+    }
+
+    #[test]
+    fn fmt_bytes_readable() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(32 * KIB), "32.0 KiB");
+        assert_eq!(fmt_bytes(35 * MIB / 10 * 10), "35.0 MiB");
+        assert_eq!(fmt_bytes(10 * GIB), "10.0 GiB");
+    }
+}
