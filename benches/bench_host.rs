@@ -1,6 +1,7 @@
 //! Bench: the real-machine path — PJRT execution of the AOT artifacts
-//! (requires `make artifacts`; exits cleanly if absent). Includes dispatch
-//! overhead (tiny artifact) vs streaming throughput (large artifact).
+//! (feature `pjrt`; requires `make artifacts` and a real xla crate; exits
+//! cleanly when either is absent). Includes dispatch overhead (tiny
+//! artifact) vs streaming throughput (large artifact).
 
 use kahan_ecm::bench_kit::{black_box, Runner};
 use kahan_ecm::runtime::{Executor, Manifest};
@@ -11,7 +12,10 @@ fn main() {
         eprintln!("artifacts/ not built; skipping host benches (run `make artifacts`)");
         return;
     };
-    let mut ex = Executor::new(manifest).expect("PJRT client");
+    let Ok(mut ex) = Executor::new(manifest) else {
+        eprintln!("no PJRT runtime available (stub xla crate); skipping host benches");
+        return;
+    };
     let mut rng = Rng::new(5);
 
     let mut r = Runner::new();

@@ -1,51 +1,47 @@
 //! Quickstart: the paper's claim in three acts.
 //!
-//! 1. *Numerics*: run the AOT-compiled naive and Kahan dot kernels (same
-//!    bits, one PJRT dispatch) on an ill-conditioned input and compare both
-//!    against the exact value.
+//! 1. *Numerics*: run the native backend's naive and Kahan SIMD dot kernels
+//!    on an ill-conditioned input and compare both against the exact value
+//!    (with the `pjrt` feature + `make artifacts`, the AOT Pallas kernels
+//!    run the same comparison in the `acc` experiment).
 //! 2. *Analysis*: derive the ECM model for both kernels on Haswell-EP and
 //!    show that Kahan's extra arithmetic is hidden behind the memory
 //!    bottleneck ("Kahan for free").
 //! 3. *Virtual measurement*: confirm with the simulator testbed.
 //!
-//! Run: `cargo run --release --example quickstart` (needs `make artifacts`
-//! for act 1; acts 2-3 always work).
+//! Run: `cargo run --release --example quickstart`
 
-use kahan_ecm::accuracy::{exact::exact_dot_f32, generator::ill_conditioned_dot};
+use kahan_ecm::accuracy::{exact::exact_dot, generator::ill_conditioned_dot};
 use kahan_ecm::arch::haswell;
 use kahan_ecm::ecm::{self, MemLevel};
 use kahan_ecm::isa::Variant;
-use kahan_ecm::runtime::{Executor, Manifest};
+use kahan_ecm::runtime::backend::{
+    Backend, ImplStyle, KernelClass, KernelInput, KernelSpec, NativeBackend,
+};
 use kahan_ecm::sim::{self, MeasureOpts};
 use kahan_ecm::util::rng::Rng;
 use kahan_ecm::util::units::{Precision, GIB};
 
 fn main() -> anyhow::Result<()> {
-    println!("=== 1. Numerics (real kernels via PJRT) ===============================");
-    match Manifest::load("artifacts") {
-        Ok(manifest) => {
-            let mut ex = Executor::new(manifest)?;
-            let mut rng = Rng::new(42);
-            let (x, y, _) = ill_conditioned_dot(4096, 2f64.powi(12), &mut rng);
-            let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
-            let yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
-            let exact = exact_dot_f32(&xf, &yf);
-            let xd: Vec<f64> = xf.iter().map(|&v| v as f64).collect();
-            let yd: Vec<f64> = yf.iter().map(|&v| v as f64).collect();
-            let out = ex.run("pair_f32_n4096", &[&xd, &yd])?;
-            let (naive, kahan) = (out.outputs[0][0], out.outputs[1][0]);
-            println!("condition ~ 2^12, n = 4096, f32 kernels (Pallas, AOT via PJRT):");
-            println!("  exact  = {exact:+.9e}");
-            println!(
-                "  naive  = {naive:+.9e}   (rel err {:.2e})",
-                ((naive - exact) / exact).abs()
-            );
-            println!(
-                "  kahan  = {kahan:+.9e}   (rel err {:.2e})",
-                ((kahan - exact) / exact).abs()
-            );
-        }
-        Err(e) => println!("  [skipped: {e}; run `make artifacts`]"),
+    println!("=== 1. Numerics (native backend kernels) =============================");
+    let backend = NativeBackend::new();
+    let mut rng = Rng::new(42);
+    let (x, y, _) = ill_conditioned_dot(4096, 2f64.powi(24), &mut rng);
+    let exact = exact_dot(&x, &y);
+    let input = KernelInput::Dot(&x, &y);
+    println!(
+        "condition ~ 2^24, n = 4096, f64 kernels (native backend, avx2 = {}):",
+        backend.has_avx2()
+    );
+    println!("  exact  = {exact:+.9e}");
+    for class in [KernelClass::NaiveDot, KernelClass::KahanDot] {
+        let spec = KernelSpec::new(class, ImplStyle::SimdLanes);
+        let got = backend.run(spec, &input)?;
+        println!(
+            "  {:<16} = {got:+.9e}   (rel err {:.2e})",
+            spec.id(),
+            ((got - exact) / exact).abs()
+        );
     }
 
     println!("\n=== 2. ECM analysis on Haswell-EP ====================================");
@@ -74,6 +70,7 @@ fn main() -> anyhow::Result<()> {
             k.name, pt.cy_per_cl, pt.gups
         );
     }
-    println!("\nNext: `kahan-ecm run all` regenerates every paper figure into out/.");
+    println!("\nNext: `kahan-ecm run all` regenerates every paper figure into out/,");
+    println!("      `kahan-ecm bench-native` measures the ladder on this machine.");
     Ok(())
 }

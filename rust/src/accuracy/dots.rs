@@ -34,6 +34,22 @@ pub fn kahan_dot(x: &[f64], y: &[f64]) -> f64 {
     sum
 }
 
+/// Compensated fold of per-lane (sum, compensation) pairs — the `_finalize`
+/// step of the Pallas kernel (kernels/kahan_dot.py), shared by
+/// [`kahan_dot_lanes`] and every unrolled/SIMD Kahan kernel of the native
+/// backend (`runtime::backend::native`), so the lane-combination semantics
+/// cannot drift between the reference and the deployed implementations.
+pub fn fold_kahan_lanes(s: &[f64], c: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    let mut err = 0.0;
+    for (sv, cv) in s.iter().zip(c) {
+        let (a2, t) = two_sum(acc, *sv);
+        acc = a2;
+        err += t - cv;
+    }
+    acc + err
+}
+
 /// Lane-structured Kahan dot: `lanes` independent Fig. 2b recurrences plus a
 /// compensated fold — the exact algorithm the Pallas kernel implements
 /// (DESIGN.md §7), provided here so Rust-side tests can pin the kernel's
@@ -50,15 +66,7 @@ pub fn kahan_dot_lanes(x: &[f64], y: &[f64], lanes: usize) -> f64 {
         c[l] = (t - s[l]) - yv;
         s[l] = t;
     }
-    // Compensated lane fold (matches kernels/kahan_dot.py `_finalize`).
-    let mut acc = 0.0;
-    let mut err = 0.0;
-    for l in 0..lanes {
-        let (a2, t) = two_sum(acc, s[l]);
-        acc = a2;
-        err += t - c[l];
-    }
-    acc + err
+    fold_kahan_lanes(&s, &c)
 }
 
 /// Ogita–Rump–Oishi `Dot2`: compensated dot with exact products; result is

@@ -7,16 +7,43 @@ use crate::arch::machine::*;
 use crate::isa::OpClass;
 use crate::util::config::{Config, ConfigError};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum LoadError {
-    #[error(transparent)]
-    Config(#[from] ConfigError),
-    #[error("bad port capability '{0}' (expected load/store/add/mul/fma/mov/prefetch/scalar)")]
+    Config(ConfigError),
     BadCap(String),
-    #[error("bad overlap policy '{0}' (expected intel/full/knc)")]
     BadOverlap(String),
-    #[error("machine failed validation: {0}")]
     Invalid(String),
+}
+
+impl std::fmt::Display for LoadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LoadError::Config(e) => write!(f, "{e}"),
+            LoadError::BadCap(cap) => write!(
+                f,
+                "bad port capability '{cap}' (expected load/store/add/mul/fma/mov/prefetch/scalar)"
+            ),
+            LoadError::BadOverlap(p) => {
+                write!(f, "bad overlap policy '{p}' (expected intel/full/knc)")
+            }
+            LoadError::Invalid(msg) => write!(f, "machine failed validation: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for LoadError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            LoadError::Config(e) => std::error::Error::source(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<ConfigError> for LoadError {
+    fn from(e: ConfigError) -> Self {
+        LoadError::Config(e)
+    }
 }
 
 fn parse_caps(items: &[String]) -> Result<Vec<OpClass>, LoadError> {

@@ -1,5 +1,5 @@
-//! Parallel experiment runner (crossbeam scoped threads; the offline crate
-//! cache has no tokio, and the workload is CPU-bound batch jobs anyway —
+//! Parallel experiment runner (std scoped threads; the offline crate cache
+//! has no tokio, and the workload is CPU-bound batch jobs anyway —
 //! DESIGN.md §2).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -25,9 +25,9 @@ pub fn run_parallel(defs: &[ExperimentDef], ctx: &Ctx, jobs: usize) -> Vec<RunOu
     let outcomes: Mutex<Vec<Option<RunOutcome>>> =
         Mutex::new((0..defs.len()).map(|_| None).collect());
 
-    crossbeam_utils::thread::scope(|scope| {
+    std::thread::scope(|scope| {
         for _ in 0..jobs {
-            scope.spawn(|_| loop {
+            scope.spawn(|| loop {
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= defs.len() {
                     break;
@@ -43,8 +43,7 @@ pub fn run_parallel(defs: &[ExperimentDef], ctx: &Ctx, jobs: usize) -> Vec<RunOu
                 outcomes.lock().unwrap()[i] = Some(outcome);
             });
         }
-    })
-    .expect("worker panicked");
+    });
 
     outcomes
         .into_inner()

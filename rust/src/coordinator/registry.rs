@@ -136,8 +136,8 @@ pub fn all_experiments() -> Vec<ExperimentDef> {
         ExperimentDef {
             id: "host",
             paper_ref: "Sect. 6 (blueprint)",
-            title: "Host-CPU PJRT sweep of the AOT kernels",
-            needs_artifacts: true,
+            title: "Host-CPU kernel-ladder sweep (native backend + optional PJRT)",
+            needs_artifacts: false, // native backend runs anywhere
             run: harness::hostexp::host,
         },
     ]

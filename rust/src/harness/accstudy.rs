@@ -4,14 +4,19 @@
 //! (naive, Kahan, lane-Kahan, Neumaier, pairwise, dot2) on Ogita-Rump-Oishi
 //! ill-conditioned dot products.
 //!
-//! Part 2 (PJRT, f32): the AOT-compiled Pallas kernels evaluated on the
-//! same ill-conditioned data (via the `pair_*` artifacts), demonstrating
-//! that the *deployed* kernel inherits the compensation property.
+//! Part 2 (execution backends, f64): the naive and Kahan SIMD kernels of
+//! every available [`crate::runtime::backend::Backend`] evaluated on the
+//! same ill-conditioned data — the native Rust backend always, the PJRT
+//! artifacts when the `pjrt` feature and `make artifacts` provide them —
+//! demonstrating that the *deployed* kernels inherit the compensation
+//! property.
 
 use anyhow::Result;
 
 use crate::accuracy::{self, dots, generator, sums};
-use crate::runtime::{Executor, Manifest};
+use crate::runtime::backend::{
+    selected_backends, Backend, ImplStyle, KernelClass, KernelInput, KernelSpec,
+};
 use crate::util::plot::{render, Scale, Series};
 use crate::util::rng::Rng;
 use crate::util::table::Table;
@@ -82,49 +87,67 @@ pub fn acc(ctx: &Ctx) -> Result<ExperimentOutput> {
     out.note("Expected: naive error grows ~ eps*cond; Kahan/lane-Kahan stay ~n*eps^2*cond \
               (flat until cond ~ 1/eps); dot2 flat (doubled precision) until cond ~ 1/eps^2.");
 
-    // ---- Part 2: the deployed (PJRT) f32 kernels --------------------------
-    match Manifest::load(&ctx.artifacts_dir).and_then(|m| Ok(m)) {
-        Ok(manifest) => {
-            if let Ok(mut ex) = Executor::new(manifest) {
-                let mut t2 = Table::new(["cond_exp2", "pjrt_naive_f32", "pjrt_kahan_f32", "ratio"]);
-                let name = "pair_f32_n4096";
-                let mut improved = 0;
-                let mut total = 0;
-                for &ce in &[6.0, 12.0, 18.0, 24.0] {
-                    let (x, y, _) = generator::ill_conditioned_dot(4096, 2f64.powf(ce), &mut rng);
-                    // Quantize to f32 first so "exact" refers to the bits
-                    // the kernel actually sees.
-                    let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
-                    let yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
-                    let exact = accuracy::exact::exact_dot_f32(&xf, &yf);
-                    let xd: Vec<f64> = xf.iter().map(|&v| v as f64).collect();
-                    let yd: Vec<f64> = yf.iter().map(|&v| v as f64).collect();
-                    if let Ok(r) = ex.run(name, &[&xd, &yd]) {
-                        let e_naive = rel_err(r.outputs[0][0], exact);
-                        let e_kahan = rel_err(r.outputs[1][0], exact);
-                        t2.row([
-                            format!("{ce}"),
-                            format!("{e_naive:.3e}"),
-                            format!("{e_kahan:.3e}"),
-                            format!("{:.1}", e_naive / e_kahan.max(1e-18)),
-                        ]);
-                        total += 1;
-                        if e_kahan <= e_naive {
-                            improved += 1;
-                        }
-                    }
-                }
-                out.note(format!(
-                    "PJRT f32 kernels: Kahan at least as accurate as naive in {improved}/{total} cases."
-                ));
-                out.table("pjrt_f32", t2);
+    // ---- Part 2: the same study through the execution backends -----------
+    let n2 = 4096; // matches the AOT artifact shapes so PJRT can join in
+    let naive_spec = KernelSpec::new(KernelClass::NaiveDot, ImplStyle::SimdLanes);
+    let kahan_spec = KernelSpec::new(KernelClass::KahanDot, ImplStyle::SimdLanes);
+    let mut t2 = Table::new(["backend", "cond_exp2", "naive_simd", "kahan_simd", "ratio"]);
+    let mut improved = 0;
+    let mut total = 0;
+    let backends = selected_backends(&ctx.artifacts_dir, |name| ctx.backend_enabled(name));
+    if backends.is_empty() {
+        out.note(format!(
+            "Backend part skipped: selector '{}' matched no available backend.",
+            ctx.backend
+        ));
+    }
+    let had_backends = !backends.is_empty();
+    // One dataset per conditioning, shared by every backend so rows at the
+    // same cond_exp2 are comparable. Quantized through f32 so "exact"
+    // refers to bits every backend actually sees (the PJRT dot artifacts
+    // compute in f32; native f64 kernels only inherit the input rounding).
+    let datasets: Vec<(f64, Vec<f64>, Vec<f64>, f64)> = [6.0, 12.0, 18.0, 24.0]
+        .iter()
+        .map(|&ce| {
+            let (x, y, _) = generator::ill_conditioned_dot(n2, 2f64.powf(ce), &mut rng);
+            let xq: Vec<f64> = x.iter().map(|&v| v as f32 as f64).collect();
+            let yq: Vec<f64> = y.iter().map(|&v| v as f32 as f64).collect();
+            let exact = accuracy::exact::exact_dot(&xq, &yq);
+            (ce, xq, yq, exact)
+        })
+        .collect();
+    for backend in backends {
+        for (ce, xq, yq, exact) in &datasets {
+            let exact = *exact;
+            let input = KernelInput::Dot(xq, yq);
+            let (Ok(nv), Ok(kv)) = (
+                backend.run(naive_spec, &input),
+                backend.run(kahan_spec, &input),
+            ) else {
+                continue; // backend lacks a matching kernel for this shape
+            };
+            let e_naive = rel_err(nv, exact);
+            let e_kahan = rel_err(kv, exact);
+            t2.row([
+                backend.name().to_string(),
+                format!("{ce}"),
+                format!("{e_naive:.3e}"),
+                format!("{e_kahan:.3e}"),
+                format!("{:.1}", e_naive / e_kahan.max(1e-18)),
+            ]);
+            total += 1;
+            if e_kahan <= e_naive {
+                improved += 1;
             }
         }
-        Err(e) => {
-            out.note(format!(
-                "PJRT part skipped: artifacts not available ({e}); run `make artifacts`."
-            ));
-        }
+    }
+    if total > 0 {
+        out.note(format!(
+            "Backend SIMD kernels: Kahan matched or beat naive in {improved}/{total} cases."
+        ));
+        out.table("backends", t2);
+    } else if had_backends {
+        out.note("Backend part produced no rows: no selected backend could run the kernels.");
     }
     Ok(out)
 }

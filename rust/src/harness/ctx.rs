@@ -8,6 +8,9 @@ pub struct Ctx {
     pub seed: u64,
     /// Reduced parameter grids (CI / smoke runs).
     pub quick: bool,
+    /// Execution backend selector for host experiments:
+    /// `"native"`, `"pjrt"`, or `"auto"` (= every available backend).
+    pub backend: String,
 }
 
 impl Default for Ctx {
@@ -16,6 +19,7 @@ impl Default for Ctx {
             artifacts_dir: crate::runtime::DEFAULT_ARTIFACT_DIR.to_string(),
             seed: 1,
             quick: false,
+            backend: "auto".to_string(),
         }
     }
 }
@@ -26,6 +30,11 @@ impl Ctx {
             quick: true,
             ..Self::default()
         }
+    }
+
+    /// Is the named backend selected by `--backend` (or by `auto`)?
+    pub fn backend_enabled(&self, name: &str) -> bool {
+        self.backend == "auto" || self.backend == name
     }
 
     /// Working-set sweep sizes honoring `quick`.
@@ -43,6 +52,16 @@ impl Ctx {
 mod tests {
     use super::*;
     use crate::util::units::GIB;
+
+    #[test]
+    fn backend_selection() {
+        let mut c = Ctx::default();
+        assert!(c.backend_enabled("native"));
+        assert!(c.backend_enabled("pjrt"));
+        c.backend = "native".into();
+        assert!(c.backend_enabled("native"));
+        assert!(!c.backend_enabled("pjrt"));
+    }
 
     #[test]
     fn quick_thins_grid() {

@@ -3,11 +3,21 @@
 //! Subcommands:
 //!   list                       list all experiments (paper tables/figures)
 //!   run <id|prefix|all>        regenerate experiments into --out-dir
+//!   bench-native               benchmark the native kernel ladder -> JSON
 //!   ecm                        print ECM inputs/predictions for one config
 //!   sweep                      print a single-core sweep for one config
 //!   custom --config FILE       run the ECM analysis on a user machine
 //!   info                       build/runtime information
 
+// Same style-lint posture as lib.rs (see the rationale there).
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::collapsible_if,
+    clippy::collapsible_else_if
+)]
+
+use std::collections::BTreeMap;
 use std::process::ExitCode;
 
 use kahan_ecm::arch::{self, loader};
@@ -15,8 +25,11 @@ use kahan_ecm::coordinator::{all_experiments, assemble_report, find, run_paralle
 use kahan_ecm::ecm::{self, MemLevel};
 use kahan_ecm::harness::Ctx;
 use kahan_ecm::isa::Variant;
+use kahan_ecm::runtime::backend::{Backend, NativeBackend};
+use kahan_ecm::runtime::hostbench::{bench_kernel, detect_freq_ghz};
 use kahan_ecm::sim::{self, MeasureOpts};
 use kahan_ecm::util::cli::Spec;
+use kahan_ecm::util::json::Json;
 use kahan_ecm::util::table::{fnum, Table};
 use kahan_ecm::util::units::{Precision, GIB};
 
@@ -27,12 +40,15 @@ fn usage() -> String {
          USAGE: kahan-ecm <command> [options]\n\nCOMMANDS:\n\
          \x20 list                      list experiments\n\
          \x20 run <id|prefix|all>       regenerate paper tables/figures\n\
+         \x20 bench-native              benchmark the native kernel ladder -> JSON\n\
          \x20 ecm                       ECM analysis for one machine x kernel\n\
          \x20 sweep                     simulated single-core working-set sweep\n\
          \x20 custom                    ECM analysis on a machine config file\n\
          \x20 info                      version / environment info\n\nOPTIONS (run):\n",
     );
     s.push_str(&run_spec().help_text());
+    s.push_str("\nOPTIONS (bench-native):\n");
+    s.push_str(&bench_native_spec().help_text());
     s.push_str("\nOPTIONS (ecm/sweep):\n");
     s.push_str(&ecm_spec().help_text());
     s
@@ -44,7 +60,18 @@ fn run_spec() -> Spec {
         .opt("seed", "measurement-noise seed (default: 1)")
         .opt("jobs", "worker threads (default: available cores)")
         .opt("artifacts", "artifact directory (default: artifacts)")
+        .opt("backend", "host-kernel backend: native|pjrt|auto (default: auto)")
         .flag("quick", "reduced grids for smoke runs")
+}
+
+fn bench_native_spec() -> Spec {
+    Spec::new()
+        .opt("out", "write JSON results to FILE (default: BENCH_native.json)")
+        .opt("sizes", "comma-separated vector lengths (default: 1024,16384,262144,1048576)")
+        .opt("warmup", "warmup executions per kernel (default: 2)")
+        .opt("reps", "timed executions per kernel (default: 7)")
+        .opt("freq-ghz", "core clock for cycle metrics (default: /proc/cpuinfo)")
+        .flag("quick", "tiny sweep for CI smoke runs")
 }
 
 fn ecm_spec() -> Spec {
@@ -97,10 +124,16 @@ fn cmd_run(raw: Vec<String>) -> ExitCode {
         return ExitCode::FAILURE;
     }
     let out_dir = args.opt_or("out-dir", "out").to_string();
+    let backend = args.opt_or("backend", "auto").to_string();
+    if !matches!(backend.as_str(), "native" | "pjrt" | "auto") {
+        eprintln!("error: --backend must be native, pjrt or auto (got '{backend}')");
+        return ExitCode::FAILURE;
+    }
     let ctx = Ctx {
         artifacts_dir: args.opt_or("artifacts", "artifacts").to_string(),
         seed: args.opt_parse("seed", 1u64).unwrap_or(1),
         quick: args.flag("quick"),
+        backend,
     };
     let jobs = args
         .opt_parse(
@@ -142,6 +175,123 @@ fn cmd_run(raw: Vec<String>) -> ExitCode {
     } else {
         ExitCode::FAILURE
     }
+}
+
+fn cmd_bench_native(raw: Vec<String>) -> ExitCode {
+    let args = match bench_native_spec().parse(raw) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let quick = args.flag("quick");
+    let sizes: Vec<usize> = match args.opt("sizes") {
+        Some(s) => {
+            let parsed: Result<Vec<usize>, _> = s.split(',').map(|t| t.trim().parse()).collect();
+            match parsed {
+                Ok(v) if !v.is_empty() => v,
+                _ => {
+                    eprintln!("error: --sizes expects comma-separated integers");
+                    return ExitCode::FAILURE;
+                }
+            }
+        }
+        None if quick => vec![1024, 16384],
+        None => vec![1024, 16384, 262144, 1048576],
+    };
+    let warmup = match args.opt_parse("warmup", if quick { 1usize } else { 2 }) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let reps = match args.opt_parse("reps", if quick { 3usize } else { 7 }) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let freq = match args.opt("freq-ghz") {
+        Some(v) => match v.parse::<f64>() {
+            Ok(f) if f > 0.0 => Some(f),
+            _ => {
+                eprintln!("error: --freq-ghz expects a positive number");
+                return ExitCode::FAILURE;
+            }
+        },
+        None => detect_freq_ghz(),
+    };
+    let out_path = args.opt_or("out", "BENCH_native.json").to_string();
+
+    let backend = NativeBackend::new();
+    let mut t = Table::new([
+        "kernel", "n", "ns (min)", "MFlop/s", "GUP/s", "GB/s", "cy/flop", "cy/up",
+    ]);
+    let fmt_cy = |c: Option<f64>| c.map(|v| fnum(v, 3)).unwrap_or_else(|| "-".to_string());
+    let mut results = Vec::new();
+    for spec in backend.kernels() {
+        for &n in &sizes {
+            let r = match bench_kernel(&backend, spec, n, warmup, reps, freq) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("[{spec}] FAILED: {e:#}");
+                    return ExitCode::FAILURE;
+                }
+            };
+            t.row([
+                r.kernel.clone(),
+                r.n.to_string(),
+                fnum(r.ns.min, 0),
+                fnum(r.mflops_best, 0),
+                fnum(r.gups_best, 3),
+                fnum(r.gbs_best, 2),
+                fmt_cy(r.cycles_per_flop),
+                fmt_cy(r.cycles_per_update),
+            ]);
+            let mut obj = BTreeMap::new();
+            obj.insert("kernel".to_string(), Json::Str(r.kernel.clone()));
+            obj.insert("n".to_string(), Json::Num(r.n as f64));
+            obj.insert("ws_bytes".to_string(), Json::Num(r.ws_bytes as f64));
+            obj.insert("flops".to_string(), Json::Num(r.flops as f64));
+            obj.insert("ns_min".to_string(), Json::Num(r.ns.min));
+            obj.insert("ns_median".to_string(), Json::Num(r.ns.median));
+            obj.insert("mflops".to_string(), Json::Num(r.mflops_best));
+            obj.insert("gups".to_string(), Json::Num(r.gups_best));
+            obj.insert("gbs".to_string(), Json::Num(r.gbs_best));
+            obj.insert(
+                "cycles_per_flop".to_string(),
+                r.cycles_per_flop.map(Json::Num).unwrap_or(Json::Null),
+            );
+            obj.insert(
+                "cycles_per_update".to_string(),
+                r.cycles_per_update.map(Json::Num).unwrap_or(Json::Null),
+            );
+            results.push(Json::Obj(obj));
+        }
+    }
+    print!("{}", t.to_text());
+
+    let n_results = results.len();
+    let mut root = BTreeMap::new();
+    root.insert("backend".to_string(), Json::Str("native".to_string()));
+    root.insert("avx2".to_string(), Json::Bool(backend.has_avx2()));
+    root.insert(
+        "freq_ghz".to_string(),
+        freq.map(Json::Num).unwrap_or(Json::Null),
+    );
+    root.insert("warmup".to_string(), Json::Num(warmup as f64));
+    root.insert("reps".to_string(), Json::Num(reps as f64));
+    root.insert("results".to_string(), Json::Arr(results));
+    let doc = Json::Obj(root);
+    if let Err(e) = std::fs::write(&out_path, format!("{doc}\n")) {
+        eprintln!("error: cannot write {out_path}: {e}");
+        return ExitCode::FAILURE;
+    }
+    println!("\nwrote {n_results} kernel results to {out_path}");
+    ExitCode::SUCCESS
 }
 
 fn machine_and_kernel(
@@ -293,6 +443,23 @@ fn cmd_info() -> ExitCode {
     println!("kahan-ecm {} — Kahan/ECM reproduction", env!("CARGO_PKG_VERSION"));
     println!("paper: DOI 10.1002/cpe.3921 (Hofmann, Fey, Riedmann, Eitzinger, Hager, Wellein)");
     println!("machines: HSW, BDW, KNC, PWR8 (+HOST, +custom configs)");
+    let native = NativeBackend::new();
+    println!(
+        "backend: native ({} kernels, avx2 = {}, clock = {})",
+        native.kernels().len(),
+        native.has_avx2(),
+        detect_freq_ghz()
+            .map(|f| format!("{f:.2} GHz"))
+            .unwrap_or_else(|| "unknown".to_string())
+    );
+    println!(
+        "backend: pjrt {}",
+        if cfg!(feature = "pjrt") {
+            "(feature enabled; needs artifacts + a real xla crate)"
+        } else {
+            "(disabled; build with --features pjrt)"
+        }
+    );
     match kahan_ecm::runtime::Manifest::load("artifacts") {
         Ok(m) => println!(
             "artifacts: {} kernels (jax {}) in ./artifacts",
@@ -314,6 +481,7 @@ fn main() -> ExitCode {
     match cmd.as_str() {
         "list" => cmd_list(),
         "run" => cmd_run(argv),
+        "bench-native" => cmd_bench_native(argv),
         "ecm" => cmd_ecm(argv),
         "sweep" => cmd_sweep(argv),
         "custom" => cmd_custom(argv),

@@ -1,0 +1,322 @@
+//! Pluggable execution backends for the paper's kernel ladder.
+//!
+//! The paper's optimization story (Sect. 3) is a *ladder*: scalar loop →
+//! modulo-unrolled loop → SIMD-vectorized loop, applied to the naive dot,
+//! the Kahan dot, and the Kahan sum. This module abstracts *where* those
+//! kernels execute:
+//!
+//! * [`native`] — real Rust implementations of every rung, runnable on any
+//!   host (portable lane code plus an AVX2 `std::arch` path selected at
+//!   runtime). This is the default backend and needs nothing installed.
+//! * [`pjrt`] (feature `pjrt`) — the AOT-compiled JAX/Pallas artifacts
+//!   executed through a PJRT client, the repo's original "fifth machine"
+//!   path.
+//!
+//! A [`Backend`] enumerates the [`KernelSpec`]s it supports and resolves
+//! each to a ready-to-run [`KernelExec`]; the harness, accuracy studies and
+//! host benchmarks are written against these traits so every experiment can
+//! run against either backend (`--backend native|pjrt|auto` on the CLI).
+
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+use std::fmt;
+
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+
+/// What a kernel computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelClass {
+    /// `sum += x[i] * y[i]` (paper Fig. 2a).
+    NaiveDot,
+    /// Kahan-compensated dot product (paper Fig. 2b).
+    KahanDot,
+    /// Kahan-compensated summation (Fig. 2b without the product).
+    KahanSum,
+}
+
+impl KernelClass {
+    pub const ALL: [KernelClass; 3] = [
+        KernelClass::NaiveDot,
+        KernelClass::KahanDot,
+        KernelClass::KahanSum,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            KernelClass::NaiveDot => "naive_dot",
+            KernelClass::KahanDot => "kahan_dot",
+            KernelClass::KahanSum => "kahan_sum",
+        }
+    }
+
+    /// Arithmetic operations per loop update (the paper's flop accounting:
+    /// naive dot 1 mul + 1 add; Kahan dot adds the 3-op compensation).
+    pub fn flops_per_update(self) -> u64 {
+        match self {
+            KernelClass::NaiveDot => 2,
+            KernelClass::KahanDot => 5,
+            KernelClass::KahanSum => 4,
+        }
+    }
+
+    /// Bytes streamed per update (f64 operands).
+    pub fn bytes_per_update(self) -> u64 {
+        match self {
+            KernelClass::NaiveDot | KernelClass::KahanDot => 16,
+            KernelClass::KahanSum => 8,
+        }
+    }
+
+    pub fn is_dot(self) -> bool {
+        !matches!(self, KernelClass::KahanSum)
+    }
+}
+
+/// How the kernel loop is laid out — one rung of the paper's ladder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ImplStyle {
+    /// Straight loop, one accumulator chain.
+    Scalar,
+    /// 2-way modulo unrolling (2 independent chains).
+    Unroll2,
+    /// 4-way modulo unrolling.
+    Unroll4,
+    /// 8-way modulo unrolling.
+    Unroll8,
+    /// Portable 4-lane vector code (auto-vectorizable chunked arrays).
+    SimdLanes,
+    /// Explicit AVX2+FMA `std::arch` intrinsics (runtime-detected).
+    SimdAvx2,
+}
+
+impl ImplStyle {
+    pub const ALL: [ImplStyle; 6] = [
+        ImplStyle::Scalar,
+        ImplStyle::Unroll2,
+        ImplStyle::Unroll4,
+        ImplStyle::Unroll8,
+        ImplStyle::SimdLanes,
+        ImplStyle::SimdAvx2,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ImplStyle::Scalar => "scalar",
+            ImplStyle::Unroll2 => "unroll2",
+            ImplStyle::Unroll4 => "unroll4",
+            ImplStyle::Unroll8 => "unroll8",
+            ImplStyle::SimdLanes => "simd",
+            ImplStyle::SimdAvx2 => "avx2",
+        }
+    }
+
+    /// Number of independent accumulator chains the layout carries.
+    pub fn chains(self) -> usize {
+        match self {
+            ImplStyle::Scalar => 1,
+            ImplStyle::Unroll2 => 2,
+            ImplStyle::Unroll4 | ImplStyle::SimdLanes | ImplStyle::SimdAvx2 => 4,
+            ImplStyle::Unroll8 => 8,
+        }
+    }
+}
+
+/// One concrete kernel: what it computes and how the loop is laid out.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct KernelSpec {
+    pub class: KernelClass,
+    pub style: ImplStyle,
+}
+
+impl KernelSpec {
+    pub fn new(class: KernelClass, style: ImplStyle) -> Self {
+        Self { class, style }
+    }
+
+    /// Stable identifier, e.g. `kahan_dot.avx2`.
+    pub fn id(self) -> String {
+        format!("{}.{}", self.class.label(), self.style.label())
+    }
+
+    /// The full ladder: every class × every style.
+    pub fn all() -> Vec<KernelSpec> {
+        let mut v = Vec::with_capacity(KernelClass::ALL.len() * ImplStyle::ALL.len());
+        for class in KernelClass::ALL {
+            for style in ImplStyle::ALL {
+                v.push(KernelSpec::new(class, style));
+            }
+        }
+        v
+    }
+}
+
+impl fmt::Display for KernelSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.id())
+    }
+}
+
+/// Input to one kernel execution.
+#[derive(Clone, Copy, Debug)]
+pub enum KernelInput<'a> {
+    /// Two equal-length operand streams for the dot kernels.
+    Dot(&'a [f64], &'a [f64]),
+    /// One operand stream for the sum kernels.
+    Sum(&'a [f64]),
+}
+
+impl KernelInput<'_> {
+    /// Loop iterations this input drives.
+    pub fn updates(&self) -> usize {
+        match self {
+            KernelInput::Dot(x, _) => x.len(),
+            KernelInput::Sum(x) => x.len(),
+        }
+    }
+}
+
+/// Backend failure modes.
+#[derive(Debug)]
+pub enum BackendError {
+    /// The backend has no implementation for the requested spec.
+    Unsupported { backend: String, spec: KernelSpec },
+    /// Input kind does not match the kernel class (dot vs sum).
+    InputMismatch { spec: KernelSpec },
+    /// Dot operands of different lengths.
+    ShapeMismatch { lhs: usize, rhs: usize },
+    /// Backend-specific execution failure (e.g. PJRT compile error).
+    Runtime(String),
+}
+
+impl fmt::Display for BackendError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BackendError::Unsupported { backend, spec } => {
+                write!(f, "backend '{backend}' does not support kernel {spec}")
+            }
+            BackendError::InputMismatch { spec } => {
+                write!(f, "input kind does not match kernel {spec}")
+            }
+            BackendError::ShapeMismatch { lhs, rhs } => {
+                write!(f, "dot operands differ in length: {lhs} vs {rhs}")
+            }
+            BackendError::Runtime(msg) => write!(f, "backend execution failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for BackendError {}
+
+/// A kernel resolved by a backend, ready to execute many times.
+pub trait KernelExec {
+    fn spec(&self) -> KernelSpec;
+
+    /// Execute once, returning the scalar result.
+    fn run(&self, input: &KernelInput<'_>) -> Result<f64, BackendError>;
+}
+
+/// An execution engine for the kernel ladder.
+pub trait Backend {
+    /// Short stable name ("native", "pjrt").
+    fn name(&self) -> &str;
+
+    /// Every spec this backend can resolve on this machine.
+    fn kernels(&self) -> Vec<KernelSpec>;
+
+    /// Resolve a spec to an executable kernel (may compile/cache).
+    fn resolve(&self, spec: KernelSpec) -> Result<Box<dyn KernelExec + '_>, BackendError>;
+
+    fn supports(&self, spec: KernelSpec) -> bool {
+        self.kernels().contains(&spec)
+    }
+
+    /// Convenience: resolve and execute once.
+    fn run(&self, spec: KernelSpec, input: &KernelInput<'_>) -> Result<f64, BackendError> {
+        self.resolve(spec)?.run(input)
+    }
+}
+
+/// Backends usable in this build whose name passes `enabled`: native (when
+/// selected) always works; PJRT additionally needs the feature and a
+/// loadable artifact directory. Deselected backends are never constructed,
+/// so a native-only run pays no PJRT client startup.
+pub fn selected_backends(
+    artifacts_dir: &str,
+    enabled: impl Fn(&str) -> bool,
+) -> Vec<Box<dyn Backend>> {
+    let mut v: Vec<Box<dyn Backend>> = Vec::new();
+    if enabled("native") {
+        v.push(Box::new(NativeBackend::new()));
+    }
+    #[cfg(feature = "pjrt")]
+    if enabled("pjrt") {
+        if let Ok(b) = PjrtBackend::from_dir(artifacts_dir) {
+            v.push(Box::new(b));
+        }
+    }
+    #[cfg(not(feature = "pjrt"))]
+    let _ = artifacts_dir;
+    v
+}
+
+/// Every backend usable in this build.
+pub fn available_backends(artifacts_dir: &str) -> Vec<Box<dyn Backend>> {
+    selected_backends(artifacts_dir, |_| true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_ids_unique_and_stable() {
+        let all = KernelSpec::all();
+        assert_eq!(all.len(), 18);
+        let mut ids: Vec<String> = all.iter().map(|s| s.id()).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), 18);
+        assert_eq!(
+            KernelSpec::new(KernelClass::KahanDot, ImplStyle::SimdAvx2).id(),
+            "kahan_dot.avx2"
+        );
+    }
+
+    #[test]
+    fn input_updates() {
+        let x = [1.0, 2.0];
+        assert_eq!(KernelInput::Dot(&x, &x).updates(), 2);
+        assert_eq!(KernelInput::Sum(&x).updates(), 2);
+    }
+
+    #[test]
+    fn flop_and_byte_accounting() {
+        assert_eq!(KernelClass::NaiveDot.flops_per_update(), 2);
+        assert_eq!(KernelClass::KahanDot.flops_per_update(), 5);
+        assert_eq!(KernelClass::KahanSum.flops_per_update(), 4);
+        assert_eq!(KernelClass::KahanDot.bytes_per_update(), 16);
+        assert_eq!(KernelClass::KahanSum.bytes_per_update(), 8);
+    }
+
+    #[test]
+    fn available_backends_always_has_native() {
+        let backends = available_backends("artifacts");
+        assert!(!backends.is_empty());
+        assert_eq!(backends[0].name(), "native");
+    }
+
+    #[test]
+    fn errors_render() {
+        let e = BackendError::Unsupported {
+            backend: "native".into(),
+            spec: KernelSpec::new(KernelClass::KahanDot, ImplStyle::SimdAvx2),
+        };
+        assert!(e.to_string().contains("kahan_dot.avx2"));
+        let e = BackendError::ShapeMismatch { lhs: 3, rhs: 4 };
+        assert!(e.to_string().contains("3 vs 4"));
+    }
+}

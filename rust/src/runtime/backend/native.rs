@@ -1,0 +1,589 @@
+//! Native Rust backend: the paper's full kernel ladder in real, host-runnable
+//! code.
+//!
+//! Every [`KernelClass`] is provided in every [`ImplStyle`]:
+//!
+//! * `Scalar` — the literal Fig. 2 loops (delegating to [`crate::accuracy`]
+//!   so the backend and the accuracy substrate share one definition);
+//! * `Unroll2/4/8` — modulo unrolling with N independent accumulator
+//!   chains, the transformation that breaks the loop-carried dependency
+//!   (paper Sect. 3.2);
+//! * `SimdLanes` — portable 4-lane vector code over chunked arrays, the
+//!   shape LLVM auto-vectorizes (and bit-identical to `Unroll4` by
+//!   construction — pinned by tests);
+//! * `SimdAvx2` — explicit AVX2+FMA `std::arch` intrinsics, runtime-detected
+//!   via `is_x86_feature_detected!`; the compensated product uses `fmsub`
+//!   (the paper's KahanSimdFma variant).
+//!
+//! All compensated variants finish with the same compensated lane fold as
+//! [`crate::accuracy::dots::kahan_dot_lanes`], so the n-independent error
+//! bound of Kahan's algorithm survives the parallelization (validated
+//! against the exact ground truth in `tests/properties.rs`).
+#![allow(clippy::needless_range_loop)]
+
+use super::{Backend, BackendError, ImplStyle, KernelClass, KernelExec, KernelInput, KernelSpec};
+use crate::accuracy::{dots, sums};
+
+// One shared `_finalize`: the reference lane algorithm and every native
+// kernel combine their chains through the same compensated fold.
+pub use crate::accuracy::dots::fold_kahan_lanes;
+
+/// Lane count of the portable vector layout (f64x4 — one AVX2 register).
+pub const LANES: usize = 4;
+
+// ---------------------------------------------------------------------------
+// Naive dot ladder
+// ---------------------------------------------------------------------------
+
+/// Naive dot, straight loop (Fig. 2a).
+pub fn naive_dot_scalar(x: &[f64], y: &[f64]) -> f64 {
+    dots::naive_dot(x, y)
+}
+
+/// Naive dot with `CHAINS` independent accumulators (modulo unrolling).
+pub fn naive_dot_unrolled<const CHAINS: usize>(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let mut acc = [0.0f64; CHAINS];
+    for (xc, yc) in x.chunks_exact(CHAINS).zip(y.chunks_exact(CHAINS)) {
+        for l in 0..CHAINS {
+            acc[l] += xc[l] * yc[l];
+        }
+    }
+    let done = x.len() - x.len() % CHAINS;
+    for i in done..x.len() {
+        acc[0] += x[i] * y[i];
+    }
+    acc.iter().sum()
+}
+
+/// Naive dot, portable 4-lane vector layout (bit-identical to
+/// `naive_dot_unrolled::<4>`).
+pub fn naive_dot_simd(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let mut acc = [0.0f64; LANES];
+    let mut xi = x.chunks_exact(LANES);
+    let mut yi = y.chunks_exact(LANES);
+    for (xc, yc) in (&mut xi).zip(&mut yi) {
+        let mut prod = [0.0f64; LANES];
+        for l in 0..LANES {
+            prod[l] = xc[l] * yc[l];
+        }
+        for l in 0..LANES {
+            acc[l] += prod[l];
+        }
+    }
+    for (a, b) in xi.remainder().iter().zip(yi.remainder()) {
+        acc[0] += a * b;
+    }
+    acc.iter().sum()
+}
+
+/// Naive dot via AVX2 FMA when available; portable lanes otherwise. The FMA
+/// contraction makes this the compiler's `-O3` baseline, not bit-identical
+/// to the portable path.
+pub fn naive_dot_avx2(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // SAFETY: guarded by runtime feature detection; lengths checked
+        // above (the unsafe body reads x.len() elements from both slices).
+        return unsafe { x86::naive_dot_avx2(x, y) };
+    }
+    naive_dot_simd(x, y)
+}
+
+// ---------------------------------------------------------------------------
+// Kahan dot ladder
+// ---------------------------------------------------------------------------
+
+/// Kahan dot, straight loop (Fig. 2b).
+pub fn kahan_dot_scalar(x: &[f64], y: &[f64]) -> f64 {
+    dots::kahan_dot(x, y)
+}
+
+/// Kahan dot with `CHAINS` independent (sum, compensation) chains and a
+/// compensated fold.
+pub fn kahan_dot_unrolled<const CHAINS: usize>(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let mut s = [0.0f64; CHAINS];
+    let mut c = [0.0f64; CHAINS];
+    for (xc, yc) in x.chunks_exact(CHAINS).zip(y.chunks_exact(CHAINS)) {
+        for l in 0..CHAINS {
+            let yv = xc[l] * yc[l] - c[l];
+            let t = s[l] + yv;
+            c[l] = (t - s[l]) - yv;
+            s[l] = t;
+        }
+    }
+    let done = x.len() - x.len() % CHAINS;
+    for i in done..x.len() {
+        let yv = x[i] * y[i] - c[0];
+        let t = s[0] + yv;
+        c[0] = (t - s[0]) - yv;
+        s[0] = t;
+    }
+    fold_kahan_lanes(&s, &c)
+}
+
+/// Kahan dot, portable 4-lane vector layout (bit-identical to
+/// `kahan_dot_unrolled::<4>`).
+pub fn kahan_dot_simd(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let mut s = [0.0f64; LANES];
+    let mut c = [0.0f64; LANES];
+    let mut xi = x.chunks_exact(LANES);
+    let mut yi = y.chunks_exact(LANES);
+    for (xc, yc) in (&mut xi).zip(&mut yi) {
+        for l in 0..LANES {
+            let yv = xc[l] * yc[l] - c[l];
+            let t = s[l] + yv;
+            c[l] = (t - s[l]) - yv;
+            s[l] = t;
+        }
+    }
+    for (a, b) in xi.remainder().iter().zip(yi.remainder()) {
+        let yv = a * b - c[0];
+        let t = s[0] + yv;
+        c[0] = (t - s[0]) - yv;
+        s[0] = t;
+    }
+    fold_kahan_lanes(&s, &c)
+}
+
+/// Kahan dot via AVX2, `fmsub`-fused product (the paper's KahanSimdFma).
+pub fn kahan_dot_avx2(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // SAFETY: guarded by runtime feature detection; lengths checked
+        // above (the unsafe body reads x.len() elements from both slices).
+        return unsafe { x86::kahan_dot_avx2(x, y) };
+    }
+    kahan_dot_simd(x, y)
+}
+
+// ---------------------------------------------------------------------------
+// Kahan sum ladder
+// ---------------------------------------------------------------------------
+
+/// Kahan sum, straight loop.
+pub fn kahan_sum_scalar(x: &[f64]) -> f64 {
+    sums::kahan_sum(x)
+}
+
+/// Kahan sum with `CHAINS` independent chains and a compensated fold.
+pub fn kahan_sum_unrolled<const CHAINS: usize>(x: &[f64]) -> f64 {
+    let mut s = [0.0f64; CHAINS];
+    let mut c = [0.0f64; CHAINS];
+    for xc in x.chunks_exact(CHAINS) {
+        for l in 0..CHAINS {
+            let yv = xc[l] - c[l];
+            let t = s[l] + yv;
+            c[l] = (t - s[l]) - yv;
+            s[l] = t;
+        }
+    }
+    let done = x.len() - x.len() % CHAINS;
+    for &v in &x[done..] {
+        let yv = v - c[0];
+        let t = s[0] + yv;
+        c[0] = (t - s[0]) - yv;
+        s[0] = t;
+    }
+    fold_kahan_lanes(&s, &c)
+}
+
+/// Kahan sum, portable 4-lane vector layout (bit-identical to
+/// `kahan_sum_unrolled::<4>`, as an independent implementation).
+pub fn kahan_sum_simd(x: &[f64]) -> f64 {
+    let mut s = [0.0f64; LANES];
+    let mut c = [0.0f64; LANES];
+    let mut xi = x.chunks_exact(LANES);
+    for xc in &mut xi {
+        for l in 0..LANES {
+            let yv = xc[l] - c[l];
+            let t = s[l] + yv;
+            c[l] = (t - s[l]) - yv;
+            s[l] = t;
+        }
+    }
+    for &v in xi.remainder() {
+        let yv = v - c[0];
+        let t = s[0] + yv;
+        c[0] = (t - s[0]) - yv;
+        s[0] = t;
+    }
+    fold_kahan_lanes(&s, &c)
+}
+
+/// Kahan sum via AVX2 when available.
+pub fn kahan_sum_avx2(x: &[f64]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // SAFETY: guarded by runtime feature detection.
+        return unsafe { x86::kahan_sum_avx2(x) };
+    }
+    kahan_sum_simd(x)
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 paths
+// ---------------------------------------------------------------------------
+
+/// Does this host support the `SimdAvx2` style?
+#[cfg(target_arch = "x86_64")]
+pub fn avx2_available() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+/// Does this host support the `SimdAvx2` style?
+#[cfg(not(target_arch = "x86_64"))]
+pub fn avx2_available() -> bool {
+    false
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::{
+        _mm256_add_pd, _mm256_fmadd_pd, _mm256_fmsub_pd, _mm256_loadu_pd, _mm256_setzero_pd,
+        _mm256_storeu_pd, _mm256_sub_pd,
+    };
+
+    /// # Safety
+    /// Caller must verify AVX2 + FMA via `avx2_available()`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn naive_dot_avx2(x: &[f64], y: &[f64]) -> f64 {
+        let n = x.len();
+        let chunks = n / 4;
+        let mut acc = _mm256_setzero_pd();
+        for i in 0..chunks {
+            let a = _mm256_loadu_pd(x.as_ptr().add(4 * i));
+            let b = _mm256_loadu_pd(y.as_ptr().add(4 * i));
+            acc = _mm256_fmadd_pd(a, b, acc);
+        }
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        for i in 4 * chunks..n {
+            lanes[0] = x[i].mul_add(y[i], lanes[0]);
+        }
+        lanes.iter().sum()
+    }
+
+    /// # Safety
+    /// Caller must verify AVX2 + FMA via `avx2_available()`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn kahan_dot_avx2(x: &[f64], y: &[f64]) -> f64 {
+        let n = x.len();
+        let chunks = n / 4;
+        let mut s = _mm256_setzero_pd();
+        let mut c = _mm256_setzero_pd();
+        for i in 0..chunks {
+            let a = _mm256_loadu_pd(x.as_ptr().add(4 * i));
+            let b = _mm256_loadu_pd(y.as_ptr().add(4 * i));
+            let yv = _mm256_fmsub_pd(a, b, c);
+            let t = _mm256_add_pd(s, yv);
+            c = _mm256_sub_pd(_mm256_sub_pd(t, s), yv);
+            s = t;
+        }
+        let mut sl = [0.0f64; 4];
+        let mut cl = [0.0f64; 4];
+        _mm256_storeu_pd(sl.as_mut_ptr(), s);
+        _mm256_storeu_pd(cl.as_mut_ptr(), c);
+        for i in 4 * chunks..n {
+            let yv = x[i].mul_add(y[i], -cl[0]);
+            let t = sl[0] + yv;
+            cl[0] = (t - sl[0]) - yv;
+            sl[0] = t;
+        }
+        super::fold_kahan_lanes(&sl, &cl)
+    }
+
+    /// # Safety
+    /// Caller must verify AVX2 + FMA via `avx2_available()`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn kahan_sum_avx2(x: &[f64]) -> f64 {
+        let n = x.len();
+        let chunks = n / 4;
+        let mut s = _mm256_setzero_pd();
+        let mut c = _mm256_setzero_pd();
+        for i in 0..chunks {
+            let v = _mm256_loadu_pd(x.as_ptr().add(4 * i));
+            let yv = _mm256_sub_pd(v, c);
+            let t = _mm256_add_pd(s, yv);
+            c = _mm256_sub_pd(_mm256_sub_pd(t, s), yv);
+            s = t;
+        }
+        let mut sl = [0.0f64; 4];
+        let mut cl = [0.0f64; 4];
+        _mm256_storeu_pd(sl.as_mut_ptr(), s);
+        _mm256_storeu_pd(cl.as_mut_ptr(), c);
+        for &v in &x[4 * chunks..] {
+            let yv = v - cl[0];
+            let t = sl[0] + yv;
+            cl[0] = (t - sl[0]) - yv;
+            sl[0] = t;
+        }
+        super::fold_kahan_lanes(&sl, &cl)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The backend
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+enum NativeFn {
+    Dot(fn(&[f64], &[f64]) -> f64),
+    Sum(fn(&[f64]) -> f64),
+}
+
+/// A resolved native kernel (a plain function pointer — zero overhead).
+pub struct NativeKernel {
+    spec: KernelSpec,
+    f: NativeFn,
+}
+
+impl KernelExec for NativeKernel {
+    fn spec(&self) -> KernelSpec {
+        self.spec
+    }
+
+    fn run(&self, input: &KernelInput<'_>) -> Result<f64, BackendError> {
+        match self.f {
+            NativeFn::Dot(f) => {
+                let KernelInput::Dot(x, y) = *input else {
+                    return Err(BackendError::InputMismatch { spec: self.spec });
+                };
+                if x.len() != y.len() {
+                    return Err(BackendError::ShapeMismatch {
+                        lhs: x.len(),
+                        rhs: y.len(),
+                    });
+                }
+                Ok(f(x, y))
+            }
+            NativeFn::Sum(f) => {
+                let KernelInput::Sum(x) = *input else {
+                    return Err(BackendError::InputMismatch { spec: self.spec });
+                };
+                Ok(f(x))
+            }
+        }
+    }
+}
+
+/// The host-CPU backend: pure Rust kernels, AVX2 when the CPU has it.
+pub struct NativeBackend {
+    avx2: bool,
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        Self {
+            avx2: avx2_available(),
+        }
+    }
+
+    /// Is the AVX2 style usable on this host?
+    pub fn has_avx2(&self) -> bool {
+        self.avx2
+    }
+
+    fn lookup(&self, spec: KernelSpec) -> Option<NativeFn> {
+        use ImplStyle::*;
+        use KernelClass::*;
+        if spec.style == SimdAvx2 && !self.avx2 {
+            return None;
+        }
+        Some(match (spec.class, spec.style) {
+            (NaiveDot, Scalar) => NativeFn::Dot(naive_dot_scalar),
+            (NaiveDot, Unroll2) => NativeFn::Dot(naive_dot_unrolled::<2>),
+            (NaiveDot, Unroll4) => NativeFn::Dot(naive_dot_unrolled::<4>),
+            (NaiveDot, Unroll8) => NativeFn::Dot(naive_dot_unrolled::<8>),
+            (NaiveDot, SimdLanes) => NativeFn::Dot(naive_dot_simd),
+            (NaiveDot, SimdAvx2) => NativeFn::Dot(naive_dot_avx2),
+            (KahanDot, Scalar) => NativeFn::Dot(kahan_dot_scalar),
+            (KahanDot, Unroll2) => NativeFn::Dot(kahan_dot_unrolled::<2>),
+            (KahanDot, Unroll4) => NativeFn::Dot(kahan_dot_unrolled::<4>),
+            (KahanDot, Unroll8) => NativeFn::Dot(kahan_dot_unrolled::<8>),
+            (KahanDot, SimdLanes) => NativeFn::Dot(kahan_dot_simd),
+            (KahanDot, SimdAvx2) => NativeFn::Dot(kahan_dot_avx2),
+            (KahanSum, Scalar) => NativeFn::Sum(kahan_sum_scalar),
+            (KahanSum, Unroll2) => NativeFn::Sum(kahan_sum_unrolled::<2>),
+            (KahanSum, Unroll4) => NativeFn::Sum(kahan_sum_unrolled::<4>),
+            (KahanSum, Unroll8) => NativeFn::Sum(kahan_sum_unrolled::<8>),
+            (KahanSum, SimdLanes) => NativeFn::Sum(kahan_sum_simd),
+            (KahanSum, SimdAvx2) => NativeFn::Sum(kahan_sum_avx2),
+        })
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &str {
+        "native"
+    }
+
+    fn kernels(&self) -> Vec<KernelSpec> {
+        KernelSpec::all()
+            .into_iter()
+            .filter(|s| self.avx2 || s.style != ImplStyle::SimdAvx2)
+            .collect()
+    }
+
+    fn resolve(&self, spec: KernelSpec) -> Result<Box<dyn KernelExec + '_>, BackendError> {
+        match self.lookup(spec) {
+            Some(f) => Ok(Box::new(NativeKernel { spec, f })),
+            None => Err(BackendError::Unsupported {
+                backend: self.name().to_string(),
+                spec,
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accuracy::exact::{exact_dot, exact_sum};
+    use crate::util::rng::Rng;
+
+    fn randvec(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn ladder_agrees_on_benign_data() {
+        let x = randvec(1003, 1); // deliberately not a multiple of 8
+        let y = randvec(1003, 2);
+        let want = exact_dot(&x, &y);
+        let backend = NativeBackend::new();
+        for spec in backend.kernels() {
+            if !spec.class.is_dot() {
+                continue;
+            }
+            let got = backend.run(spec, &KernelInput::Dot(&x, &y)).unwrap();
+            let tol = 1e-11 * want.abs().max(1.0);
+            assert!((got - want).abs() <= tol, "{spec}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn sum_ladder_agrees() {
+        let x = randvec(777, 3);
+        let want = exact_sum(&x);
+        let backend = NativeBackend::new();
+        for spec in backend.kernels() {
+            if spec.class != KernelClass::KahanSum {
+                continue;
+            }
+            let got = backend.run(spec, &KernelInput::Sum(&x)).unwrap();
+            assert!(
+                (got - want).abs() <= 1e-11 * want.abs().max(1.0),
+                "{spec}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn simd_is_bit_identical_to_unroll4() {
+        for n in [0usize, 1, 3, 4, 5, 63, 64, 1000] {
+            let x = randvec(n, 10 + n as u64);
+            let y = randvec(n, 20 + n as u64);
+            assert_eq!(naive_dot_simd(&x, &y), naive_dot_unrolled::<4>(&x, &y));
+            assert_eq!(kahan_dot_simd(&x, &y), kahan_dot_unrolled::<4>(&x, &y));
+            assert_eq!(kahan_sum_simd(&x), kahan_sum_unrolled::<4>(&x));
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let backend = NativeBackend::new();
+        for spec in backend.kernels() {
+            let got = if spec.class.is_dot() {
+                backend.run(spec, &KernelInput::Dot(&[], &[])).unwrap()
+            } else {
+                backend.run(spec, &KernelInput::Sum(&[])).unwrap()
+            };
+            assert_eq!(got, 0.0, "{spec} on empty input");
+            let one = if spec.class.is_dot() {
+                backend.run(spec, &KernelInput::Dot(&[3.0], &[2.0])).unwrap()
+            } else {
+                backend.run(spec, &KernelInput::Sum(&[6.0])).unwrap()
+            };
+            assert_eq!(one, 6.0, "{spec} on length-1 input");
+        }
+    }
+
+    #[test]
+    fn shape_and_kind_mismatches_rejected() {
+        let backend = NativeBackend::new();
+        let spec = KernelSpec::new(KernelClass::KahanDot, ImplStyle::SimdLanes);
+        let err = backend
+            .run(spec, &KernelInput::Dot(&[1.0], &[1.0, 2.0]))
+            .unwrap_err();
+        assert!(matches!(err, BackendError::ShapeMismatch { .. }));
+        let err = backend.run(spec, &KernelInput::Sum(&[1.0])).unwrap_err();
+        assert!(matches!(err, BackendError::InputMismatch { .. }));
+    }
+
+    #[test]
+    fn avx2_matches_portable_within_kahan_bound() {
+        if !avx2_available() {
+            return;
+        }
+        let x = randvec(4097, 5);
+        let y = randvec(4097, 6);
+        let want = exact_dot(&x, &y);
+        let cond: f64 = x.iter().zip(&y).map(|(a, b)| (a * b).abs()).sum();
+        for f in [kahan_dot_avx2, kahan_dot_simd] {
+            let got = f(&x, &y);
+            assert!((got - want).abs() <= 8.0 * f64::EPSILON * cond);
+        }
+        let s_avx = kahan_sum_avx2(&x);
+        let s_port = kahan_sum_simd(&x);
+        let abs: f64 = x.iter().map(|v| v.abs()).sum();
+        assert!((s_avx - s_port).abs() <= 8.0 * f64::EPSILON * abs);
+    }
+
+    #[test]
+    fn kahan_beats_naive_on_cancellation() {
+        // Adversarial cancellation: +M enters lane 0 first and -M leaves it
+        // last, so every O(100) addend in between is rounded against an
+        // accumulator of magnitude M (ulp(M) = 16). The naive kernel loses
+        // a random walk of those roundings; Kahan carries them in `c` and
+        // the compensated fold, recovering the sum decisively (the exact
+        // construction is ill-conditioned in Σ|x| / |Σx| ≈ 1e13).
+        let mut rng = Rng::new(2016);
+        let n = 4096;
+        let mut x: Vec<f64> = (0..n).map(|_| 100.0 * rng.normal()).collect();
+        let y = vec![1.0; n];
+        const M: f64 = 1e17; // ulp(M) = 16 in f64
+        x[0] = M;
+        x[n - 4] = -M; // lane 0 of the final chunk: same chain as x[0]
+        let exact = exact_dot(&x, &y);
+        let e_naive = (naive_dot_simd(&x, &y) - exact).abs();
+        let e_kahan = (kahan_dot_simd(&x, &y) - exact).abs();
+        assert!(
+            e_kahan <= 0.2 * e_naive,
+            "kahan {e_kahan:.3e} must beat naive {e_naive:.3e} decisively"
+        );
+    }
+
+    #[test]
+    fn resolve_reports_unsupported_avx2_when_absent() {
+        let backend = NativeBackend { avx2: false };
+        let spec = KernelSpec::new(KernelClass::KahanDot, ImplStyle::SimdAvx2);
+        assert!(!backend.supports(spec));
+        assert!(matches!(
+            backend.resolve(spec),
+            Err(BackendError::Unsupported { .. })
+        ));
+    }
+}

@@ -1,95 +1,267 @@
-//! Mini-likwid: steady-state benchmarking of AOT artifacts on the host CPU.
+//! Mini-likwid: steady-state benchmarking of kernels on the host CPU.
 //!
 //! Methodology follows the paper's likwid-bench protocol: inputs prepared
-//! once (no allocation on the timed path), warmup until the executable is
-//! compiled and caches are primed, then `reps` timed runs; the *best* run
-//! is the headline number (cycle-deterministic kernel, interference only
-//! adds time).
+//! once (no allocation on the timed path), warmup until caches are primed
+//! (and, for PJRT, the executable compiled), then timed runs; the *best*
+//! run is the headline number (cycle-deterministic kernel, interference
+//! only adds time). Small kernels are batched so every timed sample spans
+//! at least a few tens of microseconds of work.
+//!
+//! Two entry points:
+//! * [`bench_kernel`] — any [`Backend`] kernel (native by default);
+//! * [`bench_artifact`] (feature `pjrt`) — a named AOT artifact.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
-use super::executor::Executor;
+use super::backend::{Backend, KernelInput, KernelSpec};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
-/// Result of benchmarking one artifact.
+/// Result of benchmarking one backend kernel at one size.
 #[derive(Clone, Debug)]
-pub struct HostBenchResult {
-    pub name: String,
-    /// Working set in bytes (both streams).
+pub struct KernelBenchResult {
+    /// Kernel spec id, e.g. `kahan_dot.avx2`.
+    pub kernel: String,
+    /// Backend name the kernel ran on.
+    pub backend: String,
+    /// Vector length (updates per execution).
+    pub n: usize,
+    /// Working set in bytes (all operand streams).
     pub ws_bytes: u64,
-    /// Updates per execution.
-    pub updates: u64,
+    /// Arithmetic operations per execution.
+    pub flops: u64,
     /// Wall time per execution, ns.
     pub ns: Summary,
-    /// Throughput in GUP/s from the best run.
+    /// Updates/s (GUP/s) from the best run.
     pub gups_best: f64,
-    /// Effective streamed bandwidth GB/s from the best run.
+    /// Streamed bandwidth GB/s from the best run.
     pub gbs_best: f64,
+    /// Arithmetic throughput MFlop/s from the best run.
+    pub mflops_best: f64,
+    /// Cycles per flop (needs a clock estimate).
+    pub cycles_per_flop: Option<f64>,
+    /// Cycles per loop update (the paper's cy/up metric).
+    pub cycles_per_update: Option<f64>,
 }
 
-/// Benchmark one artifact by name. `reps` timed executions after `warmup`.
-pub fn bench_artifact(
-    ex: &mut Executor,
-    name: &str,
+/// Benchmark one kernel of `backend` on fresh normal-distributed inputs of
+/// length `n`. `reps` timed samples after `warmup` executions; pass the
+/// core clock in `freq_ghz` (see [`detect_freq_ghz`]) to get cycle metrics.
+pub fn bench_kernel(
+    backend: &dyn Backend,
+    spec: KernelSpec,
+    n: usize,
     warmup: usize,
     reps: usize,
-) -> Result<HostBenchResult> {
-    let art = ex.manifest().get(name)?.clone();
-    let elems: u64 = art.elems();
-    let mut rng = Rng::new(0xBE7C4 ^ elems);
-    let data: Vec<Vec<f64>> = art
-        .input_shapes
-        .iter()
-        .map(|s| {
-            let n: u64 = s.iter().product();
-            (0..n).map(|_| rng.normal()).collect()
-        })
-        .collect();
-    let refs: Vec<&[f64]> = data.iter().map(|d| d.as_slice()).collect();
-    let lits = ex.literals(&art, &refs)?;
+    freq_ghz: Option<f64>,
+) -> Result<KernelBenchResult> {
+    let mut rng = Rng::new(0xBE7C4 ^ n as u64);
+    let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let y: Vec<f64> = if spec.class.is_dot() {
+        (0..n).map(|_| rng.normal()).collect()
+    } else {
+        Vec::new()
+    };
+    let input = if spec.class.is_dot() {
+        KernelInput::Dot(&x, &y)
+    } else {
+        KernelInput::Sum(&x)
+    };
+    let exec = backend.resolve(spec)?;
 
+    // Batch so one timed sample covers >= ~50k updates (timer resolution).
+    let batch = (50_000 / n.max(1)).max(1);
     for _ in 0..warmup.max(1) {
-        let _ = ex.run_prepared(name, &lits)?;
+        std::hint::black_box(exec.run(&input)?);
     }
-    let mut samples = Vec::with_capacity(reps);
+    let mut samples = Vec::with_capacity(reps.max(1));
     for _ in 0..reps.max(1) {
         let t0 = Instant::now();
-        let buf = ex.run_prepared(name, &lits)?;
-        // PJRT CPU executes synchronously-ish, but fence via a host copy of
-        // the (tiny) result to be strict about completion.
-        let _ = buf.to_literal_sync()?;
-        samples.push(t0.elapsed().as_nanos() as f64);
+        for _ in 0..batch {
+            std::hint::black_box(exec.run(&input)?);
+        }
+        samples.push(t0.elapsed().as_nanos() as f64 / batch as f64);
     }
     let ns = Summary::of(&samples);
-    let updates = art.updates();
-    let gups_best = updates as f64 / ns.min;
-    let gbs_best = art.ws_bytes() as f64 / ns.min;
-    Ok(HostBenchResult {
-        name: name.to_string(),
-        ws_bytes: art.ws_bytes(),
-        updates,
+    let flops = n as u64 * spec.class.flops_per_update();
+    let ws_bytes = n as u64 * spec.class.bytes_per_update();
+    Ok(KernelBenchResult {
+        kernel: spec.id(),
+        backend: backend.name().to_string(),
+        n,
+        ws_bytes,
+        flops,
+        gups_best: n as f64 / ns.min,
+        gbs_best: ws_bytes as f64 / ns.min,
+        mflops_best: flops as f64 / ns.min * 1000.0,
+        cycles_per_flop: freq_ghz.map(|f| ns.min * f / flops.max(1) as f64),
+        cycles_per_update: freq_ghz.map(|f| ns.min * f / n.max(1) as f64),
         ns,
-        gups_best,
-        gbs_best,
     })
+}
+
+/// Best-effort core clock estimate in GHz (Linux). Prefers the cpufreq
+/// *maximum* frequency — stable across runs, unlike the instantaneous
+/// governor-scaled `cpu MHz` value, which is only the fallback. Returns
+/// `None` when unavailable — cycle metrics are then omitted.
+pub fn detect_freq_ghz() -> Option<f64> {
+    let max_khz = std::fs::read_to_string("/sys/devices/system/cpu/cpu0/cpufreq/cpuinfo_max_freq")
+        .ok()
+        .and_then(|s| s.trim().parse::<f64>().ok());
+    if let Some(khz) = max_khz {
+        if khz > 0.0 {
+            return Some(khz / 1e6);
+        }
+    }
+    let text = std::fs::read_to_string("/proc/cpuinfo").ok()?;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("cpu MHz") {
+            if let Some(v) = rest.split(':').nth(1) {
+                if let Ok(mhz) = v.trim().parse::<f64>() {
+                    if mhz > 0.0 {
+                        return Some(mhz / 1000.0);
+                    }
+                }
+            }
+        }
+    }
+    None
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_bench::{bench_artifact, HostBenchResult};
+
+#[cfg(feature = "pjrt")]
+mod pjrt_bench {
+    use super::*;
+    use crate::runtime::executor::Executor;
+
+    /// Result of benchmarking one AOT artifact.
+    #[derive(Clone, Debug)]
+    pub struct HostBenchResult {
+        pub name: String,
+        /// Working set in bytes (both streams).
+        pub ws_bytes: u64,
+        /// Updates per execution.
+        pub updates: u64,
+        /// Wall time per execution, ns.
+        pub ns: Summary,
+        /// Throughput in GUP/s from the best run.
+        pub gups_best: f64,
+        /// Effective streamed bandwidth GB/s from the best run.
+        pub gbs_best: f64,
+    }
+
+    /// Benchmark one artifact by name. `reps` timed executions after
+    /// `warmup`.
+    pub fn bench_artifact(
+        ex: &mut Executor,
+        name: &str,
+        warmup: usize,
+        reps: usize,
+    ) -> Result<HostBenchResult> {
+        let art = ex.manifest().get(name)?.clone();
+        let elems: u64 = art.elems();
+        let mut rng = Rng::new(0xBE7C4 ^ elems);
+        let data: Vec<Vec<f64>> = art
+            .input_shapes
+            .iter()
+            .map(|s| {
+                let n: u64 = s.iter().product();
+                (0..n).map(|_| rng.normal()).collect()
+            })
+            .collect();
+        let refs: Vec<&[f64]> = data.iter().map(|d| d.as_slice()).collect();
+        let lits = ex.literals(&art, &refs)?;
+
+        for _ in 0..warmup.max(1) {
+            let _ = ex.run_prepared(name, &lits)?;
+        }
+        let mut samples = Vec::with_capacity(reps);
+        for _ in 0..reps.max(1) {
+            let t0 = Instant::now();
+            let buf = ex.run_prepared(name, &lits)?;
+            // PJRT CPU executes synchronously-ish, but fence via a host copy
+            // of the (tiny) result to be strict about completion.
+            let _ = buf.to_literal_sync()?;
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let ns = Summary::of(&samples);
+        let updates = art.updates();
+        let gups_best = updates as f64 / ns.min;
+        let gbs_best = art.ws_bytes() as f64 / ns.min;
+        Ok(HostBenchResult {
+            name: name.to_string(),
+            ws_bytes: art.ws_bytes(),
+            updates,
+            ns,
+            gups_best,
+            gbs_best,
+        })
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+        use crate::runtime::manifest::Manifest;
+
+        #[test]
+        fn bench_small_artifact_if_present() {
+            let Ok(m) = Manifest::load("artifacts") else {
+                return;
+            };
+            let Ok(mut ex) = Executor::new(m) else {
+                return; // stub xla: no PJRT client available
+            };
+            let r = bench_artifact(&mut ex, "naive_opt_f32_n4096", 2, 3).unwrap();
+            assert!(r.ns.min > 0.0);
+            assert!(r.gups_best > 0.0);
+            assert_eq!(r.updates, 4096);
+            assert_eq!(r.ws_bytes, 2 * 4096 * 4);
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::manifest::Manifest;
+    use crate::runtime::backend::{ImplStyle, KernelClass, NativeBackend};
 
     #[test]
-    fn bench_small_artifact_if_present() {
-        let Ok(m) = Manifest::load("artifacts") else { return };
-        let mut ex = Executor::new(m).unwrap();
-        let r = bench_artifact(&mut ex, "naive_opt_f32_n4096", 2, 3).unwrap();
+    fn native_kernel_bench_produces_throughput() {
+        let backend = NativeBackend::new();
+        let spec = KernelSpec::new(KernelClass::KahanDot, ImplStyle::SimdLanes);
+        let r = bench_kernel(&backend, spec, 2048, 1, 3, Some(2.0)).unwrap();
+        assert_eq!(r.kernel, "kahan_dot.simd");
+        assert_eq!(r.backend, "native");
+        assert_eq!(r.n, 2048);
+        assert_eq!(r.ws_bytes, 2 * 2048 * 8);
+        assert_eq!(r.flops, 5 * 2048);
         assert!(r.ns.min > 0.0);
-        assert!(r.gups_best > 0.0);
-        assert_eq!(r.updates, 4096);
-        assert_eq!(r.ws_bytes, 2 * 4096 * 4);
+        assert!(r.gups_best > 0.0 && r.mflops_best > 0.0 && r.gbs_best > 0.0);
+        let cpf = r.cycles_per_flop.unwrap();
+        let cpu = r.cycles_per_update.unwrap();
+        assert!(cpf > 0.0 && cpu > 0.0);
+        // 5 flops per update ties the two cycle metrics together.
+        assert!((cpu / cpf - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sum_kernels_bench_too() {
+        let backend = NativeBackend::new();
+        let spec = KernelSpec::new(KernelClass::KahanSum, ImplStyle::Unroll4);
+        let r = bench_kernel(&backend, spec, 1000, 1, 2, None).unwrap();
+        assert_eq!(r.ws_bytes, 8 * 1000);
+        assert!(r.cycles_per_flop.is_none());
+        assert!(r.ns.min > 0.0);
+    }
+
+    #[test]
+    fn freq_detection_is_sane_if_present() {
+        if let Some(f) = detect_freq_ghz() {
+            assert!(f > 0.1 && f < 10.0, "implausible clock {f} GHz");
+        }
     }
 }

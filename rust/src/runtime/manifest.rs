@@ -1,19 +1,43 @@
 //! `artifacts/manifest.json` parsing (written by `python/compile/aot.py`).
 
+use std::fmt;
 use std::path::{Path, PathBuf};
 
-use crate::util::json::Json;
+use crate::util::json::{Json, JsonError};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ManifestError {
-    #[error("cannot read {0}: {1}")]
     Io(PathBuf, std::io::Error),
-    #[error("manifest parse error: {0}")]
-    Json(#[from] crate::util::json::JsonError),
-    #[error("manifest format error: {0}")]
+    Json(JsonError),
     Format(String),
-    #[error("unknown artifact '{0}'")]
     Unknown(String),
+}
+
+impl fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ManifestError::Io(path, e) => write!(f, "cannot read {}: {e}", path.display()),
+            ManifestError::Json(e) => write!(f, "manifest parse error: {e}"),
+            ManifestError::Format(msg) => write!(f, "manifest format error: {msg}"),
+            ManifestError::Unknown(name) => write!(f, "unknown artifact '{name}'"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ManifestError::Io(_, e) => Some(e),
+            ManifestError::Json(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<JsonError> for ManifestError {
+    fn from(e: JsonError) -> Self {
+        ManifestError::Json(e)
+    }
 }
 
 /// One AOT-compiled executable.

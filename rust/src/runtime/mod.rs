@@ -1,16 +1,34 @@
-//! PJRT runtime: load the AOT-compiled HLO-text artifacts produced by
-//! `python/compile/aot.py` and execute them on the host CPU — the paper's
-//! "blueprint on a fifth, real machine" path (DESIGN.md §2).
+//! Kernel execution runtime: pluggable [`backend`]s (native Rust SIMD by
+//! default, PJRT behind the `pjrt` feature) plus the host benchmarking
+//! harness.
 //!
-//! Python never runs here: the artifacts are self-contained HLO text, the
-//! manifest is plain JSON, and the `xla` crate drives the PJRT C API.
+//! The default build is hermetic: the [`backend::NativeBackend`] implements
+//! the paper's full kernel ladder in plain Rust (with a runtime-detected
+//! AVX2 path), so every host experiment runs on any machine with no
+//! artifacts installed. Enabling the `pjrt` cargo feature additionally
+//! compiles the [`executor`] that loads the AOT-compiled HLO-text artifacts
+//! produced by `python/compile/aot.py` and executes them through the PJRT
+//! C API — the paper's "blueprint on a fifth, real machine" path
+//! (DESIGN.md §2). Python never runs here: the artifacts are self-contained
+//! HLO text and the manifest is plain JSON.
 
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod executor;
 pub mod hostbench;
 pub mod manifest;
 
+pub use backend::{
+    available_backends, Backend, BackendError, ImplStyle, KernelClass, KernelExec, KernelInput,
+    KernelSpec, NativeBackend,
+};
+#[cfg(feature = "pjrt")]
+pub use backend::PjrtBackend;
+#[cfg(feature = "pjrt")]
 pub use executor::{Executor, RunOutput};
+#[cfg(feature = "pjrt")]
 pub use hostbench::{bench_artifact, HostBenchResult};
+pub use hostbench::{bench_kernel, detect_freq_ghz, KernelBenchResult};
 pub use manifest::{Artifact, Manifest};
 
 /// Default artifact directory (relative to the repo root / cwd).

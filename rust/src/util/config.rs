@@ -21,17 +21,28 @@ pub struct Config {
     pub sections: BTreeMap<String, BTreeMap<String, String>>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("line {0}: {1}")]
     Parse(usize, String),
-    #[error("missing section [{0}]")]
     MissingSection(String),
-    #[error("missing key '{1}' in section [{0}]")]
     MissingKey(String, String),
-    #[error("section [{0}] key '{1}': cannot parse '{2}' as {3}")]
     BadValue(String, String, String, &'static str),
 }
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Parse(line, msg) => write!(f, "line {line}: {msg}"),
+            ConfigError::MissingSection(s) => write!(f, "missing section [{s}]"),
+            ConfigError::MissingKey(s, k) => write!(f, "missing key '{k}' in section [{s}]"),
+            ConfigError::BadValue(s, k, v, ty) => {
+                write!(f, "section [{s}] key '{k}': cannot parse '{v}' as {ty}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 impl Config {
     pub fn parse(text: &str) -> Result<Self, ConfigError> {

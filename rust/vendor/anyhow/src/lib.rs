@@ -1,0 +1,269 @@
+//! A dependency-free subset of the `anyhow` error-handling API.
+//!
+//! Vendored so the workspace builds with no registry access (the build
+//! environments this repo targets are frequently offline). Implements the
+//! pieces the crate actually uses — `Error`, `Result`, `Context`,
+//! `anyhow!` / `bail!` / `ensure!` — with the same semantics:
+//!
+//! * any `std::error::Error + Send + Sync + 'static` converts via `?`;
+//! * `.context(..)` / `.with_context(..)` wrap errors (and `Option`s) with
+//!   a higher-level message;
+//! * `{:#}` formats the full cause chain, `{}` only the outermost message;
+//! * `{:?}` renders the `Caused by:` list, as returned `main` errors do.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A type-erased error with an optional chain of context messages.
+pub struct Error(Repr);
+
+enum Repr {
+    Msg(String),
+    Boxed(Box<dyn StdError + Send + Sync + 'static>),
+    Context { msg: String, source: Box<Error> },
+}
+
+/// `Result` defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error(Repr::Msg(message.to_string()))
+    }
+
+    /// Create an error from any standard error.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Self {
+        Error(Repr::Boxed(Box::new(error)))
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error(Repr::Context {
+            msg: context.to_string(),
+            source: Box::new(self),
+        })
+    }
+
+    /// The messages of the chain, outermost first.
+    pub fn chain_strings(&self) -> Vec<String> {
+        let mut v = Vec::new();
+        self.push_chain(&mut v);
+        v
+    }
+
+    fn push_chain(&self, v: &mut Vec<String>) {
+        match &self.0 {
+            Repr::Msg(m) => v.push(m.clone()),
+            Repr::Boxed(e) => {
+                v.push(e.to_string());
+                let mut src = e.source();
+                while let Some(s) = src {
+                    v.push(s.to_string());
+                    src = s.source();
+                }
+            }
+            Repr::Context { msg, source } => {
+                v.push(msg.clone());
+                source.push_chain(v);
+            }
+        }
+    }
+
+    /// The root cause message (innermost of the chain).
+    pub fn root_cause(&self) -> String {
+        self.chain_strings().pop().unwrap_or_default()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let chain = self.chain_strings();
+        if f.alternate() {
+            write!(f, "{}", chain.join(": "))
+        } else {
+            write!(f, "{}", chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let chain = self.chain_strings();
+        write!(f, "{}", chain.first().map(String::as_str).unwrap_or(""))?;
+        if chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that
+// is what makes the blanket `From` below coherent (exactly as in anyhow).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// Attach context to errors, mirroring `anyhow::Context`.
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Attach context to a `Result<T, anyhow::Error>` (re-contexting).
+impl<T> Context<T, Error> for Result<T, Error> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_outermost_only() {
+        let e: Error = io_err().into();
+        let e = e.context("loading manifest");
+        assert_eq!(format!("{e}"), "loading manifest");
+    }
+
+    #[test]
+    fn alternate_renders_chain() {
+        let e = Error::new(io_err()).context("reading").context("loading");
+        assert_eq!(format!("{e:#}"), "loading: reading: file missing");
+    }
+
+    #[test]
+    fn debug_renders_caused_by() {
+        let e = Error::new(io_err()).context("outer");
+        let s = format!("{e:?}");
+        assert!(s.contains("outer"));
+        assert!(s.contains("Caused by:"));
+        assert!(s.contains("file missing"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("ctx").unwrap_err();
+        assert_eq!(format!("{e:#}"), "ctx: file missing");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(format!("{e}"), "missing 7");
+        assert_eq!(Some(3).context("never").unwrap(), 3);
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", inner().unwrap_err()), "file missing");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn fails(n: u32) -> Result<()> {
+            ensure!(n < 10, "n too big: {n}");
+            if n == 3 {
+                bail!("exactly {} is forbidden", n);
+            }
+            Err(anyhow!("fell through"))
+        }
+        assert_eq!(format!("{}", fails(12).unwrap_err()), "n too big: 12");
+        assert_eq!(format!("{}", fails(3).unwrap_err()), "exactly 3 is forbidden");
+        assert_eq!(format!("{}", fails(1).unwrap_err()), "fell through");
+    }
+
+    #[test]
+    fn root_cause_is_innermost() {
+        let e = Error::new(io_err()).context("outer");
+        assert_eq!(e.root_cause(), "file missing");
+    }
+}
