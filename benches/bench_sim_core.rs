@@ -16,7 +16,8 @@ fn main() {
     let p8 = power8();
 
     let k_naive = ecm::derive::kernel_for(&hsw, Variant::NaiveSimd, Precision::Sp, MemLevel::Mem);
-    let k_kahan = ecm::derive::kernel_for(&hsw, Variant::KahanSimdFma5, Precision::Sp, MemLevel::Mem);
+    let k_kahan =
+        ecm::derive::kernel_for(&hsw, Variant::KahanSimdFma5, Precision::Sp, MemLevel::Mem);
     let k_knc = ecm::derive::kernel_for(&knc, Variant::KahanSimdFma, Precision::Sp, MemLevel::Mem);
     let k_p8 = ecm::derive::kernel_for(&p8, Variant::KahanSimdFma, Precision::Sp, MemLevel::Mem);
 

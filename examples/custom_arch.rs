@@ -21,7 +21,8 @@ fn main() -> anyhow::Result<()> {
     println!("machine: {} ({} cores @ {} GHz)\n", m.name, m.cores, m.freq_ghz);
 
     let mut t = Table::new([
-        "kernel", "ECM input", "prediction (cy/CL)", "sim in-mem (cy/CL)", "n_s chip", "P_sat GUP/s",
+        "kernel", "ECM input", "prediction (cy/CL)", "sim in-mem (cy/CL)", "n_s chip",
+        "P_sat GUP/s",
     ]);
     for v in [
         Variant::NaiveSimd,

@@ -123,7 +123,8 @@ mod tests {
             let e_kahan = (kahan_sum(&x) - want).abs();
             // Not a per-case theorem (ties happen), but Kahan must never be
             // *significantly* worse.
-            assert!(e_kahan <= e_naive.max(4.0 * f64::EPSILON * x.iter().map(|v| v.abs()).sum::<f64>()));
+            let abs_sum: f64 = x.iter().map(|v| v.abs()).sum();
+            assert!(e_kahan <= e_naive.max(4.0 * f64::EPSILON * abs_sum));
         });
     }
 

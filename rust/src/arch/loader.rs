@@ -139,7 +139,9 @@ pub fn machine_from_config(text: &str) -> Result<Machine, LoadError> {
             l2_friction_cy_per_cl: cfg.get_or("calibration", "l2_friction_cy_per_cl", 0.0)?,
             mem_friction_cy_per_cl: cfg.get_or("calibration", "mem_friction_cy_per_cl", 0.0)?,
             core_efficiency: cfg.get_or("calibration", "core_efficiency", 1.0)?,
-            effective_llc_capacity: match cfg.get_or("calibration", "effective_llc_capacity", 0u64)? {
+            effective_llc_capacity: match cfg
+                .get_or("calibration", "effective_llc_capacity", 0u64)?
+            {
                 0 => None,
                 v => Some(v),
             },

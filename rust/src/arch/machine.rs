@@ -162,7 +162,8 @@ impl Machine {
 
     /// Cycles for one cache line from memory (per domain, sustained BW).
     pub fn mem_cycles_per_cl(&self) -> f64 {
-        crate::util::units::bw_to_cycles_per_cl(self.mem.sustained_bw_gbs, self.freq_ghz, self.cacheline)
+        let bw = self.mem.sustained_bw_gbs;
+        crate::util::units::bw_to_cycles_per_cl(bw, self.freq_ghz, self.cacheline)
     }
 
     /// Cycles for one cache line from cache level `idx+1` into level `idx`'s

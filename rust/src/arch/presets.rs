@@ -33,10 +33,28 @@ pub fn haswell() -> Machine {
         ],
         lat: InstrLatency { load: 4, add: 3, mul: 5, fma: 5 },
         caches: vec![
-            CacheLevel { name: "L1", capacity: 32 * KIB, bw_bytes_per_cy: 0.0, latency_penalty: 0.0, shared: false },
-            CacheLevel { name: "L2", capacity: 256 * KIB, bw_bytes_per_cy: 64.0, latency_penalty: 0.0, shared: false },
+            CacheLevel {
+                name: "L1",
+                capacity: 32 * KIB,
+                bw_bytes_per_cy: 0.0,
+                latency_penalty: 0.0,
+                shared: false,
+            },
+            CacheLevel {
+                name: "L2",
+                capacity: 256 * KIB,
+                bw_bytes_per_cy: 64.0,
+                latency_penalty: 0.0,
+                shared: false,
+            },
             // 35 MB chip-wide; CoD halves what one core can use.
-            CacheLevel { name: "L3", capacity: 35 * MIB / 2, bw_bytes_per_cy: 32.0, latency_penalty: 1.0, shared: true },
+            CacheLevel {
+                name: "L3",
+                capacity: 35 * MIB / 2,
+                bw_bytes_per_cy: 32.0,
+                latency_penalty: 1.0,
+                shared: true,
+            },
         ],
         mem: MemorySystem { sustained_bw_gbs: 32.0, domains: 2, latency_penalty: 1.0 },
         overlap: OverlapPolicy::IntelNonOverlapping,
@@ -96,8 +114,20 @@ pub fn knights_corner() -> Machine {
         ],
         lat: InstrLatency { load: 3, add: 4, mul: 4, fma: 4 },
         caches: vec![
-            CacheLevel { name: "L1", capacity: 32 * KIB, bw_bytes_per_cy: 0.0, latency_penalty: 0.0, shared: false },
-            CacheLevel { name: "L2", capacity: 512 * KIB, bw_bytes_per_cy: 32.0, latency_penalty: 0.0, shared: false },
+            CacheLevel {
+                name: "L1",
+                capacity: 32 * KIB,
+                bw_bytes_per_cy: 0.0,
+                latency_penalty: 0.0,
+                shared: false,
+            },
+            CacheLevel {
+                name: "L2",
+                capacity: 512 * KIB,
+                bw_bytes_per_cy: 32.0,
+                latency_penalty: 0.0,
+                shared: false,
+            },
         ],
         mem: MemorySystem { sustained_bw_gbs: 175.0, domains: 1, latency_penalty: 20.0 },
         overlap: OverlapPolicy::KncPaired,
@@ -136,10 +166,28 @@ pub fn power8() -> Machine {
         // POWER8 FPU pipeline latency ~6 cy (Sinharoy et al. [19]).
         lat: InstrLatency { load: 4, add: 6, mul: 6, fma: 6 },
         caches: vec![
-            CacheLevel { name: "L1", capacity: 64 * KIB, bw_bytes_per_cy: 0.0, latency_penalty: 0.0, shared: false },
-            CacheLevel { name: "L2", capacity: 512 * KIB, bw_bytes_per_cy: 64.0, latency_penalty: 0.0, shared: false },
+            CacheLevel {
+                name: "L1",
+                capacity: 64 * KIB,
+                bw_bytes_per_cy: 0.0,
+                latency_penalty: 0.0,
+                shared: false,
+            },
+            CacheLevel {
+                name: "L2",
+                capacity: 512 * KIB,
+                bw_bytes_per_cy: 64.0,
+                latency_penalty: 0.0,
+                shared: false,
+            },
             // Per-core 8 MB victim L3: no Uncore crossing -> T_p = 0.
-            CacheLevel { name: "L3", capacity: 8 * MIB, bw_bytes_per_cy: 32.0, latency_penalty: 0.0, shared: false },
+            CacheLevel {
+                name: "L3",
+                capacity: 8 * MIB,
+                bw_bytes_per_cy: 32.0,
+                latency_penalty: 0.0,
+                shared: false,
+            },
         ],
         mem: MemorySystem { sustained_bw_gbs: 73.6, domains: 1, latency_penalty: 0.0 },
         overlap: OverlapPolicy::FullOverlap,

@@ -74,7 +74,12 @@ impl BenchResult {
 /// Measure `f`, which performs *one* iteration of work per call.
 /// `work_per_iter` is the number of "work units" (e.g. updates) one call
 /// performs, used for throughput reporting.
-pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, work_per_iter: f64, mut f: F) -> BenchResult {
+pub fn bench<F: FnMut()>(
+    name: &str,
+    cfg: &BenchConfig,
+    work_per_iter: f64,
+    mut f: F,
+) -> BenchResult {
     // Warmup + batch sizing: run until warmup budget is spent, measuring
     // a rough per-iter time.
     let warm_start = Instant::now();
@@ -87,7 +92,8 @@ pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, work_per_iter: f64, mut 
         }
     }
     let rough = warm_start.elapsed().as_nanos() as f64 / iters as f64;
-    let batch_iters = ((cfg.min_batch_time.as_nanos() as f64 / rough.max(0.1)).ceil() as u64).max(1);
+    let batch = cfg.min_batch_time.as_nanos() as f64 / rough.max(0.1);
+    let batch_iters = (batch.ceil() as u64).max(1);
 
     let mut samples = Vec::with_capacity(cfg.samples);
     for _ in 0..cfg.samples {

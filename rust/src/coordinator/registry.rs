@@ -140,6 +140,13 @@ pub fn all_experiments() -> Vec<ExperimentDef> {
             needs_artifacts: false, // native backend runs anywhere
             run: harness::hostexp::host,
         },
+        ExperimentDef {
+            id: "scale",
+            paper_ref: "Sect. 5.1 / Figs. 8-9 (live)",
+            title: "Measured thread-scaling vs contention model on this host",
+            needs_artifacts: false, // parallel native backend runs anywhere
+            run: harness::scaleexp::scale,
+        },
     ]
 }
 
@@ -166,6 +173,7 @@ mod tests {
         for want in [
             "table1", "ecm-inputs", "fig1", "fig5a", "fig5b", "fig6", "fig7a", "fig7b",
             "fig8a", "fig8b", "fig8c", "fig8d", "fig9", "fig10a", "fig10b", "acc", "host",
+            "scale",
         ] {
             assert!(ids.contains(&want), "missing experiment {want}");
         }

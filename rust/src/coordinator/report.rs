@@ -23,7 +23,10 @@ pub fn assemble_report(defs: &[ExperimentDef], outcomes: &[RunOutcome]) -> Strin
         ]);
     }
     s.push_str(&t.to_markdown());
-    s.push_str("\nPer-experiment data: `out/<id>/*.csv`, plots in `out/<id>/*.txt`, details in `out/<id>/summary.md`.\n");
+    s.push_str(
+        "\nPer-experiment data: `out/<id>/*.csv`, plots in `out/<id>/*.txt`, details \
+         in `out/<id>/summary.md`.\n",
+    );
     s
 }
 

@@ -22,10 +22,13 @@ pub fn fig1(_ctx: &Ctx) -> Result<ExperimentOutput> {
     let t_chip = t_total - t_mem;
     let sat = ecm::scaling::saturation(&m, &inputs);
 
-    let mut t = Table::new(["cores", "T_chip (cy)", "T_mem demand (cy)", "bus utilization", "stall per core (cy)"]);
+    let mut t = Table::new([
+        "cores", "T_chip (cy)", "T_mem demand (cy)", "bus utilization", "stall per core (cy)",
+    ]);
     let mut art = String::new();
     art.push_str(&format!(
-        "ECM scaling schematic (HSW naive, per-domain): T_chip = {}, T_mem = {} cy per {} updates\n\n",
+        "ECM scaling schematic (HSW naive, per-domain): T_chip = {}, T_mem = {} cy \
+         per {} updates\n\n",
         fnum(t_chip, 1),
         fnum(t_mem, 1),
         inputs.updates_per_cl

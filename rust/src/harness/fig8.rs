@@ -49,7 +49,8 @@ fn scaling_fig(
         .iter()
         .position(|s| s.variant != Variant::KahanScalar && s.variant.is_kahan())
         .unwrap_or(0);
-    let inputs = ecm::derive::paper_row(m, series[manual].variant, Precision::Sp, series[manual].level);
+    let inputs =
+        ecm::derive::paper_row(m, series[manual].variant, Precision::Sp, series[manual].level);
     let model = ecm::scaling::scaling_curve(m, &inputs);
 
     for i in 0..m.cores as usize {
@@ -121,11 +122,13 @@ fn intel_series() -> Vec<ScanSeries> {
 }
 
 pub fn fig8a(ctx: &Ctx) -> Result<ExperimentOutput> {
-    scaling_fig("fig8a", "In-memory scaling on HSW (paper Fig. 8a)", &haswell(), intel_series(), ctx)
+    let title = "In-memory scaling on HSW (paper Fig. 8a)";
+    scaling_fig("fig8a", title, &haswell(), intel_series(), ctx)
 }
 
 pub fn fig8b(ctx: &Ctx) -> Result<ExperimentOutput> {
-    scaling_fig("fig8b", "In-memory scaling on BDW (paper Fig. 8b)", &broadwell(), intel_series(), ctx)
+    let title = "In-memory scaling on BDW (paper Fig. 8b)";
+    scaling_fig("fig8b", title, &broadwell(), intel_series(), ctx)
 }
 
 pub fn fig8c(ctx: &Ctx) -> Result<ExperimentOutput> {

@@ -8,6 +8,8 @@ use anyhow::Result;
 use crate::arch::{all_machines, Machine};
 use crate::ecm::{self, MemLevel};
 use crate::isa::Variant;
+use crate::runtime::backend::{ImplStyle, KernelClass, KernelSpec};
+use crate::runtime::hostbench::{bench_scaling, freq_ghz_with_source};
 use crate::sim::{self, MeasureOpts};
 use crate::util::plot::{render, Scale, Series};
 use crate::util::table::{fnum, Table};
@@ -15,6 +17,7 @@ use crate::util::units::{Precision, GIB};
 
 use super::ctx::Ctx;
 use super::output::ExperimentOutput;
+use super::scaleexp;
 
 fn protocol(m: &Machine) -> MeasureOpts {
     match m.shorthand {
@@ -78,12 +81,64 @@ pub fn fig9(ctx: &Ctx) -> Result<ExperimentOutput> {
     out.plot("scaling", art);
     out.note("Paper saturation targets: 4 GUP/s HSW/BDW (BDW just reaches it, HSW misses), \
               10.6 GUP/s KNC, 4.5 GUP/s PWR8 (at ~5 cores).");
+
+    // Live counterpart: the same figure's protocol — a compiler-style
+    // (scalar) Kahan ddot scaled across cores — measured on *this* host
+    // via the thread-parallel native backend, with the contention model
+    // anchored on the single-thread measurement.
+    if ctx.backend_enabled("native") {
+        // Short vector: the scalar compiler analog is ~8x slower per update
+        // than the SIMD rungs; 8 threads bound the table height.
+        let (tmax, n, warm, reps) = scaleexp::live_protocol(ctx.quick, Some(8), 1 << 16, 1 << 21);
+        let (freq, src) = freq_ghz_with_source();
+        let spec = KernelSpec::new(KernelClass::KahanDot, ImplStyle::Scalar);
+        let curve = bench_scaling(spec, n, tmax, warm, reps, Some(freq))?;
+        let hm = scaleexp::host_model(freq, tmax as u32);
+        let model =
+            scaleexp::model_scaling_gups(&hm, spec, curve[0].1.gups_median).unwrap_or_default();
+        let mut ht = Table::new(["threads", "measured GUP/s", "model GUP/s"]);
+        for (t, r) in &curve {
+            ht.row([
+                t.to_string(),
+                fnum(r.gups_median, 3),
+                model
+                    .get(*t - 1)
+                    .map(|&(_, g)| fnum(g, 3))
+                    .unwrap_or_default(),
+            ]);
+        }
+        out.table("host_scaling", ht);
+        out.note(format!(
+            "Live measurement on this host ({tmax} threads, clock {freq:.2} GHz via {}): \
+             kahan_dot.scalar — the compiler-variant analog — on the thread-parallel native \
+             backend. Like the figure's compiler curves, a slow single-thread kernel scales \
+             near-linearly because it sits far from the bandwidth ceiling.",
+            src.label()
+        ));
+    }
     Ok(out)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fig9_includes_host_measurement() {
+        let o = fig9(&Ctx::quick()).unwrap();
+        let ht = o
+            .tables
+            .iter()
+            .find(|(n, _)| n == "host_scaling")
+            .expect("live host scaling table");
+        assert!(!ht.1.rows.is_empty());
+        let gups: f64 = ht.1.rows[0][1].parse().unwrap();
+        assert!(gups > 0.0);
+        let mut ctx = Ctx::quick();
+        ctx.backend = "pjrt".into();
+        let o = fig9(&ctx).unwrap();
+        assert!(o.tables.iter().all(|(n, _)| n != "host_scaling"));
+    }
 
     #[test]
     fn fig9_saturation_story() {

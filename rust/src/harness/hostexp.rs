@@ -11,8 +11,8 @@
 
 use anyhow::Result;
 
-use crate::runtime::backend::{Backend, ImplStyle, KernelClass, NativeBackend};
-use crate::runtime::hostbench::{bench_kernel, detect_freq_ghz};
+use crate::runtime::backend::{Backend, ImplStyle, KernelClass, KernelSpec, NativeBackend};
+use crate::runtime::hostbench::{bench_kernel, bench_scaling, freq_ghz_with_source};
 use crate::util::plot::{render, Scale, Series};
 use crate::util::table::{fnum, Table};
 use crate::util::units::fmt_bytes;
@@ -31,7 +31,8 @@ fn native_sizes(quick: bool) -> Vec<usize> {
 
 fn native_part(ctx: &Ctx, out: &mut ExperimentOutput) -> Result<()> {
     let backend = NativeBackend::new();
-    let freq = detect_freq_ghz();
+    let (freq_val, freq_src) = freq_ghz_with_source();
+    let freq = Some(freq_val);
     let (warm, reps) = if ctx.quick { (1, 3) } else { (3, 9) };
 
     let mut t = Table::new([
@@ -77,16 +78,49 @@ fn native_part(ctx: &Ctx, out: &mut ExperimentOutput) -> Result<()> {
         ),
     );
     out.note(format!(
-        "Native backend: avx2 = {}, clock estimate = {}.",
+        "Native backend: avx2 = {}, clock estimate = {freq_val:.2} GHz (via {}).",
         backend.has_avx2(),
-        freq.map(|f| format!("{f:.2} GHz"))
-            .unwrap_or_else(|| "unknown".to_string())
+        freq_src.label()
     ));
     out.note(
         "Interpretation: in cache the Kahan ladder costs up to ~4x the naive dot \
          (extra compensation arithmetic); as the working set moves to memory the \
          unrolled+SIMD Kahan variants converge to the naive throughput — the \
          paper's 'Kahan for free' claim, now measured natively on this host.",
+    );
+    Ok(())
+}
+
+/// Thread-scaling teaser: the SIMD naive/Kahan pair across worker counts on
+/// the parallel native backend. The full model-vs-measurement overlay lives
+/// in the `scale` experiment and the `bench-scale` subcommand; this table
+/// makes the host experiment self-contained on the multicore claim.
+fn scaling_part(ctx: &Ctx, out: &mut ExperimentOutput) -> Result<()> {
+    let (tmax, n, warm, reps) =
+        super::scaleexp::live_protocol(ctx.quick, Some(8), 1 << 16, 1 << 21);
+    let (freq, _) = freq_ghz_with_source();
+    let mut t = Table::new(["kernel", "threads", "MFlop/s", "GUP/s", "speedup vs T=1"]);
+    for spec in [
+        KernelSpec::new(KernelClass::NaiveDot, ImplStyle::SimdLanes),
+        KernelSpec::new(KernelClass::KahanDot, ImplStyle::SimdLanes),
+    ] {
+        let curve = bench_scaling(spec, n, tmax, warm, reps, Some(freq))?;
+        let p1 = curve[0].1.gups_median;
+        for (tc, r) in &curve {
+            t.row([
+                r.kernel.clone(),
+                tc.to_string(),
+                fnum(r.mflops_median, 0),
+                fnum(r.gups_median, 3),
+                fnum(r.gups_median / p1, 2),
+            ]);
+        }
+    }
+    out.table("threads", t);
+    out.note(
+        "Thread scaling: per-thread slices are cache-line aligned and partial sums combine \
+         through a deterministic compensated tree (same result every run at a fixed thread \
+         count). See the `scale` experiment / `bench-scale` for the model overlay.",
     );
     Ok(())
 }
@@ -198,6 +232,7 @@ pub fn host(ctx: &Ctx) -> Result<ExperimentOutput> {
     );
     if ctx.backend_enabled("native") {
         native_part(ctx, &mut out)?;
+        scaling_part(ctx, &mut out)?;
     }
     #[cfg(feature = "pjrt")]
     if ctx.backend_enabled("pjrt") {
@@ -242,7 +277,10 @@ mod tests {
         ctx.backend = "native".into();
         let o = host(&ctx).unwrap();
         assert!(!o.tables.is_empty());
-        assert!(o.tables.iter().all(|(n, _)| n == "native"));
+        // Native backend yields the ladder sweep plus the thread-scaling
+        // table, and nothing PJRT-flavored.
+        assert!(o.tables.iter().all(|(n, _)| n == "native" || n == "threads"));
+        assert!(o.tables.iter().any(|(n, _)| n == "threads"));
     }
 
     #[cfg(not(feature = "pjrt"))]

@@ -13,6 +13,7 @@ pub mod fig9;
 pub mod fig10;
 pub mod hostexp;
 pub mod output;
+pub mod scaleexp;
 pub mod tables;
 
 pub use ctx::Ctx;

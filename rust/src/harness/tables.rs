@@ -62,7 +62,10 @@ pub fn table1(_ctx: &Ctx) -> Result<ExperimentOutput> {
     row("Overlap policy", &|m| format!("{:?}", m.overlap));
 
     let mut out = ExperimentOutput::new("table1", "Testbed specification (paper Table I)");
-    out.note("All quantities are model inputs; derived columns (mem cycles/CL) cross-check Sect. 4 arithmetic.");
+    out.note(
+        "All quantities are model inputs; derived columns (mem cycles/CL) cross-check \
+         Sect. 4 arithmetic.",
+    );
     out.table("table1", t);
     Ok(out)
 }
@@ -127,9 +130,12 @@ pub fn ecm_inputs(_ctx: &Ctx) -> Result<ExperimentOutput> {
         "ecm-inputs",
         "ECM model inputs & predictions for every kernel x machine (Sect. 4, Eqs. 1-3)",
     );
-    out.note("Pinned against the paper: HSW naive {1 ‖ 2 | 2 | 4 + 1 | 9.2 + 1} -> {2 | 4 | 9 | 19.2}; \
-              Kahan AVX {8 | 8 | 9 | 19.2}; KNC naive {2 | 6 | 26.8}; PWR8 naive {8 | 8 | 12 | 22}; \
-              the 4-way FMA Kahan T_OL is the paper's hand-schedule value 8 (RecMII alone gives 7).");
+    out.note(
+        "Pinned against the paper: HSW naive {1 ‖ 2 | 2 | 4 + 1 | 9.2 + 1} -> \
+         {2 | 4 | 9 | 19.2}; Kahan AVX {8 | 8 | 9 | 19.2}; KNC naive {2 | 6 | 26.8}; \
+         PWR8 naive {8 | 8 | 12 | 22}; the 4-way FMA Kahan T_OL is the paper's \
+         hand-schedule value 8 (RecMII alone gives 7).",
+    );
     out.table("ecm_inputs", t);
     Ok(out)
 }

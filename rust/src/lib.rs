@@ -23,10 +23,18 @@
 //!   naive dot, Kahan dot and Kahan sum in scalar, 2×/4×/8×-unrolled,
 //!   portable-SIMD and runtime-detected AVX2 form — pure Rust, so the
 //!   "blueprint" claim (Sect. 6) executes on *any* host with zero exotic
-//!   dependencies. The optional `pjrt` cargo feature adds a second backend
-//!   that runs the AOT-compiled JAX/Pallas artifacts through PJRT, and
-//!   [`accuracy`] provides the exact ground truth both are validated
-//!   against.
+//!   dependencies. [`runtime::parallel::ParallelBackend`] lifts every rung
+//!   onto worker threads: operand streams are split into cache-line-aligned
+//!   per-thread slices (each thread keeps its own Kahan compensation) and
+//!   the partials combine through a deterministic compensated tree
+//!   reduction — bit-stable at a fixed thread count, and still within the
+//!   serial compensated error bound. This is what lets the paper's
+//!   *multicore saturation* claim (Figs. 8–10) be measured live
+//!   (`bench-scale`, the `scale` experiment) and overlaid with the
+//!   [`sim::multicore`] contention model and the ECM memory terms. The
+//!   optional `pjrt` cargo feature adds a second backend that runs the
+//!   AOT-compiled JAX/Pallas artifacts through PJRT, and [`accuracy`]
+//!   provides the exact ground truth all of them are validated against.
 //!
 //! The [`harness`] module regenerates every table and figure of the paper;
 //! [`coordinator`] wires it all into the `kahan-ecm` CLI.

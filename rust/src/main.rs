@@ -4,6 +4,8 @@
 //!   list                       list all experiments (paper tables/figures)
 //!   run <id|prefix|all>        regenerate experiments into --out-dir
 //!   bench-native               benchmark the native kernel ladder -> JSON
+//!   bench-scale                thread-scaling (and optional working-set)
+//!                              measurement vs model -> JSON
 //!   ecm                        print ECM inputs/predictions for one config
 //!   sweep                      print a single-core sweep for one config
 //!   custom --config FILE       run the ECM analysis on a user machine
@@ -23,15 +25,19 @@ use std::process::ExitCode;
 use kahan_ecm::arch::{self, loader};
 use kahan_ecm::coordinator::{all_experiments, assemble_report, find, run_parallel};
 use kahan_ecm::ecm::{self, MemLevel};
-use kahan_ecm::harness::Ctx;
+use kahan_ecm::harness::{scaleexp, Ctx};
 use kahan_ecm::isa::Variant;
-use kahan_ecm::runtime::backend::{Backend, NativeBackend};
-use kahan_ecm::runtime::hostbench::{bench_kernel, detect_freq_ghz};
+use kahan_ecm::runtime::backend::{Backend, ImplStyle, KernelClass, KernelSpec, NativeBackend};
+use kahan_ecm::runtime::hostbench::{
+    bench_kernel, bench_scaling, bench_ws_sweep, detect_freq_ghz, freq_ghz_with_source,
+    FreqSource,
+};
+use kahan_ecm::runtime::parallel::ThreadPool;
 use kahan_ecm::sim::{self, MeasureOpts};
 use kahan_ecm::util::cli::Spec;
 use kahan_ecm::util::json::Json;
 use kahan_ecm::util::table::{fnum, Table};
-use kahan_ecm::util::units::{Precision, GIB};
+use kahan_ecm::util::units::{fmt_bytes, Precision, GIB};
 
 fn usage() -> String {
     let mut s = String::from(
@@ -41,6 +47,7 @@ fn usage() -> String {
          \x20 list                      list experiments\n\
          \x20 run <id|prefix|all>       regenerate paper tables/figures\n\
          \x20 bench-native              benchmark the native kernel ladder -> JSON\n\
+         \x20 bench-scale               measured thread-scaling vs ECM model -> JSON\n\
          \x20 ecm                       ECM analysis for one machine x kernel\n\
          \x20 sweep                     simulated single-core working-set sweep\n\
          \x20 custom                    ECM analysis on a machine config file\n\
@@ -49,6 +56,8 @@ fn usage() -> String {
     s.push_str(&run_spec().help_text());
     s.push_str("\nOPTIONS (bench-native):\n");
     s.push_str(&bench_native_spec().help_text());
+    s.push_str("\nOPTIONS (bench-scale):\n");
+    s.push_str(&bench_scale_spec().help_text());
     s.push_str("\nOPTIONS (ecm/sweep):\n");
     s.push_str(&ecm_spec().help_text());
     s
@@ -74,6 +83,18 @@ fn bench_native_spec() -> Spec {
         .flag("quick", "tiny sweep for CI smoke runs")
 }
 
+fn bench_scale_spec() -> Spec {
+    Spec::new()
+        .opt("out", "write JSON results to FILE (default: BENCH_scaling.json)")
+        .opt("threads", "max worker threads; the curve covers T = 1..=T (default: all cores)")
+        .opt("n", "vector length for the scaling curve (default: 4194304)")
+        .flag("sweep", "also run a single-core working-set sweep spanning L1..MEM")
+        .opt("warmup", "warmup executions per point (default: 2)")
+        .opt("reps", "timed executions per point (default: 5)")
+        .opt("freq-ghz", "core clock for cycle metrics (default: detected, nominal fallback)")
+        .flag("quick", "tiny grids for CI smoke runs")
+}
+
 fn ecm_spec() -> Spec {
     Spec::new()
         .opt("machine", "HSW|BDW|KNC|PWR8|HOST (default: HSW)")
@@ -82,6 +103,19 @@ fn ecm_spec() -> Spec {
         .opt("level", "l1|l2|mem kernel tuning, KNC only (default: mem)")
         .opt("smt", "threads per core for sweep (default: 1)")
         .opt("config", "machine config file (custom command)")
+}
+
+/// `--freq-ghz` handling shared by the bench subcommands: an explicit value
+/// must be positive; otherwise fall back to detection with a recorded
+/// source (never absent).
+fn parse_freq_arg(args: &kahan_ecm::util::cli::Args) -> Result<(f64, FreqSource), String> {
+    match args.opt("freq-ghz") {
+        Some(v) => match v.parse::<f64>() {
+            Ok(f) if f > 0.0 => Ok((f, FreqSource::UserProvided)),
+            _ => Err("--freq-ghz expects a positive number".to_string()),
+        },
+        None => Ok(freq_ghz_with_source()),
+    }
 }
 
 fn parse_variant(s: &str) -> Option<Variant> {
@@ -214,16 +248,14 @@ fn cmd_bench_native(raw: Vec<String>) -> ExitCode {
             return ExitCode::FAILURE;
         }
     };
-    let freq = match args.opt("freq-ghz") {
-        Some(v) => match v.parse::<f64>() {
-            Ok(f) if f > 0.0 => Some(f),
-            _ => {
-                eprintln!("error: --freq-ghz expects a positive number");
-                return ExitCode::FAILURE;
-            }
-        },
-        None => detect_freq_ghz(),
+    let (freq_val, freq_src) = match parse_freq_arg(&args) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
     };
+    let freq = Some(freq_val);
     let out_path = args.opt_or("out", "BENCH_native.json").to_string();
 
     let backend = NativeBackend::new();
@@ -278,9 +310,10 @@ fn cmd_bench_native(raw: Vec<String>) -> ExitCode {
     let mut root = BTreeMap::new();
     root.insert("backend".to_string(), Json::Str("native".to_string()));
     root.insert("avx2".to_string(), Json::Bool(backend.has_avx2()));
+    root.insert("freq_ghz".to_string(), Json::Num(freq_val));
     root.insert(
-        "freq_ghz".to_string(),
-        freq.map(Json::Num).unwrap_or(Json::Null),
+        "freq_source".to_string(),
+        Json::Str(freq_src.label().to_string()),
     );
     root.insert("warmup".to_string(), Json::Num(warmup as f64));
     root.insert("reps".to_string(), Json::Num(reps as f64));
@@ -291,6 +324,216 @@ fn cmd_bench_native(raw: Vec<String>) -> ExitCode {
         return ExitCode::FAILURE;
     }
     println!("\nwrote {n_results} kernel results to {out_path}");
+    ExitCode::SUCCESS
+}
+
+/// Kernels on the bench-scale curves: the paper's naive-vs-Kahan SIMD pair,
+/// plus the AVX2 rungs when the host has them.
+fn scale_kernels(avx2: bool) -> Vec<KernelSpec> {
+    let mut v = vec![
+        KernelSpec::new(KernelClass::NaiveDot, ImplStyle::SimdLanes),
+        KernelSpec::new(KernelClass::KahanDot, ImplStyle::SimdLanes),
+    ];
+    if avx2 {
+        v.push(KernelSpec::new(KernelClass::NaiveDot, ImplStyle::SimdAvx2));
+        v.push(KernelSpec::new(KernelClass::KahanDot, ImplStyle::SimdAvx2));
+    }
+    v
+}
+
+fn cmd_bench_scale(raw: Vec<String>) -> ExitCode {
+    let args = match bench_scale_spec().parse(raw) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let quick = args.flag("quick");
+    let avail = ThreadPool::available();
+    let threads = match args.opt_parse("threads", if quick { avail.min(2) } else { avail }) {
+        Ok(t) if t >= 1 => t,
+        Ok(_) => {
+            eprintln!("error: --threads must be >= 1");
+            return ExitCode::FAILURE;
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let n = match args.opt_parse("n", if quick { 1usize << 18 } else { 1usize << 22 }) {
+        Ok(v) if v >= 1 => v,
+        Ok(_) => {
+            eprintln!("error: --n must be >= 1");
+            return ExitCode::FAILURE;
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let warmup = match args.opt_parse("warmup", if quick { 1usize } else { 2 }) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let reps = match args.opt_parse("reps", if quick { 3usize } else { 5 }) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let (freq, freq_src) = match parse_freq_arg(&args) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let out_path = args.opt_or("out", "BENCH_scaling.json").to_string();
+
+    let avx2 = NativeBackend::new().has_avx2();
+    let m = scaleexp::host_model(freq, threads as u32);
+    eprintln!(
+        "bench-scale: T = 1..={threads}, n = {n}, clock = {freq:.2} GHz ({}) ...",
+        freq_src.label()
+    );
+
+    let mut t = Table::new([
+        "kernel", "T", "ns (median)", "MFlop/s", "model MFlop/s", "GUP/s", "model GUP/s",
+    ]);
+    let mut scaling_json = Vec::new();
+    for spec in scale_kernels(avx2) {
+        let curve = match bench_scaling(spec, n, threads, warmup, reps, Some(freq)) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("[{spec}] FAILED: {e:#}");
+                return ExitCode::FAILURE;
+            }
+        };
+        let p1 = curve[0].1.gups_median;
+        let model = scaleexp::model_scaling_gups(&m, spec, p1).unwrap_or_default();
+        let mut points = Vec::new();
+        for (tcount, r) in &curve {
+            let mg = model.get(*tcount - 1).map(|&(_, g)| g);
+            t.row([
+                r.kernel.clone(),
+                tcount.to_string(),
+                fnum(r.ns.median, 0),
+                fnum(r.mflops_median, 0),
+                mg.map(|g| fnum(scaleexp::gups_to_mflops(spec.class, g), 0))
+                    .unwrap_or_else(|| "-".to_string()),
+                fnum(r.gups_median, 3),
+                mg.map(|g| fnum(g, 3)).unwrap_or_else(|| "-".to_string()),
+            ]);
+            let mut obj = BTreeMap::new();
+            obj.insert("threads".to_string(), Json::Num(*tcount as f64));
+            obj.insert("ns_min".to_string(), Json::Num(r.ns.min));
+            obj.insert("ns_median".to_string(), Json::Num(r.ns.median));
+            obj.insert("mflops".to_string(), Json::Num(r.mflops_median));
+            obj.insert("mflops_best".to_string(), Json::Num(r.mflops_best));
+            obj.insert("gups".to_string(), Json::Num(r.gups_median));
+            obj.insert("gbs".to_string(), Json::Num(r.gbs_median));
+            obj.insert(
+                "model_gups".to_string(),
+                mg.map(Json::Num).unwrap_or(Json::Null),
+            );
+            obj.insert(
+                "model_mflops".to_string(),
+                mg.map(|g| Json::Num(scaleexp::gups_to_mflops(spec.class, g)))
+                    .unwrap_or(Json::Null),
+            );
+            points.push(Json::Obj(obj));
+        }
+        let mut kobj = BTreeMap::new();
+        kobj.insert("kernel".to_string(), Json::Str(spec.id()));
+        kobj.insert("n".to_string(), Json::Num(n as f64));
+        kobj.insert("points".to_string(), Json::Arr(points));
+        scaling_json.push(Json::Obj(kobj));
+    }
+    print!("{}", t.to_text());
+
+    let mut sweep_json = Vec::new();
+    if args.flag("sweep") {
+        let max_bytes: u64 = if quick { 16 << 20 } else { 256 << 20 };
+        let step = if quick { 8 } else { 4 };
+        let sizes: Vec<u64> = sim::default_sweep_sizes(max_bytes)
+            .into_iter()
+            .step_by(step)
+            .collect();
+        let backend = NativeBackend::new();
+        let mut st = Table::new([
+            "kernel", "ws", "MFlop/s", "GUP/s", "model GUP/s", "model cy/CL", "model data cy/CL",
+        ]);
+        for spec in scale_kernels(avx2) {
+            let pts = match bench_ws_sweep(&backend, spec, &sizes, warmup, reps, Some(freq)) {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("[{spec}] sweep FAILED: {e:#}");
+                    return ExitCode::FAILURE;
+                }
+            };
+            let model = scaleexp::model_sweep(&m, spec, &sizes).unwrap_or_default();
+            let mut points = Vec::new();
+            for ((r, (mp, data_cy)), &ws) in pts.iter().zip(&model).zip(&sizes) {
+                st.row([
+                    r.kernel.clone(),
+                    fmt_bytes(ws),
+                    fnum(r.mflops_median, 0),
+                    fnum(r.gups_median, 3),
+                    fnum(mp.gups, 3),
+                    fnum(mp.cy_per_cl, 2),
+                    fnum(*data_cy, 2),
+                ]);
+                let mut obj = BTreeMap::new();
+                obj.insert("ws_bytes".to_string(), Json::Num(ws as f64));
+                obj.insert("n".to_string(), Json::Num(r.n as f64));
+                obj.insert("mflops".to_string(), Json::Num(r.mflops_median));
+                obj.insert("gups".to_string(), Json::Num(r.gups_median));
+                obj.insert(
+                    "cy_per_update".to_string(),
+                    r.cycles_per_update_median.map(Json::Num).unwrap_or(Json::Null),
+                );
+                obj.insert("model_gups".to_string(), Json::Num(mp.gups));
+                obj.insert("model_cy_per_cl".to_string(), Json::Num(mp.cy_per_cl));
+                obj.insert("model_data_cy_per_cl".to_string(), Json::Num(*data_cy));
+                points.push(Json::Obj(obj));
+            }
+            let mut kobj = BTreeMap::new();
+            kobj.insert("kernel".to_string(), Json::Str(spec.id()));
+            kobj.insert("points".to_string(), Json::Arr(points));
+            sweep_json.push(Json::Obj(kobj));
+        }
+        print!("{}", st.to_text());
+    }
+
+    let n_curves = scaling_json.len();
+    let mut root = BTreeMap::new();
+    root.insert("backend".to_string(), Json::Str("native-mt".to_string()));
+    root.insert("avx2".to_string(), Json::Bool(avx2));
+    root.insert("threads_max".to_string(), Json::Num(threads as f64));
+    root.insert("n".to_string(), Json::Num(n as f64));
+    root.insert("freq_ghz".to_string(), Json::Num(freq));
+    root.insert(
+        "freq_source".to_string(),
+        Json::Str(freq_src.label().to_string()),
+    );
+    root.insert("warmup".to_string(), Json::Num(warmup as f64));
+    root.insert("reps".to_string(), Json::Num(reps as f64));
+    root.insert("machine_model".to_string(), Json::Str("HOST".to_string()));
+    root.insert("model_bw_gbs".to_string(), Json::Num(m.mem.sustained_bw_gbs));
+    root.insert("scaling".to_string(), Json::Arr(scaling_json));
+    root.insert("sweep".to_string(), Json::Arr(sweep_json));
+    let doc = Json::Obj(root);
+    if let Err(e) = std::fs::write(&out_path, format!("{doc}\n")) {
+        eprintln!("error: cannot write {out_path}: {e}");
+        return ExitCode::FAILURE;
+    }
+    println!("\nwrote {n_curves} scaling curve(s) to {out_path}");
     ExitCode::SUCCESS
 }
 
@@ -482,6 +725,7 @@ fn main() -> ExitCode {
         "list" => cmd_list(),
         "run" => cmd_run(argv),
         "bench-native" => cmd_bench_native(argv),
+        "bench-scale" => cmd_bench_scale(argv),
         "ecm" => cmd_ecm(argv),
         "sweep" => cmd_sweep(argv),
         "custom" => cmd_custom(argv),

@@ -177,6 +177,27 @@ impl KernelInput<'_> {
             KernelInput::Sum(x) => x.len(),
         }
     }
+
+    /// Validate this input against a kernel spec: the input kind must match
+    /// the kernel class and dot operands must have equal length. Shared by
+    /// the serial and thread-parallel execution paths so rejection semantics
+    /// cannot drift between them.
+    pub fn check(&self, spec: KernelSpec) -> Result<(), BackendError> {
+        match (self, spec.class.is_dot()) {
+            (KernelInput::Dot(x, y), true) => {
+                if x.len() == y.len() {
+                    Ok(())
+                } else {
+                    Err(BackendError::ShapeMismatch {
+                        lhs: x.len(),
+                        rhs: y.len(),
+                    })
+                }
+            }
+            (KernelInput::Sum(_), false) => Ok(()),
+            _ => Err(BackendError::InputMismatch { spec }),
+        }
+    }
 }
 
 /// Backend failure modes.
@@ -291,6 +312,28 @@ mod tests {
         let x = [1.0, 2.0];
         assert_eq!(KernelInput::Dot(&x, &x).updates(), 2);
         assert_eq!(KernelInput::Sum(&x).updates(), 2);
+    }
+
+    #[test]
+    fn input_check_matrix() {
+        let x = [1.0, 2.0];
+        let y = [3.0];
+        let dot = KernelSpec::new(KernelClass::KahanDot, ImplStyle::Scalar);
+        let sum = KernelSpec::new(KernelClass::KahanSum, ImplStyle::Scalar);
+        assert!(KernelInput::Dot(&x, &x).check(dot).is_ok());
+        assert!(KernelInput::Sum(&x).check(sum).is_ok());
+        assert!(matches!(
+            KernelInput::Dot(&x, &y).check(dot),
+            Err(BackendError::ShapeMismatch { lhs: 2, rhs: 1 })
+        ));
+        assert!(matches!(
+            KernelInput::Sum(&x).check(dot),
+            Err(BackendError::InputMismatch { .. })
+        ));
+        assert!(matches!(
+            KernelInput::Dot(&x, &x).check(sum),
+            Err(BackendError::InputMismatch { .. })
+        ));
     }
 
     #[test]

@@ -331,10 +331,78 @@ mod x86 {
 // The backend
 // ---------------------------------------------------------------------------
 
+/// A native kernel entry point: a plain function pointer, zero overhead.
+/// Public so the thread-parallel layer ([`crate::runtime::parallel`]) can
+/// run the same entry points over per-thread slices.
 #[derive(Clone, Copy)]
-enum NativeFn {
+pub enum NativeFn {
     Dot(fn(&[f64], &[f64]) -> f64),
     Sum(fn(&[f64]) -> f64),
+}
+
+/// One rung of the ladder: every kernel class at one loop layout. The
+/// scalar/unroll/simd/avx2 × dot/kahan-dot/kahan-sum matrix is registered
+/// exactly once here; [`NativeBackend`] and the thread-parallel layer both
+/// resolve through this table, so a new style is added in one row.
+struct LadderRow {
+    style: ImplStyle,
+    naive_dot: fn(&[f64], &[f64]) -> f64,
+    kahan_dot: fn(&[f64], &[f64]) -> f64,
+    kahan_sum: fn(&[f64]) -> f64,
+}
+
+const LADDER: [LadderRow; 6] = [
+    LadderRow {
+        style: ImplStyle::Scalar,
+        naive_dot: naive_dot_scalar,
+        kahan_dot: kahan_dot_scalar,
+        kahan_sum: kahan_sum_scalar,
+    },
+    LadderRow {
+        style: ImplStyle::Unroll2,
+        naive_dot: naive_dot_unrolled::<2>,
+        kahan_dot: kahan_dot_unrolled::<2>,
+        kahan_sum: kahan_sum_unrolled::<2>,
+    },
+    LadderRow {
+        style: ImplStyle::Unroll4,
+        naive_dot: naive_dot_unrolled::<4>,
+        kahan_dot: kahan_dot_unrolled::<4>,
+        kahan_sum: kahan_sum_unrolled::<4>,
+    },
+    LadderRow {
+        style: ImplStyle::Unroll8,
+        naive_dot: naive_dot_unrolled::<8>,
+        kahan_dot: kahan_dot_unrolled::<8>,
+        kahan_sum: kahan_sum_unrolled::<8>,
+    },
+    LadderRow {
+        style: ImplStyle::SimdLanes,
+        naive_dot: naive_dot_simd,
+        kahan_dot: kahan_dot_simd,
+        kahan_sum: kahan_sum_simd,
+    },
+    LadderRow {
+        style: ImplStyle::SimdAvx2,
+        naive_dot: naive_dot_avx2,
+        kahan_dot: kahan_dot_avx2,
+        kahan_sum: kahan_sum_avx2,
+    },
+];
+
+/// Resolve a spec to its native entry point. `avx2` gates the `SimdAvx2`
+/// row (runtime feature detection is the caller's — usually the backend's —
+/// responsibility).
+pub fn native_fn(spec: KernelSpec, avx2: bool) -> Option<NativeFn> {
+    if spec.style == ImplStyle::SimdAvx2 && !avx2 {
+        return None;
+    }
+    let row = LADDER.iter().find(|r| r.style == spec.style)?;
+    Some(match spec.class {
+        KernelClass::NaiveDot => NativeFn::Dot(row.naive_dot),
+        KernelClass::KahanDot => NativeFn::Dot(row.kahan_dot),
+        KernelClass::KahanSum => NativeFn::Sum(row.kahan_sum),
+    })
 }
 
 /// A resolved native kernel (a plain function pointer — zero overhead).
@@ -349,26 +417,12 @@ impl KernelExec for NativeKernel {
     }
 
     fn run(&self, input: &KernelInput<'_>) -> Result<f64, BackendError> {
-        match self.f {
-            NativeFn::Dot(f) => {
-                let KernelInput::Dot(x, y) = *input else {
-                    return Err(BackendError::InputMismatch { spec: self.spec });
-                };
-                if x.len() != y.len() {
-                    return Err(BackendError::ShapeMismatch {
-                        lhs: x.len(),
-                        rhs: y.len(),
-                    });
-                }
-                Ok(f(x, y))
-            }
-            NativeFn::Sum(f) => {
-                let KernelInput::Sum(x) = *input else {
-                    return Err(BackendError::InputMismatch { spec: self.spec });
-                };
-                Ok(f(x))
-            }
-        }
+        input.check(self.spec)?;
+        Ok(match (self.f, *input) {
+            (NativeFn::Dot(f), KernelInput::Dot(x, y)) => f(x, y),
+            (NativeFn::Sum(f), KernelInput::Sum(x)) => f(x),
+            _ => unreachable!("check() verified the input kind"),
+        })
     }
 }
 
@@ -390,31 +444,7 @@ impl NativeBackend {
     }
 
     fn lookup(&self, spec: KernelSpec) -> Option<NativeFn> {
-        use ImplStyle::*;
-        use KernelClass::*;
-        if spec.style == SimdAvx2 && !self.avx2 {
-            return None;
-        }
-        Some(match (spec.class, spec.style) {
-            (NaiveDot, Scalar) => NativeFn::Dot(naive_dot_scalar),
-            (NaiveDot, Unroll2) => NativeFn::Dot(naive_dot_unrolled::<2>),
-            (NaiveDot, Unroll4) => NativeFn::Dot(naive_dot_unrolled::<4>),
-            (NaiveDot, Unroll8) => NativeFn::Dot(naive_dot_unrolled::<8>),
-            (NaiveDot, SimdLanes) => NativeFn::Dot(naive_dot_simd),
-            (NaiveDot, SimdAvx2) => NativeFn::Dot(naive_dot_avx2),
-            (KahanDot, Scalar) => NativeFn::Dot(kahan_dot_scalar),
-            (KahanDot, Unroll2) => NativeFn::Dot(kahan_dot_unrolled::<2>),
-            (KahanDot, Unroll4) => NativeFn::Dot(kahan_dot_unrolled::<4>),
-            (KahanDot, Unroll8) => NativeFn::Dot(kahan_dot_unrolled::<8>),
-            (KahanDot, SimdLanes) => NativeFn::Dot(kahan_dot_simd),
-            (KahanDot, SimdAvx2) => NativeFn::Dot(kahan_dot_avx2),
-            (KahanSum, Scalar) => NativeFn::Sum(kahan_sum_scalar),
-            (KahanSum, Unroll2) => NativeFn::Sum(kahan_sum_unrolled::<2>),
-            (KahanSum, Unroll4) => NativeFn::Sum(kahan_sum_unrolled::<4>),
-            (KahanSum, Unroll8) => NativeFn::Sum(kahan_sum_unrolled::<8>),
-            (KahanSum, SimdLanes) => NativeFn::Sum(kahan_sum_simd),
-            (KahanSum, SimdAvx2) => NativeFn::Sum(kahan_sum_avx2),
-        })
+        native_fn(spec, self.avx2)
     }
 }
 
@@ -574,6 +604,22 @@ mod tests {
             e_kahan <= 0.2 * e_naive,
             "kahan {e_kahan:.3e} must beat naive {e_naive:.3e} decisively"
         );
+    }
+
+    #[test]
+    fn ladder_table_covers_every_spec() {
+        for spec in KernelSpec::all() {
+            let f = native_fn(spec, true).expect("every spec has a table row");
+            match f {
+                NativeFn::Dot(_) => assert!(spec.class.is_dot(), "{spec}"),
+                NativeFn::Sum(_) => assert!(!spec.class.is_dot(), "{spec}"),
+            }
+            assert_eq!(
+                native_fn(spec, false).is_none(),
+                spec.style == ImplStyle::SimdAvx2,
+                "{spec}"
+            );
+        }
     }
 
     #[test]

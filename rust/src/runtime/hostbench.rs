@@ -7,8 +7,13 @@
 //! only adds time). Small kernels are batched so every timed sample spans
 //! at least a few tens of microseconds of work.
 //!
-//! Two entry points:
-//! * [`bench_kernel`] — any [`Backend`] kernel (native by default);
+//! Entry points:
+//! * [`bench_kernel`] — any [`Backend`] kernel (native by default) at one
+//!   size; reports best-run *and* median-of-reps metrics;
+//! * [`bench_ws_sweep`] — one kernel across a working-set size grid
+//!   (the measured analog of the simulator's Fig. 5–7 sweeps);
+//! * [`bench_scaling`] — one kernel across thread counts on the parallel
+//!   native backend (the measured analog of the Fig. 8/9 core scans);
 //! * [`bench_artifact`] (feature `pjrt`) — a named AOT artifact.
 
 use std::time::Instant;
@@ -16,6 +21,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::backend::{Backend, KernelInput, KernelSpec};
+use super::parallel::ParallelBackend;
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
@@ -40,23 +46,26 @@ pub struct KernelBenchResult {
     pub gbs_best: f64,
     /// Arithmetic throughput MFlop/s from the best run.
     pub mflops_best: f64,
+    /// Updates/s (GUP/s) from the median run — robust against one-off
+    /// interference, the headline for scaling/model comparisons.
+    pub gups_median: f64,
+    /// Arithmetic throughput MFlop/s from the median run.
+    pub mflops_median: f64,
+    /// Streamed bandwidth GB/s from the median run (consistent with the
+    /// other median metrics: gbs_median / gups_median = bytes per update).
+    pub gbs_median: f64,
     /// Cycles per flop (needs a clock estimate).
     pub cycles_per_flop: Option<f64>,
-    /// Cycles per loop update (the paper's cy/up metric).
+    /// Cycles per loop update (the paper's cy/up metric), best run.
     pub cycles_per_update: Option<f64>,
+    /// Cycles per loop update from the median run.
+    pub cycles_per_update_median: Option<f64>,
 }
 
-/// Benchmark one kernel of `backend` on fresh normal-distributed inputs of
-/// length `n`. `reps` timed samples after `warmup` executions; pass the
-/// core clock in `freq_ghz` (see [`detect_freq_ghz`]) to get cycle metrics.
-pub fn bench_kernel(
-    backend: &dyn Backend,
-    spec: KernelSpec,
-    n: usize,
-    warmup: usize,
-    reps: usize,
-    freq_ghz: Option<f64>,
-) -> Result<KernelBenchResult> {
+/// Deterministic benchmark operands for one (kernel, n): normal-distributed
+/// vectors seeded by the length only, so every thread count / backend
+/// benches the identical data.
+pub fn bench_inputs(spec: KernelSpec, n: usize) -> (Vec<f64>, Vec<f64>) {
     let mut rng = Rng::new(0xBE7C4 ^ n as u64);
     let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
     let y: Vec<f64> = if spec.class.is_dot() {
@@ -64,23 +73,34 @@ pub fn bench_kernel(
     } else {
         Vec::new()
     };
-    let input = if spec.class.is_dot() {
-        KernelInput::Dot(&x, &y)
-    } else {
-        KernelInput::Sum(&x)
-    };
+    (x, y)
+}
+
+/// Benchmark one kernel of `backend` on prepared operands (no allocation or
+/// generation on the timed path — callers reusing inputs across thread
+/// counts go through this). `reps` timed samples after `warmup` executions;
+/// pass the core clock in `freq_ghz` for cycle metrics.
+pub fn bench_prepared(
+    backend: &dyn Backend,
+    spec: KernelSpec,
+    input: &KernelInput<'_>,
+    warmup: usize,
+    reps: usize,
+    freq_ghz: Option<f64>,
+) -> Result<KernelBenchResult> {
+    let n = input.updates();
     let exec = backend.resolve(spec)?;
 
     // Batch so one timed sample covers >= ~50k updates (timer resolution).
     let batch = (50_000 / n.max(1)).max(1);
     for _ in 0..warmup.max(1) {
-        std::hint::black_box(exec.run(&input)?);
+        std::hint::black_box(exec.run(input)?);
     }
     let mut samples = Vec::with_capacity(reps.max(1));
     for _ in 0..reps.max(1) {
         let t0 = Instant::now();
         for _ in 0..batch {
-            std::hint::black_box(exec.run(&input)?);
+            std::hint::black_box(exec.run(input)?);
         }
         samples.push(t0.elapsed().as_nanos() as f64 / batch as f64);
     }
@@ -96,23 +116,139 @@ pub fn bench_kernel(
         gups_best: n as f64 / ns.min,
         gbs_best: ws_bytes as f64 / ns.min,
         mflops_best: flops as f64 / ns.min * 1000.0,
+        gups_median: n as f64 / ns.median,
+        mflops_median: flops as f64 / ns.median * 1000.0,
+        gbs_median: ws_bytes as f64 / ns.median,
         cycles_per_flop: freq_ghz.map(|f| ns.min * f / flops.max(1) as f64),
         cycles_per_update: freq_ghz.map(|f| ns.min * f / n.max(1) as f64),
+        cycles_per_update_median: freq_ghz.map(|f| ns.median * f / n.max(1) as f64),
         ns,
     })
 }
 
-/// Best-effort core clock estimate in GHz (Linux). Prefers the cpufreq
-/// *maximum* frequency — stable across runs, unlike the instantaneous
-/// governor-scaled `cpu MHz` value, which is only the fallback. Returns
-/// `None` when unavailable — cycle metrics are then omitted.
+/// Benchmark one kernel of `backend` on fresh normal-distributed inputs of
+/// length `n` (see [`bench_inputs`] / [`bench_prepared`]).
+pub fn bench_kernel(
+    backend: &dyn Backend,
+    spec: KernelSpec,
+    n: usize,
+    warmup: usize,
+    reps: usize,
+    freq_ghz: Option<f64>,
+) -> Result<KernelBenchResult> {
+    let (x, y) = bench_inputs(spec, n);
+    let input = if spec.class.is_dot() {
+        KernelInput::Dot(&x, &y)
+    } else {
+        KernelInput::Sum(&x)
+    };
+    bench_prepared(backend, spec, &input, warmup, reps, freq_ghz)
+}
+
+/// Working-set sweep: benchmark `spec` at each working-set size (bytes over
+/// all operand streams), likwid-bench style. Sizes are converted to vector
+/// lengths via the kernel's bytes-per-update, so the same byte grid is
+/// comparable across dot (16 B/update) and sum (8 B/update) kernels and
+/// against the simulator's [`crate::sim::default_sweep_sizes`] grid.
+pub fn bench_ws_sweep(
+    backend: &dyn Backend,
+    spec: KernelSpec,
+    sizes_bytes: &[u64],
+    warmup: usize,
+    reps: usize,
+    freq_ghz: Option<f64>,
+) -> Result<Vec<KernelBenchResult>> {
+    sizes_bytes
+        .iter()
+        .map(|&ws| {
+            let n = (ws / spec.class.bytes_per_update()).max(1) as usize;
+            bench_kernel(backend, spec, n, warmup, reps, freq_ghz)
+        })
+        .collect()
+}
+
+/// Core-scaling sweep: benchmark `spec` on the thread-parallel native
+/// backend for every thread count `1..=max_threads` at a fixed vector
+/// length (pick one deep in memory to probe bandwidth saturation). The
+/// operands are generated once and shared across all thread counts.
+/// Returns `(threads, result)` in thread order.
+pub fn bench_scaling(
+    spec: KernelSpec,
+    n: usize,
+    max_threads: usize,
+    warmup: usize,
+    reps: usize,
+    freq_ghz: Option<f64>,
+) -> Result<Vec<(usize, KernelBenchResult)>> {
+    let (x, y) = bench_inputs(spec, n);
+    let input = if spec.class.is_dot() {
+        KernelInput::Dot(&x, &y)
+    } else {
+        KernelInput::Sum(&x)
+    };
+    (1..=max_threads.max(1))
+        .map(|t| {
+            let backend = ParallelBackend::new(t);
+            bench_prepared(&backend, spec, &input, warmup, reps, freq_ghz).map(|r| (t, r))
+        })
+        .collect()
+}
+
+/// Where a clock estimate came from — recorded next to every cycle metric
+/// so a nominal fallback is never mistaken for a measured clock.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FreqSource {
+    /// `/sys/.../cpufreq/cpuinfo_max_freq` (stable across runs).
+    Cpufreq,
+    /// `/proc/cpuinfo` `cpu MHz` (instantaneous, governor-scaled).
+    CpuInfo,
+    /// Neither interface available: the documented nominal fallback
+    /// [`NOMINAL_FREQ_GHZ`]. Cycle metrics are then order-of-magnitude
+    /// estimates, not measurements.
+    Nominal,
+    /// `--freq-ghz` on the command line.
+    UserProvided,
+}
+
+impl FreqSource {
+    pub fn label(self) -> &'static str {
+        match self {
+            FreqSource::Cpufreq => "cpufreq",
+            FreqSource::CpuInfo => "cpuinfo",
+            FreqSource::Nominal => "nominal-fallback",
+            FreqSource::UserProvided => "cli",
+        }
+    }
+}
+
+/// Nominal clock assumed when no platform interface reports one — a
+/// middle-of-the-road server-core value so cycles/flop is never silently
+/// absent (the source is reported alongside, see [`FreqSource::Nominal`]).
+pub const NOMINAL_FREQ_GHZ: f64 = 2.5;
+
+/// Core clock estimate in GHz that always succeeds: cpufreq maximum
+/// frequency, then `/proc/cpuinfo`, then the documented
+/// [`NOMINAL_FREQ_GHZ`] fallback — with the source attached.
+pub fn freq_ghz_with_source() -> (f64, FreqSource) {
+    match detect_freq_ghz_sourced() {
+        Some((f, src)) => (f, src),
+        None => (NOMINAL_FREQ_GHZ, FreqSource::Nominal),
+    }
+}
+
+/// Platform clock estimate in GHz, `None` when no interface reports one
+/// (use [`freq_ghz_with_source`] for the never-`None` path).
 pub fn detect_freq_ghz() -> Option<f64> {
+    detect_freq_ghz_sourced().map(|(f, _)| f)
+}
+
+fn detect_freq_ghz_sourced() -> Option<(f64, FreqSource)> {
     let max_khz = std::fs::read_to_string("/sys/devices/system/cpu/cpu0/cpufreq/cpuinfo_max_freq")
         .ok()
         .and_then(|s| s.trim().parse::<f64>().ok());
     if let Some(khz) = max_khz {
         if khz > 0.0 {
-            return Some(khz / 1e6);
+            return Some((khz / 1e6, FreqSource::Cpufreq));
         }
     }
     let text = std::fs::read_to_string("/proc/cpuinfo").ok()?;
@@ -121,7 +257,7 @@ pub fn detect_freq_ghz() -> Option<f64> {
             if let Some(v) = rest.split(':').nth(1) {
                 if let Ok(mhz) = v.trim().parse::<f64>() {
                     if mhz > 0.0 {
-                        return Some(mhz / 1000.0);
+                        return Some((mhz / 1000.0, FreqSource::CpuInfo));
                     }
                 }
             }
@@ -246,6 +382,13 @@ mod tests {
         assert!(cpf > 0.0 && cpu > 0.0);
         // 5 flops per update ties the two cycle metrics together.
         assert!((cpu / cpf - 5.0).abs() < 1e-9);
+        // Median metrics are populated and consistent with the summary.
+        assert!(r.gups_median > 0.0 && r.mflops_median > 0.0);
+        assert!(r.gups_median <= r.gups_best * (1.0 + 1e-12));
+        let cpm = r.cycles_per_update_median.unwrap();
+        assert!(cpm >= cpu * (1.0 - 1e-12));
+        // Per-record consistency: gbs_median / gups_median = bytes/update.
+        assert!((r.gbs_median / r.gups_median - 16.0).abs() < 1e-9);
     }
 
     #[test]
@@ -262,6 +405,47 @@ mod tests {
     fn freq_detection_is_sane_if_present() {
         if let Some(f) = detect_freq_ghz() {
             assert!(f > 0.1 && f < 10.0, "implausible clock {f} GHz");
+        }
+    }
+
+    #[test]
+    fn freq_with_source_never_fails() {
+        let (f, src) = freq_ghz_with_source();
+        assert!(f > 0.1 && f < 10.0, "implausible clock {f} GHz");
+        if detect_freq_ghz().is_none() {
+            assert_eq!(src, FreqSource::Nominal);
+            assert_eq!(f, NOMINAL_FREQ_GHZ);
+        } else {
+            assert_ne!(src, FreqSource::Nominal);
+        }
+        assert!(!src.label().is_empty());
+    }
+
+    #[test]
+    fn ws_sweep_converts_bytes_to_lengths() {
+        let backend = NativeBackend::new();
+        let spec = KernelSpec::new(KernelClass::KahanDot, ImplStyle::SimdLanes);
+        let sizes = [4 * 1024u64, 64 * 1024];
+        let pts = bench_ws_sweep(&backend, spec, &sizes, 1, 2, None).unwrap();
+        assert_eq!(pts.len(), 2);
+        for (p, &ws) in pts.iter().zip(&sizes) {
+            assert_eq!(p.n as u64, ws / 16, "dot streams 16 B per update");
+            assert!(p.gups_median > 0.0);
+        }
+        let sum = KernelSpec::new(KernelClass::KahanSum, ImplStyle::Scalar);
+        let pts = bench_ws_sweep(&backend, sum, &sizes[..1], 1, 2, None).unwrap();
+        assert_eq!(pts[0].n as u64, sizes[0] / 8, "sum streams 8 B per update");
+    }
+
+    #[test]
+    fn scaling_sweep_covers_every_thread_count() {
+        let spec = KernelSpec::new(KernelClass::NaiveDot, ImplStyle::SimdLanes);
+        let curve = bench_scaling(spec, 1 << 14, 3, 1, 2, Some(2.0)).unwrap();
+        assert_eq!(curve.len(), 3);
+        for (i, (t, r)) in curve.iter().enumerate() {
+            assert_eq!(*t, i + 1);
+            assert_eq!(r.backend, "native-mt");
+            assert!(r.mflops_median > 0.0);
         }
     }
 }

@@ -1,6 +1,7 @@
 //! Kernel execution runtime: pluggable [`backend`]s (native Rust SIMD by
-//! default, PJRT behind the `pjrt` feature) plus the host benchmarking
-//! harness.
+//! default, PJRT behind the `pjrt` feature), the thread-[`parallel`]
+//! execution layer (cache-line-aligned slice partitioning + deterministic
+//! compensated reduction), and the host benchmarking harness.
 //!
 //! The default build is hermetic: the [`backend::NativeBackend`] implements
 //! the paper's full kernel ladder in plain Rust (with a runtime-detected
@@ -17,6 +18,7 @@ pub mod backend;
 pub mod executor;
 pub mod hostbench;
 pub mod manifest;
+pub mod parallel;
 
 pub use backend::{
     available_backends, Backend, BackendError, ImplStyle, KernelClass, KernelExec, KernelInput,
@@ -28,8 +30,12 @@ pub use backend::PjrtBackend;
 pub use executor::{Executor, RunOutput};
 #[cfg(feature = "pjrt")]
 pub use hostbench::{bench_artifact, HostBenchResult};
-pub use hostbench::{bench_kernel, detect_freq_ghz, KernelBenchResult};
+pub use hostbench::{
+    bench_inputs, bench_kernel, bench_prepared, bench_scaling, bench_ws_sweep, detect_freq_ghz,
+    freq_ghz_with_source, FreqSource, KernelBenchResult, NOMINAL_FREQ_GHZ,
+};
 pub use manifest::{Artifact, Manifest};
+pub use parallel::{compensated_tree_reduce, ParallelBackend, ThreadPool};
 
 /// Default artifact directory (relative to the repo root / cwd).
 pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

@@ -1,0 +1,406 @@
+//! Thread-parallel execution of the native kernel ladder — the layer that
+//! turns the paper's *multicore saturation* claim (Sect. 5.1, Figs. 8/9)
+//! into something this repo can measure instead of only simulate.
+//!
+//! Design:
+//!
+//! * [`ThreadPool`] partitions the iteration space into at most `T`
+//!   contiguous chunks whose boundaries are aligned to cache-line
+//!   granularity ([`CACHELINE_F64`] elements). With a 64-byte-aligned
+//!   allocation no two workers touch the same line of the operand streams;
+//!   `Vec<f64>` only guarantees element alignment, so in the worst case
+//!   each chunk *boundary* shares one straddling line with its neighbor —
+//!   O(T) lines against millions streamed, so per-worker traffic is whole
+//!   cache lines to ECM accuracy, and read-only sharing causes no
+//!   invalidation traffic anyway.
+//! * Workers are `std::thread::scope` threads: the offline crate cache has
+//!   no crossbeam/rayon, and scoped threads are the only way in std to run
+//!   borrowed slices on multiple threads without `unsafe` lifetime erasure.
+//!   The pool object itself is reusable (it owns the partition policy and
+//!   thread count); OS threads are spawned per dispatch, which for the
+//!   paper's kernels (>= tens of microseconds of work per timed pass) is
+//!   noise. Thread→core *pinning* is not available in std; we rely on the
+//!   OS scheduler, which on an otherwise idle machine behaves pinned-ish —
+//!   documented, not guaranteed.
+//! * Every worker runs an unmodified [`NativeFn`] rung on its slice, so
+//!   each thread carries its own Kahan compensation (the per-chunk kernels
+//!   already end in the compensated lane fold). The `T` partial results are
+//!   then combined by [`compensated_tree_reduce`] — a pairwise `two_sum`
+//!   tree that is *deterministic for a fixed thread count* (the combination
+//!   order depends only on the partition, never on thread finish order) and
+//!   keeps the total error within the serial compensated bound: each chunk
+//!   contributes its own Kahan-bounded error over Σ_chunk|x·y|, and the
+//!   tree adds only the exactly-tracked `two_sum` residues
+//!   (property-tested against the exact ground truth in
+//!   `tests/properties.rs`).
+//!
+//! [`ParallelBackend`] exposes all of this through the ordinary
+//! [`Backend`]/[`KernelExec`] traits, so `hostbench`, the harness and the
+//! CLI (`bench-scale`) drive threaded kernels exactly like serial ones.
+
+use std::ops::Range;
+
+use super::backend::native::{self, NativeFn};
+use super::backend::{
+    Backend, BackendError, KernelExec, KernelInput, KernelSpec, NativeBackend,
+};
+use crate::accuracy::eft::two_sum;
+
+/// f64 elements per 64-byte cache line — the chunk-boundary alignment.
+pub const CACHELINE_F64: usize = 8;
+
+/// A reusable partition-and-dispatch pool for slice-parallel kernels.
+#[derive(Clone, Debug)]
+pub struct ThreadPool {
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// A pool targeting `threads` workers (clamped to >= 1).
+    pub fn new(threads: usize) -> Self {
+        Self {
+            threads: threads.max(1),
+        }
+    }
+
+    /// Worker count this pool partitions for.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Hardware thread count of this host (>= 1).
+    pub fn available() -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
+
+    /// Deterministic partition of `0..n` into at most `threads` contiguous
+    /// chunks whose start indices are multiples of `align`. Blocks are
+    /// dealt as evenly as possible (front chunks get the remainder), and a
+    /// chunk never degenerates to empty unless `n == 0` (then one empty
+    /// chunk is returned so callers still get a partial to reduce).
+    pub fn partition(&self, n: usize, align: usize) -> Vec<Range<usize>> {
+        if n == 0 {
+            return vec![0..0];
+        }
+        let align = align.max(1);
+        let blocks = (n + align - 1) / align;
+        let t = self.threads.min(blocks);
+        let per = blocks / t;
+        let extra = blocks % t;
+        let mut v = Vec::with_capacity(t);
+        let mut block = 0;
+        for i in 0..t {
+            let nb = per + usize::from(i < extra);
+            let start = block * align;
+            let end = ((block + nb) * align).min(n);
+            v.push(start..end);
+            block += nb;
+        }
+        v
+    }
+
+    /// Run `f(worker_index, chunk_range)` over the partition of `0..n`,
+    /// returning results in partition order (independent of thread finish
+    /// order — this is what makes downstream reductions deterministic).
+    /// Single-chunk dispatches run inline on the caller's thread.
+    pub fn run_chunks<R, F>(&self, n: usize, align: usize, f: F) -> Vec<R>
+    where
+        F: Fn(usize, Range<usize>) -> R + Sync,
+        R: Send,
+    {
+        let parts = self.partition(n, align);
+        if parts.len() == 1 {
+            let r = parts[0].clone();
+            return vec![f(0, r)];
+        }
+        let mut out: Vec<Option<R>> = (0..parts.len()).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            for (i, (slot, range)) in out.iter_mut().zip(parts.iter()).enumerate() {
+                let fref = &f;
+                let range = range.clone();
+                scope.spawn(move || {
+                    *slot = Some(fref(i, range));
+                });
+            }
+        });
+        out.into_iter()
+            .map(|o| o.expect("worker produced no result"))
+            .collect()
+    }
+}
+
+/// Combine per-thread partial sums by a pairwise compensated tree: each
+/// pair is added with an exact [`two_sum`], the rounding residues ride
+/// along and are folded in once at the end. The reduction order is a fixed
+/// left-to-right pairing over the input slice, so the result is bit-stable
+/// for a given partition. The residues themselves accumulate with plain
+/// adds (which round at the residues' own tiny scale) plus the final
+/// `value + residue` add, so the reduction is not exact in general — but
+/// those second-order roundings are far inside the compensated Kahan bound
+/// the property tests pin.
+pub fn compensated_tree_reduce(parts: &[f64]) -> f64 {
+    match parts {
+        [] => 0.0,
+        [one] => *one,
+        _ => {
+            let mut nodes: Vec<(f64, f64)> = parts.iter().map(|&p| (p, 0.0)).collect();
+            while nodes.len() > 1 {
+                let mut next = Vec::with_capacity((nodes.len() + 1) / 2);
+                for pair in nodes.chunks(2) {
+                    if let [a, b] = pair {
+                        let (s, e) = two_sum(a.0, b.0);
+                        next.push((s, e + a.1 + b.1));
+                    } else {
+                        next.push(pair[0]);
+                    }
+                }
+                nodes = next;
+            }
+            let (s, e) = nodes[0];
+            s + e
+        }
+    }
+}
+
+/// A native kernel dispatched over per-thread slices with a deterministic
+/// compensated combination of the partials.
+pub struct ParallelKernel {
+    spec: KernelSpec,
+    f: NativeFn,
+    pool: ThreadPool,
+}
+
+impl ParallelKernel {
+    /// Worker count this kernel partitions for.
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+}
+
+impl KernelExec for ParallelKernel {
+    fn spec(&self) -> KernelSpec {
+        self.spec
+    }
+
+    fn run(&self, input: &KernelInput<'_>) -> Result<f64, BackendError> {
+        input.check(self.spec)?;
+        let partials = match (self.f, *input) {
+            (NativeFn::Dot(f), KernelInput::Dot(x, y)) => self
+                .pool
+                .run_chunks(x.len(), CACHELINE_F64, |_, r| f(&x[r.clone()], &y[r])),
+            (NativeFn::Sum(f), KernelInput::Sum(x)) => {
+                self.pool.run_chunks(x.len(), CACHELINE_F64, |_, r| f(&x[r]))
+            }
+            _ => unreachable!("check() verified the input kind"),
+        };
+        Ok(compensated_tree_reduce(&partials))
+    }
+}
+
+/// The thread-parallel native backend: the same kernel ladder as
+/// [`NativeBackend`], each kernel executed on `threads` workers over
+/// cache-line-aligned slices.
+pub struct ParallelBackend {
+    inner: NativeBackend,
+    threads: usize,
+}
+
+impl ParallelBackend {
+    /// A backend running every kernel on `threads` workers (>= 1).
+    pub fn new(threads: usize) -> Self {
+        Self {
+            inner: NativeBackend::new(),
+            threads: threads.max(1),
+        }
+    }
+
+    /// One worker per available hardware thread.
+    pub fn all_cores() -> Self {
+        Self::new(ThreadPool::available())
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Is the AVX2 style usable on this host?
+    pub fn has_avx2(&self) -> bool {
+        self.inner.has_avx2()
+    }
+}
+
+impl Backend for ParallelBackend {
+    fn name(&self) -> &str {
+        "native-mt"
+    }
+
+    fn kernels(&self) -> Vec<KernelSpec> {
+        self.inner.kernels()
+    }
+
+    fn resolve(&self, spec: KernelSpec) -> Result<Box<dyn KernelExec + '_>, BackendError> {
+        match native::native_fn(spec, self.inner.has_avx2()) {
+            Some(f) => Ok(Box::new(ParallelKernel {
+                spec,
+                f,
+                pool: ThreadPool::new(self.threads),
+            })),
+            None => Err(BackendError::Unsupported {
+                backend: self.name().to_string(),
+                spec,
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accuracy::exact::{exact_dot, exact_sum};
+    use crate::runtime::backend::{ImplStyle, KernelClass};
+    use crate::util::rng::Rng;
+
+    fn randvec(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn partition_is_aligned_disjoint_and_covering() {
+        for threads in [1usize, 2, 3, 7, 16] {
+            let pool = ThreadPool::new(threads);
+            for n in [0usize, 1, 7, 8, 9, 64, 100, 1003, 4096] {
+                let parts = pool.partition(n, CACHELINE_F64);
+                assert!(parts.len() <= threads, "n={n} T={threads}: {parts:?}");
+                let mut cursor = 0;
+                for r in &parts {
+                    assert_eq!(r.start, cursor, "n={n} T={threads}: {parts:?}");
+                    assert_eq!(r.start % CACHELINE_F64, 0, "unaligned start: {parts:?}");
+                    assert!(r.end > r.start || n == 0, "empty chunk: {parts:?}");
+                    cursor = r.end;
+                }
+                assert_eq!(cursor, n, "partition must cover 0..{n}: {parts:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_chunks_orders_results_by_partition() {
+        let pool = ThreadPool::new(4);
+        let got = pool.run_chunks(64, CACHELINE_F64, |i, r| (i, r.start, r.end));
+        assert_eq!(got.len(), 4);
+        for (i, &(wi, s, e)) in got.iter().enumerate() {
+            assert_eq!(wi, i);
+            assert_eq!((s, e), (i * 16, i * 16 + 16));
+        }
+    }
+
+    #[test]
+    fn tree_reduce_small_cases() {
+        assert_eq!(compensated_tree_reduce(&[]), 0.0);
+        assert_eq!(compensated_tree_reduce(&[-0.0]).to_bits(), (-0.0f64).to_bits());
+        assert_eq!(compensated_tree_reduce(&[1.0, 2.0, 3.0]), 6.0);
+        // Catastrophic cancellation across partials: the tree's two_sum
+        // residues recover what a naive left fold loses.
+        let parts = [1e16, 3.25, -1e16, 2.5];
+        assert_eq!(compensated_tree_reduce(&parts), 5.75);
+    }
+
+    #[test]
+    fn parallel_matches_serial_ground_truth() {
+        let x = randvec(4099, 11); // ragged: not a multiple of 8
+        let y = randvec(4099, 12);
+        let want = exact_dot(&x, &y);
+        let cond: f64 = x.iter().zip(&y).map(|(a, b)| (a * b).abs()).sum();
+        for threads in [1usize, 2, 3, 8] {
+            let backend = ParallelBackend::new(threads);
+            for spec in backend.kernels() {
+                if spec.class != KernelClass::KahanDot {
+                    continue;
+                }
+                let got = backend.run(spec, &KernelInput::Dot(&x, &y)).unwrap();
+                assert!(
+                    (got - want).abs() <= 8.0 * f64::EPSILON * cond,
+                    "{spec} T={threads}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_sum_matches_exact() {
+        let x = randvec(2049, 21);
+        let want = exact_sum(&x);
+        let abs: f64 = x.iter().map(|v| v.abs()).sum();
+        let backend = ParallelBackend::new(3);
+        let spec = KernelSpec::new(KernelClass::KahanSum, ImplStyle::SimdLanes);
+        let got = backend.run(spec, &KernelInput::Sum(&x)).unwrap();
+        assert!((got - want).abs() <= 8.0 * f64::EPSILON * abs);
+    }
+
+    #[test]
+    fn single_thread_is_bit_identical_to_serial() {
+        let x = randvec(1003, 31);
+        let y = randvec(1003, 32);
+        let serial = NativeBackend::new();
+        let par = ParallelBackend::new(1);
+        for spec in serial.kernels() {
+            let input = if spec.class.is_dot() {
+                KernelInput::Dot(&x, &y)
+            } else {
+                KernelInput::Sum(&x)
+            };
+            let a = serial.run(spec, &input).unwrap();
+            let b = par.run(spec, &input).unwrap();
+            assert_eq!(a.to_bits(), b.to_bits(), "{spec}");
+        }
+    }
+
+    #[test]
+    fn fixed_thread_count_is_deterministic() {
+        let x = randvec(8192, 41);
+        let y = randvec(8192, 42);
+        for threads in [2usize, 5, 8] {
+            let backend = ParallelBackend::new(threads);
+            let spec = KernelSpec::new(KernelClass::KahanDot, ImplStyle::SimdLanes);
+            let a = backend.run(spec, &KernelInput::Dot(&x, &y)).unwrap();
+            for _ in 0..5 {
+                let b = backend.run(spec, &KernelInput::Dot(&x, &y)).unwrap();
+                assert_eq!(a.to_bits(), b.to_bits(), "T={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs_parallel() {
+        let backend = ParallelBackend::new(8);
+        for spec in backend.kernels() {
+            let got = if spec.class.is_dot() {
+                backend.run(spec, &KernelInput::Dot(&[], &[])).unwrap()
+            } else {
+                backend.run(spec, &KernelInput::Sum(&[])).unwrap()
+            };
+            assert_eq!(got, 0.0, "{spec} on empty input");
+            let one = if spec.class.is_dot() {
+                backend.run(spec, &KernelInput::Dot(&[3.0], &[2.0])).unwrap()
+            } else {
+                backend.run(spec, &KernelInput::Sum(&[6.0])).unwrap()
+            };
+            assert_eq!(one, 6.0, "{spec} on length-1 input");
+        }
+    }
+
+    #[test]
+    fn rejects_mismatched_inputs_like_serial() {
+        let backend = ParallelBackend::new(2);
+        let spec = KernelSpec::new(KernelClass::KahanDot, ImplStyle::SimdLanes);
+        let err = backend
+            .run(spec, &KernelInput::Dot(&[1.0], &[1.0, 2.0]))
+            .unwrap_err();
+        assert!(matches!(err, BackendError::ShapeMismatch { .. }));
+        let err = backend.run(spec, &KernelInput::Sum(&[1.0])).unwrap_err();
+        assert!(matches!(err, BackendError::InputMismatch { .. }));
+    }
+}

@@ -281,8 +281,10 @@ mod tests {
     fn knc_untuned_pays_exposed_latency() {
         let m = knights_corner();
         let k = kernel_for(&m, Variant::NaiveSimd, Precision::Sp, MemLevel::Mem);
-        let tuned = data_cycles(&m, &k, 512 * MIB, &MeasureOpts { smt: 1, untuned: false, seed: 1 });
-        let untuned = data_cycles(&m, &k, 512 * MIB, &MeasureOpts { smt: 1, untuned: true, seed: 1 });
+        let tuned_opts = MeasureOpts { smt: 1, untuned: false, seed: 1 };
+        let untuned_opts = MeasureOpts { smt: 1, untuned: true, seed: 1 };
+        let tuned = data_cycles(&m, &k, 512 * MIB, &tuned_opts);
+        let untuned = data_cycles(&m, &k, 512 * MIB, &untuned_opts);
         assert!(
             untuned.cycles > tuned.cycles + 30.0,
             "untuned {} vs tuned {}",

@@ -128,7 +128,8 @@ fn kahan_for_free_in_memory_everywhere() {
         };
         let opts = MeasureOpts { smt, untuned: false, seed: 1 };
         let naive = ecm::derive::kernel_for(&m, Variant::NaiveSimd, Precision::Sp, MemLevel::Mem);
-        let kahan = ecm::derive::kernel_for(&m, Variant::KahanSimdFma, Precision::Sp, MemLevel::Mem);
+        let kahan =
+            ecm::derive::kernel_for(&m, Variant::KahanSimdFma, Precision::Sp, MemLevel::Mem);
         let n_mem = sim::sweep(&m, &naive, &[4 * GIB], &opts)[0].cy_per_cl;
         let k_mem = sim::sweep(&m, &kahan, &[4 * GIB], &opts)[0].cy_per_cl;
         assert!(

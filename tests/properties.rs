@@ -11,6 +11,7 @@ use kahan_ecm::ptest::property;
 use kahan_ecm::runtime::backend::{
     native, Backend, ImplStyle, KernelClass, KernelInput, KernelSpec, NativeBackend,
 };
+use kahan_ecm::runtime::parallel::{compensated_tree_reduce, ParallelBackend, ThreadPool};
 use kahan_ecm::sim::{self, simulate_core, MeasureOpts};
 use kahan_ecm::util::rng::Rng;
 use kahan_ecm::util::units::Precision;
@@ -302,6 +303,124 @@ fn native_kahan_two_ulp_on_benign_inputs() {
             );
         }
     }
+}
+
+/// Thread-parallel execution is deterministic at a fixed thread count: the
+/// partition depends only on (n, T) and the compensated tree combines
+/// partials in partition order, so repeated runs are bit-identical — and
+/// T = 1 is bit-identical to the serial backend.
+#[test]
+fn parallel_kahan_deterministic_at_fixed_threads() {
+    let serial = NativeBackend::new();
+    property("parallel deterministic, T=1 == serial", 20, |g| {
+        let n = g.usize(0, 3000);
+        let x = g.vec_f64_log(n, -12, 12);
+        let y = g.vec_f64_log(n, -12, 12);
+        let input = KernelInput::Dot(&x, &y);
+        let spec = KernelSpec::new(KernelClass::KahanDot, ImplStyle::SimdLanes);
+        for threads in [1usize, 2, 3, 8] {
+            let par = ParallelBackend::new(threads);
+            let a = par.run(spec, &input).unwrap();
+            let b = par.run(spec, &input).unwrap();
+            assert_eq!(a.to_bits(), b.to_bits(), "T={threads} n={n}");
+        }
+        let s = serial.run(spec, &input).unwrap();
+        let p1 = ParallelBackend::new(1).run(spec, &input).unwrap();
+        assert_eq!(s.to_bits(), p1.to_bits(), "n={n}");
+    });
+}
+
+/// The parallel Kahan dot stays within the serial compensated error bound
+/// for any thread count: each worker carries its own compensation over its
+/// slice and the tree reduction only adds exactly-tracked two_sum residues,
+/// so the n-independent 8·eps·Σ|x·y| bound survives the partitioning.
+#[test]
+fn parallel_kahan_within_compensated_bound() {
+    property("parallel kahan within paper bound", 25, |g| {
+        let n = g.usize(4, 400) * 2 + 4;
+        let ce = g.f64_range(2.0, 30.0);
+        let mut rng = Rng::new(g.u64(0, u64::MAX - 1));
+        let (x, y, exact) = ill_conditioned_dot(n, 2f64.powf(ce), &mut rng);
+        let cond_sum: f64 = x.iter().zip(&y).map(|(a, b)| (a * b).abs()).sum();
+        let input = KernelInput::Dot(&x, &y);
+        for threads in [1usize, 2, 3, 8] {
+            let par = ParallelBackend::new(threads);
+            for style in [ImplStyle::Scalar, ImplStyle::SimdLanes] {
+                let spec = KernelSpec::new(KernelClass::KahanDot, style);
+                let got = par.run(spec, &input).unwrap();
+                assert!(
+                    (got - exact).abs() <= 8.0 * f64::EPSILON * cond_sum,
+                    "{spec} T={threads}: err {} > bound {} (n = {n}, cond 2^{ce:.1})",
+                    (got - exact).abs(),
+                    8.0 * f64::EPSILON * cond_sum
+                );
+            }
+        }
+    });
+}
+
+/// The naive-vs-Kahan error ordering of the serial backends survives
+/// threading: aggregated over ill-conditioned draws, the threaded Kahan dot
+/// stays clearly more accurate than the threaded naive dot. The margin is
+/// thinner than in the serial test (geomean ~2.5 vs ~4+, validated against
+/// a bit-exact replica): chunking *helps* the naive kernel, because the
+/// cross-chunk combination goes through the compensated tree even for naive
+/// partials — only within-chunk roundings remain uncompensated.
+#[test]
+fn parallel_error_ordering_still_holds() {
+    let naive = KernelSpec::new(KernelClass::NaiveDot, ImplStyle::SimdLanes);
+    let kahan = KernelSpec::new(KernelClass::KahanDot, ImplStyle::SimdLanes);
+    let mut rng = Rng::new(2024);
+    for threads in [2usize, 3, 8] {
+        let par = ParallelBackend::new(threads);
+        let mut kahan_wins = 0;
+        let mut trials = 0;
+        let mut ratios = Vec::new();
+        for &ce in &[12, 24, 36, 48] {
+            for _ in 0..5 {
+                let (x, y, exact) = ill_conditioned_dot(512, 2f64.powi(ce), &mut rng);
+                let input = KernelInput::Dot(&x, &y);
+                let e_naive = (par.run(naive, &input).unwrap() - exact).abs();
+                let e_kahan = (par.run(kahan, &input).unwrap() - exact).abs();
+                trials += 1;
+                if e_kahan <= e_naive {
+                    kahan_wins += 1;
+                }
+                ratios.push((e_naive + 1e-300) / (e_kahan + 1e-300));
+            }
+        }
+        assert!(
+            kahan_wins >= trials / 2 + 1,
+            "T={threads}: kahan won only {kahan_wins}/{trials}"
+        );
+        let g = kahan_ecm::util::stats::geomean(&ratios);
+        assert!(g >= 1.8, "T={threads}: error geomean ratio only {g}");
+    }
+}
+
+/// The compensated tree reduction is exact whenever the true sum of the
+/// partials is representable: recovered roundings ride the residue channel.
+#[test]
+fn tree_reduce_recovers_representable_sums() {
+    property("tree reduce exact on representable sums", 60, |g| {
+        // Integers scaled by a power of two: all intermediate two_sum
+        // residues and the final sum are representable, so the reduction
+        // must be exact regardless of magnitude spread.
+        let t = g.usize(1, 24);
+        let scale = 2f64.powi(g.u64(0, 40) as i32);
+        let parts: Vec<f64> = (0..t)
+            .map(|_| (g.u64(0, 1 << 20) as f64 - (1 << 19) as f64) * scale)
+            .collect();
+        let want: f64 = parts.iter().sum::<f64>(); // exact: all same scale, 20-bit ints
+        let got = compensated_tree_reduce(&parts);
+        assert_eq!(got, want, "{parts:?}");
+        // And the partition machinery it rides on covers the index space.
+        let pool = ThreadPool::new(t);
+        let n = g.usize(0, 5000);
+        let ranges = pool.partition(n, 8);
+        let covered: usize = ranges.iter().map(|r| r.end - r.start).sum();
+        assert_eq!(covered, n);
+    });
 }
 
 /// The portable-SIMD layouts are bit-identical to their 4-chain unrolled
