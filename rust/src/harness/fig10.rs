@@ -8,7 +8,8 @@ use anyhow::Result;
 use crate::arch::{all_machines, Machine};
 use crate::ecm::{self, MemLevel};
 use crate::isa::Variant;
-use crate::runtime::backend::{ImplStyle, KernelClass, KernelSpec};
+use crate::runtime::backend::native::preferred_kahan_style;
+use crate::runtime::backend::{KernelClass, KernelSpec};
 use crate::runtime::hostbench::{bench_kernel, freq_ghz_with_source};
 use crate::runtime::parallel::ParallelBackend;
 use crate::sim::{self, MeasureOpts};
@@ -164,7 +165,8 @@ pub fn fig10b(ctx: &Ctx) -> Result<ExperimentOutput> {
     }
     // The "fifth machine": the same single-thread vs full-chip comparison
     // measured live on this host with the thread-parallel native backend
-    // (manual SIMD Kahan analog: AVX2 rung when available, portable lanes
+    // (manual SIMD Kahan analog: the widest unrolled intrinsic rung the
+    // host supports — 8×-unrolled AVX-512 or AVX2 — portable lanes
     // otherwise).
     if ctx.backend_enabled("native") {
         let (tmax, n, warm, reps) =
@@ -172,11 +174,7 @@ pub fn fig10b(ctx: &Ctx) -> Result<ExperimentOutput> {
         let (freq, src) = freq_ghz_with_source();
         let single_backend = ParallelBackend::new(1);
         let chip_backend = ParallelBackend::new(tmax);
-        let style = if single_backend.has_avx2() {
-            ImplStyle::SimdAvx2
-        } else {
-            ImplStyle::SimdLanes
-        };
+        let style = preferred_kahan_style(single_backend.caps());
         let spec = KernelSpec::new(KernelClass::KahanDot, style);
         let single = bench_kernel(&single_backend, spec, n, warm, reps, Some(freq))?;
         let chip = bench_kernel(&chip_backend, spec, n, warm, reps, Some(freq))?;

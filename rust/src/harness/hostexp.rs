@@ -78,15 +78,20 @@ fn native_part(ctx: &Ctx, out: &mut ExperimentOutput) -> Result<()> {
         ),
     );
     out.note(format!(
-        "Native backend: avx2 = {}, clock estimate = {freq_val:.2} GHz (via {}).",
+        "Native backend: avx2 = {}, avx512 = {}, clock estimate = {freq_val:.2} GHz (via {}).",
         backend.has_avx2(),
+        backend.has_avx512(),
         freq_src.label()
     ));
     out.note(
         "Interpretation: in cache the Kahan ladder costs up to ~4x the naive dot \
          (extra compensation arithmetic); as the working set moves to memory the \
          unrolled+SIMD Kahan variants converge to the naive throughput — the \
-         paper's 'Kahan for free' claim, now measured natively on this host.",
+         paper's 'Kahan for free' claim, now measured natively on this host. The \
+         avx2u2/u4/u8 (and avx512*) rungs carry 2/4/8 independent vector \
+         accumulator chains: compare them against the single-accumulator avx2 \
+         rung to see the latency→throughput transition of the paper's Fig. 1 \
+         ladder in cache-resident working sets.",
     );
     Ok(())
 }

@@ -34,12 +34,16 @@ use super::output::ExperimentOutput;
 
 /// The ISA-model variant corresponding to a native kernel spec, for the
 /// model overlay (`None` when the model has no analog — the sum kernels).
-/// The native kernels are f64, so pair with [`Precision::Dp`].
+/// The native kernels are f64, so pair with [`Precision::Dp`]. Every
+/// explicit-intrinsic tier (AVX2 and AVX-512, single- or multi-
+/// accumulator) maps to the fused-product model variant; the in-memory
+/// model curves are transfer-bound, so unroll width does not change the
+/// analog.
 pub fn variant_for(spec: KernelSpec) -> Option<Variant> {
     match (spec.class, spec.style) {
         (KernelClass::NaiveDot, _) => Some(Variant::NaiveSimd),
         (KernelClass::KahanDot, ImplStyle::Scalar) => Some(Variant::KahanScalar),
-        (KernelClass::KahanDot, ImplStyle::SimdAvx2) => Some(Variant::KahanSimdFma),
+        (KernelClass::KahanDot, s) if s.uses_fma() => Some(Variant::KahanSimdFma),
         (KernelClass::KahanDot, _) => Some(Variant::KahanSimd),
         (KernelClass::KahanSum, _) => None,
     }
@@ -245,6 +249,14 @@ mod tests {
             variant_for(KernelSpec::new(KernelClass::KahanDot, ImplStyle::SimdAvx2)),
             Some(Variant::KahanSimdFma)
         );
+        // The whole unrolled/AVX-512 tier shares the fused-product analog.
+        for style in [ImplStyle::Avx2U2, ImplStyle::Avx2U8, ImplStyle::Avx512U8] {
+            assert_eq!(
+                variant_for(KernelSpec::new(KernelClass::KahanDot, style)),
+                Some(Variant::KahanSimdFma),
+                "{style:?}"
+            );
+        }
         assert_eq!(
             variant_for(KernelSpec::new(KernelClass::KahanSum, ImplStyle::SimdLanes)),
             None

@@ -21,20 +21,28 @@
 //!   pluggable execution-backend subsystem running the paper's full kernel
 //!   ladder. The default [`runtime::backend::NativeBackend`] implements
 //!   naive dot, Kahan dot and Kahan sum in scalar, 2×/4×/8×-unrolled,
-//!   portable-SIMD and runtime-detected AVX2 form — pure Rust, so the
-//!   "blueprint" claim (Sect. 6) executes on *any* host with zero exotic
-//!   dependencies. [`runtime::parallel::ParallelBackend`] lifts every rung
-//!   onto worker threads: operand streams are split into cache-line-aligned
-//!   per-thread slices (each thread keeps its own Kahan compensation) and
-//!   the partials combine through a deterministic compensated tree
-//!   reduction — bit-stable at a fixed thread count, and still within the
-//!   serial compensated error bound. This is what lets the paper's
-//!   *multicore saturation* claim (Figs. 8–10) be measured live
-//!   (`bench-scale`, the `scale` experiment) and overlaid with the
-//!   [`sim::multicore`] contention model and the ECM memory terms. The
-//!   optional `pjrt` cargo feature adds a second backend that runs the
-//!   AOT-compiled JAX/Pallas artifacts through PJRT, and [`accuracy`]
-//!   provides the exact ground truth all of them are validated against.
+//!   portable-SIMD, runtime-detected AVX2 (single- *and* 2×/4×/8×
+//!   multi-vector-accumulator — the register unrolling that breaks the
+//!   FMA/ADD latency chain, the paper's headline transformation) and,
+//!   behind the `avx512` cargo feature, 8-lane AVX-512 form — pure Rust,
+//!   so the "blueprint" claim (Sect. 6) executes on *any* host with zero
+//!   exotic dependencies. Benchmark operands come from the 64-byte-aligned
+//!   [`runtime::arena`], so the intrinsic kernels take their aligned-load
+//!   fast path and NUMA pages are first-touched by the worker that later
+//!   streams them. [`runtime::parallel::ParallelBackend`] lifts every rung
+//!   onto a *persistent parked-worker pool* (spawned once per backend —
+//!   timed samples contain kernel execution, not thread creation):
+//!   operand streams are split into cache-line-aligned per-thread slices
+//!   (each thread keeps its own Kahan compensation) and the partials
+//!   combine through a deterministic compensated tree reduction —
+//!   bit-stable at a fixed thread count, and still within the serial
+//!   compensated error bound. This is what lets the paper's *multicore
+//!   saturation* claim (Figs. 8–10) be measured live (`bench-scale`, the
+//!   `scale` experiment) and overlaid with the [`sim::multicore`]
+//!   contention model and the ECM memory terms. The optional `pjrt` cargo
+//!   feature adds a second backend that runs the AOT-compiled JAX/Pallas
+//!   artifacts through PJRT, and [`accuracy`] provides the exact ground
+//!   truth all of them are validated against.
 //!
 //! The [`harness`] module regenerates every table and figure of the paper;
 //! [`coordinator`] wires it all into the `kahan-ecm` CLI.

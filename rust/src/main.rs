@@ -27,6 +27,7 @@ use kahan_ecm::coordinator::{all_experiments, assemble_report, find, run_paralle
 use kahan_ecm::ecm::{self, MemLevel};
 use kahan_ecm::harness::{scaleexp, Ctx};
 use kahan_ecm::isa::Variant;
+use kahan_ecm::runtime::backend::native::SimdCaps;
 use kahan_ecm::runtime::backend::{Backend, ImplStyle, KernelClass, KernelSpec, NativeBackend};
 use kahan_ecm::runtime::hostbench::{
     bench_kernel, bench_scaling, bench_ws_sweep, detect_freq_ghz, freq_ghz_with_source,
@@ -310,6 +311,7 @@ fn cmd_bench_native(raw: Vec<String>) -> ExitCode {
     let mut root = BTreeMap::new();
     root.insert("backend".to_string(), Json::Str("native".to_string()));
     root.insert("avx2".to_string(), Json::Bool(backend.has_avx2()));
+    root.insert("avx512".to_string(), Json::Bool(backend.has_avx512()));
     root.insert("freq_ghz".to_string(), Json::Num(freq_val));
     root.insert(
         "freq_source".to_string(),
@@ -328,15 +330,24 @@ fn cmd_bench_native(raw: Vec<String>) -> ExitCode {
 }
 
 /// Kernels on the bench-scale curves: the paper's naive-vs-Kahan SIMD pair,
-/// plus the AVX2 rungs when the host has them.
-fn scale_kernels(avx2: bool) -> Vec<KernelSpec> {
+/// plus — per available host tier — the single-accumulator AVX2 rungs (the
+/// latency-bound baseline), the 8×-unrolled AVX2 rungs (the paper's
+/// throughput-saturating layout) and the 8×-unrolled AVX-512 rungs.
+fn scale_kernels(caps: SimdCaps) -> Vec<KernelSpec> {
     let mut v = vec![
         KernelSpec::new(KernelClass::NaiveDot, ImplStyle::SimdLanes),
         KernelSpec::new(KernelClass::KahanDot, ImplStyle::SimdLanes),
     ];
-    if avx2 {
-        v.push(KernelSpec::new(KernelClass::NaiveDot, ImplStyle::SimdAvx2));
-        v.push(KernelSpec::new(KernelClass::KahanDot, ImplStyle::SimdAvx2));
+    let mut pair = |style| {
+        v.push(KernelSpec::new(KernelClass::NaiveDot, style));
+        v.push(KernelSpec::new(KernelClass::KahanDot, style));
+    };
+    if caps.avx2 {
+        pair(ImplStyle::SimdAvx2);
+        pair(ImplStyle::Avx2U8);
+    }
+    if caps.avx512 {
+        pair(ImplStyle::Avx512U8);
     }
     v
 }
@@ -396,7 +407,7 @@ fn cmd_bench_scale(raw: Vec<String>) -> ExitCode {
     };
     let out_path = args.opt_or("out", "BENCH_scaling.json").to_string();
 
-    let avx2 = NativeBackend::new().has_avx2();
+    let caps = SimdCaps::detect();
     let m = scaleexp::host_model(freq, threads as u32);
     eprintln!(
         "bench-scale: T = 1..={threads}, n = {n}, clock = {freq:.2} GHz ({}) ...",
@@ -407,7 +418,7 @@ fn cmd_bench_scale(raw: Vec<String>) -> ExitCode {
         "kernel", "T", "ns (median)", "MFlop/s", "model MFlop/s", "GUP/s", "model GUP/s",
     ]);
     let mut scaling_json = Vec::new();
-    for spec in scale_kernels(avx2) {
+    for spec in scale_kernels(caps) {
         let curve = match bench_scaling(spec, n, threads, warmup, reps, Some(freq)) {
             Ok(c) => c,
             Err(e) => {
@@ -469,7 +480,7 @@ fn cmd_bench_scale(raw: Vec<String>) -> ExitCode {
         let mut st = Table::new([
             "kernel", "ws", "MFlop/s", "GUP/s", "model GUP/s", "model cy/CL", "model data cy/CL",
         ]);
-        for spec in scale_kernels(avx2) {
+        for spec in scale_kernels(caps) {
             let pts = match bench_ws_sweep(&backend, spec, &sizes, warmup, reps, Some(freq)) {
                 Ok(p) => p,
                 Err(e) => {
@@ -514,7 +525,8 @@ fn cmd_bench_scale(raw: Vec<String>) -> ExitCode {
     let n_curves = scaling_json.len();
     let mut root = BTreeMap::new();
     root.insert("backend".to_string(), Json::Str("native-mt".to_string()));
-    root.insert("avx2".to_string(), Json::Bool(avx2));
+    root.insert("avx2".to_string(), Json::Bool(caps.avx2));
+    root.insert("avx512".to_string(), Json::Bool(caps.avx512));
     root.insert("threads_max".to_string(), Json::Num(threads as f64));
     root.insert("n".to_string(), Json::Num(n as f64));
     root.insert("freq_ghz".to_string(), Json::Num(freq));
@@ -688,9 +700,10 @@ fn cmd_info() -> ExitCode {
     println!("machines: HSW, BDW, KNC, PWR8 (+HOST, +custom configs)");
     let native = NativeBackend::new();
     println!(
-        "backend: native ({} kernels, avx2 = {}, clock = {})",
+        "backend: native ({} kernels, avx2 = {}, avx512 = {}, clock = {})",
         native.kernels().len(),
         native.has_avx2(),
+        native.has_avx512(),
         detect_freq_ghz()
             .map(|f| format!("{f:.2} GHz"))
             .unwrap_or_else(|| "unknown".to_string())

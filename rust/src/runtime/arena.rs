@@ -1,0 +1,232 @@
+//! 64-byte-aligned operand arena for the measured kernel paths.
+//!
+//! `Vec<f64>` guarantees only element alignment (8 bytes), so explicit-SIMD
+//! kernels must use unaligned loads and thread-parallel chunk boundaries
+//! can straddle cache lines. [`AlignedVec`] allocates through a manual
+//! [`std::alloc::Layout`] with [`ALIGN`]-byte (cache-line / AVX-512 vector)
+//! alignment instead, which buys the whole measured path three properties:
+//!
+//! * every `_mm256`/`_mm512` load in the kernel hot loops takes the
+//!   aligned fast path (`loadu` becomes `load` — the kernels probe the
+//!   base pointer once per call, see `runtime::backend::native`);
+//! * the cache-line-aligned chunk partition of
+//!   [`ThreadPool`](crate::runtime::parallel::ThreadPool) is exact: no two
+//!   workers ever share a straddling line;
+//! * with [`AlignedVec::first_touch_copy`], pages are first *written* by
+//!   the worker that will later stream them, so on a NUMA system
+//!   first-touch placement puts each chunk's pages on the reading socket.
+//!   (std has no explicit NUMA API; first-touch via the owning worker is
+//!   the portable idiom, and it rides the deterministic chunk→worker
+//!   assignment of the persistent pool.)
+//!
+//! The type derefs to `[f64]`, so every backend/kernel API that takes
+//! slices accepts arena buffers unchanged.
+
+use std::alloc::{alloc_zeroed, dealloc, handle_alloc_error, Layout};
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::ptr::NonNull;
+
+use super::parallel::{CACHELINE_F64, ThreadPool};
+
+/// Arena alignment in bytes: one cache line, which is also the widest
+/// vector register (AVX-512) — so one constant serves both purposes.
+pub const ALIGN: usize = 64;
+
+/// A fixed-length, 64-byte-aligned `f64` buffer (see the module docs).
+pub struct AlignedVec {
+    ptr: NonNull<f64>,
+    len: usize,
+}
+
+// SAFETY: AlignedVec uniquely owns its allocation (no aliasing handles),
+// and f64 is Send + Sync; moving the buffer or sharing &AlignedVec across
+// threads is therefore sound.
+unsafe impl Send for AlignedVec {}
+unsafe impl Sync for AlignedVec {}
+
+impl AlignedVec {
+    fn layout(len: usize) -> Layout {
+        // `Layout::array` checks the byte-size multiplication, so an
+        // absurd `len` panics here instead of wrapping into a too-small
+        // allocation that `Deref` would then overrun.
+        Layout::array::<f64>(len)
+            .and_then(|l| l.align_to(ALIGN))
+            .expect("arena layout overflow")
+    }
+
+    /// An empty buffer (no allocation; pointer is a well-aligned dangling
+    /// sentinel so alignment invariants hold even for `len == 0`).
+    pub fn empty() -> Self {
+        Self {
+            ptr: NonNull::new(ALIGN as *mut f64).expect("non-null sentinel"),
+            len: 0,
+        }
+    }
+
+    /// A zero-initialized buffer of `len` elements. Uses `alloc_zeroed`,
+    /// which on Linux typically maps copy-on-write zero pages — physical
+    /// placement is then decided by whoever *writes* first (the property
+    /// [`Self::first_touch_copy`] exploits).
+    pub fn zeroed(len: usize) -> Self {
+        if len == 0 {
+            return Self::empty();
+        }
+        let layout = Self::layout(len);
+        // SAFETY: layout has non-zero size (len > 0).
+        let raw = unsafe { alloc_zeroed(layout) } as *mut f64;
+        let Some(ptr) = NonNull::new(raw) else {
+            handle_alloc_error(layout);
+        };
+        Self { ptr, len }
+    }
+
+    /// A buffer initialized by `f(i)` per index, written serially by the
+    /// calling thread.
+    pub fn from_fn(len: usize, mut f: impl FnMut(usize) -> f64) -> Self {
+        let mut v = Self::zeroed(len);
+        for (i, slot) in v.iter_mut().enumerate() {
+            *slot = f(i);
+        }
+        v
+    }
+
+    /// An aligned copy of `src`, written serially by the calling thread.
+    pub fn copy_from(src: &[f64]) -> Self {
+        let mut v = Self::zeroed(src.len());
+        v.copy_from_slice(src);
+        v
+    }
+
+    /// An aligned copy of `src` whose pages are first-touched by the
+    /// workers of `pool`, chunk by chunk, using the *same* cache-line-
+    /// aligned partition and chunk→worker assignment the pool later
+    /// dispatches kernels with — so each worker's operand pages land
+    /// NUMA-local to it. The contents are bit-identical to `src`
+    /// regardless of the worker count.
+    pub fn first_touch_copy(src: &[f64], pool: &ThreadPool) -> Self {
+        let v = Self::zeroed(src.len());
+        let base = v.ptr.as_ptr() as usize;
+        pool.run_chunks(src.len(), CACHELINE_F64, |_, r| {
+            let dst = base as *mut f64;
+            // SAFETY: chunks are disjoint in-bounds ranges of an allocation
+            // this function owns; `src` and the arena never overlap.
+            unsafe {
+                std::ptr::copy_nonoverlapping(src[r.clone()].as_ptr(), dst.add(r.start), r.len());
+            }
+        });
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_ptr(&self) -> *const f64 {
+        self.ptr.as_ptr()
+    }
+}
+
+impl Deref for AlignedVec {
+    type Target = [f64];
+
+    fn deref(&self) -> &[f64] {
+        // SAFETY: ptr/len describe a live allocation (or the aligned
+        // dangling sentinel with len 0, which from_raw_parts permits).
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl DerefMut for AlignedVec {
+    fn deref_mut(&mut self) -> &mut [f64] {
+        // SAFETY: as above, plus &mut self guarantees uniqueness.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl Drop for AlignedVec {
+    fn drop(&mut self) {
+        if self.len > 0 {
+            // SAFETY: allocated in `zeroed` with the identical layout.
+            unsafe { dealloc(self.ptr.as_ptr() as *mut u8, Self::layout(self.len)) };
+        }
+    }
+}
+
+impl Clone for AlignedVec {
+    fn clone(&self) -> Self {
+        Self::copy_from(self)
+    }
+}
+
+impl fmt::Debug for AlignedVec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("AlignedVec")
+            .field("len", &self.len)
+            .field("align", &ALIGN)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alignment_invariant_holds_for_all_sizes() {
+        for len in [0usize, 1, 7, 8, 9, 63, 64, 65, 1000, 4096] {
+            let v = AlignedVec::zeroed(len);
+            assert_eq!(v.as_ptr() as usize % ALIGN, 0, "len={len}");
+            assert_eq!(v.len(), len);
+            assert!(v.iter().all(|&x| x == 0.0), "zeroed len={len}");
+        }
+    }
+
+    #[test]
+    fn from_fn_and_copy_roundtrip() {
+        let v = AlignedVec::from_fn(100, |i| i as f64 * 0.5);
+        assert_eq!(v[7], 3.5);
+        let w = AlignedVec::copy_from(&v);
+        assert_eq!(&v[..], &w[..]);
+        let c = v.clone();
+        assert_eq!(&v[..], &c[..]);
+        assert_eq!(c.as_ptr() as usize % ALIGN, 0);
+    }
+
+    #[test]
+    fn deref_mut_writes_stick() {
+        let mut v = AlignedVec::zeroed(16);
+        v[3] = 2.25;
+        v[15] = -1.0;
+        assert_eq!(v[3], 2.25);
+        assert_eq!(v.iter().sum::<f64>(), 1.25);
+    }
+
+    #[test]
+    fn first_touch_copy_is_bit_identical_for_any_worker_count() {
+        let src: Vec<f64> = (0..1003).map(|i| (i as f64).sin()).collect();
+        for threads in [1usize, 2, 3, 8] {
+            let pool = ThreadPool::new(threads);
+            let v = AlignedVec::first_touch_copy(&src, &pool);
+            assert_eq!(v.as_ptr() as usize % ALIGN, 0);
+            assert_eq!(v.len(), src.len());
+            for (i, (a, b)) in v.iter().zip(&src).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "T={threads} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_buffers_are_safe() {
+        let pool = ThreadPool::new(4);
+        let v = AlignedVec::first_touch_copy(&[], &pool);
+        assert!(v.is_empty());
+        assert_eq!(&v[..], &[] as &[f64]);
+        let e = AlignedVec::empty();
+        assert_eq!(e.as_ptr() as usize % ALIGN, 0);
+    }
+}

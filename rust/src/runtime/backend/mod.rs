@@ -77,6 +77,13 @@ impl KernelClass {
 }
 
 /// How the kernel loop is laid out — one rung of the paper's ladder.
+///
+/// The explicit-SIMD tiers carry a *vector register count* on top of the
+/// lane width: `Avx2U4` means four independent 4-lane AVX2 accumulator
+/// chains (16 scalar chains total). Multi-register unrolling is what breaks
+/// the loop-carried add/FMA dependency (paper Sect. 3.2) — one vector
+/// accumulator serializes on the instruction latency no matter how wide the
+/// lanes are.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ImplStyle {
     /// Straight loop, one accumulator chain.
@@ -89,18 +96,38 @@ pub enum ImplStyle {
     Unroll8,
     /// Portable 4-lane vector code (auto-vectorizable chunked arrays).
     SimdLanes,
-    /// Explicit AVX2+FMA `std::arch` intrinsics (runtime-detected).
+    /// Explicit AVX2+FMA `std::arch` intrinsics, one vector accumulator
+    /// (runtime-detected; the latency-bound baseline of the AVX2 tier).
     SimdAvx2,
+    /// AVX2+FMA with 2 independent vector accumulators (8 chains).
+    Avx2U2,
+    /// AVX2+FMA with 4 independent vector accumulators (16 chains).
+    Avx2U4,
+    /// AVX2+FMA with 8 independent vector accumulators (32 chains).
+    Avx2U8,
+    /// AVX-512F `_mm512` intrinsics, one 8-lane vector accumulator
+    /// (compile-gated behind the `avx512` cargo feature + runtime-detected).
+    SimdAvx512,
+    /// AVX-512F with 4 independent vector accumulators (32 chains).
+    Avx512U4,
+    /// AVX-512F with 8 independent vector accumulators (64 chains).
+    Avx512U8,
 }
 
 impl ImplStyle {
-    pub const ALL: [ImplStyle; 6] = [
+    pub const ALL: [ImplStyle; 12] = [
         ImplStyle::Scalar,
         ImplStyle::Unroll2,
         ImplStyle::Unroll4,
         ImplStyle::Unroll8,
         ImplStyle::SimdLanes,
         ImplStyle::SimdAvx2,
+        ImplStyle::Avx2U2,
+        ImplStyle::Avx2U4,
+        ImplStyle::Avx2U8,
+        ImplStyle::SimdAvx512,
+        ImplStyle::Avx512U4,
+        ImplStyle::Avx512U8,
     ];
 
     pub fn label(self) -> &'static str {
@@ -111,17 +138,52 @@ impl ImplStyle {
             ImplStyle::Unroll8 => "unroll8",
             ImplStyle::SimdLanes => "simd",
             ImplStyle::SimdAvx2 => "avx2",
+            ImplStyle::Avx2U2 => "avx2u2",
+            ImplStyle::Avx2U4 => "avx2u4",
+            ImplStyle::Avx2U8 => "avx2u8",
+            ImplStyle::SimdAvx512 => "avx512",
+            ImplStyle::Avx512U4 => "avx512u4",
+            ImplStyle::Avx512U8 => "avx512u8",
         }
     }
 
-    /// Number of independent accumulator chains the layout carries.
+    /// Number of independent accumulator chains the layout carries
+    /// (lane width × vector register count for the explicit-SIMD tiers).
     pub fn chains(self) -> usize {
         match self {
             ImplStyle::Scalar => 1,
             ImplStyle::Unroll2 => 2,
             ImplStyle::Unroll4 | ImplStyle::SimdLanes | ImplStyle::SimdAvx2 => 4,
-            ImplStyle::Unroll8 => 8,
+            ImplStyle::Unroll8 | ImplStyle::SimdAvx512 => 8,
+            ImplStyle::Avx2U2 => 8,
+            ImplStyle::Avx2U4 => 16,
+            ImplStyle::Avx2U8 | ImplStyle::Avx512U4 => 32,
+            ImplStyle::Avx512U8 => 64,
         }
+    }
+
+    /// Styles implemented with AVX2+FMA intrinsics (need the host feature).
+    pub fn needs_avx2(self) -> bool {
+        matches!(
+            self,
+            ImplStyle::SimdAvx2 | ImplStyle::Avx2U2 | ImplStyle::Avx2U4 | ImplStyle::Avx2U8
+        )
+    }
+
+    /// Styles implemented with AVX-512F intrinsics (need the `avx512` cargo
+    /// feature at build time *and* the host feature at run time).
+    pub fn needs_avx512(self) -> bool {
+        matches!(
+            self,
+            ImplStyle::SimdAvx512 | ImplStyle::Avx512U4 | ImplStyle::Avx512U8
+        )
+    }
+
+    /// Explicit-intrinsic styles whose products are fused (`fmadd`/`fmsub`
+    /// contraction — the paper's KahanSimdFma shape). Their bit-exact
+    /// portable references use `f64::mul_add`, not separate mul+add.
+    pub fn uses_fma(self) -> bool {
+        self.needs_avx2() || self.needs_avx512()
     }
 }
 
@@ -296,14 +358,43 @@ mod tests {
     #[test]
     fn spec_ids_unique_and_stable() {
         let all = KernelSpec::all();
-        assert_eq!(all.len(), 18);
+        assert_eq!(all.len(), 36);
         let mut ids: Vec<String> = all.iter().map(|s| s.id()).collect();
         ids.sort();
         ids.dedup();
-        assert_eq!(ids.len(), 18);
+        assert_eq!(ids.len(), 36);
         assert_eq!(
             KernelSpec::new(KernelClass::KahanDot, ImplStyle::SimdAvx2).id(),
             "kahan_dot.avx2"
+        );
+        assert_eq!(
+            KernelSpec::new(KernelClass::KahanDot, ImplStyle::Avx2U8).id(),
+            "kahan_dot.avx2u8"
+        );
+        assert_eq!(
+            KernelSpec::new(KernelClass::NaiveDot, ImplStyle::Avx512U4).id(),
+            "naive_dot.avx512u4"
+        );
+    }
+
+    #[test]
+    fn style_tier_helpers_are_consistent() {
+        for style in ImplStyle::ALL {
+            // A style belongs to at most one intrinsic tier.
+            assert!(!(style.needs_avx2() && style.needs_avx512()), "{style:?}");
+            assert_eq!(
+                style.uses_fma(),
+                style.needs_avx2() || style.needs_avx512(),
+                "{style:?}"
+            );
+            assert!(style.chains() >= 1);
+            assert!(!style.label().is_empty());
+        }
+        // The unrolled tiers multiply the lane width by the register count.
+        assert_eq!(ImplStyle::Avx2U8.chains(), 8 * ImplStyle::SimdAvx2.chains());
+        assert_eq!(
+            ImplStyle::Avx512U8.chains(),
+            8 * ImplStyle::SimdAvx512.chains()
         );
     }
 

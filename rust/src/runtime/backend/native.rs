@@ -13,26 +13,147 @@
 //!   construction — pinned by tests);
 //! * `SimdAvx2` — explicit AVX2+FMA `std::arch` intrinsics, runtime-detected
 //!   via `is_x86_feature_detected!`; the compensated product uses `fmsub`
-//!   (the paper's KahanSimdFma variant).
+//!   (the paper's KahanSimdFma variant). One vector accumulator — the
+//!   latency-bound baseline the paper's Fig. 1 ladder starts from;
+//! * `Avx2U2/U4/U8` — the same AVX2 kernels with 2/4/8 *independent vector
+//!   accumulator chains* (independent (s, c) register pairs for the Kahan
+//!   kernels), folded once at the end. This is the paper's headline
+//!   transformation: SIMD alone leaves the loop serialized on the FMA/ADD
+//!   latency; multi-register unrolling fills the pipeline and is what lets
+//!   the Kahan dot reach naive-dot throughput;
+//! * `SimdAvx512/Avx512U4/Avx512U8` — 8-lane `_mm512` equivalents, gated
+//!   behind the `avx512` cargo feature at compile time (so default and
+//!   non-x86 builds are unaffected) and `avx512f` runtime detection.
+//!
+//! Every explicit-SIMD rung has an aligned-load fast path: when both
+//! operand pointers are vector-aligned (the [`crate::runtime::arena`]
+//! allocator guarantees 64 bytes), `loadu` becomes `load`. Alignment is
+//! probed once per call, never per iteration.
 //!
 //! All compensated variants finish with the same compensated lane fold as
 //! [`crate::accuracy::dots::kahan_dot_lanes`], so the n-independent error
 //! bound of Kahan's algorithm survives the parallelization (validated
-//! against the exact ground truth in `tests/properties.rs`).
+//! against the exact ground truth in `tests/properties.rs`). Each intrinsic
+//! rung is bit-identical to a portable `mul_add`-based reference
+//! ([`naive_dot_fma_ref`], [`kahan_dot_fma_ref`], [`kahan_sum_wide_ref`]) —
+//! property-pinned on aligned and misaligned slices across all remainder
+//! lengths.
 #![allow(clippy::needless_range_loop)]
 
 use super::{Backend, BackendError, ImplStyle, KernelClass, KernelExec, KernelInput, KernelSpec};
 use crate::accuracy::{dots, sums};
 
-// One shared `_finalize`: the reference lane algorithm and every native
-// kernel combine their chains through the same compensated fold.
+/// One shared `_finalize`: the reference lane algorithm and every native
+/// kernel combine their chains through the same compensated fold.
+///
+/// **Tail-ordering contract** (every explicit-SIMD rung and its portable
+/// reference obey this, and the bit-parity property tests pin it): the
+/// vector loop consumes the longest prefix whose length is a multiple of
+/// `lanes × ways`; the remainder is accumulated by a *dedicated* scalar
+/// `(s, c)` pair — the spilled vector state is never mutated after the
+/// vector loop ends. The final fold then runs over `lanes × ways + 1`
+/// chains in way-major, lane-minor spill order with the scalar tail pair
+/// appended last. Folding the tail as its own chain (instead of threading
+/// it through lane 0) keeps every chain's compensation history intact and
+/// makes the fold order independent of the remainder length.
 pub use crate::accuracy::dots::fold_kahan_lanes;
 
 /// Lane count of the portable vector layout (f64x4 — one AVX2 register).
 pub const LANES: usize = 4;
 
+/// Lane count of one AVX-512 register (f64x8).
+pub const LANES_512: usize = 8;
+
 // ---------------------------------------------------------------------------
-// Naive dot ladder
+// Host SIMD capabilities
+// ---------------------------------------------------------------------------
+
+/// Does this host support the AVX2+FMA styles? Cached in a
+/// [`std::sync::OnceLock`] so feature detection runs once per process, not
+/// once per kernel call.
+#[cfg(target_arch = "x86_64")]
+pub fn avx2_available() -> bool {
+    static AVX2: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *AVX2.get_or_init(|| is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma"))
+}
+
+/// Does this host support the AVX2+FMA styles?
+#[cfg(not(target_arch = "x86_64"))]
+pub fn avx2_available() -> bool {
+    false
+}
+
+/// Does this build+host support the AVX-512 styles? Requires the `avx512`
+/// cargo feature (the `_mm512` intrinsics are only compiled then) *and*
+/// runtime `avx512f`. Cached like [`avx2_available`].
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+pub fn avx512_available() -> bool {
+    static AVX512: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *AVX512.get_or_init(|| is_x86_feature_detected!("avx512f"))
+}
+
+/// Does this build+host support the AVX-512 styles?
+#[cfg(not(all(target_arch = "x86_64", feature = "avx512")))]
+pub fn avx512_available() -> bool {
+    false
+}
+
+/// The explicit-SIMD instruction tiers usable on a host. Resolved once
+/// (per backend construction or via [`SimdCaps::detect`], which reads the
+/// `OnceLock`-cached probes) and passed through [`native_fn`], so feature
+/// detection never sits on a kernel hot path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SimdCaps {
+    pub avx2: bool,
+    pub avx512: bool,
+}
+
+impl SimdCaps {
+    /// Probe the running host (cached; cheap to call repeatedly).
+    pub fn detect() -> Self {
+        Self {
+            avx2: avx2_available(),
+            avx512: avx512_available(),
+        }
+    }
+
+    /// Every tier enabled — for table-coverage tests.
+    pub fn all() -> Self {
+        Self {
+            avx2: true,
+            avx512: true,
+        }
+    }
+
+    /// No explicit-SIMD tier (portable rungs only).
+    pub fn none() -> Self {
+        Self {
+            avx2: false,
+            avx512: false,
+        }
+    }
+
+    /// Can `style` run on a host with these capabilities?
+    pub fn supports(self, style: ImplStyle) -> bool {
+        (!style.needs_avx2() || self.avx2) && (!style.needs_avx512() || self.avx512)
+    }
+}
+
+/// The widest explicit-SIMD Kahan rung available on a host with `caps` —
+/// the paper's "manual SIMD Kahan" analog for live measurements (fig10b's
+/// HOST row, benchmarks that want the headline kernel).
+pub fn preferred_kahan_style(caps: SimdCaps) -> ImplStyle {
+    if caps.avx512 {
+        ImplStyle::Avx512U8
+    } else if caps.avx2 {
+        ImplStyle::Avx2U8
+    } else {
+        ImplStyle::SimdLanes
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Naive dot ladder (portable rungs)
 // ---------------------------------------------------------------------------
 
 /// Naive dot, straight loop (Fig. 2a).
@@ -78,22 +199,8 @@ pub fn naive_dot_simd(x: &[f64], y: &[f64]) -> f64 {
     acc.iter().sum()
 }
 
-/// Naive dot via AVX2 FMA when available; portable lanes otherwise. The FMA
-/// contraction makes this the compiler's `-O3` baseline, not bit-identical
-/// to the portable path.
-pub fn naive_dot_avx2(x: &[f64], y: &[f64]) -> f64 {
-    assert_eq!(x.len(), y.len());
-    #[cfg(target_arch = "x86_64")]
-    if avx2_available() {
-        // SAFETY: guarded by runtime feature detection; lengths checked
-        // above (the unsafe body reads x.len() elements from both slices).
-        return unsafe { x86::naive_dot_avx2(x, y) };
-    }
-    naive_dot_simd(x, y)
-}
-
 // ---------------------------------------------------------------------------
-// Kahan dot ladder
+// Kahan dot ladder (portable rungs)
 // ---------------------------------------------------------------------------
 
 /// Kahan dot, straight loop (Fig. 2b).
@@ -150,20 +257,8 @@ pub fn kahan_dot_simd(x: &[f64], y: &[f64]) -> f64 {
     fold_kahan_lanes(&s, &c)
 }
 
-/// Kahan dot via AVX2, `fmsub`-fused product (the paper's KahanSimdFma).
-pub fn kahan_dot_avx2(x: &[f64], y: &[f64]) -> f64 {
-    assert_eq!(x.len(), y.len());
-    #[cfg(target_arch = "x86_64")]
-    if avx2_available() {
-        // SAFETY: guarded by runtime feature detection; lengths checked
-        // above (the unsafe body reads x.len() elements from both slices).
-        return unsafe { x86::kahan_dot_avx2(x, y) };
-    }
-    kahan_dot_simd(x, y)
-}
-
 // ---------------------------------------------------------------------------
-// Kahan sum ladder
+// Kahan sum ladder (portable rungs)
 // ---------------------------------------------------------------------------
 
 /// Kahan sum, straight loop.
@@ -216,115 +311,680 @@ pub fn kahan_sum_simd(x: &[f64]) -> f64 {
     fold_kahan_lanes(&s, &c)
 }
 
-/// Kahan sum via AVX2 when available.
-pub fn kahan_sum_avx2(x: &[f64]) -> f64 {
-    #[cfg(target_arch = "x86_64")]
-    if avx2_available() {
-        // SAFETY: guarded by runtime feature detection.
-        return unsafe { x86::kahan_sum_avx2(x) };
+// ---------------------------------------------------------------------------
+// Portable references for the explicit-SIMD tiers
+// ---------------------------------------------------------------------------
+//
+// Bit-exact stand-ins for the intrinsic kernels: `WAYS` groups of `LANES`
+// accumulator chains, fused products via `f64::mul_add` (IEEE-identical to
+// the hardware `fmadd`/`fmsub`), the dedicated-scalar-tail contract of
+// `fold_kahan_lanes`, and the shared fold. They serve two roles: the
+// fallback on hosts without the instruction set, and the reference side of
+// the bit-parity property tests. Maximum fold width is 8 lanes × 8 ways
+// plus the tail chain.
+
+const MAX_FOLD: usize = LANES_512 * 8 + 1;
+
+/// Portable reference / fallback for the W-way AVX2/AVX-512 naive dot.
+pub fn naive_dot_fma_ref<const L: usize, const W: usize>(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let step = L * W;
+    let blocks = n / step;
+    let mut acc = [[0.0f64; L]; W];
+    for i in 0..blocks {
+        let base = i * step;
+        for w in 0..W {
+            for l in 0..L {
+                let j = base + w * L + l;
+                acc[w][l] = x[j].mul_add(y[j], acc[w][l]);
+            }
+        }
     }
-    kahan_sum_simd(x)
+    let mut tail = 0.0f64;
+    for j in blocks * step..n {
+        tail = x[j].mul_add(y[j], tail);
+    }
+    let mut total = 0.0f64;
+    for w in 0..W {
+        for l in 0..L {
+            total += acc[w][l];
+        }
+    }
+    total + tail
+}
+
+/// Portable reference / fallback for the W-way AVX2/AVX-512 Kahan dot
+/// (fused `a*b - c` products, per-way (s, c) chains, dedicated scalar tail).
+pub fn kahan_dot_fma_ref<const L: usize, const W: usize>(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let step = L * W;
+    let blocks = n / step;
+    let mut s = [[0.0f64; L]; W];
+    let mut c = [[0.0f64; L]; W];
+    for i in 0..blocks {
+        let base = i * step;
+        for w in 0..W {
+            for l in 0..L {
+                let j = base + w * L + l;
+                let yv = x[j].mul_add(y[j], -c[w][l]);
+                let t = s[w][l] + yv;
+                c[w][l] = (t - s[w][l]) - yv;
+                s[w][l] = t;
+            }
+        }
+    }
+    let (mut st, mut ct) = (0.0f64, 0.0f64);
+    for j in blocks * step..n {
+        let yv = x[j].mul_add(y[j], -ct);
+        let t = st + yv;
+        ct = (t - st) - yv;
+        st = t;
+    }
+    let mut sl = [0.0f64; MAX_FOLD];
+    let mut cl = [0.0f64; MAX_FOLD];
+    for w in 0..W {
+        for l in 0..L {
+            sl[w * L + l] = s[w][l];
+            cl[w * L + l] = c[w][l];
+        }
+    }
+    sl[step] = st;
+    cl[step] = ct;
+    fold_kahan_lanes(&sl[..step + 1], &cl[..step + 1])
+}
+
+/// Portable reference / fallback for the W-way AVX2/AVX-512 Kahan sum
+/// (no products, so this one is pure add/sub — identical math to the
+/// intrinsics with or without FMA support).
+pub fn kahan_sum_wide_ref<const L: usize, const W: usize>(x: &[f64]) -> f64 {
+    let n = x.len();
+    let step = L * W;
+    let blocks = n / step;
+    let mut s = [[0.0f64; L]; W];
+    let mut c = [[0.0f64; L]; W];
+    for i in 0..blocks {
+        let base = i * step;
+        for w in 0..W {
+            for l in 0..L {
+                let v = x[base + w * L + l];
+                let yv = v - c[w][l];
+                let t = s[w][l] + yv;
+                c[w][l] = (t - s[w][l]) - yv;
+                s[w][l] = t;
+            }
+        }
+    }
+    let (mut st, mut ct) = (0.0f64, 0.0f64);
+    for &v in &x[blocks * step..] {
+        let yv = v - ct;
+        let t = st + yv;
+        ct = (t - st) - yv;
+        st = t;
+    }
+    let mut sl = [0.0f64; MAX_FOLD];
+    let mut cl = [0.0f64; MAX_FOLD];
+    for w in 0..W {
+        for l in 0..L {
+            sl[w * L + l] = s[w][l];
+            cl[w * L + l] = c[w][l];
+        }
+    }
+    sl[step] = st;
+    cl[step] = ct;
+    fold_kahan_lanes(&sl[..step + 1], &cl[..step + 1])
 }
 
 // ---------------------------------------------------------------------------
-// AVX2 paths
+// AVX2 tier (runtime-detected)
 // ---------------------------------------------------------------------------
 
-/// Does this host support the `SimdAvx2` style?
-#[cfg(target_arch = "x86_64")]
-pub fn avx2_available() -> bool {
-    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+macro_rules! avx2_dot_wrapper {
+    ($name:ident, $inner:ident, $fallback:ident, $w:literal, $doc:expr) => {
+        #[doc = $doc]
+        pub fn $name(x: &[f64], y: &[f64]) -> f64 {
+            assert_eq!(x.len(), y.len());
+            #[cfg(target_arch = "x86_64")]
+            if avx2_available() {
+                // SAFETY: AVX2+FMA verified by runtime detection; equal
+                // lengths checked above (the unsafe body reads x.len()
+                // elements from both slices).
+                return unsafe { x86::$inner(x, y) };
+            }
+            $fallback::<LANES, $w>(x, y)
+        }
+    };
 }
 
-/// Does this host support the `SimdAvx2` style?
-#[cfg(not(target_arch = "x86_64"))]
-pub fn avx2_available() -> bool {
-    false
+macro_rules! avx2_sum_wrapper {
+    ($name:ident, $inner:ident, $w:literal, $doc:expr) => {
+        #[doc = $doc]
+        pub fn $name(x: &[f64]) -> f64 {
+            #[cfg(target_arch = "x86_64")]
+            if avx2_available() {
+                // SAFETY: AVX2+FMA verified by runtime detection.
+                return unsafe { x86::$inner(x) };
+            }
+            kahan_sum_wide_ref::<LANES, $w>(x)
+        }
+    };
 }
+
+avx2_dot_wrapper!(
+    naive_dot_avx2,
+    naive_dot_w1,
+    naive_dot_fma_ref,
+    1,
+    "Naive dot via AVX2 FMA, one vector accumulator; portable `mul_add` \
+     reference otherwise (bit-identical)."
+);
+avx2_dot_wrapper!(
+    naive_dot_avx2_u2,
+    naive_dot_w2,
+    naive_dot_fma_ref,
+    2,
+    "Naive dot via AVX2 FMA with 2 independent vector accumulators."
+);
+avx2_dot_wrapper!(
+    naive_dot_avx2_u4,
+    naive_dot_w4,
+    naive_dot_fma_ref,
+    4,
+    "Naive dot via AVX2 FMA with 4 independent vector accumulators."
+);
+avx2_dot_wrapper!(
+    naive_dot_avx2_u8,
+    naive_dot_w8,
+    naive_dot_fma_ref,
+    8,
+    "Naive dot via AVX2 FMA with 8 independent vector accumulators — the \
+     paper's throughput-saturating layout."
+);
+avx2_dot_wrapper!(
+    kahan_dot_avx2,
+    kahan_dot_w1,
+    kahan_dot_fma_ref,
+    1,
+    "Kahan dot via AVX2, `fmsub`-fused product (the paper's KahanSimdFma), \
+     one vector (s, c) pair."
+);
+avx2_dot_wrapper!(
+    kahan_dot_avx2_u2,
+    kahan_dot_w2,
+    kahan_dot_fma_ref,
+    2,
+    "Kahan dot via AVX2 with 2 independent vector (s, c) register pairs."
+);
+avx2_dot_wrapper!(
+    kahan_dot_avx2_u4,
+    kahan_dot_w4,
+    kahan_dot_fma_ref,
+    4,
+    "Kahan dot via AVX2 with 4 independent vector (s, c) register pairs."
+);
+avx2_dot_wrapper!(
+    kahan_dot_avx2_u8,
+    kahan_dot_w8,
+    kahan_dot_fma_ref,
+    8,
+    "Kahan dot via AVX2 with 8 independent vector (s, c) register pairs — \
+     the rung the paper shows matching naive-dot throughput."
+);
+avx2_sum_wrapper!(
+    kahan_sum_avx2,
+    kahan_sum_w1,
+    1,
+    "Kahan sum via AVX2, one vector (s, c) pair."
+);
+avx2_sum_wrapper!(
+    kahan_sum_avx2_u2,
+    kahan_sum_w2,
+    2,
+    "Kahan sum via AVX2 with 2 independent vector (s, c) register pairs."
+);
+avx2_sum_wrapper!(
+    kahan_sum_avx2_u4,
+    kahan_sum_w4,
+    4,
+    "Kahan sum via AVX2 with 4 independent vector (s, c) register pairs."
+);
+avx2_sum_wrapper!(
+    kahan_sum_avx2_u8,
+    kahan_sum_w8,
+    8,
+    "Kahan sum via AVX2 with 8 independent vector (s, c) register pairs."
+);
 
 #[cfg(target_arch = "x86_64")]
 mod x86 {
     use std::arch::x86_64::{
-        _mm256_add_pd, _mm256_fmadd_pd, _mm256_fmsub_pd, _mm256_loadu_pd, _mm256_setzero_pd,
-        _mm256_storeu_pd, _mm256_sub_pd,
+        _mm256_add_pd, _mm256_fmadd_pd, _mm256_fmsub_pd, _mm256_load_pd, _mm256_loadu_pd,
+        _mm256_setzero_pd, _mm256_storeu_pd, _mm256_sub_pd,
     };
 
-    /// # Safety
-    /// Caller must verify AVX2 + FMA via `avx2_available()`.
-    #[target_feature(enable = "avx2", enable = "fma")]
-    pub unsafe fn naive_dot_avx2(x: &[f64], y: &[f64]) -> f64 {
-        let n = x.len();
-        let chunks = n / 4;
-        let mut acc = _mm256_setzero_pd();
-        for i in 0..chunks {
-            let a = _mm256_loadu_pd(x.as_ptr().add(4 * i));
-            let b = _mm256_loadu_pd(y.as_ptr().add(4 * i));
-            acc = _mm256_fmadd_pd(a, b, acc);
-        }
-        let mut lanes = [0.0f64; 4];
-        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
-        for i in 4 * chunks..n {
-            lanes[0] = x[i].mul_add(y[i], lanes[0]);
-        }
-        lanes.iter().sum()
+    use super::{fold_kahan_lanes, LANES};
+
+    /// 32-byte alignment gate for `_mm256_load_pd` (checked once per call;
+    /// every in-loop address is then `base + k·32` bytes, so base alignment
+    /// implies alignment of all loads).
+    #[inline(always)]
+    fn aligned(p: *const f64) -> bool {
+        (p as usize) % 32 == 0
     }
 
-    /// # Safety
-    /// Caller must verify AVX2 + FMA via `avx2_available()`.
-    #[target_feature(enable = "avx2", enable = "fma")]
-    pub unsafe fn kahan_dot_avx2(x: &[f64], y: &[f64]) -> f64 {
-        let n = x.len();
-        let chunks = n / 4;
-        let mut s = _mm256_setzero_pd();
-        let mut c = _mm256_setzero_pd();
-        for i in 0..chunks {
-            let a = _mm256_loadu_pd(x.as_ptr().add(4 * i));
-            let b = _mm256_loadu_pd(y.as_ptr().add(4 * i));
-            let yv = _mm256_fmsub_pd(a, b, c);
-            let t = _mm256_add_pd(s, yv);
-            c = _mm256_sub_pd(_mm256_sub_pd(t, s), yv);
-            s = t;
-        }
-        let mut sl = [0.0f64; 4];
-        let mut cl = [0.0f64; 4];
-        _mm256_storeu_pd(sl.as_mut_ptr(), s);
-        _mm256_storeu_pd(cl.as_mut_ptr(), c);
-        for i in 4 * chunks..n {
-            let yv = x[i].mul_add(y[i], -cl[0]);
-            let t = sl[0] + yv;
-            cl[0] = (t - sl[0]) - yv;
-            sl[0] = t;
-        }
-        super::fold_kahan_lanes(&sl, &cl)
+    macro_rules! naive_loop {
+        ($load:ident, $xp:ident, $yp:ident, $acc:ident, $blocks:ident, $step:ident, $w:tt) => {
+            for i in 0..$blocks {
+                let base = i * $step;
+                for k in 0..$w {
+                    let a = $load($xp.add(base + LANES * k));
+                    let b = $load($yp.add(base + LANES * k));
+                    $acc[k] = _mm256_fmadd_pd(a, b, $acc[k]);
+                }
+            }
+        };
     }
 
-    /// # Safety
-    /// Caller must verify AVX2 + FMA via `avx2_available()`.
-    #[target_feature(enable = "avx2", enable = "fma")]
-    pub unsafe fn kahan_sum_avx2(x: &[f64]) -> f64 {
-        let n = x.len();
-        let chunks = n / 4;
-        let mut s = _mm256_setzero_pd();
-        let mut c = _mm256_setzero_pd();
-        for i in 0..chunks {
-            let v = _mm256_loadu_pd(x.as_ptr().add(4 * i));
-            let yv = _mm256_sub_pd(v, c);
-            let t = _mm256_add_pd(s, yv);
-            c = _mm256_sub_pd(_mm256_sub_pd(t, s), yv);
-            s = t;
-        }
-        let mut sl = [0.0f64; 4];
-        let mut cl = [0.0f64; 4];
-        _mm256_storeu_pd(sl.as_mut_ptr(), s);
-        _mm256_storeu_pd(cl.as_mut_ptr(), c);
-        for &v in &x[4 * chunks..] {
-            let yv = v - cl[0];
-            let t = sl[0] + yv;
-            cl[0] = (t - sl[0]) - yv;
-            sl[0] = t;
-        }
-        super::fold_kahan_lanes(&sl, &cl)
+    macro_rules! kahan_dot_loop {
+        ($load:ident, $xp:ident, $yp:ident, $s:ident, $c:ident, $blocks:ident, $step:ident,
+         $w:tt) => {
+            for i in 0..$blocks {
+                let base = i * $step;
+                for k in 0..$w {
+                    let a = $load($xp.add(base + LANES * k));
+                    let b = $load($yp.add(base + LANES * k));
+                    let yv = _mm256_fmsub_pd(a, b, $c[k]);
+                    let t = _mm256_add_pd($s[k], yv);
+                    $c[k] = _mm256_sub_pd(_mm256_sub_pd(t, $s[k]), yv);
+                    $s[k] = t;
+                }
+            }
+        };
     }
+
+    macro_rules! kahan_sum_loop {
+        ($load:ident, $xp:ident, $s:ident, $c:ident, $blocks:ident, $step:ident, $w:tt) => {
+            for i in 0..$blocks {
+                let base = i * $step;
+                for k in 0..$w {
+                    let v = $load($xp.add(base + LANES * k));
+                    let yv = _mm256_sub_pd(v, $c[k]);
+                    let t = _mm256_add_pd($s[k], yv);
+                    $c[k] = _mm256_sub_pd(_mm256_sub_pd(t, $s[k]), yv);
+                    $s[k] = t;
+                }
+            }
+        };
+    }
+
+    macro_rules! avx2_rungs {
+        ($naive:ident, $kahan:ident, $ksum:ident, $w:tt) => {
+            /// # Safety
+            /// Caller must verify AVX2 + FMA via `avx2_available()`.
+            #[target_feature(enable = "avx2", enable = "fma")]
+            pub unsafe fn $naive(x: &[f64], y: &[f64]) -> f64 {
+                let n = x.len();
+                let step = LANES * $w;
+                let blocks = n / step;
+                let xp = x.as_ptr();
+                let yp = y.as_ptr();
+                let mut acc = [_mm256_setzero_pd(); $w];
+                if aligned(xp) && aligned(yp) {
+                    naive_loop!(_mm256_load_pd, xp, yp, acc, blocks, step, $w);
+                } else {
+                    naive_loop!(_mm256_loadu_pd, xp, yp, acc, blocks, step, $w);
+                }
+                let mut lanes = [0.0f64; LANES * $w];
+                for k in 0..$w {
+                    _mm256_storeu_pd(lanes.as_mut_ptr().add(LANES * k), acc[k]);
+                }
+                let mut tail = 0.0f64;
+                for j in blocks * step..n {
+                    tail = x[j].mul_add(y[j], tail);
+                }
+                let mut total = 0.0f64;
+                for v in lanes {
+                    total += v;
+                }
+                total + tail
+            }
+
+            /// # Safety
+            /// Caller must verify AVX2 + FMA via `avx2_available()`.
+            #[target_feature(enable = "avx2", enable = "fma")]
+            pub unsafe fn $kahan(x: &[f64], y: &[f64]) -> f64 {
+                let n = x.len();
+                let step = LANES * $w;
+                let blocks = n / step;
+                let xp = x.as_ptr();
+                let yp = y.as_ptr();
+                let mut s = [_mm256_setzero_pd(); $w];
+                let mut c = [_mm256_setzero_pd(); $w];
+                if aligned(xp) && aligned(yp) {
+                    kahan_dot_loop!(_mm256_load_pd, xp, yp, s, c, blocks, step, $w);
+                } else {
+                    kahan_dot_loop!(_mm256_loadu_pd, xp, yp, s, c, blocks, step, $w);
+                }
+                let mut sl = [0.0f64; LANES * $w + 1];
+                let mut cl = [0.0f64; LANES * $w + 1];
+                for k in 0..$w {
+                    _mm256_storeu_pd(sl.as_mut_ptr().add(LANES * k), s[k]);
+                    _mm256_storeu_pd(cl.as_mut_ptr().add(LANES * k), c[k]);
+                }
+                let (mut st, mut ct) = (0.0f64, 0.0f64);
+                for j in blocks * step..n {
+                    let yv = x[j].mul_add(y[j], -ct);
+                    let t = st + yv;
+                    ct = (t - st) - yv;
+                    st = t;
+                }
+                sl[LANES * $w] = st;
+                cl[LANES * $w] = ct;
+                fold_kahan_lanes(&sl, &cl)
+            }
+
+            /// # Safety
+            /// Caller must verify AVX2 + FMA via `avx2_available()`.
+            #[target_feature(enable = "avx2", enable = "fma")]
+            pub unsafe fn $ksum(x: &[f64]) -> f64 {
+                let n = x.len();
+                let step = LANES * $w;
+                let blocks = n / step;
+                let xp = x.as_ptr();
+                let mut s = [_mm256_setzero_pd(); $w];
+                let mut c = [_mm256_setzero_pd(); $w];
+                if aligned(xp) {
+                    kahan_sum_loop!(_mm256_load_pd, xp, s, c, blocks, step, $w);
+                } else {
+                    kahan_sum_loop!(_mm256_loadu_pd, xp, s, c, blocks, step, $w);
+                }
+                let mut sl = [0.0f64; LANES * $w + 1];
+                let mut cl = [0.0f64; LANES * $w + 1];
+                for k in 0..$w {
+                    _mm256_storeu_pd(sl.as_mut_ptr().add(LANES * k), s[k]);
+                    _mm256_storeu_pd(cl.as_mut_ptr().add(LANES * k), c[k]);
+                }
+                let (mut st, mut ct) = (0.0f64, 0.0f64);
+                for &v in &x[blocks * step..] {
+                    let yv = v - ct;
+                    let t = st + yv;
+                    ct = (t - st) - yv;
+                    st = t;
+                }
+                sl[LANES * $w] = st;
+                cl[LANES * $w] = ct;
+                fold_kahan_lanes(&sl, &cl)
+            }
+        };
+    }
+
+    avx2_rungs!(naive_dot_w1, kahan_dot_w1, kahan_sum_w1, 1);
+    avx2_rungs!(naive_dot_w2, kahan_dot_w2, kahan_sum_w2, 2);
+    avx2_rungs!(naive_dot_w4, kahan_dot_w4, kahan_sum_w4, 4);
+    avx2_rungs!(naive_dot_w8, kahan_dot_w8, kahan_sum_w8, 8);
+}
+
+// ---------------------------------------------------------------------------
+// AVX-512 tier (compile-gated behind the `avx512` cargo feature)
+// ---------------------------------------------------------------------------
+
+macro_rules! avx512_dot_wrapper {
+    ($name:ident, $inner:ident, $fallback:ident, $w:literal, $doc:expr) => {
+        #[doc = $doc]
+        pub fn $name(x: &[f64], y: &[f64]) -> f64 {
+            assert_eq!(x.len(), y.len());
+            #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+            if avx512_available() {
+                // SAFETY: AVX-512F verified by runtime detection; equal
+                // lengths checked above.
+                return unsafe { x86_512::$inner(x, y) };
+            }
+            $fallback::<LANES_512, $w>(x, y)
+        }
+    };
+}
+
+macro_rules! avx512_sum_wrapper {
+    ($name:ident, $inner:ident, $w:literal, $doc:expr) => {
+        #[doc = $doc]
+        pub fn $name(x: &[f64]) -> f64 {
+            #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+            if avx512_available() {
+                // SAFETY: AVX-512F verified by runtime detection.
+                return unsafe { x86_512::$inner(x) };
+            }
+            kahan_sum_wide_ref::<LANES_512, $w>(x)
+        }
+    };
+}
+
+avx512_dot_wrapper!(
+    naive_dot_avx512,
+    naive_dot_w1,
+    naive_dot_fma_ref,
+    1,
+    "Naive dot via AVX-512F, one 8-lane vector accumulator; portable \
+     `mul_add` reference otherwise (bit-identical)."
+);
+avx512_dot_wrapper!(
+    naive_dot_avx512_u4,
+    naive_dot_w4,
+    naive_dot_fma_ref,
+    4,
+    "Naive dot via AVX-512F with 4 independent vector accumulators."
+);
+avx512_dot_wrapper!(
+    naive_dot_avx512_u8,
+    naive_dot_w8,
+    naive_dot_fma_ref,
+    8,
+    "Naive dot via AVX-512F with 8 independent vector accumulators."
+);
+avx512_dot_wrapper!(
+    kahan_dot_avx512,
+    kahan_dot_w1,
+    kahan_dot_fma_ref,
+    1,
+    "Kahan dot via AVX-512F, `fmsub`-fused product, one vector (s, c) pair."
+);
+avx512_dot_wrapper!(
+    kahan_dot_avx512_u4,
+    kahan_dot_w4,
+    kahan_dot_fma_ref,
+    4,
+    "Kahan dot via AVX-512F with 4 independent vector (s, c) register pairs."
+);
+avx512_dot_wrapper!(
+    kahan_dot_avx512_u8,
+    kahan_dot_w8,
+    kahan_dot_fma_ref,
+    8,
+    "Kahan dot via AVX-512F with 8 independent vector (s, c) register pairs."
+);
+avx512_sum_wrapper!(
+    kahan_sum_avx512,
+    kahan_sum_w1,
+    1,
+    "Kahan sum via AVX-512F, one vector (s, c) pair."
+);
+avx512_sum_wrapper!(
+    kahan_sum_avx512_u4,
+    kahan_sum_w4,
+    4,
+    "Kahan sum via AVX-512F with 4 independent vector (s, c) register pairs."
+);
+avx512_sum_wrapper!(
+    kahan_sum_avx512_u8,
+    kahan_sum_w8,
+    8,
+    "Kahan sum via AVX-512F with 8 independent vector (s, c) register pairs."
+);
+
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+mod x86_512 {
+    use std::arch::x86_64::{
+        _mm512_add_pd, _mm512_fmadd_pd, _mm512_fmsub_pd, _mm512_load_pd, _mm512_loadu_pd,
+        _mm512_setzero_pd, _mm512_storeu_pd, _mm512_sub_pd,
+    };
+
+    use super::{fold_kahan_lanes, LANES_512 as LANES};
+
+    /// 64-byte alignment gate for `_mm512_load_pd`.
+    #[inline(always)]
+    fn aligned(p: *const f64) -> bool {
+        (p as usize) % 64 == 0
+    }
+
+    macro_rules! naive_loop {
+        ($load:ident, $xp:ident, $yp:ident, $acc:ident, $blocks:ident, $step:ident, $w:tt) => {
+            for i in 0..$blocks {
+                let base = i * $step;
+                for k in 0..$w {
+                    let a = $load($xp.add(base + LANES * k));
+                    let b = $load($yp.add(base + LANES * k));
+                    $acc[k] = _mm512_fmadd_pd(a, b, $acc[k]);
+                }
+            }
+        };
+    }
+
+    macro_rules! kahan_dot_loop {
+        ($load:ident, $xp:ident, $yp:ident, $s:ident, $c:ident, $blocks:ident, $step:ident,
+         $w:tt) => {
+            for i in 0..$blocks {
+                let base = i * $step;
+                for k in 0..$w {
+                    let a = $load($xp.add(base + LANES * k));
+                    let b = $load($yp.add(base + LANES * k));
+                    let yv = _mm512_fmsub_pd(a, b, $c[k]);
+                    let t = _mm512_add_pd($s[k], yv);
+                    $c[k] = _mm512_sub_pd(_mm512_sub_pd(t, $s[k]), yv);
+                    $s[k] = t;
+                }
+            }
+        };
+    }
+
+    macro_rules! kahan_sum_loop {
+        ($load:ident, $xp:ident, $s:ident, $c:ident, $blocks:ident, $step:ident, $w:tt) => {
+            for i in 0..$blocks {
+                let base = i * $step;
+                for k in 0..$w {
+                    let v = $load($xp.add(base + LANES * k));
+                    let yv = _mm512_sub_pd(v, $c[k]);
+                    let t = _mm512_add_pd($s[k], yv);
+                    $c[k] = _mm512_sub_pd(_mm512_sub_pd(t, $s[k]), yv);
+                    $s[k] = t;
+                }
+            }
+        };
+    }
+
+    macro_rules! avx512_rungs {
+        ($naive:ident, $kahan:ident, $ksum:ident, $w:tt) => {
+            /// # Safety
+            /// Caller must verify AVX-512F via `avx512_available()`.
+            #[target_feature(enable = "avx512f")]
+            pub unsafe fn $naive(x: &[f64], y: &[f64]) -> f64 {
+                let n = x.len();
+                let step = LANES * $w;
+                let blocks = n / step;
+                let xp = x.as_ptr();
+                let yp = y.as_ptr();
+                let mut acc = [_mm512_setzero_pd(); $w];
+                if aligned(xp) && aligned(yp) {
+                    naive_loop!(_mm512_load_pd, xp, yp, acc, blocks, step, $w);
+                } else {
+                    naive_loop!(_mm512_loadu_pd, xp, yp, acc, blocks, step, $w);
+                }
+                let mut lanes = [0.0f64; LANES * $w];
+                for k in 0..$w {
+                    _mm512_storeu_pd(lanes.as_mut_ptr().add(LANES * k), acc[k]);
+                }
+                let mut tail = 0.0f64;
+                for j in blocks * step..n {
+                    tail = x[j].mul_add(y[j], tail);
+                }
+                let mut total = 0.0f64;
+                for v in lanes {
+                    total += v;
+                }
+                total + tail
+            }
+
+            /// # Safety
+            /// Caller must verify AVX-512F via `avx512_available()`.
+            #[target_feature(enable = "avx512f")]
+            pub unsafe fn $kahan(x: &[f64], y: &[f64]) -> f64 {
+                let n = x.len();
+                let step = LANES * $w;
+                let blocks = n / step;
+                let xp = x.as_ptr();
+                let yp = y.as_ptr();
+                let mut s = [_mm512_setzero_pd(); $w];
+                let mut c = [_mm512_setzero_pd(); $w];
+                if aligned(xp) && aligned(yp) {
+                    kahan_dot_loop!(_mm512_load_pd, xp, yp, s, c, blocks, step, $w);
+                } else {
+                    kahan_dot_loop!(_mm512_loadu_pd, xp, yp, s, c, blocks, step, $w);
+                }
+                let mut sl = [0.0f64; LANES * $w + 1];
+                let mut cl = [0.0f64; LANES * $w + 1];
+                for k in 0..$w {
+                    _mm512_storeu_pd(sl.as_mut_ptr().add(LANES * k), s[k]);
+                    _mm512_storeu_pd(cl.as_mut_ptr().add(LANES * k), c[k]);
+                }
+                let (mut st, mut ct) = (0.0f64, 0.0f64);
+                for j in blocks * step..n {
+                    let yv = x[j].mul_add(y[j], -ct);
+                    let t = st + yv;
+                    ct = (t - st) - yv;
+                    st = t;
+                }
+                sl[LANES * $w] = st;
+                cl[LANES * $w] = ct;
+                fold_kahan_lanes(&sl, &cl)
+            }
+
+            /// # Safety
+            /// Caller must verify AVX-512F via `avx512_available()`.
+            #[target_feature(enable = "avx512f")]
+            pub unsafe fn $ksum(x: &[f64]) -> f64 {
+                let n = x.len();
+                let step = LANES * $w;
+                let blocks = n / step;
+                let xp = x.as_ptr();
+                let mut s = [_mm512_setzero_pd(); $w];
+                let mut c = [_mm512_setzero_pd(); $w];
+                if aligned(xp) {
+                    kahan_sum_loop!(_mm512_load_pd, xp, s, c, blocks, step, $w);
+                } else {
+                    kahan_sum_loop!(_mm512_loadu_pd, xp, s, c, blocks, step, $w);
+                }
+                let mut sl = [0.0f64; LANES * $w + 1];
+                let mut cl = [0.0f64; LANES * $w + 1];
+                for k in 0..$w {
+                    _mm512_storeu_pd(sl.as_mut_ptr().add(LANES * k), s[k]);
+                    _mm512_storeu_pd(cl.as_mut_ptr().add(LANES * k), c[k]);
+                }
+                let (mut st, mut ct) = (0.0f64, 0.0f64);
+                for &v in &x[blocks * step..] {
+                    let yv = v - ct;
+                    let t = st + yv;
+                    ct = (t - st) - yv;
+                    st = t;
+                }
+                sl[LANES * $w] = st;
+                cl[LANES * $w] = ct;
+                fold_kahan_lanes(&sl, &cl)
+            }
+        };
+    }
+
+    avx512_rungs!(naive_dot_w1, kahan_dot_w1, kahan_sum_w1, 1);
+    avx512_rungs!(naive_dot_w4, kahan_dot_w4, kahan_sum_w4, 4);
+    avx512_rungs!(naive_dot_w8, kahan_dot_w8, kahan_sum_w8, 8);
 }
 
 // ---------------------------------------------------------------------------
@@ -341,9 +1001,11 @@ pub enum NativeFn {
 }
 
 /// One rung of the ladder: every kernel class at one loop layout. The
-/// scalar/unroll/simd/avx2 × dot/kahan-dot/kahan-sum matrix is registered
-/// exactly once here; [`NativeBackend`] and the thread-parallel layer both
-/// resolve through this table, so a new style is added in one row.
+/// scalar/unroll/simd/avx2/avx2-unrolled/avx512 × dot/kahan-dot/kahan-sum
+/// matrix is registered exactly once here; [`NativeBackend`] and the
+/// thread-parallel layer both resolve through this table, so a new style is
+/// added in one row and flows to the registry, the harness experiments and
+/// the bench subcommands with no special cases.
 struct LadderRow {
     style: ImplStyle,
     naive_dot: fn(&[f64], &[f64]) -> f64,
@@ -351,7 +1013,7 @@ struct LadderRow {
     kahan_sum: fn(&[f64]) -> f64,
 }
 
-const LADDER: [LadderRow; 6] = [
+const LADDER: [LadderRow; 12] = [
     LadderRow {
         style: ImplStyle::Scalar,
         naive_dot: naive_dot_scalar,
@@ -388,13 +1050,49 @@ const LADDER: [LadderRow; 6] = [
         kahan_dot: kahan_dot_avx2,
         kahan_sum: kahan_sum_avx2,
     },
+    LadderRow {
+        style: ImplStyle::Avx2U2,
+        naive_dot: naive_dot_avx2_u2,
+        kahan_dot: kahan_dot_avx2_u2,
+        kahan_sum: kahan_sum_avx2_u2,
+    },
+    LadderRow {
+        style: ImplStyle::Avx2U4,
+        naive_dot: naive_dot_avx2_u4,
+        kahan_dot: kahan_dot_avx2_u4,
+        kahan_sum: kahan_sum_avx2_u4,
+    },
+    LadderRow {
+        style: ImplStyle::Avx2U8,
+        naive_dot: naive_dot_avx2_u8,
+        kahan_dot: kahan_dot_avx2_u8,
+        kahan_sum: kahan_sum_avx2_u8,
+    },
+    LadderRow {
+        style: ImplStyle::SimdAvx512,
+        naive_dot: naive_dot_avx512,
+        kahan_dot: kahan_dot_avx512,
+        kahan_sum: kahan_sum_avx512,
+    },
+    LadderRow {
+        style: ImplStyle::Avx512U4,
+        naive_dot: naive_dot_avx512_u4,
+        kahan_dot: kahan_dot_avx512_u4,
+        kahan_sum: kahan_sum_avx512_u4,
+    },
+    LadderRow {
+        style: ImplStyle::Avx512U8,
+        naive_dot: naive_dot_avx512_u8,
+        kahan_dot: kahan_dot_avx512_u8,
+        kahan_sum: kahan_sum_avx512_u8,
+    },
 ];
 
-/// Resolve a spec to its native entry point. `avx2` gates the `SimdAvx2`
-/// row (runtime feature detection is the caller's — usually the backend's —
-/// responsibility).
-pub fn native_fn(spec: KernelSpec, avx2: bool) -> Option<NativeFn> {
-    if spec.style == ImplStyle::SimdAvx2 && !avx2 {
+/// Resolve a spec to its native entry point. `caps` gates the explicit-SIMD
+/// tiers (runtime feature detection is the caller's — usually the
+/// backend's — responsibility, resolved once per backend, never per call).
+pub fn native_fn(spec: KernelSpec, caps: SimdCaps) -> Option<NativeFn> {
+    if !caps.supports(spec.style) {
         return None;
     }
     let row = LADDER.iter().find(|r| r.style == spec.style)?;
@@ -426,25 +1124,36 @@ impl KernelExec for NativeKernel {
     }
 }
 
-/// The host-CPU backend: pure Rust kernels, AVX2 when the CPU has it.
+/// The host-CPU backend: pure Rust kernels, AVX2/AVX-512 when the CPU (and
+/// build) has them. Capabilities are probed once at construction.
 pub struct NativeBackend {
-    avx2: bool,
+    caps: SimdCaps,
 }
 
 impl NativeBackend {
     pub fn new() -> Self {
         Self {
-            avx2: avx2_available(),
+            caps: SimdCaps::detect(),
         }
     }
 
-    /// Is the AVX2 style usable on this host?
+    /// Is the AVX2 tier usable on this host?
     pub fn has_avx2(&self) -> bool {
-        self.avx2
+        self.caps.avx2
+    }
+
+    /// Is the AVX-512 tier usable in this build on this host?
+    pub fn has_avx512(&self) -> bool {
+        self.caps.avx512
+    }
+
+    /// The SIMD tiers this backend resolved at construction.
+    pub fn caps(&self) -> SimdCaps {
+        self.caps
     }
 
     fn lookup(&self, spec: KernelSpec) -> Option<NativeFn> {
-        native_fn(spec, self.avx2)
+        native_fn(spec, self.caps)
     }
 }
 
@@ -462,7 +1171,7 @@ impl Backend for NativeBackend {
     fn kernels(&self) -> Vec<KernelSpec> {
         KernelSpec::all()
             .into_iter()
-            .filter(|s| self.avx2 || s.style != ImplStyle::SimdAvx2)
+            .filter(|s| self.caps.supports(s.style))
             .collect()
     }
 
@@ -532,6 +1241,44 @@ mod tests {
         }
     }
 
+    /// Every explicit-SIMD rung (intrinsic path when the host has it,
+    /// fallback otherwise) is bit-identical to its portable `mul_add`
+    /// reference — the contract the `tests/properties.rs` corpus pins over
+    /// aligned/misaligned slices and every remainder length.
+    #[test]
+    fn explicit_simd_rungs_bit_match_references() {
+        type DotPair = (fn(&[f64], &[f64]) -> f64, fn(&[f64], &[f64]) -> f64);
+        type SumPair = (fn(&[f64]) -> f64, fn(&[f64]) -> f64);
+        let dots: [DotPair; 10] = [
+            (naive_dot_avx2, naive_dot_fma_ref::<4, 1>),
+            (naive_dot_avx2_u2, naive_dot_fma_ref::<4, 2>),
+            (naive_dot_avx2_u4, naive_dot_fma_ref::<4, 4>),
+            (naive_dot_avx2_u8, naive_dot_fma_ref::<4, 8>),
+            (kahan_dot_avx2, kahan_dot_fma_ref::<4, 1>),
+            (kahan_dot_avx2_u2, kahan_dot_fma_ref::<4, 2>),
+            (kahan_dot_avx2_u4, kahan_dot_fma_ref::<4, 4>),
+            (kahan_dot_avx2_u8, kahan_dot_fma_ref::<4, 8>),
+            (kahan_dot_avx512, kahan_dot_fma_ref::<8, 1>),
+            (kahan_dot_avx512_u8, kahan_dot_fma_ref::<8, 8>),
+        ];
+        let sums: [SumPair; 4] = [
+            (kahan_sum_avx2, kahan_sum_wide_ref::<4, 1>),
+            (kahan_sum_avx2_u8, kahan_sum_wide_ref::<4, 8>),
+            (kahan_sum_avx512, kahan_sum_wide_ref::<8, 1>),
+            (kahan_sum_avx512_u8, kahan_sum_wide_ref::<8, 8>),
+        ];
+        for n in [0usize, 1, 5, 31, 32, 33, 63, 64, 65, 127, 128, 1003] {
+            let x = randvec(n, 100 + n as u64);
+            let y = randvec(n, 200 + n as u64);
+            for (i, (f, r)) in dots.iter().enumerate() {
+                assert_eq!(f(&x, &y).to_bits(), r(&x, &y).to_bits(), "dot #{i} n={n}");
+            }
+            for (i, (f, r)) in sums.iter().enumerate() {
+                assert_eq!(f(&x).to_bits(), r(&x).to_bits(), "sum #{i} n={n}");
+            }
+        }
+    }
+
     #[test]
     fn empty_and_tiny_inputs() {
         let backend = NativeBackend::new();
@@ -572,14 +1319,16 @@ mod tests {
         let y = randvec(4097, 6);
         let want = exact_dot(&x, &y);
         let cond: f64 = x.iter().zip(&y).map(|(a, b)| (a * b).abs()).sum();
-        for f in [kahan_dot_avx2, kahan_dot_simd] {
+        for f in [kahan_dot_avx2, kahan_dot_avx2_u4, kahan_dot_avx2_u8, kahan_dot_simd] {
             let got = f(&x, &y);
             assert!((got - want).abs() <= 8.0 * f64::EPSILON * cond);
         }
-        let s_avx = kahan_sum_avx2(&x);
-        let s_port = kahan_sum_simd(&x);
         let abs: f64 = x.iter().map(|v| v.abs()).sum();
-        assert!((s_avx - s_port).abs() <= 8.0 * f64::EPSILON * abs);
+        for f in [kahan_sum_avx2, kahan_sum_avx2_u8] {
+            let got = f(&x);
+            let port = kahan_sum_simd(&x);
+            assert!((got - port).abs() <= 8.0 * f64::EPSILON * abs);
+        }
     }
 
     #[test]
@@ -609,24 +1358,58 @@ mod tests {
     #[test]
     fn ladder_table_covers_every_spec() {
         for spec in KernelSpec::all() {
-            let f = native_fn(spec, true).expect("every spec has a table row");
+            let f = native_fn(spec, SimdCaps::all()).expect("every spec has a table row");
             match f {
                 NativeFn::Dot(_) => assert!(spec.class.is_dot(), "{spec}"),
                 NativeFn::Sum(_) => assert!(!spec.class.is_dot(), "{spec}"),
             }
             assert_eq!(
-                native_fn(spec, false).is_none(),
-                spec.style == ImplStyle::SimdAvx2,
+                native_fn(spec, SimdCaps::none()).is_none(),
+                spec.style.uses_fma(),
                 "{spec}"
             );
         }
     }
 
     #[test]
+    fn caps_gate_each_tier_independently() {
+        let avx2_only = SimdCaps {
+            avx2: true,
+            avx512: false,
+        };
+        for spec in KernelSpec::all() {
+            let resolved = native_fn(spec, avx2_only).is_some();
+            assert_eq!(resolved, !spec.style.needs_avx512(), "{spec}");
+        }
+        assert_eq!(preferred_kahan_style(SimdCaps::all()), ImplStyle::Avx512U8);
+        assert_eq!(preferred_kahan_style(avx2_only), ImplStyle::Avx2U8);
+        assert_eq!(preferred_kahan_style(SimdCaps::none()), ImplStyle::SimdLanes);
+    }
+
+    #[test]
+    fn probes_are_stable_across_calls() {
+        // OnceLock-cached probes must agree with themselves and with a
+        // freshly constructed backend.
+        assert_eq!(avx2_available(), avx2_available());
+        assert_eq!(avx512_available(), avx512_available());
+        let b = NativeBackend::new();
+        assert_eq!(b.has_avx2(), avx2_available());
+        assert_eq!(b.has_avx512(), avx512_available());
+        assert_eq!(b.caps(), SimdCaps::detect());
+    }
+
+    #[test]
     fn resolve_reports_unsupported_avx2_when_absent() {
-        let backend = NativeBackend { avx2: false };
+        let backend = NativeBackend {
+            caps: SimdCaps::none(),
+        };
         let spec = KernelSpec::new(KernelClass::KahanDot, ImplStyle::SimdAvx2);
         assert!(!backend.supports(spec));
+        assert!(matches!(
+            backend.resolve(spec),
+            Err(BackendError::Unsupported { .. })
+        ));
+        let spec = KernelSpec::new(KernelClass::KahanDot, ImplStyle::Avx512U8);
         assert!(matches!(
             backend.resolve(spec),
             Err(BackendError::Unsupported { .. })

@@ -1,11 +1,15 @@
 //! Mini-likwid: steady-state benchmarking of kernels on the host CPU.
 //!
 //! Methodology follows the paper's likwid-bench protocol: inputs prepared
-//! once (no allocation on the timed path), warmup until caches are primed
-//! (and, for PJRT, the executable compiled), then timed runs; the *best*
-//! run is the headline number (cycle-deterministic kernel, interference
-//! only adds time). Small kernels are batched so every timed sample spans
-//! at least a few tens of microseconds of work.
+//! once in the 64-byte-aligned operand arena (no allocation on the timed
+//! path; explicit-SIMD kernels take their aligned-load fast path), the
+//! kernel resolved once per bench run (a `NativeFn` function pointer —
+//! feature detection and table lookup never sit inside the rep loop),
+//! warmup until caches are primed (and, for PJRT, the executable
+//! compiled), then timed runs; the *best* run is the headline number
+//! (cycle-deterministic kernel, interference only adds time). Small
+//! kernels are batched so every timed sample spans at least a few tens of
+//! microseconds of work.
 //!
 //! Entry points:
 //! * [`bench_kernel`] — any [`Backend`] kernel (native by default) at one
@@ -20,6 +24,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use super::arena::AlignedVec;
 use super::backend::{Backend, KernelInput, KernelSpec};
 use super::parallel::ParallelBackend;
 use crate::util::rng::Rng;
@@ -64,14 +69,16 @@ pub struct KernelBenchResult {
 
 /// Deterministic benchmark operands for one (kernel, n): normal-distributed
 /// vectors seeded by the length only, so every thread count / backend
-/// benches the identical data.
-pub fn bench_inputs(spec: KernelSpec, n: usize) -> (Vec<f64>, Vec<f64>) {
+/// benches the identical data. Allocated from the 64-byte-aligned operand
+/// arena, so the explicit-SIMD kernels take their aligned-load fast path
+/// and thread-parallel chunk boundaries never straddle a cache line.
+pub fn bench_inputs(spec: KernelSpec, n: usize) -> (AlignedVec, AlignedVec) {
     let mut rng = Rng::new(0xBE7C4 ^ n as u64);
-    let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-    let y: Vec<f64> = if spec.class.is_dot() {
-        (0..n).map(|_| rng.normal()).collect()
+    let x = AlignedVec::from_fn(n, |_| rng.normal());
+    let y = if spec.class.is_dot() {
+        AlignedVec::from_fn(n, |_| rng.normal())
     } else {
-        Vec::new()
+        AlignedVec::empty()
     };
     (x, y)
 }
@@ -138,9 +145,9 @@ pub fn bench_kernel(
 ) -> Result<KernelBenchResult> {
     let (x, y) = bench_inputs(spec, n);
     let input = if spec.class.is_dot() {
-        KernelInput::Dot(&x, &y)
+        KernelInput::Dot(&x[..], &y[..])
     } else {
-        KernelInput::Sum(&x)
+        KernelInput::Sum(&x[..])
     };
     bench_prepared(backend, spec, &input, warmup, reps, freq_ghz)
 }
@@ -170,8 +177,14 @@ pub fn bench_ws_sweep(
 /// Core-scaling sweep: benchmark `spec` on the thread-parallel native
 /// backend for every thread count `1..=max_threads` at a fixed vector
 /// length (pick one deep in memory to probe bandwidth saturation). The
-/// operands are generated once and shared across all thread counts.
-/// Returns `(threads, result)` in thread order.
+/// operand *values* are generated once (identical data at every thread
+/// count), but each thread count gets its own first-touch arena copy: the
+/// persistent pool of the backend under test writes each chunk's pages
+/// from the worker that will later stream them, so NUMA placement matches
+/// the dispatch. Each `ParallelBackend` spawns its worker pool once and
+/// reuses it across warmup + reps — the timed samples contain kernel
+/// execution, not thread creation. Returns `(threads, result)` in thread
+/// order.
 pub fn bench_scaling(
     spec: KernelSpec,
     n: usize,
@@ -180,15 +193,21 @@ pub fn bench_scaling(
     reps: usize,
     freq_ghz: Option<f64>,
 ) -> Result<Vec<(usize, KernelBenchResult)>> {
-    let (x, y) = bench_inputs(spec, n);
-    let input = if spec.class.is_dot() {
-        KernelInput::Dot(&x, &y)
-    } else {
-        KernelInput::Sum(&x)
-    };
+    let (src_x, src_y) = bench_inputs(spec, n);
     (1..=max_threads.max(1))
         .map(|t| {
             let backend = ParallelBackend::new(t);
+            let x = AlignedVec::first_touch_copy(&src_x, backend.pool());
+            let y = if spec.class.is_dot() {
+                AlignedVec::first_touch_copy(&src_y, backend.pool())
+            } else {
+                AlignedVec::empty()
+            };
+            let input = if spec.class.is_dot() {
+                KernelInput::Dot(&x[..], &y[..])
+            } else {
+                KernelInput::Sum(&x[..])
+            };
             bench_prepared(&backend, spec, &input, warmup, reps, freq_ghz).map(|r| (t, r))
         })
         .collect()

@@ -1,18 +1,22 @@
 //! Kernel execution runtime: pluggable [`backend`]s (native Rust SIMD by
 //! default, PJRT behind the `pjrt` feature), the thread-[`parallel`]
-//! execution layer (cache-line-aligned slice partitioning + deterministic
-//! compensated reduction), and the host benchmarking harness.
+//! execution layer (persistent parked-worker pool, cache-line-aligned slice
+//! partitioning + deterministic compensated reduction), the 64-byte-aligned
+//! operand [`arena`] the measured paths allocate from, and the host
+//! benchmarking harness.
 //!
 //! The default build is hermetic: the [`backend::NativeBackend`] implements
-//! the paper's full kernel ladder in plain Rust (with a runtime-detected
-//! AVX2 path), so every host experiment runs on any machine with no
-//! artifacts installed. Enabling the `pjrt` cargo feature additionally
-//! compiles the [`executor`] that loads the AOT-compiled HLO-text artifacts
-//! produced by `python/compile/aot.py` and executes them through the PJRT
-//! C API — the paper's "blueprint on a fifth, real machine" path
-//! (DESIGN.md §2). Python never runs here: the artifacts are self-contained
-//! HLO text and the manifest is plain JSON.
+//! the paper's full kernel ladder in plain Rust (with runtime-detected
+//! AVX2 and — behind the `avx512` cargo feature — AVX-512 tiers, including
+//! the multi-accumulator unrolled rungs), so every host experiment runs on
+//! any machine with no artifacts installed. Enabling the `pjrt` cargo
+//! feature additionally compiles the [`executor`] that loads the
+//! AOT-compiled HLO-text artifacts produced by `python/compile/aot.py` and
+//! executes them through the PJRT C API — the paper's "blueprint on a
+//! fifth, real machine" path (DESIGN.md §2). Python never runs here: the
+//! artifacts are self-contained HLO text and the manifest is plain JSON.
 
+pub mod arena;
 pub mod backend;
 #[cfg(feature = "pjrt")]
 pub mod executor;
@@ -20,6 +24,7 @@ pub mod hostbench;
 pub mod manifest;
 pub mod parallel;
 
+pub use arena::AlignedVec;
 pub use backend::{
     available_backends, Backend, BackendError, ImplStyle, KernelClass, KernelExec, KernelInput,
     KernelSpec, NativeBackend,

@@ -7,63 +7,201 @@
 //! * [`ThreadPool`] partitions the iteration space into at most `T`
 //!   contiguous chunks whose boundaries are aligned to cache-line
 //!   granularity ([`CACHELINE_F64`] elements). With a 64-byte-aligned
-//!   allocation no two workers touch the same line of the operand streams;
+//!   allocation (the [`crate::runtime::arena`] allocator guarantees it) no
+//!   two workers touch the same line of the operand streams; a plain
 //!   `Vec<f64>` only guarantees element alignment, so in the worst case
 //!   each chunk *boundary* shares one straddling line with its neighbor —
 //!   O(T) lines against millions streamed, so per-worker traffic is whole
 //!   cache lines to ECM accuracy, and read-only sharing causes no
 //!   invalidation traffic anyway.
-//! * Workers are `std::thread::scope` threads: the offline crate cache has
-//!   no crossbeam/rayon, and scoped threads are the only way in std to run
-//!   borrowed slices on multiple threads without `unsafe` lifetime erasure.
-//!   The pool object itself is reusable (it owns the partition policy and
-//!   thread count); OS threads are spawned per dispatch, which for the
-//!   paper's kernels (>= tens of microseconds of work per timed pass) is
-//!   noise. Thread→core *pinning* is not available in std; we rely on the
-//!   OS scheduler, which on an otherwise idle machine behaves pinned-ish —
-//!   documented, not guaranteed.
+//! * Workers are *persistent*: [`ThreadPool::new`] spawns `T - 1` parked
+//!   OS threads once (chunk 0 always runs inline on the dispatching
+//!   thread), and every dispatch hands chunk `i` to worker `i - 1` over a
+//!   per-worker `std::sync::mpsc` channel, then blocks on a
+//!   mutex+condvar completion latch. The earlier design spawned scoped
+//!   threads per dispatch; at benchmark rep rates that put tens of
+//!   microseconds of `clone(2)`/teardown inside every timed sample, which
+//!   is exactly the overhead the `bench-scale` curves must *not* contain —
+//!   a thread-scaling measurement should observe kernel saturation, not
+//!   thread-creation cost. The chunk→worker assignment is fixed by index,
+//!   so repeated dispatches reuse both the workers and (via first-touch
+//!   allocation) their NUMA-local pages. Thread→core *pinning* is not
+//!   available in std; we rely on the OS scheduler, which on an otherwise
+//!   idle machine behaves pinned-ish — documented, not guaranteed.
 //! * Every worker runs an unmodified [`NativeFn`] rung on its slice, so
 //!   each thread carries its own Kahan compensation (the per-chunk kernels
 //!   already end in the compensated lane fold). The `T` partial results are
 //!   then combined by [`compensated_tree_reduce`] — a pairwise `two_sum`
 //!   tree that is *deterministic for a fixed thread count* (the combination
-//!   order depends only on the partition, never on thread finish order) and
-//!   keeps the total error within the serial compensated bound: each chunk
-//!   contributes its own Kahan-bounded error over Σ_chunk|x·y|, and the
-//!   tree adds only the exactly-tracked `two_sum` residues
+//!   order depends only on the partition, never on thread finish order)
+//!   and keeps the total error within the serial compensated bound: each
+//!   chunk contributes its own Kahan-bounded error over Σ_chunk|x·y|, and
+//!   the tree adds only the exactly-tracked `two_sum` residues
 //!   (property-tested against the exact ground truth in
-//!   `tests/properties.rs`).
+//!   `tests/properties.rs`). The persistent pool preserves this bit-for-
+//!   bit: results land in partition order regardless of finish order, so a
+//!   fixed `T` still implies a bit-identical result across dispatches.
 //!
 //! [`ParallelBackend`] exposes all of this through the ordinary
 //! [`Backend`]/[`KernelExec`] traits, so `hostbench`, the harness and the
 //! CLI (`bench-scale`) drive threaded kernels exactly like serial ones.
+//! The backend owns one pool for its lifetime ("spawn once per backend"),
+//! and every kernel it resolves shares that pool.
 
+use std::any::Any;
+use std::fmt;
 use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
-use super::backend::native::{self, NativeFn};
-use super::backend::{
-    Backend, BackendError, KernelExec, KernelInput, KernelSpec, NativeBackend,
-};
+use super::backend::native::{self, NativeFn, SimdCaps};
+use super::backend::{Backend, BackendError, KernelExec, KernelInput, KernelSpec, NativeBackend};
 use crate::accuracy::eft::two_sum;
 
 /// f64 elements per 64-byte cache line — the chunk-boundary alignment.
 pub const CACHELINE_F64: usize = 8;
 
-/// A reusable partition-and-dispatch pool for slice-parallel kernels.
-#[derive(Clone, Debug)]
-pub struct ThreadPool {
-    threads: usize,
+/// Completion latch for one dispatch: the dispatcher blocks until every
+/// posted chunk has been executed (successfully or by unwinding), so the
+/// borrowed task closure and output slots never outlive a running worker.
+struct Latch {
+    remaining: Mutex<usize>,
+    all_done: Condvar,
+    /// First worker panic payload, re-raised on the dispatching thread so
+    /// callers see the original assertion/message, exactly as the previous
+    /// scoped-thread design propagated it.
+    panic_payload: Mutex<Option<Box<dyn Any + Send>>>,
 }
 
-impl ThreadPool {
-    /// A pool targeting `threads` workers (clamped to >= 1).
-    pub fn new(threads: usize) -> Self {
+impl Latch {
+    fn new(count: usize) -> Self {
         Self {
-            threads: threads.max(1),
+            remaining: Mutex::new(count),
+            all_done: Condvar::new(),
+            panic_payload: Mutex::new(None),
         }
     }
 
-    /// Worker count this pool partitions for.
+    fn record_panic(&self, payload: Box<dyn Any + Send>) {
+        let mut slot = self.panic_payload.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(payload);
+        }
+    }
+
+    fn take_panic(&self) -> Option<Box<dyn Any + Send>> {
+        self.panic_payload.lock().unwrap().take()
+    }
+
+    fn arrive(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        *r -= 1;
+        if *r == 0 {
+            self.all_done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        while *r > 0 {
+            r = self.all_done.wait(r).unwrap();
+        }
+    }
+}
+
+/// A borrowed, type-erased chunk task (what one [`Job`] points at).
+type Task<'a> = &'a (dyn Fn(usize) + Sync);
+
+/// One unit of dispatched work: a type-erased borrow of the caller's task
+/// closure plus the chunk index to run it on.
+struct Job {
+    /// Raw (fat) pointer to the dispatcher's stack-held closure. Valid for
+    /// the whole dispatch: `run_chunks` blocks on the latch before the
+    /// referent can be dropped.
+    task: *const (dyn Fn(usize) + Sync),
+    index: usize,
+    done: Arc<Latch>,
+}
+
+// SAFETY: the raw task pointer crosses threads, but the referent is `Sync`
+// and the dispatcher keeps it alive (and does not return) until the latch
+// has counted every job in — see `ThreadPool::run_chunks`.
+unsafe impl Send for Job {}
+
+fn worker_loop(jobs: Receiver<Job>) {
+    // A closed channel (pool dropped) is the shutdown signal.
+    while let Ok(job) = jobs.recv() {
+        // SAFETY: the dispatcher guarantees the pointee outlives this job
+        // (it blocks on the latch before releasing the closure).
+        let task = unsafe { &*job.task };
+        // Panics must not leak past the latch or the dispatcher deadlocks;
+        // the payload is re-raised on the dispatching thread instead.
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| task(job.index))) {
+            job.done.record_panic(payload);
+        }
+        job.done.arrive();
+    }
+}
+
+/// Shared writable result slots: workers write disjoint indices of the
+/// dispatcher's output vector through a raw pointer.
+struct SlotWriter<R> {
+    ptr: *mut Option<R>,
+}
+
+// SAFETY: each chunk index is dispatched to exactly one executor (worker or
+// the inline caller), so writes target disjoint slots; the vector itself is
+// neither read nor resized until every writer has arrived at the latch.
+unsafe impl<R: Send> Sync for SlotWriter<R> {}
+
+impl<R> SlotWriter<R> {
+    /// # Safety
+    /// `i` must be in bounds and written by at most one thread per dispatch.
+    unsafe fn write(&self, i: usize, r: R) {
+        self.ptr.add(i).write(Some(r));
+    }
+}
+
+/// A persistent parked-worker pool for slice-parallel kernels: `T - 1`
+/// worker threads spawned once at construction, plus the dispatching
+/// thread, execute the deterministic cache-line-aligned partition of each
+/// dispatch. Dropping the pool shuts the workers down.
+pub struct ThreadPool {
+    threads: usize,
+    /// Per-worker job senders, locked as one unit: a dispatch owns every
+    /// worker for its full duration, so concurrent `run_chunks` calls on a
+    /// shared pool serialize instead of interleaving jobs.
+    senders: Mutex<Vec<Sender<Job>>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// A pool targeting `threads` workers (clamped to >= 1). Spawns the
+    /// `threads - 1` persistent worker threads immediately; chunk 0 of
+    /// every dispatch runs inline on the dispatching thread.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let mut senders = Vec::with_capacity(threads - 1);
+        let mut handles = Vec::with_capacity(threads - 1);
+        for i in 0..threads - 1 {
+            let (tx, rx) = channel::<Job>();
+            let h = std::thread::Builder::new()
+                .name(format!("kahan-mt-{i}"))
+                .spawn(move || worker_loop(rx))
+                .expect("spawn persistent worker");
+            senders.push(tx);
+            handles.push(h);
+        }
+        Self {
+            threads,
+            senders: Mutex::new(senders),
+            handles,
+        }
+    }
+
+    /// Worker count this pool partitions for (including the dispatcher).
     pub fn threads(&self) -> usize {
         self.threads
     }
@@ -104,30 +242,90 @@ impl ThreadPool {
     /// Run `f(worker_index, chunk_range)` over the partition of `0..n`,
     /// returning results in partition order (independent of thread finish
     /// order — this is what makes downstream reductions deterministic).
-    /// Single-chunk dispatches run inline on the caller's thread.
+    /// Chunk `i > 0` goes to persistent worker `i - 1`; chunk 0 (and any
+    /// single-chunk dispatch) runs inline on the caller's thread. The
+    /// assignment is fixed by index, so repeated dispatches of the same
+    /// shape land each chunk on the same OS thread every time.
     pub fn run_chunks<R, F>(&self, n: usize, align: usize, f: F) -> Vec<R>
     where
         F: Fn(usize, Range<usize>) -> R + Sync,
         R: Send,
     {
         let parts = self.partition(n, align);
-        if parts.len() == 1 {
+        let k = parts.len();
+        if k == 1 {
             let r = parts[0].clone();
             return vec![f(0, r)];
         }
-        let mut out: Vec<Option<R>> = (0..parts.len()).map(|_| None).collect();
-        std::thread::scope(|scope| {
-            for (i, (slot, range)) in out.iter_mut().zip(parts.iter()).enumerate() {
-                let fref = &f;
-                let range = range.clone();
-                scope.spawn(move || {
-                    *slot = Some(fref(i, range));
-                });
+        let mut out: Vec<Option<R>> = (0..k).map(|_| None).collect();
+        {
+            let slots = SlotWriter {
+                ptr: out.as_mut_ptr(),
+            };
+            let parts_ref = &parts;
+            let fref = &f;
+            let task = move |i: usize| {
+                let r = fref(i, parts_ref[i].clone());
+                // SAFETY: chunk i is dispatched exactly once (to worker
+                // i - 1, or inline for i = 0), and `out` is untouched
+                // until the latch wait below returns.
+                unsafe { slots.write(i, r) };
+            };
+            // SAFETY: pure lifetime erasure — `task` outlives every
+            // dispatched job because this function blocks on the latch
+            // (even when unwinding) before `task` can be dropped.
+            let erased: *const (dyn Fn(usize) + Sync) =
+                unsafe { std::mem::transmute::<Task<'_>, Task<'static>>(&task) };
+            let latch = Arc::new(Latch::new(k - 1));
+            let senders = self.senders.lock().unwrap();
+            for i in 1..k {
+                senders[i - 1]
+                    .send(Job {
+                        task: erased,
+                        index: i,
+                        done: latch.clone(),
+                    })
+                    .expect("persistent worker exited early");
             }
-        });
+            // Chunk 0 inline. An inline panic must still wait for the
+            // posted jobs before unwinding (they borrow `task`/`out`).
+            let inline = catch_unwind(AssertUnwindSafe(|| task(0)));
+            latch.wait();
+            drop(senders);
+            if let Err(p) = inline {
+                resume_unwind(p);
+            }
+            if let Some(p) = latch.take_panic() {
+                resume_unwind(p);
+            }
+        }
         out.into_iter()
             .map(|o| o.expect("worker produced no result"))
             .collect()
+    }
+}
+
+impl fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ThreadPool")
+            .field("threads", &self.threads)
+            .finish()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // Closing the channels is the shutdown signal. A poisoned lock
+        // (a dispatcher panicked mid-dispatch) must not leak the workers.
+        let mut senders = match self.senders.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        senders.clear();
+        drop(senders);
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
     }
 }
 
@@ -165,11 +363,12 @@ pub fn compensated_tree_reduce(parts: &[f64]) -> f64 {
 }
 
 /// A native kernel dispatched over per-thread slices with a deterministic
-/// compensated combination of the partials.
+/// compensated combination of the partials. Holds a handle to the owning
+/// backend's persistent pool — resolving a kernel spawns nothing.
 pub struct ParallelKernel {
     spec: KernelSpec,
     f: NativeFn,
-    pool: ThreadPool,
+    pool: Arc<ThreadPool>,
 }
 
 impl ParallelKernel {
@@ -201,18 +400,20 @@ impl KernelExec for ParallelKernel {
 
 /// The thread-parallel native backend: the same kernel ladder as
 /// [`NativeBackend`], each kernel executed on `threads` workers over
-/// cache-line-aligned slices.
+/// cache-line-aligned slices. The persistent worker pool is spawned once
+/// here and shared by every kernel the backend resolves.
 pub struct ParallelBackend {
     inner: NativeBackend,
-    threads: usize,
+    pool: Arc<ThreadPool>,
 }
 
 impl ParallelBackend {
-    /// A backend running every kernel on `threads` workers (>= 1).
+    /// A backend running every kernel on `threads` workers (>= 1). Spawns
+    /// the persistent pool immediately.
     pub fn new(threads: usize) -> Self {
         Self {
             inner: NativeBackend::new(),
-            threads: threads.max(1),
+            pool: Arc::new(ThreadPool::new(threads)),
         }
     }
 
@@ -222,12 +423,24 @@ impl ParallelBackend {
     }
 
     pub fn threads(&self) -> usize {
-        self.threads
+        self.pool.threads()
     }
 
-    /// Is the AVX2 style usable on this host?
+    /// Is the AVX2 tier usable on this host?
     pub fn has_avx2(&self) -> bool {
         self.inner.has_avx2()
+    }
+
+    /// The SIMD tiers the underlying native backend resolved.
+    pub fn caps(&self) -> SimdCaps {
+        self.inner.caps()
+    }
+
+    /// The backend's persistent worker pool — exposed so operand arenas can
+    /// be first-touch initialized by the same workers (same chunk→worker
+    /// assignment) that later stream them.
+    pub fn pool(&self) -> &Arc<ThreadPool> {
+        &self.pool
     }
 }
 
@@ -241,11 +454,11 @@ impl Backend for ParallelBackend {
     }
 
     fn resolve(&self, spec: KernelSpec) -> Result<Box<dyn KernelExec + '_>, BackendError> {
-        match native::native_fn(spec, self.inner.has_avx2()) {
+        match native::native_fn(spec, self.inner.caps()) {
             Some(f) => Ok(Box::new(ParallelKernel {
                 spec,
                 f,
-                pool: ThreadPool::new(self.threads),
+                pool: Arc::clone(&self.pool),
             })),
             None => Err(BackendError::Unsupported {
                 backend: self.name().to_string(),
@@ -295,6 +508,40 @@ mod tests {
             assert_eq!(wi, i);
             assert_eq!((s, e), (i * 16, i * 16 + 16));
         }
+    }
+
+    #[test]
+    fn persistent_pool_survives_many_dispatches() {
+        // The same pool object serves repeated dispatches of varying shape
+        // (the whole point of persistence) and stays deterministic.
+        let pool = ThreadPool::new(3);
+        for round in 0..50 {
+            let n = 64 + (round % 7) * 8;
+            let parts = pool.run_chunks(n, CACHELINE_F64, |_, r| r.end - r.start);
+            assert_eq!(parts.iter().sum::<usize>(), n, "round {round}");
+        }
+    }
+
+    #[test]
+    fn pool_panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(4);
+        let boom = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_chunks(64, CACHELINE_F64, |i, _| {
+                if i == 2 {
+                    panic!("injected");
+                }
+                i
+            })
+        }));
+        let payload = boom.expect_err("worker panic must reach the dispatcher");
+        assert_eq!(
+            payload.downcast_ref::<&str>(),
+            Some(&"injected"),
+            "original panic payload must be preserved"
+        );
+        // The pool remains usable after a panicked dispatch.
+        let ok = pool.run_chunks(64, CACHELINE_F64, |i, _| i);
+        assert_eq!(ok, vec![0, 1, 2, 3]);
     }
 
     #[test]
@@ -363,6 +610,8 @@ mod tests {
         let x = randvec(8192, 41);
         let y = randvec(8192, 42);
         for threads in [2usize, 5, 8] {
+            // One backend instance per T: repeated dispatches exercise the
+            // persistent-pool reuse path, not pool construction.
             let backend = ParallelBackend::new(threads);
             let spec = KernelSpec::new(KernelClass::KahanDot, ImplStyle::SimdLanes);
             let a = backend.run(spec, &KernelInput::Dot(&x, &y)).unwrap();

@@ -8,10 +8,13 @@ use kahan_ecm::ecm::{self, MemLevel};
 use kahan_ecm::isa::variants::{build, build_sched, Sched, Variant};
 use kahan_ecm::isa::OpClass;
 use kahan_ecm::ptest::property;
+use kahan_ecm::runtime::arena::{ALIGN, AlignedVec};
 use kahan_ecm::runtime::backend::{
     native, Backend, ImplStyle, KernelClass, KernelInput, KernelSpec, NativeBackend,
 };
-use kahan_ecm::runtime::parallel::{compensated_tree_reduce, ParallelBackend, ThreadPool};
+use kahan_ecm::runtime::parallel::{
+    compensated_tree_reduce, CACHELINE_F64, ParallelBackend, ThreadPool,
+};
 use kahan_ecm::sim::{self, simulate_core, MeasureOpts};
 use kahan_ecm::util::rng::Rng;
 use kahan_ecm::util::units::Precision;
@@ -421,6 +424,130 @@ fn tree_reduce_recovers_representable_sums() {
         let covered: usize = ranges.iter().map(|r| r.end - r.start).sum();
         assert_eq!(covered, n);
     });
+}
+
+/// Every explicit-SIMD rung (AVX2 single- and multi-accumulator, AVX-512
+/// when compiled in; the portable fallback otherwise) is bit-identical to
+/// its `mul_add`-based portable reference, on 64-byte-aligned arena
+/// operands (the aligned-load fast path), on deliberately misaligned views
+/// (`&buf[1..]`, an 8-byte offset that defeats both 32- and 64-byte
+/// alignment), and across every remainder class n mod 32 ∈ {0..31} — the
+/// dedicated-scalar-tail contract documented next to `fold_kahan_lanes`.
+#[test]
+fn explicit_simd_rungs_bit_match_reference_on_all_remainders() {
+    type Dot = fn(&[f64], &[f64]) -> f64;
+    type Sum = fn(&[f64]) -> f64;
+    let dot_pairs: [(Dot, Dot); 12] = [
+        (native::naive_dot_avx2, native::naive_dot_fma_ref::<4, 1>),
+        (native::naive_dot_avx2_u2, native::naive_dot_fma_ref::<4, 2>),
+        (native::naive_dot_avx2_u4, native::naive_dot_fma_ref::<4, 4>),
+        (native::naive_dot_avx2_u8, native::naive_dot_fma_ref::<4, 8>),
+        (native::kahan_dot_avx2, native::kahan_dot_fma_ref::<4, 1>),
+        (native::kahan_dot_avx2_u2, native::kahan_dot_fma_ref::<4, 2>),
+        (native::kahan_dot_avx2_u4, native::kahan_dot_fma_ref::<4, 4>),
+        (native::kahan_dot_avx2_u8, native::kahan_dot_fma_ref::<4, 8>),
+        (native::naive_dot_avx512, native::naive_dot_fma_ref::<8, 1>),
+        (native::naive_dot_avx512_u8, native::naive_dot_fma_ref::<8, 8>),
+        (native::kahan_dot_avx512_u4, native::kahan_dot_fma_ref::<8, 4>),
+        (native::kahan_dot_avx512_u8, native::kahan_dot_fma_ref::<8, 8>),
+    ];
+    let sum_pairs: [(Sum, Sum); 6] = [
+        (native::kahan_sum_avx2, native::kahan_sum_wide_ref::<4, 1>),
+        (native::kahan_sum_avx2_u2, native::kahan_sum_wide_ref::<4, 2>),
+        (native::kahan_sum_avx2_u4, native::kahan_sum_wide_ref::<4, 4>),
+        (native::kahan_sum_avx2_u8, native::kahan_sum_wide_ref::<4, 8>),
+        (native::kahan_sum_avx512, native::kahan_sum_wide_ref::<8, 1>),
+        (native::kahan_sum_avx512_u8, native::kahan_sum_wide_ref::<8, 8>),
+    ];
+    let mut rng = Rng::new(0xA11);
+    let cap = 256 + 33;
+    let xbuf = AlignedVec::from_fn(cap, |_| rng.normal());
+    let ybuf = AlignedVec::from_fn(cap, |_| rng.normal());
+    assert_eq!(xbuf.as_ptr() as usize % ALIGN, 0);
+    for r in 0..32usize {
+        // One short length (tail-only for the wide rungs) and one that
+        // exercises full vector blocks, both in remainder class r.
+        for n in [r, 224 + r] {
+            let aligned = (&xbuf[..n], &ybuf[..n]);
+            let shifted = (&xbuf[1..n + 1], &ybuf[1..n + 1]);
+            for (i, &(f, reference)) in dot_pairs.iter().enumerate() {
+                for (x, y) in [aligned, shifted] {
+                    assert_eq!(
+                        f(x, y).to_bits(),
+                        reference(x, y).to_bits(),
+                        "dot pair #{i}, n = {n}"
+                    );
+                }
+            }
+            for (i, &(f, reference)) in sum_pairs.iter().enumerate() {
+                for x in [aligned.0, shifted.0] {
+                    assert_eq!(
+                        f(x).to_bits(),
+                        reference(x).to_bits(),
+                        "sum pair #{i}, n = {n}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Arena invariants: every allocation is 64-byte aligned, and the
+/// first-touch parallel copy is bit-identical to its source for any worker
+/// count (placement changes, values never do).
+#[test]
+fn arena_alignment_and_first_touch_parity() {
+    property("arena first-touch parity", 25, |g| {
+        let n = g.usize(0, 4000);
+        let mut rng = Rng::new(g.u64(0, u64::MAX - 1));
+        let src: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let threads = g.usize(1, 8);
+        let backend = ParallelBackend::new(threads);
+        let v = AlignedVec::first_touch_copy(&src, backend.pool());
+        assert_eq!(v.as_ptr() as usize % ALIGN, 0, "n={n} T={threads}");
+        assert_eq!(v.len(), n);
+        for (a, b) in v.iter().zip(&src) {
+            assert_eq!(a.to_bits(), b.to_bits(), "n={n} T={threads}");
+        }
+        // The serial constructors obey the same alignment invariant.
+        let w = AlignedVec::copy_from(&src);
+        assert_eq!(w.as_ptr() as usize % ALIGN, 0);
+        assert_eq!(&w[..], &src[..]);
+    });
+}
+
+/// The persistent pool preserves the spawn-per-dispatch semantics
+/// bit-for-bit: one backend instance re-dispatching the same input (pool
+/// reuse — the `bench-scale` hot path) returns identical bits every time,
+/// and a freshly spawned pool of the same width agrees, because the result
+/// depends only on the partition, never on which OS thread ran a chunk.
+#[test]
+fn persistent_pool_reuse_matches_fresh_pool_bitwise() {
+    let mut rng = Rng::new(0x9001);
+    let x: Vec<f64> = (0..8200).map(|_| rng.normal()).collect();
+    let y: Vec<f64> = (0..8200).map(|_| rng.normal()).collect();
+    let input = KernelInput::Dot(&x, &y);
+    for threads in [2usize, 3, 6] {
+        let backend = ParallelBackend::new(threads);
+        for style in [ImplStyle::Scalar, ImplStyle::SimdLanes, ImplStyle::Unroll8] {
+            let spec = KernelSpec::new(KernelClass::KahanDot, style);
+            let first = backend.run(spec, &input).unwrap();
+            for rep in 0..8 {
+                let again = backend.run(spec, &input).unwrap();
+                assert_eq!(
+                    first.to_bits(),
+                    again.to_bits(),
+                    "{spec} T={threads} rep={rep}"
+                );
+            }
+            let fresh = ParallelBackend::new(threads).run(spec, &input).unwrap();
+            assert_eq!(first.to_bits(), fresh.to_bits(), "{spec} T={threads} fresh");
+        }
+        // Pool-level reuse with a plain closure stays shape-stable too.
+        let pool = backend.pool();
+        let sizes = pool.run_chunks(x.len(), CACHELINE_F64, |_, r| r.len());
+        assert_eq!(sizes.iter().sum::<usize>(), x.len());
+    }
 }
 
 /// The portable-SIMD layouts are bit-identical to their 4-chain unrolled
