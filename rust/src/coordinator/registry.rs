@@ -147,6 +147,13 @@ pub fn all_experiments() -> Vec<ExperimentDef> {
             needs_artifacts: false, // parallel native backend runs anywhere
             run: harness::scaleexp::scale,
         },
+        ExperimentDef {
+            id: "serve",
+            paper_ref: "Sect. 5.1 (applied)",
+            title: "Batching/sharding dot-product serving layer under live load",
+            needs_artifacts: false, // serves the native kernels anywhere
+            run: harness::serveexp::serve,
+        },
     ]
 }
 
@@ -173,7 +180,7 @@ mod tests {
         for want in [
             "table1", "ecm-inputs", "fig1", "fig5a", "fig5b", "fig6", "fig7a", "fig7b",
             "fig8a", "fig8b", "fig8c", "fig8d", "fig9", "fig10a", "fig10b", "acc", "host",
-            "scale",
+            "scale", "serve",
         ] {
             assert!(ids.contains(&want), "missing experiment {want}");
         }

@@ -14,6 +14,7 @@ pub mod fig10;
 pub mod hostexp;
 pub mod output;
 pub mod scaleexp;
+pub mod serveexp;
 pub mod tables;
 
 pub use ctx::Ctx;

@@ -1,0 +1,207 @@
+//! `serve`: the serving layer exercised live on this host — a closed-loop
+//! and a derived open-loop run over the default request mixture, plus an
+//! inline bit-parity audit of the scheduling contract.
+//!
+//! This is the "millions of users" counterpart to `scale`: where `scale`
+//! measures how one request saturates the chip, `serve` measures how the
+//! [`crate::serve::DotService`] turns the same kernels and pool into
+//! request throughput — fused small requests, sharded large ones, with the
+//! batching-vs-sharding crossover taken from the saturation model. The
+//! parity audit re-derives the contract the property tests pin: batched
+//! execution must be bit-identical to submitting each request alone.
+
+use anyhow::{ensure, Result};
+
+use crate::runtime::backend::native::{preferred_kahan_style, SimdCaps};
+use crate::runtime::backend::KernelInput;
+use crate::runtime::hostbench::freq_ghz_with_source;
+use crate::runtime::parallel::ThreadPool;
+use crate::serve::{
+    default_mix, run_load_with, DotService, LoadMode, LoadReport, OperandPool, ServeConfig,
+};
+use crate::util::rng::Rng;
+use crate::util::table::{fnum, Table};
+
+use super::ctx::Ctx;
+use super::output::ExperimentOutput;
+
+/// Bit-parity audit: a fixed batch straddling an explicit threshold must
+/// serve identically batched and one-by-one (the scheduling layer may not
+/// fork the numerics).
+fn parity_audit(threads: usize, seed: u64) -> Result<()> {
+    let service = DotService::new(ServeConfig {
+        threads,
+        style: preferred_kahan_style(SimdCaps::detect()),
+        compensated: true,
+        shard_threshold: Some(4096),
+        freq_ghz: 3.0,
+    })?;
+    let mut rng = Rng::new(seed);
+    let data: Vec<(Vec<f64>, Vec<f64>)> = [63usize, 1024, 4095, 4096, 9000]
+        .iter()
+        .map(|&n| {
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            (x, y)
+        })
+        .collect();
+    let inputs: Vec<KernelInput<'_>> = data.iter().map(|(x, y)| KernelInput::Dot(x, y)).collect();
+    let batched = service.submit_batch(&inputs)?;
+    for (input, b) in inputs.iter().zip(&batched) {
+        let alone = service.submit(input)?;
+        ensure!(
+            alone.value.to_bits() == b.value.to_bits(),
+            "serving parity violated at n = {}: batched {} vs unbatched {}",
+            b.n,
+            b.value,
+            alone.value
+        );
+    }
+    Ok(())
+}
+
+fn report_row(t: &mut Table, mode: &str, r: &LoadReport) {
+    t.row([
+        mode.to_string(),
+        r.requests.to_string(),
+        r.fused.to_string(),
+        r.sharded.to_string(),
+        fnum(r.latency_p50_ns / 1e3, 1),
+        fnum(r.latency_p99_ns / 1e3, 1),
+        fnum(r.mflops, 0),
+        fnum(r.reqs_per_s, 0),
+    ]);
+}
+
+pub fn serve(ctx: &Ctx) -> Result<ExperimentOutput> {
+    let title = "Batching/sharding dot-product serving layer under live load";
+    let mut out = ExperimentOutput::new("serve", title);
+    if !ctx.backend_enabled("native") {
+        out.note(format!(
+            "skipped: the serving layer runs on the native backend, but --backend is '{}'.",
+            ctx.backend
+        ));
+        return Ok(out);
+    }
+    let avail = ThreadPool::available();
+    let (threads, requests, batch) = if ctx.quick {
+        (avail.min(2), 128, 16)
+    } else {
+        (avail, 2048, 64)
+    };
+    parity_audit(threads, ctx.seed)?;
+
+    let (freq, freq_src) = freq_ghz_with_source();
+    let service = DotService::new(ServeConfig {
+        threads,
+        style: preferred_kahan_style(SimdCaps::detect()),
+        compensated: true,
+        shard_threshold: None,
+        freq_ghz: freq,
+    })?;
+    let mix = default_mix(ctx.quick);
+    // One operand pool for both runs: first-touched once by the service's
+    // own workers, reused by the closed- and open-loop passes.
+    let operands = OperandPool::generate(&mix, ctx.seed, service.pool());
+    let closed = run_load_with(
+        &service,
+        &mix,
+        &operands,
+        requests,
+        batch,
+        LoadMode::Closed,
+        ctx.seed,
+    )?;
+    // Open loop at ~70% of the closed-loop service rate: loaded but not
+    // saturated, so the latency tail shows queueing without blowing up.
+    let rate = (closed.reqs_per_s * 0.7).max(1.0);
+    let open_mode = LoadMode::Open { rate_rps: rate };
+    let open = run_load_with(
+        &service,
+        &mix,
+        &operands,
+        requests,
+        batch,
+        open_mode,
+        ctx.seed,
+    )?;
+
+    let mut t = Table::new([
+        "mode", "requests", "fused", "sharded", "p50 us", "p99 us", "MFlop/s", "req/s",
+    ]);
+    report_row(&mut t, "closed", &closed);
+    report_row(&mut t, "open", &open);
+    out.table("serving", t);
+
+    let mut mt = Table::new(["n", "weight", "path"]);
+    for e in &mix {
+        let path = if e.n >= service.shard_threshold() {
+            "sharded"
+        } else {
+            "fused"
+        };
+        mt.row([e.n.to_string(), fnum(e.weight, 2), path.to_string()]);
+    }
+    out.table("mixture", mt);
+
+    out.note(format!(
+        "Service: {} worker(s), rung {}, compensated dot; shard crossover at n >= {} \
+         ({}, clock {freq:.2} GHz via {}). Open-loop arrival rate: {} req/s.",
+        service.threads(),
+        service.dot_spec(),
+        service.shard_threshold(),
+        service.threshold_source().label(),
+        freq_src.label(),
+        fnum(rate, 0)
+    ));
+    out.note(
+        "Scheduling contract audited inline: every request returns bit-identical results \
+         batched and unbatched at this thread count (fused = serial kernel on one worker, \
+         sharded = the measurement path's partition + compensated tree reduction). The \
+         crossover comes from the multicore saturation model: once the chip's bandwidth \
+         saturates, extra workers buy more as request parallelism than as shard \
+         parallelism, so only requests past the model's pay-off length are split.",
+    );
+    out.note(
+        "Measurement hygiene: under `run all` other experiments contend for the same \
+         cores; for publishable serving numbers use `kahan-ecm serve-bench`, which runs \
+         exclusively and writes BENCH_serving.json.",
+    );
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_experiment_runs_quick() {
+        let o = serve(&Ctx::quick()).unwrap();
+        assert_eq!(o.tables.len(), 2);
+        let (name, t) = &o.tables[0];
+        assert_eq!(name, "serving");
+        assert_eq!(t.rows.len(), 2, "closed + open rows");
+        for row in &t.rows {
+            let requests: f64 = row[1].parse().unwrap();
+            let fused: f64 = row[2].parse().unwrap();
+            let sharded: f64 = row[3].parse().unwrap();
+            assert_eq!(fused + sharded, requests, "{row:?}");
+            let mflops: f64 = row[6].parse().unwrap();
+            assert!(mflops > 0.0, "{row:?}");
+        }
+    }
+
+    #[test]
+    fn serve_respects_backend_selector() {
+        let mut ctx = Ctx::quick();
+        ctx.backend = "pjrt".into();
+        let o = serve(&ctx).unwrap();
+        assert!(o.tables.is_empty());
+        assert!(o.notes.iter().any(|n| n.contains("skipped")));
+    }
+
+    #[test]
+    fn parity_audit_passes_here() {
+        parity_audit(3, 123).unwrap();
+    }
+}

@@ -44,12 +44,28 @@
 //!   artifacts through PJRT, and [`accuracy`] provides the exact ground
 //!   truth all of them are validated against.
 //!
+//! On top of the runtime sits the [`serve`] subsystem — the "serve heavy
+//! traffic" layer: a synchronous-API, internally concurrent
+//! [`serve::DotService`] that accepts batches of independent dot/sum
+//! requests and schedules them over the persistent worker pool. Small
+//! requests are *fused* (workers pull whole requests back-to-back from a
+//! shared queue), large requests are *sharded* through the exact partition
+//! + compensated tree reduction of the measurement path, and the crossover
+//! between the two is derived from the [`sim::multicore`] saturation
+//! model: past bandwidth saturation, extra workers are worth more as
+//! request parallelism than as shard parallelism. Scheduling never forks
+//! the numerics — batched, unbatched and sharded results are bit-identical
+//! at a fixed thread count (`serve-bench` drives it with an open/closed-
+//! loop load generator and emits `BENCH_serving.json`).
+//!
 //! The [`harness`] module regenerates every table and figure of the paper;
 //! [`coordinator`] wires it all into the `kahan-ecm` CLI.
 
 // Style lints that conflict with this crate's numeric-kernel idioms
 // (index-heavy lane loops, builder-free constructors, precise float
-// literals). Correctness lints stay enabled; CI runs `clippy -D warnings`.
+// literals). `manual_div_ceil` is allowed because `usize::div_ceil` needs
+// Rust 1.73 and the crate's MSRV is 1.70. Correctness lints stay enabled;
+// CI runs `clippy -D warnings` (enforced).
 #![allow(
     clippy::needless_range_loop,
     clippy::new_without_default,
@@ -57,6 +73,7 @@
     clippy::type_complexity,
     clippy::excessive_precision,
     clippy::manual_range_contains,
+    clippy::manual_div_ceil,
     clippy::comparison_chain,
     clippy::collapsible_if,
     clippy::collapsible_else_if,
@@ -73,6 +90,7 @@ pub mod harness;
 pub mod isa;
 pub mod ptest;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod util;
 

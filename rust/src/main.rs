@@ -6,6 +6,8 @@
 //!   bench-native               benchmark the native kernel ladder -> JSON
 //!   bench-scale                thread-scaling (and optional working-set)
 //!                              measurement vs model -> JSON
+//!   serve-bench                batching/sharding serving layer under an
+//!                              open/closed-loop request load -> JSON
 //!   ecm                        print ECM inputs/predictions for one config
 //!   sweep                      print a single-core sweep for one config
 //!   custom --config FILE       run the ECM analysis on a user machine
@@ -27,13 +29,14 @@ use kahan_ecm::coordinator::{all_experiments, assemble_report, find, run_paralle
 use kahan_ecm::ecm::{self, MemLevel};
 use kahan_ecm::harness::{scaleexp, Ctx};
 use kahan_ecm::isa::Variant;
-use kahan_ecm::runtime::backend::native::SimdCaps;
+use kahan_ecm::runtime::backend::native::{preferred_kahan_style, SimdCaps};
 use kahan_ecm::runtime::backend::{Backend, ImplStyle, KernelClass, KernelSpec, NativeBackend};
 use kahan_ecm::runtime::hostbench::{
     bench_kernel, bench_scaling, bench_ws_sweep, detect_freq_ghz, freq_ghz_with_source,
     FreqSource,
 };
 use kahan_ecm::runtime::parallel::ThreadPool;
+use kahan_ecm::serve::{default_mix, parse_mix, run_load, DotService, LoadMode, ServeConfig};
 use kahan_ecm::sim::{self, MeasureOpts};
 use kahan_ecm::util::cli::Spec;
 use kahan_ecm::util::json::Json;
@@ -49,6 +52,7 @@ fn usage() -> String {
          \x20 run <id|prefix|all>       regenerate paper tables/figures\n\
          \x20 bench-native              benchmark the native kernel ladder -> JSON\n\
          \x20 bench-scale               measured thread-scaling vs ECM model -> JSON\n\
+         \x20 serve-bench               serving layer under request load -> JSON\n\
          \x20 ecm                       ECM analysis for one machine x kernel\n\
          \x20 sweep                     simulated single-core working-set sweep\n\
          \x20 custom                    ECM analysis on a machine config file\n\
@@ -59,6 +63,8 @@ fn usage() -> String {
     s.push_str(&bench_native_spec().help_text());
     s.push_str("\nOPTIONS (bench-scale):\n");
     s.push_str(&bench_scale_spec().help_text());
+    s.push_str("\nOPTIONS (serve-bench):\n");
+    s.push_str(&serve_bench_spec().help_text());
     s.push_str("\nOPTIONS (ecm/sweep):\n");
     s.push_str(&ecm_spec().help_text());
     s
@@ -94,6 +100,22 @@ fn bench_scale_spec() -> Spec {
         .opt("reps", "timed executions per point (default: 5)")
         .opt("freq-ghz", "core clock for cycle metrics (default: detected, nominal fallback)")
         .flag("quick", "tiny grids for CI smoke runs")
+}
+
+fn serve_bench_spec() -> Spec {
+    Spec::new()
+        .opt("out", "write JSON results to FILE (default: BENCH_serving.json)")
+        .opt("threads", "service worker count (default: all cores)")
+        .opt("requests", "total requests in the run (default: 4096)")
+        .opt("batch", "requests per arrival batch (default: 64)")
+        .opt("mix", "request mixture n:weight,... (default: small-heavy serving mix)")
+        .opt("mode", "closed|open arrival loop (default: closed)")
+        .opt("rate", "open-loop arrival rate, requests/s (default: 50000)")
+        .opt("threshold", "shard requests with n >= N (default: model-derived crossover)")
+        .opt("seed", "request-stream seed (default: 1)")
+        .flag("naive", "serve the naive dot instead of the compensated default")
+        .opt("freq-ghz", "core clock for the model crossover (default: detected)")
+        .flag("quick", "tiny run for CI smoke")
 }
 
 fn ecm_spec() -> Spec {
@@ -549,6 +571,216 @@ fn cmd_bench_scale(raw: Vec<String>) -> ExitCode {
     ExitCode::SUCCESS
 }
 
+fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
+    let args = match serve_bench_spec().parse(raw) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let quick = args.flag("quick");
+    let avail = ThreadPool::available();
+    let threads = match args.opt_parse("threads", if quick { avail.min(2) } else { avail }) {
+        Ok(t) if t >= 1 => t,
+        Ok(_) => {
+            eprintln!("error: --threads must be >= 1");
+            return ExitCode::FAILURE;
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let requests = match args.opt_parse("requests", if quick { 256usize } else { 4096 }) {
+        Ok(v) if v >= 1 => v,
+        _ => {
+            eprintln!("error: --requests must be a positive integer");
+            return ExitCode::FAILURE;
+        }
+    };
+    let batch = match args.opt_parse("batch", if quick { 32usize } else { 64 }) {
+        Ok(v) if v >= 1 => v,
+        _ => {
+            eprintln!("error: --batch must be a positive integer");
+            return ExitCode::FAILURE;
+        }
+    };
+    let seed = match args.opt_parse("seed", 1u64) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let mix = match args.opt("mix") {
+        Some(s) => match parse_mix(s) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("error: --mix: {e}");
+                return ExitCode::FAILURE;
+            }
+        },
+        None => default_mix(quick),
+    };
+    let mode = match args.opt_or("mode", "closed") {
+        "closed" => LoadMode::Closed,
+        "open" => {
+            let rate = match args.opt_parse("rate", 50_000.0f64) {
+                Ok(r) if r > 0.0 => r,
+                _ => {
+                    eprintln!("error: --rate must be a positive number");
+                    return ExitCode::FAILURE;
+                }
+            };
+            LoadMode::Open { rate_rps: rate }
+        }
+        other => {
+            eprintln!("error: --mode must be closed or open (got '{other}')");
+            return ExitCode::FAILURE;
+        }
+    };
+    let threshold = match args.opt("threshold") {
+        Some(v) => match v.parse::<usize>() {
+            Ok(t) => Some(t),
+            Err(_) => {
+                eprintln!("error: --threshold expects a non-negative integer");
+                return ExitCode::FAILURE;
+            }
+        },
+        None => None,
+    };
+    let (freq, freq_src) = match parse_freq_arg(&args) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let out_path = args.opt_or("out", "BENCH_serving.json").to_string();
+
+    let service = match DotService::new(ServeConfig {
+        threads,
+        style: preferred_kahan_style(SimdCaps::detect()),
+        compensated: !args.flag("naive"),
+        shard_threshold: threshold,
+        freq_ghz: freq,
+    }) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: cannot build the service: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let threshold_label = if service.shard_threshold() == usize::MAX {
+        "never".to_string()
+    } else {
+        service.shard_threshold().to_string()
+    };
+    eprintln!(
+        "serve-bench: T = {threads}, {requests} requests in batches of {batch}, {} loop, \
+         rung {}, shard at n >= {threshold_label} ({}) ...",
+        mode.label(),
+        service.dot_spec(),
+        service.threshold_source().label()
+    );
+    let report = match run_load(&service, &mix, requests, batch, mode, seed) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: load run failed: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+
+    let mut t = Table::new(["metric", "value"]);
+    t.row(["kernel".to_string(), service.dot_spec().id()]);
+    t.row(["threads".to_string(), threads.to_string()]);
+    t.row(["shard threshold".to_string(), threshold_label.clone()]);
+    t.row(["requests".to_string(), report.requests.to_string()]);
+    t.row(["batches".to_string(), report.batches.to_string()]);
+    t.row(["fused".to_string(), report.fused.to_string()]);
+    t.row(["sharded".to_string(), report.sharded.to_string()]);
+    let us = |ns: f64| fnum(ns / 1e3, 1);
+    t.row(["p50 us".to_string(), us(report.latency_p50_ns)]);
+    t.row(["p90 us".to_string(), us(report.latency_p90_ns)]);
+    t.row(["p99 us".to_string(), us(report.latency_p99_ns)]);
+    t.row(["max us".to_string(), us(report.latency_max_ns)]);
+    t.row(["MFlop/s".to_string(), fnum(report.mflops, 0)]);
+    t.row(["GUP/s".to_string(), fnum(report.gups, 3)]);
+    t.row(["req/s".to_string(), fnum(report.reqs_per_s, 0)]);
+    print!("{}", t.to_text());
+
+    let mut mix_json = Vec::new();
+    for e in &mix {
+        let mut obj = BTreeMap::new();
+        obj.insert("n".to_string(), Json::Num(e.n as f64));
+        obj.insert("weight".to_string(), Json::Num(e.weight));
+        mix_json.push(Json::Obj(obj));
+    }
+    let mut lat = BTreeMap::new();
+    lat.insert("p50".to_string(), Json::Num(report.latency_p50_ns));
+    lat.insert("p90".to_string(), Json::Num(report.latency_p90_ns));
+    lat.insert("p99".to_string(), Json::Num(report.latency_p99_ns));
+    lat.insert("max".to_string(), Json::Num(report.latency_max_ns));
+    let mut root = BTreeMap::new();
+    root.insert("subsystem".to_string(), Json::Str("serve".to_string()));
+    root.insert("backend".to_string(), Json::Str("native-mt".to_string()));
+    root.insert("kernel".to_string(), Json::Str(service.dot_spec().id()));
+    root.insert("threads".to_string(), Json::Num(threads as f64));
+    root.insert("compensated".to_string(), Json::Bool(service.compensated()));
+    root.insert(
+        "shard_threshold".to_string(),
+        if service.shard_threshold() == usize::MAX {
+            Json::Null
+        } else {
+            Json::Num(service.shard_threshold() as f64)
+        },
+    );
+    root.insert(
+        "threshold_source".to_string(),
+        Json::Str(service.threshold_source().label().to_string()),
+    );
+    root.insert("mode".to_string(), Json::Str(mode.label().to_string()));
+    root.insert(
+        "rate_rps".to_string(),
+        match mode {
+            LoadMode::Open { rate_rps } => Json::Num(rate_rps),
+            LoadMode::Closed => Json::Null,
+        },
+    );
+    root.insert("requests".to_string(), Json::Num(report.requests as f64));
+    root.insert("batch".to_string(), Json::Num(batch as f64));
+    root.insert("batches".to_string(), Json::Num(report.batches as f64));
+    root.insert("seed".to_string(), Json::Num(seed as f64));
+    root.insert("freq_ghz".to_string(), Json::Num(freq));
+    root.insert(
+        "freq_source".to_string(),
+        Json::Str(freq_src.label().to_string()),
+    );
+    root.insert("mix".to_string(), Json::Arr(mix_json));
+    root.insert("fused".to_string(), Json::Num(report.fused as f64));
+    root.insert("sharded".to_string(), Json::Num(report.sharded as f64));
+    root.insert("latency_ns".to_string(), Json::Obj(lat));
+    root.insert("busy_ns".to_string(), Json::Num(report.busy_ns));
+    root.insert("elapsed_ns".to_string(), Json::Num(report.elapsed_ns));
+    root.insert("updates".to_string(), Json::Num(report.updates as f64));
+    root.insert("flops".to_string(), Json::Num(report.flops as f64));
+    root.insert("mflops".to_string(), Json::Num(report.mflops));
+    root.insert("gups".to_string(), Json::Num(report.gups));
+    root.insert("reqs_per_s".to_string(), Json::Num(report.reqs_per_s));
+    root.insert("checksum".to_string(), Json::Num(report.checksum));
+    let doc = Json::Obj(root);
+    if let Err(e) = std::fs::write(&out_path, format!("{doc}\n")) {
+        eprintln!("error: cannot write {out_path}: {e}");
+        return ExitCode::FAILURE;
+    }
+    println!(
+        "\nserved {} requests ({} fused, {} sharded) -> {out_path}",
+        report.requests, report.fused, report.sharded
+    );
+    ExitCode::SUCCESS
+}
+
 fn machine_and_kernel(
     args: &kahan_ecm::util::cli::Args,
 ) -> Result<(arch::Machine, Variant, Precision, MemLevel), String> {
@@ -739,6 +971,7 @@ fn main() -> ExitCode {
         "run" => cmd_run(argv),
         "bench-native" => cmd_bench_native(argv),
         "bench-scale" => cmd_bench_scale(argv),
+        "serve-bench" => cmd_serve_bench(argv),
         "ecm" => cmd_ecm(argv),
         "sweep" => cmd_sweep(argv),
         "custom" => cmd_custom(argv),

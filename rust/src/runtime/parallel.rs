@@ -52,6 +52,7 @@ use std::any::Any;
 use std::fmt;
 use std::ops::Range;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -303,6 +304,88 @@ impl ThreadPool {
             .map(|o| o.expect("worker produced no result"))
             .collect()
     }
+
+    /// Run `f(task_index)` for every index in `0..total` over a *shared
+    /// dynamic queue*: up to `threads` execution lanes (the dispatching
+    /// thread plus the persistent workers) repeatedly claim the next
+    /// unclaimed index from an atomic ticket counter and execute whole
+    /// tasks back-to-back until the queue drains. This is the serving
+    /// layer's *fused small-request dispatch* — the dual of
+    /// [`Self::run_chunks`]: instead of one task split across all workers,
+    /// many independent tasks share the workers, so a skewed request
+    /// mixture load-balances dynamically.
+    ///
+    /// Results land in **task order** (slot `i` is written only by the lane
+    /// that claimed ticket `i`), so downstream consumers see a
+    /// deterministic layout. The task→lane assignment itself is dynamic;
+    /// `f` must therefore be deterministic per index (true for whole-kernel
+    /// executions, which depend only on their operands) for results to be
+    /// reproducible — which keeps the fused path bit-identical to running
+    /// each task alone. Panics propagate to the dispatcher exactly like
+    /// [`Self::run_chunks`], and the pool stays usable afterwards.
+    pub fn run_tasks<R, F>(&self, total: usize, f: F) -> Vec<R>
+    where
+        F: Fn(usize) -> R + Sync,
+        R: Send,
+    {
+        if total == 0 {
+            return Vec::new();
+        }
+        let lanes = self.threads.min(total);
+        if lanes == 1 {
+            return (0..total).map(f).collect();
+        }
+        let mut out: Vec<Option<R>> = (0..total).map(|_| None).collect();
+        {
+            let slots = SlotWriter {
+                ptr: out.as_mut_ptr(),
+            };
+            let next = AtomicUsize::new(0);
+            let fref = &f;
+            let next_ref = &next;
+            let task = move |_lane: usize| loop {
+                let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                if i >= total {
+                    break;
+                }
+                let r = fref(i);
+                // SAFETY: ticket `i` is claimed by exactly one lane (the
+                // fetch_add is atomic), so writes target disjoint slots;
+                // `out` is untouched until the latch wait below returns.
+                unsafe { slots.write(i, r) };
+            };
+            // SAFETY: pure lifetime erasure — `task` outlives every
+            // dispatched job because this function blocks on the latch
+            // (even when unwinding) before `task` can be dropped.
+            let erased: *const (dyn Fn(usize) + Sync) =
+                unsafe { std::mem::transmute::<Task<'_>, Task<'static>>(&task) };
+            let latch = Arc::new(Latch::new(lanes - 1));
+            let senders = self.senders.lock().unwrap();
+            for lane in 1..lanes {
+                senders[lane - 1]
+                    .send(Job {
+                        task: erased,
+                        index: lane,
+                        done: latch.clone(),
+                    })
+                    .expect("persistent worker exited early");
+            }
+            // Lane 0 drains the queue inline; a panic must still wait for
+            // the posted jobs before unwinding (they borrow `task`/`out`).
+            let inline = catch_unwind(AssertUnwindSafe(|| task(0)));
+            latch.wait();
+            drop(senders);
+            if let Err(p) = inline {
+                resume_unwind(p);
+            }
+            if let Some(p) = latch.take_panic() {
+                resume_unwind(p);
+            }
+        }
+        out.into_iter()
+            .map(|o| o.expect("task produced no result"))
+            .collect()
+    }
 }
 
 impl fmt::Debug for ThreadPool {
@@ -508,6 +591,55 @@ mod tests {
             assert_eq!(wi, i);
             assert_eq!((s, e), (i * 16, i * 16 + 16));
         }
+    }
+
+    #[test]
+    fn run_tasks_returns_results_in_task_order() {
+        let pool = ThreadPool::new(4);
+        for total in [0usize, 1, 3, 4, 17, 100] {
+            let got = pool.run_tasks(total, |i| i * i);
+            let want: Vec<usize> = (0..total).map(|i| i * i).collect();
+            assert_eq!(got, want, "total={total}");
+        }
+    }
+
+    #[test]
+    fn run_tasks_is_deterministic_under_skewed_load() {
+        // Task runtimes differ wildly, so the dynamic task→lane assignment
+        // varies across dispatches — the *values* must not.
+        let pool = ThreadPool::new(3);
+        let work = |i: usize| {
+            let spin = if i % 7 == 0 { 5000 } else { 10 };
+            let mut acc = i as f64;
+            for k in 0..spin {
+                acc = std::hint::black_box(acc + (k as f64).sin() * 1e-12);
+            }
+            acc
+        };
+        let first = pool.run_tasks(40, work);
+        for _ in 0..5 {
+            let again = pool.run_tasks(40, work);
+            for (a, b) in first.iter().zip(&again) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn run_tasks_panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(4);
+        let boom = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_tasks(32, |i| {
+                if i == 13 {
+                    panic!("task boom");
+                }
+                i
+            })
+        }));
+        let payload = boom.expect_err("task panic must reach the dispatcher");
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"task boom"));
+        let ok = pool.run_tasks(8, |i| i + 1);
+        assert_eq!(ok, (1..=8).collect::<Vec<_>>());
     }
 
     #[test]

@@ -1,0 +1,157 @@
+//! The batching-vs-sharding crossover, derived from the multicore
+//! saturation model.
+//!
+//! Under heavy independent traffic the serving layer has two ways to use
+//! `T` workers on one request:
+//!
+//! * **batch** it — run the whole request serially on one worker while the
+//!   other workers run *other* requests (perfect parallelism, zero
+//!   synchronization on the request's critical path);
+//! * **shard** it — split it into the pool's cache-line-aligned partition
+//!   and reduce the partials (lower latency for *this* request, but one
+//!   dispatch+latch round trip and, per Hofmann et al.'s saturation
+//!   analysis, a sub-linear speedup once the chip's memory bandwidth
+//!   saturates).
+//!
+//! Sharding a request of `n` updates takes roughly `n / (s·p1) + o` where
+//! `p1` is the single-core in-memory throughput (GUP/s = updates/ns), `s`
+//! the model speedup at `T` workers ([`sim::multicore::scaling_curve`],
+//! anchored on `p1`) and `o` the dispatch overhead; running it whole takes
+//! `n / p1`. Sharding therefore wins only past
+//!
+//! ```text
+//! n* = o · p1 · s / (s − 1)
+//! ```
+//!
+//! and `n*` grows without bound as `s → 1` — exactly the paper's point
+//! that past saturation more cores add nothing, so a saturated chip should
+//! spend extra workers on *more requests*, not more shards. The service
+//! uses [`service_crossover`] as its default threshold; callers can
+//! override it per service ([`crate::serve::ServeConfig`]).
+
+use crate::arch::Machine;
+use crate::ecm::{self, MemLevel};
+use crate::harness::scaleexp;
+use crate::runtime::backend::KernelSpec;
+use crate::runtime::parallel::CACHELINE_F64;
+use crate::sim::{self, MeasureOpts};
+use crate::util::units::{Precision, MIB};
+
+/// Default cost of one sharded dispatch (per-worker channel sends, the
+/// completion latch, the tree reduction) in nanoseconds. Order of
+/// magnitude, not a measurement — the crossover depends on it only
+/// linearly, and services can override the derived threshold outright.
+pub const DEFAULT_DISPATCH_OVERHEAD_NS: f64 = 10_000.0;
+
+/// Working-set size used to anchor the model's single-core in-memory
+/// throughput: far past any cache on the modeled machines.
+const IN_MEMORY_WS: u64 = 256 * MIB;
+
+/// Model-predicted single-core in-memory throughput in GUP/s for `spec` on
+/// machine `m` — the anchor the saturation model scales from when no live
+/// measurement is available. `None` when the kernel has no model analog
+/// (the sum kernels).
+pub fn model_p1_gups(m: &Machine, spec: KernelSpec) -> Option<f64> {
+    let v = scaleexp::variant_for(spec)?;
+    let k = ecm::derive::kernel_for(m, v, Precision::Dp, MemLevel::Mem);
+    let pts = sim::sweep(m, &k, &[IN_MEMORY_WS], &MeasureOpts::default());
+    pts.first().map(|p| p.gups)
+}
+
+/// The batch-vs-shard crossover length `n*` for `spec` on machine `m` with
+/// `threads` workers, anchored on `p1_gups` (see the module docs).
+/// Returns `usize::MAX` ("never shard") when sharding cannot pay: a single
+/// worker, no model analog, or a saturation speedup of ≤ 1.
+pub fn model_crossover(
+    m: &Machine,
+    spec: KernelSpec,
+    threads: usize,
+    p1_gups: f64,
+    dispatch_overhead_ns: f64,
+) -> usize {
+    if threads <= 1 || p1_gups <= 0.0 {
+        return usize::MAX;
+    }
+    let Some(v) = scaleexp::variant_for(spec) else {
+        return usize::MAX;
+    };
+    let k = ecm::derive::kernel_for(m, v, Precision::Dp, MemLevel::Mem);
+    let curve = sim::multicore::scaling_curve(m, &k, p1_gups, &MeasureOpts::default());
+    let idx = threads.min(curve.len());
+    if idx == 0 {
+        return usize::MAX;
+    }
+    let speedup = curve[idx - 1].1 / p1_gups;
+    if speedup <= 1.0 + 1e-9 {
+        return usize::MAX;
+    }
+    let n_star = dispatch_overhead_ns * p1_gups * speedup / (speedup - 1.0);
+    if !n_star.is_finite() || n_star >= usize::MAX as f64 / 2.0 {
+        return usize::MAX;
+    }
+    // Round up to a cache-line multiple and floor at one line per worker,
+    // so a sharded request always hands every worker at least one chunk.
+    let n = (n_star.ceil() as usize).max(threads * CACHELINE_F64);
+    (n + CACHELINE_F64 - 1) / CACHELINE_F64 * CACHELINE_F64
+}
+
+/// The service-default crossover: the generic HOST machine model pinned to
+/// `threads` workers and the detected clock, anchored on the *model's own*
+/// single-core in-memory prediction for `spec` — fully deterministic, no
+/// measurement required at service construction.
+pub fn service_crossover(spec: KernelSpec, threads: usize, freq_ghz: f64) -> usize {
+    let m = scaleexp::host_model(freq_ghz, threads as u32);
+    match model_p1_gups(&m, spec) {
+        Some(p1) => model_crossover(&m, spec, threads, p1, DEFAULT_DISPATCH_OVERHEAD_NS),
+        None => usize::MAX,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::{ImplStyle, KernelClass};
+
+    fn kahan_simd() -> KernelSpec {
+        KernelSpec::new(KernelClass::KahanDot, ImplStyle::SimdLanes)
+    }
+
+    #[test]
+    fn single_worker_never_shards() {
+        let m = scaleexp::host_model(3.0, 1);
+        assert_eq!(model_crossover(&m, kahan_simd(), 1, 1.0, 1e4), usize::MAX);
+        assert_eq!(service_crossover(kahan_simd(), 1, 3.0), usize::MAX);
+    }
+
+    #[test]
+    fn sum_kernels_have_no_model_analog() {
+        let spec = KernelSpec::new(KernelClass::KahanSum, ImplStyle::SimdLanes);
+        let m = scaleexp::host_model(3.0, 4);
+        assert_eq!(model_p1_gups(&m, spec), None);
+        assert_eq!(service_crossover(spec, 4, 3.0), usize::MAX);
+    }
+
+    #[test]
+    fn crossover_is_aligned_and_scales_with_overhead() {
+        let m = scaleexp::host_model(3.0, 4);
+        let p1 = model_p1_gups(&m, kahan_simd()).unwrap();
+        assert!(p1 > 0.0);
+        let lo = model_crossover(&m, kahan_simd(), 4, p1, 1_000.0);
+        let hi = model_crossover(&m, kahan_simd(), 4, p1, 100_000.0);
+        assert!(lo < usize::MAX && hi < usize::MAX);
+        assert_eq!(lo % CACHELINE_F64, 0);
+        assert_eq!(hi % CACHELINE_F64, 0);
+        // 100x the dispatch overhead must push the crossover out ~100x.
+        assert!(hi > 20 * lo, "lo={lo} hi={hi}");
+        assert!(lo >= 4 * CACHELINE_F64);
+    }
+
+    #[test]
+    fn service_default_is_plausible() {
+        // On the generic HOST model the crossover sits in the tens of
+        // thousands of elements: far above a cache-resident small request,
+        // far below the deep-memory sizes the scaling benches use.
+        let n = service_crossover(kahan_simd(), 4, 3.0);
+        assert!(n > 1024 && n < 1 << 24, "crossover {n}");
+    }
+}

@@ -1,0 +1,435 @@
+//! Load generation for the serving layer: request-size mixtures, open- and
+//! closed-loop arrival models, latency percentiles and aggregate
+//! throughput — the measurement engine behind `serve-bench` and the
+//! `serve` experiment.
+//!
+//! * **Closed loop**: a fixed number of outstanding requests — each
+//!   arrival batch is submitted when the previous one completes, and every
+//!   request's latency is its batch's service time. This measures the
+//!   service at its own pace (no queueing term).
+//! * **Open loop**: requests arrive on a virtual clock at a fixed rate,
+//!   independent of service progress; a batch is dispatched once its last
+//!   request has arrived, and latency runs from a request's *arrival* to
+//!   its batch's completion — so an underprovisioned service shows the
+//!   queueing blow-up a closed loop hides (the classical coordinated-
+//!   omission argument).
+//!
+//! All requests are dot products (the service's headline class); operand
+//! buffers are allocated once per distinct mixture size from the 64-byte
+//! arena and first-touched by the service's own workers, so the sharded
+//! path streams NUMA-local pages exactly like the measurement stack.
+
+use std::time::Instant;
+
+use crate::runtime::arena::AlignedVec;
+use crate::runtime::backend::{BackendError, KernelInput};
+use crate::runtime::parallel::ThreadPool;
+use crate::util::rng::Rng;
+use crate::util::stats::percentile_sorted;
+
+use super::scheduler::ExecPath;
+use super::DotService;
+
+/// One component of a request-size mixture.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MixEntry {
+    /// Request length (updates).
+    pub n: usize,
+    /// Relative sampling weight (> 0; weights need not sum to 1).
+    pub weight: f64,
+}
+
+/// Parse a mixture spec: comma-separated `n:weight` entries (bare `n`
+/// means weight 1), e.g. `1024:0.9,1048576:0.1`.
+pub fn parse_mix(s: &str) -> Result<Vec<MixEntry>, String> {
+    let mut v = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (n_str, w_str) = match part.split_once(':') {
+            Some((n, w)) => (n, w),
+            None => (part, "1"),
+        };
+        let n: usize = n_str
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad size '{n_str}' in mix entry '{part}'"))?;
+        let weight: f64 = w_str
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad weight '{w_str}' in mix entry '{part}'"))?;
+        if n == 0 {
+            return Err(format!("mix size must be >= 1 in '{part}'"));
+        }
+        if weight <= 0.0 || !weight.is_finite() {
+            return Err(format!("mix weight must be positive in '{part}'"));
+        }
+        v.push(MixEntry { n, weight });
+    }
+    if v.is_empty() {
+        return Err("empty request mixture".to_string());
+    }
+    Ok(v)
+}
+
+/// The default serving mixture: mostly small cache-resident requests, a
+/// tail of in-memory ones, and (full mode) an occasional huge request that
+/// crosses the shard threshold.
+pub fn default_mix(quick: bool) -> Vec<MixEntry> {
+    if quick {
+        vec![
+            MixEntry { n: 1024, weight: 0.6 },
+            MixEntry { n: 16384, weight: 0.3 },
+            MixEntry { n: 262144, weight: 0.1 },
+        ]
+    } else {
+        vec![
+            MixEntry { n: 1024, weight: 0.35 },
+            MixEntry { n: 16384, weight: 0.45 },
+            MixEntry { n: 262144, weight: 0.15 },
+            MixEntry { n: 4194304, weight: 0.05 },
+        ]
+    }
+}
+
+/// Deterministic weighted size sequence for `count` requests.
+pub fn sample_sizes(mix: &[MixEntry], count: usize, seed: u64) -> Vec<usize> {
+    assert!(!mix.is_empty(), "sample_sizes on an empty mixture");
+    let total: f64 = mix.iter().map(|e| e.weight).sum();
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let mut t = rng.f64() * total;
+        let mut pick = mix[mix.len() - 1].n;
+        for e in mix {
+            t -= e.weight;
+            if t < 0.0 {
+                pick = e.n;
+                break;
+            }
+        }
+        out.push(pick);
+    }
+    out
+}
+
+/// One aligned operand pair per distinct mixture size, generated
+/// deterministically from the seed and first-touched by `pool`'s workers
+/// (requests of the same size share operands — the load generator measures
+/// scheduling and kernels, not allocator traffic).
+pub struct OperandPool {
+    bufs: Vec<(usize, AlignedVec, AlignedVec)>,
+}
+
+impl OperandPool {
+    pub fn generate(mix: &[MixEntry], seed: u64, pool: &ThreadPool) -> Self {
+        let mut sizes: Vec<usize> = mix.iter().map(|e| e.n).collect();
+        sizes.sort_unstable();
+        sizes.dedup();
+        let mut rng = Rng::new(seed ^ 0x5E57E);
+        let mut bufs = Vec::with_capacity(sizes.len());
+        for n in sizes {
+            let src_x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let src_y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let x = AlignedVec::first_touch_copy(&src_x, pool);
+            let y = AlignedVec::first_touch_copy(&src_y, pool);
+            bufs.push((n, x, y));
+        }
+        Self { bufs }
+    }
+
+    /// A dot request over the shared operands of length `n` (must be a
+    /// mixture size).
+    pub fn dot_input(&self, n: usize) -> KernelInput<'_> {
+        let (_, x, y) = self
+            .bufs
+            .iter()
+            .find(|(m, _, _)| *m == n)
+            .expect("request size not in the operand pool");
+        KernelInput::Dot(x, y)
+    }
+}
+
+/// Arrival model for [`run_load`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LoadMode {
+    /// Submit the next batch when the previous completes.
+    Closed,
+    /// Requests arrive at a fixed rate on a virtual clock (see module
+    /// docs); latency includes queueing delay.
+    Open { rate_rps: f64 },
+}
+
+impl LoadMode {
+    pub fn label(self) -> &'static str {
+        match self {
+            LoadMode::Closed => "closed",
+            LoadMode::Open { .. } => "open",
+        }
+    }
+}
+
+/// Aggregate results of one load-generation run.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub requests: usize,
+    pub batches: usize,
+    /// Requests served on each path.
+    pub fused: u64,
+    pub sharded: u64,
+    /// Wall time the service spent executing batches, ns.
+    pub busy_ns: f64,
+    /// End-to-end span of the run (virtual clock for open loop), ns.
+    pub elapsed_ns: f64,
+    pub latency_p50_ns: f64,
+    pub latency_p90_ns: f64,
+    pub latency_p99_ns: f64,
+    pub latency_max_ns: f64,
+    /// Total updates streamed across all requests.
+    pub updates: u64,
+    /// Total arithmetic operations (per the served dot class).
+    pub flops: u64,
+    /// Aggregate arithmetic throughput while busy, MFlop/s.
+    pub mflops: f64,
+    /// Aggregate update throughput while busy, GUP/s.
+    pub gups: f64,
+    /// Completed requests per second over the run span.
+    pub reqs_per_s: f64,
+    /// Sum of all response values — a determinism anchor (fixed seed +
+    /// fixed threads ⇒ bit-identical checksum).
+    pub checksum: f64,
+}
+
+/// Drive `service` with `requests` dot requests sampled from `mix` in
+/// arrival batches of `batch`, under the given arrival model. Fully
+/// deterministic request stream for a fixed seed. Generates a fresh
+/// [`OperandPool`] — callers running several loads over the same mixture
+/// should generate the pool once and use [`run_load_with`].
+pub fn run_load(
+    service: &DotService,
+    mix: &[MixEntry],
+    requests: usize,
+    batch: usize,
+    mode: LoadMode,
+    seed: u64,
+) -> Result<LoadReport, BackendError> {
+    if mix.is_empty() {
+        return Err(BackendError::Runtime("empty request mixture".to_string()));
+    }
+    let operands = OperandPool::generate(mix, seed, service.pool());
+    run_load_with(service, mix, &operands, requests, batch, mode, seed)
+}
+
+/// [`run_load`] over a pre-generated operand pool (which must cover every
+/// mixture size).
+pub fn run_load_with(
+    service: &DotService,
+    mix: &[MixEntry],
+    operands: &OperandPool,
+    requests: usize,
+    batch: usize,
+    mode: LoadMode,
+    seed: u64,
+) -> Result<LoadReport, BackendError> {
+    if mix.is_empty() {
+        return Err(BackendError::Runtime("empty request mixture".to_string()));
+    }
+    if requests == 0 {
+        return Err(BackendError::Runtime("need at least one request".to_string()));
+    }
+    let gap_ns = match mode {
+        LoadMode::Closed => 0.0,
+        LoadMode::Open { rate_rps } => {
+            if rate_rps <= 0.0 || !rate_rps.is_finite() {
+                return Err(BackendError::Runtime("open-loop rate must be > 0".to_string()));
+            }
+            1e9 / rate_rps
+        }
+    };
+    let batch = batch.max(1);
+    let sizes = sample_sizes(mix, requests, seed);
+
+    let mut latencies = Vec::with_capacity(requests);
+    let mut busy_ns = 0.0;
+    let mut server_free_ns = 0.0;
+    let (mut fused, mut sharded) = (0u64, 0u64);
+    let mut updates = 0u64;
+    let mut batches = 0usize;
+    let mut checksum = 0.0;
+    let mut first = 0usize;
+    for chunk in sizes.chunks(batch) {
+        let inputs: Vec<KernelInput<'_>> = chunk.iter().map(|&n| operands.dot_input(n)).collect();
+        let t0 = Instant::now();
+        let responses = service.submit_batch(&inputs)?;
+        let dt = t0.elapsed().as_nanos() as f64;
+        busy_ns += dt;
+        batches += 1;
+        for r in &responses {
+            checksum += r.value;
+            updates += r.n as u64;
+            match r.path {
+                ExecPath::Fused => fused += 1,
+                ExecPath::Sharded => sharded += 1,
+            }
+        }
+        match mode {
+            LoadMode::Closed => {
+                for _ in 0..responses.len() {
+                    latencies.push(dt);
+                }
+            }
+            LoadMode::Open { .. } => {
+                let last_arrival = (first + chunk.len() - 1) as f64 * gap_ns;
+                let start = server_free_ns.max(last_arrival);
+                let completion = start + dt;
+                server_free_ns = completion;
+                for k in 0..chunk.len() {
+                    latencies.push(completion - (first + k) as f64 * gap_ns);
+                }
+            }
+        }
+        first += chunk.len();
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
+    let flops = updates * service.dot_spec().class.flops_per_update();
+    let elapsed_ns = match mode {
+        LoadMode::Closed => busy_ns,
+        LoadMode::Open { .. } => server_free_ns.max(busy_ns),
+    };
+    Ok(LoadReport {
+        requests,
+        batches,
+        fused,
+        sharded,
+        busy_ns,
+        elapsed_ns,
+        latency_p50_ns: percentile_sorted(&latencies, 50.0),
+        latency_p90_ns: percentile_sorted(&latencies, 90.0),
+        latency_p99_ns: percentile_sorted(&latencies, 99.0),
+        latency_max_ns: latencies[latencies.len() - 1],
+        updates,
+        flops,
+        mflops: flops as f64 / busy_ns * 1000.0,
+        gups: updates as f64 / busy_ns,
+        reqs_per_s: requests as f64 / elapsed_ns * 1e9,
+        checksum,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::ImplStyle;
+    use crate::serve::ServeConfig;
+
+    fn tiny_service(threads: usize, threshold: usize) -> DotService {
+        DotService::new(ServeConfig {
+            threads,
+            style: ImplStyle::SimdLanes,
+            compensated: true,
+            shard_threshold: Some(threshold),
+            freq_ghz: 3.0,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn parse_mix_accepts_weights_and_bare_sizes() {
+        let m = parse_mix("1024:0.9, 65536:0.1").unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0], MixEntry { n: 1024, weight: 0.9 });
+        let m = parse_mix("64,128").unwrap();
+        assert_eq!(m[1], MixEntry { n: 128, weight: 1.0 });
+    }
+
+    #[test]
+    fn parse_mix_rejects_garbage() {
+        assert!(parse_mix("").is_err());
+        assert!(parse_mix("abc:1").is_err());
+        assert!(parse_mix("64:zzz").is_err());
+        assert!(parse_mix("0:1").is_err());
+        assert!(parse_mix("64:-1").is_err());
+        assert!(parse_mix("64:0").is_err());
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_covers_the_mix() {
+        let mix = default_mix(true);
+        let a = sample_sizes(&mix, 500, 42);
+        let b = sample_sizes(&mix, 500, 42);
+        assert_eq!(a, b);
+        for e in &mix {
+            assert!(a.contains(&e.n), "size {} never sampled", e.n);
+        }
+        let c = sample_sizes(&mix, 500, 43);
+        assert_ne!(a, c, "different seeds should differ");
+    }
+
+    #[test]
+    fn closed_loop_report_is_consistent() {
+        let service = tiny_service(2, 4096);
+        let mix = vec![
+            MixEntry { n: 256, weight: 0.8 },
+            MixEntry { n: 8192, weight: 0.2 },
+        ];
+        let r = run_load(&service, &mix, 64, 8, LoadMode::Closed, 7).unwrap();
+        assert_eq!(r.requests, 64);
+        assert_eq!(r.batches, 8);
+        assert_eq!(r.fused + r.sharded, 64);
+        assert!(r.sharded > 0, "8192-update requests must shard at threshold 4096");
+        assert!(r.fused > 0);
+        assert!(r.busy_ns > 0.0 && r.mflops > 0.0 && r.gups > 0.0);
+        assert!(r.latency_p50_ns <= r.latency_p99_ns);
+        assert!(r.latency_p99_ns <= r.latency_max_ns);
+        assert_eq!(r.flops, r.updates * 5, "kahan dot: 5 flops per update");
+        // Same seed + same threads ⇒ identical request stream and results.
+        let again = run_load(&service, &mix, 64, 8, LoadMode::Closed, 7).unwrap();
+        assert_eq!(r.checksum.to_bits(), again.checksum.to_bits());
+        assert_eq!((r.fused, r.sharded), (again.fused, again.sharded));
+    }
+
+    #[test]
+    fn open_loop_latency_includes_queueing() {
+        let service = tiny_service(1, usize::MAX);
+        let mix = vec![MixEntry { n: 1024, weight: 1.0 }];
+        // An absurdly fast arrival rate: every request is effectively
+        // queued behind the previous batch, so tail latency must exceed
+        // one batch's service time by a growing margin.
+        let r = run_load(&service, &mix, 32, 4, LoadMode::Open { rate_rps: 1e12 }, 3).unwrap();
+        assert!(r.latency_max_ns >= r.latency_p50_ns);
+        assert!(r.elapsed_ns >= r.busy_ns * 0.99);
+        // And the queue means later requests wait longer than earlier ones.
+        assert!(r.latency_max_ns > r.latency_p50_ns, "{r:?}");
+    }
+
+    #[test]
+    fn run_load_rejects_bad_parameters() {
+        let service = tiny_service(1, 100);
+        let mix = vec![MixEntry { n: 64, weight: 1.0 }];
+        assert!(run_load(&service, &[], 10, 2, LoadMode::Closed, 1).is_err());
+        assert!(run_load(&service, &mix, 0, 2, LoadMode::Closed, 1).is_err());
+        let bad_rate = LoadMode::Open { rate_rps: 0.0 };
+        assert!(run_load(&service, &mix, 10, 2, bad_rate, 1).is_err());
+    }
+
+    #[test]
+    fn operand_pool_shares_buffers_per_size() {
+        let pool = ThreadPool::new(2);
+        let mix = vec![
+            MixEntry { n: 64, weight: 1.0 },
+            MixEntry { n: 64, weight: 2.0 },
+            MixEntry { n: 128, weight: 1.0 },
+        ];
+        let ops = OperandPool::generate(&mix, 9, &pool);
+        assert_eq!(ops.bufs.len(), 2, "duplicate sizes share one buffer pair");
+        match ops.dot_input(64) {
+            KernelInput::Dot(x, y) => {
+                assert_eq!(x.len(), 64);
+                assert_eq!(y.len(), 64);
+            }
+            _ => unreachable!(),
+        }
+    }
+}

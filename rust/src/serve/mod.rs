@@ -1,0 +1,538 @@
+//! High-throughput dot-product serving: many independent requests over the
+//! persistent worker pool.
+//!
+//! The paper's result is that a Kahan-compensated dot product costs
+//! essentially nothing once SIMD + multi-accumulator unrolling hide the
+//! compensation latency — so a *service* built on those kernels can offer
+//! compensated accuracy at naive-dot throughput. This module is that
+//! service: a synchronous-API, internally concurrent layer that accepts
+//! batches of independent dot/sum requests and schedules them over the
+//! [`ThreadPool`](crate::runtime::parallel::ThreadPool) the measurement
+//! stack already owns.
+//!
+//! Two execution paths, one numerics:
+//!
+//! * **Fused** (small requests): the [`scheduler::BatchScheduler`] packs
+//!   every small request of a batch into one dispatch; the pool's workers
+//!   pull *whole requests* back-to-back from a shared atomic queue
+//!   ([`ThreadPool::run_tasks`](crate::runtime::parallel::ThreadPool::run_tasks)),
+//!   so a skewed mixture load-balances dynamically and the per-request
+//!   critical path contains zero synchronization.
+//! * **Sharded** (large requests): the request is split by the *same*
+//!   cache-line-aligned partition and combined by the *same* deterministic
+//!   compensated tree reduction as the measurement path
+//!   ([`ParallelKernel`](crate::runtime::parallel::ParallelKernel)), so a
+//!   lone huge request still uses the whole chip.
+//!
+//! The crossover between the two comes from the multicore saturation model
+//! ([`crossover`]): once the chip's bandwidth saturates, extra workers are
+//! worth more as *request* parallelism than as *shard* parallelism.
+//!
+//! **Bit-parity contract.** Which path a request takes depends only on its
+//! length and the service threshold — never on the rest of the batch — and
+//! both paths run the service's single resolved kernel rung: fused = the
+//! serial kernel over the whole input (identical to the sharded path at
+//! `T = 1`), sharded = the fixed-`T` partition + tree reduce. A request
+//! therefore returns bit-identical results whether submitted alone or
+//! inside any batch, across repeated dispatches, at a fixed thread count —
+//! serving is a scheduling layer, not a numerics fork (property-pinned in
+//! `tests/properties.rs`). Keeping the compensated rung as the default
+//! (`ServeConfig::compensated = true`) is the point of the exercise: under
+//! load it costs the same as the naive rung, per the paper.
+//!
+//! Operand buffers should come from the 64-byte
+//! [`AlignedVec`](crate::runtime::arena::AlignedVec) arena —
+//! [`DotService::pool`] exposes the worker pool so callers can first-touch
+//! buffers with the same chunk→worker assignment the sharded path streams
+//! them with (the load generator in [`loadgen`] does exactly that).
+
+pub mod crossover;
+pub mod loadgen;
+pub mod scheduler;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::runtime::backend::native::{native_fn, preferred_kahan_style, NativeFn, SimdCaps};
+use crate::runtime::backend::{BackendError, ImplStyle, KernelClass, KernelInput, KernelSpec};
+use crate::runtime::hostbench::freq_ghz_with_source;
+use crate::runtime::parallel::{compensated_tree_reduce, ThreadPool, CACHELINE_F64};
+
+pub use crossover::{model_crossover, model_p1_gups, service_crossover};
+pub use loadgen::{
+    default_mix, parse_mix, run_load, run_load_with, LoadMode, LoadReport, MixEntry, OperandPool,
+};
+pub use scheduler::{BatchScheduler, DispatchPlan, ExecPath};
+
+/// Service construction parameters. `Default`/[`ServeConfig::for_host`]
+/// give the production posture: every core, the widest compensated rung
+/// the host supports, and the model-derived crossover.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Worker count (the persistent pool's size), >= 1.
+    pub threads: usize,
+    /// The kernel rung every request runs (one rung per service — part of
+    /// the bit-parity contract).
+    pub style: ImplStyle,
+    /// Serve the Kahan-compensated dot (the default — the paper says it is
+    /// free under load) or the naive dot for A/B comparisons. Sum requests
+    /// always use the compensated sum; there is no naive rung for them.
+    pub compensated: bool,
+    /// Shard requests with `n >= threshold`; `None` derives the crossover
+    /// from the saturation model ([`service_crossover`]).
+    pub shard_threshold: Option<usize>,
+    /// Core clock anchoring the model crossover (ignored with an explicit
+    /// threshold).
+    pub freq_ghz: f64,
+}
+
+impl ServeConfig {
+    /// All cores, widest supported rung, compensated, model crossover.
+    pub fn for_host() -> Self {
+        Self {
+            threads: ThreadPool::available(),
+            style: preferred_kahan_style(SimdCaps::detect()),
+            compensated: true,
+            shard_threshold: None,
+            freq_ghz: freq_ghz_with_source().0,
+        }
+    }
+
+    /// [`Self::for_host`] pinned to a worker count.
+    pub fn with_threads(threads: usize) -> Self {
+        Self {
+            threads,
+            ..Self::for_host()
+        }
+    }
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self::for_host()
+    }
+}
+
+/// Where the service's shard threshold came from (recorded in bench
+/// artifacts so a model-derived and a pinned run are never conflated).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ThresholdSource {
+    /// Derived from the saturation model at construction.
+    Model,
+    /// Supplied by the caller ([`ServeConfig::shard_threshold`]).
+    Override,
+}
+
+impl ThresholdSource {
+    pub fn label(self) -> &'static str {
+        match self {
+            ThresholdSource::Model => "model",
+            ThresholdSource::Override => "override",
+        }
+    }
+}
+
+/// One served request's outcome.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServeResponse {
+    /// The kernel result.
+    pub value: f64,
+    /// Updates the request carried.
+    pub n: usize,
+    /// Which execution path served it.
+    pub path: ExecPath,
+}
+
+/// Monotonic service counters (snapshot via [`DotService::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub fused: u64,
+    pub sharded: u64,
+    /// Total updates streamed across all requests.
+    pub updates: u64,
+}
+
+#[derive(Default)]
+struct Counters {
+    requests: AtomicU64,
+    fused: AtomicU64,
+    sharded: AtomicU64,
+    updates: AtomicU64,
+}
+
+/// The serving engine: one resolved kernel rung, one persistent worker
+/// pool, synchronous batch submission (see the module docs).
+pub struct DotService {
+    pool: Arc<ThreadPool>,
+    scheduler: BatchScheduler,
+    threshold_source: ThresholdSource,
+    style: ImplStyle,
+    compensated: bool,
+    dot_spec: KernelSpec,
+    sum_spec: KernelSpec,
+    dot_fn: fn(&[f64], &[f64]) -> f64,
+    sum_fn: fn(&[f64]) -> f64,
+    stats: Counters,
+}
+
+impl DotService {
+    /// Build a service: spawns the persistent pool, resolves the dot and
+    /// sum kernels for `cfg.style` once, and fixes the shard crossover.
+    /// Fails with [`BackendError::Unsupported`] when the host cannot run
+    /// the requested rung.
+    pub fn new(cfg: ServeConfig) -> Result<Self, BackendError> {
+        let caps = SimdCaps::detect();
+        let dot_class = if cfg.compensated {
+            KernelClass::KahanDot
+        } else {
+            KernelClass::NaiveDot
+        };
+        let dot_spec = KernelSpec::new(dot_class, cfg.style);
+        let sum_spec = KernelSpec::new(KernelClass::KahanSum, cfg.style);
+        let unsupported = |spec| BackendError::Unsupported {
+            backend: "serve".to_string(),
+            spec,
+        };
+        let Some(NativeFn::Dot(dot_fn)) = native_fn(dot_spec, caps) else {
+            return Err(unsupported(dot_spec));
+        };
+        let Some(NativeFn::Sum(sum_fn)) = native_fn(sum_spec, caps) else {
+            return Err(unsupported(sum_spec));
+        };
+        let threads = cfg.threads.max(1);
+        let (threshold, threshold_source) = match cfg.shard_threshold {
+            Some(t) => (t, ThresholdSource::Override),
+            None => (service_crossover(dot_spec, threads, cfg.freq_ghz), ThresholdSource::Model),
+        };
+        Ok(Self {
+            pool: Arc::new(ThreadPool::new(threads)),
+            scheduler: BatchScheduler::new(threshold),
+            threshold_source,
+            style: cfg.style,
+            compensated: cfg.compensated,
+            dot_spec,
+            sum_spec,
+            dot_fn,
+            sum_fn,
+            stats: Counters::default(),
+        })
+    }
+
+    /// Worker count the service schedules over.
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// The persistent worker pool — exposed so callers can first-touch
+    /// operand arenas with the same chunk→worker assignment the sharded
+    /// path uses.
+    pub fn pool(&self) -> &Arc<ThreadPool> {
+        &self.pool
+    }
+
+    /// Requests with at least this many updates are sharded.
+    pub fn shard_threshold(&self) -> usize {
+        self.scheduler.shard_threshold()
+    }
+
+    pub fn threshold_source(&self) -> ThresholdSource {
+        self.threshold_source
+    }
+
+    pub fn style(&self) -> ImplStyle {
+        self.style
+    }
+
+    pub fn compensated(&self) -> bool {
+        self.compensated
+    }
+
+    /// The rung dot requests run on.
+    pub fn dot_spec(&self) -> KernelSpec {
+        self.dot_spec
+    }
+
+    /// The rung sum requests run on.
+    pub fn sum_spec(&self) -> KernelSpec {
+        self.sum_spec
+    }
+
+    /// The spec a given request resolves to.
+    pub fn spec_for(&self, input: &KernelInput<'_>) -> KernelSpec {
+        match input {
+            KernelInput::Dot(..) => self.dot_spec,
+            KernelInput::Sum(..) => self.sum_spec,
+        }
+    }
+
+    /// Snapshot of the monotonic service counters.
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            requests: self.stats.requests.load(Ordering::Relaxed),
+            fused: self.stats.fused.load(Ordering::Relaxed),
+            sharded: self.stats.sharded.load(Ordering::Relaxed),
+            updates: self.stats.updates.load(Ordering::Relaxed),
+        }
+    }
+
+    fn run_serial(&self, input: &KernelInput<'_>) -> f64 {
+        match *input {
+            KernelInput::Dot(x, y) => (self.dot_fn)(x, y),
+            KernelInput::Sum(x) => (self.sum_fn)(x),
+        }
+    }
+
+    fn run_sharded(&self, input: &KernelInput<'_>) -> f64 {
+        let pool = &self.pool;
+        let partials = match *input {
+            KernelInput::Dot(x, y) => {
+                let f = self.dot_fn;
+                pool.run_chunks(x.len(), CACHELINE_F64, |_, r| f(&x[r.clone()], &y[r]))
+            }
+            KernelInput::Sum(x) => {
+                let f = self.sum_fn;
+                pool.run_chunks(x.len(), CACHELINE_F64, |_, r| f(&x[r]))
+            }
+        };
+        compensated_tree_reduce(&partials)
+    }
+
+    fn record(&self, fused: u64, sharded: u64, updates: u64) {
+        let s = &self.stats;
+        s.requests.fetch_add(fused + sharded, Ordering::Relaxed);
+        s.fused.fetch_add(fused, Ordering::Relaxed);
+        s.sharded.fetch_add(sharded, Ordering::Relaxed);
+        s.updates.fetch_add(updates, Ordering::Relaxed);
+    }
+
+    /// Serve one request. Small requests run serially on the calling
+    /// thread (bit-identical to their fused-batch execution); large ones
+    /// shard across the pool.
+    pub fn submit(&self, input: &KernelInput<'_>) -> Result<ServeResponse, BackendError> {
+        input.check(self.spec_for(input))?;
+        let n = input.updates();
+        let path = self.scheduler.path_for(n);
+        let value = match path {
+            ExecPath::Fused => self.run_serial(input),
+            ExecPath::Sharded => self.run_sharded(input),
+        };
+        match path {
+            ExecPath::Fused => self.record(1, 0, n as u64),
+            ExecPath::Sharded => self.record(0, 1, n as u64),
+        }
+        Ok(ServeResponse { value, n, path })
+    }
+
+    /// Serve a batch of independent requests: every input is validated
+    /// up front (one bad request fails the whole batch before anything
+    /// executes), small requests go out as one fused dispatch, large ones
+    /// shard across the full pool one after another. Responses come back
+    /// in submission order.
+    pub fn submit_batch(
+        &self,
+        inputs: &[KernelInput<'_>],
+    ) -> Result<Vec<ServeResponse>, BackendError> {
+        for input in inputs {
+            input.check(self.spec_for(input))?;
+        }
+        let plan = self.scheduler.plan(inputs);
+        let mut values = vec![0.0f64; inputs.len()];
+        let run_one = |k: usize| self.run_serial(&inputs[plan.fused[k]]);
+        let fused_vals = self.pool.run_tasks(plan.fused.len(), run_one);
+        for (k, &idx) in plan.fused.iter().enumerate() {
+            values[idx] = fused_vals[k];
+        }
+        for &idx in &plan.sharded {
+            values[idx] = self.run_sharded(&inputs[idx]);
+        }
+        let updates: u64 = inputs.iter().map(|i| i.updates() as u64).sum();
+        self.record(plan.fused.len() as u64, plan.sharded.len() as u64, updates);
+        Ok(inputs
+            .iter()
+            .zip(values)
+            .map(|(input, value)| {
+                let n = input.updates();
+                ServeResponse {
+                    value,
+                    n,
+                    path: self.scheduler.path_for(n),
+                }
+            })
+            .collect())
+    }
+}
+
+impl std::fmt::Debug for DotService {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DotService")
+            .field("threads", &self.threads())
+            .field("style", &self.style)
+            .field("compensated", &self.compensated)
+            .field("shard_threshold", &self.shard_threshold())
+            .field("threshold_source", &self.threshold_source)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::Backend;
+    use crate::runtime::parallel::ParallelBackend;
+    use crate::util::rng::Rng;
+
+    fn cfg(threads: usize, threshold: usize) -> ServeConfig {
+        ServeConfig {
+            threads,
+            style: ImplStyle::SimdLanes,
+            compensated: true,
+            shard_threshold: Some(threshold),
+            freq_ghz: 3.0,
+        }
+    }
+
+    fn randvec(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn batched_matches_unbatched_bit_for_bit() {
+        let service = DotService::new(cfg(3, 1000)).unwrap();
+        let sizes = [7usize, 64, 999, 1000, 1001, 4096, 100];
+        let data: Vec<(Vec<f64>, Vec<f64>)> = sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| (randvec(n, 100 + i as u64), randvec(n, 200 + i as u64)))
+            .collect();
+        let inputs: Vec<KernelInput<'_>> =
+            data.iter().map(|(x, y)| KernelInput::Dot(x, y)).collect();
+        let batched = service.submit_batch(&inputs).unwrap();
+        for (input, b) in inputs.iter().zip(&batched) {
+            let alone = service.submit(input).unwrap();
+            assert_eq!(alone.value.to_bits(), b.value.to_bits(), "n={}", b.n);
+            assert_eq!(alone.path, b.path);
+        }
+        // Repeated batched dispatches are bit-stable too.
+        let again = service.submit_batch(&inputs).unwrap();
+        for (a, b) in batched.iter().zip(&again) {
+            assert_eq!(a.value.to_bits(), b.value.to_bits());
+        }
+    }
+
+    #[test]
+    fn sharded_path_matches_parallel_backend_bits() {
+        for threads in [2usize, 3] {
+            let service = DotService::new(cfg(threads, 64)).unwrap();
+            let backend = ParallelBackend::new(threads);
+            let x = randvec(4099, 7);
+            let y = randvec(4099, 8);
+            let input = KernelInput::Dot(&x, &y);
+            let served = service.submit(&input).unwrap();
+            assert_eq!(served.path, ExecPath::Sharded);
+            let reference = backend.run(service.dot_spec(), &input).unwrap();
+            assert_eq!(served.value.to_bits(), reference.to_bits(), "T={threads}");
+            // Sum requests shard identically.
+            let s_in = KernelInput::Sum(&x);
+            let served = service.submit(&s_in).unwrap();
+            let reference = backend.run(service.sum_spec(), &s_in).unwrap();
+            assert_eq!(served.value.to_bits(), reference.to_bits(), "T={threads}");
+        }
+    }
+
+    #[test]
+    fn crossover_boundary_is_respected() {
+        let service = DotService::new(cfg(2, 256)).unwrap();
+        let x = randvec(256, 1);
+        let y = randvec(256, 2);
+        let below = service.submit(&KernelInput::Dot(&x[..255], &y[..255])).unwrap();
+        assert_eq!(below.path, ExecPath::Fused);
+        let at = service.submit(&KernelInput::Dot(&x, &y)).unwrap();
+        assert_eq!(at.path, ExecPath::Sharded);
+        let stats = service.stats();
+        assert_eq!(stats.requests, 2);
+        assert_eq!(stats.fused, 1);
+        assert_eq!(stats.sharded, 1);
+        assert_eq!(stats.updates, 255 + 256);
+    }
+
+    #[test]
+    fn fused_path_equals_serial_kernel_and_t1_shard() {
+        // A fused request is the serial kernel over the whole input —
+        // which is also exactly what the sharded path produces at T = 1.
+        let big = 2048;
+        let x = randvec(big, 3);
+        let y = randvec(big, 4);
+        let input = KernelInput::Dot(&x, &y);
+        let fused_service = DotService::new(cfg(4, usize::MAX)).unwrap();
+        let shard_service = DotService::new(cfg(1, 0)).unwrap();
+        let a = fused_service.submit(&input).unwrap();
+        let b = shard_service.submit(&input).unwrap();
+        assert_eq!(a.path, ExecPath::Fused);
+        assert_eq!(b.path, ExecPath::Sharded);
+        assert_eq!(a.value.to_bits(), b.value.to_bits());
+    }
+
+    #[test]
+    fn naive_service_uses_naive_dot() {
+        let mut c = cfg(2, usize::MAX);
+        c.compensated = false;
+        let service = DotService::new(c).unwrap();
+        assert_eq!(service.dot_spec().class, KernelClass::NaiveDot);
+        assert_eq!(service.sum_spec().class, KernelClass::KahanSum);
+        let x = [1.0, 2.0, 3.0];
+        let y = [4.0, 5.0, 6.0];
+        let r = service.submit(&KernelInput::Dot(&x, &y)).unwrap();
+        assert_eq!(r.value, 32.0);
+    }
+
+    #[test]
+    fn invalid_requests_fail_the_whole_batch() {
+        let service = DotService::new(cfg(2, 100)).unwrap();
+        let x = [1.0, 2.0];
+        let y = [1.0];
+        let good = KernelInput::Sum(&x);
+        let bad = KernelInput::Dot(&x, &y);
+        let err = service.submit_batch(&[good, bad]).unwrap_err();
+        assert!(matches!(err, BackendError::ShapeMismatch { .. }));
+        // Nothing executed: counters untouched.
+        assert_eq!(service.stats(), ServeStats::default());
+    }
+
+    #[test]
+    fn unsupported_style_is_rejected_at_construction() {
+        if SimdCaps::detect().avx512 {
+            return; // host actually supports it; nothing to reject
+        }
+        let mut c = cfg(2, 100);
+        c.style = ImplStyle::Avx512U8;
+        let err = DotService::new(c).unwrap_err();
+        assert!(matches!(err, BackendError::Unsupported { .. }));
+    }
+
+    #[test]
+    fn empty_and_mixed_batches_serve() {
+        let service = DotService::new(cfg(4, 128)).unwrap();
+        assert!(service.submit_batch(&[]).unwrap().is_empty());
+        let x = randvec(300, 9);
+        let small = [1.0, 2.0, 3.0, 4.0];
+        let inputs = [
+            KernelInput::Sum(&small),
+            KernelInput::Dot(&x, &x),
+            KernelInput::Sum(&x),
+            KernelInput::Dot(&small, &small),
+        ];
+        let rs = service.submit_batch(&inputs).unwrap();
+        assert_eq!(rs.len(), 4);
+        assert_eq!(rs[0].path, ExecPath::Fused);
+        assert_eq!(rs[1].path, ExecPath::Sharded);
+        assert_eq!(rs[2].path, ExecPath::Sharded);
+        assert_eq!(rs[3].path, ExecPath::Fused);
+        assert_eq!(rs[0].value, 10.0);
+        assert_eq!(rs[3].value, 30.0);
+        let stats = service.stats();
+        assert_eq!(stats.fused, 2);
+        assert_eq!(stats.sharded, 2);
+    }
+}

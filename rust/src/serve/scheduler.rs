@@ -1,0 +1,139 @@
+//! Request classification and dispatch planning for the serving layer.
+//!
+//! The scheduler is deliberately *pure*: given a batch of requests and the
+//! service's shard threshold it decides, per request, whether the request
+//! is **fused** (executed whole by one worker, many requests per dispatch)
+//! or **sharded** (split across all workers via the pool partition). The
+//! decision depends only on the request's length — never on what else is
+//! in the batch — which is what makes the batched results bit-identical to
+//! the unbatched single-request path: scheduling changes *where* a request
+//! runs, never *how*.
+
+use crate::runtime::backend::KernelInput;
+
+/// Which execution path served a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecPath {
+    /// Executed whole by a single worker inside a fused multi-request
+    /// dispatch (or inline, for a lone small request).
+    Fused,
+    /// Partitioned across all workers and combined by the deterministic
+    /// compensated tree reduction.
+    Sharded,
+}
+
+impl ExecPath {
+    pub fn label(self) -> &'static str {
+        match self {
+            ExecPath::Fused => "fused",
+            ExecPath::Sharded => "sharded",
+        }
+    }
+}
+
+/// The scheduling decision for one batch: request indices routed to the
+/// fused dispatch and to individual sharding, each in arrival order.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DispatchPlan {
+    /// Indices of requests executed whole inside one fused dispatch.
+    pub fused: Vec<usize>,
+    /// Indices of requests sharded across the pool, run one after another.
+    pub sharded: Vec<usize>,
+}
+
+impl DispatchPlan {
+    /// Total number of planned requests.
+    pub fn len(&self) -> usize {
+        self.fused.len() + self.sharded.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fused.is_empty() && self.sharded.is_empty()
+    }
+}
+
+/// The size-threshold batch scheduler (see the module docs). Holds only the
+/// crossover; the owning [`DotService`](crate::serve::DotService) supplies
+/// the pool and kernels.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchScheduler {
+    shard_threshold: usize,
+}
+
+impl BatchScheduler {
+    pub fn new(shard_threshold: usize) -> Self {
+        Self { shard_threshold }
+    }
+
+    pub fn shard_threshold(&self) -> usize {
+        self.shard_threshold
+    }
+
+    /// Does a request of `n` updates take the sharded path? The boundary is
+    /// inclusive: `n >= threshold` shards, everything below fuses.
+    pub fn shards(&self, n: usize) -> bool {
+        n >= self.shard_threshold
+    }
+
+    /// The path a request of `n` updates takes.
+    pub fn path_for(&self, n: usize) -> ExecPath {
+        if self.shards(n) {
+            ExecPath::Sharded
+        } else {
+            ExecPath::Fused
+        }
+    }
+
+    /// Split a batch into the fused and sharded index sets, preserving
+    /// arrival order within each set.
+    pub fn plan(&self, inputs: &[KernelInput<'_>]) -> DispatchPlan {
+        let mut plan = DispatchPlan::default();
+        for (i, input) in inputs.iter().enumerate() {
+            if self.shards(input.updates()) {
+                plan.sharded.push(i);
+            } else {
+                plan.fused.push(i);
+            }
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boundary_is_inclusive() {
+        let s = BatchScheduler::new(100);
+        assert_eq!(s.path_for(99), ExecPath::Fused);
+        assert_eq!(s.path_for(100), ExecPath::Sharded);
+        assert_eq!(s.path_for(101), ExecPath::Sharded);
+        assert!(!s.shards(0));
+    }
+
+    #[test]
+    fn zero_threshold_shards_everything() {
+        let s = BatchScheduler::new(0);
+        assert_eq!(s.path_for(0), ExecPath::Sharded);
+        assert_eq!(s.path_for(1), ExecPath::Sharded);
+    }
+
+    #[test]
+    fn plan_preserves_arrival_order() {
+        let a = vec![1.0; 8];
+        let b = vec![2.0; 200];
+        let inputs = [
+            KernelInput::Sum(&a),
+            KernelInput::Sum(&b),
+            KernelInput::Dot(&a, &a),
+            KernelInput::Dot(&b, &b),
+            KernelInput::Sum(&a),
+        ];
+        let plan = BatchScheduler::new(100).plan(&inputs);
+        assert_eq!(plan.fused, vec![0, 2, 4]);
+        assert_eq!(plan.sharded, vec![1, 3]);
+        assert_eq!(plan.len(), 5);
+        assert!(!plan.is_empty());
+    }
+}

@@ -218,6 +218,43 @@ fn host_experiment_honors_backend_selector() {
     }
 }
 
+/// The serving layer end to end through the public API: a mixed-size load
+/// run serves every request, splits traffic across both scheduling paths
+/// at an explicit crossover, and reports self-consistent aggregates. This
+/// is the registry-level `serve` experiment's engine driven directly.
+#[test]
+fn serving_layer_end_to_end() {
+    use kahan_ecm::runtime::backend::ImplStyle;
+    use kahan_ecm::serve::{run_load, DotService, LoadMode, MixEntry, ServeConfig};
+
+    let service = DotService::new(ServeConfig {
+        threads: 2,
+        style: ImplStyle::SimdLanes,
+        compensated: true,
+        shard_threshold: Some(4096),
+        freq_ghz: 3.0,
+    })
+    .unwrap();
+    let mix = vec![
+        MixEntry { n: 512, weight: 0.7 },
+        MixEntry { n: 16384, weight: 0.3 },
+    ];
+    let r = run_load(&service, &mix, 96, 12, LoadMode::Closed, 5).unwrap();
+    assert_eq!(r.requests, 96);
+    assert_eq!(r.fused + r.sharded, 96);
+    assert!(r.fused > 0 && r.sharded > 0, "both paths must carry traffic");
+    assert!(r.mflops > 0.0 && r.reqs_per_s > 0.0);
+    assert!(r.latency_p50_ns <= r.latency_max_ns);
+    let stats = service.stats();
+    assert_eq!(stats.requests, 96);
+    assert_eq!(stats.fused, r.fused);
+    assert_eq!(stats.sharded, r.sharded);
+    // The serve experiment is registered and runs off this same engine.
+    let defs = find("serve");
+    assert_eq!(defs.len(), 1);
+    assert!(!defs[0].needs_artifacts);
+}
+
 /// Artifact -> PJRT -> numerics, on adversarial cancellation data (skips
 /// cleanly without artifacts or without a real PJRT runtime).
 ///

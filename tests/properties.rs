@@ -15,6 +15,7 @@ use kahan_ecm::runtime::backend::{
 use kahan_ecm::runtime::parallel::{
     compensated_tree_reduce, CACHELINE_F64, ParallelBackend, ThreadPool,
 };
+use kahan_ecm::serve::{DotService, ExecPath, ServeConfig};
 use kahan_ecm::sim::{self, simulate_core, MeasureOpts};
 use kahan_ecm::util::rng::Rng;
 use kahan_ecm::util::units::Precision;
@@ -598,4 +599,144 @@ fn movs_are_free_on_ooo() {
             "movs changed II: {base} -> {with}"
         );
     });
+}
+
+/// The serving layer's bit-parity contract: a request returns bit-identical
+/// results whether submitted alone, inside a random batch, or in a repeated
+/// dispatch — at a fixed thread count the scheduler may move work between
+/// workers but never change what a request computes.
+#[test]
+fn serving_batched_equals_unbatched_bits() {
+    property("serve batched == unbatched bitwise", 10, |g| {
+        let threads = *g.choose(&[1usize, 2, 3]);
+        let threshold = g.usize(32, 2048);
+        let service = DotService::new(ServeConfig {
+            threads,
+            style: ImplStyle::SimdLanes,
+            compensated: g.bool(),
+            shard_threshold: Some(threshold),
+            freq_ghz: 3.0,
+        })
+        .unwrap();
+        let k = g.usize(1, 8);
+        let data: Vec<(Vec<f64>, Vec<f64>)> = (0..k)
+            .map(|_| {
+                // Cluster sizes around the threshold so both paths occur.
+                let n = g.usize(0, 2 * threshold + 64);
+                (g.vec_f64_log(n, -20, 20), g.vec_f64_log(n, -20, 20))
+            })
+            .collect();
+        let inputs: Vec<KernelInput<'_>> = data
+            .iter()
+            .map(|(x, y)| {
+                if x.len() % 3 == 0 {
+                    KernelInput::Sum(x)
+                } else {
+                    KernelInput::Dot(x, y)
+                }
+            })
+            .collect();
+        let batched = service.submit_batch(&inputs).unwrap();
+        let again = service.submit_batch(&inputs).unwrap();
+        for ((input, b), b2) in inputs.iter().zip(&batched).zip(&again) {
+            let alone = service.submit(input).unwrap();
+            assert_eq!(
+                alone.value.to_bits(),
+                b.value.to_bits(),
+                "n={} T={threads} threshold={threshold}",
+                b.n
+            );
+            assert_eq!(b.value.to_bits(), b2.value.to_bits(), "redispatch n={}", b.n);
+            assert_eq!(alone.path, b.path);
+        }
+    });
+}
+
+/// A sharded request is the measurement path: bit-identical to the
+/// thread-parallel backend at the same T (same rung, same cache-line
+/// partition, same compensated tree reduction).
+#[test]
+fn serving_sharded_matches_parallel_backend_bits() {
+    property("serve sharded == ParallelBackend bitwise", 10, |g| {
+        let threads = *g.choose(&[2usize, 3, 8]);
+        let n = g.usize(64, 6000);
+        let x = g.vec_f64_log(n, -20, 20);
+        let y = g.vec_f64_log(n, -20, 20);
+        let compensated = g.bool();
+        let service = DotService::new(ServeConfig {
+            threads,
+            style: ImplStyle::SimdLanes,
+            compensated,
+            shard_threshold: Some(0), // shard everything
+            freq_ghz: 3.0,
+        })
+        .unwrap();
+        let backend = ParallelBackend::new(threads);
+        let input = KernelInput::Dot(&x, &y);
+        let served = service.submit(&input).unwrap();
+        assert_eq!(served.path, ExecPath::Sharded);
+        let reference = backend.run(service.dot_spec(), &input).unwrap();
+        assert_eq!(served.value.to_bits(), reference.to_bits(), "T={threads} n={n}");
+        let s_input = KernelInput::Sum(&x);
+        let served = service.submit(&s_input).unwrap();
+        let reference = backend.run(service.sum_spec(), &s_input).unwrap();
+        assert_eq!(served.value.to_bits(), reference.to_bits(), "sum T={threads} n={n}");
+    });
+}
+
+/// The crossover threshold is respected exactly at its boundary, for any
+/// threshold: n = threshold - 1 fuses, n = threshold shards.
+#[test]
+fn serving_crossover_boundary_exact() {
+    property("serve crossover boundary", 12, |g| {
+        let threshold = g.usize(16, 4096);
+        let service = DotService::new(ServeConfig {
+            threads: 2,
+            style: ImplStyle::SimdLanes,
+            compensated: true,
+            shard_threshold: Some(threshold),
+            freq_ghz: 3.0,
+        })
+        .unwrap();
+        let x = g.vec_f64_log(threshold, -10, 10);
+        let y = g.vec_f64_log(threshold, -10, 10);
+        let below = service
+            .submit(&KernelInput::Dot(&x[..threshold - 1], &y[..threshold - 1]))
+            .unwrap();
+        assert_eq!(below.path, ExecPath::Fused, "threshold={threshold}");
+        let at = service.submit(&KernelInput::Dot(&x, &y)).unwrap();
+        assert_eq!(at.path, ExecPath::Sharded, "threshold={threshold}");
+        let stats = service.stats();
+        assert_eq!((stats.fused, stats.sharded), (1, 1));
+    });
+}
+
+/// Serving is deterministic across *fresh* services of the same shape —
+/// the batch results depend on (rung, T, threshold, operands) only, never
+/// on pool identity or scheduling history.
+#[test]
+fn serving_deterministic_across_fresh_services() {
+    let mut rng = Rng::new(77);
+    let data: Vec<(Vec<f64>, Vec<f64>)> = [100usize, 900, 2000, 33]
+        .iter()
+        .map(|&n| {
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            (x, y)
+        })
+        .collect();
+    let inputs: Vec<KernelInput<'_>> = data.iter().map(|(x, y)| KernelInput::Dot(x, y)).collect();
+    let cfg = || ServeConfig {
+        threads: 3,
+        style: ImplStyle::SimdLanes,
+        compensated: true,
+        shard_threshold: Some(512),
+        freq_ghz: 3.0,
+    };
+    let a = DotService::new(cfg()).unwrap().submit_batch(&inputs).unwrap();
+    let b = DotService::new(cfg()).unwrap().submit_batch(&inputs).unwrap();
+    for (ra, rb) in a.iter().zip(&b) {
+        assert_eq!(ra.value.to_bits(), rb.value.to_bits(), "n={}", ra.n);
+        assert_eq!(ra.path, rb.path);
+    }
 }

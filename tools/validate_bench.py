@@ -1,0 +1,231 @@
+#!/usr/bin/env python3
+"""Validate (and optionally merge) the kahan-ecm BENCH_*.json artifacts.
+
+Usage:
+    python3 tools/validate_bench.py [options] FILE...
+
+Options:
+    --merge OUT.json              after validating every input, write one
+                                  merged BENCH_summary.json document (the
+                                  machine-readable perf trajectory per run)
+    --expect-scaling-threads N    additionally pin threads_max of the
+                                  scaling document (CI smoke runs at 2)
+
+Document kinds are recognized by shape:
+    BENCH_native.json   -- `bench-native`  (backend "native", "results")
+    BENCH_scaling.json  -- `bench-scale`   (backend "native-mt", "scaling")
+    BENCH_serving.json  -- `serve-bench`   ("subsystem": "serve")
+    BENCH_summary.json  -- a previous merge ("schema": "kahan-ecm-bench-summary/...")
+
+Shared by .github/workflows/ci.yml and local runs, so the schema checks
+cannot drift between the two. Exits non-zero with a message on the first
+violation; prints one OK line per validated document.
+"""
+
+import argparse
+import json
+import sys
+
+
+def fail(msg):
+    raise SystemExit(f"validate_bench: FAIL: {msg}")
+
+
+def kind_of(doc):
+    if doc.get("subsystem") == "serve":
+        return "serving"
+    if doc.get("backend") == "native-mt" and "scaling" in doc:
+        return "scaling"
+    if doc.get("backend") == "native" and "results" in doc:
+        return "native"
+    if str(doc.get("schema", "")).startswith("kahan-ecm-bench-summary"):
+        return "summary"
+    fail("unrecognized document shape (keys: %s)" % sorted(doc))
+
+
+def validate_native(doc):
+    assert doc["backend"] == "native"
+    assert doc["results"], "bench produced no results"
+    assert isinstance(doc["avx2"], bool) and isinstance(doc["avx512"], bool)
+    kernels = {r["kernel"] for r in doc["results"]}
+    for want in ("naive_dot.scalar", "kahan_dot.simd", "kahan_sum.unroll8"):
+        assert want in kernels, f"missing {want}"
+    # The multi-accumulator AVX2 tier must be present whenever the host
+    # has AVX2 (schema check, not a perf threshold).
+    if doc["avx2"]:
+        for style in ("avx2", "avx2u2", "avx2u4", "avx2u8"):
+            for cls in ("naive_dot", "kahan_dot", "kahan_sum"):
+                assert f"{cls}.{style}" in kernels, f"missing {cls}.{style}"
+    else:
+        assert not any(k.endswith("avx2u8") for k in kernels), kernels
+    # The AVX-512 tier only ever appears in `--features avx512` builds.
+    if not doc["avx512"]:
+        assert not any("avx512" in k for k in kernels), kernels
+    for r in doc["results"]:
+        assert r["ns_min"] > 0 and r["mflops"] > 0, r
+    assert doc["freq_ghz"] > 0, "clock fallback must always yield a value"
+    return f"{len(doc['results'])} kernel results, avx2={doc['avx2']}, " \
+           f"clock via {doc['freq_source']}"
+
+
+def validate_scaling(doc, expect_threads=None):
+    assert doc["backend"] == "native-mt"
+    tmax = doc["threads_max"]
+    assert tmax >= 1
+    if expect_threads is not None:
+        assert tmax == expect_threads, f"threads_max {tmax} != {expect_threads}"
+    kernels = {c["kernel"] for c in doc["scaling"]}
+    assert {"naive_dot.simd", "kahan_dot.simd"} <= kernels, kernels
+    if doc["avx2"]:
+        assert {"naive_dot.avx2u8", "kahan_dot.avx2u8"} <= kernels, kernels
+    for curve in doc["scaling"]:
+        pts = curve["points"]
+        assert [p["threads"] for p in pts] == list(range(1, tmax + 1)), curve["kernel"]
+        for p in pts:
+            assert p["mflops"] > 0, (curve["kernel"], p)
+            assert p["model_gups"] > 0, (curve["kernel"], p)
+    assert doc["freq_ghz"] > 0
+    return f"{len(doc['scaling'])} scaling curves, model bw " \
+           f"{doc['model_bw_gbs']} GB/s, clock via {doc['freq_source']}"
+
+
+def validate_serving(doc):
+    assert doc["subsystem"] == "serve"
+    assert doc["backend"] == "native-mt"
+    assert doc["threads"] >= 1
+    requests = doc["requests"]
+    assert requests >= 1
+    assert doc["batch"] >= 1 and doc["batches"] >= 1
+    assert doc["fused"] + doc["sharded"] == requests, \
+        f"fused {doc['fused']} + sharded {doc['sharded']} != {requests}"
+    kernel = doc["kernel"]
+    if doc["compensated"]:
+        assert kernel.startswith("kahan_dot."), kernel
+        flops_per_update = 5
+    else:
+        assert kernel.startswith("naive_dot."), kernel
+        flops_per_update = 2
+    assert doc["flops"] == doc["updates"] * flops_per_update, \
+        "flop accounting does not match the served kernel class"
+    lat = doc["latency_ns"]
+    assert 0 < lat["p50"] <= lat["p90"] <= lat["p99"] <= lat["max"], lat
+    assert doc["mflops"] > 0 and doc["gups"] > 0 and doc["reqs_per_s"] > 0
+    assert doc["busy_ns"] > 0 and doc["elapsed_ns"] >= doc["busy_ns"] * 0.99
+    assert doc["threshold_source"] in ("model", "override")
+    threshold = doc["shard_threshold"]
+    assert threshold is None or (isinstance(threshold, int) and threshold >= 0)
+    assert doc["mode"] in ("closed", "open")
+    if doc["mode"] == "open":
+        assert doc["rate_rps"] > 0
+    else:
+        assert doc["rate_rps"] is None
+    mix = doc["mix"]
+    assert mix, "empty request mixture"
+    for e in mix:
+        assert e["n"] >= 1 and e["weight"] > 0, e
+    # When the mixture straddles an explicit finite threshold and the run
+    # is big enough, both scheduling paths must carry traffic.
+    if threshold is not None and requests >= 64:
+        sizes = [e["n"] for e in mix]
+        if min(sizes) < threshold <= max(sizes):
+            assert doc["fused"] > 0, "mixture straddles threshold but nothing fused"
+            assert doc["sharded"] > 0, "mixture straddles threshold but nothing sharded"
+    return f"{requests} requests ({doc['fused']} fused / {doc['sharded']} sharded), " \
+           f"{doc['mode']} loop, p99 {lat['p99'] / 1e3:.1f} us, " \
+           f"{doc['mflops']:.0f} MFlop/s"
+
+
+def validate_summary(doc):
+    assert doc["schema"] == "kahan-ecm-bench-summary/v1"
+    docs = doc["documents"]
+    assert docs, "summary contains no documents"
+    for kind, sub in docs.items():
+        assert kind_of(sub) == kind, f"summary entry '{kind}' has the wrong shape"
+        VALIDATORS[kind](sub)
+    assert isinstance(doc["headline"], dict)
+    return f"{len(docs)} embedded documents: {', '.join(sorted(docs))}"
+
+
+VALIDATORS = {
+    "native": validate_native,
+    "scaling": validate_scaling,
+    "serving": validate_serving,
+    "summary": validate_summary,
+}
+
+
+def headline_of(documents):
+    """Extract the per-run perf-trajectory headline from validated docs."""
+    h = {}
+    native = documents.get("native")
+    if native:
+        kahan = [r["mflops"] for r in native["results"]
+                 if r["kernel"].startswith("kahan_dot.")]
+        h["native_best_kahan_dot_mflops"] = max(kahan)
+        h["native_best_mflops"] = max(r["mflops"] for r in native["results"])
+    scaling = documents.get("scaling")
+    if scaling:
+        h["scaling_threads_max"] = scaling["threads_max"]
+        for curve in scaling["scaling"]:
+            if curve["kernel"] == "kahan_dot.simd":
+                h["scaling_kahan_dot_simd_peak_mflops"] = \
+                    max(p["mflops"] for p in curve["points"])
+    serving = documents.get("serving")
+    if serving:
+        h["serving_reqs_per_s"] = serving["reqs_per_s"]
+        h["serving_p99_us"] = serving["latency_ns"]["p99"] / 1e3
+        h["serving_mflops"] = serving["mflops"]
+        h["serving_fused"] = serving["fused"]
+        h["serving_sharded"] = serving["sharded"]
+    return h
+
+
+def main(argv):
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("files", nargs="+", help="BENCH_*.json documents")
+    ap.add_argument("--merge", metavar="OUT",
+                    help="write a merged BENCH_summary.json to OUT")
+    ap.add_argument("--expect-scaling-threads", type=int, default=None,
+                    help="pin threads_max of the scaling document")
+    args = ap.parse_args(argv)
+
+    documents = {}
+    for path in args.files:
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            fail(f"{path}: {e}")
+        kind = kind_of(doc)
+        try:
+            if kind == "scaling":
+                note = validate_scaling(doc, args.expect_scaling_threads)
+            else:
+                note = VALIDATORS[kind](doc)
+        except AssertionError as e:
+            fail(f"{path} ({kind}): {e}")
+        if kind in documents:
+            fail(f"{path}: duplicate document kind '{kind}'")
+        documents[kind] = doc
+        print(f"OK {kind:8s} {path}: {note}")
+
+    if args.merge:
+        if "summary" in documents:
+            fail("--merge input must be the raw documents, not a summary")
+        summary = {
+            "schema": "kahan-ecm-bench-summary/v1",
+            "headline": headline_of(documents),
+            "documents": documents,
+        }
+        validate_summary(summary)
+        with open(args.merge, "w") as f:
+            json.dump(summary, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"OK summary  {args.merge}: "
+              f"{len(documents)} documents, {len(summary['headline'])} headline metrics")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
