@@ -1,6 +1,8 @@
 //! `serve`: the serving layer exercised live on this host — a closed-loop
-//! and a derived open-loop run over the default request mixture, plus an
-//! inline bit-parity audit of the scheduling contract.
+//! run, a derived virtual-clock open-loop run, and a real-time run through
+//! the asynchronous submission queue, all over the default request
+//! mixture, plus an inline bit-parity audit of the scheduling contract
+//! (sync and async).
 //!
 //! This is the "millions of users" counterpart to `scale`: where `scale`
 //! measures how one request saturates the chip, `serve` measures how the
@@ -17,7 +19,8 @@ use crate::runtime::backend::KernelInput;
 use crate::runtime::hostbench::freq_ghz_with_source;
 use crate::runtime::parallel::ThreadPool;
 use crate::serve::{
-    default_mix, run_load_with, DotService, LoadMode, LoadReport, OperandPool, ServeConfig,
+    default_mix, run_load_async, run_load_with, AsyncDotService, AsyncOptions, DotService,
+    LoadMode, LoadReport, OperandPool, ServeConfig, SharedInput, ThresholdMode,
 };
 use crate::util::rng::Rng;
 use crate::util::table::{fnum, Table};
@@ -26,16 +29,18 @@ use super::ctx::Ctx;
 use super::output::ExperimentOutput;
 
 /// Bit-parity audit: a fixed batch straddling an explicit threshold must
-/// serve identically batched and one-by-one (the scheduling layer may not
-/// fork the numerics).
+/// serve identically batched, one-by-one, *and* through the asynchronous
+/// submission queue (the scheduling layer — synchronous or pipelined —
+/// may not fork the numerics).
 fn parity_audit(threads: usize, seed: u64) -> Result<()> {
-    let service = DotService::new(ServeConfig {
+    let cfg = ServeConfig {
         threads,
         style: preferred_kahan_style(SimdCaps::detect()),
         compensated: true,
-        shard_threshold: Some(4096),
+        shard_threshold: ThresholdMode::Fixed(4096),
         freq_ghz: 3.0,
-    })?;
+    };
+    let service = DotService::new(cfg.clone())?;
     let mut rng = Rng::new(seed);
     let data: Vec<(Vec<f64>, Vec<f64>)> = [63usize, 1024, 4095, 4096, 9000]
         .iter()
@@ -55,6 +60,18 @@ fn parity_audit(threads: usize, seed: u64) -> Result<()> {
             b.n,
             b.value,
             alone.value
+        );
+    }
+    let pipeline = AsyncDotService::new(cfg, AsyncOptions::default())?;
+    let shared: Vec<SharedInput> = data.iter().map(|(x, y)| SharedInput::dot(x, y)).collect();
+    let queued = pipeline.submit_wait(&shared)?;
+    for (b, q) in batched.iter().zip(&queued) {
+        ensure!(
+            b.value.to_bits() == q.value.to_bits(),
+            "async serving parity violated at n = {}: sync {} vs queued {}",
+            b.n,
+            b.value,
+            q.value
         );
     }
     Ok(())
@@ -92,13 +109,14 @@ pub fn serve(ctx: &Ctx) -> Result<ExperimentOutput> {
     parity_audit(threads, ctx.seed)?;
 
     let (freq, freq_src) = freq_ghz_with_source();
-    let service = DotService::new(ServeConfig {
+    let cfg = ServeConfig {
         threads,
         style: preferred_kahan_style(SimdCaps::detect()),
         compensated: true,
-        shard_threshold: None,
+        shard_threshold: ThresholdMode::Model,
         freq_ghz: freq,
-    })?;
+    };
+    let service = DotService::new(cfg.clone())?;
     let mix = default_mix(ctx.quick);
     // One operand pool for both runs: first-touched once by the service's
     // own workers, reused by the closed- and open-loop passes.
@@ -125,12 +143,22 @@ pub fn serve(ctx: &Ctx) -> Result<ExperimentOutput> {
         open_mode,
         ctx.seed,
     )?;
+    // The same request stream through the asynchronous pipeline, at the
+    // same offered load, measured on the real clock (queueing included).
+    let pipeline = AsyncDotService::new(cfg, AsyncOptions::default())?;
+    let pipeline_ops = OperandPool::generate(&mix, ctx.seed, pipeline.service().pool());
+    let queued = run_load_async(&pipeline, &mix, &pipeline_ops, requests, rate, ctx.seed)?;
+    ensure!(
+        queued.load.checksum.to_bits() == closed.checksum.to_bits(),
+        "async pipeline checksum diverged from the synchronous path"
+    );
 
     let mut t = Table::new([
         "mode", "requests", "fused", "sharded", "p50 us", "p99 us", "MFlop/s", "req/s",
     ]);
     report_row(&mut t, "closed", &closed);
     report_row(&mut t, "open", &open);
+    report_row(&mut t, "open-queued", &queued.load);
     out.table("serving", t);
 
     let mut mt = Table::new(["n", "weight", "path"]);
@@ -154,13 +182,25 @@ pub fn serve(ctx: &Ctx) -> Result<ExperimentOutput> {
         freq_src.label(),
         fnum(rate, 0)
     ));
+    out.note(format!(
+        "Async pipeline (open-queued row): bounded submission queue (depth {}), {}-us \
+         batching window, arrival batches overlap in-flight sharded tails; queue high-water \
+         {} / {} and pool utilization {} over the run. Latency here is measured from each \
+         request's scheduled arrival to ticket completion on the real clock.",
+        queued.queue_depth,
+        fnum(queued.batch_window_us, 0),
+        queued.max_queue_depth,
+        queued.queue_depth,
+        fnum(queued.pool_utilization, 2)
+    ));
     out.note(
         "Scheduling contract audited inline: every request returns bit-identical results \
-         batched and unbatched at this thread count (fused = serial kernel on one worker, \
-         sharded = the measurement path's partition + compensated tree reduction). The \
-         crossover comes from the multicore saturation model: once the chip's bandwidth \
-         saturates, extra workers buy more as request parallelism than as shard \
-         parallelism, so only requests past the model's pay-off length are split.",
+         batched, unbatched and through the async submission queue at this thread count \
+         (fused = serial kernel on one worker, sharded = the measurement path's partition + \
+         compensated tree reduction). The crossover comes from the multicore saturation \
+         model: once the chip's bandwidth saturates, extra workers buy more as request \
+         parallelism than as shard parallelism, so only requests past the model's pay-off \
+         length are split.",
     );
     out.note(
         "Measurement hygiene: under `run all` other experiments contend for the same \
@@ -180,7 +220,7 @@ mod tests {
         assert_eq!(o.tables.len(), 2);
         let (name, t) = &o.tables[0];
         assert_eq!(name, "serving");
-        assert_eq!(t.rows.len(), 2, "closed + open rows");
+        assert_eq!(t.rows.len(), 3, "closed + open + open-queued rows");
         for row in &t.rows {
             let requests: f64 = row[1].parse().unwrap();
             let fused: f64 = row[2].parse().unwrap();

@@ -45,18 +45,29 @@
 //!   truth all of them are validated against.
 //!
 //! On top of the runtime sits the [`serve`] subsystem — the "serve heavy
-//! traffic" layer: a synchronous-API, internally concurrent
-//! [`serve::DotService`] that accepts batches of independent dot/sum
-//! requests and schedules them over the persistent worker pool. Small
-//! requests are *fused* (workers pull whole requests back-to-back from a
-//! shared queue), large requests are *sharded* through the exact partition
-//! + compensated tree reduction of the measurement path, and the crossover
-//! between the two is derived from the [`sim::multicore`] saturation
-//! model: past bandwidth saturation, extra workers are worth more as
-//! request parallelism than as shard parallelism. Scheduling never forks
-//! the numerics — batched, unbatched and sharded results are bit-identical
-//! at a fixed thread count (`serve-bench` drives it with an open/closed-
-//! loop load generator and emits `BENCH_serving.json`).
+//! traffic" layer. [`serve::DotService`] accepts batches of independent
+//! dot/sum requests and schedules them over the persistent worker pool:
+//! small requests are *fused* (workers pull whole requests back-to-back
+//! from a shared queue), large requests are *sharded* through the exact
+//! partition + compensated tree reduction of the measurement path, and
+//! the crossover between the two is derived from the [`sim::multicore`]
+//! saturation model — past bandwidth saturation, extra workers are worth
+//! more as request parallelism than as shard parallelism — or *measured*
+//! on the host (`serve-bench --calibrate`: single-thread p1 +
+//! per-dispatch overhead, recorded model-vs-measured in the artifact).
+//! [`serve::AsyncDotService`] pipelines submission: a bounded MPSC queue
+//! with blocking backpressure feeds a dispatcher thread that drains
+//! arrival batches inside a time/count-bounded window and posts fused
+//! groups and shard partitions through *non-blocking* pool primitives
+//! (`run_tasks_async`/`run_chunks_async` latch handles over a detached
+//! pool), so arrival batches overlap in-flight sharded tails; callers
+//! hold per-request `ResponseHandle` tickets (`wait`/`try_wait`).
+//! Scheduling never forks the numerics — batched, unbatched, sharded and
+//! async-queued results are bit-identical at a fixed thread count, only
+//! completion order may differ (`serve-bench` drives both paths with
+//! open/closed-loop load generators, emits sync-vs-async rows plus queue
+//! and pool-utilization stats in `BENCH_serving.json`, and CI gates the
+//! perf trajectory run-over-run via `tools/compare_bench.py`).
 //!
 //! The [`harness`] module regenerates every table and figure of the paper;
 //! [`coordinator`] wires it all into the `kahan-ecm` CLI.

@@ -36,7 +36,10 @@ use kahan_ecm::runtime::hostbench::{
     FreqSource,
 };
 use kahan_ecm::runtime::parallel::ThreadPool;
-use kahan_ecm::serve::{default_mix, parse_mix, run_load, DotService, LoadMode, ServeConfig};
+use kahan_ecm::serve::{
+    calibrate, default_mix, parse_mix, run_load, run_load_async, AsyncDotService, AsyncLoadReport,
+    AsyncOptions, Calibration, DotService, LoadMode, OperandPool, ServeConfig, ThresholdMode,
+};
 use kahan_ecm::sim::{self, MeasureOpts};
 use kahan_ecm::util::cli::Spec;
 use kahan_ecm::util::json::Json;
@@ -107,11 +110,18 @@ fn serve_bench_spec() -> Spec {
         .opt("out", "write JSON results to FILE (default: BENCH_serving.json)")
         .opt("threads", "service worker count (default: all cores)")
         .opt("requests", "total requests in the run (default: 4096)")
-        .opt("batch", "requests per arrival batch (default: 64)")
+        .opt("batch", "requests per arrival batch / queue batching cap (default: 64)")
         .opt("mix", "request mixture n:weight,... (default: small-heavy serving mix)")
-        .opt("mode", "closed|open arrival loop (default: closed)")
-        .opt("rate", "open-loop arrival rate, requests/s (default: 50000)")
+        .opt("mode", "closed|open arrival loop for the primary run (default: closed)")
+        .opt(
+            "rate",
+            "arrival rate, requests/s: --mode open's primary run (default 50000) and the \
+             queue-mode rows (default: 70% of the measured closed-loop rate)",
+        )
         .opt("threshold", "shard requests with n >= N (default: model-derived crossover)")
+        .opt("queue-depth", "async submission-queue depth (default: 256)")
+        .opt("batch-window-us", "async batching window in microseconds (default: 100)")
+        .flag("calibrate", "measure p1 + dispatch overhead, record model vs measured crossover")
         .opt("seed", "request-stream seed (default: 1)")
         .flag("naive", "serve the naive dot instead of the compensated default")
         .opt("freq-ghz", "core clock for the model crossover (default: detected)")
@@ -571,6 +581,56 @@ fn cmd_bench_scale(raw: Vec<String>) -> ExitCode {
     ExitCode::SUCCESS
 }
 
+/// Human label for a shard crossover (`usize::MAX` = "never shard").
+fn crossover_label(n: usize) -> String {
+    if n == usize::MAX {
+        "never".to_string()
+    } else {
+        n.to_string()
+    }
+}
+
+/// JSON value for a shard crossover (`usize::MAX` -> null).
+fn crossover_json(n: usize) -> Json {
+    if n == usize::MAX {
+        Json::Null
+    } else {
+        Json::Num(n as f64)
+    }
+}
+
+/// One queue-mode open-loop row (shared by the `sync` and `async` sides of
+/// the side-by-side comparison in `BENCH_serving.json`).
+fn queue_row_json(r: &AsyncLoadReport) -> Json {
+    let mut lat = BTreeMap::new();
+    lat.insert("p50".to_string(), Json::Num(r.load.latency_p50_ns));
+    lat.insert("p90".to_string(), Json::Num(r.load.latency_p90_ns));
+    lat.insert("p99".to_string(), Json::Num(r.load.latency_p99_ns));
+    lat.insert("max".to_string(), Json::Num(r.load.latency_max_ns));
+    let mut obj = BTreeMap::new();
+    obj.insert("requests".to_string(), Json::Num(r.load.requests as f64));
+    obj.insert("fused".to_string(), Json::Num(r.load.fused as f64));
+    obj.insert("sharded".to_string(), Json::Num(r.load.sharded as f64));
+    obj.insert("latency_ns".to_string(), Json::Obj(lat));
+    obj.insert("busy_ns".to_string(), Json::Num(r.load.busy_ns));
+    obj.insert("elapsed_ns".to_string(), Json::Num(r.load.elapsed_ns));
+    obj.insert("mflops".to_string(), Json::Num(r.load.mflops));
+    obj.insert("gups".to_string(), Json::Num(r.load.gups));
+    obj.insert("reqs_per_s".to_string(), Json::Num(r.load.reqs_per_s));
+    obj.insert("checksum".to_string(), Json::Num(r.load.checksum));
+    obj.insert("max_queue_depth".to_string(), Json::Num(r.max_queue_depth as f64));
+    obj.insert("dispatches".to_string(), Json::Num(r.dispatches as f64));
+    obj.insert(
+        "arrival_batches".to_string(),
+        Json::Num(r.arrival_batches as f64),
+    );
+    obj.insert(
+        "pool_utilization".to_string(),
+        Json::Num(r.pool_utilization),
+    );
+    Json::Obj(obj)
+}
+
 fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
     let args = match serve_bench_spec().parse(raw) {
         Ok(a) => a,
@@ -650,6 +710,20 @@ fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
         },
         None => None,
     };
+    let queue_depth = match args.opt_parse("queue-depth", 256usize) {
+        Ok(v) if v >= 1 => v,
+        _ => {
+            eprintln!("error: --queue-depth must be a positive integer");
+            return ExitCode::FAILURE;
+        }
+    };
+    let batch_window_us = match args.opt_parse("batch-window-us", 100u64) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
     let (freq, freq_src) = match parse_freq_arg(&args) {
         Ok(f) => f,
         Err(e) => {
@@ -659,24 +733,51 @@ fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
     };
     let out_path = args.opt_or("out", "BENCH_serving.json").to_string();
 
-    let service = match DotService::new(ServeConfig {
+    let mut cfg = ServeConfig {
         threads,
         style: preferred_kahan_style(SimdCaps::detect()),
         compensated: !args.flag("naive"),
-        shard_threshold: threshold,
+        shard_threshold: match threshold {
+            Some(t) => ThresholdMode::Fixed(t),
+            None => ThresholdMode::Model,
+        },
         freq_ghz: freq,
-    }) {
+    };
+    // Calibration: measure p1 + dispatch overhead on a probe service, and
+    // (unless the threshold was pinned) serve with the measured crossover.
+    let calibration: Option<Calibration> = if args.flag("calibrate") {
+        let probe = match DotService::new(cfg.clone()) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("error: cannot build the calibration service: {e}");
+                return ExitCode::FAILURE;
+            }
+        };
+        let c = calibrate(&probe, freq, quick);
+        eprintln!(
+            "calibrate: p1 = {} MFlop/s ({} GUP/s), dispatch overhead = {} ns, \
+             measured crossover = {}, model crossover = {}",
+            fnum(c.p1_mflops, 0),
+            fnum(c.p1_gups, 3),
+            fnum(c.dispatch_overhead_ns, 0),
+            crossover_label(c.measured_crossover),
+            crossover_label(c.model_crossover)
+        );
+        if threshold.is_none() {
+            cfg.shard_threshold = ThresholdMode::Calibrated(c.measured_crossover);
+        }
+        Some(c)
+    } else {
+        None
+    };
+    let service = match DotService::new(cfg.clone()) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("error: cannot build the service: {e}");
             return ExitCode::FAILURE;
         }
     };
-    let threshold_label = if service.shard_threshold() == usize::MAX {
-        "never".to_string()
-    } else {
-        service.shard_threshold().to_string()
-    };
+    let threshold_label = crossover_label(service.shard_threshold());
     eprintln!(
         "serve-bench: T = {threads}, {requests} requests in batches of {batch}, {} loop, \
          rung {}, shard at n >= {threshold_label} ({}) ...",
@@ -691,6 +792,65 @@ fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
             return ExitCode::FAILURE;
         }
     };
+
+    // Queue-mode open-loop pair at the same offered load: `sync` retires
+    // every dispatch before draining the next arrival batch (pipelined but
+    // serialized), `async` overlaps arrival batches with in-flight tails.
+    let rate = match (mode, args.opt("rate")) {
+        (LoadMode::Open { rate_rps }, _) => rate_rps,
+        (LoadMode::Closed, Some(v)) => match v.parse::<f64>() {
+            Ok(r) if r > 0.0 => r,
+            _ => {
+                eprintln!("error: --rate must be a positive number");
+                return ExitCode::FAILURE;
+            }
+        },
+        (LoadMode::Closed, None) => (report.reqs_per_s * 0.7).max(1.0),
+    };
+    let queue_pair = |overlap: bool| -> Result<AsyncLoadReport, String> {
+        let opts = AsyncOptions {
+            queue_depth,
+            batch_window: std::time::Duration::from_micros(batch_window_us),
+            batch_max: batch,
+            overlap,
+        };
+        let asy = AsyncDotService::new(cfg.clone(), opts)
+            .map_err(|e| format!("cannot build the async service: {e}"))?;
+        let operands = OperandPool::generate(&mix, seed, asy.service().pool());
+        run_load_async(&asy, &mix, &operands, requests, rate, seed)
+            .map_err(|e| format!("async load run failed: {e}"))
+    };
+    eprintln!(
+        "serve-bench: queue mode at {} req/s (depth {queue_depth}, window {batch_window_us} us) ...",
+        fnum(rate, 0)
+    );
+    let (qsync, qasync) = match (queue_pair(false), queue_pair(true)) {
+        (Ok(s), Ok(a)) => (s, a),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    // Determinism contract (hard): at fixed T all three paths must serve
+    // bit-identical results, so the submission-order checksums agree.
+    if qsync.load.checksum.to_bits() != report.checksum.to_bits()
+        || qasync.load.checksum.to_bits() != report.checksum.to_bits()
+    {
+        eprintln!(
+            "error: checksum parity violated: batch {} / queue-sync {} / queue-async {}",
+            report.checksum, qsync.load.checksum, qasync.load.checksum
+        );
+        return ExitCode::FAILURE;
+    }
+    let async_p99_ok = qasync.load.latency_p99_ns <= qsync.load.latency_p99_ns;
+    if !async_p99_ok {
+        eprintln!(
+            "warning: async p99 ({} us) exceeds sync p99 ({} us) at the same offered load — \
+             expected on idle tails or noisy hosts, worth a look under real load",
+            fnum(qasync.load.latency_p99_ns / 1e3, 1),
+            fnum(qsync.load.latency_p99_ns / 1e3, 1)
+        );
+    }
 
     let mut t = Table::new(["metric", "value"]);
     t.row(["kernel".to_string(), service.dot_spec().id()]);
@@ -709,6 +869,23 @@ fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
     t.row(["GUP/s".to_string(), fnum(report.gups, 3)]);
     t.row(["req/s".to_string(), fnum(report.reqs_per_s, 0)]);
     print!("{}", t.to_text());
+
+    let mut qt = Table::new([
+        "queue row", "p50 us", "p99 us", "max us", "MFlop/s", "req/s", "util", "max depth",
+    ]);
+    for (name, r) in [("sync", &qsync), ("async", &qasync)] {
+        qt.row([
+            name.to_string(),
+            us(r.load.latency_p50_ns),
+            us(r.load.latency_p99_ns),
+            us(r.load.latency_max_ns),
+            fnum(r.load.mflops, 0),
+            fnum(r.load.reqs_per_s, 0),
+            fnum(r.pool_utilization, 2),
+            r.max_queue_depth.to_string(),
+        ]);
+    }
+    print!("{}", qt.to_text());
 
     let mut mix_json = Vec::new();
     for e in &mix {
@@ -730,11 +907,7 @@ fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
     root.insert("compensated".to_string(), Json::Bool(service.compensated()));
     root.insert(
         "shard_threshold".to_string(),
-        if service.shard_threshold() == usize::MAX {
-            Json::Null
-        } else {
-            Json::Num(service.shard_threshold() as f64)
-        },
+        crossover_json(service.shard_threshold()),
     );
     root.insert(
         "threshold_source".to_string(),
@@ -769,14 +942,59 @@ fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
     root.insert("gups".to_string(), Json::Num(report.gups));
     root.insert("reqs_per_s".to_string(), Json::Num(report.reqs_per_s));
     root.insert("checksum".to_string(), Json::Num(report.checksum));
+
+    let mut queue_obj = BTreeMap::new();
+    queue_obj.insert("depth".to_string(), Json::Num(queue_depth as f64));
+    queue_obj.insert(
+        "batch_window_us".to_string(),
+        Json::Num(batch_window_us as f64),
+    );
+    queue_obj.insert("batch_max".to_string(), Json::Num(batch as f64));
+    root.insert("queue".to_string(), Json::Obj(queue_obj));
+    let mut open_loop = BTreeMap::new();
+    open_loop.insert("rate_rps".to_string(), Json::Num(rate));
+    open_loop.insert("sync".to_string(), queue_row_json(&qsync));
+    open_loop.insert("async".to_string(), queue_row_json(&qasync));
+    root.insert("open_loop".to_string(), Json::Obj(open_loop));
+    root.insert("async_p99_ok".to_string(), Json::Bool(async_p99_ok));
+    if let Some(c) = calibration {
+        let mut measured = BTreeMap::new();
+        measured.insert("p1_gups".to_string(), Json::Num(c.p1_gups));
+        measured.insert("p1_mflops".to_string(), Json::Num(c.p1_mflops));
+        measured.insert("p1_n".to_string(), Json::Num(c.p1_n as f64));
+        measured.insert(
+            "dispatch_overhead_ns".to_string(),
+            Json::Num(c.dispatch_overhead_ns),
+        );
+        measured.insert("crossover".to_string(), crossover_json(c.measured_crossover));
+        let mut model = BTreeMap::new();
+        model.insert(
+            "p1_gups".to_string(),
+            c.model_p1_gups.map(Json::Num).unwrap_or(Json::Null),
+        );
+        model.insert(
+            "dispatch_overhead_ns".to_string(),
+            Json::Num(kahan_ecm::serve::crossover::DEFAULT_DISPATCH_OVERHEAD_NS),
+        );
+        model.insert("crossover".to_string(), crossover_json(c.model_crossover));
+        let mut cal = BTreeMap::new();
+        cal.insert("measured".to_string(), Json::Obj(measured));
+        cal.insert("model".to_string(), Json::Obj(model));
+        root.insert("calibration".to_string(), Json::Obj(cal));
+    }
     let doc = Json::Obj(root);
     if let Err(e) = std::fs::write(&out_path, format!("{doc}\n")) {
         eprintln!("error: cannot write {out_path}: {e}");
         return ExitCode::FAILURE;
     }
     println!(
-        "\nserved {} requests ({} fused, {} sharded) -> {out_path}",
-        report.requests, report.fused, report.sharded
+        "\nserved {} requests ({} fused, {} sharded; queue-mode async p99 {} us vs sync {} us) \
+         -> {out_path}",
+        report.requests,
+        report.fused,
+        report.sharded,
+        fnum(qasync.load.latency_p99_ns / 1e3, 1),
+        fnum(qsync.load.latency_p99_ns / 1e3, 1)
     );
     ExitCode::SUCCESS
 }

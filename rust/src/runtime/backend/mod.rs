@@ -263,7 +263,7 @@ impl KernelInput<'_> {
 }
 
 /// Backend failure modes.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub enum BackendError {
     /// The backend has no implementation for the requested spec.
     Unsupported { backend: String, spec: KernelSpec },

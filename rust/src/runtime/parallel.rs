@@ -74,6 +74,9 @@ struct Latch {
     /// callers see the original assertion/message, exactly as the previous
     /// scoped-thread design propagated it.
     panic_payload: Mutex<Option<Box<dyn Any + Send>>>,
+    /// When the last job arrived — the dispatch's true completion instant,
+    /// which an asynchronous retirer may observe only later.
+    finished: Mutex<Option<std::time::Instant>>,
 }
 
 impl Latch {
@@ -82,6 +85,7 @@ impl Latch {
             remaining: Mutex::new(count),
             all_done: Condvar::new(),
             panic_payload: Mutex::new(None),
+            finished: Mutex::new(None),
         }
     }
 
@@ -100,6 +104,7 @@ impl Latch {
         let mut r = self.remaining.lock().unwrap();
         *r -= 1;
         if *r == 0 {
+            *self.finished.lock().unwrap() = Some(std::time::Instant::now());
             self.all_done.notify_all();
         }
     }
@@ -110,36 +115,60 @@ impl Latch {
             r = self.all_done.wait(r).unwrap();
         }
     }
+
+    fn is_done(&self) -> bool {
+        *self.remaining.lock().unwrap() == 0
+    }
 }
 
 /// A borrowed, type-erased chunk task (what one [`Job`] points at).
 type Task<'a> = &'a (dyn Fn(usize) + Sync);
 
-/// One unit of dispatched work: a type-erased borrow of the caller's task
-/// closure plus the chunk index to run it on.
-struct Job {
+/// What a [`Job`] executes: either a type-erased borrow of a blocking
+/// dispatcher's stack-held closure, or a shared ownership stake in an
+/// asynchronous dispatch's closure (the job itself keeps it alive).
+enum TaskRef {
     /// Raw (fat) pointer to the dispatcher's stack-held closure. Valid for
     /// the whole dispatch: `run_chunks` blocks on the latch before the
     /// referent can be dropped.
-    task: *const (dyn Fn(usize) + Sync),
+    Borrowed(*const (dyn Fn(usize) + Sync)),
+    /// Owned closure of a non-blocking dispatch (`run_chunks_async` /
+    /// `run_tasks_async`): dropped when the last job referencing it
+    /// finishes, so the dispatcher never has to stick around.
+    Owned(Arc<dyn Fn(usize) + Send + Sync>),
+}
+
+/// One unit of dispatched work: the task to run plus the chunk (or lane)
+/// index to run it on.
+struct Job {
+    task: TaskRef,
     index: usize,
     done: Arc<Latch>,
 }
 
-// SAFETY: the raw task pointer crosses threads, but the referent is `Sync`
-// and the dispatcher keeps it alive (and does not return) until the latch
-// has counted every job in — see `ThreadPool::run_chunks`.
+// SAFETY: the borrowed raw task pointer crosses threads, but the referent
+// is `Sync` and the dispatcher keeps it alive (and does not return) until
+// the latch has counted every job in — see `ThreadPool::run_chunks`. The
+// owned variant is `Send + Sync` by construction.
 unsafe impl Send for Job {}
 
 fn worker_loop(jobs: Receiver<Job>) {
     // A closed channel (pool dropped) is the shutdown signal.
     while let Ok(job) = jobs.recv() {
-        // SAFETY: the dispatcher guarantees the pointee outlives this job
-        // (it blocks on the latch before releasing the closure).
-        let task = unsafe { &*job.task };
+        let index = job.index;
+        let run = || {
+            let task: &(dyn Fn(usize) + Sync) = match &job.task {
+                // SAFETY: the dispatcher guarantees the pointee outlives
+                // this job (it blocks on the latch before releasing the
+                // closure).
+                TaskRef::Borrowed(p) => unsafe { &**p },
+                TaskRef::Owned(f) => f.as_ref(),
+            };
+            task(index)
+        };
         // Panics must not leak past the latch or the dispatcher deadlocks;
-        // the payload is re-raised on the dispatching thread instead.
-        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| task(job.index))) {
+        // the payload is re-raised on the waiting thread instead.
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(run)) {
             job.done.record_panic(payload);
         }
         job.done.arrive();
@@ -165,15 +194,119 @@ impl<R> SlotWriter<R> {
     }
 }
 
+/// Heap-owned result slots for a *non-blocking* dispatch: the slots live in
+/// an `Arc` shared between the dispatched closure (writer) and the
+/// [`PendingDispatch`] handle (reader), so neither side has to outlive the
+/// other on a particular stack frame.
+struct AsyncSlots<R> {
+    cells: Vec<std::cell::UnsafeCell<Option<R>>>,
+}
+
+// SAFETY: each slot index is written by exactly one executor per dispatch
+// (chunk index → one job; task ticket → one claiming lane), and the reader
+// only touches the cells after the completion latch has counted every job
+// in (the latch mutex provides the happens-before edge).
+unsafe impl<R: Send> Sync for AsyncSlots<R> {}
+unsafe impl<R: Send> Send for AsyncSlots<R> {}
+
+impl<R> AsyncSlots<R> {
+    fn new(count: usize) -> Self {
+        Self {
+            cells: (0..count).map(|_| std::cell::UnsafeCell::new(None)).collect(),
+        }
+    }
+
+    /// # Safety
+    /// `i` must be in bounds and written by at most one thread per dispatch.
+    unsafe fn write(&self, i: usize, r: R) {
+        *self.cells[i].get() = Some(r);
+    }
+}
+
+/// Completion handle for a non-blocking dispatch ([`ThreadPool::run_chunks_async`]
+/// / [`ThreadPool::run_tasks_async`]): the dispatching thread gets it back
+/// immediately and can keep forming, posting and completing other work
+/// while the pool executes. All state is `Arc`-owned, so dropping the
+/// handle without waiting is safe and leaks nothing — the in-flight jobs
+/// keep their closure and slots alive and simply finish unobserved (a
+/// recorded worker panic is then dropped with them).
+pub struct PendingDispatch<R> {
+    latch: Arc<Latch>,
+    slots: Arc<AsyncSlots<R>>,
+}
+
+impl<R> PendingDispatch<R> {
+    /// A dispatch that already completed (empty or executed inline).
+    fn completed(slots: Arc<AsyncSlots<R>>) -> Self {
+        let latch = Latch::new(0);
+        *latch.finished.lock().unwrap() = Some(std::time::Instant::now());
+        Self {
+            latch: Arc::new(latch),
+            slots,
+        }
+    }
+
+    /// Has every dispatched job finished (successfully or by unwinding)?
+    /// Non-blocking; `wait` is then immediate.
+    pub fn is_done(&self) -> bool {
+        self.latch.is_done()
+    }
+
+    /// Block until the dispatch completes and return the results in
+    /// chunk/task order — exactly what the blocking `run_chunks` /
+    /// `run_tasks` would have returned for the same dispatch. Re-raises
+    /// the first worker panic, like the blocking paths.
+    pub fn wait(self) -> Vec<R> {
+        self.wait_finished().0
+    }
+
+    /// [`Self::wait`], also returning the instant the last job actually
+    /// finished — which can be earlier than the `wait` call returns when
+    /// the dispatch completed while the caller was off doing other work.
+    /// Lets an asynchronous retirer account pool busy time by real
+    /// completion, not by when it got around to looking.
+    pub fn wait_finished(self) -> (Vec<R>, std::time::Instant) {
+        self.latch.wait();
+        if let Some(p) = self.latch.take_panic() {
+            resume_unwind(p);
+        }
+        let finished = self
+            .latch
+            .finished
+            .lock()
+            .unwrap()
+            .unwrap_or_else(std::time::Instant::now);
+        let results = self
+            .slots
+            .cells
+            .iter()
+            .map(|c| {
+                // SAFETY: the latch counted every writer in, so no thread
+                // writes these cells anymore and reads are exclusive.
+                unsafe { &mut *c.get() }
+                    .take()
+                    .expect("async dispatch produced no result")
+            })
+            .collect();
+        (results, finished)
+    }
+}
+
 /// A persistent parked-worker pool for slice-parallel kernels: `T - 1`
 /// worker threads spawned once at construction, plus the dispatching
 /// thread, execute the deterministic cache-line-aligned partition of each
 /// dispatch. Dropping the pool shuts the workers down.
 pub struct ThreadPool {
     threads: usize,
-    /// Per-worker job senders, locked as one unit: a dispatch owns every
-    /// worker for its full duration, so concurrent `run_chunks` calls on a
-    /// shared pool serialize instead of interleaving jobs.
+    /// Spawned OS worker threads: `threads - 1` for a standard pool (the
+    /// dispatching thread is lane 0), `threads` for a detached pool (the
+    /// dispatcher only orchestrates — see [`Self::new_detached`]).
+    workers: usize,
+    /// Per-worker job senders, locked as one unit: a blocking dispatch
+    /// owns every worker for its full duration, so concurrent `run_chunks`
+    /// calls on a shared pool serialize instead of interleaving jobs.
+    /// Non-blocking dispatches only hold the lock while posting, so their
+    /// jobs pipeline through the per-worker FIFOs.
     senders: Mutex<Vec<Sender<Job>>>,
     handles: Vec<JoinHandle<()>>,
 }
@@ -184,9 +317,25 @@ impl ThreadPool {
     /// every dispatch runs inline on the dispatching thread.
     pub fn new(threads: usize) -> Self {
         let threads = threads.max(1);
-        let mut senders = Vec::with_capacity(threads - 1);
-        let mut handles = Vec::with_capacity(threads - 1);
-        for i in 0..threads - 1 {
+        Self::spawn(threads, threads - 1)
+    }
+
+    /// A pool whose `threads`-wide partition is executed *entirely* by
+    /// dedicated workers: `threads` OS threads are spawned and no chunk
+    /// ever runs inline on a dispatching thread. This is what a pipelined
+    /// dispatcher needs — it posts work with the `*_async` variants and
+    /// stays free to drain its submission queue while the pool executes.
+    /// The partition (and therefore every reduction order and every bit of
+    /// every result) is identical to a standard `new(threads)` pool.
+    pub fn new_detached(threads: usize) -> Self {
+        let threads = threads.max(1);
+        Self::spawn(threads, threads)
+    }
+
+    fn spawn(threads: usize, workers: usize) -> Self {
+        let mut senders = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
             let (tx, rx) = channel::<Job>();
             let h = std::thread::Builder::new()
                 .name(format!("kahan-mt-{i}"))
@@ -197,6 +346,7 @@ impl ThreadPool {
         }
         Self {
             threads,
+            workers,
             senders: Mutex::new(senders),
             handles,
         }
@@ -205,6 +355,12 @@ impl ThreadPool {
     /// Worker count this pool partitions for (including the dispatcher).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Spawned OS worker threads (`threads - 1`, or `threads` for a
+    /// detached pool).
+    pub fn spawned_workers(&self) -> usize {
+        self.workers
     }
 
     /// Hardware thread count of this host (>= 1).
@@ -282,7 +438,7 @@ impl ThreadPool {
             for i in 1..k {
                 senders[i - 1]
                     .send(Job {
-                        task: erased,
+                        task: TaskRef::Borrowed(erased),
                         index: i,
                         done: latch.clone(),
                     })
@@ -364,7 +520,7 @@ impl ThreadPool {
             for lane in 1..lanes {
                 senders[lane - 1]
                     .send(Job {
-                        task: erased,
+                        task: TaskRef::Borrowed(erased),
                         index: lane,
                         done: latch.clone(),
                     })
@@ -385,6 +541,112 @@ impl ThreadPool {
         out.into_iter()
             .map(|o| o.expect("task produced no result"))
             .collect()
+    }
+
+    /// Non-blocking [`Self::run_chunks`]: post every chunk of the same
+    /// deterministic partition to the persistent workers and return a
+    /// [`PendingDispatch`] immediately, leaving the calling thread free to
+    /// form and post more work while this dispatch executes. `wait()` on
+    /// the handle returns exactly the `Vec` the blocking call would have
+    /// (same partition, same chunk order, bit-identical results), so a
+    /// downstream reduction is unchanged.
+    ///
+    /// The closure is owned (`'static`) because nothing blocks for it:
+    /// jobs keep it alive via `Arc` until the last chunk finishes. Chunks
+    /// are dealt round-robin over the spawned workers — on a detached pool
+    /// (`new_detached`) that is one chunk per worker. On a pool with no
+    /// spawned workers (`new(1)`) the dispatch degenerates to inline
+    /// execution and the returned handle is already complete.
+    pub fn run_chunks_async<R, F>(&self, n: usize, align: usize, f: F) -> PendingDispatch<R>
+    where
+        F: Fn(usize, Range<usize>) -> R + Send + Sync + 'static,
+        R: Send + 'static,
+    {
+        let parts = self.partition(n, align);
+        let k = parts.len();
+        let slots = Arc::new(AsyncSlots::new(k));
+        if self.workers == 0 {
+            for (i, r) in parts.iter().enumerate() {
+                let v = f(i, r.clone());
+                // SAFETY: sole executor, in-bounds, one write per slot.
+                unsafe { slots.write(i, v) };
+            }
+            return PendingDispatch::completed(slots);
+        }
+        let latch = Arc::new(Latch::new(k));
+        let task: Arc<dyn Fn(usize) + Send + Sync> = {
+            let slots = Arc::clone(&slots);
+            Arc::new(move |i: usize| {
+                let v = f(i, parts[i].clone());
+                // SAFETY: chunk i is posted to exactly one worker, and the
+                // reader only looks after the latch counts every job in.
+                unsafe { slots.write(i, v) };
+            })
+        };
+        let senders = self.senders.lock().unwrap();
+        for i in 0..k {
+            senders[i % self.workers]
+                .send(Job {
+                    task: TaskRef::Owned(Arc::clone(&task)),
+                    index: i,
+                    done: Arc::clone(&latch),
+                })
+                .expect("persistent worker exited early");
+        }
+        PendingDispatch { latch, slots }
+    }
+
+    /// Non-blocking [`Self::run_tasks`]: the shared-ticket-queue fused
+    /// dispatch, posted to the persistent workers without the calling
+    /// thread joining as a lane. Results land in task order exactly like
+    /// the blocking variant (slot `i` is written by whichever lane claims
+    /// ticket `i`; `f` must be deterministic per index for reproducibility,
+    /// which whole-kernel executions are). On a pool with no spawned
+    /// workers the tasks run inline and the handle is already complete.
+    pub fn run_tasks_async<R, F>(&self, total: usize, f: F) -> PendingDispatch<R>
+    where
+        F: Fn(usize) -> R + Send + Sync + 'static,
+        R: Send + 'static,
+    {
+        let slots = Arc::new(AsyncSlots::new(total));
+        if total == 0 {
+            return PendingDispatch::completed(slots);
+        }
+        if self.workers == 0 {
+            for i in 0..total {
+                let v = f(i);
+                // SAFETY: sole executor, in-bounds, one write per slot.
+                unsafe { slots.write(i, v) };
+            }
+            return PendingDispatch::completed(slots);
+        }
+        let lanes = self.workers.min(total);
+        let latch = Arc::new(Latch::new(lanes));
+        let task: Arc<dyn Fn(usize) + Send + Sync> = {
+            let slots = Arc::clone(&slots);
+            let next = AtomicUsize::new(0);
+            Arc::new(move |_lane: usize| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= total {
+                    break;
+                }
+                let v = f(i);
+                // SAFETY: ticket i is claimed by exactly one lane, and the
+                // reader only looks after the latch counts every lane in.
+                unsafe { slots.write(i, v) };
+            })
+        };
+        let senders = self.senders.lock().unwrap();
+        for lane in 0..lanes {
+            senders[lane]
+                .send(Job {
+                    task: TaskRef::Owned(Arc::clone(&task)),
+                    index: lane,
+                    done: Arc::clone(&latch),
+                })
+                .expect("persistent worker exited early");
+        }
+        PendingDispatch { latch, slots }
     }
 }
 
@@ -770,6 +1032,93 @@ mod tests {
                 backend.run(spec, &KernelInput::Sum(&[6.0])).unwrap()
             };
             assert_eq!(one, 6.0, "{spec} on length-1 input");
+        }
+    }
+
+    #[test]
+    fn async_chunks_match_blocking_bits_on_both_pool_kinds() {
+        let x = randvec(4099, 51);
+        let y = randvec(4099, 52);
+        for threads in [1usize, 2, 3, 8] {
+            let standard = ThreadPool::new(threads);
+            let detached = ThreadPool::new_detached(threads);
+            assert_eq!(standard.spawned_workers(), threads - 1);
+            assert_eq!(detached.spawned_workers(), threads);
+            let want = {
+                let (x, y) = (x.clone(), y.clone());
+                standard.run_chunks(x.len(), CACHELINE_F64, move |_, r| {
+                    native::kahan_dot_simd(&x[r.clone()], &y[r])
+                })
+            };
+            for pool in [&standard, &detached] {
+                let (cx, cy) = (x.clone(), y.clone());
+                let pending = pool.run_chunks_async(x.len(), CACHELINE_F64, move |_, r| {
+                    native::kahan_dot_simd(&cx[r.clone()], &cy[r])
+                });
+                let got = pending.wait();
+                assert_eq!(got.len(), want.len(), "T={threads}");
+                for (a, b) in got.iter().zip(&want) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "T={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn async_tasks_match_blocking_and_overlap() {
+        let pool = ThreadPool::new_detached(3);
+        for total in [0usize, 1, 5, 40] {
+            let pending = pool.run_tasks_async(total, |i| i * 3 + 1);
+            let want: Vec<usize> = (0..total).map(|i| i * 3 + 1).collect();
+            assert_eq!(pending.wait(), want, "total={total}");
+        }
+        // Two dispatches in flight at once: posting the second must not
+        // require the first to finish, and both complete with task-order
+        // results — the latency-hiding property the serving dispatcher
+        // relies on.
+        let a = pool.run_tasks_async(16, |i| i);
+        let b = pool.run_tasks_async(16, |i| i + 100);
+        assert_eq!(b.wait(), (100..116).collect::<Vec<_>>());
+        assert_eq!(a.wait(), (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn async_dispatch_panic_reraised_at_wait_and_pool_survives() {
+        let pool = ThreadPool::new_detached(2);
+        let pending = pool.run_tasks_async(8, |i| {
+            if i == 5 {
+                panic!("async boom");
+            }
+            i
+        });
+        let payload =
+            catch_unwind(AssertUnwindSafe(|| pending.wait())).expect_err("panic must re-raise");
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"async boom"));
+        // Dropping an unwaited handle (panicked or not) leaks nothing and
+        // the pool keeps serving.
+        drop(pool.run_tasks_async(4, |i| i));
+        assert_eq!(pool.run_tasks(4, |i| i + 1), vec![1, 2, 3, 4]);
+        let ok = pool.run_chunks_async(64, CACHELINE_F64, |i, _| i).wait();
+        assert_eq!(ok, vec![0, 1]);
+    }
+
+    #[test]
+    fn detached_pool_blocking_paths_are_bit_compatible() {
+        // A detached pool must be a drop-in for the standard one on the
+        // blocking paths too (same partition, same results) — the async
+        // service's sync wrapper depends on it.
+        let x = randvec(2051, 61);
+        let y = randvec(2051, 62);
+        for threads in [1usize, 2, 4] {
+            let standard = ParallelBackend::new(threads);
+            let detached = ThreadPool::new_detached(threads);
+            let spec = KernelSpec::new(KernelClass::KahanDot, ImplStyle::SimdLanes);
+            let want = standard.run(spec, &KernelInput::Dot(&x, &y)).unwrap();
+            let partials = detached.run_chunks(x.len(), CACHELINE_F64, |_, r| {
+                native::kahan_dot_simd(&x[r.clone()], &y[r])
+            });
+            let got = compensated_tree_reduce(&partials);
+            assert_eq!(got.to_bits(), want.to_bits(), "T={threads}");
         }
     }
 

@@ -29,13 +29,20 @@
 //! uses [`service_crossover`] as its default threshold; callers can
 //! override it per service ([`crate::serve::ServeConfig`]).
 
+use std::time::Instant;
+
 use crate::arch::Machine;
 use crate::ecm::{self, MemLevel};
 use crate::harness::scaleexp;
-use crate::runtime::backend::KernelSpec;
+use crate::runtime::arena::AlignedVec;
+use crate::runtime::backend::{KernelInput, KernelSpec};
 use crate::runtime::parallel::CACHELINE_F64;
 use crate::sim::{self, MeasureOpts};
+use crate::util::rng::Rng;
+use crate::util::stats::percentile_sorted;
 use crate::util::units::{Precision, MIB};
+
+use super::DotService;
 
 /// Default cost of one sharded dispatch (per-worker channel sends, the
 /// completion latch, the tree reduction) in nanoseconds. Order of
@@ -107,6 +114,114 @@ pub fn service_crossover(spec: KernelSpec, threads: usize, freq_ghz: f64) -> usi
     }
 }
 
+/// A host calibration of the crossover inputs: the *measured*
+/// single-thread throughput and per-dispatch overhead next to the model's
+/// own anchors, and the crossover `n*` each pair implies. `serve-bench
+/// --calibrate` records both sides in `BENCH_serving.json` so the model's
+/// prediction can be audited against the host it claims to describe.
+#[derive(Clone, Copy, Debug)]
+pub struct Calibration {
+    /// Measured single-thread in-memory throughput, GUP/s (updates/ns).
+    pub p1_gups: f64,
+    /// The same measurement as MFlop/s for the served kernel class.
+    pub p1_mflops: f64,
+    /// Measured cost of one sharded dispatch over the service's own pool
+    /// (channel posts + latch round trip + tree reduction), ns.
+    pub dispatch_overhead_ns: f64,
+    /// Crossover implied by the measured pair (`usize::MAX` = never
+    /// shard — e.g. a single worker, or no measured speedup).
+    pub measured_crossover: usize,
+    /// The model's p1 anchor for the same spec (`None` for kernels
+    /// without a model analog).
+    pub model_p1_gups: Option<f64>,
+    /// Crossover implied by the model pair (what [`service_crossover`]
+    /// would pick).
+    pub model_crossover: usize,
+    /// Operand length the p1 measurement streamed.
+    pub p1_n: usize,
+}
+
+/// Time one execution of `f` in ns (monotonic clock).
+fn time_ns<R>(f: impl FnOnce() -> R) -> f64 {
+    let t0 = Instant::now();
+    let r = f();
+    std::hint::black_box(&r);
+    t0.elapsed().as_nanos() as f64
+}
+
+fn median_of(mut v: Vec<f64>) -> f64 {
+    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN timing"));
+    percentile_sorted(&v, 50.0)
+}
+
+/// Measure the crossover inputs on this host, using the service's own
+/// resolved dot kernel and pool (so the overhead includes exactly the
+/// dispatch machinery a sharded request pays). Deterministic operands
+/// (fixed seed); timing is the only nondeterminism, as in every bench.
+///
+/// * `p1`: serial dot over an in-memory-sized operand pair, best of a few
+///   reps (minimum — the standard "least interference" estimator). Quick
+///   mode streams a 32 MiB working set (vs 64 MiB in full mode) — past
+///   the L3 of typical hosts, but on a large-cache machine a quick p1 can
+///   still carry some cache residency; full mode is the authoritative
+///   calibration, quick is the CI smoke.
+/// * `dispatch overhead`: median sharded-path time minus median serial
+///   time over a tiny cache-resident input, floored at 1 ns (on a noisy
+///   host the difference can go negative; the crossover only needs a
+///   scale, and callers see the raw value recorded in the artifact).
+///
+/// The measured crossover then reuses the *same* `n* = o·p1·s/(s−1)`
+/// formula as the model path, swapping in measured `o` and `p1`.
+pub fn calibrate(service: &DotService, freq_ghz: f64, quick: bool) -> Calibration {
+    let threads = service.threads();
+    let spec = service.dot_spec();
+    let (p1_n, p1_reps, oh_reps) = if quick {
+        (1usize << 21, 3usize, 33usize)
+    } else {
+        (1usize << 22, 5, 101)
+    };
+    let mut rng = Rng::new(0xCA11B);
+    let x = AlignedVec::from_fn(p1_n, |_| rng.normal());
+    let y = AlignedVec::from_fn(p1_n, |_| rng.normal());
+    let serial = |x: &[f64], y: &[f64]| service.run_serial(&KernelInput::Dot(x, y));
+    // Warm up (page faults, clock ramp), then take the fastest rep.
+    serial(&x, &y);
+    let mut best = f64::INFINITY;
+    for _ in 0..p1_reps {
+        best = best.min(time_ns(|| serial(&x, &y)));
+    }
+    let p1_gups = p1_n as f64 / best.max(1.0);
+    let p1_mflops = p1_gups * spec.class.flops_per_update() as f64 * 1000.0;
+
+    // Dispatch overhead: tiny input, so kernel time is negligible against
+    // the posting + latch + reduce machinery the sharded path adds.
+    let oh_n = (threads * CACHELINE_F64).max(CACHELINE_F64);
+    let input = KernelInput::Dot(&x[..oh_n], &y[..oh_n]);
+    service.run_sharded(&input);
+    let sharded_ns =
+        median_of((0..oh_reps).map(|_| time_ns(|| service.run_sharded(&input))).collect());
+    let serial_ns =
+        median_of((0..oh_reps).map(|_| time_ns(|| service.run_serial(&input))).collect());
+    let dispatch_overhead_ns = (sharded_ns - serial_ns).max(1.0);
+
+    let m = scaleexp::host_model(freq_ghz, threads as u32);
+    let measured_crossover = model_crossover(&m, spec, threads, p1_gups, dispatch_overhead_ns);
+    let model_p1 = model_p1_gups(&m, spec);
+    let model_cross = match model_p1 {
+        Some(p1) => model_crossover(&m, spec, threads, p1, DEFAULT_DISPATCH_OVERHEAD_NS),
+        None => usize::MAX,
+    };
+    Calibration {
+        p1_gups,
+        p1_mflops,
+        dispatch_overhead_ns,
+        measured_crossover,
+        model_p1_gups: model_p1,
+        model_crossover: model_cross,
+        p1_n,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,6 +259,29 @@ mod tests {
         // 100x the dispatch overhead must push the crossover out ~100x.
         assert!(hi > 20 * lo, "lo={lo} hi={hi}");
         assert!(lo >= 4 * CACHELINE_F64);
+    }
+
+    #[test]
+    fn calibration_measures_sane_values() {
+        use crate::serve::{ServeConfig, ThresholdMode};
+        let service = DotService::new(ServeConfig {
+            threads: 2,
+            style: ImplStyle::SimdLanes,
+            compensated: true,
+            shard_threshold: ThresholdMode::Fixed(1024),
+            freq_ghz: 3.0,
+        })
+        .unwrap();
+        let c = calibrate(&service, 3.0, true);
+        assert!(c.p1_gups > 0.0 && c.p1_gups.is_finite(), "{c:?}");
+        assert!(c.p1_mflops > c.p1_gups, "5 flops/update: {c:?}");
+        assert!(c.dispatch_overhead_ns >= 1.0, "{c:?}");
+        if c.measured_crossover != usize::MAX {
+            assert_eq!(c.measured_crossover % CACHELINE_F64, 0, "{c:?}");
+            assert!(c.measured_crossover >= 2 * CACHELINE_F64, "{c:?}");
+        }
+        // The model side mirrors what the service default would pick.
+        assert_eq!(c.model_crossover, service_crossover(kahan_simd(), 2, 3.0));
     }
 
     #[test]

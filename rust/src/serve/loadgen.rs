@@ -13,13 +13,21 @@
 //!   its batch's completion — so an underprovisioned service shows the
 //!   queueing blow-up a closed loop hides (the classical coordinated-
 //!   omission argument).
+//! * **Open loop, queued** ([`run_load_async`]): the same request stream
+//!   driven through the [`AsyncDotService`] submission queue in *real*
+//!   time — the generator paces arrivals on the wall clock and latency is
+//!   measured from each request's scheduled arrival to its ticket's
+//!   completion, so p50/p90/p99 are actual queueing + service latency
+//!   (backpressure included), not a model. This is the measurement the
+//!   virtual-clock open loop only approximates.
 //!
 //! All requests are dot products (the service's headline class); operand
 //! buffers are allocated once per distinct mixture size from the 64-byte
 //! arena and first-touched by the service's own workers, so the sharded
 //! path streams NUMA-local pages exactly like the measurement stack.
 
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::runtime::arena::AlignedVec;
 use crate::runtime::backend::{BackendError, KernelInput};
@@ -27,8 +35,9 @@ use crate::runtime::parallel::ThreadPool;
 use crate::util::rng::Rng;
 use crate::util::stats::percentile_sorted;
 
+use super::queue::AsyncDotService;
 use super::scheduler::ExecPath;
-use super::DotService;
+use super::{DotService, SharedInput};
 
 /// One component of a request-size mixture.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -118,9 +127,11 @@ pub fn sample_sizes(mix: &[MixEntry], count: usize, seed: u64) -> Vec<usize> {
 /// One aligned operand pair per distinct mixture size, generated
 /// deterministically from the seed and first-touched by `pool`'s workers
 /// (requests of the same size share operands — the load generator measures
-/// scheduling and kernels, not allocator traffic).
+/// scheduling and kernels, not allocator traffic). Buffers are
+/// `Arc`-shared so the asynchronous path can carry them across the
+/// submission queue without copying ([`Self::shared_dot`]).
 pub struct OperandPool {
-    bufs: Vec<(usize, AlignedVec, AlignedVec)>,
+    bufs: Vec<(usize, Arc<AlignedVec>, Arc<AlignedVec>)>,
 }
 
 impl OperandPool {
@@ -133,22 +144,35 @@ impl OperandPool {
         for n in sizes {
             let src_x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
             let src_y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-            let x = AlignedVec::first_touch_copy(&src_x, pool);
-            let y = AlignedVec::first_touch_copy(&src_y, pool);
+            let x = Arc::new(AlignedVec::first_touch_copy(&src_x, pool));
+            let y = Arc::new(AlignedVec::first_touch_copy(&src_y, pool));
             bufs.push((n, x, y));
         }
         Self { bufs }
     }
 
-    /// A dot request over the shared operands of length `n` (must be a
-    /// mixture size).
-    pub fn dot_input(&self, n: usize) -> KernelInput<'_> {
+    fn pair(&self, n: usize) -> (&Arc<AlignedVec>, &Arc<AlignedVec>) {
         let (_, x, y) = self
             .bufs
             .iter()
             .find(|(m, _, _)| *m == n)
             .expect("request size not in the operand pool");
+        (x, y)
+    }
+
+    /// A dot request over the shared operands of length `n` (must be a
+    /// mixture size).
+    pub fn dot_input(&self, n: usize) -> KernelInput<'_> {
+        let (x, y) = self.pair(n);
         KernelInput::Dot(x, y)
+    }
+
+    /// The same request as an owned [`SharedInput`] for the asynchronous
+    /// submission path — a pair of `Arc` clones, no data copy, so async
+    /// and sync runs stream the *same bytes*.
+    pub fn shared_dot(&self, n: usize) -> SharedInput {
+        let (x, y) = self.pair(n);
+        SharedInput::Dot(Arc::clone(x), Arc::clone(y))
     }
 }
 
@@ -318,21 +342,152 @@ pub fn run_load_with(
     })
 }
 
+/// Results of one *real-time* open-loop run through the asynchronous
+/// pipeline: the classic [`LoadReport`] aggregates plus the queue and
+/// pool-utilization stats only the queued path can report.
+#[derive(Clone, Debug)]
+pub struct AsyncLoadReport {
+    pub load: LoadReport,
+    /// Configured submission-queue depth.
+    pub queue_depth: usize,
+    /// Observed queue high-water mark (≤ `queue_depth` by construction —
+    /// the backpressure bound).
+    pub max_queue_depth: usize,
+    /// Configured batching window, µs.
+    pub batch_window_us: f64,
+    /// Pool dispatches the dispatcher posted.
+    pub dispatches: u64,
+    /// Arrival batches the dispatcher drained.
+    pub arrival_batches: u64,
+    /// Fraction of the run during which at least one dispatch was in
+    /// flight (busy-interval union / elapsed).
+    pub pool_utilization: f64,
+}
+
+/// Drive the asynchronous pipeline with `requests` dot requests sampled
+/// from `mix` — the *same* deterministic stream as the synchronous
+/// [`run_load`] for the same seed, over the same shared operands — at a
+/// fixed real-time arrival rate. Unlike the synchronous path's virtual
+/// clock, this measures *actual* queueing + service latency: each request
+/// is submitted at its scheduled arrival instant (the generator sleeps /
+/// spins between arrivals), latency runs from that instant to ticket
+/// completion, and time spent blocked on queue backpressure counts as
+/// queueing delay (no coordinated omission).
+///
+/// Determinism: the request stream, every response value and the checksum
+/// are bit-identical to the synchronous run at the same `T` — only the
+/// timing columns are measurements.
+pub fn run_load_async(
+    service: &AsyncDotService,
+    mix: &[MixEntry],
+    operands: &OperandPool,
+    requests: usize,
+    rate_rps: f64,
+    seed: u64,
+) -> Result<AsyncLoadReport, BackendError> {
+    if mix.is_empty() {
+        return Err(BackendError::Runtime("empty request mixture".to_string()));
+    }
+    if requests == 0 {
+        return Err(BackendError::Runtime("need at least one request".to_string()));
+    }
+    if rate_rps <= 0.0 || !rate_rps.is_finite() {
+        return Err(BackendError::Runtime("open-loop rate must be > 0".to_string()));
+    }
+    let gap_ns = 1e9 / rate_rps;
+    let sizes = sample_sizes(mix, requests, seed);
+    let stats_before = service.stats();
+
+    let epoch = Instant::now();
+    let mut handles = Vec::with_capacity(requests);
+    for (k, &n) in sizes.iter().enumerate() {
+        let target = epoch + Duration::from_nanos((k as f64 * gap_ns) as u64);
+        // Pace the arrival: sleep for the bulk, spin the last stretch
+        // (sleep granularity on a loaded host is tens of µs).
+        loop {
+            let now = Instant::now();
+            if now >= target {
+                break;
+            }
+            let remaining = target - now;
+            if remaining > Duration::from_micros(200) {
+                std::thread::sleep(remaining - Duration::from_micros(100));
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        let handle = service.submit_with_arrival(operands.shared_dot(n), target)?;
+        handles.push(handle);
+    }
+    let mut latencies = Vec::with_capacity(requests);
+    let (mut fused, mut sharded) = (0u64, 0u64);
+    let mut updates = 0u64;
+    let mut checksum = 0.0;
+    for handle in handles {
+        let (r, latency_ns) = handle.wait_timed()?;
+        latencies.push(latency_ns);
+        checksum += r.value;
+        updates += r.n as u64;
+        match r.path {
+            ExecPath::Fused => fused += 1,
+            ExecPath::Sharded => sharded += 1,
+        }
+    }
+    let elapsed_ns = epoch.elapsed().as_nanos() as f64;
+    let stats = service.stats();
+    let busy_ns = (stats.busy_ns - stats_before.busy_ns).max(1.0);
+    latencies.sort_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
+    let spec = service.service().dot_spec();
+    let flops = updates * spec.class.flops_per_update();
+    let opts = service.options();
+    Ok(AsyncLoadReport {
+        load: LoadReport {
+            requests,
+            batches: (stats.arrival_batches - stats_before.arrival_batches) as usize,
+            fused,
+            sharded,
+            busy_ns,
+            elapsed_ns,
+            latency_p50_ns: percentile_sorted(&latencies, 50.0),
+            latency_p90_ns: percentile_sorted(&latencies, 90.0),
+            latency_p99_ns: percentile_sorted(&latencies, 99.0),
+            latency_max_ns: latencies[latencies.len() - 1],
+            updates,
+            flops,
+            mflops: flops as f64 / busy_ns * 1000.0,
+            gups: updates as f64 / busy_ns,
+            reqs_per_s: requests as f64 / elapsed_ns * 1e9,
+            checksum,
+        },
+        queue_depth: opts.queue_depth,
+        max_queue_depth: stats.max_queue_depth,
+        batch_window_us: opts.batch_window.as_nanos() as f64 / 1e3,
+        dispatches: stats.dispatches - stats_before.dispatches,
+        arrival_batches: stats.arrival_batches - stats_before.arrival_batches,
+        pool_utilization: (busy_ns / elapsed_ns).min(1.0),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::runtime::backend::ImplStyle;
     use crate::serve::ServeConfig;
 
-    fn tiny_service(threads: usize, threshold: usize) -> DotService {
-        DotService::new(ServeConfig {
+    use crate::serve::{AsyncOptions, ThresholdMode};
+
+    fn tiny_cfg(threads: usize, threshold: usize) -> ServeConfig {
+        ServeConfig {
             threads,
             style: ImplStyle::SimdLanes,
             compensated: true,
-            shard_threshold: Some(threshold),
+            shard_threshold: ThresholdMode::Fixed(threshold),
             freq_ghz: 3.0,
-        })
-        .unwrap()
+        }
+    }
+
+    fn tiny_service(threads: usize, threshold: usize) -> DotService {
+        DotService::new(tiny_cfg(threads, threshold)).unwrap()
     }
 
     #[test]
@@ -412,6 +567,47 @@ mod tests {
         assert!(run_load(&service, &mix, 0, 2, LoadMode::Closed, 1).is_err());
         let bad_rate = LoadMode::Open { rate_rps: 0.0 };
         assert!(run_load(&service, &mix, 10, 2, bad_rate, 1).is_err());
+    }
+
+    #[test]
+    fn async_open_loop_matches_sync_checksum_and_reports_queue_stats() {
+        let mix = vec![
+            MixEntry { n: 256, weight: 0.8 },
+            MixEntry { n: 8192, weight: 0.2 },
+        ];
+        let sync = tiny_service(2, 4096);
+        let sync_ops = OperandPool::generate(&mix, 7, sync.pool());
+        let sync_report =
+            run_load_with(&sync, &mix, &sync_ops, 64, 8, LoadMode::Closed, 7).unwrap();
+        let asy = AsyncDotService::new(tiny_cfg(2, 4096), AsyncOptions::default()).unwrap();
+        let asy_ops = OperandPool::generate(&mix, 7, asy.service().pool());
+        // A rate fast enough to finish quickly, slow enough to be sane.
+        let r = run_load_async(&asy, &mix, &asy_ops, 64, 1e6, 7).unwrap();
+        assert_eq!(r.load.requests, 64);
+        assert_eq!(r.load.fused + r.load.sharded, 64);
+        assert_eq!(
+            r.load.checksum.to_bits(),
+            sync_report.checksum.to_bits(),
+            "async and sync must serve bit-identical results at fixed T"
+        );
+        assert_eq!((r.load.fused, r.load.sharded), (sync_report.fused, sync_report.sharded));
+        assert!(r.load.latency_p50_ns > 0.0);
+        assert!(r.load.latency_p50_ns <= r.load.latency_p99_ns);
+        assert!(r.load.latency_p99_ns <= r.load.latency_max_ns);
+        assert!(r.max_queue_depth <= r.queue_depth, "{r:?}");
+        assert!(r.dispatches >= 1 && r.arrival_batches >= 1, "{r:?}");
+        assert!(r.pool_utilization > 0.0 && r.pool_utilization <= 1.0, "{r:?}");
+        assert!(r.load.mflops > 0.0 && r.load.reqs_per_s > 0.0);
+    }
+
+    #[test]
+    fn run_load_async_rejects_bad_parameters() {
+        let asy = AsyncDotService::new(tiny_cfg(1, 100), AsyncOptions::default()).unwrap();
+        let mix = vec![MixEntry { n: 64, weight: 1.0 }];
+        let ops = OperandPool::generate(&mix, 1, asy.service().pool());
+        assert!(run_load_async(&asy, &[], &ops, 10, 1e5, 1).is_err());
+        assert!(run_load_async(&asy, &mix, &ops, 0, 1e5, 1).is_err());
+        assert!(run_load_async(&asy, &mix, &ops, 10, 0.0, 1).is_err());
     }
 
     #[test]

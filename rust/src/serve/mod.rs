@@ -26,7 +26,22 @@
 //!
 //! The crossover between the two comes from the multicore saturation model
 //! ([`crossover`]): once the chip's bandwidth saturates, extra workers are
-//! worth more as *request* parallelism than as *shard* parallelism.
+//! worth more as *request* parallelism than as *shard* parallelism. It can
+//! also be *measured*: [`calibrate`] times the single-thread kernel and the
+//! per-dispatch overhead on this host and re-evaluates the same `n*`
+//! formula with measured inputs ([`ThresholdMode::Calibrated`]).
+//!
+//! On top of the synchronous service sits the **asynchronous pipeline**
+//! ([`queue`]): an [`AsyncDotService`] feeds a bounded submission queue
+//! (blocking backpressure past the configured depth) into a dedicated
+//! dispatcher thread that drains whatever has arrived inside a time/count-
+//! bounded batching window, routes the drained batch through the same
+//! [`scheduler::BatchScheduler`], and posts fused groups and shard
+//! partitions to the pool *without blocking* — so new arrival batches
+//! overlap in-flight sharded tails instead of serializing behind them.
+//! Callers get a [`ResponseHandle`] per request (`wait()` /
+//! `try_wait()`); at a fixed thread count every result is bit-identical
+//! to the synchronous path, only completion *order* may differ.
 //!
 //! **Bit-parity contract.** Which path a request takes depends only on its
 //! length and the service threshold — never on the rest of the batch — and
@@ -48,21 +63,40 @@
 
 pub mod crossover;
 pub mod loadgen;
+pub mod queue;
 pub mod scheduler;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use crate::runtime::arena::AlignedVec;
 use crate::runtime::backend::native::{native_fn, preferred_kahan_style, NativeFn, SimdCaps};
 use crate::runtime::backend::{BackendError, ImplStyle, KernelClass, KernelInput, KernelSpec};
 use crate::runtime::hostbench::freq_ghz_with_source;
 use crate::runtime::parallel::{compensated_tree_reduce, ThreadPool, CACHELINE_F64};
 
-pub use crossover::{model_crossover, model_p1_gups, service_crossover};
+pub use crossover::{calibrate, model_crossover, model_p1_gups, service_crossover, Calibration};
 pub use loadgen::{
-    default_mix, parse_mix, run_load, run_load_with, LoadMode, LoadReport, MixEntry, OperandPool,
+    default_mix, parse_mix, run_load, run_load_async, run_load_with, AsyncLoadReport, LoadMode,
+    LoadReport, MixEntry, OperandPool,
 };
+pub use queue::{AsyncDotService, AsyncOptions, AsyncServeStats, ResponseHandle};
 pub use scheduler::{BatchScheduler, DispatchPlan, ExecPath};
+
+/// How the service picks its batch-vs-shard crossover.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ThresholdMode {
+    /// Derive the crossover from the saturation model at construction
+    /// ([`service_crossover`]) — fully deterministic, no measurement.
+    Model,
+    /// Pin the crossover to an explicit value.
+    Fixed(usize),
+    /// Pin the crossover to a value *measured on this host* by
+    /// [`calibrate`] (single-thread p1 + per-dispatch overhead). Recorded
+    /// distinctly in bench artifacts so model-derived, pinned and
+    /// calibrated runs are never conflated.
+    Calibrated(usize),
+}
 
 /// Service construction parameters. `Default`/[`ServeConfig::for_host`]
 /// give the production posture: every core, the widest compensated rung
@@ -78,9 +112,9 @@ pub struct ServeConfig {
     /// free under load) or the naive dot for A/B comparisons. Sum requests
     /// always use the compensated sum; there is no naive rung for them.
     pub compensated: bool,
-    /// Shard requests with `n >= threshold`; `None` derives the crossover
-    /// from the saturation model ([`service_crossover`]).
-    pub shard_threshold: Option<usize>,
+    /// Where the shard crossover comes from: the saturation model, an
+    /// explicit pin, or a host calibration measurement.
+    pub shard_threshold: ThresholdMode,
     /// Core clock anchoring the model crossover (ignored with an explicit
     /// threshold).
     pub freq_ghz: f64,
@@ -93,7 +127,7 @@ impl ServeConfig {
             threads: ThreadPool::available(),
             style: preferred_kahan_style(SimdCaps::detect()),
             compensated: true,
-            shard_threshold: None,
+            shard_threshold: ThresholdMode::Model,
             freq_ghz: freq_ghz_with_source().0,
         }
     }
@@ -119,8 +153,10 @@ impl Default for ServeConfig {
 pub enum ThresholdSource {
     /// Derived from the saturation model at construction.
     Model,
-    /// Supplied by the caller ([`ServeConfig::shard_threshold`]).
+    /// Supplied by the caller ([`ThresholdMode::Fixed`]).
     Override,
+    /// Measured on this host by [`calibrate`] ([`ThresholdMode::Calibrated`]).
+    Calibrated,
 }
 
 impl ThresholdSource {
@@ -128,6 +164,53 @@ impl ThresholdSource {
         match self {
             ThresholdSource::Model => "model",
             ThresholdSource::Override => "override",
+            ThresholdSource::Calibrated => "calibrated",
+        }
+    }
+}
+
+/// An owned, shareable request payload for the asynchronous submission
+/// path: operands live in `Arc`-shared 64-byte [`AlignedVec`] arenas, so a
+/// request can cross the queue into the dispatcher thread (and be retained
+/// by in-flight pool jobs) without copying and without borrowing from the
+/// submitter's stack. [`SharedInput::view`] projects the borrowed
+/// [`KernelInput`] every execution path consumes — the async pipeline
+/// schedules the *same* inputs the synchronous API does.
+#[derive(Clone, Debug)]
+pub enum SharedInput {
+    /// Two equal-length operand streams for the dot kernels.
+    Dot(Arc<AlignedVec>, Arc<AlignedVec>),
+    /// One operand stream for the sum kernels.
+    Sum(Arc<AlignedVec>),
+}
+
+impl SharedInput {
+    /// A dot request over freshly arena-copied operands.
+    pub fn dot(x: &[f64], y: &[f64]) -> Self {
+        SharedInput::Dot(
+            Arc::new(AlignedVec::copy_from(x)),
+            Arc::new(AlignedVec::copy_from(y)),
+        )
+    }
+
+    /// A sum request over a freshly arena-copied operand.
+    pub fn sum(x: &[f64]) -> Self {
+        SharedInput::Sum(Arc::new(AlignedVec::copy_from(x)))
+    }
+
+    /// The borrowed kernel input this request executes.
+    pub fn view(&self) -> KernelInput<'_> {
+        match self {
+            SharedInput::Dot(x, y) => KernelInput::Dot(x, y),
+            SharedInput::Sum(x) => KernelInput::Sum(x),
+        }
+    }
+
+    /// Loop iterations this request drives.
+    pub fn updates(&self) -> usize {
+        match self {
+            SharedInput::Dot(x, _) => x.len(),
+            SharedInput::Sum(x) => x.len(),
         }
     }
 }
@@ -182,6 +265,21 @@ impl DotService {
     /// Fails with [`BackendError::Unsupported`] when the host cannot run
     /// the requested rung.
     pub fn new(cfg: ServeConfig) -> Result<Self, BackendError> {
+        let pool = Arc::new(ThreadPool::new(cfg.threads.max(1)));
+        Self::with_pool(cfg, pool)
+    }
+
+    /// [`Self::new`] over a caller-supplied pool of the same width. The
+    /// async pipeline uses this with a *detached* pool
+    /// ([`ThreadPool::new_detached`]) so its dispatcher thread never
+    /// executes chunks inline; the partition — and therefore every result
+    /// bit — is identical either way.
+    pub(crate) fn with_pool(cfg: ServeConfig, pool: Arc<ThreadPool>) -> Result<Self, BackendError> {
+        assert_eq!(
+            pool.threads(),
+            cfg.threads.max(1),
+            "service pool must match the configured width"
+        );
         let caps = SimdCaps::detect();
         let dot_class = if cfg.compensated {
             KernelClass::KahanDot
@@ -202,11 +300,14 @@ impl DotService {
         };
         let threads = cfg.threads.max(1);
         let (threshold, threshold_source) = match cfg.shard_threshold {
-            Some(t) => (t, ThresholdSource::Override),
-            None => (service_crossover(dot_spec, threads, cfg.freq_ghz), ThresholdSource::Model),
+            ThresholdMode::Fixed(t) => (t, ThresholdSource::Override),
+            ThresholdMode::Calibrated(t) => (t, ThresholdSource::Calibrated),
+            ThresholdMode::Model => {
+                (service_crossover(dot_spec, threads, cfg.freq_ghz), ThresholdSource::Model)
+            }
         };
         Ok(Self {
-            pool: Arc::new(ThreadPool::new(threads)),
+            pool,
             scheduler: BatchScheduler::new(threshold),
             threshold_source,
             style: cfg.style,
@@ -387,7 +488,7 @@ mod tests {
             threads,
             style: ImplStyle::SimdLanes,
             compensated: true,
-            shard_threshold: Some(threshold),
+            shard_threshold: ThresholdMode::Fixed(threshold),
             freq_ghz: 3.0,
         }
     }

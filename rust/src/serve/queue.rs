@@ -1,0 +1,952 @@
+//! The asynchronous submission pipeline: a bounded MPSC queue with
+//! blocking backpressure, a dedicated dispatcher thread that forms arrival
+//! batches inside a time/count-bounded window, and per-request completion
+//! tickets — so arrival batches *overlap* in-flight sharded tails instead
+//! of serializing behind them.
+//!
+//! Why this layer exists: the paper's saturation result means a handful of
+//! workers already extract the chip's bandwidth, so a serving layer wins
+//! or loses on *keeping the pool busy*, not on the kernel. The synchronous
+//! [`DotService`] API blocks the submitting thread on every batch and runs
+//! sharded tails one after another; under open-loop arrivals the service
+//! therefore pays queueing it could have overlapped. The pipeline here
+//! decouples the three stages:
+//!
+//! ```text
+//! submit() ──► bounded queue ──► dispatcher ──► pool worker FIFOs
+//!  (blocks        (depth-         (drains a       (fused groups and
+//!   past the       bounded         batching        shard partitions
+//!   depth =        memory)         window,         pipeline back-to-
+//!   backpressure)                  posts async)    back; no idle gaps)
+//! ```
+//!
+//! **Determinism contract.** At a fixed thread count every request's
+//! result is bit-identical to the synchronous path regardless of arrival
+//! interleaving — the dispatcher may *group* requests differently run to
+//! run, but grouping only decides where work executes, never what it
+//! computes: fused requests run the service's serial kernel over the whole
+//! input, sharded requests run the pool-width partition + deterministic
+//! compensated tree reduction, exactly as `submit`/`submit_batch` do.
+//! Only completion *order* may differ (property-pinned in
+//! `tests/properties.rs`).
+//!
+//! **Resource bounds.** Producer memory is bounded by the queue depth
+//! (`submit` blocks when full); dispatcher memory is bounded by
+//! [`MAX_INFLIGHT_DISPATCHES`] × the batching cap (past that, the
+//! dispatcher retires the oldest dispatch before draining more). Tickets
+//! are `Arc`-owned: dropping a [`ResponseHandle`] without waiting leaks
+//! nothing, and dropping the service closes the queue, drains everything
+//! already accepted, completes every ticket and joins the dispatcher.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::runtime::backend::{BackendError, KernelInput};
+use crate::runtime::parallel::{
+    compensated_tree_reduce, PendingDispatch, ThreadPool, CACHELINE_F64,
+};
+
+use super::scheduler::ExecPath;
+use super::{DotService, ServeConfig, ServeResponse, SharedInput};
+
+/// Dispatcher-side cap on concurrently in-flight pool dispatches: past
+/// this the dispatcher retires the oldest dispatch before draining more
+/// arrivals, so total buffered work is bounded by
+/// `queue_depth + MAX_INFLIGHT_DISPATCHES * batch_max` requests.
+pub const MAX_INFLIGHT_DISPATCHES: usize = 8;
+
+/// How long the dispatcher waits on an empty queue before re-checking
+/// whether the oldest in-flight dispatch finished. Bounds the retire lag
+/// of a completed dispatch (and therefore ticket-resolution promptness)
+/// at light load without busy-spinning the dispatcher thread.
+const RETIRE_POLL: Duration = Duration::from_micros(50);
+
+/// Tuning for the asynchronous pipeline ([`AsyncDotService::new`]).
+#[derive(Clone, Copy, Debug)]
+pub struct AsyncOptions {
+    /// Submission-queue depth (>= 1). `submit` blocks while the queue
+    /// holds this many requests — the backpressure bound.
+    pub queue_depth: usize,
+    /// How long the dispatcher keeps a non-empty arrival batch open for
+    /// more requests. Zero means "drain whatever has already arrived and
+    /// dispatch immediately".
+    pub batch_window: Duration,
+    /// Count bound on one arrival batch (>= 1).
+    pub batch_max: usize,
+    /// `true` (the default): post dispatches without waiting, so arrival
+    /// batches overlap in-flight work. `false`: retire every dispatch
+    /// before draining the next batch — the pipelined-but-serialized
+    /// baseline `serve-bench` reports side by side with the async rows.
+    pub overlap: bool,
+}
+
+impl Default for AsyncOptions {
+    fn default() -> Self {
+        Self {
+            queue_depth: 256,
+            batch_window: Duration::from_micros(100),
+            batch_max: 64,
+            overlap: true,
+        }
+    }
+}
+
+/// What a queue pop observed.
+enum Pop<T> {
+    Item(T),
+    Empty,
+    Closed,
+}
+
+/// Depth-bounded MPSC queue with blocking backpressure: `push` blocks
+/// while the queue is full, `close` wakes everyone and lets already-queued
+/// items drain. Built on a mutex + two condvars so the depth bound is
+/// *exact* (observable via [`BoundedQueue::max_depth_seen`]) — the
+/// property tests pin it.
+struct BoundedQueue<T> {
+    depth: usize,
+    shared: Mutex<QueueShared<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+struct QueueShared<T> {
+    items: VecDeque<T>,
+    closed: bool,
+    enqueued: u64,
+    max_depth_seen: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    fn new(depth: usize) -> Self {
+        Self {
+            depth: depth.max(1),
+            shared: Mutex::new(QueueShared {
+                items: VecDeque::new(),
+                closed: false,
+                enqueued: 0,
+                max_depth_seen: 0,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+        }
+    }
+
+    /// Blocking bounded push. Returns the item back when the queue is
+    /// closed (shutdown raced the submit).
+    fn push(&self, item: T) -> Result<(), T> {
+        let mut s = self.shared.lock().unwrap();
+        loop {
+            if s.closed {
+                return Err(item);
+            }
+            if s.items.len() < self.depth {
+                s.items.push_back(item);
+                s.enqueued += 1;
+                if s.items.len() > s.max_depth_seen {
+                    s.max_depth_seen = s.items.len();
+                }
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            s = self.not_full.wait(s).unwrap();
+        }
+    }
+
+    /// Block until an item is available or the queue is closed *and*
+    /// drained (closing still delivers everything already accepted).
+    fn pop_wait(&self) -> Option<T> {
+        let mut s = self.shared.lock().unwrap();
+        loop {
+            if let Some(item) = s.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.not_empty.wait(s).unwrap();
+        }
+    }
+
+    /// Non-blocking pop.
+    fn try_pop(&self) -> Pop<T> {
+        let mut s = self.shared.lock().unwrap();
+        match s.items.pop_front() {
+            Some(item) => {
+                self.not_full.notify_one();
+                Pop::Item(item)
+            }
+            None if s.closed => Pop::Closed,
+            None => Pop::Empty,
+        }
+    }
+
+    /// Pop with a deadline: waits at most `timeout` for an item.
+    fn pop_timeout(&self, timeout: Duration) -> Pop<T> {
+        let deadline = Instant::now() + timeout;
+        let mut s = self.shared.lock().unwrap();
+        loop {
+            if let Some(item) = s.items.pop_front() {
+                self.not_full.notify_one();
+                return Pop::Item(item);
+            }
+            if s.closed {
+                return Pop::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Pop::Empty;
+            }
+            let (guard, _) = self.not_empty.wait_timeout(s, deadline - now).unwrap();
+            s = guard;
+        }
+    }
+
+    fn close(&self) {
+        let mut s = self.shared.lock().unwrap();
+        s.closed = true;
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    fn counters(&self) -> (u64, usize) {
+        let s = self.shared.lock().unwrap();
+        (s.enqueued, s.max_depth_seen)
+    }
+}
+
+/// One request's completion slot. Completed exactly once by the
+/// dispatcher; read by whoever holds the [`ResponseHandle`].
+struct Ticket {
+    slot: Mutex<TicketSlot>,
+    ready: Condvar,
+}
+
+enum TicketSlot {
+    Pending,
+    /// Result plus the measured arrival→completion latency in ns.
+    Ready(Result<ServeResponse, BackendError>, f64),
+    /// `wait` already consumed the result.
+    Claimed,
+}
+
+impl Ticket {
+    fn new() -> Self {
+        Self {
+            slot: Mutex::new(TicketSlot::Pending),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Poison-tolerant slot access: a panic anywhere near a ticket must
+    /// degrade to an error result, never to a hung or aborting waiter.
+    fn lock_slot(&self) -> std::sync::MutexGuard<'_, TicketSlot> {
+        self.slot.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Resolve the ticket. Panics if it was already resolved — tickets
+    /// complete exactly once by construction, and this assert keeps it
+    /// that way.
+    fn complete(&self, result: Result<ServeResponse, BackendError>, latency_ns: f64) {
+        let mut slot = self.lock_slot();
+        assert!(matches!(*slot, TicketSlot::Pending), "ticket resolved twice");
+        *slot = TicketSlot::Ready(result, latency_ns);
+        self.ready.notify_all();
+    }
+}
+
+/// The per-request completion handle the async pipeline hands back at
+/// submission. `wait` blocks until the dispatcher resolves the ticket;
+/// `try_wait` polls without blocking. Dropping an unresolved handle is
+/// safe: the ticket state is `Arc`-shared, the request still executes,
+/// and everything is freed once both sides let go.
+pub struct ResponseHandle {
+    ticket: Arc<Ticket>,
+}
+
+impl ResponseHandle {
+    /// Block until the request completes and take the response.
+    pub fn wait(self) -> Result<ServeResponse, BackendError> {
+        self.wait_timed().map(|(r, _)| r)
+    }
+
+    /// [`Self::wait`], also returning the measured arrival→completion
+    /// latency in nanoseconds (what the open-loop load generator records —
+    /// queueing, backpressure and service time included).
+    pub fn wait_timed(self) -> Result<(ServeResponse, f64), BackendError> {
+        let mut slot = self.ticket.lock_slot();
+        loop {
+            match std::mem::replace(&mut *slot, TicketSlot::Claimed) {
+                TicketSlot::Ready(result, latency_ns) => {
+                    return result.map(|r| (r, latency_ns));
+                }
+                TicketSlot::Claimed => unreachable!("wait consumes the handle"),
+                TicketSlot::Pending => {
+                    *slot = TicketSlot::Pending;
+                    slot = self
+                        .ticket
+                        .ready
+                        .wait(slot)
+                        .unwrap_or_else(|poisoned| poisoned.into_inner());
+                }
+            }
+        }
+    }
+
+    /// Non-blocking peek: `None` while the request is still queued or
+    /// executing, `Some` once resolved (the handle can then be `wait`ed
+    /// for the same answer without blocking).
+    pub fn try_wait(&self) -> Option<Result<ServeResponse, BackendError>> {
+        let slot = self.ticket.lock_slot();
+        match &*slot {
+            TicketSlot::Ready(result, _) => Some(result.clone()),
+            TicketSlot::Pending => None,
+            TicketSlot::Claimed => unreachable!("wait consumes the handle"),
+        }
+    }
+}
+
+/// A request travelling through the queue: payload, completion ticket and
+/// the arrival instant latency is measured from.
+struct QueuedRequest {
+    input: SharedInput,
+    ticket: Arc<Ticket>,
+    arrival: Instant,
+}
+
+impl Drop for QueuedRequest {
+    /// The backstop that makes "no `ResponseHandle` can hang" a structural
+    /// guarantee rather than a code-path audit: wherever a request is
+    /// dropped — a dispatcher panic unwinding a gathered batch or the
+    /// in-flight deque, the shutdown drain, anywhere — an unresolved
+    /// ticket is failed here so its waiter always wakes. The normal path
+    /// resolves the ticket first, making this a no-op.
+    fn drop(&mut self) {
+        let mut slot = self.ticket.lock_slot();
+        if matches!(*slot, TicketSlot::Pending) {
+            *slot = TicketSlot::Ready(
+                Err(BackendError::Runtime(
+                    "request dropped before completion".to_string(),
+                )),
+                0.0,
+            );
+            self.ticket.ready.notify_all();
+        }
+    }
+}
+
+/// Monotonic pipeline counters (snapshot via [`AsyncDotService::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AsyncServeStats {
+    /// Requests accepted into the queue.
+    pub enqueued: u64,
+    /// Requests whose ticket has been resolved.
+    pub completed: u64,
+    /// Arrival batches the dispatcher drained from the queue.
+    pub arrival_batches: u64,
+    /// Pool dispatches posted (one per fused group, one per shard).
+    pub dispatches: u64,
+    /// High-water mark of the queue — never exceeds the configured depth
+    /// (the backpressure bound, property-pinned).
+    pub max_queue_depth: usize,
+    /// Wall time during which at least one dispatch was in flight (union
+    /// of posted→finished intervals, ended at each dispatch's actual latch
+    /// completion) — the numerator of pool utilization.
+    pub busy_ns: f64,
+}
+
+#[derive(Default)]
+struct Counters {
+    completed: AtomicU64,
+    arrival_batches: AtomicU64,
+    dispatches: AtomicU64,
+    busy_ns: AtomicU64,
+}
+
+/// One posted-but-not-retired pool dispatch.
+struct InFlight {
+    /// When the dispatch was posted (for the busy-interval union).
+    posted: Instant,
+    kind: InFlightKind,
+}
+
+enum InFlightKind {
+    Fused {
+        pending: PendingDispatch<f64>,
+        requests: Vec<QueuedRequest>,
+    },
+    Sharded {
+        pending: PendingDispatch<f64>,
+        request: QueuedRequest,
+    },
+}
+
+impl InFlight {
+    fn is_done(&self) -> bool {
+        match &self.kind {
+            InFlightKind::Fused { pending, .. } => pending.is_done(),
+            InFlightKind::Sharded { pending, .. } => pending.is_done(),
+        }
+    }
+}
+
+/// The asynchronous serving engine (see the module docs): an inner
+/// [`DotService`] over a *detached* pool, fed by the bounded submission
+/// queue and the dispatcher thread. The synchronous API remains available
+/// as [`AsyncDotService::submit_wait`] — submit-then-wait over the queue,
+/// bit-identical to [`DotService::submit_batch`] at the same `T`.
+pub struct AsyncDotService {
+    service: Arc<DotService>,
+    queue: Arc<BoundedQueue<QueuedRequest>>,
+    counters: Arc<Counters>,
+    dispatcher: Option<JoinHandle<()>>,
+    opts: AsyncOptions,
+}
+
+impl AsyncDotService {
+    /// Build the pipeline: resolves the inner service over a detached pool
+    /// (the dispatcher never executes chunks inline), then spawns the
+    /// dispatcher thread.
+    pub fn new(cfg: ServeConfig, opts: AsyncOptions) -> Result<Self, BackendError> {
+        let opts = AsyncOptions {
+            queue_depth: opts.queue_depth.max(1),
+            batch_max: opts.batch_max.max(1),
+            ..opts
+        };
+        let pool = Arc::new(ThreadPool::new_detached(cfg.threads.max(1)));
+        let service = Arc::new(DotService::with_pool(cfg, pool)?);
+        let queue = Arc::new(BoundedQueue::new(opts.queue_depth));
+        let counters = Arc::new(Counters::default());
+        let dispatcher = {
+            let service = Arc::clone(&service);
+            let queue = Arc::clone(&queue);
+            let counters = Arc::clone(&counters);
+            std::thread::Builder::new()
+                .name("kahan-serve-dispatch".to_string())
+                .spawn(move || dispatcher_main(service, queue, counters, opts))
+                .expect("spawn serve dispatcher")
+        };
+        Ok(Self {
+            service,
+            queue,
+            counters,
+            dispatcher: Some(dispatcher),
+            opts,
+        })
+    }
+
+    /// The inner synchronous service (kernel specs, threshold, pool, the
+    /// classic `ServeStats` counters).
+    pub fn service(&self) -> &Arc<DotService> {
+        &self.service
+    }
+
+    /// Worker count the pipeline schedules over.
+    pub fn threads(&self) -> usize {
+        self.service.threads()
+    }
+
+    /// The pipeline tuning in effect (depth and batch bounds clamped).
+    pub fn options(&self) -> AsyncOptions {
+        self.opts
+    }
+
+    /// Submit one request; blocks while the queue is at depth (the
+    /// backpressure contract). Invalid requests fail here, before
+    /// enqueueing — the returned error is the same the synchronous path
+    /// raises, and nothing enters the pipeline.
+    pub fn submit(&self, input: SharedInput) -> Result<ResponseHandle, BackendError> {
+        self.submit_with_arrival(input, Instant::now())
+    }
+
+    /// [`Self::submit`] with an explicit arrival instant to measure
+    /// latency from. An open-loop load generator passes the *intended*
+    /// arrival time, so time spent blocked on backpressure counts as
+    /// queueing delay instead of being coordinated-omitted.
+    pub fn submit_with_arrival(
+        &self,
+        input: SharedInput,
+        arrival: Instant,
+    ) -> Result<ResponseHandle, BackendError> {
+        input.view().check(self.service.spec_for(&input.view()))?;
+        self.enqueue(input, arrival)
+    }
+
+    /// Enqueue an already-validated request (both submit paths check once,
+    /// then land here).
+    fn enqueue(&self, input: SharedInput, arrival: Instant) -> Result<ResponseHandle, BackendError> {
+        let ticket = Arc::new(Ticket::new());
+        let queued = QueuedRequest {
+            input,
+            ticket: Arc::clone(&ticket),
+            arrival,
+        };
+        self.queue
+            .push(queued)
+            .map_err(|_| BackendError::Runtime("service is shut down".to_string()))?;
+        Ok(ResponseHandle { ticket })
+    }
+
+    /// The synchronous API over the pipeline: submit every request, then
+    /// wait for all of them, returning responses in submission order —
+    /// bit-identical to [`DotService::submit_batch`] at the same `T`
+    /// (property-pinned). Like `submit_batch`, a batch containing an
+    /// invalid request fails atomically before anything is enqueued.
+    pub fn submit_wait(&self, inputs: &[SharedInput]) -> Result<Vec<ServeResponse>, BackendError> {
+        for input in inputs {
+            input.view().check(self.service.spec_for(&input.view()))?;
+        }
+        let handles: Vec<ResponseHandle> = inputs
+            .iter()
+            .map(|input| self.enqueue(input.clone(), Instant::now()))
+            .collect::<Result<_, _>>()?;
+        handles.into_iter().map(ResponseHandle::wait).collect()
+    }
+
+    /// Snapshot of the pipeline counters.
+    pub fn stats(&self) -> AsyncServeStats {
+        let (enqueued, max_queue_depth) = self.queue.counters();
+        AsyncServeStats {
+            enqueued,
+            completed: self.counters.completed.load(Ordering::Relaxed),
+            arrival_batches: self.counters.arrival_batches.load(Ordering::Relaxed),
+            dispatches: self.counters.dispatches.load(Ordering::Relaxed),
+            max_queue_depth,
+            busy_ns: self.counters.busy_ns.load(Ordering::Relaxed) as f64,
+        }
+    }
+}
+
+impl Drop for AsyncDotService {
+    /// Shutdown is a drain, not an abort: close the queue (new submits
+    /// fail fast), let the dispatcher deliver everything already accepted
+    /// — queued and in-flight — and join it. Outstanding
+    /// [`ResponseHandle`]s stay valid afterwards: their tickets were
+    /// resolved during the drain.
+    fn drop(&mut self) {
+        self.queue.close();
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for AsyncDotService {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AsyncDotService")
+            .field("service", &self.service)
+            .field("queue_depth", &self.opts.queue_depth)
+            .field("batch_window", &self.opts.batch_window)
+            .field("batch_max", &self.opts.batch_max)
+            .field("overlap", &self.opts.overlap)
+            .finish()
+    }
+}
+
+/// The dispatcher thread: gather → plan → post → retire, with the posting
+/// and retiring decoupled so the pool never idles between arrival batches.
+/// The loop body is panic-guarded; if it ever unwinds (a bug, not a
+/// workload condition — worker panics are caught per dispatch), the
+/// cleanup path still resolves every remaining queued ticket with an
+/// error so no `ResponseHandle` can hang.
+fn dispatcher_main(
+    service: Arc<DotService>,
+    queue: Arc<BoundedQueue<QueuedRequest>>,
+    counters: Arc<Counters>,
+    opts: AsyncOptions,
+) {
+    let run = {
+        let (service, queue, counters) = (&service, &queue, &counters);
+        move || dispatcher_loop(service, queue, counters, opts)
+    };
+    let outcome = catch_unwind(AssertUnwindSafe(run));
+    // Normal exit already drained everything; after a panic, fail whatever
+    // is still queued so waiters wake up.
+    queue.close();
+    while let Pop::Item(q) = queue.try_pop() {
+        q.ticket.complete(
+            Err(BackendError::Runtime("serve dispatcher exited".to_string())),
+            0.0,
+        );
+        counters.completed.fetch_add(1, Ordering::Relaxed);
+    }
+    if let Err(p) = outcome {
+        std::panic::resume_unwind(p);
+    }
+}
+
+fn dispatcher_loop(
+    service: &DotService,
+    queue: &BoundedQueue<QueuedRequest>,
+    counters: &Counters,
+    opts: AsyncOptions,
+) {
+    let epoch = Instant::now();
+    let mut inflight: VecDeque<InFlight> = VecDeque::new();
+    // End of the last retired busy interval (ns since epoch), for the
+    // interval-union busy accounting.
+    let mut busy_end_ns = 0.0f64;
+    loop {
+        // Retire whatever already finished (front first: dispatch order).
+        while inflight.front().map(InFlight::is_done).unwrap_or(false) {
+            let f = inflight.pop_front().unwrap();
+            retire(service, counters, epoch, &mut busy_end_ns, f);
+        }
+        // Bound dispatcher-side memory.
+        while inflight.len() >= MAX_INFLIGHT_DISPATCHES {
+            let f = inflight.pop_front().unwrap();
+            retire(service, counters, epoch, &mut busy_end_ns, f);
+        }
+        // Gather the next arrival batch. With work in flight, never park
+        // indefinitely on either side: wait for arrivals in short beats
+        // and re-check the front dispatch between them, so a long-running
+        // dispatch neither blocks admission of new requests (head-of-line)
+        // nor delays retiring dispatches that have already finished.
+        let first = if inflight.is_empty() {
+            match queue.pop_wait() {
+                Some(q) => q,
+                None => return, // closed and fully drained
+            }
+        } else {
+            match queue.pop_timeout(RETIRE_POLL) {
+                Pop::Item(q) => q,
+                Pop::Empty => continue, // beat elapsed: loop re-checks the front
+                Pop::Closed => {
+                    for f in inflight.drain(..) {
+                        retire(service, counters, epoch, &mut busy_end_ns, f);
+                    }
+                    return;
+                }
+            }
+        };
+        let batch = gather(queue, first, &opts);
+        counters.arrival_batches.fetch_add(1, Ordering::Relaxed);
+        dispatch(service, counters, &mut inflight, batch);
+        if !opts.overlap {
+            while let Some(f) = inflight.pop_front() {
+                retire(service, counters, epoch, &mut busy_end_ns, f);
+            }
+        }
+    }
+}
+
+/// Drain the arrival batch: everything already queued, then (while the
+/// batching window is open and the count bound unmet) whatever arrives
+/// before the deadline.
+fn gather(
+    queue: &BoundedQueue<QueuedRequest>,
+    first: QueuedRequest,
+    opts: &AsyncOptions,
+) -> Vec<QueuedRequest> {
+    let deadline = Instant::now() + opts.batch_window;
+    let mut batch = vec![first];
+    while batch.len() < opts.batch_max {
+        match queue.try_pop() {
+            Pop::Item(q) => {
+                batch.push(q);
+                continue;
+            }
+            Pop::Closed => break,
+            Pop::Empty => {}
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match queue.pop_timeout(deadline - now) {
+            Pop::Item(q) => batch.push(q),
+            _ => break, // window elapsed or queue closed: dispatch what we have
+        }
+    }
+    batch
+}
+
+/// Route one drained arrival batch through the scheduler and post it to
+/// the pool without blocking: one `run_tasks_async` for the whole fused
+/// group, one `run_chunks_async` per sharded request.
+fn dispatch(
+    service: &DotService,
+    counters: &Counters,
+    inflight: &mut VecDeque<InFlight>,
+    batch: Vec<QueuedRequest>,
+) {
+    let plan = service
+        .scheduler
+        .plan_lens(batch.iter().map(|q| q.input.updates()));
+    let mut slots: Vec<Option<QueuedRequest>> = batch.into_iter().map(Some).collect();
+    let pool = service.pool();
+    if !plan.fused.is_empty() {
+        let requests: Vec<QueuedRequest> = plan
+            .fused
+            .iter()
+            .map(|&i| slots[i].take().expect("fused index planned once"))
+            .collect();
+        let inputs: Vec<SharedInput> = requests.iter().map(|q| q.input.clone()).collect();
+        let (dot_fn, sum_fn) = (service.dot_fn, service.sum_fn);
+        let posted = Instant::now();
+        let pending = pool.run_tasks_async(inputs.len(), move |i| match inputs[i].view() {
+            KernelInput::Dot(x, y) => dot_fn(x, y),
+            KernelInput::Sum(x) => sum_fn(x),
+        });
+        counters.dispatches.fetch_add(1, Ordering::Relaxed);
+        inflight.push_back(InFlight {
+            posted,
+            kind: InFlightKind::Fused { pending, requests },
+        });
+    }
+    for &i in &plan.sharded {
+        let request = slots[i].take().expect("sharded index planned once");
+        let posted = Instant::now();
+        let pending = match &request.input {
+            SharedInput::Dot(x, y) => {
+                let (x, y) = (Arc::clone(x), Arc::clone(y));
+                let f = service.dot_fn;
+                pool.run_chunks_async(x.len(), CACHELINE_F64, move |_, r| {
+                    f(&x[r.clone()], &y[r])
+                })
+            }
+            SharedInput::Sum(x) => {
+                let x = Arc::clone(x);
+                let f = service.sum_fn;
+                pool.run_chunks_async(x.len(), CACHELINE_F64, move |_, r| f(&x[r]))
+            }
+        };
+        counters.dispatches.fetch_add(1, Ordering::Relaxed);
+        inflight.push_back(InFlight {
+            posted,
+            kind: InFlightKind::Sharded { pending, request },
+        });
+    }
+}
+
+/// Fold one dispatch's `[posted, finished]` span into the busy-interval
+/// union. Retires happen in dispatch order, so extending from
+/// `max(posted, previous end)` to this dispatch's finish never
+/// double-counts, never counts idle gaps between dispatches, and a
+/// dispatch that finished inside an already-accounted span adds nothing.
+/// `finished` is the latch's completion instant, not the (possibly later)
+/// retire time — the dispatcher lingering in a batching window must not
+/// inflate pool utilization.
+fn account_busy(
+    counters: &Counters,
+    epoch: Instant,
+    busy_end_ns: &mut f64,
+    posted: Instant,
+    finished: Instant,
+) {
+    let posted_ns = posted.saturating_duration_since(epoch).as_nanos() as f64;
+    let end_ns = finished.saturating_duration_since(epoch).as_nanos() as f64;
+    let start_ns = posted_ns.max(*busy_end_ns);
+    if end_ns > start_ns {
+        counters
+            .busy_ns
+            .fetch_add((end_ns - start_ns) as u64, Ordering::Relaxed);
+        *busy_end_ns = end_ns;
+    }
+}
+
+/// Wait out one dispatch (usually already finished), account it, and
+/// resolve its tickets. Counters and busy time are updated *before* any
+/// ticket resolves, so a waiter that reads `stats()` the moment its
+/// ticket wakes never sees the dispatch half-accounted. A worker panic is
+/// contained here: the affected requests fail with a runtime error, the
+/// pool and the pipeline keep serving.
+fn retire(
+    service: &DotService,
+    counters: &Counters,
+    epoch: Instant,
+    busy_end_ns: &mut f64,
+    inflight: InFlight,
+) {
+    let panicked = || BackendError::Runtime("worker panicked during execution".to_string());
+    let posted = inflight.posted;
+    match inflight.kind {
+        InFlightKind::Fused { pending, requests } => {
+            match catch_unwind(AssertUnwindSafe(|| pending.wait_finished())) {
+                Ok((values, finished)) => {
+                    let now = Instant::now();
+                    let updates: u64 = requests.iter().map(|q| q.input.updates() as u64).sum();
+                    service.record(requests.len() as u64, 0, updates);
+                    counters
+                        .completed
+                        .fetch_add(requests.len() as u64, Ordering::Relaxed);
+                    account_busy(counters, epoch, busy_end_ns, posted, finished);
+                    for (q, value) in requests.iter().zip(values) {
+                        let response = ServeResponse {
+                            value,
+                            n: q.input.updates(),
+                            path: ExecPath::Fused,
+                        };
+                        let latency = now.saturating_duration_since(q.arrival);
+                        q.ticket.complete(Ok(response), latency.as_nanos() as f64);
+                    }
+                }
+                Err(_) => {
+                    let now = Instant::now();
+                    counters
+                        .completed
+                        .fetch_add(requests.len() as u64, Ordering::Relaxed);
+                    account_busy(counters, epoch, busy_end_ns, posted, now);
+                    for q in &requests {
+                        let latency = now.saturating_duration_since(q.arrival);
+                        q.ticket.complete(Err(panicked()), latency.as_nanos() as f64);
+                    }
+                }
+            }
+        }
+        InFlightKind::Sharded { pending, request } => {
+            let n = request.input.updates();
+            match catch_unwind(AssertUnwindSafe(|| pending.wait_finished())) {
+                Ok((partials, finished)) => {
+                    let value = compensated_tree_reduce(&partials);
+                    service.record(0, 1, n as u64);
+                    counters.completed.fetch_add(1, Ordering::Relaxed);
+                    account_busy(counters, epoch, busy_end_ns, posted, finished);
+                    let response = ServeResponse {
+                        value,
+                        n,
+                        path: ExecPath::Sharded,
+                    };
+                    let latency = Instant::now().saturating_duration_since(request.arrival);
+                    request
+                        .ticket
+                        .complete(Ok(response), latency.as_nanos() as f64);
+                }
+                Err(_) => {
+                    let now = Instant::now();
+                    counters.completed.fetch_add(1, Ordering::Relaxed);
+                    account_busy(counters, epoch, busy_end_ns, posted, now);
+                    let latency = now.saturating_duration_since(request.arrival);
+                    request
+                        .ticket
+                        .complete(Err(panicked()), latency.as_nanos() as f64);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::ImplStyle;
+    use crate::serve::ThresholdMode;
+    use crate::util::rng::Rng;
+
+    fn cfg(threads: usize, threshold: usize) -> ServeConfig {
+        ServeConfig {
+            threads,
+            style: ImplStyle::SimdLanes,
+            compensated: true,
+            shard_threshold: ThresholdMode::Fixed(threshold),
+            freq_ghz: 3.0,
+        }
+    }
+
+    fn shared_dot(n: usize, seed: u64) -> SharedInput {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        SharedInput::dot(&x, &y)
+    }
+
+    #[test]
+    fn async_submit_wait_matches_sync_submit_batch_bits() {
+        let sizes = [7usize, 500, 1000, 1001, 4096, 63];
+        let shared: Vec<SharedInput> = sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| shared_dot(n, 1000 + i as u64))
+            .collect();
+        for threads in [1usize, 3] {
+            let sync = DotService::new(cfg(threads, 1000)).unwrap();
+            let asy = AsyncDotService::new(cfg(threads, 1000), AsyncOptions::default()).unwrap();
+            let views: Vec<KernelInput<'_>> = shared.iter().map(SharedInput::view).collect();
+            let want = sync.submit_batch(&views).unwrap();
+            let got = asy.submit_wait(&shared).unwrap();
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.value.to_bits(), b.value.to_bits(), "n={} T={threads}", a.n);
+                assert_eq!(a.path, b.path);
+                assert_eq!(a.n, b.n);
+            }
+        }
+    }
+
+    #[test]
+    fn try_wait_polls_then_wait_returns_same_result() {
+        let asy = AsyncDotService::new(cfg(2, usize::MAX), AsyncOptions::default()).unwrap();
+        let input = shared_dot(512, 9);
+        let want = asy.service().submit(&input.view()).unwrap();
+        let handle = asy.submit(input).unwrap();
+        let peeked = loop {
+            if let Some(r) = handle.try_wait() {
+                break r.unwrap();
+            }
+            std::thread::yield_now();
+        };
+        let got = handle.wait().unwrap();
+        assert_eq!(peeked.value.to_bits(), got.value.to_bits());
+        assert_eq!(got.value.to_bits(), want.value.to_bits());
+    }
+
+    #[test]
+    fn invalid_requests_fail_at_submit_without_entering_the_queue() {
+        let asy = AsyncDotService::new(cfg(2, 100), AsyncOptions::default()).unwrap();
+        let x = crate::runtime::arena::AlignedVec::copy_from(&[1.0, 2.0]);
+        let y = crate::runtime::arena::AlignedVec::copy_from(&[1.0]);
+        let bad = SharedInput::Dot(Arc::new(x), Arc::new(y));
+        let err = asy.submit(bad).unwrap_err();
+        assert!(matches!(err, BackendError::ShapeMismatch { .. }));
+        assert_eq!(asy.stats().enqueued, 0);
+    }
+
+    #[test]
+    fn shutdown_resolves_outstanding_tickets() {
+        let asy = AsyncDotService::new(cfg(2, 256), AsyncOptions::default()).unwrap();
+        let handles: Vec<(ResponseHandle, SharedInput)> = (0..24)
+            .map(|i| {
+                let input = shared_dot(64 + (i % 5) * 300, 7000 + i as u64);
+                (asy.submit(input.clone()).unwrap(), input)
+            })
+            .collect();
+        drop(asy); // close + drain + join
+        for (h, input) in handles {
+            let sync = DotService::new(cfg(2, 256)).unwrap();
+            let want = sync.submit(&input.view()).unwrap();
+            let got = h.wait().expect("shutdown must drain, not drop, requests");
+            assert_eq!(got.value.to_bits(), want.value.to_bits());
+        }
+    }
+
+    #[test]
+    fn submit_after_shutdown_fails_cleanly() {
+        let asy = AsyncDotService::new(cfg(1, 100), AsyncOptions::default()).unwrap();
+        asy.queue.close();
+        let err = asy.submit(shared_dot(16, 3)).unwrap_err();
+        assert!(matches!(err, BackendError::Runtime(_)));
+    }
+
+    #[test]
+    fn no_overlap_mode_serves_identically() {
+        let opts = AsyncOptions {
+            overlap: false,
+            ..AsyncOptions::default()
+        };
+        let asy = AsyncDotService::new(cfg(2, 512), opts).unwrap();
+        let inputs: Vec<SharedInput> = (0..8)
+            .map(|i| shared_dot(100 + i * 130, 40 + i as u64))
+            .collect();
+        let got = asy.submit_wait(&inputs).unwrap();
+        let sync = DotService::new(cfg(2, 512)).unwrap();
+        for (input, g) in inputs.iter().zip(&got) {
+            let want = sync.submit(&input.view()).unwrap();
+            assert_eq!(want.value.to_bits(), g.value.to_bits());
+        }
+        assert_eq!(asy.stats().completed, 8);
+    }
+}

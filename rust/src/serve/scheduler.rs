@@ -87,9 +87,18 @@ impl BatchScheduler {
     /// Split a batch into the fused and sharded index sets, preserving
     /// arrival order within each set.
     pub fn plan(&self, inputs: &[KernelInput<'_>]) -> DispatchPlan {
+        self.plan_lens(inputs.iter().map(KernelInput::updates))
+    }
+
+    /// [`Self::plan`] over request lengths alone — what the async
+    /// dispatcher uses on a drained arrival batch (it holds owned
+    /// requests, not borrowed [`KernelInput`]s). The classification is the
+    /// same function of `n` either way, which is half of the async == sync
+    /// bit-parity argument.
+    pub fn plan_lens(&self, lens: impl IntoIterator<Item = usize>) -> DispatchPlan {
         let mut plan = DispatchPlan::default();
-        for (i, input) in inputs.iter().enumerate() {
-            if self.shards(input.updates()) {
+        for (i, n) in lens.into_iter().enumerate() {
+            if self.shards(n) {
                 plan.sharded.push(i);
             } else {
                 plan.fused.push(i);
@@ -135,5 +144,21 @@ mod tests {
         assert_eq!(plan.sharded, vec![1, 3]);
         assert_eq!(plan.len(), 5);
         assert!(!plan.is_empty());
+    }
+
+    #[test]
+    fn plan_lens_matches_plan() {
+        let a = vec![1.0; 8];
+        let b = vec![2.0; 200];
+        let inputs = [
+            KernelInput::Sum(&a),
+            KernelInput::Dot(&b, &b),
+            KernelInput::Sum(&b),
+            KernelInput::Dot(&a, &a),
+        ];
+        let s = BatchScheduler::new(100);
+        let by_input = s.plan(&inputs);
+        let by_len = s.plan_lens(inputs.iter().map(|i| i.updates()));
+        assert_eq!(by_input, by_len);
     }
 }

@@ -225,13 +225,13 @@ fn host_experiment_honors_backend_selector() {
 #[test]
 fn serving_layer_end_to_end() {
     use kahan_ecm::runtime::backend::ImplStyle;
-    use kahan_ecm::serve::{run_load, DotService, LoadMode, MixEntry, ServeConfig};
+    use kahan_ecm::serve::{run_load, DotService, LoadMode, MixEntry, ServeConfig, ThresholdMode};
 
     let service = DotService::new(ServeConfig {
         threads: 2,
         style: ImplStyle::SimdLanes,
         compensated: true,
-        shard_threshold: Some(4096),
+        shard_threshold: ThresholdMode::Fixed(4096),
         freq_ghz: 3.0,
     })
     .unwrap();
@@ -249,6 +249,26 @@ fn serving_layer_end_to_end() {
     assert_eq!(stats.requests, 96);
     assert_eq!(stats.fused, r.fused);
     assert_eq!(stats.sharded, r.sharded);
+    // The same engine through the asynchronous submission queue: identical
+    // request stream, identical traffic split, bit-identical checksum.
+    use kahan_ecm::serve::{run_load_async, AsyncDotService, AsyncOptions, OperandPool};
+    let pipeline = AsyncDotService::new(
+        ServeConfig {
+            threads: 2,
+            style: ImplStyle::SimdLanes,
+            compensated: true,
+            shard_threshold: ThresholdMode::Fixed(4096),
+            freq_ghz: 3.0,
+        },
+        AsyncOptions::default(),
+    )
+    .unwrap();
+    let operands = OperandPool::generate(&mix, 5, pipeline.service().pool());
+    let qr = run_load_async(&pipeline, &mix, &operands, 96, 20_000.0, 5).unwrap();
+    assert_eq!(qr.load.checksum.to_bits(), r.checksum.to_bits());
+    assert_eq!((qr.load.fused, qr.load.sharded), (r.fused, r.sharded));
+    assert!(qr.max_queue_depth <= qr.queue_depth);
+    assert!(qr.pool_utilization > 0.0);
     // The serve experiment is registered and runs off this same engine.
     let defs = find("serve");
     assert_eq!(defs.len(), 1);

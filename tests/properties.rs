@@ -15,7 +15,9 @@ use kahan_ecm::runtime::backend::{
 use kahan_ecm::runtime::parallel::{
     compensated_tree_reduce, CACHELINE_F64, ParallelBackend, ThreadPool,
 };
-use kahan_ecm::serve::{DotService, ExecPath, ServeConfig};
+use kahan_ecm::serve::{
+    AsyncDotService, AsyncOptions, DotService, ExecPath, ServeConfig, SharedInput, ThresholdMode,
+};
 use kahan_ecm::sim::{self, simulate_core, MeasureOpts};
 use kahan_ecm::util::rng::Rng;
 use kahan_ecm::util::units::Precision;
@@ -614,7 +616,7 @@ fn serving_batched_equals_unbatched_bits() {
             threads,
             style: ImplStyle::SimdLanes,
             compensated: g.bool(),
-            shard_threshold: Some(threshold),
+            shard_threshold: ThresholdMode::Fixed(threshold),
             freq_ghz: 3.0,
         })
         .unwrap();
@@ -667,7 +669,7 @@ fn serving_sharded_matches_parallel_backend_bits() {
             threads,
             style: ImplStyle::SimdLanes,
             compensated,
-            shard_threshold: Some(0), // shard everything
+            shard_threshold: ThresholdMode::Fixed(0), // shard everything
             freq_ghz: 3.0,
         })
         .unwrap();
@@ -694,7 +696,7 @@ fn serving_crossover_boundary_exact() {
             threads: 2,
             style: ImplStyle::SimdLanes,
             compensated: true,
-            shard_threshold: Some(threshold),
+            shard_threshold: ThresholdMode::Fixed(threshold),
             freq_ghz: 3.0,
         })
         .unwrap();
@@ -730,7 +732,7 @@ fn serving_deterministic_across_fresh_services() {
         threads: 3,
         style: ImplStyle::SimdLanes,
         compensated: true,
-        shard_threshold: Some(512),
+        shard_threshold: ThresholdMode::Fixed(512),
         freq_ghz: 3.0,
     };
     let a = DotService::new(cfg()).unwrap().submit_batch(&inputs).unwrap();
@@ -738,5 +740,179 @@ fn serving_deterministic_across_fresh_services() {
     for (ra, rb) in a.iter().zip(&b) {
         assert_eq!(ra.value.to_bits(), rb.value.to_bits(), "n={}", ra.n);
         assert_eq!(ra.path, rb.path);
+    }
+}
+
+fn serve_cfg(threads: usize, threshold: usize) -> ServeConfig {
+    ServeConfig {
+        threads,
+        style: ImplStyle::SimdLanes,
+        compensated: true,
+        shard_threshold: ThresholdMode::Fixed(threshold),
+        freq_ghz: 3.0,
+    }
+}
+
+/// The tentpole determinism contract: results submitted through the async
+/// pipeline are bit-identical to the synchronous `submit_batch` at a fixed
+/// thread count, for mixed fused/sharded (dot and sum) workloads, under at
+/// least two arrival interleavings — all-at-once (the dispatcher drains
+/// arbitrary arrival batches) and strictly one-at-a-time with a zero
+/// batching window (every request its own batch). Only completion order
+/// may vary; values may not.
+#[test]
+fn async_serving_bit_matches_sync_under_two_interleavings() {
+    let mut rng = Rng::new(0xA57);
+    let threshold = 2048usize;
+    let data: Vec<(Vec<f64>, Vec<f64>)> = [17usize, 600, 2047, 2048, 2049, 7000, 64]
+        .iter()
+        .map(|&n| {
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            (x, y)
+        })
+        .collect();
+    let inputs: Vec<KernelInput<'_>> = data
+        .iter()
+        .enumerate()
+        .map(|(i, (x, y))| {
+            if i % 3 == 0 {
+                KernelInput::Sum(x)
+            } else {
+                KernelInput::Dot(x, y)
+            }
+        })
+        .collect();
+    let shared: Vec<SharedInput> = data
+        .iter()
+        .enumerate()
+        .map(|(i, (x, y))| {
+            if i % 3 == 0 {
+                SharedInput::sum(x)
+            } else {
+                SharedInput::dot(x, y)
+            }
+        })
+        .collect();
+    for threads in [1usize, 2, 3] {
+        let sync = DotService::new(serve_cfg(threads, threshold)).unwrap();
+        let want = sync.submit_batch(&inputs).unwrap();
+        // Interleaving 1: submit everything, then wait in submission
+        // order (arrival batches form however the dispatcher drains).
+        let burst =
+            AsyncDotService::new(serve_cfg(threads, threshold), AsyncOptions::default()).unwrap();
+        let got = burst.submit_wait(&shared).unwrap();
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.value.to_bits(), g.value.to_bits(), "burst n={} T={threads}", w.n);
+            assert_eq!(w.path, g.path);
+        }
+        // Interleaving 2: one request at a time, each waited before the
+        // next is submitted, through a zero-window pipeline (every
+        // request is its own arrival batch).
+        let single = AsyncDotService::new(
+            serve_cfg(threads, threshold),
+            AsyncOptions {
+                batch_window: std::time::Duration::ZERO,
+                batch_max: 1,
+                ..AsyncOptions::default()
+            },
+        )
+        .unwrap();
+        for (w, input) in want.iter().zip(&shared) {
+            let g = single.submit(input.clone()).unwrap().wait().unwrap();
+            assert_eq!(w.value.to_bits(), g.value.to_bits(), "single n={} T={threads}", w.n);
+            assert_eq!(w.path, g.path);
+        }
+    }
+}
+
+/// The backpressure bound is real: submitting far more requests than the
+/// queue depth never grows the queue past the depth (submit blocks
+/// instead), and everything still completes exactly once.
+#[test]
+fn async_bounded_queue_depth_bounds_memory() {
+    let depth = 4usize;
+    let asy = AsyncDotService::new(
+        serve_cfg(2, usize::MAX),
+        AsyncOptions {
+            queue_depth: depth,
+            ..AsyncOptions::default()
+        },
+    )
+    .unwrap();
+    let mut rng = Rng::new(0xBACC);
+    let x: Vec<f64> = (0..20_000).map(|_| rng.normal()).collect();
+    let y: Vec<f64> = (0..20_000).map(|_| rng.normal()).collect();
+    let input = SharedInput::dot(&x, &y);
+    let total = depth * 16;
+    let handles: Vec<_> = (0..total)
+        .map(|_| asy.submit(input.clone()).unwrap())
+        .collect();
+    let want = asy.service().submit(&input.view()).unwrap();
+    for h in handles {
+        let r = h.wait().unwrap();
+        assert_eq!(r.value.to_bits(), want.value.to_bits());
+    }
+    let stats = asy.stats();
+    assert_eq!(stats.enqueued, total as u64);
+    assert_eq!(stats.completed, total as u64);
+    assert!(
+        stats.max_queue_depth <= depth,
+        "queue grew past its depth: {} > {depth}",
+        stats.max_queue_depth
+    );
+}
+
+/// Ticket life cycle: `try_wait` polls without consuming, `wait` resolves
+/// exactly once with the same bits, and dropping handles without waiting
+/// neither blocks shutdown nor loses the requests (they complete and are
+/// counted).
+#[test]
+fn async_tickets_poll_resolve_once_and_survive_unwaited_drops() {
+    let mut rng = Rng::new(0x71C7);
+    let x: Vec<f64> = (0..1500).map(|_| rng.normal()).collect();
+    let y: Vec<f64> = (0..1500).map(|_| rng.normal()).collect();
+    let input = SharedInput::dot(&x, &y);
+    let asy = AsyncDotService::new(serve_cfg(2, 512), AsyncOptions::default()).unwrap();
+    let want = asy.service().submit(&input.view()).unwrap();
+    let handle = asy.submit(input.clone()).unwrap();
+    let peeked = loop {
+        if let Some(r) = handle.try_wait() {
+            break r.unwrap();
+        }
+        std::thread::yield_now();
+    };
+    assert_eq!(peeked.value.to_bits(), want.value.to_bits());
+    let waited = handle.wait().unwrap();
+    assert_eq!(waited.value.to_bits(), want.value.to_bits());
+    // Fire-and-forget: handles dropped immediately, requests still served.
+    for _ in 0..12 {
+        drop(asy.submit(input.clone()).unwrap());
+    }
+    drop(asy); // drains in-flight work and joins the dispatcher
+}
+
+/// Shutdown drains: requests accepted before the service is dropped are
+/// executed, their tickets resolve afterwards, and late submits fail
+/// cleanly instead of hanging.
+#[test]
+fn async_shutdown_drains_accepted_work() {
+    let mut rng = Rng::new(0xD0D0);
+    let sync = DotService::new(serve_cfg(2, 1024)).unwrap();
+    let asy = AsyncDotService::new(serve_cfg(2, 1024), AsyncOptions::default()).unwrap();
+    let mut expected = Vec::new();
+    let mut handles = Vec::new();
+    for i in 0..16 {
+        let n = 200 + (i % 4) * 700;
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        expected.push(sync.submit(&KernelInput::Dot(&x, &y)).unwrap());
+        handles.push(asy.submit(SharedInput::dot(&x, &y)).unwrap());
+    }
+    drop(asy);
+    for (want, h) in expected.iter().zip(handles) {
+        let got = h.wait().expect("accepted requests must drain on shutdown");
+        assert_eq!(got.value.to_bits(), want.value.to_bits());
+        assert_eq!(got.path, want.path);
     }
 }

@@ -1,0 +1,135 @@
+#!/usr/bin/env python3
+"""Compare two BENCH_summary.json perf-trajectory artifacts.
+
+Usage:
+    python3 tools/compare_bench.py --baseline PREV.json --current CUR.json \
+        --out BENCH_compare.json [--strict]
+
+Compares the `headline` metrics of the current run against a previous-run
+baseline with *noise-aware relative thresholds*: the CI smoke runners are
+shared machines, so single-run swings of tens of percent are ordinary and
+only large, direction-aware moves are called regressions. The verdict is
+written to a machine-readable BENCH_compare.json and summarized on stdout.
+
+Exit status: 0 unless --strict is given and at least one metric regressed.
+A missing/unreadable baseline (first run, expired artifact) is not an
+error: the verdict is "no-baseline" and the exit status is 0, so the CI
+step degrades gracefully.
+"""
+
+import argparse
+import json
+import sys
+
+# metric -> (direction, relative tolerance). Tolerances are deliberately
+# loose: a shared smoke runner's timing wobbles, and this gate exists to
+# catch step-function regressions (a kernel falling off its fast path, a
+# scheduler serializing), not single-digit-percent drift.
+METRICS = {
+    "native_best_mflops": ("higher", 0.35),
+    "native_best_kahan_dot_mflops": ("higher", 0.35),
+    "scaling_kahan_dot_simd_peak_mflops": ("higher", 0.35),
+    "serving_reqs_per_s": ("higher", 0.40),
+    "serving_mflops": ("higher", 0.40),
+    "serving_p99_us": ("lower", 0.50),
+    "serving_async_p99_us": ("lower", 0.50),
+    "serving_async_reqs_per_s": ("higher", 0.40),
+    "serving_measured_p1_mflops": ("higher", 0.35),
+}
+
+
+def load_summary(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+    if doc.get("schema") != "kahan-ecm-bench-summary/v1":
+        return None
+    return doc
+
+
+def compare_metric(name, base, cur):
+    direction, tolerance = METRICS[name]
+    if base <= 0:
+        return {"metric": name, "baseline": base, "current": cur,
+                "ratio": None, "verdict": "skipped"}
+    ratio = cur / base
+    if direction == "higher":
+        if ratio < 1.0 - tolerance:
+            verdict = "regressed"
+        elif ratio > 1.0 + tolerance:
+            verdict = "improved"
+        else:
+            verdict = "ok"
+    else:  # lower is better
+        if ratio > 1.0 + tolerance:
+            verdict = "regressed"
+        elif ratio < 1.0 - tolerance:
+            verdict = "improved"
+        else:
+            verdict = "ok"
+    return {"metric": name, "baseline": base, "current": cur,
+            "ratio": ratio, "verdict": verdict}
+
+
+def main(argv):
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--baseline", required=True,
+                    help="previous-run BENCH_summary.json (may be missing)")
+    ap.add_argument("--current", required=True,
+                    help="this run's BENCH_summary.json")
+    ap.add_argument("--out", required=True,
+                    help="write the BENCH_compare.json verdict here")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero when any metric regressed "
+                         "(default: warn only — smoke runners are shared)")
+    args = ap.parse_args(argv)
+
+    current = load_summary(args.current)
+    if current is None:
+        raise SystemExit(f"compare_bench: FAIL: cannot read current summary "
+                         f"{args.current}")
+    baseline = load_summary(args.baseline)
+
+    result = {
+        "schema": "kahan-ecm-bench-compare/v1",
+        "baseline_path": args.baseline,
+        "comparisons": [],
+    }
+    if baseline is None:
+        result["verdict"] = "no-baseline"
+        print(f"compare_bench: no usable baseline at {args.baseline}; "
+              f"recording current headline only")
+    else:
+        base_h, cur_h = baseline["headline"], current["headline"]
+        for name in sorted(METRICS):
+            if name in base_h and name in cur_h:
+                result["comparisons"].append(
+                    compare_metric(name, base_h[name], cur_h[name]))
+        verdicts = {c["verdict"] for c in result["comparisons"]}
+        if "regressed" in verdicts:
+            result["verdict"] = "regressed"
+        elif not result["comparisons"]:
+            result["verdict"] = "no-overlap"
+        else:
+            result["verdict"] = "ok"
+        for c in result["comparisons"]:
+            ratio = "-" if c["ratio"] is None else f"{c['ratio']:.3f}x"
+            print(f"{c['verdict']:>9s}  {c['metric']:<40s} "
+                  f"{c['baseline']:>12.1f} -> {c['current']:>12.1f}  ({ratio})")
+        print(f"compare_bench: overall verdict: {result['verdict']}")
+    result["current_headline"] = current["headline"]
+
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1, sort_keys=True)
+        f.write("\n")
+    if args.strict and result["verdict"] == "regressed":
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,335 @@
+#!/usr/bin/env python3
+"""Synthetic-document tests for validate_bench.py and compare_bench.py.
+
+Run directly (CI does): python3 tools/test_bench_tools.py
+
+Each synthetic document is the minimal valid instance of its schema; the
+tests then break one invariant at a time and require the validator to
+reject it. This is what keeps the Rust emitters, the validators and CI
+honest with each other: a schema change that forgets one of the three
+shows up here or in the smoke job, not in a silently-green pipeline.
+"""
+
+import copy
+import json
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import compare_bench  # noqa: E402
+import validate_bench  # noqa: E402
+
+
+def synth_native():
+    kernels = ["naive_dot.scalar", "kahan_dot.simd", "kahan_sum.unroll8"]
+    return {
+        "backend": "native",
+        "avx2": False,
+        "avx512": False,
+        "freq_ghz": 3.0,
+        "freq_source": "cpuinfo",
+        "warmup": 1,
+        "reps": 3,
+        "results": [
+            {"kernel": k, "n": 1024, "ws_bytes": 16384, "flops": 5120,
+             "ns_min": 500.0, "ns_median": 600.0, "mflops": 1000.0,
+             "gups": 2.0, "gbs": 32.0, "cycles_per_flop": 0.5,
+             "cycles_per_update": 1.5}
+            for k in kernels
+        ],
+    }
+
+
+def synth_scaling(tmax=2):
+    curves = []
+    for k in ["naive_dot.simd", "kahan_dot.simd"]:
+        curves.append({
+            "kernel": k,
+            "n": 262144,
+            "points": [
+                {"threads": t, "ns_min": 1000.0, "ns_median": 1100.0,
+                 "mflops": 800.0 * t, "mflops_best": 900.0 * t,
+                 "gups": 1.0 * t, "gbs": 16.0 * t,
+                 "model_gups": 1.1 * t, "model_mflops": 850.0 * t}
+                for t in range(1, tmax + 1)
+            ],
+        })
+    return {
+        "backend": "native-mt",
+        "avx2": False,
+        "avx512": False,
+        "threads_max": tmax,
+        "n": 262144,
+        "freq_ghz": 3.0,
+        "freq_source": "cpuinfo",
+        "warmup": 1,
+        "reps": 3,
+        "machine_model": "HOST",
+        "model_bw_gbs": 20.0,
+        "scaling": curves,
+        "sweep": [],
+    }
+
+
+def queue_row(p99, checksum, fused, sharded, requests):
+    return {
+        "requests": requests,
+        "fused": fused,
+        "sharded": sharded,
+        "latency_ns": {"p50": p99 * 0.4, "p90": p99 * 0.8,
+                       "p99": p99, "max": p99 * 1.5},
+        "busy_ns": 4.0e7,
+        "elapsed_ns": 6.0e7,
+        "mflops": 900.0,
+        "gups": 1.5,
+        "reqs_per_s": 40000.0,
+        "checksum": checksum,
+        "max_queue_depth": 17,
+        "dispatches": 12,
+        "arrival_batches": 9,
+        "pool_utilization": 0.8,
+    }
+
+
+def synth_serving():
+    requests, fused, sharded, checksum = 256, 229, 27, 123.456
+    return {
+        "subsystem": "serve",
+        "backend": "native-mt",
+        "kernel": "kahan_dot.simd",
+        "threads": 2,
+        "compensated": True,
+        "shard_threshold": 65536,
+        "threshold_source": "override",
+        "mode": "closed",
+        "rate_rps": None,
+        "requests": requests,
+        "batch": 32,
+        "batches": 8,
+        "seed": 1,
+        "freq_ghz": 3.0,
+        "freq_source": "cpuinfo",
+        "mix": [{"n": 1024, "weight": 0.6}, {"n": 262144, "weight": 0.4}],
+        "fused": fused,
+        "sharded": sharded,
+        "latency_ns": {"p50": 5.0e4, "p90": 1.0e5, "p99": 2.0e5, "max": 3.0e5},
+        "busy_ns": 5.0e6,
+        "elapsed_ns": 5.0e6,
+        "updates": 100000,
+        "flops": 500000,
+        "mflops": 1000.0,
+        "gups": 2.0,
+        "reqs_per_s": 50000.0,
+        "checksum": checksum,
+        "queue": {"depth": 64, "batch_window_us": 100.0, "batch_max": 32},
+        "open_loop": {
+            "rate_rps": 35000.0,
+            "sync": queue_row(4.0e6, checksum, fused, sharded, requests),
+            "async": queue_row(2.5e6, checksum, fused, sharded, requests),
+        },
+        "async_p99_ok": True,
+        "calibration": {
+            "measured": {"p1_gups": 1.8, "p1_mflops": 9000.0, "p1_n": 262144,
+                         "dispatch_overhead_ns": 8000.0, "crossover": 65536},
+            "model": {"p1_gups": 1.5, "dispatch_overhead_ns": 10000.0,
+                      "crossover": 40960},
+        },
+    }
+
+
+def expect_ok(validator, doc, label, *extra):
+    note = validator(doc, *extra)
+    assert isinstance(note, str) and note, label
+    print(f"ok  {label}: {note}")
+
+
+def expect_fail(validator, doc, label, *extra):
+    try:
+        validator(doc, *extra)
+    except (AssertionError, KeyError):
+        print(f"ok  {label} (rejected as expected)")
+        return
+    raise SystemExit(f"FAIL: {label}: validator accepted a broken document")
+
+
+def mutate(doc, fn):
+    d = copy.deepcopy(doc)
+    fn(d)
+    return d
+
+
+def test_validators():
+    expect_ok(validate_bench.validate_native, synth_native(), "native valid")
+    expect_ok(validate_bench.validate_scaling, synth_scaling(), "scaling valid")
+    serving = synth_serving()
+    expect_ok(validate_bench.validate_serving, serving, "serving valid")
+    expect_ok(validate_bench.validate_serving, serving,
+              "serving valid under smoke check", True)
+
+    def no_cal(d):
+        del d["calibration"]
+    expect_ok(validate_bench.validate_serving, mutate(serving, no_cal),
+              "serving valid without calibration")
+
+    def checksum_drift(d):
+        d["open_loop"]["async"]["checksum"] += 1.0
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, checksum_drift), "async checksum drift")
+
+    def depth_overflow(d):
+        d["open_loop"]["sync"]["max_queue_depth"] = d["queue"]["depth"] + 1
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, depth_overflow), "queue high-water > depth")
+
+    def missing_queue(d):
+        del d["queue"]
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, missing_queue), "missing queue block")
+
+    def missing_async_row(d):
+        del d["open_loop"]["async"]
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, missing_async_row), "missing async row")
+
+    def slow_async(d):
+        lat = d["open_loop"]["async"]["latency_ns"]
+        lat["p99"] = d["open_loop"]["sync"]["latency_ns"]["p99"] * 2.0
+        lat["max"] = lat["p99"] * 1.5
+    # Warn-only mode accepts it; the smoke check must reject it.
+    expect_ok(validate_bench.validate_serving, mutate(serving, slow_async),
+              "slow async accepted without smoke check")
+    expect_fail(validate_bench.validate_serving, mutate(serving, slow_async),
+                "slow async rejected by smoke check", True)
+
+    def calibrated_without_block(d):
+        d["threshold_source"] = "calibrated"
+        del d["calibration"]
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, calibrated_without_block),
+                "calibrated source without calibration block")
+
+    def bad_overhead(d):
+        d["calibration"]["measured"]["dispatch_overhead_ns"] = 0
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, bad_overhead), "non-positive overhead")
+
+    def util_overflow(d):
+        d["open_loop"]["async"]["pool_utilization"] = 1.5
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, util_overflow), "utilization > 1")
+
+    # threshold_source "calibrated" with the block present is fine.
+    def calibrated(d):
+        d["threshold_source"] = "calibrated"
+    expect_ok(validate_bench.validate_serving, mutate(serving, calibrated),
+              "calibrated threshold source")
+
+
+def write_docs(tmp, docs):
+    paths = []
+    for name, doc in docs.items():
+        path = os.path.join(tmp, name)
+        with open(path, "w") as f:
+            json.dump(doc, f)
+        paths.append(path)
+    return paths
+
+
+def test_merge_and_summary(tmp):
+    paths = write_docs(tmp, {
+        "BENCH_native.json": synth_native(),
+        "BENCH_scaling.json": synth_scaling(),
+        "BENCH_serving.json": synth_serving(),
+    })
+    merged = os.path.join(tmp, "BENCH_summary.json")
+    rc = validate_bench.main(
+        ["--expect-scaling-threads", "2", "--smoke-async-check",
+         "--merge", merged] + paths)
+    assert rc == 0
+    with open(merged) as f:
+        summary = json.load(f)
+    h = summary["headline"]
+    for key in ("serving_async_p99_us", "serving_sync_p99_us",
+                "serving_measured_p1_mflops", "serving_reqs_per_s"):
+        assert key in h, f"missing headline metric {key}: {sorted(h)}"
+    # Re-validating the merged document must pass too.
+    rc = validate_bench.main([merged])
+    assert rc == 0
+    print("ok  merge + headline + re-validate")
+    return merged
+
+
+def test_compare(tmp, merged):
+    out = os.path.join(tmp, "BENCH_compare.json")
+    # Identical runs: verdict ok.
+    rc = compare_bench.main(["--baseline", merged, "--current", merged,
+                             "--out", out])
+    assert rc == 0
+    with open(out) as f:
+        verdict = json.load(f)
+    assert verdict["verdict"] == "ok", verdict["verdict"]
+    assert verdict["comparisons"], "no metrics compared"
+    assert all(c["verdict"] == "ok" for c in verdict["comparisons"])
+    print("ok  compare identical -> ok")
+
+    # A big serving regression: warn by default, fail under --strict.
+    with open(merged) as f:
+        worse = json.load(f)
+    worse["headline"]["serving_reqs_per_s"] *= 0.4
+    worse["headline"]["serving_p99_us"] *= 3.0
+    worse_path = os.path.join(tmp, "BENCH_summary_worse.json")
+    with open(worse_path, "w") as f:
+        json.dump(worse, f)
+    rc = compare_bench.main(["--baseline", merged, "--current", worse_path,
+                             "--out", out])
+    assert rc == 0, "default mode must warn, not fail"
+    with open(out) as f:
+        verdict = json.load(f)
+    assert verdict["verdict"] == "regressed"
+    regressed = {c["metric"] for c in verdict["comparisons"]
+                 if c["verdict"] == "regressed"}
+    assert {"serving_reqs_per_s", "serving_p99_us"} <= regressed, regressed
+    rc = compare_bench.main(["--baseline", merged, "--current", worse_path,
+                             "--out", out, "--strict"])
+    assert rc == 1, "--strict must fail on a regression"
+    print("ok  compare regression -> warn / strict-fail")
+
+    # Small drift inside the noise band stays ok.
+    with open(merged) as f:
+        drift = json.load(f)
+    drift["headline"]["serving_reqs_per_s"] *= 0.9
+    drift_path = os.path.join(tmp, "BENCH_summary_drift.json")
+    with open(drift_path, "w") as f:
+        json.dump(drift, f)
+    rc = compare_bench.main(["--baseline", merged, "--current", drift_path,
+                             "--out", out, "--strict"])
+    assert rc == 0
+    with open(out) as f:
+        verdict = json.load(f)
+    assert verdict["verdict"] == "ok"
+    print("ok  compare noise-band drift -> ok")
+
+    # Missing baseline degrades gracefully.
+    rc = compare_bench.main(["--baseline", os.path.join(tmp, "nope.json"),
+                             "--current", merged, "--out", out])
+    assert rc == 0
+    with open(out) as f:
+        verdict = json.load(f)
+    assert verdict["verdict"] == "no-baseline"
+    assert verdict["current_headline"]
+    print("ok  compare missing baseline -> no-baseline")
+
+
+def main():
+    test_validators()
+    with tempfile.TemporaryDirectory() as tmp:
+        merged = test_merge_and_summary(tmp)
+        test_compare(tmp, merged)
+    print("all bench-tool tests passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
