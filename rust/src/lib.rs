@@ -68,6 +68,15 @@
 //! open/closed-loop load generators, emits sync-vs-async rows plus queue
 //! and pool-utilization stats in `BENCH_serving.json`, and CI gates the
 //! perf trajectory run-over-run via `tools/compare_bench.py`).
+//! [`serve::NetServer`] (`serve-net` in the CLI) puts the same pipeline on
+//! a TCP socket: a dependency-free length-prefixed binary protocol
+//! ([`serve::codec`]; normative spec in `docs/PROTOCOL.md`) carries
+//! operands and results as IEEE-754 bit patterns, per-connection
+//! reader/writer halves stream responses in completion order correlated by
+//! request id, and queue backpressure surfaces as a typed BUSY frame — so
+//! the bit-parity contract extends across the socket (`serve-bench` adds a
+//! loopback `wire` row to `BENCH_serving.json` and hard-fails on checksum
+//! divergence; the dataflow narrative is `docs/ARCHITECTURE.md`).
 //!
 //! The [`harness`] module regenerates every table and figure of the paper;
 //! [`coordinator`] wires it all into the `kahan-ecm` CLI.

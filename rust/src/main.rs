@@ -8,6 +8,8 @@
 //!                              measurement vs model -> JSON
 //!   serve-bench                batching/sharding serving layer under an
 //!                              open/closed-loop request load -> JSON
+//!   serve-net                  TCP wire front-end over the async serving
+//!                              pipeline (protocol: docs/PROTOCOL.md)
 //!   ecm                        print ECM inputs/predictions for one config
 //!   sweep                      print a single-core sweep for one config
 //!   custom --config FILE       run the ECM analysis on a user machine
@@ -37,8 +39,9 @@ use kahan_ecm::runtime::hostbench::{
 };
 use kahan_ecm::runtime::parallel::ThreadPool;
 use kahan_ecm::serve::{
-    calibrate, default_mix, parse_mix, run_load, run_load_async, AsyncDotService, AsyncLoadReport,
-    AsyncOptions, Calibration, DotService, LoadMode, OperandPool, ServeConfig, ThresholdMode,
+    calibrate, codec, default_mix, parse_mix, run_load, run_load_async, run_load_wire,
+    AsyncDotService, AsyncLoadReport, AsyncOptions, Calibration, DotService, LoadMode, LoadReport,
+    NetServer, OperandPool, ServeConfig, ThresholdMode, WireLoadReport,
 };
 use kahan_ecm::sim::{self, MeasureOpts};
 use kahan_ecm::util::cli::Spec;
@@ -56,6 +59,7 @@ fn usage() -> String {
          \x20 bench-native              benchmark the native kernel ladder -> JSON\n\
          \x20 bench-scale               measured thread-scaling vs ECM model -> JSON\n\
          \x20 serve-bench               serving layer under request load -> JSON\n\
+         \x20 serve-net                 TCP wire front-end (docs/PROTOCOL.md)\n\
          \x20 ecm                       ECM analysis for one machine x kernel\n\
          \x20 sweep                     simulated single-core working-set sweep\n\
          \x20 custom                    ECM analysis on a machine config file\n\
@@ -68,6 +72,8 @@ fn usage() -> String {
     s.push_str(&bench_scale_spec().help_text());
     s.push_str("\nOPTIONS (serve-bench):\n");
     s.push_str(&serve_bench_spec().help_text());
+    s.push_str("\nOPTIONS (serve-net):\n");
+    s.push_str(&serve_net_spec().help_text());
     s.push_str("\nOPTIONS (ecm/sweep):\n");
     s.push_str(&ecm_spec().help_text());
     s
@@ -125,7 +131,27 @@ fn serve_bench_spec() -> Spec {
         .opt("seed", "request-stream seed (default: 1)")
         .flag("naive", "serve the naive dot instead of the compensated default")
         .opt("freq-ghz", "core clock for the model crossover (default: detected)")
+        .opt(
+            "wire-connections",
+            "wire loadgen client connections, 0 skips the wire run (default: 4, quick: 2)",
+        )
+        .opt(
+            "wire-addr",
+            "drive an already-running serve-net server instead of a private loopback one",
+        )
         .flag("quick", "tiny run for CI smoke")
+}
+
+fn serve_net_spec() -> Spec {
+    Spec::new()
+        .opt("addr", "listen address (default: 127.0.0.1:4990; port 0 picks a free port)")
+        .opt("threads", "service worker count (default: all cores)")
+        .opt("threshold", "shard requests with n >= N (default: model-derived crossover)")
+        .opt("queue-depth", "async submission-queue depth (default: 256)")
+        .opt("batch-window-us", "async batching window in microseconds (default: 100)")
+        .opt("batch", "queue batching cap per dispatch (default: 64)")
+        .flag("naive", "serve the naive dot instead of the compensated default")
+        .opt("freq-ghz", "core clock for the model crossover (default: detected)")
 }
 
 fn ecm_spec() -> Spec {
@@ -599,35 +625,68 @@ fn crossover_json(n: usize) -> Json {
     }
 }
 
-/// One queue-mode open-loop row (shared by the `sync` and `async` sides of
-/// the side-by-side comparison in `BENCH_serving.json`).
-fn queue_row_json(r: &AsyncLoadReport) -> Json {
+/// The open-loop row fields shared by the `sync`/`async` queue rows and the
+/// `wire` row in `BENCH_serving.json` (the wire row adds a few of its own
+/// on top — see [`wire_row_json`]).
+fn load_row_obj(
+    load: &LoadReport,
+    max_queue_depth: usize,
+    dispatches: u64,
+    arrival_batches: u64,
+    pool_utilization: f64,
+) -> BTreeMap<String, Json> {
     let mut lat = BTreeMap::new();
-    lat.insert("p50".to_string(), Json::Num(r.load.latency_p50_ns));
-    lat.insert("p90".to_string(), Json::Num(r.load.latency_p90_ns));
-    lat.insert("p99".to_string(), Json::Num(r.load.latency_p99_ns));
-    lat.insert("max".to_string(), Json::Num(r.load.latency_max_ns));
+    lat.insert("p50".to_string(), Json::Num(load.latency_p50_ns));
+    lat.insert("p90".to_string(), Json::Num(load.latency_p90_ns));
+    lat.insert("p99".to_string(), Json::Num(load.latency_p99_ns));
+    lat.insert("max".to_string(), Json::Num(load.latency_max_ns));
     let mut obj = BTreeMap::new();
-    obj.insert("requests".to_string(), Json::Num(r.load.requests as f64));
-    obj.insert("fused".to_string(), Json::Num(r.load.fused as f64));
-    obj.insert("sharded".to_string(), Json::Num(r.load.sharded as f64));
+    obj.insert("requests".to_string(), Json::Num(load.requests as f64));
+    obj.insert("fused".to_string(), Json::Num(load.fused as f64));
+    obj.insert("sharded".to_string(), Json::Num(load.sharded as f64));
     obj.insert("latency_ns".to_string(), Json::Obj(lat));
-    obj.insert("busy_ns".to_string(), Json::Num(r.load.busy_ns));
-    obj.insert("elapsed_ns".to_string(), Json::Num(r.load.elapsed_ns));
-    obj.insert("mflops".to_string(), Json::Num(r.load.mflops));
-    obj.insert("gups".to_string(), Json::Num(r.load.gups));
-    obj.insert("reqs_per_s".to_string(), Json::Num(r.load.reqs_per_s));
-    obj.insert("checksum".to_string(), Json::Num(r.load.checksum));
-    obj.insert("max_queue_depth".to_string(), Json::Num(r.max_queue_depth as f64));
-    obj.insert("dispatches".to_string(), Json::Num(r.dispatches as f64));
+    obj.insert("busy_ns".to_string(), Json::Num(load.busy_ns));
+    obj.insert("elapsed_ns".to_string(), Json::Num(load.elapsed_ns));
+    obj.insert("mflops".to_string(), Json::Num(load.mflops));
+    obj.insert("gups".to_string(), Json::Num(load.gups));
+    obj.insert("reqs_per_s".to_string(), Json::Num(load.reqs_per_s));
+    obj.insert("checksum".to_string(), Json::Num(load.checksum));
+    obj.insert("max_queue_depth".to_string(), Json::Num(max_queue_depth as f64));
+    obj.insert("dispatches".to_string(), Json::Num(dispatches as f64));
     obj.insert(
         "arrival_batches".to_string(),
-        Json::Num(r.arrival_batches as f64),
+        Json::Num(arrival_batches as f64),
     );
-    obj.insert(
-        "pool_utilization".to_string(),
-        Json::Num(r.pool_utilization),
+    obj.insert("pool_utilization".to_string(), Json::Num(pool_utilization));
+    obj
+}
+
+/// One queue-mode open-loop row (the `sync` and `async` sides of the
+/// side-by-side comparison in `BENCH_serving.json`).
+fn queue_row_json(r: &AsyncLoadReport) -> Json {
+    Json::Obj(load_row_obj(
+        &r.load,
+        r.max_queue_depth,
+        r.dispatches,
+        r.arrival_batches,
+        r.pool_utilization,
+    ))
+}
+
+/// The `wire` row: the same open-loop schema measured through the TCP
+/// front-end, plus the wire-only fields (`connections`, `busy_retries`,
+/// `rate_rps`).
+fn wire_row_json(r: &WireLoadReport) -> Json {
+    let mut obj = load_row_obj(
+        &r.load,
+        r.max_queue_depth,
+        r.dispatches,
+        r.arrival_batches,
+        r.pool_utilization,
     );
+    obj.insert("connections".to_string(), Json::Num(r.connections as f64));
+    obj.insert("busy_retries".to_string(), Json::Num(r.busy_retries as f64));
+    obj.insert("rate_rps".to_string(), Json::Num(r.rate_rps));
     Json::Obj(obj)
 }
 
@@ -852,6 +911,86 @@ fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
         );
     }
 
+    // Wire row: the same open-loop offered load driven through the TCP
+    // front-end (docs/PROTOCOL.md). Unless --wire-addr points at an
+    // external server, a private loopback serve-net instance with the
+    // exact service config is bound on an ephemeral port — in that case
+    // checksum parity with the in-process rows is a hard failure.
+    let wire_connections =
+        match args.opt_parse("wire-connections", if quick { 2usize } else { 4 }) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return ExitCode::FAILURE;
+            }
+        };
+    let wire_report: Option<WireLoadReport> = if wire_connections == 0 {
+        None
+    } else {
+        let opts = AsyncOptions {
+            queue_depth,
+            batch_window: std::time::Duration::from_micros(batch_window_us),
+            batch_max: batch,
+            overlap: true,
+        };
+        let (loopback, wire_addr) = match args.opt("wire-addr") {
+            Some(a) => (None, a.to_string()),
+            None => match NetServer::bind("127.0.0.1:0", cfg.clone(), opts) {
+                Ok(srv) => {
+                    let a = srv.local_addr().to_string();
+                    (Some(srv), a)
+                }
+                Err(e) => {
+                    eprintln!("error: cannot bind the loopback wire server: {e}");
+                    return ExitCode::FAILURE;
+                }
+            },
+        };
+        eprintln!(
+            "serve-bench: wire row at {} req/s over {wire_connections} connection(s) to \
+             {wire_addr}{} ...",
+            fnum(rate, 0),
+            if loopback.is_some() { " (loopback)" } else { "" }
+        );
+        // Operand bytes are a function of the seed alone (pool placement
+        // only affects NUMA locality), so the wire payloads carry exactly
+        // the bytes the in-process rows submitted.
+        let operands = OperandPool::generate(&mix, seed, service.pool());
+        let fpu = service.dot_spec().class.flops_per_update();
+        let w = match run_load_wire(
+            &wire_addr,
+            &mix,
+            &operands,
+            requests,
+            rate,
+            wire_connections,
+            fpu,
+            seed,
+        ) {
+            Ok(w) => w,
+            Err(e) => {
+                eprintln!("error: wire load run failed: {e}");
+                return ExitCode::FAILURE;
+            }
+        };
+        if w.load.checksum.to_bits() != report.checksum.to_bits() {
+            if loopback.is_some() {
+                eprintln!(
+                    "error: wire checksum parity violated: wire {} / batch {}",
+                    w.load.checksum, report.checksum
+                );
+                return ExitCode::FAILURE;
+            }
+            eprintln!(
+                "warning: wire checksum ({}) differs from the local runs ({}) — the external \
+                 server's kernel config, threads or threshold differ from this bench's",
+                w.load.checksum, report.checksum
+            );
+        }
+        drop(loopback);
+        Some(w)
+    };
+
     let mut t = Table::new(["metric", "value"]);
     t.row(["kernel".to_string(), service.dot_spec().id()]);
     t.row(["threads".to_string(), threads.to_string()]);
@@ -883,6 +1022,18 @@ fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
             fnum(r.load.reqs_per_s, 0),
             fnum(r.pool_utilization, 2),
             r.max_queue_depth.to_string(),
+        ]);
+    }
+    if let Some(w) = &wire_report {
+        qt.row([
+            "wire".to_string(),
+            us(w.load.latency_p50_ns),
+            us(w.load.latency_p99_ns),
+            us(w.load.latency_max_ns),
+            fnum(w.load.mflops, 0),
+            fnum(w.load.reqs_per_s, 0),
+            fnum(w.pool_utilization, 2),
+            w.max_queue_depth.to_string(),
         ]);
     }
     print!("{}", qt.to_text());
@@ -956,6 +1107,9 @@ fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
     open_loop.insert("sync".to_string(), queue_row_json(&qsync));
     open_loop.insert("async".to_string(), queue_row_json(&qasync));
     root.insert("open_loop".to_string(), Json::Obj(open_loop));
+    if let Some(w) = &wire_report {
+        root.insert("wire".to_string(), wire_row_json(w));
+    }
     root.insert("async_p99_ok".to_string(), Json::Bool(async_p99_ok));
     if let Some(c) = calibration {
         let mut measured = BTreeMap::new();
@@ -996,7 +1150,122 @@ fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
         fnum(qasync.load.latency_p99_ns / 1e3, 1),
         fnum(qsync.load.latency_p99_ns / 1e3, 1)
     );
+    if let Some(w) = &wire_report {
+        println!(
+            "wire: {} connection(s), p99 {} us, {} req/s, {} BUSY retries",
+            w.connections,
+            fnum(w.load.latency_p99_ns / 1e3, 1),
+            fnum(w.load.reqs_per_s, 0),
+            w.busy_retries
+        );
+    }
     ExitCode::SUCCESS
+}
+
+fn cmd_serve_net(raw: Vec<String>) -> ExitCode {
+    let args = match serve_net_spec().parse(raw) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let avail = ThreadPool::available();
+    let threads = match args.opt_parse("threads", avail) {
+        Ok(t) if t >= 1 => t,
+        Ok(_) => {
+            eprintln!("error: --threads must be >= 1");
+            return ExitCode::FAILURE;
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let threshold = match args.opt("threshold") {
+        Some(v) => match v.parse::<usize>() {
+            Ok(t) => Some(t),
+            Err(_) => {
+                eprintln!("error: --threshold expects a non-negative integer");
+                return ExitCode::FAILURE;
+            }
+        },
+        None => None,
+    };
+    let queue_depth = match args.opt_parse("queue-depth", 256usize) {
+        Ok(v) if v >= 1 => v,
+        _ => {
+            eprintln!("error: --queue-depth must be a positive integer");
+            return ExitCode::FAILURE;
+        }
+    };
+    let batch_window_us = match args.opt_parse("batch-window-us", 100u64) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let batch = match args.opt_parse("batch", 64usize) {
+        Ok(v) if v >= 1 => v,
+        _ => {
+            eprintln!("error: --batch must be a positive integer");
+            return ExitCode::FAILURE;
+        }
+    };
+    let (freq, freq_src) = match parse_freq_arg(&args) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let addr = args.opt_or("addr", "127.0.0.1:4990").to_string();
+
+    let cfg = ServeConfig {
+        threads,
+        style: preferred_kahan_style(SimdCaps::detect()),
+        compensated: !args.flag("naive"),
+        shard_threshold: match threshold {
+            Some(t) => ThresholdMode::Fixed(t),
+            None => ThresholdMode::Model,
+        },
+        freq_ghz: freq,
+    };
+    let opts = AsyncOptions {
+        queue_depth,
+        batch_window: std::time::Duration::from_micros(batch_window_us),
+        batch_max: batch,
+        overlap: true,
+    };
+    let server = match NetServer::bind(&addr, cfg, opts) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: cannot bind {addr}: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let svc = server.service().service();
+    eprintln!(
+        "serve-net: T = {threads}, rung {}, shard at n >= {} ({}), queue depth {queue_depth}, \
+         window {batch_window_us} us, clock {freq:.2} GHz ({})",
+        svc.dot_spec(),
+        crossover_label(svc.shard_threshold()),
+        svc.threshold_source().label(),
+        freq_src.label()
+    );
+    // Parseable by scripts (tools/bench-smoke): the actual bound address,
+    // which differs from --addr when port 0 asked for an ephemeral port.
+    println!(
+        "serve-net: listening on {} (wire protocol v{}, docs/PROTOCOL.md)",
+        server.local_addr(),
+        codec::VERSION
+    );
+    // Serve until killed: the acceptor and per-connection threads own all
+    // the work; this thread only keeps `server` (and the listener) alive.
+    loop {
+        std::thread::park();
+    }
 }
 
 fn machine_and_kernel(
@@ -1190,6 +1459,7 @@ fn main() -> ExitCode {
         "bench-native" => cmd_bench_native(argv),
         "bench-scale" => cmd_bench_scale(argv),
         "serve-bench" => cmd_serve_bench(argv),
+        "serve-net" => cmd_serve_net(argv),
         "ecm" => cmd_ecm(argv),
         "sweep" => cmd_sweep(argv),
         "custom" => cmd_custom(argv),

@@ -1,0 +1,1146 @@
+//! Binary wire codec for the `serve-net` front-end.
+//!
+//! This module is the *only* place that knows the byte layout of the wire
+//! protocol. The normative specification lives in `docs/PROTOCOL.md`; every
+//! frame field here cites the section of that document that defines it, and
+//! the two are kept in lockstep — a change to either without the other is a
+//! review error.
+//!
+//! Design constraints (PROTOCOL.md §1):
+//!
+//! * **Dependency-free.** Frames are encoded into `Vec<u8>` and decoded from
+//!   byte slices with explicit little-endian accessors — no serde, no async
+//!   runtime.
+//! * **Bounded.** Every length field is validated against
+//!   [`MAX_PAYLOAD`] before any allocation, so a hostile or corrupted peer
+//!   cannot make the server allocate unbounded memory.
+//! * **Panic-free on hostile input.** Decoding returns [`WireError`]; it
+//!   never panics, truncates silently, or accepts trailing garbage.
+//! * **Numerically transparent.** `f64` operands travel as their IEEE-754
+//!   bit patterns (little-endian), so a value decoded on the server is
+//!   bit-identical to the value encoded by the client. This is the wire leg
+//!   of the repo-wide determinism contract (see `docs/ARCHITECTURE.md`).
+
+use crate::runtime::arena::AlignedVec;
+use crate::serve::scheduler::ExecPath;
+use crate::serve::SharedInput;
+use std::sync::Arc;
+
+/// Frame magic, `b"KDOT"` (PROTOCOL.md §2.1). First four bytes of every
+/// frame in either direction; anything else is a fatal framing error.
+pub const MAGIC: [u8; 4] = *b"KDOT";
+
+/// Protocol version carried in every frame header (PROTOCOL.md §6). The
+/// server rejects any other value with [`ErrorCode::BadVersion`] and closes
+/// the connection.
+pub const VERSION: u8 = 1;
+
+/// Fixed frame-header length in bytes (PROTOCOL.md §2.2): magic (4) +
+/// version (1) + opcode (1) + reserved (2) + request id (8) + payload
+/// length (4).
+pub const HEADER_LEN: usize = 20;
+
+/// Maximum payload length the codec will accept, 128 MiB
+/// (PROTOCOL.md §2.3). Large enough for a dot request over the full default
+/// mixture's largest operand pair (`n = 4_194_304` → 4 + 16·n ≈ 64 MiB),
+/// small enough to bound per-connection memory.
+pub const MAX_PAYLOAD: usize = 1 << 27;
+
+/// Request/response opcodes (PROTOCOL.md §3). The discriminant values are
+/// the wire bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Opcode {
+    /// Inline dot-product request: two equal-length `f64` vectors
+    /// (PROTOCOL.md §3.1).
+    Dot,
+    /// Inline sum request: one `f64` vector (PROTOCOL.md §3.2).
+    Sum,
+    /// Batched submission: a count followed by that many embedded dot/sum
+    /// payloads, answered by one batch-result frame (PROTOCOL.md §3.3).
+    Batch,
+    /// Stats probe: empty payload, answered with a stats frame
+    /// (PROTOCOL.md §3.4).
+    Stats,
+    /// Server → client scalar result (PROTOCOL.md §3.5).
+    Result,
+    /// Server → client batch result (PROTOCOL.md §3.6).
+    BatchResult,
+    /// Server → client stats snapshot (PROTOCOL.md §3.7).
+    StatsResult,
+    /// Server → client typed error frame (PROTOCOL.md §4).
+    Error,
+}
+
+impl Opcode {
+    /// The wire byte for this opcode (PROTOCOL.md §3, opcode table).
+    pub fn byte(self) -> u8 {
+        match self {
+            Opcode::Dot => 0x01,
+            Opcode::Sum => 0x02,
+            Opcode::Batch => 0x03,
+            Opcode::Stats => 0x04,
+            Opcode::Result => 0x81,
+            Opcode::BatchResult => 0x83,
+            Opcode::StatsResult => 0x84,
+            Opcode::Error => 0xFF,
+        }
+    }
+
+    /// Parse a wire byte back into an opcode; `None` for unassigned bytes,
+    /// which the server answers with [`ErrorCode::BadOpcode`] without
+    /// closing the connection (PROTOCOL.md §3).
+    pub fn from_byte(b: u8) -> Option<Self> {
+        Some(match b {
+            0x01 => Opcode::Dot,
+            0x02 => Opcode::Sum,
+            0x03 => Opcode::Batch,
+            0x04 => Opcode::Stats,
+            0x81 => Opcode::Result,
+            0x83 => Opcode::BatchResult,
+            0x84 => Opcode::StatsResult,
+            0xFF => Opcode::Error,
+            _ => return None,
+        })
+    }
+}
+
+/// Typed error codes carried by [`Opcode::Error`] frames
+/// (PROTOCOL.md §4, error-code table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Frame did not start with [`MAGIC`]; fatal (PROTOCOL.md §4.1).
+    BadMagic,
+    /// Version byte differed from [`VERSION`]; fatal (PROTOCOL.md §4.2).
+    BadVersion,
+    /// Unassigned opcode byte; the offending frame is skipped and the
+    /// connection stays usable (PROTOCOL.md §4.3).
+    BadOpcode,
+    /// Payload failed structural validation — truncated, trailing bytes,
+    /// or an internal length that disagrees with the payload length
+    /// (PROTOCOL.md §4.4).
+    Malformed,
+    /// Declared payload length exceeded [`MAX_PAYLOAD`]; fatal because the
+    /// stream cannot be resynchronised without reading the oversized body
+    /// (PROTOCOL.md §4.5).
+    Oversized,
+    /// The request decoded cleanly but the service rejected it (e.g. a dot
+    /// with mismatched operand lengths) (PROTOCOL.md §4.6).
+    Invalid,
+    /// Admission queue full: the documented backpressure signal. The client
+    /// may retry; nothing was enqueued (PROTOCOL.md §5).
+    Busy,
+    /// The service is shutting down; fatal (PROTOCOL.md §4.8).
+    Shutdown,
+    /// Unexpected server-side failure (PROTOCOL.md §4.9).
+    Internal,
+}
+
+impl ErrorCode {
+    /// The wire byte for this error code (PROTOCOL.md §4).
+    pub fn byte(self) -> u8 {
+        match self {
+            ErrorCode::BadMagic => 0x01,
+            ErrorCode::BadVersion => 0x02,
+            ErrorCode::BadOpcode => 0x03,
+            ErrorCode::Malformed => 0x04,
+            ErrorCode::Oversized => 0x05,
+            ErrorCode::Invalid => 0x06,
+            ErrorCode::Busy => 0x07,
+            ErrorCode::Shutdown => 0x08,
+            ErrorCode::Internal => 0x09,
+        }
+    }
+
+    /// Parse a wire byte back into an error code; unknown bytes map to
+    /// [`ErrorCode::Internal`] so a newer server never crashes an older
+    /// client (PROTOCOL.md §4).
+    pub fn from_byte(b: u8) -> Self {
+        match b {
+            0x01 => ErrorCode::BadMagic,
+            0x02 => ErrorCode::BadVersion,
+            0x03 => ErrorCode::BadOpcode,
+            0x04 => ErrorCode::Malformed,
+            0x05 => ErrorCode::Oversized,
+            0x06 => ErrorCode::Invalid,
+            0x07 => ErrorCode::Busy,
+            0x08 => ErrorCode::Shutdown,
+            _ => ErrorCode::Internal,
+        }
+    }
+
+    /// Whether the server closes the connection after sending this error
+    /// (PROTOCOL.md §4, fatality column). Fatal errors mean the byte
+    /// stream can no longer be trusted to be frame-aligned.
+    pub fn is_fatal(self) -> bool {
+        matches!(
+            self,
+            ErrorCode::BadMagic | ErrorCode::BadVersion | ErrorCode::Oversized | ErrorCode::Shutdown
+        )
+    }
+
+    /// Human-readable label, used in error frames and diagnostics.
+    pub fn label(self) -> &'static str {
+        match self {
+            ErrorCode::BadMagic => "bad-magic",
+            ErrorCode::BadVersion => "bad-version",
+            ErrorCode::BadOpcode => "bad-opcode",
+            ErrorCode::Malformed => "malformed",
+            ErrorCode::Oversized => "oversized",
+            ErrorCode::Invalid => "invalid",
+            ErrorCode::Busy => "busy",
+            ErrorCode::Shutdown => "shutdown",
+            ErrorCode::Internal => "internal",
+        }
+    }
+}
+
+/// A decode failure or a decoded server-side error frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireError {
+    /// The typed error code (PROTOCOL.md §4).
+    pub code: ErrorCode,
+    /// Free-form diagnostic detail; informational only, never parsed.
+    pub message: String,
+}
+
+impl WireError {
+    /// Construct an error with a code and diagnostic message.
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> Self {
+        Self {
+            code,
+            message: message.into(),
+        }
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code.label(), self.message)
+    }
+}
+
+/// A decoded frame header (PROTOCOL.md §2.2). Magic, version and the
+/// reserved bytes are validated during decode and not retained.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrameHeader {
+    /// Raw opcode byte (PROTOCOL.md §2.2, offset 5). Kept as a byte, not an
+    /// [`Opcode`], so the caller can answer unknown opcodes with
+    /// [`ErrorCode::BadOpcode`] after skipping the declared payload.
+    pub opcode: u8,
+    /// Client-chosen request id echoed verbatim in the response
+    /// (PROTOCOL.md §2.2, offset 8). Correlates out-of-order responses.
+    pub request_id: u64,
+    /// Payload length in bytes, already validated `<=` [`MAX_PAYLOAD`]
+    /// (PROTOCOL.md §2.2, offset 16).
+    pub payload_len: u32,
+}
+
+/// Decode and validate a frame header from exactly [`HEADER_LEN`] bytes
+/// (PROTOCOL.md §2.2). Checks run in stream-trust order: magic first (is
+/// this even our protocol?), then version, then the payload-length cap,
+/// then the reserved bytes.
+pub fn decode_header(buf: &[u8; HEADER_LEN]) -> Result<FrameHeader, WireError> {
+    if buf[0..4] != MAGIC {
+        return Err(WireError::new(
+            ErrorCode::BadMagic,
+            format!("expected magic {:?}, got {:?}", MAGIC, &buf[0..4]),
+        ));
+    }
+    if buf[4] != VERSION {
+        return Err(WireError::new(
+            ErrorCode::BadVersion,
+            format!("protocol version {} unsupported (server speaks {})", buf[4], VERSION),
+        ));
+    }
+    let payload_len = u32::from_le_bytes([buf[16], buf[17], buf[18], buf[19]]);
+    if payload_len as usize > MAX_PAYLOAD {
+        return Err(WireError::new(
+            ErrorCode::Oversized,
+            format!("payload length {} exceeds cap {}", payload_len, MAX_PAYLOAD),
+        ));
+    }
+    if buf[6] != 0 || buf[7] != 0 {
+        return Err(WireError::new(
+            ErrorCode::Malformed,
+            "reserved header bytes must be zero",
+        ));
+    }
+    let request_id = u64::from_le_bytes([
+        buf[8], buf[9], buf[10], buf[11], buf[12], buf[13], buf[14], buf[15],
+    ]);
+    Ok(FrameHeader {
+        opcode: buf[5],
+        request_id,
+        payload_len,
+    })
+}
+
+/// Encode a frame header into `out` (PROTOCOL.md §2.2). `payload_len` must
+/// already be within [`MAX_PAYLOAD`]; callers go through
+/// [`encode_frame`], which enforces it.
+fn encode_header(out: &mut Vec<u8>, opcode: Opcode, request_id: u64, payload_len: u32) {
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(opcode.byte());
+    out.extend_from_slice(&[0u8, 0u8]); // reserved (PROTOCOL.md §2.2)
+    out.extend_from_slice(&request_id.to_le_bytes());
+    out.extend_from_slice(&payload_len.to_le_bytes());
+}
+
+/// Assemble a complete frame: header + payload (PROTOCOL.md §2). Panics if
+/// `payload` exceeds [`MAX_PAYLOAD`] — encoders construct payloads from
+/// validated requests, so an oversized payload is a caller bug, not a wire
+/// condition.
+pub fn encode_frame(opcode: Opcode, request_id: u64, payload: &[u8]) -> Vec<u8> {
+    assert!(
+        payload.len() <= MAX_PAYLOAD,
+        "payload {} exceeds protocol cap {}",
+        payload.len(),
+        MAX_PAYLOAD
+    );
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    encode_header(&mut out, opcode, request_id, payload.len() as u32);
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Encode just a frame header (PROTOCOL.md §2.2) for a payload of
+/// `payload_len` bytes — used by streaming writers that cache one payload
+/// per request size and stamp a fresh request id per send, avoiding a
+/// payload copy per frame. Panics on `payload_len > MAX_PAYLOAD`, like
+/// [`encode_frame`].
+pub fn encode_header_bytes(
+    opcode: Opcode,
+    request_id: u64,
+    payload_len: usize,
+) -> [u8; HEADER_LEN] {
+    assert!(
+        payload_len <= MAX_PAYLOAD,
+        "payload {} exceeds protocol cap {}",
+        payload_len,
+        MAX_PAYLOAD
+    );
+    let mut out = Vec::with_capacity(HEADER_LEN);
+    encode_header(&mut out, opcode, request_id, payload_len as u32);
+    let mut buf = [0u8; HEADER_LEN];
+    buf.copy_from_slice(&out);
+    buf
+}
+
+/// Bounds-checked little-endian cursor over a payload. Every accessor
+/// returns [`ErrorCode::Malformed`] instead of panicking when the payload
+/// is shorter than its fields claim.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let end = self.pos.checked_add(n).ok_or_else(|| {
+            WireError::new(ErrorCode::Malformed, "payload offset overflow")
+        })?;
+        if end > self.buf.len() {
+            return Err(WireError::new(
+                ErrorCode::Malformed,
+                format!(
+                    "payload truncated: need {} bytes at offset {}, have {}",
+                    n,
+                    self.pos,
+                    self.buf.len() - self.pos
+                ),
+            ));
+        }
+        let slice = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(slice)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Reject trailing bytes: a well-formed payload is consumed exactly
+    /// (PROTOCOL.md §2.3).
+    fn finish(self) -> Result<(), WireError> {
+        if self.pos != self.buf.len() {
+            return Err(WireError::new(
+                ErrorCode::Malformed,
+                format!("{} trailing bytes after payload", self.buf.len() - self.pos),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Byte length of an inline dot payload for vectors of `n` elements
+/// (PROTOCOL.md §3.1): count (4) + 2·n doubles.
+pub fn dot_payload_len(n: usize) -> usize {
+    4 + 16 * n
+}
+
+/// Byte length of an inline sum payload for a vector of `n` elements
+/// (PROTOCOL.md §3.2): count (4) + n doubles.
+pub fn sum_payload_len(n: usize) -> usize {
+    4 + 8 * n
+}
+
+fn push_f64s(out: &mut Vec<u8>, values: &[f64]) {
+    for v in values {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+/// Encode an inline dot payload — element count then `x` then `y`, both as
+/// IEEE-754 bit patterns (PROTOCOL.md §3.1). Exposed separately from
+/// [`encode_dot`] so the wire load generator can cache one payload per
+/// mixture size and re-frame it with fresh request ids.
+pub fn encode_dot_payload(x: &[f64], y: &[f64]) -> Vec<u8> {
+    assert_eq!(x.len(), y.len(), "dot operands must be equal length");
+    let mut payload = Vec::with_capacity(dot_payload_len(x.len()));
+    payload.extend_from_slice(&(x.len() as u32).to_le_bytes());
+    push_f64s(&mut payload, x);
+    push_f64s(&mut payload, y);
+    payload
+}
+
+/// Encode a complete inline dot request frame (PROTOCOL.md §3.1).
+pub fn encode_dot(request_id: u64, x: &[f64], y: &[f64]) -> Vec<u8> {
+    encode_frame(Opcode::Dot, request_id, &encode_dot_payload(x, y))
+}
+
+/// Encode an inline sum payload — element count then the vector
+/// (PROTOCOL.md §3.2).
+pub fn encode_sum_payload(x: &[f64]) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(sum_payload_len(x.len()));
+    payload.extend_from_slice(&(x.len() as u32).to_le_bytes());
+    push_f64s(&mut payload, x);
+    payload
+}
+
+/// Encode a complete inline sum request frame (PROTOCOL.md §3.2).
+pub fn encode_sum(request_id: u64, x: &[f64]) -> Vec<u8> {
+    encode_frame(Opcode::Sum, request_id, &encode_sum_payload(x))
+}
+
+fn encode_request_payload(out: &mut Vec<u8>, input: &SharedInput) {
+    match input {
+        SharedInput::Dot(x, y) => {
+            out.push(0x01); // kind byte: dot (PROTOCOL.md §3.3)
+            out.extend_from_slice(&(x.len() as u32).to_le_bytes());
+            push_f64s(out, x);
+            push_f64s(out, y);
+        }
+        SharedInput::Sum(x) => {
+            out.push(0x02); // kind byte: sum (PROTOCOL.md §3.3)
+            out.extend_from_slice(&(x.len() as u32).to_le_bytes());
+            push_f64s(out, x);
+        }
+    }
+}
+
+/// Encode a batched submission frame: request count, then per-request a
+/// kind byte (dot/sum), element count and operands (PROTOCOL.md §3.3). The
+/// server answers with one [`Opcode::BatchResult`] frame carrying results
+/// in submission order.
+pub fn encode_batch(request_id: u64, inputs: &[SharedInput]) -> Vec<u8> {
+    let mut payload = Vec::new();
+    payload.extend_from_slice(&(inputs.len() as u32).to_le_bytes());
+    for input in inputs {
+        encode_request_payload(&mut payload, input);
+    }
+    encode_frame(Opcode::Batch, request_id, &payload)
+}
+
+/// Encode a stats probe: empty payload (PROTOCOL.md §3.4).
+pub fn encode_stats(request_id: u64) -> Vec<u8> {
+    encode_frame(Opcode::Stats, request_id, &[])
+}
+
+/// A decoded client request, ready for service admission.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// One inline dot or sum, submitted individually (PROTOCOL.md §3.1–2).
+    Submit(SharedInput),
+    /// A batched submission, answered with one batch-result frame
+    /// (PROTOCOL.md §3.3).
+    Batch(Vec<SharedInput>),
+    /// A stats probe (PROTOCOL.md §3.4).
+    Stats,
+}
+
+/// Upper bound on elements implied by a payload of `len` bytes, used to cap
+/// pre-allocation before the operand bytes are validated.
+fn element_cap(len: usize, bytes_per_elem: usize) -> usize {
+    len / bytes_per_elem.max(1)
+}
+
+fn decode_vec(r: &mut Reader<'_>, n: usize) -> Result<Arc<AlignedVec>, WireError> {
+    let bytes = r.take(8 * n)?;
+    // Decode straight into an aligned operand buffer so the kernels see the
+    // same alignment guarantees as in-process operands.
+    let v = AlignedVec::from_fn(n, |i| {
+        let o = 8 * i;
+        f64::from_bits(u64::from_le_bytes([
+            bytes[o],
+            bytes[o + 1],
+            bytes[o + 2],
+            bytes[o + 3],
+            bytes[o + 4],
+            bytes[o + 5],
+            bytes[o + 6],
+            bytes[o + 7],
+        ]))
+    });
+    Ok(Arc::new(v))
+}
+
+fn decode_dot_body(r: &mut Reader<'_>, payload_len: usize) -> Result<SharedInput, WireError> {
+    let n = r.u32()? as usize;
+    if n > element_cap(payload_len, 16) {
+        return Err(WireError::new(
+            ErrorCode::Malformed,
+            format!("dot count {} exceeds payload capacity", n),
+        ));
+    }
+    let x = decode_vec(r, n)?;
+    let y = decode_vec(r, n)?;
+    Ok(SharedInput::Dot(x, y))
+}
+
+fn decode_sum_body(r: &mut Reader<'_>, payload_len: usize) -> Result<SharedInput, WireError> {
+    let n = r.u32()? as usize;
+    if n > element_cap(payload_len, 8) {
+        return Err(WireError::new(
+            ErrorCode::Malformed,
+            format!("sum count {} exceeds payload capacity", n),
+        ));
+    }
+    Ok(SharedInput::Sum(decode_vec(r, n)?))
+}
+
+/// Decode a request payload for a validated request opcode
+/// (PROTOCOL.md §3). `opcode` must be one of the request opcodes; response
+/// opcodes arriving at a server are answered with
+/// [`ErrorCode::BadOpcode`] by the caller.
+pub fn decode_request(opcode: Opcode, payload: &[u8]) -> Result<Request, WireError> {
+    let mut r = Reader::new(payload);
+    let req = match opcode {
+        Opcode::Dot => Request::Submit(decode_dot_body(&mut r, payload.len())?),
+        Opcode::Sum => Request::Submit(decode_sum_body(&mut r, payload.len())?),
+        Opcode::Batch => {
+            let count = r.u32()? as usize;
+            // Each embedded request costs at least a kind byte + count.
+            if count > element_cap(payload.len(), 5) {
+                return Err(WireError::new(
+                    ErrorCode::Malformed,
+                    format!("batch count {} exceeds payload capacity", count),
+                ));
+            }
+            let mut inputs = Vec::with_capacity(count);
+            for _ in 0..count {
+                let kind = r.u8()?;
+                let input = match kind {
+                    0x01 => decode_dot_body(&mut r, payload.len())?,
+                    0x02 => decode_sum_body(&mut r, payload.len())?,
+                    other => {
+                        return Err(WireError::new(
+                            ErrorCode::Malformed,
+                            format!("unknown batch request kind byte {:#04x}", other),
+                        ))
+                    }
+                };
+                inputs.push(input);
+            }
+            Request::Batch(inputs)
+        }
+        Opcode::Stats => Request::Stats,
+        other => {
+            return Err(WireError::new(
+                ErrorCode::BadOpcode,
+                format!("{:?} is not a request opcode", other),
+            ))
+        }
+    };
+    r.finish()?;
+    Ok(req)
+}
+
+/// One scalar result as carried by [`Opcode::Result`] and
+/// [`Opcode::BatchResult`] frames (PROTOCOL.md §3.5).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WireResult {
+    /// The dot/sum value, transported as its IEEE-754 bit pattern so it is
+    /// bit-identical to the in-process result (PROTOCOL.md §3.5).
+    pub value: f64,
+    /// Number of updates (elements) in the request.
+    pub n: u64,
+    /// Which execution path served the request (fused or sharded).
+    pub path: ExecPath,
+}
+
+fn path_byte(path: ExecPath) -> u8 {
+    match path {
+        ExecPath::Fused => 0x00,
+        ExecPath::Sharded => 0x01,
+    }
+}
+
+fn path_from_byte(b: u8) -> Result<ExecPath, WireError> {
+    match b {
+        0x00 => Ok(ExecPath::Fused),
+        0x01 => Ok(ExecPath::Sharded),
+        other => Err(WireError::new(
+            ErrorCode::Malformed,
+            format!("unknown exec-path byte {:#04x}", other),
+        )),
+    }
+}
+
+fn push_result(out: &mut Vec<u8>, result: &WireResult) {
+    out.extend_from_slice(&result.value.to_bits().to_le_bytes());
+    out.extend_from_slice(&result.n.to_le_bytes());
+    out.push(path_byte(result.path));
+}
+
+fn read_result(r: &mut Reader<'_>) -> Result<WireResult, WireError> {
+    let value = r.f64()?;
+    let n = r.u64()?;
+    let path = path_from_byte(r.u8()?)?;
+    Ok(WireResult { value, n, path })
+}
+
+/// Encode a scalar-result frame (PROTOCOL.md §3.5): value bits (8) +
+/// update count (8) + path byte (1).
+pub fn encode_result(request_id: u64, result: &WireResult) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(17);
+    push_result(&mut payload, result);
+    encode_frame(Opcode::Result, request_id, &payload)
+}
+
+/// Encode a batch-result frame (PROTOCOL.md §3.6): result count then that
+/// many scalar results in submission order.
+pub fn encode_batch_result(request_id: u64, results: &[WireResult]) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(4 + 17 * results.len());
+    payload.extend_from_slice(&(results.len() as u32).to_le_bytes());
+    for result in results {
+        push_result(&mut payload, result);
+    }
+    encode_frame(Opcode::BatchResult, request_id, &payload)
+}
+
+/// A server-state snapshot carried by [`Opcode::StatsResult`] frames
+/// (PROTOCOL.md §3.7): eight little-endian `u64` fields in this order.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireStats {
+    /// Configured bounded-queue depth.
+    pub queue_depth: u64,
+    /// Worker-pool thread count T.
+    pub threads: u64,
+    /// Requests admitted to the queue since startup.
+    pub enqueued: u64,
+    /// Requests completed (tickets resolved) since startup.
+    pub completed: u64,
+    /// Arrival batches drained by the dispatcher.
+    pub arrival_batches: u64,
+    /// Kernel dispatches issued by the dispatcher.
+    pub dispatches: u64,
+    /// High-water mark of queue occupancy.
+    pub max_queue_depth: u64,
+    /// Cumulative worker busy time in nanoseconds.
+    pub busy_ns: u64,
+}
+
+/// Encode a stats-result frame (PROTOCOL.md §3.7).
+pub fn encode_stats_result(request_id: u64, stats: &WireStats) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(64);
+    for field in [
+        stats.queue_depth,
+        stats.threads,
+        stats.enqueued,
+        stats.completed,
+        stats.arrival_batches,
+        stats.dispatches,
+        stats.max_queue_depth,
+        stats.busy_ns,
+    ] {
+        payload.extend_from_slice(&field.to_le_bytes());
+    }
+    encode_frame(Opcode::StatsResult, request_id, &payload)
+}
+
+/// Encode a typed error frame (PROTOCOL.md §4): code byte (1) + message
+/// length (4) + UTF-8 message bytes.
+pub fn encode_error(request_id: u64, code: ErrorCode, message: &str) -> Vec<u8> {
+    let bytes = message.as_bytes();
+    // Clamp pathological messages rather than violating the payload cap.
+    let take = bytes.len().min(4096);
+    let mut payload = Vec::with_capacity(5 + take);
+    payload.push(code.byte());
+    payload.extend_from_slice(&(take as u32).to_le_bytes());
+    payload.extend_from_slice(&bytes[..take]);
+    encode_frame(Opcode::Error, request_id, &payload)
+}
+
+/// A decoded server → client response payload.
+#[derive(Clone, Debug)]
+pub enum Response {
+    /// One scalar result (PROTOCOL.md §3.5).
+    Result(WireResult),
+    /// A batch of results in submission order (PROTOCOL.md §3.6).
+    Batch(Vec<WireResult>),
+    /// A stats snapshot (PROTOCOL.md §3.7).
+    Stats(WireStats),
+    /// A typed error frame (PROTOCOL.md §4).
+    Error(WireError),
+}
+
+/// Decode a response payload for a validated response opcode
+/// (PROTOCOL.md §3.5–3.7, §4). Request opcodes arriving at a client are
+/// protocol violations and decode to [`ErrorCode::BadOpcode`].
+pub fn decode_response(opcode: Opcode, payload: &[u8]) -> Result<Response, WireError> {
+    let mut r = Reader::new(payload);
+    let resp = match opcode {
+        Opcode::Result => Response::Result(read_result(&mut r)?),
+        Opcode::BatchResult => {
+            let count = r.u32()? as usize;
+            if count > element_cap(payload.len(), 17) {
+                return Err(WireError::new(
+                    ErrorCode::Malformed,
+                    format!("batch-result count {} exceeds payload capacity", count),
+                ));
+            }
+            let mut results = Vec::with_capacity(count);
+            for _ in 0..count {
+                results.push(read_result(&mut r)?);
+            }
+            Response::Batch(results)
+        }
+        Opcode::StatsResult => {
+            let stats = WireStats {
+                queue_depth: r.u64()?,
+                threads: r.u64()?,
+                enqueued: r.u64()?,
+                completed: r.u64()?,
+                arrival_batches: r.u64()?,
+                dispatches: r.u64()?,
+                max_queue_depth: r.u64()?,
+                busy_ns: r.u64()?,
+            };
+            Response::Stats(stats)
+        }
+        Opcode::Error => {
+            let code = ErrorCode::from_byte(r.u8()?);
+            let len = r.u32()? as usize;
+            let bytes = r.take(len)?;
+            let message = String::from_utf8_lossy(bytes).into_owned();
+            Response::Error(WireError { code, message })
+        }
+        other => {
+            return Err(WireError::new(
+                ErrorCode::BadOpcode,
+                format!("{:?} is not a response opcode", other),
+            ))
+        }
+    };
+    r.finish()?;
+    Ok(resp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shared_dot(x: &[f64], y: &[f64]) -> SharedInput {
+        SharedInput::Dot(
+            Arc::new(AlignedVec::from_fn(x.len(), |i| x[i])),
+            Arc::new(AlignedVec::from_fn(y.len(), |i| y[i])),
+        )
+    }
+
+    fn shared_sum(x: &[f64]) -> SharedInput {
+        SharedInput::Sum(Arc::new(AlignedVec::from_fn(x.len(), |i| x[i])))
+    }
+
+    fn split(frame: &[u8]) -> (FrameHeader, &[u8]) {
+        let mut head = [0u8; HEADER_LEN];
+        head.copy_from_slice(&frame[..HEADER_LEN]);
+        let header = decode_header(&head).expect("valid header");
+        assert_eq!(frame.len(), HEADER_LEN + header.payload_len as usize);
+        (header, &frame[HEADER_LEN..])
+    }
+
+    #[test]
+    fn opcode_bytes_round_trip() {
+        for op in [
+            Opcode::Dot,
+            Opcode::Sum,
+            Opcode::Batch,
+            Opcode::Stats,
+            Opcode::Result,
+            Opcode::BatchResult,
+            Opcode::StatsResult,
+            Opcode::Error,
+        ] {
+            assert_eq!(Opcode::from_byte(op.byte()), Some(op));
+        }
+        assert_eq!(Opcode::from_byte(0x00), None);
+        assert_eq!(Opcode::from_byte(0x42), None);
+    }
+
+    #[test]
+    fn error_codes_round_trip_and_fatality() {
+        for code in [
+            ErrorCode::BadMagic,
+            ErrorCode::BadVersion,
+            ErrorCode::BadOpcode,
+            ErrorCode::Malformed,
+            ErrorCode::Oversized,
+            ErrorCode::Invalid,
+            ErrorCode::Busy,
+            ErrorCode::Shutdown,
+            ErrorCode::Internal,
+        ] {
+            assert_eq!(ErrorCode::from_byte(code.byte()), code);
+        }
+        assert!(ErrorCode::BadMagic.is_fatal());
+        assert!(ErrorCode::BadVersion.is_fatal());
+        assert!(ErrorCode::Oversized.is_fatal());
+        assert!(ErrorCode::Shutdown.is_fatal());
+        assert!(!ErrorCode::Busy.is_fatal());
+        assert!(!ErrorCode::BadOpcode.is_fatal());
+        assert!(!ErrorCode::Malformed.is_fatal());
+        assert!(!ErrorCode::Invalid.is_fatal());
+    }
+
+    #[test]
+    fn dot_request_round_trip_bit_exact() {
+        let x = [1.0, -2.5, 3.75, f64::MIN_POSITIVE];
+        let y = [0.5, 1e300, -1e-300, 4.0];
+        let frame = encode_dot(42, &x, &y);
+        let (header, payload) = split(&frame);
+        assert_eq!(header.opcode, Opcode::Dot.byte());
+        assert_eq!(header.request_id, 42);
+        match decode_request(Opcode::Dot, payload).expect("decodes") {
+            Request::Submit(SharedInput::Dot(dx, dy)) => {
+                assert_eq!(dx.len(), x.len());
+                for i in 0..x.len() {
+                    assert_eq!(dx[i].to_bits(), x[i].to_bits());
+                    assert_eq!(dy[i].to_bits(), y[i].to_bits());
+                }
+            }
+            other => panic!("unexpected request {:?}", other),
+        }
+    }
+
+    #[test]
+    fn sum_request_round_trip() {
+        let x = [2.0, -0.125, 9.5];
+        let frame = encode_sum(7, &x);
+        let (header, payload) = split(&frame);
+        assert_eq!(header.request_id, 7);
+        match decode_request(Opcode::Sum, payload).expect("decodes") {
+            Request::Submit(SharedInput::Sum(sx)) => {
+                assert_eq!(sx.len(), 3);
+                for i in 0..3 {
+                    assert_eq!(sx[i].to_bits(), x[i].to_bits());
+                }
+            }
+            other => panic!("unexpected request {:?}", other),
+        }
+    }
+
+    #[test]
+    fn batch_request_round_trip() {
+        let inputs = vec![
+            shared_dot(&[1.0, 2.0], &[3.0, 4.0]),
+            shared_sum(&[5.0, 6.0, 7.0]),
+            shared_dot(&[0.25], &[8.0]),
+        ];
+        let frame = encode_batch(9, &inputs);
+        let (header, payload) = split(&frame);
+        assert_eq!(header.opcode, Opcode::Batch.byte());
+        match decode_request(Opcode::Batch, payload).expect("decodes") {
+            Request::Batch(decoded) => {
+                assert_eq!(decoded.len(), 3);
+                match (&decoded[0], &inputs[0]) {
+                    (SharedInput::Dot(a, b), SharedInput::Dot(c, d)) => {
+                        assert_eq!(&a[..], &c[..]);
+                        assert_eq!(&b[..], &d[..]);
+                    }
+                    _ => panic!("kind mismatch"),
+                }
+                match &decoded[1] {
+                    SharedInput::Sum(s) => assert_eq!(&s[..], &[5.0, 6.0, 7.0][..]),
+                    _ => panic!("kind mismatch"),
+                }
+            }
+            other => panic!("unexpected request {:?}", other),
+        }
+    }
+
+    #[test]
+    fn stats_request_is_empty() {
+        let frame = encode_stats(3);
+        let (header, payload) = split(&frame);
+        assert_eq!(header.payload_len, 0);
+        assert!(matches!(
+            decode_request(Opcode::Stats, payload),
+            Ok(Request::Stats)
+        ));
+    }
+
+    #[test]
+    fn result_round_trip_bit_exact() {
+        let result = WireResult {
+            value: -1e-42,
+            n: 262144,
+            path: ExecPath::Sharded,
+        };
+        let frame = encode_result(11, &result);
+        let (header, payload) = split(&frame);
+        assert_eq!(header.request_id, 11);
+        match decode_response(Opcode::Result, payload).expect("decodes") {
+            Response::Result(r) => {
+                assert_eq!(r.value.to_bits(), result.value.to_bits());
+                assert_eq!(r.n, 262144);
+                assert_eq!(r.path, ExecPath::Sharded);
+            }
+            other => panic!("unexpected response {:?}", other),
+        }
+    }
+
+    #[test]
+    fn batch_result_round_trip() {
+        let results = vec![
+            WireResult {
+                value: 1.5,
+                n: 8,
+                path: ExecPath::Fused,
+            },
+            WireResult {
+                value: f64::NEG_INFINITY,
+                n: 1 << 20,
+                path: ExecPath::Sharded,
+            },
+        ];
+        let frame = encode_batch_result(13, &results);
+        let (_, payload) = split(&frame);
+        match decode_response(Opcode::BatchResult, payload).expect("decodes") {
+            Response::Batch(decoded) => {
+                assert_eq!(decoded.len(), 2);
+                for (a, b) in decoded.iter().zip(&results) {
+                    assert_eq!(a.value.to_bits(), b.value.to_bits());
+                    assert_eq!(a.n, b.n);
+                    assert_eq!(a.path, b.path);
+                }
+            }
+            other => panic!("unexpected response {:?}", other),
+        }
+    }
+
+    #[test]
+    fn stats_result_round_trip() {
+        let stats = WireStats {
+            queue_depth: 256,
+            threads: 8,
+            enqueued: 1000,
+            completed: 998,
+            arrival_batches: 120,
+            dispatches: 140,
+            max_queue_depth: 97,
+            busy_ns: 123_456_789,
+        };
+        let frame = encode_stats_result(21, &stats);
+        let (_, payload) = split(&frame);
+        match decode_response(Opcode::StatsResult, payload).expect("decodes") {
+            Response::Stats(s) => assert_eq!(s, stats),
+            other => panic!("unexpected response {:?}", other),
+        }
+    }
+
+    #[test]
+    fn error_frame_round_trip() {
+        let frame = encode_error(5, ErrorCode::Busy, "queue full");
+        let (header, payload) = split(&frame);
+        assert_eq!(header.opcode, Opcode::Error.byte());
+        match decode_response(Opcode::Error, payload).expect("decodes") {
+            Response::Error(e) => {
+                assert_eq!(e.code, ErrorCode::Busy);
+                assert_eq!(e.message, "queue full");
+            }
+            other => panic!("unexpected response {:?}", other),
+        }
+    }
+
+    #[test]
+    fn header_bytes_match_encode_frame() {
+        let payload = [1u8, 2, 3];
+        let frame = encode_frame(Opcode::Sum, 99, &payload);
+        let head = encode_header_bytes(Opcode::Sum, 99, payload.len());
+        assert_eq!(&frame[..HEADER_LEN], &head[..]);
+    }
+
+    #[test]
+    fn header_rejects_bad_magic() {
+        let frame = encode_stats(1);
+        let mut head = [0u8; HEADER_LEN];
+        head.copy_from_slice(&frame[..HEADER_LEN]);
+        head[0] = b'X';
+        assert_eq!(decode_header(&head).unwrap_err().code, ErrorCode::BadMagic);
+    }
+
+    #[test]
+    fn header_rejects_bad_version() {
+        let frame = encode_stats(1);
+        let mut head = [0u8; HEADER_LEN];
+        head.copy_from_slice(&frame[..HEADER_LEN]);
+        head[4] = VERSION + 1;
+        assert_eq!(
+            decode_header(&head).unwrap_err().code,
+            ErrorCode::BadVersion
+        );
+    }
+
+    #[test]
+    fn header_rejects_nonzero_reserved() {
+        let frame = encode_stats(1);
+        let mut head = [0u8; HEADER_LEN];
+        head.copy_from_slice(&frame[..HEADER_LEN]);
+        head[6] = 1;
+        assert_eq!(
+            decode_header(&head).unwrap_err().code,
+            ErrorCode::Malformed
+        );
+    }
+
+    #[test]
+    fn header_rejects_oversized_payload() {
+        let frame = encode_stats(1);
+        let mut head = [0u8; HEADER_LEN];
+        head.copy_from_slice(&frame[..HEADER_LEN]);
+        head[16..20].copy_from_slice(&((MAX_PAYLOAD as u32) + 1).to_le_bytes());
+        assert_eq!(
+            decode_header(&head).unwrap_err().code,
+            ErrorCode::Oversized
+        );
+    }
+
+    #[test]
+    fn truncated_payloads_never_panic() {
+        let x = [1.0, 2.0, 3.0];
+        let y = [4.0, 5.0, 6.0];
+        let dot = encode_dot(1, &x, &y);
+        let full = &dot[HEADER_LEN..];
+        for cut in 0..full.len() {
+            let err = decode_request(Opcode::Dot, &full[..cut]).unwrap_err();
+            assert_eq!(err.code, ErrorCode::Malformed, "cut at {}", cut);
+        }
+        let result = encode_result(
+            2,
+            &WireResult {
+                value: 1.0,
+                n: 3,
+                path: ExecPath::Fused,
+            },
+        );
+        let full = &result[HEADER_LEN..];
+        for cut in 0..full.len() {
+            assert!(decode_response(Opcode::Result, &full[..cut]).is_err());
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let frame = encode_sum(1, &[1.0, 2.0]);
+        let mut payload = frame[HEADER_LEN..].to_vec();
+        payload.push(0xAB);
+        assert_eq!(
+            decode_request(Opcode::Sum, &payload).unwrap_err().code,
+            ErrorCode::Malformed
+        );
+    }
+
+    #[test]
+    fn counts_exceeding_capacity_rejected_before_allocation() {
+        // Claim 2^31 elements in a 12-byte payload: must fail on the cap
+        // check, not attempt an allocation.
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&(1u32 << 31).to_le_bytes());
+        payload.extend_from_slice(&[0u8; 8]);
+        assert_eq!(
+            decode_request(Opcode::Dot, &payload).unwrap_err().code,
+            ErrorCode::Malformed
+        );
+        assert_eq!(
+            decode_request(Opcode::Sum, &payload).unwrap_err().code,
+            ErrorCode::Malformed
+        );
+        let mut batch = Vec::new();
+        batch.extend_from_slice(&(1u32 << 31).to_le_bytes());
+        assert_eq!(
+            decode_request(Opcode::Batch, &batch).unwrap_err().code,
+            ErrorCode::Malformed
+        );
+    }
+
+    #[test]
+    fn batch_with_unknown_kind_rejected() {
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&1u32.to_le_bytes());
+        payload.push(0x7F);
+        payload.extend_from_slice(&0u32.to_le_bytes());
+        assert_eq!(
+            decode_request(Opcode::Batch, &payload).unwrap_err().code,
+            ErrorCode::Malformed
+        );
+    }
+
+    #[test]
+    fn response_opcode_as_request_rejected() {
+        assert_eq!(
+            decode_request(Opcode::Result, &[]).unwrap_err().code,
+            ErrorCode::BadOpcode
+        );
+        assert_eq!(
+            decode_response(Opcode::Dot, &[]).unwrap_err().code,
+            ErrorCode::BadOpcode
+        );
+    }
+
+    #[test]
+    fn unknown_error_code_maps_to_internal() {
+        assert_eq!(ErrorCode::from_byte(0xEE), ErrorCode::Internal);
+    }
+
+    #[test]
+    fn error_message_clamped() {
+        let long = "x".repeat(10_000);
+        let frame = encode_error(1, ErrorCode::Internal, &long);
+        let (_, payload) = split(&frame);
+        match decode_response(Opcode::Error, payload).expect("decodes") {
+            Response::Error(e) => assert_eq!(e.message.len(), 4096),
+            other => panic!("unexpected response {:?}", other),
+        }
+    }
+}

@@ -26,6 +26,11 @@
 //! arena and first-touched by the service's own workers, so the sharded
 //! path streams NUMA-local pages exactly like the measurement stack.
 
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -35,6 +40,8 @@ use crate::runtime::parallel::ThreadPool;
 use crate::util::rng::Rng;
 use crate::util::stats::percentile_sorted;
 
+use super::codec::{self, ErrorCode, Opcode, Response, HEADER_LEN};
+use super::net::{read_exact_or_eof, WireClient};
 use super::queue::AsyncDotService;
 use super::scheduler::ExecPath;
 use super::{DotService, SharedInput};
@@ -135,6 +142,8 @@ pub struct OperandPool {
 }
 
 impl OperandPool {
+    /// Generate one deterministic operand pair per distinct mixture size,
+    /// first-touched by `pool`'s workers (see the type docs).
     pub fn generate(mix: &[MixEntry], seed: u64, pool: &ThreadPool) -> Self {
         let mut sizes: Vec<usize> = mix.iter().map(|e| e.n).collect();
         sizes.sort_unstable();
@@ -187,6 +196,7 @@ pub enum LoadMode {
 }
 
 impl LoadMode {
+    /// The label bench artifacts record for this arrival model.
     pub fn label(self) -> &'static str {
         match self {
             LoadMode::Closed => "closed",
@@ -198,18 +208,25 @@ impl LoadMode {
 /// Aggregate results of one load-generation run.
 #[derive(Clone, Debug)]
 pub struct LoadReport {
+    /// Requests completed.
     pub requests: usize,
+    /// Arrival batches the run dispatched.
     pub batches: usize,
-    /// Requests served on each path.
+    /// Requests served on the fused path.
     pub fused: u64,
+    /// Requests served on the sharded path.
     pub sharded: u64,
     /// Wall time the service spent executing batches, ns.
     pub busy_ns: f64,
     /// End-to-end span of the run (virtual clock for open loop), ns.
     pub elapsed_ns: f64,
+    /// Median request latency, ns.
     pub latency_p50_ns: f64,
+    /// 90th-percentile request latency, ns.
     pub latency_p90_ns: f64,
+    /// 99th-percentile request latency, ns.
     pub latency_p99_ns: f64,
+    /// Worst observed request latency, ns.
     pub latency_max_ns: f64,
     /// Total updates streamed across all requests.
     pub updates: u64,
@@ -342,11 +359,29 @@ pub fn run_load_with(
     })
 }
 
+/// Pace an arrival to its scheduled instant: sleep for the bulk, spin the
+/// last stretch (sleep granularity on a loaded host is tens of µs).
+fn pace_until(target: Instant) {
+    loop {
+        let now = Instant::now();
+        if now >= target {
+            return;
+        }
+        let remaining = target - now;
+        if remaining > Duration::from_micros(200) {
+            std::thread::sleep(remaining - Duration::from_micros(100));
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+}
+
 /// Results of one *real-time* open-loop run through the asynchronous
 /// pipeline: the classic [`LoadReport`] aggregates plus the queue and
 /// pool-utilization stats only the queued path can report.
 #[derive(Clone, Debug)]
 pub struct AsyncLoadReport {
+    /// The classic load aggregates, measured through the queue.
     pub load: LoadReport,
     /// Configured submission-queue depth.
     pub queue_depth: usize,
@@ -402,20 +437,7 @@ pub fn run_load_async(
     let mut handles = Vec::with_capacity(requests);
     for (k, &n) in sizes.iter().enumerate() {
         let target = epoch + Duration::from_nanos((k as f64 * gap_ns) as u64);
-        // Pace the arrival: sleep for the bulk, spin the last stretch
-        // (sleep granularity on a loaded host is tens of µs).
-        loop {
-            let now = Instant::now();
-            if now >= target {
-                break;
-            }
-            let remaining = target - now;
-            if remaining > Duration::from_micros(200) {
-                std::thread::sleep(remaining - Duration::from_micros(100));
-            } else {
-                std::hint::spin_loop();
-            }
-        }
+        pace_until(target);
         let handle = service.submit_with_arrival(operands.shared_dot(n), target)?;
         handles.push(handle);
     }
@@ -464,6 +486,334 @@ pub fn run_load_async(
         batch_window_us: opts.batch_window.as_nanos() as f64 / 1e3,
         dispatches: stats.dispatches - stats_before.dispatches,
         arrival_batches: stats.arrival_batches - stats_before.arrival_batches,
+        pool_utilization: (busy_ns / elapsed_ns).min(1.0),
+    })
+}
+
+/// Results of one open-loop run against a `serve-net` server over real
+/// sockets: the classic [`LoadReport`] aggregates measured end-to-end on
+/// the wire, plus connection-level accounting and the pipeline counters
+/// recovered from the server's STATS probe (`docs/PROTOCOL.md` §3.4).
+#[derive(Clone, Debug)]
+pub struct WireLoadReport {
+    /// Wire-measured aggregates: latency runs from each request's
+    /// *scheduled* arrival to its response frame's receipt (socket, codec,
+    /// queueing, BUSY retries and service time all included — no
+    /// coordinated omission).
+    pub load: LoadReport,
+    /// Client connections driven in parallel.
+    pub connections: usize,
+    /// Aggregate target arrival rate across all connections, req/s.
+    pub rate_rps: f64,
+    /// BUSY responses absorbed (each one re-sent its request with latency
+    /// still measured from the original schedule).
+    pub busy_retries: u64,
+    /// Server-side submission-queue depth (from the stats probe).
+    pub queue_depth: usize,
+    /// Server-side queue high-water mark over the run.
+    pub max_queue_depth: usize,
+    /// Pool dispatches the server's dispatcher posted during the run.
+    pub dispatches: u64,
+    /// Arrival batches the server's dispatcher drained during the run.
+    pub arrival_batches: u64,
+    /// Server busy-interval union / client elapsed span.
+    pub pool_utilization: f64,
+}
+
+/// What one connection's receiver records per completed request.
+struct WireRecord {
+    id: usize,
+    value: f64,
+    sharded: bool,
+    latency_ns: f64,
+}
+
+/// The sender/receiver pair for one wire connection. The sender paces the
+/// connection's share of the global arrival schedule (request `i` goes to
+/// connection `i % connections` at instant `epoch + i·gap`) and writes
+/// frames without waiting for responses; the receiver thread drains
+/// response frames as they stream back (out of order) and feeds BUSY
+/// rejects back to the sender for immediate re-send. This is the
+/// pipelined, no-coordinated-omission client: a slow response never
+/// delays later scheduled arrivals on the same connection.
+struct WireWorker {
+    writer: BufWriter<TcpStream>,
+    retry_rx: Receiver<usize>,
+    finished: Arc<AtomicBool>,
+    payloads: Arc<HashMap<usize, Vec<u8>>>,
+    sizes: Arc<Vec<usize>>,
+}
+
+impl WireWorker {
+    fn send_request(&mut self, id: usize) -> Result<(), String> {
+        let n = self.sizes[id];
+        let payload = self.payloads.get(&n).expect("payload per mixture size");
+        let head = codec::encode_header_bytes(Opcode::Dot, id as u64, payload.len());
+        self.writer
+            .write_all(&head)
+            .and_then(|_| self.writer.write_all(payload))
+            .and_then(|_| self.writer.flush())
+            .map_err(|e| format!("wire send: {e}"))
+    }
+
+    /// Drive this connection's schedule, then service retries until the
+    /// receiver confirms every assigned request completed.
+    fn run(&mut self, assigned: &[usize], epoch: Instant, gap_ns: f64) -> Result<(), String> {
+        for &id in assigned {
+            // Re-send whatever bounced with BUSY before pacing onward.
+            while let Ok(retry_id) = self.retry_rx.try_recv() {
+                self.send_request(retry_id)?;
+            }
+            let target = epoch + Duration::from_nanos((id as f64 * gap_ns) as u64);
+            pace_until(target);
+            self.send_request(id)?;
+        }
+        while !self.finished.load(Ordering::Acquire) {
+            match self.retry_rx.recv_timeout(Duration::from_micros(100)) {
+                Ok(retry_id) => self.send_request(retry_id)?,
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One connection's receiver: read response frames until every assigned
+/// request has a result, bouncing BUSY ids back to the sender.
+fn wire_receiver(
+    stream: TcpStream,
+    assigned: usize,
+    epoch: Instant,
+    gap_ns: f64,
+    retry_tx: Sender<usize>,
+    finished: Arc<AtomicBool>,
+) -> Result<(Vec<WireRecord>, u64), String> {
+    let mut reader = BufReader::new(stream);
+    let mut records = Vec::with_capacity(assigned);
+    let mut busy_retries = 0u64;
+    let fail = |msg: String, finished: &AtomicBool| {
+        finished.store(true, Ordering::Release);
+        Err(msg)
+    };
+    while records.len() < assigned {
+        let mut head = [0u8; HEADER_LEN];
+        match read_exact_or_eof(&mut reader, &mut head) {
+            Ok(true) => {}
+            Ok(false) => return fail("server closed mid-run".to_string(), &finished),
+            Err(e) => return fail(format!("wire read: {e}"), &finished),
+        }
+        let header = match codec::decode_header(&head) {
+            Ok(h) => h,
+            Err(e) => return fail(format!("wire header: {e}"), &finished),
+        };
+        let mut payload = vec![0u8; header.payload_len as usize];
+        if header.payload_len > 0 {
+            if let Err(e) = std::io::Read::read_exact(&mut reader, &mut payload) {
+                return fail(format!("wire read: {e}"), &finished);
+            }
+        }
+        let Some(opcode) = Opcode::from_byte(header.opcode) else {
+            return fail(format!("unassigned opcode {:#04x}", header.opcode), &finished);
+        };
+        match codec::decode_response(opcode, &payload) {
+            Ok(Response::Result(r)) => {
+                let id = header.request_id as usize;
+                let scheduled_ns = id as f64 * gap_ns;
+                let now_ns = epoch.elapsed().as_nanos() as f64;
+                records.push(WireRecord {
+                    id,
+                    value: r.value,
+                    sharded: r.path == ExecPath::Sharded,
+                    latency_ns: (now_ns - scheduled_ns).max(0.0),
+                });
+            }
+            Ok(Response::Error(e)) if e.code == ErrorCode::Busy => {
+                busy_retries += 1;
+                if retry_tx.send(header.request_id as usize).is_err() {
+                    return fail("sender hung up during retry".to_string(), &finished);
+                }
+            }
+            Ok(Response::Error(e)) => {
+                return fail(format!("server error for {}: {e}", header.request_id), &finished)
+            }
+            Ok(other) => return fail(format!("unexpected frame {other:?}"), &finished),
+            Err(e) => return fail(format!("wire decode: {e}"), &finished),
+        }
+    }
+    finished.store(true, Ordering::Release);
+    Ok((records, busy_retries))
+}
+
+/// Drive a `serve-net` server at `addr` with the *same* deterministic
+/// request stream as [`run_load_async`] (same mixture, seed and shared
+/// operand bytes), split round-robin over `connections` pipelined wire
+/// connections at an aggregate open-loop rate. Latency is measured from
+/// each request's scheduled arrival to its response frame (socket and
+/// codec included); BUSY rejects are re-sent with the original schedule
+/// kept, so backpressure shows up as latency, not dropped samples.
+///
+/// `flops_per_update` is the served dot class's cost (the client cannot
+/// see the server's kernel config over the wire).
+///
+/// Determinism: the checksum folds response values in request-id order —
+/// at the same `T` and seed it is bit-identical to the in-process
+/// [`run_load_async`] checksum (pinned in `tests/integration.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn run_load_wire(
+    addr: &str,
+    mix: &[MixEntry],
+    operands: &OperandPool,
+    requests: usize,
+    rate_rps: f64,
+    connections: usize,
+    flops_per_update: u64,
+    seed: u64,
+) -> Result<WireLoadReport, BackendError> {
+    if mix.is_empty() {
+        return Err(BackendError::Runtime("empty request mixture".to_string()));
+    }
+    if requests == 0 {
+        return Err(BackendError::Runtime("need at least one request".to_string()));
+    }
+    if rate_rps <= 0.0 || !rate_rps.is_finite() {
+        return Err(BackendError::Runtime("open-loop rate must be > 0".to_string()));
+    }
+    let connections = connections.max(1);
+    let gap_ns = 1e9 / rate_rps;
+    let sizes = Arc::new(sample_sizes(mix, requests, seed));
+
+    // One cached payload per distinct mixture size, encoded from the same
+    // shared operand buffers the in-process paths submit — byte-for-byte
+    // the operands of `run_load_async`.
+    let mut payloads = HashMap::new();
+    for entry in mix {
+        payloads.entry(entry.n).or_insert_with(|| {
+            let (x, y) = operands.pair(entry.n);
+            codec::encode_dot_payload(x, y)
+        });
+    }
+    let payloads = Arc::new(payloads);
+
+    let wire_err = |e: super::net::WireCallError| BackendError::Runtime(e.to_string());
+    let mut probe = WireClient::connect(addr)
+        .map_err(|e| BackendError::Runtime(format!("connect {addr}: {e}")))?;
+    let before = probe.stats().map_err(wire_err)?;
+
+    let epoch = Instant::now();
+    let mut workers = Vec::with_capacity(connections);
+    for c in 0..connections {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| BackendError::Runtime(format!("connect {addr}: {e}")))?;
+        let _ = stream.set_nodelay(true);
+        let read_half = stream
+            .try_clone()
+            .map_err(|e| BackendError::Runtime(format!("clone stream: {e}")))?;
+        let assigned: Vec<usize> = (c..requests).step_by(connections).collect();
+        let (retry_tx, retry_rx) = std::sync::mpsc::channel();
+        let finished = Arc::new(AtomicBool::new(false));
+        let receiver = {
+            let finished = Arc::clone(&finished);
+            let count = assigned.len();
+            std::thread::Builder::new()
+                .name("kahan-wire-recv".to_string())
+                .spawn(move || wire_receiver(read_half, count, epoch, gap_ns, retry_tx, finished))
+                .expect("spawn wire receiver")
+        };
+        let sender = {
+            let mut worker = WireWorker {
+                writer: BufWriter::new(stream),
+                retry_rx,
+                finished,
+                payloads: Arc::clone(&payloads),
+                sizes: Arc::clone(&sizes),
+            };
+            std::thread::Builder::new()
+                .name("kahan-wire-send".to_string())
+                .spawn(move || {
+                    let r = worker.run(&assigned, epoch, gap_ns);
+                    if r.is_err() {
+                        // Unblock this connection's receiver: it would
+                        // otherwise wait for responses that can't come.
+                        worker.finished.store(true, Ordering::Release);
+                        let _ = worker
+                            .writer
+                            .get_ref()
+                            .shutdown(std::net::Shutdown::Both);
+                    }
+                    r
+                })
+                .expect("spawn wire sender")
+        };
+        workers.push((sender, receiver));
+    }
+
+    let mut values = vec![0.0f64; requests];
+    let mut latencies = Vec::with_capacity(requests);
+    let (mut fused, mut sharded) = (0u64, 0u64);
+    let mut busy_retries = 0u64;
+    let mut failure: Option<String> = None;
+    for (sender, receiver) in workers {
+        match receiver.join().expect("wire receiver panicked") {
+            Ok((records, busy)) => {
+                busy_retries += busy;
+                for rec in records {
+                    values[rec.id] = rec.value;
+                    latencies.push(rec.latency_ns);
+                    if rec.sharded {
+                        sharded += 1;
+                    } else {
+                        fused += 1;
+                    }
+                }
+            }
+            Err(msg) => {
+                failure.get_or_insert(msg);
+            }
+        }
+        if let Err(msg) = sender.join().expect("wire sender panicked") {
+            failure.get_or_insert(msg);
+        }
+    }
+    let elapsed_ns = epoch.elapsed().as_nanos() as f64;
+    if let Some(msg) = failure {
+        return Err(BackendError::Runtime(msg));
+    }
+    let after = probe.stats().map_err(wire_err)?;
+
+    // Checksum in request-id order — the exact fold order of the
+    // in-process open-loop runs.
+    let checksum = values.iter().sum::<f64>();
+    let updates: u64 = sizes.iter().map(|&n| n as u64).sum();
+    let flops = updates * flops_per_update;
+    let busy_ns = (after.busy_ns.saturating_sub(before.busy_ns) as f64).max(1.0);
+    latencies.sort_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
+    Ok(WireLoadReport {
+        load: LoadReport {
+            requests,
+            batches: (after.arrival_batches - before.arrival_batches) as usize,
+            fused,
+            sharded,
+            busy_ns,
+            elapsed_ns,
+            latency_p50_ns: percentile_sorted(&latencies, 50.0),
+            latency_p90_ns: percentile_sorted(&latencies, 90.0),
+            latency_p99_ns: percentile_sorted(&latencies, 99.0),
+            latency_max_ns: latencies[latencies.len() - 1],
+            updates,
+            flops,
+            mflops: flops as f64 / busy_ns * 1000.0,
+            gups: updates as f64 / busy_ns,
+            reqs_per_s: requests as f64 / elapsed_ns * 1e9,
+            checksum,
+        },
+        connections,
+        rate_rps,
+        busy_retries,
+        queue_depth: after.queue_depth as usize,
+        max_queue_depth: after.max_queue_depth as usize,
+        dispatches: after.dispatches - before.dispatches,
+        arrival_batches: after.arrival_batches - before.arrival_batches,
         pool_utilization: (busy_ns / elapsed_ns).min(1.0),
     })
 }
@@ -608,6 +958,64 @@ mod tests {
         assert!(run_load_async(&asy, &[], &ops, 10, 1e5, 1).is_err());
         assert!(run_load_async(&asy, &mix, &ops, 0, 1e5, 1).is_err());
         assert!(run_load_async(&asy, &mix, &ops, 10, 0.0, 1).is_err());
+    }
+
+    #[test]
+    fn wire_load_matches_async_checksum_bits() {
+        use crate::serve::net::NetServer;
+        let mix = vec![
+            MixEntry { n: 256, weight: 0.8 },
+            MixEntry { n: 8192, weight: 0.2 },
+        ];
+        let server =
+            NetServer::bind("127.0.0.1:0", tiny_cfg(2, 4096), AsyncOptions::default()).unwrap();
+        let ops = OperandPool::generate(&mix, 7, server.service().service().pool());
+        let fpu = server
+            .service()
+            .service()
+            .dot_spec()
+            .class
+            .flops_per_update();
+        let wire = run_load_wire(
+            &server.local_addr().to_string(),
+            &mix,
+            &ops,
+            48,
+            1e6,
+            2,
+            fpu,
+            7,
+        )
+        .unwrap();
+        assert_eq!(wire.load.requests, 48);
+        assert_eq!(wire.load.fused + wire.load.sharded, 48);
+        assert!(wire.load.latency_p50_ns > 0.0);
+        assert!(wire.load.latency_p50_ns <= wire.load.latency_p99_ns);
+        assert!(wire.max_queue_depth <= wire.queue_depth);
+        // Bit-parity against the in-process open-loop run: same seed, same
+        // operand bytes, same T and threshold ⇒ identical checksum.
+        let asy = AsyncDotService::new(tiny_cfg(2, 4096), AsyncOptions::default()).unwrap();
+        let asy_ops = OperandPool::generate(&mix, 7, asy.service().pool());
+        let r = run_load_async(&asy, &mix, &asy_ops, 48, 1e6, 7).unwrap();
+        assert_eq!(
+            wire.load.checksum.to_bits(),
+            r.load.checksum.to_bits(),
+            "wire and in-process checksums must be bit-identical"
+        );
+        assert_eq!((wire.load.fused, wire.load.sharded), (r.load.fused, r.load.sharded));
+    }
+
+    #[test]
+    fn run_load_wire_rejects_bad_parameters() {
+        use crate::serve::net::NetServer;
+        let server =
+            NetServer::bind("127.0.0.1:0", tiny_cfg(1, 100), AsyncOptions::default()).unwrap();
+        let addr = server.local_addr().to_string();
+        let mix = vec![MixEntry { n: 64, weight: 1.0 }];
+        let ops = OperandPool::generate(&mix, 1, server.service().service().pool());
+        assert!(run_load_wire(&addr, &[], &ops, 10, 1e5, 1, 5, 1).is_err());
+        assert!(run_load_wire(&addr, &mix, &ops, 0, 1e5, 1, 5, 1).is_err());
+        assert!(run_load_wire(&addr, &mix, &ops, 10, 0.0, 1, 5, 1).is_err());
     }
 
     #[test]

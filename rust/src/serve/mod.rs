@@ -60,9 +60,26 @@
 //! [`DotService::pool`] exposes the worker pool so callers can first-touch
 //! buffers with the same chunk→worker assignment the sharded path streams
 //! them with (the load generator in [`loadgen`] does exactly that).
+//!
+//! The **wire front-end** ([`net`], `serve-net` in the CLI) exposes the
+//! same pipeline over TCP: a dependency-free length-prefixed binary
+//! protocol ([`codec`]; normative spec in `docs/PROTOCOL.md`) with
+//! per-connection reader/writer halves, so responses stream back in
+//! completion order correlated by request id, and queue backpressure
+//! reaches the socket as a typed BUSY frame ([`TrySubmit`]). Operands and
+//! results travel as IEEE-754 bit patterns, extending the bit-parity
+//! contract across the socket; the end-to-end dataflow narrative lives in
+//! `docs/ARCHITECTURE.md`.
 
+// The serving layer is the repo's public product surface: every public
+// item must ship documented (CI builds with `-D warnings`, so a missing
+// doc is a build failure, not a nit).
+#![deny(missing_docs)]
+
+pub mod codec;
 pub mod crossover;
 pub mod loadgen;
+pub mod net;
 pub mod queue;
 pub mod scheduler;
 
@@ -75,12 +92,14 @@ use crate::runtime::backend::{BackendError, ImplStyle, KernelClass, KernelInput,
 use crate::runtime::hostbench::freq_ghz_with_source;
 use crate::runtime::parallel::{compensated_tree_reduce, ThreadPool, CACHELINE_F64};
 
+pub use codec::{ErrorCode, WireError, WireResult, WireStats};
 pub use crossover::{calibrate, model_crossover, model_p1_gups, service_crossover, Calibration};
 pub use loadgen::{
-    default_mix, parse_mix, run_load, run_load_async, run_load_with, AsyncLoadReport, LoadMode,
-    LoadReport, MixEntry, OperandPool,
+    default_mix, parse_mix, run_load, run_load_async, run_load_wire, run_load_with,
+    AsyncLoadReport, LoadMode, LoadReport, MixEntry, OperandPool, WireLoadReport,
 };
-pub use queue::{AsyncDotService, AsyncOptions, AsyncServeStats, ResponseHandle};
+pub use net::{NetServer, WireCallError, WireClient};
+pub use queue::{AsyncDotService, AsyncOptions, AsyncServeStats, ResponseHandle, TrySubmit};
 pub use scheduler::{BatchScheduler, DispatchPlan, ExecPath};
 
 /// How the service picks its batch-vs-shard crossover.
@@ -160,6 +179,7 @@ pub enum ThresholdSource {
 }
 
 impl ThresholdSource {
+    /// The label bench artifacts record for this source.
     pub fn label(self) -> &'static str {
         match self {
             ThresholdSource::Model => "model",
@@ -229,8 +249,11 @@ pub struct ServeResponse {
 /// Monotonic service counters (snapshot via [`DotService::stats`]).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ServeStats {
+    /// Requests served (fused + sharded).
     pub requests: u64,
+    /// Requests executed whole inside fused dispatches.
     pub fused: u64,
+    /// Requests partitioned across the pool.
     pub sharded: u64,
     /// Total updates streamed across all requests.
     pub updates: u64,
@@ -337,14 +360,17 @@ impl DotService {
         self.scheduler.shard_threshold()
     }
 
+    /// Where the shard threshold came from (model, override, calibrated).
     pub fn threshold_source(&self) -> ThresholdSource {
         self.threshold_source
     }
 
+    /// The kernel rung every request runs.
     pub fn style(&self) -> ImplStyle {
         self.style
     }
 
+    /// Whether dot requests run the Kahan-compensated kernel.
     pub fn compensated(&self) -> bool {
         self.compensated
     }

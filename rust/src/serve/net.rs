@@ -1,0 +1,753 @@
+//! The TCP front-end for the serving layer: a dependency-free
+//! `std::net::TcpListener` server speaking the length-prefixed binary
+//! protocol of [`codec`](super::codec) (normative spec:
+//! `docs/PROTOCOL.md`), plus the blocking [`WireClient`] the tests and the
+//! wire load generator drive it with.
+//!
+//! Dataflow (the full narrative lives in `docs/ARCHITECTURE.md`):
+//!
+//! ```text
+//! socket ──► reader thread ──► AsyncDotService queue ──► dispatcher/pool
+//!                │ (decode, admit)        │
+//!                └─► writer thread ◄──────┘ (tickets resolve)
+//!                     (responses stream out-of-order, by request id)
+//! ```
+//!
+//! Each accepted connection gets a **reader half** (decodes frames,
+//! admits requests) and a **writer half** (polls outstanding
+//! [`ResponseHandle`]s and writes whichever response resolves first) — so
+//! responses stream back in completion order, correlated by request id,
+//! and one slow sharded request never convoys the small requests behind
+//! it on the same connection.
+//!
+//! **Backpressure** (PROTOCOL.md §5): inline `DOT`/`SUM` requests are
+//! admitted with the non-blocking [`AsyncDotService::try_submit`] — a full
+//! queue becomes a `BUSY` error frame on the wire and nothing is enqueued.
+//! `BATCH` submissions use the blocking path instead: a full queue stalls
+//! the connection's reader, which stops draining the socket, which is TCP
+//! backpressure to the client.
+//!
+//! **Determinism**: the codec transports operands and results as IEEE-754
+//! bit patterns and the server feeds the *same* `AsyncDotService` pipeline
+//! in-process callers use, so at a fixed thread count a wire response is
+//! bit-identical to `submit_wait` on the same operands (pinned by
+//! `tests/integration.rs`).
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::runtime::backend::BackendError;
+
+use super::codec::{
+    self, ErrorCode, Opcode, Request, Response, WireError, WireResult, WireStats, HEADER_LEN,
+};
+use super::queue::{AsyncDotService, AsyncOptions, ResponseHandle, TrySubmit};
+use super::{ServeConfig, ServeResponse, SharedInput};
+
+/// How often the writer half re-polls outstanding tickets while waiting
+/// for new messages from the reader. Bounds response-streaming latency at
+/// light load without spinning.
+const WRITER_POLL: Duration = Duration::from_micros(50);
+
+/// How long [`WireClient`] sleeps between BUSY retries (PROTOCOL.md §5:
+/// BUSY means "nothing enqueued, retry later").
+const BUSY_RETRY_PAUSE: Duration = Duration::from_micros(100);
+
+/// Retry bound for [`WireClient`] before a BUSY response is surfaced to
+/// the caller as an error (a server that is BUSY for this many retries is
+/// not draining at all).
+const BUSY_RETRY_LIMIT: u64 = 1 << 20;
+
+fn io_runtime(context: &str, e: std::io::Error) -> BackendError {
+    BackendError::Runtime(format!("{context}: {e}"))
+}
+
+/// One registered connection: the acceptor's stream clone (for shutdown)
+/// and the reader thread's join handle. Entries accumulate until the
+/// server drops — connection lifetimes are bounded by the server's, which
+/// is the bench/test usage this front-end serves.
+struct Connection {
+    stream: TcpStream,
+    reader: Option<JoinHandle<()>>,
+}
+
+/// The `serve-net` server: a listener plus one acceptor thread feeding
+/// per-connection reader/writer thread pairs into an owned
+/// [`AsyncDotService`] (see the module docs). Dropping the server shuts
+/// down the listener, every connection and the service — a drain, not an
+/// abort: admitted requests complete first.
+pub struct NetServer {
+    service: Arc<AsyncDotService>,
+    local_addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    connections: Arc<Mutex<Vec<Connection>>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:4990"`; port 0 picks a free port —
+    /// read it back via [`Self::local_addr`]) and start serving: builds
+    /// the async pipeline for `cfg`/`opts` and spawns the acceptor.
+    pub fn bind(addr: &str, cfg: ServeConfig, opts: AsyncOptions) -> Result<Self, BackendError> {
+        let service = Arc::new(AsyncDotService::new(cfg, opts)?);
+        let listener = TcpListener::bind(addr).map_err(|e| io_runtime(&format!("bind {addr}"), e))?;
+        let local_addr = listener
+            .local_addr()
+            .map_err(|e| io_runtime("local_addr", e))?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let connections = Arc::new(Mutex::new(Vec::new()));
+        let acceptor = {
+            let service = Arc::clone(&service);
+            let shutdown = Arc::clone(&shutdown);
+            let connections = Arc::clone(&connections);
+            std::thread::Builder::new()
+                .name("kahan-net-accept".to_string())
+                .spawn(move || acceptor_main(listener, service, shutdown, connections))
+                .expect("spawn net acceptor")
+        };
+        Ok(Self {
+            service,
+            local_addr,
+            shutdown,
+            acceptor: Some(acceptor),
+            connections,
+        })
+    }
+
+    /// The address the listener actually bound (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The async pipeline behind the socket — same accessors in-process
+    /// callers get (`stats()`, `options()`, `service()` …).
+    pub fn service(&self) -> &Arc<AsyncDotService> {
+        &self.service
+    }
+}
+
+impl Drop for NetServer {
+    /// Orderly shutdown: raise the flag, self-dial to unblock `accept`,
+    /// join the acceptor, shut every connection's socket down (unblocking
+    /// its reader) and join the connection threads. The inner service then
+    /// drains in its own `Drop`.
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        let mut conns = self.connections.lock().unwrap_or_else(|p| p.into_inner());
+        for conn in conns.iter_mut() {
+            let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+        }
+        for conn in conns.iter_mut() {
+            if let Some(h) = conn.reader.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for NetServer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("NetServer")
+            .field("local_addr", &self.local_addr)
+            .field("service", &self.service)
+            .finish()
+    }
+}
+
+fn acceptor_main(
+    listener: TcpListener,
+    service: Arc<AsyncDotService>,
+    shutdown: Arc<AtomicBool>,
+    connections: Arc<Mutex<Vec<Connection>>>,
+) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(_) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if shutdown.load(Ordering::SeqCst) {
+            return; // the self-dial (or a raced client) during shutdown
+        }
+        // Latency over throughput for small frames.
+        let _ = stream.set_nodelay(true);
+        let Ok(registered) = stream.try_clone() else {
+            continue;
+        };
+        let reader = {
+            let service = Arc::clone(&service);
+            std::thread::Builder::new()
+                .name("kahan-net-read".to_string())
+                .spawn(move || connection_main(stream, service))
+                .expect("spawn net reader")
+        };
+        connections
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .push(Connection {
+                stream: registered,
+                reader: Some(reader),
+            });
+    }
+}
+
+/// Messages the reader half hands the writer half. Raw frames are written
+/// as-is; pending entries resolve out of order as their tickets complete.
+enum WriterMsg {
+    /// An already-encoded frame (errors, stats).
+    Raw(Vec<u8>),
+    /// One admitted request awaiting its ticket.
+    Pending { id: u64, handle: ResponseHandle },
+    /// One admitted batch: waited in submission order, answered with a
+    /// single batch-result frame (PROTOCOL.md §3.3).
+    Batch { id: u64, handles: Vec<ResponseHandle> },
+}
+
+/// Read exactly `buf.len()` bytes; `Ok(false)` on clean EOF *before the
+/// first byte* (the peer closed between frames), `Err` on mid-buffer EOF
+/// (a truncated frame) or any other I/O failure.
+pub(crate) fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> std::io::Result<bool> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(false);
+                }
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "eof inside a frame",
+                ));
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// Discard `n` bytes from the stream (resync after a malformed header
+/// whose payload length was still parseable).
+fn skip_bytes(r: &mut impl Read, mut n: usize) -> std::io::Result<()> {
+    let mut scratch = [0u8; 4096];
+    while n > 0 {
+        let take = n.min(scratch.len());
+        r.read_exact(&mut scratch[..take])?;
+        n -= take;
+    }
+    Ok(())
+}
+
+fn send(tx: &Sender<WriterMsg>, msg: WriterMsg) -> bool {
+    tx.send(msg).is_ok()
+}
+
+fn send_error(tx: &Sender<WriterMsg>, id: u64, code: ErrorCode, message: &str) -> bool {
+    send(tx, WriterMsg::Raw(codec::encode_error(id, code, message)))
+}
+
+/// Snapshot the pipeline counters into the wire stats payload
+/// (PROTOCOL.md §3.7).
+fn wire_stats(service: &AsyncDotService) -> WireStats {
+    let s = service.stats();
+    WireStats {
+        queue_depth: service.options().queue_depth as u64,
+        threads: service.threads() as u64,
+        enqueued: s.enqueued,
+        completed: s.completed,
+        arrival_batches: s.arrival_batches,
+        dispatches: s.dispatches,
+        max_queue_depth: s.max_queue_depth as u64,
+        busy_ns: s.busy_ns as u64,
+    }
+}
+
+/// The reader half: frame decode loop feeding the service and the writer.
+/// Exits on clean EOF, fatal protocol errors (PROTOCOL.md §4), I/O
+/// failure, or service shutdown; joins its writer before returning.
+fn connection_main(stream: TcpStream, service: Arc<AsyncDotService>) {
+    let writer_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (tx, rx) = std::sync::mpsc::channel::<WriterMsg>();
+    let writer = std::thread::Builder::new()
+        .name("kahan-net-write".to_string())
+        .spawn(move || writer_main(writer_stream, rx))
+        .expect("spawn net writer");
+    reader_loop(stream, &service, &tx);
+    drop(tx); // writer drains outstanding tickets, then exits
+    let _ = writer.join();
+}
+
+fn reader_loop(stream: TcpStream, service: &AsyncDotService, tx: &Sender<WriterMsg>) {
+    let mut reader = BufReader::new(stream);
+    loop {
+        let mut head = [0u8; HEADER_LEN];
+        match read_exact_or_eof(&mut reader, &mut head) {
+            Ok(true) => {}
+            Ok(false) | Err(_) => return,
+        }
+        let header = match codec::decode_header(&head) {
+            Ok(h) => h,
+            Err(e) if e.code == ErrorCode::Malformed => {
+                // Magic, version and the length cap all passed (they are
+                // checked first — PROTOCOL.md §2.2), so the length and id
+                // fields are trustworthy: skip the payload to stay
+                // frame-aligned and keep the connection.
+                let len = u32::from_le_bytes([head[16], head[17], head[18], head[19]]) as usize;
+                let id = u64::from_le_bytes([
+                    head[8], head[9], head[10], head[11], head[12], head[13], head[14], head[15],
+                ]);
+                if skip_bytes(&mut reader, len).is_err() {
+                    return;
+                }
+                if !send_error(tx, id, e.code, &e.message) {
+                    return;
+                }
+                continue;
+            }
+            Err(e) => {
+                // Bad magic/version/oversized: the stream is not
+                // frame-aligned (or not ours) — the id field cannot be
+                // trusted, so the error frame echoes id 0 and the
+                // connection closes (PROTOCOL.md §4).
+                let _ = send_error(tx, 0, e.code, &e.message);
+                return;
+            }
+        };
+        let mut payload = vec![0u8; header.payload_len as usize];
+        if header.payload_len > 0 && reader.read_exact(&mut payload).is_err() {
+            return;
+        }
+        let Some(opcode) = Opcode::from_byte(header.opcode) else {
+            if !send_error(
+                tx,
+                header.request_id,
+                ErrorCode::BadOpcode,
+                &format!("unassigned opcode byte {:#04x}", header.opcode),
+            ) {
+                return;
+            }
+            continue;
+        };
+        let request = match codec::decode_request(opcode, &payload) {
+            Ok(r) => r,
+            Err(e) => {
+                if !send_error(tx, header.request_id, e.code, &e.message) {
+                    return;
+                }
+                if e.code.is_fatal() {
+                    return;
+                }
+                continue;
+            }
+        };
+        if !handle_request(service, tx, header.request_id, request) {
+            return;
+        }
+    }
+}
+
+/// Admit one decoded request; `false` ends the connection.
+fn handle_request(
+    service: &AsyncDotService,
+    tx: &Sender<WriterMsg>,
+    id: u64,
+    request: Request,
+) -> bool {
+    match request {
+        Request::Stats => send(
+            tx,
+            WriterMsg::Raw(codec::encode_stats_result(id, &wire_stats(service))),
+        ),
+        Request::Submit(input) => match service.try_submit(input) {
+            Ok(TrySubmit::Accepted(handle)) => send(tx, WriterMsg::Pending { id, handle }),
+            Ok(TrySubmit::Busy) => send_error(
+                tx,
+                id,
+                ErrorCode::Busy,
+                "submission queue full; retry (PROTOCOL.md §5)",
+            ),
+            Err(BackendError::Runtime(msg)) => {
+                let _ = send_error(tx, id, ErrorCode::Shutdown, &msg);
+                false
+            }
+            Err(e) => send_error(tx, id, ErrorCode::Invalid, &e.to_string()),
+        },
+        Request::Batch(inputs) => submit_batch(service, tx, id, inputs),
+    }
+}
+
+/// Batched admission: validate everything first (one bad request fails the
+/// whole batch before anything enqueues — same atomicity as the in-process
+/// API), then submit through the *blocking* path: a full queue stalls this
+/// reader, i.e. socket-level backpressure (PROTOCOL.md §5).
+fn submit_batch(
+    service: &AsyncDotService,
+    tx: &Sender<WriterMsg>,
+    id: u64,
+    inputs: Vec<SharedInput>,
+) -> bool {
+    for input in &inputs {
+        if let Err(e) = input.view().check(service.service().spec_for(&input.view())) {
+            return send_error(tx, id, ErrorCode::Invalid, &e.to_string());
+        }
+    }
+    let mut handles = Vec::with_capacity(inputs.len());
+    for input in inputs {
+        match service.submit(input) {
+            Ok(handle) => handles.push(handle),
+            Err(e) => {
+                let _ = send_error(tx, id, ErrorCode::Shutdown, &e.to_string());
+                return false;
+            }
+        }
+    }
+    send(tx, WriterMsg::Batch { id, handles })
+}
+
+fn result_of(response: ServeResponse) -> WireResult {
+    WireResult {
+        value: response.value,
+        n: response.n as u64,
+        path: response.path,
+    }
+}
+
+/// Encode one resolved ticket: a result frame, or an internal-error frame
+/// if the request failed inside the pipeline (dispatcher drain, worker
+/// panic).
+fn resolve_frame(id: u64, handle: ResponseHandle) -> Vec<u8> {
+    match handle.wait() {
+        Ok(response) => codec::encode_result(id, &result_of(response)),
+        Err(e) => codec::encode_error(id, ErrorCode::Internal, &e.to_string()),
+    }
+}
+
+/// The writer half: owns the socket's write side. Raw frames go straight
+/// out; pending tickets are polled with `try_wait` and written in
+/// *completion* order (the out-of-order streaming the per-request ids
+/// exist for); batches block until fully resolved and go out as one
+/// frame. Exits once the reader hung up and every pending ticket is
+/// written, or on any write failure.
+fn writer_main(stream: TcpStream, rx: Receiver<WriterMsg>) {
+    let mut out = BufWriter::new(stream);
+    let mut pending: Vec<(u64, ResponseHandle)> = Vec::new();
+    let mut open = true;
+    loop {
+        // Flush whatever has resolved since the last pass.
+        let mut wrote = false;
+        let mut i = 0;
+        while i < pending.len() {
+            if pending[i].1.try_wait().is_some() {
+                let (id, handle) = pending.swap_remove(i);
+                if out.write_all(&resolve_frame(id, handle)).is_err() {
+                    return;
+                }
+                wrote = true;
+            } else {
+                i += 1;
+            }
+        }
+        if wrote && out.flush().is_err() {
+            return;
+        }
+        if pending.is_empty() && !open {
+            return;
+        }
+        let msg = if !open {
+            std::thread::sleep(WRITER_POLL);
+            None
+        } else if pending.is_empty() {
+            match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => {
+                    open = false;
+                    None
+                }
+            }
+        } else {
+            match rx.recv_timeout(WRITER_POLL) {
+                Ok(m) => Some(m),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => {
+                    open = false;
+                    None
+                }
+            }
+        };
+        match msg {
+            None => {}
+            Some(WriterMsg::Raw(frame)) => {
+                if out.write_all(&frame).is_err() || out.flush().is_err() {
+                    return;
+                }
+            }
+            Some(WriterMsg::Pending { id, handle }) => pending.push((id, handle)),
+            Some(WriterMsg::Batch { id, handles }) => {
+                let mut results = Vec::with_capacity(handles.len());
+                let mut failed: Option<BackendError> = None;
+                for handle in handles {
+                    match handle.wait() {
+                        Ok(response) => results.push(result_of(response)),
+                        Err(e) => {
+                            failed.get_or_insert(e);
+                        }
+                    }
+                }
+                let frame = match failed {
+                    None => codec::encode_batch_result(id, &results),
+                    Some(e) => codec::encode_error(id, ErrorCode::Internal, &e.to_string()),
+                };
+                if out.write_all(&frame).is_err() || out.flush().is_err() {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// A call failure as seen by [`WireClient`].
+#[derive(Debug)]
+pub enum WireCallError {
+    /// The socket failed.
+    Io(std::io::Error),
+    /// The response could not be decoded, or violated the protocol (wrong
+    /// id, wrong frame kind).
+    Protocol(WireError),
+    /// The server answered with a typed error frame (PROTOCOL.md §4).
+    Server(WireError),
+}
+
+impl std::fmt::Display for WireCallError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireCallError::Io(e) => write!(f, "wire i/o: {e}"),
+            WireCallError::Protocol(e) => write!(f, "wire protocol: {e}"),
+            WireCallError::Server(e) => write!(f, "server error: {e}"),
+        }
+    }
+}
+
+impl From<std::io::Error> for WireCallError {
+    fn from(e: std::io::Error) -> Self {
+        WireCallError::Io(e)
+    }
+}
+
+/// A blocking, single-connection protocol client: one request in flight at
+/// a time, BUSY responses retried transparently (counted in
+/// [`Self::busy_retries`]). The multi-connection pipelined load generator
+/// lives in [`loadgen`](super::loadgen); this client is the simple
+/// building block the tests and CLI probes use.
+pub struct WireClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    next_id: u64,
+    busy_retries: u64,
+}
+
+impl WireClient {
+    /// Connect to a `serve-net` server.
+    pub fn connect(addr: impl ToSocketAddrs) -> std::io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        let write_half = stream.try_clone()?;
+        Ok(Self {
+            reader: BufReader::new(stream),
+            writer: BufWriter::new(write_half),
+            next_id: 1,
+            busy_retries: 0,
+        })
+    }
+
+    /// BUSY retries absorbed so far (PROTOCOL.md §5 round trips that
+    /// re-sent a request).
+    pub fn busy_retries(&self) -> u64 {
+        self.busy_retries
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Read exactly one response frame addressed to `id`.
+    fn read_response(&mut self, id: u64) -> Result<Response, WireCallError> {
+        let mut head = [0u8; HEADER_LEN];
+        self.reader.read_exact(&mut head)?;
+        let header = codec::decode_header(&head).map_err(WireCallError::Protocol)?;
+        let mut payload = vec![0u8; header.payload_len as usize];
+        if header.payload_len > 0 {
+            self.reader.read_exact(&mut payload)?;
+        }
+        let opcode = Opcode::from_byte(header.opcode).ok_or_else(|| {
+            WireCallError::Protocol(WireError::new(
+                ErrorCode::BadOpcode,
+                format!("unassigned response opcode {:#04x}", header.opcode),
+            ))
+        })?;
+        if header.request_id != id {
+            return Err(WireCallError::Protocol(WireError::new(
+                ErrorCode::Malformed,
+                format!("response id {} for request {}", header.request_id, id),
+            )));
+        }
+        codec::decode_response(opcode, &payload).map_err(WireCallError::Protocol)
+    }
+
+    /// Send one frame and read its response, transparently retrying BUSY.
+    fn call(&mut self, frame: &[u8], id: u64) -> Result<Response, WireCallError> {
+        let mut tries = 0u64;
+        loop {
+            self.writer.write_all(frame)?;
+            self.writer.flush()?;
+            match self.read_response(id)? {
+                Response::Error(e) if e.code == ErrorCode::Busy => {
+                    tries += 1;
+                    self.busy_retries += 1;
+                    if tries >= BUSY_RETRY_LIMIT {
+                        return Err(WireCallError::Server(e));
+                    }
+                    std::thread::sleep(BUSY_RETRY_PAUSE);
+                }
+                Response::Error(e) => return Err(WireCallError::Server(e)),
+                other => return Ok(other),
+            }
+        }
+    }
+
+    fn expect_result(resp: Response) -> Result<WireResult, WireCallError> {
+        match resp {
+            Response::Result(r) => Ok(r),
+            other => Err(WireCallError::Protocol(WireError::new(
+                ErrorCode::Malformed,
+                format!("expected a result frame, got {other:?}"),
+            ))),
+        }
+    }
+
+    /// One dot product over the wire (PROTOCOL.md §3.1).
+    pub fn dot(&mut self, x: &[f64], y: &[f64]) -> Result<WireResult, WireCallError> {
+        let id = self.fresh_id();
+        let frame = codec::encode_dot(id, x, y);
+        Self::expect_result(self.call(&frame, id)?)
+    }
+
+    /// One sum over the wire (PROTOCOL.md §3.2).
+    pub fn sum(&mut self, x: &[f64]) -> Result<WireResult, WireCallError> {
+        let id = self.fresh_id();
+        let frame = codec::encode_sum(id, x);
+        Self::expect_result(self.call(&frame, id)?)
+    }
+
+    /// One batched submission over the wire (PROTOCOL.md §3.3); results
+    /// come back in submission order.
+    pub fn batch(&mut self, inputs: &[SharedInput]) -> Result<Vec<WireResult>, WireCallError> {
+        let id = self.fresh_id();
+        let frame = codec::encode_batch(id, inputs);
+        match self.call(&frame, id)? {
+            Response::Batch(results) => Ok(results),
+            other => Err(WireCallError::Protocol(WireError::new(
+                ErrorCode::Malformed,
+                format!("expected a batch-result frame, got {other:?}"),
+            ))),
+        }
+    }
+
+    /// Probe the server's pipeline counters (PROTOCOL.md §3.4/§3.7).
+    pub fn stats(&mut self) -> Result<WireStats, WireCallError> {
+        let id = self.fresh_id();
+        let frame = codec::encode_stats(id);
+        match self.call(&frame, id)? {
+            Response::Stats(stats) => Ok(stats),
+            other => Err(WireCallError::Protocol(WireError::new(
+                ErrorCode::Malformed,
+                format!("expected a stats frame, got {other:?}"),
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::ImplStyle;
+    use crate::serve::{DotService, ThresholdMode};
+    use crate::util::rng::Rng;
+
+    fn cfg(threads: usize, threshold: usize) -> ServeConfig {
+        ServeConfig {
+            threads,
+            style: ImplStyle::SimdLanes,
+            compensated: true,
+            shard_threshold: ThresholdMode::Fixed(threshold),
+            freq_ghz: 3.0,
+        }
+    }
+
+    fn randvec(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn loopback_dot_matches_in_process_bits() {
+        let server = NetServer::bind("127.0.0.1:0", cfg(2, 1000), AsyncOptions::default()).unwrap();
+        let reference = DotService::new(cfg(2, 1000)).unwrap();
+        let mut client = WireClient::connect(server.local_addr()).unwrap();
+        for (i, n) in [8usize, 999, 1000, 4096].into_iter().enumerate() {
+            let x = randvec(n, 50 + i as u64);
+            let y = randvec(n, 150 + i as u64);
+            let wire = client.dot(&x, &y).unwrap();
+            let local = reference
+                .submit(&crate::runtime::backend::KernelInput::Dot(&x, &y))
+                .unwrap();
+            assert_eq!(wire.value.to_bits(), local.value.to_bits(), "n={n}");
+            assert_eq!(wire.path, local.path);
+            assert_eq!(wire.n, n as u64);
+        }
+    }
+
+    #[test]
+    fn loopback_stats_and_garbage_handling() {
+        let server = NetServer::bind("127.0.0.1:0", cfg(1, usize::MAX), AsyncOptions::default())
+            .unwrap();
+        let mut client = WireClient::connect(server.local_addr()).unwrap();
+        let x = randvec(64, 3);
+        client.dot(&x, &x).unwrap();
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.threads, 1);
+        assert!(stats.enqueued >= 1);
+        assert!(stats.completed >= 1);
+        // An unassigned opcode draws a typed BAD_OPCODE error frame and
+        // the connection stays usable (PROTOCOL.md §4.3).
+        let id = client.fresh_id();
+        let mut frame = codec::encode_stats(id);
+        frame[5] = 0x42; // clobber the opcode byte
+        match client.call(&frame, id) {
+            Err(WireCallError::Server(e)) => assert_eq!(e.code, ErrorCode::BadOpcode),
+            other => panic!("expected a BadOpcode error frame, got {other:?}"),
+        }
+        // Batches still round-trip on the same connection afterwards.
+        let results = client.batch(&[SharedInput::sum(&x)]).unwrap();
+        assert_eq!(results.len(), 1);
+        client.sum(&x).unwrap();
+    }
+}

@@ -102,6 +102,27 @@ enum Pop<T> {
     Closed,
 }
 
+/// Why a non-blocking push was refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum TryPush {
+    /// The queue is at its configured depth.
+    Full,
+    /// The queue is closed (service shutting down).
+    Closed,
+}
+
+/// Outcome of a non-blocking submission
+/// ([`AsyncDotService::try_submit`]).
+#[derive(Debug)]
+pub enum TrySubmit {
+    /// The request was admitted; resolve it through the handle as usual.
+    Accepted(ResponseHandle),
+    /// The queue was at depth: nothing was enqueued and the caller may
+    /// retry. The wire server turns this into the documented BUSY error
+    /// frame (`docs/PROTOCOL.md` §5) instead of blocking the connection.
+    Busy,
+}
+
 /// Depth-bounded MPSC queue with blocking backpressure: `push` blocks
 /// while the queue is full, `close` wakes everyone and lets already-queued
 /// items drain. Built on a mutex + two condvars so the depth bound is
@@ -155,6 +176,28 @@ impl<T> BoundedQueue<T> {
             }
             s = self.not_full.wait(s).unwrap();
         }
+    }
+
+    /// Non-blocking bounded push: `Ok(())` when admitted, `Err` returning
+    /// the item when the queue is at depth ([`TryPush::Full`]) or closed
+    /// ([`TryPush::Closed`]). The wire front-end uses this so a full queue
+    /// becomes a BUSY response on the socket instead of a blocked
+    /// connection thread.
+    fn try_push(&self, item: T) -> Result<(), (T, TryPush)> {
+        let mut s = self.shared.lock().unwrap();
+        if s.closed {
+            return Err((item, TryPush::Closed));
+        }
+        if s.items.len() >= self.depth {
+            return Err((item, TryPush::Full));
+        }
+        s.items.push_back(item);
+        s.enqueued += 1;
+        if s.items.len() > s.max_depth_seen {
+            s.max_depth_seen = s.items.len();
+        }
+        self.not_empty.notify_one();
+        Ok(())
     }
 
     /// Block until an item is available or the queue is closed *and*
@@ -490,6 +533,43 @@ impl AsyncDotService {
             .push(queued)
             .map_err(|_| BackendError::Runtime("service is shut down".to_string()))?;
         Ok(ResponseHandle { ticket })
+    }
+
+    /// Non-blocking [`Self::submit`]: a full queue returns
+    /// [`TrySubmit::Busy`] (nothing enqueued, caller may retry) instead of
+    /// blocking. Invalid requests still fail with the usual validation
+    /// error; a closed queue fails with the usual shutdown error.
+    pub fn try_submit(&self, input: SharedInput) -> Result<TrySubmit, BackendError> {
+        self.try_submit_with_arrival(input, Instant::now())
+    }
+
+    /// [`Self::try_submit`] with an explicit arrival instant to measure
+    /// latency from (same contract as [`Self::submit_with_arrival`]).
+    pub fn try_submit_with_arrival(
+        &self,
+        input: SharedInput,
+        arrival: Instant,
+    ) -> Result<TrySubmit, BackendError> {
+        input.view().check(self.service.spec_for(&input.view()))?;
+        let ticket = Arc::new(Ticket::new());
+        let queued = QueuedRequest {
+            input,
+            ticket: Arc::clone(&ticket),
+            arrival,
+        };
+        match self.queue.try_push(queued) {
+            Ok(()) => Ok(TrySubmit::Accepted(ResponseHandle { ticket })),
+            Err((queued, TryPush::Full)) => {
+                // The drop backstop resolves the ticket with an error, but
+                // no handle was handed out, so nothing observes it.
+                drop(queued);
+                Ok(TrySubmit::Busy)
+            }
+            Err((queued, TryPush::Closed)) => {
+                drop(queued);
+                Err(BackendError::Runtime("service is shut down".to_string()))
+            }
+        }
     }
 
     /// The synchronous API over the pipeline: submit every request, then
@@ -929,6 +1009,59 @@ mod tests {
         asy.queue.close();
         let err = asy.submit(shared_dot(16, 3)).unwrap_err();
         assert!(matches!(err, BackendError::Runtime(_)));
+    }
+
+    #[test]
+    fn try_push_reports_full_and_closed() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        match q.try_push(3) {
+            Err((item, TryPush::Full)) => assert_eq!(item, 3),
+            other => panic!("expected Full, got {:?}", other),
+        }
+        // Draining one slot re-admits.
+        assert!(matches!(q.try_pop(), Pop::Item(1)));
+        assert!(q.try_push(3).is_ok());
+        q.close();
+        match q.try_push(4) {
+            Err((item, TryPush::Closed)) => assert_eq!(item, 4),
+            other => panic!("expected Closed, got {:?}", other),
+        }
+        // Depth accounting saw the exact bound.
+        let (enqueued, max_depth) = q.counters();
+        assert_eq!(enqueued, 3);
+        assert_eq!(max_depth, 2);
+    }
+
+    #[test]
+    fn try_submit_accepts_and_matches_sync_bits() {
+        let asy = AsyncDotService::new(cfg(2, 1000), AsyncOptions::default()).unwrap();
+        let input = shared_dot(700, 77);
+        let want = asy.service().submit(&input.view()).unwrap();
+        let handle = match asy.try_submit(input).unwrap() {
+            TrySubmit::Accepted(h) => h,
+            TrySubmit::Busy => panic!("empty queue must admit"),
+        };
+        let got = handle.wait().unwrap();
+        assert_eq!(got.value.to_bits(), want.value.to_bits());
+    }
+
+    #[test]
+    fn try_submit_validates_and_fails_after_shutdown() {
+        let asy = AsyncDotService::new(cfg(1, 100), AsyncOptions::default()).unwrap();
+        let x = crate::runtime::arena::AlignedVec::copy_from(&[1.0, 2.0]);
+        let y = crate::runtime::arena::AlignedVec::copy_from(&[1.0]);
+        let bad = SharedInput::Dot(Arc::new(x), Arc::new(y));
+        assert!(matches!(
+            asy.try_submit(bad),
+            Err(BackendError::ShapeMismatch { .. })
+        ));
+        asy.queue.close();
+        assert!(matches!(
+            asy.try_submit(shared_dot(16, 5)),
+            Err(BackendError::Runtime(_))
+        ));
     }
 
     #[test]

@@ -23,6 +23,7 @@ pub enum ExecPath {
 }
 
 impl ExecPath {
+    /// The label bench artifacts and wire stats record for this path.
     pub fn label(self) -> &'static str {
         match self {
             ExecPath::Fused => "fused",
@@ -47,6 +48,7 @@ impl DispatchPlan {
         self.fused.len() + self.sharded.len()
     }
 
+    /// `true` when the plan routes no requests at all.
     pub fn is_empty(&self) -> bool {
         self.fused.is_empty() && self.sharded.is_empty()
     }
@@ -61,10 +63,13 @@ pub struct BatchScheduler {
 }
 
 impl BatchScheduler {
+    /// A scheduler that shards requests of at least `shard_threshold`
+    /// updates.
     pub fn new(shard_threshold: usize) -> Self {
         Self { shard_threshold }
     }
 
+    /// The crossover this scheduler classifies with.
     pub fn shard_threshold(&self) -> usize {
         self.shard_threshold
     }

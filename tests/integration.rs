@@ -275,6 +275,196 @@ fn serving_layer_end_to_end() {
     assert!(!defs[0].needs_artifacts);
 }
 
+/// The TCP wire front-end end to end through the public API: a loopback
+/// `serve-net` round trip is bit-identical to the in-process service at
+/// the same thread count — inline dot and sum on both sides of the
+/// fused/sharded crossover, a mixed batch answered in submission order,
+/// and a stats probe that reflects the traffic.
+#[test]
+fn wire_front_end_loopback_bit_parity() {
+    use kahan_ecm::runtime::backend::{ImplStyle, KernelInput};
+    use kahan_ecm::serve::{
+        AsyncOptions, DotService, NetServer, ServeConfig, SharedInput, ThresholdMode, WireClient,
+    };
+
+    let cfg = ServeConfig {
+        threads: 2,
+        style: ImplStyle::SimdLanes,
+        compensated: true,
+        shard_threshold: ThresholdMode::Fixed(1000),
+        freq_ghz: 3.0,
+    };
+    let server = NetServer::bind("127.0.0.1:0", cfg.clone(), AsyncOptions::default()).unwrap();
+    let reference = DotService::new(cfg).unwrap();
+    let mut client = WireClient::connect(server.local_addr()).unwrap();
+
+    // Straddle the crossover: 8/999 fuse, 1000/4096 shard.
+    for n in [8usize, 999, 1000, 4096] {
+        let x: Vec<f64> = (0..n).map(|i| 0.25 + (i as f64) * 1e-3).collect();
+        let y: Vec<f64> = (0..n).map(|i| 1.0 - (i as f64) * 1e-4).collect();
+        let wire = client.dot(&x, &y).unwrap();
+        let local = reference.submit(&KernelInput::Dot(&x, &y)).unwrap();
+        assert_eq!(wire.value.to_bits(), local.value.to_bits(), "dot n = {n}");
+        assert_eq!(wire.path, local.path, "dot n = {n}");
+        assert_eq!(wire.n, n as u64);
+        let wire_sum = client.sum(&x).unwrap();
+        let local_sum = reference.submit(&KernelInput::Sum(&x)).unwrap();
+        assert_eq!(wire_sum.value.to_bits(), local_sum.value.to_bits(), "sum n = {n}");
+    }
+
+    // A batch crossing the threshold comes back in submission order.
+    let small = SharedInput::dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]);
+    let big_x: Vec<f64> = (0..2048).map(|i| ((i % 7) as f64) * 0.5).collect();
+    let big = SharedInput::dot(&big_x, &big_x);
+    let tail = SharedInput::sum(&big_x);
+    let results = client.batch(&[small.clone(), big.clone(), tail.clone()]).unwrap();
+    assert_eq!(results.len(), 3);
+    for (wire, input) in results.iter().zip([&small, &big, &tail]) {
+        let local = reference.submit(&input.view()).unwrap();
+        assert_eq!(wire.value.to_bits(), local.value.to_bits());
+        assert_eq!(wire.path, local.path);
+    }
+
+    // The stats probe reflects this client's traffic: 8 inline + 3 batched.
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.threads, 2);
+    assert!(stats.completed >= 11, "completed = {}", stats.completed);
+    assert!(stats.enqueued >= stats.completed);
+    assert_eq!(client.busy_retries(), 0);
+}
+
+/// Hostile bytes on the wire get the PROTOCOL.md treatment: bad magic and
+/// a wrong version are answered with a typed error frame and a close
+/// (fatal — the stream is no longer frame-aligned), while an unknown
+/// opcode gets a typed error and leaves the connection fully usable.
+#[test]
+fn wire_front_end_rejects_garbage() {
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
+
+    use kahan_ecm::runtime::backend::ImplStyle;
+    use kahan_ecm::serve::codec::{self, ErrorCode, Opcode, Response, HEADER_LEN, VERSION};
+    use kahan_ecm::serve::{AsyncOptions, NetServer, ServeConfig, ThresholdMode};
+
+    let cfg = ServeConfig {
+        threads: 1,
+        style: ImplStyle::SimdLanes,
+        compensated: true,
+        shard_threshold: ThresholdMode::Fixed(100),
+        freq_ghz: 3.0,
+    };
+    let server = NetServer::bind("127.0.0.1:0", cfg, AsyncOptions::default()).unwrap();
+
+    fn read_frame(s: &mut TcpStream) -> (u64, Response) {
+        let mut head = [0u8; HEADER_LEN];
+        s.read_exact(&mut head).unwrap();
+        let h = codec::decode_header(&head).unwrap();
+        let mut payload = vec![0u8; h.payload_len as usize];
+        s.read_exact(&mut payload).unwrap();
+        let op = Opcode::from_byte(h.opcode).expect("response opcode");
+        (h.request_id, codec::decode_response(op, &payload).unwrap())
+    }
+    fn expect_error(resp: Response, code: ErrorCode) {
+        match resp {
+            Response::Error(e) => assert_eq!(e.code, code, "{}", e.message),
+            other => panic!("expected {code:?} error, got {other:?}"),
+        }
+    }
+    fn expect_eof(s: &mut TcpStream) {
+        let mut byte = [0u8; 1];
+        assert_eq!(s.read(&mut byte).unwrap(), 0, "server must close the stream");
+    }
+
+    // Bad magic: typed error (request id unattributable -> 0), then close.
+    let mut s = TcpStream::connect(server.local_addr()).unwrap();
+    let mut frame = codec::encode_stats(9);
+    frame[0] = b'X';
+    s.write_all(&frame).unwrap();
+    let (id, resp) = read_frame(&mut s);
+    assert_eq!(id, 0);
+    expect_error(resp, ErrorCode::BadMagic);
+    expect_eof(&mut s);
+
+    // Wrong version: same fatal treatment.
+    let mut s = TcpStream::connect(server.local_addr()).unwrap();
+    let mut frame = codec::encode_stats(9);
+    frame[4] = VERSION + 1;
+    s.write_all(&frame).unwrap();
+    let (_, resp) = read_frame(&mut s);
+    expect_error(resp, ErrorCode::BadVersion);
+    expect_eof(&mut s);
+
+    // Unknown opcode: typed error with the offending request id, and the
+    // connection keeps serving.
+    let mut s = TcpStream::connect(server.local_addr()).unwrap();
+    let mut frame = codec::encode_stats(5);
+    frame[5] = 0x42;
+    s.write_all(&frame).unwrap();
+    let (id, resp) = read_frame(&mut s);
+    assert_eq!(id, 5);
+    expect_error(resp, ErrorCode::BadOpcode);
+    s.write_all(&codec::encode_sum(6, &[1.0, 2.0, 4.0])).unwrap();
+    let (id, resp) = read_frame(&mut s);
+    assert_eq!(id, 6);
+    match resp {
+        Response::Result(r) => assert_eq!(r.value.to_bits(), 7.0f64.to_bits()),
+        other => panic!("expected a result, got {other:?}"),
+    }
+}
+
+/// The wire load generator against a loopback server is bit-identical to
+/// the in-process async pipeline at the same seed and thread count — the
+/// `serve-bench` wire row's hard parity gate, as a test.
+#[test]
+fn wire_loadgen_checksum_parity() {
+    use kahan_ecm::runtime::backend::ImplStyle;
+    use kahan_ecm::serve::{
+        run_load_async, run_load_wire, AsyncDotService, AsyncOptions, MixEntry, NetServer,
+        OperandPool, ServeConfig, ThresholdMode,
+    };
+
+    let cfg = ServeConfig {
+        threads: 2,
+        style: ImplStyle::SimdLanes,
+        compensated: true,
+        shard_threshold: ThresholdMode::Fixed(1024),
+        freq_ghz: 3.0,
+    };
+    let mix = vec![
+        MixEntry { n: 128, weight: 0.75 },
+        MixEntry { n: 2048, weight: 0.25 },
+    ];
+    let server = NetServer::bind("127.0.0.1:0", cfg.clone(), AsyncOptions::default()).unwrap();
+    let fpu = server.service().service().dot_spec().class.flops_per_update();
+    let ops = OperandPool::generate(&mix, 3, server.service().service().pool());
+    let wire = run_load_wire(
+        &server.local_addr().to_string(),
+        &mix,
+        &ops,
+        32,
+        1e6,
+        2,
+        fpu,
+        3,
+    )
+    .unwrap();
+
+    let pipeline = AsyncDotService::new(cfg, AsyncOptions::default()).unwrap();
+    let local_ops = OperandPool::generate(&mix, 3, pipeline.service().pool());
+    let local = run_load_async(&pipeline, &mix, &local_ops, 32, 1e6, 3).unwrap();
+    assert_eq!(
+        wire.load.checksum.to_bits(),
+        local.load.checksum.to_bits(),
+        "wire vs in-process checksum"
+    );
+    assert_eq!(
+        (wire.load.fused, wire.load.sharded),
+        (local.load.fused, local.load.sharded)
+    );
+    assert_eq!(wire.connections, 2);
+    assert!(wire.max_queue_depth <= wire.queue_depth);
+}
+
 /// Artifact -> PJRT -> numerics, on adversarial cancellation data (skips
 /// cleanly without artifacts or without a real PJRT runtime).
 ///

@@ -916,3 +916,261 @@ fn async_shutdown_drains_accepted_work() {
         assert_eq!(got.path, want.path);
     }
 }
+
+/// Wire-codec round trips are bit-exact for every opcode: any frame built
+/// by an encoder decodes back to the same request or response, with every
+/// `f64` compared as its raw IEEE-754 bit pattern — the codec never
+/// parses, formats, or rounds a value (PROTOCOL.md §1, §3.1).
+#[test]
+fn wire_codec_round_trips_bit_exact() {
+    use kahan_ecm::serve::codec::{
+        self, ErrorCode, Opcode, Request, Response, WireResult, WireStats, HEADER_LEN,
+    };
+
+    fn split(frame: &[u8]) -> (Opcode, u64, Vec<u8>) {
+        let head: &[u8; HEADER_LEN] = frame[..HEADER_LEN].try_into().unwrap();
+        let h = codec::decode_header(head).unwrap();
+        let payload = frame[HEADER_LEN..].to_vec();
+        assert_eq!(payload.len(), h.payload_len as usize);
+        (Opcode::from_byte(h.opcode).unwrap(), h.request_id, payload)
+    }
+    fn assert_same_input(a: &SharedInput, b: &SharedInput) {
+        match (a.view(), b.view()) {
+            (KernelInput::Dot(ax, ay), KernelInput::Dot(bx, by)) => {
+                assert_eq!((ax.len(), ay.len()), (bx.len(), by.len()));
+                for (p, q) in ax.iter().zip(bx).chain(ay.iter().zip(by)) {
+                    assert_eq!(p.to_bits(), q.to_bits());
+                }
+            }
+            (KernelInput::Sum(ax), KernelInput::Sum(bx)) => {
+                assert_eq!(ax.len(), bx.len());
+                for (p, q) in ax.iter().zip(bx) {
+                    assert_eq!(p.to_bits(), q.to_bits());
+                }
+            }
+            _ => panic!("request kind changed across the wire"),
+        }
+    }
+
+    property("codec round trips bit-exact", 40, |g| {
+        let id = g.u64(0, u64::MAX - 1);
+        let n = g.usize(0, 300);
+        let x = g.vec_f64_log(n, -30, 30);
+        let y = g.vec_f64_log(n, -30, 30);
+
+        // Inline dot and sum requests (PROTOCOL.md §3.1–3.2).
+        let frame = codec::encode_dot(id, &x, &y);
+        assert_eq!(frame.len(), HEADER_LEN + codec::dot_payload_len(n));
+        let (op, rid, payload) = split(&frame);
+        assert_eq!(rid, id);
+        match codec::decode_request(op, &payload).unwrap() {
+            Request::Submit(input) => assert_same_input(&input, &SharedInput::dot(&x, &y)),
+            other => panic!("expected a dot submit, got {other:?}"),
+        }
+        let frame = codec::encode_sum(id, &x);
+        assert_eq!(frame.len(), HEADER_LEN + codec::sum_payload_len(n));
+        let (op, _, payload) = split(&frame);
+        match codec::decode_request(op, &payload).unwrap() {
+            Request::Submit(input) => assert_same_input(&input, &SharedInput::sum(&x)),
+            other => panic!("expected a sum submit, got {other:?}"),
+        }
+
+        // A mixed batch (PROTOCOL.md §3.3) keeps kinds, order, and bits.
+        let count = g.usize(1, 4);
+        let inputs: Vec<SharedInput> = (0..count)
+            .map(|i| {
+                if (i + n) % 2 == 0 {
+                    SharedInput::sum(&x)
+                } else {
+                    SharedInput::dot(&x, &y)
+                }
+            })
+            .collect();
+        let (op, _, payload) = split(&codec::encode_batch(id, &inputs));
+        match codec::decode_request(op, &payload).unwrap() {
+            Request::Batch(decoded) => {
+                assert_eq!(decoded.len(), inputs.len());
+                for (d, i) in decoded.iter().zip(&inputs) {
+                    assert_same_input(d, i);
+                }
+            }
+            other => panic!("expected a batch, got {other:?}"),
+        }
+
+        // Stats probe (PROTOCOL.md §3.4) — empty payload.
+        let (op, _, payload) = split(&codec::encode_stats(id));
+        assert!(payload.is_empty());
+        assert!(matches!(codec::decode_request(op, &payload).unwrap(), Request::Stats));
+
+        // Scalar result (PROTOCOL.md §3.5), including negative zero and
+        // whatever magnitudes the generator produced.
+        let result = WireResult {
+            value: if n > 0 { x[0] } else { -0.0 },
+            n: n as u64,
+            path: if g.bool() { ExecPath::Fused } else { ExecPath::Sharded },
+        };
+        let (op, rid, payload) = split(&codec::encode_result(id, &result));
+        assert_eq!(rid, id);
+        match codec::decode_response(op, &payload).unwrap() {
+            Response::Result(r) => {
+                assert_eq!(r.value.to_bits(), result.value.to_bits());
+                assert_eq!((r.n, r.path), (result.n, result.path));
+            }
+            other => panic!("expected a result, got {other:?}"),
+        }
+
+        // Batch result (PROTOCOL.md §3.6) in submission order.
+        let results: Vec<WireResult> = (0..count)
+            .map(|i| WireResult {
+                value: if n > 0 { x[i % n.max(1)] } else { 0.0 },
+                n: i as u64,
+                path: if i % 2 == 0 { ExecPath::Fused } else { ExecPath::Sharded },
+            })
+            .collect();
+        let (op, _, payload) = split(&codec::encode_batch_result(id, &results));
+        match codec::decode_response(op, &payload).unwrap() {
+            Response::Batch(decoded) => {
+                assert_eq!(decoded.len(), results.len());
+                for (d, r) in decoded.iter().zip(&results) {
+                    assert_eq!(d.value.to_bits(), r.value.to_bits());
+                    assert_eq!((d.n, d.path), (r.n, r.path));
+                }
+            }
+            other => panic!("expected a batch result, got {other:?}"),
+        }
+
+        // Stats snapshot (PROTOCOL.md §3.7): eight u64s survive verbatim.
+        let stats = WireStats {
+            queue_depth: g.u64(0, 1 << 20),
+            threads: g.u64(1, 256),
+            enqueued: g.u64(0, u64::MAX - 1),
+            completed: g.u64(0, u64::MAX - 1),
+            arrival_batches: g.u64(0, 1 << 40),
+            dispatches: g.u64(0, 1 << 40),
+            max_queue_depth: g.u64(0, 1 << 20),
+            busy_ns: g.u64(0, u64::MAX - 1),
+        };
+        let (op, _, payload) = split(&codec::encode_stats_result(id, &stats));
+        match codec::decode_response(op, &payload).unwrap() {
+            Response::Stats(s) => assert_eq!(s, stats),
+            other => panic!("expected stats, got {other:?}"),
+        }
+
+        // Typed error frame (PROTOCOL.md §4): every code round-trips.
+        let code = *g.choose(&[
+            ErrorCode::BadMagic,
+            ErrorCode::BadVersion,
+            ErrorCode::BadOpcode,
+            ErrorCode::Malformed,
+            ErrorCode::Oversized,
+            ErrorCode::Invalid,
+            ErrorCode::Busy,
+            ErrorCode::Shutdown,
+            ErrorCode::Internal,
+        ]);
+        let (op, _, payload) = split(&codec::encode_error(id, code, "synthetic diagnostic"));
+        match codec::decode_response(op, &payload).unwrap() {
+            Response::Error(e) => {
+                assert_eq!(e.code, code);
+                assert_eq!(e.message, "synthetic diagnostic");
+            }
+            other => panic!("expected an error frame, got {other:?}"),
+        }
+    });
+}
+
+/// Hostile payloads never panic the codec: truncating a well-formed
+/// request payload at *every* byte boundary yields a typed `Malformed`
+/// error (the count prefix no longer matches the bytes), trailing garbage
+/// is rejected by the exact-consumption rule (PROTOCOL.md §2.3), inflated
+/// counts are caught by the element-capacity check before allocation, and
+/// every header-level violation maps to its assigned error code.
+#[test]
+fn wire_codec_rejects_hostile_frames_without_panic() {
+    use kahan_ecm::serve::codec::{self, ErrorCode, Opcode, HEADER_LEN, MAX_PAYLOAD, VERSION};
+
+    property("codec rejects hostile frames", 25, |g| {
+        let n = g.usize(1, 40);
+        let x = g.vec_f64_log(n, -10, 10);
+        let y = g.vec_f64_log(n, -10, 10);
+        let requests: [(Opcode, Vec<u8>); 3] = [
+            (Opcode::Dot, codec::encode_dot_payload(&x, &y)),
+            (Opcode::Sum, codec::encode_sum_payload(&x)),
+            (
+                Opcode::Batch,
+                codec::encode_batch(7, &[SharedInput::dot(&x, &y), SharedInput::sum(&x)])
+                    [HEADER_LEN..]
+                    .to_vec(),
+            ),
+        ];
+        for (op, payload) in &requests {
+            // The intact payload decodes...
+            codec::decode_request(*op, payload).unwrap();
+            // ...every truncation is a typed error, never a panic.
+            for cut in 0..payload.len() {
+                let err = codec::decode_request(*op, &payload[..cut]).unwrap_err();
+                assert_eq!(err.code, ErrorCode::Malformed, "{op:?} cut at {cut}");
+            }
+            // Trailing garbage violates exact consumption (§2.3).
+            let mut padded = payload.clone();
+            padded.push(0xAA);
+            assert_eq!(
+                codec::decode_request(*op, &padded).unwrap_err().code,
+                ErrorCode::Malformed
+            );
+        }
+
+        // An inflated count prefix is rejected by the capacity check
+        // before any allocation happens (§3.1).
+        let mut lying = codec::encode_dot_payload(&x, &y);
+        lying[..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(
+            codec::decode_request(Opcode::Dot, &lying).unwrap_err().code,
+            ErrorCode::Malformed
+        );
+
+        // Header-level violations map to their assigned codes (§2.2, §4),
+        // checked in the stream-trust order magic → version → cap →
+        // reserved.
+        let good = codec::encode_stats(3);
+        let head = |mutate: &dyn Fn(&mut [u8; HEADER_LEN])| {
+            let mut h: [u8; HEADER_LEN] = good[..HEADER_LEN].try_into().unwrap();
+            mutate(&mut h);
+            codec::decode_header(&h)
+        };
+        assert_eq!(head(&|h| h[0] = b'X').unwrap_err().code, ErrorCode::BadMagic);
+        assert_eq!(
+            head(&|h| h[4] = VERSION + 1).unwrap_err().code,
+            ErrorCode::BadVersion
+        );
+        let over = (MAX_PAYLOAD as u32) + 1;
+        assert_eq!(
+            head(&|h| h[16..20].copy_from_slice(&over.to_le_bytes()))
+                .unwrap_err()
+                .code,
+            ErrorCode::Oversized
+        );
+        assert_eq!(head(&|h| h[6] = 1).unwrap_err().code, ErrorCode::Malformed);
+        // Magic outranks version: both wrong reports BadMagic first.
+        assert_eq!(
+            head(&|h| {
+                h[0] = b'X';
+                h[4] = VERSION + 1;
+            })
+            .unwrap_err()
+            .code,
+            ErrorCode::BadMagic
+        );
+
+        // A response opcode sent as a request (and vice versa) is a
+        // BadOpcode at the decode layer (§3).
+        assert_eq!(
+            codec::decode_request(Opcode::Result, &[]).unwrap_err().code,
+            ErrorCode::BadOpcode
+        );
+        assert_eq!(
+            codec::decode_response(Opcode::Dot, &[]).unwrap_err().code,
+            ErrorCode::BadOpcode
+        );
+    });
+}

@@ -35,6 +35,10 @@ METRICS = {
     "serving_async_p99_us": ("lower", 0.50),
     "serving_async_reqs_per_s": ("higher", 0.40),
     "serving_measured_p1_mflops": ("higher", 0.35),
+    # The TCP loopback path adds syscall + loopback-stack latency on top of
+    # the queue path, so its tail is the wobbliest metric of the set.
+    "serving_wire_p99_us": ("lower", 0.60),
+    "serving_wire_reqs_per_s": ("higher", 0.40),
 }
 
 

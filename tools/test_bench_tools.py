@@ -93,6 +93,14 @@ def queue_row(p99, checksum, fused, sharded, requests):
     }
 
 
+def wire_row(p99, checksum, fused, sharded, requests):
+    row = queue_row(p99, checksum, fused, sharded, requests)
+    row["connections"] = 2
+    row["busy_retries"] = 3
+    row["rate_rps"] = 35000.0
+    return row
+
+
 def synth_serving():
     requests, fused, sharded, checksum = 256, 229, 27, 123.456
     return {
@@ -129,6 +137,7 @@ def synth_serving():
             "sync": queue_row(4.0e6, checksum, fused, sharded, requests),
             "async": queue_row(2.5e6, checksum, fused, sharded, requests),
         },
+        "wire": wire_row(3.0e6, checksum, fused, sharded, requests),
         "async_p99_ok": True,
         "calibration": {
             "measured": {"p1_gups": 1.8, "p1_mflops": 9000.0, "p1_n": 262144,
@@ -226,6 +235,38 @@ def test_validators():
     expect_ok(validate_bench.validate_serving, mutate(serving, calibrated),
               "calibrated threshold source")
 
+    # The wire row is optional in general but mandatory under the smoke
+    # check (CI must not silently skip the TCP path).
+    def no_wire(d):
+        del d["wire"]
+    expect_ok(validate_bench.validate_serving, mutate(serving, no_wire),
+              "serving valid without wire row")
+    expect_fail(validate_bench.validate_serving, mutate(serving, no_wire),
+                "missing wire row rejected by smoke check", True)
+
+    def wire_checksum_drift(d):
+        d["wire"]["checksum"] += 1.0
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, wire_checksum_drift),
+                "wire checksum drift (socket determinism)")
+
+    def wire_split_drift(d):
+        d["wire"]["fused"] -= 1
+        d["wire"]["sharded"] += 1
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, wire_split_drift), "wire traffic-split drift")
+
+    def wire_no_connections(d):
+        d["wire"]["connections"] = 0
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, wire_no_connections), "wire with 0 connections")
+
+    def wire_depth_overflow(d):
+        d["wire"]["max_queue_depth"] = d["queue"]["depth"] + 1
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, wire_depth_overflow),
+                "wire queue high-water > depth")
+
 
 def write_docs(tmp, docs):
     paths = []
@@ -252,7 +293,8 @@ def test_merge_and_summary(tmp):
         summary = json.load(f)
     h = summary["headline"]
     for key in ("serving_async_p99_us", "serving_sync_p99_us",
-                "serving_measured_p1_mflops", "serving_reqs_per_s"):
+                "serving_measured_p1_mflops", "serving_reqs_per_s",
+                "serving_wire_p99_us", "serving_wire_reqs_per_s"):
         assert key in h, f"missing headline metric {key}: {sorted(h)}"
     # Re-validating the merged document must pass too.
     rc = validate_bench.main([merged])

@@ -13,8 +13,10 @@ Options:
     --smoke-async-check           hard-check the serving document's
                                   queue-mode overlap win (async p99 <=
                                   1.10 x sync p99 + 1.5 ms preemption
-                                  slack); only meant for the CI smoke
-                                  configuration
+                                  slack) and require the loopback "wire"
+                                  row (the smoke job must not silently
+                                  skip the TCP path); only meant for the
+                                  CI smoke configuration
 
 Document kinds are recognized by shape:
     BENCH_native.json   -- `bench-native`  (backend "native", "results")
@@ -110,6 +112,16 @@ def validate_queue_row(row, requests):
     assert 0 < row["pool_utilization"] <= 1.0, row["pool_utilization"]
 
 
+def validate_wire_row(row, requests):
+    """The optional `wire` row: the queue-row schema measured through the
+    serve-net TCP front-end (docs/PROTOCOL.md), plus the wire-only fields.
+    """
+    validate_queue_row(row, requests)
+    assert row["connections"] >= 1, row["connections"]
+    assert row["busy_retries"] >= 0, row["busy_retries"]
+    assert row["rate_rps"] > 0, row["rate_rps"]
+
+
 def validate_crossover_value(value):
     # null encodes "never shard" (usize::MAX on the Rust side).
     assert value is None or (isinstance(value, int) and value >= 0), value
@@ -186,8 +198,27 @@ def validate_serving(doc, smoke_async_check=False):
         "async / sync / batch checksums differ: determinism contract broken"
     assert (async_row["fused"], async_row["sharded"]) == \
         (sync_row["fused"], sync_row["sharded"]) == (doc["fused"], doc["sharded"])
+    # Optional wire block: the same open-loop stream replayed through a
+    # loopback serve-net TCP server (PR 6 schema). The bench only emits it
+    # when it owns the loopback server, so the checksum must match the
+    # in-process rows bitwise — the determinism contract extends across
+    # the socket (docs/PROTOCOL.md, docs/ARCHITECTURE.md).
+    wire = doc.get("wire")
+    if wire is not None:
+        validate_wire_row(wire, requests)
+        assert wire["max_queue_depth"] <= queue["depth"], \
+            "wire queue high-water exceeds the configured depth"
+        assert wire["checksum"] == doc["checksum"], \
+            "wire / in-process checksums differ: determinism contract " \
+            "broken across the socket"
+        assert (wire["fused"], wire["sharded"]) == \
+            (doc["fused"], doc["sharded"]), \
+            "wire traffic split diverged from the in-process split"
     assert isinstance(doc["async_p99_ok"], bool)
     if smoke_async_check:
+        assert wire is not None, \
+            "--smoke-async-check requires the wire row (serve-bench must " \
+            "run with --wire-connections >= 1)"
         # Hard overlap check, meant only for the CI smoke configuration.
         # The request stream and results are deterministic there, but the
         # latency columns are still real measurements on a shared runner,
@@ -204,6 +235,9 @@ def validate_serving(doc, smoke_async_check=False):
     if "calibration" in doc:
         validate_calibration(doc["calibration"])
     extra = ", calibrated" if "calibration" in doc else ""
+    if wire is not None:
+        extra += (f", wire p99 {wire['latency_ns']['p99'] / 1e3:.1f} us "
+                  f"over {wire['connections']} conn")
     return f"{requests} requests ({doc['fused']} fused / {doc['sharded']} sharded), " \
            f"{doc['mode']} loop, p99 {lat['p99'] / 1e3:.1f} us, " \
            f"{doc['mflops']:.0f} MFlop/s; queue async p99 " \
@@ -258,6 +292,10 @@ def headline_of(documents):
             h["serving_async_p99_us"] = open_loop["async"]["latency_ns"]["p99"] / 1e3
             h["serving_sync_p99_us"] = open_loop["sync"]["latency_ns"]["p99"] / 1e3
             h["serving_async_reqs_per_s"] = open_loop["async"]["reqs_per_s"]
+        wire = serving.get("wire")
+        if wire:
+            h["serving_wire_p99_us"] = wire["latency_ns"]["p99"] / 1e3
+            h["serving_wire_reqs_per_s"] = wire["reqs_per_s"]
         cal = serving.get("calibration")
         if cal:
             h["serving_measured_p1_mflops"] = cal["measured"]["p1_mflops"]
