@@ -39,9 +39,10 @@ use kahan_ecm::runtime::hostbench::{
 };
 use kahan_ecm::runtime::parallel::ThreadPool;
 use kahan_ecm::serve::{
-    calibrate, codec, default_mix, parse_mix, run_load, run_load_async, run_load_wire,
-    AsyncDotService, AsyncLoadReport, AsyncOptions, Calibration, DotService, LoadMode, LoadReport,
-    NetServer, OperandPool, ServeConfig, ThresholdMode, WireLoadReport,
+    calibrate, codec, default_mix, parse_mix, run_load, run_load_async, run_load_chaos,
+    run_load_wire, AsyncDotService, AsyncLoadReport, AsyncOptions, Calibration, ChaosReport,
+    DotService, FaultInjector, FaultPlan, FaultSite, LoadMode, LoadReport, NetOptions, NetServer,
+    OperandPool, ServeConfig, ThresholdMode, WireLoadReport,
 };
 use kahan_ecm::sim::{self, MeasureOpts};
 use kahan_ecm::util::cli::Spec;
@@ -139,6 +140,12 @@ fn serve_bench_spec() -> Spec {
             "wire-addr",
             "drive an already-running serve-net server instead of a private loopback one",
         )
+        .flag(
+            "chaos",
+            "run a seeded fault-injection scenario and record a `chaos` block (hard-fails \
+             on any hung request or failed recovery)",
+        )
+        .opt("chaos-seed", "fault-plan seed for --chaos (default: the request seed)")
         .flag("quick", "tiny run for CI smoke")
 }
 
@@ -152,6 +159,19 @@ fn serve_net_spec() -> Spec {
         .opt("batch", "queue batching cap per dispatch (default: 64)")
         .flag("naive", "serve the naive dot instead of the compensated default")
         .opt("freq-ghz", "core clock for the model crossover (default: detected)")
+        .opt(
+            "read-timeout-ms",
+            "per-read socket timeout; a mid-frame stall past it drops the connection \
+             (default: none)",
+        )
+        .opt(
+            "idle-timeout-ms",
+            "reap connections idle between frames for this long (default: none)",
+        )
+        .opt(
+            "write-timeout-ms",
+            "per-write socket timeout; a slow client past it is evicted (default: none)",
+        )
 }
 
 fn ecm_spec() -> Spec {
@@ -658,6 +678,10 @@ fn load_row_obj(
         Json::Num(arrival_batches as f64),
     );
     obj.insert("pool_utilization".to_string(), Json::Num(pool_utilization));
+    obj.insert(
+        "non_finite_latencies".to_string(),
+        Json::Num(load.non_finite_latencies as f64),
+    );
     obj
 }
 
@@ -872,6 +896,7 @@ fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
             batch_window: std::time::Duration::from_micros(batch_window_us),
             batch_max: batch,
             overlap,
+            deadline: None,
         };
         let asy = AsyncDotService::new(cfg.clone(), opts)
             .map_err(|e| format!("cannot build the async service: {e}"))?;
@@ -932,6 +957,7 @@ fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
             batch_window: std::time::Duration::from_micros(batch_window_us),
             batch_max: batch,
             overlap: true,
+            deadline: None,
         };
         let (loopback, wire_addr) = match args.opt("wire-addr") {
             Some(a) => (None, a.to_string()),
@@ -989,6 +1015,96 @@ fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
         }
         drop(loopback);
         Some(w)
+    };
+
+    // Chaos scenario: replay a seeded in-process fault plan against a
+    // dedicated service instance and account for every request. The two
+    // hard gates are structural, not numeric: no request may hang, and
+    // the pipeline must serve bit-identical results again after the
+    // faults — so a chaos row never participates in the checksum-parity
+    // or perf gates above.
+    let chaos: Option<(u64, ChaosReport)> = if args.flag("chaos") {
+        let chaos_seed = match args.opt_parse("chaos-seed", seed) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return ExitCode::FAILURE;
+            }
+        };
+        let opts = AsyncOptions {
+            queue_depth,
+            batch_window: std::time::Duration::from_micros(batch_window_us),
+            batch_max: batch,
+            overlap: true,
+            deadline: None,
+        };
+        // Triggers land in 1..=8: early enough that every armed site fires
+        // even in a --quick run's handful of dispatches.
+        let plan = FaultPlan::seeded(chaos_seed, &FaultSite::IN_PROCESS, 8);
+        let injector = FaultInjector::new(plan);
+        let asy = match AsyncDotService::new_with_faults(cfg.clone(), opts, Some(injector.clone()))
+        {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("error: cannot build the chaos service: {e}");
+                return ExitCode::FAILURE;
+            }
+        };
+        eprintln!(
+            "serve-bench: chaos scenario at {} req/s, fault seed {chaos_seed} ({} in-process \
+             sites) ...",
+            fnum(rate, 0),
+            FaultSite::IN_PROCESS.len()
+        );
+        // First-touch operand placement runs jobs through the given pool;
+        // use the clean sync service's pool so a seeded low trigger cannot
+        // fire while preparing inputs instead of during the measured run.
+        let operands = OperandPool::generate(&mix, seed, service.pool());
+        let watchdog = kahan_ecm::serve::loadgen::default_watchdog(requests, rate);
+        let r = match run_load_chaos(
+            &asy,
+            &injector,
+            &mix,
+            &operands,
+            requests,
+            rate,
+            Some(std::time::Duration::from_millis(20)),
+            seed,
+            watchdog,
+        ) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("error: chaos run failed: {e}");
+                return ExitCode::FAILURE;
+            }
+        };
+        eprintln!(
+            "chaos: {} ok / {} shed / {} panicked / {} other / {} hung of {} ({} faults \
+             injected; recovery {} in {} us)",
+            r.completed_ok,
+            r.deadline_shed,
+            r.worker_panics,
+            r.other_errors,
+            r.hung,
+            r.requests,
+            r.total_injected,
+            if r.recovery_verified { "bit-exact" } else { "FAILED" },
+            fnum(r.recovery_latency_ns / 1e3, 1)
+        );
+        if r.hung > 0 {
+            eprintln!(
+                "error: chaos gate: {} request(s) never resolved — the pipeline wedged",
+                r.hung
+            );
+            return ExitCode::FAILURE;
+        }
+        if !r.recovery_verified {
+            eprintln!("error: chaos gate: post-chaos probe was not bit-identical to the sync path");
+            return ExitCode::FAILURE;
+        }
+        Some((chaos_seed, r))
+    } else {
+        None
     };
 
     let mut t = Table::new(["metric", "value"]);
@@ -1111,6 +1227,30 @@ fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
         root.insert("wire".to_string(), wire_row_json(w));
     }
     root.insert("async_p99_ok".to_string(), Json::Bool(async_p99_ok));
+    if let Some((chaos_seed, r)) = &chaos {
+        let mut injected = BTreeMap::new();
+        for (label, count) in &r.injected {
+            injected.insert((*label).to_string(), Json::Num(*count as f64));
+        }
+        let mut recovery = BTreeMap::new();
+        recovery.insert("verified".to_string(), Json::Bool(r.recovery_verified));
+        recovery.insert("latency_ns".to_string(), Json::Num(r.recovery_latency_ns));
+        let mut obj = BTreeMap::new();
+        obj.insert("seed".to_string(), Json::Num(*chaos_seed as f64));
+        obj.insert("requests".to_string(), Json::Num(r.requests as f64));
+        obj.insert("completed_ok".to_string(), Json::Num(r.completed_ok as f64));
+        obj.insert("deadline_shed".to_string(), Json::Num(r.deadline_shed as f64));
+        obj.insert("worker_panics".to_string(), Json::Num(r.worker_panics as f64));
+        obj.insert("other_errors".to_string(), Json::Num(r.other_errors as f64));
+        obj.insert("hung_requests".to_string(), Json::Num(r.hung as f64));
+        obj.insert("injected".to_string(), Json::Obj(injected));
+        obj.insert(
+            "total_injected".to_string(),
+            Json::Num(r.total_injected as f64),
+        );
+        obj.insert("recovery".to_string(), Json::Obj(recovery));
+        root.insert("chaos".to_string(), Json::Obj(obj));
+    }
     if let Some(c) = calibration {
         let mut measured = BTreeMap::new();
         measured.insert("p1_gups".to_string(), Json::Num(c.p1_gups));
@@ -1221,6 +1361,26 @@ fn cmd_serve_net(raw: Vec<String>) -> ExitCode {
         }
     };
     let addr = args.opt_or("addr", "127.0.0.1:4990").to_string();
+    let parse_ms = |name: &str| -> Result<Option<u64>, String> {
+        match args.opt(name) {
+            None => Ok(None),
+            Some(v) => match v.parse::<u64>() {
+                Ok(ms) if ms >= 1 => Ok(Some(ms)),
+                _ => Err(format!("--{name} expects a positive millisecond count")),
+            },
+        }
+    };
+    let (read_timeout_ms, idle_timeout_ms, write_timeout_ms) = match (
+        parse_ms("read-timeout-ms"),
+        parse_ms("idle-timeout-ms"),
+        parse_ms("write-timeout-ms"),
+    ) {
+        (Ok(r), Ok(i), Ok(w)) => (r, i, w),
+        (Err(e), _, _) | (_, Err(e), _) | (_, _, Err(e)) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
 
     let cfg = ServeConfig {
         threads,
@@ -1237,8 +1397,15 @@ fn cmd_serve_net(raw: Vec<String>) -> ExitCode {
         batch_window: std::time::Duration::from_micros(batch_window_us),
         batch_max: batch,
         overlap: true,
+        deadline: None,
     };
-    let server = match NetServer::bind(&addr, cfg, opts) {
+    let net = NetOptions {
+        read_timeout: read_timeout_ms.map(std::time::Duration::from_millis),
+        idle_timeout: idle_timeout_ms.map(std::time::Duration::from_millis),
+        write_timeout: write_timeout_ms.map(std::time::Duration::from_millis),
+        ..NetOptions::default()
+    };
+    let server = match NetServer::bind_with(&addr, cfg, opts, net) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("error: cannot bind {addr}: {e}");

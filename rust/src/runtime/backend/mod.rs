@@ -273,6 +273,9 @@ pub enum BackendError {
     ShapeMismatch { lhs: usize, rhs: usize },
     /// Backend-specific execution failure (e.g. PJRT compile error).
     Runtime(String),
+    /// The request's deadline expired before execution began; it was shed
+    /// in-queue without any compute (`budget_us` is the deadline it carried).
+    DeadlineExceeded { budget_us: u64 },
 }
 
 impl fmt::Display for BackendError {
@@ -288,6 +291,9 @@ impl fmt::Display for BackendError {
                 write!(f, "dot operands differ in length: {lhs} vs {rhs}")
             }
             BackendError::Runtime(msg) => write!(f, "backend execution failed: {msg}"),
+            BackendError::DeadlineExceeded { budget_us } => {
+                write!(f, "deadline exceeded: request shed after {budget_us} us budget")
+            }
         }
     }
 }

@@ -54,15 +54,24 @@ use std::ops::Range;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
 use super::backend::native::{self, NativeFn, SimdCaps};
 use super::backend::{Backend, BackendError, KernelExec, KernelInput, KernelSpec, NativeBackend};
 use crate::accuracy::eft::two_sum;
+use crate::serve::faults::{FaultInjector, FaultSite};
 
 /// f64 elements per 64-byte cache line — the chunk-boundary alignment.
 pub const CACHELINE_F64: usize = 8;
+
+/// Poison-tolerant lock: a thread that panicked while holding a pool or
+/// latch mutex must never wedge the threads still using it — the protected
+/// state (counters, sender lists) stays structurally valid across an unwind,
+/// so we keep serving rather than propagate the poison.
+fn lock_ok<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
 
 /// Completion latch for one dispatch: the dispatcher blocks until every
 /// posted chunk has been executed (successfully or by unwinding), so the
@@ -90,34 +99,37 @@ impl Latch {
     }
 
     fn record_panic(&self, payload: Box<dyn Any + Send>) {
-        let mut slot = self.panic_payload.lock().unwrap();
+        let mut slot = lock_ok(&self.panic_payload);
         if slot.is_none() {
             *slot = Some(payload);
         }
     }
 
     fn take_panic(&self) -> Option<Box<dyn Any + Send>> {
-        self.panic_payload.lock().unwrap().take()
+        lock_ok(&self.panic_payload).take()
     }
 
     fn arrive(&self) {
-        let mut r = self.remaining.lock().unwrap();
+        let mut r = lock_ok(&self.remaining);
         *r -= 1;
         if *r == 0 {
-            *self.finished.lock().unwrap() = Some(std::time::Instant::now());
+            *lock_ok(&self.finished) = Some(std::time::Instant::now());
             self.all_done.notify_all();
         }
     }
 
     fn wait(&self) {
-        let mut r = self.remaining.lock().unwrap();
+        let mut r = lock_ok(&self.remaining);
         while *r > 0 {
-            r = self.all_done.wait(r).unwrap();
+            r = self
+                .all_done
+                .wait(r)
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
         }
     }
 
     fn is_done(&self) -> bool {
-        *self.remaining.lock().unwrap() == 0
+        *lock_ok(&self.remaining) == 0
     }
 }
 
@@ -144,6 +156,38 @@ struct Job {
     task: TaskRef,
     index: usize,
     done: Arc<Latch>,
+    /// Set once this job has been counted in at the latch. The `Drop`
+    /// backstop fails-and-arrives any job that never was — e.g. a job still
+    /// queued on a worker whose thread died — so a lost job degrades into a
+    /// failed dispatch, never a hung latch.
+    counted: bool,
+}
+
+impl Job {
+    fn new(task: TaskRef, index: usize, done: Arc<Latch>) -> Self {
+        Job {
+            task,
+            index,
+            done,
+            counted: false,
+        }
+    }
+
+    /// Count this job in at the latch (exactly once; disarms the backstop).
+    fn finish(mut self) {
+        self.counted = true;
+        self.done.arrive();
+    }
+}
+
+impl Drop for Job {
+    fn drop(&mut self) {
+        if !self.counted {
+            self.done
+                .record_panic(Box::new("job dropped unexecuted: worker thread died"));
+            self.done.arrive();
+        }
+    }
 }
 
 // SAFETY: the borrowed raw task pointer crosses threads, but the referent
@@ -152,10 +196,31 @@ struct Job {
 // owned variant is `Send + Sync` by construction.
 unsafe impl Send for Job {}
 
-fn worker_loop(jobs: Receiver<Job>) {
+fn worker_loop(jobs: Receiver<Job>, faults: Option<Arc<FaultInjector>>) {
     // A closed channel (pool dropped) is the shutdown signal.
-    while let Ok(job) = jobs.recv() {
+    loop {
+        let job = match jobs.recv() {
+            Ok(job) => job,
+            Err(_) => break,
+        };
         let index = job.index;
+        // Injected worker panic: fail this job's dispatch with a panic
+        // payload, count the job in (so the dispatcher wakes), then let the
+        // worker thread die. The receiver is closed *before* the latch
+        // arrival: jobs already queued behind this one fail via the `Job`
+        // drop backstop, and by the time a caller observes this dispatch
+        // fail, a new send to this slot fails fast and triggers a respawn —
+        // the pool heals before the next dispatch lands here.
+        let killed = match &faults {
+            Some(inj) => inj.fire(FaultSite::WorkerPanic),
+            None => false,
+        };
+        if killed {
+            job.done.record_panic(Box::new("injected worker panic"));
+            drop(jobs);
+            job.finish();
+            return;
+        }
         let run = || {
             let task: &(dyn Fn(usize) + Sync) = match &job.task {
                 // SAFETY: the dispatcher guarantees the pointee outlives
@@ -171,7 +236,14 @@ fn worker_loop(jobs: Receiver<Job>) {
         if let Err(payload) = catch_unwind(AssertUnwindSafe(run)) {
             job.done.record_panic(payload);
         }
-        job.done.arrive();
+        // Injected latch-wake delay: a "lost wakeup" is modeled as a late
+        // one — callers observe latency, never a missing arrival.
+        if let Some(inj) = &faults {
+            if let Some(delay) = inj.stall(FaultSite::LatchWakeDelay) {
+                std::thread::sleep(delay);
+            }
+        }
+        job.finish();
     }
 }
 
@@ -239,7 +311,7 @@ impl<R> PendingDispatch<R> {
     /// A dispatch that already completed (empty or executed inline).
     fn completed(slots: Arc<AsyncSlots<R>>) -> Self {
         let latch = Latch::new(0);
-        *latch.finished.lock().unwrap() = Some(std::time::Instant::now());
+        *lock_ok(&latch.finished) = Some(std::time::Instant::now());
         Self {
             latch: Arc::new(latch),
             slots,
@@ -270,12 +342,7 @@ impl<R> PendingDispatch<R> {
         if let Some(p) = self.latch.take_panic() {
             resume_unwind(p);
         }
-        let finished = self
-            .latch
-            .finished
-            .lock()
-            .unwrap()
-            .unwrap_or_else(std::time::Instant::now);
+        let finished = lock_ok(&self.latch.finished).unwrap_or_else(std::time::Instant::now);
         let results = self
             .slots
             .cells
@@ -292,23 +359,41 @@ impl<R> PendingDispatch<R> {
     }
 }
 
+/// One spawned worker: its job channel plus its thread handle, kept
+/// together so a dead worker can be detected (`handle.is_finished()`) and
+/// replaced in place without disturbing the slot order.
+struct WorkerSlot {
+    tx: Sender<Job>,
+    handle: JoinHandle<()>,
+}
+
 /// A persistent parked-worker pool for slice-parallel kernels: `T - 1`
 /// worker threads spawned once at construction, plus the dispatching
 /// thread, execute the deterministic cache-line-aligned partition of each
 /// dispatch. Dropping the pool shuts the workers down.
+///
+/// The pool is *self-healing*: a worker whose thread died (today only an
+/// injected worker panic kills one — ordinary task panics are caught and
+/// the worker survives) fails the dispatch that was on it and is respawned
+/// in the same slot before the next dispatch posts there. Slot index `i`
+/// always serves the same chunk/lane indices, so the logical `T`-wide
+/// partition — and with it every reduction order and every bit of every
+/// result — is unchanged across a respawn.
 pub struct ThreadPool {
     threads: usize,
     /// Spawned OS worker threads: `threads - 1` for a standard pool (the
     /// dispatching thread is lane 0), `threads` for a detached pool (the
     /// dispatcher only orchestrates — see [`Self::new_detached`]).
     workers: usize,
-    /// Per-worker job senders, locked as one unit: a blocking dispatch
-    /// owns every worker for its full duration, so concurrent `run_chunks`
+    /// Per-worker slots, locked as one unit: a blocking dispatch owns
+    /// every worker for its full duration, so concurrent `run_chunks`
     /// calls on a shared pool serialize instead of interleaving jobs.
     /// Non-blocking dispatches only hold the lock while posting, so their
     /// jobs pipeline through the per-worker FIFOs.
-    senders: Mutex<Vec<Sender<Job>>>,
-    handles: Vec<JoinHandle<()>>,
+    slots: Mutex<Vec<WorkerSlot>>,
+    /// Deterministic fault injection (chaos tests / `serve-bench --chaos`);
+    /// `None` in production — the sites reduce to one null check each.
+    faults: Option<Arc<FaultInjector>>,
 }
 
 impl ThreadPool {
@@ -317,7 +402,7 @@ impl ThreadPool {
     /// every dispatch runs inline on the dispatching thread.
     pub fn new(threads: usize) -> Self {
         let threads = threads.max(1);
-        Self::spawn(threads, threads - 1)
+        Self::spawn(threads, threads - 1, None)
     }
 
     /// A pool whose `threads`-wide partition is executed *entirely* by
@@ -329,26 +414,70 @@ impl ThreadPool {
     /// every result) is identical to a standard `new(threads)` pool.
     pub fn new_detached(threads: usize) -> Self {
         let threads = threads.max(1);
-        Self::spawn(threads, threads)
+        Self::spawn(threads, threads, None)
     }
 
-    fn spawn(threads: usize, workers: usize) -> Self {
-        let mut senders = Vec::with_capacity(workers);
-        let mut handles = Vec::with_capacity(workers);
-        for i in 0..workers {
-            let (tx, rx) = channel::<Job>();
-            let h = std::thread::Builder::new()
-                .name(format!("kahan-mt-{i}"))
-                .spawn(move || worker_loop(rx))
-                .expect("spawn persistent worker");
-            senders.push(tx);
-            handles.push(h);
-        }
+    /// [`Self::new`] with a fault injector threaded into every worker.
+    pub fn new_with_faults(threads: usize, faults: Option<Arc<FaultInjector>>) -> Self {
+        let threads = threads.max(1);
+        Self::spawn(threads, threads - 1, faults)
+    }
+
+    /// [`Self::new_detached`] with a fault injector threaded into every
+    /// worker.
+    pub fn new_detached_with_faults(threads: usize, faults: Option<Arc<FaultInjector>>) -> Self {
+        let threads = threads.max(1);
+        Self::spawn(threads, threads, faults)
+    }
+
+    fn spawn(threads: usize, workers: usize, faults: Option<Arc<FaultInjector>>) -> Self {
+        let slots = (0..workers)
+            .map(|i| Self::spawn_worker(i, faults.clone()))
+            .collect();
         Self {
             threads,
             workers,
-            senders: Mutex::new(senders),
-            handles,
+            slots: Mutex::new(slots),
+            faults,
+        }
+    }
+
+    fn spawn_worker(index: usize, faults: Option<Arc<FaultInjector>>) -> WorkerSlot {
+        let (tx, rx) = channel::<Job>();
+        let handle = std::thread::Builder::new()
+            .name(format!("kahan-mt-{index}"))
+            .spawn(move || worker_loop(rx, faults))
+            .expect("spawn persistent worker");
+        WorkerSlot { tx, handle }
+    }
+
+    /// Replace the worker in slot `i` with a freshly spawned one (same
+    /// name, same channel discipline). The dead thread is joined so its
+    /// resources are reclaimed before new work lands on the slot.
+    fn respawn(&self, slots: &mut [WorkerSlot], i: usize) {
+        let fresh = Self::spawn_worker(i, self.faults.clone());
+        let dead = std::mem::replace(&mut slots[i], fresh);
+        drop(dead.tx);
+        let _ = dead.handle.join();
+    }
+
+    /// Post one job to worker slot `i`, healing the slot first if its
+    /// thread has already exited. A worker can still die *between* the
+    /// liveness check and the send; the failed send returns the job, which
+    /// is reposted to a respawned worker. Jobs that were already queued on
+    /// the dead worker fail their dispatches via the `Job` drop backstop —
+    /// a dead worker is never a hang, and the slot is healthy again before
+    /// this dispatch's job lands.
+    fn post_job(&self, slots: &mut [WorkerSlot], i: usize, job: Job) {
+        if slots[i].handle.is_finished() {
+            self.respawn(slots, i);
+        }
+        if let Err(returned) = slots[i].tx.send(job) {
+            self.respawn(slots, i);
+            slots[i]
+                .tx
+                .send(returned.0)
+                .expect("freshly spawned worker must accept work");
         }
     }
 
@@ -434,21 +563,19 @@ impl ThreadPool {
             let erased: *const (dyn Fn(usize) + Sync) =
                 unsafe { std::mem::transmute::<Task<'_>, Task<'static>>(&task) };
             let latch = Arc::new(Latch::new(k - 1));
-            let senders = self.senders.lock().unwrap();
+            let mut slots = lock_ok(&self.slots);
             for i in 1..k {
-                senders[i - 1]
-                    .send(Job {
-                        task: TaskRef::Borrowed(erased),
-                        index: i,
-                        done: latch.clone(),
-                    })
-                    .expect("persistent worker exited early");
+                self.post_job(
+                    &mut slots,
+                    i - 1,
+                    Job::new(TaskRef::Borrowed(erased), i, latch.clone()),
+                );
             }
             // Chunk 0 inline. An inline panic must still wait for the
             // posted jobs before unwinding (they borrow `task`/`out`).
             let inline = catch_unwind(AssertUnwindSafe(|| task(0)));
             latch.wait();
-            drop(senders);
+            drop(slots);
             if let Err(p) = inline {
                 resume_unwind(p);
             }
@@ -516,21 +643,19 @@ impl ThreadPool {
             let erased: *const (dyn Fn(usize) + Sync) =
                 unsafe { std::mem::transmute::<Task<'_>, Task<'static>>(&task) };
             let latch = Arc::new(Latch::new(lanes - 1));
-            let senders = self.senders.lock().unwrap();
+            let mut slots = lock_ok(&self.slots);
             for lane in 1..lanes {
-                senders[lane - 1]
-                    .send(Job {
-                        task: TaskRef::Borrowed(erased),
-                        index: lane,
-                        done: latch.clone(),
-                    })
-                    .expect("persistent worker exited early");
+                self.post_job(
+                    &mut slots,
+                    lane - 1,
+                    Job::new(TaskRef::Borrowed(erased), lane, latch.clone()),
+                );
             }
             // Lane 0 drains the queue inline; a panic must still wait for
             // the posted jobs before unwinding (they borrow `task`/`out`).
             let inline = catch_unwind(AssertUnwindSafe(|| task(0)));
             latch.wait();
-            drop(senders);
+            drop(slots);
             if let Err(p) = inline {
                 resume_unwind(p);
             }
@@ -583,15 +708,13 @@ impl ThreadPool {
                 unsafe { slots.write(i, v) };
             })
         };
-        let senders = self.senders.lock().unwrap();
+        let mut worker_slots = lock_ok(&self.slots);
         for i in 0..k {
-            senders[i % self.workers]
-                .send(Job {
-                    task: TaskRef::Owned(Arc::clone(&task)),
-                    index: i,
-                    done: Arc::clone(&latch),
-                })
-                .expect("persistent worker exited early");
+            self.post_job(
+                &mut worker_slots,
+                i % self.workers,
+                Job::new(TaskRef::Owned(Arc::clone(&task)), i, Arc::clone(&latch)),
+            );
         }
         PendingDispatch { latch, slots }
     }
@@ -636,15 +759,13 @@ impl ThreadPool {
                 unsafe { slots.write(i, v) };
             })
         };
-        let senders = self.senders.lock().unwrap();
+        let mut worker_slots = lock_ok(&self.slots);
         for lane in 0..lanes {
-            senders[lane]
-                .send(Job {
-                    task: TaskRef::Owned(Arc::clone(&task)),
-                    index: lane,
-                    done: Arc::clone(&latch),
-                })
-                .expect("persistent worker exited early");
+            self.post_job(
+                &mut worker_slots,
+                lane,
+                Job::new(TaskRef::Owned(Arc::clone(&task)), lane, Arc::clone(&latch)),
+            );
         }
         PendingDispatch { latch, slots }
     }
@@ -662,13 +783,15 @@ impl Drop for ThreadPool {
     fn drop(&mut self) {
         // Closing the channels is the shutdown signal. A poisoned lock
         // (a dispatcher panicked mid-dispatch) must not leak the workers.
-        let mut senders = match self.senders.lock() {
-            Ok(g) => g,
-            Err(poisoned) => poisoned.into_inner(),
-        };
-        senders.clear();
-        drop(senders);
-        for h in self.handles.drain(..) {
+        let slots = std::mem::take(&mut *lock_ok(&self.slots));
+        // Close every channel first so all workers wind down in parallel,
+        // then join them.
+        let mut handles = Vec::with_capacity(slots.len());
+        for WorkerSlot { tx, handle } in slots {
+            drop(tx);
+            handles.push(handle);
+        }
+        for h in handles {
             let _ = h.join();
         }
     }
@@ -1132,5 +1255,98 @@ mod tests {
         assert!(matches!(err, BackendError::ShapeMismatch { .. }));
         let err = backend.run(spec, &KernelInput::Sum(&[1.0])).unwrap_err();
         assert!(matches!(err, BackendError::InputMismatch { .. }));
+    }
+
+    #[test]
+    fn injected_worker_panic_fails_own_dispatch_and_pool_self_heals() {
+        use crate::serve::faults::FaultPlan;
+        let x = randvec(4099, 71);
+        let y = randvec(4099, 72);
+        let clean = ThreadPool::new_detached(3);
+        let want = clean.run_chunks(x.len(), CACHELINE_F64, |_, r| {
+            native::kahan_dot_simd(&x[r.clone()], &y[r])
+        });
+
+        let inj = FaultInjector::new(FaultPlan::none().with(FaultSite::WorkerPanic, 1));
+        let pool = ThreadPool::new_detached_with_faults(3, Some(Arc::clone(&inj)));
+        let boom = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_chunks(x.len(), CACHELINE_F64, |_, r| {
+                native::kahan_dot_simd(&x[r.clone()], &y[r])
+            })
+        }));
+        let payload = boom.expect_err("injected worker panic must fail its own dispatch");
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"injected worker panic"));
+        assert_eq!(inj.fired(FaultSite::WorkerPanic), 1);
+
+        // The trigger has passed; the slot is respawned before the next
+        // dispatch, the logical partition is unchanged, and the results are
+        // bit-identical to an uninjected pool at the same T.
+        let got = pool.run_chunks(x.len(), CACHELINE_F64, |_, r| {
+            native::kahan_dot_simd(&x[r.clone()], &y[r])
+        });
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn queued_jobs_on_a_dying_worker_resolve_instead_of_hanging() {
+        use crate::serve::faults::FaultPlan;
+        // Single detached worker: both dispatches land on the same slot, so
+        // the second's job can sit behind the killing job. It must resolve
+        // (success if it was reposted to a healed worker, a re-raised panic
+        // if it was dropped with the dead one) — never hang.
+        let inj = FaultInjector::new(FaultPlan::none().with(FaultSite::WorkerPanic, 1));
+        let pool = ThreadPool::new_detached_with_faults(1, Some(inj));
+        let a = pool.run_tasks_async(1, |i| i);
+        let b = pool.run_tasks_async(1, |i| i + 10);
+        let ra = catch_unwind(AssertUnwindSafe(move || a.wait()));
+        let rb = catch_unwind(AssertUnwindSafe(move || b.wait()));
+        assert!(ra.is_err(), "the killing dispatch must fail");
+        if let Ok(v) = rb {
+            assert_eq!(v, vec![10]);
+        }
+        // Whatever happened in between, the slot heals and serves again
+        // (async, so the work actually lands on the respawned worker —
+        // a T=1 blocking dispatch would run inline and prove nothing).
+        assert_eq!(pool.run_tasks_async(3, |i| i * 2).wait(), vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn idle_injector_is_bit_identical_to_no_injector() {
+        use crate::serve::faults::FaultPlan;
+        let x = randvec(2051, 81);
+        let y = randvec(2051, 82);
+        let plain = ThreadPool::new_detached(3);
+        let armed = ThreadPool::new_detached_with_faults(
+            3,
+            Some(FaultInjector::new(FaultPlan::none())),
+        );
+        let a = plain.run_chunks(x.len(), CACHELINE_F64, |_, r| {
+            native::kahan_dot_simd(&x[r.clone()], &y[r])
+        });
+        let b = armed.run_chunks(x.len(), CACHELINE_F64, |_, r| {
+            native::kahan_dot_simd(&x[r.clone()], &y[r])
+        });
+        assert_eq!(a.len(), b.len());
+        for (va, vb) in a.iter().zip(&b) {
+            assert_eq!(va.to_bits(), vb.to_bits());
+        }
+    }
+
+    #[test]
+    fn latch_wake_delay_only_adds_latency() {
+        use crate::serve::faults::FaultPlan;
+        use std::time::Duration;
+        let inj = FaultInjector::new(FaultPlan::none().with_stall(
+            FaultSite::LatchWakeDelay,
+            1,
+            Duration::from_millis(5),
+        ));
+        let pool = ThreadPool::new_detached_with_faults(2, Some(Arc::clone(&inj)));
+        let got = pool.run_tasks(4, |i| i + 1);
+        assert_eq!(got, vec![1, 2, 3, 4]);
+        assert_eq!(inj.fired(FaultSite::LatchWakeDelay), 1);
     }
 }

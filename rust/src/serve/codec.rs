@@ -36,9 +36,22 @@ pub const MAGIC: [u8; 4] = *b"KDOT";
 pub const VERSION: u8 = 1;
 
 /// Fixed frame-header length in bytes (PROTOCOL.md §2.2): magic (4) +
-/// version (1) + opcode (1) + reserved (2) + request id (8) + payload
-/// length (4).
+/// version (1) + opcode (1) + flags (1) + reserved (1) + request id (8) +
+/// payload length (4).
 pub const HEADER_LEN: usize = 20;
+
+/// Header flag bit: the payload begins with an 8-byte little-endian
+/// deadline in microseconds, measured from server receipt
+/// (PROTOCOL.md §2.4, protocol revision 1.1). Offset 6 carried a
+/// mandatory-zero reserved byte in revision 1.0, so a 1.0 server rejects
+/// this flag with a non-fatal [`ErrorCode::Malformed`] — the documented
+/// downgrade signal.
+pub const FLAG_DEADLINE: u8 = 0x01;
+
+/// All flag bits assigned so far (PROTOCOL.md §2.4). Unknown bits are
+/// rejected as [`ErrorCode::Malformed`] without closing the connection,
+/// exactly as revision 1.0 treated any nonzero offset-6 byte.
+pub const FLAGS_KNOWN: u8 = FLAG_DEADLINE;
 
 /// Maximum payload length the codec will accept, 128 MiB
 /// (PROTOCOL.md §2.3). Large enough for a dot request over the full default
@@ -133,6 +146,12 @@ pub enum ErrorCode {
     Shutdown,
     /// Unexpected server-side failure (PROTOCOL.md §4.9).
     Internal,
+    /// The request's deadline expired before execution began; it was shed
+    /// in-queue without any compute. Non-fatal: the client may resubmit
+    /// with a larger budget (PROTOCOL.md §4.10, revision 1.1). A 1.0
+    /// client decodes this byte as [`ErrorCode::Internal`] — still a
+    /// per-request error, never a framing break.
+    Deadline,
 }
 
 impl ErrorCode {
@@ -148,6 +167,7 @@ impl ErrorCode {
             ErrorCode::Busy => 0x07,
             ErrorCode::Shutdown => 0x08,
             ErrorCode::Internal => 0x09,
+            ErrorCode::Deadline => 0x0A,
         }
     }
 
@@ -164,6 +184,7 @@ impl ErrorCode {
             0x06 => ErrorCode::Invalid,
             0x07 => ErrorCode::Busy,
             0x08 => ErrorCode::Shutdown,
+            0x0A => ErrorCode::Deadline,
             _ => ErrorCode::Internal,
         }
     }
@@ -190,6 +211,7 @@ impl ErrorCode {
             ErrorCode::Busy => "busy",
             ErrorCode::Shutdown => "shutdown",
             ErrorCode::Internal => "internal",
+            ErrorCode::Deadline => "deadline",
         }
     }
 }
@@ -220,13 +242,16 @@ impl std::fmt::Display for WireError {
 }
 
 /// A decoded frame header (PROTOCOL.md §2.2). Magic, version and the
-/// reserved bytes are validated during decode and not retained.
+/// reserved byte are validated during decode and not retained.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct FrameHeader {
     /// Raw opcode byte (PROTOCOL.md §2.2, offset 5). Kept as a byte, not an
     /// [`Opcode`], so the caller can answer unknown opcodes with
     /// [`ErrorCode::BadOpcode`] after skipping the declared payload.
     pub opcode: u8,
+    /// Flags byte (PROTOCOL.md §2.4, offset 6); only bits in
+    /// [`FLAGS_KNOWN`] survive decoding. Zero on every revision-1.0 frame.
+    pub flags: u8,
     /// Client-chosen request id echoed verbatim in the response
     /// (PROTOCOL.md §2.2, offset 8). Correlates out-of-order responses.
     pub request_id: u64,
@@ -259,10 +284,16 @@ pub fn decode_header(buf: &[u8; HEADER_LEN]) -> Result<FrameHeader, WireError> {
             format!("payload length {} exceeds cap {}", payload_len, MAX_PAYLOAD),
         ));
     }
-    if buf[6] != 0 || buf[7] != 0 {
+    if buf[6] & !FLAGS_KNOWN != 0 {
         return Err(WireError::new(
             ErrorCode::Malformed,
-            "reserved header bytes must be zero",
+            format!("unknown header flag bits {:#04x}", buf[6] & !FLAGS_KNOWN),
+        ));
+    }
+    if buf[7] != 0 {
+        return Err(WireError::new(
+            ErrorCode::Malformed,
+            "reserved header byte must be zero",
         ));
     }
     let request_id = u64::from_le_bytes([
@@ -270,6 +301,7 @@ pub fn decode_header(buf: &[u8; HEADER_LEN]) -> Result<FrameHeader, WireError> {
     ]);
     Ok(FrameHeader {
         opcode: buf[5],
+        flags: buf[6],
         request_id,
         payload_len,
     })
@@ -279,10 +311,22 @@ pub fn decode_header(buf: &[u8; HEADER_LEN]) -> Result<FrameHeader, WireError> {
 /// already be within [`MAX_PAYLOAD`]; callers go through
 /// [`encode_frame`], which enforces it.
 fn encode_header(out: &mut Vec<u8>, opcode: Opcode, request_id: u64, payload_len: u32) {
+    encode_header_flagged(out, opcode, 0, request_id, payload_len);
+}
+
+fn encode_header_flagged(
+    out: &mut Vec<u8>,
+    opcode: Opcode,
+    flags: u8,
+    request_id: u64,
+    payload_len: u32,
+) {
+    debug_assert_eq!(flags & !FLAGS_KNOWN, 0, "encoding unknown flag bits");
     out.extend_from_slice(&MAGIC);
     out.push(VERSION);
     out.push(opcode.byte());
-    out.extend_from_slice(&[0u8, 0u8]); // reserved (PROTOCOL.md §2.2)
+    out.push(flags); // flags (PROTOCOL.md §2.4)
+    out.push(0u8); // reserved (PROTOCOL.md §2.2)
     out.extend_from_slice(&request_id.to_le_bytes());
     out.extend_from_slice(&payload_len.to_le_bytes());
 }
@@ -325,6 +369,52 @@ pub fn encode_header_bytes(
     let mut buf = [0u8; HEADER_LEN];
     buf.copy_from_slice(&out);
     buf
+}
+
+/// Assemble a deadline-carrying request frame (PROTOCOL.md §2.4): the
+/// header sets [`FLAG_DEADLINE`] and the payload is the 8-byte
+/// little-endian deadline in microseconds followed by the ordinary
+/// request payload. Panics on an oversized combined payload, like
+/// [`encode_frame`].
+pub fn encode_frame_with_deadline(
+    opcode: Opcode,
+    request_id: u64,
+    deadline_us: u64,
+    payload: &[u8],
+) -> Vec<u8> {
+    let total = payload.len() + 8;
+    assert!(
+        total <= MAX_PAYLOAD,
+        "payload {} exceeds protocol cap {}",
+        total,
+        MAX_PAYLOAD
+    );
+    let mut out = Vec::with_capacity(HEADER_LEN + total);
+    encode_header_flagged(&mut out, opcode, FLAG_DEADLINE, request_id, total as u32);
+    out.extend_from_slice(&deadline_us.to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Strip the optional deadline prefix that [`FLAG_DEADLINE`] announces
+/// (PROTOCOL.md §2.4), returning the deadline (if any) and the remaining
+/// request payload. A flagged payload shorter than 8 bytes is
+/// [`ErrorCode::Malformed`].
+pub fn split_deadline(flags: u8, payload: &[u8]) -> Result<(Option<u64>, &[u8]), WireError> {
+    if flags & FLAG_DEADLINE == 0 {
+        return Ok((None, payload));
+    }
+    if payload.len() < 8 {
+        return Err(WireError::new(
+            ErrorCode::Malformed,
+            "deadline flag set but payload shorter than its 8-byte prefix",
+        ));
+    }
+    let deadline_us = u64::from_le_bytes([
+        payload[0], payload[1], payload[2], payload[3], payload[4], payload[5], payload[6],
+        payload[7],
+    ]);
+    Ok((Some(deadline_us), &payload[8..]))
 }
 
 /// Bounds-checked little-endian cursor over a payload. Every accessor
@@ -820,6 +910,7 @@ mod tests {
             ErrorCode::Busy,
             ErrorCode::Shutdown,
             ErrorCode::Internal,
+            ErrorCode::Deadline,
         ] {
             assert_eq!(ErrorCode::from_byte(code.byte()), code);
         }
@@ -831,6 +922,7 @@ mod tests {
         assert!(!ErrorCode::BadOpcode.is_fatal());
         assert!(!ErrorCode::Malformed.is_fatal());
         assert!(!ErrorCode::Invalid.is_fatal());
+        assert!(!ErrorCode::Deadline.is_fatal());
     }
 
     #[test]
@@ -1027,11 +1119,64 @@ mod tests {
         let frame = encode_stats(1);
         let mut head = [0u8; HEADER_LEN];
         head.copy_from_slice(&frame[..HEADER_LEN]);
-        head[6] = 1;
+        head[7] = 1;
         assert_eq!(
             decode_header(&head).unwrap_err().code,
             ErrorCode::Malformed
         );
+    }
+
+    #[test]
+    fn header_rejects_unknown_flag_bits() {
+        let frame = encode_stats(1);
+        let mut head = [0u8; HEADER_LEN];
+        head.copy_from_slice(&frame[..HEADER_LEN]);
+        head[6] = 0x02; // first unassigned flag bit
+        assert_eq!(
+            decode_header(&head).unwrap_err().code,
+            ErrorCode::Malformed
+        );
+        head[6] = FLAG_DEADLINE;
+        assert_eq!(decode_header(&head).expect("known flag").flags, FLAG_DEADLINE);
+    }
+
+    #[test]
+    fn deadline_frame_round_trips_and_strips_cleanly() {
+        let x = [1.0, -2.5, 3.75];
+        let y = [0.5, 1e300, -1e-300];
+        let inner = encode_dot_payload(&x, &y);
+        let frame = encode_frame_with_deadline(Opcode::Dot, 42, 1_500_000, &inner);
+        let (header, payload) = split(&frame);
+        assert_eq!(header.opcode, Opcode::Dot.byte());
+        assert_eq!(header.flags, FLAG_DEADLINE);
+        let (deadline, rest) = split_deadline(header.flags, payload).expect("well-formed");
+        assert_eq!(deadline, Some(1_500_000));
+        match decode_request(Opcode::Dot, rest).expect("decodes") {
+            Request::Submit(SharedInput::Dot(dx, dy)) => {
+                for i in 0..x.len() {
+                    assert_eq!(dx[i].to_bits(), x[i].to_bits());
+                    assert_eq!(dy[i].to_bits(), y[i].to_bits());
+                }
+            }
+            other => panic!("unexpected request {:?}", other),
+        }
+        // Without the flag the same bytes pass through untouched.
+        let (none, all) = split_deadline(0, payload).expect("flagless");
+        assert_eq!(none, None);
+        assert_eq!(all.len(), payload.len());
+    }
+
+    #[test]
+    fn truncated_deadline_prefix_rejected() {
+        for len in 0..8usize {
+            let short = vec![0u8; len];
+            assert_eq!(
+                split_deadline(FLAG_DEADLINE, &short).unwrap_err().code,
+                ErrorCode::Malformed,
+                "len {}",
+                len
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,358 @@
+//! Deterministic, seeded fault injection for the serving stack.
+//!
+//! Production failure handling is only trustworthy if every failure path can
+//! be exercised on demand and *replayed exactly*. This module provides that
+//! lever: a [`FaultPlan`] is a list of site-keyed, trigger-counted fault
+//! points ("the 3rd job executed by the pool panics", "the 2nd socket write
+//! on this server fails"), and a [`FaultInjector`] is the cheap runtime form
+//! threaded through the pool, dispatcher, and wire server as an
+//! `Option<Arc<FaultInjector>>`.
+//!
+//! Design rules:
+//!
+//! * **Zero cost when absent.** Every injection site is a single
+//!   `if let Some(inj) = faults { ... }` null check; production builds pass
+//!   `None` and take no other branch.
+//! * **Deterministic.** Each site keeps an atomic arrival counter; a fault
+//!   point fires when the site's arrival ordinal matches its `trigger`.
+//!   Given the same plan and the same (single-consumer) arrival order, a
+//!   chaos run replays exactly. [`FaultPlan::seeded`] derives a plan from a
+//!   `u64` seed via the repo's own deterministic [`Rng`], so chaos tests and
+//!   `serve-bench --chaos` are reproducible from one number.
+//! * **Observable.** The injector counts every fault it actually fired, per
+//!   site; [`FaultInjector::fired`] snapshots feed the `chaos` block of
+//!   `BENCH_serving.json` and the chaos-matrix tests.
+//!
+//! The sites themselves live in the code they perturb:
+//! `runtime/parallel.rs` (worker panic, latch-wake delay),
+//! `serve/queue.rs` (dispatcher stall), and `serve/net.rs` (socket
+//! read/write errors, truncated frames, connection drops, slow-client
+//! writer stalls).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// Where in the serving stack a fault point injects.
+///
+/// Each variant names one *instrumented site*; the matching production code
+/// consults the injector at exactly that point. The doc comment of each
+/// variant states the observable degradation the rest of the stack must
+/// provide (and that the chaos tests pin).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FaultSite {
+    /// A pool worker panics while executing a job, and the worker thread
+    /// exits. The owning dispatch fails with a typed worker-panic error;
+    /// the pool respawns the worker (same slot index, same logical
+    /// partition) before the next dispatch.
+    WorkerPanic,
+    /// The serve dispatcher stalls for [`FaultPoint::delay`] before draining
+    /// the queue — models a descheduled dispatcher thread. Requests queue up
+    /// behind backpressure; deadline-bearing requests may be shed.
+    DispatcherStall,
+    /// A worker sleeps for [`FaultPoint::delay`] after finishing its chunk
+    /// but before arriving at the completion latch — models a lost/late
+    /// wakeup. Callers see latency, never a hang.
+    LatchWakeDelay,
+    /// The server-side connection reader fails with an I/O error before the
+    /// next frame. The connection closes; in-flight responses are still
+    /// resolved server-side and discarded by the writer.
+    SocketReadError,
+    /// The server-side connection writer fails with an I/O error mid-stream.
+    /// The connection closes; the client observes EOF or a torn stream.
+    SocketWriteError,
+    /// The server writes only a prefix of a response frame, then drops the
+    /// connection — the client must detect the torn frame as an error, not
+    /// hang.
+    TruncatedFrame,
+    /// The server drops the whole connection while a batch is in flight.
+    /// Every admitted request still resolves server-side (tickets are
+    /// drop-safe); the client sees EOF.
+    ConnDropMidBatch,
+    /// The connection writer stalls for [`FaultPoint::delay`] before writing
+    /// — models a slow client that stops draining its socket. Bounded writer
+    /// queues plus write timeouts must evict the connection instead of
+    /// wedging the reader.
+    SlowClientWriter,
+}
+
+impl FaultSite {
+    /// Every instrumented site, in a stable order (used by seeded plans and
+    /// the bench chaos block).
+    pub const ALL: [FaultSite; 8] = [
+        FaultSite::WorkerPanic,
+        FaultSite::DispatcherStall,
+        FaultSite::LatchWakeDelay,
+        FaultSite::SocketReadError,
+        FaultSite::SocketWriteError,
+        FaultSite::TruncatedFrame,
+        FaultSite::ConnDropMidBatch,
+        FaultSite::SlowClientWriter,
+    ];
+
+    /// Sites exercised by the in-process chaos scenario (no socket).
+    pub const IN_PROCESS: [FaultSite; 3] = [
+        FaultSite::WorkerPanic,
+        FaultSite::DispatcherStall,
+        FaultSite::LatchWakeDelay,
+    ];
+
+    /// Stable snake_case label (JSON keys in the bench chaos block).
+    pub fn label(self) -> &'static str {
+        match self {
+            FaultSite::WorkerPanic => "worker_panic",
+            FaultSite::DispatcherStall => "dispatcher_stall",
+            FaultSite::LatchWakeDelay => "latch_wake_delay",
+            FaultSite::SocketReadError => "socket_read_error",
+            FaultSite::SocketWriteError => "socket_write_error",
+            FaultSite::TruncatedFrame => "truncated_frame",
+            FaultSite::ConnDropMidBatch => "conn_drop_mid_batch",
+            FaultSite::SlowClientWriter => "slow_client_writer",
+        }
+    }
+
+    fn index(self) -> usize {
+        FaultSite::ALL.iter().position(|s| *s == self).unwrap()
+    }
+
+    /// Whether this site's fault is a timed stall (carries a delay) rather
+    /// than an induced failure.
+    pub fn is_stall(self) -> bool {
+        matches!(
+            self,
+            FaultSite::DispatcherStall | FaultSite::LatchWakeDelay | FaultSite::SlowClientWriter
+        )
+    }
+}
+
+/// One scheduled fault: at the `trigger`-th arrival (1-based) at `site`,
+/// inject; stall sites sleep for `delay`, failure sites fail.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPoint {
+    /// The instrumented site this point arms.
+    pub site: FaultSite,
+    /// 1-based arrival ordinal at the site on which the fault fires.
+    pub trigger: u64,
+    /// Stall duration for stall sites; ignored by failure sites.
+    pub delay: Duration,
+}
+
+/// A reproducible schedule of fault points.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    points: Vec<FaultPoint>,
+}
+
+impl FaultPlan {
+    /// An empty plan: an injector built from it never fires. Used by the
+    /// parity tests proving that a compiled-in-but-idle injector is
+    /// bit-identical to no injector at all.
+    pub fn none() -> Self {
+        FaultPlan { points: Vec::new() }
+    }
+
+    /// Arm `site` to fail at its `trigger`-th arrival (1-based).
+    pub fn with(mut self, site: FaultSite, trigger: u64) -> Self {
+        self.points.push(FaultPoint {
+            site,
+            trigger,
+            delay: Duration::from_millis(1),
+        });
+        self
+    }
+
+    /// Arm a stall of `delay` at the `trigger`-th arrival at `site`.
+    pub fn with_stall(mut self, site: FaultSite, trigger: u64, delay: Duration) -> Self {
+        self.points.push(FaultPoint {
+            site,
+            trigger,
+            delay,
+        });
+        self
+    }
+
+    /// Derive a deterministic plan from a seed: every site in `sites` gets
+    /// one fault point with a pseudo-random trigger in `1..=spread` (and a
+    /// small pseudo-random stall delay for stall sites). Same seed, same
+    /// plan — byte for byte.
+    pub fn seeded(seed: u64, sites: &[FaultSite], spread: u64) -> Self {
+        let spread = spread.max(1);
+        let mut rng = Rng::new(seed ^ 0xFA_017);
+        let mut plan = FaultPlan::none();
+        for &site in sites {
+            let trigger = rng.next_u64() % spread + 1;
+            let delay = Duration::from_micros(200 + rng.next_u64() % 800);
+            plan.points.push(FaultPoint {
+                site,
+                trigger,
+                delay,
+            });
+        }
+        plan
+    }
+
+    /// The scheduled points, in insertion order.
+    pub fn points(&self) -> &[FaultPoint] {
+        &self.points
+    }
+
+    /// True if no site is armed.
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+/// Runtime form of a [`FaultPlan`]: per-site atomic arrival counters plus
+/// per-site fired counters. Shared as `Option<Arc<FaultInjector>>`;
+/// `None` is the production path.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    arrivals: [AtomicU64; 8],
+    fired: [AtomicU64; 8],
+}
+
+impl FaultInjector {
+    /// Build an injector for a plan.
+    pub fn new(plan: FaultPlan) -> Arc<Self> {
+        Arc::new(FaultInjector {
+            plan,
+            arrivals: Default::default(),
+            fired: Default::default(),
+        })
+    }
+
+    /// Record one arrival at `site`; returns `Some(point)` if a scheduled
+    /// fault fires on this arrival. Failure sites use the returned point as
+    /// a yes/no; stall sites read its `delay`.
+    pub fn arm(&self, site: FaultSite) -> Option<FaultPoint> {
+        let idx = site.index();
+        let nth = self.arrivals[idx].fetch_add(1, Ordering::Relaxed) + 1;
+        let hit = self
+            .plan
+            .points
+            .iter()
+            .find(|p| p.site == site && p.trigger == nth)
+            .copied();
+        if hit.is_some() {
+            self.fired[idx].fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Convenience for failure sites: did a fault fire on this arrival?
+    pub fn fire(&self, site: FaultSite) -> bool {
+        self.arm(site).is_some()
+    }
+
+    /// Convenience for stall sites: the stall to apply on this arrival, if
+    /// one fired.
+    pub fn stall(&self, site: FaultSite) -> Option<Duration> {
+        self.arm(site).map(|p| p.delay)
+    }
+
+    /// How many faults actually fired at `site` so far.
+    pub fn fired(&self, site: FaultSite) -> u64 {
+        self.fired[site.index()].load(Ordering::Relaxed)
+    }
+
+    /// Total faults fired across all sites.
+    pub fn total_fired(&self) -> u64 {
+        FaultSite::ALL.iter().map(|&s| self.fired(s)).sum()
+    }
+
+    /// How many arrivals `site` has seen (fired or not).
+    pub fn arrivals(&self, site: FaultSite) -> u64 {
+        self.arrivals[site.index()].load(Ordering::Relaxed)
+    }
+
+    /// The plan this injector replays.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trigger_counting_fires_exactly_once_at_the_nth_arrival() {
+        let inj = FaultInjector::new(FaultPlan::none().with(FaultSite::WorkerPanic, 3));
+        assert!(!inj.fire(FaultSite::WorkerPanic));
+        assert!(!inj.fire(FaultSite::WorkerPanic));
+        assert!(inj.fire(FaultSite::WorkerPanic));
+        assert!(!inj.fire(FaultSite::WorkerPanic));
+        assert_eq!(inj.fired(FaultSite::WorkerPanic), 1);
+        assert_eq!(inj.arrivals(FaultSite::WorkerPanic), 4);
+        assert_eq!(inj.total_fired(), 1);
+    }
+
+    #[test]
+    fn sites_count_independently() {
+        let plan = FaultPlan::none()
+            .with(FaultSite::SocketReadError, 1)
+            .with(FaultSite::SocketWriteError, 2);
+        let inj = FaultInjector::new(plan);
+        assert!(inj.fire(FaultSite::SocketReadError));
+        assert!(!inj.fire(FaultSite::SocketWriteError));
+        assert!(inj.fire(FaultSite::SocketWriteError));
+        assert_eq!(inj.fired(FaultSite::SocketReadError), 1);
+        assert_eq!(inj.fired(FaultSite::SocketWriteError), 1);
+    }
+
+    #[test]
+    fn stall_sites_return_their_delay() {
+        let d = Duration::from_micros(1234);
+        let inj = FaultInjector::new(FaultPlan::none().with_stall(
+            FaultSite::DispatcherStall,
+            1,
+            d,
+        ));
+        assert_eq!(inj.stall(FaultSite::DispatcherStall), Some(d));
+        assert_eq!(inj.stall(FaultSite::DispatcherStall), None);
+    }
+
+    #[test]
+    fn seeded_plans_are_reproducible_and_cover_requested_sites() {
+        let a = FaultPlan::seeded(42, &FaultSite::ALL, 16);
+        let b = FaultPlan::seeded(42, &FaultSite::ALL, 16);
+        assert_eq!(a.points().len(), FaultSite::ALL.len());
+        for (pa, pb) in a.points().iter().zip(b.points()) {
+            assert_eq!(pa.site, pb.site);
+            assert_eq!(pa.trigger, pb.trigger);
+            assert_eq!(pa.delay, pb.delay);
+            assert!((1..=16).contains(&pa.trigger));
+        }
+        let c = FaultPlan::seeded(43, &FaultSite::ALL, 16);
+        assert!(
+            a.points()
+                .iter()
+                .zip(c.points())
+                .any(|(pa, pc)| pa.trigger != pc.trigger || pa.delay != pc.delay),
+            "different seeds should produce different plans"
+        );
+    }
+
+    #[test]
+    fn empty_plan_never_fires() {
+        let inj = FaultInjector::new(FaultPlan::none());
+        for &site in &FaultSite::ALL {
+            assert!(!inj.fire(site));
+            assert!(inj.stall(site).is_none());
+        }
+        assert_eq!(inj.total_fired(), 0);
+    }
+
+    #[test]
+    fn labels_are_stable_and_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for &site in &FaultSite::ALL {
+            assert!(seen.insert(site.label()), "duplicate label {}", site.label());
+        }
+        assert!(!FaultSite::WorkerPanic.is_stall());
+        assert!(FaultSite::DispatcherStall.is_stall());
+    }
+}

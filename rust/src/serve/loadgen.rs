@@ -41,7 +41,8 @@ use crate::util::rng::Rng;
 use crate::util::stats::percentile_sorted;
 
 use super::codec::{self, ErrorCode, Opcode, Response, HEADER_LEN};
-use super::net::{read_exact_or_eof, WireClient};
+use super::faults::{FaultInjector, FaultSite};
+use super::net::{is_timeout, WireClient};
 use super::queue::AsyncDotService;
 use super::scheduler::ExecPath;
 use super::{DotService, SharedInput};
@@ -241,6 +242,31 @@ pub struct LoadReport {
     /// Sum of all response values — a determinism anchor (fixed seed +
     /// fixed threads ⇒ bit-identical checksum).
     pub checksum: f64,
+    /// Latency samples dropped from the percentiles because they were not
+    /// finite (a wedged clock source or an injected fault can produce
+    /// them). Zero on every healthy run; reported instead of panicking
+    /// mid-bench.
+    pub non_finite_latencies: usize,
+}
+
+/// Sort latency samples for percentile extraction, dropping non-finite
+/// values instead of panicking on an incomparable sort: returns the
+/// finite samples in ascending order plus the number dropped.
+fn finite_sorted(latencies: Vec<f64>) -> (Vec<f64>, usize) {
+    let before = latencies.len();
+    let mut finite: Vec<f64> = latencies.into_iter().filter(|v| v.is_finite()).collect();
+    finite.sort_by(f64::total_cmp);
+    (finite, before - finite.len())
+}
+
+/// [`percentile_sorted`] that degrades to NaN on an empty sample set
+/// (every latency was non-finite) rather than asserting.
+fn pct_or_nan(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        f64::NAN
+    } else {
+        percentile_sorted(sorted, p)
+    }
 }
 
 /// Drive `service` with `requests` dot requests sampled from `mix` in
@@ -333,7 +359,7 @@ pub fn run_load_with(
         }
         first += chunk.len();
     }
-    latencies.sort_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
+    let (latencies, non_finite) = finite_sorted(latencies);
     let flops = updates * service.dot_spec().class.flops_per_update();
     let elapsed_ns = match mode {
         LoadMode::Closed => busy_ns,
@@ -346,16 +372,17 @@ pub fn run_load_with(
         sharded,
         busy_ns,
         elapsed_ns,
-        latency_p50_ns: percentile_sorted(&latencies, 50.0),
-        latency_p90_ns: percentile_sorted(&latencies, 90.0),
-        latency_p99_ns: percentile_sorted(&latencies, 99.0),
-        latency_max_ns: latencies[latencies.len() - 1],
+        latency_p50_ns: pct_or_nan(&latencies, 50.0),
+        latency_p90_ns: pct_or_nan(&latencies, 90.0),
+        latency_p99_ns: pct_or_nan(&latencies, 99.0),
+        latency_max_ns: latencies.last().copied().unwrap_or(f64::NAN),
         updates,
         flops,
         mflops: flops as f64 / busy_ns * 1000.0,
         gups: updates as f64 / busy_ns,
         reqs_per_s: requests as f64 / elapsed_ns * 1e9,
         checksum,
+        non_finite_latencies: non_finite,
     })
 }
 
@@ -412,6 +439,10 @@ pub struct AsyncLoadReport {
 /// Determinism: the request stream, every response value and the checksum
 /// are bit-identical to the synchronous run at the same `T` — only the
 /// timing columns are measurements.
+///
+/// A wall-clock watchdog bounds the whole run at a generous multiple of
+/// the offered-load duration (see [`default_watchdog`]): a wedged
+/// pipeline fails with a diagnostic error instead of hanging CI forever.
 pub fn run_load_async(
     service: &AsyncDotService,
     mix: &[MixEntry],
@@ -419,6 +450,34 @@ pub fn run_load_async(
     requests: usize,
     rate_rps: f64,
     seed: u64,
+) -> Result<AsyncLoadReport, BackendError> {
+    let watchdog = default_watchdog(requests, rate_rps);
+    run_load_async_bounded(service, mix, operands, requests, rate_rps, seed, watchdog)
+}
+
+/// The watchdog budget [`run_load_async`] applies: 20× the offered-load
+/// duration, floored at 10 s so tiny runs on loaded CI hosts don't trip,
+/// capped at 10 min so nothing waits longer than that on a hung pipeline.
+pub fn default_watchdog(requests: usize, rate_rps: f64) -> Duration {
+    let offered_s = if rate_rps > 0.0 && rate_rps.is_finite() {
+        requests as f64 / rate_rps
+    } else {
+        0.0
+    };
+    Duration::from_secs_f64((offered_s * 20.0).clamp(10.0, 600.0))
+}
+
+/// [`run_load_async`] with an explicit watchdog budget (tests use a small
+/// one to pin the failure mode; the public entry point computes a
+/// generous default).
+pub fn run_load_async_bounded(
+    service: &AsyncDotService,
+    mix: &[MixEntry],
+    operands: &OperandPool,
+    requests: usize,
+    rate_rps: f64,
+    seed: u64,
+    watchdog: Duration,
 ) -> Result<AsyncLoadReport, BackendError> {
     if mix.is_empty() {
         return Err(BackendError::Runtime("empty request mixture".to_string()));
@@ -434,6 +493,7 @@ pub fn run_load_async(
     let stats_before = service.stats();
 
     let epoch = Instant::now();
+    let hard_deadline = epoch + watchdog;
     let mut handles = Vec::with_capacity(requests);
     for (k, &n) in sizes.iter().enumerate() {
         let target = epoch + Duration::from_nanos((k as f64 * gap_ns) as u64);
@@ -446,7 +506,16 @@ pub fn run_load_async(
     let mut updates = 0u64;
     let mut checksum = 0.0;
     for handle in handles {
-        let (r, latency_ns) = handle.wait_timed()?;
+        let remaining = hard_deadline.saturating_duration_since(Instant::now());
+        let (r, latency_ns) = match handle.wait_timed_for(remaining) {
+            Some(done) => done?,
+            None => {
+                return Err(BackendError::Runtime(format!(
+                    "load-generator watchdog: request unresolved {watchdog:?} into the run \
+                     — the pipeline is wedged (dispatcher or pool stuck)"
+                )))
+            }
+        };
         latencies.push(latency_ns);
         checksum += r.value;
         updates += r.n as u64;
@@ -458,7 +527,7 @@ pub fn run_load_async(
     let elapsed_ns = epoch.elapsed().as_nanos() as f64;
     let stats = service.stats();
     let busy_ns = (stats.busy_ns - stats_before.busy_ns).max(1.0);
-    latencies.sort_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
+    let (latencies, non_finite) = finite_sorted(latencies);
     let spec = service.service().dot_spec();
     let flops = updates * spec.class.flops_per_update();
     let opts = service.options();
@@ -470,16 +539,17 @@ pub fn run_load_async(
             sharded,
             busy_ns,
             elapsed_ns,
-            latency_p50_ns: percentile_sorted(&latencies, 50.0),
-            latency_p90_ns: percentile_sorted(&latencies, 90.0),
-            latency_p99_ns: percentile_sorted(&latencies, 99.0),
-            latency_max_ns: latencies[latencies.len() - 1],
+            latency_p50_ns: pct_or_nan(&latencies, 50.0),
+            latency_p90_ns: pct_or_nan(&latencies, 90.0),
+            latency_p99_ns: pct_or_nan(&latencies, 99.0),
+            latency_max_ns: latencies.last().copied().unwrap_or(f64::NAN),
             updates,
             flops,
             mflops: flops as f64 / busy_ns * 1000.0,
             gups: updates as f64 / busy_ns,
             reqs_per_s: requests as f64 / elapsed_ns * 1e9,
             checksum,
+            non_finite_latencies: non_finite,
         },
         queue_depth: opts.queue_depth,
         max_queue_depth: stats.max_queue_depth,
@@ -579,8 +649,47 @@ impl WireWorker {
     }
 }
 
+/// Read exactly `buf.len()` bytes under a wall-clock watchdog: socket
+/// read timeouts below the deadline just keep waiting (partial progress
+/// is preserved across them), while a timeout past the deadline turns
+/// into a diagnostic error instead of a hung receiver. `Ok(false)` on
+/// clean EOF before the first byte.
+fn read_exact_deadline(
+    r: &mut impl std::io::Read,
+    buf: &mut [u8],
+    deadline: Instant,
+) -> Result<bool, String> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(false);
+                }
+                return Err("eof inside a frame".to_string());
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) if is_timeout(&e) => {
+                if Instant::now() >= deadline {
+                    return Err(format!(
+                        "wire watchdog: run exceeded its wall-clock budget with {} of {} \
+                         frame bytes outstanding — server or socket wedged",
+                        buf.len() - filled,
+                        buf.len()
+                    ));
+                }
+            }
+            Err(e) => return Err(format!("wire read: {e}")),
+        }
+    }
+    Ok(true)
+}
+
 /// One connection's receiver: read response frames until every assigned
-/// request has a result, bouncing BUSY ids back to the sender.
+/// request has a result, bouncing BUSY ids back to the sender. Bounded by
+/// the run's watchdog `deadline` so a silent server fails the run with a
+/// diagnostic instead of hanging it.
 fn wire_receiver(
     stream: TcpStream,
     assigned: usize,
@@ -588,7 +697,11 @@ fn wire_receiver(
     gap_ns: f64,
     retry_tx: Sender<usize>,
     finished: Arc<AtomicBool>,
+    deadline: Instant,
 ) -> Result<(Vec<WireRecord>, u64), String> {
+    // Coarse per-read timeout: the watchdog's tick. Progress mid-frame is
+    // carried across ticks by `read_exact_deadline`.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
     let mut reader = BufReader::new(stream);
     let mut records = Vec::with_capacity(assigned);
     let mut busy_retries = 0u64;
@@ -598,10 +711,10 @@ fn wire_receiver(
     };
     while records.len() < assigned {
         let mut head = [0u8; HEADER_LEN];
-        match read_exact_or_eof(&mut reader, &mut head) {
+        match read_exact_deadline(&mut reader, &mut head, deadline) {
             Ok(true) => {}
             Ok(false) => return fail("server closed mid-run".to_string(), &finished),
-            Err(e) => return fail(format!("wire read: {e}"), &finished),
+            Err(msg) => return fail(msg, &finished),
         }
         let header = match codec::decode_header(&head) {
             Ok(h) => h,
@@ -609,8 +722,10 @@ fn wire_receiver(
         };
         let mut payload = vec![0u8; header.payload_len as usize];
         if header.payload_len > 0 {
-            if let Err(e) = std::io::Read::read_exact(&mut reader, &mut payload) {
-                return fail(format!("wire read: {e}"), &finished);
+            match read_exact_deadline(&mut reader, &mut payload, deadline) {
+                Ok(true) => {}
+                Ok(false) => return fail("server closed mid-frame".to_string(), &finished),
+                Err(msg) => return fail(msg, &finished),
             }
         }
         let Some(opcode) = Opcode::from_byte(header.opcode) else {
@@ -670,6 +785,35 @@ pub fn run_load_wire(
     flops_per_update: u64,
     seed: u64,
 ) -> Result<WireLoadReport, BackendError> {
+    let watchdog = default_watchdog(requests, rate_rps);
+    run_load_wire_bounded(
+        addr,
+        mix,
+        operands,
+        requests,
+        rate_rps,
+        connections,
+        flops_per_update,
+        seed,
+        watchdog,
+    )
+}
+
+/// [`run_load_wire`] with an explicit watchdog budget (the public entry
+/// point computes a generous default; tests use a small one to pin the
+/// no-hang failure mode against an unresponsive server).
+#[allow(clippy::too_many_arguments)]
+pub fn run_load_wire_bounded(
+    addr: &str,
+    mix: &[MixEntry],
+    operands: &OperandPool,
+    requests: usize,
+    rate_rps: f64,
+    connections: usize,
+    flops_per_update: u64,
+    seed: u64,
+    watchdog: Duration,
+) -> Result<WireLoadReport, BackendError> {
     if mix.is_empty() {
         return Err(BackendError::Runtime("empty request mixture".to_string()));
     }
@@ -701,6 +845,7 @@ pub fn run_load_wire(
     let before = probe.stats().map_err(wire_err)?;
 
     let epoch = Instant::now();
+    let hard_deadline = epoch + watchdog;
     let mut workers = Vec::with_capacity(connections);
     for c in 0..connections {
         let stream = TcpStream::connect(addr)
@@ -717,7 +862,17 @@ pub fn run_load_wire(
             let count = assigned.len();
             std::thread::Builder::new()
                 .name("kahan-wire-recv".to_string())
-                .spawn(move || wire_receiver(read_half, count, epoch, gap_ns, retry_tx, finished))
+                .spawn(move || {
+                    wire_receiver(
+                        read_half,
+                        count,
+                        epoch,
+                        gap_ns,
+                        retry_tx,
+                        finished,
+                        hard_deadline,
+                    )
+                })
                 .expect("spawn wire receiver")
         };
         let sender = {
@@ -787,7 +942,7 @@ pub fn run_load_wire(
     let updates: u64 = sizes.iter().map(|&n| n as u64).sum();
     let flops = updates * flops_per_update;
     let busy_ns = (after.busy_ns.saturating_sub(before.busy_ns) as f64).max(1.0);
-    latencies.sort_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
+    let (latencies, non_finite) = finite_sorted(latencies);
     Ok(WireLoadReport {
         load: LoadReport {
             requests,
@@ -796,16 +951,17 @@ pub fn run_load_wire(
             sharded,
             busy_ns,
             elapsed_ns,
-            latency_p50_ns: percentile_sorted(&latencies, 50.0),
-            latency_p90_ns: percentile_sorted(&latencies, 90.0),
-            latency_p99_ns: percentile_sorted(&latencies, 99.0),
-            latency_max_ns: latencies[latencies.len() - 1],
+            latency_p50_ns: pct_or_nan(&latencies, 50.0),
+            latency_p90_ns: pct_or_nan(&latencies, 90.0),
+            latency_p99_ns: pct_or_nan(&latencies, 99.0),
+            latency_max_ns: latencies.last().copied().unwrap_or(f64::NAN),
             updates,
             flops,
             mflops: flops as f64 / busy_ns * 1000.0,
             gups: updates as f64 / busy_ns,
             reqs_per_s: requests as f64 / elapsed_ns * 1e9,
             checksum,
+            non_finite_latencies: non_finite,
         },
         connections,
         rate_rps,
@@ -815,6 +971,145 @@ pub fn run_load_wire(
         dispatches: after.dispatches - before.dispatches,
         arrival_batches: after.arrival_batches - before.arrival_batches,
         pool_utilization: (busy_ns / elapsed_ns).min(1.0),
+    })
+}
+
+/// Outcome of one chaos run ([`run_load_chaos`]): every submitted request
+/// classified into exactly one bucket, the injector's per-site accounting,
+/// and the post-chaos recovery probe. The structural invariant the chaos
+/// bench gates on is `hung == 0`: under any seeded fault plan, every
+/// request resolves to a result or a typed error before the watchdog.
+#[derive(Clone, Debug)]
+pub struct ChaosReport {
+    /// Requests submitted (and classified — the buckets sum to this).
+    pub requests: usize,
+    /// Requests that completed with a correct result.
+    pub completed_ok: usize,
+    /// Requests shed with the typed deadline error before any compute.
+    pub deadline_shed: usize,
+    /// Requests failed by an (injected) worker panic.
+    pub worker_panics: usize,
+    /// Requests that resolved to any other typed error.
+    pub other_errors: usize,
+    /// Requests still unresolved when the watchdog expired. Must be 0 —
+    /// the resolve-exactly-once contract under faults.
+    pub hung: usize,
+    /// Fired fault count per site label, for every site (zeros included —
+    /// a stable schema for the bench artifact).
+    pub injected: Vec<(&'static str, u64)>,
+    /// Total faults fired across all sites.
+    pub total_injected: u64,
+    /// Whether the post-chaos probe completed bit-identical to the
+    /// synchronous path on the self-healed pool.
+    pub recovery_verified: bool,
+    /// Latency of the post-chaos probe through the full async pipeline,
+    /// ns (the "how long until the service is useful again" number).
+    pub recovery_latency_ns: f64,
+}
+
+/// Drive the async pipeline with the standard open-loop stream while
+/// `injector` (already wired into the service via
+/// [`AsyncDotService::new_with_faults`]) fires a seeded fault plan, and
+/// classify every outcome. Faulted runs make no numeric claims — panicked
+/// requests have no result — so unlike [`run_load_async`] this returns
+/// accounting, not throughput: the properties it measures are
+/// "no request hangs" and "the pipeline recovers".
+#[allow(clippy::too_many_arguments)]
+pub fn run_load_chaos(
+    service: &AsyncDotService,
+    injector: &FaultInjector,
+    mix: &[MixEntry],
+    operands: &OperandPool,
+    requests: usize,
+    rate_rps: f64,
+    deadline: Option<Duration>,
+    seed: u64,
+    watchdog: Duration,
+) -> Result<ChaosReport, BackendError> {
+    if mix.is_empty() {
+        return Err(BackendError::Runtime("empty request mixture".to_string()));
+    }
+    if requests == 0 {
+        return Err(BackendError::Runtime("need at least one request".to_string()));
+    }
+    if rate_rps <= 0.0 || !rate_rps.is_finite() {
+        return Err(BackendError::Runtime("open-loop rate must be > 0".to_string()));
+    }
+    let gap_ns = 1e9 / rate_rps;
+    let sizes = sample_sizes(mix, requests, seed);
+
+    let epoch = Instant::now();
+    let hard_deadline = epoch + watchdog;
+    let mut handles = Vec::with_capacity(requests);
+    for (k, &n) in sizes.iter().enumerate() {
+        let target = epoch + Duration::from_nanos((k as f64 * gap_ns) as u64);
+        pace_until(target);
+        // Non-blocking admission with a watchdog on the retry loop: a
+        // wedged dispatcher turns queue-full into a diagnostic failure
+        // instead of blocking the generator forever.
+        let handle = loop {
+            match service.try_submit_with_deadline(operands.shared_dot(n), target, deadline)? {
+                super::queue::TrySubmit::Accepted(h) => break h,
+                super::queue::TrySubmit::Busy => {
+                    if Instant::now() >= hard_deadline {
+                        return Err(BackendError::Runtime(format!(
+                            "chaos watchdog: queue refused admission for {watchdog:?} \
+                             — dispatcher not draining"
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_micros(50));
+                }
+            }
+        };
+        handles.push(handle);
+    }
+
+    let (mut completed_ok, mut deadline_shed) = (0usize, 0usize);
+    let (mut worker_panics, mut other_errors, mut hung) = (0usize, 0usize, 0usize);
+    for handle in handles {
+        let remaining = hard_deadline.saturating_duration_since(Instant::now());
+        match handle.wait_timed_for(remaining) {
+            Some(Ok(_)) => completed_ok += 1,
+            Some(Err(BackendError::DeadlineExceeded { .. })) => deadline_shed += 1,
+            Some(Err(BackendError::Runtime(msg))) if msg.contains("panic") => worker_panics += 1,
+            Some(Err(_)) => other_errors += 1,
+            None => hung += 1,
+        }
+    }
+
+    // Recovery probe: one clean request through the full async pipeline,
+    // bit-compared against the synchronous path over the *same* (by now
+    // self-healed) pool. Verifies both halves of the degradation
+    // contract: the pool is usable again, and healing preserved the
+    // partition (bit-identical results at fixed T).
+    let probe = operands.shared_dot(sizes[0]);
+    let want = service.service().submit(&probe.view())?;
+    let t0 = Instant::now();
+    let handle = service.submit(probe)?;
+    let (recovery_verified, recovery_latency_ns) =
+        match handle.wait_timed_for(Duration::from_secs(30)) {
+            Some(Ok((got, _))) => (
+                got.value.to_bits() == want.value.to_bits(),
+                t0.elapsed().as_nanos() as f64,
+            ),
+            _ => (false, f64::NAN),
+        };
+
+    let injected: Vec<(&'static str, u64)> = FaultSite::ALL
+        .iter()
+        .map(|&site| (site.label(), injector.fired(site)))
+        .collect();
+    Ok(ChaosReport {
+        requests,
+        completed_ok,
+        deadline_shed,
+        worker_panics,
+        other_errors,
+        hung,
+        total_injected: injector.total_fired(),
+        injected,
+        recovery_verified,
+        recovery_latency_ns,
     })
 }
 
@@ -958,6 +1253,93 @@ mod tests {
         assert!(run_load_async(&asy, &[], &ops, 10, 1e5, 1).is_err());
         assert!(run_load_async(&asy, &mix, &ops, 0, 1e5, 1).is_err());
         assert!(run_load_async(&asy, &mix, &ops, 10, 0.0, 1).is_err());
+    }
+
+    #[test]
+    fn chaos_run_resolves_every_request_and_recovers() {
+        use crate::serve::faults::FaultPlan;
+        // Explicit triggers (not seeded) so the panic is guaranteed to land
+        // within this short run: the very first pool job dies, the second
+        // arrival batch stalls long past the request deadline, and a latch
+        // wake is delayed.
+        let plan = FaultPlan::none()
+            .with(FaultSite::WorkerPanic, 1)
+            .with_stall(FaultSite::DispatcherStall, 2, Duration::from_millis(20))
+            .with_stall(FaultSite::LatchWakeDelay, 3, Duration::from_millis(2));
+        let injector = FaultInjector::new(plan);
+        let asy = AsyncDotService::new_with_faults(
+            tiny_cfg(2, 4096),
+            AsyncOptions::default(),
+            Some(Arc::clone(&injector)),
+        )
+        .unwrap();
+        let mix = vec![MixEntry { n: 256, weight: 1.0 }];
+        // Generate operands through a clean pool: first-touch runs pool jobs,
+        // and the armed WorkerPanic trigger must fire during the chaos run
+        // itself, not while preparing its inputs.
+        let clean = DotService::new(tiny_cfg(2, 4096)).unwrap();
+        let ops = OperandPool::generate(&mix, 7, clean.pool());
+        let r = run_load_chaos(
+            &asy,
+            &injector,
+            &mix,
+            &ops,
+            48,
+            1e5,
+            Some(Duration::from_millis(10)),
+            7,
+            Duration::from_secs(60),
+        )
+        .unwrap();
+        assert_eq!(r.requests, 48);
+        assert_eq!(
+            r.completed_ok + r.deadline_shed + r.worker_panics + r.other_errors + r.hung,
+            r.requests,
+            "every request must land in exactly one bucket: {r:?}"
+        );
+        assert_eq!(r.hung, 0, "no request may hang under faults: {r:?}");
+        assert!(r.worker_panics >= 1, "first-job panic must fail its dispatch: {r:?}");
+        assert!(r.total_injected >= 2, "panic + stall must both fire: {r:?}");
+        assert_eq!(r.injected.len(), FaultSite::ALL.len(), "stable per-site schema");
+        let by_label: HashMap<&str, u64> = r.injected.iter().copied().collect();
+        assert_eq!(by_label["worker_panic"], 1);
+        assert_eq!(by_label["socket_read_error"], 0, "no socket sites in-process");
+        assert!(r.recovery_verified, "post-chaos probe must be bit-identical: {r:?}");
+        assert!(r.recovery_latency_ns.is_finite() && r.recovery_latency_ns > 0.0);
+    }
+
+    #[test]
+    fn chaos_with_idle_injector_matches_uninjected_checksum_bits() {
+        use crate::serve::faults::FaultPlan;
+        // A compiled-in but empty injector must be invisible: same request
+        // stream, bit-identical checksum to the plain async service.
+        let mix = vec![MixEntry { n: 256, weight: 1.0 }];
+        let plain = AsyncDotService::new(tiny_cfg(2, 4096), AsyncOptions::default()).unwrap();
+        let plain_ops = OperandPool::generate(&mix, 7, plain.service().pool());
+        let want = run_load_async(&plain, &mix, &plain_ops, 32, 1e6, 7).unwrap();
+        let injector = FaultInjector::new(FaultPlan::none());
+        let idle = AsyncDotService::new_with_faults(
+            tiny_cfg(2, 4096),
+            AsyncOptions::default(),
+            Some(Arc::clone(&injector)),
+        )
+        .unwrap();
+        let idle_ops = OperandPool::generate(&mix, 7, idle.service().pool());
+        let got = run_load_async(&idle, &mix, &idle_ops, 32, 1e6, 7).unwrap();
+        assert_eq!(got.load.checksum.to_bits(), want.load.checksum.to_bits());
+        assert_eq!(injector.total_fired(), 0);
+    }
+
+    #[test]
+    fn finite_sorted_filters_and_counts_non_finite_latencies() {
+        let (sorted, dropped) = finite_sorted(vec![3.0, f64::NAN, 1.0, f64::INFINITY, 2.0]);
+        assert_eq!(sorted, vec![1.0, 2.0, 3.0]);
+        assert_eq!(dropped, 2);
+        assert_eq!(pct_or_nan(&sorted, 50.0), 2.0);
+        let (empty, dropped) = finite_sorted(vec![f64::NAN]);
+        assert!(empty.is_empty());
+        assert_eq!(dropped, 1);
+        assert!(pct_or_nan(&empty, 50.0).is_nan(), "empty percentile is NaN, not a panic");
     }
 
     #[test]

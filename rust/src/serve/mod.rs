@@ -78,6 +78,7 @@
 
 pub mod codec;
 pub mod crossover;
+pub mod faults;
 pub mod loadgen;
 pub mod net;
 pub mod queue;
@@ -94,11 +95,13 @@ use crate::runtime::parallel::{compensated_tree_reduce, ThreadPool, CACHELINE_F6
 
 pub use codec::{ErrorCode, WireError, WireResult, WireStats};
 pub use crossover::{calibrate, model_crossover, model_p1_gups, service_crossover, Calibration};
+pub use faults::{FaultInjector, FaultPlan, FaultPoint, FaultSite};
 pub use loadgen::{
-    default_mix, parse_mix, run_load, run_load_async, run_load_wire, run_load_with,
-    AsyncLoadReport, LoadMode, LoadReport, MixEntry, OperandPool, WireLoadReport,
+    default_mix, parse_mix, run_load, run_load_async, run_load_chaos, run_load_wire,
+    run_load_with, AsyncLoadReport, ChaosReport, LoadMode, LoadReport, MixEntry, OperandPool,
+    WireLoadReport,
 };
-pub use net::{NetServer, WireCallError, WireClient};
+pub use net::{NetOptions, NetServer, WireCallError, WireClient};
 pub use queue::{AsyncDotService, AsyncOptions, AsyncServeStats, ResponseHandle, TrySubmit};
 pub use scheduler::{BatchScheduler, DispatchPlan, ExecPath};
 

@@ -36,16 +36,17 @@
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::runtime::backend::BackendError;
 
 use super::codec::{
     self, ErrorCode, Opcode, Request, Response, WireError, WireResult, WireStats, HEADER_LEN,
 };
+use super::faults::{FaultInjector, FaultSite};
 use super::queue::{AsyncDotService, AsyncOptions, ResponseHandle, TrySubmit};
 use super::{ServeConfig, ServeResponse, SharedInput};
 
@@ -65,6 +66,65 @@ const BUSY_RETRY_LIMIT: u64 = 1 << 20;
 
 fn io_runtime(context: &str, e: std::io::Error) -> BackendError {
     BackendError::Runtime(format!("{context}: {e}"))
+}
+
+/// Socket-level robustness knobs for [`NetServer::bind_with`]. The
+/// defaults reproduce the pre-deadline server exactly: no timeouts, no
+/// idle reaping, no fault injection — graceful degradation is opt-in so
+/// the fault-free path stays bit-identical to earlier revisions.
+#[derive(Clone, Debug, Default)]
+pub struct NetOptions {
+    /// Per-read socket timeout. A peer that stalls *mid-frame* for longer
+    /// than this has torn the stream; the connection is closed. `None`
+    /// (default) blocks forever, as revision 1.0 did.
+    pub read_timeout: Option<Duration>,
+    /// Idle-connection reaper: a connection with no traffic *between*
+    /// frames for this long is closed and its threads reclaimed. `None`
+    /// (default) keeps idle connections forever.
+    pub idle_timeout: Option<Duration>,
+    /// Per-write socket timeout: a client that stops draining its
+    /// receive window for this long is evicted (the writer errors out and
+    /// the connection closes) instead of pinning a writer thread and an
+    /// unbounded response backlog. `None` (default) blocks forever.
+    pub write_timeout: Option<Duration>,
+    /// Bound on the reader → writer message queue. A full queue blocks
+    /// the reader — backpressure toward the socket — instead of growing
+    /// without limit while a slow client ignores its responses.
+    pub writer_queue: usize,
+    /// Deterministic fault injection for the socket-facing sites
+    /// ([`FaultSite::SocketReadError`] and friends). `None` in
+    /// production: the sites cost one branch on a null pointer.
+    pub faults: Option<Arc<FaultInjector>>,
+}
+
+/// Default reader → writer queue bound when [`NetOptions::writer_queue`]
+/// is left at zero: deep enough that completion-order streaming never
+/// stalls a healthy connection, finite so a stalled client cannot queue
+/// unbounded frames.
+const WRITER_QUEUE_DEFAULT: usize = 1024;
+
+impl NetOptions {
+    fn writer_queue_cap(&self) -> usize {
+        if self.writer_queue == 0 {
+            WRITER_QUEUE_DEFAULT
+        } else {
+            self.writer_queue
+        }
+    }
+
+    fn fire(&self, site: FaultSite) -> bool {
+        match &self.faults {
+            Some(inj) => inj.fire(site),
+            None => false,
+        }
+    }
+
+    fn stall(&self, site: FaultSite) -> Option<Duration> {
+        match &self.faults {
+            Some(inj) => inj.stall(site),
+            None => None,
+        }
+    }
 }
 
 /// One registered connection: the acceptor's stream clone (for shutdown)
@@ -94,7 +154,25 @@ impl NetServer {
     /// read it back via [`Self::local_addr`]) and start serving: builds
     /// the async pipeline for `cfg`/`opts` and spawns the acceptor.
     pub fn bind(addr: &str, cfg: ServeConfig, opts: AsyncOptions) -> Result<Self, BackendError> {
-        let service = Arc::new(AsyncDotService::new(cfg, opts)?);
+        Self::bind_with(addr, cfg, opts, NetOptions::default())
+    }
+
+    /// [`Self::bind`] with explicit socket-robustness options: timeouts,
+    /// idle reaping, writer-queue bound and fault injection (the
+    /// [`NetOptions`] default reproduces `bind` exactly). The pool-facing
+    /// injector, if any, is shared with the async pipeline so one seeded
+    /// plan drives every tier.
+    pub fn bind_with(
+        addr: &str,
+        cfg: ServeConfig,
+        opts: AsyncOptions,
+        net: NetOptions,
+    ) -> Result<Self, BackendError> {
+        let service = Arc::new(AsyncDotService::new_with_faults(
+            cfg,
+            opts,
+            net.faults.clone(),
+        )?);
         let listener = TcpListener::bind(addr).map_err(|e| io_runtime(&format!("bind {addr}"), e))?;
         let local_addr = listener
             .local_addr()
@@ -105,9 +183,10 @@ impl NetServer {
             let service = Arc::clone(&service);
             let shutdown = Arc::clone(&shutdown);
             let connections = Arc::clone(&connections);
+            let net = Arc::new(net);
             std::thread::Builder::new()
                 .name("kahan-net-accept".to_string())
-                .spawn(move || acceptor_main(listener, service, shutdown, connections))
+                .spawn(move || acceptor_main(listener, service, shutdown, connections, net))
                 .expect("spawn net acceptor")
         };
         Ok(Self {
@@ -168,6 +247,7 @@ fn acceptor_main(
     service: Arc<AsyncDotService>,
     shutdown: Arc<AtomicBool>,
     connections: Arc<Mutex<Vec<Connection>>>,
+    net: Arc<NetOptions>,
 ) {
     loop {
         let stream = match listener.accept() {
@@ -189,9 +269,10 @@ fn acceptor_main(
         };
         let reader = {
             let service = Arc::clone(&service);
+            let net = Arc::clone(&net);
             std::thread::Builder::new()
                 .name("kahan-net-read".to_string())
-                .spawn(move || connection_main(stream, service))
+                .spawn(move || connection_main(stream, service, net))
                 .expect("spawn net reader")
         };
         connections
@@ -252,12 +333,31 @@ fn skip_bytes(r: &mut impl Read, mut n: usize) -> std::io::Result<()> {
     Ok(())
 }
 
-fn send(tx: &Sender<WriterMsg>, msg: WriterMsg) -> bool {
+fn send(tx: &SyncSender<WriterMsg>, msg: WriterMsg) -> bool {
+    // A full (bounded) writer queue blocks here: reader-side
+    // backpressure toward the socket while a slow client catches up.
     tx.send(msg).is_ok()
 }
 
-fn send_error(tx: &Sender<WriterMsg>, id: u64, code: ErrorCode, message: &str) -> bool {
+fn send_error(tx: &SyncSender<WriterMsg>, id: u64, code: ErrorCode, message: &str) -> bool {
     send(tx, WriterMsg::Raw(codec::encode_error(id, code, message)))
+}
+
+/// The wire error code for a pipeline failure: deadline shedding gets its
+/// typed code (PROTOCOL.md §4.10); everything else (dispatcher drain,
+/// worker panic) is internal.
+fn error_code_of(e: &BackendError) -> ErrorCode {
+    match e {
+        BackendError::DeadlineExceeded { .. } => ErrorCode::Deadline,
+        _ => ErrorCode::Internal,
+    }
+}
+
+pub(crate) fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
 }
 
 /// Snapshot the pipeline counters into the wire stats payload
@@ -278,29 +378,82 @@ fn wire_stats(service: &AsyncDotService) -> WireStats {
 
 /// The reader half: frame decode loop feeding the service and the writer.
 /// Exits on clean EOF, fatal protocol errors (PROTOCOL.md §4), I/O
-/// failure, or service shutdown; joins its writer before returning.
-fn connection_main(stream: TcpStream, service: Arc<AsyncDotService>) {
+/// failure, idle reaping, or service shutdown; joins its writer before
+/// returning.
+fn connection_main(stream: TcpStream, service: Arc<AsyncDotService>, net: Arc<NetOptions>) {
     let writer_stream = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
     };
-    let (tx, rx) = std::sync::mpsc::channel::<WriterMsg>();
-    let writer = std::thread::Builder::new()
-        .name("kahan-net-write".to_string())
-        .spawn(move || writer_main(writer_stream, rx))
-        .expect("spawn net writer");
-    reader_loop(stream, &service, &tx);
+    let _ = writer_stream.set_write_timeout(net.write_timeout);
+    let (tx, rx) = std::sync::mpsc::sync_channel::<WriterMsg>(net.writer_queue_cap());
+    let writer = {
+        let net = Arc::clone(&net);
+        std::thread::Builder::new()
+            .name("kahan-net-write".to_string())
+            .spawn(move || writer_main(writer_stream, rx, net))
+            .expect("spawn net writer")
+    };
+    reader_loop(stream, &service, &tx, &net);
     drop(tx); // writer drains outstanding tickets, then exits
     let _ = writer.join();
 }
 
-fn reader_loop(stream: TcpStream, service: &AsyncDotService, tx: &Sender<WriterMsg>) {
+/// Wait for the first header byte of the next frame, ticking the idle
+/// clock on read timeouts. `Ok(true)` once a byte arrived, `Ok(false)` on
+/// clean EOF or idle-limit expiry (reap), `Err` on stream failure.
+fn await_first_byte(
+    reader: &mut BufReader<TcpStream>,
+    net: &NetOptions,
+    byte: &mut [u8],
+) -> std::io::Result<bool> {
+    let idle_start = Instant::now();
+    loop {
+        match read_exact_or_eof(reader, byte) {
+            Ok(got) => return Ok(got),
+            Err(e) if is_timeout(&e) => match net.idle_timeout {
+                // Idle reaping: no traffic between frames for the limit.
+                Some(limit) if idle_start.elapsed() >= limit => return Ok(false),
+                // Below the limit (or no limit, with only a mid-frame
+                // read timeout configured): keep waiting for a frame.
+                _ => {}
+            },
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+fn reader_loop(
+    stream: TcpStream,
+    service: &AsyncDotService,
+    tx: &SyncSender<WriterMsg>,
+    net: &NetOptions,
+) {
+    // One socket timeout serves both bounds: mid-frame stalls surface as
+    // hard timeouts below, while between-frame timeouts just tick the
+    // idle clock in `await_first_byte`.
+    let tick = match (net.read_timeout, net.idle_timeout) {
+        (Some(r), Some(i)) => Some(r.min(i)),
+        (r, i) => r.or(i),
+    };
+    let _ = stream.set_read_timeout(tick);
     let mut reader = BufReader::new(stream);
     loop {
         let mut head = [0u8; HEADER_LEN];
-        match read_exact_or_eof(&mut reader, &mut head) {
+        match await_first_byte(&mut reader, net, &mut head[..1]) {
             Ok(true) => {}
             Ok(false) | Err(_) => return,
+        }
+        // Injected read failure: the stream dies exactly as if the OS
+        // returned an error — admitted requests still resolve, the
+        // writer still drains them (into a likely-dead socket), nothing
+        // hangs.
+        if net.fire(FaultSite::SocketReadError) {
+            return;
+        }
+        match read_exact_or_eof(&mut reader, &mut head[1..]) {
+            Ok(true) => {}
+            Ok(false) | Err(_) => return, // mid-frame stall, EOF or error
         }
         let header = match codec::decode_header(&head) {
             Ok(h) => h,
@@ -345,7 +498,19 @@ fn reader_loop(stream: TcpStream, service: &AsyncDotService, tx: &Sender<WriterM
             }
             continue;
         };
-        let request = match codec::decode_request(opcode, &payload) {
+        // Strip the optional deadline prefix (PROTOCOL.md §2.4) before
+        // the opcode-specific payload decodes.
+        let (deadline_us, body) = match codec::split_deadline(header.flags, &payload) {
+            Ok(split) => split,
+            Err(e) => {
+                if !send_error(tx, header.request_id, e.code, &e.message) {
+                    return;
+                }
+                continue;
+            }
+        };
+        let deadline = deadline_us.map(Duration::from_micros);
+        let request = match codec::decode_request(opcode, body) {
             Ok(r) => r,
             Err(e) => {
                 if !send_error(tx, header.request_id, e.code, &e.message) {
@@ -357,7 +522,7 @@ fn reader_loop(stream: TcpStream, service: &AsyncDotService, tx: &Sender<WriterM
                 continue;
             }
         };
-        if !handle_request(service, tx, header.request_id, request) {
+        if !handle_request(service, tx, header.request_id, request, deadline, net) {
             return;
         }
     }
@@ -366,30 +531,34 @@ fn reader_loop(stream: TcpStream, service: &AsyncDotService, tx: &Sender<WriterM
 /// Admit one decoded request; `false` ends the connection.
 fn handle_request(
     service: &AsyncDotService,
-    tx: &Sender<WriterMsg>,
+    tx: &SyncSender<WriterMsg>,
     id: u64,
     request: Request,
+    deadline: Option<Duration>,
+    net: &NetOptions,
 ) -> bool {
     match request {
         Request::Stats => send(
             tx,
             WriterMsg::Raw(codec::encode_stats_result(id, &wire_stats(service))),
         ),
-        Request::Submit(input) => match service.try_submit(input) {
-            Ok(TrySubmit::Accepted(handle)) => send(tx, WriterMsg::Pending { id, handle }),
-            Ok(TrySubmit::Busy) => send_error(
-                tx,
-                id,
-                ErrorCode::Busy,
-                "submission queue full; retry (PROTOCOL.md §5)",
-            ),
-            Err(BackendError::Runtime(msg)) => {
-                let _ = send_error(tx, id, ErrorCode::Shutdown, &msg);
-                false
+        Request::Submit(input) => {
+            match service.try_submit_with_deadline(input, Instant::now(), deadline) {
+                Ok(TrySubmit::Accepted(handle)) => send(tx, WriterMsg::Pending { id, handle }),
+                Ok(TrySubmit::Busy) => send_error(
+                    tx,
+                    id,
+                    ErrorCode::Busy,
+                    "submission queue full; retry (PROTOCOL.md §5)",
+                ),
+                Err(BackendError::Runtime(msg)) => {
+                    let _ = send_error(tx, id, ErrorCode::Shutdown, &msg);
+                    false
+                }
+                Err(e) => send_error(tx, id, ErrorCode::Invalid, &e.to_string()),
             }
-            Err(e) => send_error(tx, id, ErrorCode::Invalid, &e.to_string()),
-        },
-        Request::Batch(inputs) => submit_batch(service, tx, id, inputs),
+        }
+        Request::Batch(inputs) => submit_batch(service, tx, id, inputs, deadline, net),
     }
 }
 
@@ -399,9 +568,11 @@ fn handle_request(
 /// reader, i.e. socket-level backpressure (PROTOCOL.md §5).
 fn submit_batch(
     service: &AsyncDotService,
-    tx: &Sender<WriterMsg>,
+    tx: &SyncSender<WriterMsg>,
     id: u64,
     inputs: Vec<SharedInput>,
+    deadline: Option<Duration>,
+    net: &NetOptions,
 ) -> bool {
     for input in &inputs {
         if let Err(e) = input.view().check(service.service().spec_for(&input.view())) {
@@ -409,8 +580,16 @@ fn submit_batch(
         }
     }
     let mut handles = Vec::with_capacity(inputs.len());
-    for input in inputs {
-        match service.submit(input) {
+    let total = inputs.len();
+    for (k, input) in inputs.into_iter().enumerate() {
+        // Injected connection drop halfway through admission: the
+        // already-admitted half still resolves inside the pipeline (the
+        // dropped handles just discard the results) — an abandoned batch
+        // must never wedge the dispatcher.
+        if k == total / 2 && net.fire(FaultSite::ConnDropMidBatch) {
+            return false;
+        }
+        match service.submit_with_deadline(input, Instant::now(), deadline) {
             Ok(handle) => handles.push(handle),
             Err(e) => {
                 let _ = send_error(tx, id, ErrorCode::Shutdown, &e.to_string());
@@ -429,13 +608,13 @@ fn result_of(response: ServeResponse) -> WireResult {
     }
 }
 
-/// Encode one resolved ticket: a result frame, or an internal-error frame
-/// if the request failed inside the pipeline (dispatcher drain, worker
-/// panic).
+/// Encode one resolved ticket: a result frame, or a typed error frame if
+/// the request failed inside the pipeline (deadline shed, dispatcher
+/// drain, worker panic).
 fn resolve_frame(id: u64, handle: ResponseHandle) -> Vec<u8> {
     match handle.wait() {
         Ok(response) => codec::encode_result(id, &result_of(response)),
-        Err(e) => codec::encode_error(id, ErrorCode::Internal, &e.to_string()),
+        Err(e) => codec::encode_error(id, error_code_of(&e), &e.to_string()),
     }
 }
 
@@ -445,18 +624,35 @@ fn resolve_frame(id: u64, handle: ResponseHandle) -> Vec<u8> {
 /// exist for); batches block until fully resolved and go out as one
 /// frame. Exits once the reader hung up and every pending ticket is
 /// written, or on any write failure.
-fn writer_main(stream: TcpStream, rx: Receiver<WriterMsg>) {
+fn writer_main(stream: TcpStream, rx: Receiver<WriterMsg>, net: Arc<NetOptions>) {
     let mut out = BufWriter::new(stream);
     let mut pending: Vec<(u64, ResponseHandle)> = Vec::new();
     let mut open = true;
     loop {
+        // Injected slow client: the writer is descheduled as if the
+        // peer's receive window closed. Responses back up into the
+        // bounded queue; the reader blocks; backpressure, not loss.
+        if let Some(delay) = net.stall(FaultSite::SlowClientWriter) {
+            std::thread::sleep(delay);
+        }
         // Flush whatever has resolved since the last pass.
         let mut wrote = false;
         let mut i = 0;
         while i < pending.len() {
             if pending[i].1.try_wait().is_some() {
                 let (id, handle) = pending.swap_remove(i);
-                if out.write_all(&resolve_frame(id, handle)).is_err() {
+                let frame = resolve_frame(id, handle);
+                // Injected truncated frame: write half, then die — the
+                // client must surface a framing error, never hang.
+                if net.fire(FaultSite::TruncatedFrame) {
+                    let _ = out.write_all(&frame[..frame.len() / 2]);
+                    let _ = out.flush();
+                    return;
+                }
+                if net.fire(FaultSite::SocketWriteError) {
+                    return; // injected write failure: connection dies
+                }
+                if out.write_all(&frame).is_err() {
                     return;
                 }
                 wrote = true;
@@ -512,7 +708,7 @@ fn writer_main(stream: TcpStream, rx: Receiver<WriterMsg>) {
                 }
                 let frame = match failed {
                     None => codec::encode_batch_result(id, &results),
-                    Some(e) => codec::encode_error(id, ErrorCode::Internal, &e.to_string()),
+                    Some(e) => codec::encode_error(id, error_code_of(&e), &e.to_string()),
                 };
                 if out.write_all(&frame).is_err() || out.flush().is_err() {
                     return;
@@ -671,6 +867,56 @@ impl WireClient {
         }
     }
 
+    /// Bound every subsequent socket read: a server that stops answering
+    /// for this long turns into an [`WireCallError::Io`] timeout instead
+    /// of a hung client. `None` restores indefinite blocking.
+    pub fn set_read_timeout(&mut self, timeout: Option<Duration>) -> std::io::Result<()> {
+        self.reader.get_ref().set_read_timeout(timeout)
+    }
+
+    /// One dot product carrying a deadline budget (PROTOCOL.md §2.4): the
+    /// server sheds the request with [`ErrorCode::Deadline`] if the budget
+    /// expires before execution begins.
+    pub fn dot_with_deadline(
+        &mut self,
+        x: &[f64],
+        y: &[f64],
+        deadline: Duration,
+    ) -> Result<WireResult, WireCallError> {
+        let id = self.fresh_id();
+        let frame = codec::encode_frame_with_deadline(
+            Opcode::Dot,
+            id,
+            deadline.as_micros() as u64,
+            &codec::encode_dot_payload(x, y),
+        );
+        Self::expect_result(self.call(&frame, id)?)
+    }
+
+    /// One batched submission carrying a deadline budget shared by every
+    /// request in the batch (PROTOCOL.md §2.4, §3.3).
+    pub fn batch_with_deadline(
+        &mut self,
+        inputs: &[SharedInput],
+        deadline: Duration,
+    ) -> Result<Vec<WireResult>, WireCallError> {
+        let id = self.fresh_id();
+        let full = codec::encode_batch(id, inputs);
+        let frame = codec::encode_frame_with_deadline(
+            Opcode::Batch,
+            id,
+            deadline.as_micros() as u64,
+            &full[HEADER_LEN..],
+        );
+        match self.call(&frame, id)? {
+            Response::Batch(results) => Ok(results),
+            other => Err(WireCallError::Protocol(WireError::new(
+                ErrorCode::Malformed,
+                format!("expected a batch-result frame, got {other:?}"),
+            ))),
+        }
+    }
+
     /// Probe the server's pipeline counters (PROTOCOL.md §3.4/§3.7).
     pub fn stats(&mut self) -> Result<WireStats, WireCallError> {
         let id = self.fresh_id();
@@ -749,5 +995,55 @@ mod tests {
         let results = client.batch(&[SharedInput::sum(&x)]).unwrap();
         assert_eq!(results.len(), 1);
         client.sum(&x).unwrap();
+    }
+
+    #[test]
+    fn zero_deadline_draws_typed_deadline_error_and_connection_survives() {
+        let server = NetServer::bind("127.0.0.1:0", cfg(2, 1000), AsyncOptions::default()).unwrap();
+        let mut client = WireClient::connect(server.local_addr()).unwrap();
+        let x = randvec(256, 11);
+        match client.dot_with_deadline(&x, &x, Duration::ZERO) {
+            Err(WireCallError::Server(e)) => assert_eq!(e.code, ErrorCode::Deadline),
+            other => panic!("expected a DEADLINE error frame, got {other:?}"),
+        }
+        // Non-fatal: the same connection keeps serving, and a generous
+        // deadline completes normally with in-process-identical bits.
+        let reference = DotService::new(cfg(2, 1000)).unwrap();
+        let wire = client
+            .dot_with_deadline(&x, &x, Duration::from_secs(60))
+            .unwrap();
+        let local = reference
+            .submit(&crate::runtime::backend::KernelInput::Dot(&x, &x))
+            .unwrap();
+        assert_eq!(wire.value.to_bits(), local.value.to_bits());
+    }
+
+    #[test]
+    fn idle_connections_are_reaped_and_active_ones_survive_timeouts() {
+        let net = NetOptions {
+            read_timeout: Some(Duration::from_millis(20)),
+            idle_timeout: Some(Duration::from_millis(60)),
+            write_timeout: Some(Duration::from_secs(5)),
+            writer_queue: 16,
+            faults: None,
+        };
+        let server =
+            NetServer::bind_with("127.0.0.1:0", cfg(1, 1000), AsyncOptions::default(), net)
+                .unwrap();
+        let mut client = WireClient::connect(server.local_addr()).unwrap();
+        let x = randvec(64, 21);
+        // Gaps shorter than the idle limit never trip the reaper, even
+        // though each one spans several read-timeout ticks.
+        client.dot(&x, &x).unwrap();
+        std::thread::sleep(Duration::from_millis(35));
+        client.dot(&x, &x).unwrap();
+        // Past the idle limit the server closes the connection: the next
+        // call fails with EOF/reset instead of hanging.
+        std::thread::sleep(Duration::from_millis(150));
+        client.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        assert!(client.dot(&x, &x).is_err(), "reaped connection must not serve");
+        // A fresh connection works: the server itself is healthy.
+        let mut fresh = WireClient::connect(server.local_addr()).unwrap();
+        fresh.dot(&x, &x).unwrap();
     }
 }

@@ -41,7 +41,7 @@
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -50,6 +50,7 @@ use crate::runtime::parallel::{
     compensated_tree_reduce, PendingDispatch, ThreadPool, CACHELINE_F64,
 };
 
+use super::faults::{FaultInjector, FaultSite};
 use super::scheduler::ExecPath;
 use super::{DotService, ServeConfig, ServeResponse, SharedInput};
 
@@ -82,6 +83,13 @@ pub struct AsyncOptions {
     /// before draining the next batch — the pipelined-but-serialized
     /// baseline `serve-bench` reports side by side with the async rows.
     pub overlap: bool,
+    /// Default per-request deadline, measured from the request's arrival
+    /// instant. A request still queued when its deadline expires is *shed*:
+    /// resolved with the typed [`BackendError::DeadlineExceeded`] error by
+    /// the dispatcher before any compute. `None` (the default) disables
+    /// shedding; per-request overrides go through
+    /// [`AsyncDotService::submit_with_deadline`].
+    pub deadline: Option<Duration>,
 }
 
 impl Default for AsyncOptions {
@@ -91,6 +99,7 @@ impl Default for AsyncOptions {
             batch_window: Duration::from_micros(100),
             batch_max: 64,
             overlap: true,
+            deadline: None,
         }
     }
 }
@@ -157,10 +166,30 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Poison-tolerant shared-state access — the one lock helper every
+    /// queue method routes through. A thread that panicked while holding
+    /// the queue mutex (a dispatcher bug, an injected fault) leaves the
+    /// `VecDeque` and counters structurally intact, so submitters and the
+    /// dispatcher keep operating on it instead of wedging behind the
+    /// poison. Ticket slots use the same policy ([`Ticket::lock_slot`]).
+    fn lock_shared(&self) -> MutexGuard<'_, QueueShared<T>> {
+        self.shared
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Poison-tolerant condvar wait (same rationale as [`Self::lock_shared`]).
+    fn wait_on<'a>(
+        cv: &Condvar,
+        guard: MutexGuard<'a, QueueShared<T>>,
+    ) -> MutexGuard<'a, QueueShared<T>> {
+        cv.wait(guard).unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
     /// Blocking bounded push. Returns the item back when the queue is
     /// closed (shutdown raced the submit).
     fn push(&self, item: T) -> Result<(), T> {
-        let mut s = self.shared.lock().unwrap();
+        let mut s = self.lock_shared();
         loop {
             if s.closed {
                 return Err(item);
@@ -174,7 +203,7 @@ impl<T> BoundedQueue<T> {
                 self.not_empty.notify_one();
                 return Ok(());
             }
-            s = self.not_full.wait(s).unwrap();
+            s = Self::wait_on(&self.not_full, s);
         }
     }
 
@@ -184,7 +213,7 @@ impl<T> BoundedQueue<T> {
     /// becomes a BUSY response on the socket instead of a blocked
     /// connection thread.
     fn try_push(&self, item: T) -> Result<(), (T, TryPush)> {
-        let mut s = self.shared.lock().unwrap();
+        let mut s = self.lock_shared();
         if s.closed {
             return Err((item, TryPush::Closed));
         }
@@ -203,7 +232,7 @@ impl<T> BoundedQueue<T> {
     /// Block until an item is available or the queue is closed *and*
     /// drained (closing still delivers everything already accepted).
     fn pop_wait(&self) -> Option<T> {
-        let mut s = self.shared.lock().unwrap();
+        let mut s = self.lock_shared();
         loop {
             if let Some(item) = s.items.pop_front() {
                 self.not_full.notify_one();
@@ -212,13 +241,13 @@ impl<T> BoundedQueue<T> {
             if s.closed {
                 return None;
             }
-            s = self.not_empty.wait(s).unwrap();
+            s = Self::wait_on(&self.not_empty, s);
         }
     }
 
     /// Non-blocking pop.
     fn try_pop(&self) -> Pop<T> {
-        let mut s = self.shared.lock().unwrap();
+        let mut s = self.lock_shared();
         match s.items.pop_front() {
             Some(item) => {
                 self.not_full.notify_one();
@@ -232,7 +261,7 @@ impl<T> BoundedQueue<T> {
     /// Pop with a deadline: waits at most `timeout` for an item.
     fn pop_timeout(&self, timeout: Duration) -> Pop<T> {
         let deadline = Instant::now() + timeout;
-        let mut s = self.shared.lock().unwrap();
+        let mut s = self.lock_shared();
         loop {
             if let Some(item) = s.items.pop_front() {
                 self.not_full.notify_one();
@@ -245,20 +274,23 @@ impl<T> BoundedQueue<T> {
             if now >= deadline {
                 return Pop::Empty;
             }
-            let (guard, _) = self.not_empty.wait_timeout(s, deadline - now).unwrap();
+            let (guard, _) = self
+                .not_empty
+                .wait_timeout(s, deadline - now)
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
             s = guard;
         }
     }
 
     fn close(&self) {
-        let mut s = self.shared.lock().unwrap();
+        let mut s = self.lock_shared();
         s.closed = true;
         self.not_full.notify_all();
         self.not_empty.notify_all();
     }
 
     fn counters(&self) -> (u64, usize) {
-        let s = self.shared.lock().unwrap();
+        let s = self.lock_shared();
         (s.enqueued, s.max_depth_seen)
     }
 }
@@ -341,6 +373,41 @@ impl ResponseHandle {
         }
     }
 
+    /// [`Self::wait_timed`] bounded by a wall-clock budget: `None` if the
+    /// ticket has not resolved within `timeout`. The watchdog primitive —
+    /// a load generator waiting on a wedged pipeline turns into a
+    /// diagnostic failure instead of a hung process. The handle is
+    /// consumed either way (dropping an unresolved ticket is safe; the
+    /// request still executes and is freed when the dispatcher lets go).
+    pub fn wait_timed_for(
+        self,
+        timeout: Duration,
+    ) -> Option<Result<(ServeResponse, f64), BackendError>> {
+        let deadline = Instant::now() + timeout;
+        let mut slot = self.ticket.lock_slot();
+        loop {
+            match std::mem::replace(&mut *slot, TicketSlot::Claimed) {
+                TicketSlot::Ready(result, latency_ns) => {
+                    return Some(result.map(|r| (r, latency_ns)));
+                }
+                TicketSlot::Claimed => unreachable!("wait consumes the handle"),
+                TicketSlot::Pending => {
+                    *slot = TicketSlot::Pending;
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return None;
+                    }
+                    let (guard, _) = self
+                        .ticket
+                        .ready
+                        .wait_timeout(slot, deadline - now)
+                        .unwrap_or_else(|poisoned| poisoned.into_inner());
+                    slot = guard;
+                }
+            }
+        }
+    }
+
     /// Non-blocking peek: `None` while the request is still queued or
     /// executing, `Some` once resolved (the handle can then be `wait`ed
     /// for the same answer without blocking).
@@ -360,6 +427,10 @@ struct QueuedRequest {
     input: SharedInput,
     ticket: Arc<Ticket>,
     arrival: Instant,
+    /// Shedding deadline, if the request carries one: the expiry instant
+    /// (`arrival + budget`) plus the original budget in µs for the typed
+    /// error. Checked by the dispatcher before any compute.
+    deadline: Option<(Instant, u64)>,
 }
 
 impl Drop for QueuedRequest {
@@ -401,6 +472,10 @@ pub struct AsyncServeStats {
     /// of posted→finished intervals, ended at each dispatch's actual latch
     /// completion) — the numerator of pool utilization.
     pub busy_ns: f64,
+    /// Requests shed in-queue with the typed `DeadlineExceeded` error —
+    /// their deadline expired before the dispatcher reached them, so they
+    /// consumed no compute. A subset of `completed`.
+    pub deadline_shed: u64,
 }
 
 #[derive(Default)]
@@ -409,6 +484,7 @@ struct Counters {
     arrival_batches: AtomicU64,
     dispatches: AtomicU64,
     busy_ns: AtomicU64,
+    deadline_shed: AtomicU64,
 }
 
 /// One posted-but-not-retired pool dispatch.
@@ -456,12 +532,27 @@ impl AsyncDotService {
     /// (the dispatcher never executes chunks inline), then spawns the
     /// dispatcher thread.
     pub fn new(cfg: ServeConfig, opts: AsyncOptions) -> Result<Self, BackendError> {
+        Self::new_with_faults(cfg, opts, None)
+    }
+
+    /// [`Self::new`] with a deterministic fault injector threaded through
+    /// the pool workers and the dispatcher (chaos tests and
+    /// `serve-bench --chaos`). `None` is the production path: every
+    /// injection site reduces to one null check.
+    pub fn new_with_faults(
+        cfg: ServeConfig,
+        opts: AsyncOptions,
+        faults: Option<Arc<FaultInjector>>,
+    ) -> Result<Self, BackendError> {
         let opts = AsyncOptions {
             queue_depth: opts.queue_depth.max(1),
             batch_max: opts.batch_max.max(1),
             ..opts
         };
-        let pool = Arc::new(ThreadPool::new_detached(cfg.threads.max(1)));
+        let pool = Arc::new(ThreadPool::new_detached_with_faults(
+            cfg.threads.max(1),
+            faults.clone(),
+        ));
         let service = Arc::new(DotService::with_pool(cfg, pool)?);
         let queue = Arc::new(BoundedQueue::new(opts.queue_depth));
         let counters = Arc::new(Counters::default());
@@ -471,7 +562,7 @@ impl AsyncDotService {
             let counters = Arc::clone(&counters);
             std::thread::Builder::new()
                 .name("kahan-serve-dispatch".to_string())
-                .spawn(move || dispatcher_main(service, queue, counters, opts))
+                .spawn(move || dispatcher_main(service, queue, counters, opts, faults))
                 .expect("spawn serve dispatcher")
         };
         Ok(Self {
@@ -516,18 +607,37 @@ impl AsyncDotService {
         input: SharedInput,
         arrival: Instant,
     ) -> Result<ResponseHandle, BackendError> {
+        self.submit_with_deadline(input, arrival, self.opts.deadline)
+    }
+
+    /// [`Self::submit_with_arrival`] with a per-request deadline override
+    /// (the wire front-end's optional deadline field lands here). `None`
+    /// means no deadline for *this* request, regardless of the service
+    /// default.
+    pub fn submit_with_deadline(
+        &self,
+        input: SharedInput,
+        arrival: Instant,
+        deadline: Option<Duration>,
+    ) -> Result<ResponseHandle, BackendError> {
         input.view().check(self.service.spec_for(&input.view()))?;
-        self.enqueue(input, arrival)
+        self.enqueue(input, arrival, deadline)
     }
 
     /// Enqueue an already-validated request (both submit paths check once,
     /// then land here).
-    fn enqueue(&self, input: SharedInput, arrival: Instant) -> Result<ResponseHandle, BackendError> {
+    fn enqueue(
+        &self,
+        input: SharedInput,
+        arrival: Instant,
+        deadline: Option<Duration>,
+    ) -> Result<ResponseHandle, BackendError> {
         let ticket = Arc::new(Ticket::new());
         let queued = QueuedRequest {
             input,
             ticket: Arc::clone(&ticket),
             arrival,
+            deadline: deadline.map(|d| (arrival + d, d.as_micros() as u64)),
         };
         self.queue
             .push(queued)
@@ -550,12 +660,24 @@ impl AsyncDotService {
         input: SharedInput,
         arrival: Instant,
     ) -> Result<TrySubmit, BackendError> {
+        self.try_submit_with_deadline(input, arrival, self.opts.deadline)
+    }
+
+    /// [`Self::try_submit_with_arrival`] with a per-request deadline
+    /// override (same contract as [`Self::submit_with_deadline`]).
+    pub fn try_submit_with_deadline(
+        &self,
+        input: SharedInput,
+        arrival: Instant,
+        deadline: Option<Duration>,
+    ) -> Result<TrySubmit, BackendError> {
         input.view().check(self.service.spec_for(&input.view()))?;
         let ticket = Arc::new(Ticket::new());
         let queued = QueuedRequest {
             input,
             ticket: Arc::clone(&ticket),
             arrival,
+            deadline: deadline.map(|d| (arrival + d, d.as_micros() as u64)),
         };
         match self.queue.try_push(queued) {
             Ok(()) => Ok(TrySubmit::Accepted(ResponseHandle { ticket })),
@@ -583,7 +705,7 @@ impl AsyncDotService {
         }
         let handles: Vec<ResponseHandle> = inputs
             .iter()
-            .map(|input| self.enqueue(input.clone(), Instant::now()))
+            .map(|input| self.enqueue(input.clone(), Instant::now(), self.opts.deadline))
             .collect::<Result<_, _>>()?;
         handles.into_iter().map(ResponseHandle::wait).collect()
     }
@@ -598,6 +720,7 @@ impl AsyncDotService {
             dispatches: self.counters.dispatches.load(Ordering::Relaxed),
             max_queue_depth,
             busy_ns: self.counters.busy_ns.load(Ordering::Relaxed) as f64,
+            deadline_shed: self.counters.deadline_shed.load(Ordering::Relaxed),
         }
     }
 }
@@ -639,10 +762,11 @@ fn dispatcher_main(
     queue: Arc<BoundedQueue<QueuedRequest>>,
     counters: Arc<Counters>,
     opts: AsyncOptions,
+    faults: Option<Arc<FaultInjector>>,
 ) {
     let run = {
-        let (service, queue, counters) = (&service, &queue, &counters);
-        move || dispatcher_loop(service, queue, counters, opts)
+        let (service, queue, counters, faults) = (&service, &queue, &counters, &faults);
+        move || dispatcher_loop(service, queue, counters, opts, faults.as_deref())
     };
     let outcome = catch_unwind(AssertUnwindSafe(run));
     // Normal exit already drained everything; after a panic, fail whatever
@@ -665,6 +789,7 @@ fn dispatcher_loop(
     queue: &BoundedQueue<QueuedRequest>,
     counters: &Counters,
     opts: AsyncOptions,
+    faults: Option<&FaultInjector>,
 ) {
     let epoch = Instant::now();
     let mut inflight: VecDeque<InFlight> = VecDeque::new();
@@ -706,6 +831,15 @@ fn dispatcher_loop(
         };
         let batch = gather(queue, first, &opts);
         counters.arrival_batches.fetch_add(1, Ordering::Relaxed);
+        // Injected dispatcher stall (armed once per arrival batch): models
+        // a descheduled dispatcher thread. Arrivals pile into the bounded
+        // queue behind backpressure; deadline-bearing requests age toward
+        // their shed point.
+        if let Some(inj) = faults {
+            if let Some(delay) = inj.stall(FaultSite::DispatcherStall) {
+                std::thread::sleep(delay);
+            }
+        }
         dispatch(service, counters, &mut inflight, batch);
         if !opts.overlap {
             while let Some(f) = inflight.pop_front() {
@@ -755,6 +889,32 @@ fn dispatch(
     inflight: &mut VecDeque<InFlight>,
     batch: Vec<QueuedRequest>,
 ) {
+    // Deadline shedding happens here, at the last instant before any
+    // planning or compute: a request whose deadline expired while it sat
+    // in the queue (or in the batching window) resolves immediately with
+    // a typed error and never touches the pool. Shedding before the plan
+    // keeps the scheduler's fuse/shard decision identical for the
+    // requests that do run.
+    let now = Instant::now();
+    let batch: Vec<QueuedRequest> = batch
+        .into_iter()
+        .filter_map(|q| match q.deadline {
+            Some((expires, budget_us)) if now >= expires => {
+                let latency = now.saturating_duration_since(q.arrival);
+                q.ticket.complete(
+                    Err(BackendError::DeadlineExceeded { budget_us }),
+                    latency.as_nanos() as f64,
+                );
+                counters.deadline_shed.fetch_add(1, Ordering::Relaxed);
+                counters.completed.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+            _ => Some(q),
+        })
+        .collect();
+    if batch.is_empty() {
+        return;
+    }
     let plan = service
         .scheduler
         .plan_lens(batch.iter().map(|q| q.input.updates()));
@@ -1081,5 +1241,71 @@ mod tests {
             assert_eq!(want.value.to_bits(), g.value.to_bits());
         }
         assert_eq!(asy.stats().completed, 8);
+    }
+
+    #[test]
+    fn zero_deadline_sheds_with_typed_error_before_compute() {
+        // A zero budget expires the instant the request arrives, so every
+        // request must shed in-queue: typed error, no dispatch, no compute.
+        let opts = AsyncOptions {
+            deadline: Some(Duration::ZERO),
+            ..AsyncOptions::default()
+        };
+        let asy = AsyncDotService::new(cfg(2, 1000), opts).unwrap();
+        let handles: Vec<ResponseHandle> = (0..6)
+            .map(|i| asy.submit(shared_dot(256, 300 + i as u64)).unwrap())
+            .collect();
+        for h in handles {
+            match h.wait() {
+                Err(BackendError::DeadlineExceeded { budget_us }) => assert_eq!(budget_us, 0),
+                other => panic!("expected DeadlineExceeded, got {other:?}"),
+            }
+        }
+        let stats = asy.stats();
+        assert_eq!(stats.deadline_shed, 6);
+        assert_eq!(stats.completed, 6);
+        assert_eq!(stats.dispatches, 0, "shed requests must never reach the pool");
+    }
+
+    #[test]
+    fn per_request_deadline_overrides_service_default() {
+        // Service default disables deadlines; a generous per-request
+        // deadline still completes normally and bit-matches sync.
+        let asy = AsyncDotService::new(cfg(2, 1000), AsyncOptions::default()).unwrap();
+        let input = shared_dot(512, 91);
+        let want = asy.service().submit(&input.view()).unwrap();
+        let handle = asy
+            .submit_with_deadline(input, Instant::now(), Some(Duration::from_secs(60)))
+            .unwrap();
+        let got = handle.wait().unwrap();
+        assert_eq!(got.value.to_bits(), want.value.to_bits());
+        assert_eq!(asy.stats().deadline_shed, 0);
+    }
+
+    #[test]
+    fn dispatcher_stall_injection_only_delays() {
+        use super::super::faults::{FaultPlan, FaultSite};
+        let plan = FaultPlan::none().with_stall(
+            FaultSite::DispatcherStall,
+            1,
+            Duration::from_millis(2),
+        );
+        let injector = crate::serve::faults::FaultInjector::new(plan);
+        let asy = AsyncDotService::new_with_faults(
+            cfg(2, 1000),
+            AsyncOptions::default(),
+            Some(Arc::clone(&injector)),
+        )
+        .unwrap();
+        let inputs: Vec<SharedInput> = (0..4)
+            .map(|i| shared_dot(200 + i * 170, 500 + i as u64))
+            .collect();
+        let got = asy.submit_wait(&inputs).unwrap();
+        let sync = DotService::new(cfg(2, 1000)).unwrap();
+        for (input, g) in inputs.iter().zip(&got) {
+            let want = sync.submit(&input.view()).unwrap();
+            assert_eq!(want.value.to_bits(), g.value.to_bits());
+        }
+        assert_eq!(injector.fired(FaultSite::DispatcherStall), 1);
     }
 }

@@ -465,6 +465,220 @@ fn wire_loadgen_checksum_parity() {
     assert!(wire.max_queue_depth <= wire.queue_depth);
 }
 
+/// Injected socket faults kill exactly one connection, never the server:
+/// for each socket-facing failure site, the armed connection surfaces a
+/// client-visible error (bounded by a client read timeout — no hangs),
+/// the injector confirms the fault fired exactly once, and a fresh
+/// connection to the same server serves bit-identical results. The
+/// slow-client stall site only delays; its response still arrives intact.
+#[test]
+fn wire_socket_faults_kill_one_connection_not_the_server() {
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use kahan_ecm::runtime::backend::{ImplStyle, KernelInput};
+    use kahan_ecm::serve::{
+        AsyncOptions, DotService, FaultInjector, FaultPlan, FaultSite, NetOptions, NetServer,
+        ServeConfig, SharedInput, ThresholdMode, WireClient,
+    };
+
+    let cfg = ServeConfig {
+        threads: 2,
+        style: ImplStyle::SimdLanes,
+        compensated: true,
+        shard_threshold: ThresholdMode::Fixed(1024),
+        freq_ghz: 3.0,
+    };
+    let reference = DotService::new(cfg.clone()).unwrap();
+    let x: Vec<f64> = (0..512).map(|i| 0.25 + (i as f64) * 1e-3).collect();
+    let y: Vec<f64> = (0..512).map(|i| 2.0 - (i as f64) * 1e-4).collect();
+    let sites = [
+        FaultSite::SocketReadError,
+        FaultSite::SocketWriteError,
+        FaultSite::TruncatedFrame,
+        FaultSite::ConnDropMidBatch,
+    ];
+    for site in sites {
+        let injector = FaultInjector::new(FaultPlan::none().with(site, 1));
+        let server = NetServer::bind_with(
+            "127.0.0.1:0",
+            cfg.clone(),
+            AsyncOptions::default(),
+            NetOptions {
+                faults: Some(Arc::clone(&injector)),
+                ..NetOptions::default()
+            },
+        )
+        .unwrap();
+        let mut victim = WireClient::connect(server.local_addr()).unwrap();
+        // A writer-side death leaves the reader's half of the socket open;
+        // the client read timeout turns that into an error, not a hang.
+        victim.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let died = if site == FaultSite::ConnDropMidBatch {
+            victim
+                .batch(&[SharedInput::dot(&x, &y), SharedInput::sum(&x)])
+                .is_err()
+        } else {
+            victim.dot(&x, &y).is_err()
+        };
+        assert!(died, "{site:?}: the armed connection must surface an error");
+        assert_eq!(injector.fired(site), 1, "{site:?} must fire exactly once");
+        // The trigger is spent: a fresh connection to the same server
+        // serves with in-process-identical bits.
+        let mut healthy = WireClient::connect(server.local_addr()).unwrap();
+        let wire = healthy.dot(&x, &y).unwrap();
+        let local = reference.submit(&KernelInput::Dot(&x, &y)).unwrap();
+        assert_eq!(wire.value.to_bits(), local.value.to_bits(), "{site:?}");
+        assert_eq!(wire.path, local.path, "{site:?}");
+    }
+
+    // The slow-client stall only deschedules the writer: the response is
+    // late, never lost or corrupted.
+    let injector = FaultInjector::new(FaultPlan::none().with_stall(
+        FaultSite::SlowClientWriter,
+        1,
+        Duration::from_millis(50),
+    ));
+    let server = NetServer::bind_with(
+        "127.0.0.1:0",
+        cfg,
+        AsyncOptions::default(),
+        NetOptions {
+            faults: Some(Arc::clone(&injector)),
+            ..NetOptions::default()
+        },
+    )
+    .unwrap();
+    let mut client = WireClient::connect(server.local_addr()).unwrap();
+    let wire = client.dot(&x, &y).unwrap();
+    let local = reference.submit(&KernelInput::Dot(&x, &y)).unwrap();
+    assert_eq!(wire.value.to_bits(), local.value.to_bits());
+    assert_eq!(injector.fired(FaultSite::SlowClientWriter), 1);
+}
+
+/// A batch carrying an already-expired deadline budget is shed in-queue
+/// and answered with one typed DEADLINE error frame; the connection
+/// survives, and a generous budget round-trips the same batch with
+/// in-process-identical bits (PROTOCOL.md §2.4, §4.10).
+#[test]
+fn wire_batch_deadline_shed_is_typed_and_nonfatal() {
+    use std::time::Duration;
+
+    use kahan_ecm::runtime::backend::ImplStyle;
+    use kahan_ecm::serve::codec::ErrorCode;
+    use kahan_ecm::serve::{
+        AsyncOptions, DotService, NetServer, ServeConfig, SharedInput, ThresholdMode,
+        WireCallError, WireClient,
+    };
+
+    let cfg = ServeConfig {
+        threads: 2,
+        style: ImplStyle::SimdLanes,
+        compensated: true,
+        shard_threshold: ThresholdMode::Fixed(1024),
+        freq_ghz: 3.0,
+    };
+    let server = NetServer::bind("127.0.0.1:0", cfg.clone(), AsyncOptions::default()).unwrap();
+    let reference = DotService::new(cfg).unwrap();
+    let mut client = WireClient::connect(server.local_addr()).unwrap();
+    let x: Vec<f64> = (0..2048).map(|i| 0.5 + (i as f64) * 1e-4).collect();
+    let inputs = [SharedInput::dot(&x, &x), SharedInput::sum(&x)];
+
+    match client.batch_with_deadline(&inputs, Duration::ZERO) {
+        Err(WireCallError::Server(e)) => assert_eq!(e.code, ErrorCode::Deadline, "{}", e.message),
+        other => panic!("expected a typed DEADLINE error frame, got {other:?}"),
+    }
+    // Non-fatal: the same connection carries the same batch to completion
+    // under a generous budget, bit-identical to the in-process service.
+    let results = client.batch_with_deadline(&inputs, Duration::from_secs(60)).unwrap();
+    assert_eq!(results.len(), 2);
+    for (wire, input) in results.iter().zip(&inputs) {
+        let local = reference.submit(&input.view()).unwrap();
+        assert_eq!(wire.value.to_bits(), local.value.to_bits());
+        assert_eq!(wire.path, local.path);
+    }
+    let shed = server.service().stats().deadline_shed;
+    assert!(shed >= 1, "the expired batch must shed in-queue, shed = {shed}");
+}
+
+/// The wire load generator's wall-clock watchdog: against a server that
+/// answers stats probes but swallows every dot request, the run fails
+/// with a diagnostic watchdog error — it must never hang CI.
+#[test]
+fn wire_loadgen_watchdog_fails_fast_on_a_wedged_server() {
+    use std::io::{Read, Write};
+    use std::net::TcpListener;
+    use std::time::Duration;
+
+    use kahan_ecm::runtime::backend::ImplStyle;
+    use kahan_ecm::serve::codec::{self, Opcode, WireStats, HEADER_LEN};
+    use kahan_ecm::serve::loadgen::run_load_wire_bounded;
+    use kahan_ecm::serve::{DotService, MixEntry, OperandPool, ServeConfig, ThresholdMode};
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        // Exactly two connections arrive: the stats probe, then the one
+        // load connection.
+        for _ in 0..2 {
+            let Ok((stream, _)) = listener.accept() else { return };
+            std::thread::spawn(move || {
+                let mut reader = match stream.try_clone() {
+                    Ok(s) => s,
+                    Err(_) => return,
+                };
+                let mut writer = stream;
+                loop {
+                    let mut head = [0u8; HEADER_LEN];
+                    if reader.read_exact(&mut head).is_err() {
+                        return;
+                    }
+                    let Ok(header) = codec::decode_header(&head) else { return };
+                    let mut payload = vec![0u8; header.payload_len as usize];
+                    if header.payload_len > 0 && reader.read_exact(&mut payload).is_err() {
+                        return;
+                    }
+                    // Answer stats probes; swallow everything else.
+                    if Opcode::from_byte(header.opcode) == Some(Opcode::Stats) {
+                        let frame =
+                            codec::encode_stats_result(header.request_id, &WireStats::default());
+                        if writer.write_all(&frame).is_err() {
+                            return;
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    let cfg = ServeConfig {
+        threads: 1,
+        style: ImplStyle::SimdLanes,
+        compensated: true,
+        shard_threshold: ThresholdMode::Fixed(4096),
+        freq_ghz: 3.0,
+    };
+    let mix = vec![MixEntry { n: 256, weight: 1.0 }];
+    let pool_owner = DotService::new(cfg).unwrap();
+    let operands = OperandPool::generate(&mix, 7, pool_owner.pool());
+    let err = run_load_wire_bounded(
+        &addr.to_string(),
+        &mix,
+        &operands,
+        8,
+        1e5,
+        1,
+        4,
+        7,
+        Duration::from_secs(2),
+    )
+    .expect_err("a wedged server must trip the watchdog, not hang");
+    assert!(
+        err.to_string().contains("watchdog"),
+        "diagnostic must name the watchdog: {err}"
+    );
+}
+
 /// Artifact -> PJRT -> numerics, on adversarial cancellation data (skips
 /// cleanly without artifacts or without a real PJRT runtime).
 ///

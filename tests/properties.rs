@@ -16,7 +16,8 @@ use kahan_ecm::runtime::parallel::{
     compensated_tree_reduce, CACHELINE_F64, ParallelBackend, ThreadPool,
 };
 use kahan_ecm::serve::{
-    AsyncDotService, AsyncOptions, DotService, ExecPath, ServeConfig, SharedInput, ThresholdMode,
+    AsyncDotService, AsyncOptions, DotService, ExecPath, FaultInjector, FaultPlan, FaultSite,
+    ServeConfig, SharedInput, ThresholdMode,
 };
 use kahan_ecm::sim::{self, simulate_core, MeasureOpts};
 use kahan_ecm::util::rng::Rng;
@@ -1067,6 +1068,7 @@ fn wire_codec_round_trips_bit_exact() {
             ErrorCode::Busy,
             ErrorCode::Shutdown,
             ErrorCode::Internal,
+            ErrorCode::Deadline,
         ]);
         let (op, _, payload) = split(&codec::encode_error(id, code, "synthetic diagnostic"));
         match codec::decode_response(op, &payload).unwrap() {
@@ -1131,7 +1133,7 @@ fn wire_codec_rejects_hostile_frames_without_panic() {
 
         // Header-level violations map to their assigned codes (§2.2, §4),
         // checked in the stream-trust order magic → version → cap →
-        // reserved.
+        // flags/reserved.
         let good = codec::encode_stats(3);
         let head = |mutate: &dyn Fn(&mut [u8; HEADER_LEN])| {
             let mut h: [u8; HEADER_LEN] = good[..HEADER_LEN].try_into().unwrap();
@@ -1150,7 +1152,11 @@ fn wire_codec_rejects_hostile_frames_without_panic() {
                 .code,
             ErrorCode::Oversized
         );
-        assert_eq!(head(&|h| h[6] = 1).unwrap_err().code, ErrorCode::Malformed);
+        // The assigned flag bit is accepted (§2.4); unknown bits and a
+        // non-zero reserved byte are each non-fatal Malformed.
+        assert_eq!(head(&|h| h[6] = codec::FLAG_DEADLINE).unwrap().flags, codec::FLAG_DEADLINE);
+        assert_eq!(head(&|h| h[6] = 0x02).unwrap_err().code, ErrorCode::Malformed);
+        assert_eq!(head(&|h| h[7] = 1).unwrap_err().code, ErrorCode::Malformed);
         // Magic outranks version: both wrong reports BadMagic first.
         assert_eq!(
             head(&|h| {
@@ -1173,4 +1179,145 @@ fn wire_codec_rejects_hostile_frames_without_panic() {
             ErrorCode::BadOpcode
         );
     });
+}
+
+/// Resolve-exactly-once under injected faults, per in-process site: with a
+/// single fault armed at each site in turn, every submitted request
+/// resolves — a value or a typed error, never a hang — the injector's
+/// accounting confirms the fault actually fired, and every successful
+/// result stays bit-identical to a clean service at the same thread count
+/// (the degradation contract never buys liveness with changed bits).
+#[test]
+fn fault_matrix_every_in_process_site_resolves_exactly_once() {
+    use std::time::Duration;
+    let mut rng = Rng::new(0xFA117);
+    let x: Vec<f64> = (0..1200).map(|_| rng.normal()).collect();
+    let y: Vec<f64> = (0..1200).map(|_| rng.normal()).collect();
+    let input = SharedInput::dot(&x, &y);
+    let clean = DotService::new(serve_cfg(2, 512)).unwrap();
+    let want = clean.submit(&input.view()).unwrap();
+    for &site in &FaultSite::IN_PROCESS {
+        // Trigger 1 everywhere: the first arrival at a site always exists
+        // (a 24-request burst may drain as a single arrival batch, so a
+        // dispatcher-stall trigger beyond 1 would not be guaranteed).
+        let plan = if site.is_stall() {
+            FaultPlan::none().with_stall(site, 1, Duration::from_millis(5))
+        } else {
+            FaultPlan::none().with(site, 1)
+        };
+        let injector = FaultInjector::new(plan);
+        let asy = AsyncDotService::new_with_faults(
+            serve_cfg(2, 512),
+            AsyncOptions::default(),
+            Some(injector.clone()),
+        )
+        .unwrap();
+        let total = 24usize;
+        let handles: Vec<_> = (0..total)
+            .map(|_| asy.submit(input.clone()).unwrap())
+            .collect();
+        let (mut ok, mut errs) = (0usize, 0usize);
+        for h in handles {
+            match h.wait_timed_for(Duration::from_secs(30)) {
+                Some(Ok((got, _))) => {
+                    assert_eq!(got.value.to_bits(), want.value.to_bits(), "{site:?}");
+                    assert_eq!(got.path, want.path, "{site:?}");
+                    ok += 1;
+                }
+                Some(Err(_)) => errs += 1,
+                None => panic!("{site:?}: request hung — resolve-exactly-once broken"),
+            }
+        }
+        assert_eq!(ok + errs, total, "{site:?}: every request must resolve");
+        assert_eq!(injector.fired(site), 1, "{site:?}: armed fault must fire once");
+        if site == FaultSite::WorkerPanic {
+            assert!(errs >= 1, "an injected panic must fail at least its own dispatch");
+            assert!(ok >= 1, "the healed pool must serve the remaining requests");
+        } else {
+            assert_eq!(errs, 0, "{site:?}: stalls may only delay, never fail");
+        }
+    }
+}
+
+/// Worker self-healing preserves bit-parity at fixed T: an injected panic
+/// kills one worker (failing only its own dispatch with the typed
+/// worker-panic error), the pool respawns the slot before the next
+/// dispatch, and every later result is bit-identical to a clean
+/// synchronous service — the replacement worker inherits the slot index,
+/// so the shard partition (and the reduction shape) is unchanged.
+#[test]
+fn worker_respawn_preserves_bit_parity_at_fixed_thread_count() {
+    use std::time::Duration;
+    let mut rng = Rng::new(0x9E59A);
+    let x: Vec<f64> = (0..9000).map(|_| rng.normal()).collect();
+    let y: Vec<f64> = (0..9000).map(|_| rng.normal()).collect();
+    // n >= threshold: the request shards across all three workers.
+    let input = SharedInput::dot(&x, &y);
+    let clean = DotService::new(serve_cfg(3, 2048)).unwrap();
+    let want = clean.submit(&input.view()).unwrap();
+    let injector = FaultInjector::new(FaultPlan::none().with(FaultSite::WorkerPanic, 1));
+    let asy = AsyncDotService::new_with_faults(
+        serve_cfg(3, 2048),
+        AsyncOptions::default(),
+        Some(injector.clone()),
+    )
+    .unwrap();
+    match asy
+        .submit(input.clone())
+        .unwrap()
+        .wait_timed_for(Duration::from_secs(30))
+    {
+        Some(Err(e)) => {
+            assert!(e.to_string().contains("panic"), "typed worker-panic error, got: {e}")
+        }
+        Some(Ok(_)) => panic!("the faulted dispatch must fail: its worker died"),
+        None => panic!("faulted request hung instead of resolving"),
+    }
+    for round in 0..4 {
+        let (got, _) = asy
+            .submit(input.clone())
+            .unwrap()
+            .wait_timed_for(Duration::from_secs(30))
+            .unwrap_or_else(|| panic!("post-respawn round {round} hung"))
+            .unwrap_or_else(|e| panic!("post-respawn round {round} failed: {e}"));
+        assert_eq!(got.value.to_bits(), want.value.to_bits(), "round {round}");
+        assert_eq!(got.path, want.path, "round {round}");
+    }
+    assert_eq!(injector.fired(FaultSite::WorkerPanic), 1);
+}
+
+/// An injector compiled in with an empty plan is bit-invisible: the full
+/// async pipeline produces bit-identical results (values and exec paths)
+/// with and without it, and the injector confirms nothing ever fired.
+#[test]
+fn idle_fault_injector_is_bit_invisible() {
+    let mut rng = Rng::new(0x1D1E);
+    let shared: Vec<SharedInput> = [64usize, 2047, 2048, 4096, 300]
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| {
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            if i % 2 == 0 {
+                let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                SharedInput::dot(&x, &y)
+            } else {
+                SharedInput::sum(&x)
+            }
+        })
+        .collect();
+    let plain = AsyncDotService::new(serve_cfg(2, 2048), AsyncOptions::default()).unwrap();
+    let want = plain.submit_wait(&shared).unwrap();
+    let injector = FaultInjector::new(FaultPlan::none());
+    let idle = AsyncDotService::new_with_faults(
+        serve_cfg(2, 2048),
+        AsyncOptions::default(),
+        Some(injector.clone()),
+    )
+    .unwrap();
+    let got = idle.submit_wait(&shared).unwrap();
+    for (w, g) in want.iter().zip(&got) {
+        assert_eq!(w.value.to_bits(), g.value.to_bits(), "n={}", w.n);
+        assert_eq!(w.path, g.path);
+    }
+    assert_eq!(injector.total_fired(), 0, "an empty plan must never fire");
 }

@@ -90,6 +90,25 @@ def queue_row(p99, checksum, fused, sharded, requests):
         "dispatches": 12,
         "arrival_batches": 9,
         "pool_utilization": 0.8,
+        "non_finite_latencies": 0,
+    }
+
+
+def synth_chaos():
+    return {
+        "seed": 1,
+        "requests": 256,
+        "completed_ok": 200,
+        "deadline_shed": 40,
+        "worker_panics": 14,
+        "other_errors": 2,
+        "hung_requests": 0,
+        "injected": {"worker_panic": 1, "dispatcher_stall": 1,
+                     "latch_wake_delay": 1, "socket_read_error": 0,
+                     "socket_write_error": 0, "truncated_frame": 0,
+                     "conn_drop_mid_batch": 0, "slow_client_writer": 0},
+        "total_injected": 3,
+        "recovery": {"verified": True, "latency_ns": 150000.0},
     }
 
 
@@ -138,6 +157,7 @@ def synth_serving():
             "async": queue_row(2.5e6, checksum, fused, sharded, requests),
         },
         "wire": wire_row(3.0e6, checksum, fused, sharded, requests),
+        "chaos": synth_chaos(),
         "async_p99_ok": True,
         "calibration": {
             "measured": {"p1_gups": 1.8, "p1_mflops": 9000.0, "p1_n": 262144,
@@ -267,6 +287,52 @@ def test_validators():
                 mutate(serving, wire_depth_overflow),
                 "wire queue high-water > depth")
 
+    # Chaos block (PR 7): optional, but when present its structural gates
+    # are hard — no hung requests, buckets partition the run, per-site
+    # counts reconcile, recovery verified.
+    def no_chaos(d):
+        del d["chaos"]
+    expect_ok(validate_bench.validate_serving, mutate(serving, no_chaos),
+              "serving valid without chaos block")
+
+    def chaos_hung(d):
+        d["chaos"]["hung_requests"] = 1
+        d["chaos"]["completed_ok"] -= 1
+    expect_fail(validate_bench.validate_serving, mutate(serving, chaos_hung),
+                "chaos with a hung request")
+
+    def chaos_bucket_leak(d):
+        d["chaos"]["completed_ok"] -= 1
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, chaos_bucket_leak),
+                "chaos buckets do not partition the requests")
+
+    def chaos_injected_mismatch(d):
+        d["chaos"]["total_injected"] += 1
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, chaos_injected_mismatch),
+                "chaos per-site counts != total_injected")
+
+    def chaos_no_faults(d):
+        for site in d["chaos"]["injected"]:
+            d["chaos"]["injected"][site] = 0
+        d["chaos"]["total_injected"] = 0
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, chaos_no_faults),
+                "chaos run that injected nothing")
+
+    def chaos_recovery_failed(d):
+        d["chaos"]["recovery"]["verified"] = False
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, chaos_recovery_failed),
+                "chaos recovery probe failed")
+
+    def non_finite_latencies(d):
+        d["open_loop"]["async"]["non_finite_latencies"] = 3
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, non_finite_latencies),
+                "non-finite latencies in a healthy row")
+
 
 def write_docs(tmp, docs):
     paths = []
@@ -294,7 +360,8 @@ def test_merge_and_summary(tmp):
     h = summary["headline"]
     for key in ("serving_async_p99_us", "serving_sync_p99_us",
                 "serving_measured_p1_mflops", "serving_reqs_per_s",
-                "serving_wire_p99_us", "serving_wire_reqs_per_s"):
+                "serving_wire_p99_us", "serving_wire_reqs_per_s",
+                "serving_chaos_total_injected", "serving_chaos_hung"):
         assert key in h, f"missing headline metric {key}: {sorted(h)}"
     # Re-validating the merged document must pass too.
     rc = validate_bench.main([merged])
@@ -314,7 +381,11 @@ def test_compare(tmp, merged):
     assert verdict["verdict"] == "ok", verdict["verdict"]
     assert verdict["comparisons"], "no metrics compared"
     assert all(c["verdict"] == "ok" for c in verdict["comparisons"])
-    print("ok  compare identical -> ok")
+    # Chaos accounting is present in the headline but must never be
+    # compared — robustness numbers are not perf metrics.
+    compared = {c["metric"] for c in verdict["comparisons"]}
+    assert not any(m.startswith("serving_chaos") for m in compared), compared
+    print("ok  compare identical -> ok (chaos metrics excluded)")
 
     # A big serving regression: warn by default, fail under --strict.
     with open(merged) as f:

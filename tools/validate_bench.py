@@ -110,6 +110,11 @@ def validate_queue_row(row, requests):
     assert row["dispatches"] >= 1 and row["arrival_batches"] >= 1
     assert row["max_queue_depth"] >= 0
     assert 0 < row["pool_utilization"] <= 1.0, row["pool_utilization"]
+    # Percentiles are computed over finite samples only; a healthy
+    # (fault-free) row must not have dropped any. Absent in pre-PR-7
+    # artifacts, hence the default.
+    assert row.get("non_finite_latencies", 0) == 0, \
+        f"{row['non_finite_latencies']} non-finite latencies in a healthy row"
 
 
 def validate_wire_row(row, requests):
@@ -137,6 +142,40 @@ def validate_calibration(cal):
     assert model["p1_gups"] is None or model["p1_gups"] > 0
     assert model["dispatch_overhead_ns"] > 0
     validate_crossover_value(model["crossover"])
+
+
+def validate_chaos_block(chaos):
+    """The optional `chaos` block (PR 7 schema): a seeded fault-injection
+    run's accounting. Structural gates, not perf: every request must land
+    in exactly one outcome bucket, nothing may hang, and the post-chaos
+    recovery probe must have verified bit-parity. Chaos numbers never feed
+    perf verdicts (tools/compare_bench.py ignores this block).
+    """
+    requests = chaos["requests"]
+    assert requests >= 1, requests
+    buckets = {k: chaos[k] for k in ("completed_ok", "deadline_shed",
+                                     "worker_panics", "other_errors",
+                                     "hung_requests")}
+    for name, count in buckets.items():
+        assert count >= 0 and count == int(count), (name, count)
+    assert sum(buckets.values()) == requests, \
+        f"chaos buckets {buckets} must partition the {requests} requests"
+    # The hard gate: a hung request means a ticket never resolved — the
+    # resolve-exactly-once contract is broken and CI must go red.
+    assert chaos["hung_requests"] == 0, \
+        f"{chaos['hung_requests']} request(s) never resolved — pipeline wedged"
+    injected = chaos["injected"]
+    assert injected, "chaos block without per-site injection counts"
+    for site, count in injected.items():
+        assert count >= 0 and count == int(count), (site, count)
+    assert sum(injected.values()) == chaos["total_injected"], \
+        "per-site injection counts do not sum to total_injected"
+    assert chaos["total_injected"] >= 1, \
+        "a chaos run must actually inject faults"
+    recovery = chaos["recovery"]
+    assert recovery["verified"] is True, \
+        "post-chaos recovery probe was not bit-identical to the sync path"
+    assert recovery["latency_ns"] > 0, recovery
 
 
 def validate_serving(doc, smoke_async_check=False):
@@ -234,7 +273,13 @@ def validate_serving(doc, smoke_async_check=False):
         assert "calibration" in doc, "calibrated threshold without a calibration block"
     if "calibration" in doc:
         validate_calibration(doc["calibration"])
+    chaos = doc.get("chaos")
+    if chaos is not None:
+        validate_chaos_block(chaos)
     extra = ", calibrated" if "calibration" in doc else ""
+    if chaos is not None:
+        extra += (f", chaos {chaos['total_injected']} faults / "
+                  f"{chaos['hung_requests']} hung")
     if wire is not None:
         extra += (f", wire p99 {wire['latency_ns']['p99'] / 1e3:.1f} us "
                   f"over {wire['connections']} conn")
@@ -299,6 +344,12 @@ def headline_of(documents):
         cal = serving.get("calibration")
         if cal:
             h["serving_measured_p1_mflops"] = cal["measured"]["p1_mflops"]
+        chaos = serving.get("chaos")
+        if chaos:
+            # Robustness accounting only — tools/compare_bench.py keeps
+            # serving_chaos_* out of its perf-verdict allowlist.
+            h["serving_chaos_total_injected"] = chaos["total_injected"]
+            h["serving_chaos_hung"] = chaos["hung_requests"]
     return h
 
 
