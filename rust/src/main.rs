@@ -39,10 +39,11 @@ use kahan_ecm::runtime::hostbench::{
 };
 use kahan_ecm::runtime::parallel::ThreadPool;
 use kahan_ecm::serve::{
-    calibrate, codec, default_mix, parse_mix, run_load, run_load_async, run_load_chaos,
-    run_load_wire, AsyncDotService, AsyncLoadReport, AsyncOptions, Calibration, ChaosReport,
-    DotService, FaultInjector, FaultPlan, FaultSite, LoadMode, LoadReport, NetOptions, NetServer,
-    OperandPool, ServeConfig, ThresholdMode, WireLoadReport,
+    calibrate, codec, default_mix, parse_mix, run_interleaving_checksum, run_load,
+    run_load_async, run_load_chaos, run_load_tenants, run_load_wire, AsyncDotService,
+    AsyncLoadReport, AsyncOptions, Calibration, ChaosReport, DotService, FaultInjector,
+    FaultPlan, FaultSite, InterleavingReport, LoadMode, LoadReport, NetOptions, NetServer,
+    OperandPool, QosPolicy, ServeConfig, TenantLoadReport, ThresholdMode, WireLoadReport,
 };
 use kahan_ecm::sim::{self, MeasureOpts};
 use kahan_ecm::util::cli::Spec;
@@ -146,6 +147,12 @@ fn serve_bench_spec() -> Spec {
              on any hung request or failed recovery)",
         )
         .opt("chaos-seed", "fault-plan seed for --chaos (default: the request seed)")
+        .opt(
+            "tenants",
+            "tenant QoS spec name:weight[:quota],... (bare weights like 3:1 also work); \
+             enables weighted-fair scheduling with per-tenant quotas and records the \
+             tenant mixture, noisy-neighbor and scheduling-interleaving scenarios",
+        )
         .flag("quick", "tiny run for CI smoke")
 }
 
@@ -171,6 +178,11 @@ fn serve_net_spec() -> Spec {
         .opt(
             "write-timeout-ms",
             "per-write socket timeout; a slow client past it is evicted (default: none)",
+        )
+        .opt(
+            "tenants",
+            "tenant QoS spec name:weight[:quota],... (bare weights like 3:1 also work); \
+             unset quotas default to a weight-proportional share of the queue depth",
         )
 }
 
@@ -627,6 +639,21 @@ fn cmd_bench_scale(raw: Vec<String>) -> ExitCode {
     ExitCode::SUCCESS
 }
 
+/// `--tenants` handling shared by serve-bench and serve-net: parse the
+/// spec and fill unset quotas with a weight-proportional share of the
+/// queue depth (the documented default).
+fn parse_tenants_arg(
+    args: &kahan_ecm::util::cli::Args,
+    queue_depth: usize,
+) -> Result<Option<QosPolicy>, String> {
+    match args.opt("tenants") {
+        None => Ok(None),
+        Some(spec) => QosPolicy::parse(spec)
+            .map(|p| Some(p.with_default_quotas(queue_depth)))
+            .map_err(|e| format!("--tenants: {e}")),
+    }
+}
+
 /// Human label for a shard crossover (`usize::MAX` = "never shard").
 fn crossover_label(n: usize) -> String {
     if n == usize::MAX {
@@ -712,6 +739,65 @@ fn wire_row_json(r: &WireLoadReport) -> Json {
     obj.insert("busy_retries".to_string(), Json::Num(r.busy_retries as f64));
     obj.insert("rate_rps".to_string(), Json::Num(r.rate_rps));
     Json::Obj(obj)
+}
+
+/// Finite number or JSON null (percentiles of an empty sample set are
+/// NaN, which is not valid JSON).
+fn num_or_null(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+/// One tenant scenario in `BENCH_serving.json`: offered rate plus one
+/// accounting + latency row per tenant class.
+fn tenant_scenario_json(rep: &TenantLoadReport, rate_rps: f64) -> Json {
+    let mut rows = Vec::new();
+    for r in &rep.rows {
+        let mut lat = BTreeMap::new();
+        lat.insert("p50".to_string(), num_or_null(r.latency_p50_ns));
+        lat.insert("p99".to_string(), num_or_null(r.latency_p99_ns));
+        lat.insert("max".to_string(), num_or_null(r.latency_max_ns));
+        let mut obj = BTreeMap::new();
+        obj.insert("tenant".to_string(), Json::Num(r.tenant as f64));
+        obj.insert("name".to_string(), Json::Str(r.name.clone()));
+        obj.insert("weight".to_string(), Json::Num(r.weight as f64));
+        obj.insert(
+            "quota".to_string(),
+            r.quota.map(|q| Json::Num(q as f64)).unwrap_or(Json::Null),
+        );
+        obj.insert("offered".to_string(), Json::Num(r.offered as f64));
+        obj.insert("admitted".to_string(), Json::Num(r.admitted as f64));
+        obj.insert("completed_ok".to_string(), Json::Num(r.completed_ok as f64));
+        obj.insert("quota_shed".to_string(), Json::Num(r.quota_shed as f64));
+        obj.insert("busy_shed".to_string(), Json::Num(r.busy_shed as f64));
+        obj.insert(
+            "deadline_shed".to_string(),
+            Json::Num(r.deadline_shed as f64),
+        );
+        obj.insert("latency_ns".to_string(), Json::Obj(lat));
+        rows.push(Json::Obj(obj));
+    }
+    let mut obj = BTreeMap::new();
+    obj.insert("requests".to_string(), Json::Num(rep.requests as f64));
+    obj.insert("rate_rps".to_string(), Json::Num(rate_rps));
+    obj.insert("elapsed_ns".to_string(), Json::Num(rep.elapsed_ns));
+    obj.insert("rows".to_string(), Json::Arr(rows));
+    Json::Obj(obj)
+}
+
+/// Everything the `--tenants` scenarios measured, staged for the table
+/// and JSON emitters.
+struct TenantBench {
+    weighted: TenantLoadReport,
+    noisy: TenantLoadReport,
+    noisy_rate: f64,
+    interleave_requests: usize,
+    fifo: InterleavingReport,
+    fair: InterleavingReport,
+    reversed: InterleavingReport,
 }
 
 fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
@@ -802,6 +888,13 @@ fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
     };
     let batch_window_us = match args.opt_parse("batch-window-us", 100u64) {
         Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let qos = match parse_tenants_arg(&args, queue_depth) {
+        Ok(q) => q,
         Err(e) => {
             eprintln!("error: {e}");
             return ExitCode::FAILURE;
@@ -1017,6 +1110,144 @@ fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
         Some(w)
     };
 
+    // Tenant QoS scenarios (--tenants): a weight-proportional mixture, an
+    // adversarial noisy neighbor, and the scheduling-independence
+    // checksums. The mixture and noisy rows are *accounting* (sheds are
+    // the point), so they never join the perf gates above; the
+    // interleaving block is a hard gate — FIFO, weighted-fair and
+    // reversed-priority services must serve bit-identical checksums over
+    // the same request set, or scheduling has forked the numerics.
+    let tenant_bench: Option<TenantBench> = match &qos {
+        None => None,
+        Some(policy) => {
+            let opts = AsyncOptions {
+                queue_depth,
+                batch_window: std::time::Duration::from_micros(batch_window_us),
+                batch_max: batch,
+                overlap: true,
+                deadline: None,
+            };
+            let mk = |p: Option<QosPolicy>| -> Result<AsyncDotService, String> {
+                AsyncDotService::new_with_qos(cfg.clone(), opts, p, None)
+                    .map_err(|e| format!("cannot build the tenant service: {e}"))
+            };
+            let operands = OperandPool::generate(&mix, seed, service.pool());
+            let watchdog = kahan_ecm::serve::loadgen::default_watchdog(requests, rate);
+            let run = |svc: &AsyncDotService, offered: &[usize], r: f64| {
+                run_load_tenants(svc, &mix, &operands, offered, r, None, seed, watchdog)
+                    .map_err(|e| format!("tenant load run failed: {e}"))
+            };
+            let total_w: u64 = policy
+                .classes()
+                .iter()
+                .map(|c| u64::from(c.weight.max(1)))
+                .sum::<u64>()
+                .max(1);
+            let weighted_offered: Vec<usize> = policy
+                .classes()
+                .iter()
+                .map(|c| {
+                    let share = requests as u64 * u64::from(c.weight.max(1)) / total_w;
+                    (share as usize).max(1)
+                })
+                .collect();
+            eprintln!(
+                "serve-bench: tenant scenarios over {} class(es) at {} req/s ...",
+                policy.classes().len(),
+                fnum(rate, 0)
+            );
+            let weighted =
+                match mk(Some(policy.clone())).and_then(|s| run(&s, &weighted_offered, rate)) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        eprintln!("error: {e}");
+                        return ExitCode::FAILURE;
+                    }
+                };
+            // Noisy neighbor: the first tenant fires the full request
+            // budget at 4x the configured rate; every other tenant rides
+            // along with a light stream. The quota must shed the heavy
+            // tenant while the light one keeps its weighted share.
+            let light = (requests / 8).max(16);
+            let mut noisy_offered = vec![light; policy.classes().len()];
+            noisy_offered[0] = requests;
+            let noisy_rate = rate * 4.0;
+            let noisy =
+                match mk(Some(policy.clone())).and_then(|s| run(&s, &noisy_offered, noisy_rate)) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        eprintln!("error: {e}");
+                        return ExitCode::FAILURE;
+                    }
+                };
+            // Scheduling-independence checksums: the same stream through a
+            // FIFO service, this policy, and this policy with the weights
+            // reversed (priorities inverted).
+            let mut rev_classes = policy.classes().to_vec();
+            let rev_weights: Vec<u32> = rev_classes.iter().rev().map(|c| c.weight).collect();
+            for (c, w) in rev_classes.iter_mut().zip(rev_weights) {
+                c.weight = w;
+            }
+            let interleave_requests = requests;
+            let tenants_n = policy.classes().len() as u32;
+            let inter = |p: Option<QosPolicy>| -> Result<InterleavingReport, String> {
+                let svc = mk(p)?;
+                run_interleaving_checksum(
+                    &svc,
+                    &mix,
+                    &operands,
+                    interleave_requests,
+                    tenants_n,
+                    seed,
+                )
+                .map_err(|e| format!("interleaving run failed: {e}"))
+            };
+            let (fifo, fair, reversed) = match (
+                inter(None),
+                inter(Some(policy.clone())),
+                inter(Some(QosPolicy::new(rev_classes))),
+            ) {
+                (Ok(a), Ok(b), Ok(c)) => (a, b, c),
+                (Err(e), _, _) | (_, Err(e), _) | (_, _, Err(e)) => {
+                    eprintln!("error: {e}");
+                    return ExitCode::FAILURE;
+                }
+            };
+            // Hard gate: any divergence means scheduling touched the math.
+            // The FIFO interleaving run also folds the same request stream
+            // as the primary batch run, so it must match that checksum too.
+            if fifo.checksum.to_bits() != fair.checksum.to_bits()
+                || fifo.checksum.to_bits() != reversed.checksum.to_bits()
+                || fifo.checksum.to_bits() != report.checksum.to_bits()
+            {
+                eprintln!(
+                    "error: interleaving checksum parity violated: batch {} / fifo {} / \
+                     weighted {} / reversed {}",
+                    report.checksum, fifo.checksum, fair.checksum, reversed.checksum
+                );
+                return ExitCode::FAILURE;
+            }
+            let shed: u64 = noisy.rows.iter().map(|r| r.quota_shed as u64).sum();
+            eprintln!(
+                "tenants: weighted {} ok of {}, noisy {} quota-shed of {}, interleaving \
+                 checksums bit-identical across 3 schedules",
+                weighted.rows.iter().map(|r| r.completed_ok).sum::<usize>(),
+                weighted.requests,
+                shed,
+                noisy.requests
+            );
+            Some(TenantBench {
+                weighted,
+                noisy,
+                noisy_rate,
+                interleave_requests,
+                fifo,
+                fair,
+                reversed,
+            })
+        }
+    };
+
     // Chaos scenario: replay a seeded in-process fault plan against a
     // dedicated service instance and account for every request. The two
     // hard gates are structural, not numeric: no request may hang, and
@@ -1042,8 +1273,21 @@ fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
         // even in a --quick run's handful of dispatches.
         let plan = FaultPlan::seeded(chaos_seed, &FaultSite::IN_PROCESS, 8);
         let injector = FaultInjector::new(plan);
-        let asy = match AsyncDotService::new_with_faults(cfg.clone(), opts, Some(injector.clone()))
-        {
+        // The chaos service always runs with a tenant policy (--tenants
+        // when given, a 3:1 default otherwise): the starvation-stall site
+        // only arms inside the weighted-fair drain, and the quota-reject
+        // site needs tenants to account its sheds against.
+        let chaos_qos = qos.clone().unwrap_or_else(|| {
+            QosPolicy::parse("a:3,b:1")
+                .expect("static default tenant policy")
+                .with_default_quotas(queue_depth)
+        });
+        let asy = match AsyncDotService::new_with_qos(
+            cfg.clone(),
+            opts,
+            Some(chaos_qos),
+            Some(injector.clone()),
+        ) {
             Ok(a) => a,
             Err(e) => {
                 eprintln!("error: cannot build the chaos service: {e}");
@@ -1079,10 +1323,11 @@ fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
             }
         };
         eprintln!(
-            "chaos: {} ok / {} shed / {} panicked / {} other / {} hung of {} ({} faults \
-             injected; recovery {} in {} us)",
+            "chaos: {} ok / {} deadline-shed / {} quota-shed / {} panicked / {} other / {} \
+             hung of {} ({} faults injected; recovery {} in {} us)",
             r.completed_ok,
             r.deadline_shed,
+            r.quota_shed,
             r.worker_panics,
             r.other_errors,
             r.hung,
@@ -1153,6 +1398,30 @@ fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
         ]);
     }
     print!("{}", qt.to_text());
+
+    if let Some(tb) = &tenant_bench {
+        let mut tt = Table::new([
+            "scenario", "tenant", "w", "quota", "offered", "admitted", "ok", "quota shed",
+            "p50 us", "p99 us",
+        ]);
+        for (scenario, rep) in [("weighted", &tb.weighted), ("noisy", &tb.noisy)] {
+            for r in &rep.rows {
+                tt.row([
+                    scenario.to_string(),
+                    r.name.clone(),
+                    r.weight.to_string(),
+                    r.quota.map(|q| q.to_string()).unwrap_or_else(|| "-".to_string()),
+                    r.offered.to_string(),
+                    r.admitted.to_string(),
+                    r.completed_ok.to_string(),
+                    r.quota_shed.to_string(),
+                    us(r.latency_p50_ns),
+                    us(r.latency_p99_ns),
+                ]);
+            }
+        }
+        print!("{}", tt.to_text());
+    }
 
     let mut mix_json = Vec::new();
     for e in &mix {
@@ -1227,6 +1496,51 @@ fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
         root.insert("wire".to_string(), wire_row_json(w));
     }
     root.insert("async_p99_ok".to_string(), Json::Bool(async_p99_ok));
+    if let Some(tb) = &tenant_bench {
+        let policy = qos.as_ref().expect("tenant bench implies a policy");
+        let mut pol_rows = Vec::new();
+        for (i, c) in policy.classes().iter().enumerate() {
+            let mut obj = BTreeMap::new();
+            obj.insert("tenant".to_string(), Json::Num(i as f64));
+            obj.insert("name".to_string(), Json::Str(c.name.clone()));
+            obj.insert("weight".to_string(), Json::Num(f64::from(c.weight)));
+            obj.insert(
+                "quota".to_string(),
+                c.quota.map(|q| Json::Num(q as f64)).unwrap_or(Json::Null),
+            );
+            pol_rows.push(Json::Obj(obj));
+        }
+        let mut scenarios = BTreeMap::new();
+        scenarios.insert(
+            "weighted".to_string(),
+            tenant_scenario_json(&tb.weighted, rate),
+        );
+        scenarios.insert(
+            "noisy".to_string(),
+            tenant_scenario_json(&tb.noisy, tb.noisy_rate),
+        );
+        let mut inter = BTreeMap::new();
+        inter.insert(
+            "requests".to_string(),
+            Json::Num(tb.interleave_requests as f64),
+        );
+        inter.insert("fifo".to_string(), Json::Num(tb.fifo.checksum));
+        inter.insert("weighted".to_string(), Json::Num(tb.fair.checksum));
+        inter.insert("reversed".to_string(), Json::Num(tb.reversed.checksum));
+        // Hard-gated above: the artifact only exists when the three agree.
+        inter.insert(
+            "match".to_string(),
+            Json::Bool(
+                tb.fifo.checksum.to_bits() == tb.fair.checksum.to_bits()
+                    && tb.fifo.checksum.to_bits() == tb.reversed.checksum.to_bits(),
+            ),
+        );
+        let mut obj = BTreeMap::new();
+        obj.insert("policy".to_string(), Json::Arr(pol_rows));
+        obj.insert("scenarios".to_string(), Json::Obj(scenarios));
+        obj.insert("interleaving".to_string(), Json::Obj(inter));
+        root.insert("tenants".to_string(), Json::Obj(obj));
+    }
     if let Some((chaos_seed, r)) = &chaos {
         let mut injected = BTreeMap::new();
         for (label, count) in &r.injected {
@@ -1240,6 +1554,7 @@ fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
         obj.insert("requests".to_string(), Json::Num(r.requests as f64));
         obj.insert("completed_ok".to_string(), Json::Num(r.completed_ok as f64));
         obj.insert("deadline_shed".to_string(), Json::Num(r.deadline_shed as f64));
+        obj.insert("quota_shed".to_string(), Json::Num(r.quota_shed as f64));
         obj.insert("worker_panics".to_string(), Json::Num(r.worker_panics as f64));
         obj.insert("other_errors".to_string(), Json::Num(r.other_errors as f64));
         obj.insert("hung_requests".to_string(), Json::Num(r.hung as f64));
@@ -1297,6 +1612,19 @@ fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
             fnum(w.load.latency_p99_ns / 1e3, 1),
             fnum(w.load.reqs_per_s, 0),
             w.busy_retries
+        );
+    }
+    if let Some(tb) = &tenant_bench {
+        let heavy = &tb.noisy.rows[0];
+        let light = tb.noisy.rows.last().expect("noisy scenario has rows");
+        println!(
+            "tenants: noisy neighbor '{}' quota-shed {} of {}; light tenant '{}' p99 {} us; \
+             interleaving checksums bit-identical across fifo/weighted/reversed",
+            heavy.name,
+            heavy.quota_shed,
+            heavy.offered,
+            light.name,
+            fnum(light.latency_p99_ns / 1e3, 1)
         );
     }
     ExitCode::SUCCESS
@@ -1399,10 +1727,25 @@ fn cmd_serve_net(raw: Vec<String>) -> ExitCode {
         overlap: true,
         deadline: None,
     };
+    let qos = match parse_tenants_arg(&args, queue_depth) {
+        Ok(q) => q,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let qos_label = qos.as_ref().map(|p| {
+        p.classes()
+            .iter()
+            .map(|c| format!("{}:{}", c.name, c.weight))
+            .collect::<Vec<_>>()
+            .join(",")
+    });
     let net = NetOptions {
         read_timeout: read_timeout_ms.map(std::time::Duration::from_millis),
         idle_timeout: idle_timeout_ms.map(std::time::Duration::from_millis),
         write_timeout: write_timeout_ms.map(std::time::Duration::from_millis),
+        qos,
         ..NetOptions::default()
     };
     let server = match NetServer::bind_with(&addr, cfg, opts, net) {
@@ -1415,11 +1758,14 @@ fn cmd_serve_net(raw: Vec<String>) -> ExitCode {
     let svc = server.service().service();
     eprintln!(
         "serve-net: T = {threads}, rung {}, shard at n >= {} ({}), queue depth {queue_depth}, \
-         window {batch_window_us} us, clock {freq:.2} GHz ({})",
+         window {batch_window_us} us, clock {freq:.2} GHz ({}){}",
         svc.dot_spec(),
         crossover_label(svc.shard_threshold()),
         svc.threshold_source().label(),
-        freq_src.label()
+        freq_src.label(),
+        qos_label
+            .map(|l| format!(", tenants {l}"))
+            .unwrap_or_default()
     );
     // Parseable by scripts (tools/bench-smoke): the actual bound address,
     // which differs from --addr when port 0 asked for an ephemeral port.

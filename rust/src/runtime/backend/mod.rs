@@ -276,6 +276,10 @@ pub enum BackendError {
     /// The request's deadline expired before execution began; it was shed
     /// in-queue without any compute (`budget_us` is the deadline it carried).
     DeadlineExceeded { budget_us: u64 },
+    /// The request's tenant was at its per-tenant queue quota; it was shed
+    /// at admission without entering the queue (distinct from whole-queue
+    /// backpressure, which blocks or reports busy instead).
+    QuotaExceeded { tenant: u32 },
 }
 
 impl fmt::Display for BackendError {
@@ -293,6 +297,9 @@ impl fmt::Display for BackendError {
             BackendError::Runtime(msg) => write!(f, "backend execution failed: {msg}"),
             BackendError::DeadlineExceeded { budget_us } => {
                 write!(f, "deadline exceeded: request shed after {budget_us} us budget")
+            }
+            BackendError::QuotaExceeded { tenant } => {
+                write!(f, "quota exceeded: tenant {tenant} is at its queue quota")
             }
         }
     }

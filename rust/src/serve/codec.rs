@@ -48,10 +48,26 @@ pub const HEADER_LEN: usize = 20;
 /// downgrade signal.
 pub const FLAG_DEADLINE: u8 = 0x01;
 
+/// Header flag bit (revision 1.2): the payload carries a 4-byte
+/// little-endian tenant id, placed *after* the deadline prefix when both
+/// flags are set (prefixes appear in ascending flag-bit order,
+/// PROTOCOL.md §2.4). On a STATS request the tenant prefix doubles as the
+/// opt-in for the per-tenant stats extension (§3.7); on a STATS_RESULT
+/// frame this bit announces that extension. Pre-1.2 servers reject the
+/// bit with a non-fatal [`ErrorCode::Malformed`] — the downgrade signal.
+pub const FLAG_TENANT: u8 = 0x02;
+
+/// Header flag bit (revision 1.2), error frames only: the error payload
+/// carries a 4-byte little-endian retry-after hint in microseconds
+/// between the code byte and the message length (PROTOCOL.md §4). The
+/// server sets it only on BUSY/QUOTA frames answering a request that
+/// itself carried a revision-1.2 flag, so a pre-1.2 client never sees it.
+pub const FLAG_RETRY: u8 = 0x04;
+
 /// All flag bits assigned so far (PROTOCOL.md §2.4). Unknown bits are
 /// rejected as [`ErrorCode::Malformed`] without closing the connection,
 /// exactly as revision 1.0 treated any nonzero offset-6 byte.
-pub const FLAGS_KNOWN: u8 = FLAG_DEADLINE;
+pub const FLAGS_KNOWN: u8 = FLAG_DEADLINE | FLAG_TENANT | FLAG_RETRY;
 
 /// Maximum payload length the codec will accept, 128 MiB
 /// (PROTOCOL.md §2.3). Large enough for a dot request over the full default
@@ -152,6 +168,13 @@ pub enum ErrorCode {
     /// client decodes this byte as [`ErrorCode::Internal`] — still a
     /// per-request error, never a framing break.
     Deadline,
+    /// The request's tenant is at its configured queue quota; the request
+    /// was shed at admission without entering the queue. Distinct from
+    /// [`ErrorCode::Busy`] (whole-queue backpressure): QUOTA means *this
+    /// tenant* must back off while others are still admitted. Non-fatal
+    /// (PROTOCOL.md §4.11, revision 1.2); pre-1.2 clients decode the byte
+    /// as [`ErrorCode::Internal`].
+    Quota,
 }
 
 impl ErrorCode {
@@ -168,6 +191,7 @@ impl ErrorCode {
             ErrorCode::Shutdown => 0x08,
             ErrorCode::Internal => 0x09,
             ErrorCode::Deadline => 0x0A,
+            ErrorCode::Quota => 0x0B,
         }
     }
 
@@ -185,6 +209,7 @@ impl ErrorCode {
             0x07 => ErrorCode::Busy,
             0x08 => ErrorCode::Shutdown,
             0x0A => ErrorCode::Deadline,
+            0x0B => ErrorCode::Quota,
             _ => ErrorCode::Internal,
         }
     }
@@ -212,6 +237,7 @@ impl ErrorCode {
             ErrorCode::Shutdown => "shutdown",
             ErrorCode::Internal => "internal",
             ErrorCode::Deadline => "deadline",
+            ErrorCode::Quota => "quota",
         }
     }
 }
@@ -223,6 +249,10 @@ pub struct WireError {
     pub code: ErrorCode,
     /// Free-form diagnostic detail; informational only, never parsed.
     pub message: String,
+    /// Optional retry-after hint in microseconds, carried structurally by
+    /// [`FLAG_RETRY`]-flagged BUSY/QUOTA frames (PROTOCOL.md §4, revision
+    /// 1.2) — receivers must never parse `message` for it.
+    pub retry_after_us: Option<u32>,
 }
 
 impl WireError {
@@ -231,6 +261,17 @@ impl WireError {
         Self {
             code,
             message: message.into(),
+            retry_after_us: None,
+        }
+    }
+
+    /// [`Self::new`] carrying a retry-after hint (BUSY/QUOTA overload
+    /// signals, PROTOCOL.md §4, revision 1.2).
+    pub fn with_retry(code: ErrorCode, message: impl Into<String>, retry_after_us: u32) -> Self {
+        Self {
+            code,
+            message: message.into(),
+            retry_after_us: Some(retry_after_us),
         }
     }
 }
@@ -417,6 +458,83 @@ pub fn split_deadline(flags: u8, payload: &[u8]) -> Result<(Option<u64>, &[u8]),
     Ok((Some(deadline_us), &payload[8..]))
 }
 
+/// Per-request metadata announced by header flags and carried as payload
+/// prefixes (PROTOCOL.md §2.4): the revision-1.1 deadline and the
+/// revision-1.2 tenant id.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RequestMeta {
+    /// Shedding budget in microseconds from server receipt
+    /// ([`FLAG_DEADLINE`]).
+    pub deadline_us: Option<u64>,
+    /// Tenant id for QoS admission and scheduling ([`FLAG_TENANT`]).
+    /// Absent means the default tenant (id 0).
+    pub tenant: Option<u32>,
+}
+
+/// Strip every flagged payload prefix (PROTOCOL.md §2.4, revision 1.2):
+/// the 8-byte deadline ([`FLAG_DEADLINE`]), then the 4-byte tenant id
+/// ([`FLAG_TENANT`]) — prefixes appear in ascending flag-bit order.
+/// Returns the decoded metadata and the remaining request payload; a
+/// flagged payload shorter than its prefixes is [`ErrorCode::Malformed`].
+pub fn split_prefixes(flags: u8, payload: &[u8]) -> Result<(RequestMeta, &[u8]), WireError> {
+    let (deadline_us, rest) = split_deadline(flags, payload)?;
+    let mut meta = RequestMeta {
+        deadline_us,
+        tenant: None,
+    };
+    if flags & FLAG_TENANT == 0 {
+        return Ok((meta, rest));
+    }
+    if rest.len() < 4 {
+        return Err(WireError::new(
+            ErrorCode::Malformed,
+            "tenant flag set but payload shorter than its 4-byte prefix",
+        ));
+    }
+    meta.tenant = Some(u32::from_le_bytes([rest[0], rest[1], rest[2], rest[3]]));
+    Ok((meta, &rest[4..]))
+}
+
+/// Assemble a request frame carrying any combination of the flagged
+/// prefixes (PROTOCOL.md §2.4): the flags byte announces what
+/// [`RequestMeta`] carries, and the payload is prefixed accordingly —
+/// deadline first, then tenant, then the ordinary request payload. Panics
+/// on an oversized combined payload, like [`encode_frame`].
+pub fn encode_frame_with_meta(
+    opcode: Opcode,
+    request_id: u64,
+    meta: RequestMeta,
+    payload: &[u8],
+) -> Vec<u8> {
+    let mut flags = 0u8;
+    let mut prefix_len = 0usize;
+    if meta.deadline_us.is_some() {
+        flags |= FLAG_DEADLINE;
+        prefix_len += 8;
+    }
+    if meta.tenant.is_some() {
+        flags |= FLAG_TENANT;
+        prefix_len += 4;
+    }
+    let total = payload.len() + prefix_len;
+    assert!(
+        total <= MAX_PAYLOAD,
+        "payload {} exceeds protocol cap {}",
+        total,
+        MAX_PAYLOAD
+    );
+    let mut out = Vec::with_capacity(HEADER_LEN + total);
+    encode_header_flagged(&mut out, opcode, flags, request_id, total as u32);
+    if let Some(deadline_us) = meta.deadline_us {
+        out.extend_from_slice(&deadline_us.to_le_bytes());
+    }
+    if let Some(tenant) = meta.tenant {
+        out.extend_from_slice(&tenant.to_le_bytes());
+    }
+    out.extend_from_slice(payload);
+    out
+}
+
 /// Bounds-checked little-endian cursor over a payload. Every accessor
 /// returns [`ErrorCode::Malformed`] instead of panicking when the payload
 /// is shorter than its fields claim.
@@ -565,6 +683,22 @@ pub fn encode_batch(request_id: u64, inputs: &[SharedInput]) -> Vec<u8> {
 /// Encode a stats probe: empty payload (PROTOCOL.md §3.4).
 pub fn encode_stats(request_id: u64) -> Vec<u8> {
     encode_frame(Opcode::Stats, request_id, &[])
+}
+
+/// Encode a stats probe that opts into the per-tenant extension
+/// (PROTOCOL.md §3.7, revision 1.2): the tenant prefix identifies the
+/// asking tenant and asks the server to answer with a
+/// [`FLAG_TENANT`]-flagged stats result carrying per-tenant counters.
+pub fn encode_stats_tenants(request_id: u64, tenant: u32) -> Vec<u8> {
+    encode_frame_with_meta(
+        Opcode::Stats,
+        request_id,
+        RequestMeta {
+            deadline_us: None,
+            tenant: Some(tenant),
+        },
+        &[],
+    )
 }
 
 /// A decoded client request, ready for service admission.
@@ -761,9 +895,24 @@ pub struct WireStats {
     pub busy_ns: u64,
 }
 
-/// Encode a stats-result frame (PROTOCOL.md §3.7).
-pub fn encode_stats_result(request_id: u64, stats: &WireStats) -> Vec<u8> {
-    let mut payload = Vec::with_capacity(64);
+/// Per-tenant QoS counters carried by the [`FLAG_TENANT`] stats extension
+/// (PROTOCOL.md §3.7, revision 1.2): tenant id (u32) then four `u64`
+/// fields, all little-endian, in this order.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireTenantStats {
+    /// The tenant id these counters belong to.
+    pub tenant: u32,
+    /// Requests admitted past quota and queue checks since startup.
+    pub admitted: u64,
+    /// Admitted requests whose tickets resolved (success or typed error).
+    pub completed: u64,
+    /// Requests shed at admission because the tenant was at quota.
+    pub quota_shed: u64,
+    /// Admitted requests shed in-queue on deadline expiry.
+    pub deadline_shed: u64,
+}
+
+fn push_stats_fields(payload: &mut Vec<u8>, stats: &WireStats) {
     for field in [
         stats.queue_depth,
         stats.threads,
@@ -776,7 +925,44 @@ pub fn encode_stats_result(request_id: u64, stats: &WireStats) -> Vec<u8> {
     ] {
         payload.extend_from_slice(&field.to_le_bytes());
     }
+}
+
+/// Encode a stats-result frame (PROTOCOL.md §3.7).
+pub fn encode_stats_result(request_id: u64, stats: &WireStats) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(64);
+    push_stats_fields(&mut payload, stats);
     encode_frame(Opcode::StatsResult, request_id, &payload)
+}
+
+/// Encode a stats-result frame carrying the per-tenant extension
+/// (PROTOCOL.md §3.7, revision 1.2): the fixed eight `u64` fields, then a
+/// `u32` row count, then one [`WireTenantStats`] row per tenant. The
+/// frame's [`FLAG_TENANT`] bit announces the extension; servers send it
+/// only to clients that opted in via a tenant-flagged STATS request.
+pub fn encode_stats_result_tenants(
+    request_id: u64,
+    stats: &WireStats,
+    tenants: &[WireTenantStats],
+) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(64 + 4 + 36 * tenants.len());
+    push_stats_fields(&mut payload, stats);
+    payload.extend_from_slice(&(tenants.len() as u32).to_le_bytes());
+    for row in tenants {
+        payload.extend_from_slice(&row.tenant.to_le_bytes());
+        for field in [row.admitted, row.completed, row.quota_shed, row.deadline_shed] {
+            payload.extend_from_slice(&field.to_le_bytes());
+        }
+    }
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    encode_header_flagged(
+        &mut out,
+        Opcode::StatsResult,
+        FLAG_TENANT,
+        request_id,
+        payload.len() as u32,
+    );
+    out.extend_from_slice(&payload);
+    out
 }
 
 /// Encode a typed error frame (PROTOCOL.md §4): code byte (1) + message
@@ -792,6 +978,36 @@ pub fn encode_error(request_id: u64, code: ErrorCode, message: &str) -> Vec<u8> 
     encode_frame(Opcode::Error, request_id, &payload)
 }
 
+/// Encode a typed error frame carrying a structured retry-after hint
+/// (PROTOCOL.md §4, revision 1.2): the header sets [`FLAG_RETRY`] and the
+/// payload is code byte (1) + retry-after µs (4) + message length (4) +
+/// UTF-8 message bytes. Only BUSY/QUOTA overload signals carry it, and
+/// only toward clients that demonstrated revision-1.2 support.
+pub fn encode_error_retry(
+    request_id: u64,
+    code: ErrorCode,
+    retry_after_us: u32,
+    message: &str,
+) -> Vec<u8> {
+    let bytes = message.as_bytes();
+    let take = bytes.len().min(4096);
+    let mut payload = Vec::with_capacity(9 + take);
+    payload.push(code.byte());
+    payload.extend_from_slice(&retry_after_us.to_le_bytes());
+    payload.extend_from_slice(&(take as u32).to_le_bytes());
+    payload.extend_from_slice(&bytes[..take]);
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    encode_header_flagged(
+        &mut out,
+        Opcode::Error,
+        FLAG_RETRY,
+        request_id,
+        payload.len() as u32,
+    );
+    out.extend_from_slice(&payload);
+    out
+}
+
 /// A decoded server → client response payload.
 #[derive(Clone, Debug)]
 pub enum Response {
@@ -801,14 +1017,36 @@ pub enum Response {
     Batch(Vec<WireResult>),
     /// A stats snapshot (PROTOCOL.md §3.7).
     Stats(WireStats),
+    /// A stats snapshot with the revision-1.2 per-tenant extension
+    /// (PROTOCOL.md §3.7): the fixed fields plus one row per tenant the
+    /// server has seen.
+    TenantStats {
+        /// The fixed eight-field snapshot every revision carries.
+        stats: WireStats,
+        /// Per-tenant QoS counter rows, ascending by tenant id.
+        tenants: Vec<WireTenantStats>,
+    },
     /// A typed error frame (PROTOCOL.md §4).
     Error(WireError),
 }
 
 /// Decode a response payload for a validated response opcode
 /// (PROTOCOL.md §3.5–3.7, §4). Request opcodes arriving at a client are
-/// protocol violations and decode to [`ErrorCode::BadOpcode`].
+/// protocol violations and decode to [`ErrorCode::BadOpcode`]. Flagless
+/// shorthand for [`decode_response_flagged`].
 pub fn decode_response(opcode: Opcode, payload: &[u8]) -> Result<Response, WireError> {
+    decode_response_flagged(0, opcode, payload)
+}
+
+/// [`decode_response`] honoring the frame's flags byte (revision 1.2):
+/// [`FLAG_TENANT`] on a stats result announces the per-tenant extension,
+/// [`FLAG_RETRY`] on an error frame announces the structured retry-after
+/// hint.
+pub fn decode_response_flagged(
+    flags: u8,
+    opcode: Opcode,
+    payload: &[u8],
+) -> Result<Response, WireError> {
     let mut r = Reader::new(payload);
     let resp = match opcode {
         Opcode::Result => Response::Result(read_result(&mut r)?),
@@ -837,14 +1075,45 @@ pub fn decode_response(opcode: Opcode, payload: &[u8]) -> Result<Response, WireE
                 max_queue_depth: r.u64()?,
                 busy_ns: r.u64()?,
             };
-            Response::Stats(stats)
+            if flags & FLAG_TENANT == 0 {
+                Response::Stats(stats)
+            } else {
+                let count = r.u32()? as usize;
+                // Each row costs 36 bytes (u32 + 4 × u64).
+                if count > element_cap(payload.len(), 36) {
+                    return Err(WireError::new(
+                        ErrorCode::Malformed,
+                        format!("tenant-stats count {} exceeds payload capacity", count),
+                    ));
+                }
+                let mut tenants = Vec::with_capacity(count);
+                for _ in 0..count {
+                    tenants.push(WireTenantStats {
+                        tenant: r.u32()?,
+                        admitted: r.u64()?,
+                        completed: r.u64()?,
+                        quota_shed: r.u64()?,
+                        deadline_shed: r.u64()?,
+                    });
+                }
+                Response::TenantStats { stats, tenants }
+            }
         }
         Opcode::Error => {
             let code = ErrorCode::from_byte(r.u8()?);
+            let retry_after_us = if flags & FLAG_RETRY != 0 {
+                Some(r.u32()?)
+            } else {
+                None
+            };
             let len = r.u32()? as usize;
             let bytes = r.take(len)?;
             let message = String::from_utf8_lossy(bytes).into_owned();
-            Response::Error(WireError { code, message })
+            Response::Error(WireError {
+                code,
+                message,
+                retry_after_us,
+            })
         }
         other => {
             return Err(WireError::new(
@@ -911,6 +1180,7 @@ mod tests {
             ErrorCode::Shutdown,
             ErrorCode::Internal,
             ErrorCode::Deadline,
+            ErrorCode::Quota,
         ] {
             assert_eq!(ErrorCode::from_byte(code.byte()), code);
         }
@@ -923,6 +1193,7 @@ mod tests {
         assert!(!ErrorCode::Malformed.is_fatal());
         assert!(!ErrorCode::Invalid.is_fatal());
         assert!(!ErrorCode::Deadline.is_fatal());
+        assert!(!ErrorCode::Quota.is_fatal());
     }
 
     #[test]
@@ -1131,13 +1402,20 @@ mod tests {
         let frame = encode_stats(1);
         let mut head = [0u8; HEADER_LEN];
         head.copy_from_slice(&frame[..HEADER_LEN]);
-        head[6] = 0x02; // first unassigned flag bit
+        head[6] = 0x08; // first unassigned flag bit (0x01/0x02/0x04 are taken)
         assert_eq!(
             decode_header(&head).unwrap_err().code,
             ErrorCode::Malformed
         );
         head[6] = FLAG_DEADLINE;
         assert_eq!(decode_header(&head).expect("known flag").flags, FLAG_DEADLINE);
+        head[6] = FLAG_TENANT;
+        assert_eq!(decode_header(&head).expect("known flag").flags, FLAG_TENANT);
+        head[6] = FLAG_DEADLINE | FLAG_TENANT;
+        assert_eq!(
+            decode_header(&head).expect("known flags").flags,
+            FLAG_DEADLINE | FLAG_TENANT
+        );
     }
 
     #[test]
@@ -1176,6 +1454,144 @@ mod tests {
                 "len {}",
                 len
             );
+        }
+    }
+
+    #[test]
+    fn tenant_and_deadline_prefixes_round_trip_in_flag_bit_order() {
+        let x = [1.0, -2.5];
+        let y = [0.5, 4.0];
+        let inner = encode_dot_payload(&x, &y);
+        let meta = RequestMeta {
+            deadline_us: Some(2_000_000),
+            tenant: Some(7),
+        };
+        let frame = encode_frame_with_meta(Opcode::Dot, 5, meta, &inner);
+        let (header, payload) = split(&frame);
+        assert_eq!(header.flags, FLAG_DEADLINE | FLAG_TENANT);
+        let (got, rest) = split_prefixes(header.flags, payload).expect("well-formed");
+        assert_eq!(got, meta);
+        match decode_request(Opcode::Dot, rest).expect("decodes") {
+            Request::Submit(SharedInput::Dot(dx, _)) => {
+                assert_eq!(dx[0].to_bits(), x[0].to_bits());
+            }
+            other => panic!("unexpected request {:?}", other),
+        }
+        // Tenant-only frames carry just the 4-byte prefix.
+        let t_only = RequestMeta {
+            deadline_us: None,
+            tenant: Some(3),
+        };
+        let frame = encode_frame_with_meta(Opcode::Dot, 6, t_only, &inner);
+        let (header, payload) = split(&frame);
+        assert_eq!(header.flags, FLAG_TENANT);
+        let (got, rest) = split_prefixes(header.flags, payload).expect("well-formed");
+        assert_eq!(got.tenant, Some(3));
+        assert_eq!(got.deadline_us, None);
+        assert_eq!(rest.len(), inner.len());
+        // Flagless payloads pass through untouched.
+        let (none, all) = split_prefixes(0, payload).expect("flagless");
+        assert_eq!(none, RequestMeta::default());
+        assert_eq!(all.len(), payload.len());
+    }
+
+    #[test]
+    fn truncated_tenant_prefix_rejected() {
+        for len in 0..4usize {
+            let short = vec![0u8; len];
+            assert_eq!(
+                split_prefixes(FLAG_TENANT, &short).unwrap_err().code,
+                ErrorCode::Malformed,
+                "len {}",
+                len
+            );
+        }
+        // Deadline present but tenant prefix truncated.
+        let mut buf = vec![0u8; 8];
+        buf.extend_from_slice(&[1, 2]);
+        assert_eq!(
+            split_prefixes(FLAG_DEADLINE | FLAG_TENANT, &buf)
+                .unwrap_err()
+                .code,
+            ErrorCode::Malformed
+        );
+    }
+
+    #[test]
+    fn tenant_stats_round_trip() {
+        let stats = WireStats {
+            queue_depth: 64,
+            threads: 4,
+            enqueued: 500,
+            completed: 490,
+            arrival_batches: 60,
+            dispatches: 70,
+            max_queue_depth: 33,
+            busy_ns: 987_654,
+        };
+        let rows = vec![
+            WireTenantStats {
+                tenant: 0,
+                admitted: 300,
+                completed: 295,
+                quota_shed: 12,
+                deadline_shed: 5,
+            },
+            WireTenantStats {
+                tenant: 1,
+                admitted: 190,
+                completed: 190,
+                quota_shed: 0,
+                deadline_shed: 0,
+            },
+        ];
+        let frame = encode_stats_result_tenants(17, &stats, &rows);
+        let (header, payload) = split(&frame);
+        assert_eq!(header.flags, FLAG_TENANT);
+        match decode_response_flagged(header.flags, Opcode::StatsResult, payload)
+            .expect("decodes")
+        {
+            Response::TenantStats {
+                stats: s,
+                tenants: t,
+            } => {
+                assert_eq!(s, stats);
+                assert_eq!(t, rows);
+            }
+            other => panic!("unexpected response {:?}", other),
+        }
+        // A flagless decode of a plain stats frame still yields Stats.
+        let plain = encode_stats_result(18, &stats);
+        let (header, payload) = split(&plain);
+        assert_eq!(header.flags, 0);
+        assert!(matches!(
+            decode_response_flagged(0, Opcode::StatsResult, payload),
+            Ok(Response::Stats(_))
+        ));
+    }
+
+    #[test]
+    fn error_retry_hint_round_trips_structurally() {
+        let frame = encode_error_retry(9, ErrorCode::Quota, 1500, "tenant 2 at quota");
+        let (header, payload) = split(&frame);
+        assert_eq!(header.flags, FLAG_RETRY);
+        match decode_response_flagged(header.flags, Opcode::Error, payload).expect("decodes") {
+            Response::Error(e) => {
+                assert_eq!(e.code, ErrorCode::Quota);
+                assert_eq!(e.retry_after_us, Some(1500));
+                assert_eq!(e.message, "tenant 2 at quota");
+            }
+            other => panic!("unexpected response {:?}", other),
+        }
+        // Unflagged errors decode with no hint, bytes unchanged.
+        let plain = encode_error(10, ErrorCode::Busy, "queue full");
+        let (header, payload) = split(&plain);
+        match decode_response_flagged(header.flags, Opcode::Error, payload).expect("decodes") {
+            Response::Error(e) => {
+                assert_eq!(e.code, ErrorCode::Busy);
+                assert_eq!(e.retry_after_us, None);
+            }
+            other => panic!("unexpected response {:?}", other),
         }
     }
 

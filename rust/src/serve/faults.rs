@@ -25,7 +25,8 @@
 //!
 //! The sites themselves live in the code they perturb:
 //! `runtime/parallel.rs` (worker panic, latch-wake delay),
-//! `serve/queue.rs` (dispatcher stall), and `serve/net.rs` (socket
+//! `serve/queue.rs` (dispatcher stall, quota-admission reject,
+//! weighted-fair starvation stall), and `serve/net.rs` (socket
 //! read/write errors, truncated frames, connection drops, slow-client
 //! writer stalls).
 
@@ -76,12 +77,23 @@ pub enum FaultSite {
     /// queues plus write timeouts must evict the connection instead of
     /// wedging the reader.
     SlowClientWriter,
+    /// The QoS admission check rejects a request as if its tenant were at
+    /// quota, even though it is not — models a mis-sized or racing quota.
+    /// The submitter sees the typed quota error exactly as a real shed;
+    /// nothing enters the queue and no compute runs.
+    QuotaAdmissionReject,
+    /// The weighted-fair dispatcher stalls for [`FaultPoint::delay`] before
+    /// selecting the next deficit-round-robin batch — models a scheduling
+    /// hiccup that delays every backlogged tenant equally. Requests queue
+    /// behind backpressure; deadline-bearing requests may be shed, but no
+    /// tenant is starved and nothing hangs.
+    StarvationStall,
 }
 
 impl FaultSite {
     /// Every instrumented site, in a stable order (used by seeded plans and
     /// the bench chaos block).
-    pub const ALL: [FaultSite; 8] = [
+    pub const ALL: [FaultSite; 10] = [
         FaultSite::WorkerPanic,
         FaultSite::DispatcherStall,
         FaultSite::LatchWakeDelay,
@@ -90,13 +102,20 @@ impl FaultSite {
         FaultSite::TruncatedFrame,
         FaultSite::ConnDropMidBatch,
         FaultSite::SlowClientWriter,
+        FaultSite::QuotaAdmissionReject,
+        FaultSite::StarvationStall,
     ];
 
     /// Sites exercised by the in-process chaos scenario (no socket).
-    pub const IN_PROCESS: [FaultSite; 3] = [
+    /// Quota rejects arm at every admission check; starvation stalls arm
+    /// only when a QoS policy puts the dispatcher in weighted-fair mode
+    /// (the chaos bench therefore always runs with a tenant policy).
+    pub const IN_PROCESS: [FaultSite; 5] = [
         FaultSite::WorkerPanic,
         FaultSite::DispatcherStall,
         FaultSite::LatchWakeDelay,
+        FaultSite::QuotaAdmissionReject,
+        FaultSite::StarvationStall,
     ];
 
     /// Stable snake_case label (JSON keys in the bench chaos block).
@@ -110,6 +129,8 @@ impl FaultSite {
             FaultSite::TruncatedFrame => "truncated_frame",
             FaultSite::ConnDropMidBatch => "conn_drop_mid_batch",
             FaultSite::SlowClientWriter => "slow_client_writer",
+            FaultSite::QuotaAdmissionReject => "quota_admission_reject",
+            FaultSite::StarvationStall => "starvation_stall",
         }
     }
 
@@ -122,7 +143,10 @@ impl FaultSite {
     pub fn is_stall(self) -> bool {
         matches!(
             self,
-            FaultSite::DispatcherStall | FaultSite::LatchWakeDelay | FaultSite::SlowClientWriter
+            FaultSite::DispatcherStall
+                | FaultSite::LatchWakeDelay
+                | FaultSite::SlowClientWriter
+                | FaultSite::StarvationStall
         )
     }
 }
@@ -210,8 +234,8 @@ impl FaultPlan {
 #[derive(Debug)]
 pub struct FaultInjector {
     plan: FaultPlan,
-    arrivals: [AtomicU64; 8],
-    fired: [AtomicU64; 8],
+    arrivals: [AtomicU64; 10],
+    fired: [AtomicU64; 10],
 }
 
 impl FaultInjector {

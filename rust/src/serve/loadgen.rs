@@ -43,7 +43,7 @@ use crate::util::stats::percentile_sorted;
 use super::codec::{self, ErrorCode, Opcode, Response, HEADER_LEN};
 use super::faults::{FaultInjector, FaultSite};
 use super::net::{is_timeout, WireClient};
-use super::queue::AsyncDotService;
+use super::queue::{AsyncDotService, TrySubmit};
 use super::scheduler::ExecPath;
 use super::{DotService, SharedInput};
 
@@ -974,6 +974,264 @@ pub fn run_load_wire_bounded(
     })
 }
 
+/// One tenant's row in a [`TenantLoadReport`]: the policy attributes it
+/// ran under, full shed accounting (every offered request lands in
+/// exactly one of admitted / quota-shed / busy-shed, and every admitted
+/// one in completed-ok / deadline-shed), and latency percentiles over its
+/// *completed* requests only — sheds are accounted, not averaged in.
+#[derive(Clone, Debug)]
+pub struct TenantLoadRow {
+    /// Tenant id (index into the policy's classes).
+    pub tenant: u32,
+    /// Display name from the policy.
+    pub name: String,
+    /// Weighted-fair share weight.
+    pub weight: u32,
+    /// Per-tenant queue quota (`None` = unbounded).
+    pub quota: Option<usize>,
+    /// Requests this tenant's stream offered.
+    pub offered: usize,
+    /// Requests admitted past quota + depth checks.
+    pub admitted: usize,
+    /// Admitted requests that completed with a result.
+    pub completed_ok: usize,
+    /// Requests refused at admission with the typed quota outcome.
+    pub quota_shed: usize,
+    /// Requests refused because the shared queue was at depth (global
+    /// backpressure, not this tenant's quota).
+    pub busy_shed: usize,
+    /// Admitted requests shed in-queue on deadline expiry.
+    pub deadline_shed: usize,
+    /// Median completed-request latency, ns (NaN if none completed).
+    pub latency_p50_ns: f64,
+    /// 99th-percentile completed-request latency, ns.
+    pub latency_p99_ns: f64,
+    /// Worst completed-request latency, ns.
+    pub latency_max_ns: f64,
+}
+
+/// Results of one multi-tenant open-loop run ([`run_load_tenants`]): one
+/// accounting + latency row per tenant class, in class order.
+#[derive(Clone, Debug)]
+pub struct TenantLoadReport {
+    /// Requests offered across all tenants.
+    pub requests: usize,
+    /// End-to-end span of the run, ns.
+    pub elapsed_ns: f64,
+    /// Sum of completed responses in submission order — only comparable
+    /// across runs when nothing was shed.
+    pub checksum: f64,
+    /// One row per tenant class, in policy order.
+    pub rows: Vec<TenantLoadRow>,
+}
+
+/// Drive a QoS-configured [`AsyncDotService`] with per-tenant open-loop
+/// streams merged onto one arrival clock and account every outcome per
+/// tenant. `offered[i]` is tenant `i`'s request count; the merged stream
+/// interleaves tenants deterministically in proportion to their remaining
+/// counts (a saturating tenant therefore dominates arrivals — the
+/// noisy-neighbor shape — while a light one still arrives throughout the
+/// run).
+///
+/// Admission is non-blocking: a quota refusal or queue-full BUSY sheds
+/// that request on the spot (bucketed in its tenant's row) and the
+/// generator paces on, so a heavy tenant's backpressure can never delay a
+/// light tenant's arrivals — the measurement the noisy-neighbor gate
+/// depends on.
+#[allow(clippy::too_many_arguments)]
+pub fn run_load_tenants(
+    service: &AsyncDotService,
+    mix: &[MixEntry],
+    operands: &OperandPool,
+    offered: &[usize],
+    rate_rps: f64,
+    deadline: Option<Duration>,
+    seed: u64,
+    watchdog: Duration,
+) -> Result<TenantLoadReport, BackendError> {
+    if mix.is_empty() {
+        return Err(BackendError::Runtime("empty request mixture".to_string()));
+    }
+    let requests: usize = offered.iter().sum();
+    if requests == 0 || offered.is_empty() {
+        return Err(BackendError::Runtime("need at least one request".to_string()));
+    }
+    if rate_rps <= 0.0 || !rate_rps.is_finite() {
+        return Err(BackendError::Runtime("open-loop rate must be > 0".to_string()));
+    }
+    let policy = service.qos().cloned();
+    let gap_ns = 1e9 / rate_rps;
+    let sizes = sample_sizes(mix, requests, seed);
+
+    // Deterministic proportional interleave: draw each arrival's tenant
+    // weighted by its remaining request count.
+    let mut remaining: Vec<usize> = offered.to_vec();
+    let mut left = requests;
+    let mut rng = Rng::new(seed ^ 0x7E4A47);
+    let mut order = Vec::with_capacity(requests);
+    while left > 0 {
+        let mut t = (rng.f64() * left as f64) as usize;
+        t = t.min(left - 1);
+        let mut tenant = remaining.len() - 1;
+        for (i, &r) in remaining.iter().enumerate() {
+            if t < r {
+                tenant = i;
+                break;
+            }
+            t -= r;
+        }
+        remaining[tenant] -= 1;
+        left -= 1;
+        order.push(tenant as u32);
+    }
+
+    let mut rows: Vec<TenantLoadRow> = (0..offered.len())
+        .map(|i| TenantLoadRow {
+            tenant: i as u32,
+            name: policy
+                .as_ref()
+                .map_or_else(|| format!("t{i}"), |p| p.name(i as u32)),
+            weight: policy.as_ref().map_or(1, |p| p.weight(i as u32)),
+            quota: policy.as_ref().and_then(|p| p.classes().get(i).and_then(|c| c.quota)),
+            offered: offered[i],
+            admitted: 0,
+            completed_ok: 0,
+            quota_shed: 0,
+            busy_shed: 0,
+            deadline_shed: 0,
+            latency_p50_ns: f64::NAN,
+            latency_p99_ns: f64::NAN,
+            latency_max_ns: f64::NAN,
+        })
+        .collect();
+
+    let epoch = Instant::now();
+    let hard_deadline = epoch + watchdog;
+    let mut handles = Vec::with_capacity(requests);
+    for (k, (&n, &tenant)) in sizes.iter().zip(order.iter()).enumerate() {
+        let target = epoch + Duration::from_nanos((k as f64 * gap_ns) as u64);
+        pace_until(target);
+        match service.try_submit_with_opts(operands.shared_dot(n), target, deadline, tenant)? {
+            TrySubmit::Accepted(h) => {
+                rows[tenant as usize].admitted += 1;
+                handles.push((tenant, h));
+            }
+            TrySubmit::Quota => rows[tenant as usize].quota_shed += 1,
+            TrySubmit::Busy => rows[tenant as usize].busy_shed += 1,
+        }
+    }
+
+    let mut latencies: Vec<Vec<f64>> = vec![Vec::new(); offered.len()];
+    let mut checksum = 0.0;
+    for (tenant, handle) in handles {
+        let remaining = hard_deadline.saturating_duration_since(Instant::now());
+        match handle.wait_timed_for(remaining) {
+            Some(Ok((r, latency_ns))) => {
+                rows[tenant as usize].completed_ok += 1;
+                latencies[tenant as usize].push(latency_ns);
+                checksum += r.value;
+            }
+            Some(Err(BackendError::DeadlineExceeded { .. })) => {
+                rows[tenant as usize].deadline_shed += 1;
+            }
+            Some(Err(e)) => return Err(e),
+            None => {
+                return Err(BackendError::Runtime(format!(
+                    "tenant-load watchdog: request unresolved {watchdog:?} into the run \
+                     — the pipeline is wedged"
+                )))
+            }
+        }
+    }
+    let elapsed_ns = epoch.elapsed().as_nanos() as f64;
+    for (row, lat) in rows.iter_mut().zip(latencies) {
+        let (sorted, _) = finite_sorted(lat);
+        row.latency_p50_ns = pct_or_nan(&sorted, 50.0);
+        row.latency_p99_ns = pct_or_nan(&sorted, 99.0);
+        row.latency_max_ns = sorted.last().copied().unwrap_or(f64::NAN);
+    }
+    Ok(TenantLoadReport { requests, elapsed_ns, checksum, rows })
+}
+
+/// Aggregates of one scheduling-interleaving run
+/// ([`run_interleaving_checksum`]): the bit-parity anchors the gate
+/// compares across FIFO, weighted-fair and reversed-priority services.
+#[derive(Clone, Copy, Debug)]
+pub struct InterleavingReport {
+    /// Requests completed (always the full stream — nothing sheds).
+    pub requests: usize,
+    /// Requests served on the fused path.
+    pub fused: u64,
+    /// Requests served on the sharded path.
+    pub sharded: u64,
+    /// Sum of response values folded in submission order — bit-identical
+    /// across any scheduling order at fixed `T` and seed.
+    pub checksum: f64,
+}
+
+/// Run the deterministic request stream through `service` as fast as the
+/// queue admits (blocking submission — nothing is shed) and fold the
+/// responses in submission order. Requests cycle round-robin over
+/// `tenants` tenant ids and every third one carries a far-future deadline
+/// so it rides the urgent lane — together these exercise every scheduling
+/// decision (FIFO vs weighted-fair drain order, urgent promotion, DRR
+/// carryover) without ever forking the numerics.
+///
+/// The scheduling-independence gate: run this against a FIFO service, a
+/// weighted-fair one, and one with the priorities reversed — same `T`,
+/// seed and operands — and the three checksums (and fused/sharded splits)
+/// must be bit-identical, because batch composition is a pure function of
+/// request lengths and scheduling only permutes *when* requests dispatch.
+pub fn run_interleaving_checksum(
+    service: &AsyncDotService,
+    mix: &[MixEntry],
+    operands: &OperandPool,
+    requests: usize,
+    tenants: u32,
+    seed: u64,
+) -> Result<InterleavingReport, BackendError> {
+    if mix.is_empty() {
+        return Err(BackendError::Runtime("empty request mixture".to_string()));
+    }
+    if requests == 0 {
+        return Err(BackendError::Runtime("need at least one request".to_string()));
+    }
+    let tenants = tenants.max(1);
+    let sizes = sample_sizes(mix, requests, seed);
+    // Far past any plausible run length: routes via the urgent lane
+    // without ever actually shedding.
+    let urgent = Some(Duration::from_secs(3600));
+    let mut handles = Vec::with_capacity(requests);
+    for (k, &n) in sizes.iter().enumerate() {
+        let tenant = (k as u32) % tenants;
+        let deadline = if k % 3 == 0 { urgent } else { None };
+        let h =
+            service.submit_with_opts(operands.shared_dot(n), Instant::now(), deadline, tenant)?;
+        handles.push(h);
+    }
+    let (mut fused, mut sharded) = (0u64, 0u64);
+    let mut checksum = 0.0;
+    for handle in handles {
+        match handle.wait_timed_for(Duration::from_secs(120)) {
+            Some(done) => {
+                let (r, _) = done?;
+                checksum += r.value;
+                match r.path {
+                    ExecPath::Fused => fused += 1,
+                    ExecPath::Sharded => sharded += 1,
+                }
+            }
+            None => {
+                return Err(BackendError::Runtime(
+                    "interleaving run: request unresolved after 120s — pipeline wedged"
+                        .to_string(),
+                ))
+            }
+        }
+    }
+    Ok(InterleavingReport { requests, fused, sharded, checksum })
+}
+
 /// Outcome of one chaos run ([`run_load_chaos`]): every submitted request
 /// classified into exactly one bucket, the injector's per-site accounting,
 /// and the post-chaos recovery probe. The structural invariant the chaos
@@ -987,6 +1245,12 @@ pub struct ChaosReport {
     pub completed_ok: usize,
     /// Requests shed with the typed deadline error before any compute.
     pub deadline_shed: usize,
+    /// Requests shed at admission with the typed quota outcome — a
+    /// [`TrySubmit::Quota`] refusal (including injected
+    /// quota-admission-reject faults) or a
+    /// [`BackendError::QuotaExceeded`] resolution. Never entered the
+    /// pipeline; disjoint from every other bucket.
+    pub quota_shed: usize,
     /// Requests failed by an (injected) worker panic.
     pub worker_panics: usize,
     /// Requests that resolved to any other typed error.
@@ -1014,6 +1278,12 @@ pub struct ChaosReport {
 /// requests have no result — so unlike [`run_load_async`] this returns
 /// accounting, not throughput: the properties it measures are
 /// "no request hangs" and "the pipeline recovers".
+///
+/// On a QoS-configured service the stream cycles requests round-robin
+/// across the policy's tenant classes, so the tenant-facing fault sites
+/// (quota-admission reject, weighted-fair starvation stall) are
+/// reachable; quota refusals land in the [`ChaosReport::quota_shed`]
+/// bucket rather than failing the run.
 #[allow(clippy::too_many_arguments)]
 pub fn run_load_chaos(
     service: &AsyncDotService,
@@ -1037,20 +1307,33 @@ pub fn run_load_chaos(
     }
     let gap_ns = 1e9 / rate_rps;
     let sizes = sample_sizes(mix, requests, seed);
+    let tenant_cycle = service.qos().map_or(1, |q| q.classes().len().max(1));
 
     let epoch = Instant::now();
     let hard_deadline = epoch + watchdog;
+    let mut quota_shed = 0usize;
     let mut handles = Vec::with_capacity(requests);
     for (k, &n) in sizes.iter().enumerate() {
         let target = epoch + Duration::from_nanos((k as f64 * gap_ns) as u64);
         pace_until(target);
+        let tenant = (k % tenant_cycle) as u32;
         // Non-blocking admission with a watchdog on the retry loop: a
         // wedged dispatcher turns queue-full into a diagnostic failure
-        // instead of blocking the generator forever.
-        let handle = loop {
-            match service.try_submit_with_deadline(operands.shared_dot(n), target, deadline)? {
-                super::queue::TrySubmit::Accepted(h) => break h,
-                super::queue::TrySubmit::Busy => {
+        // instead of blocking the generator forever. A quota refusal is
+        // terminal for the request (retrying immediately cannot help), so
+        // it is bucketed and the generator paces on.
+        let mut admitted = None;
+        loop {
+            match service.try_submit_with_opts(operands.shared_dot(n), target, deadline, tenant)? {
+                TrySubmit::Accepted(h) => {
+                    admitted = Some(h);
+                    break;
+                }
+                TrySubmit::Quota => {
+                    quota_shed += 1;
+                    break;
+                }
+                TrySubmit::Busy => {
                     if Instant::now() >= hard_deadline {
                         return Err(BackendError::Runtime(format!(
                             "chaos watchdog: queue refused admission for {watchdog:?} \
@@ -1060,8 +1343,10 @@ pub fn run_load_chaos(
                     std::thread::sleep(Duration::from_micros(50));
                 }
             }
-        };
-        handles.push(handle);
+        }
+        if let Some(h) = admitted {
+            handles.push(h);
+        }
     }
 
     let (mut completed_ok, mut deadline_shed) = (0usize, 0usize);
@@ -1071,6 +1356,7 @@ pub fn run_load_chaos(
         match handle.wait_timed_for(remaining) {
             Some(Ok(_)) => completed_ok += 1,
             Some(Err(BackendError::DeadlineExceeded { .. })) => deadline_shed += 1,
+            Some(Err(BackendError::QuotaExceeded { .. })) => quota_shed += 1,
             Some(Err(BackendError::Runtime(msg))) if msg.contains("panic") => worker_panics += 1,
             Some(Err(_)) => other_errors += 1,
             None => hung += 1,
@@ -1103,6 +1389,7 @@ pub fn run_load_chaos(
         requests,
         completed_ok,
         deadline_shed,
+        quota_shed,
         worker_panics,
         other_errors,
         hung,
@@ -1293,7 +1580,12 @@ mod tests {
         .unwrap();
         assert_eq!(r.requests, 48);
         assert_eq!(
-            r.completed_ok + r.deadline_shed + r.worker_panics + r.other_errors + r.hung,
+            r.completed_ok
+                + r.deadline_shed
+                + r.quota_shed
+                + r.worker_panics
+                + r.other_errors
+                + r.hung,
             r.requests,
             "every request must land in exactly one bucket: {r:?}"
         );
@@ -1328,6 +1620,150 @@ mod tests {
         let got = run_load_async(&idle, &mix, &idle_ops, 32, 1e6, 7).unwrap();
         assert_eq!(got.load.checksum.to_bits(), want.load.checksum.to_bits());
         assert_eq!(injector.total_fired(), 0);
+    }
+
+    #[test]
+    fn chaos_on_qos_service_buckets_quota_sheds_and_recovers() {
+        use crate::serve::faults::FaultPlan;
+        use crate::serve::QosPolicy;
+        // Tenant-facing sites on a weighted-fair service: the 3rd and 5th
+        // admissions are rejected as (injected) quota sheds, and the very
+        // first weighted-fair drain hits a starvation stall. Every request
+        // must still resolve exactly once.
+        let plan = FaultPlan::none()
+            .with(FaultSite::QuotaAdmissionReject, 3)
+            .with(FaultSite::QuotaAdmissionReject, 5)
+            .with_stall(FaultSite::StarvationStall, 1, Duration::from_millis(10));
+        let injector = FaultInjector::new(plan);
+        let qos = QosPolicy::parse("a:3,b:1").unwrap();
+        let asy = AsyncDotService::new_with_qos(
+            tiny_cfg(2, 4096),
+            AsyncOptions::default(),
+            Some(qos),
+            Some(Arc::clone(&injector)),
+        )
+        .unwrap();
+        let mix = vec![MixEntry { n: 256, weight: 1.0 }];
+        let clean = DotService::new(tiny_cfg(2, 4096)).unwrap();
+        let ops = OperandPool::generate(&mix, 11, clean.pool());
+        let r = run_load_chaos(
+            &asy,
+            &injector,
+            &mix,
+            &ops,
+            32,
+            1e5,
+            None,
+            11,
+            Duration::from_secs(60),
+        )
+        .unwrap();
+        assert_eq!(
+            r.completed_ok
+                + r.deadline_shed
+                + r.quota_shed
+                + r.worker_panics
+                + r.other_errors
+                + r.hung,
+            r.requests,
+            "every request must land in exactly one bucket: {r:?}"
+        );
+        assert_eq!(r.hung, 0, "no request may hang under tenant faults: {r:?}");
+        assert_eq!(r.quota_shed, 2, "both injected quota rejects must shed: {r:?}");
+        assert_eq!(injector.fired(FaultSite::QuotaAdmissionReject), 2);
+        assert_eq!(
+            injector.fired(FaultSite::StarvationStall),
+            1,
+            "weighted-fair drain must arm the starvation-stall site: {r:?}"
+        );
+        assert!(r.recovery_verified, "post-chaos probe must be bit-identical: {r:?}");
+        // The service's own per-tenant counters agree with the buckets.
+        let shed: u64 = asy.tenant_stats().iter().map(|t| t.quota_shed).sum();
+        assert_eq!(shed, 2);
+    }
+
+    #[test]
+    fn tenant_load_reports_per_tenant_rows_and_quota_sheds() {
+        use crate::serve::QosPolicy;
+        // Tenant b has quota 0: every one of its requests must shed as
+        // QUOTA (never BUSY), while tenant a's full stream completes.
+        let qos = QosPolicy::parse("a:3:64,b:1:0").unwrap();
+        let asy = AsyncDotService::new_with_qos(
+            tiny_cfg(2, 4096),
+            AsyncOptions::default(),
+            Some(qos),
+            None,
+        )
+        .unwrap();
+        let mix = vec![MixEntry { n: 256, weight: 1.0 }];
+        let ops = OperandPool::generate(&mix, 13, asy.service().pool());
+        let r = run_load_tenants(
+            &asy,
+            &mix,
+            &ops,
+            &[24, 8],
+            1e5,
+            None,
+            13,
+            Duration::from_secs(60),
+        )
+        .unwrap();
+        assert_eq!(r.requests, 32);
+        assert_eq!(r.rows.len(), 2);
+        let a = &r.rows[0];
+        assert_eq!((a.name.as_str(), a.weight, a.quota), ("a", 3, Some(64)));
+        assert_eq!(a.offered, 24);
+        assert_eq!(a.admitted, 24, "{a:?}");
+        assert_eq!(a.completed_ok, 24, "{a:?}");
+        assert_eq!((a.quota_shed, a.busy_shed, a.deadline_shed), (0, 0, 0));
+        assert!(a.latency_p50_ns > 0.0 && a.latency_p50_ns <= a.latency_p99_ns);
+        assert!(a.latency_p99_ns <= a.latency_max_ns);
+        let b = &r.rows[1];
+        assert_eq!((b.name.as_str(), b.weight, b.quota), ("b", 1, Some(0)));
+        assert_eq!(b.offered, 8);
+        assert_eq!(b.quota_shed, 8, "quota-0 tenant sheds everything: {b:?}");
+        assert_eq!((b.admitted, b.completed_ok, b.busy_shed), (0, 0, 0));
+        assert!(b.latency_p50_ns.is_nan(), "no completions, no percentiles");
+        // Per-request accounting on the service agrees with the rows.
+        let stats = asy.tenant_stats();
+        let sa = stats.iter().find(|t| t.tenant == 0).unwrap();
+        let sb = stats.iter().find(|t| t.tenant == 1).unwrap();
+        assert_eq!((sa.admitted, sa.quota_shed), (24, 0));
+        assert_eq!((sb.admitted, sb.quota_shed), (0, 8));
+    }
+
+    #[test]
+    fn interleaving_checksums_are_bit_identical_across_schedules() {
+        use crate::serve::QosPolicy;
+        let mix = vec![
+            MixEntry { n: 256, weight: 0.8 },
+            MixEntry { n: 8192, weight: 0.2 },
+        ];
+        let policies: Vec<Option<QosPolicy>> = vec![
+            None,
+            Some(QosPolicy::parse("a:3,b:1").unwrap()),
+            Some(QosPolicy::parse("a:1,b:3").unwrap()),
+        ];
+        let mut reports = Vec::new();
+        for qos in policies {
+            let asy =
+                AsyncDotService::new_with_qos(tiny_cfg(2, 4096), AsyncOptions::default(), qos, None)
+                    .unwrap();
+            let ops = OperandPool::generate(&mix, 7, asy.service().pool());
+            reports.push(run_interleaving_checksum(&asy, &mix, &ops, 64, 2, 7).unwrap());
+        }
+        let fifo = &reports[0];
+        assert_eq!(fifo.requests, 64);
+        assert_eq!(fifo.fused + fifo.sharded, 64);
+        assert!(fifo.sharded > 0 && fifo.fused > 0);
+        for r in &reports[1..] {
+            assert_eq!(
+                r.checksum.to_bits(),
+                fifo.checksum.to_bits(),
+                "scheduling must never fork the numerics: {reports:?}"
+            );
+            assert_eq!((r.fused, r.sharded), (fifo.fused, fifo.sharded));
+        }
     }
 
     #[test]

@@ -93,16 +93,20 @@ use crate::runtime::backend::{BackendError, ImplStyle, KernelClass, KernelInput,
 use crate::runtime::hostbench::freq_ghz_with_source;
 use crate::runtime::parallel::{compensated_tree_reduce, ThreadPool, CACHELINE_F64};
 
-pub use codec::{ErrorCode, WireError, WireResult, WireStats};
+pub use codec::{ErrorCode, RequestMeta, WireError, WireResult, WireStats, WireTenantStats};
 pub use crossover::{calibrate, model_crossover, model_p1_gups, service_crossover, Calibration};
 pub use faults::{FaultInjector, FaultPlan, FaultPoint, FaultSite};
 pub use loadgen::{
-    default_mix, parse_mix, run_load, run_load_async, run_load_chaos, run_load_wire,
-    run_load_with, AsyncLoadReport, ChaosReport, LoadMode, LoadReport, MixEntry, OperandPool,
-    WireLoadReport,
+    default_mix, parse_mix, run_interleaving_checksum, run_load, run_load_async, run_load_chaos,
+    run_load_tenants, run_load_wire, run_load_with, AsyncLoadReport, ChaosReport,
+    InterleavingReport, LoadMode, LoadReport, MixEntry, OperandPool, TenantLoadReport,
+    TenantLoadRow, WireLoadReport,
 };
 pub use net::{NetOptions, NetServer, WireCallError, WireClient};
-pub use queue::{AsyncDotService, AsyncOptions, AsyncServeStats, ResponseHandle, TrySubmit};
+pub use queue::{
+    AsyncDotService, AsyncOptions, AsyncServeStats, QosPolicy, ResponseHandle, TenantClass,
+    TenantStats, TrySubmit,
+};
 pub use scheduler::{BatchScheduler, DispatchPlan, ExecPath};
 
 /// How the service picks its batch-vs-shard crossover.

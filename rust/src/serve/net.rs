@@ -25,7 +25,11 @@
 //! queue becomes a `BUSY` error frame on the wire and nothing is enqueued.
 //! `BATCH` submissions use the blocking path instead: a full queue stalls
 //! the connection's reader, which stops draining the socket, which is TCP
-//! backpressure to the client.
+//! backpressure to the client. With a QoS policy ([`NetOptions::qos`]), a
+//! tenant at its per-tenant quota draws the typed `QUOTA` frame instead —
+//! distinct from `BUSY` because retrying cannot help until that tenant's
+//! own queued work drains (PROTOCOL.md §4.11); rev-1.2 clients get a
+//! retry-after hint on both.
 //!
 //! **Determinism**: the codec transports operands and results as IEEE-754
 //! bit patterns and the server feeds the *same* `AsyncDotService` pipeline
@@ -44,10 +48,11 @@ use std::time::{Duration, Instant};
 use crate::runtime::backend::BackendError;
 
 use super::codec::{
-    self, ErrorCode, Opcode, Request, Response, WireError, WireResult, WireStats, HEADER_LEN,
+    self, ErrorCode, Opcode, Request, RequestMeta, Response, WireError, WireResult, WireStats,
+    WireTenantStats, HEADER_LEN,
 };
 use super::faults::{FaultInjector, FaultSite};
-use super::queue::{AsyncDotService, AsyncOptions, ResponseHandle, TrySubmit};
+use super::queue::{AsyncDotService, AsyncOptions, QosPolicy, ResponseHandle, TrySubmit};
 use super::{ServeConfig, ServeResponse, SharedInput};
 
 /// How often the writer half re-polls outstanding tickets while waiting
@@ -55,14 +60,22 @@ use super::{ServeConfig, ServeResponse, SharedInput};
 /// light load without spinning.
 const WRITER_POLL: Duration = Duration::from_micros(50);
 
-/// How long [`WireClient`] sleeps between BUSY retries (PROTOCOL.md §5:
-/// BUSY means "nothing enqueued, retry later").
-const BUSY_RETRY_PAUSE: Duration = Duration::from_micros(100);
+/// First pause of the [`WireClient`] BUSY backoff (PROTOCOL.md §5: BUSY
+/// means "nothing enqueued, retry later"). Doubles per consecutive BUSY
+/// up to [`BUSY_BACKOFF_CAP`]; a server-provided retry-after hint
+/// overrides the schedule.
+const BUSY_BACKOFF_BASE: Duration = Duration::from_micros(50);
 
-/// Retry bound for [`WireClient`] before a BUSY response is surfaced to
-/// the caller as an error (a server that is BUSY for this many retries is
-/// not draining at all).
-const BUSY_RETRY_LIMIT: u64 = 1 << 20;
+/// Cap on a single BUSY backoff pause: even a long-saturated server is
+/// re-probed a few hundred times per second, not hot-spun against.
+const BUSY_BACKOFF_CAP: Duration = Duration::from_millis(5);
+
+/// Default wall-clock budget for BUSY retries before the error surfaces
+/// to the caller (override per client via
+/// [`WireClient::set_busy_retry_budget`]). The old fixed-pause scheme
+/// (100 µs × 2^20 retries ≈ 105 s of hot-spinning) is gone: the budget
+/// bounds total waiting in wall time, independent of the retry count.
+const BUSY_RETRY_BUDGET: Duration = Duration::from_secs(2);
 
 fn io_runtime(context: &str, e: std::io::Error) -> BackendError {
     BackendError::Runtime(format!("{context}: {e}"))
@@ -95,6 +108,11 @@ pub struct NetOptions {
     /// ([`FaultSite::SocketReadError`] and friends). `None` in
     /// production: the sites cost one branch on a null pointer.
     pub faults: Option<Arc<FaultInjector>>,
+    /// Multi-tenant QoS policy for the inner pipeline: weighted-fair
+    /// scheduling plus per-tenant quotas keyed by the wire tenant field
+    /// (PROTOCOL.md §2.5). `None` (default) serves single-class FIFO,
+    /// exactly as revisions 1.0/1.1 did.
+    pub qos: Option<QosPolicy>,
 }
 
 /// Default reader → writer queue bound when [`NetOptions::writer_queue`]
@@ -168,9 +186,10 @@ impl NetServer {
         opts: AsyncOptions,
         net: NetOptions,
     ) -> Result<Self, BackendError> {
-        let service = Arc::new(AsyncDotService::new_with_faults(
+        let service = Arc::new(AsyncDotService::new_with_qos(
             cfg,
             opts,
+            net.qos.clone(),
             net.faults.clone(),
         )?);
         let listener = TcpListener::bind(addr).map_err(|e| io_runtime(&format!("bind {addr}"), e))?;
@@ -376,6 +395,47 @@ fn wire_stats(service: &AsyncDotService) -> WireStats {
     }
 }
 
+/// Snapshot the per-tenant accounting rows for the rev-1.2 tenant stats
+/// extension (PROTOCOL.md §3.7).
+fn wire_tenant_stats(service: &AsyncDotService) -> Vec<WireTenantStats> {
+    service
+        .tenant_stats()
+        .iter()
+        .map(|t| WireTenantStats {
+            tenant: t.tenant,
+            admitted: t.admitted,
+            completed: t.completed,
+            quota_shed: t.quota_shed,
+            deadline_shed: t.deadline_shed,
+        })
+        .collect()
+}
+
+/// The retry-after hint the server attaches to BUSY/QUOTA frames for
+/// rev-1.2 clients: one batching window — the soonest the dispatcher can
+/// plausibly have drained capacity.
+fn retry_hint_us(service: &AsyncDotService) -> u32 {
+    (service.options().batch_window.as_micros() as u32).max(100)
+}
+
+/// Encode a BUSY/QUOTA shed frame. Clients that demonstrated rev-1.2
+/// support (the request carried a 1.2 prefix) get the retry-after hint;
+/// rev-1.0/1.1 clients get the plain error frame they already understand
+/// (PROTOCOL.md §6, version negotiation by request).
+fn shed_frame(
+    service: &AsyncDotService,
+    id: u64,
+    code: ErrorCode,
+    message: &str,
+    rev12: bool,
+) -> Vec<u8> {
+    if rev12 {
+        codec::encode_error_retry(id, code, retry_hint_us(service), message)
+    } else {
+        codec::encode_error(id, code, message)
+    }
+}
+
 /// The reader half: frame decode loop feeding the service and the writer.
 /// Exits on clean EOF, fatal protocol errors (PROTOCOL.md §4), I/O
 /// failure, idle reaping, or service shutdown; joins its writer before
@@ -498,9 +558,9 @@ fn reader_loop(
             }
             continue;
         };
-        // Strip the optional deadline prefix (PROTOCOL.md §2.4) before
-        // the opcode-specific payload decodes.
-        let (deadline_us, body) = match codec::split_deadline(header.flags, &payload) {
+        // Strip the optional deadline and tenant prefixes (PROTOCOL.md
+        // §2.4/§2.5) before the opcode-specific payload decodes.
+        let (meta, body) = match codec::split_prefixes(header.flags, &payload) {
             Ok(split) => split,
             Err(e) => {
                 if !send_error(tx, header.request_id, e.code, &e.message) {
@@ -509,7 +569,6 @@ fn reader_loop(
                 continue;
             }
         };
-        let deadline = deadline_us.map(Duration::from_micros);
         let request = match codec::decode_request(opcode, body) {
             Ok(r) => r,
             Err(e) => {
@@ -522,34 +581,66 @@ fn reader_loop(
                 continue;
             }
         };
-        if !handle_request(service, tx, header.request_id, request, deadline, net) {
+        if !handle_request(service, tx, header.request_id, request, meta, net) {
             return;
         }
     }
 }
 
-/// Admit one decoded request; `false` ends the connection.
+/// Admit one decoded request; `false` ends the connection. The request's
+/// prefixes decide the class of service: the deadline prefix arms
+/// shedding, the tenant prefix routes quota/fair-share accounting
+/// (absent → tenant 0), and carrying either marks the client rev-1.2
+/// capable, unlocking retry-after hints on shed frames.
 fn handle_request(
     service: &AsyncDotService,
     tx: &SyncSender<WriterMsg>,
     id: u64,
     request: Request,
-    deadline: Option<Duration>,
+    meta: RequestMeta,
     net: &NetOptions,
 ) -> bool {
+    let deadline = meta.deadline_us.map(Duration::from_micros);
+    let tenant = meta.tenant.unwrap_or(0);
+    let rev12 = meta.deadline_us.is_some() || meta.tenant.is_some();
     match request {
-        Request::Stats => send(
-            tx,
-            WriterMsg::Raw(codec::encode_stats_result(id, &wire_stats(service))),
-        ),
-        Request::Submit(input) => {
-            match service.try_submit_with_deadline(input, Instant::now(), deadline) {
-                Ok(TrySubmit::Accepted(handle)) => send(tx, WriterMsg::Pending { id, handle }),
-                Ok(TrySubmit::Busy) => send_error(
-                    tx,
+        Request::Stats => {
+            // A tenant-prefixed STATS asks for the rev-1.2 per-tenant
+            // extension; a plain STATS gets the classic frame, so older
+            // clients never see bytes they cannot parse.
+            let frame = if meta.tenant.is_some() {
+                codec::encode_stats_result_tenants(
                     id,
-                    ErrorCode::Busy,
-                    "submission queue full; retry (PROTOCOL.md §5)",
+                    &wire_stats(service),
+                    &wire_tenant_stats(service),
+                )
+            } else {
+                codec::encode_stats_result(id, &wire_stats(service))
+            };
+            send(tx, WriterMsg::Raw(frame))
+        }
+        Request::Submit(input) => {
+            match service.try_submit_with_opts(input, Instant::now(), deadline, tenant) {
+                Ok(TrySubmit::Accepted(handle)) => send(tx, WriterMsg::Pending { id, handle }),
+                Ok(TrySubmit::Busy) => send(
+                    tx,
+                    WriterMsg::Raw(shed_frame(
+                        service,
+                        id,
+                        ErrorCode::Busy,
+                        "submission queue full; retry (PROTOCOL.md §5)",
+                        rev12,
+                    )),
+                ),
+                Ok(TrySubmit::Quota) => send(
+                    tx,
+                    WriterMsg::Raw(shed_frame(
+                        service,
+                        id,
+                        ErrorCode::Quota,
+                        &format!("tenant {tenant} is at its queue quota (PROTOCOL.md §4.11)"),
+                        rev12,
+                    )),
                 ),
                 Err(BackendError::Runtime(msg)) => {
                     let _ = send_error(tx, id, ErrorCode::Shutdown, &msg);
@@ -558,7 +649,7 @@ fn handle_request(
                 Err(e) => send_error(tx, id, ErrorCode::Invalid, &e.to_string()),
             }
         }
-        Request::Batch(inputs) => submit_batch(service, tx, id, inputs, deadline, net),
+        Request::Batch(inputs) => submit_batch(service, tx, id, inputs, meta, net),
     }
 }
 
@@ -571,9 +662,12 @@ fn submit_batch(
     tx: &SyncSender<WriterMsg>,
     id: u64,
     inputs: Vec<SharedInput>,
-    deadline: Option<Duration>,
+    meta: RequestMeta,
     net: &NetOptions,
 ) -> bool {
+    let deadline = meta.deadline_us.map(Duration::from_micros);
+    let tenant = meta.tenant.unwrap_or(0);
+    let rev12 = meta.deadline_us.is_some() || meta.tenant.is_some();
     for input in &inputs {
         if let Err(e) = input.view().check(service.service().spec_for(&input.view())) {
             return send_error(tx, id, ErrorCode::Invalid, &e.to_string());
@@ -589,8 +683,25 @@ fn submit_batch(
         if k == total / 2 && net.fire(FaultSite::ConnDropMidBatch) {
             return false;
         }
-        match service.submit_with_deadline(input, Instant::now(), deadline) {
+        match service.submit_with_opts(input, Instant::now(), deadline, tenant) {
             Ok(handle) => handles.push(handle),
+            Err(BackendError::QuotaExceeded { tenant }) => {
+                // Quota struck mid-batch: the whole batch fails with the
+                // typed QUOTA frame (non-fatal — the connection keeps
+                // serving). Already-admitted requests still resolve
+                // inside the pipeline; their handles are dropped here and
+                // the results discarded.
+                return send(
+                    tx,
+                    WriterMsg::Raw(shed_frame(
+                        service,
+                        id,
+                        ErrorCode::Quota,
+                        &format!("tenant {tenant} is at its queue quota (PROTOCOL.md §4.11)"),
+                        rev12,
+                    )),
+                );
+            }
             Err(e) => {
                 let _ = send_error(tx, id, ErrorCode::Shutdown, &e.to_string());
                 return false;
@@ -746,16 +857,50 @@ impl From<std::io::Error> for WireCallError {
     }
 }
 
+/// Deterministic jitter in `[0, span_ns)` derived from the request id and
+/// retry ordinal (a splitmix64 finalizer): spreads concurrent retriers
+/// without clocks or a global RNG, and replays exactly.
+fn jitter_ns(id: u64, attempt: u32, span_ns: u64) -> u64 {
+    if span_ns == 0 {
+        return 0;
+    }
+    let mut z = id ^ (u64::from(attempt) << 32) ^ 0x9E37_79B9_7F4A_7C15;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    z % span_ns
+}
+
+/// Pause before the next BUSY retry: the server's retry-after hint
+/// verbatim when present (rev 1.2; capped at 4× the backoff cap), else
+/// capped exponential backoff with the deterministic jitter placing the
+/// pause in `[exp/2, exp]`.
+fn busy_backoff(attempt: u32, id: u64, hint_us: Option<u32>) -> Duration {
+    if let Some(us) = hint_us {
+        if us > 0 {
+            return Duration::from_micros(u64::from(us)).min(BUSY_BACKOFF_CAP * 4);
+        }
+    }
+    let exp = BUSY_BACKOFF_BASE
+        .saturating_mul(1u32 << attempt.min(12))
+        .min(BUSY_BACKOFF_CAP);
+    let half = exp / 2;
+    let span_ns = (exp - half).as_nanos() as u64;
+    half + Duration::from_nanos(jitter_ns(id, attempt, span_ns.saturating_add(1)))
+}
+
 /// A blocking, single-connection protocol client: one request in flight at
 /// a time, BUSY responses retried transparently (counted in
-/// [`Self::busy_retries`]). The multi-connection pipelined load generator
-/// lives in [`loadgen`](super::loadgen); this client is the simple
-/// building block the tests and CLI probes use.
+/// [`Self::busy_retries`]) under capped exponential backoff with
+/// deterministic jitter and a wall-clock budget. The multi-connection
+/// pipelined load generator lives in [`loadgen`](super::loadgen); this
+/// client is the simple building block the tests and CLI probes use.
 pub struct WireClient {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
     next_id: u64,
     busy_retries: u64,
+    busy_budget: Duration,
 }
 
 impl WireClient {
@@ -769,6 +914,7 @@ impl WireClient {
             writer: BufWriter::new(write_half),
             next_id: 1,
             busy_retries: 0,
+            busy_budget: BUSY_RETRY_BUDGET,
         })
     }
 
@@ -776,6 +922,13 @@ impl WireClient {
     /// re-sent a request).
     pub fn busy_retries(&self) -> u64 {
         self.busy_retries
+    }
+
+    /// Override the wall-clock budget for transparent BUSY retries (the
+    /// default is [`BUSY_RETRY_BUDGET`]). Once a call has spent the
+    /// budget, the BUSY error surfaces to the caller instead of retrying.
+    pub fn set_busy_retry_budget(&mut self, budget: Duration) {
+        self.busy_budget = budget;
     }
 
     fn fresh_id(&mut self) -> u64 {
@@ -805,23 +958,29 @@ impl WireClient {
                 format!("response id {} for request {}", header.request_id, id),
             )));
         }
-        codec::decode_response(opcode, &payload).map_err(WireCallError::Protocol)
+        codec::decode_response_flagged(header.flags, opcode, &payload)
+            .map_err(WireCallError::Protocol)
     }
 
-    /// Send one frame and read its response, transparently retrying BUSY.
+    /// Send one frame and read its response, transparently retrying BUSY
+    /// under the backoff schedule and wall-clock budget. A QUOTA error is
+    /// *not* retried here: it is a typed per-tenant shed the caller must
+    /// observe (any retry-after hint rides along in the returned error).
     fn call(&mut self, frame: &[u8], id: u64) -> Result<Response, WireCallError> {
-        let mut tries = 0u64;
+        let started = Instant::now();
+        let mut attempt = 0u32;
         loop {
             self.writer.write_all(frame)?;
             self.writer.flush()?;
             match self.read_response(id)? {
                 Response::Error(e) if e.code == ErrorCode::Busy => {
-                    tries += 1;
-                    self.busy_retries += 1;
-                    if tries >= BUSY_RETRY_LIMIT {
+                    let pause = busy_backoff(attempt, id, e.retry_after_us);
+                    attempt = attempt.saturating_add(1);
+                    if started.elapsed() + pause > self.busy_budget {
                         return Err(WireCallError::Server(e));
                     }
-                    std::thread::sleep(BUSY_RETRY_PAUSE);
+                    self.busy_retries += 1;
+                    std::thread::sleep(pause);
                 }
                 Response::Error(e) => return Err(WireCallError::Server(e)),
                 other => return Ok(other),
@@ -929,6 +1088,77 @@ impl WireClient {
             ))),
         }
     }
+
+    /// One dot product tagged with request metadata — tenant id and/or
+    /// deadline budget (PROTOCOL.md §2.4/§2.5). Tenant-tagged requests
+    /// are quota-checked and weighted-fair scheduled under their tenant's
+    /// class; a tenant at quota draws the typed QUOTA error frame.
+    pub fn dot_with_meta(
+        &mut self,
+        x: &[f64],
+        y: &[f64],
+        meta: RequestMeta,
+    ) -> Result<WireResult, WireCallError> {
+        let id = self.fresh_id();
+        let frame =
+            codec::encode_frame_with_meta(Opcode::Dot, id, meta, &codec::encode_dot_payload(x, y));
+        Self::expect_result(self.call(&frame, id)?)
+    }
+
+    /// One dot product on behalf of `tenant` (PROTOCOL.md §2.5).
+    pub fn dot_with_tenant(
+        &mut self,
+        x: &[f64],
+        y: &[f64],
+        tenant: u32,
+    ) -> Result<WireResult, WireCallError> {
+        self.dot_with_meta(
+            x,
+            y,
+            RequestMeta {
+                deadline_us: None,
+                tenant: Some(tenant),
+            },
+        )
+    }
+
+    /// One batched submission tagged with request metadata shared by the
+    /// whole batch (PROTOCOL.md §2.4/§2.5, §3.3).
+    pub fn batch_with_meta(
+        &mut self,
+        inputs: &[SharedInput],
+        meta: RequestMeta,
+    ) -> Result<Vec<WireResult>, WireCallError> {
+        let id = self.fresh_id();
+        let full = codec::encode_batch(id, inputs);
+        let frame = codec::encode_frame_with_meta(Opcode::Batch, id, meta, &full[HEADER_LEN..]);
+        match self.call(&frame, id)? {
+            Response::Batch(results) => Ok(results),
+            other => Err(WireCallError::Protocol(WireError::new(
+                ErrorCode::Malformed,
+                format!("expected a batch-result frame, got {other:?}"),
+            ))),
+        }
+    }
+
+    /// Probe the pipeline counters *plus* the per-tenant accounting rows
+    /// (rev 1.2 tenant stats extension, PROTOCOL.md §3.7). `tenant` names
+    /// the asking tenant (it marks the request rev-1.2 so the server
+    /// answers with the extended frame).
+    pub fn stats_tenants(
+        &mut self,
+        tenant: u32,
+    ) -> Result<(WireStats, Vec<WireTenantStats>), WireCallError> {
+        let id = self.fresh_id();
+        let frame = codec::encode_stats_tenants(id, tenant);
+        match self.call(&frame, id)? {
+            Response::TenantStats { stats, tenants } => Ok((stats, tenants)),
+            other => Err(WireCallError::Protocol(WireError::new(
+                ErrorCode::Malformed,
+                format!("expected a tenant stats frame, got {other:?}"),
+            ))),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1026,6 +1256,7 @@ mod tests {
             write_timeout: Some(Duration::from_secs(5)),
             writer_queue: 16,
             faults: None,
+            qos: None,
         };
         let server =
             NetServer::bind_with("127.0.0.1:0", cfg(1, 1000), AsyncOptions::default(), net)
@@ -1045,5 +1276,71 @@ mod tests {
         // A fresh connection works: the server itself is healthy.
         let mut fresh = WireClient::connect(server.local_addr()).unwrap();
         fresh.dot(&x, &x).unwrap();
+    }
+
+    #[test]
+    fn tenant_quota_draws_typed_quota_frame_with_retry_hint() {
+        // Tenant 1 has quota 0: every tagged submission sheds with QUOTA
+        // (not BUSY), carries the rev-1.2 retry hint, and the connection
+        // keeps serving. Untagged (tenant-0) traffic is unaffected.
+        let net = NetOptions {
+            qos: Some(QosPolicy::parse("a:3:64,z:1:0").unwrap()),
+            ..NetOptions::default()
+        };
+        let server =
+            NetServer::bind_with("127.0.0.1:0", cfg(2, 1000), AsyncOptions::default(), net)
+                .unwrap();
+        let mut client = WireClient::connect(server.local_addr()).unwrap();
+        let x = randvec(128, 31);
+        match client.dot_with_tenant(&x, &x, 1) {
+            Err(WireCallError::Server(e)) => {
+                assert_eq!(e.code, ErrorCode::Quota);
+                assert!(
+                    e.retry_after_us.unwrap_or(0) > 0,
+                    "rev-1.2 request must draw a retry-after hint"
+                );
+            }
+            other => panic!("expected a QUOTA error frame, got {other:?}"),
+        }
+        // The same connection still serves tenant 0 (untagged) and tenant
+        // 0-tagged requests, bit-identical to in-process execution.
+        let reference = DotService::new(cfg(2, 1000)).unwrap();
+        let wire = client.dot_with_tenant(&x, &x, 0).unwrap();
+        let local = reference
+            .submit(&crate::runtime::backend::KernelInput::Dot(&x, &x))
+            .unwrap();
+        assert_eq!(wire.value.to_bits(), local.value.to_bits());
+        // The tenant stats extension reports the shed exactly once.
+        let (stats, tenants) = client.stats_tenants(1).unwrap();
+        assert!(stats.completed >= 1);
+        let z = tenants.iter().find(|t| t.tenant == 1).unwrap();
+        assert_eq!(z.quota_shed, 1);
+        assert_eq!(z.admitted, 0);
+        let a = tenants.iter().find(|t| t.tenant == 0).unwrap();
+        assert_eq!(a.quota_shed, 0);
+        assert!(a.admitted >= 1);
+    }
+
+    #[test]
+    fn busy_backoff_is_deterministic_capped_and_hint_driven() {
+        // Pure schedule checks — no socket involved.
+        assert_eq!(busy_backoff(0, 7, None), busy_backoff(0, 7, None));
+        for attempt in 0..20 {
+            let p = busy_backoff(attempt, 42, None);
+            assert!(p >= BUSY_BACKOFF_BASE / 2, "floor at half the base");
+            assert!(p <= BUSY_BACKOFF_CAP, "cap respected at attempt {attempt}");
+        }
+        // Different ids de-synchronize (jitter): some pair must differ.
+        let spread: Vec<Duration> = (0..8).map(|id| busy_backoff(4, id, None)).collect();
+        assert!(
+            spread.iter().any(|&p| p != spread[0]),
+            "jitter must spread concurrent retriers"
+        );
+        // A server hint overrides the schedule verbatim (within its cap).
+        assert_eq!(
+            busy_backoff(0, 1, Some(1500)),
+            Duration::from_micros(1500)
+        );
+        assert_eq!(busy_backoff(9, 1, Some(0)), busy_backoff(9, 1, None));
     }
 }

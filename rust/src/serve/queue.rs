@@ -38,7 +38,7 @@
 //! nothing, and dropping the service closes the queue, drains everything
 //! already accepted, completes every ticket and joins the dispatcher.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
@@ -130,6 +130,356 @@ pub enum TrySubmit {
     /// retry. The wire server turns this into the documented BUSY error
     /// frame (`docs/PROTOCOL.md` §5) instead of blocking the connection.
     Busy,
+    /// The request's tenant was at its per-tenant queue quota: nothing was
+    /// enqueued, and — unlike [`TrySubmit::Busy`] — retrying immediately
+    /// cannot help until some of this tenant's queued work drains. The
+    /// wire server turns this into the typed QUOTA error frame
+    /// (`docs/PROTOCOL.md` §4.11), distinct from BUSY so clients can tell
+    /// "the service is overloaded" from "I am over my share".
+    Quota,
+}
+
+/// One tenant class in a [`QosPolicy`]: a display name, a weighted-fair
+/// share, and an optional per-tenant queue quota. Tenant ids are indices
+/// into [`QosPolicy::classes`]; ids past the end of the policy fall back
+/// to weight 1 and no quota.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TenantClass {
+    /// Display name, used in bench artifacts and diagnostics.
+    pub name: String,
+    /// Deficit-round-robin weight (clamped to >= 1 at construction): a
+    /// continuously backlogged tenant's share of dispatched requests
+    /// converges to `weight / Σ weights` (property-pinned).
+    pub weight: u32,
+    /// Maximum requests this tenant may hold admitted-but-undispatched
+    /// (queue + dispatcher backlog). `None` means no per-tenant bound —
+    /// only the whole-queue depth applies.
+    pub quota: Option<usize>,
+}
+
+/// Multi-tenant QoS policy: the tenant classes plus the pure
+/// deficit-round-robin selection core the dispatcher schedules with.
+///
+/// The policy decides *where and when* a request runs, never *what* it
+/// computes: batch composition downstream of selection is still a plan
+/// function of lengths only (`BatchScheduler::plan_lens`), so results at
+/// fixed `T` are bit-identical across any priority interleaving
+/// (property-pinned in `tests/properties.rs`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct QosPolicy {
+    classes: Vec<TenantClass>,
+}
+
+impl QosPolicy {
+    /// Build a policy from explicit classes. Weights are clamped to >= 1
+    /// so a zero-weight class cannot be starved into deadlock.
+    pub fn new(mut classes: Vec<TenantClass>) -> Self {
+        for c in &mut classes {
+            c.weight = c.weight.max(1);
+        }
+        Self { classes }
+    }
+
+    /// Parse a `--tenants` spec. Two forms:
+    ///
+    /// * `name:weight[:quota],...` — e.g. `a:3,b:1` or `a:3:16,b:1:8`;
+    /// * a bare weight list `w0:w1[:w2...]` — e.g. `3:1` — when the single
+    ///   comma-free entry is all-numeric with >= 2 fields; tenants are
+    ///   auto-named `t0`, `t1`, ….
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Err("empty tenant spec".to_string());
+        }
+        let entries: Vec<&str> = spec.split(',').collect();
+        if entries.len() == 1 {
+            let fields: Vec<&str> = entries[0].split(':').collect();
+            if fields.len() >= 2 && fields.iter().all(|f| f.trim().parse::<u32>().is_ok()) {
+                let classes = fields
+                    .iter()
+                    .enumerate()
+                    .map(|(i, f)| TenantClass {
+                        name: format!("t{i}"),
+                        weight: f.trim().parse::<u32>().unwrap(),
+                        quota: None,
+                    })
+                    .collect();
+                return Ok(Self::new(classes));
+            }
+        }
+        let mut classes = Vec::new();
+        for entry in &entries {
+            let fields: Vec<&str> = entry.split(':').collect();
+            let (name, weight, quota) = match fields.as_slice() {
+                [name, w] => (name.trim(), w.trim(), None),
+                [name, w, q] => (name.trim(), w.trim(), Some(q.trim())),
+                _ => {
+                    return Err(format!(
+                        "tenant entry '{entry}' is not name:weight[:quota]"
+                    ))
+                }
+            };
+            if name.is_empty() {
+                return Err(format!("tenant entry '{entry}' has an empty name"));
+            }
+            let weight: u32 = weight
+                .parse()
+                .map_err(|_| format!("tenant '{name}': weight '{weight}' is not a u32"))?;
+            let quota = match quota {
+                Some(q) => Some(
+                    q.parse::<usize>()
+                        .map_err(|_| format!("tenant '{name}': quota '{q}' is not a usize"))?,
+                ),
+                None => None,
+            };
+            classes.push(TenantClass {
+                name: name.to_string(),
+                weight,
+                quota,
+            });
+        }
+        Ok(Self::new(classes))
+    }
+
+    /// The configured classes, in tenant-id order.
+    pub fn classes(&self) -> &[TenantClass] {
+        &self.classes
+    }
+
+    /// A tenant's weight; ids outside the policy default to 1.
+    pub fn weight(&self, tenant: u32) -> u32 {
+        self.classes
+            .get(tenant as usize)
+            .map_or(1, |c| c.weight.max(1))
+    }
+
+    /// A tenant's quota; ids outside the policy (or classes with no
+    /// configured quota) are unbounded.
+    pub fn quota(&self, tenant: u32) -> usize {
+        self.classes
+            .get(tenant as usize)
+            .and_then(|c| c.quota)
+            .unwrap_or(usize::MAX)
+    }
+
+    /// A tenant's display name; ids outside the policy render as `t{id}`.
+    pub fn name(&self, tenant: u32) -> String {
+        self.classes
+            .get(tenant as usize)
+            .map_or_else(|| format!("t{tenant}"), |c| c.name.clone())
+    }
+
+    /// Fill every unset quota with a weight-proportional share of the
+    /// queue depth (minimum 1) — the serve-bench default, sized so a
+    /// saturating tenant hits its quota well before it can occupy the
+    /// whole queue.
+    pub fn with_default_quotas(mut self, queue_depth: usize) -> Self {
+        let total: u64 = self
+            .classes
+            .iter()
+            .map(|c| u64::from(c.weight.max(1)))
+            .sum::<u64>()
+            .max(1);
+        for c in &mut self.classes {
+            if c.quota.is_none() {
+                let share = (queue_depth as u64 * u64::from(c.weight.max(1)) / total).max(1);
+                c.quota = Some(share as usize);
+            }
+        }
+        self
+    }
+
+    /// The deficit-round-robin core: given the carried-over deficit
+    /// counters and each backlogged tenant's pending depth, return the
+    /// tenant drain order for one batch of at most `batch_max` requests.
+    ///
+    /// Each round credits every still-backlogged tenant its weight, then
+    /// drains `min(deficit, pending, room)`; a tenant whose lane empties
+    /// forfeits its remaining deficit (standard DRR — prevents an idle
+    /// tenant from hoarding credit), while a tenant cut off by `batch_max`
+    /// keeps it (the carryover that makes long-run shares converge to the
+    /// weights). Pure — operates only on the supplied state — so the
+    /// fairness invariant is property-tested without a running service.
+    pub fn drr_select(
+        &self,
+        deficits: &mut BTreeMap<u32, u64>,
+        pending: &BTreeMap<u32, usize>,
+        batch_max: usize,
+    ) -> Vec<u32> {
+        let mut remaining: BTreeMap<u32, usize> = pending
+            .iter()
+            .filter(|&(_, &n)| n > 0)
+            .map(|(&t, &n)| (t, n))
+            .collect();
+        let mut order = Vec::new();
+        while order.len() < batch_max && !remaining.is_empty() {
+            let ids: Vec<u32> = remaining.keys().copied().collect();
+            for tenant in ids {
+                if order.len() >= batch_max {
+                    break;
+                }
+                let mut deficit =
+                    deficits.get(&tenant).copied().unwrap_or(0) + u64::from(self.weight(tenant));
+                let avail = remaining[&tenant] as u64;
+                let room = (batch_max - order.len()) as u64;
+                let take = deficit.min(avail).min(room);
+                deficit -= take;
+                for _ in 0..take {
+                    order.push(tenant);
+                }
+                if take == avail {
+                    remaining.remove(&tenant);
+                    deficits.insert(tenant, 0);
+                } else {
+                    deficits.insert(tenant, deficit);
+                    if take > 0 {
+                        *remaining.get_mut(&tenant).expect("tenant still backlogged") -=
+                            take as usize;
+                    }
+                }
+            }
+        }
+        order
+    }
+}
+
+/// Per-tenant accounting snapshot row
+/// ([`AsyncDotService::tenant_stats`]). All counters are monotonic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TenantStats {
+    /// Tenant id (index into the policy's classes).
+    pub tenant: u32,
+    /// Requests admitted past the quota check into the pipeline.
+    pub admitted: u64,
+    /// Admitted requests whose ticket has resolved — success, typed shed
+    /// error, or shutdown drain. At quiescence `completed == admitted`.
+    pub completed: u64,
+    /// Requests shed at admission because the tenant was at quota. Never
+    /// entered the pipeline; disjoint from `admitted`.
+    pub quota_shed: u64,
+    /// Admitted requests shed in-queue on deadline expiry (a subset of
+    /// `completed`, mirroring the global counter's semantics).
+    pub deadline_shed: u64,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct TenantEntry {
+    /// Currently admitted-but-undispatched requests — the value the quota
+    /// check gates on.
+    occupancy: u64,
+    admitted: u64,
+    completed: u64,
+    quota_shed: u64,
+    deadline_shed: u64,
+}
+
+/// Shared per-tenant quota enforcement + accounting. One mutex guards the
+/// whole map: admission takes it once per request, which is noise next to
+/// the queue mutex the same call already takes.
+struct TenantTable {
+    policy: Option<QosPolicy>,
+    entries: Mutex<BTreeMap<u32, TenantEntry>>,
+}
+
+impl TenantTable {
+    fn new(policy: Option<QosPolicy>) -> Self {
+        Self {
+            policy,
+            entries: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Poison-tolerant map access (same policy as the queue mutex).
+    fn lock(&self) -> MutexGuard<'_, BTreeMap<u32, TenantEntry>> {
+        self.entries
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Quota-check-and-admit in one critical section, so two racing
+    /// submitters cannot both slip under the quota. `true` counts the
+    /// request as admitted (occupancy +1); `false` counts it as
+    /// quota-shed, exactly once — the shed request never appears in any
+    /// other counter.
+    fn admit(&self, tenant: u32) -> bool {
+        let quota = self
+            .policy
+            .as_ref()
+            .map_or(usize::MAX, |p| p.quota(tenant));
+        let mut entries = self.lock();
+        let e = entries.entry(tenant).or_default();
+        if e.occupancy as usize >= quota {
+            e.quota_shed += 1;
+            return false;
+        }
+        e.occupancy += 1;
+        e.admitted += 1;
+        true
+    }
+
+    /// Record an injected quota reject (the `QuotaAdmissionReject` fault
+    /// site): same observable accounting as a real quota shed.
+    fn force_quota_shed(&self, tenant: u32) {
+        self.lock().entry(tenant).or_default().quota_shed += 1;
+    }
+
+    /// Roll back an admission whose queue push was refused (full/closed),
+    /// so a rejected request is not double-counted as admitted.
+    fn unadmit(&self, tenant: u32) {
+        let mut entries = self.lock();
+        let e = entries.entry(tenant).or_default();
+        e.occupancy = e.occupancy.saturating_sub(1);
+        e.admitted = e.admitted.saturating_sub(1);
+    }
+
+    /// The request left the queue/backlog for dispatch: quota occupancy
+    /// drops; completion is recorded separately at retire.
+    fn release(&self, tenant: u32) {
+        let mut entries = self.lock();
+        let e = entries.entry(tenant).or_default();
+        e.occupancy = e.occupancy.saturating_sub(1);
+    }
+
+    /// An already-released request shed on deadline expiry: counts as both
+    /// deadline-shed and completed (its ticket resolved with the typed
+    /// error).
+    fn shed_deadline(&self, tenant: u32) {
+        let mut entries = self.lock();
+        let e = entries.entry(tenant).or_default();
+        e.deadline_shed += 1;
+        e.completed += 1;
+    }
+
+    /// A dispatched request's ticket resolved (success or worker error).
+    fn complete(&self, tenant: u32) {
+        self.lock().entry(tenant).or_default().completed += 1;
+    }
+
+    /// A request drained straight out of the queue at shutdown: releases
+    /// its occupancy and counts the (error) completion in one step.
+    fn drain_complete(&self, tenant: u32) {
+        let mut entries = self.lock();
+        let e = entries.entry(tenant).or_default();
+        e.occupancy = e.occupancy.saturating_sub(1);
+        e.completed += 1;
+    }
+
+    fn total_quota_shed(&self) -> u64 {
+        self.lock().values().map(|e| e.quota_shed).sum()
+    }
+
+    fn snapshot(&self) -> Vec<TenantStats> {
+        self.lock()
+            .iter()
+            .map(|(&tenant, e)| TenantStats {
+                tenant,
+                admitted: e.admitted,
+                completed: e.completed,
+                quota_shed: e.quota_shed,
+                deadline_shed: e.deadline_shed,
+            })
+            .collect()
+    }
 }
 
 /// Depth-bounded MPSC queue with blocking backpressure: `push` blocks
@@ -431,6 +781,9 @@ struct QueuedRequest {
     /// (`arrival + budget`) plus the original budget in µs for the typed
     /// error. Checked by the dispatcher before any compute.
     deadline: Option<(Instant, u64)>,
+    /// Tenant id for quota accounting and weighted-fair selection. The
+    /// single-class paths submit as tenant 0.
+    tenant: u32,
 }
 
 impl Drop for QueuedRequest {
@@ -476,6 +829,10 @@ pub struct AsyncServeStats {
     /// their deadline expired before the dispatcher reached them, so they
     /// consumed no compute. A subset of `completed`.
     pub deadline_shed: u64,
+    /// Requests shed at admission because their tenant was at its quota
+    /// (summed over tenants). They never entered the queue, so they are
+    /// part of neither `enqueued` nor `completed`.
+    pub quota_shed: u64,
 }
 
 #[derive(Default)]
@@ -523,6 +880,8 @@ pub struct AsyncDotService {
     service: Arc<DotService>,
     queue: Arc<BoundedQueue<QueuedRequest>>,
     counters: Arc<Counters>,
+    tenants: Arc<TenantTable>,
+    faults: Option<Arc<FaultInjector>>,
     dispatcher: Option<JoinHandle<()>>,
     opts: AsyncOptions,
 }
@@ -544,6 +903,22 @@ impl AsyncDotService {
         opts: AsyncOptions,
         faults: Option<Arc<FaultInjector>>,
     ) -> Result<Self, BackendError> {
+        Self::new_with_qos(cfg, opts, None, faults)
+    }
+
+    /// [`Self::new_with_faults`] with a multi-tenant QoS policy. `Some`
+    /// switches the dispatcher from single-class FIFO to weighted-fair
+    /// deficit-round-robin across tenants (deadline-urgent requests first
+    /// within each tenant) and arms the per-tenant admission quotas;
+    /// `None` keeps the exact pre-QoS FIFO behavior. Either way the
+    /// numerics are untouched: scheduling decides where and when a request
+    /// runs, never what it computes.
+    pub fn new_with_qos(
+        cfg: ServeConfig,
+        opts: AsyncOptions,
+        qos: Option<QosPolicy>,
+        faults: Option<Arc<FaultInjector>>,
+    ) -> Result<Self, BackendError> {
         let opts = AsyncOptions {
             queue_depth: opts.queue_depth.max(1),
             batch_max: opts.batch_max.max(1),
@@ -556,19 +931,26 @@ impl AsyncDotService {
         let service = Arc::new(DotService::with_pool(cfg, pool)?);
         let queue = Arc::new(BoundedQueue::new(opts.queue_depth));
         let counters = Arc::new(Counters::default());
+        let tenants = Arc::new(TenantTable::new(qos.clone()));
         let dispatcher = {
             let service = Arc::clone(&service);
             let queue = Arc::clone(&queue);
             let counters = Arc::clone(&counters);
+            let tenants = Arc::clone(&tenants);
+            let faults = faults.clone();
             std::thread::Builder::new()
                 .name("kahan-serve-dispatch".to_string())
-                .spawn(move || dispatcher_main(service, queue, counters, opts, faults))
+                .spawn(move || {
+                    dispatcher_main(service, queue, counters, tenants, opts, qos, faults)
+                })
                 .expect("spawn serve dispatcher")
         };
         Ok(Self {
             service,
             queue,
             counters,
+            tenants,
+            faults,
             dispatcher: Some(dispatcher),
             opts,
         })
@@ -620,8 +1002,38 @@ impl AsyncDotService {
         arrival: Instant,
         deadline: Option<Duration>,
     ) -> Result<ResponseHandle, BackendError> {
+        self.submit_with_opts(input, arrival, deadline, 0)
+    }
+
+    /// The fully-general blocking submit: explicit arrival instant,
+    /// per-request deadline override, and tenant id. A tenant at its
+    /// configured quota is shed here with the typed
+    /// [`BackendError::QuotaExceeded`] error — nothing enters the queue,
+    /// and unlike a full queue the call does not block, because waiting
+    /// cannot help until the tenant's own queued work drains.
+    pub fn submit_with_opts(
+        &self,
+        input: SharedInput,
+        arrival: Instant,
+        deadline: Option<Duration>,
+        tenant: u32,
+    ) -> Result<ResponseHandle, BackendError> {
         input.view().check(self.service.spec_for(&input.view()))?;
-        self.enqueue(input, arrival, deadline)
+        self.enqueue(input, arrival, deadline, tenant)
+    }
+
+    /// Quota admission: one check shared by both submit paths. `false`
+    /// means the request was counted as quota-shed (exactly once) and must
+    /// not enqueue. The `QuotaAdmissionReject` fault site injects the same
+    /// observable outcome on an armed trigger.
+    fn admit(&self, tenant: u32) -> bool {
+        if let Some(inj) = &self.faults {
+            if inj.fire(FaultSite::QuotaAdmissionReject) {
+                self.tenants.force_quota_shed(tenant);
+                return false;
+            }
+        }
+        self.tenants.admit(tenant)
     }
 
     /// Enqueue an already-validated request (both submit paths check once,
@@ -631,17 +1043,23 @@ impl AsyncDotService {
         input: SharedInput,
         arrival: Instant,
         deadline: Option<Duration>,
+        tenant: u32,
     ) -> Result<ResponseHandle, BackendError> {
+        if !self.admit(tenant) {
+            return Err(BackendError::QuotaExceeded { tenant });
+        }
         let ticket = Arc::new(Ticket::new());
         let queued = QueuedRequest {
             input,
             ticket: Arc::clone(&ticket),
             arrival,
             deadline: deadline.map(|d| (arrival + d, d.as_micros() as u64)),
+            tenant,
         };
-        self.queue
-            .push(queued)
-            .map_err(|_| BackendError::Runtime("service is shut down".to_string()))?;
+        self.queue.push(queued).map_err(|_| {
+            self.tenants.unadmit(tenant);
+            BackendError::Runtime("service is shut down".to_string())
+        })?;
         Ok(ResponseHandle { ticket })
     }
 
@@ -671,23 +1089,43 @@ impl AsyncDotService {
         arrival: Instant,
         deadline: Option<Duration>,
     ) -> Result<TrySubmit, BackendError> {
+        self.try_submit_with_opts(input, arrival, deadline, 0)
+    }
+
+    /// The fully-general non-blocking submit: explicit arrival instant,
+    /// deadline override, and tenant id. A tenant at quota returns
+    /// [`TrySubmit::Quota`] — the wire server maps it to the QUOTA error
+    /// frame, distinct from the BUSY frame a full queue produces.
+    pub fn try_submit_with_opts(
+        &self,
+        input: SharedInput,
+        arrival: Instant,
+        deadline: Option<Duration>,
+        tenant: u32,
+    ) -> Result<TrySubmit, BackendError> {
         input.view().check(self.service.spec_for(&input.view()))?;
+        if !self.admit(tenant) {
+            return Ok(TrySubmit::Quota);
+        }
         let ticket = Arc::new(Ticket::new());
         let queued = QueuedRequest {
             input,
             ticket: Arc::clone(&ticket),
             arrival,
             deadline: deadline.map(|d| (arrival + d, d.as_micros() as u64)),
+            tenant,
         };
         match self.queue.try_push(queued) {
             Ok(()) => Ok(TrySubmit::Accepted(ResponseHandle { ticket })),
             Err((queued, TryPush::Full)) => {
                 // The drop backstop resolves the ticket with an error, but
                 // no handle was handed out, so nothing observes it.
+                self.tenants.unadmit(tenant);
                 drop(queued);
                 Ok(TrySubmit::Busy)
             }
             Err((queued, TryPush::Closed)) => {
+                self.tenants.unadmit(tenant);
                 drop(queued);
                 Err(BackendError::Runtime("service is shut down".to_string()))
             }
@@ -705,7 +1143,7 @@ impl AsyncDotService {
         }
         let handles: Vec<ResponseHandle> = inputs
             .iter()
-            .map(|input| self.enqueue(input.clone(), Instant::now(), self.opts.deadline))
+            .map(|input| self.enqueue(input.clone(), Instant::now(), self.opts.deadline, 0))
             .collect::<Result<_, _>>()?;
         handles.into_iter().map(ResponseHandle::wait).collect()
     }
@@ -721,7 +1159,22 @@ impl AsyncDotService {
             max_queue_depth,
             busy_ns: self.counters.busy_ns.load(Ordering::Relaxed) as f64,
             deadline_shed: self.counters.deadline_shed.load(Ordering::Relaxed),
+            quota_shed: self.tenants.total_quota_shed(),
         }
+    }
+
+    /// Per-tenant accounting snapshot, in ascending tenant-id order. A
+    /// tenant appears once admission has seen it — including tenants whose
+    /// every request was quota-shed. Empty until the first tenant-tagged
+    /// (or plain, i.e. tenant-0) submission.
+    pub fn tenant_stats(&self) -> Vec<TenantStats> {
+        self.tenants.snapshot()
+    }
+
+    /// The QoS policy the dispatcher schedules with (`None` means the
+    /// single-class FIFO path).
+    pub fn qos(&self) -> Option<&QosPolicy> {
+        self.tenants.policy.as_ref()
     }
 }
 
@@ -761,18 +1214,22 @@ fn dispatcher_main(
     service: Arc<DotService>,
     queue: Arc<BoundedQueue<QueuedRequest>>,
     counters: Arc<Counters>,
+    tenants: Arc<TenantTable>,
     opts: AsyncOptions,
+    qos: Option<QosPolicy>,
     faults: Option<Arc<FaultInjector>>,
 ) {
     let run = {
-        let (service, queue, counters, faults) = (&service, &queue, &counters, &faults);
-        move || dispatcher_loop(service, queue, counters, opts, faults.as_deref())
+        let (service, queue, counters, tenants, faults) =
+            (&service, &queue, &counters, &tenants, &faults);
+        move || dispatcher_loop(service, queue, counters, tenants, opts, qos, faults.as_deref())
     };
     let outcome = catch_unwind(AssertUnwindSafe(run));
     // Normal exit already drained everything; after a panic, fail whatever
     // is still queued so waiters wake up.
     queue.close();
     while let Pop::Item(q) = queue.try_pop() {
+        tenants.drain_complete(q.tenant);
         q.ticket.complete(
             Err(BackendError::Runtime("serve dispatcher exited".to_string())),
             0.0,
@@ -784,11 +1241,90 @@ fn dispatcher_main(
     }
 }
 
+/// Per-tenant ready lanes plus the deficit counters backing the
+/// weighted-fair dispatcher. Deadline-bearing requests are promoted into
+/// their tenant's *urgent* lane and drain before that tenant's normal
+/// lane; selection *across* tenants is [`QosPolicy::drr_select`], so one
+/// tenant's urgency never taxes another tenant's share.
+struct QosState {
+    policy: QosPolicy,
+    lanes: BTreeMap<u32, TenantLane>,
+    deficits: BTreeMap<u32, u64>,
+    len: usize,
+}
+
+#[derive(Default)]
+struct TenantLane {
+    urgent: VecDeque<QueuedRequest>,
+    normal: VecDeque<QueuedRequest>,
+}
+
+impl TenantLane {
+    fn len(&self) -> usize {
+        self.urgent.len() + self.normal.len()
+    }
+
+    fn pop(&mut self) -> Option<QueuedRequest> {
+        self.urgent.pop_front().or_else(|| self.normal.pop_front())
+    }
+}
+
+impl QosState {
+    fn new(policy: QosPolicy) -> Self {
+        Self {
+            policy,
+            lanes: BTreeMap::new(),
+            deficits: BTreeMap::new(),
+            len: 0,
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn enqueue(&mut self, q: QueuedRequest) {
+        let lane = self.lanes.entry(q.tenant).or_default();
+        if q.deadline.is_some() {
+            lane.urgent.push_back(q);
+        } else {
+            lane.normal.push_back(q);
+        }
+        self.len += 1;
+    }
+
+    /// Pop the next weighted-fair batch (at most `batch_max` requests) in
+    /// DRR drain order. FIFO order is preserved within each tenant lane.
+    fn next_batch(&mut self, batch_max: usize) -> Vec<QueuedRequest> {
+        let pending: BTreeMap<u32, usize> = self
+            .lanes
+            .iter()
+            .filter(|(_, lane)| lane.len() > 0)
+            .map(|(&t, lane)| (t, lane.len()))
+            .collect();
+        let order = self.policy.drr_select(&mut self.deficits, &pending, batch_max);
+        let mut batch = Vec::with_capacity(order.len());
+        for tenant in order {
+            let q = self
+                .lanes
+                .get_mut(&tenant)
+                .and_then(TenantLane::pop)
+                .expect("drr_select never over-draws a lane");
+            self.len -= 1;
+            batch.push(q);
+        }
+        self.lanes.retain(|_, lane| lane.len() > 0);
+        batch
+    }
+}
+
 fn dispatcher_loop(
     service: &DotService,
     queue: &BoundedQueue<QueuedRequest>,
     counters: &Counters,
+    tenants: &TenantTable,
     opts: AsyncOptions,
+    qos: Option<QosPolicy>,
     faults: Option<&FaultInjector>,
 ) {
     let epoch = Instant::now();
@@ -796,55 +1332,112 @@ fn dispatcher_loop(
     // End of the last retired busy interval (ns since epoch), for the
     // interval-union busy accounting.
     let mut busy_end_ns = 0.0f64;
+    // Weighted-fair mode holds arrivals in per-tenant lanes; FIFO mode
+    // dispatches arrival batches directly.
+    let mut backlog = qos.map(QosState::new);
+    let mut closed = false;
     loop {
         // Retire whatever already finished (front first: dispatch order).
         while inflight.front().map(InFlight::is_done).unwrap_or(false) {
             let f = inflight.pop_front().unwrap();
-            retire(service, counters, epoch, &mut busy_end_ns, f);
+            retire(service, counters, tenants, epoch, &mut busy_end_ns, f);
         }
         // Bound dispatcher-side memory.
         while inflight.len() >= MAX_INFLIGHT_DISPATCHES {
             let f = inflight.pop_front().unwrap();
-            retire(service, counters, epoch, &mut busy_end_ns, f);
+            retire(service, counters, tenants, epoch, &mut busy_end_ns, f);
         }
-        // Gather the next arrival batch. With work in flight, never park
-        // indefinitely on either side: wait for arrivals in short beats
+        // Acquire the next arrivals. With requests already owed to the
+        // weighted-fair selector, drain the queue opportunistically and
+        // never park — the backlog itself is dispatchable work. Otherwise
+        // this is the classic gather path: with work in flight, never park
+        // indefinitely on either side — wait for arrivals in short beats
         // and re-check the front dispatch between them, so a long-running
         // dispatch neither blocks admission of new requests (head-of-line)
         // nor delays retiring dispatches that have already finished.
-        let first = if inflight.is_empty() {
-            match queue.pop_wait() {
-                Some(q) => q,
-                None => return, // closed and fully drained
-            }
-        } else {
-            match queue.pop_timeout(RETIRE_POLL) {
-                Pop::Item(q) => q,
-                Pop::Empty => continue, // beat elapsed: loop re-checks the front
-                Pop::Closed => {
-                    for f in inflight.drain(..) {
-                        retire(service, counters, epoch, &mut busy_end_ns, f);
+        let backlogged = backlog.as_ref().map_or(false, |b| !b.is_empty());
+        let mut arrivals: Vec<QueuedRequest> = Vec::new();
+        if !closed {
+            if backlogged {
+                while arrivals.len() < opts.batch_max {
+                    match queue.try_pop() {
+                        Pop::Item(q) => arrivals.push(q),
+                        Pop::Empty => break,
+                        Pop::Closed => {
+                            closed = true;
+                            break;
+                        }
                     }
-                    return;
+                }
+            } else {
+                let first = if inflight.is_empty() {
+                    match queue.pop_wait() {
+                        Some(q) => q,
+                        None => {
+                            closed = true;
+                            None
+                        }
+                    }
+                } else {
+                    match queue.pop_timeout(RETIRE_POLL) {
+                        Pop::Item(q) => Some(q),
+                        Pop::Empty => continue, // beat elapsed: loop re-checks the front
+                        Pop::Closed => {
+                            closed = true;
+                            None
+                        }
+                    }
+                };
+                if let Some(first) = first {
+                    arrivals = gather(queue, first, &opts);
                 }
             }
-        };
-        let batch = gather(queue, first, &opts);
-        counters.arrival_batches.fetch_add(1, Ordering::Relaxed);
-        // Injected dispatcher stall (armed once per arrival batch): models
-        // a descheduled dispatcher thread. Arrivals pile into the bounded
-        // queue behind backpressure; deadline-bearing requests age toward
-        // their shed point.
-        if let Some(inj) = faults {
-            if let Some(delay) = inj.stall(FaultSite::DispatcherStall) {
-                std::thread::sleep(delay);
+        }
+        if !arrivals.is_empty() {
+            counters.arrival_batches.fetch_add(1, Ordering::Relaxed);
+            // Injected dispatcher stall (armed once per arrival batch):
+            // models a descheduled dispatcher thread. Arrivals pile into
+            // the bounded queue behind backpressure; deadline-bearing
+            // requests age toward their shed point.
+            if let Some(inj) = faults {
+                if let Some(delay) = inj.stall(FaultSite::DispatcherStall) {
+                    std::thread::sleep(delay);
+                }
             }
         }
-        dispatch(service, counters, &mut inflight, batch);
-        if !opts.overlap {
-            while let Some(f) = inflight.pop_front() {
-                retire(service, counters, epoch, &mut busy_end_ns, f);
+        let batch = match &mut backlog {
+            Some(state) => {
+                for q in arrivals {
+                    state.enqueue(q);
+                }
+                if let Some(inj) = faults {
+                    // Injected starvation stall (armed once per non-empty
+                    // selection): delays the weighted-fair selection
+                    // itself, so every backlogged tenant waits equally —
+                    // a liveness fault, not a fairness fault.
+                    if !state.is_empty() {
+                        if let Some(delay) = inj.stall(FaultSite::StarvationStall) {
+                            std::thread::sleep(delay);
+                        }
+                    }
+                }
+                state.next_batch(opts.batch_max)
             }
+            None => arrivals,
+        };
+        if !batch.is_empty() {
+            dispatch(service, counters, tenants, &mut inflight, batch);
+            if !opts.overlap {
+                while let Some(f) = inflight.pop_front() {
+                    retire(service, counters, tenants, epoch, &mut busy_end_ns, f);
+                }
+            }
+        }
+        if closed && backlog.as_ref().map_or(true, QosState::is_empty) {
+            for f in inflight.drain(..) {
+                retire(service, counters, tenants, epoch, &mut busy_end_ns, f);
+            }
+            return;
         }
     }
 }
@@ -886,9 +1479,16 @@ fn gather(
 fn dispatch(
     service: &DotService,
     counters: &Counters,
+    tenants: &TenantTable,
     inflight: &mut VecDeque<InFlight>,
     batch: Vec<QueuedRequest>,
 ) {
+    // Every request in the batch leaves quota occupancy here — whether it
+    // sheds on deadline below or goes on to execute — so a tenant's quota
+    // gates only admitted-but-undispatched work.
+    for q in &batch {
+        tenants.release(q.tenant);
+    }
     // Deadline shedding happens here, at the last instant before any
     // planning or compute: a request whose deadline expired while it sat
     // in the queue (or in the batching window) resolves immediately with
@@ -907,6 +1507,7 @@ fn dispatch(
                 );
                 counters.deadline_shed.fetch_add(1, Ordering::Relaxed);
                 counters.completed.fetch_add(1, Ordering::Relaxed);
+                tenants.shed_deadline(q.tenant);
                 None
             }
             _ => Some(q),
@@ -999,6 +1600,7 @@ fn account_busy(
 fn retire(
     service: &DotService,
     counters: &Counters,
+    tenants: &TenantTable,
     epoch: Instant,
     busy_end_ns: &mut f64,
     inflight: InFlight,
@@ -1022,6 +1624,7 @@ fn retire(
                             n: q.input.updates(),
                             path: ExecPath::Fused,
                         };
+                        tenants.complete(q.tenant);
                         let latency = now.saturating_duration_since(q.arrival);
                         q.ticket.complete(Ok(response), latency.as_nanos() as f64);
                     }
@@ -1033,6 +1636,7 @@ fn retire(
                         .fetch_add(requests.len() as u64, Ordering::Relaxed);
                     account_busy(counters, epoch, busy_end_ns, posted, now);
                     for q in &requests {
+                        tenants.complete(q.tenant);
                         let latency = now.saturating_duration_since(q.arrival);
                         q.ticket.complete(Err(panicked()), latency.as_nanos() as f64);
                     }
@@ -1052,6 +1656,7 @@ fn retire(
                         n,
                         path: ExecPath::Sharded,
                     };
+                    tenants.complete(request.tenant);
                     let latency = Instant::now().saturating_duration_since(request.arrival);
                     request
                         .ticket
@@ -1061,6 +1666,7 @@ fn retire(
                     let now = Instant::now();
                     counters.completed.fetch_add(1, Ordering::Relaxed);
                     account_busy(counters, epoch, busy_end_ns, posted, now);
+                    tenants.complete(request.tenant);
                     let latency = now.saturating_duration_since(request.arrival);
                     request
                         .ticket
@@ -1307,5 +1913,230 @@ mod tests {
             assert_eq!(want.value.to_bits(), g.value.to_bits());
         }
         assert_eq!(injector.fired(FaultSite::DispatcherStall), 1);
+    }
+
+    #[test]
+    fn qos_policy_parse_accepts_both_forms() {
+        let named = QosPolicy::parse("a:3,b:1").unwrap();
+        assert_eq!(named.classes().len(), 2);
+        assert_eq!(named.name(0), "a");
+        assert_eq!(named.weight(0), 3);
+        assert_eq!(named.weight(1), 1);
+        assert_eq!(named.quota(0), usize::MAX);
+
+        let bare = QosPolicy::parse("3:1").unwrap();
+        assert_eq!(bare.classes().len(), 2);
+        assert_eq!(bare.name(0), "t0");
+        assert_eq!(bare.weight(0), 3);
+        assert_eq!(bare.weight(1), 1);
+
+        let quotas = QosPolicy::parse("a:3:16,b:1:8").unwrap();
+        assert_eq!(quotas.quota(0), 16);
+        assert_eq!(quotas.quota(1), 8);
+
+        // Default quotas: weight-proportional share of the depth, min 1.
+        let filled = QosPolicy::parse("a:3,b:1").unwrap().with_default_quotas(64);
+        assert_eq!(filled.quota(0), 48);
+        assert_eq!(filled.quota(1), 16);
+
+        assert!(QosPolicy::parse("").is_err());
+        assert!(QosPolicy::parse("a").is_err());
+        assert!(QosPolicy::parse("a:x").is_err());
+        assert!(QosPolicy::parse("a:1:y").is_err());
+        assert!(QosPolicy::parse(":1").is_err());
+    }
+
+    #[test]
+    fn drr_select_share_tracks_weights_and_preserves_deficit_carryover() {
+        let policy = QosPolicy::parse("heavy:3,light:1").unwrap();
+        let mut deficits = BTreeMap::new();
+        let mut pending: BTreeMap<u32, usize> = BTreeMap::new();
+        pending.insert(0, 10_000);
+        pending.insert(1, 10_000);
+        let mut taken = [0u64; 2];
+        // Many small batches over a permanently backlogged pair: the drain
+        // shares must converge to the 3:1 weights.
+        for _ in 0..256 {
+            for &t in &policy.drr_select(&mut deficits, &pending, 8) {
+                taken[t as usize] += 1;
+            }
+        }
+        let total = taken[0] + taken[1];
+        assert_eq!(total, 256 * 8);
+        let heavy_share = taken[0] as f64 / total as f64;
+        assert!(
+            (heavy_share - 0.75).abs() < 0.02,
+            "heavy share {heavy_share} should converge to 0.75"
+        );
+    }
+
+    #[test]
+    fn drr_select_drains_everything_when_room_allows() {
+        let policy = QosPolicy::parse("a:5,b:1").unwrap();
+        let mut deficits = BTreeMap::new();
+        let mut pending: BTreeMap<u32, usize> = BTreeMap::new();
+        pending.insert(0, 3);
+        pending.insert(1, 2);
+        let order = policy.drr_select(&mut deficits, &pending, 64);
+        assert_eq!(order.iter().filter(|&&t| t == 0).count(), 3);
+        assert_eq!(order.iter().filter(|&&t| t == 1).count(), 2);
+        // Both lanes emptied: deficits reset, no credit hoarding.
+        assert!(deficits.values().all(|&d| d == 0));
+    }
+
+    #[test]
+    fn quota_shed_is_typed_counted_once_and_never_enqueued() {
+        // Quota 0 for tenant 0: every submission sheds at admission.
+        let policy = QosPolicy::new(vec![TenantClass {
+            name: "z".to_string(),
+            weight: 1,
+            quota: Some(0),
+        }]);
+        let asy =
+            AsyncDotService::new_with_qos(cfg(1, 1000), AsyncOptions::default(), Some(policy), None)
+                .unwrap();
+        match asy.submit(shared_dot(64, 1)).unwrap_err() {
+            BackendError::QuotaExceeded { tenant } => assert_eq!(tenant, 0),
+            other => panic!("expected QuotaExceeded, got {other:?}"),
+        }
+        match asy.try_submit(shared_dot(64, 2)).unwrap() {
+            TrySubmit::Quota => {}
+            other => panic!("expected Quota, got {other:?}"),
+        }
+        let stats = asy.stats();
+        assert_eq!(stats.quota_shed, 2);
+        assert_eq!(stats.enqueued, 0, "shed requests must never enqueue");
+        assert_eq!(stats.completed, 0);
+        let rows = asy.tenant_stats();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].quota_shed, 2);
+        assert_eq!(rows[0].admitted, 0, "a shed request is not admitted");
+    }
+
+    #[test]
+    fn weighted_fair_service_matches_sync_bits_and_accounts_per_tenant() {
+        let policy = QosPolicy::parse("a:3,b:1").unwrap();
+        let asy =
+            AsyncDotService::new_with_qos(cfg(3, 1000), AsyncOptions::default(), Some(policy), None)
+                .unwrap();
+        let sync = DotService::new(cfg(3, 1000)).unwrap();
+        let inputs: Vec<(u32, SharedInput)> = (0..12)
+            .map(|i| (i % 2, shared_dot(300 + (i % 5) * 400, 9000 + i as u64)))
+            .collect();
+        let handles: Vec<(ResponseHandle, &SharedInput)> = inputs
+            .iter()
+            .map(|(tenant, input)| {
+                let h = asy
+                    .submit_with_opts(input.clone(), Instant::now(), None, *tenant)
+                    .unwrap();
+                (h, input)
+            })
+            .collect();
+        for (h, input) in handles {
+            let want = sync.submit(&input.view()).unwrap();
+            let got = h.wait().unwrap();
+            assert_eq!(got.value.to_bits(), want.value.to_bits());
+        }
+        let rows = asy.tenant_stats();
+        assert_eq!(rows.len(), 2);
+        for row in rows {
+            assert_eq!(row.admitted, 6);
+            assert_eq!(row.completed, 6, "tenant {} must fully retire", row.tenant);
+            assert_eq!(row.quota_shed, 0);
+        }
+    }
+
+    #[test]
+    fn quota_admission_reject_fault_sheds_exactly_once() {
+        use super::super::faults::FaultPlan;
+        let plan = FaultPlan::none().with(FaultSite::QuotaAdmissionReject, 1);
+        let injector = crate::serve::faults::FaultInjector::new(plan);
+        let policy = QosPolicy::parse("a:1").unwrap();
+        let asy = AsyncDotService::new_with_qos(
+            cfg(2, 1000),
+            AsyncOptions::default(),
+            Some(policy),
+            Some(Arc::clone(&injector)),
+        )
+        .unwrap();
+        // First submission hits the armed trigger: typed quota error.
+        match asy.submit(shared_dot(128, 11)).unwrap_err() {
+            BackendError::QuotaExceeded { tenant } => assert_eq!(tenant, 0),
+            other => panic!("expected QuotaExceeded, got {other:?}"),
+        }
+        // Second submission is admitted and completes normally.
+        let got = asy.submit(shared_dot(128, 11)).unwrap().wait().unwrap();
+        let want = DotService::new(cfg(2, 1000))
+            .unwrap()
+            .submit(&shared_dot(128, 11).view())
+            .unwrap();
+        assert_eq!(got.value.to_bits(), want.value.to_bits());
+        assert_eq!(injector.fired(FaultSite::QuotaAdmissionReject), 1);
+        let rows = asy.tenant_stats();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].quota_shed, 1, "injected shed counted exactly once");
+        assert_eq!(rows[0].admitted, 1);
+        assert_eq!(rows[0].completed, 1);
+    }
+
+    #[test]
+    fn starvation_stall_injection_only_delays_selection() {
+        use super::super::faults::FaultPlan;
+        let plan = FaultPlan::none().with_stall(
+            FaultSite::StarvationStall,
+            1,
+            Duration::from_millis(2),
+        );
+        let injector = crate::serve::faults::FaultInjector::new(plan);
+        let policy = QosPolicy::parse("a:3,b:1").unwrap();
+        let asy = AsyncDotService::new_with_qos(
+            cfg(2, 1000),
+            AsyncOptions::default(),
+            Some(policy),
+            Some(Arc::clone(&injector)),
+        )
+        .unwrap();
+        let sync = DotService::new(cfg(2, 1000)).unwrap();
+        let handles: Vec<(ResponseHandle, SharedInput)> = (0..6)
+            .map(|i| {
+                let input = shared_dot(200 + i * 150, 600 + i as u64);
+                let h = asy
+                    .submit_with_opts(input.clone(), Instant::now(), None, (i % 2) as u32)
+                    .unwrap();
+                (h, input)
+            })
+            .collect();
+        for (h, input) in handles {
+            let want = sync.submit(&input.view()).unwrap();
+            let got = h.wait().expect("stall delays, never drops");
+            assert_eq!(got.value.to_bits(), want.value.to_bits());
+        }
+        assert_eq!(injector.fired(FaultSite::StarvationStall), 1);
+    }
+
+    #[test]
+    fn shutdown_drains_weighted_fair_backlog() {
+        // Close the service while requests sit in the QoS lanes: every
+        // ticket must still resolve (drain, not drop).
+        let policy = QosPolicy::parse("a:3,b:1").unwrap();
+        let asy =
+            AsyncDotService::new_with_qos(cfg(2, 256), AsyncOptions::default(), Some(policy), None)
+                .unwrap();
+        let handles: Vec<(ResponseHandle, SharedInput)> = (0..16)
+            .map(|i| {
+                let input = shared_dot(64 + (i % 4) * 250, 7100 + i as u64);
+                let h = asy
+                    .submit_with_opts(input.clone(), Instant::now(), None, (i % 2) as u32)
+                    .unwrap();
+                (h, input)
+            })
+            .collect();
+        drop(asy); // close + drain + join
+        let sync = DotService::new(cfg(2, 256)).unwrap();
+        for (h, input) in handles {
+            let want = sync.submit(&input.view()).unwrap();
+            let got = h.wait().expect("shutdown must drain, not drop, requests");
+            assert_eq!(got.value.to_bits(), want.value.to_bits());
+        }
     }
 }

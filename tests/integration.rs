@@ -601,6 +601,76 @@ fn wire_batch_deadline_shed_is_typed_and_nonfatal() {
     assert!(shed >= 1, "the expired batch must shed in-queue, shed = {shed}");
 }
 
+/// End-to-end multi-tenant QoS over a real socket: two clients tag their
+/// traffic with different tenant ids against a weighted-fair server,
+/// every response is bit-identical to in-process execution (scheduling
+/// class never forks the numerics), a quota-0 tenant draws the typed
+/// QUOTA frame with a retry-after hint while the others keep serving, and
+/// the rev-1.2 tenant stats extension accounts every request exactly once
+/// (PROTOCOL.md §2.5, §3.7, §4.11).
+#[test]
+fn wire_tenants_are_scheduled_fairly_and_accounted_exactly_once() {
+    use kahan_ecm::runtime::backend::{ImplStyle, KernelInput};
+    use kahan_ecm::serve::codec::ErrorCode;
+    use kahan_ecm::serve::{
+        AsyncOptions, DotService, NetOptions, NetServer, QosPolicy, ServeConfig, ThresholdMode,
+        WireCallError, WireClient,
+    };
+
+    let cfg = ServeConfig {
+        threads: 2,
+        style: ImplStyle::SimdLanes,
+        compensated: true,
+        shard_threshold: ThresholdMode::Fixed(1024),
+        freq_ghz: 3.0,
+    };
+    let net = NetOptions {
+        qos: Some(QosPolicy::parse("gold:3:64,bronze:1:64,blocked:1:0").unwrap()),
+        ..NetOptions::default()
+    };
+    let server =
+        NetServer::bind_with("127.0.0.1:0", cfg.clone(), AsyncOptions::default(), net).unwrap();
+    let reference = DotService::new(cfg).unwrap();
+    let mut gold = WireClient::connect(server.local_addr()).unwrap();
+    let mut bronze = WireClient::connect(server.local_addr()).unwrap();
+
+    // Interleaved tagged traffic from both clients: every response must
+    // match the in-process service bit-for-bit, fused and sharded alike.
+    let sizes = [256usize, 2048, 512, 4096];
+    for (k, &n) in sizes.iter().cycle().take(12).enumerate() {
+        let x: Vec<f64> = (0..n).map(|i| 0.5 + (i as f64) * 1e-4).collect();
+        let y: Vec<f64> = (0..n).map(|i| 1.5 - (i as f64) * 1e-5).collect();
+        let (client, tenant) = if k % 4 == 3 { (&mut bronze, 1) } else { (&mut gold, 0) };
+        let wire = client.dot_with_tenant(&x, &y, tenant).unwrap();
+        let local = reference.submit(&KernelInput::Dot(&x, &y)).unwrap();
+        assert_eq!(wire.value.to_bits(), local.value.to_bits(), "tenant {tenant}, n={n}");
+        assert_eq!(wire.path, local.path, "tenant {tenant}, n={n}");
+    }
+
+    // The quota-0 tenant sheds with the typed QUOTA frame (distinct from
+    // BUSY) and a retry-after hint; the connection survives the shed.
+    let x: Vec<f64> = (0..256).map(|i| 0.25 + (i as f64) * 1e-3).collect();
+    match bronze.dot_with_tenant(&x, &x, 2) {
+        Err(WireCallError::Server(e)) => {
+            assert_eq!(e.code, ErrorCode::Quota);
+            assert!(e.retry_after_us.unwrap_or(0) > 0, "QUOTA must carry a retry hint");
+        }
+        other => panic!("expected a typed QUOTA frame, got {other:?}"),
+    }
+    bronze.dot_with_tenant(&x, &x, 1).unwrap();
+
+    // The tenant stats extension accounts every request exactly once.
+    let (_, rows) = gold.stats_tenants(0).unwrap();
+    let row = |t: u32| rows.iter().find(|r| r.tenant == t).copied().unwrap();
+    assert_eq!(row(0).admitted, 9);
+    assert_eq!(row(1).admitted, 4);
+    assert_eq!(row(0).completed, 9, "gold traffic fully retires");
+    assert_eq!(row(1).completed, 4, "bronze traffic fully retires");
+    assert_eq!(row(2).admitted, 0);
+    assert_eq!(row(2).quota_shed, 1, "the shed is counted exactly once");
+    assert_eq!(row(0).quota_shed + row(1).quota_shed, 0);
+}
+
 /// The wire load generator's wall-clock watchdog: against a server that
 /// answers stats probes but swallows every dot request, the run fails
 /// with a diagnostic watchdog error — it must never hang CI.

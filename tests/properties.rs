@@ -1069,6 +1069,7 @@ fn wire_codec_round_trips_bit_exact() {
             ErrorCode::Shutdown,
             ErrorCode::Internal,
             ErrorCode::Deadline,
+            ErrorCode::Quota,
         ]);
         let (op, _, payload) = split(&codec::encode_error(id, code, "synthetic diagnostic"));
         match codec::decode_response(op, &payload).unwrap() {
@@ -1152,10 +1153,14 @@ fn wire_codec_rejects_hostile_frames_without_panic() {
                 .code,
             ErrorCode::Oversized
         );
-        // The assigned flag bit is accepted (§2.4); unknown bits and a
-        // non-zero reserved byte are each non-fatal Malformed.
+        // The assigned flag bits are accepted (§2.4) — singly and
+        // combined — while unknown bits and a non-zero reserved byte are
+        // each non-fatal Malformed.
         assert_eq!(head(&|h| h[6] = codec::FLAG_DEADLINE).unwrap().flags, codec::FLAG_DEADLINE);
-        assert_eq!(head(&|h| h[6] = 0x02).unwrap_err().code, ErrorCode::Malformed);
+        assert_eq!(head(&|h| h[6] = codec::FLAG_TENANT).unwrap().flags, codec::FLAG_TENANT);
+        let both = codec::FLAG_DEADLINE | codec::FLAG_TENANT;
+        assert_eq!(head(&|h| h[6] = both).unwrap().flags, both);
+        assert_eq!(head(&|h| h[6] = 0x08).unwrap_err().code, ErrorCode::Malformed);
         assert_eq!(head(&|h| h[7] = 1).unwrap_err().code, ErrorCode::Malformed);
         // Magic outranks version: both wrong reports BadMagic first.
         assert_eq!(
@@ -1181,15 +1186,19 @@ fn wire_codec_rejects_hostile_frames_without_panic() {
     });
 }
 
-/// Resolve-exactly-once under injected faults, per in-process site: with a
-/// single fault armed at each site in turn, every submitted request
-/// resolves — a value or a typed error, never a hang — the injector's
-/// accounting confirms the fault actually fired, and every successful
-/// result stays bit-identical to a clean service at the same thread count
-/// (the degradation contract never buys liveness with changed bits).
+/// Resolve-exactly-once under injected faults, per in-process site —
+/// including the tenant-facing sites: with a single fault armed at each
+/// site in turn on a two-tenant weighted-fair service, every submitted
+/// request resolves — a value, a typed error, or a typed admission shed,
+/// never a hang — the injector's accounting confirms the fault actually
+/// fired, and every successful result stays bit-identical to a clean
+/// service at the same thread count (the degradation contract never buys
+/// liveness with changed bits).
 #[test]
 fn fault_matrix_every_in_process_site_resolves_exactly_once() {
-    use std::time::Duration;
+    use kahan_ecm::runtime::backend::BackendError;
+    use kahan_ecm::serve::QosPolicy;
+    use std::time::{Duration, Instant};
     let mut rng = Rng::new(0xFA117);
     let x: Vec<f64> = (0..1200).map(|_| rng.normal()).collect();
     let y: Vec<f64> = (0..1200).map(|_| rng.normal()).collect();
@@ -1199,23 +1208,32 @@ fn fault_matrix_every_in_process_site_resolves_exactly_once() {
     for &site in &FaultSite::IN_PROCESS {
         // Trigger 1 everywhere: the first arrival at a site always exists
         // (a 24-request burst may drain as a single arrival batch, so a
-        // dispatcher-stall trigger beyond 1 would not be guaranteed).
+        // dispatcher-stall trigger beyond 1 would not be guaranteed, and
+        // the starvation-stall site arms once per weighted-fair drain).
         let plan = if site.is_stall() {
             FaultPlan::none().with_stall(site, 1, Duration::from_millis(5))
         } else {
             FaultPlan::none().with(site, 1)
         };
         let injector = FaultInjector::new(plan);
-        let asy = AsyncDotService::new_with_faults(
+        let policy = QosPolicy::parse("a:3,b:1").unwrap();
+        let asy = AsyncDotService::new_with_qos(
             serve_cfg(2, 512),
             AsyncOptions::default(),
+            Some(policy),
             Some(injector.clone()),
         )
         .unwrap();
         let total = 24usize;
-        let handles: Vec<_> = (0..total)
-            .map(|_| asy.submit(input.clone()).unwrap())
-            .collect();
+        let mut shed = 0usize;
+        let mut handles = Vec::new();
+        for k in 0..total {
+            match asy.submit_with_opts(input.clone(), Instant::now(), None, (k % 2) as u32) {
+                Ok(h) => handles.push(h),
+                Err(BackendError::QuotaExceeded { .. }) => shed += 1,
+                Err(other) => panic!("{site:?}: unexpected submit error: {other}"),
+            }
+        }
         let (mut ok, mut errs) = (0usize, 0usize);
         for h in handles {
             match h.wait_timed_for(Duration::from_secs(30)) {
@@ -1228,13 +1246,24 @@ fn fault_matrix_every_in_process_site_resolves_exactly_once() {
                 None => panic!("{site:?}: request hung — resolve-exactly-once broken"),
             }
         }
-        assert_eq!(ok + errs, total, "{site:?}: every request must resolve");
+        assert_eq!(ok + errs + shed, total, "{site:?}: every request must resolve");
         assert_eq!(injector.fired(site), 1, "{site:?}: armed fault must fire once");
-        if site == FaultSite::WorkerPanic {
-            assert!(errs >= 1, "an injected panic must fail at least its own dispatch");
-            assert!(ok >= 1, "the healed pool must serve the remaining requests");
-        } else {
-            assert_eq!(errs, 0, "{site:?}: stalls may only delay, never fail");
+        let quota_shed: u64 = asy.tenant_stats().iter().map(|r| r.quota_shed).sum();
+        match site {
+            FaultSite::WorkerPanic => {
+                assert!(errs >= 1, "an injected panic must fail at least its own dispatch");
+                assert!(ok >= 1, "the healed pool must serve the remaining requests");
+            }
+            FaultSite::QuotaAdmissionReject => {
+                assert_eq!(shed, 1, "the armed admission check sheds exactly one request");
+                assert_eq!(errs, 0, "a quota shed is an admission outcome, not a late error");
+                assert_eq!(quota_shed, 1, "tenant accounting records the shed exactly once");
+            }
+            _ => assert_eq!(errs, 0, "{site:?}: stalls may only delay, never fail"),
+        }
+        if site != FaultSite::QuotaAdmissionReject {
+            assert_eq!(shed, 0, "{site:?}: only the quota site sheds admissions");
+            assert_eq!(quota_shed, 0, "{site:?}: no tenant may record a quota shed");
         }
     }
 }
@@ -1320,4 +1349,169 @@ fn idle_fault_injector_is_bit_invisible() {
         assert_eq!(w.path, g.path);
     }
     assert_eq!(injector.total_fired(), 0, "an empty plan must never fire");
+}
+
+/// Scheduling never forks the numerics: the same deterministic request
+/// stream, folded in submission order, yields a bit-identical checksum —
+/// and the same fused/sharded path split — whether the queue drains FIFO,
+/// weighted-fair, or with the tenant priorities reversed, across random
+/// weights, mixtures, and operand seeds at a fixed thread count. The QoS
+/// layer decides *where and when* a request runs, never *what* it
+/// computes (queue.rs `QosPolicy` contract).
+#[test]
+fn scheduling_interleavings_preserve_bit_parity_at_fixed_threads() {
+    use kahan_ecm::serve::{run_interleaving_checksum, MixEntry, OperandPool, QosPolicy};
+
+    property("interleaving bit-parity", 4, |g| {
+        let wa = g.u64(1, 5);
+        let wb = g.u64(1, 5);
+        let mix = vec![
+            MixEntry { n: g.usize(128, 1024), weight: 0.75 },
+            MixEntry { n: g.usize(4096, 12288), weight: 0.25 },
+        ];
+        let requests = g.usize(24, 48);
+        let seed = g.u64(1, 1 << 40);
+        let policies: Vec<Option<QosPolicy>> = vec![
+            None,
+            Some(QosPolicy::parse(&format!("a:{wa},b:{wb}")).unwrap()),
+            Some(QosPolicy::parse(&format!("a:{wb},b:{wa}")).unwrap()),
+        ];
+        let mut reports = Vec::new();
+        for qos in policies {
+            let asy = AsyncDotService::new_with_qos(
+                serve_cfg(2, 2048),
+                AsyncOptions::default(),
+                qos,
+                None,
+            )
+            .unwrap();
+            let ops = OperandPool::generate(&mix, seed, asy.service().pool());
+            reports.push(run_interleaving_checksum(&asy, &mix, &ops, requests, 2, seed).unwrap());
+        }
+        let fifo = &reports[0];
+        assert_eq!(fifo.fused + fifo.sharded, requests);
+        for r in &reports[1..] {
+            assert_eq!(
+                r.checksum.to_bits(),
+                fifo.checksum.to_bits(),
+                "scheduling must never fork the numerics: {reports:?}"
+            );
+            assert_eq!((r.fused, r.sharded), (fifo.fused, fifo.sharded));
+        }
+    });
+}
+
+/// The deficit-round-robin core is weight-fair: over a permanently
+/// backlogged tenant set with random weights and tenant counts, each
+/// tenant's share of drain slots converges to `weight / Σ weights`
+/// (within the quantum granularity), every slot is filled, and no
+/// backlogged tenant is ever starved. `drr_select` is pure, so the
+/// invariant is pinned without a running service.
+#[test]
+fn drr_fairness_share_converges_to_weights() {
+    use kahan_ecm::serve::{QosPolicy, TenantClass};
+    use std::collections::BTreeMap;
+
+    property("DRR share converges to weights", 40, |g| {
+        let tenants = g.usize(2, 5);
+        let classes: Vec<TenantClass> = (0..tenants)
+            .map(|i| TenantClass {
+                name: format!("t{i}"),
+                weight: g.u64(1, 6) as u32,
+                quota: None,
+            })
+            .collect();
+        let weight_sum: u64 = classes.iter().map(|c| u64::from(c.weight)).sum();
+        let policy = QosPolicy::new(classes.clone());
+        // A whole number of credit rounds per batch keeps the quantum
+        // granularity out of the measured shares; carryover covers the
+        // rest (the queue-level batch_max is tuned the same way).
+        let batch_max = (weight_sum as usize) * g.usize(1, 5);
+        let rounds = 256usize;
+        let mut deficits = BTreeMap::new();
+        let pending: BTreeMap<u32, usize> =
+            (0..tenants as u32).map(|t| (t, 1 << 20)).collect();
+        let mut taken = vec![0u64; tenants];
+        for _ in 0..rounds {
+            for &t in &policy.drr_select(&mut deficits, &pending, batch_max) {
+                taken[t as usize] += 1;
+            }
+        }
+        let total: u64 = taken.iter().sum();
+        assert_eq!(total as usize, rounds * batch_max, "a backlogged set fills every slot");
+        for (i, c) in classes.iter().enumerate() {
+            assert!(taken[i] > 0, "tenant {i} (weight {}) must never starve", c.weight);
+            let share = taken[i] as f64 / total as f64;
+            let want = u64::from(c.weight) as f64 / weight_sum as f64;
+            assert!(
+                (share - want).abs() < 0.02,
+                "tenant {i} share {share:.4} should converge to weight share {want:.4}"
+            );
+        }
+    });
+}
+
+/// Quota accounting is conservative — no request is ever double-counted
+/// and none is lost: over random quotas, burst sizes, and operand sizes,
+/// every non-blocking submission lands in exactly one bucket (accepted,
+/// quota-shed, or busy-shed), the tenant counters agree with the caller's
+/// own bookkeeping, and at quiescence every admitted request has
+/// completed. With quota 0, every submission sheds at admission.
+#[test]
+fn quota_accounting_never_double_counts_a_shed_request() {
+    use kahan_ecm::serve::{QosPolicy, TenantClass, TrySubmit};
+    use std::time::{Duration, Instant};
+
+    property("quota accounting conservation", 8, |g| {
+        let quota = g.usize(0, 3);
+        let offered = g.usize(6, 18);
+        let n = g.usize(64, 512);
+        let policy = QosPolicy::new(vec![TenantClass {
+            name: "only".to_string(),
+            weight: 1,
+            quota: Some(quota),
+        }]);
+        let asy = AsyncDotService::new_with_qos(
+            serve_cfg(2, 4096),
+            AsyncOptions::default(),
+            Some(policy),
+            None,
+        )
+        .unwrap();
+        let x = g.vec_f64_log(n, -8, 8);
+        let y = g.vec_f64_log(n, -8, 8);
+        let input = SharedInput::dot(&x, &y);
+        let (mut accepted, mut qshed, mut busy) = (Vec::new(), 0u64, 0u64);
+        for _ in 0..offered {
+            match asy
+                .try_submit_with_opts(input.clone(), Instant::now(), None, 0)
+                .unwrap()
+            {
+                TrySubmit::Accepted(h) => accepted.push(h),
+                TrySubmit::Quota => qshed += 1,
+                TrySubmit::Busy => busy += 1,
+            }
+        }
+        assert_eq!(
+            accepted.len() as u64 + qshed + busy,
+            offered as u64,
+            "every submission lands in exactly one bucket"
+        );
+        if quota == 0 {
+            assert!(accepted.is_empty(), "quota 0 admits nothing");
+            assert_eq!(qshed, offered as u64);
+        }
+        for h in &accepted {
+            h.wait_timed_for(Duration::from_secs(30))
+                .expect("admitted request hung")
+                .expect("admitted request failed");
+        }
+        let rows = asy.tenant_stats();
+        assert_eq!(rows.len(), 1);
+        let row = rows[0];
+        assert_eq!(row.admitted, accepted.len() as u64, "admitted matches the caller's count");
+        assert_eq!(row.quota_shed, qshed, "each shed is counted exactly once");
+        assert_eq!(row.completed, row.admitted, "at quiescence every admission completes");
+        assert_eq!(row.deadline_shed, 0);
+    });
 }

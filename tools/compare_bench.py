@@ -41,15 +41,37 @@ METRICS = {
     "serving_wire_reqs_per_s": ("higher", 0.40),
 }
 
+# (prefix, suffix) -> rule, for headline families whose middle segment is
+# dynamic. serving_tenant_<name>_p99_us carries one weighted-scenario tail
+# per configured tenant class; as loose as the wire tail, because the QoS
+# scheduler shares the smoke runner's wobble.
+PREFIX_METRICS = [
+    ("serving_tenant_", "_p99_us", ("lower", 0.60)),
+]
+
+
+def rule_for(name):
+    """The (direction, tolerance) rule for a headline metric, or None if
+    the metric never feeds the perf verdict."""
+    if name in METRICS:
+        return METRICS[name]
+    for prefix, suffix, rule in PREFIX_METRICS:
+        if name.startswith(prefix) and name.endswith(suffix):
+            return rule
+    return None
+
+
 # Chaos-run accounting (the serving document's `chaos` block and the
 # `serving_chaos_*` headline entries) is deliberately absent from the
 # allowlist above: fault-injection runs measure robustness, not
 # performance — their latency and throughput are dominated by injected
 # stalls and shed requests, so comparing them across runs would only add
 # noise to the perf verdict. Their gates (hung_requests == 0, recovery
-# verified) are hard-checked by tools/validate_bench.py instead.
+# verified, tenant isolation) are hard-checked by tools/validate_bench.py
+# instead.
 assert not any(m.startswith("serving_chaos") for m in METRICS), \
     "chaos accounting must never feed perf verdicts"
+assert rule_for("serving_chaos_total_injected") is None
 
 
 def load_summary(path):
@@ -64,7 +86,7 @@ def load_summary(path):
 
 
 def compare_metric(name, base, cur):
-    direction, tolerance = METRICS[name]
+    direction, tolerance = rule_for(name)
     if base <= 0:
         return {"metric": name, "baseline": base, "current": cur,
                 "ratio": None, "verdict": "skipped"}
@@ -119,7 +141,9 @@ def main(argv):
               f"recording current headline only")
     else:
         base_h, cur_h = baseline["headline"], current["headline"]
-        for name in sorted(METRICS):
+        names = sorted(set(METRICS) |
+                       {n for n in cur_h if rule_for(n) is not None})
+        for name in names:
             if name in base_h and name in cur_h:
                 result["comparisons"].append(
                     compare_metric(name, base_h[name], cur_h[name]))

@@ -98,17 +98,67 @@ def synth_chaos():
     return {
         "seed": 1,
         "requests": 256,
-        "completed_ok": 200,
+        "completed_ok": 196,
         "deadline_shed": 40,
+        "quota_shed": 4,
         "worker_panics": 14,
         "other_errors": 2,
         "hung_requests": 0,
         "injected": {"worker_panic": 1, "dispatcher_stall": 1,
                      "latch_wake_delay": 1, "socket_read_error": 0,
                      "socket_write_error": 0, "truncated_frame": 0,
-                     "conn_drop_mid_batch": 0, "slow_client_writer": 0},
-        "total_injected": 3,
+                     "conn_drop_mid_batch": 0, "slow_client_writer": 0,
+                     "quota_admission_reject": 4, "starvation_stall": 1},
+        "total_injected": 8,
         "recovery": {"verified": True, "latency_ns": 150000.0},
+    }
+
+
+def tenant_row(tenant, name, weight, quota, offered, admitted, quota_shed,
+               p99, busy_shed=0, deadline_shed=0):
+    completed = admitted - deadline_shed
+    lat = {"p50": p99 * 0.4, "p99": p99, "max": p99 * 1.4} if completed \
+        else {"p50": None, "p99": None, "max": None}
+    return {
+        "tenant": tenant, "name": name, "weight": weight, "quota": quota,
+        "offered": offered, "admitted": admitted,
+        "completed_ok": completed, "quota_shed": quota_shed,
+        "busy_shed": busy_shed, "deadline_shed": deadline_shed,
+        "latency_ns": lat,
+    }
+
+
+def synth_tenants():
+    """The PR 8 `tenants` block: a 3:1 two-class policy, the uncontended
+    weighted mixture, the noisy-neighbor run (heavy tenant a saturating and
+    quota-shedding, light tenant b isolated), and bit-identical scheduling
+    interleaving checksums."""
+    return {
+        "policy": [
+            {"tenant": 0, "name": "a", "weight": 3, "quota": 48},
+            {"tenant": 1, "name": "b", "weight": 1, "quota": 16},
+        ],
+        "scenarios": {
+            "weighted": {
+                "requests": 256, "rate_rps": 35000.0, "elapsed_ns": 6.0e7,
+                "rows": [
+                    tenant_row(0, "a", 3, 48, 192, 192, 0, 1.8e5),
+                    tenant_row(1, "b", 1, 16, 64, 64, 0, 2.2e5),
+                ],
+            },
+            "noisy": {
+                "requests": 288, "rate_rps": 140000.0, "elapsed_ns": 8.0e7,
+                "rows": [
+                    tenant_row(0, "a", 3, 48, 256, 200, 56, 9.0e5),
+                    tenant_row(1, "b", 1, 16, 32, 32, 0, 4.0e5),
+                ],
+            },
+        },
+        "interleaving": {
+            "requests": 64,
+            "fifo": 321.125, "weighted": 321.125, "reversed": 321.125,
+            "match": True,
+        },
     }
 
 
@@ -158,6 +208,7 @@ def synth_serving():
         },
         "wire": wire_row(3.0e6, checksum, fused, sharded, requests),
         "chaos": synth_chaos(),
+        "tenants": synth_tenants(),
         "async_p99_ok": True,
         "calibration": {
             "measured": {"p1_gups": 1.8, "p1_mflops": 9000.0, "p1_n": 262144,
@@ -333,6 +384,104 @@ def test_validators():
                 mutate(serving, non_finite_latencies),
                 "non-finite latencies in a healthy row")
 
+    def chaos_quota_leak(d):
+        d["chaos"]["quota_shed"] += 1
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, chaos_quota_leak),
+                "chaos quota bucket breaks the partition")
+
+    # Pre-PR-8 chaos blocks have no quota bucket; the partition check
+    # defaults it to zero.
+    def chaos_pre_pr8(d):
+        d["chaos"]["completed_ok"] += d["chaos"].pop("quota_shed")
+    expect_ok(validate_bench.validate_serving, mutate(serving, chaos_pre_pr8),
+              "chaos block without quota bucket (pre-PR-8)")
+
+    # Tenants block (PR 8): optional, but when present the QoS hard gates
+    # apply — interleaving bit-parity, conservation per tenant, and
+    # noisy-neighbor isolation.
+    def no_tenants(d):
+        del d["tenants"]
+    expect_ok(validate_bench.validate_serving, mutate(serving, no_tenants),
+              "serving valid without tenants block")
+
+    def tenants_interleave_forked(d):
+        inter = d["tenants"]["interleaving"]
+        inter["weighted"] += 1e-9
+        inter["match"] = False
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, tenants_interleave_forked),
+                "interleaving checksums diverged")
+
+    def tenants_interleave_lying_match(d):
+        # The match flag says yes but the recorded floats disagree: the
+        # validator must recompute, not trust the flag.
+        d["tenants"]["interleaving"]["reversed"] += 1e-9
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, tenants_interleave_lying_match),
+                "interleaving match flag contradicts the checksums")
+
+    def tenants_heavy_never_shed(d):
+        row = d["tenants"]["scenarios"]["noisy"]["rows"][0]
+        row["quota_shed"] = 0
+        row["admitted"] = row["offered"]
+        row["completed_ok"] = row["offered"]
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, tenants_heavy_never_shed),
+                "noisy scenario that never tripped the quota")
+
+    def tenants_light_shed(d):
+        row = d["tenants"]["scenarios"]["noisy"]["rows"][1]
+        row["quota_shed"] = 1
+        row["admitted"] -= 1
+        row["completed_ok"] -= 1
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, tenants_light_shed),
+                "heavy load leaking into the light tenant's quota")
+
+    def tenants_light_tail_blowout(d):
+        lat = d["tenants"]["scenarios"]["noisy"]["rows"][1]["latency_ns"]
+        lat["p99"] = 1.0e10
+        lat["max"] = 1.5e10
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, tenants_light_tail_blowout),
+                "light tenant p99 blown out by the noisy neighbor")
+
+    def tenants_admission_leak(d):
+        d["tenants"]["scenarios"]["weighted"]["rows"][0]["admitted"] -= 1
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, tenants_admission_leak),
+                "tenant admission buckets do not partition offered")
+
+    def tenants_resolution_leak(d):
+        d["tenants"]["scenarios"]["weighted"]["rows"][0]["completed_ok"] -= 1
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, tenants_resolution_leak),
+                "admitted tenant request that never resolved")
+
+    def tenants_policy_drift(d):
+        d["tenants"]["scenarios"]["weighted"]["rows"][0]["weight"] = 2
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, tenants_policy_drift),
+                "scenario row disagrees with the policy block")
+
+    def tenants_null_latency_with_completions(d):
+        d["tenants"]["scenarios"]["weighted"]["rows"][1]["latency_ns"] = \
+            {"p50": None, "p99": None, "max": None}
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, tenants_null_latency_with_completions),
+                "completed tenant row with null latency")
+
+    # A fully-shed tenant row (zero completions, null latency) is legal in
+    # the weighted scenario — the isolation gates only constrain the noisy
+    # rows and the light tenants' uncontended tails.
+    def tenants_zero_completion_row(d):
+        d["tenants"]["scenarios"]["weighted"]["rows"][0] = \
+            tenant_row(0, "a", 3, 48, 192, 0, 192, 0.0)
+    expect_ok(validate_bench.validate_serving,
+              mutate(serving, tenants_zero_completion_row),
+              "fully quota-shed tenant row with null latency")
+
 
 def write_docs(tmp, docs):
     paths = []
@@ -361,7 +510,8 @@ def test_merge_and_summary(tmp):
     for key in ("serving_async_p99_us", "serving_sync_p99_us",
                 "serving_measured_p1_mflops", "serving_reqs_per_s",
                 "serving_wire_p99_us", "serving_wire_reqs_per_s",
-                "serving_chaos_total_injected", "serving_chaos_hung"):
+                "serving_chaos_total_injected", "serving_chaos_hung",
+                "serving_tenant_a_p99_us", "serving_tenant_b_p99_us"):
         assert key in h, f"missing headline metric {key}: {sorted(h)}"
     # Re-validating the merged document must pass too.
     rc = validate_bench.main([merged])
@@ -382,16 +532,20 @@ def test_compare(tmp, merged):
     assert verdict["comparisons"], "no metrics compared"
     assert all(c["verdict"] == "ok" for c in verdict["comparisons"])
     # Chaos accounting is present in the headline but must never be
-    # compared — robustness numbers are not perf metrics.
+    # compared — robustness numbers are not perf metrics. Per-tenant tails
+    # ARE compared, via the prefix rule (their names are dynamic).
     compared = {c["metric"] for c in verdict["comparisons"]}
     assert not any(m.startswith("serving_chaos") for m in compared), compared
-    print("ok  compare identical -> ok (chaos metrics excluded)")
+    assert {"serving_tenant_a_p99_us", "serving_tenant_b_p99_us"} <= compared, \
+        compared
+    print("ok  compare identical -> ok (chaos excluded, tenant tails in)")
 
     # A big serving regression: warn by default, fail under --strict.
     with open(merged) as f:
         worse = json.load(f)
     worse["headline"]["serving_reqs_per_s"] *= 0.4
     worse["headline"]["serving_p99_us"] *= 3.0
+    worse["headline"]["serving_tenant_b_p99_us"] *= 3.0
     worse_path = os.path.join(tmp, "BENCH_summary_worse.json")
     with open(worse_path, "w") as f:
         json.dump(worse, f)
@@ -403,7 +557,8 @@ def test_compare(tmp, merged):
     assert verdict["verdict"] == "regressed"
     regressed = {c["metric"] for c in verdict["comparisons"]
                  if c["verdict"] == "regressed"}
-    assert {"serving_reqs_per_s", "serving_p99_us"} <= regressed, regressed
+    assert {"serving_reqs_per_s", "serving_p99_us",
+            "serving_tenant_b_p99_us"} <= regressed, regressed
     rc = compare_bench.main(["--baseline", merged, "--current", worse_path,
                              "--out", out, "--strict"])
     assert rc == 1, "--strict must fail on a regression"

@@ -156,6 +156,10 @@ def validate_chaos_block(chaos):
     buckets = {k: chaos[k] for k in ("completed_ok", "deadline_shed",
                                      "worker_panics", "other_errors",
                                      "hung_requests")}
+    # Tenant-QoS chaos runs (PR 8) add the quota-shed bucket: requests
+    # refused at admission by a quota check or the injected
+    # quota_admission_reject site. Absent in pre-PR-8 artifacts.
+    buckets["quota_shed"] = chaos.get("quota_shed", 0)
     for name, count in buckets.items():
         assert count >= 0 and count == int(count), (name, count)
     assert sum(buckets.values()) == requests, \
@@ -176,6 +180,112 @@ def validate_chaos_block(chaos):
     assert recovery["verified"] is True, \
         "post-chaos recovery probe was not bit-identical to the sync path"
     assert recovery["latency_ns"] > 0, recovery
+
+
+def validate_tenant_scenario(scn, policy, label):
+    """One `--tenants` scenario (weighted / noisy): an offered rate plus
+    one accounting + latency row per tenant class, aligned with the policy
+    rows. The accounting must be conservative — every offered request
+    lands in exactly one bucket, and every admitted request resolves.
+    """
+    assert scn["requests"] >= 1, (label, scn["requests"])
+    assert scn["rate_rps"] > 0, (label, scn["rate_rps"])
+    assert scn["elapsed_ns"] > 0, (label, scn["elapsed_ns"])
+    rows = scn["rows"]
+    assert len(rows) == len(policy), \
+        f"{label}: {len(rows)} rows for {len(policy)} tenant classes"
+    offered_total = 0
+    for row, cls in zip(rows, policy):
+        t = row["tenant"]
+        assert (t, row["name"], row["weight"], row["quota"]) == \
+            (cls["tenant"], cls["name"], cls["weight"], cls["quota"]), \
+            f"{label}: row {t} disagrees with the policy block"
+        offered_total += row["offered"]
+        assert row["offered"] >= 1, (label, t, row["offered"])
+        for k in ("admitted", "completed_ok", "quota_shed", "busy_shed",
+                  "deadline_shed"):
+            assert row[k] >= 0 and row[k] == int(row[k]), (label, t, k, row[k])
+        # Admission conservation: shed-on-overload is typed and counted
+        # exactly once, so the three buckets partition the offered load.
+        assert row["admitted"] + row["quota_shed"] + row["busy_shed"] == \
+            row["offered"], \
+            f"{label}: tenant {t} admission buckets do not partition offered"
+        # Resolution conservation: every admitted request resolved as a
+        # success or an in-queue deadline shed (other errors fail the run).
+        assert row["completed_ok"] + row["deadline_shed"] == row["admitted"], \
+            f"{label}: tenant {t} resolved {row['completed_ok']} ok + " \
+            f"{row['deadline_shed']} shed != admitted {row['admitted']}"
+        lat = row["latency_ns"]
+        if row["completed_ok"] > 0:
+            assert all(lat[k] is not None for k in ("p50", "p99", "max")), \
+                f"{label}: tenant {t} completed requests but has null latency"
+            assert 0 < lat["p50"] <= lat["p99"] <= lat["max"], (label, t, lat)
+        else:
+            assert lat["p50"] is None, \
+                f"{label}: tenant {t} has latency but zero completions"
+    assert offered_total == scn["requests"], \
+        f"{label}: per-tenant offered sums to {offered_total}, " \
+        f"not {scn['requests']}"
+
+
+def validate_tenants_block(doc):
+    """The optional `tenants` block (PR 8 schema): the QoS policy, the
+    weighted-mixture and noisy-neighbor scenarios, and the scheduling
+    interleaving checksums. Carries the two hard QoS gates:
+
+    * bit-parity — FIFO, weighted-fair and reversed-priority drains of the
+      same request stream produce bit-identical checksums (scheduling must
+      never fork the numerics);
+    * isolation — the saturating tenant in the noisy-neighbor scenario is
+      quota-shed while every light tenant keeps completing, with a p99 no
+      worse than 10x its uncontended (weighted-scenario) tail plus 50 ms
+      of shared-runner slack.
+    """
+    tenants = doc["tenants"]
+    policy = tenants["policy"]
+    assert policy, "tenants block without policy rows"
+    for i, cls in enumerate(policy):
+        assert cls["tenant"] == i, f"policy row {i} has tenant {cls['tenant']}"
+        assert cls["name"], f"policy row {i} has an empty name"
+        assert cls["weight"] >= 1, (i, cls["weight"])
+        assert cls["quota"] is None or cls["quota"] >= 0, (i, cls["quota"])
+    scenarios = tenants["scenarios"]
+    weighted, noisy = scenarios["weighted"], scenarios["noisy"]
+    validate_tenant_scenario(weighted, policy, "weighted")
+    validate_tenant_scenario(noisy, policy, "noisy")
+    # Hard gate 1: scheduling interleavings are bit-identical. The floats
+    # round-trip bit-exactly through JSON (shortest-round-trip printing),
+    # so equality here is the Rust-side to_bits comparison.
+    inter = tenants["interleaving"]
+    assert inter["requests"] >= 1, inter["requests"]
+    assert inter["match"] is True, \
+        "scheduling interleavings diverged: the QoS layer forked the numerics"
+    assert inter["fifo"] == inter["weighted"] == inter["reversed"], \
+        f"interleaving checksums differ: fifo {inter['fifo']} / " \
+        f"weighted {inter['weighted']} / reversed {inter['reversed']}"
+    # Hard gate 2: noisy-neighbor isolation. The heavy tenant (row 0,
+    # offered the whole request budget at 4x rate) must hit its quota;
+    # every light tenant must keep completing with a bounded tail.
+    heavy, lights = noisy["rows"][0], noisy["rows"][1:]
+    assert lights, "noisy-neighbor scenario needs at least one light tenant"
+    assert heavy["quota_shed"] > 0, \
+        "the saturating tenant never hit its quota — the noisy-neighbor " \
+        "scenario is not exercising admission control"
+    for light, calm in zip(lights, weighted["rows"][1:]):
+        t = light["tenant"]
+        assert light["quota_shed"] == 0, \
+            f"light tenant {t} was quota-shed: the heavy tenant's load " \
+            f"leaked into its admission budget"
+        assert light["completed_ok"] == light["offered"], \
+            f"light tenant {t} completed {light['completed_ok']} of " \
+            f"{light['offered']}: starved by the noisy neighbor"
+        assert calm["latency_ns"]["p99"] is not None, \
+            f"light tenant {t} has no uncontended tail to compare against"
+        bound = calm["latency_ns"]["p99"] * 10.0 + 5e7
+        assert light["latency_ns"]["p99"] <= bound, \
+            f"light tenant {t} p99 {light['latency_ns']['p99']:.0f} ns " \
+            f"exceeds 10x its uncontended tail + 50 ms ({bound:.0f} ns): " \
+            f"weighted-fair scheduling failed to isolate it"
 
 
 def validate_serving(doc, smoke_async_check=False):
@@ -276,10 +386,17 @@ def validate_serving(doc, smoke_async_check=False):
     chaos = doc.get("chaos")
     if chaos is not None:
         validate_chaos_block(chaos)
+    tenants = doc.get("tenants")
+    if tenants is not None:
+        validate_tenants_block(doc)
     extra = ", calibrated" if "calibration" in doc else ""
     if chaos is not None:
         extra += (f", chaos {chaos['total_injected']} faults / "
                   f"{chaos['hung_requests']} hung")
+    if tenants is not None:
+        heavy = tenants["scenarios"]["noisy"]["rows"][0]
+        extra += (f", {len(tenants['policy'])} tenants "
+                  f"(noisy heavy shed {heavy['quota_shed']})")
     if wire is not None:
         extra += (f", wire p99 {wire['latency_ns']['p99'] / 1e3:.1f} us "
                   f"over {wire['connections']} conn")
@@ -350,6 +467,14 @@ def headline_of(documents):
             # serving_chaos_* out of its perf-verdict allowlist.
             h["serving_chaos_total_injected"] = chaos["total_injected"]
             h["serving_chaos_hung"] = chaos["hung_requests"]
+        tenants = serving.get("tenants")
+        if tenants:
+            # Per-tenant tails from the uncontended weighted scenario; the
+            # dynamic names are matched by prefix in tools/compare_bench.py.
+            for row in tenants["scenarios"]["weighted"]["rows"]:
+                p99 = row["latency_ns"]["p99"]
+                if p99 is not None:
+                    h[f"serving_tenant_{row['name']}_p99_us"] = p99 / 1e3
     return h
 
 
