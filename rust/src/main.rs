@@ -40,10 +40,11 @@ use kahan_ecm::runtime::hostbench::{
 use kahan_ecm::runtime::parallel::ThreadPool;
 use kahan_ecm::serve::{
     calibrate, codec, default_mix, parse_mix, run_interleaving_checksum, run_load,
-    run_load_async, run_load_chaos, run_load_tenants, run_load_wire, AsyncDotService,
-    AsyncLoadReport, AsyncOptions, Calibration, ChaosReport, DotService, FaultInjector,
-    FaultPlan, FaultSite, InterleavingReport, LoadMode, LoadReport, NetOptions, NetServer,
-    OperandPool, QosPolicy, ServeConfig, TenantLoadReport, ThresholdMode, WireLoadReport,
+    run_load_async, run_load_chaos, run_load_tenants, run_load_wire, run_load_zipf,
+    AsyncDotService, AsyncLoadReport, AsyncOptions, Calibration, ChaosReport, DotService,
+    FaultInjector, FaultPlan, FaultSite, InterleavingReport, LoadMode, LoadReport, NetOptions,
+    NetServer, OperandPool, QosPolicy, ServeConfig, TenantLoadReport, ThresholdMode,
+    WireLoadReport, ZipfReport,
 };
 use kahan_ecm::sim::{self, MeasureOpts};
 use kahan_ecm::util::cli::Spec;
@@ -147,6 +148,12 @@ fn serve_bench_spec() -> Spec {
              on any hung request or failed recovery)",
         )
         .opt("chaos-seed", "fault-plan seed for --chaos (default: the request seed)")
+        .flag(
+            "zipf",
+            "run the skewed-popularity operand-store scenario and record a `zipf` block \
+             (hard-fails unless the cached pass is bit-identical to the baseline)",
+        )
+        .opt("zipf-s", "popularity exponent for --zipf (default: 1.2; 0 = uniform)")
         .opt(
             "tenants",
             "tenant QoS spec name:weight[:quota],... (bare weights like 3:1 also work); \
@@ -1352,6 +1359,90 @@ fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
         None
     };
 
+    // Zipf scenario (--zipf): the resident-operand-store story end to end.
+    // A dedicated loopback serve-net instance takes a skewed-popularity
+    // stream twice — once re-shipping payloads, once submitting 16-byte
+    // handle frames against the registered catalog — and the run hard-fails
+    // unless every cached value is bit-identical to its recomputed twin.
+    let zipf: Option<ZipfReport> = if args.flag("zipf") {
+        let zipf_s = match args.opt_parse("zipf-s", 1.2f64) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return ExitCode::FAILURE;
+            }
+        };
+        let (zipf_n, zipf_catalog, zipf_requests) =
+            if quick { (16384, 24, 400) } else { (65536, 48, 1500) };
+        let opts = AsyncOptions {
+            queue_depth,
+            batch_window: std::time::Duration::from_micros(batch_window_us),
+            batch_max: batch,
+            overlap: true,
+            deadline: None,
+        };
+        let srv = match NetServer::bind("127.0.0.1:0", cfg.clone(), opts) {
+            Ok(srv) => srv,
+            Err(e) => {
+                eprintln!("error: cannot bind the zipf loopback server: {e}");
+                return ExitCode::FAILURE;
+            }
+        };
+        let zipf_addr = srv.local_addr().to_string();
+        eprintln!(
+            "serve-bench: zipf scenario (s={}, catalog {zipf_catalog} x n={zipf_n}, \
+             {zipf_requests} draws/pass) at {zipf_addr} (loopback) ...",
+            fnum(zipf_s, 2)
+        );
+        let r = match run_load_zipf(&zipf_addr, zipf_n, zipf_catalog, zipf_requests, zipf_s, seed)
+        {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("error: zipf run failed: {e}");
+                return ExitCode::FAILURE;
+            }
+        };
+        drop(srv);
+        eprintln!(
+            "zipf: baseline {} req/s ({} B/req) vs handles {} req/s ({} B/req) — {}x, \
+             {} hit / {} miss of {} lookups, parity {}",
+            fnum(r.baseline.reqs_per_s, 0),
+            fnum(r.baseline.bytes_per_request, 0),
+            fnum(r.handles.reqs_per_s, 0),
+            fnum(r.handles.bytes_per_request, 0),
+            fnum(r.speedup, 2),
+            r.cache.cache_hits,
+            r.cache.cache_misses,
+            r.cache.cache_lookups,
+            if r.bit_parity { "bit-exact" } else { "FAILED" }
+        );
+        // Hard gate: the cache may change *when* a value is computed,
+        // never *what* it is (docs/ARCHITECTURE.md).
+        if !r.bit_parity {
+            eprintln!(
+                "error: zipf gate: cached pass diverged from the baseline ({} of {} values; \
+                 checksums {} / {})",
+                r.value_mismatches, r.requests, r.baseline.checksum, r.handles.checksum
+            );
+            return ExitCode::FAILURE;
+        }
+        // Structural sanity, not perf: every lookup is a hit or a miss,
+        // and a skewed draw over a small catalog must repeat itself.
+        if r.cache.cache_hits + r.cache.cache_misses != r.cache.cache_lookups
+            || r.cache.cache_hits == 0
+        {
+            eprintln!(
+                "error: zipf gate: cache counters inconsistent ({} hits + {} misses vs {} \
+                 lookups)",
+                r.cache.cache_hits, r.cache.cache_misses, r.cache.cache_lookups
+            );
+            return ExitCode::FAILURE;
+        }
+        Some(r)
+    } else {
+        None
+    };
+
     let mut t = Table::new(["metric", "value"]);
     t.row(["kernel".to_string(), service.dot_spec().id()]);
     t.row(["threads".to_string(), threads.to_string()]);
@@ -1566,6 +1657,71 @@ fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
         obj.insert("recovery".to_string(), Json::Obj(recovery));
         root.insert("chaos".to_string(), Json::Obj(obj));
     }
+    if let Some(r) = &zipf {
+        let pass = |p: &kahan_ecm::serve::ZipfPassReport| {
+            let mut obj = BTreeMap::new();
+            obj.insert("elapsed_ns".to_string(), Json::Num(p.elapsed_ns));
+            obj.insert("reqs_per_s".to_string(), Json::Num(p.reqs_per_s));
+            obj.insert("bytes_sent".to_string(), Json::Num(p.bytes_sent as f64));
+            obj.insert(
+                "bytes_per_request".to_string(),
+                Json::Num(p.bytes_per_request),
+            );
+            obj.insert("latency_p50_ns".to_string(), Json::Num(p.latency_p50_ns));
+            obj.insert("latency_p99_ns".to_string(), Json::Num(p.latency_p99_ns));
+            obj.insert("checksum".to_string(), Json::Num(p.checksum));
+            Json::Obj(obj)
+        };
+        let mut cache = BTreeMap::new();
+        cache.insert(
+            "store_entries".to_string(),
+            Json::Num(r.cache.store_entries as f64),
+        );
+        cache.insert(
+            "store_resident_bytes".to_string(),
+            Json::Num(r.cache.store_resident_bytes as f64),
+        );
+        cache.insert(
+            "store_registered".to_string(),
+            Json::Num(r.cache.store_registered as f64),
+        );
+        cache.insert(
+            "store_evictions".to_string(),
+            Json::Num(r.cache.store_evictions as f64),
+        );
+        cache.insert("lookups".to_string(), Json::Num(r.cache.cache_lookups as f64));
+        cache.insert("hits".to_string(), Json::Num(r.cache.cache_hits as f64));
+        cache.insert("misses".to_string(), Json::Num(r.cache.cache_misses as f64));
+        cache.insert(
+            "evictions".to_string(),
+            Json::Num(r.cache.cache_evictions as f64),
+        );
+        let mut obj = BTreeMap::new();
+        obj.insert("s".to_string(), Json::Num(r.zipf_s));
+        obj.insert("n".to_string(), Json::Num(r.n as f64));
+        obj.insert("catalog".to_string(), Json::Num(r.catalog as f64));
+        obj.insert("requests".to_string(), Json::Num(r.requests as f64));
+        obj.insert(
+            "unique_pairs_drawn".to_string(),
+            Json::Num(r.unique_pairs_drawn as f64),
+        );
+        obj.insert("baseline".to_string(), pass(&r.baseline));
+        obj.insert("handles".to_string(), pass(&r.handles));
+        obj.insert("speedup".to_string(), Json::Num(r.speedup));
+        obj.insert("register_ns".to_string(), Json::Num(r.register_ns));
+        obj.insert(
+            "register_bytes".to_string(),
+            Json::Num(r.register_bytes as f64),
+        );
+        obj.insert(
+            "value_mismatches".to_string(),
+            Json::Num(r.value_mismatches as f64),
+        );
+        // Hard-gated above: the artifact only exists when parity holds.
+        obj.insert("bit_parity".to_string(), Json::Bool(r.bit_parity));
+        obj.insert("cache".to_string(), Json::Obj(cache));
+        root.insert("zipf".to_string(), Json::Obj(obj));
+    }
     if let Some(c) = calibration {
         let mut measured = BTreeMap::new();
         measured.insert("p1_gups".to_string(), Json::Num(c.p1_gups));
@@ -1612,6 +1768,17 @@ fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
             fnum(w.load.latency_p99_ns / 1e3, 1),
             fnum(w.load.reqs_per_s, 0),
             w.busy_retries
+        );
+    }
+    if let Some(r) = &zipf {
+        println!(
+            "zipf: handle submits {}x the payload baseline ({} vs {} req/s, {} vs {} B/req), \
+             cached pass bit-exact",
+            fnum(r.speedup, 2),
+            fnum(r.handles.reqs_per_s, 0),
+            fnum(r.baseline.reqs_per_s, 0),
+            fnum(r.handles.bytes_per_request, 0),
+            fnum(r.baseline.bytes_per_request, 0)
         );
     }
     if let Some(tb) = &tenant_bench {

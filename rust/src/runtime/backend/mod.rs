@@ -280,6 +280,14 @@ pub enum BackendError {
     /// at admission without entering the queue (distinct from whole-queue
     /// backpressure, which blocks or reports busy instead).
     QuotaExceeded { tenant: u32 },
+    /// A handle-submit named an operand handle that is not resident in the
+    /// store (never registered, released, or evicted). The client
+    /// re-registers the operand — content addressing returns the same
+    /// handle — and retries.
+    UnknownHandle { handle: u64 },
+    /// A register payload alone exceeds the operand store's byte capacity,
+    /// so no eviction can make it resident.
+    StoreFull { requested: usize, capacity: usize },
 }
 
 impl fmt::Display for BackendError {
@@ -300,6 +308,15 @@ impl fmt::Display for BackendError {
             }
             BackendError::QuotaExceeded { tenant } => {
                 write!(f, "quota exceeded: tenant {tenant} is at its queue quota")
+            }
+            BackendError::UnknownHandle { handle } => {
+                write!(f, "unknown operand handle {handle:#018x}: not resident in the store")
+            }
+            BackendError::StoreFull { requested, capacity } => {
+                write!(
+                    f,
+                    "operand store full: {requested} bytes exceeds capacity {capacity}"
+                )
             }
         }
     }

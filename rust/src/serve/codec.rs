@@ -64,10 +64,19 @@ pub const FLAG_TENANT: u8 = 0x02;
 /// itself carried a revision-1.2 flag, so a pre-1.2 client never sees it.
 pub const FLAG_RETRY: u8 = 0x04;
 
+/// Header flag bit (revision 1.3): the sender understands the
+/// operand-store/result-cache extension (PROTOCOL.md §2.4). It carries no
+/// payload prefix. On a STATS request it opts into the cache-counter
+/// stats extension (§3.7); on a STATS_RESULT frame it announces that
+/// extension. Pre-1.3 servers reject the bit with a non-fatal
+/// [`ErrorCode::Malformed`] — the downgrade signal, exactly as for the
+/// 1.1/1.2 flags.
+pub const FLAG_CACHE: u8 = 0x08;
+
 /// All flag bits assigned so far (PROTOCOL.md §2.4). Unknown bits are
 /// rejected as [`ErrorCode::Malformed`] without closing the connection,
 /// exactly as revision 1.0 treated any nonzero offset-6 byte.
-pub const FLAGS_KNOWN: u8 = FLAG_DEADLINE | FLAG_TENANT | FLAG_RETRY;
+pub const FLAGS_KNOWN: u8 = FLAG_DEADLINE | FLAG_TENANT | FLAG_RETRY | FLAG_CACHE;
 
 /// Maximum payload length the codec will accept, 128 MiB
 /// (PROTOCOL.md §2.3). Large enough for a dot request over the full default
@@ -90,12 +99,29 @@ pub enum Opcode {
     /// Stats probe: empty payload, answered with a stats frame
     /// (PROTOCOL.md §3.4).
     Stats,
+    /// Register an operand vector into the resident store, answered with a
+    /// register-result frame carrying its content handle
+    /// (PROTOCOL.md §3.8, revision 1.3).
+    Register,
+    /// Drop the store's reference to a resident handle, answered with a
+    /// release-result frame (PROTOCOL.md §3.9, revision 1.3).
+    Release,
+    /// Dot-product request by resident-operand handle pair — 16 payload
+    /// bytes instead of two inline vectors; answered with an ordinary
+    /// result frame (PROTOCOL.md §3.10, revision 1.3).
+    DotHandles,
     /// Server → client scalar result (PROTOCOL.md §3.5).
     Result,
     /// Server → client batch result (PROTOCOL.md §3.6).
     BatchResult,
     /// Server → client stats snapshot (PROTOCOL.md §3.7).
     StatsResult,
+    /// Server → client register acknowledgement (PROTOCOL.md §3.8,
+    /// revision 1.3).
+    RegisterResult,
+    /// Server → client release acknowledgement (PROTOCOL.md §3.9,
+    /// revision 1.3).
+    ReleaseResult,
     /// Server → client typed error frame (PROTOCOL.md §4).
     Error,
 }
@@ -108,9 +134,14 @@ impl Opcode {
             Opcode::Sum => 0x02,
             Opcode::Batch => 0x03,
             Opcode::Stats => 0x04,
+            Opcode::Register => 0x05,
+            Opcode::Release => 0x06,
+            Opcode::DotHandles => 0x07,
             Opcode::Result => 0x81,
             Opcode::BatchResult => 0x83,
             Opcode::StatsResult => 0x84,
+            Opcode::RegisterResult => 0x85,
+            Opcode::ReleaseResult => 0x86,
             Opcode::Error => 0xFF,
         }
     }
@@ -124,9 +155,14 @@ impl Opcode {
             0x02 => Opcode::Sum,
             0x03 => Opcode::Batch,
             0x04 => Opcode::Stats,
+            0x05 => Opcode::Register,
+            0x06 => Opcode::Release,
+            0x07 => Opcode::DotHandles,
             0x81 => Opcode::Result,
             0x83 => Opcode::BatchResult,
             0x84 => Opcode::StatsResult,
+            0x85 => Opcode::RegisterResult,
+            0x86 => Opcode::ReleaseResult,
             0xFF => Opcode::Error,
             _ => return None,
         })
@@ -175,6 +211,18 @@ pub enum ErrorCode {
     /// (PROTOCOL.md §4.11, revision 1.2); pre-1.2 clients decode the byte
     /// as [`ErrorCode::Internal`].
     Quota,
+    /// A handle-submit or RELEASE named a handle that is not resident —
+    /// never registered, already released, or evicted under capacity
+    /// pressure. Non-fatal: the client re-registers the operand (getting
+    /// the same handle back, since handles are content hashes) and
+    /// retries (PROTOCOL.md §4.12, revision 1.3). Pre-1.3 clients decode
+    /// the byte as [`ErrorCode::Internal`].
+    UnknownHandle,
+    /// A REGISTER payload alone exceeds the operand store's byte capacity,
+    /// so no eviction can make it resident. Non-fatal: the client falls
+    /// back to inline payload submission (PROTOCOL.md §4.13, revision
+    /// 1.3). Pre-1.3 clients decode the byte as [`ErrorCode::Internal`].
+    StoreFull,
 }
 
 impl ErrorCode {
@@ -192,6 +240,8 @@ impl ErrorCode {
             ErrorCode::Internal => 0x09,
             ErrorCode::Deadline => 0x0A,
             ErrorCode::Quota => 0x0B,
+            ErrorCode::UnknownHandle => 0x0C,
+            ErrorCode::StoreFull => 0x0D,
         }
     }
 
@@ -210,6 +260,8 @@ impl ErrorCode {
             0x08 => ErrorCode::Shutdown,
             0x0A => ErrorCode::Deadline,
             0x0B => ErrorCode::Quota,
+            0x0C => ErrorCode::UnknownHandle,
+            0x0D => ErrorCode::StoreFull,
             _ => ErrorCode::Internal,
         }
     }
@@ -238,6 +290,8 @@ impl ErrorCode {
             ErrorCode::Internal => "internal",
             ErrorCode::Deadline => "deadline",
             ErrorCode::Quota => "quota",
+            ErrorCode::UnknownHandle => "unknown-handle",
+            ErrorCode::StoreFull => "store-full",
         }
     }
 }
@@ -459,8 +513,8 @@ pub fn split_deadline(flags: u8, payload: &[u8]) -> Result<(Option<u64>, &[u8]),
 }
 
 /// Per-request metadata announced by header flags and carried as payload
-/// prefixes (PROTOCOL.md §2.4): the revision-1.1 deadline and the
-/// revision-1.2 tenant id.
+/// prefixes (PROTOCOL.md §2.4): the revision-1.1 deadline, the
+/// revision-1.2 tenant id, and the prefix-free revision-1.3 cache bit.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct RequestMeta {
     /// Shedding budget in microseconds from server receipt
@@ -469,18 +523,24 @@ pub struct RequestMeta {
     /// Tenant id for QoS admission and scheduling ([`FLAG_TENANT`]).
     /// Absent means the default tenant (id 0).
     pub tenant: Option<u32>,
+    /// Revision-1.3 cache awareness ([`FLAG_CACHE`], no payload prefix).
+    /// On a STATS request it opts into the cache-counter stats extension
+    /// (PROTOCOL.md §3.7).
+    pub cache: bool,
 }
 
-/// Strip every flagged payload prefix (PROTOCOL.md §2.4, revision 1.2):
+/// Strip every flagged payload prefix (PROTOCOL.md §2.4, revision 1.3):
 /// the 8-byte deadline ([`FLAG_DEADLINE`]), then the 4-byte tenant id
 /// ([`FLAG_TENANT`]) — prefixes appear in ascending flag-bit order.
-/// Returns the decoded metadata and the remaining request payload; a
-/// flagged payload shorter than its prefixes is [`ErrorCode::Malformed`].
+/// [`FLAG_CACHE`] carries no prefix and is recorded as-is. Returns the
+/// decoded metadata and the remaining request payload; a flagged payload
+/// shorter than its prefixes is [`ErrorCode::Malformed`].
 pub fn split_prefixes(flags: u8, payload: &[u8]) -> Result<(RequestMeta, &[u8]), WireError> {
     let (deadline_us, rest) = split_deadline(flags, payload)?;
     let mut meta = RequestMeta {
         deadline_us,
         tenant: None,
+        cache: flags & FLAG_CACHE != 0,
     };
     if flags & FLAG_TENANT == 0 {
         return Ok((meta, rest));
@@ -515,6 +575,9 @@ pub fn encode_frame_with_meta(
     if meta.tenant.is_some() {
         flags |= FLAG_TENANT;
         prefix_len += 4;
+    }
+    if meta.cache {
+        flags |= FLAG_CACHE; // prefix-free (PROTOCOL.md §2.4)
     }
     let total = payload.len() + prefix_len;
     assert!(
@@ -651,6 +714,46 @@ pub fn encode_sum(request_id: u64, x: &[f64]) -> Vec<u8> {
     encode_frame(Opcode::Sum, request_id, &encode_sum_payload(x))
 }
 
+/// Encode a REGISTER payload — element count then the vector as IEEE-754
+/// bit patterns, identical in shape to a sum payload (PROTOCOL.md §3.8).
+/// These are exactly the bytes the server hashes (after the count) to
+/// derive the operand's content handle.
+pub fn encode_register_payload(x: &[f64]) -> Vec<u8> {
+    encode_sum_payload(x)
+}
+
+/// Encode a complete REGISTER request frame (PROTOCOL.md §3.8, revision
+/// 1.3).
+pub fn encode_register(request_id: u64, x: &[f64]) -> Vec<u8> {
+    encode_frame(Opcode::Register, request_id, &encode_register_payload(x))
+}
+
+/// Encode a complete RELEASE request frame — one little-endian `u64`
+/// handle (PROTOCOL.md §3.9, revision 1.3).
+pub fn encode_release(request_id: u64, handle: u64) -> Vec<u8> {
+    encode_frame(Opcode::Release, request_id, &handle.to_le_bytes())
+}
+
+/// Encode a DOT_HANDLES payload — the two resident-operand handles,
+/// little-endian, x first (PROTOCOL.md §3.10): 16 bytes regardless of
+/// operand length, the entire point of the resident store.
+pub fn encode_dot_handles_payload(a: u64, b: u64) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(16);
+    payload.extend_from_slice(&a.to_le_bytes());
+    payload.extend_from_slice(&b.to_le_bytes());
+    payload
+}
+
+/// Encode a complete DOT_HANDLES request frame (PROTOCOL.md §3.10,
+/// revision 1.3).
+pub fn encode_dot_handles(request_id: u64, a: u64, b: u64) -> Vec<u8> {
+    encode_frame(
+        Opcode::DotHandles,
+        request_id,
+        &encode_dot_handles_payload(a, b),
+    )
+}
+
 fn encode_request_payload(out: &mut Vec<u8>, input: &SharedInput) {
     match input {
         SharedInput::Dot(x, y) => {
@@ -696,6 +799,26 @@ pub fn encode_stats_tenants(request_id: u64, tenant: u32) -> Vec<u8> {
         RequestMeta {
             deadline_us: None,
             tenant: Some(tenant),
+            cache: false,
+        },
+        &[],
+    )
+}
+
+/// Encode a stats probe that opts into the cache-counter extension
+/// (PROTOCOL.md §3.7, revision 1.3): [`FLAG_CACHE`] asks the server to
+/// answer with a [`FLAG_CACHE`]-flagged stats result carrying
+/// operand-store and result-cache counters. Pass a tenant to opt into the
+/// per-tenant extension as well; both extensions then appear in the
+/// response in ascending flag-bit order.
+pub fn encode_stats_cache(request_id: u64, tenant: Option<u32>) -> Vec<u8> {
+    encode_frame_with_meta(
+        Opcode::Stats,
+        request_id,
+        RequestMeta {
+            deadline_us: None,
+            tenant,
+            cache: true,
         },
         &[],
     )
@@ -711,6 +834,20 @@ pub enum Request {
     Batch(Vec<SharedInput>),
     /// A stats probe (PROTOCOL.md §3.4).
     Stats,
+    /// Register an operand into the resident store (PROTOCOL.md §3.8,
+    /// revision 1.3). Decoded straight into an aligned arena buffer, like
+    /// inline operands.
+    Register(Arc<AlignedVec>),
+    /// Release a resident-operand handle (PROTOCOL.md §3.9, revision 1.3).
+    Release(u64),
+    /// A dot submitted by resident-operand handle pair (PROTOCOL.md §3.10,
+    /// revision 1.3).
+    SubmitHandles {
+        /// Handle of the first operand (`x`).
+        a: u64,
+        /// Handle of the second operand (`y`).
+        b: u64,
+    },
 }
 
 /// Upper bound on elements implied by a payload of `len` bytes, used to cap
@@ -799,6 +936,21 @@ pub fn decode_request(opcode: Opcode, payload: &[u8]) -> Result<Request, WireErr
             Request::Batch(inputs)
         }
         Opcode::Stats => Request::Stats,
+        Opcode::Register => {
+            let n = r.u32()? as usize;
+            if n > element_cap(payload.len(), 8) {
+                return Err(WireError::new(
+                    ErrorCode::Malformed,
+                    format!("register count {} exceeds payload capacity", n),
+                ));
+            }
+            Request::Register(decode_vec(&mut r, n)?)
+        }
+        Opcode::Release => Request::Release(r.u64()?),
+        Opcode::DotHandles => Request::SubmitHandles {
+            a: r.u64()?,
+            b: r.u64()?,
+        },
         other => {
             return Err(WireError::new(
                 ErrorCode::BadOpcode,
@@ -934,35 +1086,114 @@ pub fn encode_stats_result(request_id: u64, stats: &WireStats) -> Vec<u8> {
     encode_frame(Opcode::StatsResult, request_id, &payload)
 }
 
+/// Operand-store and result-cache counters carried by the [`FLAG_CACHE`]
+/// stats extension (PROTOCOL.md §3.7, revision 1.3): eight little-endian
+/// `u64` fields in this order, appended after the per-tenant extension
+/// when both are present (extensions appear in ascending flag-bit order).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireCacheStats {
+    /// Operands currently resident in the store.
+    pub store_entries: u64,
+    /// Bytes currently resident in the store.
+    pub store_resident_bytes: u64,
+    /// Fresh registrations since startup (upserts not counted).
+    pub store_registered: u64,
+    /// Store entries removed by capacity-pressure LRU eviction.
+    pub store_evictions: u64,
+    /// Result-cache probes since startup.
+    pub cache_lookups: u64,
+    /// Probes that found a memoized result
+    /// (`cache_hits + cache_misses == cache_lookups`).
+    pub cache_hits: u64,
+    /// Probes that found nothing.
+    pub cache_misses: u64,
+    /// Cache entries removed by capacity-pressure LRU eviction.
+    pub cache_evictions: u64,
+}
+
+fn push_cache_fields(payload: &mut Vec<u8>, cache: &WireCacheStats) {
+    for field in [
+        cache.store_entries,
+        cache.store_resident_bytes,
+        cache.store_registered,
+        cache.store_evictions,
+        cache.cache_lookups,
+        cache.cache_hits,
+        cache.cache_misses,
+        cache.cache_evictions,
+    ] {
+        payload.extend_from_slice(&field.to_le_bytes());
+    }
+}
+
 /// Encode a stats-result frame carrying the per-tenant extension
-/// (PROTOCOL.md §3.7, revision 1.2): the fixed eight `u64` fields, then a
-/// `u32` row count, then one [`WireTenantStats`] row per tenant. The
-/// frame's [`FLAG_TENANT`] bit announces the extension; servers send it
-/// only to clients that opted in via a tenant-flagged STATS request.
+/// (PROTOCOL.md §3.7, revision 1.2). Shorthand for
+/// [`encode_stats_result_ext`] with no cache extension.
 pub fn encode_stats_result_tenants(
     request_id: u64,
     stats: &WireStats,
     tenants: &[WireTenantStats],
 ) -> Vec<u8> {
-    let mut payload = Vec::with_capacity(64 + 4 + 36 * tenants.len());
+    encode_stats_result_ext(request_id, stats, Some(tenants), None)
+}
+
+/// Encode a stats-result frame carrying any combination of the flagged
+/// extensions (PROTOCOL.md §3.7): the fixed eight `u64` fields, then — in
+/// ascending flag-bit order — the per-tenant rows ([`FLAG_TENANT`],
+/// revision 1.2) and the cache counters ([`FLAG_CACHE`], revision 1.3).
+/// The frame's flag bits announce exactly the extensions present; servers
+/// send each extension only to clients that opted in via the matching
+/// flag on their STATS request.
+pub fn encode_stats_result_ext(
+    request_id: u64,
+    stats: &WireStats,
+    tenants: Option<&[WireTenantStats]>,
+    cache: Option<&WireCacheStats>,
+) -> Vec<u8> {
+    let mut flags = 0u8;
+    let mut payload = Vec::with_capacity(64 + 4 + 36 * tenants.map_or(0, <[_]>::len) + 64);
     push_stats_fields(&mut payload, stats);
-    payload.extend_from_slice(&(tenants.len() as u32).to_le_bytes());
-    for row in tenants {
-        payload.extend_from_slice(&row.tenant.to_le_bytes());
-        for field in [row.admitted, row.completed, row.quota_shed, row.deadline_shed] {
-            payload.extend_from_slice(&field.to_le_bytes());
+    if let Some(rows) = tenants {
+        flags |= FLAG_TENANT;
+        payload.extend_from_slice(&(rows.len() as u32).to_le_bytes());
+        for row in rows {
+            payload.extend_from_slice(&row.tenant.to_le_bytes());
+            for field in [row.admitted, row.completed, row.quota_shed, row.deadline_shed] {
+                payload.extend_from_slice(&field.to_le_bytes());
+            }
         }
+    }
+    if let Some(cache) = cache {
+        flags |= FLAG_CACHE;
+        push_cache_fields(&mut payload, cache);
     }
     let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
     encode_header_flagged(
         &mut out,
         Opcode::StatsResult,
-        FLAG_TENANT,
+        flags,
         request_id,
         payload.len() as u32,
     );
     out.extend_from_slice(&payload);
     out
+}
+
+/// Encode a register-result frame (PROTOCOL.md §3.8): handle (8) + element
+/// count (8) + fresh byte (1), where fresh is `0x01` iff the contents were
+/// not resident before this REGISTER.
+pub fn encode_register_result(request_id: u64, handle: u64, n: u64, fresh: bool) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(17);
+    payload.extend_from_slice(&handle.to_le_bytes());
+    payload.extend_from_slice(&n.to_le_bytes());
+    payload.push(u8::from(fresh));
+    encode_frame(Opcode::RegisterResult, request_id, &payload)
+}
+
+/// Encode a release-result frame (PROTOCOL.md §3.9): one found byte,
+/// `0x01` iff the handle was resident and its store reference dropped.
+pub fn encode_release_result(request_id: u64, found: bool) -> Vec<u8> {
+    encode_frame(Opcode::ReleaseResult, request_id, &[u8::from(found)])
 }
 
 /// Encode a typed error frame (PROTOCOL.md §4): code byte (1) + message
@@ -1026,6 +1257,31 @@ pub enum Response {
         /// Per-tenant QoS counter rows, ascending by tenant id.
         tenants: Vec<WireTenantStats>,
     },
+    /// A stats snapshot with the revision-1.3 cache-counter extension
+    /// (PROTOCOL.md §3.7), optionally combined with the per-tenant rows.
+    CacheStats {
+        /// The fixed eight-field snapshot every revision carries.
+        stats: WireStats,
+        /// Per-tenant QoS counter rows if [`FLAG_TENANT`] was also set;
+        /// empty otherwise.
+        tenants: Vec<WireTenantStats>,
+        /// Operand-store and result-cache counters.
+        cache: WireCacheStats,
+    },
+    /// A register acknowledgement (PROTOCOL.md §3.8, revision 1.3).
+    Registered {
+        /// The operand's content-derived handle.
+        handle: u64,
+        /// Element count of the registered operand.
+        n: u64,
+        /// Whether the contents were newly made resident.
+        fresh: bool,
+    },
+    /// A release acknowledgement (PROTOCOL.md §3.9, revision 1.3).
+    Released {
+        /// Whether the handle was resident and removed.
+        found: bool,
+    },
     /// A typed error frame (PROTOCOL.md §4).
     Error(WireError),
 }
@@ -1075,9 +1331,8 @@ pub fn decode_response_flagged(
                 max_queue_depth: r.u64()?,
                 busy_ns: r.u64()?,
             };
-            if flags & FLAG_TENANT == 0 {
-                Response::Stats(stats)
-            } else {
+            let mut tenants = Vec::new();
+            if flags & FLAG_TENANT != 0 {
                 let count = r.u32()? as usize;
                 // Each row costs 36 bytes (u32 + 4 × u64).
                 if count > element_cap(payload.len(), 36) {
@@ -1086,7 +1341,7 @@ pub fn decode_response_flagged(
                         format!("tenant-stats count {} exceeds payload capacity", count),
                     ));
                 }
-                let mut tenants = Vec::with_capacity(count);
+                tenants.reserve(count);
                 for _ in 0..count {
                     tenants.push(WireTenantStats {
                         tenant: r.u32()?,
@@ -1096,9 +1351,37 @@ pub fn decode_response_flagged(
                         deadline_shed: r.u64()?,
                     });
                 }
+            }
+            if flags & FLAG_CACHE != 0 {
+                // Extensions appear in ascending flag-bit order, so the
+                // cache counters follow the tenant rows (PROTOCOL.md §3.7).
+                let cache = WireCacheStats {
+                    store_entries: r.u64()?,
+                    store_resident_bytes: r.u64()?,
+                    store_registered: r.u64()?,
+                    store_evictions: r.u64()?,
+                    cache_lookups: r.u64()?,
+                    cache_hits: r.u64()?,
+                    cache_misses: r.u64()?,
+                    cache_evictions: r.u64()?,
+                };
+                Response::CacheStats {
+                    stats,
+                    tenants,
+                    cache,
+                }
+            } else if flags & FLAG_TENANT != 0 {
                 Response::TenantStats { stats, tenants }
+            } else {
+                Response::Stats(stats)
             }
         }
+        Opcode::RegisterResult => Response::Registered {
+            handle: r.u64()?,
+            n: r.u64()?,
+            fresh: r.u8()? != 0,
+        },
+        Opcode::ReleaseResult => Response::Released { found: r.u8()? != 0 },
         Opcode::Error => {
             let code = ErrorCode::from_byte(r.u8()?);
             let retry_after_us = if flags & FLAG_RETRY != 0 {
@@ -1156,9 +1439,14 @@ mod tests {
             Opcode::Sum,
             Opcode::Batch,
             Opcode::Stats,
+            Opcode::Register,
+            Opcode::Release,
+            Opcode::DotHandles,
             Opcode::Result,
             Opcode::BatchResult,
             Opcode::StatsResult,
+            Opcode::RegisterResult,
+            Opcode::ReleaseResult,
             Opcode::Error,
         ] {
             assert_eq!(Opcode::from_byte(op.byte()), Some(op));
@@ -1181,6 +1469,8 @@ mod tests {
             ErrorCode::Internal,
             ErrorCode::Deadline,
             ErrorCode::Quota,
+            ErrorCode::UnknownHandle,
+            ErrorCode::StoreFull,
         ] {
             assert_eq!(ErrorCode::from_byte(code.byte()), code);
         }
@@ -1194,6 +1484,8 @@ mod tests {
         assert!(!ErrorCode::Invalid.is_fatal());
         assert!(!ErrorCode::Deadline.is_fatal());
         assert!(!ErrorCode::Quota.is_fatal());
+        assert!(!ErrorCode::UnknownHandle.is_fatal());
+        assert!(!ErrorCode::StoreFull.is_fatal());
     }
 
     #[test]
@@ -1402,11 +1694,13 @@ mod tests {
         let frame = encode_stats(1);
         let mut head = [0u8; HEADER_LEN];
         head.copy_from_slice(&frame[..HEADER_LEN]);
-        head[6] = 0x08; // first unassigned flag bit (0x01/0x02/0x04 are taken)
+        head[6] = 0x10; // first unassigned flag bit (0x01/0x02/0x04/0x08 are taken)
         assert_eq!(
             decode_header(&head).unwrap_err().code,
             ErrorCode::Malformed
         );
+        head[6] = FLAG_CACHE;
+        assert_eq!(decode_header(&head).expect("known flag").flags, FLAG_CACHE);
         head[6] = FLAG_DEADLINE;
         assert_eq!(decode_header(&head).expect("known flag").flags, FLAG_DEADLINE);
         head[6] = FLAG_TENANT;
@@ -1465,6 +1759,7 @@ mod tests {
         let meta = RequestMeta {
             deadline_us: Some(2_000_000),
             tenant: Some(7),
+            cache: false,
         };
         let frame = encode_frame_with_meta(Opcode::Dot, 5, meta, &inner);
         let (header, payload) = split(&frame);
@@ -1481,6 +1776,7 @@ mod tests {
         let t_only = RequestMeta {
             deadline_us: None,
             tenant: Some(3),
+            cache: false,
         };
         let frame = encode_frame_with_meta(Opcode::Dot, 6, t_only, &inner);
         let (header, payload) = split(&frame);
@@ -1703,5 +1999,229 @@ mod tests {
             Response::Error(e) => assert_eq!(e.message.len(), 4096),
             other => panic!("unexpected response {:?}", other),
         }
+    }
+
+    #[test]
+    fn register_request_round_trip_bit_exact() {
+        let x = [1.0, -2.5, f64::MIN_POSITIVE, -0.0];
+        let frame = encode_register(31, &x);
+        let (header, payload) = split(&frame);
+        assert_eq!(header.opcode, Opcode::Register.byte());
+        match decode_request(Opcode::Register, payload).expect("decodes") {
+            Request::Register(v) => {
+                assert_eq!(v.len(), x.len());
+                for i in 0..x.len() {
+                    assert_eq!(v[i].to_bits(), x[i].to_bits());
+                }
+            }
+            other => panic!("unexpected request {:?}", other),
+        }
+        // A register payload is byte-identical to a sum payload: the
+        // content hash is defined over exactly these operand bytes.
+        assert_eq!(encode_register_payload(&x), encode_sum_payload(&x));
+    }
+
+    #[test]
+    fn release_and_dot_handles_round_trip() {
+        let frame = encode_release(32, 0xDEAD_BEEF_CAFE_F00D);
+        let (header, payload) = split(&frame);
+        assert_eq!(header.opcode, Opcode::Release.byte());
+        assert_eq!(header.payload_len, 8);
+        match decode_request(Opcode::Release, payload).expect("decodes") {
+            Request::Release(h) => assert_eq!(h, 0xDEAD_BEEF_CAFE_F00D),
+            other => panic!("unexpected request {:?}", other),
+        }
+        let frame = encode_dot_handles(33, 11, u64::MAX);
+        let (header, payload) = split(&frame);
+        assert_eq!(header.opcode, Opcode::DotHandles.byte());
+        assert_eq!(header.payload_len, 16);
+        match decode_request(Opcode::DotHandles, payload).expect("decodes") {
+            Request::SubmitHandles { a, b } => {
+                assert_eq!(a, 11);
+                assert_eq!(b, u64::MAX);
+            }
+            other => panic!("unexpected request {:?}", other),
+        }
+    }
+
+    #[test]
+    fn dot_handles_carries_prefixes_like_any_request() {
+        let meta = RequestMeta {
+            deadline_us: Some(5_000),
+            tenant: Some(2),
+            cache: false,
+        };
+        let inner = encode_dot_handles_payload(41, 42);
+        let frame = encode_frame_with_meta(Opcode::DotHandles, 77, meta, &inner);
+        let (header, payload) = split(&frame);
+        assert_eq!(header.flags, FLAG_DEADLINE | FLAG_TENANT);
+        let (got, rest) = split_prefixes(header.flags, payload).expect("well-formed");
+        assert_eq!(got, meta);
+        match decode_request(Opcode::DotHandles, rest).expect("decodes") {
+            Request::SubmitHandles { a, b } => {
+                assert_eq!(a, 41);
+                assert_eq!(b, 42);
+            }
+            other => panic!("unexpected request {:?}", other),
+        }
+    }
+
+    #[test]
+    fn cache_flag_is_prefix_free_and_round_trips_in_meta() {
+        let meta = RequestMeta {
+            deadline_us: None,
+            tenant: None,
+            cache: true,
+        };
+        let frame = encode_frame_with_meta(Opcode::Stats, 8, meta, &[]);
+        let (header, payload) = split(&frame);
+        assert_eq!(header.flags, FLAG_CACHE);
+        assert_eq!(header.payload_len, 0, "cache flag adds no prefix bytes");
+        let (got, rest) = split_prefixes(header.flags, payload).expect("well-formed");
+        assert!(got.cache);
+        assert!(rest.is_empty());
+        // encode_stats_cache is the same frame.
+        assert_eq!(encode_stats_cache(8, None), frame);
+    }
+
+    #[test]
+    fn register_result_round_trip() {
+        let frame = encode_register_result(51, 0x0123_4567_89AB_CDEF, 65536, true);
+        let (header, payload) = split(&frame);
+        assert_eq!(header.opcode, Opcode::RegisterResult.byte());
+        assert_eq!(header.payload_len, 17);
+        match decode_response(Opcode::RegisterResult, payload).expect("decodes") {
+            Response::Registered { handle, n, fresh } => {
+                assert_eq!(handle, 0x0123_4567_89AB_CDEF);
+                assert_eq!(n, 65536);
+                assert!(fresh);
+            }
+            other => panic!("unexpected response {:?}", other),
+        }
+        let frame = encode_register_result(52, 9, 4, false);
+        let (_, payload) = split(&frame);
+        match decode_response(Opcode::RegisterResult, payload).expect("decodes") {
+            Response::Registered { fresh, .. } => assert!(!fresh),
+            other => panic!("unexpected response {:?}", other),
+        }
+    }
+
+    #[test]
+    fn release_result_round_trip() {
+        for found in [true, false] {
+            let frame = encode_release_result(53, found);
+            let (header, payload) = split(&frame);
+            assert_eq!(header.opcode, Opcode::ReleaseResult.byte());
+            assert_eq!(header.payload_len, 1);
+            match decode_response(Opcode::ReleaseResult, payload).expect("decodes") {
+                Response::Released { found: f } => assert_eq!(f, found),
+                other => panic!("unexpected response {:?}", other),
+            }
+        }
+    }
+
+    #[test]
+    fn cache_stats_extension_round_trips_alone_and_with_tenants() {
+        let stats = WireStats {
+            queue_depth: 128,
+            threads: 4,
+            enqueued: 900,
+            completed: 1000,
+            arrival_batches: 80,
+            dispatches: 90,
+            max_queue_depth: 40,
+            busy_ns: 55_555,
+        };
+        let cache = WireCacheStats {
+            store_entries: 24,
+            store_resident_bytes: 24 << 17,
+            store_registered: 30,
+            store_evictions: 6,
+            cache_lookups: 1000,
+            cache_hits: 900,
+            cache_misses: 100,
+            cache_evictions: 2,
+        };
+        // Cache extension alone.
+        let frame = encode_stats_result_ext(61, &stats, None, Some(&cache));
+        let (header, payload) = split(&frame);
+        assert_eq!(header.flags, FLAG_CACHE);
+        match decode_response_flagged(header.flags, Opcode::StatsResult, payload)
+            .expect("decodes")
+        {
+            Response::CacheStats {
+                stats: s,
+                tenants: t,
+                cache: c,
+            } => {
+                assert_eq!(s, stats);
+                assert!(t.is_empty());
+                assert_eq!(c, cache);
+            }
+            other => panic!("unexpected response {:?}", other),
+        }
+        // Both extensions, ascending flag-bit order (tenants then cache).
+        let rows = vec![WireTenantStats {
+            tenant: 3,
+            admitted: 10,
+            completed: 10,
+            quota_shed: 1,
+            deadline_shed: 0,
+        }];
+        let frame = encode_stats_result_ext(62, &stats, Some(&rows), Some(&cache));
+        let (header, payload) = split(&frame);
+        assert_eq!(header.flags, FLAG_TENANT | FLAG_CACHE);
+        match decode_response_flagged(header.flags, Opcode::StatsResult, payload)
+            .expect("decodes")
+        {
+            Response::CacheStats {
+                stats: s,
+                tenants: t,
+                cache: c,
+            } => {
+                assert_eq!(s, stats);
+                assert_eq!(t, rows);
+                assert_eq!(c, cache);
+            }
+            other => panic!("unexpected response {:?}", other),
+        }
+        // Tenants-only frames still decode to TenantStats: the wrapper
+        // delegates without changing rev-1.2 bytes.
+        let frame = encode_stats_result_tenants(63, &stats, &rows);
+        let (header, payload) = split(&frame);
+        assert_eq!(header.flags, FLAG_TENANT);
+        assert!(matches!(
+            decode_response_flagged(header.flags, Opcode::StatsResult, payload),
+            Ok(Response::TenantStats { .. })
+        ));
+    }
+
+    #[test]
+    fn truncated_handle_payloads_never_panic() {
+        let frame = encode_dot_handles(1, 7, 8);
+        let full = &frame[HEADER_LEN..];
+        for cut in 0..full.len() {
+            assert_eq!(
+                decode_request(Opcode::DotHandles, &full[..cut])
+                    .unwrap_err()
+                    .code,
+                ErrorCode::Malformed,
+                "cut at {}",
+                cut
+            );
+        }
+        let frame = encode_register(2, &[1.0, 2.0]);
+        let full = &frame[HEADER_LEN..];
+        for cut in 0..full.len() {
+            assert!(decode_request(Opcode::Register, &full[..cut]).is_err());
+        }
+        // Oversized register counts rejected before allocation.
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&(1u32 << 31).to_le_bytes());
+        payload.extend_from_slice(&[0u8; 8]);
+        assert_eq!(
+            decode_request(Opcode::Register, &payload).unwrap_err().code,
+            ErrorCode::Malformed
+        );
     }
 }

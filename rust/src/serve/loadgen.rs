@@ -40,7 +40,7 @@ use crate::runtime::parallel::ThreadPool;
 use crate::util::rng::Rng;
 use crate::util::stats::percentile_sorted;
 
-use super::codec::{self, ErrorCode, Opcode, Response, HEADER_LEN};
+use super::codec::{self, ErrorCode, Opcode, Response, WireCacheStats, HEADER_LEN};
 use super::faults::{FaultInjector, FaultSite};
 use super::net::{is_timeout, WireClient};
 use super::queue::{AsyncDotService, TrySubmit};
@@ -1397,6 +1397,261 @@ pub fn run_load_chaos(
         injected,
         recovery_verified,
         recovery_latency_ns,
+    })
+}
+
+/// One pass of the skewed-popularity wire scenario ([`run_load_zipf`]):
+/// closed-loop aggregates for either the payload-resubmission baseline or
+/// the register-once/submit-by-handle pass over the *same* draw sequence.
+#[derive(Clone, Debug)]
+pub struct ZipfPassReport {
+    /// End-to-end span of the pass, ns.
+    pub elapsed_ns: f64,
+    /// Closed-loop throughput, requests per second.
+    pub reqs_per_s: f64,
+    /// Request bytes written to the socket over the pass (headers +
+    /// payloads + BUSY re-sends; registration traffic is reported
+    /// separately in [`ZipfReport::register_bytes`]).
+    pub bytes_sent: u64,
+    /// Steady-state request bytes per draw — the wire-traffic axis of the
+    /// O(n) → O(1) claim.
+    pub bytes_per_request: f64,
+    /// Median round-trip latency, ns.
+    pub latency_p50_ns: f64,
+    /// 99th-percentile round-trip latency, ns.
+    pub latency_p99_ns: f64,
+    /// Response values folded in draw order — the cross-pass parity probe.
+    pub checksum: f64,
+}
+
+/// Results of the `--zipf` skewed-popularity scenario ([`run_load_zipf`]):
+/// the baseline and handle passes side by side, the measured speedup, the
+/// server's cache-counter deltas over the handle pass, and the bit-parity
+/// verdict between the two passes.
+#[derive(Clone, Debug)]
+pub struct ZipfReport {
+    /// Draws per pass.
+    pub requests: usize,
+    /// Distinct operand pairs in the catalog.
+    pub catalog: usize,
+    /// Zipf exponent `s` of the popularity skew (0 = uniform).
+    pub zipf_s: f64,
+    /// Operand length (updates per request).
+    pub n: usize,
+    /// Distinct catalog entries the draw sequence actually touched — the
+    /// number of results the cache must compute; everything else replays.
+    pub unique_pairs_drawn: usize,
+    /// The payload-resubmission pass (every draw ships both operands).
+    pub baseline: ZipfPassReport,
+    /// The handle pass (operands registered once, 16-byte submits).
+    pub handles: ZipfPassReport,
+    /// Baseline wall time / handle-pass wall time.
+    pub speedup: f64,
+    /// One-time registration cost for the whole catalog, ns.
+    pub register_ns: f64,
+    /// One-time registration traffic for the whole catalog, bytes.
+    pub register_bytes: u64,
+    /// Draws whose handle-pass value differed bitwise from the baseline
+    /// pass (the hard parity gate requires 0).
+    pub value_mismatches: usize,
+    /// `true` iff every per-draw value and the folded checksum are
+    /// bit-identical across the two passes — the cached-vs-recomputed
+    /// parity contract measured across the socket.
+    pub bit_parity: bool,
+    /// Server store/cache counter deltas over the handle pass (probed via
+    /// the rev-1.3 stats extension; `cache_hits + cache_misses ==
+    /// cache_lookups` is hard-gated by `tools/validate_bench.py`).
+    pub cache: WireCacheStats,
+}
+
+/// Sample `requests` catalog indices under a Zipf(`s`) popularity law
+/// (rank `r`, 1-based, drawn with probability ∝ `1/r^s`; `s = 0` is
+/// uniform). Deterministic in `rng`.
+fn zipf_draws(rng: &mut Rng, catalog: usize, requests: usize, s: f64) -> Vec<usize> {
+    let weights: Vec<f64> = (0..catalog).map(|r| 1.0 / ((r + 1) as f64).powf(s)).collect();
+    let mut cum = Vec::with_capacity(catalog);
+    let mut total = 0.0;
+    for w in &weights {
+        total += w;
+        cum.push(total);
+    }
+    (0..requests)
+        .map(|_| {
+            let u = rng.f64() * total;
+            cum.partition_point(|&c| c <= u).min(catalog - 1)
+        })
+        .collect()
+}
+
+/// The `--zipf` skewed-popularity scenario: drive a `serve-net` server at
+/// `addr` with a catalog of `catalog` distinct operand pairs of length
+/// `n`, drawn `requests` times under a Zipf(`zipf_s`) popularity law —
+/// the repeat-heavy shape real retrieval traffic has — twice over the
+/// same deterministic draw sequence:
+///
+/// 1. **Baseline**: every draw re-ships both operand payloads (a DOT
+///    frame, `O(n)` wire bytes + a full recomputation per draw).
+/// 2. **Handles**: each catalog vector is registered once (REGISTER),
+///    then every draw submits a 16-byte DOT_HANDLES frame; repeat pairs
+///    resolve from the server's result cache.
+///
+/// Both passes run closed-loop on one connection, so the measured ratio
+/// is the per-request win (wire + compute), not a parallelism artifact.
+/// The per-draw response values of the two passes are bit-compared —
+/// [`ZipfReport::bit_parity`] is the cached-vs-recomputed parity contract
+/// observed across the socket, and `serve-bench` hard-fails when it does
+/// not hold.
+pub fn run_load_zipf(
+    addr: &str,
+    n: usize,
+    catalog: usize,
+    requests: usize,
+    zipf_s: f64,
+    seed: u64,
+) -> Result<ZipfReport, BackendError> {
+    if n == 0 {
+        return Err(BackendError::Runtime("operand length must be >= 1".to_string()));
+    }
+    if catalog == 0 {
+        return Err(BackendError::Runtime("catalog must hold at least one pair".to_string()));
+    }
+    if requests == 0 {
+        return Err(BackendError::Runtime("need at least one request".to_string()));
+    }
+    if zipf_s < 0.0 || !zipf_s.is_finite() {
+        return Err(BackendError::Runtime("zipf exponent must be finite and >= 0".to_string()));
+    }
+    let mut rng = Rng::new(seed);
+    let pairs: Vec<(Vec<f64>, Vec<f64>)> = (0..catalog)
+        .map(|_| {
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            (x, y)
+        })
+        .collect();
+    let draws = zipf_draws(&mut rng, catalog, requests, zipf_s);
+    let unique_pairs_drawn = {
+        let mut seen = vec![false; catalog];
+        draws.iter().for_each(|&k| seen[k] = true);
+        seen.iter().filter(|&&s| s).count()
+    };
+
+    let wire_err = |e: super::net::WireCallError| BackendError::Runtime(e.to_string());
+    let mut client = WireClient::connect(addr)
+        .map_err(|e| BackendError::Runtime(format!("connect {addr}: {e}")))?;
+    client
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .map_err(|e| BackendError::Runtime(format!("read timeout: {e}")))?;
+
+    // Both passes re-send their frame on BUSY (inside the client), so the
+    // byte accounting charges each pass its retries.
+    let dot_frame_len = (HEADER_LEN + 4 + 16 * n) as u64;
+    let handle_frame_len = (HEADER_LEN + 16) as u64;
+
+    // Pass 1: payload resubmission — every draw ships 16n+4 payload bytes.
+    let mut baseline_values = Vec::with_capacity(requests);
+    let mut baseline_lat = Vec::with_capacity(requests);
+    let retries_before = client.busy_retries();
+    let baseline_started = Instant::now();
+    for &k in &draws {
+        let (x, y) = &pairs[k];
+        let t0 = Instant::now();
+        let r = client.dot(x, y).map_err(wire_err)?;
+        baseline_lat.push(t0.elapsed().as_nanos() as f64);
+        baseline_values.push(r.value);
+    }
+    let baseline_elapsed_ns = baseline_started.elapsed().as_nanos() as f64;
+    let baseline_sends = requests as u64 + (client.busy_retries() - retries_before);
+
+    // Register the catalog once: the amortized O(catalog·n) cost the
+    // handle pass trades the per-draw O(n) for.
+    let register_started = Instant::now();
+    let mut handles = Vec::with_capacity(catalog);
+    for (x, y) in &pairs {
+        let (a, _, _) = client.register(x).map_err(wire_err)?;
+        let (b, _, _) = client.register(y).map_err(wire_err)?;
+        handles.push((a, b));
+    }
+    let register_ns = register_started.elapsed().as_nanos() as f64;
+    let register_bytes = 2 * catalog as u64 * (HEADER_LEN + 4 + 8 * n) as u64;
+
+    // Pass 2: handle submission over the identical draw sequence.
+    let (before_stats, _, before_cache) = client.stats_cache(None).map_err(wire_err)?;
+    let mut handle_values = Vec::with_capacity(requests);
+    let mut handle_lat = Vec::with_capacity(requests);
+    let retries_before = client.busy_retries();
+    let handles_started = Instant::now();
+    for &k in &draws {
+        let (a, b) = handles[k];
+        let t0 = Instant::now();
+        let r = client.dot_handles(a, b).map_err(wire_err)?;
+        handle_lat.push(t0.elapsed().as_nanos() as f64);
+        handle_values.push(r.value);
+    }
+    let handles_elapsed_ns = handles_started.elapsed().as_nanos() as f64;
+    let handle_sends = requests as u64 + (client.busy_retries() - retries_before);
+    let (after_stats, _, after_cache) = client.stats_cache(None).map_err(wire_err)?;
+    debug_assert!(after_stats.completed >= before_stats.completed);
+
+    let value_mismatches = baseline_values
+        .iter()
+        .zip(&handle_values)
+        .filter(|(b, h)| b.to_bits() != h.to_bits())
+        .count();
+    let baseline_checksum: f64 = baseline_values.iter().sum();
+    let handle_checksum: f64 = handle_values.iter().sum();
+    let bit_parity =
+        value_mismatches == 0 && baseline_checksum.to_bits() == handle_checksum.to_bits();
+
+    let cache = WireCacheStats {
+        store_entries: after_cache.store_entries,
+        store_resident_bytes: after_cache.store_resident_bytes,
+        store_registered: after_cache.store_registered - before_cache.store_registered,
+        store_evictions: after_cache.store_evictions - before_cache.store_evictions,
+        cache_lookups: after_cache.cache_lookups - before_cache.cache_lookups,
+        cache_hits: after_cache.cache_hits - before_cache.cache_hits,
+        cache_misses: after_cache.cache_misses - before_cache.cache_misses,
+        cache_evictions: after_cache.cache_evictions - before_cache.cache_evictions,
+    };
+
+    let pass = |elapsed_ns: f64, sends: u64, frame_len: u64, lat: Vec<f64>, checksum: f64| {
+        let (lat, _) = finite_sorted(lat);
+        ZipfPassReport {
+            elapsed_ns,
+            reqs_per_s: requests as f64 / elapsed_ns * 1e9,
+            bytes_sent: sends * frame_len,
+            bytes_per_request: (sends * frame_len) as f64 / requests as f64,
+            latency_p50_ns: pct_or_nan(&lat, 50.0),
+            latency_p99_ns: pct_or_nan(&lat, 99.0),
+            checksum,
+        }
+    };
+    Ok(ZipfReport {
+        requests,
+        catalog,
+        zipf_s,
+        n,
+        unique_pairs_drawn,
+        baseline: pass(
+            baseline_elapsed_ns,
+            baseline_sends,
+            dot_frame_len,
+            baseline_lat,
+            baseline_checksum,
+        ),
+        handles: pass(
+            handles_elapsed_ns,
+            handle_sends,
+            handle_frame_len,
+            handle_lat,
+            handle_checksum,
+        ),
+        speedup: baseline_elapsed_ns / handles_elapsed_ns.max(1.0),
+        register_ns,
+        register_bytes,
+        value_mismatches,
+        bit_parity,
+        cache,
     })
 }
 

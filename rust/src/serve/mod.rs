@@ -70,6 +70,15 @@
 //! results travel as IEEE-754 bit patterns, extending the bit-parity
 //! contract across the socket; the end-to-end dataflow narrative lives in
 //! `docs/ARCHITECTURE.md`.
+//!
+//! The **resident operand store** ([`store`], protocol revision 1.3) lets
+//! a client register an operand once and submit repeat requests by
+//! content-addressed handle — 16 payload bytes instead of the full
+//! vectors — while the **result cache** memoizes completed dot products
+//! so a repeat `(handle, handle)` pair skips the pool entirely. Cached
+//! results are bit-identical to recomputation (property-pinned, including
+//! across the socket): the cache changes *when* a value is computed,
+//! never *what* it is.
 
 // The serving layer is the repo's public product surface: every public
 // item must ship documented (CI builds with `-D warnings`, so a missing
@@ -83,6 +92,7 @@ pub mod loadgen;
 pub mod net;
 pub mod queue;
 pub mod scheduler;
+pub mod store;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -93,14 +103,16 @@ use crate::runtime::backend::{BackendError, ImplStyle, KernelClass, KernelInput,
 use crate::runtime::hostbench::freq_ghz_with_source;
 use crate::runtime::parallel::{compensated_tree_reduce, ThreadPool, CACHELINE_F64};
 
-pub use codec::{ErrorCode, RequestMeta, WireError, WireResult, WireStats, WireTenantStats};
+pub use codec::{
+    ErrorCode, RequestMeta, WireCacheStats, WireError, WireResult, WireStats, WireTenantStats,
+};
 pub use crossover::{calibrate, model_crossover, model_p1_gups, service_crossover, Calibration};
 pub use faults::{FaultInjector, FaultPlan, FaultPoint, FaultSite};
 pub use loadgen::{
     default_mix, parse_mix, run_interleaving_checksum, run_load, run_load_async, run_load_chaos,
-    run_load_tenants, run_load_wire, run_load_with, AsyncLoadReport, ChaosReport,
+    run_load_tenants, run_load_wire, run_load_with, run_load_zipf, AsyncLoadReport, ChaosReport,
     InterleavingReport, LoadMode, LoadReport, MixEntry, OperandPool, TenantLoadReport,
-    TenantLoadRow, WireLoadReport,
+    TenantLoadRow, WireLoadReport, ZipfPassReport, ZipfReport,
 };
 pub use net::{NetOptions, NetServer, WireCallError, WireClient};
 pub use queue::{
@@ -108,6 +120,10 @@ pub use queue::{
     TenantStats, TrySubmit,
 };
 pub use scheduler::{BatchScheduler, DispatchPlan, ExecPath};
+pub use store::{
+    handle_of, operand_digest, sha256, CacheStats, CachedResult, OperandStore, RegisterOutcome,
+    ResultCache, StoreError, StoreStats, CACHE_DEFAULT_ENTRIES, STORE_DEFAULT_CAPACITY_BYTES,
+};
 
 /// How the service picks its batch-vs-shard crossover.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -48,8 +48,8 @@ use std::time::{Duration, Instant};
 use crate::runtime::backend::BackendError;
 
 use super::codec::{
-    self, ErrorCode, Opcode, Request, RequestMeta, Response, WireError, WireResult, WireStats,
-    WireTenantStats, HEADER_LEN,
+    self, ErrorCode, Opcode, Request, RequestMeta, Response, WireCacheStats, WireError, WireResult,
+    WireStats, WireTenantStats, HEADER_LEN,
 };
 use super::faults::{FaultInjector, FaultSite};
 use super::queue::{AsyncDotService, AsyncOptions, QosPolicy, ResponseHandle, TrySubmit};
@@ -362,12 +362,15 @@ fn send_error(tx: &SyncSender<WriterMsg>, id: u64, code: ErrorCode, message: &st
     send(tx, WriterMsg::Raw(codec::encode_error(id, code, message)))
 }
 
-/// The wire error code for a pipeline failure: deadline shedding gets its
-/// typed code (PROTOCOL.md §4.10); everything else (dispatcher drain,
-/// worker panic) is internal.
+/// The wire error code for a pipeline failure: deadline shedding and the
+/// resident-store failures get their typed codes (PROTOCOL.md §4.10,
+/// §4.12, §4.13); everything else (dispatcher drain, worker panic) is
+/// internal.
 fn error_code_of(e: &BackendError) -> ErrorCode {
     match e {
         BackendError::DeadlineExceeded { .. } => ErrorCode::Deadline,
+        BackendError::UnknownHandle { .. } => ErrorCode::UnknownHandle,
+        BackendError::StoreFull { .. } => ErrorCode::StoreFull,
         _ => ErrorCode::Internal,
     }
 }
@@ -409,6 +412,23 @@ fn wire_tenant_stats(service: &AsyncDotService) -> Vec<WireTenantStats> {
             deadline_shed: t.deadline_shed,
         })
         .collect()
+}
+
+/// Snapshot the operand-store and result-cache counters for the rev-1.3
+/// cache stats extension (PROTOCOL.md §3.7).
+fn wire_cache_stats(service: &AsyncDotService) -> WireCacheStats {
+    let store = service.store_stats();
+    let cache = service.cache_stats();
+    WireCacheStats {
+        store_entries: store.entries,
+        store_resident_bytes: store.resident_bytes,
+        store_registered: store.registered,
+        store_evictions: store.evictions,
+        cache_lookups: cache.lookups,
+        cache_hits: cache.hits,
+        cache_misses: cache.misses,
+        cache_evictions: cache.evictions,
+    }
 }
 
 /// The retry-after hint the server attaches to BUSY/QUOTA frames for
@@ -602,22 +622,93 @@ fn handle_request(
 ) -> bool {
     let deadline = meta.deadline_us.map(Duration::from_micros);
     let tenant = meta.tenant.unwrap_or(0);
-    let rev12 = meta.deadline_us.is_some() || meta.tenant.is_some();
+    let rev12 = meta.deadline_us.is_some() || meta.tenant.is_some() || meta.cache;
     match request {
         Request::Stats => {
-            // A tenant-prefixed STATS asks for the rev-1.2 per-tenant
-            // extension; a plain STATS gets the classic frame, so older
-            // clients never see bytes they cannot parse.
-            let frame = if meta.tenant.is_some() {
-                codec::encode_stats_result_tenants(
+            // Extensions are negotiated per request (PROTOCOL.md §6): a
+            // tenant-prefixed STATS asks for the rev-1.2 per-tenant rows,
+            // the cache flag asks for the rev-1.3 store/cache counters
+            // (composable with tenant rows), and a plain STATS gets the
+            // classic frame, so older clients never see bytes they cannot
+            // parse.
+            let tenants = if meta.tenant.is_some() {
+                Some(wire_tenant_stats(service))
+            } else {
+                None
+            };
+            let frame = if meta.cache {
+                codec::encode_stats_result_ext(
                     id,
                     &wire_stats(service),
-                    &wire_tenant_stats(service),
+                    tenants.as_deref(),
+                    Some(&wire_cache_stats(service)),
                 )
+            } else if let Some(rows) = &tenants {
+                codec::encode_stats_result_tenants(id, &wire_stats(service), rows)
             } else {
                 codec::encode_stats_result(id, &wire_stats(service))
             };
             send(tx, WriterMsg::Raw(frame))
+        }
+        Request::Register(data) => match service.register_operand(data) {
+            Ok(out) => send(
+                tx,
+                WriterMsg::Raw(codec::encode_register_result(
+                    id,
+                    out.handle,
+                    out.n as u64,
+                    out.fresh,
+                )),
+            ),
+            // STORE_FULL is non-fatal (PROTOCOL.md §4.13): nothing was
+            // evicted or registered, and the connection keeps serving.
+            Err(e @ BackendError::StoreFull { .. }) => {
+                send_error(tx, id, ErrorCode::StoreFull, &e.to_string())
+            }
+            Err(e) => send_error(tx, id, ErrorCode::Internal, &e.to_string()),
+        },
+        Request::Release(handle) => {
+            // Idempotent by design (PROTOCOL.md §3.9): releasing a handle
+            // that is not resident acknowledges `found == false` rather
+            // than erroring, so clients can release unconditionally.
+            let found = service.release_operand(handle);
+            send(tx, WriterMsg::Raw(codec::encode_release_result(id, found)))
+        }
+        Request::SubmitHandles { a, b } => {
+            match service.try_submit_handles_with_opts(a, b, Instant::now(), deadline, tenant) {
+                Ok(TrySubmit::Accepted(handle)) => send(tx, WriterMsg::Pending { id, handle }),
+                Ok(TrySubmit::Busy) => send(
+                    tx,
+                    WriterMsg::Raw(shed_frame(
+                        service,
+                        id,
+                        ErrorCode::Busy,
+                        "submission queue full; retry (PROTOCOL.md §5)",
+                        rev12,
+                    )),
+                ),
+                Ok(TrySubmit::Quota) => send(
+                    tx,
+                    WriterMsg::Raw(shed_frame(
+                        service,
+                        id,
+                        ErrorCode::Quota,
+                        &format!("tenant {tenant} is at its queue quota (PROTOCOL.md §4.11)"),
+                        rev12,
+                    )),
+                ),
+                // UNKNOWN_HANDLE is non-fatal (PROTOCOL.md §4.12): the
+                // client may have raced an eviction or a release and can
+                // re-register on the same connection.
+                Err(e @ BackendError::UnknownHandle { .. }) => {
+                    send_error(tx, id, ErrorCode::UnknownHandle, &e.to_string())
+                }
+                Err(BackendError::Runtime(msg)) => {
+                    let _ = send_error(tx, id, ErrorCode::Shutdown, &msg);
+                    false
+                }
+                Err(e) => send_error(tx, id, ErrorCode::Invalid, &e.to_string()),
+            }
         }
         Request::Submit(input) => {
             match service.try_submit_with_opts(input, Instant::now(), deadline, tenant) {
@@ -667,7 +758,7 @@ fn submit_batch(
 ) -> bool {
     let deadline = meta.deadline_us.map(Duration::from_micros);
     let tenant = meta.tenant.unwrap_or(0);
-    let rev12 = meta.deadline_us.is_some() || meta.tenant.is_some();
+    let rev12 = meta.deadline_us.is_some() || meta.tenant.is_some() || meta.cache;
     for input in &inputs {
         if let Err(e) = input.view().check(service.service().spec_for(&input.view())) {
             return send_error(tx, id, ErrorCode::Invalid, &e.to_string());
@@ -1118,6 +1209,7 @@ impl WireClient {
             RequestMeta {
                 deadline_us: None,
                 tenant: Some(tenant),
+                cache: false,
             },
         )
     }
@@ -1156,6 +1248,89 @@ impl WireClient {
             other => Err(WireCallError::Protocol(WireError::new(
                 ErrorCode::Malformed,
                 format!("expected a tenant stats frame, got {other:?}"),
+            ))),
+        }
+    }
+
+    /// Register an operand vector in the server's resident store
+    /// (PROTOCOL.md §3.8, revision 1.3): the payload crosses the wire
+    /// once, and the returned `(handle, n, fresh)` names it for every
+    /// subsequent [`Self::dot_handles`]. Registering contents already
+    /// resident returns the same handle with `fresh == false`.
+    pub fn register(&mut self, x: &[f64]) -> Result<(u64, u64, bool), WireCallError> {
+        let id = self.fresh_id();
+        let frame = codec::encode_register(id, x);
+        match self.call(&frame, id)? {
+            Response::Registered { handle, n, fresh } => Ok((handle, n, fresh)),
+            other => Err(WireCallError::Protocol(WireError::new(
+                ErrorCode::Malformed,
+                format!("expected a register-result frame, got {other:?}"),
+            ))),
+        }
+    }
+
+    /// Release a resident-operand handle (PROTOCOL.md §3.9, revision 1.3).
+    /// Returns whether the handle was resident; releasing an unknown
+    /// handle is acknowledged with `false`, never an error.
+    pub fn release(&mut self, handle: u64) -> Result<bool, WireCallError> {
+        let id = self.fresh_id();
+        let frame = codec::encode_release(id, handle);
+        match self.call(&frame, id)? {
+            Response::Released { found } => Ok(found),
+            other => Err(WireCallError::Protocol(WireError::new(
+                ErrorCode::Malformed,
+                format!("expected a release-result frame, got {other:?}"),
+            ))),
+        }
+    }
+
+    /// One dot product submitted by resident-operand handle pair
+    /// (PROTOCOL.md §3.10, revision 1.3): 16 payload bytes regardless of
+    /// operand length. A handle that is not resident draws the typed
+    /// non-fatal [`ErrorCode::UnknownHandle`] frame.
+    pub fn dot_handles(&mut self, a: u64, b: u64) -> Result<WireResult, WireCallError> {
+        let id = self.fresh_id();
+        let frame = codec::encode_dot_handles(id, a, b);
+        Self::expect_result(self.call(&frame, id)?)
+    }
+
+    /// [`Self::dot_handles`] tagged with request metadata — tenant id
+    /// and/or deadline budget (PROTOCOL.md §2.4/§2.5).
+    pub fn dot_handles_with_meta(
+        &mut self,
+        a: u64,
+        b: u64,
+        meta: RequestMeta,
+    ) -> Result<WireResult, WireCallError> {
+        let id = self.fresh_id();
+        let frame = codec::encode_frame_with_meta(
+            Opcode::DotHandles,
+            id,
+            meta,
+            &codec::encode_dot_handles_payload(a, b),
+        );
+        Self::expect_result(self.call(&frame, id)?)
+    }
+
+    /// Probe the pipeline counters plus the rev-1.3 operand-store and
+    /// result-cache extension (PROTOCOL.md §3.7). Pass a tenant to also
+    /// request the per-tenant rows (empty in the reply otherwise — the
+    /// two extensions compose independently).
+    pub fn stats_cache(
+        &mut self,
+        tenant: Option<u32>,
+    ) -> Result<(WireStats, Vec<WireTenantStats>, WireCacheStats), WireCallError> {
+        let id = self.fresh_id();
+        let frame = codec::encode_stats_cache(id, tenant);
+        match self.call(&frame, id)? {
+            Response::CacheStats {
+                stats,
+                tenants,
+                cache,
+            } => Ok((stats, tenants, cache)),
+            other => Err(WireCallError::Protocol(WireError::new(
+                ErrorCode::Malformed,
+                format!("expected a cache stats frame, got {other:?}"),
             ))),
         }
     }
@@ -1319,6 +1494,48 @@ mod tests {
         let a = tenants.iter().find(|t| t.tenant == 0).unwrap();
         assert_eq!(a.quota_shed, 0);
         assert!(a.admitted >= 1);
+    }
+
+    #[test]
+    fn loopback_register_submit_release_round_trip() {
+        let server = NetServer::bind("127.0.0.1:0", cfg(2, 1000), AsyncOptions::default()).unwrap();
+        let reference = DotService::new(cfg(2, 1000)).unwrap();
+        let mut client = WireClient::connect(server.local_addr()).unwrap();
+        let x = randvec(512, 61);
+        let y = randvec(512, 62);
+        let (a, na, fresh_a) = client.register(&x).unwrap();
+        assert!(fresh_a);
+        assert_eq!(na, 512);
+        let (b, _, _) = client.register(&y).unwrap();
+        // Re-registration is an upsert: same handle, not fresh.
+        let (a2, _, fresh_again) = client.register(&x).unwrap();
+        assert_eq!(a2, a);
+        assert!(!fresh_again);
+        // First handle submit computes; the second replays the memoized
+        // result — both bit-identical to in-process execution.
+        let miss = client.dot_handles(a, b).unwrap();
+        let hit = client.dot_handles(a, b).unwrap();
+        let local = reference
+            .submit(&crate::runtime::backend::KernelInput::Dot(&x, &y))
+            .unwrap();
+        assert_eq!(miss.value.to_bits(), local.value.to_bits());
+        assert_eq!(hit.value.to_bits(), miss.value.to_bits());
+        assert_eq!(hit.path, miss.path);
+        let (stats, tenants, cache) = client.stats_cache(None).unwrap();
+        assert!(tenants.is_empty(), "cache-only probe carries no tenant rows");
+        assert_eq!(cache.store_entries, 2);
+        assert_eq!(cache.cache_hits, 1);
+        assert_eq!(cache.cache_lookups, cache.cache_hits + cache.cache_misses);
+        assert_eq!(stats.completed, stats.enqueued + cache.cache_hits);
+        // Release is idempotent; a released handle draws the typed
+        // non-fatal UNKNOWN_HANDLE frame and the connection survives.
+        assert!(client.release(a).unwrap());
+        assert!(!client.release(a).unwrap());
+        match client.dot_handles(a, b) {
+            Err(WireCallError::Server(e)) => assert_eq!(e.code, ErrorCode::UnknownHandle),
+            other => panic!("expected an UNKNOWN_HANDLE error frame, got {other:?}"),
+        }
+        client.dot(&x, &y).unwrap();
     }
 
     #[test]

@@ -45,6 +45,7 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::runtime::arena::AlignedVec;
 use crate::runtime::backend::{BackendError, KernelInput};
 use crate::runtime::parallel::{
     compensated_tree_reduce, PendingDispatch, ThreadPool, CACHELINE_F64,
@@ -52,6 +53,10 @@ use crate::runtime::parallel::{
 
 use super::faults::{FaultInjector, FaultSite};
 use super::scheduler::ExecPath;
+use super::store::{
+    CacheStats, CachedResult, OperandStore, RegisterOutcome, ResultCache, StoreError, StoreStats,
+    CACHE_DEFAULT_ENTRIES, STORE_DEFAULT_CAPACITY_BYTES,
+};
 use super::{DotService, ServeConfig, ServeResponse, SharedInput};
 
 /// Dispatcher-side cap on concurrently in-flight pool dispatches: past
@@ -360,6 +365,12 @@ pub struct TenantStats {
     /// Admitted requests shed in-queue on deadline expiry (a subset of
     /// `completed`, mirroring the global counter's semantics).
     pub deadline_shed: u64,
+    /// Handle-submitted requests answered from the result cache without
+    /// entering the queue. Counted as both admitted and completed (the
+    /// conservation invariant `completed == admitted` at quiescence is
+    /// preserved), but never against quota occupancy — a hit consumes no
+    /// queue slot and no compute.
+    pub cache_hits: u64,
 }
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -371,6 +382,7 @@ struct TenantEntry {
     completed: u64,
     quota_shed: u64,
     deadline_shed: u64,
+    cache_hits: u64,
 }
 
 /// Shared per-tenant quota enforcement + accounting. One mutex guards the
@@ -455,6 +467,18 @@ impl TenantTable {
         self.lock().entry(tenant).or_default().completed += 1;
     }
 
+    /// A handle-submit answered from the result cache: admitted and
+    /// completed in the same instant, without ever holding quota occupancy
+    /// — the hit consumes no queue slot, so gating it on quota would shed
+    /// the cheapest requests the tenant has.
+    fn cache_hit(&self, tenant: u32) {
+        let mut entries = self.lock();
+        let e = entries.entry(tenant).or_default();
+        e.admitted += 1;
+        e.completed += 1;
+        e.cache_hits += 1;
+    }
+
     /// A request drained straight out of the queue at shutdown: releases
     /// its occupancy and counts the (error) completion in one step.
     fn drain_complete(&self, tenant: u32) {
@@ -477,6 +501,7 @@ impl TenantTable {
                 completed: e.completed,
                 quota_shed: e.quota_shed,
                 deadline_shed: e.deadline_shed,
+                cache_hits: e.cache_hits,
             })
             .collect()
     }
@@ -784,6 +809,13 @@ struct QueuedRequest {
     /// Tenant id for quota accounting and weighted-fair selection. The
     /// single-class paths submit as tenant 0.
     tenant: u32,
+    /// The result-cache key for handle-submitted requests that missed the
+    /// cache at admission: retire memoizes the computed result under it.
+    /// `None` for inline-payload requests — the cache is strictly a
+    /// handle-path feature (handles are content hashes; inline payloads
+    /// would need hashing per request, costing the O(n) the store exists
+    /// to avoid).
+    cache_key: Option<(u64, u64)>,
 }
 
 impl Drop for QueuedRequest {
@@ -833,6 +865,11 @@ pub struct AsyncServeStats {
     /// (summed over tenants). They never entered the queue, so they are
     /// part of neither `enqueued` nor `completed`.
     pub quota_shed: u64,
+    /// Handle-submitted requests answered from the result cache. They
+    /// complete without ever entering the queue, so the conservation
+    /// identity is `completed == enqueued + cache_hits` at quiescence
+    /// (plus shutdown-drained requests, which also resolve).
+    pub cache_hits: u64,
 }
 
 #[derive(Default)]
@@ -842,6 +879,7 @@ struct Counters {
     dispatches: AtomicU64,
     busy_ns: AtomicU64,
     deadline_shed: AtomicU64,
+    cache_hits: AtomicU64,
 }
 
 /// One posted-but-not-retired pool dispatch.
@@ -881,6 +919,8 @@ pub struct AsyncDotService {
     queue: Arc<BoundedQueue<QueuedRequest>>,
     counters: Arc<Counters>,
     tenants: Arc<TenantTable>,
+    store: Arc<OperandStore>,
+    cache: Arc<ResultCache>,
     faults: Option<Arc<FaultInjector>>,
     dispatcher: Option<JoinHandle<()>>,
     opts: AsyncOptions,
@@ -932,16 +972,19 @@ impl AsyncDotService {
         let queue = Arc::new(BoundedQueue::new(opts.queue_depth));
         let counters = Arc::new(Counters::default());
         let tenants = Arc::new(TenantTable::new(qos.clone()));
+        let store = Arc::new(OperandStore::new(STORE_DEFAULT_CAPACITY_BYTES));
+        let cache = Arc::new(ResultCache::new(CACHE_DEFAULT_ENTRIES));
         let dispatcher = {
             let service = Arc::clone(&service);
             let queue = Arc::clone(&queue);
             let counters = Arc::clone(&counters);
             let tenants = Arc::clone(&tenants);
+            let cache = Arc::clone(&cache);
             let faults = faults.clone();
             std::thread::Builder::new()
                 .name("kahan-serve-dispatch".to_string())
                 .spawn(move || {
-                    dispatcher_main(service, queue, counters, tenants, opts, qos, faults)
+                    dispatcher_main(service, queue, counters, tenants, cache, opts, qos, faults)
                 })
                 .expect("spawn serve dispatcher")
         };
@@ -950,6 +993,8 @@ impl AsyncDotService {
             queue,
             counters,
             tenants,
+            store,
+            cache,
             faults,
             dispatcher: Some(dispatcher),
             opts,
@@ -1019,7 +1064,7 @@ impl AsyncDotService {
         tenant: u32,
     ) -> Result<ResponseHandle, BackendError> {
         input.view().check(self.service.spec_for(&input.view()))?;
-        self.enqueue(input, arrival, deadline, tenant)
+        self.enqueue(input, arrival, deadline, tenant, None)
     }
 
     /// Quota admission: one check shared by both submit paths. `false`
@@ -1037,13 +1082,15 @@ impl AsyncDotService {
     }
 
     /// Enqueue an already-validated request (both submit paths check once,
-    /// then land here).
+    /// then land here). `cache_key` is `Some` only for handle-submitted
+    /// requests that missed the result cache: retire memoizes under it.
     fn enqueue(
         &self,
         input: SharedInput,
         arrival: Instant,
         deadline: Option<Duration>,
         tenant: u32,
+        cache_key: Option<(u64, u64)>,
     ) -> Result<ResponseHandle, BackendError> {
         if !self.admit(tenant) {
             return Err(BackendError::QuotaExceeded { tenant });
@@ -1055,6 +1102,7 @@ impl AsyncDotService {
             arrival,
             deadline: deadline.map(|d| (arrival + d, d.as_micros() as u64)),
             tenant,
+            cache_key,
         };
         self.queue.push(queued).map_err(|_| {
             self.tenants.unadmit(tenant);
@@ -1104,6 +1152,19 @@ impl AsyncDotService {
         tenant: u32,
     ) -> Result<TrySubmit, BackendError> {
         input.view().check(self.service.spec_for(&input.view()))?;
+        self.try_enqueue(input, arrival, deadline, tenant, None)
+    }
+
+    /// Non-blocking enqueue shared by the payload and handle try-submit
+    /// paths (quota check, then `try_push`).
+    fn try_enqueue(
+        &self,
+        input: SharedInput,
+        arrival: Instant,
+        deadline: Option<Duration>,
+        tenant: u32,
+        cache_key: Option<(u64, u64)>,
+    ) -> Result<TrySubmit, BackendError> {
         if !self.admit(tenant) {
             return Ok(TrySubmit::Quota);
         }
@@ -1114,6 +1175,7 @@ impl AsyncDotService {
             arrival,
             deadline: deadline.map(|d| (arrival + d, d.as_micros() as u64)),
             tenant,
+            cache_key,
         };
         match self.queue.try_push(queued) {
             Ok(()) => Ok(TrySubmit::Accepted(ResponseHandle { ticket })),
@@ -1143,7 +1205,7 @@ impl AsyncDotService {
         }
         let handles: Vec<ResponseHandle> = inputs
             .iter()
-            .map(|input| self.enqueue(input.clone(), Instant::now(), self.opts.deadline, 0))
+            .map(|input| self.enqueue(input.clone(), Instant::now(), self.opts.deadline, 0, None))
             .collect::<Result<_, _>>()?;
         handles.into_iter().map(ResponseHandle::wait).collect()
     }
@@ -1160,6 +1222,7 @@ impl AsyncDotService {
             busy_ns: self.counters.busy_ns.load(Ordering::Relaxed) as f64,
             deadline_shed: self.counters.deadline_shed.load(Ordering::Relaxed),
             quota_shed: self.tenants.total_quota_shed(),
+            cache_hits: self.counters.cache_hits.load(Ordering::Relaxed),
         }
     }
 
@@ -1175,6 +1238,146 @@ impl AsyncDotService {
     /// single-class FIFO path).
     pub fn qos(&self) -> Option<&QosPolicy> {
         self.tenants.policy.as_ref()
+    }
+
+    /// The resident operand store backing handle-based submission.
+    pub fn store(&self) -> &Arc<OperandStore> {
+        &self.store
+    }
+
+    /// Register an operand vector in the resident store and return its
+    /// content-addressed handle. Re-registering identical contents returns
+    /// the same handle with `fresh == false`; a vector that cannot fit
+    /// fails with the typed [`BackendError::StoreFull`] and nothing is
+    /// evicted on its behalf.
+    pub fn register_operand(&self, data: Arc<AlignedVec>) -> Result<RegisterOutcome, BackendError> {
+        self.store.register(data).map_err(|e| match e {
+            StoreError::Full {
+                requested,
+                capacity,
+            } => BackendError::StoreFull {
+                requested,
+                capacity,
+            },
+            StoreError::Collision { handle } => BackendError::Runtime(format!(
+                "operand handle collision on {handle:#018x}: distinct contents share a truncated digest"
+            )),
+        })
+    }
+
+    /// Release a resident handle. Returns `true` if the handle was
+    /// resident (idempotent: a second release returns `false`). In-flight
+    /// requests that already resolved the handle keep their `Arc` to the
+    /// operand — release only drops the store's reference, never memory a
+    /// reader still holds.
+    pub fn release_operand(&self, handle: u64) -> bool {
+        self.store.release(handle)
+    }
+
+    /// Snapshot of the operand-store counters.
+    pub fn store_stats(&self) -> StoreStats {
+        self.store.stats()
+    }
+
+    /// Snapshot of the result-cache counters.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Resolve a handle pair against the store — in order, so a request
+    /// naming two unknown handles deterministically reports the first —
+    /// and validate the resulting dot input exactly as a payload submit
+    /// would. Resolution happens *before* any cache probe: the cache
+    /// accelerates resident operands, it never resurrects released ones.
+    fn resolve_handles(&self, a: u64, b: u64) -> Result<SharedInput, BackendError> {
+        let x = self
+            .store
+            .lookup(a)
+            .ok_or(BackendError::UnknownHandle { handle: a })?;
+        let y = self
+            .store
+            .lookup(b)
+            .ok_or(BackendError::UnknownHandle { handle: b })?;
+        let input = SharedInput::Dot(x, y);
+        input.view().check(self.service.spec_for(&input.view()))?;
+        Ok(input)
+    }
+
+    /// Resolve a result-cache hit immediately: the ticket completes with
+    /// the memoized value bits and execution path (bit-identical to the
+    /// recomputation, by the parity contract) before the handle is
+    /// returned. A hit counts as admitted *and* completed for its tenant —
+    /// preserving `completed == admitted` at quiescence — and never
+    /// occupies quota or the queue.
+    fn cache_hit_response(
+        &self,
+        hit: CachedResult,
+        arrival: Instant,
+        tenant: u32,
+    ) -> ResponseHandle {
+        let ticket = Arc::new(Ticket::new());
+        self.tenants.cache_hit(tenant);
+        self.counters.completed.fetch_add(1, Ordering::Relaxed);
+        self.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
+        let latency = Instant::now().saturating_duration_since(arrival);
+        ticket.complete(
+            Ok(ServeResponse {
+                value: f64::from_bits(hit.bits),
+                n: hit.n,
+                path: hit.path,
+            }),
+            latency.as_nanos() as f64,
+        );
+        ResponseHandle { ticket }
+    }
+
+    /// Submit a dot product by resident handles (blocking, default
+    /// deadline, tenant 0). A result-cache hit resolves immediately
+    /// without touching the queue; a miss enqueues normally and retire
+    /// memoizes the computed result under `(a, b)`.
+    pub fn submit_handles(&self, a: u64, b: u64) -> Result<ResponseHandle, BackendError> {
+        self.submit_handles_with_opts(a, b, Instant::now(), self.opts.deadline, 0)
+    }
+
+    /// The fully-general blocking handle submit: explicit arrival instant,
+    /// per-request deadline override, and tenant id. Unknown handles fail
+    /// with the typed [`BackendError::UnknownHandle`] before any quota or
+    /// queue interaction.
+    pub fn submit_handles_with_opts(
+        &self,
+        a: u64,
+        b: u64,
+        arrival: Instant,
+        deadline: Option<Duration>,
+        tenant: u32,
+    ) -> Result<ResponseHandle, BackendError> {
+        let input = self.resolve_handles(a, b)?;
+        if let Some(hit) = self.cache.get((a, b)) {
+            return Ok(self.cache_hit_response(hit, arrival, tenant));
+        }
+        self.enqueue(input, arrival, deadline, tenant, Some((a, b)))
+    }
+
+    /// The fully-general non-blocking handle submit (the wire front-end's
+    /// DOT_HANDLES opcode lands here). Same shed semantics as
+    /// [`Self::try_submit_with_opts`]: [`TrySubmit::Quota`] at quota,
+    /// [`TrySubmit::Busy`] on a full queue — but a result-cache hit is
+    /// always accepted, since it consumes neither quota nor queue depth.
+    pub fn try_submit_handles_with_opts(
+        &self,
+        a: u64,
+        b: u64,
+        arrival: Instant,
+        deadline: Option<Duration>,
+        tenant: u32,
+    ) -> Result<TrySubmit, BackendError> {
+        let input = self.resolve_handles(a, b)?;
+        if let Some(hit) = self.cache.get((a, b)) {
+            return Ok(TrySubmit::Accepted(
+                self.cache_hit_response(hit, arrival, tenant),
+            ));
+        }
+        self.try_enqueue(input, arrival, deadline, tenant, Some((a, b)))
     }
 }
 
@@ -1215,14 +1418,26 @@ fn dispatcher_main(
     queue: Arc<BoundedQueue<QueuedRequest>>,
     counters: Arc<Counters>,
     tenants: Arc<TenantTable>,
+    cache: Arc<ResultCache>,
     opts: AsyncOptions,
     qos: Option<QosPolicy>,
     faults: Option<Arc<FaultInjector>>,
 ) {
     let run = {
-        let (service, queue, counters, tenants, faults) =
-            (&service, &queue, &counters, &tenants, &faults);
-        move || dispatcher_loop(service, queue, counters, tenants, opts, qos, faults.as_deref())
+        let (service, queue, counters, tenants, cache, faults) =
+            (&service, &queue, &counters, &tenants, &cache, &faults);
+        move || {
+            dispatcher_loop(
+                service,
+                queue,
+                counters,
+                tenants,
+                cache,
+                opts,
+                qos,
+                faults.as_deref(),
+            )
+        }
     };
     let outcome = catch_unwind(AssertUnwindSafe(run));
     // Normal exit already drained everything; after a panic, fail whatever
@@ -1323,6 +1538,7 @@ fn dispatcher_loop(
     queue: &BoundedQueue<QueuedRequest>,
     counters: &Counters,
     tenants: &TenantTable,
+    cache: &ResultCache,
     opts: AsyncOptions,
     qos: Option<QosPolicy>,
     faults: Option<&FaultInjector>,
@@ -1340,12 +1556,12 @@ fn dispatcher_loop(
         // Retire whatever already finished (front first: dispatch order).
         while inflight.front().map(InFlight::is_done).unwrap_or(false) {
             let f = inflight.pop_front().unwrap();
-            retire(service, counters, tenants, epoch, &mut busy_end_ns, f);
+            retire(service, counters, tenants, cache, epoch, &mut busy_end_ns, f);
         }
         // Bound dispatcher-side memory.
         while inflight.len() >= MAX_INFLIGHT_DISPATCHES {
             let f = inflight.pop_front().unwrap();
-            retire(service, counters, tenants, epoch, &mut busy_end_ns, f);
+            retire(service, counters, tenants, cache, epoch, &mut busy_end_ns, f);
         }
         // Acquire the next arrivals. With requests already owed to the
         // weighted-fair selector, drain the queue opportunistically and
@@ -1429,13 +1645,13 @@ fn dispatcher_loop(
             dispatch(service, counters, tenants, &mut inflight, batch);
             if !opts.overlap {
                 while let Some(f) = inflight.pop_front() {
-                    retire(service, counters, tenants, epoch, &mut busy_end_ns, f);
+                    retire(service, counters, tenants, cache, epoch, &mut busy_end_ns, f);
                 }
             }
         }
         if closed && backlog.as_ref().map_or(true, QosState::is_empty) {
             for f in inflight.drain(..) {
-                retire(service, counters, tenants, epoch, &mut busy_end_ns, f);
+                retire(service, counters, tenants, cache, epoch, &mut busy_end_ns, f);
             }
             return;
         }
@@ -1601,6 +1817,7 @@ fn retire(
     service: &DotService,
     counters: &Counters,
     tenants: &TenantTable,
+    cache: &ResultCache,
     epoch: Instant,
     busy_end_ns: &mut f64,
     inflight: InFlight,
@@ -1624,6 +1841,19 @@ fn retire(
                             n: q.input.updates(),
                             path: ExecPath::Fused,
                         };
+                        // Memoize on success only: a handle-submitted miss
+                        // carries its key, so the next identical submit
+                        // replays this exact value and path.
+                        if let Some(key) = q.cache_key {
+                            cache.insert(
+                                key,
+                                CachedResult {
+                                    bits: value.to_bits(),
+                                    n: response.n,
+                                    path: ExecPath::Fused,
+                                },
+                            );
+                        }
                         tenants.complete(q.tenant);
                         let latency = now.saturating_duration_since(q.arrival);
                         q.ticket.complete(Ok(response), latency.as_nanos() as f64);
@@ -1656,6 +1886,16 @@ fn retire(
                         n,
                         path: ExecPath::Sharded,
                     };
+                    if let Some(key) = request.cache_key {
+                        cache.insert(
+                            key,
+                            CachedResult {
+                                bits: value.to_bits(),
+                                n,
+                                path: ExecPath::Sharded,
+                            },
+                        );
+                    }
                     tenants.complete(request.tenant);
                     let latency = Instant::now().saturating_duration_since(request.arrival);
                     request
@@ -2138,5 +2378,152 @@ mod tests {
             let got = h.wait().expect("shutdown must drain, not drop, requests");
             assert_eq!(got.value.to_bits(), want.value.to_bits());
         }
+    }
+
+    fn aligned_vec(n: usize, seed: u64) -> Arc<AlignedVec> {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        Arc::new(AlignedVec::copy_from(&data))
+    }
+
+    #[test]
+    fn handle_submit_miss_computes_hit_replays_bit_identically() {
+        let asy = AsyncDotService::new(cfg(2, 1000), AsyncOptions::default()).unwrap();
+        let x = aligned_vec(800, 21);
+        let y = aligned_vec(800, 22);
+        let a = asy.register_operand(Arc::clone(&x)).unwrap();
+        assert!(a.fresh);
+        assert_eq!(a.n, 800);
+        let b = asy.register_operand(Arc::clone(&y)).unwrap();
+        assert_ne!(a.handle, b.handle);
+        // Re-registering identical contents is an upsert: same handle.
+        let again = asy.register_operand(Arc::clone(&x)).unwrap();
+        assert_eq!(again.handle, a.handle);
+        assert!(!again.fresh);
+        assert_eq!(asy.store_stats().registered, 2);
+        assert_eq!(asy.store_stats().reregistered, 1);
+
+        let input = SharedInput::Dot(Arc::clone(&x), Arc::clone(&y));
+        let want = asy.service().submit(&input.view()).unwrap();
+        let miss = asy.submit_handles(a.handle, b.handle).unwrap().wait().unwrap();
+        let hit = asy.submit_handles(a.handle, b.handle).unwrap().wait().unwrap();
+        assert_eq!(miss.value.to_bits(), want.value.to_bits());
+        assert_eq!(
+            hit.value.to_bits(),
+            miss.value.to_bits(),
+            "cached result must be bit-identical to the recomputation"
+        );
+        assert_eq!(hit.path, miss.path);
+        assert_eq!(hit.n, miss.n);
+
+        let cs = asy.cache_stats();
+        assert_eq!(cs.lookups, 2);
+        assert_eq!(cs.hits, 1);
+        assert_eq!(cs.misses, 1);
+        assert_eq!(cs.hits + cs.misses, cs.lookups, "accounting partition");
+        let stats = asy.stats();
+        assert_eq!(stats.cache_hits, 1);
+        assert_eq!(
+            stats.completed,
+            stats.enqueued + stats.cache_hits,
+            "a hit completes without ever enqueueing"
+        );
+    }
+
+    #[test]
+    fn unknown_handles_fail_typed_and_reuse_after_release_is_collision_free() {
+        let asy = AsyncDotService::new(cfg(1, 1000), AsyncOptions::default()).unwrap();
+        match asy.submit_handles(0xdead, 0xbeef).unwrap_err() {
+            BackendError::UnknownHandle { handle } => {
+                assert_eq!(handle, 0xdead, "first unknown handle reported");
+            }
+            other => panic!("expected UnknownHandle, got {other:?}"),
+        }
+        let x = aligned_vec(64, 31);
+        let y = aligned_vec(64, 32);
+        let a = asy.register_operand(Arc::clone(&x)).unwrap();
+        let b = asy.register_operand(Arc::clone(&y)).unwrap();
+        assert!(asy.release_operand(a.handle));
+        match asy.submit_handles(a.handle, b.handle).unwrap_err() {
+            BackendError::UnknownHandle { handle } => assert_eq!(handle, a.handle),
+            other => panic!("expected UnknownHandle, got {other:?}"),
+        }
+        // Content addressing: the same contents re-register to the same
+        // handle, and the handle serves again.
+        let re = asy.register_operand(Arc::clone(&x)).unwrap();
+        assert_eq!(re.handle, a.handle);
+        assert!(re.fresh, "released contents re-register as fresh");
+        let input = SharedInput::Dot(Arc::clone(&x), Arc::clone(&y));
+        let want = asy.service().submit(&input.view()).unwrap();
+        let got = asy.submit_handles(re.handle, b.handle).unwrap().wait().unwrap();
+        assert_eq!(got.value.to_bits(), want.value.to_bits());
+        // Handle submits validate shapes exactly like payload submits.
+        let short = asy.register_operand(aligned_vec(32, 33)).unwrap();
+        assert!(matches!(
+            asy.submit_handles(re.handle, short.handle),
+            Err(BackendError::ShapeMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn cache_hits_attribute_to_the_hitting_tenant() {
+        let policy = QosPolicy::parse("a:1,b:1").unwrap();
+        let asy =
+            AsyncDotService::new_with_qos(cfg(2, 1000), AsyncOptions::default(), Some(policy), None)
+                .unwrap();
+        let x = aligned_vec(512, 51);
+        let y = aligned_vec(512, 52);
+        let a = asy.register_operand(x).unwrap();
+        let b = asy.register_operand(y).unwrap();
+        // Tenant 1 computes the miss; tenant 0 rides the cache.
+        let miss = asy
+            .submit_handles_with_opts(a.handle, b.handle, Instant::now(), None, 1)
+            .unwrap()
+            .wait()
+            .unwrap();
+        let hit = asy
+            .submit_handles_with_opts(a.handle, b.handle, Instant::now(), None, 0)
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(hit.value.to_bits(), miss.value.to_bits());
+        let rows = asy.tenant_stats();
+        assert_eq!(rows.len(), 2);
+        for row in &rows {
+            assert_eq!(row.admitted, 1);
+            assert_eq!(row.completed, 1, "hits count as completed work");
+        }
+        assert_eq!(rows[0].cache_hits, 1, "the hit belongs to tenant 0");
+        assert_eq!(rows[1].cache_hits, 0, "the miss computed for tenant 1");
+    }
+
+    #[test]
+    fn release_while_request_is_in_flight_never_frees_under_the_reader() {
+        let asy = AsyncDotService::new(cfg(2, 1000), AsyncOptions::default()).unwrap();
+        let x = aligned_vec(4096, 41);
+        let y = aligned_vec(4096, 42);
+        let a = asy.register_operand(Arc::clone(&x)).unwrap();
+        let b = asy.register_operand(Arc::clone(&y)).unwrap();
+        let input = SharedInput::Dot(Arc::clone(&x), Arc::clone(&y));
+        let want = asy.service().submit(&input.view()).unwrap();
+        // Submit resolves the handles (the request now owns Arcs to the
+        // operands), then release both before the result is awaited: the
+        // store drops its references, the in-flight request keeps its own.
+        let handle = asy.submit_handles(a.handle, b.handle).unwrap();
+        assert!(asy.release_operand(a.handle));
+        assert!(asy.release_operand(b.handle));
+        assert!(!asy.release_operand(a.handle), "release is idempotent");
+        let got = handle.wait().unwrap();
+        assert_eq!(
+            got.value.to_bits(),
+            want.value.to_bits(),
+            "released-under-reader request must still compute correctly"
+        );
+        // The handles themselves are gone for new submissions.
+        assert!(matches!(
+            asy.submit_handles(a.handle, b.handle),
+            Err(BackendError::UnknownHandle { .. })
+        ));
+        assert_eq!(asy.store_stats().released, 2);
     }
 }

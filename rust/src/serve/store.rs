@@ -1,0 +1,848 @@
+//! The resident operand store and the content-addressed result cache —
+//! the serving layer's answer to the paper's central observation turned
+//! around: once the Kahan-compensated kernel is memory-bound, compensation
+//! is free but *data traffic is not*. A read-heavy workload that re-sends
+//! the same operand vectors pays O(n) wire bytes and O(n) kernel traffic
+//! per request for answers the service has already computed. This module
+//! removes both:
+//!
+//! * [`OperandStore`] — clients register a vector once (the wire REGISTER
+//!   frame, PROTOCOL.md §3.8); the server hashes its *contents*
+//!   (SHA-256 of the encoded little-endian IEEE-754 bytes) into a 64-bit
+//!   handle and keeps the operand resident in the same 64-byte-aligned
+//!   first-touch arena in-process operands use. Subsequent requests submit
+//!   by `(handle_a, handle_b)` — 16 payload bytes instead of 16·n.
+//! * [`ResultCache`] — completed `(operand-pair, kernel, T)` results are
+//!   memoized by handle pair. Handles are content hashes, so a cache entry
+//!   can never go stale: the same handle pair *is* the same bits in, and
+//!   at fixed `T` the deterministic kernel produces the same bits out.
+//!   A hit replays the stored IEEE-754 bit pattern and the original
+//!   execution path — bit-identical to recomputation by construction, and
+//!   property-pinned in `tests/properties.rs` (including across the
+//!   socket).
+//!
+//! **Content addressing.** The handle is the first 8 bytes of the SHA-256
+//! digest, little-endian. Registering the same contents twice is an upsert
+//! that returns the same handle (`fresh == false` the second time); the
+//! full 32-byte digest is kept per entry, and the astronomically
+//! improbable truncated-handle collision (same 64-bit prefix, different
+//! digest) is *rejected* rather than silently overwritten, so one handle
+//! never aliases two payloads. This is what makes the result cache safe
+//! without any invalidation protocol: RELEASE and LRU eviction remove
+//! residency, never correctness — a re-registered operand gets the same
+//! handle back and every cached result keyed by it is still exact.
+//!
+//! **Release under in-flight readers.** The store hands out `Arc` clones
+//! of the operand buffer and holds exactly one `Arc` itself. RELEASE (or
+//! eviction) drops the *store's* reference only; a request already
+//! resolved against the handle keeps the arena slot alive through its own
+//! clone until it retires. Freeing the slot under a reader is therefore
+//! structurally impossible, not merely avoided — pinned by a regression
+//! test in `tests/properties.rs`.
+//!
+//! **Bounds.** Both structures are capacity-bounded with
+//! least-recently-used eviction (the store by resident bytes, the cache by
+//! entry count) and expose monotonic counters whose partition invariants
+//! (`hits + misses == lookups`) are hard-gated by
+//! `tools/validate_bench.py` from the `zipf` block of
+//! `BENCH_serving.json`.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::runtime::arena::AlignedVec;
+
+use super::scheduler::ExecPath;
+
+// ---------------------------------------------------------------------------
+// SHA-256 (FIPS 180-4), dependency-free.
+// ---------------------------------------------------------------------------
+
+/// The 64 SHA-256 round constants: fractional parts of the cube roots of
+/// the first 64 primes.
+const K: [u32; 64] = [
+    0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1, 0x923f82a4, 0xab1c5ed5,
+    0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3, 0x72be5d74, 0x80deb1fe, 0x9bdc06a7, 0xc19bf174,
+    0xe49b69c1, 0xefbe4786, 0x0fc19dc6, 0x240ca1cc, 0x2de92c6f, 0x4a7484aa, 0x5cb0a9dc, 0x76f988da,
+    0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7, 0xc6e00bf3, 0xd5a79147, 0x06ca6351, 0x14292967,
+    0x27b70a85, 0x2e1b2138, 0x4d2c6dfc, 0x53380d13, 0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85,
+    0xa2bfe8a1, 0xa81a664b, 0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070,
+    0x19a4c116, 0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a, 0x5b9cca4f, 0x682e6ff3,
+    0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208, 0x90befffa, 0xa4506ceb, 0xbef9a3f7, 0xc67178f2,
+];
+
+/// Streaming SHA-256 state: feed bytes with [`Sha256::update`], finish
+/// with [`Sha256::finalize`]. Streaming (rather than one-shot over a
+/// concatenated buffer) lets the store hash an operand's encoded bytes
+/// without materializing a second copy of the vector.
+struct Sha256 {
+    h: [u32; 8],
+    block: [u8; 64],
+    block_len: usize,
+    total_len: u64,
+}
+
+impl Sha256 {
+    fn new() -> Self {
+        Self {
+            // Fractional parts of the square roots of the first 8 primes.
+            h: [
+                0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c,
+                0x1f83d9ab, 0x5be0cd19,
+            ],
+            block: [0u8; 64],
+            block_len: 0,
+            total_len: 0,
+        }
+    }
+
+    fn compress(&mut self) {
+        let mut w = [0u32; 64];
+        for (i, chunk) in self.block.chunks_exact(4).enumerate() {
+            w[i] = u32::from_be_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        for i in 16..64 {
+            let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+            let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+            w[i] = w[i - 16]
+                .wrapping_add(s0)
+                .wrapping_add(w[i - 7])
+                .wrapping_add(s1);
+        }
+        let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut h] = self.h;
+        for i in 0..64 {
+            let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+            let ch = (e & f) ^ (!e & g);
+            let t1 = h
+                .wrapping_add(s1)
+                .wrapping_add(ch)
+                .wrapping_add(K[i])
+                .wrapping_add(w[i]);
+            let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+            let maj = (a & b) ^ (a & c) ^ (b & c);
+            let t2 = s0.wrapping_add(maj);
+            h = g;
+            g = f;
+            f = e;
+            e = d.wrapping_add(t1);
+            d = c;
+            c = b;
+            b = a;
+            a = t1.wrapping_add(t2);
+        }
+        for (s, v) in self.h.iter_mut().zip([a, b, c, d, e, f, g, h]) {
+            *s = s.wrapping_add(v);
+        }
+    }
+
+    fn update(&mut self, mut data: &[u8]) {
+        self.total_len += data.len() as u64;
+        while !data.is_empty() {
+            let take = (64 - self.block_len).min(data.len());
+            self.block[self.block_len..self.block_len + take].copy_from_slice(&data[..take]);
+            self.block_len += take;
+            data = &data[take..];
+            if self.block_len == 64 {
+                self.compress();
+                self.block_len = 0;
+            }
+        }
+    }
+
+    fn finalize(mut self) -> [u8; 32] {
+        let bit_len = self.total_len * 8;
+        self.update(&[0x80]);
+        while self.block_len != 56 {
+            self.update(&[0x00]);
+        }
+        // `update` would double-count the length bytes into total_len, but
+        // total_len was already captured in bit_len above, so feed the
+        // trailer directly through the block buffer.
+        self.block[56..64].copy_from_slice(&bit_len.to_be_bytes());
+        self.block_len = 64;
+        self.compress();
+        let mut out = [0u8; 32];
+        for (chunk, word) in out.chunks_exact_mut(4).zip(self.h) {
+            chunk.copy_from_slice(&word.to_be_bytes());
+        }
+        out
+    }
+}
+
+/// One-shot SHA-256 of a byte slice (FIPS 180-4). Exposed for tests and
+/// for anyone who needs to predict a handle client-side.
+pub fn sha256(data: &[u8]) -> [u8; 32] {
+    let mut s = Sha256::new();
+    s.update(data);
+    s.finalize()
+}
+
+/// The content digest of an operand vector: SHA-256 over its encoded wire
+/// bytes — each element's IEEE-754 bit pattern, little-endian, in order
+/// (exactly the bytes a REGISTER payload carries after the count,
+/// PROTOCOL.md §3.8). Two vectors hash equal iff they are bit-identical.
+pub fn operand_digest(data: &[f64]) -> [u8; 32] {
+    let mut s = Sha256::new();
+    for v in data {
+        s.update(&v.to_bits().to_le_bytes());
+    }
+    s.finalize()
+}
+
+/// The 64-bit resident-operand handle derived from a content digest: the
+/// first 8 digest bytes, little-endian (PROTOCOL.md §3.8).
+pub fn handle_of(digest: &[u8; 32]) -> u64 {
+    u64::from_le_bytes([
+        digest[0], digest[1], digest[2], digest[3], digest[4], digest[5], digest[6], digest[7],
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// Operand store
+// ---------------------------------------------------------------------------
+
+/// Why a registration was refused ([`OperandStore::register`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StoreError {
+    /// The operand alone exceeds the store's byte capacity — no amount of
+    /// eviction can make it resident. Maps to the wire STORE_FULL error
+    /// (PROTOCOL.md §4.13).
+    Full {
+        /// Bytes the operand would occupy.
+        requested: usize,
+        /// The store's configured capacity in bytes.
+        capacity: usize,
+    },
+    /// A different payload already owns this truncated handle (same first
+    /// 8 digest bytes, different full digest). Rejected so a handle never
+    /// aliases two payloads; with 64-bit handles this is effectively
+    /// unreachable, but the check is what makes the no-alias guarantee a
+    /// certainty instead of a probability.
+    Collision {
+        /// The contested handle value.
+        handle: u64,
+    },
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Full {
+                requested,
+                capacity,
+            } => write!(
+                f,
+                "operand of {requested} bytes exceeds the store capacity of {capacity} bytes"
+            ),
+            StoreError::Collision { handle } => {
+                write!(f, "truncated-digest collision on handle {handle:#018x}")
+            }
+        }
+    }
+}
+
+/// What [`OperandStore::register`] observed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RegisterOutcome {
+    /// The content-derived handle (PROTOCOL.md §3.8).
+    pub handle: u64,
+    /// Element count of the registered operand.
+    pub n: usize,
+    /// `true` if the contents were not resident before this call; `false`
+    /// for the upsert of already-resident contents (same handle returned).
+    pub fresh: bool,
+}
+
+/// Monotonic operand-store counters plus the current residency snapshot
+/// ([`OperandStore::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Operands currently resident.
+    pub entries: u64,
+    /// Bytes currently resident (sum of 8·n over entries).
+    pub resident_bytes: u64,
+    /// Fresh registrations (new contents made resident).
+    pub registered: u64,
+    /// Upserts: registrations whose contents were already resident.
+    pub reregistered: u64,
+    /// Explicit releases that found and removed an entry.
+    pub released: u64,
+    /// Entries removed by capacity-pressure LRU eviction.
+    pub evictions: u64,
+    /// Handle lookups ([`OperandStore::lookup`] calls).
+    pub lookups: u64,
+    /// Lookups that found no resident entry (UNKNOWN_HANDLE on the wire).
+    pub lookup_misses: u64,
+}
+
+struct StoreEntry {
+    digest: [u8; 32],
+    data: Arc<AlignedVec>,
+    /// LRU clock stamp: larger is more recently used.
+    last_used: u64,
+}
+
+struct StoreInner {
+    entries: HashMap<u64, StoreEntry>,
+    resident_bytes: usize,
+    clock: u64,
+    registered: u64,
+    reregistered: u64,
+    released: u64,
+    evictions: u64,
+    lookups: u64,
+    lookup_misses: u64,
+}
+
+/// The arena-backed resident operand store (module docs). Thread-safe:
+/// one mutex guards the handle map — registration and lookup are O(1)
+/// hash operations plus (for registration) the content hash itself, which
+/// is computed *outside* the lock.
+pub struct OperandStore {
+    capacity_bytes: usize,
+    inner: Mutex<StoreInner>,
+}
+
+/// Default store capacity: 256 MiB of resident operands — two full
+/// default-mixture catalogs with room to spare, small enough to bound a
+/// long-lived server's footprint.
+pub const STORE_DEFAULT_CAPACITY_BYTES: usize = 256 << 20;
+
+impl OperandStore {
+    /// An empty store bounded at `capacity_bytes` of resident operand data
+    /// (clamped to at least one cache line, 64 bytes).
+    pub fn new(capacity_bytes: usize) -> Self {
+        Self {
+            capacity_bytes: capacity_bytes.max(64),
+            inner: Mutex::new(StoreInner {
+                entries: HashMap::new(),
+                resident_bytes: 0,
+                clock: 0,
+                registered: 0,
+                reregistered: 0,
+                released: 0,
+                evictions: 0,
+                lookups: 0,
+                lookup_misses: 0,
+            }),
+        }
+    }
+
+    /// Poison-tolerant inner access (same policy as the queue mutex: a
+    /// panicking peer leaves the map structurally intact).
+    fn lock(&self) -> MutexGuard<'_, StoreInner> {
+        self.inner
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// The configured byte capacity.
+    pub fn capacity_bytes(&self) -> usize {
+        self.capacity_bytes
+    }
+
+    /// Register an operand: hash its contents, upsert it under the derived
+    /// handle, and evict least-recently-used entries if the insert pushed
+    /// residency past the capacity (the just-inserted entry is never the
+    /// eviction victim). The store keeps one `Arc` clone; the caller keeps
+    /// its own, so registration never copies the vector.
+    pub fn register(&self, data: Arc<AlignedVec>) -> Result<RegisterOutcome, StoreError> {
+        let digest = operand_digest(&data);
+        let handle = handle_of(&digest);
+        let n = data.len();
+        let bytes = 8 * n;
+        if bytes > self.capacity_bytes {
+            return Err(StoreError::Full {
+                requested: bytes,
+                capacity: self.capacity_bytes,
+            });
+        }
+        let mut s = self.lock();
+        s.clock += 1;
+        let stamp = s.clock;
+        if let Some(entry) = s.entries.get_mut(&handle) {
+            if entry.digest != digest {
+                return Err(StoreError::Collision { handle });
+            }
+            entry.last_used = stamp;
+            s.reregistered += 1;
+            return Ok(RegisterOutcome {
+                handle,
+                n,
+                fresh: false,
+            });
+        }
+        s.entries.insert(
+            handle,
+            StoreEntry {
+                digest,
+                data,
+                last_used: stamp,
+            },
+        );
+        s.resident_bytes += bytes;
+        s.registered += 1;
+        while s.resident_bytes > self.capacity_bytes {
+            let victim = s
+                .entries
+                .iter()
+                .filter(|&(&h, _)| h != handle)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&h, _)| h)
+                .expect("over-capacity store must hold an evictable entry");
+            let gone = s.entries.remove(&victim).expect("victim is resident");
+            s.resident_bytes -= 8 * gone.data.len();
+            s.evictions += 1;
+        }
+        Ok(RegisterOutcome {
+            handle,
+            n,
+            fresh: true,
+        })
+    }
+
+    /// Resolve a handle to its resident operand, bumping its LRU stamp.
+    /// The returned `Arc` keeps the buffer alive independently of the
+    /// store — a later release or eviction cannot free it under the
+    /// caller (module docs). `None` is the wire UNKNOWN_HANDLE condition.
+    pub fn lookup(&self, handle: u64) -> Option<Arc<AlignedVec>> {
+        let mut s = self.lock();
+        s.lookups += 1;
+        s.clock += 1;
+        let stamp = s.clock;
+        match s.entries.get_mut(&handle) {
+            Some(entry) => {
+                entry.last_used = stamp;
+                Some(Arc::clone(&entry.data))
+            }
+            None => {
+                s.lookup_misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Drop the store's reference to a handle. Idempotent: `true` if an
+    /// entry was resident and removed, `false` if the handle was unknown
+    /// (already released, evicted, or never registered). In-flight
+    /// requests holding `Arc` clones are unaffected either way.
+    pub fn release(&self, handle: u64) -> bool {
+        let mut s = self.lock();
+        match s.entries.remove(&handle) {
+            Some(entry) => {
+                s.resident_bytes -= 8 * entry.data.len();
+                s.released += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Whether a handle is currently resident (no LRU bump, no counters).
+    pub fn contains(&self, handle: u64) -> bool {
+        self.lock().entries.contains_key(&handle)
+    }
+
+    /// Counter + residency snapshot.
+    pub fn stats(&self) -> StoreStats {
+        let s = self.lock();
+        StoreStats {
+            entries: s.entries.len() as u64,
+            resident_bytes: s.resident_bytes as u64,
+            registered: s.registered,
+            reregistered: s.reregistered,
+            released: s.released,
+            evictions: s.evictions,
+            lookups: s.lookups,
+            lookup_misses: s.lookup_misses,
+        }
+    }
+}
+
+impl std::fmt::Debug for OperandStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        f.debug_struct("OperandStore")
+            .field("capacity_bytes", &self.capacity_bytes)
+            .field("entries", &s.entries)
+            .field("resident_bytes", &s.resident_bytes)
+            .finish()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Result cache
+// ---------------------------------------------------------------------------
+
+/// One memoized result: the answer's IEEE-754 bit pattern, the update
+/// count, and the execution path the original computation took. A cache
+/// hit replays all three, so the response frame is byte-identical to the
+/// recomputation it stands in for (PROTOCOL.md §3.5 — the path byte
+/// included).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CachedResult {
+    /// `f64::to_bits` of the dot value.
+    pub bits: u64,
+    /// Element count of the operands.
+    pub n: usize,
+    /// The path the original execution took (fused or sharded).
+    pub path: ExecPath,
+}
+
+/// Monotonic result-cache counters ([`ResultCache::stats`]). The
+/// partition `hits + misses == lookups` is hard-gated by
+/// `tools/validate_bench.py`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Entries currently memoized.
+    pub entries: u64,
+    /// Configured entry capacity.
+    pub capacity: u64,
+    /// Probe count ([`ResultCache::get`] calls).
+    pub lookups: u64,
+    /// Probes that found a memoized result.
+    pub hits: u64,
+    /// Probes that found nothing (`hits + misses == lookups`).
+    pub misses: u64,
+    /// Results inserted after a computed miss.
+    pub insertions: u64,
+    /// Entries removed by capacity-pressure LRU eviction.
+    pub evictions: u64,
+}
+
+struct CacheEntry {
+    result: CachedResult,
+    last_used: u64,
+}
+
+struct CacheInner {
+    map: HashMap<(u64, u64), CacheEntry>,
+    clock: u64,
+    lookups: u64,
+    hits: u64,
+    misses: u64,
+    insertions: u64,
+    evictions: u64,
+}
+
+/// The content-addressed result cache (module docs), keyed by the ordered
+/// operand-handle pair. The kernel variant and the thread count `T` are
+/// fixed per service — a service is one `(kernel, T)` context — so they
+/// are part of the cache's identity, not its key; a config change builds
+/// a fresh service and with it a fresh cache.
+pub struct ResultCache {
+    capacity: usize,
+    inner: Mutex<CacheInner>,
+}
+
+/// Default result-cache bound: 4096 memoized pairs — far above any bench
+/// catalog, small enough that a hostile client cannot balloon the server.
+pub const CACHE_DEFAULT_ENTRIES: usize = 4096;
+
+impl ResultCache {
+    /// An empty cache bounded at `capacity` entries (clamped to >= 1).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity: capacity.max(1),
+            inner: Mutex::new(CacheInner {
+                map: HashMap::new(),
+                clock: 0,
+                lookups: 0,
+                hits: 0,
+                misses: 0,
+                insertions: 0,
+                evictions: 0,
+            }),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, CacheInner> {
+        self.inner
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// The configured entry capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Probe the cache, bumping the entry's LRU stamp on a hit. Counts
+    /// exactly one lookup and exactly one of hit/miss.
+    pub fn get(&self, key: (u64, u64)) -> Option<CachedResult> {
+        let mut s = self.lock();
+        s.lookups += 1;
+        s.clock += 1;
+        let stamp = s.clock;
+        match s.map.get_mut(&key) {
+            Some(entry) => {
+                entry.last_used = stamp;
+                s.hits += 1;
+                Some(entry.result)
+            }
+            None => {
+                s.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Memoize a computed result, evicting the least-recently-used entry
+    /// if the insert exceeded the capacity. Upserting an existing key
+    /// refreshes its LRU stamp; content addressing guarantees the value
+    /// is identical, so which writer wins is unobservable.
+    pub fn insert(&self, key: (u64, u64), result: CachedResult) {
+        let mut s = self.lock();
+        s.clock += 1;
+        let stamp = s.clock;
+        let fresh = s
+            .map
+            .insert(
+                key,
+                CacheEntry {
+                    result,
+                    last_used: stamp,
+                },
+            )
+            .is_none();
+        if fresh {
+            s.insertions += 1;
+        }
+        while s.map.len() > self.capacity {
+            let victim = s
+                .map
+                .iter()
+                .filter(|&(&k, _)| k != key)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&k, _)| k)
+                .expect("over-capacity cache must hold an evictable entry");
+            s.map.remove(&victim);
+            s.evictions += 1;
+        }
+    }
+
+    /// Counter + occupancy snapshot.
+    pub fn stats(&self) -> CacheStats {
+        let s = self.lock();
+        CacheStats {
+            entries: s.map.len() as u64,
+            capacity: self.capacity as u64,
+            lookups: s.lookups,
+            hits: s.hits,
+            misses: s.misses,
+            insertions: s.insertions,
+            evictions: s.evictions,
+        }
+    }
+}
+
+impl std::fmt::Debug for ResultCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        f.debug_struct("ResultCache")
+            .field("capacity", &self.capacity)
+            .field("entries", &s.entries)
+            .field("hits", &s.hits)
+            .field("misses", &s.misses)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hex(digest: &[u8; 32]) -> String {
+        digest.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    fn aligned(values: &[f64]) -> Arc<AlignedVec> {
+        Arc::new(AlignedVec::copy_from(values))
+    }
+
+    #[test]
+    fn sha256_matches_fips_vectors() {
+        assert_eq!(
+            hex(&sha256(b"")),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+        assert_eq!(
+            hex(&sha256(b"abc")),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        assert_eq!(
+            hex(&sha256(
+                b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq"
+            )),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+        );
+        // Multi-block + padding-boundary lengths (55/56/64 bytes) stress
+        // the streaming finalize path.
+        for len in [55usize, 56, 63, 64, 65, 200] {
+            let data = vec![0x61u8; len];
+            let mut s = Sha256::new();
+            for b in &data {
+                s.update(std::slice::from_ref(b));
+            }
+            assert_eq!(s.finalize(), sha256(&data), "len={len}");
+        }
+    }
+
+    #[test]
+    fn operand_digest_is_bitwise_content_addressing() {
+        let a = operand_digest(&[1.0, -2.5, 3.75]);
+        let b = operand_digest(&[1.0, -2.5, 3.75]);
+        assert_eq!(a, b);
+        // 0.0 and -0.0 compare equal as floats but differ in bits: the
+        // digest must see the bits (the whole point of bit-parity).
+        assert_ne!(operand_digest(&[0.0]), operand_digest(&[-0.0]));
+        // Matches hashing the encoded little-endian bytes directly.
+        let values = [1.5f64, f64::MIN_POSITIVE, -1e300];
+        let mut bytes = Vec::new();
+        for v in &values {
+            bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        assert_eq!(operand_digest(&values), sha256(&bytes));
+    }
+
+    #[test]
+    fn register_is_an_upsert_returning_the_same_handle() {
+        let store = OperandStore::new(1 << 20);
+        let first = store.register(aligned(&[1.0, 2.0, 3.0])).unwrap();
+        assert!(first.fresh);
+        assert_eq!(first.n, 3);
+        let again = store.register(aligned(&[1.0, 2.0, 3.0])).unwrap();
+        assert!(!again.fresh);
+        assert_eq!(again.handle, first.handle);
+        let stats = store.stats();
+        assert_eq!(stats.registered, 1);
+        assert_eq!(stats.reregistered, 1);
+        assert_eq!(stats.entries, 1);
+        assert_eq!(stats.resident_bytes, 24);
+    }
+
+    #[test]
+    fn lookup_counts_hits_and_misses_and_release_is_idempotent() {
+        let store = OperandStore::new(1 << 20);
+        let out = store.register(aligned(&[4.0, 5.0])).unwrap();
+        assert!(store.lookup(out.handle).is_some());
+        assert!(store.lookup(0xDEAD_BEEF).is_none());
+        assert!(store.release(out.handle));
+        assert!(!store.release(out.handle), "second release finds nothing");
+        assert!(store.lookup(out.handle).is_none());
+        let stats = store.stats();
+        assert_eq!(stats.lookups, 3);
+        assert_eq!(stats.lookup_misses, 2);
+        assert_eq!(stats.released, 1);
+        assert_eq!(stats.entries, 0);
+        assert_eq!(stats.resident_bytes, 0);
+    }
+
+    #[test]
+    fn released_entries_stay_alive_through_outstanding_arcs() {
+        // The RELEASE-under-reader regression (ISSUE 9 fix): the store
+        // drops only its own Arc; a reader's clone keeps the arena slot
+        // valid.
+        let store = OperandStore::new(1 << 20);
+        let values: Vec<f64> = (0..1000).map(|i| i as f64 * 0.5).collect();
+        let out = store.register(aligned(&values)).unwrap();
+        let held = store.lookup(out.handle).expect("resident");
+        assert!(store.release(out.handle));
+        for (i, v) in held.iter().enumerate() {
+            assert_eq!(v.to_bits(), (i as f64 * 0.5).to_bits());
+        }
+    }
+
+    #[test]
+    fn store_eviction_is_lru_and_never_evicts_the_newcomer() {
+        // Capacity for exactly two 8-element operands (128 bytes).
+        let store = OperandStore::new(128);
+        let a = store
+            .register(aligned(&[1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0]))
+            .unwrap();
+        let b = store
+            .register(aligned(&[2.0, 2.0, 2.0, 2.0, 2.0, 2.0, 2.0, 2.0]))
+            .unwrap();
+        // Touch `a` so `b` becomes the LRU victim.
+        assert!(store.lookup(a.handle).is_some());
+        let c = store
+            .register(aligned(&[3.0, 3.0, 3.0, 3.0, 3.0, 3.0, 3.0, 3.0]))
+            .unwrap();
+        assert!(store.contains(a.handle), "recently-used survives");
+        assert!(!store.contains(b.handle), "LRU entry evicted");
+        assert!(store.contains(c.handle), "newcomer never evicted");
+        assert_eq!(store.stats().evictions, 1);
+        assert_eq!(store.stats().resident_bytes, 128);
+    }
+
+    #[test]
+    fn oversized_operand_is_refused_with_store_full() {
+        let store = OperandStore::new(64);
+        let err = store
+            .register(aligned(&(0..16).map(|i| i as f64).collect::<Vec<_>>()))
+            .unwrap_err();
+        assert_eq!(
+            err,
+            StoreError::Full {
+                requested: 128,
+                capacity: 64
+            }
+        );
+        assert_eq!(store.stats().entries, 0);
+    }
+
+    #[test]
+    fn handle_reuse_after_release_is_collision_free() {
+        let store = OperandStore::new(1 << 20);
+        let a = store.register(aligned(&[7.0, 8.0])).unwrap();
+        assert!(store.release(a.handle));
+        // Different contents get a different handle (content addressing,
+        // not slot reuse)...
+        let b = store.register(aligned(&[9.0, 10.0])).unwrap();
+        assert_ne!(a.handle, b.handle);
+        // ...and the original contents get their original handle back.
+        let again = store.register(aligned(&[7.0, 8.0])).unwrap();
+        assert!(again.fresh, "released contents re-register as fresh");
+        assert_eq!(again.handle, a.handle);
+    }
+
+    #[test]
+    fn result_cache_partitions_lookups_and_evicts_lru() {
+        let cache = ResultCache::new(2);
+        let r = |bits: u64| CachedResult {
+            bits,
+            n: 4,
+            path: ExecPath::Fused,
+        };
+        assert!(cache.get((1, 2)).is_none());
+        cache.insert((1, 2), r(100));
+        cache.insert((3, 4), r(200));
+        assert_eq!(cache.get((1, 2)).unwrap().bits, 100);
+        // (3,4) is now LRU; a third insert evicts it, not (1,2).
+        cache.insert((5, 6), r(300));
+        assert!(cache.get((3, 4)).is_none(), "LRU entry evicted");
+        assert_eq!(cache.get((1, 2)).unwrap().bits, 100);
+        assert_eq!(cache.get((5, 6)).unwrap().bits, 300);
+        let stats = cache.stats();
+        assert_eq!(stats.hits + stats.misses, stats.lookups);
+        assert_eq!(stats.hits, 4);
+        assert_eq!(stats.misses, 2);
+        assert_eq!(stats.insertions, 3);
+        assert_eq!(stats.evictions, 1);
+        assert_eq!(stats.entries, 2);
+    }
+
+    #[test]
+    fn result_cache_upsert_refreshes_without_recounting_insertions() {
+        let cache = ResultCache::new(8);
+        let r = CachedResult {
+            bits: 42,
+            n: 1,
+            path: ExecPath::Sharded,
+        };
+        cache.insert((1, 1), r);
+        cache.insert((1, 1), r);
+        assert_eq!(cache.stats().insertions, 1);
+        assert_eq!(cache.stats().entries, 1);
+    }
+}

@@ -671,6 +671,137 @@ fn wire_tenants_are_scheduled_fairly_and_accounted_exactly_once() {
     assert_eq!(row(0).quota_shed + row(1).quota_shed, 0);
 }
 
+/// The revision-1.3 resident-operand lifecycle over a real socket, under
+/// a tenant QoS policy: REGISTER is content-addressed and server-global
+/// (a second connection re-registering the same bits gets the same
+/// handle, not fresh), DOT_HANDLES is bit-identical to the in-process
+/// service on cache misses and hits alike, hits are attributed to the
+/// submitting tenant, RELEASE is idempotent and surfaces the typed
+/// non-fatal UNKNOWN_HANDLE on later submits, and re-registering restores
+/// the handle with its memoized result replayed bit-exactly.
+#[test]
+fn wire_operand_store_round_trip_under_tenant_qos() {
+    use kahan_ecm::runtime::backend::{ImplStyle, KernelInput};
+    use kahan_ecm::serve::codec::{ErrorCode, RequestMeta};
+    use kahan_ecm::serve::{
+        AsyncOptions, DotService, NetOptions, NetServer, QosPolicy, ServeConfig, ThresholdMode,
+        WireCallError, WireClient,
+    };
+
+    let cfg = ServeConfig {
+        threads: 2,
+        style: ImplStyle::SimdLanes,
+        compensated: true,
+        shard_threshold: ThresholdMode::Fixed(1024),
+        freq_ghz: 3.0,
+    };
+    let net = NetOptions {
+        qos: Some(QosPolicy::parse("gold:3:64,bronze:1:64").unwrap()),
+        ..NetOptions::default()
+    };
+    let server =
+        NetServer::bind_with("127.0.0.1:0", cfg.clone(), AsyncOptions::default(), net).unwrap();
+    let reference = DotService::new(cfg).unwrap();
+    let mut gold = WireClient::connect(server.local_addr()).unwrap();
+    let mut bronze = WireClient::connect(server.local_addr()).unwrap();
+
+    // A catalog straddling the crossover: 256/512 fuse, 2048 shards.
+    let catalog: Vec<(Vec<f64>, Vec<f64>)> = [256usize, 2048, 512]
+        .iter()
+        .map(|&n| {
+            let x: Vec<f64> = (0..n).map(|i| 0.5 + (i as f64) * 1e-4).collect();
+            let y: Vec<f64> = (0..n).map(|i| 1.5 - (i as f64) * 1e-5).collect();
+            (x, y)
+        })
+        .collect();
+
+    // Register once (gold). Registration is content-addressed: the same
+    // bits re-registered — from any connection — return the same handle,
+    // not fresh.
+    let handles: Vec<(u64, u64)> = catalog
+        .iter()
+        .map(|(x, y)| {
+            let (a, an, fresh_a) = gold.register(x).unwrap();
+            let (b, bn, fresh_b) = gold.register(y).unwrap();
+            assert!(fresh_a && fresh_b);
+            assert_eq!((an as usize, bn as usize), (x.len(), y.len()));
+            assert_ne!(a, b, "distinct contents, distinct handles");
+            (a, b)
+        })
+        .collect();
+    let (a0, n0, fresh) = bronze.register(&catalog[0].0).unwrap();
+    assert_eq!(a0, handles[0].0, "the store is server-global, content-addressed");
+    assert_eq!(n0 as usize, catalog[0].0.len());
+    assert!(!fresh, "already resident");
+
+    // Miss pass (gold, tenant 0): computed through the queue,
+    // bit-identical to the in-process reference.
+    let mut want = Vec::new();
+    for ((x, y), &(a, b)) in catalog.iter().zip(&handles) {
+        let wire = gold.dot_handles(a, b).unwrap();
+        let local = reference.submit(&KernelInput::Dot(x, y)).unwrap();
+        assert_eq!(wire.value.to_bits(), local.value.to_bits(), "miss n={}", x.len());
+        assert_eq!(wire.path, local.path, "miss path n={}", x.len());
+        assert_eq!(wire.n as usize, x.len());
+        want.push(wire);
+    }
+
+    // Hit pass (bronze, tenant 1): served from the result cache,
+    // bit-identical across the socket — including the path byte.
+    for (w, &(a, b)) in want.iter().zip(&handles) {
+        let meta = RequestMeta { deadline_us: None, tenant: Some(1), cache: false };
+        let hit = bronze.dot_handles_with_meta(a, b, meta).unwrap();
+        assert_eq!(hit.value.to_bits(), w.value.to_bits(), "cached bits replay exactly");
+        assert_eq!(hit.path, w.path, "the execution path replays too");
+    }
+    // One more hit on the gold connection (tenant 0).
+    let again = gold.dot_handles(handles[0].0, handles[0].1).unwrap();
+    assert_eq!(again.value.to_bits(), want[0].value.to_bits());
+
+    // RELEASE is idempotent; a released handle is a typed, non-fatal
+    // UNKNOWN_HANDLE on submit (resolution decides liveness — the
+    // still-memoized result must not resurrect it) and the connection
+    // survives.
+    assert!(bronze.release(handles[0].0).unwrap());
+    assert!(!bronze.release(handles[0].0).unwrap(), "second release is a no-op");
+    match gold.dot_handles(handles[0].0, handles[0].1) {
+        Err(WireCallError::Server(e)) => assert_eq!(e.code, ErrorCode::UnknownHandle),
+        other => panic!("expected a typed UNKNOWN_HANDLE frame, got {other:?}"),
+    }
+    // Re-registering the same contents restores the same handle, and the
+    // memoized result replays bit-exactly.
+    let (re, _, fresh) = gold.register(&catalog[0].0).unwrap();
+    assert_eq!(re, handles[0].0, "content-derived handles are stable");
+    assert!(fresh, "release made the slot fresh again");
+    let replay = gold.dot_handles(handles[0].0, handles[0].1).unwrap();
+    assert_eq!(replay.value.to_bits(), want[0].value.to_bits());
+
+    // The stats extension accounts the whole lifecycle exactly: 3 misses
+    // (the computed pass), 5 hits (3 bronze + 2 gold), the conservation
+    // partition, and per-tenant attribution of the hits.
+    let (_, rows, cache) = gold.stats_cache(Some(0)).unwrap();
+    assert_eq!(cache.cache_misses, 3);
+    assert_eq!(cache.cache_hits, 5);
+    assert_eq!(cache.cache_hits + cache.cache_misses, cache.cache_lookups);
+    assert_eq!(cache.store_registered, 7, "6 catalog operands + 1 re-register");
+    assert_eq!(cache.store_entries, 6);
+    assert_eq!(cache.store_resident_bytes, 8 * 2 * (256 + 2048 + 512));
+    assert_eq!(cache.store_evictions, 0);
+    let row = |t: u32| rows.iter().find(|r| r.tenant == t).copied().unwrap();
+    assert_eq!(row(0).admitted, 5, "3 computed + 2 hits on the gold tenant");
+    assert_eq!(row(0).completed, 5, "hits count as completed, exactly once");
+    assert_eq!(row(1).admitted, 3);
+    assert_eq!(row(1).completed, 3, "bronze's cache hits retire exactly once");
+
+    // Plain payload traffic still works on both connections afterwards.
+    let x = &catalog[2].0;
+    let wire = gold.dot(x, x).unwrap();
+    let local = reference.submit(&KernelInput::Dot(x, x)).unwrap();
+    assert_eq!(wire.value.to_bits(), local.value.to_bits());
+    let wire = bronze.dot(x, x).unwrap();
+    assert_eq!(wire.value.to_bits(), local.value.to_bits());
+}
+
 /// The wire load generator's wall-clock watchdog: against a server that
 /// answers stats probes but swallows every dot request, the run fails
 /// with a diagnostic watchdog error — it must never hang CI.

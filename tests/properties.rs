@@ -10,14 +10,14 @@ use kahan_ecm::isa::OpClass;
 use kahan_ecm::ptest::property;
 use kahan_ecm::runtime::arena::{ALIGN, AlignedVec};
 use kahan_ecm::runtime::backend::{
-    native, Backend, ImplStyle, KernelClass, KernelInput, KernelSpec, NativeBackend,
+    native, Backend, BackendError, ImplStyle, KernelClass, KernelInput, KernelSpec, NativeBackend,
 };
 use kahan_ecm::runtime::parallel::{
     compensated_tree_reduce, CACHELINE_F64, ParallelBackend, ThreadPool,
 };
 use kahan_ecm::serve::{
-    AsyncDotService, AsyncOptions, DotService, ExecPath, FaultInjector, FaultPlan, FaultSite,
-    ServeConfig, SharedInput, ThresholdMode,
+    handle_of, operand_digest, AsyncDotService, AsyncOptions, DotService, ExecPath, FaultInjector,
+    FaultPlan, FaultSite, OperandStore, ServeConfig, SharedInput, ThresholdMode,
 };
 use kahan_ecm::sim::{self, simulate_core, MeasureOpts};
 use kahan_ecm::util::rng::Rng;
@@ -742,6 +742,11 @@ fn serving_deterministic_across_fresh_services() {
         assert_eq!(ra.value.to_bits(), rb.value.to_bits(), "n={}", ra.n);
         assert_eq!(ra.path, rb.path);
     }
+}
+
+/// An `Arc`'d aligned copy, the form the operand store consumes.
+fn arc_operand(v: &[f64]) -> std::sync::Arc<AlignedVec> {
+    std::sync::Arc::new(AlignedVec::copy_from(v))
 }
 
 fn serve_cfg(threads: usize, threshold: usize) -> ServeConfig {
@@ -1513,5 +1518,188 @@ fn quota_accounting_never_double_counts_a_shed_request() {
         assert_eq!(row.quota_shed, qshed, "each shed is counted exactly once");
         assert_eq!(row.completed, row.admitted, "at quiescence every admission completes");
         assert_eq!(row.deadline_shed, 0);
+    });
+}
+
+/// The result-cache parity contract (docs/ARCHITECTURE.md §3c): a cache
+/// hit replays exactly the bits the recomputation it stands in for
+/// produced — the value AND the execution path — at every thread count,
+/// on both sides of the shard threshold. The computed miss, the memoized
+/// hit, and a cache-free synchronous reference are compared via
+/// `to_bits`, and the counter deltas pin exactly one miss then one hit
+/// per pair.
+#[test]
+fn cached_results_are_bit_identical_to_recomputation() {
+    let mut rng = Rng::new(0x9C5E);
+    let threshold = 2048usize;
+    let data: Vec<(Vec<f64>, Vec<f64>)> = [17usize, 600, 2047, 2048, 4097]
+        .iter()
+        .map(|&n| {
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            (x, y)
+        })
+        .collect();
+    for threads in [1usize, 2, 3] {
+        let sync = DotService::new(serve_cfg(threads, threshold)).unwrap();
+        let asy =
+            AsyncDotService::new(serve_cfg(threads, threshold), AsyncOptions::default()).unwrap();
+        for (x, y) in &data {
+            let want = sync.submit_batch(&[KernelInput::Dot(x, y)]).unwrap().remove(0);
+            let a = asy.register_operand(arc_operand(x)).unwrap();
+            let b = asy.register_operand(arc_operand(y)).unwrap();
+            let before = asy.cache_stats();
+            let miss = asy.submit_handles(a.handle, b.handle).unwrap().wait().unwrap();
+            let hit = asy.submit_handles(a.handle, b.handle).unwrap().wait().unwrap();
+            let after = asy.cache_stats();
+            for (label, got) in [("computed miss", &miss), ("memoized hit", &hit)] {
+                assert_eq!(
+                    got.value.to_bits(),
+                    want.value.to_bits(),
+                    "{label} value n={} T={threads}",
+                    want.n
+                );
+                assert_eq!(got.path, want.path, "{label} path n={} T={threads}", want.n);
+                assert_eq!(got.n, want.n);
+            }
+            assert_eq!(after.lookups - before.lookups, 2, "one probe per handle submit");
+            assert_eq!(after.misses - before.misses, 1, "the first submit computes");
+            assert_eq!(after.hits - before.hits, 1, "the second submit replays");
+        }
+        let s = asy.cache_stats();
+        assert_eq!(s.hits + s.misses, s.lookups, "the counter partition is exact");
+    }
+}
+
+/// Store eviction is least-recently-USED, not first-registered. A crisp
+/// deterministic scenario first (a `lookup` refresh protects the oldest
+/// registration, so capacity pressure evicts its younger-but-untouched
+/// neighbor), then a randomized register/lookup/release workload against
+/// a 4-slot store is checked op-by-op against an explicit LRU reference
+/// model — residency set, eviction victims, and conserved counters.
+#[test]
+fn operand_store_eviction_follows_lru_order() {
+    use std::collections::HashMap;
+
+    // v0 registered first, then refreshed: the eviction forced by v3 must
+    // take the least-recently-used v1, not the oldest-registered v0.
+    let vecs: Vec<Vec<f64>> = (0..4)
+        .map(|i| (0..8).map(|j| (100 * i + j) as f64).collect())
+        .collect();
+    let store = OperandStore::new(3 * 64);
+    let h: Vec<u64> = vecs
+        .iter()
+        .take(3)
+        .map(|v| store.register(arc_operand(v)).unwrap().handle)
+        .collect();
+    assert!(store.lookup(h[0]).is_some(), "refresh the oldest registration");
+    let h3 = store.register(arc_operand(&vecs[3])).unwrap().handle;
+    assert!(store.contains(h[0]), "the refreshed entry survives");
+    assert!(!store.contains(h[1]), "the least-recently-used entry is the victim");
+    assert!(store.contains(h[2]) && store.contains(h3));
+    assert_eq!(store.stats().evictions, 1);
+
+    property("operand store LRU model", 40, |g| {
+        const N: usize = 8; // 64 bytes per operand: exactly one slot
+        const SLOTS: u64 = 4;
+        let store = OperandStore::new(SLOTS as usize * N * 8);
+        let pool: Vec<Vec<f64>> = (0..7)
+            .map(|i| (0..N).map(|j| (i * N + j) as f64 + g.normal()).collect())
+            .collect();
+        let handles: Vec<u64> = pool.iter().map(|v| handle_of(&operand_digest(v))).collect();
+        let mut model: HashMap<u64, u64> = HashMap::new();
+        let mut clock = 0u64;
+        let mut evictions = 0u64;
+        for _ in 0..40 {
+            let idx = g.usize(0, pool.len() - 1);
+            let handle = handles[idx];
+            match g.u64(0, 3) {
+                0 | 1 => {
+                    let out = store.register(arc_operand(&pool[idx])).unwrap();
+                    assert_eq!(out.handle, handle, "handles are a pure function of contents");
+                    clock += 1;
+                    let fresh = !model.contains_key(&handle);
+                    assert_eq!(out.fresh, fresh, "fresh iff not resident");
+                    model.insert(handle, clock);
+                    while model.len() as u64 > SLOTS {
+                        let victim = *model
+                            .iter()
+                            .filter(|&(&k, _)| k != handle)
+                            .min_by_key(|(_, &stamp)| stamp)
+                            .map(|(k, _)| k)
+                            .unwrap();
+                        model.remove(&victim);
+                        evictions += 1;
+                    }
+                }
+                2 => {
+                    let resident = model.contains_key(&handle);
+                    assert_eq!(store.lookup(handle).is_some(), resident);
+                    if resident {
+                        clock += 1;
+                        model.insert(handle, clock);
+                    }
+                }
+                _ => {
+                    assert_eq!(store.release(handle), model.remove(&handle).is_some());
+                }
+            }
+            for h in &handles {
+                assert_eq!(store.contains(*h), model.contains_key(h), "residency model drift");
+            }
+        }
+        let s = store.stats();
+        assert_eq!(s.entries, model.len() as u64);
+        assert_eq!(s.resident_bytes, model.len() as u64 * (N as u64) * 8);
+        assert_eq!(s.evictions, evictions, "every eviction victim matched the model");
+    });
+}
+
+/// Handle lifecycle is collision-free and content-pure: a handle equals
+/// the documented SHA-256 truncation of its operand bits, re-registration
+/// after release yields the same handle fresh again, distinct contents
+/// never share a handle, a released handle fails a submit with the typed
+/// first-unknown error — and once re-registered, the still-memoized
+/// result replays bit-identically (the cache accelerates resident
+/// operands; resolution, not the cache, decides liveness).
+#[test]
+fn released_handles_reregister_collision_free() {
+    property("handle release/reuse lifecycle", 20, |g| {
+        let n = g.usize(4, 600);
+        let x: Vec<f64> = (0..n).map(|_| g.normal()).collect();
+        let y: Vec<f64> = (0..n).map(|_| g.normal()).collect();
+        let asy = AsyncDotService::new(serve_cfg(2, 2048), AsyncOptions::default()).unwrap();
+
+        let a = asy.register_operand(arc_operand(&x)).unwrap();
+        let b = asy.register_operand(arc_operand(&y)).unwrap();
+        assert_eq!(a.handle, handle_of(&operand_digest(&x)), "documented derivation");
+        assert!(a.fresh && b.fresh);
+        assert_ne!(a.handle, b.handle, "distinct contents, distinct handles");
+
+        let first = asy.submit_handles(a.handle, b.handle).unwrap().wait().unwrap();
+
+        // Release is idempotent and a released handle is typed-unknown,
+        // reported first (a before b), even though (a, b) is memoized.
+        assert!(asy.release_operand(a.handle));
+        assert!(!asy.release_operand(a.handle), "second release is a no-op");
+        let err = asy
+            .submit_handles(a.handle, b.handle)
+            .err()
+            .expect("a released handle must fail to resolve");
+        match err {
+            BackendError::UnknownHandle { handle } => assert_eq!(handle, a.handle),
+            other => panic!("expected UnknownHandle, got {other:?}"),
+        }
+
+        // Same contents, same handle, fresh again — and the memoized
+        // result for the re-registered pair replays bit-identically.
+        let again = asy.register_operand(arc_operand(&x)).unwrap();
+        assert_eq!(again.handle, a.handle, "content-derived handles are stable");
+        assert!(again.fresh, "release made the slot re-registerable");
+        let hits_before = asy.cache_stats().hits;
+        let replay = asy.submit_handles(a.handle, b.handle).unwrap().wait().unwrap();
+        assert_eq!(replay.value.to_bits(), first.value.to_bits());
+        assert_eq!(replay.path, first.path);
+        assert_eq!(asy.cache_stats().hits, hits_before + 1, "served from the cache");
     });
 }

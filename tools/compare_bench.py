@@ -73,6 +73,15 @@ assert not any(m.startswith("serving_chaos") for m in METRICS), \
     "chaos accounting must never feed perf verdicts"
 assert rule_for("serving_chaos_total_injected") is None
 
+# The zipf block's `serving_zipf_*` entries are likewise excluded: the
+# speedup is a loopback A/B ratio whose baseline pass ships megabytes per
+# request through the shared runner's loopback stack, so its run-to-run
+# swing dwarfs any real regression. Its correctness gates (bit-parity,
+# hits + misses == lookups) are hard-checked by tools/validate_bench.py.
+assert not any(m.startswith("serving_zipf") for m in METRICS), \
+    "zipf accounting must never feed perf verdicts"
+assert rule_for("serving_zipf_speedup") is None
+
 
 def load_summary(path):
     try:

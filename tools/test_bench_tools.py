@@ -162,6 +162,47 @@ def synth_tenants():
     }
 
 
+def zipf_pass(elapsed_ns, bytes_per_request, checksum, requests=400):
+    return {
+        "elapsed_ns": elapsed_ns,
+        "reqs_per_s": requests / elapsed_ns * 1e9,
+        "bytes_sent": bytes_per_request * requests,
+        "bytes_per_request": float(bytes_per_request),
+        "latency_p50_ns": elapsed_ns / requests * 0.8,
+        "latency_p99_ns": elapsed_ns / requests * 2.5,
+        "checksum": checksum,
+    }
+
+
+def synth_zipf():
+    """The PR 9 `zipf` block: a 24-pair catalog of n=16384 operands drawn
+    400 times under Zipf(1.2), served once by payload resubmission and once
+    by registered handles, bit-identical, with conservative cache counters
+    (every pair misses once, every repeat hits)."""
+    checksum = 77.125
+    return {
+        "s": 1.2, "n": 16384, "catalog": 24, "requests": 400,
+        "unique_pairs_drawn": 24,
+        "baseline": zipf_pass(2.4e9, 20 + 4 + 16 * 16384, checksum),
+        "handles": zipf_pass(0.4e9, 20 + 16, checksum),
+        "speedup": 6.0,
+        "register_ns": 6.0e7,
+        "register_bytes": 48 * (20 + 4 + 8 * 16384),
+        "value_mismatches": 0,
+        "bit_parity": True,
+        "cache": {
+            "store_entries": 48,
+            "store_resident_bytes": 48 * 16384 * 8,
+            "store_registered": 48,
+            "store_evictions": 0,
+            "lookups": 400,
+            "hits": 376,
+            "misses": 24,
+            "evictions": 0,
+        },
+    }
+
+
 def wire_row(p99, checksum, fused, sharded, requests):
     row = queue_row(p99, checksum, fused, sharded, requests)
     row["connections"] = 2
@@ -209,6 +250,7 @@ def synth_serving():
         "wire": wire_row(3.0e6, checksum, fused, sharded, requests),
         "chaos": synth_chaos(),
         "tenants": synth_tenants(),
+        "zipf": synth_zipf(),
         "async_p99_ok": True,
         "calibration": {
             "measured": {"p1_gups": 1.8, "p1_mflops": 9000.0, "p1_n": 262144,
@@ -482,6 +524,57 @@ def test_validators():
               mutate(serving, tenants_zero_completion_row),
               "fully quota-shed tenant row with null latency")
 
+    # Zipf block (PR 9): optional, but when present the operand-store hard
+    # gates apply — cached == recomputed bitwise, and cache counters that
+    # conserve (hits + misses == lookups, every unique pair misses once).
+    def no_zipf(d):
+        del d["zipf"]
+    expect_ok(validate_bench.validate_serving, mutate(serving, no_zipf),
+              "serving valid without zipf block")
+
+    def zipf_parity_broken(d):
+        d["zipf"]["bit_parity"] = False
+        d["zipf"]["value_mismatches"] = 3
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, zipf_parity_broken),
+                "zipf cached pass diverged from the baseline")
+
+    def zipf_lying_parity_flag(d):
+        # The flag says parity but the checksums disagree: the validator
+        # must recompute, not trust the flag.
+        d["zipf"]["handles"]["checksum"] += 1e-9
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, zipf_lying_parity_flag),
+                "zipf parity flag contradicts the checksums")
+
+    def zipf_counter_leak(d):
+        d["zipf"]["cache"]["hits"] -= 1
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, zipf_counter_leak),
+                "zipf cache counters leak (hits + misses != lookups)")
+
+    def zipf_no_hits(d):
+        d["zipf"]["cache"]["hits"] = 0
+        d["zipf"]["cache"]["misses"] = d["zipf"]["cache"]["lookups"]
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, zipf_no_hits),
+                "zipf run that never hit the result cache")
+
+    def zipf_misses_below_unique(d):
+        gap = 4
+        d["zipf"]["cache"]["misses"] -= gap
+        d["zipf"]["cache"]["hits"] += gap
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, zipf_misses_below_unique),
+                "zipf misses fewer than the unique pairs drawn")
+
+    def zipf_handles_not_smaller(d):
+        d["zipf"]["handles"]["bytes_per_request"] = \
+            d["zipf"]["baseline"]["bytes_per_request"]
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, zipf_handles_not_smaller),
+                "zipf handle frames as large as payload resubmission")
+
 
 def write_docs(tmp, docs):
     paths = []
@@ -511,7 +604,8 @@ def test_merge_and_summary(tmp):
                 "serving_measured_p1_mflops", "serving_reqs_per_s",
                 "serving_wire_p99_us", "serving_wire_reqs_per_s",
                 "serving_chaos_total_injected", "serving_chaos_hung",
-                "serving_tenant_a_p99_us", "serving_tenant_b_p99_us"):
+                "serving_tenant_a_p99_us", "serving_tenant_b_p99_us",
+                "serving_zipf_speedup", "serving_zipf_cache_hits"):
         assert key in h, f"missing headline metric {key}: {sorted(h)}"
     # Re-validating the merged document must pass too.
     rc = validate_bench.main([merged])
@@ -536,9 +630,10 @@ def test_compare(tmp, merged):
     # ARE compared, via the prefix rule (their names are dynamic).
     compared = {c["metric"] for c in verdict["comparisons"]}
     assert not any(m.startswith("serving_chaos") for m in compared), compared
+    assert not any(m.startswith("serving_zipf") for m in compared), compared
     assert {"serving_tenant_a_p99_us", "serving_tenant_b_p99_us"} <= compared, \
         compared
-    print("ok  compare identical -> ok (chaos excluded, tenant tails in)")
+    print("ok  compare identical -> ok (chaos + zipf excluded, tenant tails in)")
 
     # A big serving regression: warn by default, fail under --strict.
     with open(merged) as f:

@@ -182,6 +182,75 @@ def validate_chaos_block(chaos):
     assert recovery["latency_ns"] > 0, recovery
 
 
+def validate_zipf_pass(p, label):
+    """One pass of the `--zipf` scenario (baseline / handles)."""
+    assert p["elapsed_ns"] > 0, (label, p["elapsed_ns"])
+    assert p["reqs_per_s"] > 0, (label, p["reqs_per_s"])
+    assert p["bytes_sent"] > 0 and p["bytes_per_request"] > 0, (label, p)
+    assert 0 < p["latency_p50_ns"] <= p["latency_p99_ns"], (label, p)
+
+
+def validate_zipf_block(zipf):
+    """The optional `zipf` block (PR 9 schema): the resident-operand-store
+    scenario — a skewed-popularity stream served twice, once re-shipping
+    payloads and once by registered handle. Carries two hard gates:
+
+    * bit-parity — every value of the handle (cached) pass must be
+      bit-identical to the payload baseline over the same draw sequence;
+      the cache may change *when* a value is computed, never *what* it is
+      (docs/ARCHITECTURE.md §3c);
+    * counter conservation — every result-cache lookup is a hit or a
+      miss (`hits + misses == lookups`), and a skewed draw over a small
+      catalog must actually produce hits.
+    """
+    requests = zipf["requests"]
+    assert requests >= 1, requests
+    catalog = zipf["catalog"]
+    assert catalog >= 1, catalog
+    assert zipf["n"] >= 1, zipf["n"]
+    assert zipf["s"] >= 0, zipf["s"]
+    assert 1 <= zipf["unique_pairs_drawn"] <= min(catalog, requests), zipf
+    validate_zipf_pass(zipf["baseline"], "baseline")
+    validate_zipf_pass(zipf["handles"], "handles")
+    # Hard gate 1: cached == recomputed, bitwise, across the socket. The
+    # floats round-trip bit-exactly through JSON, so equality here is the
+    # Rust-side to_bits comparison.
+    assert zipf["bit_parity"] is True, \
+        "zipf bit-parity gate failed: the cached pass diverged from the " \
+        "payload baseline"
+    assert zipf["value_mismatches"] == 0, \
+        f"{zipf['value_mismatches']} cached value(s) differed bitwise " \
+        f"from their recomputed twins"
+    assert zipf["baseline"]["checksum"] == zipf["handles"]["checksum"], \
+        f"zipf checksums differ: baseline {zipf['baseline']['checksum']} " \
+        f"/ handles {zipf['handles']['checksum']}"
+    # Hard gate 2: counter conservation on the server's cache deltas.
+    cache = zipf["cache"]
+    for k, v in cache.items():
+        assert v >= 0 and v == int(v), (k, v)
+    assert cache["hits"] + cache["misses"] == cache["lookups"], \
+        f"cache counters leak: {cache['hits']} hits + {cache['misses']} " \
+        f"misses != {cache['lookups']} lookups"
+    assert cache["lookups"] >= requests, \
+        "every handle submission probes the cache exactly once at admission"
+    assert cache["hits"] > 0, \
+        "a Zipf draw over a small catalog produced no cache hits — the " \
+        "scenario is not exercising the result cache"
+    assert cache["misses"] >= zipf["unique_pairs_drawn"], \
+        "each distinct pair must miss at least once before it can hit"
+    # Registered twice per catalog pair (x and y), fresh registrations only.
+    assert cache["store_registered"] >= 0, cache["store_registered"]
+    assert cache["store_entries"] >= 1, cache["store_entries"]
+    assert cache["store_resident_bytes"] >= zipf["n"] * 8, cache
+    # The wire-traffic axis of the O(n) -> O(1) claim: a handle submit
+    # must be smaller than re-shipping the operands.
+    assert zipf["handles"]["bytes_per_request"] < \
+        zipf["baseline"]["bytes_per_request"], \
+        "handle submissions are not smaller than payload resubmission"
+    assert zipf["register_ns"] > 0 and zipf["register_bytes"] > 0, zipf
+    assert zipf["speedup"] > 0, zipf["speedup"]
+
+
 def validate_tenant_scenario(scn, policy, label):
     """One `--tenants` scenario (weighted / noisy): an offered rate plus
     one accounting + latency row per tenant class, aligned with the policy
@@ -389,6 +458,9 @@ def validate_serving(doc, smoke_async_check=False):
     tenants = doc.get("tenants")
     if tenants is not None:
         validate_tenants_block(doc)
+    zipf = doc.get("zipf")
+    if zipf is not None:
+        validate_zipf_block(zipf)
     extra = ", calibrated" if "calibration" in doc else ""
     if chaos is not None:
         extra += (f", chaos {chaos['total_injected']} faults / "
@@ -400,6 +472,9 @@ def validate_serving(doc, smoke_async_check=False):
     if wire is not None:
         extra += (f", wire p99 {wire['latency_ns']['p99'] / 1e3:.1f} us "
                   f"over {wire['connections']} conn")
+    if zipf is not None:
+        extra += (f", zipf {zipf['speedup']:.1f}x "
+                  f"({zipf['cache']['hits']} cache hits, bit-exact)")
     return f"{requests} requests ({doc['fused']} fused / {doc['sharded']} sharded), " \
            f"{doc['mode']} loop, p99 {lat['p99'] / 1e3:.1f} us, " \
            f"{doc['mflops']:.0f} MFlop/s; queue async p99 " \
@@ -475,6 +550,12 @@ def headline_of(documents):
                 p99 = row["latency_ns"]["p99"]
                 if p99 is not None:
                     h[f"serving_tenant_{row['name']}_p99_us"] = p99 / 1e3
+        zipf = serving.get("zipf")
+        if zipf:
+            # Loopback A/B ratio on a shared runner — recorded in the
+            # trajectory, excluded from compare_bench.py's perf verdict.
+            h["serving_zipf_speedup"] = zipf["speedup"]
+            h["serving_zipf_cache_hits"] = zipf["cache"]["hits"]
     return h
 
 
