@@ -39,6 +39,7 @@ fn parity_audit(threads: usize, seed: u64) -> Result<()> {
         compensated: true,
         shard_threshold: ThresholdMode::Fixed(4096),
         freq_ghz: 3.0,
+        verify_hit_rate: 0.0,
     };
     let service = DotService::new(cfg.clone())?;
     let mut rng = Rng::new(seed);
@@ -115,6 +116,7 @@ pub fn serve(ctx: &Ctx) -> Result<ExperimentOutput> {
         compensated: true,
         shard_threshold: ThresholdMode::Model,
         freq_ghz: freq,
+        verify_hit_rate: 0.0,
     };
     let service = DotService::new(cfg.clone())?;
     let mix = default_mix(ctx.quick);

@@ -40,11 +40,11 @@ use kahan_ecm::runtime::hostbench::{
 use kahan_ecm::runtime::parallel::ThreadPool;
 use kahan_ecm::serve::{
     calibrate, codec, default_mix, parse_mix, run_interleaving_checksum, run_load,
-    run_load_async, run_load_chaos, run_load_tenants, run_load_wire, run_load_zipf,
-    AsyncDotService, AsyncLoadReport, AsyncOptions, Calibration, ChaosReport, DotService,
-    FaultInjector, FaultPlan, FaultSite, InterleavingReport, LoadMode, LoadReport, NetOptions,
-    NetServer, OperandPool, QosPolicy, ServeConfig, TenantLoadReport, ThresholdMode,
-    WireLoadReport, ZipfReport,
+    run_load_async, run_load_chaos, run_load_integrity, run_load_tenants, run_load_wire,
+    run_load_zipf, AsyncDotService, AsyncLoadReport, AsyncOptions, Calibration, ChaosReport,
+    DotService, FaultInjector, FaultPlan, FaultSite, IntegrityReport, InterleavingReport,
+    LoadMode, LoadReport, NetOptions, NetServer, OperandPool, QosPolicy, ServeConfig,
+    TenantLoadReport, ThresholdMode, WireLoadReport, ZipfReport,
 };
 use kahan_ecm::sim::{self, MeasureOpts};
 use kahan_ecm::util::cli::Spec;
@@ -145,7 +145,10 @@ fn serve_bench_spec() -> Spec {
         .flag(
             "chaos",
             "run a seeded fault-injection scenario and record a `chaos` block (hard-fails \
-             on any hung request or failed recovery)",
+             on any hung request or failed recovery), plus the corruption-detection \
+             `integrity` block (hard-fails unless every injected corruption is detected, \
+             zero corrupt payloads are delivered, and a clean control pass raises no \
+             false positives)",
         )
         .opt("chaos-seed", "fault-plan seed for --chaos (default: the request seed)")
         .flag(
@@ -190,6 +193,11 @@ fn serve_net_spec() -> Spec {
             "tenants",
             "tenant QoS spec name:weight[:quota],... (bare weights like 3:1 also work); \
              unset quotas default to a weight-proportional share of the queue depth",
+        )
+        .opt(
+            "verify-hit-rate",
+            "fraction of result-cache hits to recompute and bit-verify before serving \
+             (0..=1; default: 0 — rate 0 is bit-identical to the unverified pipeline)",
         )
 }
 
@@ -925,6 +933,9 @@ fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
             None => ThresholdMode::Model,
         },
         freq_ghz: freq,
+        // The bench measures the unverified fast path; the integrity
+        // scenario below arms its own service at rate 1.0.
+        verify_hit_rate: 0.0,
     };
     // Calibration: measure p1 + dispatch overhead on a probe service, and
     // (unless the threshold was pinned) serve with the measured crossover.
@@ -1359,6 +1370,84 @@ fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
         None
     };
 
+    // Integrity scenario (rides --chaos): the end-to-end corruption
+    // detection story. A loopback serve-net instance runs with every
+    // verification tier armed — CRC-sealed frames, scrub-on-lookup,
+    // verify-on-hit at rate 1.0 — while the three corruption fault sites
+    // fire; a fault-free control pass with the same posture follows. The
+    // hard gates are detection completeness (every injection caught),
+    // delivery purity (zero corrupt payloads reach the client) and
+    // specificity (zero false positives on the clean pass).
+    let integrity: Option<IntegrityReport> = if args.flag("chaos") {
+        let opts = AsyncOptions {
+            queue_depth,
+            batch_window: std::time::Duration::from_micros(batch_window_us),
+            batch_max: batch,
+            overlap: true,
+            deadline: None,
+        };
+        let (int_n, int_catalog, int_requests) =
+            if quick { (4096, 4, 32) } else { (16384, 8, 96) };
+        eprintln!(
+            "serve-bench: integrity scenario (catalog {int_catalog} x n={int_n}, \
+             {int_requests} draws + clean control, {} corruption sites) ...",
+            FaultSite::INTEGRITY.len()
+        );
+        let r = match run_load_integrity(&cfg, opts, int_n, int_catalog, int_requests, seed) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("error: integrity run failed: {e}");
+                return ExitCode::FAILURE;
+            }
+        };
+        eprintln!(
+            "integrity: {} injected / {} detected ({} frame, {} operand, {} cache), {} corrupt \
+             delivered, {} re-registered; clean pass: {} detections, parity {}",
+            r.total_injected,
+            r.detected,
+            r.corrupt_frames_detected,
+            r.corrupt_operands_detected,
+            r.cache_poisoned_evicted,
+            r.delivered_corrupt,
+            r.reregisters,
+            r.clean_detections,
+            if r.clean_bit_parity { "bit-exact" } else { "FAILED" }
+        );
+        if r.detected != r.total_injected {
+            eprintln!(
+                "error: integrity gate: {} of {} injected corruptions went undetected",
+                r.total_injected - r.detected.min(r.total_injected),
+                r.total_injected
+            );
+            return ExitCode::FAILURE;
+        }
+        if r.delivered_corrupt > 0 {
+            eprintln!(
+                "error: integrity gate: {} corrupt payload(s) were delivered as results",
+                r.delivered_corrupt
+            );
+            return ExitCode::FAILURE;
+        }
+        if r.bound_missing > 0 {
+            eprintln!(
+                "error: integrity gate: {} response(s) lacked the requested certified error bound",
+                r.bound_missing
+            );
+            return ExitCode::FAILURE;
+        }
+        if r.clean_detections > 0 || !r.clean_bit_parity {
+            eprintln!(
+                "error: integrity gate: clean pass raised {} false positive(s) (parity {})",
+                r.clean_detections,
+                if r.clean_bit_parity { "ok" } else { "broken" }
+            );
+            return ExitCode::FAILURE;
+        }
+        Some(r)
+    } else {
+        None
+    };
+
     // Zipf scenario (--zipf): the resident-operand-store story end to end.
     // A dedicated loopback serve-net instance takes a skewed-popularity
     // stream twice — once re-shipping payloads, once submitting 16-byte
@@ -1657,6 +1746,78 @@ fn cmd_serve_bench(raw: Vec<String>) -> ExitCode {
         obj.insert("recovery".to_string(), Json::Obj(recovery));
         root.insert("chaos".to_string(), Json::Obj(obj));
     }
+    if let Some(r) = &integrity {
+        let mut injected = BTreeMap::new();
+        for (label, count) in &r.injected {
+            injected.insert((*label).to_string(), Json::Num(*count as f64));
+        }
+        let mut detected = BTreeMap::new();
+        detected.insert(
+            "corrupt_frames".to_string(),
+            Json::Num(r.corrupt_frames_detected as f64),
+        );
+        detected.insert(
+            "corrupt_operands".to_string(),
+            Json::Num(r.corrupt_operands_detected as f64),
+        );
+        detected.insert(
+            "cache_poisoned".to_string(),
+            Json::Num(r.cache_poisoned_evicted as f64),
+        );
+        let mut scrub = BTreeMap::new();
+        scrub.insert(
+            "scrub_verified".to_string(),
+            Json::Num(r.scrub.scrub_verified as f64),
+        );
+        scrub.insert(
+            "scrub_quarantined".to_string(),
+            Json::Num(r.scrub.scrub_quarantined as f64),
+        );
+        scrub.insert(
+            "scrub_passes".to_string(),
+            Json::Num(r.scrub.scrub_passes as f64),
+        );
+        scrub.insert(
+            "cache_verified".to_string(),
+            Json::Num(r.scrub.cache_verified as f64),
+        );
+        scrub.insert(
+            "cache_poisoned".to_string(),
+            Json::Num(r.scrub.cache_poisoned as f64),
+        );
+        let mut clean = BTreeMap::new();
+        clean.insert("requests".to_string(), Json::Num(r.clean_requests as f64));
+        clean.insert(
+            "detections".to_string(),
+            Json::Num(r.clean_detections as f64),
+        );
+        clean.insert("bit_parity".to_string(), Json::Bool(r.clean_bit_parity));
+        let mut obj = BTreeMap::new();
+        obj.insert("requests".to_string(), Json::Num(r.requests as f64));
+        obj.insert("catalog".to_string(), Json::Num(r.catalog as f64));
+        obj.insert("n".to_string(), Json::Num(r.n as f64));
+        obj.insert("injected".to_string(), Json::Obj(injected));
+        obj.insert(
+            "total_injected".to_string(),
+            Json::Num(r.total_injected as f64),
+        );
+        obj.insert("total_detected".to_string(), Json::Num(r.detected as f64));
+        obj.insert("detected".to_string(), Json::Obj(detected));
+        obj.insert(
+            "delivered_corrupt".to_string(),
+            Json::Num(r.delivered_corrupt as f64),
+        );
+        obj.insert("completed_ok".to_string(), Json::Num(r.completed_ok as f64));
+        obj.insert("reregisters".to_string(), Json::Num(r.reregisters as f64));
+        obj.insert("retries".to_string(), Json::Num(r.retries as f64));
+        obj.insert(
+            "bound_missing".to_string(),
+            Json::Num(r.bound_missing as f64),
+        );
+        obj.insert("scrub".to_string(), Json::Obj(scrub));
+        obj.insert("clean".to_string(), Json::Obj(clean));
+        root.insert("integrity".to_string(), Json::Obj(obj));
+    }
     if let Some(r) = &zipf {
         let pass = |p: &kahan_ecm::serve::ZipfPassReport| {
             let mut obj = BTreeMap::new();
@@ -1877,6 +2038,18 @@ fn cmd_serve_net(raw: Vec<String>) -> ExitCode {
         }
     };
 
+    let verify_hit_rate = match args.opt_parse("verify-hit-rate", 0.0f64) {
+        Ok(r) if (0.0..=1.0).contains(&r) => r,
+        Ok(_) => {
+            eprintln!("error: --verify-hit-rate must lie in 0..=1");
+            return ExitCode::FAILURE;
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+
     let cfg = ServeConfig {
         threads,
         style: preferred_kahan_style(SimdCaps::detect()),
@@ -1886,6 +2059,7 @@ fn cmd_serve_net(raw: Vec<String>) -> ExitCode {
             None => ThresholdMode::Model,
         },
         freq_ghz: freq,
+        verify_hit_rate,
     };
     let opts = AsyncOptions {
         queue_depth,
@@ -1925,14 +2099,19 @@ fn cmd_serve_net(raw: Vec<String>) -> ExitCode {
     let svc = server.service().service();
     eprintln!(
         "serve-net: T = {threads}, rung {}, shard at n >= {} ({}), queue depth {queue_depth}, \
-         window {batch_window_us} us, clock {freq:.2} GHz ({}){}",
+         window {batch_window_us} us, clock {freq:.2} GHz ({}){}{}",
         svc.dot_spec(),
         crossover_label(svc.shard_threshold()),
         svc.threshold_source().label(),
         freq_src.label(),
         qos_label
             .map(|l| format!(", tenants {l}"))
-            .unwrap_or_default()
+            .unwrap_or_default(),
+        if verify_hit_rate > 0.0 {
+            format!(", verify-hit rate {verify_hit_rate}")
+        } else {
+            String::new()
+        }
     );
     // Parseable by scripts (tools/bench-smoke): the actual bound address,
     // which differs from --addr when port 0 asked for an ephemeral port.

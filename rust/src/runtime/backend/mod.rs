@@ -288,6 +288,12 @@ pub enum BackendError {
     /// A register payload alone exceeds the operand store's byte capacity,
     /// so no eviction can make it resident.
     StoreFull { requested: usize, capacity: usize },
+    /// A handle-submit resolved an operand whose resident bytes no longer
+    /// hash to the registration digest (detected by the store scrubber).
+    /// The entry was quarantined — evicted, never served — and the client
+    /// recovers by re-registering the clean contents, which yields the
+    /// same handle.
+    CorruptOperand { handle: u64 },
 }
 
 impl fmt::Display for BackendError {
@@ -316,6 +322,12 @@ impl fmt::Display for BackendError {
                 write!(
                     f,
                     "operand store full: {requested} bytes exceeds capacity {capacity}"
+                )
+            }
+            BackendError::CorruptOperand { handle } => {
+                write!(
+                    f,
+                    "corrupt operand {handle:#018x}: resident bytes failed digest verification and were quarantined"
                 )
             }
         }

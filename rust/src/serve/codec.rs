@@ -73,16 +73,144 @@ pub const FLAG_RETRY: u8 = 0x04;
 /// 1.1/1.2 flags.
 pub const FLAG_CACHE: u8 = 0x08;
 
+/// Header flag bit (revision 1.4): the frame carries a 4-byte little-endian
+/// CRC32C *trailer* as the last bytes of the payload, and the declared
+/// payload length includes it (PROTOCOL.md §2.6). The checksum covers the
+/// 20 header bytes exactly as sent (flag set, length grown) plus the
+/// payload without the trailer. Receivers verify and strip the trailer
+/// before any prefix or body decoding; a mismatch is the typed non-fatal
+/// [`ErrorCode::CorruptFrame`] — the stream is still frame-aligned, so the
+/// connection survives. Pre-1.4 servers reject the bit with a non-fatal
+/// [`ErrorCode::Malformed`] — the downgrade signal, exactly as for the
+/// 1.1/1.2/1.3 flags.
+pub const FLAG_CRC: u8 = 0x10;
+
+/// Header flag bit (revision 1.4): on a request, the client asks for the
+/// certified error bound; on a [`Opcode::Result`] frame, the 17-byte
+/// result body is followed by an 8-byte IEEE-754 error-bound field — the
+/// Kahan compensation magnitude the kernels already track, certified
+/// `|result - exact| <=` bound (PROTOCOL.md §3.5, revision 1.4). Servers
+/// set it only on results answering a request that itself carried the
+/// flag, so pre-1.4 clients never see the extension.
+pub const FLAG_ERRBOUND: u8 = 0x20;
+
+/// Header flag bit (revision 1.4): on a STATS request it opts into the
+/// integrity-counter stats extension; on a STATS_RESULT frame it announces
+/// that extension — five `u64` scrub/verification counters appended after
+/// the cache counters (PROTOCOL.md §3.7). Always accompanied by
+/// [`FLAG_CACHE`]: the integrity counters extend the cache block, and a
+/// scrub extension without it is [`ErrorCode::Malformed`].
+pub const FLAG_SCRUB: u8 = 0x40;
+
 /// All flag bits assigned so far (PROTOCOL.md §2.4). Unknown bits are
 /// rejected as [`ErrorCode::Malformed`] without closing the connection,
 /// exactly as revision 1.0 treated any nonzero offset-6 byte.
-pub const FLAGS_KNOWN: u8 = FLAG_DEADLINE | FLAG_TENANT | FLAG_RETRY | FLAG_CACHE;
+pub const FLAGS_KNOWN: u8 =
+    FLAG_DEADLINE | FLAG_TENANT | FLAG_RETRY | FLAG_CACHE | FLAG_CRC | FLAG_ERRBOUND | FLAG_SCRUB;
 
 /// Maximum payload length the codec will accept, 128 MiB
 /// (PROTOCOL.md §2.3). Large enough for a dot request over the full default
 /// mixture's largest operand pair (`n = 4_194_304` → 4 + 16·n ≈ 64 MiB),
 /// small enough to bound per-connection memory.
 pub const MAX_PAYLOAD: usize = 1 << 27;
+
+/// CRC32C (Castagnoli) lookup table, built at compile time from the
+/// reflected polynomial `0x82F63B78` (PROTOCOL.md §2.6, revision 1.4).
+/// Table-driven and dependency-free by design constraint (§1).
+const CRC32C_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ 0x82F6_3B78 } else { crc >> 1 };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+};
+
+/// Fold `bytes` into a running CRC32C state (pre- and post-inversion are
+/// the caller's job) — lets [`verify_crc`] checksum header and payload
+/// without concatenating them.
+fn crc32c_update(mut crc: u32, bytes: &[u8]) -> u32 {
+    for &b in bytes {
+        crc = (crc >> 8) ^ CRC32C_TABLE[((crc ^ u32::from(b)) & 0xFF) as usize];
+    }
+    crc
+}
+
+/// CRC32C (Castagnoli) checksum of `bytes` — the checksum the revision-1.4
+/// [`FLAG_CRC`] trailer carries (PROTOCOL.md §2.6). Standard reflected
+/// CRC32C: initial value `!0`, final complement; the check value over
+/// `b"123456789"` is `0xE3069283`.
+pub fn crc32c(bytes: &[u8]) -> u32 {
+    !crc32c_update(!0u32, bytes)
+}
+
+/// Byte length of the [`FLAG_CRC`] trailer (PROTOCOL.md §2.6).
+pub const CRC_TRAILER_LEN: usize = 4;
+
+/// Seal a complete frame with the revision-1.4 CRC trailer, in place
+/// (PROTOCOL.md §2.6): sets [`FLAG_CRC`] in the header, grows the declared
+/// payload length by the 4-byte trailer, then appends the little-endian
+/// CRC32C computed over the *updated* header and the payload without the
+/// trailer — so the checksum also covers the flags and length the peer
+/// actually received. Panics if the grown payload would exceed
+/// [`MAX_PAYLOAD`] (encoders build payloads far below the cap) or on a
+/// headerless buffer; both are caller bugs, not wire conditions.
+pub fn seal_crc(frame: &mut Vec<u8>) {
+    assert!(frame.len() >= HEADER_LEN, "sealing a frame without a header");
+    let payload_len = frame.len() - HEADER_LEN + CRC_TRAILER_LEN;
+    assert!(
+        payload_len <= MAX_PAYLOAD,
+        "sealed payload {} exceeds protocol cap {}",
+        payload_len,
+        MAX_PAYLOAD
+    );
+    frame[6] |= FLAG_CRC;
+    frame[16..20].copy_from_slice(&(payload_len as u32).to_le_bytes());
+    let crc = crc32c(frame);
+    frame.extend_from_slice(&crc.to_le_bytes());
+}
+
+/// Verify and strip the revision-1.4 CRC trailer from a received payload
+/// (PROTOCOL.md §2.6). `head` is the raw 20-byte header exactly as
+/// received; the checksum covers those bytes plus the payload without its
+/// trailing [`CRC_TRAILER_LEN`] bytes. Returns the payload with the
+/// trailer stripped, ready for prefix splitting and body decoding; a
+/// flagless call passes the payload through untouched. A flagged payload
+/// shorter than its trailer, or a checksum mismatch, is the typed
+/// non-fatal [`ErrorCode::CorruptFrame`].
+pub fn verify_crc<'a>(
+    head: &[u8; HEADER_LEN],
+    flags: u8,
+    payload: &'a [u8],
+) -> Result<&'a [u8], WireError> {
+    if flags & FLAG_CRC == 0 {
+        return Ok(payload);
+    }
+    if payload.len() < CRC_TRAILER_LEN {
+        return Err(WireError::new(
+            ErrorCode::CorruptFrame,
+            "CRC flag set but payload shorter than its 4-byte trailer",
+        ));
+    }
+    let body = &payload[..payload.len() - CRC_TRAILER_LEN];
+    let trailer = &payload[payload.len() - CRC_TRAILER_LEN..];
+    let want = u32::from_le_bytes([trailer[0], trailer[1], trailer[2], trailer[3]]);
+    let got = !crc32c_update(crc32c_update(!0u32, head), body);
+    if got != want {
+        return Err(WireError::new(
+            ErrorCode::CorruptFrame,
+            format!("frame checksum mismatch: computed {got:#010x}, trailer {want:#010x}"),
+        ));
+    }
+    Ok(body)
+}
 
 /// Request/response opcodes (PROTOCOL.md §3). The discriminant values are
 /// the wire bytes.
@@ -223,6 +351,18 @@ pub enum ErrorCode {
     /// back to inline payload submission (PROTOCOL.md §4.13, revision
     /// 1.3). Pre-1.3 clients decode the byte as [`ErrorCode::Internal`].
     StoreFull,
+    /// A [`FLAG_CRC`]-sealed frame failed checksum verification — the
+    /// bytes were damaged in flight or by a faulty peer. Non-fatal: the
+    /// header parsed cleanly, so the stream is still frame-aligned and the
+    /// sender may simply resend (PROTOCOL.md §4.14, revision 1.4).
+    /// Pre-1.4 clients decode the byte as [`ErrorCode::Internal`].
+    CorruptFrame,
+    /// A resident operand failed its SHA-256 scrub — the stored bits no
+    /// longer match the digest recorded at REGISTER. The entry is
+    /// quarantined (evicted, never served) and the client re-registers the
+    /// operand to restore it; non-fatal (PROTOCOL.md §4.15, revision 1.4).
+    /// Pre-1.4 clients decode the byte as [`ErrorCode::Internal`].
+    CorruptOperand,
 }
 
 impl ErrorCode {
@@ -242,6 +382,8 @@ impl ErrorCode {
             ErrorCode::Quota => 0x0B,
             ErrorCode::UnknownHandle => 0x0C,
             ErrorCode::StoreFull => 0x0D,
+            ErrorCode::CorruptFrame => 0x0E,
+            ErrorCode::CorruptOperand => 0x0F,
         }
     }
 
@@ -262,6 +404,8 @@ impl ErrorCode {
             0x0B => ErrorCode::Quota,
             0x0C => ErrorCode::UnknownHandle,
             0x0D => ErrorCode::StoreFull,
+            0x0E => ErrorCode::CorruptFrame,
+            0x0F => ErrorCode::CorruptOperand,
             _ => ErrorCode::Internal,
         }
     }
@@ -292,6 +436,8 @@ impl ErrorCode {
             ErrorCode::Quota => "quota",
             ErrorCode::UnknownHandle => "unknown-handle",
             ErrorCode::StoreFull => "store-full",
+            ErrorCode::CorruptFrame => "corrupt-frame",
+            ErrorCode::CorruptOperand => "corrupt-operand",
         }
     }
 }
@@ -527,20 +673,32 @@ pub struct RequestMeta {
     /// On a STATS request it opts into the cache-counter stats extension
     /// (PROTOCOL.md §3.7).
     pub cache: bool,
+    /// Revision-1.4 certified-error-bound opt-in ([`FLAG_ERRBOUND`], no
+    /// payload prefix): the result frame answering this request carries
+    /// the 8-byte error-bound extension (PROTOCOL.md §3.5).
+    pub errbound: bool,
+    /// Revision-1.4 integrity-counter opt-in ([`FLAG_SCRUB`], no payload
+    /// prefix). On a STATS request it asks for the scrub extension; it
+    /// implies the cache extension (PROTOCOL.md §3.7).
+    pub scrub: bool,
 }
 
-/// Strip every flagged payload prefix (PROTOCOL.md §2.4, revision 1.3):
+/// Strip every flagged payload prefix (PROTOCOL.md §2.4, revision 1.4):
 /// the 8-byte deadline ([`FLAG_DEADLINE`]), then the 4-byte tenant id
 /// ([`FLAG_TENANT`]) — prefixes appear in ascending flag-bit order.
-/// [`FLAG_CACHE`] carries no prefix and is recorded as-is. Returns the
-/// decoded metadata and the remaining request payload; a flagged payload
-/// shorter than its prefixes is [`ErrorCode::Malformed`].
+/// [`FLAG_CACHE`], [`FLAG_ERRBOUND`] and [`FLAG_SCRUB`] carry no prefix
+/// and are recorded as-is ([`FLAG_CRC`]'s trailer is verified and
+/// stripped before this call, see [`verify_crc`]). Returns the decoded
+/// metadata and the remaining request payload; a flagged payload shorter
+/// than its prefixes is [`ErrorCode::Malformed`].
 pub fn split_prefixes(flags: u8, payload: &[u8]) -> Result<(RequestMeta, &[u8]), WireError> {
     let (deadline_us, rest) = split_deadline(flags, payload)?;
     let mut meta = RequestMeta {
         deadline_us,
         tenant: None,
         cache: flags & FLAG_CACHE != 0,
+        errbound: flags & FLAG_ERRBOUND != 0,
+        scrub: flags & FLAG_SCRUB != 0,
     };
     if flags & FLAG_TENANT == 0 {
         return Ok((meta, rest));
@@ -578,6 +736,12 @@ pub fn encode_frame_with_meta(
     }
     if meta.cache {
         flags |= FLAG_CACHE; // prefix-free (PROTOCOL.md §2.4)
+    }
+    if meta.errbound {
+        flags |= FLAG_ERRBOUND; // prefix-free (PROTOCOL.md §2.4, rev 1.4)
+    }
+    if meta.scrub {
+        flags |= FLAG_SCRUB; // prefix-free (PROTOCOL.md §2.4, rev 1.4)
     }
     let total = payload.len() + prefix_len;
     assert!(
@@ -797,9 +961,8 @@ pub fn encode_stats_tenants(request_id: u64, tenant: u32) -> Vec<u8> {
         Opcode::Stats,
         request_id,
         RequestMeta {
-            deadline_us: None,
             tenant: Some(tenant),
-            cache: false,
+            ..RequestMeta::default()
         },
         &[],
     )
@@ -816,9 +979,28 @@ pub fn encode_stats_cache(request_id: u64, tenant: Option<u32>) -> Vec<u8> {
         Opcode::Stats,
         request_id,
         RequestMeta {
-            deadline_us: None,
             tenant,
             cache: true,
+            ..RequestMeta::default()
+        },
+        &[],
+    )
+}
+
+/// Encode a stats probe that opts into the integrity-counter extension
+/// (PROTOCOL.md §3.7, revision 1.4): [`FLAG_SCRUB`] asks the server for
+/// the scrub/verification counters, and it always rides with
+/// [`FLAG_CACHE`] (the scrub block extends the cache block). Pass a
+/// tenant to opt into the per-tenant extension as well.
+pub fn encode_stats_scrub(request_id: u64, tenant: Option<u32>) -> Vec<u8> {
+    encode_frame_with_meta(
+        Opcode::Stats,
+        request_id,
+        RequestMeta {
+            tenant,
+            cache: true,
+            scrub: true,
+            ..RequestMeta::default()
         },
         &[],
     )
@@ -973,6 +1155,12 @@ pub struct WireResult {
     pub n: u64,
     /// Which execution path served the request (fused or sharded).
     pub path: ExecPath,
+    /// Certified absolute error bound carried by the revision-1.4
+    /// [`FLAG_ERRBOUND`] extension (PROTOCOL.md §3.5): the compensated
+    /// kernels certify `|value - exact| <=` this bound. `None` on frames
+    /// without the extension — the byte layout is then exactly the
+    /// 17-byte revision-1.0 body.
+    pub err_bound: Option<f64>,
 }
 
 fn path_byte(path: ExecPath) -> u8 {
@@ -1003,15 +1191,31 @@ fn read_result(r: &mut Reader<'_>) -> Result<WireResult, WireError> {
     let value = r.f64()?;
     let n = r.u64()?;
     let path = path_from_byte(r.u8()?)?;
-    Ok(WireResult { value, n, path })
+    Ok(WireResult {
+        value,
+        n,
+        path,
+        err_bound: None,
+    })
 }
 
 /// Encode a scalar-result frame (PROTOCOL.md §3.5): value bits (8) +
-/// update count (8) + path byte (1).
+/// update count (8) + path byte (1). When the result carries a certified
+/// error bound, the header sets [`FLAG_ERRBOUND`] and the bound's IEEE-754
+/// bits (8) follow the path byte (revision 1.4); a bound-free result is
+/// byte-identical to the revision-1.0 frame.
 pub fn encode_result(request_id: u64, result: &WireResult) -> Vec<u8> {
-    let mut payload = Vec::with_capacity(17);
+    let mut payload = Vec::with_capacity(25);
     push_result(&mut payload, result);
-    encode_frame(Opcode::Result, request_id, &payload)
+    let mut flags = 0u8;
+    if let Some(bound) = result.err_bound {
+        flags |= FLAG_ERRBOUND;
+        payload.extend_from_slice(&bound.to_bits().to_le_bytes());
+    }
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    encode_header_flagged(&mut out, Opcode::Result, flags, request_id, payload.len() as u32);
+    out.extend_from_slice(&payload);
+    out
 }
 
 /// Encode a batch-result frame (PROTOCOL.md §3.6): result count then that
@@ -1126,6 +1330,41 @@ fn push_cache_fields(payload: &mut Vec<u8>, cache: &WireCacheStats) {
     }
 }
 
+/// Integrity counters carried by the [`FLAG_SCRUB`] stats extension
+/// (PROTOCOL.md §3.7, revision 1.4): five little-endian `u64` fields in
+/// this order, appended after the cache counters (extensions appear in
+/// ascending flag-bit order; the scrub extension always rides with
+/// [`FLAG_CACHE`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireScrubStats {
+    /// Resident-operand digest re-checks that matched (on-demand and
+    /// background scrubs alike).
+    pub scrub_verified: u64,
+    /// Resident operands quarantined on digest mismatch — evicted, never
+    /// served.
+    pub scrub_quarantined: u64,
+    /// Full background scrub sweeps completed.
+    pub scrub_passes: u64,
+    /// Sampled cache hits recomputed and bit-confirmed against the
+    /// memoized value.
+    pub cache_verified: u64,
+    /// Sampled cache hits whose recomputation disagreed — the entry was
+    /// evicted and the request fell through to a fresh compute.
+    pub cache_poisoned: u64,
+}
+
+fn push_scrub_fields(payload: &mut Vec<u8>, scrub: &WireScrubStats) {
+    for field in [
+        scrub.scrub_verified,
+        scrub.scrub_quarantined,
+        scrub.scrub_passes,
+        scrub.cache_verified,
+        scrub.cache_poisoned,
+    ] {
+        payload.extend_from_slice(&field.to_le_bytes());
+    }
+}
+
 /// Encode a stats-result frame carrying the per-tenant extension
 /// (PROTOCOL.md §3.7, revision 1.2). Shorthand for
 /// [`encode_stats_result_ext`] with no cache extension.
@@ -1134,24 +1373,31 @@ pub fn encode_stats_result_tenants(
     stats: &WireStats,
     tenants: &[WireTenantStats],
 ) -> Vec<u8> {
-    encode_stats_result_ext(request_id, stats, Some(tenants), None)
+    encode_stats_result_ext(request_id, stats, Some(tenants), None, None)
 }
 
 /// Encode a stats-result frame carrying any combination of the flagged
 /// extensions (PROTOCOL.md §3.7): the fixed eight `u64` fields, then — in
 /// ascending flag-bit order — the per-tenant rows ([`FLAG_TENANT`],
-/// revision 1.2) and the cache counters ([`FLAG_CACHE`], revision 1.3).
-/// The frame's flag bits announce exactly the extensions present; servers
-/// send each extension only to clients that opted in via the matching
-/// flag on their STATS request.
+/// revision 1.2), the cache counters ([`FLAG_CACHE`], revision 1.3) and
+/// the integrity counters ([`FLAG_SCRUB`], revision 1.4). The frame's
+/// flag bits announce exactly the extensions present; servers send each
+/// extension only to clients that opted in via the matching flag on their
+/// STATS request. The scrub extension extends the cache block, so passing
+/// it without the cache counters is a caller bug (panics in debug).
 pub fn encode_stats_result_ext(
     request_id: u64,
     stats: &WireStats,
     tenants: Option<&[WireTenantStats]>,
     cache: Option<&WireCacheStats>,
+    scrub: Option<&WireScrubStats>,
 ) -> Vec<u8> {
+    debug_assert!(
+        scrub.is_none() || cache.is_some(),
+        "the scrub extension rides with the cache extension (PROTOCOL.md §3.7)"
+    );
     let mut flags = 0u8;
-    let mut payload = Vec::with_capacity(64 + 4 + 36 * tenants.map_or(0, <[_]>::len) + 64);
+    let mut payload = Vec::with_capacity(64 + 4 + 36 * tenants.map_or(0, <[_]>::len) + 64 + 40);
     push_stats_fields(&mut payload, stats);
     if let Some(rows) = tenants {
         flags |= FLAG_TENANT;
@@ -1166,6 +1412,10 @@ pub fn encode_stats_result_ext(
     if let Some(cache) = cache {
         flags |= FLAG_CACHE;
         push_cache_fields(&mut payload, cache);
+    }
+    if let Some(scrub) = scrub {
+        flags |= FLAG_SCRUB;
+        push_scrub_fields(&mut payload, scrub);
     }
     let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
     encode_header_flagged(
@@ -1258,7 +1508,8 @@ pub enum Response {
         tenants: Vec<WireTenantStats>,
     },
     /// A stats snapshot with the revision-1.3 cache-counter extension
-    /// (PROTOCOL.md §3.7), optionally combined with the per-tenant rows.
+    /// (PROTOCOL.md §3.7), optionally combined with the per-tenant rows
+    /// and the revision-1.4 integrity counters.
     CacheStats {
         /// The fixed eight-field snapshot every revision carries.
         stats: WireStats,
@@ -1267,6 +1518,9 @@ pub enum Response {
         tenants: Vec<WireTenantStats>,
         /// Operand-store and result-cache counters.
         cache: WireCacheStats,
+        /// Scrub/verification integrity counters if [`FLAG_SCRUB`] was
+        /// also set (revision 1.4); `None` otherwise.
+        scrub: Option<WireScrubStats>,
     },
     /// A register acknowledgement (PROTOCOL.md §3.8, revision 1.3).
     Registered {
@@ -1305,7 +1559,14 @@ pub fn decode_response_flagged(
 ) -> Result<Response, WireError> {
     let mut r = Reader::new(payload);
     let resp = match opcode {
-        Opcode::Result => Response::Result(read_result(&mut r)?),
+        Opcode::Result => {
+            let mut result = read_result(&mut r)?;
+            if flags & FLAG_ERRBOUND != 0 {
+                // Revision-1.4 certified error bound (PROTOCOL.md §3.5).
+                result.err_bound = Some(r.f64()?);
+            }
+            Response::Result(result)
+        }
         Opcode::BatchResult => {
             let count = r.u32()? as usize;
             if count > element_cap(payload.len(), 17) {
@@ -1352,6 +1613,12 @@ pub fn decode_response_flagged(
                     });
                 }
             }
+            if flags & FLAG_SCRUB != 0 && flags & FLAG_CACHE == 0 {
+                return Err(WireError::new(
+                    ErrorCode::Malformed,
+                    "scrub extension requires the cache extension (PROTOCOL.md §3.7)",
+                ));
+            }
             if flags & FLAG_CACHE != 0 {
                 // Extensions appear in ascending flag-bit order, so the
                 // cache counters follow the tenant rows (PROTOCOL.md §3.7).
@@ -1365,10 +1632,22 @@ pub fn decode_response_flagged(
                     cache_misses: r.u64()?,
                     cache_evictions: r.u64()?,
                 };
+                let scrub = if flags & FLAG_SCRUB != 0 {
+                    Some(WireScrubStats {
+                        scrub_verified: r.u64()?,
+                        scrub_quarantined: r.u64()?,
+                        scrub_passes: r.u64()?,
+                        cache_verified: r.u64()?,
+                        cache_poisoned: r.u64()?,
+                    })
+                } else {
+                    None
+                };
                 Response::CacheStats {
                     stats,
                     tenants,
                     cache,
+                    scrub,
                 }
             } else if flags & FLAG_TENANT != 0 {
                 Response::TenantStats { stats, tenants }
@@ -1471,6 +1750,8 @@ mod tests {
             ErrorCode::Quota,
             ErrorCode::UnknownHandle,
             ErrorCode::StoreFull,
+            ErrorCode::CorruptFrame,
+            ErrorCode::CorruptOperand,
         ] {
             assert_eq!(ErrorCode::from_byte(code.byte()), code);
         }
@@ -1486,6 +1767,8 @@ mod tests {
         assert!(!ErrorCode::Quota.is_fatal());
         assert!(!ErrorCode::UnknownHandle.is_fatal());
         assert!(!ErrorCode::StoreFull.is_fatal());
+        assert!(!ErrorCode::CorruptFrame.is_fatal(), "stream stays frame-aligned");
+        assert!(!ErrorCode::CorruptOperand.is_fatal(), "re-register recovers");
     }
 
     #[test]
@@ -1571,6 +1854,7 @@ mod tests {
             value: -1e-42,
             n: 262144,
             path: ExecPath::Sharded,
+            err_bound: None,
         };
         let frame = encode_result(11, &result);
         let (header, payload) = split(&frame);
@@ -1592,11 +1876,13 @@ mod tests {
                 value: 1.5,
                 n: 8,
                 path: ExecPath::Fused,
+                err_bound: None,
             },
             WireResult {
                 value: f64::NEG_INFINITY,
                 n: 1 << 20,
                 path: ExecPath::Sharded,
+                err_bound: None,
             },
         ];
         let frame = encode_batch_result(13, &results);
@@ -1694,13 +1980,20 @@ mod tests {
         let frame = encode_stats(1);
         let mut head = [0u8; HEADER_LEN];
         head.copy_from_slice(&frame[..HEADER_LEN]);
-        head[6] = 0x10; // first unassigned flag bit (0x01/0x02/0x04/0x08 are taken)
+        head[6] = 0x80; // first unassigned flag bit (0x01 through 0x40 are taken)
         assert_eq!(
             decode_header(&head).unwrap_err().code,
             ErrorCode::Malformed
         );
         head[6] = FLAG_CACHE;
         assert_eq!(decode_header(&head).expect("known flag").flags, FLAG_CACHE);
+        head[6] = FLAG_CRC;
+        assert_eq!(decode_header(&head).expect("known flag").flags, FLAG_CRC);
+        head[6] = FLAG_ERRBOUND | FLAG_SCRUB;
+        assert_eq!(
+            decode_header(&head).expect("known flags").flags,
+            FLAG_ERRBOUND | FLAG_SCRUB
+        );
         head[6] = FLAG_DEADLINE;
         assert_eq!(decode_header(&head).expect("known flag").flags, FLAG_DEADLINE);
         head[6] = FLAG_TENANT;
@@ -1759,7 +2052,7 @@ mod tests {
         let meta = RequestMeta {
             deadline_us: Some(2_000_000),
             tenant: Some(7),
-            cache: false,
+            ..RequestMeta::default()
         };
         let frame = encode_frame_with_meta(Opcode::Dot, 5, meta, &inner);
         let (header, payload) = split(&frame);
@@ -1774,9 +2067,8 @@ mod tests {
         }
         // Tenant-only frames carry just the 4-byte prefix.
         let t_only = RequestMeta {
-            deadline_us: None,
             tenant: Some(3),
-            cache: false,
+            ..RequestMeta::default()
         };
         let frame = encode_frame_with_meta(Opcode::Dot, 6, t_only, &inner);
         let (header, payload) = split(&frame);
@@ -1919,6 +2211,7 @@ mod tests {
                 value: 1.0,
                 n: 3,
                 path: ExecPath::Fused,
+                err_bound: None,
             },
         );
         let full = &result[HEADER_LEN..];
@@ -2049,7 +2342,7 @@ mod tests {
         let meta = RequestMeta {
             deadline_us: Some(5_000),
             tenant: Some(2),
-            cache: false,
+            ..RequestMeta::default()
         };
         let inner = encode_dot_handles_payload(41, 42);
         let frame = encode_frame_with_meta(Opcode::DotHandles, 77, meta, &inner);
@@ -2069,9 +2362,8 @@ mod tests {
     #[test]
     fn cache_flag_is_prefix_free_and_round_trips_in_meta() {
         let meta = RequestMeta {
-            deadline_us: None,
-            tenant: None,
             cache: true,
+            ..RequestMeta::default()
         };
         let frame = encode_frame_with_meta(Opcode::Stats, 8, meta, &[]);
         let (header, payload) = split(&frame);
@@ -2143,7 +2435,7 @@ mod tests {
             cache_evictions: 2,
         };
         // Cache extension alone.
-        let frame = encode_stats_result_ext(61, &stats, None, Some(&cache));
+        let frame = encode_stats_result_ext(61, &stats, None, Some(&cache), None);
         let (header, payload) = split(&frame);
         assert_eq!(header.flags, FLAG_CACHE);
         match decode_response_flagged(header.flags, Opcode::StatsResult, payload)
@@ -2153,10 +2445,12 @@ mod tests {
                 stats: s,
                 tenants: t,
                 cache: c,
+                scrub,
             } => {
                 assert_eq!(s, stats);
                 assert!(t.is_empty());
                 assert_eq!(c, cache);
+                assert_eq!(scrub, None);
             }
             other => panic!("unexpected response {:?}", other),
         }
@@ -2168,7 +2462,7 @@ mod tests {
             quota_shed: 1,
             deadline_shed: 0,
         }];
-        let frame = encode_stats_result_ext(62, &stats, Some(&rows), Some(&cache));
+        let frame = encode_stats_result_ext(62, &stats, Some(&rows), Some(&cache), None);
         let (header, payload) = split(&frame);
         assert_eq!(header.flags, FLAG_TENANT | FLAG_CACHE);
         match decode_response_flagged(header.flags, Opcode::StatsResult, payload)
@@ -2178,10 +2472,12 @@ mod tests {
                 stats: s,
                 tenants: t,
                 cache: c,
+                scrub,
             } => {
                 assert_eq!(s, stats);
                 assert_eq!(t, rows);
                 assert_eq!(c, cache);
+                assert_eq!(scrub, None);
             }
             other => panic!("unexpected response {:?}", other),
         }
@@ -2223,5 +2519,159 @@ mod tests {
             decode_request(Opcode::Register, &payload).unwrap_err().code,
             ErrorCode::Malformed
         );
+    }
+
+    #[test]
+    fn crc32c_matches_the_castagnoli_check_value() {
+        // The universal CRC32C check value (PROTOCOL.md §2.6).
+        assert_eq!(crc32c(b"123456789"), 0xE306_9283);
+        assert_eq!(crc32c(b""), 0);
+        // Incremental folding matches one-shot computation.
+        let bytes = b"kahan compensated dot product";
+        let split_at = 11;
+        let inc = !crc32c_update(crc32c_update(!0, &bytes[..split_at]), &bytes[split_at..]);
+        assert_eq!(inc, crc32c(bytes));
+    }
+
+    #[test]
+    fn crc_seal_and_verify_round_trip() {
+        let x = [1.0, -2.5, 3.75];
+        let y = [0.5, 1e300, -1e-300];
+        let mut frame = encode_dot(42, &x, &y);
+        let unsealed_len = frame.len();
+        seal_crc(&mut frame);
+        assert_eq!(frame.len(), unsealed_len + CRC_TRAILER_LEN);
+        let (header, payload) = split(&frame);
+        assert_eq!(header.flags & FLAG_CRC, FLAG_CRC);
+        // The declared payload length includes the trailer (PROTOCOL.md §2.6).
+        assert_eq!(header.payload_len as usize, dot_payload_len(x.len()) + CRC_TRAILER_LEN);
+        let head: [u8; HEADER_LEN] = frame[..HEADER_LEN].try_into().unwrap();
+        let body = verify_crc(&head, header.flags, payload).expect("intact frame verifies");
+        assert_eq!(body.len(), dot_payload_len(x.len()));
+        match decode_request(Opcode::Dot, body).expect("decodes after strip") {
+            Request::Submit(SharedInput::Dot(dx, dy)) => {
+                for i in 0..x.len() {
+                    assert_eq!(dx[i].to_bits(), x[i].to_bits());
+                    assert_eq!(dy[i].to_bits(), y[i].to_bits());
+                }
+            }
+            other => panic!("unexpected request {:?}", other),
+        }
+        // A flagless call passes the payload through untouched.
+        let plain = encode_dot(42, &x, &y);
+        let phead: [u8; HEADER_LEN] = plain[..HEADER_LEN].try_into().unwrap();
+        let through = verify_crc(&phead, 0, &plain[HEADER_LEN..]).unwrap();
+        assert_eq!(through.len(), plain.len() - HEADER_LEN);
+    }
+
+    #[test]
+    fn crc_trailer_truncation_and_bit_flips_detected() {
+        let mut frame = encode_sum(7, &[1.0, 2.0, 4.0]);
+        seal_crc(&mut frame);
+        let head: [u8; HEADER_LEN] = frame[..HEADER_LEN].try_into().unwrap();
+        let payload = &frame[HEADER_LEN..];
+        // A payload shorter than its 4-byte trailer is the typed corrupt
+        // frame, never a panic.
+        for cut in 0..CRC_TRAILER_LEN {
+            assert_eq!(
+                verify_crc(&head, FLAG_CRC, &payload[..cut]).unwrap_err().code,
+                ErrorCode::CorruptFrame,
+                "trailer cut to {cut} bytes"
+            );
+        }
+        // Every single-bit flip in the payload (operand bytes and trailer
+        // alike) is detected — CRC32C has Hamming distance >= 2 at any
+        // length this protocol allows.
+        for byte in 0..payload.len() {
+            for bit in 0..8 {
+                let mut damaged = payload.to_vec();
+                damaged[byte] ^= 1 << bit;
+                assert_eq!(
+                    verify_crc(&head, FLAG_CRC, &damaged).unwrap_err().code,
+                    ErrorCode::CorruptFrame,
+                    "flip at byte {byte} bit {bit} must not verify"
+                );
+            }
+        }
+        // Header damage is detected too: the checksum covers all 20
+        // header bytes as sent (here, the request id).
+        let mut bad_head = head;
+        bad_head[8] ^= 0x01;
+        assert_eq!(
+            verify_crc(&bad_head, FLAG_CRC, payload).unwrap_err().code,
+            ErrorCode::CorruptFrame
+        );
+    }
+
+    #[test]
+    fn errbound_result_round_trips_and_boundless_bytes_are_rev10() {
+        let bounded = WireResult {
+            value: 11.0,
+            n: 2,
+            path: ExecPath::Fused,
+            err_bound: Some(3.5e-15),
+        };
+        let frame = encode_result(77, &bounded);
+        let (header, payload) = split(&frame);
+        assert_eq!(header.flags, FLAG_ERRBOUND);
+        assert_eq!(header.payload_len, 25, "17-byte body + 8-byte bound");
+        match decode_response_flagged(header.flags, Opcode::Result, payload).expect("decodes") {
+            Response::Result(r) => {
+                assert_eq!(r.value.to_bits(), bounded.value.to_bits());
+                assert_eq!(r.err_bound.unwrap().to_bits(), 3.5e-15f64.to_bits());
+            }
+            other => panic!("unexpected response {:?}", other),
+        }
+        // Without a bound the frame is byte-identical to revision 1.0.
+        let plain = WireResult { err_bound: None, ..bounded };
+        let frame = encode_result(77, &plain);
+        let (header, payload) = split(&frame);
+        assert_eq!(header.flags, 0);
+        assert_eq!(header.payload_len, 17);
+        match decode_response(Opcode::Result, payload).expect("decodes") {
+            Response::Result(r) => assert_eq!(r.err_bound, None),
+            other => panic!("unexpected response {:?}", other),
+        }
+        // A flagless decode of a bounded payload trips the
+        // exact-consumption rule instead of misreading the bound.
+        let bounded_frame = encode_result(78, &bounded);
+        assert!(decode_response(Opcode::Result, &bounded_frame[HEADER_LEN..]).is_err());
+    }
+
+    #[test]
+    fn scrub_stats_extension_round_trips_and_requires_cache() {
+        let stats = WireStats { queue_depth: 64, threads: 2, ..WireStats::default() };
+        let cache = WireCacheStats { cache_lookups: 10, cache_hits: 4, cache_misses: 6, ..WireCacheStats::default() };
+        let scrub = WireScrubStats {
+            scrub_verified: 12,
+            scrub_quarantined: 1,
+            scrub_passes: 3,
+            cache_verified: 4,
+            cache_poisoned: 1,
+        };
+        let frame = encode_stats_result_ext(91, &stats, None, Some(&cache), Some(&scrub));
+        let (header, payload) = split(&frame);
+        assert_eq!(header.flags, FLAG_CACHE | FLAG_SCRUB);
+        match decode_response_flagged(header.flags, Opcode::StatsResult, payload)
+            .expect("decodes")
+        {
+            Response::CacheStats { cache: c, scrub: s, .. } => {
+                assert_eq!(c, cache);
+                assert_eq!(s, Some(scrub));
+            }
+            other => panic!("unexpected response {:?}", other),
+        }
+        // The scrub extension without the cache extension is malformed —
+        // its fields extend the cache block (PROTOCOL.md §3.7).
+        assert_eq!(
+            decode_response_flagged(FLAG_SCRUB, Opcode::StatsResult, payload)
+                .unwrap_err()
+                .code,
+            ErrorCode::Malformed
+        );
+        // The request-side helper sets both bits.
+        let probe = encode_stats_scrub(92, None);
+        let (header, _) = split(&probe);
+        assert_eq!(header.flags, FLAG_CACHE | FLAG_SCRUB);
     }
 }

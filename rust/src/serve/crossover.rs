@@ -270,6 +270,7 @@ mod tests {
             compensated: true,
             shard_threshold: ThresholdMode::Fixed(1024),
             freq_ghz: 3.0,
+            verify_hit_rate: 0.0,
         })
         .unwrap();
         let c = calibrate(&service, 3.0, true);

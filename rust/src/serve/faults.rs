@@ -26,9 +26,9 @@
 //! The sites themselves live in the code they perturb:
 //! `runtime/parallel.rs` (worker panic, latch-wake delay),
 //! `serve/queue.rs` (dispatcher stall, quota-admission reject,
-//! weighted-fair starvation stall), and `serve/net.rs` (socket
-//! read/write errors, truncated frames, connection drops, slow-client
-//! writer stalls).
+//! weighted-fair starvation stall, store bit-flip, cache poison), and
+//! `serve/net.rs` (socket read/write errors, truncated frames,
+//! connection drops, slow-client writer stalls, frame-CRC corruption).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -88,12 +88,29 @@ pub enum FaultSite {
     /// behind backpressure; deadline-bearing requests may be shed, but no
     /// tenant is starved and nothing hangs.
     StarvationStall,
+    /// A resident operand's buffer has one bit flipped in place (digest
+    /// unchanged) at handle admission — models silent memory corruption of
+    /// stored data. The store scrubber must detect the mismatch, quarantine
+    /// the entry, and fail the request with the typed corrupt-operand
+    /// error; the corrupted bytes are never served.
+    StoreBitFlip,
+    /// A response frame's CRC32C trailer has one bit flipped after sealing
+    /// — models wire corruption between server and client. The client-side
+    /// CRC check must reject the frame as corrupt instead of delivering
+    /// the payload.
+    FrameCrcCorrupt,
+    /// A memoized result-cache entry has the low bit of its IEEE-754
+    /// pattern flipped at insertion — models cache-memory rot. The
+    /// verify-on-hit policy must catch the mismatch on the next sampled
+    /// hit, evict the entry, and fall through to recompute; the poisoned
+    /// bits are never delivered.
+    CachePoison,
 }
 
 impl FaultSite {
     /// Every instrumented site, in a stable order (used by seeded plans and
     /// the bench chaos block).
-    pub const ALL: [FaultSite; 10] = [
+    pub const ALL: [FaultSite; 13] = [
         FaultSite::WorkerPanic,
         FaultSite::DispatcherStall,
         FaultSite::LatchWakeDelay,
@@ -104,6 +121,9 @@ impl FaultSite {
         FaultSite::SlowClientWriter,
         FaultSite::QuotaAdmissionReject,
         FaultSite::StarvationStall,
+        FaultSite::StoreBitFlip,
+        FaultSite::FrameCrcCorrupt,
+        FaultSite::CachePoison,
     ];
 
     /// Sites exercised by the in-process chaos scenario (no socket).
@@ -116,6 +136,17 @@ impl FaultSite {
         FaultSite::LatchWakeDelay,
         FaultSite::QuotaAdmissionReject,
         FaultSite::StarvationStall,
+    ];
+
+    /// The corruption sites exercised by the integrity scenario — one per
+    /// defense layer (store scrub, frame CRC, verify-on-hit). Kept out of
+    /// [`FaultSite::IN_PROCESS`] deliberately: corruption is only a safe
+    /// thing to inject where the matching detector is armed, and the
+    /// integrity scenario is the run that arms all three.
+    pub const INTEGRITY: [FaultSite; 3] = [
+        FaultSite::StoreBitFlip,
+        FaultSite::FrameCrcCorrupt,
+        FaultSite::CachePoison,
     ];
 
     /// Stable snake_case label (JSON keys in the bench chaos block).
@@ -131,6 +162,9 @@ impl FaultSite {
             FaultSite::SlowClientWriter => "slow_client_writer",
             FaultSite::QuotaAdmissionReject => "quota_admission_reject",
             FaultSite::StarvationStall => "starvation_stall",
+            FaultSite::StoreBitFlip => "store_bit_flip",
+            FaultSite::FrameCrcCorrupt => "frame_crc_corrupt",
+            FaultSite::CachePoison => "cache_poison",
         }
     }
 
@@ -234,8 +268,8 @@ impl FaultPlan {
 #[derive(Debug)]
 pub struct FaultInjector {
     plan: FaultPlan,
-    arrivals: [AtomicU64; 10],
-    fired: [AtomicU64; 10],
+    arrivals: [AtomicU64; 13],
+    fired: [AtomicU64; 13],
 }
 
 impl FaultInjector {
@@ -378,5 +412,20 @@ mod tests {
         }
         assert!(!FaultSite::WorkerPanic.is_stall());
         assert!(FaultSite::DispatcherStall.is_stall());
+    }
+
+    #[test]
+    fn integrity_sites_are_failures_outside_the_in_process_set() {
+        // Corruption is only safe to inject where the matching detector is
+        // armed; the plain chaos scenarios (IN_PROCESS) must never fire an
+        // undetectable bit flip.
+        for &site in &FaultSite::INTEGRITY {
+            assert!(FaultSite::ALL.contains(&site));
+            assert!(!FaultSite::IN_PROCESS.contains(&site));
+            assert!(!site.is_stall(), "corruption sites are failure-typed");
+        }
+        assert_eq!(FaultSite::StoreBitFlip.label(), "store_bit_flip");
+        assert_eq!(FaultSite::FrameCrcCorrupt.label(), "frame_crc_corrupt");
+        assert_eq!(FaultSite::CachePoison.label(), "cache_poison");
     }
 }

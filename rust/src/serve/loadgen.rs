@@ -40,12 +40,12 @@ use crate::runtime::parallel::ThreadPool;
 use crate::util::rng::Rng;
 use crate::util::stats::percentile_sorted;
 
-use super::codec::{self, ErrorCode, Opcode, Response, WireCacheStats, HEADER_LEN};
-use super::faults::{FaultInjector, FaultSite};
-use super::net::{is_timeout, WireClient};
-use super::queue::{AsyncDotService, TrySubmit};
+use super::codec::{self, ErrorCode, Opcode, Response, WireCacheStats, WireScrubStats, HEADER_LEN};
+use super::faults::{FaultInjector, FaultPlan, FaultSite};
+use super::net::{is_timeout, NetOptions, NetServer, WireCallError, WireClient};
+use super::queue::{AsyncDotService, AsyncOptions, TrySubmit};
 use super::scheduler::ExecPath;
-use super::{DotService, SharedInput};
+use super::{DotService, ServeConfig, SharedInput};
 
 /// One component of a request-size mixture.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -1111,7 +1111,7 @@ pub fn run_load_tenants(
     for (k, (&n, &tenant)) in sizes.iter().zip(order.iter()).enumerate() {
         let target = epoch + Duration::from_nanos((k as f64 * gap_ns) as u64);
         pace_until(target);
-        match service.try_submit_with_opts(operands.shared_dot(n), target, deadline, tenant)? {
+        match service.try_submit_with_opts(operands.shared_dot(n), target, deadline, tenant, false)? {
             TrySubmit::Accepted(h) => {
                 rows[tenant as usize].admitted += 1;
                 handles.push((tenant, h));
@@ -1206,7 +1206,7 @@ pub fn run_interleaving_checksum(
         let tenant = (k as u32) % tenants;
         let deadline = if k % 3 == 0 { urgent } else { None };
         let h =
-            service.submit_with_opts(operands.shared_dot(n), Instant::now(), deadline, tenant)?;
+            service.submit_with_opts(operands.shared_dot(n), Instant::now(), deadline, tenant, false)?;
         handles.push(h);
     }
     let (mut fused, mut sharded) = (0u64, 0u64);
@@ -1324,7 +1324,7 @@ pub fn run_load_chaos(
         // it is bucketed and the generator paces on.
         let mut admitted = None;
         loop {
-            match service.try_submit_with_opts(operands.shared_dot(n), target, deadline, tenant)? {
+            match service.try_submit_with_opts(operands.shared_dot(n), target, deadline, tenant, false)? {
                 TrySubmit::Accepted(h) => {
                     admitted = Some(h);
                     break;
@@ -1655,6 +1655,322 @@ pub fn run_load_zipf(
     })
 }
 
+/// Outcome of the end-to-end data-integrity scenario
+/// ([`run_load_integrity`]): two passes over the same deterministic
+/// handle-traffic stream — one with the three corruption fault sites
+/// armed ([`FaultSite::INTEGRITY`]), one fault-free — with every
+/// delivered value bit-compared against a local reference computation.
+///
+/// The hard gates `tools/validate_bench.py` applies:
+///
+/// * `detected == total_injected` — every injected corruption was caught
+///   by some tier's detector (CRC trailer, store scrubber, verify-on-hit);
+/// * `delivered_corrupt == 0` — no corrupt payload ever reached the
+///   client as a result;
+/// * `clean_detections == 0` and `clean_bit_parity` — the detectors
+///   raise no false positives on a fault-free run with every
+///   verification knob at maximum.
+#[derive(Clone, Debug)]
+pub struct IntegrityReport {
+    /// Draws in the injected pass (each settles to a verified value).
+    pub requests: usize,
+    /// Distinct operand pairs in the catalog.
+    pub catalog: usize,
+    /// Operand length (updates per request).
+    pub n: usize,
+    /// Fired fault count per integrity site label
+    /// ([`FaultSite::INTEGRITY`] order, zeros included).
+    pub injected: Vec<(&'static str, u64)>,
+    /// Total corruptions injected across the three sites.
+    pub total_injected: u64,
+    /// Total corruptions caught by any tier's detector — client CRC
+    /// rejections + store quarantines + verify-on-hit evictions. The
+    /// headline gate is `detected == total_injected`.
+    pub detected: u64,
+    /// Response frames the client's CRC verification rejected.
+    pub corrupt_frames_detected: u64,
+    /// Typed CORRUPT_OPERAND errors observed over the wire (one per
+    /// store quarantine).
+    pub corrupt_operands_detected: u64,
+    /// Poisoned result-cache entries evicted by verify-on-hit sampling
+    /// (the server heals these silently; the count is the evidence).
+    pub cache_poisoned_evicted: u64,
+    /// Delivered results whose bits differ from the local reference —
+    /// corrupt payloads that escaped every detector. Hard-gated to 0.
+    pub delivered_corrupt: usize,
+    /// Draws that settled to a bit-correct value (after any retries).
+    pub completed_ok: usize,
+    /// Handle re-registrations performed to recover quarantined operands.
+    pub reregisters: usize,
+    /// Request retries absorbed while recovering from typed detections.
+    pub retries: usize,
+    /// Ok responses that were missing the requested certified error
+    /// bound (every draw opts in via `FLAG_ERRBOUND`; must be 0).
+    pub bound_missing: usize,
+    /// Server scrub/verification counters after the injected pass.
+    pub scrub: WireScrubStats,
+    /// Draws in the fault-free control pass.
+    pub clean_requests: usize,
+    /// Detections raised during the control pass — typed corruption
+    /// errors, quarantines, or poison evictions with no fault armed.
+    /// Any value above 0 is a false positive; hard-gated to 0.
+    pub clean_detections: u64,
+    /// `true` iff every control-pass value was bit-identical to the
+    /// local reference with CRC, scrub-on-lookup and verify-on-hit all
+    /// enabled — the "verification changes no bits" parity contract.
+    pub clean_bit_parity: bool,
+}
+
+/// Drive one catalog pass: register `pairs` over `client`, then submit
+/// `requests` round-robin handle draws (each requesting the certified
+/// error bound), recovering from typed corruption detections by
+/// re-registering and retrying. Returns per-class detection counts.
+#[allow(clippy::type_complexity)]
+fn integrity_pass(
+    client: &mut WireClient,
+    pairs: &[(Vec<f64>, Vec<f64>)],
+    expected: &[f64],
+    requests: usize,
+) -> Result<(usize, usize, u64, u64, usize, usize, usize), BackendError> {
+    let wire_err = |e: WireCallError| BackendError::Runtime(e.to_string());
+    let mut handles = Vec::with_capacity(pairs.len());
+    for (x, y) in pairs {
+        let (a, _, _) = client.register(x).map_err(wire_err)?;
+        let (b, _, _) = client.register(y).map_err(wire_err)?;
+        handles.push((a, b));
+    }
+    let mut completed_ok = 0usize;
+    let mut delivered_corrupt = 0usize;
+    let mut corrupt_frames = 0u64;
+    let mut corrupt_operands = 0u64;
+    let mut reregisters = 0usize;
+    let mut retries = 0usize;
+    let mut bound_missing = 0usize;
+    for k in 0..requests {
+        let idx = k % pairs.len();
+        let mut attempts = 0u32;
+        loop {
+            attempts += 1;
+            if attempts > 8 {
+                return Err(BackendError::Runtime(format!(
+                    "integrity draw {k} did not settle after {attempts} attempts"
+                )));
+            }
+            let (a, b) = handles[idx];
+            match client.dot_handles_with_errbound(a, b) {
+                Ok(r) => {
+                    if r.value.to_bits() == expected[idx].to_bits() {
+                        completed_ok += 1;
+                    } else {
+                        delivered_corrupt += 1;
+                    }
+                    match r.err_bound {
+                        Some(bound) if bound.is_finite() && bound >= 0.0 => {}
+                        _ => bound_missing += 1,
+                    }
+                    break;
+                }
+                // Response frame failed the client's CRC check: the
+                // typed protocol rejection *is* the detection. Retry —
+                // the stream stays aligned (the payload was consumed).
+                Err(WireCallError::Protocol(e)) if e.code == ErrorCode::CorruptFrame => {
+                    corrupt_frames += 1;
+                    retries += 1;
+                }
+                // The store's scrubber quarantined a resident operand:
+                // re-register (content-addressing restores the same
+                // handle from clean bytes) and retry.
+                Err(WireCallError::Server(e)) if e.code == ErrorCode::CorruptOperand => {
+                    corrupt_operands += 1;
+                    let (x, y) = &pairs[idx];
+                    let (a2, _, _) = client.register(x).map_err(wire_err)?;
+                    let (b2, _, _) = client.register(y).map_err(wire_err)?;
+                    handles[idx] = (a2, b2);
+                    reregisters += 1;
+                    retries += 1;
+                }
+                // Aftermath of a quarantine eviction seen by a later
+                // draw of the same pair — recover the same way, but it
+                // is not a fresh detection.
+                Err(WireCallError::Server(e)) if e.code == ErrorCode::UnknownHandle => {
+                    let (x, y) = &pairs[idx];
+                    let (a2, _, _) = client.register(x).map_err(wire_err)?;
+                    let (b2, _, _) = client.register(y).map_err(wire_err)?;
+                    handles[idx] = (a2, b2);
+                    reregisters += 1;
+                    retries += 1;
+                }
+                Err(e) => return Err(wire_err(e)),
+            }
+        }
+    }
+    Ok((
+        completed_ok,
+        delivered_corrupt,
+        corrupt_frames,
+        corrupt_operands,
+        reregisters,
+        retries,
+        bound_missing,
+    ))
+}
+
+/// The `--chaos` integrity scenario: end-to-end corruption detection
+/// across every tier of the serving stack, measured over the socket.
+///
+/// **Injected pass.** A loopback `serve-net` server runs with all three
+/// verification tiers armed — CRC-sealed frames (revision 1.4),
+/// scrub-on-lookup in the operand store, verify-on-hit at rate 1.0 in
+/// the result cache — and a deterministic fault plan over the three
+/// corruption sites ([`FaultSite::INTEGRITY`]): a resident-operand bit
+/// flip, an in-flight frame-CRC corruption, and a result-cache
+/// poisoning. The client drives `requests` round-robin handle draws
+/// over a `catalog`-pair corpus, bit-compares every delivered value
+/// against a local reference, and recovers from typed detections by
+/// re-registering and retrying.
+///
+/// **Clean pass.** The identical stream against a fault-free server
+/// with the same verification posture: any detection is a false
+/// positive, and every value must be bit-identical to the reference —
+/// verification must change no bits (the rate-0/CRC-off parity contract
+/// is pinned separately in `tests/properties.rs`).
+pub fn run_load_integrity(
+    cfg: &ServeConfig,
+    opts: AsyncOptions,
+    n: usize,
+    catalog: usize,
+    requests: usize,
+    seed: u64,
+) -> Result<IntegrityReport, BackendError> {
+    if n == 0 {
+        return Err(BackendError::Runtime("operand length must be >= 1".to_string()));
+    }
+    if catalog < 2 {
+        return Err(BackendError::Runtime(
+            "integrity catalog needs >= 2 pairs (the cache-poison site arms the \
+             second insert)"
+                .to_string(),
+        ));
+    }
+    if requests < 2 * catalog {
+        return Err(BackendError::Runtime(
+            "need >= 2 draws per catalog pair so poisoned entries are re-hit".to_string(),
+        ));
+    }
+    let mut cfg = cfg.clone();
+    cfg.verify_hit_rate = 1.0;
+
+    let mut rng = Rng::new(seed);
+    let pairs: Vec<(Vec<f64>, Vec<f64>)> = (0..catalog)
+        .map(|_| {
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            (x, y)
+        })
+        .collect();
+    let reference = DotService::new(cfg.clone())?;
+    let expected: Vec<f64> = pairs
+        .iter()
+        .map(|(x, y)| Ok(reference.submit(&KernelInput::Dot(x, y))?.value))
+        .collect::<Result<_, BackendError>>()?;
+
+    // Deterministic triggers, one corruption per site: the bit flip lands
+    // mid-stream (arrival = one resolve per draw), the poison on the
+    // second cache insert (the first catalog cycle), the CRC corruption
+    // in the final quarter of sealed result frames.
+    let plan = FaultPlan::none()
+        .with(FaultSite::StoreBitFlip, (requests as u64 / 2).max(1))
+        .with(FaultSite::CachePoison, 2)
+        .with(FaultSite::FrameCrcCorrupt, (3 * requests as u64 / 4).max(1));
+    let injector = FaultInjector::new(plan);
+    let server = NetServer::bind_with(
+        "127.0.0.1:0",
+        cfg.clone(),
+        opts,
+        NetOptions {
+            faults: Some(injector.clone()),
+            ..NetOptions::default()
+        },
+    )?;
+    server.service().store().set_verify_on_lookup(true);
+    let wire_err = |e: WireCallError| BackendError::Runtime(e.to_string());
+    let addr = server.local_addr().to_string();
+    let mut client = WireClient::connect(&addr)
+        .map_err(|e| BackendError::Runtime(format!("connect {addr}: {e}")))?;
+    client
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .map_err(|e| BackendError::Runtime(format!("read timeout: {e}")))?;
+    client.set_crc(true);
+
+    let (
+        completed_ok,
+        delivered_corrupt,
+        corrupt_frames_detected,
+        corrupt_operands_detected,
+        reregisters,
+        retries,
+        bound_missing,
+    ) = integrity_pass(&mut client, &pairs, &expected, requests)?;
+    let (_, _, _, scrub) = client.stats_scrub(None).map_err(wire_err)?;
+    drop(client);
+    drop(server);
+
+    let injected: Vec<(&'static str, u64)> = FaultSite::INTEGRITY
+        .iter()
+        .map(|&site| (site.label(), injector.fired(site)))
+        .collect();
+    let total_injected: u64 = injected.iter().map(|&(_, c)| c).sum();
+    let detected = corrupt_frames_detected + scrub.scrub_quarantined + scrub.cache_poisoned;
+
+    // Clean control pass: identical stream and verification posture, no
+    // injector. Every detection here is a false positive.
+    let clean_server = NetServer::bind_with(
+        "127.0.0.1:0",
+        cfg,
+        opts,
+        NetOptions::default(),
+    )?;
+    clean_server.service().store().set_verify_on_lookup(true);
+    let clean_addr = clean_server.local_addr().to_string();
+    let mut clean_client = WireClient::connect(&clean_addr)
+        .map_err(|e| BackendError::Runtime(format!("connect {clean_addr}: {e}")))?;
+    clean_client
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .map_err(|e| BackendError::Runtime(format!("read timeout: {e}")))?;
+    clean_client.set_crc(true);
+    let (clean_ok, clean_mismatch, clean_frames, clean_operands, clean_rereg, _, clean_bound) =
+        integrity_pass(&mut clean_client, &pairs, &expected, requests)?;
+    let (_, _, _, clean_scrub) = clean_client.stats_scrub(None).map_err(wire_err)?;
+    let clean_detections = clean_frames
+        + clean_operands
+        + clean_rereg as u64
+        + clean_scrub.scrub_quarantined
+        + clean_scrub.cache_poisoned;
+    let clean_bit_parity =
+        clean_mismatch == 0 && clean_bound == 0 && clean_ok == requests;
+
+    Ok(IntegrityReport {
+        requests,
+        catalog,
+        n,
+        injected,
+        total_injected,
+        detected,
+        corrupt_frames_detected,
+        corrupt_operands_detected,
+        cache_poisoned_evicted: scrub.cache_poisoned,
+        delivered_corrupt,
+        completed_ok,
+        reregisters,
+        retries,
+        bound_missing,
+        scrub,
+        clean_requests: requests,
+        clean_detections,
+        clean_bit_parity,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1670,6 +1986,7 @@ mod tests {
             compensated: true,
             shard_threshold: ThresholdMode::Fixed(threshold),
             freq_ghz: 3.0,
+            verify_hit_rate: 0.0,
         }
     }
 
@@ -2089,6 +2406,39 @@ mod tests {
         assert!(run_load_wire(&addr, &[], &ops, 10, 1e5, 1, 5, 1).is_err());
         assert!(run_load_wire(&addr, &mix, &ops, 0, 1e5, 1, 5, 1).is_err());
         assert!(run_load_wire(&addr, &mix, &ops, 10, 0.0, 1, 5, 1).is_err());
+    }
+
+    #[test]
+    fn integrity_run_detects_every_injection_and_raises_no_false_positives() {
+        let r = run_load_integrity(&tiny_cfg(2, 4096), AsyncOptions::default(), 256, 3, 12, 41)
+            .unwrap();
+        // All three corruption sites fired exactly once under the
+        // deterministic plan, and every injection was caught by its tier.
+        assert_eq!(r.total_injected, 3, "per-site: {:?}", r.injected);
+        assert_eq!(r.detected, r.total_injected);
+        assert_eq!(r.corrupt_frames_detected, 1);
+        assert_eq!(r.corrupt_operands_detected, 1);
+        assert_eq!(r.cache_poisoned_evicted, 1);
+        assert_eq!(r.scrub.scrub_quarantined, 1);
+        // The delivery contract: zero corrupt payloads reached the
+        // client, every draw settled to a bit-correct value, and every
+        // response carried its certified error bound.
+        assert_eq!(r.delivered_corrupt, 0);
+        assert_eq!(r.completed_ok, r.requests);
+        assert_eq!(r.bound_missing, 0);
+        assert!(r.reregisters >= 1, "quarantine recovery re-registers");
+        // Fault-free control pass: no detector fired, bits unchanged.
+        assert_eq!(r.clean_detections, 0);
+        assert!(r.clean_bit_parity);
+    }
+
+    #[test]
+    fn integrity_run_rejects_bad_parameters() {
+        let cfg = tiny_cfg(1, 100);
+        let opts = AsyncOptions::default();
+        assert!(run_load_integrity(&cfg, opts, 0, 3, 12, 1).is_err());
+        assert!(run_load_integrity(&cfg, opts, 64, 1, 12, 1).is_err());
+        assert!(run_load_integrity(&cfg, opts, 64, 3, 5, 1).is_err());
     }
 
     #[test]

@@ -104,15 +104,17 @@ use crate::runtime::hostbench::freq_ghz_with_source;
 use crate::runtime::parallel::{compensated_tree_reduce, ThreadPool, CACHELINE_F64};
 
 pub use codec::{
-    ErrorCode, RequestMeta, WireCacheStats, WireError, WireResult, WireStats, WireTenantStats,
+    ErrorCode, RequestMeta, WireCacheStats, WireError, WireResult, WireScrubStats, WireStats,
+    WireTenantStats,
 };
 pub use crossover::{calibrate, model_crossover, model_p1_gups, service_crossover, Calibration};
 pub use faults::{FaultInjector, FaultPlan, FaultPoint, FaultSite};
 pub use loadgen::{
     default_mix, parse_mix, run_interleaving_checksum, run_load, run_load_async, run_load_chaos,
-    run_load_tenants, run_load_wire, run_load_with, run_load_zipf, AsyncLoadReport, ChaosReport,
-    InterleavingReport, LoadMode, LoadReport, MixEntry, OperandPool, TenantLoadReport,
-    TenantLoadRow, WireLoadReport, ZipfPassReport, ZipfReport,
+    run_load_integrity, run_load_tenants, run_load_wire, run_load_with, run_load_zipf,
+    AsyncLoadReport, ChaosReport, IntegrityReport, InterleavingReport, LoadMode, LoadReport,
+    MixEntry, OperandPool, TenantLoadReport, TenantLoadRow, WireLoadReport, ZipfPassReport,
+    ZipfReport,
 };
 pub use net::{NetOptions, NetServer, WireCallError, WireClient};
 pub use queue::{
@@ -122,7 +124,8 @@ pub use queue::{
 pub use scheduler::{BatchScheduler, DispatchPlan, ExecPath};
 pub use store::{
     handle_of, operand_digest, sha256, CacheStats, CachedResult, OperandStore, RegisterOutcome,
-    ResultCache, StoreError, StoreStats, CACHE_DEFAULT_ENTRIES, STORE_DEFAULT_CAPACITY_BYTES,
+    ResultCache, ScrubOutcome, StoreError, StoreStats, CACHE_DEFAULT_ENTRIES,
+    STORE_DEFAULT_CAPACITY_BYTES,
 };
 
 /// How the service picks its batch-vs-shard crossover.
@@ -160,6 +163,15 @@ pub struct ServeConfig {
     /// Core clock anchoring the model crossover (ignored with an explicit
     /// threshold).
     pub freq_ghz: f64,
+    /// Fraction of result-cache hits to re-verify by recomputation
+    /// (`0.0..=1.0`). A sampled hit recomputes the dot synchronously and
+    /// bit-compares against the memoized value: a match counts
+    /// (`cache.verified`), a mismatch evicts the poisoned entry
+    /// (`cache.poisoned`) and falls through to an ordinary recompute — a
+    /// corrupted cache degrades to slow-but-correct, never to wrong bits.
+    /// `0.0` (the default) takes no new branches: the hit path is
+    /// bit-identical to a service without the verifier.
+    pub verify_hit_rate: f64,
 }
 
 impl ServeConfig {
@@ -171,6 +183,7 @@ impl ServeConfig {
             compensated: true,
             shard_threshold: ThresholdMode::Model,
             freq_ghz: freq_ghz_with_source().0,
+            verify_hit_rate: 0.0,
         }
     }
 
@@ -267,6 +280,49 @@ pub struct ServeResponse {
     pub n: usize,
     /// Which execution path served it.
     pub path: ExecPath,
+    /// The certified error bound ([`certified_err_bound`]), present only
+    /// when the request asked for one (wire FLAG_ERRBOUND). `None` leaves
+    /// the response byte-identical to a pre-rev-1.4 response.
+    pub err_bound: Option<f64>,
+}
+
+/// Certified per-request error bound (wire FLAG_ERRBOUND, PROTOCOL.md
+/// §3.5): a rigorous a-posteriori bound on `|served − exact|` derived
+/// from the Kahan compensation term — the paper's central observation
+/// read backwards: the compensation that makes the dot accurate is also
+/// a free running estimate of the error it removed (PAPERS.md, Dukhan
+/// et al.). One scalar compensated pass accumulates the condition sum
+/// `cond = Σ|xᵢ·yᵢ|` (`Σ|xᵢ|` for sums) together with the final
+/// compensation magnitude `|c|`; the certified bound is
+/// `|c| + 3·eps·cond` for compensated services — within the
+/// `8·eps·cond` envelope the accuracy tests already pin, since
+/// `|c| ≤ eps·cond` up to second-order terms — and the classical
+/// recursive-summation bound `(n+1)·eps·cond` for the naive rung. The
+/// bound covers every execution path (fused, sharded, cached replay):
+/// all are property-pinned bit-identical, so one bound certifies them
+/// all.
+pub fn certified_err_bound(input: &KernelInput<'_>, compensated: bool) -> f64 {
+    fn kahan_scan(terms: impl Iterator<Item = f64>) -> (f64, f64, usize) {
+        let (mut s, mut c, mut cond, mut n) = (0.0f64, 0.0f64, 0.0f64, 0usize);
+        for p in terms {
+            cond += p.abs();
+            n += 1;
+            let t = p - c;
+            let u = s + t;
+            c = (u - s) - t;
+            s = u;
+        }
+        (c.abs(), cond, n)
+    }
+    let (c_mag, cond, n) = match *input {
+        KernelInput::Dot(x, y) => kahan_scan(x.iter().zip(y.iter()).map(|(&a, &b)| a * b)),
+        KernelInput::Sum(x) => kahan_scan(x.iter().copied()),
+    };
+    if compensated {
+        c_mag + 3.0 * f64::EPSILON * cond
+    } else {
+        (n as f64 + 1.0) * f64::EPSILON * cond
+    }
 }
 
 /// Monotonic service counters (snapshot via [`DotService::stats`]).
@@ -416,6 +472,19 @@ impl DotService {
         }
     }
 
+    /// The certified error bound this service attaches to a request when
+    /// the client asks for one ([`certified_err_bound`], using the rung
+    /// the request actually runs: the naive bound for an uncompensated
+    /// dot service, the compensated bound otherwise — sums always run the
+    /// compensated rung).
+    pub fn err_bound_for(&self, input: &KernelInput<'_>) -> f64 {
+        let compensated = match input {
+            KernelInput::Dot(..) => self.compensated,
+            KernelInput::Sum(..) => true,
+        };
+        certified_err_bound(input, compensated)
+    }
+
     /// Snapshot of the monotonic service counters.
     pub fn stats(&self) -> ServeStats {
         ServeStats {
@@ -471,7 +540,12 @@ impl DotService {
             ExecPath::Fused => self.record(1, 0, n as u64),
             ExecPath::Sharded => self.record(0, 1, n as u64),
         }
-        Ok(ServeResponse { value, n, path })
+        Ok(ServeResponse {
+            value,
+            n,
+            path,
+            err_bound: None,
+        })
     }
 
     /// Serve a batch of independent requests: every input is validated
@@ -507,6 +581,7 @@ impl DotService {
                     value,
                     n,
                     path: self.scheduler.path_for(n),
+                    err_bound: None,
                 }
             })
             .collect())
@@ -539,6 +614,7 @@ mod tests {
             compensated: true,
             shard_threshold: ThresholdMode::Fixed(threshold),
             freq_ghz: 3.0,
+            verify_hit_rate: 0.0,
         }
     }
 
@@ -635,6 +711,30 @@ mod tests {
         let y = [4.0, 5.0, 6.0];
         let r = service.submit(&KernelInput::Dot(&x, &y)).unwrap();
         assert_eq!(r.value, 32.0);
+    }
+
+    #[test]
+    fn certified_error_bound_sits_inside_the_accuracy_envelope() {
+        let x = randvec(4096, 21);
+        let y = randvec(4096, 22);
+        let input = KernelInput::Dot(&x, &y);
+        let cond: f64 = x.iter().zip(&y).map(|(a, b)| (a * b).abs()).sum();
+        let bound = certified_err_bound(&input, true);
+        assert!(bound > 0.0);
+        assert!(
+            bound <= 8.0 * f64::EPSILON * cond,
+            "compensated bound {bound} escapes the 8·eps·cond envelope"
+        );
+        let naive = certified_err_bound(&input, false);
+        assert!(naive > bound, "the naive bound must dominate");
+        let s_in = KernelInput::Sum(&x);
+        let s_cond: f64 = x.iter().map(|v| v.abs()).sum();
+        assert!(certified_err_bound(&s_in, true) <= 8.0 * f64::EPSILON * s_cond);
+        // The service attaches the rung-appropriate bound; plain submits
+        // carry none (the off path is the pre-rev-1.4 response).
+        let service = DotService::new(cfg(2, usize::MAX)).unwrap();
+        assert_eq!(service.err_bound_for(&input), bound);
+        assert_eq!(service.submit(&input).unwrap().err_bound, None);
     }
 
     #[test]

@@ -49,7 +49,7 @@ use crate::runtime::backend::BackendError;
 
 use super::codec::{
     self, ErrorCode, Opcode, Request, RequestMeta, Response, WireCacheStats, WireError, WireResult,
-    WireStats, WireTenantStats, HEADER_LEN,
+    WireScrubStats, WireStats, WireTenantStats, FLAG_CRC, HEADER_LEN,
 };
 use super::faults::{FaultInjector, FaultSite};
 use super::queue::{AsyncDotService, AsyncOptions, QosPolicy, ResponseHandle, TrySubmit};
@@ -309,11 +309,21 @@ fn acceptor_main(
 enum WriterMsg {
     /// An already-encoded frame (errors, stats).
     Raw(Vec<u8>),
-    /// One admitted request awaiting its ticket.
-    Pending { id: u64, handle: ResponseHandle },
+    /// One admitted request awaiting its ticket. `crc` echoes the
+    /// request's [`FLAG_CRC`]: the response frame is sealed with the
+    /// revision-1.4 checksum trailer for peers that negotiated it.
+    Pending {
+        id: u64,
+        handle: ResponseHandle,
+        crc: bool,
+    },
     /// One admitted batch: waited in submission order, answered with a
     /// single batch-result frame (PROTOCOL.md §3.3).
-    Batch { id: u64, handles: Vec<ResponseHandle> },
+    Batch {
+        id: u64,
+        handles: Vec<ResponseHandle>,
+        crc: bool,
+    },
 }
 
 /// Read exactly `buf.len()` bytes; `Ok(false)` on clean EOF *before the
@@ -371,8 +381,20 @@ fn error_code_of(e: &BackendError) -> ErrorCode {
         BackendError::DeadlineExceeded { .. } => ErrorCode::Deadline,
         BackendError::UnknownHandle { .. } => ErrorCode::UnknownHandle,
         BackendError::StoreFull { .. } => ErrorCode::StoreFull,
+        BackendError::CorruptOperand { .. } => ErrorCode::CorruptOperand,
         _ => ErrorCode::Internal,
     }
+}
+
+/// Seal `frame` with the revision-1.4 CRC trailer when the request
+/// negotiated it ([`FLAG_CRC`] on the request header); pass it through
+/// untouched otherwise, keeping CRC-off traffic byte-identical to
+/// revision 1.3.
+fn sealed(mut frame: Vec<u8>, crc: bool) -> Vec<u8> {
+    if crc {
+        codec::seal_crc(&mut frame);
+    }
+    frame
 }
 
 pub(crate) fn is_timeout(e: &std::io::Error) -> bool {
@@ -428,6 +450,21 @@ fn wire_cache_stats(service: &AsyncDotService) -> WireCacheStats {
         cache_hits: cache.hits,
         cache_misses: cache.misses,
         cache_evictions: cache.evictions,
+    }
+}
+
+/// Snapshot the integrity counters — store scrub verdicts and cache
+/// verify-on-hit outcomes — for the rev-1.4 scrub stats extension
+/// (PROTOCOL.md §3.7).
+fn wire_scrub_stats(service: &AsyncDotService) -> WireScrubStats {
+    let store = service.store_stats();
+    let cache = service.cache_stats();
+    WireScrubStats {
+        scrub_verified: store.scrub_verified,
+        scrub_quarantined: store.scrub_quarantined,
+        scrub_passes: store.scrub_passes,
+        cache_verified: cache.verified,
+        cache_poisoned: cache.poisoned,
     }
 }
 
@@ -567,23 +604,43 @@ fn reader_loop(
         if header.payload_len > 0 && reader.read_exact(&mut payload).is_err() {
             return;
         }
+        // Revision-1.4 integrity: a CRC-flagged frame is verified before
+        // anything in its payload is believed. A checksum mismatch is the
+        // typed non-fatal CORRUPT_FRAME error (PROTOCOL.md §4.14) — the
+        // stream is still frame-aligned (the length field is covered by
+        // the header checks), so the connection keeps serving.
+        let crc = header.flags & FLAG_CRC != 0;
+        let verified = match codec::verify_crc(&head, header.flags, &payload) {
+            Ok(body) => body,
+            Err(e) => {
+                let frame = sealed(codec::encode_error(header.request_id, e.code, &e.message), crc);
+                if !send(tx, WriterMsg::Raw(frame)) {
+                    return;
+                }
+                continue;
+            }
+        };
         let Some(opcode) = Opcode::from_byte(header.opcode) else {
-            if !send_error(
-                tx,
-                header.request_id,
-                ErrorCode::BadOpcode,
-                &format!("unassigned opcode byte {:#04x}", header.opcode),
-            ) {
+            let frame = sealed(
+                codec::encode_error(
+                    header.request_id,
+                    ErrorCode::BadOpcode,
+                    &format!("unassigned opcode byte {:#04x}", header.opcode),
+                ),
+                crc,
+            );
+            if !send(tx, WriterMsg::Raw(frame)) {
                 return;
             }
             continue;
         };
         // Strip the optional deadline and tenant prefixes (PROTOCOL.md
         // §2.4/§2.5) before the opcode-specific payload decodes.
-        let (meta, body) = match codec::split_prefixes(header.flags, &payload) {
+        let (meta, body) = match codec::split_prefixes(header.flags, verified) {
             Ok(split) => split,
             Err(e) => {
-                if !send_error(tx, header.request_id, e.code, &e.message) {
+                let frame = sealed(codec::encode_error(header.request_id, e.code, &e.message), crc);
+                if !send(tx, WriterMsg::Raw(frame)) {
                     return;
                 }
                 continue;
@@ -592,7 +649,8 @@ fn reader_loop(
         let request = match codec::decode_request(opcode, body) {
             Ok(r) => r,
             Err(e) => {
-                if !send_error(tx, header.request_id, e.code, &e.message) {
+                let frame = sealed(codec::encode_error(header.request_id, e.code, &e.message), crc);
+                if !send(tx, WriterMsg::Raw(frame)) {
                     return;
                 }
                 if e.code.is_fatal() {
@@ -601,7 +659,7 @@ fn reader_loop(
                 continue;
             }
         };
-        if !handle_request(service, tx, header.request_id, request, meta, net) {
+        if !handle_request(service, tx, header.request_id, request, meta, crc, net) {
             return;
         }
     }
@@ -610,137 +668,221 @@ fn reader_loop(
 /// Admit one decoded request; `false` ends the connection. The request's
 /// prefixes decide the class of service: the deadline prefix arms
 /// shedding, the tenant prefix routes quota/fair-share accounting
-/// (absent → tenant 0), and carrying either marks the client rev-1.2
-/// capable, unlocking retry-after hints on shed frames.
+/// (absent → tenant 0), and carrying any revision-1.2+ marker (prefix,
+/// cache/errbound/scrub flag, or the CRC trailer) unlocks retry-after
+/// hints on shed frames. `crc` echoes the request's [`FLAG_CRC`]: every
+/// frame answering this request is sealed with the checksum trailer.
 fn handle_request(
     service: &AsyncDotService,
     tx: &SyncSender<WriterMsg>,
     id: u64,
     request: Request,
     meta: RequestMeta,
+    crc: bool,
     net: &NetOptions,
 ) -> bool {
     let deadline = meta.deadline_us.map(Duration::from_micros);
     let tenant = meta.tenant.unwrap_or(0);
-    let rev12 = meta.deadline_us.is_some() || meta.tenant.is_some() || meta.cache;
+    let rev12 = meta.deadline_us.is_some()
+        || meta.tenant.is_some()
+        || meta.cache
+        || meta.errbound
+        || meta.scrub
+        || crc;
     match request {
         Request::Stats => {
             // Extensions are negotiated per request (PROTOCOL.md §6): a
             // tenant-prefixed STATS asks for the rev-1.2 per-tenant rows,
             // the cache flag asks for the rev-1.3 store/cache counters
-            // (composable with tenant rows), and a plain STATS gets the
-            // classic frame, so older clients never see bytes they cannot
-            // parse.
+            // (composable with tenant rows), the scrub flag additionally
+            // asks for the rev-1.4 integrity counters (implying the cache
+            // block it extends), and a plain STATS gets the classic
+            // frame, so older clients never see bytes they cannot parse.
             let tenants = if meta.tenant.is_some() {
                 Some(wire_tenant_stats(service))
             } else {
                 None
             };
-            let frame = if meta.cache {
+            let frame = if meta.scrub {
+                // A scrub probe also drives one background sweep before
+                // the counters are read (PROTOCOL.md §3.7): the snapshot
+                // then reflects a full digest re-check of every resident
+                // operand, and `scrub_passes` ticks visibly on the wire.
+                service.store().scrub_all();
                 codec::encode_stats_result_ext(
                     id,
                     &wire_stats(service),
                     tenants.as_deref(),
                     Some(&wire_cache_stats(service)),
+                    Some(&wire_scrub_stats(service)),
+                )
+            } else if meta.cache {
+                codec::encode_stats_result_ext(
+                    id,
+                    &wire_stats(service),
+                    tenants.as_deref(),
+                    Some(&wire_cache_stats(service)),
+                    None,
                 )
             } else if let Some(rows) = &tenants {
                 codec::encode_stats_result_tenants(id, &wire_stats(service), rows)
             } else {
                 codec::encode_stats_result(id, &wire_stats(service))
             };
-            send(tx, WriterMsg::Raw(frame))
+            send(tx, WriterMsg::Raw(sealed(frame, crc)))
         }
         Request::Register(data) => match service.register_operand(data) {
             Ok(out) => send(
                 tx,
-                WriterMsg::Raw(codec::encode_register_result(
-                    id,
-                    out.handle,
-                    out.n as u64,
-                    out.fresh,
+                WriterMsg::Raw(sealed(
+                    codec::encode_register_result(id, out.handle, out.n as u64, out.fresh),
+                    crc,
                 )),
             ),
             // STORE_FULL is non-fatal (PROTOCOL.md §4.13): nothing was
             // evicted or registered, and the connection keeps serving.
-            Err(e @ BackendError::StoreFull { .. }) => {
-                send_error(tx, id, ErrorCode::StoreFull, &e.to_string())
-            }
-            Err(e) => send_error(tx, id, ErrorCode::Internal, &e.to_string()),
+            Err(e @ BackendError::StoreFull { .. }) => send(
+                tx,
+                WriterMsg::Raw(sealed(
+                    codec::encode_error(id, ErrorCode::StoreFull, &e.to_string()),
+                    crc,
+                )),
+            ),
+            Err(e) => send(
+                tx,
+                WriterMsg::Raw(sealed(
+                    codec::encode_error(id, ErrorCode::Internal, &e.to_string()),
+                    crc,
+                )),
+            ),
         },
         Request::Release(handle) => {
             // Idempotent by design (PROTOCOL.md §3.9): releasing a handle
             // that is not resident acknowledges `found == false` rather
             // than erroring, so clients can release unconditionally.
             let found = service.release_operand(handle);
-            send(tx, WriterMsg::Raw(codec::encode_release_result(id, found)))
+            send(
+                tx,
+                WriterMsg::Raw(sealed(codec::encode_release_result(id, found), crc)),
+            )
         }
         Request::SubmitHandles { a, b } => {
-            match service.try_submit_handles_with_opts(a, b, Instant::now(), deadline, tenant) {
-                Ok(TrySubmit::Accepted(handle)) => send(tx, WriterMsg::Pending { id, handle }),
+            match service.try_submit_handles_with_opts(
+                a,
+                b,
+                Instant::now(),
+                deadline,
+                tenant,
+                meta.errbound,
+            ) {
+                Ok(TrySubmit::Accepted(handle)) => {
+                    send(tx, WriterMsg::Pending { id, handle, crc })
+                }
                 Ok(TrySubmit::Busy) => send(
                     tx,
-                    WriterMsg::Raw(shed_frame(
-                        service,
-                        id,
-                        ErrorCode::Busy,
-                        "submission queue full; retry (PROTOCOL.md §5)",
-                        rev12,
+                    WriterMsg::Raw(sealed(
+                        shed_frame(
+                            service,
+                            id,
+                            ErrorCode::Busy,
+                            "submission queue full; retry (PROTOCOL.md §5)",
+                            rev12,
+                        ),
+                        crc,
                     )),
                 ),
                 Ok(TrySubmit::Quota) => send(
                     tx,
-                    WriterMsg::Raw(shed_frame(
-                        service,
-                        id,
-                        ErrorCode::Quota,
-                        &format!("tenant {tenant} is at its queue quota (PROTOCOL.md §4.11)"),
-                        rev12,
+                    WriterMsg::Raw(sealed(
+                        shed_frame(
+                            service,
+                            id,
+                            ErrorCode::Quota,
+                            &format!("tenant {tenant} is at its queue quota (PROTOCOL.md §4.11)"),
+                            rev12,
+                        ),
+                        crc,
                     )),
                 ),
                 // UNKNOWN_HANDLE is non-fatal (PROTOCOL.md §4.12): the
                 // client may have raced an eviction or a release and can
                 // re-register on the same connection.
-                Err(e @ BackendError::UnknownHandle { .. }) => {
-                    send_error(tx, id, ErrorCode::UnknownHandle, &e.to_string())
-                }
+                Err(e @ BackendError::UnknownHandle { .. }) => send(
+                    tx,
+                    WriterMsg::Raw(sealed(
+                        codec::encode_error(id, ErrorCode::UnknownHandle, &e.to_string()),
+                        crc,
+                    )),
+                ),
+                // CORRUPT_OPERAND is likewise non-fatal (PROTOCOL.md
+                // §4.15): the scrubber quarantined the operand, and the
+                // client recovers by re-registering the clean contents.
+                Err(e @ BackendError::CorruptOperand { .. }) => send(
+                    tx,
+                    WriterMsg::Raw(sealed(
+                        codec::encode_error(id, ErrorCode::CorruptOperand, &e.to_string()),
+                        crc,
+                    )),
+                ),
                 Err(BackendError::Runtime(msg)) => {
                     let _ = send_error(tx, id, ErrorCode::Shutdown, &msg);
                     false
                 }
-                Err(e) => send_error(tx, id, ErrorCode::Invalid, &e.to_string()),
+                Err(e) => send(
+                    tx,
+                    WriterMsg::Raw(sealed(
+                        codec::encode_error(id, ErrorCode::Invalid, &e.to_string()),
+                        crc,
+                    )),
+                ),
             }
         }
         Request::Submit(input) => {
-            match service.try_submit_with_opts(input, Instant::now(), deadline, tenant) {
-                Ok(TrySubmit::Accepted(handle)) => send(tx, WriterMsg::Pending { id, handle }),
+            match service.try_submit_with_opts(input, Instant::now(), deadline, tenant, meta.errbound)
+            {
+                Ok(TrySubmit::Accepted(handle)) => {
+                    send(tx, WriterMsg::Pending { id, handle, crc })
+                }
                 Ok(TrySubmit::Busy) => send(
                     tx,
-                    WriterMsg::Raw(shed_frame(
-                        service,
-                        id,
-                        ErrorCode::Busy,
-                        "submission queue full; retry (PROTOCOL.md §5)",
-                        rev12,
+                    WriterMsg::Raw(sealed(
+                        shed_frame(
+                            service,
+                            id,
+                            ErrorCode::Busy,
+                            "submission queue full; retry (PROTOCOL.md §5)",
+                            rev12,
+                        ),
+                        crc,
                     )),
                 ),
                 Ok(TrySubmit::Quota) => send(
                     tx,
-                    WriterMsg::Raw(shed_frame(
-                        service,
-                        id,
-                        ErrorCode::Quota,
-                        &format!("tenant {tenant} is at its queue quota (PROTOCOL.md §4.11)"),
-                        rev12,
+                    WriterMsg::Raw(sealed(
+                        shed_frame(
+                            service,
+                            id,
+                            ErrorCode::Quota,
+                            &format!("tenant {tenant} is at its queue quota (PROTOCOL.md §4.11)"),
+                            rev12,
+                        ),
+                        crc,
                     )),
                 ),
                 Err(BackendError::Runtime(msg)) => {
                     let _ = send_error(tx, id, ErrorCode::Shutdown, &msg);
                     false
                 }
-                Err(e) => send_error(tx, id, ErrorCode::Invalid, &e.to_string()),
+                Err(e) => send(
+                    tx,
+                    WriterMsg::Raw(sealed(
+                        codec::encode_error(id, ErrorCode::Invalid, &e.to_string()),
+                        crc,
+                    )),
+                ),
             }
         }
-        Request::Batch(inputs) => submit_batch(service, tx, id, inputs, meta, net),
+        Request::Batch(inputs) => submit_batch(service, tx, id, inputs, meta, crc, net),
     }
 }
 
@@ -754,14 +896,26 @@ fn submit_batch(
     id: u64,
     inputs: Vec<SharedInput>,
     meta: RequestMeta,
+    crc: bool,
     net: &NetOptions,
 ) -> bool {
     let deadline = meta.deadline_us.map(Duration::from_micros);
     let tenant = meta.tenant.unwrap_or(0);
-    let rev12 = meta.deadline_us.is_some() || meta.tenant.is_some() || meta.cache;
+    let rev12 = meta.deadline_us.is_some()
+        || meta.tenant.is_some()
+        || meta.cache
+        || meta.errbound
+        || meta.scrub
+        || crc;
     for input in &inputs {
         if let Err(e) = input.view().check(service.service().spec_for(&input.view())) {
-            return send_error(tx, id, ErrorCode::Invalid, &e.to_string());
+            return send(
+                tx,
+                WriterMsg::Raw(sealed(
+                    codec::encode_error(id, ErrorCode::Invalid, &e.to_string()),
+                    crc,
+                )),
+            );
         }
     }
     let mut handles = Vec::with_capacity(inputs.len());
@@ -774,7 +928,7 @@ fn submit_batch(
         if k == total / 2 && net.fire(FaultSite::ConnDropMidBatch) {
             return false;
         }
-        match service.submit_with_opts(input, Instant::now(), deadline, tenant) {
+        match service.submit_with_opts(input, Instant::now(), deadline, tenant, meta.errbound) {
             Ok(handle) => handles.push(handle),
             Err(BackendError::QuotaExceeded { tenant }) => {
                 // Quota struck mid-batch: the whole batch fails with the
@@ -784,12 +938,15 @@ fn submit_batch(
                 // the results discarded.
                 return send(
                     tx,
-                    WriterMsg::Raw(shed_frame(
-                        service,
-                        id,
-                        ErrorCode::Quota,
-                        &format!("tenant {tenant} is at its queue quota (PROTOCOL.md §4.11)"),
-                        rev12,
+                    WriterMsg::Raw(sealed(
+                        shed_frame(
+                            service,
+                            id,
+                            ErrorCode::Quota,
+                            &format!("tenant {tenant} is at its queue quota (PROTOCOL.md §4.11)"),
+                            rev12,
+                        ),
+                        crc,
                     )),
                 );
             }
@@ -799,7 +956,7 @@ fn submit_batch(
             }
         }
     }
-    send(tx, WriterMsg::Batch { id, handles })
+    send(tx, WriterMsg::Batch { id, handles, crc })
 }
 
 fn result_of(response: ServeResponse) -> WireResult {
@@ -807,17 +964,20 @@ fn result_of(response: ServeResponse) -> WireResult {
         value: response.value,
         n: response.n as u64,
         path: response.path,
+        err_bound: response.err_bound,
     }
 }
 
 /// Encode one resolved ticket: a result frame, or a typed error frame if
 /// the request failed inside the pipeline (deadline shed, dispatcher
-/// drain, worker panic).
-fn resolve_frame(id: u64, handle: ResponseHandle) -> Vec<u8> {
-    match handle.wait() {
+/// drain, worker panic). Sealed with the CRC trailer when the request
+/// negotiated it.
+fn resolve_frame(id: u64, handle: ResponseHandle, crc: bool) -> Vec<u8> {
+    let frame = match handle.wait() {
         Ok(response) => codec::encode_result(id, &result_of(response)),
         Err(e) => codec::encode_error(id, error_code_of(&e), &e.to_string()),
-    }
+    };
+    sealed(frame, crc)
 }
 
 /// The writer half: owns the socket's write side. Raw frames go straight
@@ -828,7 +988,7 @@ fn resolve_frame(id: u64, handle: ResponseHandle) -> Vec<u8> {
 /// written, or on any write failure.
 fn writer_main(stream: TcpStream, rx: Receiver<WriterMsg>, net: Arc<NetOptions>) {
     let mut out = BufWriter::new(stream);
-    let mut pending: Vec<(u64, ResponseHandle)> = Vec::new();
+    let mut pending: Vec<(u64, ResponseHandle, bool)> = Vec::new();
     let mut open = true;
     loop {
         // Injected slow client: the writer is descheduled as if the
@@ -842,8 +1002,8 @@ fn writer_main(stream: TcpStream, rx: Receiver<WriterMsg>, net: Arc<NetOptions>)
         let mut i = 0;
         while i < pending.len() {
             if pending[i].1.try_wait().is_some() {
-                let (id, handle) = pending.swap_remove(i);
-                let frame = resolve_frame(id, handle);
+                let (id, handle, crc) = pending.swap_remove(i);
+                let mut frame = resolve_frame(id, handle, crc);
                 // Injected truncated frame: write half, then die — the
                 // client must surface a framing error, never hang.
                 if net.fire(FaultSite::TruncatedFrame) {
@@ -853,6 +1013,16 @@ fn writer_main(stream: TcpStream, rx: Receiver<WriterMsg>, net: Arc<NetOptions>)
                 }
                 if net.fire(FaultSite::SocketWriteError) {
                     return; // injected write failure: connection dies
+                }
+                // Injected frame corruption (revision 1.4): flip one bit
+                // of the sealed frame's CRC trailer in flight, so the
+                // client's checksum verification must reject the frame.
+                // The fire gate sits behind the seal check — the site is
+                // only armed against peers whose detector (the trailer)
+                // is present, so every injection is detectable.
+                if frame[6] & FLAG_CRC != 0 && net.fire(FaultSite::FrameCrcCorrupt) {
+                    let last = frame.len() - 1;
+                    frame[last] ^= 0x01;
                 }
                 if out.write_all(&frame).is_err() {
                     return;
@@ -896,8 +1066,8 @@ fn writer_main(stream: TcpStream, rx: Receiver<WriterMsg>, net: Arc<NetOptions>)
                     return;
                 }
             }
-            Some(WriterMsg::Pending { id, handle }) => pending.push((id, handle)),
-            Some(WriterMsg::Batch { id, handles }) => {
+            Some(WriterMsg::Pending { id, handle, crc }) => pending.push((id, handle, crc)),
+            Some(WriterMsg::Batch { id, handles, crc }) => {
                 let mut results = Vec::with_capacity(handles.len());
                 let mut failed: Option<BackendError> = None;
                 for handle in handles {
@@ -908,10 +1078,13 @@ fn writer_main(stream: TcpStream, rx: Receiver<WriterMsg>, net: Arc<NetOptions>)
                         }
                     }
                 }
-                let frame = match failed {
-                    None => codec::encode_batch_result(id, &results),
-                    Some(e) => codec::encode_error(id, error_code_of(&e), &e.to_string()),
-                };
+                let frame = sealed(
+                    match failed {
+                        None => codec::encode_batch_result(id, &results),
+                        Some(e) => codec::encode_error(id, error_code_of(&e), &e.to_string()),
+                    },
+                    crc,
+                );
                 if out.write_all(&frame).is_err() || out.flush().is_err() {
                     return;
                 }
@@ -962,21 +1135,21 @@ fn jitter_ns(id: u64, attempt: u32, span_ns: u64) -> u64 {
     z % span_ns
 }
 
-/// Pause before the next BUSY retry: the server's retry-after hint
-/// verbatim when present (rev 1.2; capped at 4× the backoff cap), else
-/// capped exponential backoff with the deterministic jitter placing the
-/// pause in `[exp/2, exp]`.
+/// Pause before the next BUSY retry: the server's retry-after hint when
+/// present (rev 1.2; capped at 4× the backoff cap), else capped
+/// exponential backoff. Either way the deterministic jitter places the
+/// pause in `[target/2, target]` — a shared hint taken verbatim would
+/// march every backed-off client back in lockstep, re-creating the very
+/// arrival spike the shed was relieving.
 fn busy_backoff(attempt: u32, id: u64, hint_us: Option<u32>) -> Duration {
-    if let Some(us) = hint_us {
-        if us > 0 {
-            return Duration::from_micros(u64::from(us)).min(BUSY_BACKOFF_CAP * 4);
-        }
-    }
-    let exp = BUSY_BACKOFF_BASE
-        .saturating_mul(1u32 << attempt.min(12))
-        .min(BUSY_BACKOFF_CAP);
-    let half = exp / 2;
-    let span_ns = (exp - half).as_nanos() as u64;
+    let target = match hint_us {
+        Some(us) if us > 0 => Duration::from_micros(u64::from(us)).min(BUSY_BACKOFF_CAP * 4),
+        _ => BUSY_BACKOFF_BASE
+            .saturating_mul(1u32 << attempt.min(12))
+            .min(BUSY_BACKOFF_CAP),
+    };
+    let half = target / 2;
+    let span_ns = (target - half).as_nanos() as u64;
     half + Duration::from_nanos(jitter_ns(id, attempt, span_ns.saturating_add(1)))
 }
 
@@ -992,6 +1165,7 @@ pub struct WireClient {
     next_id: u64,
     busy_retries: u64,
     busy_budget: Duration,
+    crc: bool,
 }
 
 impl WireClient {
@@ -1006,7 +1180,32 @@ impl WireClient {
             next_id: 1,
             busy_retries: 0,
             busy_budget: BUSY_RETRY_BUDGET,
+            crc: false,
         })
+    }
+
+    /// Opt into revision-1.4 frame checksums (PROTOCOL.md §2.6): every
+    /// subsequent request is sealed with the CRC32C trailer, the server
+    /// answers in kind, and [`Self::read_response`] verifies each reply's
+    /// trailer before believing a byte of it — a corrupted frame surfaces
+    /// as the typed [`ErrorCode::CorruptFrame`] protocol error instead of
+    /// silently wrong data. Off (the default), requests and responses are
+    /// byte-identical to revision 1.3.
+    pub fn set_crc(&mut self, on: bool) {
+        self.crc = on;
+    }
+
+    /// Whether revision-1.4 frame checksums are negotiated on this client.
+    pub fn crc(&self) -> bool {
+        self.crc
+    }
+
+    /// Seal an outgoing frame with the CRC trailer when negotiated.
+    fn seal(&self, mut frame: Vec<u8>) -> Vec<u8> {
+        if self.crc {
+            codec::seal_crc(&mut frame);
+        }
+        frame
     }
 
     /// BUSY retries absorbed so far (PROTOCOL.md §5 round trips that
@@ -1028,7 +1227,9 @@ impl WireClient {
         id
     }
 
-    /// Read exactly one response frame addressed to `id`.
+    /// Read exactly one response frame addressed to `id`. A CRC-flagged
+    /// response is checksum-verified before decoding (revision 1.4): a
+    /// mismatch is the typed [`ErrorCode::CorruptFrame`] protocol error.
     fn read_response(&mut self, id: u64) -> Result<Response, WireCallError> {
         let mut head = [0u8; HEADER_LEN];
         self.reader.read_exact(&mut head)?;
@@ -1037,6 +1238,8 @@ impl WireClient {
         if header.payload_len > 0 {
             self.reader.read_exact(&mut payload)?;
         }
+        let body = codec::verify_crc(&head, header.flags, &payload)
+            .map_err(WireCallError::Protocol)?;
         let opcode = Opcode::from_byte(header.opcode).ok_or_else(|| {
             WireCallError::Protocol(WireError::new(
                 ErrorCode::BadOpcode,
@@ -1049,19 +1252,21 @@ impl WireClient {
                 format!("response id {} for request {}", header.request_id, id),
             )));
         }
-        codec::decode_response_flagged(header.flags, opcode, &payload)
-            .map_err(WireCallError::Protocol)
+        codec::decode_response_flagged(header.flags, opcode, body).map_err(WireCallError::Protocol)
     }
 
     /// Send one frame and read its response, transparently retrying BUSY
     /// under the backoff schedule and wall-clock budget. A QUOTA error is
     /// *not* retried here: it is a typed per-tenant shed the caller must
     /// observe (any retry-after hint rides along in the returned error).
-    fn call(&mut self, frame: &[u8], id: u64) -> Result<Response, WireCallError> {
+    /// With CRC negotiated ([`Self::set_crc`]) the frame is sealed here,
+    /// so every code path — including BUSY re-sends — carries the trailer.
+    fn call(&mut self, frame: Vec<u8>, id: u64) -> Result<Response, WireCallError> {
+        let frame = self.seal(frame);
         let started = Instant::now();
         let mut attempt = 0u32;
         loop {
-            self.writer.write_all(frame)?;
+            self.writer.write_all(&frame)?;
             self.writer.flush()?;
             match self.read_response(id)? {
                 Response::Error(e) if e.code == ErrorCode::Busy => {
@@ -1093,14 +1298,14 @@ impl WireClient {
     pub fn dot(&mut self, x: &[f64], y: &[f64]) -> Result<WireResult, WireCallError> {
         let id = self.fresh_id();
         let frame = codec::encode_dot(id, x, y);
-        Self::expect_result(self.call(&frame, id)?)
+        Self::expect_result(self.call(frame, id)?)
     }
 
     /// One sum over the wire (PROTOCOL.md §3.2).
     pub fn sum(&mut self, x: &[f64]) -> Result<WireResult, WireCallError> {
         let id = self.fresh_id();
         let frame = codec::encode_sum(id, x);
-        Self::expect_result(self.call(&frame, id)?)
+        Self::expect_result(self.call(frame, id)?)
     }
 
     /// One batched submission over the wire (PROTOCOL.md §3.3); results
@@ -1108,7 +1313,7 @@ impl WireClient {
     pub fn batch(&mut self, inputs: &[SharedInput]) -> Result<Vec<WireResult>, WireCallError> {
         let id = self.fresh_id();
         let frame = codec::encode_batch(id, inputs);
-        match self.call(&frame, id)? {
+        match self.call(frame, id)? {
             Response::Batch(results) => Ok(results),
             other => Err(WireCallError::Protocol(WireError::new(
                 ErrorCode::Malformed,
@@ -1140,7 +1345,7 @@ impl WireClient {
             deadline.as_micros() as u64,
             &codec::encode_dot_payload(x, y),
         );
-        Self::expect_result(self.call(&frame, id)?)
+        Self::expect_result(self.call(frame, id)?)
     }
 
     /// One batched submission carrying a deadline budget shared by every
@@ -1158,7 +1363,7 @@ impl WireClient {
             deadline.as_micros() as u64,
             &full[HEADER_LEN..],
         );
-        match self.call(&frame, id)? {
+        match self.call(frame, id)? {
             Response::Batch(results) => Ok(results),
             other => Err(WireCallError::Protocol(WireError::new(
                 ErrorCode::Malformed,
@@ -1171,7 +1376,7 @@ impl WireClient {
     pub fn stats(&mut self) -> Result<WireStats, WireCallError> {
         let id = self.fresh_id();
         let frame = codec::encode_stats(id);
-        match self.call(&frame, id)? {
+        match self.call(frame, id)? {
             Response::Stats(stats) => Ok(stats),
             other => Err(WireCallError::Protocol(WireError::new(
                 ErrorCode::Malformed,
@@ -1193,7 +1398,7 @@ impl WireClient {
         let id = self.fresh_id();
         let frame =
             codec::encode_frame_with_meta(Opcode::Dot, id, meta, &codec::encode_dot_payload(x, y));
-        Self::expect_result(self.call(&frame, id)?)
+        Self::expect_result(self.call(frame, id)?)
     }
 
     /// One dot product on behalf of `tenant` (PROTOCOL.md §2.5).
@@ -1207,9 +1412,47 @@ impl WireClient {
             x,
             y,
             RequestMeta {
-                deadline_us: None,
                 tenant: Some(tenant),
-                cache: false,
+                ..RequestMeta::default()
+            },
+        )
+    }
+
+    /// One handle-pair dot product that also requests the revision-1.4
+    /// certified error bound (PROTOCOL.md §3.5): the returned
+    /// [`WireResult::err_bound`] carries the server's a-posteriori
+    /// round-off certificate for the delivered value.
+    pub fn dot_handles_with_errbound(
+        &mut self,
+        a: u64,
+        b: u64,
+    ) -> Result<WireResult, WireCallError> {
+        let id = self.fresh_id();
+        let frame = codec::encode_frame_with_meta(
+            Opcode::DotHandles,
+            id,
+            RequestMeta {
+                errbound: true,
+                ..RequestMeta::default()
+            },
+            &codec::encode_dot_handles_payload(a, b),
+        );
+        Self::expect_result(self.call(frame, id)?)
+    }
+
+    /// One dot product that also requests the revision-1.4 certified
+    /// error bound (PROTOCOL.md §3.5).
+    pub fn dot_with_errbound(
+        &mut self,
+        x: &[f64],
+        y: &[f64],
+    ) -> Result<WireResult, WireCallError> {
+        self.dot_with_meta(
+            x,
+            y,
+            RequestMeta {
+                errbound: true,
+                ..RequestMeta::default()
             },
         )
     }
@@ -1224,7 +1467,7 @@ impl WireClient {
         let id = self.fresh_id();
         let full = codec::encode_batch(id, inputs);
         let frame = codec::encode_frame_with_meta(Opcode::Batch, id, meta, &full[HEADER_LEN..]);
-        match self.call(&frame, id)? {
+        match self.call(frame, id)? {
             Response::Batch(results) => Ok(results),
             other => Err(WireCallError::Protocol(WireError::new(
                 ErrorCode::Malformed,
@@ -1243,7 +1486,7 @@ impl WireClient {
     ) -> Result<(WireStats, Vec<WireTenantStats>), WireCallError> {
         let id = self.fresh_id();
         let frame = codec::encode_stats_tenants(id, tenant);
-        match self.call(&frame, id)? {
+        match self.call(frame, id)? {
             Response::TenantStats { stats, tenants } => Ok((stats, tenants)),
             other => Err(WireCallError::Protocol(WireError::new(
                 ErrorCode::Malformed,
@@ -1260,7 +1503,7 @@ impl WireClient {
     pub fn register(&mut self, x: &[f64]) -> Result<(u64, u64, bool), WireCallError> {
         let id = self.fresh_id();
         let frame = codec::encode_register(id, x);
-        match self.call(&frame, id)? {
+        match self.call(frame, id)? {
             Response::Registered { handle, n, fresh } => Ok((handle, n, fresh)),
             other => Err(WireCallError::Protocol(WireError::new(
                 ErrorCode::Malformed,
@@ -1275,7 +1518,7 @@ impl WireClient {
     pub fn release(&mut self, handle: u64) -> Result<bool, WireCallError> {
         let id = self.fresh_id();
         let frame = codec::encode_release(id, handle);
-        match self.call(&frame, id)? {
+        match self.call(frame, id)? {
             Response::Released { found } => Ok(found),
             other => Err(WireCallError::Protocol(WireError::new(
                 ErrorCode::Malformed,
@@ -1291,7 +1534,7 @@ impl WireClient {
     pub fn dot_handles(&mut self, a: u64, b: u64) -> Result<WireResult, WireCallError> {
         let id = self.fresh_id();
         let frame = codec::encode_dot_handles(id, a, b);
-        Self::expect_result(self.call(&frame, id)?)
+        Self::expect_result(self.call(frame, id)?)
     }
 
     /// [`Self::dot_handles`] tagged with request metadata — tenant id
@@ -1309,7 +1552,7 @@ impl WireClient {
             meta,
             &codec::encode_dot_handles_payload(a, b),
         );
-        Self::expect_result(self.call(&frame, id)?)
+        Self::expect_result(self.call(frame, id)?)
     }
 
     /// Probe the pipeline counters plus the rev-1.3 operand-store and
@@ -1322,15 +1565,42 @@ impl WireClient {
     ) -> Result<(WireStats, Vec<WireTenantStats>, WireCacheStats), WireCallError> {
         let id = self.fresh_id();
         let frame = codec::encode_stats_cache(id, tenant);
-        match self.call(&frame, id)? {
+        match self.call(frame, id)? {
             Response::CacheStats {
                 stats,
                 tenants,
                 cache,
+                ..
             } => Ok((stats, tenants, cache)),
             other => Err(WireCallError::Protocol(WireError::new(
                 ErrorCode::Malformed,
                 format!("expected a cache stats frame, got {other:?}"),
+            ))),
+        }
+    }
+
+    /// Probe the pipeline counters plus the rev-1.4 integrity extension
+    /// (PROTOCOL.md §3.7): the cache block and the scrub/verification
+    /// counters it extends. Pass a tenant to also request the per-tenant
+    /// rows.
+    #[allow(clippy::type_complexity)]
+    pub fn stats_scrub(
+        &mut self,
+        tenant: Option<u32>,
+    ) -> Result<(WireStats, Vec<WireTenantStats>, WireCacheStats, WireScrubStats), WireCallError>
+    {
+        let id = self.fresh_id();
+        let frame = codec::encode_stats_scrub(id, tenant);
+        match self.call(frame, id)? {
+            Response::CacheStats {
+                stats,
+                tenants,
+                cache,
+                scrub: Some(scrub),
+            } => Ok((stats, tenants, cache, scrub)),
+            other => Err(WireCallError::Protocol(WireError::new(
+                ErrorCode::Malformed,
+                format!("expected a scrub stats frame, got {other:?}"),
             ))),
         }
     }
@@ -1350,6 +1620,7 @@ mod tests {
             compensated: true,
             shard_threshold: ThresholdMode::Fixed(threshold),
             freq_ghz: 3.0,
+            verify_hit_rate: 0.0,
         }
     }
 
@@ -1392,7 +1663,7 @@ mod tests {
         let id = client.fresh_id();
         let mut frame = codec::encode_stats(id);
         frame[5] = 0x42; // clobber the opcode byte
-        match client.call(&frame, id) {
+        match client.call(frame, id) {
             Err(WireCallError::Server(e)) => assert_eq!(e.code, ErrorCode::BadOpcode),
             other => panic!("expected a BadOpcode error frame, got {other:?}"),
         }
@@ -1553,11 +1824,96 @@ mod tests {
             spread.iter().any(|&p| p != spread[0]),
             "jitter must spread concurrent retriers"
         );
-        // A server hint overrides the schedule verbatim (within its cap).
-        assert_eq!(
-            busy_backoff(0, 1, Some(1500)),
-            Duration::from_micros(1500)
-        );
+        // A server hint steers the schedule, jittered into the half-open
+        // window [hint/2, hint] so backed-off clients never march back in
+        // lockstep — but the draw itself is a pure function of (id,
+        // attempt), so retry schedules stay reproducible.
+        let hinted = busy_backoff(0, 1, Some(1500));
+        assert_eq!(hinted, busy_backoff(0, 1, Some(1500)), "hint draw is deterministic");
+        assert!(hinted >= Duration::from_micros(750), "hint floor at half");
+        assert!(hinted <= Duration::from_micros(1500), "hint is an upper bound");
         assert_eq!(busy_backoff(9, 1, Some(0)), busy_backoff(9, 1, None));
+    }
+
+    #[test]
+    fn crc_negotiation_round_trips_and_catches_injected_frame_corruption() {
+        // With FLAG_CRC negotiated, every frame grows a CRC32C trailer and
+        // results stay bit-identical to the unprotected path (rev-1.4
+        // parity contract, PROTOCOL.md §2.6).
+        let server = NetServer::bind("127.0.0.1:0", cfg(2, 1000), AsyncOptions::default()).unwrap();
+        let reference = DotService::new(cfg(2, 1000)).unwrap();
+        let mut client = WireClient::connect(server.local_addr()).unwrap();
+        client.set_crc(true);
+        assert!(client.crc());
+        let x = randvec(512, 71);
+        let y = randvec(512, 72);
+        let wire = client.dot(&x, &y).unwrap();
+        let local = reference
+            .submit(&crate::runtime::backend::KernelInput::Dot(&x, &y))
+            .unwrap();
+        assert_eq!(wire.value.to_bits(), local.value.to_bits());
+        // Handle traffic and the scrub stats extension ride the same
+        // checked channel.
+        let (a, _, _) = client.register(&x).unwrap();
+        let (b, _, _) = client.register(&y).unwrap();
+        let miss = client.dot_handles(a, b).unwrap();
+        let hit = client.dot_handles(a, b).unwrap();
+        assert_eq!(miss.value.to_bits(), local.value.to_bits());
+        assert_eq!(hit.value.to_bits(), miss.value.to_bits());
+        let (stats, _, cache, scrub) = client.stats_scrub(None).unwrap();
+        assert!(stats.completed >= 1);
+        assert_eq!(cache.cache_hits, 1);
+        assert_eq!(scrub.scrub_quarantined, 0);
+        assert_eq!(scrub.cache_poisoned, 0);
+        // The probe drove one full sweep: both resident operands were
+        // digest re-checked and the pass counter ticked.
+        assert_eq!(scrub.scrub_passes, 1);
+        assert!(scrub.scrub_verified >= 2);
+        // A request frame whose trailer is flipped draws the typed
+        // non-fatal CORRUPT_FRAME error and the connection keeps serving.
+        let id = client.fresh_id();
+        let mut frame = codec::encode_stats(id);
+        codec::seal_crc(&mut frame);
+        let last = frame.len() - 1;
+        frame[last] ^= 0x01;
+        use std::io::Write as _;
+        client.writer.write_all(&frame).unwrap();
+        client.writer.flush().unwrap();
+        match client.read_response(id) {
+            Ok(Response::Error(e)) => assert_eq!(e.code, ErrorCode::CorruptFrame),
+            other => panic!("expected a CORRUPT_FRAME error frame, got {other:?}"),
+        }
+        client.dot(&x, &y).unwrap();
+    }
+
+    #[test]
+    fn injected_response_corruption_is_detected_by_the_client() {
+        // Arm the response-side CRC corruption fault: the first sealed
+        // result frame leaves the writer with a flipped trailer bit, and
+        // the client's verify pass must refuse to decode it.
+        use crate::serve::faults::FaultPlan;
+        let net = NetOptions {
+            faults: Some(FaultInjector::new(
+                FaultPlan::none().with(FaultSite::FrameCrcCorrupt, 1),
+            )),
+            ..NetOptions::default()
+        };
+        let server =
+            NetServer::bind_with("127.0.0.1:0", cfg(1, 1000), AsyncOptions::default(), net)
+                .unwrap();
+        let mut client = WireClient::connect(server.local_addr()).unwrap();
+        client.set_crc(true);
+        let x = randvec(128, 81);
+        match client.dot(&x, &x) {
+            Err(WireCallError::Protocol(e)) => assert_eq!(e.code, ErrorCode::CorruptFrame),
+            other => panic!("expected client-side CORRUPT_FRAME detection, got {other:?}"),
+        }
+        // One-shot fault: the same connection serves clean frames after.
+        let wire = client.dot(&x, &x).unwrap();
+        let reference = DotService::new(cfg(1, 1000)).unwrap();
+        let local = reference
+            .submit(&crate::runtime::backend::KernelInput::Dot(&x, &x))
+            .unwrap();
+        assert_eq!(wire.value.to_bits(), local.value.to_bits());
     }
 }

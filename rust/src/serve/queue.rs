@@ -816,6 +816,11 @@ struct QueuedRequest {
     /// would need hashing per request, costing the O(n) the store exists
     /// to avoid).
     cache_key: Option<(u64, u64)>,
+    /// Whether the response should carry a certified error bound
+    /// ([`ServeResponse::err_bound`]) — computed by retire from the same
+    /// shared input, so the bound always describes the exact operands that
+    /// produced the value.
+    errbound: bool,
 }
 
 impl Drop for QueuedRequest {
@@ -924,6 +929,12 @@ pub struct AsyncDotService {
     faults: Option<Arc<FaultInjector>>,
     dispatcher: Option<JoinHandle<()>>,
     opts: AsyncOptions,
+    /// Verify-on-hit sampling rate (`ServeConfig::verify_hit_rate`,
+    /// clamped to `0.0..=1.0` at construction).
+    verify_rate: f64,
+    /// Cache hits seen so far — the deterministic sampling counter
+    /// ([`Self::sample_hit`]).
+    hit_counter: AtomicU64,
 }
 
 impl AsyncDotService {
@@ -968,6 +979,7 @@ impl AsyncDotService {
             cfg.threads.max(1),
             faults.clone(),
         ));
+        let verify_rate = cfg.verify_hit_rate.clamp(0.0, 1.0);
         let service = Arc::new(DotService::with_pool(cfg, pool)?);
         let queue = Arc::new(BoundedQueue::new(opts.queue_depth));
         let counters = Arc::new(Counters::default());
@@ -998,6 +1010,8 @@ impl AsyncDotService {
             faults,
             dispatcher: Some(dispatcher),
             opts,
+            verify_rate,
+            hit_counter: AtomicU64::new(0),
         })
     }
 
@@ -1047,12 +1061,13 @@ impl AsyncDotService {
         arrival: Instant,
         deadline: Option<Duration>,
     ) -> Result<ResponseHandle, BackendError> {
-        self.submit_with_opts(input, arrival, deadline, 0)
+        self.submit_with_opts(input, arrival, deadline, 0, false)
     }
 
     /// The fully-general blocking submit: explicit arrival instant,
-    /// per-request deadline override, and tenant id. A tenant at its
-    /// configured quota is shed here with the typed
+    /// per-request deadline override, tenant id, and whether the response
+    /// should carry a certified error bound ([`ServeResponse::err_bound`]).
+    /// A tenant at its configured quota is shed here with the typed
     /// [`BackendError::QuotaExceeded`] error — nothing enters the queue,
     /// and unlike a full queue the call does not block, because waiting
     /// cannot help until the tenant's own queued work drains.
@@ -1062,9 +1077,10 @@ impl AsyncDotService {
         arrival: Instant,
         deadline: Option<Duration>,
         tenant: u32,
+        errbound: bool,
     ) -> Result<ResponseHandle, BackendError> {
         input.view().check(self.service.spec_for(&input.view()))?;
-        self.enqueue(input, arrival, deadline, tenant, None)
+        self.enqueue(input, arrival, deadline, tenant, None, errbound)
     }
 
     /// Quota admission: one check shared by both submit paths. `false`
@@ -1091,6 +1107,7 @@ impl AsyncDotService {
         deadline: Option<Duration>,
         tenant: u32,
         cache_key: Option<(u64, u64)>,
+        errbound: bool,
     ) -> Result<ResponseHandle, BackendError> {
         if !self.admit(tenant) {
             return Err(BackendError::QuotaExceeded { tenant });
@@ -1103,6 +1120,7 @@ impl AsyncDotService {
             deadline: deadline.map(|d| (arrival + d, d.as_micros() as u64)),
             tenant,
             cache_key,
+            errbound,
         };
         self.queue.push(queued).map_err(|_| {
             self.tenants.unadmit(tenant);
@@ -1137,22 +1155,24 @@ impl AsyncDotService {
         arrival: Instant,
         deadline: Option<Duration>,
     ) -> Result<TrySubmit, BackendError> {
-        self.try_submit_with_opts(input, arrival, deadline, 0)
+        self.try_submit_with_opts(input, arrival, deadline, 0, false)
     }
 
     /// The fully-general non-blocking submit: explicit arrival instant,
-    /// deadline override, and tenant id. A tenant at quota returns
-    /// [`TrySubmit::Quota`] — the wire server maps it to the QUOTA error
-    /// frame, distinct from the BUSY frame a full queue produces.
+    /// deadline override, tenant id, and error-bound opt-in. A tenant at
+    /// quota returns [`TrySubmit::Quota`] — the wire server maps it to the
+    /// QUOTA error frame, distinct from the BUSY frame a full queue
+    /// produces.
     pub fn try_submit_with_opts(
         &self,
         input: SharedInput,
         arrival: Instant,
         deadline: Option<Duration>,
         tenant: u32,
+        errbound: bool,
     ) -> Result<TrySubmit, BackendError> {
         input.view().check(self.service.spec_for(&input.view()))?;
-        self.try_enqueue(input, arrival, deadline, tenant, None)
+        self.try_enqueue(input, arrival, deadline, tenant, None, errbound)
     }
 
     /// Non-blocking enqueue shared by the payload and handle try-submit
@@ -1164,6 +1184,7 @@ impl AsyncDotService {
         deadline: Option<Duration>,
         tenant: u32,
         cache_key: Option<(u64, u64)>,
+        errbound: bool,
     ) -> Result<TrySubmit, BackendError> {
         if !self.admit(tenant) {
             return Ok(TrySubmit::Quota);
@@ -1176,6 +1197,7 @@ impl AsyncDotService {
             deadline: deadline.map(|d| (arrival + d, d.as_micros() as u64)),
             tenant,
             cache_key,
+            errbound,
         };
         match self.queue.try_push(queued) {
             Ok(()) => Ok(TrySubmit::Accepted(ResponseHandle { ticket })),
@@ -1205,7 +1227,9 @@ impl AsyncDotService {
         }
         let handles: Vec<ResponseHandle> = inputs
             .iter()
-            .map(|input| self.enqueue(input.clone(), Instant::now(), self.opts.deadline, 0, None))
+            .map(|input| {
+                self.enqueue(input.clone(), Instant::now(), self.opts.deadline, 0, None, false)
+            })
             .collect::<Result<_, _>>()?;
         handles.into_iter().map(ResponseHandle::wait).collect()
     }
@@ -1289,18 +1313,78 @@ impl AsyncDotService {
     /// and validate the resulting dot input exactly as a payload submit
     /// would. Resolution happens *before* any cache probe: the cache
     /// accelerates resident operands, it never resurrects released ones.
+    /// With store verification armed
+    /// ([`OperandStore::set_verify_on_lookup`]) each lookup re-hashes the
+    /// resident bytes first; a digest mismatch quarantines the operand and
+    /// fails the request with the typed [`BackendError::CorruptOperand`].
     fn resolve_handles(&self, a: u64, b: u64) -> Result<SharedInput, BackendError> {
-        let x = self
-            .store
-            .lookup(a)
-            .ok_or(BackendError::UnknownHandle { handle: a })?;
-        let y = self
-            .store
-            .lookup(b)
-            .ok_or(BackendError::UnknownHandle { handle: b })?;
+        // Injected store corruption: flip a bit in operand `a`'s resident
+        // buffer before the scrub-gated lookup below, so an armed trigger
+        // exercises the full detect → quarantine → typed-error path. The
+        // site is outside `FaultSite::IN_PROCESS` — it only runs where the
+        // scrubber is armed to catch it.
+        if let Some(inj) = &self.faults {
+            if inj.fire(FaultSite::StoreBitFlip) {
+                self.store.corrupt_resident(a);
+            }
+        }
+        let x = match self.store.lookup_verified(a) {
+            Ok(Some(x)) => x,
+            Ok(None) => return Err(BackendError::UnknownHandle { handle: a }),
+            Err(handle) => return Err(BackendError::CorruptOperand { handle }),
+        };
+        let y = match self.store.lookup_verified(b) {
+            Ok(Some(y)) => y,
+            Ok(None) => return Err(BackendError::UnknownHandle { handle: b }),
+            Err(handle) => return Err(BackendError::CorruptOperand { handle }),
+        };
         let input = SharedInput::Dot(x, y);
         input.view().check(self.service.spec_for(&input.view()))?;
         Ok(input)
+    }
+
+    /// Deterministic verify-on-hit sampler: hit `k` (zero-based) is
+    /// sampled iff the integer part of `(k+1)·rate` exceeds that of
+    /// `k·rate` — exactly `⌈rate·H⌉` of the first `H` hits, evenly
+    /// spaced, with no RNG state. Rate 0 never samples (the counter is
+    /// not even touched, keeping the path bit-for-bit identical to the
+    /// pre-verification pipeline); rate 1 samples every hit.
+    fn sample_hit(&self) -> bool {
+        if self.verify_rate <= 0.0 {
+            return false;
+        }
+        let k = self.hit_counter.fetch_add(1, Ordering::Relaxed);
+        ((k + 1) as f64 * self.verify_rate) as u64 > (k as f64 * self.verify_rate) as u64
+    }
+
+    /// Verify-on-hit: for a sampled cache hit, recompute the dot product
+    /// from the resolved operands and bit-compare against the memoized
+    /// value. A match returns the hit (counted under
+    /// [`CacheStats::verified`]); a mismatch — or a recompute error —
+    /// evicts the poisoned entry (counted under [`CacheStats::poisoned`])
+    /// and returns `None`, so the caller falls through to a normal
+    /// enqueue-and-memoize miss. The recompute runs the synchronous
+    /// service path at the same thread count, so by the parity contract a
+    /// clean entry always matches bit-for-bit.
+    fn verify_hit(
+        &self,
+        hit: CachedResult,
+        key: (u64, u64),
+        input: &SharedInput,
+    ) -> Option<CachedResult> {
+        if !self.sample_hit() {
+            return Some(hit);
+        }
+        match self.service.submit(&input.view()) {
+            Ok(resp) if resp.value.to_bits() == hit.bits => {
+                self.cache.note_verified();
+                Some(hit)
+            }
+            _ => {
+                self.cache.evict_poisoned(key);
+                None
+            }
+        }
     }
 
     /// Resolve a result-cache hit immediately: the ticket completes with
@@ -1314,6 +1398,7 @@ impl AsyncDotService {
         hit: CachedResult,
         arrival: Instant,
         tenant: u32,
+        err_bound: Option<f64>,
     ) -> ResponseHandle {
         let ticket = Arc::new(Ticket::new());
         self.tenants.cache_hit(tenant);
@@ -1325,6 +1410,7 @@ impl AsyncDotService {
                 value: f64::from_bits(hit.bits),
                 n: hit.n,
                 path: hit.path,
+                err_bound,
             }),
             latency.as_nanos() as f64,
         );
@@ -1336,13 +1422,13 @@ impl AsyncDotService {
     /// without touching the queue; a miss enqueues normally and retire
     /// memoizes the computed result under `(a, b)`.
     pub fn submit_handles(&self, a: u64, b: u64) -> Result<ResponseHandle, BackendError> {
-        self.submit_handles_with_opts(a, b, Instant::now(), self.opts.deadline, 0)
+        self.submit_handles_with_opts(a, b, Instant::now(), self.opts.deadline, 0, false)
     }
 
     /// The fully-general blocking handle submit: explicit arrival instant,
-    /// per-request deadline override, and tenant id. Unknown handles fail
-    /// with the typed [`BackendError::UnknownHandle`] before any quota or
-    /// queue interaction.
+    /// per-request deadline override, tenant id, and error-bound opt-in.
+    /// Unknown handles fail with the typed [`BackendError::UnknownHandle`]
+    /// before any quota or queue interaction.
     pub fn submit_handles_with_opts(
         &self,
         a: u64,
@@ -1350,12 +1436,16 @@ impl AsyncDotService {
         arrival: Instant,
         deadline: Option<Duration>,
         tenant: u32,
+        errbound: bool,
     ) -> Result<ResponseHandle, BackendError> {
         let input = self.resolve_handles(a, b)?;
         if let Some(hit) = self.cache.get((a, b)) {
-            return Ok(self.cache_hit_response(hit, arrival, tenant));
+            if let Some(hit) = self.verify_hit(hit, (a, b), &input) {
+                let eb = errbound.then(|| self.service.err_bound_for(&input.view()));
+                return Ok(self.cache_hit_response(hit, arrival, tenant, eb));
+            }
         }
-        self.enqueue(input, arrival, deadline, tenant, Some((a, b)))
+        self.enqueue(input, arrival, deadline, tenant, Some((a, b)), errbound)
     }
 
     /// The fully-general non-blocking handle submit (the wire front-end's
@@ -1363,6 +1453,9 @@ impl AsyncDotService {
     /// [`Self::try_submit_with_opts`]: [`TrySubmit::Quota`] at quota,
     /// [`TrySubmit::Busy`] on a full queue — but a result-cache hit is
     /// always accepted, since it consumes neither quota nor queue depth.
+    /// A hit whose verify-on-hit sample fails its bit-compare is treated
+    /// as a miss: the poisoned entry is evicted and the request proceeds
+    /// through the normal admission path.
     pub fn try_submit_handles_with_opts(
         &self,
         a: u64,
@@ -1370,14 +1463,18 @@ impl AsyncDotService {
         arrival: Instant,
         deadline: Option<Duration>,
         tenant: u32,
+        errbound: bool,
     ) -> Result<TrySubmit, BackendError> {
         let input = self.resolve_handles(a, b)?;
         if let Some(hit) = self.cache.get((a, b)) {
-            return Ok(TrySubmit::Accepted(
-                self.cache_hit_response(hit, arrival, tenant),
-            ));
+            if let Some(hit) = self.verify_hit(hit, (a, b), &input) {
+                let eb = errbound.then(|| self.service.err_bound_for(&input.view()));
+                return Ok(TrySubmit::Accepted(
+                    self.cache_hit_response(hit, arrival, tenant, eb),
+                ));
+            }
         }
-        self.try_enqueue(input, arrival, deadline, tenant, Some((a, b)))
+        self.try_enqueue(input, arrival, deadline, tenant, Some((a, b)), errbound)
     }
 }
 
@@ -1556,12 +1653,12 @@ fn dispatcher_loop(
         // Retire whatever already finished (front first: dispatch order).
         while inflight.front().map(InFlight::is_done).unwrap_or(false) {
             let f = inflight.pop_front().unwrap();
-            retire(service, counters, tenants, cache, epoch, &mut busy_end_ns, f);
+            retire(service, counters, tenants, cache, faults, epoch, &mut busy_end_ns, f);
         }
         // Bound dispatcher-side memory.
         while inflight.len() >= MAX_INFLIGHT_DISPATCHES {
             let f = inflight.pop_front().unwrap();
-            retire(service, counters, tenants, cache, epoch, &mut busy_end_ns, f);
+            retire(service, counters, tenants, cache, faults, epoch, &mut busy_end_ns, f);
         }
         // Acquire the next arrivals. With requests already owed to the
         // weighted-fair selector, drain the queue opportunistically and
@@ -1645,13 +1742,13 @@ fn dispatcher_loop(
             dispatch(service, counters, tenants, &mut inflight, batch);
             if !opts.overlap {
                 while let Some(f) = inflight.pop_front() {
-                    retire(service, counters, tenants, cache, epoch, &mut busy_end_ns, f);
+                    retire(service, counters, tenants, cache, faults, epoch, &mut busy_end_ns, f);
                 }
             }
         }
         if closed && backlog.as_ref().map_or(true, QosState::is_empty) {
             for f in inflight.drain(..) {
-                retire(service, counters, tenants, cache, epoch, &mut busy_end_ns, f);
+                retire(service, counters, tenants, cache, faults, epoch, &mut busy_end_ns, f);
             }
             return;
         }
@@ -1818,6 +1915,7 @@ fn retire(
     counters: &Counters,
     tenants: &TenantTable,
     cache: &ResultCache,
+    faults: Option<&FaultInjector>,
     epoch: Instant,
     busy_end_ns: &mut f64,
     inflight: InFlight,
@@ -1840,10 +1938,16 @@ fn retire(
                             value,
                             n: q.input.updates(),
                             path: ExecPath::Fused,
+                            err_bound: q
+                                .errbound
+                                .then(|| service.err_bound_for(&q.input.view())),
                         };
                         // Memoize on success only: a handle-submitted miss
                         // carries its key, so the next identical submit
-                        // replays this exact value and path.
+                        // replays this exact value and path. The error
+                        // bound is never cached: it is recomputed per
+                        // request, so a poisoned entry cannot smuggle a
+                        // stale certificate.
                         if let Some(key) = q.cache_key {
                             cache.insert(
                                 key,
@@ -1853,6 +1957,14 @@ fn retire(
                                     path: ExecPath::Fused,
                                 },
                             );
+                            // Injected cache poisoning: flip the memoized
+                            // bits right after insert, so a later sampled
+                            // hit must fail its bit-compare and evict.
+                            if let Some(inj) = faults {
+                                if inj.fire(FaultSite::CachePoison) {
+                                    cache.poison(key);
+                                }
+                            }
                         }
                         tenants.complete(q.tenant);
                         let latency = now.saturating_duration_since(q.arrival);
@@ -1885,6 +1997,9 @@ fn retire(
                         value,
                         n,
                         path: ExecPath::Sharded,
+                        err_bound: request
+                            .errbound
+                            .then(|| service.err_bound_for(&request.input.view())),
                     };
                     if let Some(key) = request.cache_key {
                         cache.insert(
@@ -1895,6 +2010,11 @@ fn retire(
                                 path: ExecPath::Sharded,
                             },
                         );
+                        if let Some(inj) = faults {
+                            if inj.fire(FaultSite::CachePoison) {
+                                cache.poison(key);
+                            }
+                        }
                     }
                     tenants.complete(request.tenant);
                     let latency = Instant::now().saturating_duration_since(request.arrival);
@@ -1931,6 +2051,7 @@ mod tests {
             compensated: true,
             shard_threshold: ThresholdMode::Fixed(threshold),
             freq_ghz: 3.0,
+            verify_hit_rate: 0.0,
         }
     }
 
@@ -2267,7 +2388,7 @@ mod tests {
             .iter()
             .map(|(tenant, input)| {
                 let h = asy
-                    .submit_with_opts(input.clone(), Instant::now(), None, *tenant)
+                    .submit_with_opts(input.clone(), Instant::now(), None, *tenant, false)
                     .unwrap();
                 (h, input)
             })
@@ -2341,7 +2462,7 @@ mod tests {
             .map(|i| {
                 let input = shared_dot(200 + i * 150, 600 + i as u64);
                 let h = asy
-                    .submit_with_opts(input.clone(), Instant::now(), None, (i % 2) as u32)
+                    .submit_with_opts(input.clone(), Instant::now(), None, (i % 2) as u32, false)
                     .unwrap();
                 (h, input)
             })
@@ -2366,7 +2487,7 @@ mod tests {
             .map(|i| {
                 let input = shared_dot(64 + (i % 4) * 250, 7100 + i as u64);
                 let h = asy
-                    .submit_with_opts(input.clone(), Instant::now(), None, (i % 2) as u32)
+                    .submit_with_opts(input.clone(), Instant::now(), None, (i % 2) as u32, false)
                     .unwrap();
                 (h, input)
             })
@@ -2477,12 +2598,12 @@ mod tests {
         let b = asy.register_operand(y).unwrap();
         // Tenant 1 computes the miss; tenant 0 rides the cache.
         let miss = asy
-            .submit_handles_with_opts(a.handle, b.handle, Instant::now(), None, 1)
+            .submit_handles_with_opts(a.handle, b.handle, Instant::now(), None, 1, false)
             .unwrap()
             .wait()
             .unwrap();
         let hit = asy
-            .submit_handles_with_opts(a.handle, b.handle, Instant::now(), None, 0)
+            .submit_handles_with_opts(a.handle, b.handle, Instant::now(), None, 0, false)
             .unwrap()
             .wait()
             .unwrap();
@@ -2525,5 +2646,147 @@ mod tests {
             Err(BackendError::UnknownHandle { .. })
         ));
         assert_eq!(asy.store_stats().released, 2);
+    }
+
+    #[test]
+    fn verify_on_hit_full_rate_confirms_clean_hits_bit_for_bit() {
+        let mut c = cfg(2, 1000);
+        c.verify_hit_rate = 1.0;
+        let asy = AsyncDotService::new(c, AsyncOptions::default()).unwrap();
+        let a = asy.register_operand(aligned_vec(600, 61)).unwrap();
+        let b = asy.register_operand(aligned_vec(600, 62)).unwrap();
+        let miss = asy.submit_handles(a.handle, b.handle).unwrap().wait().unwrap();
+        let hit = asy.submit_handles(a.handle, b.handle).unwrap().wait().unwrap();
+        let hit2 = asy.submit_handles(a.handle, b.handle).unwrap().wait().unwrap();
+        assert_eq!(hit.value.to_bits(), miss.value.to_bits());
+        assert_eq!(hit2.value.to_bits(), miss.value.to_bits());
+        let cs = asy.cache_stats();
+        assert_eq!(cs.hits, 2);
+        assert_eq!(cs.verified, 2, "rate 1.0 must verify every hit");
+        assert_eq!(cs.poisoned, 0, "clean entries never count as poisoned");
+        assert_eq!(cs.hits + cs.misses, cs.lookups, "accounting partition");
+    }
+
+    #[test]
+    fn poisoned_cache_entry_is_detected_evicted_and_recomputed() {
+        use super::super::faults::FaultPlan;
+        let plan = FaultPlan::none().with(FaultSite::CachePoison, 1);
+        let injector = crate::serve::faults::FaultInjector::new(plan);
+        let mut c = cfg(2, 1000);
+        c.verify_hit_rate = 1.0;
+        let asy =
+            AsyncDotService::new_with_faults(c, AsyncOptions::default(), Some(Arc::clone(&injector)))
+                .unwrap();
+        let x = aligned_vec(700, 71);
+        let y = aligned_vec(700, 72);
+        let a = asy.register_operand(Arc::clone(&x)).unwrap();
+        let b = asy.register_operand(Arc::clone(&y)).unwrap();
+        let input = SharedInput::Dot(Arc::clone(&x), Arc::clone(&y));
+        let want = asy.service().submit(&input.view()).unwrap();
+        // The miss computes the right answer, then the armed trigger flips
+        // the memoized bits behind it.
+        let miss = asy.submit_handles(a.handle, b.handle).unwrap().wait().unwrap();
+        assert_eq!(miss.value.to_bits(), want.value.to_bits());
+        assert_eq!(injector.fired(FaultSite::CachePoison), 1);
+        // The next submit samples the poisoned hit: the bit-compare fails,
+        // the entry is evicted, and the request recomputes — the corrupt
+        // value is never delivered.
+        let recomputed = asy.submit_handles(a.handle, b.handle).unwrap().wait().unwrap();
+        assert_eq!(
+            recomputed.value.to_bits(),
+            want.value.to_bits(),
+            "a poisoned entry must never reach a caller"
+        );
+        let cs = asy.cache_stats();
+        assert_eq!(cs.poisoned, 1, "the poisoned entry was detected exactly once");
+        assert_eq!(cs.hits + cs.misses, cs.lookups, "accounting partition");
+        // The re-memoized entry now verifies clean.
+        let clean = asy.submit_handles(a.handle, b.handle).unwrap().wait().unwrap();
+        assert_eq!(clean.value.to_bits(), want.value.to_bits());
+        assert!(asy.cache_stats().verified >= 1);
+    }
+
+    #[test]
+    fn corrupted_operand_is_quarantined_typed_and_recovers_on_reregister() {
+        use super::super::faults::FaultPlan;
+        let plan = FaultPlan::none().with(FaultSite::StoreBitFlip, 1);
+        let injector = crate::serve::faults::FaultInjector::new(plan);
+        let asy = AsyncDotService::new_with_faults(
+            cfg(2, 1000),
+            AsyncOptions::default(),
+            Some(Arc::clone(&injector)),
+        )
+        .unwrap();
+        asy.store().set_verify_on_lookup(true);
+        let x = aligned_vec(500, 81);
+        let y = aligned_vec(500, 82);
+        let a = asy.register_operand(Arc::clone(&x)).unwrap();
+        let b = asy.register_operand(Arc::clone(&y)).unwrap();
+        // The armed trigger flips a bit in operand `a` at resolution; the
+        // verified lookup must detect it and fail typed.
+        match asy.submit_handles(a.handle, b.handle).unwrap_err() {
+            BackendError::CorruptOperand { handle } => assert_eq!(handle, a.handle),
+            other => panic!("expected CorruptOperand, got {other:?}"),
+        }
+        assert_eq!(injector.fired(FaultSite::StoreBitFlip), 1);
+        assert_eq!(asy.store_stats().scrub_quarantined, 1);
+        // The quarantined handle is gone — subsequent submits see the
+        // unknown-handle error, never the corrupt bytes.
+        assert!(matches!(
+            asy.submit_handles(a.handle, b.handle),
+            Err(BackendError::UnknownHandle { .. })
+        ));
+        // Re-registering the clean contents recovers the same handle and
+        // the request completes bit-identically to the sync path.
+        let re = asy.register_operand(Arc::clone(&x)).unwrap();
+        assert_eq!(re.handle, a.handle);
+        let input = SharedInput::Dot(Arc::clone(&x), Arc::clone(&y));
+        let want = asy.service().submit(&input.view()).unwrap();
+        let got = asy.submit_handles(re.handle, b.handle).unwrap().wait().unwrap();
+        assert_eq!(got.value.to_bits(), want.value.to_bits());
+    }
+
+    #[test]
+    fn err_bound_is_present_exactly_when_requested_and_certifies_the_value() {
+        let asy = AsyncDotService::new(cfg(2, 1000), AsyncOptions::default()).unwrap();
+        let input = shared_dot(900, 95);
+        let want = asy.service().err_bound_for(&input.view());
+        // Opt-in: the bound rides the response.
+        let with = asy
+            .submit_with_opts(input.clone(), Instant::now(), None, 0, true)
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(with.err_bound, Some(want), "bound matches the service's");
+        assert!(want > 0.0 && want.is_finite());
+        // Default: absent, leaving the response identical to the old shape.
+        let without = asy
+            .submit_with_opts(input.clone(), Instant::now(), None, 0, false)
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(without.err_bound, None);
+        assert_eq!(with.value.to_bits(), without.value.to_bits());
+
+        // Handle path: both the computing miss and the cache hit certify.
+        let x = aligned_vec(400, 96);
+        let y = aligned_vec(400, 97);
+        let a = asy.register_operand(Arc::clone(&x)).unwrap();
+        let b = asy.register_operand(Arc::clone(&y)).unwrap();
+        let miss = asy
+            .submit_handles_with_opts(a.handle, b.handle, Instant::now(), None, 0, true)
+            .unwrap()
+            .wait()
+            .unwrap();
+        let hit = asy
+            .submit_handles_with_opts(a.handle, b.handle, Instant::now(), None, 0, true)
+            .unwrap()
+            .wait()
+            .unwrap();
+        let handle_input = SharedInput::Dot(x, y);
+        let hb = asy.service().err_bound_for(&handle_input.view());
+        assert_eq!(miss.err_bound, Some(hb));
+        assert_eq!(hit.err_bound, Some(hb), "a hit certifies like a miss");
+        assert!(hb > 0.0 && hb.is_finite());
     }
 }

@@ -48,6 +48,7 @@
 //! `BENCH_serving.json`.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::runtime::arena::AlignedVec;
@@ -273,6 +274,28 @@ pub struct StoreStats {
     pub lookups: u64,
     /// Lookups that found no resident entry (UNKNOWN_HANDLE on the wire).
     pub lookup_misses: u64,
+    /// Digest re-checks that matched the registration digest — on-demand
+    /// ([`OperandStore::verify`]) and background ([`OperandStore::scrub_all`])
+    /// scrubs alike.
+    pub scrub_verified: u64,
+    /// Entries quarantined on digest mismatch: removed from the map, never
+    /// served again (wire CORRUPT_OPERAND). Outstanding reader `Arc`s keep
+    /// the old buffer alive, exactly as for release.
+    pub scrub_quarantined: u64,
+    /// Full [`OperandStore::scrub_all`] sweeps completed.
+    pub scrub_passes: u64,
+}
+
+/// What a digest re-check observed ([`OperandStore::verify`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScrubOutcome {
+    /// The resident bytes still hash to the registration digest.
+    Clean,
+    /// The bytes no longer match: the entry was removed (quarantined) and
+    /// will never be served. The wire CORRUPT_OPERAND condition.
+    Quarantined,
+    /// The handle was not resident (nothing to check).
+    Absent,
 }
 
 struct StoreEntry {
@@ -292,6 +315,9 @@ struct StoreInner {
     evictions: u64,
     lookups: u64,
     lookup_misses: u64,
+    scrub_verified: u64,
+    scrub_quarantined: u64,
+    scrub_passes: u64,
 }
 
 /// The arena-backed resident operand store (module docs). Thread-safe:
@@ -300,6 +326,12 @@ struct StoreInner {
 /// is computed *outside* the lock.
 pub struct OperandStore {
     capacity_bytes: usize,
+    /// When set, every handle resolution re-hashes the resident bytes
+    /// against the registration digest before serving them (the on-demand
+    /// scrub, [`OperandStore::lookup_verified`]). Off by default: the
+    /// verify-off path is bit- and counter-identical to a store without
+    /// the scrubber.
+    verify_on_lookup: AtomicBool,
     inner: Mutex<StoreInner>,
 }
 
@@ -314,6 +346,7 @@ impl OperandStore {
     pub fn new(capacity_bytes: usize) -> Self {
         Self {
             capacity_bytes: capacity_bytes.max(64),
+            verify_on_lookup: AtomicBool::new(false),
             inner: Mutex::new(StoreInner {
                 entries: HashMap::new(),
                 resident_bytes: 0,
@@ -324,6 +357,9 @@ impl OperandStore {
                 evictions: 0,
                 lookups: 0,
                 lookup_misses: 0,
+                scrub_verified: 0,
+                scrub_quarantined: 0,
+                scrub_passes: 0,
             }),
         }
     }
@@ -443,6 +479,112 @@ impl OperandStore {
         self.lock().entries.contains_key(&handle)
     }
 
+    /// Enable or disable the on-demand scrub performed by
+    /// [`OperandStore::lookup_verified`]. Runtime-togglable so a server
+    /// can turn verification on under suspicion without a restart.
+    pub fn set_verify_on_lookup(&self, on: bool) {
+        self.verify_on_lookup.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether lookups currently re-verify the resident bytes.
+    pub fn verify_on_lookup(&self) -> bool {
+        self.verify_on_lookup.load(Ordering::Relaxed)
+    }
+
+    /// Re-hash one resident operand against its registration digest. The
+    /// SHA-256 pass runs *outside* the lock (an `Arc` clone pins the
+    /// buffer), so scrubbing a large operand never stalls registration or
+    /// lookup; the verdict is applied under the lock only if the entry
+    /// still holds the same buffer, else the check re-runs. A mismatch
+    /// quarantines: the entry is removed from the map — never served
+    /// again, the wire CORRUPT_OPERAND condition — while outstanding
+    /// reader `Arc`s keep the old buffer alive exactly as for release.
+    /// Scrubs never bump LRU stamps: verification must not perturb
+    /// eviction order.
+    pub fn verify(&self, handle: u64) -> ScrubOutcome {
+        loop {
+            let (data, digest) = {
+                let s = self.lock();
+                match s.entries.get(&handle) {
+                    Some(entry) => (Arc::clone(&entry.data), entry.digest),
+                    None => return ScrubOutcome::Absent,
+                }
+            };
+            let clean = operand_digest(&data) == digest;
+            let mut s = self.lock();
+            match s.entries.get(&handle) {
+                Some(entry) if Arc::ptr_eq(&entry.data, &data) => {
+                    if clean {
+                        s.scrub_verified += 1;
+                        return ScrubOutcome::Clean;
+                    }
+                    let gone = s.entries.remove(&handle).expect("checked resident");
+                    s.resident_bytes -= 8 * gone.data.len();
+                    s.scrub_quarantined += 1;
+                    return ScrubOutcome::Quarantined;
+                }
+                // The buffer was swapped while the hash ran (re-register
+                // after release, or a chaos corruption): the verdict is
+                // stale — verify the current buffer instead.
+                Some(_) => continue,
+                None => return ScrubOutcome::Absent,
+            }
+        }
+    }
+
+    /// One background scrub pass: verify every resident handle, returning
+    /// `(clean, quarantined)` counts. Entries released or evicted while
+    /// the pass runs are simply skipped. Bumps `scrub_passes`.
+    pub fn scrub_all(&self) -> (u64, u64) {
+        let handles: Vec<u64> = self.lock().entries.keys().copied().collect();
+        let mut clean = 0u64;
+        let mut quarantined = 0u64;
+        for handle in handles {
+            match self.verify(handle) {
+                ScrubOutcome::Clean => clean += 1,
+                ScrubOutcome::Quarantined => quarantined += 1,
+                ScrubOutcome::Absent => {}
+            }
+        }
+        self.lock().scrub_passes += 1;
+        (clean, quarantined)
+    }
+
+    /// Resolve a handle with the on-demand scrub applied when enabled
+    /// ([`OperandStore::set_verify_on_lookup`]): `Err(handle)` means the
+    /// resident bytes failed verification and the entry was quarantined —
+    /// the wire CORRUPT_OPERAND condition; `Ok(None)` is the ordinary
+    /// UNKNOWN_HANDLE miss. With verification disabled this is exactly
+    /// [`OperandStore::lookup`]. A quarantined resolution counts as
+    /// neither lookup nor miss: it is a third, separately-counted outcome
+    /// (`scrub_quarantined`).
+    pub fn lookup_verified(&self, handle: u64) -> Result<Option<Arc<AlignedVec>>, u64> {
+        if self.verify_on_lookup() && self.verify(handle) == ScrubOutcome::Quarantined {
+            return Err(handle);
+        }
+        Ok(self.lookup(handle))
+    }
+
+    /// Chaos hook (`store_bit_flip` fault site): replace a resident
+    /// operand's buffer with a copy whose first element has its low
+    /// mantissa bit flipped, leaving the registration digest untouched —
+    /// the next scrub of this handle *must* quarantine it. Readers that
+    /// resolved before the flip keep their clean snapshot (their `Arc`
+    /// points at the original buffer). Returns whether the handle was
+    /// resident and non-empty.
+    pub fn corrupt_resident(&self, handle: u64) -> bool {
+        let mut s = self.lock();
+        match s.entries.get_mut(&handle) {
+            Some(entry) if !entry.data.is_empty() => {
+                let mut flipped: Vec<f64> = entry.data.iter().copied().collect();
+                flipped[0] = f64::from_bits(flipped[0].to_bits() ^ 1);
+                entry.data = Arc::new(AlignedVec::copy_from(&flipped));
+                true
+            }
+            _ => false,
+        }
+    }
+
     /// Counter + residency snapshot.
     pub fn stats(&self) -> StoreStats {
         let s = self.lock();
@@ -455,6 +597,9 @@ impl OperandStore {
             evictions: s.evictions,
             lookups: s.lookups,
             lookup_misses: s.lookup_misses,
+            scrub_verified: s.scrub_verified,
+            scrub_quarantined: s.scrub_quarantined,
+            scrub_passes: s.scrub_passes,
         }
     }
 }
@@ -508,6 +653,14 @@ pub struct CacheStats {
     pub insertions: u64,
     /// Entries removed by capacity-pressure LRU eviction.
     pub evictions: u64,
+    /// Sampled hits whose recomputation bit-matched the memoized value
+    /// (the verify-on-hit policy, `ServeConfig::verify_hit_rate`).
+    pub verified: u64,
+    /// Sampled hits whose recomputation *disagreed*: the entry was
+    /// evicted via [`ResultCache::evict_poisoned`] and the request fell
+    /// through to recompute. Not counted under `evictions` (which tracks
+    /// capacity pressure only).
+    pub poisoned: u64,
 }
 
 struct CacheEntry {
@@ -523,6 +676,8 @@ struct CacheInner {
     misses: u64,
     insertions: u64,
     evictions: u64,
+    verified: u64,
+    poisoned: u64,
 }
 
 /// The content-addressed result cache (module docs), keyed by the ordered
@@ -552,6 +707,8 @@ impl ResultCache {
                 misses: 0,
                 insertions: 0,
                 evictions: 0,
+                verified: 0,
+                poisoned: 0,
             }),
         }
     }
@@ -621,6 +778,43 @@ impl ResultCache {
         }
     }
 
+    /// Record one verify-on-hit sample whose recomputation bit-matched
+    /// the memoized value.
+    pub fn note_verified(&self) {
+        self.lock().verified += 1;
+    }
+
+    /// Evict an entry whose verify-on-hit recomputation disagreed with
+    /// the memoized bits. Counts under `poisoned`, not `evictions` (which
+    /// tracks capacity pressure only). Returns whether the key was
+    /// present. The hit that exposed the poisoning was already counted as
+    /// a hit; the caller falls through to recompute, so the partition
+    /// `hits + misses == lookups` is preserved.
+    pub fn evict_poisoned(&self, key: (u64, u64)) -> bool {
+        let mut s = self.lock();
+        if s.map.remove(&key).is_some() {
+            s.poisoned += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Chaos hook (`cache_poison` fault site): flip the low bit of a
+    /// memoized result's IEEE-754 pattern in place, so the next sampled
+    /// hit on this key *must* fail its bit-compare. Returns whether the
+    /// key was present.
+    pub fn poison(&self, key: (u64, u64)) -> bool {
+        let mut s = self.lock();
+        match s.map.get_mut(&key) {
+            Some(entry) => {
+                entry.result.bits ^= 1;
+                true
+            }
+            None => false,
+        }
+    }
+
     /// Counter + occupancy snapshot.
     pub fn stats(&self) -> CacheStats {
         let s = self.lock();
@@ -632,6 +826,8 @@ impl ResultCache {
             misses: s.misses,
             insertions: s.insertions,
             evictions: s.evictions,
+            verified: s.verified,
+            poisoned: s.poisoned,
         }
     }
 }
@@ -844,5 +1040,120 @@ mod tests {
         cache.insert((1, 1), r);
         assert_eq!(cache.stats().insertions, 1);
         assert_eq!(cache.stats().entries, 1);
+    }
+
+    #[test]
+    fn verify_counts_clean_entries_without_disturbing_them() {
+        let store = OperandStore::new(1 << 20);
+        let out = store.register(aligned(&[1.0, 2.0, 3.0])).unwrap();
+        assert_eq!(store.verify(out.handle), ScrubOutcome::Clean);
+        assert_eq!(store.verify(0xDEAD_BEEF), ScrubOutcome::Absent);
+        assert!(store.contains(out.handle), "clean entry stays resident");
+        let stats = store.stats();
+        assert_eq!(stats.scrub_verified, 1);
+        assert_eq!(stats.scrub_quarantined, 0);
+        // Scrubs don't count as lookups and don't bump LRU.
+        assert_eq!(stats.lookups, 0);
+    }
+
+    #[test]
+    fn corrupted_entry_is_quarantined_and_never_served_again() {
+        let store = OperandStore::new(1 << 20);
+        let out = store.register(aligned(&[4.0, 5.0, 6.0])).unwrap();
+        assert!(store.corrupt_resident(out.handle));
+        assert_eq!(store.verify(out.handle), ScrubOutcome::Quarantined);
+        assert!(!store.contains(out.handle), "quarantine removes the entry");
+        assert!(store.lookup(out.handle).is_none());
+        let stats = store.stats();
+        assert_eq!(stats.scrub_quarantined, 1);
+        assert_eq!(stats.entries, 0);
+        assert_eq!(stats.resident_bytes, 0);
+        // Re-registering the clean contents recovers the handle.
+        let again = store.register(aligned(&[4.0, 5.0, 6.0])).unwrap();
+        assert!(again.fresh);
+        assert_eq!(again.handle, out.handle);
+        assert_eq!(store.verify(out.handle), ScrubOutcome::Clean);
+    }
+
+    #[test]
+    fn quarantined_operand_stays_alive_through_an_in_flight_reader() {
+        // The quarantine analogue of the RELEASE-under-reader pin: a
+        // request that resolved the handle before the corruption keeps
+        // its own clean snapshot through the Arc, and quarantine (a map
+        // removal) cannot free it or swap corrupted bytes under it.
+        let store = OperandStore::new(1 << 20);
+        let values: Vec<f64> = (0..1000).map(|i| i as f64 * 0.25).collect();
+        let out = store.register(aligned(&values)).unwrap();
+        let held = store.lookup(out.handle).expect("resident");
+        assert!(store.corrupt_resident(out.handle));
+        assert_eq!(store.verify(out.handle), ScrubOutcome::Quarantined);
+        for (i, v) in held.iter().enumerate() {
+            assert_eq!(
+                v.to_bits(),
+                (i as f64 * 0.25).to_bits(),
+                "reader snapshot stays bit-clean at index {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn scrub_all_quarantines_exactly_the_corrupted_entries() {
+        let store = OperandStore::new(1 << 20);
+        let a = store.register(aligned(&[1.0, 2.0])).unwrap();
+        let b = store.register(aligned(&[3.0, 4.0])).unwrap();
+        let c = store.register(aligned(&[5.0, 6.0])).unwrap();
+        assert!(store.corrupt_resident(b.handle));
+        let (clean, quarantined) = store.scrub_all();
+        assert_eq!((clean, quarantined), (2, 1));
+        assert!(store.contains(a.handle));
+        assert!(!store.contains(b.handle));
+        assert!(store.contains(c.handle));
+        let stats = store.stats();
+        assert_eq!(stats.scrub_passes, 1);
+        assert_eq!(stats.scrub_verified, 2);
+        assert_eq!(stats.scrub_quarantined, 1);
+        assert_eq!(stats.resident_bytes, 32);
+    }
+
+    #[test]
+    fn lookup_verified_gates_on_the_toggle() {
+        let store = OperandStore::new(1 << 20);
+        let out = store.register(aligned(&[7.0, 8.0])).unwrap();
+        assert!(store.corrupt_resident(out.handle));
+        // Verification off: the corrupted bytes are served (the PR-9
+        // behavior, bit-for-bit — no hashing on the lookup path).
+        assert!(!store.verify_on_lookup());
+        let served = store.lookup_verified(out.handle).unwrap().unwrap();
+        assert_eq!(served[0].to_bits(), 7.0f64.to_bits() ^ 1);
+        // Verification on: the scrub detects, quarantines, and refuses.
+        store.set_verify_on_lookup(true);
+        assert_eq!(store.lookup_verified(out.handle), Err(out.handle));
+        // The quarantined handle is now an ordinary unknown-handle miss.
+        assert_eq!(store.lookup_verified(out.handle), Ok(None));
+    }
+
+    #[test]
+    fn cache_poison_is_detected_by_bit_compare_and_evicted() {
+        let cache = ResultCache::new(8);
+        let r = CachedResult {
+            bits: 0x4026_0000_0000_0000,
+            n: 2,
+            path: ExecPath::Fused,
+        };
+        cache.insert((1, 2), r);
+        assert!(cache.poison((1, 2)));
+        assert!(!cache.poison((9, 9)), "absent key cannot be poisoned");
+        let hit = cache.get((1, 2)).expect("still memoized");
+        assert_eq!(hit.bits, r.bits ^ 1, "poison flipped the low bit");
+        // The verify-on-hit policy recomputes, sees the mismatch, evicts.
+        assert!(cache.evict_poisoned((1, 2)));
+        assert!(!cache.evict_poisoned((1, 2)), "second evict finds nothing");
+        assert!(cache.get((1, 2)).is_none());
+        cache.note_verified();
+        let stats = cache.stats();
+        assert_eq!(stats.poisoned, 1);
+        assert_eq!(stats.verified, 1);
+        assert_eq!(stats.evictions, 0, "poison eviction is not LRU pressure");
+        assert_eq!(stats.hits + stats.misses, stats.lookups);
     }
 }

@@ -233,6 +233,7 @@ fn serving_layer_end_to_end() {
         compensated: true,
         shard_threshold: ThresholdMode::Fixed(4096),
         freq_ghz: 3.0,
+        verify_hit_rate: 0.0,
     })
     .unwrap();
     let mix = vec![
@@ -259,6 +260,7 @@ fn serving_layer_end_to_end() {
             compensated: true,
             shard_threshold: ThresholdMode::Fixed(4096),
             freq_ghz: 3.0,
+            verify_hit_rate: 0.0,
         },
         AsyncOptions::default(),
     )
@@ -293,6 +295,7 @@ fn wire_front_end_loopback_bit_parity() {
         compensated: true,
         shard_threshold: ThresholdMode::Fixed(1000),
         freq_ghz: 3.0,
+        verify_hit_rate: 0.0,
     };
     let server = NetServer::bind("127.0.0.1:0", cfg.clone(), AsyncOptions::default()).unwrap();
     let reference = DotService::new(cfg).unwrap();
@@ -352,6 +355,7 @@ fn wire_front_end_rejects_garbage() {
         compensated: true,
         shard_threshold: ThresholdMode::Fixed(100),
         freq_ghz: 3.0,
+        verify_hit_rate: 0.0,
     };
     let server = NetServer::bind("127.0.0.1:0", cfg, AsyncOptions::default()).unwrap();
 
@@ -429,6 +433,7 @@ fn wire_loadgen_checksum_parity() {
         compensated: true,
         shard_threshold: ThresholdMode::Fixed(1024),
         freq_ghz: 3.0,
+        verify_hit_rate: 0.0,
     };
     let mix = vec![
         MixEntry { n: 128, weight: 0.75 },
@@ -488,6 +493,7 @@ fn wire_socket_faults_kill_one_connection_not_the_server() {
         compensated: true,
         shard_threshold: ThresholdMode::Fixed(1024),
         freq_ghz: 3.0,
+        verify_hit_rate: 0.0,
     };
     let reference = DotService::new(cfg.clone()).unwrap();
     let x: Vec<f64> = (0..512).map(|i| 0.25 + (i as f64) * 1e-3).collect();
@@ -577,6 +583,7 @@ fn wire_batch_deadline_shed_is_typed_and_nonfatal() {
         compensated: true,
         shard_threshold: ThresholdMode::Fixed(1024),
         freq_ghz: 3.0,
+        verify_hit_rate: 0.0,
     };
     let server = NetServer::bind("127.0.0.1:0", cfg.clone(), AsyncOptions::default()).unwrap();
     let reference = DotService::new(cfg).unwrap();
@@ -623,6 +630,7 @@ fn wire_tenants_are_scheduled_fairly_and_accounted_exactly_once() {
         compensated: true,
         shard_threshold: ThresholdMode::Fixed(1024),
         freq_ghz: 3.0,
+        verify_hit_rate: 0.0,
     };
     let net = NetOptions {
         qos: Some(QosPolicy::parse("gold:3:64,bronze:1:64,blocked:1:0").unwrap()),
@@ -694,6 +702,7 @@ fn wire_operand_store_round_trip_under_tenant_qos() {
         compensated: true,
         shard_threshold: ThresholdMode::Fixed(1024),
         freq_ghz: 3.0,
+        verify_hit_rate: 0.0,
     };
     let net = NetOptions {
         qos: Some(QosPolicy::parse("gold:3:64,bronze:1:64").unwrap()),
@@ -749,7 +758,7 @@ fn wire_operand_store_round_trip_under_tenant_qos() {
     // Hit pass (bronze, tenant 1): served from the result cache,
     // bit-identical across the socket — including the path byte.
     for (w, &(a, b)) in want.iter().zip(&handles) {
-        let meta = RequestMeta { deadline_us: None, tenant: Some(1), cache: false };
+        let meta = RequestMeta { tenant: Some(1), ..RequestMeta::default() };
         let hit = bronze.dot_handles_with_meta(a, b, meta).unwrap();
         assert_eq!(hit.value.to_bits(), w.value.to_bits(), "cached bits replay exactly");
         assert_eq!(hit.path, w.path, "the execution path replays too");
@@ -858,6 +867,7 @@ fn wire_loadgen_watchdog_fails_fast_on_a_wedged_server() {
         compensated: true,
         shard_threshold: ThresholdMode::Fixed(4096),
         freq_ghz: 3.0,
+        verify_hit_rate: 0.0,
     };
     let mix = vec![MixEntry { n: 256, weight: 1.0 }];
     let pool_owner = DotService::new(cfg).unwrap();

@@ -619,6 +619,7 @@ fn serving_batched_equals_unbatched_bits() {
             compensated: g.bool(),
             shard_threshold: ThresholdMode::Fixed(threshold),
             freq_ghz: 3.0,
+            verify_hit_rate: 0.0,
         })
         .unwrap();
         let k = g.usize(1, 8);
@@ -672,6 +673,7 @@ fn serving_sharded_matches_parallel_backend_bits() {
             compensated,
             shard_threshold: ThresholdMode::Fixed(0), // shard everything
             freq_ghz: 3.0,
+            verify_hit_rate: 0.0,
         })
         .unwrap();
         let backend = ParallelBackend::new(threads);
@@ -699,6 +701,7 @@ fn serving_crossover_boundary_exact() {
             compensated: true,
             shard_threshold: ThresholdMode::Fixed(threshold),
             freq_ghz: 3.0,
+            verify_hit_rate: 0.0,
         })
         .unwrap();
         let x = g.vec_f64_log(threshold, -10, 10);
@@ -735,6 +738,7 @@ fn serving_deterministic_across_fresh_services() {
         compensated: true,
         shard_threshold: ThresholdMode::Fixed(512),
         freq_ghz: 3.0,
+        verify_hit_rate: 0.0,
     };
     let a = DotService::new(cfg()).unwrap().submit_batch(&inputs).unwrap();
     let b = DotService::new(cfg()).unwrap().submit_batch(&inputs).unwrap();
@@ -756,6 +760,7 @@ fn serve_cfg(threads: usize, threshold: usize) -> ServeConfig {
         compensated: true,
         shard_threshold: ThresholdMode::Fixed(threshold),
         freq_ghz: 3.0,
+        verify_hit_rate: 0.0,
     }
 }
 
@@ -1014,6 +1019,7 @@ fn wire_codec_round_trips_bit_exact() {
             value: if n > 0 { x[0] } else { -0.0 },
             n: n as u64,
             path: if g.bool() { ExecPath::Fused } else { ExecPath::Sharded },
+            err_bound: None,
         };
         let (op, rid, payload) = split(&codec::encode_result(id, &result));
         assert_eq!(rid, id);
@@ -1025,12 +1031,36 @@ fn wire_codec_round_trips_bit_exact() {
             other => panic!("expected a result, got {other:?}"),
         }
 
+        // Scalar result with the revision-1.4 FLAG_ERRBOUND extension
+        // (PROTOCOL.md §3.5): the certified bound survives bit-exactly and
+        // the flag is set on the wire.
+        let bounded = WireResult {
+            err_bound: Some(g.f64_range(0.0, 1e-6)),
+            ..result
+        };
+        let bframe = codec::encode_result(id, &bounded);
+        assert_ne!(bframe[6] & 0x20, 0, "FLAG_ERRBOUND must be set");
+        let flags = bframe[6];
+        let (op, rid, payload) = split(&bframe);
+        assert_eq!(rid, id);
+        match codec::decode_response_flagged(flags, op, &payload).unwrap() {
+            Response::Result(r) => {
+                assert_eq!(r.value.to_bits(), bounded.value.to_bits());
+                assert_eq!(
+                    r.err_bound.map(f64::to_bits),
+                    bounded.err_bound.map(f64::to_bits)
+                );
+            }
+            other => panic!("expected a bounded result, got {other:?}"),
+        }
+
         // Batch result (PROTOCOL.md §3.6) in submission order.
         let results: Vec<WireResult> = (0..count)
             .map(|i| WireResult {
                 value: if n > 0 { x[i % n.max(1)] } else { 0.0 },
                 n: i as u64,
                 path: if i % 2 == 0 { ExecPath::Fused } else { ExecPath::Sharded },
+                err_bound: None,
             })
             .collect();
         let (op, _, payload) = split(&codec::encode_batch_result(id, &results));
@@ -1075,6 +1105,8 @@ fn wire_codec_round_trips_bit_exact() {
             ErrorCode::Internal,
             ErrorCode::Deadline,
             ErrorCode::Quota,
+            ErrorCode::CorruptFrame,
+            ErrorCode::CorruptOperand,
         ]);
         let (op, _, payload) = split(&codec::encode_error(id, code, "synthetic diagnostic"));
         match codec::decode_response(op, &payload).unwrap() {
@@ -1161,11 +1193,29 @@ fn wire_codec_rejects_hostile_frames_without_panic() {
         // The assigned flag bits are accepted (§2.4) — singly and
         // combined — while unknown bits and a non-zero reserved byte are
         // each non-fatal Malformed.
-        assert_eq!(head(&|h| h[6] = codec::FLAG_DEADLINE).unwrap().flags, codec::FLAG_DEADLINE);
-        assert_eq!(head(&|h| h[6] = codec::FLAG_TENANT).unwrap().flags, codec::FLAG_TENANT);
+        for flag in [
+            codec::FLAG_DEADLINE,
+            codec::FLAG_TENANT,
+            codec::FLAG_RETRY,
+            codec::FLAG_CACHE,
+            codec::FLAG_CRC,
+            codec::FLAG_ERRBOUND,
+            codec::FLAG_SCRUB,
+        ] {
+            assert_eq!(head(&|h| h[6] = flag).unwrap().flags, flag);
+        }
         let both = codec::FLAG_DEADLINE | codec::FLAG_TENANT;
         assert_eq!(head(&|h| h[6] = both).unwrap().flags, both);
-        assert_eq!(head(&|h| h[6] = 0x08).unwrap_err().code, ErrorCode::Malformed);
+        let all = codec::FLAG_DEADLINE
+            | codec::FLAG_TENANT
+            | codec::FLAG_RETRY
+            | codec::FLAG_CACHE
+            | codec::FLAG_CRC
+            | codec::FLAG_ERRBOUND
+            | codec::FLAG_SCRUB;
+        assert_eq!(head(&|h| h[6] = all).unwrap().flags, all);
+        // 0x80 is the first genuinely unassigned bit in revision 1.4.
+        assert_eq!(head(&|h| h[6] = 0x80).unwrap_err().code, ErrorCode::Malformed);
         assert_eq!(head(&|h| h[7] = 1).unwrap_err().code, ErrorCode::Malformed);
         // Magic outranks version: both wrong reports BadMagic first.
         assert_eq!(
@@ -1176,6 +1226,48 @@ fn wire_codec_rejects_hostile_frames_without_panic() {
             .unwrap_err()
             .code,
             ErrorCode::BadMagic
+        );
+
+        // Revision-1.4 CRC trailer (§2.6). An intact sealed frame
+        // verifies, strips back to the original payload bytes, and still
+        // decodes; the reference check value pins the polynomial.
+        assert_eq!(codec::crc32c(b"123456789"), 0xE306_9283, "CRC32C check value");
+        let plain = codec::encode_batch(9, &[SharedInput::dot(&x, &y), SharedInput::sum(&y)]);
+        let mut sealed = plain.clone();
+        codec::seal_crc(&mut sealed);
+        assert_eq!(sealed.len(), plain.len() + codec::CRC_TRAILER_LEN);
+        let shead: [u8; HEADER_LEN] = sealed[..HEADER_LEN].try_into().unwrap();
+        let sflags = shead[6];
+        assert_ne!(sflags & codec::FLAG_CRC, 0);
+        let body = codec::verify_crc(&shead, sflags, &sealed[HEADER_LEN..]).unwrap();
+        assert_eq!(body, &plain[HEADER_LEN..]);
+        codec::decode_request(Opcode::Batch, body).unwrap();
+        // Every single-bit flip in the sealed payload — body or trailer —
+        // is the typed non-fatal CorruptFrame, never a panic or a wrong
+        // decode.
+        for i in HEADER_LEN..sealed.len() {
+            let mut bent = sealed.clone();
+            bent[i] ^= 1 << g.usize(0, 7);
+            let err = codec::verify_crc(&shead, sflags, &bent[HEADER_LEN..]).unwrap_err();
+            assert_eq!(err.code, ErrorCode::CorruptFrame, "flip at byte {i}");
+        }
+        // A flagged payload shorter than its own trailer is CorruptFrame
+        // (length check), and losing the final byte is CorruptFrame
+        // (checksum mismatch) — truncation never slips through.
+        for cut in 0..codec::CRC_TRAILER_LEN {
+            let err = codec::verify_crc(&shead, sflags, &sealed[HEADER_LEN..HEADER_LEN + cut])
+                .unwrap_err();
+            assert_eq!(err.code, ErrorCode::CorruptFrame, "trailer cut to {cut}");
+        }
+        let err = codec::verify_crc(&shead, sflags, &sealed[HEADER_LEN..sealed.len() - 1])
+            .unwrap_err();
+        assert_eq!(err.code, ErrorCode::CorruptFrame);
+        // Without the flag the verifier is a strict pass-through — the
+        // revision-1.0 byte stream is untouched (CRC-off parity).
+        let unflagged: [u8; HEADER_LEN] = plain[..HEADER_LEN].try_into().unwrap();
+        assert_eq!(
+            codec::verify_crc(&unflagged, unflagged[6], &plain[HEADER_LEN..]).unwrap(),
+            &plain[HEADER_LEN..]
         );
 
         // A response opcode sent as a request (and vice versa) is a
@@ -1233,7 +1325,7 @@ fn fault_matrix_every_in_process_site_resolves_exactly_once() {
         let mut shed = 0usize;
         let mut handles = Vec::new();
         for k in 0..total {
-            match asy.submit_with_opts(input.clone(), Instant::now(), None, (k % 2) as u32) {
+            match asy.submit_with_opts(input.clone(), Instant::now(), None, (k % 2) as u32, false) {
                 Ok(h) => handles.push(h),
                 Err(BackendError::QuotaExceeded { .. }) => shed += 1,
                 Err(other) => panic!("{site:?}: unexpected submit error: {other}"),
@@ -1489,7 +1581,7 @@ fn quota_accounting_never_double_counts_a_shed_request() {
         let (mut accepted, mut qshed, mut busy) = (Vec::new(), 0u64, 0u64);
         for _ in 0..offered {
             match asy
-                .try_submit_with_opts(input.clone(), Instant::now(), None, 0)
+                .try_submit_with_opts(input.clone(), Instant::now(), None, 0, false)
                 .unwrap()
             {
                 TrySubmit::Accepted(h) => accepted.push(h),
@@ -1701,5 +1793,113 @@ fn released_handles_reregister_collision_free() {
         assert_eq!(replay.value.to_bits(), first.value.to_bits());
         assert_eq!(replay.path, first.path);
         assert_eq!(asy.cache_stats().hits, hits_before + 1, "served from the cache");
+    });
+}
+
+/// The certified per-request error bound (revision 1.4, `FLAG_ERRBOUND`)
+/// is sound across generator conditionings: the bound an opted-in
+/// request carries dominates the request's true error against the exact
+/// ground truth of `accuracy/exact.rs`, stays within the same
+/// `8·eps·Σ|x·y|` envelope the accuracy tests pin for the compensated
+/// rung, and rides along without touching the value — an opted-out
+/// submit of the same input returns the identical bits with no bound
+/// attached (the pre-rev-1.4 response).
+#[test]
+fn certified_error_bound_is_sound_within_the_paper_envelope() {
+    use std::time::Instant;
+    property("certified error bound envelope", 25, |g| {
+        let n = g.usize(2, 300) * 2 + 4; // even, >= 8
+        let ce = g.f64_range(2.0, 30.0);
+        let mut rng = Rng::new(g.u64(0, u64::MAX - 1));
+        let (x, y, exact) = ill_conditioned_dot(n, 2f64.powf(ce), &mut rng);
+        let cond_sum: f64 = x.iter().zip(&y).map(|(a, b)| (a * b).abs()).sum();
+        let envelope = 8.0 * f64::EPSILON * cond_sum;
+        let asy = AsyncDotService::new(serve_cfg(2, 2048), AsyncOptions::default()).unwrap();
+        let input = SharedInput::dot(&x, &y);
+        let bounded = asy
+            .submit_with_opts(input.clone(), Instant::now(), None, 0, true)
+            .unwrap()
+            .wait()
+            .unwrap();
+        let bound = bounded.err_bound.expect("opted-in requests carry a bound");
+        assert!(bound.is_finite() && bound >= 0.0);
+        assert!(
+            (bounded.value - exact).abs() <= bound,
+            "bound must dominate the true error: err {} > bound {bound} (n = {n}, cond 2^{ce:.1})",
+            (bounded.value - exact).abs()
+        );
+        assert!(
+            bound <= envelope,
+            "bound {bound} outside the 8·eps envelope {envelope} (n = {n}, cond 2^{ce:.1})"
+        );
+        let plain = asy
+            .submit_with_opts(input, Instant::now(), None, 0, false)
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(plain.err_bound, None, "opting out is the pre-rev-1.4 response");
+        assert_eq!(
+            plain.value.to_bits(),
+            bounded.value.to_bits(),
+            "the bound rides along; the served value is untouched"
+        );
+    });
+}
+
+/// Verify-on-hit and on-lookup scrubbing are bit-transparent on a clean
+/// store (the integrity layer's false-positive contract): a service at
+/// `verify_hit_rate` 1 with digest re-checks armed serves exactly the
+/// bits of an unverified service over the same handle workload, the
+/// verified counter equals the hit count (rate 1 samples every hit), no
+/// cache entry is ever poisoned, and no resident operand is ever
+/// quarantined — while the rate-0 service never touches the verifier at
+/// all (the unverified pipeline stays the revision-1.3 fast path).
+#[test]
+fn verified_cache_hits_change_no_bits_on_a_clean_store() {
+    property("verify-on-hit clean parity", 10, |g| {
+        let n = g.usize(8, 900);
+        let pairs: Vec<(Vec<f64>, Vec<f64>)> = (0..3)
+            .map(|_| {
+                (
+                    (0..n).map(|_| g.normal()).collect(),
+                    (0..n).map(|_| g.normal()).collect(),
+                )
+            })
+            .collect();
+        let mut verified_cfg = serve_cfg(2, 2048);
+        verified_cfg.verify_hit_rate = 1.0;
+        let base = AsyncDotService::new(serve_cfg(2, 2048), AsyncOptions::default()).unwrap();
+        let checked = AsyncDotService::new(verified_cfg, AsyncOptions::default()).unwrap();
+        checked.store().set_verify_on_lookup(true);
+        for (x, y) in &pairs {
+            let a0 = base.register_operand(arc_operand(x)).unwrap().handle;
+            let b0 = base.register_operand(arc_operand(y)).unwrap().handle;
+            let a1 = checked.register_operand(arc_operand(x)).unwrap().handle;
+            let b1 = checked.register_operand(arc_operand(y)).unwrap().handle;
+            assert_eq!((a0, b0), (a1, b1), "content-addressed handles agree");
+            for round in 0..3 {
+                let want = base.submit_handles(a0, b0).unwrap().wait().unwrap();
+                let got = checked.submit_handles(a1, b1).unwrap().wait().unwrap();
+                assert_eq!(
+                    got.value.to_bits(),
+                    want.value.to_bits(),
+                    "verification changes no bits (round {round})"
+                );
+                assert_eq!(got.path, want.path);
+            }
+        }
+        let base_cache = base.cache_stats();
+        let cache = checked.cache_stats();
+        assert_eq!(cache.hits, base_cache.hits, "identical workloads, identical hit counts");
+        assert_eq!(cache.verified, cache.hits, "rate 1 samples every hit");
+        assert_eq!(cache.poisoned, 0, "a clean cache never trips the verifier");
+        assert_eq!(base_cache.verified, 0, "rate 0 never invokes the verifier");
+        assert_eq!(base_cache.poisoned, 0);
+        let scrubbed = checked.store().stats();
+        assert!(scrubbed.scrub_verified > 0, "on-lookup scrubbing actually ran");
+        assert_eq!(scrubbed.scrub_quarantined, 0, "no false-positive quarantines");
+        let unscrubbed = base.store().stats();
+        assert_eq!(unscrubbed.scrub_verified, 0, "scrubbing off means no digest re-checks");
+        assert_eq!(unscrubbed.scrub_quarantined, 0);
     });
 }

@@ -82,6 +82,16 @@ assert not any(m.startswith("serving_zipf") for m in METRICS), \
     "zipf accounting must never feed perf verdicts"
 assert rule_for("serving_zipf_speedup") is None
 
+# The integrity block's `serving_integrity_*` entries are excluded too:
+# a corruption-injection run measures detection coverage, not speed — its
+# throughput is dominated by forced recomputation, re-registration, and
+# retry round-trips. Its gates (total_detected == total_injected,
+# delivered_corrupt == 0, a clean control pass with zero false positives
+# and bit-parity) are hard-checked by tools/validate_bench.py.
+assert not any(m.startswith("serving_integrity") for m in METRICS), \
+    "integrity accounting must never feed perf verdicts"
+assert rule_for("serving_integrity_total_injected") is None
+
 
 def load_summary(path):
     try:

@@ -108,7 +108,9 @@ def synth_chaos():
                      "latch_wake_delay": 1, "socket_read_error": 0,
                      "socket_write_error": 0, "truncated_frame": 0,
                      "conn_drop_mid_batch": 0, "slow_client_writer": 0,
-                     "quota_admission_reject": 4, "starvation_stall": 1},
+                     "quota_admission_reject": 4, "starvation_stall": 1,
+                     "store_bit_flip": 0, "frame_crc_corrupt": 0,
+                     "cache_poison": 0},
         "total_injected": 8,
         "recovery": {"verified": True, "latency_ns": 150000.0},
     }
@@ -203,6 +205,37 @@ def synth_zipf():
     }
 
 
+def synth_integrity():
+    """The PR 10 `integrity` block: a 3-pair catalog of n=4096 operands
+    drawn 12 times with one corruption armed at each integrity site —
+    store bit-flip (quarantined on the digest re-check), frame CRC
+    corruption (caught by the client's trailer verification), and
+    result-cache poisoning (caught by verify-on-hit) — every injection
+    detected, every request recovered bit-exactly, and a fault-free
+    control pass with zero detections."""
+    return {
+        "seed": 41,
+        "requests": 12,
+        "catalog": 3,
+        "n": 4096,
+        "injected": {"store_bit_flip": 1, "frame_crc_corrupt": 1,
+                     "cache_poison": 1},
+        "total_injected": 3,
+        "total_detected": 3,
+        "detected": {"corrupt_frames": 1, "corrupt_operands": 1,
+                     "cache_poisoned": 1},
+        "delivered_corrupt": 0,
+        "completed_ok": 12,
+        "reregisters": 1,
+        "retries": 2,
+        "bound_missing": 0,
+        "scrub": {"scrub_verified": 26, "scrub_quarantined": 1,
+                  "scrub_passes": 1, "cache_verified": 8,
+                  "cache_poisoned": 1},
+        "clean": {"requests": 12, "detections": 0, "bit_parity": True},
+    }
+
+
 def wire_row(p99, checksum, fused, sharded, requests):
     row = queue_row(p99, checksum, fused, sharded, requests)
     row["connections"] = 2
@@ -251,6 +284,7 @@ def synth_serving():
         "chaos": synth_chaos(),
         "tenants": synth_tenants(),
         "zipf": synth_zipf(),
+        "integrity": synth_integrity(),
         "async_p99_ok": True,
         "calibration": {
             "measured": {"p1_gups": 1.8, "p1_mflops": 9000.0, "p1_n": 262144,
@@ -575,6 +609,54 @@ def test_validators():
                 mutate(serving, zipf_handles_not_smaller),
                 "zipf handle frames as large as payload resubmission")
 
+    def no_integrity(d):
+        del d["integrity"]
+    expect_ok(validate_bench.validate_serving, mutate(serving, no_integrity),
+              "serving valid without integrity block")
+
+    def integrity_undetected(d):
+        d["integrity"]["total_injected"] += 1
+        d["integrity"]["injected"]["store_bit_flip"] += 1
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, integrity_undetected),
+                "integrity run with an undetected injection")
+
+    def integrity_corrupt_delivered(d):
+        d["integrity"]["delivered_corrupt"] = 1
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, integrity_corrupt_delivered),
+                "integrity run that delivered a corrupt payload")
+
+    def integrity_clean_false_positive(d):
+        d["integrity"]["clean"]["detections"] = 1
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, integrity_clean_false_positive),
+                "integrity clean pass raised a false positive")
+
+    def integrity_clean_parity_broken(d):
+        d["integrity"]["clean"]["bit_parity"] = False
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, integrity_clean_parity_broken),
+                "integrity clean pass diverged bitwise")
+
+    def integrity_bound_missing(d):
+        d["integrity"]["bound_missing"] = 2
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, integrity_bound_missing),
+                "integrity responses missing certified error bounds")
+
+    def integrity_layer_counts_leak(d):
+        d["integrity"]["detected"]["corrupt_frames"] += 1
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, integrity_layer_counts_leak),
+                "integrity per-layer counts != total_detected")
+
+    def integrity_scrub_never_ran(d):
+        d["integrity"]["scrub"]["scrub_verified"] = 0
+    expect_fail(validate_bench.validate_serving,
+                mutate(serving, integrity_scrub_never_ran),
+                "integrity run whose store scrubber never verified")
+
 
 def write_docs(tmp, docs):
     paths = []
@@ -605,7 +687,10 @@ def test_merge_and_summary(tmp):
                 "serving_wire_p99_us", "serving_wire_reqs_per_s",
                 "serving_chaos_total_injected", "serving_chaos_hung",
                 "serving_tenant_a_p99_us", "serving_tenant_b_p99_us",
-                "serving_zipf_speedup", "serving_zipf_cache_hits"):
+                "serving_zipf_speedup", "serving_zipf_cache_hits",
+                "serving_integrity_total_injected",
+                "serving_integrity_total_detected",
+                "serving_integrity_delivered_corrupt"):
         assert key in h, f"missing headline metric {key}: {sorted(h)}"
     # Re-validating the merged document must pass too.
     rc = validate_bench.main([merged])
@@ -631,9 +716,11 @@ def test_compare(tmp, merged):
     compared = {c["metric"] for c in verdict["comparisons"]}
     assert not any(m.startswith("serving_chaos") for m in compared), compared
     assert not any(m.startswith("serving_zipf") for m in compared), compared
+    assert not any(m.startswith("serving_integrity") for m in compared), compared
     assert {"serving_tenant_a_p99_us", "serving_tenant_b_p99_us"} <= compared, \
         compared
-    print("ok  compare identical -> ok (chaos + zipf excluded, tenant tails in)")
+    print("ok  compare identical -> ok (chaos + zipf + integrity excluded, "
+          "tenant tails in)")
 
     # A big serving regression: warn by default, fail under --strict.
     with open(merged) as f:

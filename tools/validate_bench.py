@@ -251,6 +251,75 @@ def validate_zipf_block(zipf):
     assert zipf["speedup"] > 0, zipf["speedup"]
 
 
+def validate_integrity_block(integrity):
+    """The optional `integrity` block (PR 10 schema): a seeded
+    corruption-injection run through the full wire stack — store bit-flips,
+    frame CRC corruption, and result-cache poisoning — plus a fault-free
+    control pass at the same verification posture. Structural hard gates,
+    never perf (tools/compare_bench.py ignores every serving_integrity_*
+    headline):
+
+    * detection completeness — every injected corruption is detected by
+      exactly one layer (`total_detected == total_injected`);
+    * zero corrupt deliveries — no response value ever diverged bitwise
+      from the reference computation (`delivered_corrupt == 0`);
+    * certified bounds — every opted-in response carried its error bound
+      (`bound_missing == 0`);
+    * zero false positives — the clean control pass detected nothing and
+      stayed bit-identical to the reference (`clean.detections == 0`,
+      `clean.bit_parity` true).
+    """
+    requests = integrity["requests"]
+    assert requests >= 1, requests
+    assert integrity["catalog"] >= 2, integrity["catalog"]
+    assert integrity["n"] >= 1, integrity["n"]
+    injected = integrity["injected"]
+    assert injected, "integrity block without per-site injection counts"
+    for site, count in injected.items():
+        assert count >= 0 and count == int(count), (site, count)
+    assert sum(injected.values()) == integrity["total_injected"], \
+        "per-site injection counts do not sum to total_injected"
+    assert integrity["total_injected"] >= 1, \
+        "an integrity run must actually inject corruption"
+    detected = integrity["detected"]
+    for layer, count in detected.items():
+        assert count >= 0 and count == int(count), (layer, count)
+    assert sum(detected.values()) == integrity["total_detected"], \
+        "per-layer detection counts do not sum to total_detected"
+    # Hard gate 1: nothing slips past the detectors.
+    assert integrity["total_detected"] == integrity["total_injected"], \
+        f"{integrity['total_injected'] - integrity['total_detected']} " \
+        f"injected corruption(s) went undetected"
+    # Hard gate 2: detection always preceded delivery.
+    assert integrity["delivered_corrupt"] == 0, \
+        f"{integrity['delivered_corrupt']} corrupt payload(s) were " \
+        f"delivered as results"
+    assert integrity["completed_ok"] == requests, \
+        "recovery incomplete: not every request eventually completed"
+    assert integrity["reregisters"] >= 0
+    assert integrity["retries"] >= detected["corrupt_frames"] + \
+        detected["corrupt_operands"], \
+        "client-visible detections must each have forced a retry"
+    # Hard gate 3: certified error bounds on every opted-in response.
+    assert integrity["bound_missing"] == 0, \
+        f"{integrity['bound_missing']} response(s) lacked the requested " \
+        f"certified error bound"
+    scrub = integrity["scrub"]
+    for k, v in scrub.items():
+        assert v >= 0 and v == int(v), (k, v)
+    assert scrub["scrub_verified"] >= 1, \
+        "on-lookup scrubbing never verified a digest — the store " \
+        "integrity layer is not armed"
+    # Hard gate 4: the fault-free control pass at the same verification
+    # posture raises no false positives and changes no bits.
+    clean = integrity["clean"]
+    assert clean["requests"] >= 1, clean
+    assert clean["detections"] == 0, \
+        f"clean control pass raised {clean['detections']} false positive(s)"
+    assert clean["bit_parity"] is True, \
+        "clean control pass diverged bitwise from the reference"
+
+
 def validate_tenant_scenario(scn, policy, label):
     """One `--tenants` scenario (weighted / noisy): an offered rate plus
     one accounting + latency row per tenant class, aligned with the policy
@@ -461,6 +530,9 @@ def validate_serving(doc, smoke_async_check=False):
     zipf = doc.get("zipf")
     if zipf is not None:
         validate_zipf_block(zipf)
+    integrity = doc.get("integrity")
+    if integrity is not None:
+        validate_integrity_block(integrity)
     extra = ", calibrated" if "calibration" in doc else ""
     if chaos is not None:
         extra += (f", chaos {chaos['total_injected']} faults / "
@@ -475,6 +547,10 @@ def validate_serving(doc, smoke_async_check=False):
     if zipf is not None:
         extra += (f", zipf {zipf['speedup']:.1f}x "
                   f"({zipf['cache']['hits']} cache hits, bit-exact)")
+    if integrity is not None:
+        extra += (f", integrity {integrity['total_detected']}/"
+                  f"{integrity['total_injected']} detected / "
+                  f"{integrity['delivered_corrupt']} delivered corrupt")
     return f"{requests} requests ({doc['fused']} fused / {doc['sharded']} sharded), " \
            f"{doc['mode']} loop, p99 {lat['p99'] / 1e3:.1f} us, " \
            f"{doc['mflops']:.0f} MFlop/s; queue async p99 " \
@@ -556,6 +632,14 @@ def headline_of(documents):
             # trajectory, excluded from compare_bench.py's perf verdict.
             h["serving_zipf_speedup"] = zipf["speedup"]
             h["serving_zipf_cache_hits"] = zipf["cache"]["hits"]
+        integrity = serving.get("integrity")
+        if integrity:
+            # Data-integrity accounting only — tools/compare_bench.py
+            # keeps serving_integrity_* out of its perf-verdict allowlist.
+            h["serving_integrity_total_injected"] = integrity["total_injected"]
+            h["serving_integrity_total_detected"] = integrity["total_detected"]
+            h["serving_integrity_delivered_corrupt"] = \
+                integrity["delivered_corrupt"]
     return h
 
 
